@@ -1,0 +1,70 @@
+//! Bench: regenerate **paper Fig 2 and Fig 7a–c** — PageRank execution
+//! time vs computation load for the three EC2 scenarios, with the paper's
+//! Map / Shuffle / Reduce bars (Encode folded into Map, Decode into
+//! Reduce, as in the paper's footnote 1) and the Remark-10 r* heuristic.
+//!
+//! Default runs are linearly scaled down (n/scale, same density) so the
+//! bench completes in minutes; set `CODED_GRAPH_FULL=1` for the paper's
+//! exact sizes. Scaling shrinks absolute seconds but preserves the
+//! per-r shape — who wins and where the optimum lands.
+//!
+//! ```sh
+//! cargo bench --bench fig7_scenarios
+//! CODED_GRAPH_FULL=1 cargo bench --bench fig7_scenarios   # paper sizes
+//! ```
+
+use coded_graph::analysis::theory;
+use coded_graph::experiments::scenarios::{
+    run_scenario_scaled, scenario, speedup_over_naive,
+};
+use coded_graph::util::benchkit::{Bench, Table};
+
+fn main() {
+    let full = std::env::var("CODED_GRAPH_FULL").is_ok();
+    // paper-reported best speedups for the shape check
+    let paper = [(1usize, 43.4f64, 5usize), (2, 50.8, 4), (3, 41.8, 4)];
+    for (id, paper_speedup, paper_best_r) in paper {
+        let scale = if full {
+            1
+        } else {
+            match id {
+                1 => 4,  // n = 17,340
+                2 => 4,  // n = 3,150 (p = 0.3 keeps it dense)
+                _ => 4,  // n = 22,522
+            }
+        };
+        let sc = scenario(id, scale);
+        println!("\n# Scenario {id}: {} — n={}, K={} (scale 1/{scale})", sc.name, sc.n, sc.k);
+        let (rows, secs) = Bench::once(|| run_scenario_scaled(&sc, 7 + id as u64, scale));
+        let mut t = Table::new(&[
+            "r", "scheme", "Map(+enc)", "Shuffle", "Reduce(+dec+upd)", "Total", "norm-load",
+        ]);
+        for row in &rows {
+            let (m, s, rd) = row.times.paper_buckets();
+            t.row(&[
+                row.r.to_string(),
+                row.scheme.to_string(),
+                format!("{m:.2}s"),
+                format!("{s:.2}s"),
+                format!("{rd:.2}s"),
+                format!("{:.2}s", row.total_s),
+                format!("{:.5}", row.load),
+            ]);
+        }
+        t.print();
+        let (best_r, speedup) = speedup_over_naive(&rows);
+        let naive = &rows[0];
+        let (nm, ns, _) = naive.times.paper_buckets();
+        println!(
+            "best r = {best_r} -> {:.1}% speedup over naive   (paper: {paper_speedup:.1}% at r = {paper_best_r})",
+            speedup * 100.0
+        );
+        println!(
+            "Remark 10: r* = sqrt(T_shuffle/T_map) = {:.2} (paper Scenario 2: 5.15)",
+            theory::r_star(nm, ns)
+        );
+        println!("[{secs:.1}s]");
+    }
+    println!("\nshape checks: Shuffle dominates at r=1; coding slashes Shuffle ~1/r;");
+    println!("Map grows ~linearly in r; optimum r in the middle — as in Fig 7.");
+}

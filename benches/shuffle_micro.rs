@@ -1,0 +1,91 @@
+//! Bench: Shuffle hot-path microbenchmarks — the §Perf workhorse.
+//!
+//! Measures, per computation load r:
+//!   * group-plan construction (pre-processing, O(m)),
+//!   * coded Encode throughput (table XOR, bytes/s),
+//!   * coded Decode throughput (cancel + reassemble, bytes/s),
+//!   * uncoded transfer planning,
+//! on a dense mid-size ER graph so the tables are large enough to measure.
+//!
+//! ```sh
+//! cargo bench --bench shuffle_micro
+//! ```
+
+use coded_graph::allocation::Allocation;
+use coded_graph::graph::er::er;
+use coded_graph::mapreduce::{PageRank, VertexProgram};
+use coded_graph::shuffle::coded::{encode_group, row_values};
+use coded_graph::shuffle::decoder::recover_group_shared;
+use coded_graph::shuffle::plan::build_group_plans;
+use coded_graph::shuffle::segments::seg_bytes;
+use coded_graph::shuffle::uncoded::plan_uncoded;
+use coded_graph::util::benchkit::{Bench, Table};
+use coded_graph::util::rng::DetRng;
+use coded_graph::Vertex;
+
+fn main() {
+    let (n, p, k) = (3000usize, 0.1f64, 6usize);
+    let g = er(n, p, &mut DetRng::seed(123));
+    println!("# Shuffle micro-benchmarks: ER(n={n}, p={p}), K={k}, m={}\n", g.m());
+    let prog = PageRank::default();
+    let state: Vec<f64> = (0..n as Vertex).map(|v| prog.init(v, &g)).collect();
+    let bench = Bench::new(1, 5);
+
+    let mut t = Table::new(&[
+        "r", "plan (ms)", "ivs", "encode (ms)", "enc MB/s", "decode (ms)", "dec MB/s", "uncoded plan (ms)",
+    ]);
+    for r in 2..k {
+        let alloc = Allocation::er_scheme(n, k, r);
+        let m_plan = bench.run(|| build_group_plans(&g, &alloc));
+        let plans = build_group_plans(&g, &alloc);
+        let total_ivs: usize = plans.iter().map(|p| p.total_ivs()).sum();
+        let value = |i: Vertex, j: Vertex| prog.map(i, j, state[j as usize], &g).to_bits();
+
+        // encode: all groups, all senders
+        let m_enc = bench.run(|| {
+            let mut cols = 0usize;
+            for plan in &plans {
+                for msg in encode_group(plan, &value, r) {
+                    cols += msg.columns.len();
+                }
+            }
+            cols
+        });
+        // table bytes XORed per full encode: every row appears in r tables
+        let enc_bytes = total_ivs * seg_bytes(r) * r;
+
+        // decode: every member of every group (engine path: row values
+        // shared between the encoder and all receivers)
+        let m_dec = bench.run(|| {
+            let mut recovered = 0usize;
+            for plan in &plans {
+                let vals = row_values(plan, &value);
+                let msgs: Vec<_> = (0..plan.servers.len())
+                    .map(|s| coded_graph::shuffle::coded::encode_sender(plan, s, &vals, r))
+                    .collect();
+                for m_idx in 0..plan.servers.len() {
+                    recovered +=
+                        recover_group_shared(plan, m_idx, &msgs, &vals, r).len();
+                }
+            }
+            recovered
+        });
+        let dec_bytes = total_ivs * seg_bytes(r) * r; // segments recovered
+
+        let m_unc = bench.run(|| plan_uncoded(&g, &alloc));
+
+        t.row(&[
+            r.to_string(),
+            format!("{:.2}", m_plan.mean_ms()),
+            total_ivs.to_string(),
+            format!("{:.2}", m_enc.mean_ms()),
+            format!("{:.0}", enc_bytes as f64 / m_enc.mean_s / 1e6),
+            format!("{:.2}", m_dec.mean_ms()),
+            format!("{:.0}", dec_bytes as f64 / m_dec.mean_s / 1e6),
+            format!("{:.2}", m_unc.mean_ms()),
+        ]);
+    }
+    t.print();
+    println!("\nnote: decode re-derives r-1 foreign segments per own segment, so its");
+    println!("byte throughput is inherently ~1/r of encode's on the same table.");
+}

@@ -1,0 +1,69 @@
+//! Quickstart: the 60-second tour of the public API.
+//!
+//! Generates an Erdős–Rényi graph, allocates it across K simulated
+//! machines with computation load r (the paper's §IV-A batch scheme),
+//! runs one iteration of coded PageRank, and prints the headline numbers:
+//! the coded scheme moves ~r× fewer bits through the Shuffle than the
+//! uncoded baseline.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use coded_graph::allocation::Allocation;
+use coded_graph::analysis::theory;
+use coded_graph::coordinator::{run_rust, EngineConfig, Job, Scheme};
+use coded_graph::graph::er::er;
+use coded_graph::mapreduce::program::run_single_machine;
+use coded_graph::mapreduce::PageRank;
+use coded_graph::util::rng::DetRng;
+
+fn main() {
+    // 1. a graph: ER(n = 2000, p = 0.05), the paper's canonical model
+    let (n, p, k, r) = (2000, 0.05, 5, 2);
+    let g = er(n, p, &mut DetRng::seed(42));
+    println!("graph: ER(n={n}, p={p}) -> m = {} edges", g.m());
+
+    // 2. the allocation: C(K, r) batches, each Mapped at r servers
+    let alloc = Allocation::er_scheme(n, k, r);
+    println!(
+        "allocation: K={k}, r={r} -> {} batches, computation load {:.2}",
+        alloc.batches.len(),
+        alloc.computation_load()
+    );
+
+    // 3. run one coded PageRank iteration on the phase engine
+    let prog = PageRank::default();
+    let job = Job { graph: &g, alloc: &alloc, program: &prog };
+    let coded = run_rust(
+        &job,
+        &EngineConfig { scheme: Scheme::Coded, validate: true, ..Default::default() },
+        1,
+    );
+
+    // 4. same job, uncoded baseline
+    let uncoded = run_rust(
+        &job,
+        &EngineConfig { scheme: Scheme::Uncoded, ..Default::default() },
+        1,
+    );
+
+    let lc = coded.iterations[0].shuffle.normalized(n);
+    let lu = uncoded.iterations[0].shuffle.normalized(n);
+    println!("\nnormalized communication load (Definition 2):");
+    println!("  uncoded  L = {lu:.5}   (theory p(1-r/K) = {:.5})", theory::uncoded_load_er(p, r as f64, k));
+    println!("  coded    L = {lc:.5}   (theory ~(p/r)(1-r/K) = {:.5})", theory::coded_load_er(p, r as f64, k));
+    println!("  gain     {:.2}x  (Theorem 1 says -> r = {r} as n -> inf)", lu / lc);
+
+    // 5. the distributed result equals the single-machine oracle
+    let oracle = run_single_machine(&prog, &g, 1);
+    let max_err = coded
+        .final_state
+        .iter()
+        .zip(&oracle)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    println!("\nmax |distributed - single machine| = {max_err:.2e} (bit-exact fold)");
+    assert!(max_err < 1e-15);
+    println!("validated {} recovered IVs bit-exact", coded.iterations[0].validated_ivs);
+}

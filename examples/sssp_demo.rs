@@ -1,0 +1,63 @@
+//! SSSP demo (paper Example 2): distributed Bellman–Ford sweeps with the
+//! coded Shuffle, validated against Dijkstra, with the paper's
+//! computation/communication trade-off printed per r.
+//!
+//! ```sh
+//! cargo run --release --example sssp_demo
+//! ```
+
+use coded_graph::allocation::Allocation;
+use coded_graph::coordinator::{run_rust, EngineConfig, Job, Scheme};
+use coded_graph::graph::er::er;
+use coded_graph::mapreduce::reference::dijkstra;
+use coded_graph::mapreduce::sssp::INF;
+use coded_graph::mapreduce::Sssp;
+use coded_graph::util::benchkit::Table;
+use coded_graph::util::rng::DetRng;
+
+fn main() {
+    let (n, p, k) = (3000, 0.004, 6);
+    let source = 0u32;
+    let g = er(n, p, &mut DetRng::seed(99));
+    println!("graph: ER(n={n}, p={p}) -> m = {}, source = {source}", g.m());
+
+    let prog = Sssp::hashed(source);
+    // enough sweeps for the diameter of a supercritical ER graph
+    let sweeps = 30;
+    let oracle = dijkstra(&g, source, prog.weights);
+    let reached = oracle.iter().filter(|&&d| d < INF).count();
+    println!("oracle: Dijkstra reaches {reached}/{n} vertices\n");
+
+    let mut table = Table::new(&["r", "scheme", "load", "gain", "shuffle-s", "max|err|"]);
+    let mut base_load = 0.0;
+    for r in 1..k {
+        let alloc = Allocation::er_scheme(n, k, r);
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let scheme = if r == 1 { Scheme::Uncoded } else { Scheme::Coded };
+        let cfg = EngineConfig { scheme, validate: true, ..Default::default() };
+        let report = run_rust(&job, &cfg, sweeps);
+        let load = report.mean_normalized_load(n);
+        if r == 1 {
+            base_load = load;
+        }
+        let max_err = report
+            .final_state
+            .iter()
+            .zip(&oracle)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        assert!(max_err < 1e-9, "sweeps did not converge to Dijkstra: {max_err}");
+        table.row(&[
+            r.to_string(),
+            scheme.to_string(),
+            format!("{load:.6}"),
+            format!("{:.2}x", base_load / load),
+            format!("{:.3}s", report.summed_times().shuffle_s),
+            format!("{max_err:.1e}"),
+        ]);
+    }
+    println!("{sweeps} distributed relaxation sweeps per r:");
+    table.print();
+    println!("\ninverse-linear trade-off holds for min-plus folds too (Theorem 1 is");
+    println!("algorithm-agnostic: any vertex program with per-edge IVs qualifies).");
+}

@@ -1,0 +1,2 @@
+# Build-time-only package: JAX/Pallas authoring + AOT lowering.
+# Never imported on the request path — rust loads artifacts/*.hlo.txt.

@@ -1,0 +1,78 @@
+"""AOT lowering: JAX (L2 + L1) -> HLO TEXT artifacts for the rust runtime.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once at build time (``make artifacts``):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Python is never on the request path; the rust binary is self-contained
+after the artifacts are built.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import lowering_specs
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _arg_entry(spec) -> dict:
+    return {"shape": list(spec.shape), "dtype": str(spec.dtype)}
+
+
+def build(out_dir: str, block: int, xor_cols: int) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "entries": []}
+    for name, (fn, args) in sorted(lowering_specs(block, xor_cols).items()):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"].append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": [_arg_entry(a) for a in args],
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                "bytes": len(text),
+            }
+        )
+        print(f"  aot: {name:28s} -> {fname} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--block", type=int, default=256, help="square tile edge")
+    ap.add_argument("--xor-cols", type=int, default=1024)
+    args = ap.parse_args()
+    manifest = build(args.out_dir, args.block, args.xor_cols)
+    print(f"wrote {len(manifest['entries'])} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

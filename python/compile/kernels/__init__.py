@@ -1,0 +1,8 @@
+# L1: Pallas kernels for the paper's compute hot-spots.
+#
+# masked_spmv — PageRank Map phase as MXU-shaped tile matmul
+# minplus     — SSSP relaxation as tropical (min,+) tile product
+# xor_fold    — coded-shuffle Encode stage (column XOR of segment tables)
+# ref         — pure-jnp oracles for all of the above
+
+from . import masked_spmv, minplus, ref, xor_fold  # noqa: F401

@@ -1,0 +1,74 @@
+"""L1 Pallas kernel: blocked (masked) sparse-matrix/vector product.
+
+This is the PageRank Map phase recast for the MXU (see DESIGN.md
+§Hardware-Adaptation): the paper's per-edge Python dict walk
+``v_{i,j} = Pi(j) * P(j->i)`` becomes a dense-tile matmul
+
+    y[i_tile] += A_norm[i_tile, j_tile] @ x[j_tile]
+
+where ``A_norm[i, j] = 1{(j,i) in E} / deg(j)`` is the column-normalized
+adjacency tile each worker materializes for its (Reduce-rows x Mapped-cols)
+block. Tiles are BlockSpec'd so the HBM->VMEM schedule is explicit; the
+per-tile body is a single MXU-shaped matmul.
+
+The kernel MUST be lowered with ``interpret=True`` on this CPU image: real
+TPU lowering emits a Mosaic custom-call the CPU PJRT plugin cannot run.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmv_kernel(a_ref, x_ref, o_ref):
+    """One (bi, bj) grid step: accumulate a_tile @ x_tile into o_tile.
+
+    The j-loop (``program_id(1)``) is the reduction dimension; the output
+    tile is revisited once per j step, so we zero it on the first visit and
+    accumulate afterwards.
+    """
+
+    @pl.when(pl.program_id(1) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], x_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_cols"))
+def masked_spmv(a, x, *, block_rows: int = 128, block_cols: int = 128):
+    """Compute ``a @ x`` with a tiled Pallas kernel.
+
+    Args:
+      a: ``(m, n)`` float32 tile-aligned matrix (``m % block_rows == 0`` and
+        ``n % block_cols == 0``; the caller pads).
+      x: ``(n, 1)`` float32 vector (kept 2-D so the tile body is a matmul,
+        which is what the MXU wants).
+      block_rows / block_cols: VMEM tile shape. 128x128 f32 keeps the
+        working set (a-tile + x-tile + o-tile ~ 66 KiB) far under VMEM.
+
+    Returns:
+      ``(m, 1)`` float32 product.
+    """
+    m, n = a.shape
+    assert m % block_rows == 0, (m, block_rows)
+    assert n % block_cols == 0, (n, block_cols)
+    assert x.shape == (n, 1), x.shape
+    grid = (m // block_rows, n // block_cols)
+    return pl.pallas_call(
+        _spmv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j)),
+            pl.BlockSpec((block_cols, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        interpret=True,
+    )(a, x)

@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: blocked tropical (min,+) matrix-vector product.
+
+This is the SSSP Map/Reduce hot loop (paper Example 2) as tile algebra:
+
+    y[i] = min_j ( W[i, j] + d[j] )
+
+with ``W[i, j] = t(j, i)`` the edge weight (``+inf`` for non-edges). Each
+grid step loads a ``(bi, bj)`` weight tile and a ``(bj, 1)`` distance tile
+into VMEM, forms the broadcast sum and folds a min over the j axis; the
+output tile carries a running min across j steps (initialized to +inf on
+the first visit).
+
+Lowered with ``interpret=True`` (CPU image; see masked_spmv.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INF = 3.0e38  # stand-in for +inf that survives arithmetic (python float:
+# a jnp constant would be captured by the kernel closure, which pallas rejects)
+
+
+def _minplus_kernel(w_ref, d_ref, o_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, INF)
+
+    # (bi, bj) + (1, bj) broadcast, then min over the j axis -> (bi, 1).
+    contrib = jnp.min(
+        w_ref[...] + jnp.transpose(d_ref[...]), axis=1, keepdims=True
+    )
+    o_ref[...] = jnp.minimum(o_ref[...], contrib)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_cols"))
+def minplus_mv(w, d, *, block_rows: int = 128, block_cols: int = 128):
+    """Tropical product ``min_j (w[i, j] + d[j])`` over tile-aligned inputs.
+
+    Args:
+      w: ``(m, n)`` float32 weight matrix, ``INF`` marks non-edges.
+      d: ``(n, 1)`` float32 current distances.
+
+    Returns:
+      ``(m, 1)`` float32 relaxed distances (pure contribution; the caller
+      still mins with the previous distance of row vertices).
+    """
+    m, n = w.shape
+    assert m % block_rows == 0 and n % block_cols == 0, (w.shape,)
+    assert d.shape == (n, 1), d.shape
+    grid = (m // block_rows, n // block_cols)
+    return pl.pallas_call(
+        _minplus_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j)),
+            pl.BlockSpec((block_cols, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        interpret=True,
+    )(w, d)

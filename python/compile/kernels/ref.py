@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Every kernel in this package has a reference here with the same signature;
+pytest sweeps shapes (hypothesis) and asserts allclose/exact equality.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def masked_spmv_ref(a, x):
+    """``a @ x`` — oracle for kernels.masked_spmv.masked_spmv."""
+    return jnp.dot(a, x, preferred_element_type=jnp.float32)
+
+
+def minplus_mv_ref(w, d):
+    """``min_j(w[i,j] + d[j])`` — oracle for kernels.minplus.minplus_mv."""
+    return jnp.min(w + jnp.transpose(d), axis=1, keepdims=True)
+
+
+def xor_fold_ref(table):
+    """Column XOR fold — oracle for kernels.xor_fold.xor_fold."""
+    acc = table[0, :]
+    for i in range(1, table.shape[0]):
+        acc = jnp.bitwise_xor(acc, table[i, :])
+    return acc
+
+
+def pagerank_iteration_ref(a_norm, pi, damping, n):
+    """One full PageRank iteration (paper eq. (4)) on a dense matrix.
+
+    ``a_norm[i, j] = P(j -> i)`` so the update is
+    ``pi' = (1 - d) * a_norm @ pi + d / n``.
+    """
+    return (1.0 - damping) * jnp.dot(a_norm, pi) + damping / n
+
+
+def sssp_relax_ref(w, dist):
+    """One SSSP relaxation sweep (paper eq. (5)) including self-retention."""
+    return jnp.minimum(dist, jnp.min(w + jnp.transpose(dist), axis=1, keepdims=True))

@@ -1,0 +1,131 @@
+"""L2: JAX compute-graph functions for the paper's workloads.
+
+These are the functions that get AOT-lowered (aot.py) into HLO-text
+artifacts the rust coordinator executes via PJRT. Each one composes the L1
+Pallas kernels so the kernels lower into the same HLO module.
+
+Shapes are static per artifact (PJRT executables are shape-monomorphic);
+``aot.py`` lowers a small set of tile variants and records them in
+``artifacts/manifest.json``. The rust runtime pads worker blocks up to the
+nearest variant.
+
+Workloads
+---------
+* ``pagerank_block_step`` — the Map-phase hot loop of one PageRank
+  iteration restricted to a worker's (Reduce-rows x Mapped-cols) block:
+  partial sums ``y = A_norm @ pi_block`` (the damping affine is applied by
+  the Reducer after summing partials across blocks).
+* ``pagerank_full_iteration`` — a whole small-graph iteration
+  ``pi' = (1-d) A pi + d/n`` (single-machine reference path; used by the
+  quickstart example and as the r = K degenerate case).
+* ``sssp_block_relax`` — tropical block product for one SSSP sweep.
+* ``encode_xor_fold`` — the coded-shuffle Encode stage on a segment table.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.masked_spmv import masked_spmv
+from .kernels.minplus import minplus_mv
+from .kernels.xor_fold import xor_fold
+
+
+def pagerank_block_step(a_norm, pi):
+    """Partial PageRank sums for one worker block: ``a_norm @ pi``.
+
+    ``a_norm`` is the column-normalized adjacency block (``(m, n)`` f32,
+    ``a_norm[i, j] = 1{(j,i) in E}/deg(j)``), ``pi`` the ``(n, 1)`` rank
+    slice of the Mapped vertices. Output is the ``(m, 1)`` vector of
+    intermediate-value sums for the block's Reduce rows.
+    """
+    return (masked_spmv(a_norm, pi),)
+
+
+def pagerank_full_iteration(a_norm, pi, damping):
+    """One full PageRank iteration on a dense normalized adjacency.
+
+    ``pi' = (1 - d) * (A_norm @ pi) + d / n`` with ``n`` taken from the
+    static shape. Composes the L1 spmv kernel with the affine tail so the
+    whole iteration is a single fused HLO module.
+    """
+    n = a_norm.shape[0]
+    y = masked_spmv(a_norm, pi)
+    return ((1.0 - damping) * y + damping / n,)
+
+
+def sssp_block_relax(w, dist):
+    """Tropical block product ``min_j(w[i,j] + dist[j])`` for SSSP."""
+    return (minplus_mv(w, dist),)
+
+
+def encode_xor_fold(table):
+    """Coded-shuffle Encode: XOR-fold segment-table rows into one packet row."""
+    return (xor_fold(table),)
+
+
+def pagerank_multi_iteration(a_norm, pi, damping, *, iters: int = 8):
+    """`iters` fused PageRank iterations via `lax.scan`.
+
+    Demonstrates L2 composition: the L1 spmv kernel is the scan body, so
+    the whole fixed-point loop lowers into ONE HLO module (no per-iteration
+    host round-trips). Used by the r = K degenerate path and the runtime
+    bench.
+    """
+    import jax.lax as lax
+
+    n = a_norm.shape[0]
+
+    def body(carry, _):
+        y = masked_spmv(a_norm, carry)
+        return (1.0 - damping) * y + damping / n, None
+
+    out, _ = lax.scan(body, pi, None, length=iters)
+    return (out,)
+
+
+# --- lowering entry points -------------------------------------------------
+# name -> (callable, example-arg builder). Shapes are the static variants
+# aot.py emits; keep rust/src/runtime/manifest.rs in sync via manifest.json.
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def lowering_specs(block: int = 256, xor_cols: int = 1024):
+    """The artifact set: ``{name: (fn, example_args)}``.
+
+    ``block`` is the square tile edge for the graph workloads; XOR tables
+    are lowered once per row count r in 2..=7 (the coded scheme sends
+    r-segment XORs; K <= 8 in every experiment's multicast groups).
+    """
+    specs = {
+        f"pagerank_block_{block}": (
+            pagerank_block_step,
+            (_f32(block, block), _f32(block, 1)),
+        ),
+        f"pagerank_full_{block}": (
+            pagerank_full_iteration,
+            (_f32(block, block), _f32(block, 1), _f32()),
+        ),
+        f"sssp_block_{block}": (
+            sssp_block_relax,
+            (_f32(block, block), _f32(block, 1)),
+        ),
+        f"pagerank_scan8_{block}": (
+            pagerank_multi_iteration,
+            (_f32(block, block), _f32(block, 1), _f32()),
+        ),
+    }
+    for r in range(2, 8):
+        specs[f"xor_fold_r{r}_m{xor_cols}"] = (
+            encode_xor_fold,
+            (_i32(r, xor_cols),),
+        )
+    return specs

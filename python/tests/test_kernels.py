@@ -1,0 +1,152 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps tile-aligned shapes and data; each kernel must match its
+oracle to float tolerance (exactly, for the integer XOR kernel).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.masked_spmv import masked_spmv
+from compile.kernels.minplus import minplus_mv, INF
+from compile.kernels.xor_fold import xor_fold
+
+# interpret-mode pallas is slow; keep example counts deliberate.
+KERNEL_SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+class TestMaskedSpmv:
+    @settings(**KERNEL_SETTINGS)
+    @given(
+        bi=st.sampled_from([32, 64, 128]),
+        bj=st.sampled_from([32, 64, 128]),
+        gi=st.integers(1, 3),
+        gj=st.integers(1, 3),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_across_tilings(self, bi, bj, gi, gj, seed):
+        rng = _rng(seed)
+        m, n = bi * gi, bj * gj
+        a = rng.random((m, n), dtype=np.float32)
+        x = rng.random((n, 1), dtype=np.float32)
+        got = masked_spmv(a, x, block_rows=bi, block_cols=bj)
+        np.testing.assert_allclose(got, ref.masked_spmv_ref(a, x), rtol=1e-5, atol=1e-5)
+
+    def test_zero_matrix(self):
+        a = np.zeros((128, 128), dtype=np.float32)
+        x = np.ones((128, 1), dtype=np.float32)
+        np.testing.assert_array_equal(np.asarray(masked_spmv(a, x)), 0.0)
+
+    def test_identity(self):
+        n = 128
+        a = np.eye(n, dtype=np.float32)
+        x = np.arange(n, dtype=np.float32).reshape(n, 1)
+        np.testing.assert_allclose(masked_spmv(a, x), x, rtol=1e-6)
+
+    def test_column_stochastic_preserves_mass(self):
+        # A column-normalized adjacency (no dangling nodes) preserves sum(x):
+        # the PageRank mass-conservation property the Map phase relies on.
+        rng = _rng(7)
+        n = 256
+        a = (rng.random((n, n)) < 0.2).astype(np.float32)
+        a[0, :] += (a.sum(axis=0) == 0)  # patch dangling columns
+        a /= a.sum(axis=0, keepdims=True)
+        x = rng.random((n, 1), dtype=np.float32)
+        y = np.asarray(masked_spmv(a.astype(np.float32), x))
+        np.testing.assert_allclose(y.sum(), x.sum(), rtol=1e-4)
+
+    def test_rejects_misaligned_shapes(self):
+        a = np.zeros((100, 128), dtype=np.float32)
+        x = np.zeros((128, 1), dtype=np.float32)
+        with pytest.raises(AssertionError):
+            masked_spmv(a, x)
+
+
+class TestMinplus:
+    @settings(**KERNEL_SETTINGS)
+    @given(
+        bi=st.sampled_from([32, 64, 128]),
+        gi=st.integers(1, 3),
+        gj=st.integers(1, 3),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_across_tilings(self, bi, gi, gj, seed):
+        rng = _rng(seed)
+        m, n = bi * gi, bi * gj
+        w = rng.random((m, n), dtype=np.float32) * 10.0
+        d = rng.random((n, 1), dtype=np.float32) * 10.0
+        got = minplus_mv(w, d, block_rows=bi, block_cols=bi)
+        np.testing.assert_allclose(got, ref.minplus_mv_ref(w, d), rtol=1e-6)
+
+    @settings(**KERNEL_SETTINGS)
+    @given(density=st.floats(0.01, 0.5), seed=st.integers(0, 2**31 - 1))
+    def test_inf_nonedges_ignored(self, density, seed):
+        # Non-edges are encoded as INF; they must never win the min.
+        rng = _rng(seed)
+        n = 128
+        w = np.full((n, n), INF, dtype=np.float32)
+        mask = rng.random((n, n)) < density
+        w[mask] = rng.random(mask.sum()).astype(np.float32)
+        d = rng.random((n, 1), dtype=np.float32)
+        got = np.asarray(minplus_mv(w, d))
+        want = np.asarray(ref.minplus_mv_ref(w, d))
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+        # rows with no edges stay "infinite"
+        empty_rows = ~mask.any(axis=1)
+        assert (got[empty_rows, 0] > INF / 2).all()
+
+    def test_single_source_step(self):
+        # One relaxation from a single source on a 3-path embedded in a tile.
+        n = 128
+        w = np.full((n, n), INF, dtype=np.float32)
+        w[1, 0] = 2.0  # edge 0 -> 1 weight 2
+        w[2, 1] = 3.0  # edge 1 -> 2 weight 3
+        d = np.full((n, 1), INF, dtype=np.float32)
+        d[0] = 0.0
+        got = np.asarray(ref.sssp_relax_ref(w, d))
+        assert got[0, 0] == 0.0
+        assert got[1, 0] == pytest.approx(2.0)
+        assert got[2, 0] > INF / 2  # two hops need two sweeps
+        got_k = np.minimum(d, np.asarray(minplus_mv(w, d)))
+        np.testing.assert_allclose(got_k[:3], got[:3], rtol=1e-6)
+
+
+class TestXorFold:
+    @settings(**KERNEL_SETTINGS)
+    @given(
+        r=st.integers(2, 7),
+        g=st.integers(1, 4),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, r, g, seed):
+        rng = _rng(seed)
+        m = 256 * g
+        t = rng.integers(-(2**31), 2**31 - 1, (r, m), dtype=np.int32)
+        got = xor_fold(t, block_cols=256)
+        np.testing.assert_array_equal(got, ref.xor_fold_ref(t))
+
+    @settings(**KERNEL_SETTINGS)
+    @given(r=st.integers(2, 7), seed=st.integers(0, 2**31 - 1))
+    def test_self_inverse(self, r, seed):
+        # XOR-folding a table with a duplicated row pair cancels that pair:
+        # the algebraic property the coded-shuffle decoder relies on.
+        rng = _rng(seed)
+        m = 1024
+        t = rng.integers(-(2**31), 2**31 - 1, (r, m), dtype=np.int32)
+        doubled = np.vstack([t, t])
+        got = np.asarray(xor_fold(doubled))
+        np.testing.assert_array_equal(got, np.zeros(m, dtype=np.int32))
+
+    def test_zero_padding_is_identity(self):
+        rng = _rng(3)
+        t = rng.integers(-(2**31), 2**31 - 1, (3, 1024), dtype=np.int32)
+        padded = np.vstack([t, np.zeros((2, 1024), dtype=np.int32)])
+        np.testing.assert_array_equal(
+            np.asarray(xor_fold(padded)), np.asarray(xor_fold(t))
+        )

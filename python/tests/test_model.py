@@ -1,0 +1,126 @@
+"""L2 model correctness: composed jit functions vs whole-graph oracles.
+
+Checks the two distributed-decomposition identities the rust coordinator
+relies on:
+
+* summing per-block ``pagerank_block_step`` partials over a column
+  partition of the Mapped vertices reproduces the full iteration, and
+* min-folding per-block ``sssp_block_relax`` partials reproduces the full
+  relaxation sweep.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=8, deadline=None)
+
+
+def _norm_adjacency(rng, n, p):
+    a = (rng.random((n, n)) < p).astype(np.float32)
+    np.fill_diagonal(a, 0.0)
+    a = np.maximum(a, a.T)  # undirected, as in the paper
+    deg = a.sum(axis=0)
+    deg[deg == 0] = 1.0
+    return (a / deg).astype(np.float32)
+
+
+class TestPageRank:
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 2**31 - 1), p=st.floats(0.05, 0.5))
+    def test_full_iteration_matches_ref(self, seed, p):
+        rng = np.random.default_rng(seed)
+        n = 256
+        a = _norm_adjacency(rng, n, p)
+        pi = np.full((n, 1), 1.0 / n, dtype=np.float32)
+        d = np.float32(0.15)
+        (got,) = model.pagerank_full_iteration(a, pi, d)
+        want = ref.pagerank_iteration_ref(a, pi, d, n)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-7)
+
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 2**31 - 1), blocks=st.integers(2, 4))
+    def test_block_partials_sum_to_full(self, seed, blocks):
+        # Column-partition the Mapped vertices into `blocks` groups (this is
+        # exactly how worker subgraphs tile the adjacency) and check the
+        # partial sums recombine to the full product.
+        rng = np.random.default_rng(seed)
+        nb = 128
+        n = nb * blocks
+        a = _norm_adjacency(rng, n, 0.1)
+        pi = rng.random((n, 1), dtype=np.float32)
+        partial = np.zeros((n, 1), dtype=np.float32)
+        for b in range(blocks):
+            cols = slice(b * nb, (b + 1) * nb)
+            (y,) = model.pagerank_block_step(
+                np.ascontiguousarray(a[:, cols]), np.ascontiguousarray(pi[cols])
+            )
+            partial += np.asarray(y)
+        np.testing.assert_allclose(
+            partial, ref.masked_spmv_ref(a, pi), rtol=1e-4, atol=1e-6
+        )
+
+    def test_stationary_under_iteration(self):
+        # Iterating to convergence yields a fixed point of the update map.
+        rng = np.random.default_rng(0)
+        n = 128
+        a = _norm_adjacency(rng, n, 0.2)
+        pi = np.full((n, 1), 1.0 / n, dtype=np.float32)
+        d = np.float32(0.15)
+        for _ in range(60):
+            (pi,) = model.pagerank_full_iteration(a, pi, d)
+        (nxt,) = model.pagerank_full_iteration(a, pi, d)
+        np.testing.assert_allclose(nxt, pi, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(pi).sum(), 1.0, rtol=1e-3)
+
+
+class TestSssp:
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 2**31 - 1), blocks=st.integers(2, 4))
+    def test_block_partials_min_to_full(self, seed, blocks):
+        rng = np.random.default_rng(seed)
+        nb = 128
+        n = nb * blocks
+        from compile.kernels.minplus import INF
+
+        w = np.full((n, n), INF, dtype=np.float32)
+        mask = rng.random((n, n)) < 0.05
+        w[mask] = (rng.random(mask.sum()) * 10).astype(np.float32)
+        dist = (rng.random((n, 1)) * 5).astype(np.float32)
+        folded = np.full((n, 1), INF, dtype=np.float32)
+        for b in range(blocks):
+            cols = slice(b * nb, (b + 1) * nb)
+            (y,) = model.sssp_block_relax(
+                np.ascontiguousarray(w[:, cols]), np.ascontiguousarray(dist[cols])
+            )
+            folded = np.minimum(folded, np.asarray(y))
+        np.testing.assert_allclose(
+            folded, ref.minplus_mv_ref(w, dist), rtol=1e-6
+        )
+
+
+class TestMultiIteration:
+    def test_scan_matches_repeated_single(self):
+        rng = np.random.default_rng(5)
+        n = 128
+        a = _norm_adjacency(rng, n, 0.15)
+        pi = np.full((n, 1), 1.0 / n, dtype=np.float32)
+        d = np.float32(0.15)
+        (scan_out,) = model.pagerank_multi_iteration(a, pi, d, iters=8)
+        step = pi
+        for _ in range(8):
+            (step,) = model.pagerank_full_iteration(a, step, d)
+        np.testing.assert_allclose(scan_out, step, rtol=1e-5, atol=1e-7)
+
+    def test_scan_lowers_to_single_module(self):
+        import jax
+        from compile import aot
+
+        spec = model.lowering_specs(block=128)["pagerank_scan8_128"]
+        fn, args = spec
+        text = aot.to_hlo_text(jax.jit(fn).lower(*args))
+        assert text.startswith("HloModule")
+        # one while-loop, not 8 unrolled matmuls at top level
+        assert "while" in text

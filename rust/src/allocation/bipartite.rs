@@ -1,0 +1,206 @@
+//! Appendix-A allocation for random bi-partite graphs (and the SBM variant
+//! of Appendix C reuses it through [`Allocation::bipartite_scheme`]).
+//!
+//! Key idea: in `RB(n1, n2, q)` the Reduction of a `V1` vertex depends only
+//! on Mappers in `V2` and vice versa, so Map and Reduce of *opposite* sides
+//! are co-located. Servers split into group `G1 = {0..K1}` (Maps `V1`,
+//! Reduces `V2` plus `V1` overflow) and `G2 = {K1..K}` (Maps `V2`, Reduces
+//! `V1` up to capacity); within each group the §IV-A batch pattern is
+//! applied with its own `C(K_i, r)` subsets — that is the paper's phases
+//! (I) and (II), with phase (III) the capacity overflow.
+
+use super::core::{Allocation, Batch};
+use crate::combinatorics::{choose, subsets};
+use crate::graph::csr::Vertex;
+
+impl Allocation {
+    /// Appendix-A scheme for a two-cluster graph with `V1 = 0..n1`,
+    /// `V2 = n1..n1+n2`.
+    ///
+    /// Requires `r <= min(K1, K2)` where `K1 = round(K n1 / n)`; panics
+    /// otherwise (the paper's Theorem 2 regime is `r < K/2`).
+    pub fn bipartite_scheme(n1: usize, n2: usize, k: usize, r: usize) -> Self {
+        let n = n1 + n2;
+        assert!(n > 0 && k >= 2);
+        // server split proportional to cluster sizes
+        let mut k1 = ((k * n1) as f64 / n as f64).round() as usize;
+        k1 = k1.clamp(1, k - 1);
+        let k2 = k - k1;
+        assert!(
+            r <= k1 && r <= k2,
+            "bipartite scheme needs r <= min(K1, K2) = {} (r = {r}); \
+             Theorem 2's regime is r < K/2",
+            k1.min(k2)
+        );
+        let g1: Vec<u8> = (0..k1 as u8).collect();
+        let g2: Vec<u8> = (k1 as u8..k as u8).collect();
+
+        // --- Map batches: §IV-A pattern within each group ---------------
+        let mut batches = Vec::new();
+        tile_batches(&mut batches, 0, n1, &g1, r);
+        tile_batches(&mut batches, n1 as Vertex, n2, &g2, r);
+
+        // --- Reduce allocation (phases I-III) ----------------------------
+        // Per-server capacity: balanced share of n.
+        let cap: Vec<usize> =
+            (0..k).map(|s| n / k + usize::from(s < n % k)).collect();
+        let cap_g1: usize = g1.iter().map(|&s| cap[s as usize]).sum();
+        let cap_g2: usize = g2.iter().map(|&s| cap[s as usize]).sum();
+
+        // V2 -> G1 first (cross preference), overflow -> G2; V1 -> G2
+        // first, overflow -> G1.
+        let v2_to_g1 = n2.min(cap_g1);
+        let v1_to_g2 = n1.min(cap_g2 - (n2 - v2_to_g1));
+
+        let mut reduce_owner = vec![0u8; n];
+        // V1 = 0..n1: first v1_to_g2 to G2 balanced, rest to G1.
+        assign_balanced(&mut reduce_owner[..v1_to_g2], &g2, 0);
+        assign_balanced(&mut reduce_owner[v1_to_g2..n1], &g1, 0);
+        // V2 = n1..n: first v2_to_g1 to G1, rest to G2. Offset the
+        // round-robin start so G1's V2 load stacks after its V1 overflow.
+        let g1_pre = n1 - v1_to_g2;
+        let g2_pre = v1_to_g2;
+        assign_balanced(&mut reduce_owner[n1..n1 + v2_to_g1], &g1, g1_pre);
+        assign_balanced(&mut reduce_owner[n1 + v2_to_g1..], &g2, g2_pre);
+
+        Self::from_parts(n, k, r, batches, reduce_owner)
+    }
+
+    /// Appendix-C SBM allocation: identical structure to the bi-partite
+    /// scheme (the paper analyses allocation `Ã` for both models). Provided
+    /// as a named constructor for call-site clarity.
+    pub fn sbm_scheme(n1: usize, n2: usize, k: usize, r: usize) -> Self {
+        Self::bipartite_scheme(n1, n2, k, r)
+    }
+}
+
+/// Tile `count` vertices starting at `base` into `C(|group|, r)` contiguous
+/// batches, one per r-subset of `group` (remainder spread from the front).
+fn tile_batches(out: &mut Vec<Batch>, base: Vertex, count: usize, group: &[u8], r: usize) {
+    let nb = choose(group.len(), r) as usize;
+    let unit = count / nb;
+    let extra = count % nb;
+    let mut start = base;
+    for (t, local) in subsets(group.len(), r).into_iter().enumerate() {
+        let len = unit + usize::from(t < extra);
+        let servers: Vec<u8> = local.into_iter().map(|i| group[i as usize]).collect();
+        out.push(Batch { start, end: start + len as Vertex, servers });
+        start += len as Vertex;
+    }
+    debug_assert_eq!(start as usize, base as usize + count);
+}
+
+/// Assign `slots` to `group` servers in balanced contiguous chunks;
+/// `pre` biases which servers get the remainder (so stacked calls stay
+/// balanced overall).
+fn assign_balanced(slots: &mut [u8], group: &[u8], pre: usize) {
+    let n = slots.len();
+    if n == 0 {
+        return;
+    }
+    let k = group.len();
+    let base = n / k;
+    let extra = n % k;
+    let mut idx = 0usize;
+    for (pos, &s) in group.iter().enumerate() {
+        // rotate which servers take the +1 using `pre` to avoid always
+        // front-loading the same machines
+        let gets_extra = (pos + pre) % k < extra;
+        let len = base + usize::from(gets_extra);
+        slots[idx..(idx + len).min(n)].fill(s);
+        idx += len;
+        if idx >= n {
+            break;
+        }
+    }
+    // fill any tail (rounding) with the last server
+    if idx < n {
+        slots[idx..].fill(*group.last().unwrap());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_equal_clusters() {
+        let a = Allocation::bipartite_scheme(60, 60, 6, 2);
+        assert_eq!(a.n, 120);
+        // every vertex mapped exactly r times
+        for v in 0..120u32 {
+            let cnt = (0..6u8).filter(|&s| a.maps(s, v)).count();
+            assert_eq!(cnt, 2);
+        }
+        // reduce sets are balanced
+        for s in &a.reduce_sets {
+            assert_eq!(s.len(), 20);
+        }
+        // V1 mappers only on G1 = {0,1,2}
+        for b in &a.batches {
+            if b.start < 60 {
+                assert!(b.servers.iter().all(|&s| s < 3), "{:?}", b);
+            } else {
+                assert!(b.servers.iter().all(|&s| s >= 3), "{:?}", b);
+            }
+        }
+    }
+
+    #[test]
+    fn cross_reduce_placement() {
+        // equal clusters: all of V2 reduced on G1 and all of V1 on G2
+        let a = Allocation::bipartite_scheme(60, 60, 6, 2);
+        for v in 0..60u32 {
+            assert!(a.reducer_of(v) >= 3, "V1 vertex {v} on G1");
+        }
+        for v in 60..120u32 {
+            assert!(a.reducer_of(v) < 3, "V2 vertex {v} on G2");
+        }
+    }
+
+    #[test]
+    fn unequal_clusters_overflow() {
+        // n1 = 80, n2 = 40, K = 6 -> K1 = 4, K2 = 2
+        let a = Allocation::bipartite_scheme(80, 40, 6, 2);
+        // capacity respected: every server reduces ~n/K = 20
+        for s in &a.reduce_sets {
+            assert!((s.len() as i64 - 20).abs() <= 1, "{}", s.len());
+        }
+        // G2 capacity is 40: exactly 40 V1 vertices reduced there,
+        // the other 40 (overflow, phase III) on G1
+        let v1_on_g2 = (0..80u32).filter(|&v| a.reducer_of(v) >= 4).count();
+        assert_eq!(v1_on_g2, 40);
+        // all of V2 on G1
+        assert!((80..120u32).all(|v| a.reducer_of(v) < 4));
+    }
+
+    #[test]
+    fn swapped_cluster_sizes() {
+        // n1 < n2 also works (mirrored overflow)
+        let a = Allocation::bipartite_scheme(40, 80, 6, 2);
+        for v in 0..120u32 {
+            let cnt = (0..6u8).filter(|&s| a.maps(s, v)).count();
+            assert_eq!(cnt, 2);
+        }
+        let total: usize = a.reduce_sets.iter().map(|s| s.len()).sum();
+        assert_eq!(total, 120);
+    }
+
+    #[test]
+    fn computation_load_is_r() {
+        let a = Allocation::bipartite_scheme(90, 90, 6, 3);
+        assert!((a.computation_load() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "r <= min(K1, K2)")]
+    fn rejects_r_beyond_group() {
+        Allocation::bipartite_scheme(50, 50, 6, 4);
+    }
+
+    #[test]
+    fn sbm_alias() {
+        let a = Allocation::sbm_scheme(30, 30, 4, 2);
+        assert_eq!(a.n, 60);
+    }
+}

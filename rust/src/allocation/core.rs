@@ -1,0 +1,286 @@
+//! The [`Allocation`] type and the Erdős–Rényi-scheme constructor.
+
+use crate::combinatorics::{choose, subsets};
+use crate::graph::csr::Vertex;
+
+/// A batch of vertices Mapped by the same set of servers: the atomic unit
+/// of the paper's redundancy pattern.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Batch {
+    /// Contiguous id range `[start, end)` of the batch's vertices.
+    pub start: Vertex,
+    pub end: Vertex,
+    /// Sorted server ids that Map this batch (`|servers| = r`).
+    pub servers: Vec<u8>,
+}
+
+impl Batch {
+    #[inline]
+    pub fn len(&self) -> usize {
+        (self.end - self.start) as usize
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+
+    #[inline]
+    pub fn contains(&self, v: Vertex) -> bool {
+        self.start <= v && v < self.end
+    }
+
+    #[inline]
+    pub fn vertices(&self) -> impl Iterator<Item = Vertex> {
+        self.start..self.end
+    }
+}
+
+/// Subgraph + computation allocation `A = (M, R)` (paper Definition 1 and
+/// the Reduce partition of §II-B).
+#[derive(Clone, Debug)]
+pub struct Allocation {
+    pub n: usize,
+    /// Number of servers `K`.
+    pub k: usize,
+    /// Computation load `r` (each vertex Mapped at exactly `r` servers).
+    pub r: usize,
+    /// Disjoint batches covering `0..n`, ascending by `start`.
+    pub batches: Vec<Batch>,
+    /// `reduce_owner[v]` = the server Reducing vertex `v`.
+    pub reduce_owner: Vec<u8>,
+    /// Per-server sorted Reduce sets (inverse of `reduce_owner`).
+    pub reduce_sets: Vec<Vec<Vertex>>,
+    /// Per-server sorted list of batch indices it Maps.
+    pub mapped_batches: Vec<Vec<usize>>,
+    /// Batch start offsets for O(log B) vertex->batch lookup.
+    batch_starts: Vec<Vertex>,
+}
+
+impl Allocation {
+    /// Assemble derived indexes from raw parts; validates the invariants
+    /// every scheme must satisfy (disjoint covering batches, `|T| = r`,
+    /// total Map work `≈ r·n`).
+    pub fn from_parts(
+        n: usize,
+        k: usize,
+        r: usize,
+        batches: Vec<Batch>,
+        reduce_owner: Vec<u8>,
+    ) -> Self {
+        assert_eq!(reduce_owner.len(), n);
+        assert!(r >= 1 && r <= k, "need 1 <= r <= K (r={r}, K={k})");
+        let mut cursor: Vertex = 0;
+        for b in &batches {
+            assert_eq!(b.start, cursor, "batches must tile 0..n in order");
+            assert!(b.end >= b.start);
+            assert_eq!(b.servers.len(), r, "every batch must have |T| = r");
+            assert!(b.servers.windows(2).all(|w| w[0] < w[1]), "unsorted batch servers");
+            assert!(b.servers.iter().all(|&s| (s as usize) < k));
+            cursor = b.end;
+        }
+        assert_eq!(cursor as usize, n, "batches must cover 0..n");
+        let mut reduce_sets: Vec<Vec<Vertex>> = vec![Vec::new(); k];
+        for (v, &o) in reduce_owner.iter().enumerate() {
+            assert!((o as usize) < k, "reduce owner out of range");
+            reduce_sets[o as usize].push(v as Vertex);
+        }
+        let mut mapped_batches: Vec<Vec<usize>> = vec![Vec::new(); k];
+        for (t, b) in batches.iter().enumerate() {
+            for &s in &b.servers {
+                mapped_batches[s as usize].push(t);
+            }
+        }
+        let batch_starts = batches.iter().map(|b| b.start).collect();
+        Allocation { n, k, r, batches, reduce_owner, reduce_sets, mapped_batches, batch_starts }
+    }
+
+    /// The paper's §IV-A scheme: `C(K, r)` contiguous batches, one per
+    /// lexicographic r-subset of `[K]`; Reduce ranges are `K` contiguous
+    /// blocks (`reduce_owner[v] = v * K / n`-style balanced split).
+    ///
+    /// `n` need not divide evenly: remainders are spread one-per-batch from
+    /// the front, matching the paper's equal-size assumption asymptotically.
+    pub fn er_scheme(n: usize, k: usize, r: usize) -> Self {
+        assert!(k >= 1 && r >= 1 && r <= k, "need 1 <= r <= K (r={r}, K={k})");
+        let nb = choose(k, r) as usize;
+        let base = n / nb;
+        let extra = n % nb;
+        let mut batches = Vec::with_capacity(nb);
+        let mut start: Vertex = 0;
+        for (t, servers) in subsets(k, r).into_iter().enumerate() {
+            let len = base + usize::from(t < extra);
+            batches.push(Batch { start, end: start + len as Vertex, servers });
+            start += len as Vertex;
+        }
+        let reduce_owner = balanced_owners(n, k);
+        Self::from_parts(n, k, r, batches, reduce_owner)
+    }
+
+    /// The `r = 1` naive baseline with `M_k = R_k` (paper §VI). This is a
+    /// special case of [`er_scheme`] — with `r = 1` the batch for `{k}` and
+    /// the Reduce range of `k` coincide by construction — provided here by
+    /// name for readability at call sites.
+    pub fn single(n: usize, k: usize) -> Self {
+        Self::er_scheme(n, k, 1)
+    }
+
+    /// Batch index of vertex `v` (O(log B)).
+    #[inline]
+    pub fn batch_of(&self, v: Vertex) -> usize {
+        debug_assert!((v as usize) < self.n);
+        self.batch_starts.partition_point(|&s| s <= v) - 1
+    }
+
+    /// Does server `k` Map vertex `v`?
+    #[inline]
+    pub fn maps(&self, k: u8, v: Vertex) -> bool {
+        self.batches[self.batch_of(v)].servers.binary_search(&k).is_ok()
+    }
+
+    /// The server Reducing vertex `v`.
+    #[inline]
+    pub fn reducer_of(&self, v: Vertex) -> u8 {
+        self.reduce_owner[v as usize]
+    }
+
+    /// Number of vertices Mapped by server `k` (`|M_k|`).
+    pub fn mapped_count(&self, k: u8) -> usize {
+        self.mapped_batches[k as usize].iter().map(|&t| self.batches[t].len()).sum()
+    }
+
+    /// Iterate the vertices Mapped by server `k`, ascending.
+    pub fn mapped_vertices(&self, k: u8) -> impl Iterator<Item = Vertex> + '_ {
+        self.mapped_batches[k as usize]
+            .iter()
+            .flat_map(move |&t| self.batches[t].vertices())
+    }
+
+    /// Realized computation load `Σ|M_k| / n` (paper Definition 1);
+    /// equals `r` exactly when batches divide evenly.
+    pub fn computation_load(&self) -> f64 {
+        let total: usize = (0..self.k as u8).map(|k| self.mapped_count(k)).sum();
+        total as f64 / self.n as f64
+    }
+
+    /// `a_M^j` of the converse (paper §V): number of vertices Mapped at
+    /// exactly `j` servers, for `j = 1..=K` (index 0 unused).
+    pub fn map_multiplicity_histogram(&self) -> Vec<usize> {
+        let mut a = vec![0usize; self.k + 1];
+        for b in &self.batches {
+            a[b.servers.len()] += b.len();
+        }
+        a
+    }
+}
+
+/// Balanced owner array: `n` items over `k` owners, contiguous blocks,
+/// remainder spread one-per-owner from the front.
+pub fn balanced_owners(n: usize, k: usize) -> Vec<u8> {
+    let base = n / k;
+    let extra = n % k;
+    let mut owner = Vec::with_capacity(n);
+    for s in 0..k {
+        let len = base + usize::from(s < extra);
+        owner.extend(std::iter::repeat(s as u8).take(len));
+    }
+    owner
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn er_scheme_paper_example() {
+        // Fig 3(c): n=6, K=3, r=2 -> batches {1,2},{3,4},{5,6} (0-based
+        // {0,1},{2,3},{4,5}) mapped by {1,2},{1,3},{2,3} (0-based subsets).
+        let a = Allocation::er_scheme(6, 3, 2);
+        assert_eq!(a.batches.len(), 3);
+        assert_eq!(a.batches[0].servers, vec![0, 1]);
+        assert_eq!(a.batches[1].servers, vec![0, 2]);
+        assert_eq!(a.batches[2].servers, vec![1, 2]);
+        // M_1 = {1,2,3,4} -> 0-based {0,1,2,3}
+        let m0: Vec<Vertex> = a.mapped_vertices(0).collect();
+        assert_eq!(m0, vec![0, 1, 2, 3]);
+        let m1: Vec<Vertex> = a.mapped_vertices(1).collect();
+        assert_eq!(m1, vec![0, 1, 4, 5]);
+        let m2: Vec<Vertex> = a.mapped_vertices(2).collect();
+        assert_eq!(m2, vec![2, 3, 4, 5]);
+        // R_k = {2k, 2k+1}
+        assert_eq!(a.reduce_sets[0], vec![0, 1]);
+        assert_eq!(a.reduce_sets[2], vec![4, 5]);
+        assert!((a.computation_load() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn every_vertex_mapped_r_times() {
+        for (n, k, r) in [(100, 5, 2), (97, 5, 3), (64, 4, 4), (30, 6, 1)] {
+            let a = Allocation::er_scheme(n, k, r);
+            for v in 0..n as Vertex {
+                let cnt = (0..k as u8).filter(|&s| a.maps(s, v)).count();
+                assert_eq!(cnt, r, "v={v} n={n} k={k} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_sets_partition() {
+        let a = Allocation::er_scheme(101, 7, 3);
+        let total: usize = a.reduce_sets.iter().map(|s| s.len()).sum();
+        assert_eq!(total, 101);
+        let max = a.reduce_sets.iter().map(|s| s.len()).max().unwrap();
+        let min = a.reduce_sets.iter().map(|s| s.len()).min().unwrap();
+        assert!(max - min <= 1, "unbalanced: {min}..{max}");
+    }
+
+    #[test]
+    fn batch_of_lookup() {
+        let a = Allocation::er_scheme(100, 5, 2); // 10 batches of 10
+        for v in 0..100u32 {
+            let t = a.batch_of(v);
+            assert!(a.batches[t].contains(v));
+        }
+    }
+
+    #[test]
+    fn single_is_mk_eq_rk() {
+        let a = Allocation::single(60, 6);
+        for k in 0..6u8 {
+            let m: Vec<Vertex> = a.mapped_vertices(k).collect();
+            assert_eq!(m, a.reduce_sets[k as usize]);
+        }
+        assert!((a.computation_load() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn r_equals_k_maps_everything_everywhere() {
+        let a = Allocation::er_scheme(40, 4, 4);
+        for k in 0..4u8 {
+            assert_eq!(a.mapped_count(k), 40);
+        }
+    }
+
+    #[test]
+    fn multiplicity_histogram() {
+        let a = Allocation::er_scheme(90, 5, 2);
+        let h = a.map_multiplicity_histogram();
+        assert_eq!(h[2], 90);
+        assert_eq!(h.iter().sum::<usize>(), 90);
+    }
+
+    #[test]
+    fn uneven_batches_spread_remainder() {
+        // n=7, K=3, r=2 -> 3 batches of sizes 3,2,2
+        let a = Allocation::er_scheme(7, 3, 2);
+        let sizes: Vec<usize> = a.batches.iter().map(|b| b.len()).collect();
+        assert_eq!(sizes, vec![3, 2, 2]);
+        assert!((a.computation_load() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "1 <= r <= K")]
+    fn rejects_r_over_k() {
+        Allocation::er_scheme(10, 3, 4);
+    }
+}

@@ -1,0 +1,143 @@
+//! Degree-interleaved relabeling — a realization-aware allocation tweak
+//! (paper §VII: "develop schemes that allocate resources *after* looking
+//! at the graph").
+//!
+//! The coded load per (group, sender) is `max_k |Z^k|` (a *max* of row
+//! sizes), so skew across batches costs real bits: on power-law graphs a
+//! batch that happens to hold the hubs inflates every row it feeds. A
+//! degree-aware permutation that deals vertices to batch positions in
+//! descending-degree round-robin equalizes per-batch volume, shrinking the
+//! max without touching the scheme itself (the allocation still uses
+//! contiguous ranges over the *relabeled* ids).
+
+use crate::graph::csr::{Csr, Vertex};
+
+/// Build a permutation `perm` (new id of `v` = `perm[v]`) that deals
+/// vertices in descending degree round-robin across `nbatches` equal
+/// contiguous blocks, so each block receives an even share of high-degree
+/// vertices. Use with [`Csr::relabel`] before building the allocation.
+pub fn degree_interleave_perm(g: &Csr, nbatches: usize) -> Vec<Vertex> {
+    let n = g.n();
+    assert!(nbatches >= 1 && nbatches <= n.max(1));
+    let mut by_degree: Vec<Vertex> = (0..n as Vertex).collect();
+    by_degree.sort_by_key(|&v| std::cmp::Reverse(g.degree(v)));
+    // batch sizes mirror Allocation::er_scheme's remainder spreading
+    let base = n / nbatches;
+    let extra = n % nbatches;
+    let starts: Vec<usize> = {
+        let mut s = Vec::with_capacity(nbatches + 1);
+        let mut acc = 0;
+        for t in 0..nbatches {
+            s.push(acc);
+            acc += base + usize::from(t < extra);
+        }
+        s.push(acc);
+        s
+    };
+    let mut fill: Vec<usize> = starts[..nbatches].to_vec();
+    let mut perm = vec![0 as Vertex; n];
+    let mut t = 0usize;
+    for &v in &by_degree {
+        // advance to the next batch with room (round-robin)
+        let mut tries = 0;
+        while fill[t] >= starts[t + 1] {
+            t = (t + 1) % nbatches;
+            tries += 1;
+            assert!(tries <= nbatches, "no batch has room (bug)");
+        }
+        perm[v as usize] = fill[t] as Vertex;
+        fill[t] += 1;
+        t = (t + 1) % nbatches;
+    }
+    perm
+}
+
+/// Per-batch degree volumes under a given permutation (diagnostic used by
+/// the ablation bench): `volumes[t] = Σ_{v in batch t} deg(v)`.
+pub fn batch_volumes(g: &Csr, perm: &[Vertex], nbatches: usize) -> Vec<usize> {
+    let n = g.n();
+    let base = n / nbatches;
+    let extra = n % nbatches;
+    let mut bounds = Vec::with_capacity(nbatches + 1);
+    let mut acc = 0usize;
+    for t in 0..nbatches {
+        bounds.push(acc);
+        acc += base + usize::from(t < extra);
+    }
+    bounds.push(acc);
+    let mut vol = vec![0usize; nbatches];
+    for v in 0..n as Vertex {
+        let nv = perm[v as usize] as usize;
+        let t = match bounds.binary_search(&nv) {
+            Ok(exact) => exact.min(nbatches - 1),
+            Err(ins) => ins - 1,
+        };
+        vol[t] += g.degree(v);
+    }
+    vol
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::powerlaw::{pl, PlParams};
+    use crate::util::rng::DetRng;
+
+    #[test]
+    fn perm_is_a_permutation() {
+        let g = pl(500, PlParams::default(), &mut DetRng::seed(1));
+        let perm = degree_interleave_perm(&g, 10);
+        let mut sorted = perm.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..500).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn volumes_balance_on_powerlaw() {
+        let g = pl(
+            2000,
+            PlParams { gamma: 2.2, max_degree: 10_000, rho_scale: 3.0 },
+            &mut DetRng::seed(2),
+        );
+        let nb = 10;
+        let identity: Vec<Vertex> = (0..2000).collect();
+        let vol_id = batch_volumes(&g, &identity, nb);
+        let perm = degree_interleave_perm(&g, nb);
+        let vol_il = batch_volumes(&g, &perm, nb);
+        let spread = |v: &[usize]| {
+            let max = *v.iter().max().unwrap() as f64;
+            let mean = v.iter().sum::<usize>() as f64 / v.len() as f64;
+            max / mean
+        };
+        assert!(
+            spread(&vol_il) < spread(&vol_id),
+            "interleave should balance: {:?} vs {:?}",
+            vol_il,
+            vol_id
+        );
+        assert!(spread(&vol_il) < 1.3, "interleaved spread {}", spread(&vol_il));
+    }
+
+    #[test]
+    fn relabel_roundtrip_structure() {
+        let g = pl(300, PlParams::default(), &mut DetRng::seed(3));
+        let perm = degree_interleave_perm(&g, 6);
+        let h = g.relabel(&perm);
+        assert_eq!(h.m(), g.m());
+        // degree multiset preserved
+        let mut d1: Vec<_> = (0..300u32).map(|v| g.degree(v)).collect();
+        let mut d2: Vec<_> = (0..300u32).map(|v| h.degree(v)).collect();
+        d1.sort_unstable();
+        d2.sort_unstable();
+        assert_eq!(d1, d2);
+    }
+
+    #[test]
+    fn single_batch_degenerate() {
+        let g = pl(50, PlParams::default(), &mut DetRng::seed(4));
+        let perm = degree_interleave_perm(&g, 1);
+        let mut sorted = perm.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,21 @@
+//! Subgraph (Map) and Reduce-computation allocation (paper §II-B, §IV-A,
+//! Appendices A & C).
+//!
+//! An [`Allocation`] says, for every vertex, (a) which `r` servers Map it
+//! (via the *batch* it belongs to) and (b) which single server Reduces it.
+//! Three constructors are provided:
+//!
+//! * [`Allocation::er_scheme`] — the paper's §IV-A scheme: vertices are
+//!   partitioned into `C(K, r)` batches, one per r-subset of servers;
+//!   Reduce functions are partitioned into `K` equal contiguous ranges.
+//! * [`Allocation::bipartite_scheme`] — Appendix A: servers split into two
+//!   groups proportional to cluster sizes; Mappers of each side go to the
+//!   group that Reduces the *other* side (phases I–III).
+//! * [`Allocation::single`] — the `r = 1` naive baseline with
+//!   `M_k = R_k` (paper §VI: "for the case of r = 1, we let M_k = R_k").
+
+pub mod bipartite;
+pub mod interleave;
+pub mod core;
+
+pub use core::{Allocation, Batch};

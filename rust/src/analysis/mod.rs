@@ -1,0 +1,5 @@
+//! Analysis layer: closed-form predictions from the paper's theorems and
+//! the statistics helpers the experiment harnesses use.
+
+pub mod stats;
+pub mod theory;

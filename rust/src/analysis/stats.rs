@@ -1,0 +1,108 @@
+//! Statistics over repeated graph draws: mean, stddev, confidence
+//! intervals — every "average communication load" point in the paper's
+//! plots is a mean over realizations.
+
+/// Summary of a sample.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Half-width of the ~95% normal-approximation CI of the mean.
+    pub fn ci95(&self) -> f64 {
+        if self.n < 2 {
+            return f64::NAN;
+        }
+        1.96 * self.std / (self.n as f64).sqrt()
+    }
+}
+
+/// Summarize a sample (population stddev).
+pub fn summarize(xs: &[f64]) -> Summary {
+    if xs.is_empty() {
+        return Summary::default();
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    Summary {
+        n: xs.len(),
+        mean,
+        std: var.sqrt(),
+        min: xs.iter().copied().fold(f64::INFINITY, f64::min),
+        max: xs.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+    }
+}
+
+/// Online accumulator (Welford) for streaming measurements.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Accumulator {
+    n: usize,
+    mean: f64,
+    m2: f64,
+}
+
+impl Accumulator {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> usize {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            (self.m2 / self.n as f64).sqrt()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!(s.ci95() > 0.0);
+    }
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs = [0.3, 1.7, -2.0, 5.5, 0.0, 3.3];
+        let mut acc = Accumulator::default();
+        for &x in &xs {
+            acc.push(x);
+        }
+        let s = summarize(&xs);
+        assert!((acc.mean() - s.mean).abs() < 1e-12);
+        assert!((acc.std() - s.std).abs() < 1e-12);
+        assert_eq!(acc.count(), 6);
+    }
+
+    #[test]
+    fn empty_sample() {
+        let s = summarize(&[]);
+        assert_eq!(s.n, 0);
+        assert!(s.ci95().is_nan());
+    }
+}

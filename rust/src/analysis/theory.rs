@@ -1,0 +1,190 @@
+//! Closed forms from the paper: uncoded/coded loads, the information-
+//! theoretic lower bound, and the Theorem 2–4 predictions. Every figure
+//! bench plots measurements against these.
+
+use crate::allocation::Allocation;
+
+/// Expected uncoded load for ER (§IV-A): `L^UC(r) = p (1 - r/K)`.
+pub fn uncoded_load_er(p: f64, r: f64, k: usize) -> f64 {
+    p * (1.0 - r / k as f64)
+}
+
+/// Asymptotic coded load for ER (Theorem 1): `(p/r)(1 - r/K)`.
+pub fn coded_load_er(p: f64, r: f64, k: usize) -> f64 {
+    p / r * (1.0 - r / k as f64)
+}
+
+/// Finite-`n` refinement of the coded load from the achievability proof
+/// (eq. (16) + Lemma 1): the per-(group, sender) column count is
+/// `E[Q] ≈ p g̃ + 2 sqrt(g̃ p (1-p) ln r)` with `g̃ = n² / (K C(K,r))`,
+/// so `L ≈ K C(K-1, r) E[Q] / (r n²)`. Matches the measured coded curve
+/// far better than the asymptote at small `n` (Fig 5's gap).
+pub fn coded_load_er_finite(n: usize, p: f64, r: usize, k: usize) -> f64 {
+    if r >= k {
+        return 0.0;
+    }
+    if r == 1 {
+        // single segment, no coding gain: Q = row length, E[Q] = p g̃
+        return uncoded_load_er(p, 1.0, k);
+    }
+    let g_tilde = (n as f64) * (n as f64)
+        / (k as f64 * crate::combinatorics::choose(k, r) as f64);
+    let e_q = p * g_tilde
+        + 2.0 * (g_tilde * p * (1.0 - p) * (r as f64).ln()).sqrt();
+    let groups = k as f64 * crate::combinatorics::choose(k - 1, r) as f64;
+    groups * e_q / (r as f64 * n as f64 * n as f64)
+}
+
+/// Lemma 3 / converse lower bound for a *given* Map allocation:
+/// `L ≥ p Σ_j (a_j / n) (K - j)/(K j)`.
+pub fn lower_bound_er_for_allocation(p: f64, alloc: &Allocation) -> f64 {
+    let hist = alloc.map_multiplicity_histogram();
+    let k = alloc.k as f64;
+    let n = alloc.n as f64;
+    let mut sum = 0.0;
+    for (j, &a) in hist.iter().enumerate().skip(1) {
+        sum += (a as f64 / n) * (k - j as f64) / (k * j as f64);
+    }
+    p * sum
+}
+
+/// The optimized converse (Theorem 1 proof, eq. (67)):
+/// `L*(r) ≥ (p/r)(1 - r/K)` for real `r ∈ [1, K]`.
+pub fn lower_bound_er(p: f64, r: f64, k: usize) -> f64 {
+    p / r * (1.0 - r / k as f64)
+}
+
+/// Theorem 2 upper bound (RB model, balanced clusters):
+/// `L*/q ≤ (1/2r)(1 - 2r/K)`.
+pub fn rb_upper(q: f64, r: f64, k: usize) -> f64 {
+    q / (2.0 * r) * (1.0 - 2.0 * r / k as f64)
+}
+
+/// Theorem 2 lower bound: `L*/q ≥ (1/8r)(1 - 2r/K)`.
+pub fn rb_lower(q: f64, r: f64, k: usize) -> f64 {
+    q / (8.0 * r) * (1.0 - 2.0 * r / k as f64)
+}
+
+/// Exact finite-size expected *uncoded* load of the Appendix-A scheme on
+/// `RB(n1, n2, q)` (sum of eqs. (69)–(71) numerators without the 1/r
+/// coding gain): cross edges needed by Reducers not co-located with the
+/// Mappers.
+pub fn rb_uncoded_finite(n1: usize, n2: usize, q: f64, r: f64, k: usize) -> f64 {
+    let n = (n1 + n2) as f64;
+    let k1 = ((k * n1) as f64 / n).round().max(1.0);
+    let k2 = k as f64 - k1;
+    let (a, b) = (n1 as f64, n2 as f64);
+    // phases I & II at their group sizes, phase III uncoded remainder
+    q * (a * b) / (n * n) * (1.0 - r / k1)
+        + q * (b * b) / (n * n) * (1.0 - r / k2)
+        + q * (b * (a - b)) / (n * n)
+}
+
+/// Theorem 3 achievability (SBM): `L ≤ (1/r)(1 - r/K) ρ_eff` with
+/// `ρ_eff = (p n1² + p n2² + 2 q n1 n2)/(n1+n2)²`.
+pub fn sbm_upper(n1: usize, n2: usize, p: f64, q: f64, r: f64, k: usize) -> f64 {
+    crate::graph::sbm::effective_density(n1, n2, p, q) / r * (1.0 - r / k as f64)
+}
+
+/// Theorem 3 converse: `L*/q ≥ (1/r)(1 - r/K)`.
+pub fn sbm_lower(q: f64, r: f64, k: usize) -> f64 {
+    q / r * (1.0 - r / k as f64)
+}
+
+/// Theorem 4 (power law, γ > 2): `n L* ≤ (1/r)(1 - r/K)(γ-1)/(γ-2)`,
+/// returned as the bound on `L` itself.
+pub fn pl_upper(n: usize, gamma: f64, r: f64, k: usize) -> f64 {
+    assert!(gamma > 2.0, "Theorem 4 needs gamma > 2");
+    (gamma - 1.0) / (gamma - 2.0) / (r * n as f64) * (1.0 - r / k as f64)
+}
+
+/// Remark 10: total-time model `T(r) ≈ r T_map + T_shuffle / r + T_reduce`
+/// and the heuristic optimum `r* = sqrt(T_shuffle / T_map)`.
+pub fn total_time_model(r: f64, t_map: f64, t_shuffle: f64, t_reduce: f64) -> f64 {
+    r * t_map + t_shuffle / r + t_reduce
+}
+
+/// `r* = sqrt(T_shuffle / T_map)` (Remark 10).
+pub fn r_star(t_map: f64, t_shuffle: f64) -> f64 {
+    (t_shuffle / t_map).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn theorem1_forms() {
+        // paper's running numbers: p=0.1, K=5
+        assert!((uncoded_load_er(0.1, 1.0, 5) - 0.08).abs() < 1e-12);
+        assert!((coded_load_er(0.1, 2.0, 5) - 0.03).abs() < 1e-12);
+        assert!((lower_bound_er(0.1, 2.0, 5) - 0.03).abs() < 1e-12);
+        // r = K: everything local
+        assert_eq!(coded_load_er(0.1, 5.0, 5), 0.0);
+    }
+
+    #[test]
+    fn finite_refinement_above_asymptote_converges() {
+        let (p, r, k) = (0.1, 2, 5);
+        let asym = coded_load_er(p, 2.0, k);
+        let small = coded_load_er_finite(300, p, r, k);
+        let large = coded_load_er_finite(3_000_000, p, r, k);
+        assert!(small > asym, "finite correction must be positive");
+        assert!((large - asym) / asym < 0.01, "must converge: {large} vs {asym}");
+    }
+
+    #[test]
+    fn lower_bound_matches_balanced_allocation() {
+        // for the §IV-A allocation all mass is at j = r: bound = p/r (1-r/K)
+        let alloc = Allocation::er_scheme(100, 5, 2);
+        let lb = lower_bound_er_for_allocation(0.1, &alloc);
+        assert!((lb - lower_bound_er(0.1, 2.0, 5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inverse_linear_gain() {
+        // coded gain over uncoded is exactly r
+        for r in 1..=4 {
+            let gain = uncoded_load_er(0.2, r as f64, 5) / coded_load_er(0.2, r as f64, 5);
+            assert!((gain - r as f64).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn rb_bounds_ordered() {
+        let (q, k) = (0.05, 10);
+        for r in 1..5 {
+            let up = rb_upper(q, r as f64, k);
+            let lo = rb_lower(q, r as f64, k);
+            assert!(lo <= up);
+            assert!((up / lo - 4.0).abs() < 1e-9, "factor-4 gap");
+        }
+    }
+
+    #[test]
+    fn sbm_bounds() {
+        let up = sbm_upper(150, 150, 0.2, 0.05, 2.0, 5);
+        // effective density = (0.2*2 + 0.05*2)/4 = 0.125
+        assert!((up - 0.125 / 2.0 * 0.6).abs() < 1e-12);
+        let lo = sbm_lower(0.05, 2.0, 5);
+        assert!(lo <= up);
+    }
+
+    #[test]
+    fn pl_bound_scales_inverse_n() {
+        let a = pl_upper(1000, 2.5, 2.0, 5);
+        let b = pl_upper(2000, 2.5, 2.0, 5);
+        assert!((a / b - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn remark10_heuristic() {
+        // paper: Scenario 2 has T_map = 1.649, T_shuffle = 43.78, r* = 5.15
+        let rs = r_star(1.649, 43.78);
+        assert!((rs - 5.15).abs() < 0.01, "r*={rs}");
+        // model is minimized near r*
+        let t_at = |r: f64| total_time_model(r, 1.649, 43.78, 0.5);
+        assert!(t_at(rs) <= t_at(rs - 1.0));
+        assert!(t_at(rs) <= t_at(rs + 1.0));
+    }
+}

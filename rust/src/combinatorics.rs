@@ -1,0 +1,195 @@
+//! Combinatorial machinery for the batch allocation: binomial coefficients,
+//! lexicographic subset enumeration and ranking/unranking.
+//!
+//! The coded scheme (paper §IV-A) partitions the `n` vertices into
+//! `C(K, r)` batches, one per r-subset `T ⊆ [K]`, and forms multicast
+//! groups from (r+1)-subsets `S ⊆ [K]`. Everything downstream (allocation,
+//! encode, decode) needs a *canonical*, cheap bijection between subsets and
+//! indices — that bijection (the combinatorial number system) lives here.
+
+/// Binomial coefficient `C(n, k)` as `u64` (exact for every case we use;
+/// `K <= 64` in any conceivable run). Returns 0 when `k > n`.
+pub fn choose(n: usize, k: usize) -> u64 {
+    if k > n {
+        return 0;
+    }
+    let k = k.min(n - k);
+    let mut num: u128 = 1;
+    for i in 0..k {
+        num = num * (n - i) as u128 / (i + 1) as u128;
+    }
+    num as u64
+}
+
+/// All k-subsets of `[n] = {0..n-1}` in lexicographic order.
+///
+/// The subsets come out sorted ascending internally, and the sequence is
+/// lexicographic, so `subsets(n, k)[rank]` agrees with [`subset_rank`].
+pub fn subsets(n: usize, k: usize) -> Vec<Vec<u8>> {
+    let mut out = Vec::with_capacity(choose(n, k) as usize);
+    if k > n {
+        return out;
+    }
+    let mut cur: Vec<u8> = (0..k as u8).collect();
+    loop {
+        out.push(cur.clone());
+        // advance to the next lexicographic k-subset
+        let mut i = k;
+        loop {
+            if i == 0 {
+                return out;
+            }
+            i -= 1;
+            if (cur[i] as usize) < n - k + i {
+                cur[i] += 1;
+                for j in i + 1..k {
+                    cur[j] = cur[j - 1] + 1;
+                }
+                break;
+            }
+        }
+    }
+}
+
+/// Lexicographic rank of a sorted k-subset of `[n]`.
+///
+/// Inverse of indexing into [`subsets`]`(n, k)`.
+pub fn subset_rank(n: usize, set: &[u8]) -> u64 {
+    let k = set.len();
+    let mut rank = 0u64;
+    let mut prev = 0usize; // smallest value the current position may take
+    for (i, &v) in set.iter().enumerate() {
+        for x in prev..v as usize {
+            rank += choose(n - x - 1, k - i - 1);
+        }
+        prev = v as usize + 1;
+    }
+    rank
+}
+
+/// Unrank: the `rank`-th (lexicographic) k-subset of `[n]`.
+pub fn subset_unrank(n: usize, k: usize, mut rank: u64) -> Vec<u8> {
+    let mut out = Vec::with_capacity(k);
+    let mut x = 0usize;
+    for i in 0..k {
+        loop {
+            let c = choose(n - x - 1, k - i - 1);
+            if rank < c {
+                out.push(x as u8);
+                x += 1;
+                break;
+            }
+            rank -= c;
+            x += 1;
+        }
+    }
+    out
+}
+
+/// Iterator over all k-subsets *containing* a fixed element `e` of `[n]`.
+pub fn subsets_containing(n: usize, k: usize, e: u8) -> Vec<Vec<u8>> {
+    subsets(n, k)
+        .into_iter()
+        .filter(|s| s.contains(&e))
+        .collect()
+}
+
+/// Position of `e` in the sorted subset `s` (panics if absent) — the
+/// segment index assignment of the coded scheme keys off this.
+#[inline]
+pub fn pos_in(s: &[u8], e: u8) -> usize {
+    s.iter().position(|&x| x == e).expect("element not in subset")
+}
+
+/// Sorted set difference `s \ {e}` for small sets.
+#[inline]
+pub fn minus(s: &[u8], e: u8) -> Vec<u8> {
+    s.iter().copied().filter(|&x| x != e).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn choose_table() {
+        assert_eq!(choose(5, 2), 10);
+        assert_eq!(choose(10, 0), 1);
+        assert_eq!(choose(10, 10), 1);
+        assert_eq!(choose(10, 11), 0);
+        assert_eq!(choose(15, 7), 6435);
+        assert_eq!(choose(52, 5), 2_598_960);
+    }
+
+    #[test]
+    fn choose_symmetry() {
+        for n in 0..20 {
+            for k in 0..=n {
+                assert_eq!(choose(n, k), choose(n, n - k));
+            }
+        }
+    }
+
+    #[test]
+    fn pascal_identity() {
+        for n in 1..25 {
+            for k in 1..n {
+                assert_eq!(choose(n, k), choose(n - 1, k - 1) + choose(n - 1, k));
+            }
+        }
+    }
+
+    #[test]
+    fn subsets_count_and_order() {
+        let ss = subsets(5, 2);
+        assert_eq!(ss.len(), 10);
+        assert_eq!(ss[0], vec![0, 1]);
+        assert_eq!(ss[1], vec![0, 2]);
+        assert_eq!(ss[9], vec![3, 4]);
+        // strictly increasing lexicographically
+        for w in ss.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+
+    #[test]
+    fn subsets_edge_cases() {
+        assert_eq!(subsets(4, 0), vec![Vec::<u8>::new()]);
+        assert_eq!(subsets(4, 4), vec![vec![0, 1, 2, 3]]);
+        assert!(subsets(3, 4).is_empty());
+    }
+
+    #[test]
+    fn rank_unrank_roundtrip() {
+        for n in 1..10 {
+            for k in 0..=n {
+                for (i, s) in subsets(n, k).iter().enumerate() {
+                    assert_eq!(subset_rank(n, s), i as u64, "n={n} k={k} s={s:?}");
+                    assert_eq!(&subset_unrank(n, k, i as u64), s);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn subsets_containing_counts() {
+        // each element appears in C(n-1, k-1) subsets
+        for n in 2..8 {
+            for k in 1..=n {
+                for e in 0..n as u8 {
+                    assert_eq!(
+                        subsets_containing(n, k, e).len() as u64,
+                        choose(n - 1, k - 1)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn minus_and_pos() {
+        let s = vec![1u8, 3, 5, 7];
+        assert_eq!(minus(&s, 3), vec![1, 5, 7]);
+        assert_eq!(pos_in(&s, 5), 2);
+    }
+}

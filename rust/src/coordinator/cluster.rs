@@ -1,0 +1,477 @@
+//! Threaded leader/worker cluster driver.
+//!
+//! The engine ([`super::engine`]) simulates the cluster in one loop; this
+//! driver actually *runs* it: `K` OS threads, one per worker, exchanging
+//! real messages through channels, with the leader routing multicasts
+//! (the shared bus) and enforcing phase barriers. Each worker holds only
+//! the state it is entitled to — the states of vertices it Maps and
+//! Reduces — so a decode bug cannot be papered over by shared memory:
+//! wrong bits produce wrong PageRanks, which the tests catch against the
+//! single-machine oracle.
+//!
+//! Offline note: the environment has no tokio; the driver uses
+//! `std::thread` + `mpsc`, which for a compute-bound K≤16 cluster is the
+//! same topology (one task per worker, message passing, leader barrier).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Instant;
+
+use crate::allocation::Allocation;
+use crate::graph::csr::{Csr, Vertex};
+use crate::mapreduce::program::VertexProgram;
+use crate::network::Bus;
+use crate::shuffle::coded::{encode_sender, row_values_except, CodedMessage};
+use crate::shuffle::decoder::{recover_group, RecoveredIv};
+use crate::shuffle::load::{ShuffleLoad, HEADER_BYTES};
+use crate::shuffle::plan::GroupPlan;
+use crate::shuffle::uncoded::UncodedTransfer;
+
+use super::config::EngineConfig;
+use super::engine::{prepare, reduce_worker_rust, Job};
+use super::metrics::{IterationMetrics, JobReport, PhaseTimes};
+
+/// Leader -> worker commands.
+enum Cmd {
+    /// Run Encode and emit shuffle traffic.
+    Shuffle,
+    /// A routed coded multicast (group index, message).
+    DeliverCoded(usize, CodedMessage),
+    /// A routed uncoded unicast: full IVs.
+    DeliverUncoded(Vec<RecoveredIv>),
+    /// All shuffle traffic delivered: run Reduce and report fresh states.
+    Reduce,
+    /// Fresh states for vertices this worker Maps (write-back).
+    StateUpdate(Vec<(Vertex, f64)>),
+    /// Iteration done; proceed to the next (or stop).
+    Continue,
+    Stop,
+}
+
+/// Worker -> leader events.
+enum Event {
+    /// Multicast request: group index + encoded message (leader routes).
+    Multicast(u8, usize, CodedMessage),
+    /// Unicast request: (sender, receiver, ivs).
+    Unicast(u8, u8, Vec<RecoveredIv>),
+    /// This worker finished emitting its shuffle traffic.
+    SendDone,
+    /// Reduce finished: fresh (vertex, state) pairs of this worker's rows.
+    Reduced(u8, Vec<(Vertex, f64)>),
+}
+
+/// Run a job on the threaded cluster. Semantics identical to
+/// [`super::engine::run_rust`]; metrics additionally carry real per-phase
+/// wall times (in `wall_s`) while the modeled times use the same bus.
+pub fn run_cluster(job: &Job<'_>, cfg: &EngineConfig, iters: usize) -> JobReport {
+    let (g, alloc, prog) = (job.graph, job.alloc, job.program);
+    let k = alloc.k;
+    let r = alloc.r;
+    let prep = prepare(job, cfg.scheme);
+    let groups: &[GroupPlan] = &prep.groups;
+    let transfers: &[UncodedTransfer] = &prep.transfers;
+
+    // Per-worker routing tables (precomputed, read-only).
+    // sender -> [(group_idx, sender_idx)]
+    let mut send_plan: Vec<Vec<(usize, usize)>> = vec![Vec::new(); k];
+    // receiver -> expected coded message count
+    let mut expect_coded = vec![0usize; k];
+    for (gi, plan) in groups.iter().enumerate() {
+        for (si, &s) in plan.servers.iter().enumerate() {
+            // a sender only transmits if some *other* row is non-empty
+            let has_cols = plan
+                .rows
+                .iter()
+                .enumerate()
+                .any(|(i, row)| i != si && !row.is_empty());
+            if has_cols {
+                send_plan[s as usize].push((gi, si));
+            }
+        }
+        for (mi, &m) in plan.servers.iter().enumerate() {
+            if !plan.rows[mi].is_empty() {
+                expect_coded[m as usize] += plan.servers.len() - 1;
+            }
+        }
+    }
+    // uncoded: sender -> transfer indices; receiver -> expected unicasts
+    let mut send_unc: Vec<Vec<usize>> = vec![Vec::new(); k];
+    let mut expect_unc = vec![0usize; k];
+    for (ti, t) in transfers.iter().enumerate() {
+        send_unc[t.sender as usize].push(ti);
+        expect_unc[t.receiver as usize] += 1;
+    }
+
+    std::thread::scope(|scope| {
+        let (event_tx, event_rx): (Sender<Event>, Receiver<Event>) = channel();
+        let mut cmd_txs: Vec<Sender<Cmd>> = Vec::with_capacity(k);
+        let send_plan = &send_plan;
+        let send_unc = &send_unc;
+        let expect_coded = &expect_coded;
+        let expect_unc = &expect_unc;
+        for kk in 0..k as u8 {
+            let (tx, rx) = channel::<Cmd>();
+            cmd_txs.push(tx);
+            let etx = event_tx.clone();
+            scope.spawn(move || {
+                worker_loop(
+                    kk,
+                    g,
+                    alloc,
+                    prog,
+                    groups,
+                    transfers,
+                    &send_plan[kk as usize],
+                    &send_unc[kk as usize],
+                    expect_coded[kk as usize],
+                    expect_unc[kk as usize],
+                    r,
+                    rx,
+                    etx,
+                );
+            });
+        }
+        drop(event_tx);
+        leader_loop(job, cfg, iters, groups, &cmd_txs, &event_rx)
+    })
+}
+
+/// The leader: phase barriers, bus accounting, message routing.
+fn leader_loop(
+    job: &Job<'_>,
+    cfg: &EngineConfig,
+    iters: usize,
+    groups: &[GroupPlan],
+    cmd_txs: &[Sender<Cmd>],
+    event_rx: &Receiver<Event>,
+) -> JobReport {
+    let (g, alloc) = (job.graph, job.alloc);
+    let k = alloc.k;
+    let r = alloc.r;
+    let prep = prepare(job, cfg.scheme);
+    let mut report = JobReport::default();
+    let mut final_state = vec![0.0f64; g.n()];
+
+    for it in 0..iters {
+        let iter_start = Instant::now();
+        let mut times = PhaseTimes::default();
+        let mut shuffle_load = ShuffleLoad::default();
+        let mut bus = Bus::new(cfg.bus);
+
+        // modeled map time (workers Map from their local states)
+        times.map_s = prep
+            .mapped_edges
+            .iter()
+            .map(|&e| e as f64 * cfg.time.map_edge_s)
+            .fold(0.0, f64::max);
+
+        // ---- Shuffle ----
+        for tx in cmd_txs {
+            tx.send(Cmd::Shuffle).unwrap();
+        }
+        let mut send_done = 0usize;
+        while send_done < k {
+            match event_rx.recv().expect("worker hung up") {
+                Event::Multicast(sender, gi, msg) => {
+                    let plan = &groups[gi];
+                    let bytes = msg.payload_bytes(r) + HEADER_BYTES;
+                    bus.transmit(sender, plan.servers.len() - 1, bytes);
+                    shuffle_load.add_coded(msg.columns.len(), r);
+                    for (mi, &m) in plan.servers.iter().enumerate() {
+                        if m != sender && !plan.rows[mi].is_empty() {
+                            cmd_txs[m as usize]
+                                .send(Cmd::DeliverCoded(gi, msg.clone()))
+                                .unwrap();
+                        }
+                    }
+                }
+                Event::Unicast(sender, receiver, ivs) => {
+                    let bytes = ivs.len() * 8 + HEADER_BYTES;
+                    bus.transmit(sender, 1, bytes);
+                    shuffle_load.add_uncoded(ivs.len());
+                    cmd_txs[receiver as usize].send(Cmd::DeliverUncoded(ivs)).unwrap();
+                }
+                Event::SendDone => send_done += 1,
+                Event::Reduced(..) => unreachable!("reduce before shuffle barrier"),
+            }
+        }
+        times.shuffle_s = bus.clock();
+
+        // ---- Reduce ----
+        for tx in cmd_txs {
+            tx.send(Cmd::Reduce).unwrap();
+        }
+        let mut fresh: Vec<Vec<(Vertex, f64)>> = vec![Vec::new(); k];
+        let mut reduced = 0usize;
+        while reduced < k {
+            if let Event::Reduced(kk, pairs) = event_rx.recv().expect("worker hung up") {
+                fresh[kk as usize] = pairs;
+                reduced += 1;
+            }
+        }
+        times.reduce_s = prep
+            .reduce_edges
+            .iter()
+            .map(|&e| e as f64 * cfg.time.reduce_iv_s)
+            .fold(0.0, f64::max);
+
+        // ---- State write-back ----
+        bus.reset();
+        let mut update_load = ShuffleLoad::default();
+        let mut outgoing: Vec<Vec<(Vertex, f64)>> = vec![Vec::new(); k];
+        for pairs in &fresh {
+            for &(v, s) in pairs {
+                final_state[v as usize] = s;
+                for &m in &alloc.batches[alloc.batch_of(v)].servers {
+                    outgoing[m as usize].push((v, s));
+                }
+            }
+        }
+        if cfg.account_state_update && r > 1 {
+            for batch in &alloc.batches {
+                let mut per_reducer = std::collections::HashMap::<u8, usize>::new();
+                for v in batch.vertices() {
+                    *per_reducer.entry(alloc.reduce_owner[v as usize]).or_default() += 1;
+                }
+                for (&owner, &count) in &per_reducer {
+                    let others = batch.servers.iter().filter(|&&s| s != owner).count();
+                    if others == 0 {
+                        continue;
+                    }
+                    bus.transmit(owner, others, count * 8 + HEADER_BYTES);
+                    update_load.add_uncoded(count);
+                }
+            }
+            times.update_s = bus.clock();
+        }
+        for (kk, pairs) in outgoing.into_iter().enumerate() {
+            cmd_txs[kk].send(Cmd::StateUpdate(pairs)).unwrap();
+        }
+        let last = it + 1 == iters;
+        for tx in cmd_txs {
+            tx.send(if last { Cmd::Stop } else { Cmd::Continue }).unwrap();
+        }
+
+        report.iterations.push(IterationMetrics {
+            times,
+            wall_s: iter_start.elapsed().as_secs_f64(),
+            shuffle: shuffle_load,
+            update: update_load,
+            validated_ivs: 0,
+        });
+    }
+    report.final_state = final_state;
+    report
+}
+
+/// One worker thread: owns only its entitled state, performs real encode /
+/// decode / reduce.
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    me: u8,
+    g: &Csr,
+    alloc: &Allocation,
+    prog: &dyn VertexProgram,
+    groups: &[GroupPlan],
+    transfers: &[UncodedTransfer],
+    my_sends: &[(usize, usize)],
+    my_unc_sends: &[usize],
+    expect_coded: usize,
+    expect_unc: usize,
+    r: usize,
+    rx: Receiver<Cmd>,
+    tx: Sender<Event>,
+) {
+    let n = g.n();
+    // Local state: only Mapped + Reduced vertices are valid. NaN poison
+    // elsewhere so illegal reads surface in tests.
+    let mut state = vec![f64::NAN; n];
+    for j in alloc.mapped_vertices(me) {
+        state[j as usize] = prog.init(j, g);
+    }
+    for &i in &alloc.reduce_sets[me as usize] {
+        state[i as usize] = prog.init(i, g);
+    }
+
+    loop {
+        // ---- Shuffle phase ----
+        match rx.recv().unwrap() {
+            Cmd::Shuffle => {}
+            Cmd::Stop => return,
+            _ => unreachable!("protocol error: expected Shuffle"),
+        }
+        {
+            let state_ref = &state;
+            let value = move |i: Vertex, j: Vertex| {
+                let s = state_ref[j as usize];
+                debug_assert!(!s.is_nan(), "worker read unowned state {j}");
+                prog.map(i, j, s, g).to_bits()
+            };
+            for &(gi, si) in my_sends {
+                let plan = &groups[gi];
+                let vals = row_values_except(plan, si, &value);
+                let msg = encode_sender(plan, si, &vals, r);
+                if !msg.columns.is_empty() {
+                    tx.send(Event::Multicast(me, gi, msg)).unwrap();
+                }
+            }
+            for &ti in my_unc_sends {
+                let t = &transfers[ti];
+                let ivs: Vec<RecoveredIv> = t
+                    .ivs
+                    .iter()
+                    .map(|&(i, j)| RecoveredIv { reducer: i, mapper: j, bits: value(i, j) })
+                    .collect();
+                tx.send(Event::Unicast(me, t.receiver, ivs)).unwrap();
+            }
+        }
+        tx.send(Event::SendDone).unwrap();
+
+        // ---- Receive + decode until the Reduce barrier ----
+        let mut received: Vec<RecoveredIv> = Vec::new();
+        let mut pending: Vec<(usize, Vec<CodedMessage>)> = Vec::new();
+        let mut got_coded = 0usize;
+        let mut got_unc = 0usize;
+        loop {
+            match rx.recv().unwrap() {
+                Cmd::DeliverCoded(gi, msg) => {
+                    got_coded += 1;
+                    match pending.iter_mut().find(|(g0, _)| *g0 == gi) {
+                        Some((_, msgs)) => msgs.push(msg),
+                        None => pending.push((gi, vec![msg])),
+                    }
+                }
+                Cmd::DeliverUncoded(ivs) => {
+                    got_unc += 1;
+                    received.extend(ivs);
+                }
+                Cmd::Reduce => break,
+                _ => unreachable!("protocol error during shuffle"),
+            }
+        }
+        assert_eq!(got_coded, expect_coded, "worker {me}: missing coded msgs");
+        assert_eq!(got_unc, expect_unc, "worker {me}: missing unicasts");
+        {
+            let state_ref = &state;
+            let value = move |i: Vertex, j: Vertex| {
+                let s = state_ref[j as usize];
+                debug_assert!(!s.is_nan(), "worker read unowned state {j}");
+                prog.map(i, j, s, g).to_bits()
+            };
+            for (gi, msgs) in pending {
+                let plan = &groups[gi];
+                received.extend(recover_group(plan, me, &msgs, &value, r));
+            }
+        }
+
+        // ---- Reduce (same fold as the engine) ----
+        let mut next = vec![0.0f64; n];
+        reduce_worker_rust(g, alloc, prog, &state, me, &received, &mut next);
+        let pairs: Vec<(Vertex, f64)> = alloc.reduce_sets[me as usize]
+            .iter()
+            .map(|&i| (i, next[i as usize]))
+            .collect();
+        tx.send(Event::Reduced(me, pairs.clone())).unwrap();
+
+        // ---- State write-back ----
+        for s in state.iter_mut() {
+            *s = f64::NAN;
+        }
+        loop {
+            match rx.recv().unwrap() {
+                Cmd::StateUpdate(updates) => {
+                    for (v, s) in updates {
+                        state[v as usize] = s;
+                    }
+                    // own reduce rows stay valid (finalize needs prev state)
+                    for &(i, s) in &pairs {
+                        state[i as usize] = s;
+                    }
+                }
+                Cmd::Continue => break,
+                Cmd::Stop => return,
+                _ => unreachable!("protocol error at write-back"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::er::er;
+    use crate::mapreduce::program::run_single_machine;
+    use crate::mapreduce::{PageRank, Sssp};
+    use crate::util::rng::DetRng;
+
+    use super::super::config::Scheme;
+
+    fn cfg(scheme: Scheme) -> EngineConfig {
+        EngineConfig { scheme, ..Default::default() }
+    }
+
+    #[test]
+    fn cluster_coded_pagerank_matches_oracle() {
+        let g = er(120, 0.12, &mut DetRng::seed(61));
+        let alloc = Allocation::er_scheme(120, 4, 2);
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let report = run_cluster(&job, &cfg(Scheme::Coded), 3);
+        let want = run_single_machine(&prog, &g, 3);
+        for (a, b) in report.final_state.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn cluster_uncoded_pagerank_matches_oracle() {
+        let g = er(100, 0.15, &mut DetRng::seed(62));
+        let alloc = Allocation::er_scheme(100, 5, 3);
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let report = run_cluster(&job, &cfg(Scheme::Uncoded), 2);
+        let want = run_single_machine(&prog, &g, 2);
+        for (a, b) in report.final_state.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn cluster_coded_sssp_matches_oracle() {
+        let g = er(90, 0.1, &mut DetRng::seed(63));
+        let alloc = Allocation::er_scheme(90, 3, 2);
+        let prog = Sssp::hashed(0);
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let report = run_cluster(&job, &cfg(Scheme::Coded), 5);
+        let want = run_single_machine(&prog, &g, 5);
+        for (a, b) in report.final_state.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn cluster_and_engine_agree_on_loads() {
+        let g = er(150, 0.1, &mut DetRng::seed(64));
+        let alloc = Allocation::er_scheme(150, 5, 2);
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let cl = run_cluster(&job, &cfg(Scheme::Coded), 1);
+        let en = crate::coordinator::engine::run_rust(&job, &cfg(Scheme::Coded), 1);
+        let (a, b) = (&cl.iterations[0].shuffle, &en.iterations[0].shuffle);
+        assert_eq!(a.paper_bits, b.paper_bits);
+        assert_eq!(a.wire_payload_bytes, b.wire_payload_bytes);
+        assert_eq!(a.messages, b.messages);
+    }
+
+    #[test]
+    fn cluster_bipartite_allocation() {
+        let g = crate::graph::bipartite::rb(60, 60, 0.15, &mut DetRng::seed(65));
+        let alloc = Allocation::bipartite_scheme(60, 60, 6, 2);
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let report = run_cluster(&job, &cfg(Scheme::Coded), 2);
+        let want = run_single_machine(&prog, &g, 2);
+        for (a, b) in report.final_state.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+}

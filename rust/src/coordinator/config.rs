@@ -1,0 +1,151 @@
+//! Job configuration: scheme selection and the execution-time model.
+
+use crate::network::BusConfig;
+
+/// Which Shuffle scheme to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    /// The paper's coded multicast scheme (§IV-A).
+    Coded,
+    /// The uncoded unicast baseline.
+    Uncoded,
+    /// Coded scheme over *combined* (pre-aggregated) IVs — the §VII / [18]
+    /// extension: one IV per (Reducer, batch) instead of per edge, XOR
+    /// multicast on top. Engine driver only.
+    CodedCombined,
+    /// Uncoded unicast of combined IVs (Pregel-style combiners alone).
+    UncodedCombined,
+}
+
+impl Scheme {
+    /// Does this scheme pre-aggregate IVs per (Reducer, batch)?
+    pub fn is_combined(&self) -> bool {
+        matches!(self, Scheme::CodedCombined | Scheme::UncodedCombined)
+    }
+
+    /// Does this scheme use the coded multicast groups?
+    pub fn is_coded(&self) -> bool {
+        matches!(self, Scheme::Coded | Scheme::CodedCombined)
+    }
+}
+
+impl std::fmt::Display for Scheme {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Scheme::Coded => write!(f, "coded"),
+            Scheme::Uncoded => write!(f, "uncoded"),
+            Scheme::CodedCombined => write!(f, "coded+combiners"),
+            Scheme::UncodedCombined => write!(f, "uncoded+combiners"),
+        }
+    }
+}
+
+/// Per-operation compute-time model used for the *simulated* phase times
+/// (the engine also reports real wall times; the model exists so scenario
+/// benches can reproduce the paper's testbed balance, where Map was
+/// Python-speed and Shuffle rode a 100 Mbps NIC — see DESIGN.md §2).
+///
+/// Defaults are calibrated from the paper's Remark 10 numbers for
+/// Scenario 2 (`T_map = 1.649 s` at `r = 1`, `n = 12600`, `p = 0.3`,
+/// `K = 10`: ~4.76M directed Map evaluations *per worker* — Map runs in
+/// parallel — → ~350 ns each, i.e. mpi4py/Python interpreter speed).
+#[derive(Clone, Copy, Debug)]
+pub struct TimeModel {
+    /// Seconds per Map evaluation (one IV: one edge endpoint).
+    pub map_edge_s: f64,
+    /// Seconds per Reduce combine (one IV folded).
+    pub reduce_iv_s: f64,
+    /// Seconds per table byte XORed during Encode.
+    pub encode_byte_s: f64,
+    /// Seconds per received byte cancelled during Decode (the decoder
+    /// re-derives r-1 segments per byte, hence ~r x encode cost; the
+    /// engine multiplies by r).
+    pub decode_byte_s: f64,
+}
+
+impl Default for TimeModel {
+    fn default() -> Self {
+        Self::python_speed()
+    }
+}
+
+impl TimeModel {
+    /// A "compute is free" model — isolates the communication trade-off.
+    pub fn zero() -> Self {
+        Self { map_edge_s: 0.0, reduce_iv_s: 0.0, encode_byte_s: 0.0, decode_byte_s: 0.0 }
+    }
+
+    /// Python-speed model matching the paper's mpi4py implementation
+    /// (interpreted per-edge loops; Remark 10 calibration: ~350 ns per Map
+    /// evaluation per worker).
+    pub fn python_speed() -> Self {
+        Self {
+            map_edge_s: 350e-9,
+            reduce_iv_s: 200e-9,
+            encode_byte_s: 5e-9,
+            decode_byte_s: 5e-9,
+        }
+    }
+
+    /// Compiled-rust speed (what this implementation actually measures on
+    /// its own hot loops; used to contrast against [`python_speed`]).
+    pub fn rust_speed() -> Self {
+        Self {
+            map_edge_s: 10e-9,
+            reduce_iv_s: 6e-9,
+            encode_byte_s: 0.5e-9,
+            decode_byte_s: 0.5e-9,
+        }
+    }
+}
+
+/// Full engine configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    pub scheme: Scheme,
+    pub bus: BusConfig,
+    pub time: TimeModel,
+    /// Account the post-Reduce state write-back to Mappers (needed for
+    /// iterative jobs; the paper's coded runs pay it, `r = 1` does not).
+    pub account_state_update: bool,
+    /// Bit-exact validation of every recovered IV against a direct Map
+    /// evaluation (O(needed IVs) extra work; on in tests, off in benches).
+    pub validate: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            scheme: Scheme::Coded,
+            bus: BusConfig::default(),
+            time: TimeModel::default(),
+            account_state_update: true,
+            validate: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let c = EngineConfig::default();
+        assert_eq!(c.scheme, Scheme::Coded);
+        assert!(c.time.map_edge_s > 0.0);
+        assert!(!c.validate);
+    }
+
+    #[test]
+    fn scheme_display() {
+        assert_eq!(Scheme::Coded.to_string(), "coded");
+        assert_eq!(Scheme::Uncoded.to_string(), "uncoded");
+    }
+
+    #[test]
+    fn zero_model_is_zero() {
+        let t = TimeModel::zero();
+        assert_eq!(t.map_edge_s + t.reduce_iv_s + t.encode_byte_s + t.decode_byte_s, 0.0);
+    }
+}

@@ -1,0 +1,636 @@
+//! The deterministic phase engine: one process simulates the `K`-machine
+//! cluster phase-by-phase (Map → Encode → Shuffle → Decode → Reduce →
+//! state write-back), producing both real results and the paper's metrics.
+//!
+//! All data *really* flows: Map values are computed, coded messages are
+//! XOR-encoded, receivers cancel and reassemble IVs, and the Reduce folds
+//! the recovered bits. Wire time comes from the [`Bus`] model; compute
+//! time from the [`TimeModel`] (max over workers for parallel phases).
+//! The threaded driver ([`super::cluster`]) runs the same phase functions
+//! on real threads with real channels.
+
+use crate::allocation::Allocation;
+use crate::graph::csr::{Csr, Vertex};
+use crate::mapreduce::program::VertexProgram;
+use crate::mapreduce::sssp::EdgeWeights;
+use crate::network::Bus;
+use crate::runtime::BlockExecutor;
+use crate::shuffle::coded::{encode_sender, row_values};
+use crate::shuffle::combined::{
+    build_combined_group_plans, combined_value, plan_uncoded_combined,
+};
+use crate::shuffle::decoder::{recover_group_shared, RecoveredIv};
+use crate::shuffle::load::{ShuffleLoad, HEADER_BYTES};
+use crate::shuffle::plan::{build_group_plans, GroupPlan};
+use crate::shuffle::segments::seg_bytes;
+use crate::shuffle::uncoded::{plan_uncoded, UncodedTransfer};
+
+use super::config::{EngineConfig, Scheme};
+use super::metrics::{IterationMetrics, JobReport, PhaseTimes};
+
+/// A distributed graph job: graph + allocation + vertex program.
+pub struct Job<'a> {
+    pub graph: &'a Csr,
+    pub alloc: &'a Allocation,
+    pub program: &'a dyn VertexProgram,
+}
+
+/// Which artifact family the PJRT backend should run the Reduce with.
+#[derive(Clone, Copy, Debug)]
+pub enum XlaKind {
+    PageRank,
+    Sssp(EdgeWeights),
+}
+
+/// Reduce-phase compute backend.
+pub enum Backend<'e, 'rt> {
+    /// Pure-rust fold (default; exact f64).
+    Rust,
+    /// AOT JAX/Pallas artifacts via PJRT (f32 tiles; see runtime::block).
+    Pjrt { exec: &'e mut BlockExecutor<'rt>, kind: XlaKind },
+}
+
+/// Precomputed, state-independent job structures (the paper's
+/// pre-processing step): shuffle plans and per-worker work tallies.
+pub struct PreparedJob {
+    pub scheme: Scheme,
+    pub groups: Vec<GroupPlan>,
+    pub transfers: Vec<UncodedTransfer>,
+    /// Directed edges Mapped per worker (Map-phase work).
+    pub mapped_edges: Vec<usize>,
+    /// Directed edges Reduced per worker (Reduce-phase work).
+    pub reduce_edges: Vec<usize>,
+}
+
+/// Build the shuffle plan + work tallies for a job under `scheme`.
+pub fn prepare(job: &Job<'_>, scheme: Scheme) -> PreparedJob {
+    let (g, alloc) = (job.graph, job.alloc);
+    let k = alloc.k;
+    let mut mapped_edges = vec![0usize; k];
+    for (kk, me) in mapped_edges.iter_mut().enumerate() {
+        *me = alloc
+            .mapped_vertices(kk as u8)
+            .map(|j| g.degree(j))
+            .sum();
+    }
+    let mut reduce_edges = vec![0usize; k];
+    for (kk, re) in reduce_edges.iter_mut().enumerate() {
+        *re = alloc.reduce_sets[kk].iter().map(|&i| g.degree(i)).sum();
+    }
+    let (groups, transfers) = match scheme {
+        Scheme::Coded => (build_group_plans(g, alloc), Vec::new()),
+        Scheme::Uncoded => (Vec::new(), plan_uncoded(g, alloc)),
+        Scheme::CodedCombined => (build_combined_group_plans(g, alloc), Vec::new()),
+        Scheme::UncodedCombined => (
+            Vec::new(),
+            // combined transfers share the UncodedTransfer shape: the
+            // "mapper" slot carries the batch index
+            plan_uncoded_combined(g, alloc)
+                .into_iter()
+                .map(|t| UncodedTransfer {
+                    sender: t.sender,
+                    receiver: t.receiver,
+                    ivs: t.ivs.into_iter().map(|(i, b)| (i, b as Vertex)).collect(),
+                })
+                .collect(),
+        ),
+    };
+    PreparedJob { scheme, groups, transfers, mapped_edges, reduce_edges }
+}
+
+/// Run one full iteration; returns the next state and the metrics.
+pub fn run_iteration(
+    job: &Job<'_>,
+    prep: &PreparedJob,
+    state: &[f64],
+    cfg: &EngineConfig,
+    backend: &mut Backend<'_, '_>,
+) -> (Vec<f64>, IterationMetrics) {
+    let wall_start = std::time::Instant::now();
+    let (g, alloc, prog) = (job.graph, job.alloc, job.program);
+    let n = g.n();
+    assert_eq!(state.len(), n);
+    let k = alloc.k;
+    let r = alloc.r;
+    let mut times = PhaseTimes::default();
+    let mut shuffle_load = ShuffleLoad::default();
+    let mut bus = Bus::new(cfg.bus);
+    let mut validated = 0usize;
+
+    // The Map closure both schemes and the decoder share: IV bits for edge
+    // (dst i <- src j). Pure function of (i, j, state[j]). When the program
+    // declares dst-independence (PageRank), evaluate each Mapper once up
+    // front — O(n) instead of O(r·m) dyn-dispatched calls (§Perf).
+    // combined schemes: the "mapper" slot of an IV key is a batch index
+    // and the value is the per-(Reducer, batch) pre-aggregate
+    let combined = prep.scheme.is_combined();
+    let src_only = !combined && !prog.map_depends_on_dst();
+    let qbits: Vec<u64> = if src_only {
+        (0..n as Vertex)
+            .map(|j| {
+                if g.degree(j) == 0 {
+                    0
+                } else {
+                    prog.map(j, j, state[j as usize], g).to_bits()
+                }
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
+    let value = |i: Vertex, j: Vertex| {
+        if combined {
+            combined_value(g, alloc, prog, state, i, j as usize).to_bits()
+        } else if src_only {
+            qbits[j as usize]
+        } else {
+            prog.map(i, j, state[j as usize], g).to_bits()
+        }
+    };
+
+    // ---- Map phase (modeled: parallel across workers) -------------------
+    times.map_s = prep
+        .mapped_edges
+        .iter()
+        .map(|&e| e as f64 * cfg.time.map_edge_s)
+        .fold(0.0, f64::max);
+
+    // ---- Shuffle (Encode → bus → Decode) --------------------------------
+    let mut received: Vec<Vec<RecoveredIv>> = vec![Vec::new(); k];
+    match prep.scheme {
+        Scheme::Uncoded | Scheme::UncodedCombined => {
+            for t in &prep.transfers {
+                let bytes = t.ivs.len() * 8 + HEADER_BYTES;
+                bus.transmit(t.sender, 1, bytes);
+                shuffle_load.add_uncoded(t.ivs.len());
+                let dst = &mut received[t.receiver as usize];
+                dst.reserve(t.ivs.len());
+                for &(i, j) in &t.ivs {
+                    dst.push(RecoveredIv { reducer: i, mapper: j, bits: value(i, j) });
+                }
+            }
+            times.shuffle_s = bus.clock();
+        }
+        Scheme::Coded | Scheme::CodedCombined => {
+            let sb = seg_bytes(r);
+            let mut encode_bytes = vec![0usize; k];
+            let mut decode_bytes = vec![0usize; k];
+            for plan in &prep.groups {
+                // row values evaluated once and shared by the encoder and
+                // every receiver's decoder (§Perf: saves ~r re-derivations)
+                let vals = row_values(plan, &value);
+                let msgs: Vec<_> = (0..plan.servers.len())
+                    .map(|s_idx| encode_sender(plan, s_idx, &vals, r))
+                    .collect();
+                for (s_idx, msg) in msgs.iter().enumerate() {
+                    if msg.columns.is_empty() {
+                        continue;
+                    }
+                    let sender = plan.servers[s_idx];
+                    let bytes = msg.payload_bytes(r) + HEADER_BYTES;
+                    bus.transmit(sender, plan.servers.len() - 1, bytes);
+                    shuffle_load.add_coded(msg.columns.len(), r);
+                    // encode work: XOR across the sender's table
+                    let table: usize = plan
+                        .rows
+                        .iter()
+                        .enumerate()
+                        .filter(|&(i, _)| i != s_idx)
+                        .map(|(_, row)| row.len() * sb)
+                        .sum();
+                    encode_bytes[sender as usize] += table;
+                }
+                for (m_idx, &member) in plan.servers.iter().enumerate() {
+                    if plan.rows[m_idx].is_empty() {
+                        continue;
+                    }
+                    let ivs = recover_group_shared(plan, m_idx, &msgs, &vals, r);
+                    // decode work: r-1 segment recomputations + 1 XOR per
+                    // received byte of this member's row
+                    decode_bytes[member as usize] += plan.rows[m_idx].len() * sb * r;
+                    if cfg.validate {
+                        for riv in &ivs {
+                            assert_eq!(
+                                riv.bits,
+                                value(riv.reducer, riv.mapper),
+                                "coded decode mismatch at ({}, {})",
+                                riv.reducer,
+                                riv.mapper
+                            );
+                            validated += 1;
+                        }
+                    }
+                    received[member as usize].extend(ivs);
+                }
+            }
+            times.shuffle_s = bus.clock();
+            times.encode_s = encode_bytes
+                .iter()
+                .map(|&b| b as f64 * cfg.time.encode_byte_s)
+                .fold(0.0, f64::max);
+            times.decode_s = decode_bytes
+                .iter()
+                .map(|&b| b as f64 * cfg.time.decode_byte_s)
+                .fold(0.0, f64::max);
+        }
+    }
+
+    // ---- Reduce phase ----------------------------------------------------
+    let mut next = vec![0.0f64; n];
+    match backend {
+        Backend::Rust => {
+            for kk in 0..k {
+                reduce_worker_rust(g, alloc, prog, state, kk as u8, &received[kk], &mut next);
+            }
+        }
+        Backend::Pjrt { exec, kind } => {
+            assert!(
+                !combined,
+                "combined schemes are engine/Rust-backend only (the tile \
+                 path scatters per-mapper values, not per-batch aggregates)"
+            );
+            for kk in 0..k {
+                reduce_worker_pjrt(
+                    g, alloc, prog, state, kk as u8, &received[kk], *kind, exec, &mut next,
+                )
+                .expect("PJRT reduce");
+            }
+        }
+    }
+    times.reduce_s = prep
+        .reduce_edges
+        .iter()
+        .map(|&e| e as f64 * cfg.time.reduce_iv_s)
+        .fold(0.0, f64::max);
+
+    // ---- State write-back (iterative jobs) --------------------------------
+    let mut update_load = ShuffleLoad::default();
+    if cfg.account_state_update && r > 1 {
+        bus.reset();
+        for batch in &alloc.batches {
+            // per (batch, reducer) multicast: reducer sends fresh states of
+            // its vertices in this batch to the other replica holders
+            let mut per_reducer = std::collections::HashMap::<u8, usize>::new();
+            for v in batch.vertices() {
+                *per_reducer.entry(alloc.reduce_owner[v as usize]).or_default() += 1;
+            }
+            for (&owner, &count) in &per_reducer {
+                let others = batch.servers.iter().filter(|&&s| s != owner).count();
+                if others == 0 {
+                    continue;
+                }
+                let bytes = count * 8 + HEADER_BYTES;
+                bus.transmit(owner, others, bytes);
+                update_load.add_uncoded(count);
+            }
+        }
+        times.update_s = bus.clock();
+    }
+
+    let metrics = IterationMetrics {
+        times,
+        wall_s: wall_start.elapsed().as_secs_f64(),
+        shuffle: shuffle_load,
+        update: update_load,
+        validated_ivs: validated,
+    };
+    (next, metrics)
+}
+
+/// Pure-rust Reduce for one worker: fold local + received IVs.
+pub fn reduce_worker_rust(
+    g: &Csr,
+    alloc: &Allocation,
+    prog: &dyn VertexProgram,
+    state: &[f64],
+    worker: u8,
+    received: &[RecoveredIv],
+    next: &mut [f64],
+) {
+    let rows = &alloc.reduce_sets[worker as usize];
+    let mut accs: Vec<f64> = Vec::with_capacity(rows.len());
+    for &i in rows {
+        let mut acc = prog.identity();
+        for &j in g.neighbors(i) {
+            if alloc.maps(worker, j) {
+                acc = prog.combine(acc, prog.map(i, j, state[j as usize], g));
+            }
+        }
+        accs.push(acc);
+    }
+    for riv in received {
+        let pos = rows
+            .binary_search(&riv.reducer)
+            .expect("received IV for a vertex this worker does not reduce");
+        accs[pos] = prog.combine(accs[pos], f64::from_bits(riv.bits));
+    }
+    for (&i, acc) in rows.iter().zip(accs) {
+        next[i as usize] = prog.finalize(i, acc, state[i as usize], g);
+    }
+}
+
+/// PJRT Reduce for one worker: assemble the Map-value vector from local
+/// state + received IVs, then run the tiled artifact.
+#[allow(clippy::too_many_arguments)]
+pub fn reduce_worker_pjrt(
+    g: &Csr,
+    alloc: &Allocation,
+    prog: &dyn VertexProgram,
+    state: &[f64],
+    worker: u8,
+    received: &[RecoveredIv],
+    kind: XlaKind,
+    exec: &mut BlockExecutor<'_>,
+    next: &mut [f64],
+) -> anyhow::Result<()> {
+    let n = g.n();
+    let rows = &alloc.reduce_sets[worker as usize];
+    // x[j]: the per-mapper tile input. Only local-mapped and received
+    // entries are filled — the worker never reads state it doesn't own.
+    let mut x = vec![
+        match kind {
+            XlaKind::PageRank => 0f32,
+            XlaKind::Sssp(_) => 3.0e38f32 / 4.0,
+        };
+        n
+    ];
+    for j in alloc.mapped_vertices(worker) {
+        x[j as usize] = match kind {
+            // PageRank tile input is the Map value Π(j)/deg(j); isolated
+            // vertices emit nothing (deg 0 would make 0 * inf = NaN in
+            // the tile matmul — their adjacency column is all-zero anyway)
+            XlaKind::PageRank => {
+                if g.degree(j) == 0 {
+                    0.0
+                } else {
+                    prog.map(j, j, state[j as usize], g) as f32
+                }
+            }
+            // SSSP tile input is the raw distance (weights live in the tile)
+            XlaKind::Sssp(_) => state[j as usize] as f32,
+        };
+    }
+    for riv in received {
+        let v = f64::from_bits(riv.bits);
+        x[riv.mapper as usize] = match kind {
+            XlaKind::PageRank => v as f32,
+            // invert the Map: v = d_j + w(j, i)  =>  d_j = v - w(j, i)
+            XlaKind::Sssp(w) => (v - w.weight(riv.mapper, riv.reducer)) as f32,
+        };
+    }
+    let y = match kind {
+        XlaKind::PageRank => exec.pagerank_rows(g, rows, &x)?,
+        XlaKind::Sssp(w) => exec.sssp_rows(g, rows, &x, w)?,
+    };
+    for (&i, acc) in rows.iter().zip(y) {
+        next[i as usize] = prog.finalize(i, acc, state[i as usize], g);
+    }
+    Ok(())
+}
+
+/// Run a full job for `iters` iterations.
+pub fn run(
+    job: &Job<'_>,
+    cfg: &EngineConfig,
+    iters: usize,
+    backend: &mut Backend<'_, '_>,
+) -> JobReport {
+    let prep = prepare(job, cfg.scheme);
+    let mut state: Vec<f64> = (0..job.graph.n() as Vertex)
+        .map(|v| job.program.init(v, job.graph))
+        .collect();
+    let mut report = JobReport::default();
+    for _ in 0..iters {
+        let (next, metrics) = run_iteration(job, &prep, &state, cfg, backend);
+        state = next;
+        report.iterations.push(metrics);
+    }
+    report.final_state = state;
+    report
+}
+
+/// Convenience: run with the rust backend.
+pub fn run_rust(job: &Job<'_>, cfg: &EngineConfig, iters: usize) -> JobReport {
+    run(job, cfg, iters, &mut Backend::Rust)
+}
+
+/// Run until the program's residual between successive states drops below
+/// `tol`, or `max_iters` is reached — the paper's stopping criterion
+/// ("the algorithm is stopped when the change ... is less than a
+/// pre-defined tolerance"). Returns the report and the iteration count.
+pub fn run_until(
+    job: &Job<'_>,
+    cfg: &EngineConfig,
+    tol: f64,
+    max_iters: usize,
+    backend: &mut Backend<'_, '_>,
+) -> (JobReport, usize) {
+    let prep = prepare(job, cfg.scheme);
+    let mut state: Vec<f64> = (0..job.graph.n() as Vertex)
+        .map(|v| job.program.init(v, job.graph))
+        .collect();
+    let mut report = JobReport::default();
+    let mut used = 0;
+    for _ in 0..max_iters {
+        let (next, metrics) = run_iteration(job, &prep, &state, cfg, backend);
+        report.iterations.push(metrics);
+        used += 1;
+        let resid = job.program.residual(&state, &next);
+        state = next;
+        if resid < tol {
+            break;
+        }
+    }
+    report.final_state = state;
+    (report, used)
+}
+
+/// Uncoded vs coded loads for one (graph, allocation) draw — the Fig 5
+/// inner loop. Returns `(uncoded_norm, coded_norm)` normalized loads.
+pub fn measure_loads(g: &Csr, alloc: &Allocation) -> (f64, f64) {
+    let n = g.n();
+    let r = alloc.r;
+    let mut unc = ShuffleLoad::default();
+    for t in plan_uncoded(g, alloc) {
+        unc.add_uncoded(t.ivs.len());
+    }
+    let mut cod = ShuffleLoad::default();
+    for plan in build_group_plans(g, alloc) {
+        for (s_idx, _) in plan.servers.iter().enumerate() {
+            let q = plan
+                .rows
+                .iter()
+                .enumerate()
+                .filter(|&(i, _)| i != s_idx)
+                .map(|(_, row)| row.len())
+                .max()
+                .unwrap_or(0);
+            if q > 0 {
+                cod.add_coded(q, r);
+            }
+        }
+    }
+    (unc.normalized(n), cod.normalized(n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::er::er;
+    use crate::mapreduce::program::run_single_machine;
+    use crate::mapreduce::{PageRank, Sssp};
+    use crate::util::rng::DetRng;
+
+    fn cfg(scheme: Scheme) -> EngineConfig {
+        EngineConfig { scheme, validate: true, ..Default::default() }
+    }
+
+    #[test]
+    fn coded_pagerank_matches_single_machine() {
+        let g = er(150, 0.1, &mut DetRng::seed(41));
+        let alloc = Allocation::er_scheme(150, 5, 2);
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let report = run_rust(&job, &cfg(Scheme::Coded), 5);
+        let want = run_single_machine(&prog, &g, 5);
+        for (a, b) in report.final_state.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+        }
+        assert!(report.iterations[0].validated_ivs > 0);
+    }
+
+    #[test]
+    fn uncoded_pagerank_matches_single_machine() {
+        let g = er(150, 0.1, &mut DetRng::seed(42));
+        let alloc = Allocation::er_scheme(150, 5, 3);
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let report = run_rust(&job, &cfg(Scheme::Uncoded), 4);
+        let want = run_single_machine(&prog, &g, 4);
+        for (a, b) in report.final_state.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn coded_sssp_matches_single_machine() {
+        let g = er(120, 0.08, &mut DetRng::seed(43));
+        let alloc = Allocation::er_scheme(120, 4, 2);
+        let prog = Sssp::hashed(0);
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let report = run_rust(&job, &cfg(Scheme::Coded), 6);
+        let want = run_single_machine(&prog, &g, 6);
+        for (a, b) in report.final_state.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn coded_load_beats_uncoded() {
+        let g = er(200, 0.1, &mut DetRng::seed(44));
+        for r in 2..5 {
+            let alloc = Allocation::er_scheme(200, 5, r);
+            let (unc, cod) = measure_loads(&g, &alloc);
+            assert!(cod < unc, "r={r}: coded {cod} >= uncoded {unc}");
+            // gain should be near r
+            let gain = unc / cod;
+            assert!(gain > 0.7 * r as f64, "r={r}: gain {gain}");
+        }
+    }
+
+    #[test]
+    fn r_equals_one_single_naive_has_no_update_cost() {
+        let g = er(100, 0.1, &mut DetRng::seed(45));
+        let alloc = Allocation::single(100, 5);
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let report = run_rust(&job, &cfg(Scheme::Uncoded), 2);
+        assert_eq!(report.iterations[0].times.update_s, 0.0);
+        assert_eq!(report.iterations[0].update.messages, 0);
+    }
+
+    #[test]
+    fn combined_schemes_match_single_machine() {
+        let g = er(140, 0.2, &mut DetRng::seed(47));
+        let alloc = Allocation::er_scheme(140, 5, 2);
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let want = run_single_machine(&prog, &g, 4);
+        for scheme in [Scheme::CodedCombined, Scheme::UncodedCombined] {
+            let report = run_rust(&job, &cfg(scheme), 4);
+            for (a, b) in report.final_state.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-13, "{scheme}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn combined_coded_load_below_plain_coded_on_dense_graph() {
+        let g = er(200, 0.4, &mut DetRng::seed(48));
+        let alloc = Allocation::er_scheme(200, 5, 2);
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let plain = run_rust(&job, &cfg(Scheme::Coded), 1).iterations[0]
+            .shuffle
+            .normalized(200);
+        let comb = run_rust(&job, &cfg(Scheme::CodedCombined), 1).iterations[0]
+            .shuffle
+            .normalized(200);
+        assert!(comb < plain / 3.0, "combined {comb} vs plain {plain}");
+    }
+
+    #[test]
+    fn combined_sssp_min_aggregates_correctly() {
+        // min is a valid combiner monoid too
+        let g = er(100, 0.15, &mut DetRng::seed(49));
+        let alloc = Allocation::er_scheme(100, 4, 2);
+        let prog = Sssp::hashed(3);
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let want = run_single_machine(&prog, &g, 6);
+        let report = run_rust(&job, &cfg(Scheme::CodedCombined), 6);
+        for (a, b) in report.final_state.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn run_until_stops_at_tolerance() {
+        let g = er(150, 0.1, &mut DetRng::seed(50));
+        let alloc = Allocation::er_scheme(150, 5, 2);
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let (report, used) = run_until(
+            &job,
+            &cfg(Scheme::Coded),
+            1e-10,
+            200,
+            &mut Backend::Rust,
+        );
+        assert!(used < 200, "should converge well before the cap");
+        assert!(used > 3, "should take a few iterations");
+        assert_eq!(report.iterations.len(), used);
+        // converged: one more iteration barely moves
+        let more = run_single_machine(&prog, &g, used + 1);
+        let resid: f64 = report
+            .final_state
+            .iter()
+            .zip(&more)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(resid < 1e-8, "resid {resid}");
+    }
+
+    #[test]
+    fn phase_times_populated() {
+        let g = er(200, 0.15, &mut DetRng::seed(46));
+        let alloc = Allocation::er_scheme(200, 5, 2);
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let report = run_rust(&job, &cfg(Scheme::Coded), 1);
+        let t = &report.iterations[0].times;
+        assert!(t.map_s > 0.0 && t.shuffle_s > 0.0 && t.reduce_s > 0.0);
+        assert!(t.encode_s > 0.0 && t.decode_s > 0.0);
+        assert!(t.update_s > 0.0);
+        assert!(report.iterations[0].wall_s > 0.0);
+    }
+}

@@ -1,0 +1,120 @@
+//! Phase metrics: the quantities every figure of the paper plots.
+
+use crate::shuffle::load::ShuffleLoad;
+
+/// Simulated per-phase times of one iteration (paper Fig 2 / Fig 7 bars).
+/// Each is the max over workers for parallel phases, bus time for serial
+/// (Shuffle / state-update) phases.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseTimes {
+    pub map_s: f64,
+    pub encode_s: f64,
+    pub shuffle_s: f64,
+    pub decode_s: f64,
+    pub reduce_s: f64,
+    pub update_s: f64,
+}
+
+impl PhaseTimes {
+    pub fn total(&self) -> f64 {
+        self.map_s + self.encode_s + self.shuffle_s + self.decode_s + self.reduce_s + self.update_s
+    }
+
+    /// The paper's grouping: Encode counts into Map time, Decode into
+    /// Reduce time (§VI footnote 1).
+    pub fn paper_buckets(&self) -> (f64, f64, f64) {
+        (
+            self.map_s + self.encode_s,
+            self.shuffle_s,
+            self.decode_s + self.reduce_s + self.update_s,
+        )
+    }
+}
+
+/// Everything measured in one iteration.
+#[derive(Clone, Debug, Default)]
+pub struct IterationMetrics {
+    pub times: PhaseTimes,
+    /// Real wall-clock of the engine's own compute (all phases).
+    pub wall_s: f64,
+    /// Shuffle traffic.
+    pub shuffle: ShuffleLoad,
+    /// State write-back traffic.
+    pub update: ShuffleLoad,
+    /// Recovered IVs validated bit-exact (when validation is on).
+    pub validated_ivs: usize,
+}
+
+/// A whole job (possibly multiple iterations).
+#[derive(Clone, Debug, Default)]
+pub struct JobReport {
+    pub iterations: Vec<IterationMetrics>,
+    pub final_state: Vec<f64>,
+}
+
+impl JobReport {
+    /// Mean normalized Shuffle load per iteration.
+    pub fn mean_normalized_load(&self, n: usize) -> f64 {
+        if self.iterations.is_empty() {
+            return 0.0;
+        }
+        self.iterations.iter().map(|m| m.shuffle.normalized(n)).sum::<f64>()
+            / self.iterations.len() as f64
+    }
+
+    /// Total simulated execution time.
+    pub fn total_time(&self) -> f64 {
+        self.iterations.iter().map(|m| m.times.total()).sum()
+    }
+
+    /// Summed phase times across iterations.
+    pub fn summed_times(&self) -> PhaseTimes {
+        let mut t = PhaseTimes::default();
+        for m in &self.iterations {
+            t.map_s += m.times.map_s;
+            t.encode_s += m.times.encode_s;
+            t.shuffle_s += m.times.shuffle_s;
+            t.decode_s += m.times.decode_s;
+            t.reduce_s += m.times.reduce_s;
+            t.update_s += m.times.update_s;
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_and_buckets() {
+        let t = PhaseTimes {
+            map_s: 1.0,
+            encode_s: 0.5,
+            shuffle_s: 4.0,
+            decode_s: 0.25,
+            reduce_s: 0.75,
+            update_s: 0.5,
+        };
+        assert!((t.total() - 7.0).abs() < 1e-12);
+        let (m, s, r) = t.paper_buckets();
+        assert!((m - 1.5).abs() < 1e-12);
+        assert!((s - 4.0).abs() < 1e-12);
+        assert!((r - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn report_aggregation() {
+        let mut rep = JobReport::default();
+        for _ in 0..2 {
+            let mut m = IterationMetrics::default();
+            m.times.shuffle_s = 2.0;
+            m.shuffle.add_uncoded(10); // 640 paper-bits
+            rep.iterations.push(m);
+        }
+        assert!((rep.total_time() - 4.0).abs() < 1e-12);
+        let l = rep.mean_normalized_load(10);
+        assert!((l - 640.0 / (100.0 * 64.0)).abs() < 1e-12);
+        assert!((rep.summed_times().shuffle_s - 4.0).abs() < 1e-12);
+    }
+}

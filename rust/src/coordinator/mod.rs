@@ -1,0 +1,16 @@
+//! The L3 coordinator: cluster orchestration for coded graph analytics.
+//!
+//! * [`config`] — scheme selection, time model, engine options.
+//! * [`metrics`] — phase times, loads, job reports (the figures' data).
+//! * [`engine`] — the deterministic single-process phase engine.
+//! * [`cluster`] — the threaded leader/worker driver (real channels, real
+//!   per-worker decode; same phase functions as the engine).
+
+pub mod cluster;
+pub mod config;
+pub mod engine;
+pub mod metrics;
+
+pub use config::{EngineConfig, Scheme, TimeModel};
+pub use engine::{measure_loads, prepare, run, run_iteration, run_rust, Backend, Job, XlaKind};
+pub use metrics::{IterationMetrics, JobReport, PhaseTimes};

@@ -1,0 +1,124 @@
+//! Fig 5: average normalized communication load vs computation load `r`
+//! for `ER(n = 300, p = 0.1)`, `K = 5` — coded scheme, uncoded scheme and
+//! the proposed lower bound, averaged over graph realizations.
+
+use crate::allocation::Allocation;
+use crate::analysis::stats::{summarize, Summary};
+use crate::analysis::theory;
+use crate::coordinator::measure_loads;
+use crate::graph::er::er;
+use crate::util::rng::DetRng;
+
+/// Parameters of the Fig 5 experiment (defaults = the paper's).
+#[derive(Clone, Copy, Debug)]
+pub struct Fig5Params {
+    pub n: usize,
+    pub p: f64,
+    pub k: usize,
+    pub trials: usize,
+    pub seed: u64,
+}
+
+impl Default for Fig5Params {
+    fn default() -> Self {
+        Self { n: 300, p: 0.1, k: 5, trials: 20, seed: 2018 }
+    }
+}
+
+/// One r-row of the Fig 5 table.
+#[derive(Clone, Debug)]
+pub struct Fig5Row {
+    pub r: usize,
+    pub uncoded: Summary,
+    pub coded: Summary,
+    /// Lemma 3 lower bound at this r (exact for the balanced allocation).
+    pub lower_bound: f64,
+    /// Finite-n analytic coded prediction (eq. (16) + Lemma 1).
+    pub coded_finite_pred: f64,
+}
+
+impl Fig5Row {
+    /// Measured gain `L^UC / L^C`.
+    pub fn gain(&self) -> f64 {
+        self.uncoded.mean / self.coded.mean
+    }
+}
+
+/// Run the sweep for `r = 1..K`.
+pub fn run(params: Fig5Params) -> Vec<Fig5Row> {
+    let mut rows = Vec::new();
+    for r in 1..params.k {
+        let mut unc = Vec::with_capacity(params.trials);
+        let mut cod = Vec::with_capacity(params.trials);
+        for t in 0..params.trials {
+            let mut rng = DetRng::seed(params.seed ^ (t as u64) << 8 ^ r as u64);
+            let g = er(params.n, params.p, &mut rng);
+            let alloc = Allocation::er_scheme(params.n, params.k, r);
+            let (u, c) = measure_loads(&g, &alloc);
+            unc.push(u);
+            cod.push(c);
+        }
+        rows.push(Fig5Row {
+            r,
+            uncoded: summarize(&unc),
+            coded: summarize(&cod),
+            lower_bound: theory::lower_bound_er(params.p, r as f64, params.k),
+            coded_finite_pred: theory::coded_load_er_finite(params.n, params.p, r, params.k),
+        });
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> Vec<Fig5Row> {
+        run(Fig5Params { trials: 4, ..Default::default() })
+    }
+
+    #[test]
+    fn uncoded_matches_closed_form() {
+        for row in quick() {
+            let want = theory::uncoded_load_er(0.1, row.r as f64, 5);
+            let got = row.uncoded.mean;
+            assert!((got - want).abs() / want < 0.05, "r={}: {got} vs {want}", row.r);
+        }
+    }
+
+    #[test]
+    fn coded_between_bound_and_uncoded() {
+        for row in quick() {
+            assert!(row.coded.mean <= row.uncoded.mean * 1.001, "r={}", row.r);
+            // the bound is on the *expectation*; allow sampling slack
+            let slack = 1.0 - 3.0 * row.coded.ci95() / row.coded.mean.max(1e-12);
+            assert!(
+                row.coded.mean >= row.lower_bound * slack.min(0.97),
+                "r={}: coded {} < bound {}",
+                row.r,
+                row.coded.mean,
+                row.lower_bound
+            );
+        }
+    }
+
+    #[test]
+    fn gain_grows_with_r() {
+        let rows = quick();
+        for w in rows.windows(2) {
+            assert!(w[1].gain() > w[0].gain() * 0.95, "gain should trend up");
+        }
+        // at r=4, K=5 the gain should be clearly > 2
+        assert!(rows.last().unwrap().gain() > 2.0);
+    }
+
+    #[test]
+    fn finite_prediction_tracks_measurement() {
+        for row in quick() {
+            if row.r > 1 {
+                let rel = (row.coded.mean - row.coded_finite_pred).abs() / row.coded.mean;
+                assert!(rel < 0.12, "r={}: measured {} pred {}", row.r, row.coded.mean, row.coded_finite_pred);
+            }
+        }
+    }
+}

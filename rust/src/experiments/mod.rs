@@ -1,0 +1,7 @@
+//! Experiment harnesses: the code that regenerates every figure and table
+//! of the paper. Thin CLI (`src/main.rs`) and bench (`benches/*.rs`)
+//! wrappers call into these so the same code path backs both.
+
+pub mod fig5;
+pub mod models;
+pub mod scenarios;

@@ -1,0 +1,109 @@
+//! Random bi-partite generator `RB(n1, n2, q)` — paper §III, Fig 4(b).
+//!
+//! Vertices `0..n1` form cluster `V1`, `n1..n1+n2` form `V2`. Each of the
+//! `n1 * n2` cross edges exists independently with probability `q`; no
+//! intra-cluster edges exist. Skip-sampling over the `n1 x n2` rectangle
+//! keeps generation O(n + m).
+
+use super::csr::{Csr, Vertex};
+use crate::util::rng::DetRng;
+
+/// Sample `RB(n1, n2, q)`. Cluster `V1 = 0..n1`, `V2 = n1..n1+n2`.
+pub fn rb(n1: usize, n2: usize, q: f64, rng: &mut DetRng) -> Csr {
+    assert!((0.0..=1.0).contains(&q), "q out of range: {q}");
+    let n = n1 + n2;
+    let total = n1 * n2;
+    let mut lists: Vec<Vec<Vertex>> = vec![Vec::new(); n];
+    let mut t = 0usize;
+    loop {
+        let skip = rng.geometric_skip(q);
+        if skip == usize::MAX {
+            break;
+        }
+        t = match t.checked_add(skip) {
+            Some(x) if x < total => x,
+            _ => break,
+        };
+        let u = t / n2; // in V1
+        let v = n1 + (t % n2); // in V2
+        lists[u].push(v as Vertex);
+        lists[v].push(u as Vertex);
+        t += 1;
+        if t >= total {
+            break;
+        }
+    }
+    for l in &mut lists {
+        l.sort_unstable();
+    }
+    Csr::from_sorted_adjacency(lists)
+}
+
+/// Expected number of (cross) edges.
+pub fn expected_edges(n1: usize, n2: usize, q: f64) -> f64 {
+    q * (n1 * n2) as f64
+}
+
+/// Is `v` in cluster `V1` of an `RB(n1, _, _)` graph?
+#[inline]
+pub fn in_v1(v: Vertex, n1: usize) -> bool {
+    (v as usize) < n1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_intra_cluster_edges() {
+        let mut rng = DetRng::seed(1);
+        let (n1, n2) = (120, 80);
+        let g = rb(n1, n2, 0.1, &mut rng);
+        for (u, v) in g.edges() {
+            assert!(
+                in_v1(u, n1) != in_v1(v, n1),
+                "intra-cluster edge ({u},{v})"
+            );
+        }
+    }
+
+    #[test]
+    fn edge_count_concentrates() {
+        let mut rng = DetRng::seed(2);
+        let (n1, n2, q) = (300, 250, 0.05);
+        let g = rb(n1, n2, q, &mut rng);
+        let exp = expected_edges(n1, n2, q);
+        let sd = (exp * (1.0 - q)).sqrt();
+        assert!(((g.m() as f64) - exp).abs() < 6.0 * sd, "m={}", g.m());
+    }
+
+    #[test]
+    fn q_one_is_complete_bipartite() {
+        let mut rng = DetRng::seed(3);
+        let g = rb(10, 7, 1.0, &mut rng);
+        assert_eq!(g.m(), 70);
+        for u in 0..10u32 {
+            assert_eq!(g.degree(u), 7);
+        }
+        for v in 10..17u32 {
+            assert_eq!(g.degree(v), 10);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = rb(100, 90, 0.2, &mut DetRng::seed(7));
+        let b = rb(100, 90, 0.2, &mut DetRng::seed(7));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn symmetric_adjacency() {
+        let g = rb(50, 60, 0.15, &mut DetRng::seed(8));
+        for v in 0..110u32 {
+            for &u in g.neighbors(v) {
+                assert!(g.has_edge(u, v));
+            }
+        }
+    }
+}

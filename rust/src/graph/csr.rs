@@ -1,0 +1,266 @@
+//! Compressed-sparse-row storage for undirected graphs.
+//!
+//! Vertices are `u32` ids `0..n`. The graph is undirected (paper §II-A):
+//! each edge `{u, v}` is stored in both adjacency rows; self-loops are
+//! permitted (stored once, in `N(v)`). Neighbor lists are sorted, which the
+//! coded-shuffle encode/decode relies on for canonical segment ordering.
+
+use crate::util::rng::DetRng;
+
+/// Vertex id.
+pub type Vertex = u32;
+
+/// Undirected graph in CSR form.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Csr {
+    /// Row offsets, length `n + 1`.
+    offsets: Vec<usize>,
+    /// Concatenated sorted neighbor lists.
+    neighbors: Vec<Vertex>,
+    /// Number of undirected edges (self-loops count once).
+    num_edges: usize,
+}
+
+impl Csr {
+    /// Build from an undirected edge list. Duplicate edges are collapsed;
+    /// `(u, v)` and `(v, u)` are the same edge; self-loops allowed.
+    pub fn from_edges(n: usize, edges: &[(Vertex, Vertex)]) -> Self {
+        let mut deg = vec![0usize; n];
+        // First pass done on the deduplicated, canonicalized list.
+        let mut canon: Vec<(Vertex, Vertex)> = edges
+            .iter()
+            .map(|&(u, v)| if u <= v { (u, v) } else { (v, u) })
+            .collect();
+        canon.sort_unstable();
+        canon.dedup();
+        for &(u, v) in &canon {
+            assert!((u as usize) < n && (v as usize) < n, "vertex out of range");
+            deg[u as usize] += 1;
+            if u != v {
+                deg[v as usize] += 1;
+            }
+        }
+        let mut offsets = vec![0usize; n + 1];
+        for v in 0..n {
+            offsets[v + 1] = offsets[v] + deg[v];
+        }
+        let mut cursor = offsets.clone();
+        let mut neighbors = vec![0 as Vertex; offsets[n]];
+        for &(u, v) in &canon {
+            neighbors[cursor[u as usize]] = v;
+            cursor[u as usize] += 1;
+            if u != v {
+                neighbors[cursor[v as usize]] = u;
+                cursor[v as usize] += 1;
+            }
+        }
+        for v in 0..n {
+            neighbors[offsets[v]..offsets[v + 1]].sort_unstable();
+        }
+        Csr { offsets, neighbors, num_edges: canon.len() }
+    }
+
+    /// Build directly from per-vertex sorted adjacency lists (trusted path
+    /// used by the generators; `lists[u]` must contain `v` iff `lists[v]`
+    /// contains `u`, except self-loops which appear once).
+    pub fn from_sorted_adjacency(lists: Vec<Vec<Vertex>>) -> Self {
+        let n = lists.len();
+        let mut offsets = vec![0usize; n + 1];
+        for v in 0..n {
+            offsets[v + 1] = offsets[v] + lists[v].len();
+        }
+        let mut neighbors = Vec::with_capacity(offsets[n]);
+        let mut directed = 0usize;
+        let mut self_loops = 0usize;
+        for (v, l) in lists.into_iter().enumerate() {
+            debug_assert!(l.windows(2).all(|w| w[0] < w[1]), "unsorted/dup row {v}");
+            self_loops += l.iter().filter(|&&u| u as usize == v).count();
+            directed += l.len();
+            neighbors.extend_from_slice(&l);
+        }
+        let num_edges = (directed - self_loops) / 2 + self_loops;
+        Csr { offsets, neighbors, num_edges }
+    }
+
+    /// Number of vertices.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of undirected edges (self-loops count once).
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.num_edges
+    }
+
+    /// Sorted neighbor list of `v`.
+    #[inline]
+    pub fn neighbors(&self, v: Vertex) -> &[Vertex] {
+        &self.neighbors[self.offsets[v as usize]..self.offsets[v as usize + 1]]
+    }
+
+    /// Degree of `v` (self-loop contributes 1).
+    #[inline]
+    pub fn degree(&self, v: Vertex) -> usize {
+        self.offsets[v as usize + 1] - self.offsets[v as usize]
+    }
+
+    /// Is `{u, v}` an edge? O(log deg).
+    #[inline]
+    pub fn has_edge(&self, u: Vertex, v: Vertex) -> bool {
+        self.neighbors(u).binary_search(&v).is_ok()
+    }
+
+    /// Neighbors of `v` lying in the half-open id range `[lo, hi)` —
+    /// the inner loop of both shuffle schemes (Reduce rows and Map batches
+    /// are contiguous id ranges). O(log deg + output).
+    #[inline]
+    pub fn neighbors_in_range(&self, v: Vertex, lo: Vertex, hi: Vertex) -> &[Vertex] {
+        let row = self.neighbors(v);
+        let a = row.partition_point(|&x| x < lo);
+        let b = row.partition_point(|&x| x < hi);
+        &row[a..b]
+    }
+
+    /// Iterate undirected edges `(u, v)` with `u <= v`.
+    pub fn edges(&self) -> impl Iterator<Item = (Vertex, Vertex)> + '_ {
+        (0..self.n() as Vertex).flat_map(move |u| {
+            self.neighbors(u)
+                .iter()
+                .copied()
+                .filter(move |&v| v >= u)
+                .map(move |v| (u, v))
+        })
+    }
+
+    /// Total directed degree (2m minus self-loop double count).
+    pub fn directed_len(&self) -> usize {
+        self.neighbors.len()
+    }
+
+    /// Relabel vertices by a permutation `perm` (new id of `v` is
+    /// `perm[v]`). Used to randomize batch membership without biasing the
+    /// allocation (the allocation uses contiguous id ranges).
+    pub fn relabel(&self, perm: &[Vertex]) -> Csr {
+        assert_eq!(perm.len(), self.n());
+        let n = self.n();
+        let mut lists: Vec<Vec<Vertex>> = vec![Vec::new(); n];
+        for v in 0..n as Vertex {
+            let nv = perm[v as usize];
+            for &u in self.neighbors(v) {
+                lists[nv as usize].push(perm[u as usize]);
+            }
+        }
+        for l in &mut lists {
+            l.sort_unstable();
+        }
+        Csr::from_sorted_adjacency(lists)
+    }
+
+    /// Uniformly random permutation relabeling.
+    pub fn shuffled(&self, rng: &mut DetRng) -> Csr {
+        let mut perm: Vec<Vertex> = (0..self.n() as Vertex).collect();
+        rng.shuffle(&mut perm);
+        self.relabel(&perm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> Csr {
+        // 0-1, 0-2, 1-2, 1-3, 2-3
+        Csr::from_edges(4, &[(0, 1), (0, 2), (1, 2), (1, 3), (2, 3)])
+    }
+
+    #[test]
+    fn basic_shape() {
+        let g = diamond();
+        assert_eq!(g.n(), 4);
+        assert_eq!(g.m(), 5);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(1), &[0, 2, 3]);
+        assert_eq!(g.degree(1), 3);
+    }
+
+    #[test]
+    fn dedup_and_reverse_edges() {
+        let g = Csr::from_edges(3, &[(0, 1), (1, 0), (0, 1), (2, 1)]);
+        assert_eq!(g.m(), 2);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+    }
+
+    #[test]
+    fn self_loop_counted_once() {
+        let g = Csr::from_edges(2, &[(0, 0), (0, 1)]);
+        assert_eq!(g.m(), 2);
+        assert_eq!(g.neighbors(0), &[0, 1]);
+        assert_eq!(g.degree(0), 2);
+    }
+
+    #[test]
+    fn has_edge_and_ranges() {
+        let g = diamond();
+        assert!(g.has_edge(0, 1));
+        assert!(!g.has_edge(0, 3));
+        assert_eq!(g.neighbors_in_range(1, 0, 2), &[0]);
+        assert_eq!(g.neighbors_in_range(1, 2, 4), &[2, 3]);
+        assert_eq!(g.neighbors_in_range(1, 4, 4), &[] as &[Vertex]);
+    }
+
+    #[test]
+    fn edges_iter_roundtrip() {
+        let g = diamond();
+        let edges: Vec<_> = g.edges().collect();
+        assert_eq!(edges.len(), g.m());
+        let g2 = Csr::from_edges(4, &edges);
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn from_sorted_adjacency_agrees() {
+        let g = diamond();
+        let lists: Vec<Vec<Vertex>> =
+            (0..4).map(|v| g.neighbors(v as Vertex).to_vec()).collect();
+        let g2 = Csr::from_sorted_adjacency(lists);
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn relabel_preserves_structure() {
+        let g = diamond();
+        let perm = vec![3, 2, 1, 0];
+        let h = g.relabel(&perm);
+        assert_eq!(h.n(), 4);
+        assert_eq!(h.m(), 5);
+        // edge {0,1} -> {3,2}
+        assert!(h.has_edge(3, 2));
+        assert!(h.has_edge(2, 1));
+        assert!(!h.has_edge(3, 0));
+        // degree multiset preserved
+        let mut d1: Vec<_> = (0..4).map(|v| g.degree(v)).collect();
+        let mut d2: Vec<_> = (0..4).map(|v| h.degree(v)).collect();
+        d1.sort();
+        d2.sort();
+        assert_eq!(d1, d2);
+    }
+
+    #[test]
+    fn shuffled_preserves_counts() {
+        let g = diamond();
+        let mut rng = DetRng::seed(9);
+        let h = g.shuffled(&mut rng);
+        assert_eq!(h.n(), g.n());
+        assert_eq!(h.m(), g.m());
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Csr::from_edges(5, &[]);
+        assert_eq!(g.n(), 5);
+        assert_eq!(g.m(), 0);
+        assert_eq!(g.neighbors(3), &[] as &[Vertex]);
+    }
+}

@@ -1,0 +1,142 @@
+//! Erdős–Rényi generator `ER(n, p)` — paper §III, Fig 4(a).
+//!
+//! Each of the `C(n, 2)` undirected edges exists independently with
+//! probability `p`. Generation is O(n + m) via geometric skip-sampling over
+//! the linearized upper triangle, so the full-size Scenario 3 graph
+//! (n = 90,090, p = 0.01, ~40.6M edges) is generated in seconds.
+
+use super::csr::{Csr, Vertex};
+use crate::util::rng::DetRng;
+
+/// Sample `ER(n, p)` (no self-loops, as in the paper's experiments).
+pub fn er(n: usize, p: f64, rng: &mut DetRng) -> Csr {
+    assert!((0.0..=1.0).contains(&p), "p out of range: {p}");
+    let total = n * (n - 1) / 2;
+    let mut edges: Vec<(Vertex, Vertex)> = Vec::with_capacity((total as f64 * p * 1.05) as usize + 16);
+    // Linear index t over the upper triangle in row-major order:
+    // row u owns indices [base(u), base(u) + n-1-u).
+    let mut t = 0usize;
+    let mut row: usize = 0; // current row u
+    let mut row_start = 0usize; // linear index of (u, u+1)
+    loop {
+        let skip = rng.geometric_skip(p);
+        if skip == usize::MAX || t > total.saturating_sub(1).wrapping_sub(skip) {
+            // next hit lies past the end
+            break;
+        }
+        t += skip;
+        if t >= total {
+            break;
+        }
+        // map t -> (u, v)
+        while t - row_start >= n - 1 - row {
+            row_start += n - 1 - row;
+            row += 1;
+        }
+        let u = row as Vertex;
+        let v = (row + 1 + (t - row_start)) as Vertex;
+        edges.push((u, v));
+        t += 1;
+        if t >= total {
+            break;
+        }
+    }
+    build_from_hits(n, edges)
+}
+
+/// Assemble a CSR from unique upper-triangle hits without the general
+/// dedup path (hits are already unique and sorted by construction).
+fn build_from_hits(n: usize, edges: Vec<(Vertex, Vertex)>) -> Csr {
+    let mut deg = vec![0u32; n];
+    for &(u, v) in &edges {
+        deg[u as usize] += 1;
+        deg[v as usize] += 1;
+    }
+    let mut lists: Vec<Vec<Vertex>> = deg.iter().map(|&d| Vec::with_capacity(d as usize)).collect();
+    for &(u, v) in &edges {
+        lists[u as usize].push(v);
+        lists[v as usize].push(u);
+    }
+    for l in &mut lists {
+        l.sort_unstable();
+    }
+    Csr::from_sorted_adjacency(lists)
+}
+
+/// Expected number of edges of `ER(n, p)`.
+pub fn expected_edges(n: usize, p: f64) -> f64 {
+    p * (n * (n - 1) / 2) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edge_count_concentrates() {
+        let mut rng = DetRng::seed(1);
+        let n = 500;
+        let p = 0.1;
+        let g = er(n, p, &mut rng);
+        assert_eq!(g.n(), n);
+        let exp = expected_edges(n, p);
+        let sd = (exp * (1.0 - p)).sqrt();
+        assert!(
+            ((g.m() as f64) - exp).abs() < 6.0 * sd,
+            "m={} exp={exp}",
+            g.m()
+        );
+    }
+
+    #[test]
+    fn p_zero_and_one() {
+        let mut rng = DetRng::seed(2);
+        let g0 = er(100, 0.0, &mut rng);
+        assert_eq!(g0.m(), 0);
+        let g1 = er(50, 1.0, &mut rng);
+        assert_eq!(g1.m(), 50 * 49 / 2);
+        assert!(!g1.has_edge(3, 3)); // no self-loops
+    }
+
+    #[test]
+    fn no_self_loops_and_symmetric() {
+        let mut rng = DetRng::seed(3);
+        let g = er(200, 0.05, &mut rng);
+        for v in 0..200u32 {
+            assert!(!g.has_edge(v, v));
+            for &u in g.neighbors(v) {
+                assert!(g.has_edge(u, v));
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g1 = er(300, 0.07, &mut DetRng::seed(42));
+        let g2 = er(300, 0.07, &mut DetRng::seed(42));
+        assert_eq!(g1, g2);
+        let g3 = er(300, 0.07, &mut DetRng::seed(43));
+        assert_ne!(g1, g3);
+    }
+
+    #[test]
+    fn degree_distribution_binomial_mean() {
+        let mut rng = DetRng::seed(4);
+        let n = 1000;
+        let p = 0.02;
+        let g = er(n, p, &mut rng);
+        let mean = (0..n as Vertex).map(|v| g.degree(v)).sum::<usize>() as f64 / n as f64;
+        let want = p * (n - 1) as f64;
+        assert!((mean - want).abs() / want < 0.1, "mean={mean} want={want}");
+    }
+
+    #[test]
+    fn tiny_graphs() {
+        let mut rng = DetRng::seed(5);
+        let g = er(1, 0.5, &mut rng);
+        assert_eq!(g.n(), 1);
+        assert_eq!(g.m(), 0);
+        let g = er(2, 1.0, &mut rng);
+        assert_eq!(g.m(), 1);
+    }
+}

@@ -1,0 +1,100 @@
+//! Edge-list text I/O.
+//!
+//! Format: one `u v` pair per line, `#`-prefixed comment lines ignored
+//! (SNAP-compatible), vertex count either from a `# nodes: N` header or
+//! inferred as `max id + 1`. Used to load real-world graphs and to persist
+//! generated scenario graphs so repeated bench runs skip regeneration.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::csr::{Csr, Vertex};
+
+/// Write `g` as an edge list with a `# nodes:` header.
+pub fn write_edge_list(g: &Csr, path: &Path) -> Result<()> {
+    let f = File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "# nodes: {}", g.n())?;
+    writeln!(w, "# edges: {}", g.m())?;
+    for (u, v) in g.edges() {
+        writeln!(w, "{u} {v}")?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read an edge list written by [`write_edge_list`] (or any SNAP-style
+/// whitespace-separated pair list).
+pub fn read_edge_list(path: &Path) -> Result<Csr> {
+    let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let r = BufReader::new(f);
+    let mut n_hint: Option<usize> = None;
+    let mut edges: Vec<(Vertex, Vertex)> = Vec::new();
+    let mut max_id: Vertex = 0;
+    for (lineno, line) in r.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('#') {
+            if let Some(v) = rest.trim().strip_prefix("nodes:") {
+                n_hint = Some(v.trim().parse().context("bad nodes header")?);
+            }
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let u: Vertex = it
+            .next()
+            .with_context(|| format!("line {}: missing u", lineno + 1))?
+            .parse()
+            .with_context(|| format!("line {}: bad u", lineno + 1))?;
+        let v: Vertex = it
+            .next()
+            .with_context(|| format!("line {}: missing v", lineno + 1))?
+            .parse()
+            .with_context(|| format!("line {}: bad v", lineno + 1))?;
+        max_id = max_id.max(u).max(v);
+        edges.push((u, v));
+    }
+    let n = n_hint.unwrap_or(if edges.is_empty() { 0 } else { max_id as usize + 1 });
+    Ok(Csr::from_edges(n, &edges))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::er::er;
+    use crate::util::rng::DetRng;
+
+    #[test]
+    fn roundtrip() {
+        let g = er(200, 0.05, &mut DetRng::seed(1));
+        let dir = std::env::temp_dir().join("coded_graph_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("g.edges");
+        write_edge_list(&g, &path).unwrap();
+        let h = read_edge_list(&path).unwrap();
+        assert_eq!(g, h);
+    }
+
+    #[test]
+    fn reads_headerless_and_comments() {
+        let dir = std::env::temp_dir().join("coded_graph_io_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("raw.edges");
+        std::fs::write(&path, "# a comment\n0 1\n2 1\n\n3 0\n").unwrap();
+        let g = read_edge_list(&path).unwrap();
+        assert_eq!(g.n(), 4);
+        assert_eq!(g.m(), 3);
+        assert!(g.has_edge(1, 2));
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(read_edge_list(Path::new("/nonexistent/x.edges")).is_err());
+    }
+}

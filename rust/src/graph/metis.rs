@@ -1,0 +1,154 @@
+//! METIS graph-format I/O (the de-facto interchange format of the graph-
+//! partitioning world; supported so real-world datasets can be fed to the
+//! scenario harnesses directly).
+//!
+//! Format: first non-comment line `n m [fmt]`; line `i` (1-based) lists
+//! the neighbors of vertex `i` as 1-based ids separated by whitespace.
+//! Only the unweighted variant (`fmt` absent or `0`/`00`/`000`) is
+//! supported; `%`-prefixed lines are comments.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::csr::{Csr, Vertex};
+
+/// Write `g` in METIS format.
+pub fn write_metis(g: &Csr, path: &Path) -> Result<()> {
+    let f = File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "% coded-graph export")?;
+    writeln!(w, "{} {}", g.n(), g.m())?;
+    for v in 0..g.n() as Vertex {
+        let row: Vec<String> = g.neighbors(v).iter().map(|&u| (u + 1).to_string()).collect();
+        writeln!(w, "{}", row.join(" "))?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a METIS file.
+pub fn read_metis(path: &Path) -> Result<Csr> {
+    let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let r = BufReader::new(f);
+    let mut lines = r.lines();
+    // header
+    let header = loop {
+        let line = lines
+            .next()
+            .ok_or_else(|| anyhow!("missing METIS header"))??;
+        let t = line.trim();
+        if !t.is_empty() && !t.starts_with('%') {
+            break t.to_string();
+        }
+    };
+    let mut hp = header.split_whitespace();
+    let n: usize = hp.next().ok_or_else(|| anyhow!("bad header"))?.parse()?;
+    let m: usize = hp.next().ok_or_else(|| anyhow!("bad header"))?.parse()?;
+    if let Some(fmt) = hp.next() {
+        if fmt.trim_start_matches('0') != "" {
+            return Err(anyhow!("weighted METIS (fmt={fmt}) not supported"));
+        }
+    }
+    let mut adjacency: Vec<Vec<Vertex>> = Vec::with_capacity(n);
+    for line in lines {
+        let line = line?;
+        let t = line.trim();
+        if t.starts_with('%') {
+            continue;
+        }
+        if adjacency.len() == n {
+            if !t.is_empty() {
+                return Err(anyhow!("trailing data after {n} vertex lines"));
+            }
+            continue;
+        }
+        let mut row = Vec::new();
+        for tok in t.split_whitespace() {
+            let id: usize = tok.parse().with_context(|| format!("bad id {tok:?}"))?;
+            if id == 0 || id > n {
+                return Err(anyhow!("neighbor id {id} out of range 1..={n}"));
+            }
+            row.push((id - 1) as Vertex);
+        }
+        row.sort_unstable();
+        row.dedup();
+        adjacency.push(row);
+    }
+    if adjacency.len() != n {
+        return Err(anyhow!("expected {n} vertex lines, got {}", adjacency.len()));
+    }
+    // symmetrize defensively (METIS requires symmetric adjacency, but
+    // hand-made files often aren't)
+    let mut edges: Vec<(Vertex, Vertex)> = Vec::new();
+    for (v, row) in adjacency.iter().enumerate() {
+        for &u in row {
+            edges.push((v as Vertex, u));
+        }
+    }
+    let g = Csr::from_edges(n, &edges);
+    if g.m() != m {
+        // not fatal: m in headers is frequently wrong in the wild
+        eprintln!("metis: header says {m} edges, file has {}", g.m());
+    }
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::er::er;
+    use crate::util::rng::DetRng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("coded_graph_metis");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let g = er(150, 0.06, &mut DetRng::seed(1));
+        let path = tmp("rt.metis");
+        write_metis(&g, &path).unwrap();
+        let h = read_metis(&path).unwrap();
+        assert_eq!(g, h);
+    }
+
+    #[test]
+    fn parses_hand_written() {
+        let path = tmp("hand.metis");
+        std::fs::write(&path, "% comment\n4 3\n2 3\n1\n1 4\n3\n").unwrap();
+        let g = read_metis(&path).unwrap();
+        assert_eq!(g.n(), 4);
+        assert_eq!(g.m(), 3);
+        assert!(g.has_edge(0, 1));
+        assert!(g.has_edge(0, 2));
+        assert!(g.has_edge(2, 3));
+    }
+
+    #[test]
+    fn rejects_out_of_range_ids() {
+        let path = tmp("bad.metis");
+        std::fs::write(&path, "2 1\n2\n5\n").unwrap();
+        assert!(read_metis(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_weighted() {
+        let path = tmp("weighted.metis");
+        std::fs::write(&path, "2 1 011\n2 7\n1 7\n").unwrap();
+        assert!(read_metis(&path).is_err());
+    }
+
+    #[test]
+    fn isolated_vertices_allowed() {
+        let path = tmp("iso.metis");
+        std::fs::write(&path, "3 1\n2\n1\n\n").unwrap();
+        let g = read_metis(&path).unwrap();
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.degree(2), 0);
+    }
+}

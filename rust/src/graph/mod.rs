@@ -1,0 +1,20 @@
+//! Graph storage and the paper's four random-graph models.
+//!
+//! * [`csr`] — compressed sparse row storage for undirected graphs.
+//! * [`er`] — Erdős–Rényi `ER(n, p)` (paper §III, Fig 4a).
+//! * [`bipartite`] — random bi-partite `RB(n1, n2, q)` (Fig 4b).
+//! * [`sbm`] — stochastic block model `SBM(n1, n2, p, q)` (Fig 4c).
+//! * [`powerlaw`] — Chung–Lu power-law `PL(n, γ, ρ)` (Fig 4d, App. E).
+//! * [`io`] — edge-list text I/O.
+//! * [`properties`] — degree statistics used by the analysis layer.
+
+pub mod bipartite;
+pub mod csr;
+pub mod er;
+pub mod io;
+pub mod metis;
+pub mod powerlaw;
+pub mod properties;
+pub mod sbm;
+
+pub use csr::{Csr, Vertex};

@@ -1,0 +1,126 @@
+//! Degree statistics and structural summaries used by the analysis layer
+//! and printed by the CLI `inspect` command.
+
+use super::csr::{Csr, Vertex};
+
+/// Summary statistics of a graph realization.
+#[derive(Clone, Debug)]
+pub struct GraphStats {
+    pub n: usize,
+    pub m: usize,
+    /// Density over ordered pairs, `2m / n^2` (the paper's normalization
+    /// denominator for communication loads is `n^2 T`).
+    pub density: f64,
+    pub min_degree: usize,
+    pub max_degree: usize,
+    pub mean_degree: f64,
+    /// Fraction of isolated vertices.
+    pub isolated_frac: f64,
+}
+
+/// Compute [`GraphStats`].
+pub fn stats(g: &Csr) -> GraphStats {
+    let n = g.n();
+    let degs: Vec<usize> = (0..n as Vertex).map(|v| g.degree(v)).collect();
+    let total: usize = degs.iter().sum();
+    GraphStats {
+        n,
+        m: g.m(),
+        density: if n == 0 { 0.0 } else { (2 * g.m()) as f64 / (n as f64 * n as f64) },
+        min_degree: degs.iter().copied().min().unwrap_or(0),
+        max_degree: degs.iter().copied().max().unwrap_or(0),
+        mean_degree: if n == 0 { 0.0 } else { total as f64 / n as f64 },
+        isolated_frac: if n == 0 {
+            0.0
+        } else {
+            degs.iter().filter(|&&d| d == 0).count() as f64 / n as f64
+        },
+    }
+}
+
+/// Degree histogram in log-spaced buckets (for eyeballing power laws).
+pub fn degree_histogram(g: &Csr, buckets: usize) -> Vec<(usize, usize)> {
+    let maxd = (0..g.n() as Vertex).map(|v| g.degree(v)).max().unwrap_or(0);
+    if maxd == 0 {
+        return vec![(0, g.n())];
+    }
+    let mut out: Vec<(usize, usize)> = Vec::with_capacity(buckets);
+    let ratio = ((maxd + 1) as f64).powf(1.0 / buckets as f64);
+    let mut lo = 0usize;
+    for b in 1..=buckets {
+        let hi = (ratio.powi(b as i32)).ceil() as usize;
+        let hi = hi.max(lo + 1).min(maxd + 1);
+        let count = (0..g.n() as Vertex)
+            .filter(|&v| {
+                let d = g.degree(v);
+                d >= lo && d < hi
+            })
+            .count();
+        out.push((lo, count));
+        lo = hi;
+        if lo > maxd {
+            break;
+        }
+    }
+    out
+}
+
+/// Empirical power-law exponent via the Hill / MLE estimator over degrees
+/// `>= d_min` (Clauset-style, no cutoff search). Returns `None` when there
+/// are fewer than 10 qualifying vertices.
+pub fn powerlaw_exponent_mle(g: &Csr, d_min: usize) -> Option<f64> {
+    let xs: Vec<f64> = (0..g.n() as Vertex)
+        .map(|v| g.degree(v) as f64)
+        .filter(|&d| d >= d_min as f64 && d > 0.0)
+        .collect();
+    if xs.len() < 10 {
+        return None;
+    }
+    let dm = d_min as f64 - 0.5; // discrete correction
+    let s: f64 = xs.iter().map(|&x| (x / dm).ln()).sum();
+    Some(1.0 + xs.len() as f64 / s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::er::er;
+    use crate::graph::powerlaw::{pl, PlParams};
+    use crate::util::rng::DetRng;
+
+    #[test]
+    fn stats_on_er() {
+        let g = er(400, 0.1, &mut DetRng::seed(1));
+        let s = stats(&g);
+        assert_eq!(s.n, 400);
+        assert!((s.mean_degree - 0.1 * 399.0).abs() < 5.0);
+        assert!((s.density - 0.1).abs() < 0.01);
+        assert_eq!(s.isolated_frac, 0.0);
+    }
+
+    #[test]
+    fn histogram_covers_all_vertices() {
+        let g = pl(3000, PlParams::default(), &mut DetRng::seed(2));
+        let h = degree_histogram(&g, 12);
+        let total: usize = h.iter().map(|&(_, c)| c).sum();
+        assert_eq!(total, 3000);
+    }
+
+    #[test]
+    fn mle_recovers_exponent_ballpark() {
+        let g = pl(30_000, PlParams { gamma: 2.5, max_degree: 10_000, rho_scale: 1.0 }, &mut DetRng::seed(3));
+        let gamma = powerlaw_exponent_mle(&g, 3).unwrap();
+        assert!(
+            (1.8..3.4).contains(&gamma),
+            "estimated gamma={gamma} (Chung–Lu realized degrees are noisy)"
+        );
+    }
+
+    #[test]
+    fn empty_graph_stats() {
+        let g = crate::graph::csr::Csr::from_edges(10, &[]);
+        let s = stats(&g);
+        assert_eq!(s.m, 0);
+        assert_eq!(s.isolated_frac, 1.0);
+    }
+}

@@ -1,0 +1,112 @@
+//! Stochastic block model `SBM(n1, n2, p, q)` — paper §III, Fig 4(c).
+//!
+//! Two clusters (`V1 = 0..n1`, `V2 = n1..n1+n2`); intra-cluster edges exist
+//! w.p. `p`, inter-cluster edges w.p. `q`, `0 < q < p <= 1`, all
+//! independent. Composed from the ER and RB skip-samplers: `G1 = ER(n1,p)`,
+//! `G2 = ER(n2,p)` shifted by `n1`, `G3 = RB(n1,n2,q)` (exactly the
+//! decomposition the paper's Appendix C analysis uses).
+
+use super::bipartite::rb;
+use super::csr::{Csr, Vertex};
+use super::er::er;
+use crate::util::rng::DetRng;
+
+/// Sample `SBM(n1, n2, p, q)`.
+pub fn sbm(n1: usize, n2: usize, p: f64, q: f64, rng: &mut DetRng) -> Csr {
+    assert!(q <= p, "SBM requires q <= p (q={q}, p={p})");
+    let g1 = er(n1, p, rng);
+    let g2 = er(n2, p, rng);
+    let g3 = rb(n1, n2, q, rng);
+    let n = n1 + n2;
+    let mut lists: Vec<Vec<Vertex>> = vec![Vec::new(); n];
+    for (u, v) in g1.edges() {
+        lists[u as usize].push(v);
+        lists[v as usize].push(u);
+    }
+    for (u, v) in g2.edges() {
+        let (u, v) = (u as usize + n1, v as usize + n1);
+        lists[u].push(v as Vertex);
+        lists[v].push(u as Vertex);
+    }
+    for (u, v) in g3.edges() {
+        lists[u as usize].push(v);
+        lists[v as usize].push(u);
+    }
+    for l in &mut lists {
+        l.sort_unstable();
+    }
+    Csr::from_sorted_adjacency(lists)
+}
+
+/// Expected edge count: `p C(n1,2) + p C(n2,2) + q n1 n2`.
+pub fn expected_edges(n1: usize, n2: usize, p: f64, q: f64) -> f64 {
+    p * ((n1 * (n1 - 1) / 2) + (n2 * (n2 - 1) / 2)) as f64 + q * (n1 * n2) as f64
+}
+
+/// The paper's Theorem-3 "effective density":
+/// `(p n1^2 + p n2^2 + 2 q n1 n2) / (n1 + n2)^2`.
+pub fn effective_density(n1: usize, n2: usize, p: f64, q: f64) -> f64 {
+    let (a, b) = (n1 as f64, n2 as f64);
+    (p * a * a + p * b * b + 2.0 * q * a * b) / ((a + b) * (a + b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::bipartite::in_v1;
+
+    #[test]
+    fn edge_count_concentrates() {
+        let mut rng = DetRng::seed(1);
+        let (n1, n2, p, q) = (200, 150, 0.2, 0.05);
+        let g = sbm(n1, n2, p, q, &mut rng);
+        let exp = expected_edges(n1, n2, p, q);
+        let sd = exp.sqrt();
+        assert!(((g.m() as f64) - exp).abs() < 6.0 * sd, "m={}", g.m());
+    }
+
+    #[test]
+    fn intra_denser_than_inter() {
+        let mut rng = DetRng::seed(2);
+        let (n1, n2) = (250, 250);
+        let g = sbm(n1, n2, 0.3, 0.02, &mut rng);
+        let mut intra = 0usize;
+        let mut inter = 0usize;
+        for (u, v) in g.edges() {
+            if in_v1(u, n1) == in_v1(v, n1) {
+                intra += 1;
+            } else {
+                inter += 1;
+            }
+        }
+        // densities, not raw counts
+        let d_intra = intra as f64 / (2.0 * (n1 * (n1 - 1) / 2) as f64);
+        let d_inter = inter as f64 / (n1 * n2) as f64;
+        assert!(d_intra > 4.0 * d_inter, "intra={d_intra} inter={d_inter}");
+    }
+
+    #[test]
+    fn effective_density_matches_measured() {
+        let mut rng = DetRng::seed(3);
+        let (n1, n2, p, q) = (300, 200, 0.2, 0.05);
+        let g = sbm(n1, n2, p, q, &mut rng);
+        let n = (n1 + n2) as f64;
+        // measured density over ordered pairs ~ effective density
+        let measured = (2 * g.m()) as f64 / (n * n);
+        let want = effective_density(n1, n2, p, q);
+        assert!((measured - want).abs() / want < 0.1, "{measured} vs {want}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = sbm(80, 70, 0.3, 0.1, &mut DetRng::seed(5));
+        let b = sbm(80, 70, 0.3, 0.1, &mut DetRng::seed(5));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "q <= p")]
+    fn rejects_q_above_p() {
+        sbm(10, 10, 0.1, 0.5, &mut DetRng::seed(0));
+    }
+}

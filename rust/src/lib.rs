@@ -1,0 +1,54 @@
+//! # coded-graph
+//!
+//! A reproduction of **"Coded Computing for Distributed Graph Analytics"**
+//! (Prakash, Reisizadeh, Pedarsani, Avestimehr; ISIT'18 / Trans. IT 2020).
+//!
+//! The paper shows that in vertex-centric ("think like a vertex") MapReduce
+//! over graphs, carefully replicating each Map computation at `r` servers
+//! creates coded-multicast opportunities that slash the Shuffle-phase
+//! communication load by (asymptotically) a factor of `r` — an
+//! inverse-linear computation/communication trade-off — and proves the gain
+//! optimal for Erdős–Rényi graphs.
+//!
+//! This crate is the L3 (coordinator) layer of a three-layer stack:
+//!
+//! * **L3 (here, rust)** — subgraph/computation allocation, the coded and
+//!   uncoded Shuffle schemes, a shared-bus network simulator, a
+//!   leader/worker cluster runtime, metrics, and the benchmark harnesses
+//!   that regenerate every figure and table of the paper.
+//! * **L2 (python/compile/model.py, build-time)** — the JAX compute graphs
+//!   for the PageRank / SSSP numeric hot loops.
+//! * **L1 (python/compile/kernels/, build-time)** — Pallas kernels (masked
+//!   SpMV, tropical min-plus, XOR fold) called from L2.
+//!
+//! L2+L1 are lowered once (`make artifacts`) to HLO text; [`runtime`] loads
+//! and executes them through the PJRT C API (`xla` crate). Python is never
+//! on the request path.
+//!
+//! ## Crate map
+//!
+//! | module | contents |
+//! |---|---|
+//! | [`graph`] | CSR storage + ER / bi-partite / SBM / power-law generators |
+//! | [`combinatorics`] | binomials, subset ranking, the `C(K,r)` batch index |
+//! | [`allocation`] | Map batch allocation, Reduce partition, RB/SBM composite schemes |
+//! | [`mapreduce`] | vertex-program abstraction; PageRank and SSSP programs |
+//! | [`shuffle`] | uncoded unicast scheme + the paper's coded scheme (encode/decode) |
+//! | [`network`] | shared-bus wire-time model (one transmitter at a time) |
+//! | [`coordinator`] | phase engine + threaded cluster driver, metrics |
+//! | [`runtime`] | PJRT artifact loading / execution (AOT JAX+Pallas) |
+//! | [`analysis`] | closed forms of Theorems 1–4, Lemma 3 bound, stats helpers |
+
+pub mod allocation;
+pub mod analysis;
+pub mod combinatorics;
+pub mod experiments;
+pub mod coordinator;
+pub mod graph;
+pub mod mapreduce;
+pub mod network;
+pub mod runtime;
+pub mod shuffle;
+pub mod util;
+
+pub use graph::csr::{Csr, Vertex};

@@ -1,0 +1,309 @@
+//! `coded-graph` — CLI for the coded distributed graph-analytics framework.
+//!
+//! ```text
+//! coded-graph fig5      [--n 300] [--p 0.1] [--k 5] [--trials 20] [--seed 2018]
+//! coded-graph scenario  --id 1|2|3 [--scale S] [--full] [--seed 7]
+//! coded-graph models    [--n 400] [--k 6] [--trials 8]
+//! coded-graph run       --graph er|rb|sbm|pl --n N --k K --r R
+//!                       [--p P] [--q Q] [--gamma G] [--program pagerank|sssp]
+//!                       [--scheme coded|uncoded] [--iters I] [--cluster]
+//! coded-graph inspect   --graph er|rb|sbm|pl --n N [--p P] [--q Q] [--gamma G]
+//! coded-graph artifacts [--dir artifacts]
+//! ```
+//!
+//! Every experiment harness lives in `coded_graph::experiments`; the CLI is
+//! a thin printer. `cargo bench` regenerates the paper's figures through
+//! the same harnesses.
+
+use coded_graph::allocation::Allocation;
+use coded_graph::analysis::theory;
+use coded_graph::coordinator::{
+    cluster::run_cluster, run_rust, EngineConfig, Job, Scheme,
+};
+use coded_graph::experiments::{fig5, models, scenarios};
+use coded_graph::graph::{bipartite, er, powerlaw, properties, sbm};
+use coded_graph::mapreduce::{ConnectedComponents, PageRank, Sssp, VertexProgram};
+use coded_graph::util::benchkit::Table;
+use coded_graph::util::cli::Args;
+use coded_graph::util::rng::DetRng;
+use coded_graph::Csr;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n");
+            usage();
+            std::process::exit(2);
+        }
+    };
+    let result = match args.command.as_deref() {
+        Some("fig5") => cmd_fig5(&args),
+        Some("scenario") => cmd_scenario(&args),
+        Some("models") => cmd_models(&args),
+        Some("run") => cmd_run(&args),
+        Some("inspect") => cmd_inspect(&args),
+        Some("artifacts") => cmd_artifacts(&args),
+        _ => {
+            usage();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    println!("coded-graph — coded computing for distributed graph analytics");
+    println!("(reproduction of Prakash, Reisizadeh, Pedarsani, Avestimehr 2018)\n");
+    println!("subcommands:");
+    println!("  fig5       communication-load trade-off (paper Fig 5)");
+    println!("  scenario   EC2 PageRank scenarios 1-3 (paper Fig 2 / Fig 7)");
+    println!("  models     Theorem 1-4 validation sweeps across graph models");
+    println!("  run        run one distributed job (pagerank / sssp)");
+    println!("  inspect    generate a graph and print its statistics");
+    println!("  artifacts  list the AOT artifacts and smoke-run one");
+}
+
+fn cmd_fig5(args: &Args) -> Result<(), String> {
+    args.check_known(&["n", "p", "k", "trials", "seed"])?;
+    let params = fig5::Fig5Params {
+        n: args.get_or("n", 300usize)?,
+        p: args.get_or("p", 0.1f64)?,
+        k: args.get_or("k", 5usize)?,
+        trials: args.get_or("trials", 20usize)?,
+        seed: args.get_or("seed", 2018u64)?,
+    };
+    println!(
+        "Fig 5: ER(n={}, p={}), K={}, {} trials\n",
+        params.n, params.p, params.k, params.trials
+    );
+    let rows = fig5::run(params);
+    let mut t = Table::new(&[
+        "r", "uncoded", "coded", "lower-bound", "finite-pred", "gain", "ci95",
+    ]);
+    for row in &rows {
+        t.row(&[
+            row.r.to_string(),
+            format!("{:.5}", row.uncoded.mean),
+            format!("{:.5}", row.coded.mean),
+            format!("{:.5}", row.lower_bound),
+            format!("{:.5}", row.coded_finite_pred),
+            format!("{:.2}x", row.gain()),
+            format!("{:.5}", row.coded.ci95()),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_scenario(args: &Args) -> Result<(), String> {
+    args.check_known(&["id", "scale", "full", "seed"])?;
+    let id = args.get_or("id", 2usize)?;
+    let scale = if args.has("full") { 1 } else { args.get_or("scale", 6usize)? };
+    let seed = args.get_or("seed", 7u64)?;
+    let sc = scenarios::scenario(id, scale);
+    println!("Scenario {id}: {} (n={}, K={})\n", sc.name, sc.n, sc.k);
+    let rows = scenarios::run_scenario_scaled(&sc, seed, scale);
+    print_scenario_rows(&rows);
+    let (best_r, speedup) = scenarios::speedup_over_naive(&rows);
+    let naive = rows.iter().find(|r| r.r == 1).unwrap();
+    println!(
+        "\nbest r = {best_r}: {:.1}% speedup over naive MapReduce (r=1)",
+        speedup * 100.0
+    );
+    let rs = theory::r_star(
+        naive.times.map_s + naive.times.encode_s,
+        naive.times.shuffle_s,
+    );
+    println!("Remark 10 heuristic r* = sqrt(T_shuffle/T_map) = {rs:.2}");
+    Ok(())
+}
+
+fn print_scenario_rows(rows: &[scenarios::ScenarioRow]) {
+    let mut t = Table::new(&[
+        "r", "scheme", "map", "encode", "shuffle", "decode", "reduce", "update", "total", "load",
+    ]);
+    for row in rows {
+        t.row(&[
+            row.r.to_string(),
+            row.scheme.to_string(),
+            format!("{:.2}s", row.times.map_s),
+            format!("{:.2}s", row.times.encode_s),
+            format!("{:.2}s", row.times.shuffle_s),
+            format!("{:.2}s", row.times.decode_s),
+            format!("{:.2}s", row.times.reduce_s),
+            format!("{:.2}s", row.times.update_s),
+            format!("{:.2}s", row.total_s),
+            format!("{:.5}", row.load),
+        ]);
+    }
+    t.print();
+}
+
+fn cmd_models(args: &Args) -> Result<(), String> {
+    args.check_known(&["n", "k", "trials", "seed", "p", "q", "gamma"])?;
+    let params = models::SweepParams {
+        n: args.get_or("n", 400usize)?,
+        k: args.get_or("k", 6usize)?,
+        trials: args.get_or("trials", 8usize)?,
+        seed: args.get_or("seed", 99u64)?,
+        p: args.get_or("p", 0.2f64)?,
+        q: args.get_or("q", 0.05f64)?,
+        gamma: args.get_or("gamma", 2.5f64)?,
+    };
+    for model in [models::Model::Er, models::Model::Rb, models::Model::Sbm, models::Model::Pl] {
+        println!("\n=== {model} model (Theorems 1-4) ===");
+        let mut t = Table::new(&["r", "uncoded", "coded", "gain", "thm-upper", "thm-lower"]);
+        for row in models::sweep(model, params) {
+            t.row(&[
+                row.r.to_string(),
+                format!("{:.5}", row.uncoded.mean),
+                format!("{:.5}", row.coded.mean),
+                format!("{:.2}x", row.gain()),
+                format!("{:.5}", row.predicted_upper),
+                format!("{:.5}", row.predicted_lower),
+            ]);
+        }
+        t.print();
+    }
+    Ok(())
+}
+
+fn build_graph(args: &Args) -> Result<Csr, String> {
+    let n = args.get_or("n", 1000usize)?;
+    let seed = args.get_or("seed", 1u64)?;
+    let mut rng = DetRng::seed(seed);
+    match args.get("graph").unwrap_or("er") {
+        "er" => Ok(er::er(n, args.get_or("p", 0.1f64)?, &mut rng)),
+        "rb" => Ok(bipartite::rb(n / 2, n - n / 2, args.get_or("q", 0.05f64)?, &mut rng)),
+        "sbm" => Ok(sbm::sbm(
+            n / 2,
+            n - n / 2,
+            args.get_or("p", 0.2f64)?,
+            args.get_or("q", 0.05f64)?,
+            &mut rng,
+        )),
+        "pl" => Ok(powerlaw::pl(
+            n,
+            powerlaw::PlParams {
+                gamma: args.get_or("gamma", 2.3f64)?,
+                max_degree: 100_000,
+                rho_scale: args.get_or("rho-scale", 1.0f64)?,
+            },
+            &mut rng,
+        )),
+        other => Err(format!("unknown graph model {other:?}")),
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<(), String> {
+    args.check_known(&[
+        "graph", "n", "k", "r", "p", "q", "gamma", "rho-scale", "seed", "program", "scheme", "iters",
+        "cluster", "source",
+    ])?;
+    let g = build_graph(args)?;
+    let k = args.get_or("k", 5usize)?;
+    let r = args.get_or("r", 2usize)?;
+    let iters = args.get_or("iters", 3usize)?;
+    let scheme = match args.get("scheme").unwrap_or("coded") {
+        "coded" => Scheme::Coded,
+        "uncoded" => Scheme::Uncoded,
+        "coded-combined" => Scheme::CodedCombined,
+        "uncoded-combined" => Scheme::UncodedCombined,
+        other => return Err(format!("unknown scheme {other:?}")),
+    };
+    let alloc = Allocation::er_scheme(g.n(), k, r);
+    let prog_pr;
+    let prog_sssp;
+    let prog_cc;
+    let program: &dyn VertexProgram = match args.get("program").unwrap_or("pagerank") {
+        "pagerank" => {
+            prog_pr = PageRank::default();
+            &prog_pr
+        }
+        "sssp" => {
+            prog_sssp = Sssp::hashed(args.get_or("source", 0u32)?);
+            &prog_sssp
+        }
+        "cc" => {
+            prog_cc = ConnectedComponents;
+            &prog_cc
+        }
+        other => return Err(format!("unknown program {other:?}")),
+    };
+    let cfg = EngineConfig { scheme, ..Default::default() };
+    let job = Job { graph: &g, alloc: &alloc, program };
+    let report = if args.has("cluster") {
+        println!("driver: threaded cluster ({k} workers)");
+        run_cluster(&job, &cfg, iters)
+    } else {
+        println!("driver: phase engine");
+        run_rust(&job, &cfg, iters)
+    };
+    println!(
+        "{} x{} iterations on n={} m={} K={k} r={r} ({scheme})",
+        program.name(),
+        iters,
+        g.n(),
+        g.m()
+    );
+    let t = report.summed_times();
+    println!(
+        "sim times: map={:.3}s encode={:.3}s shuffle={:.3}s decode={:.3}s reduce={:.3}s update={:.3}s total={:.3}s",
+        t.map_s, t.encode_s, t.shuffle_s, t.decode_s, t.reduce_s, t.update_s, t.total()
+    );
+    println!(
+        "mean normalized shuffle load: {:.6}",
+        report.mean_normalized_load(g.n())
+    );
+    let mut top: Vec<(usize, f64)> = report.final_state.iter().copied().enumerate().collect();
+    top.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    println!("top-5 final states: {:?}", &top[..5.min(top.len())]);
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<(), String> {
+    args.check_known(&["graph", "n", "p", "q", "gamma", "rho-scale", "seed"])?;
+    let g = build_graph(args)?;
+    let s = properties::stats(&g);
+    println!("n={} m={} density={:.5}", s.n, s.m, s.density);
+    println!(
+        "degree: min={} mean={:.2} max={} isolated={:.2}%",
+        s.min_degree,
+        s.mean_degree,
+        s.max_degree,
+        s.isolated_frac * 100.0
+    );
+    if let Some(gamma) = properties::powerlaw_exponent_mle(&g, 3) {
+        println!("power-law exponent (MLE, d>=3): {gamma:.2}");
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<(), String> {
+    args.check_known(&["dir"])?;
+    let dir = std::path::PathBuf::from(args.get("dir").unwrap_or("artifacts"));
+    let rt = coded_graph::runtime::PjrtRuntime::load(&dir).map_err(|e| e.to_string())?;
+    println!("artifacts in {}:", dir.display());
+    for e in &rt.manifest().entries {
+        let shapes: Vec<String> = e.inputs.iter().map(|(s, _)| format!("{s:?}")).collect();
+        println!("  {:28} inputs: {}", e.name, shapes.join(" x "));
+    }
+    // smoke-run the largest pagerank block
+    if let Some((entry, b)) = rt.manifest().best_block("pagerank_block") {
+        let name = entry.name.clone();
+        let a = vec![1.0f32 / b as f32; b * b];
+        let x = vec![1.0f32; b];
+        let y = rt
+            .execute_f32(&name, &[
+                coded_graph::runtime::client::Arg::F32(&a),
+                coded_graph::runtime::client::Arg::F32(&x),
+            ])
+            .map_err(|e| e.to_string())?;
+        println!("\nsmoke: {name}(uniform) -> y[0] = {} (want 1.0)", y[0]);
+    }
+    Ok(())
+}

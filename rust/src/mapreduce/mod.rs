@@ -1,0 +1,19 @@
+//! The vertex-centric MapReduce computation model (paper §II-A).
+//!
+//! A computation `φ_i` at vertex `i` decomposes as
+//! `φ_i(W_{N(i)}) = h_i({g_{i,j}(w_j) : j ∈ N(i)})` — Map `g` produces an
+//! intermediate value (IV) per edge, Reduce `h` folds the IVs of a
+//! vertex's neighborhood. [`VertexProgram`] captures exactly this
+//! decomposition; [`pagerank`] and [`sssp`] are the paper's two worked
+//! examples, and [`reference`] holds single-machine oracles for tests.
+
+pub mod cc;
+pub mod pagerank;
+pub mod program;
+pub mod reference;
+pub mod sssp;
+
+pub use cc::ConnectedComponents;
+pub use pagerank::PageRank;
+pub use program::VertexProgram;
+pub use sssp::{EdgeWeights, Sssp};

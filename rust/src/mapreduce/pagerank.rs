@@ -1,0 +1,96 @@
+//! PageRank as a [`VertexProgram`] — paper Example 1.
+//!
+//! `Π^k(i) = (1-d) Σ_{j∈N(i)} Π^{k-1}(j) P(j→i) + d/|V|` with the uniform
+//! random-walk transition `P(j→i) = 1/deg(j)`. The Mapper sends
+//! `v_{i,j} = Π(j)/deg(j)` to every neighbor `i ∈ N(j)`; the Reducer sums
+//! and applies the damping affine.
+
+use super::program::VertexProgram;
+use crate::graph::csr::{Csr, Vertex};
+
+/// PageRank program. `damping` is the paper's `d` (teleport mass).
+#[derive(Clone, Copy, Debug)]
+pub struct PageRank {
+    pub damping: f64,
+}
+
+impl Default for PageRank {
+    fn default() -> Self {
+        Self { damping: 0.15 }
+    }
+}
+
+impl VertexProgram for PageRank {
+    fn name(&self) -> &'static str {
+        "pagerank"
+    }
+
+    fn init(&self, _v: Vertex, g: &Csr) -> f64 {
+        1.0 / g.n() as f64
+    }
+
+    #[inline]
+    fn map(&self, _dst: Vertex, src: Vertex, src_state: f64, g: &Csr) -> f64 {
+        src_state / g.degree(src) as f64
+    }
+
+    fn map_depends_on_dst(&self) -> bool {
+        false // Π(j)/deg(j) is per-source: enables the engine fast path
+    }
+
+    fn identity(&self) -> f64 {
+        0.0
+    }
+
+    #[inline]
+    fn combine(&self, acc: f64, iv: f64) -> f64 {
+        acc + iv
+    }
+
+    fn finalize(&self, _v: Vertex, acc: f64, _prev: f64, g: &Csr) -> f64 {
+        (1.0 - self.damping) * acc + self.damping / g.n() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::er::er;
+    use crate::mapreduce::program::run_single_machine;
+    use crate::util::rng::DetRng;
+
+    #[test]
+    fn mass_is_conserved_without_dangling() {
+        let g = er(300, 0.1, &mut DetRng::seed(1)); // a.s. no isolated @ p=0.1
+        let pr = PageRank::default();
+        let state = run_single_machine(&pr, &g, 20);
+        let mass: f64 = state.iter().sum();
+        assert!((mass - 1.0).abs() < 1e-9, "mass={mass}");
+    }
+
+    #[test]
+    fn converges_to_fixed_point() {
+        let g = er(200, 0.1, &mut DetRng::seed(2));
+        let pr = PageRank::default();
+        let a = run_single_machine(&pr, &g, 60);
+        let b = run_single_machine(&pr, &g, 61);
+        let resid: f64 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum();
+        assert!(resid < 1e-10, "resid={resid}");
+    }
+
+    #[test]
+    fn high_degree_vertices_rank_higher() {
+        // star: center 0 linked to all others
+        let edges: Vec<(Vertex, Vertex)> = (1..50).map(|v| (0, v)).collect();
+        let g = Csr::from_edges(50, &edges);
+        let state = run_single_machine(&PageRank::default(), &g, 50);
+        assert!(state[0] > 5.0 * state[1], "center={} leaf={}", state[0], state[1]);
+    }
+
+    #[test]
+    fn map_splits_mass_by_degree() {
+        let g = Csr::from_edges(3, &[(0, 1), (0, 2)]);
+        let pr = PageRank::default();
+        assert_eq!(pr.map(1, 0, 0.6, &g), 0.3);
+    }
+}

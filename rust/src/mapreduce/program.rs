@@ -1,0 +1,73 @@
+//! The [`VertexProgram`] trait: the paper's Map/Reduce decomposition.
+
+use crate::graph::csr::{Csr, Vertex};
+
+/// A vertex-centric computation in the paper's Map/Reduce form.
+///
+/// Per-vertex state is an `f64` "file" `w_j` (the rank / distance of the
+/// paper's examples; `T = 64` bits on the wire). One iteration is:
+///
+/// 1. **Map**: for every edge `(j → i)`, `v_{i,j} = map(i, j, w_j)`.
+/// 2. **Reduce**: `acc_i = fold(combine, identity, {v_{i,j}})`, then
+///    `w_i' = finalize(i, acc_i, w_i)`.
+///
+/// Implementations must be pure (same inputs, same outputs): both shuffle
+/// schemes and the coded decoder recompute Map values independently on
+/// multiple servers and rely on bit-identical results.
+pub trait VertexProgram: Send + Sync {
+    /// Display name (metrics, CLI).
+    fn name(&self) -> &'static str;
+
+    /// Initial state of vertex `v` (iteration 0).
+    fn init(&self, v: Vertex, g: &Csr) -> f64;
+
+    /// Map `g_{i,j}`: the IV sent from Mapper `j` to Reducer `i`.
+    fn map(&self, dst: Vertex, src: Vertex, src_state: f64, g: &Csr) -> f64;
+
+    /// Does `map` actually depend on `dst`? PageRank's `Π(j)/deg(j)` does
+    /// not; declaring it lets the engine evaluate each Mapper *once*
+    /// instead of once per edge (a §Perf fast path; safe default: true).
+    fn map_depends_on_dst(&self) -> bool {
+        true
+    }
+
+    /// Identity of the Reduce fold (`0` for sums, `+inf` for mins).
+    fn identity(&self) -> f64;
+
+    /// Combine one IV into the accumulator (must be commutative +
+    /// associative: IV arrival order is scheme-dependent).
+    fn combine(&self, acc: f64, iv: f64) -> f64;
+
+    /// Finalize `h_i`: accumulator + previous state -> next state.
+    fn finalize(&self, v: Vertex, acc: f64, prev: f64, g: &Csr) -> f64;
+
+    /// Convergence residual between two successive states (L1 by default).
+    fn residual(&self, old: &[f64], new: &[f64]) -> f64 {
+        old.iter().zip(new).map(|(a, b)| (a - b).abs()).sum()
+    }
+}
+
+/// Run `iters` full iterations on a single machine — the trait-generic
+/// oracle that distributed execution must match bit-for-bit modulo
+/// floating-point reassociation (tests use tolerances).
+pub fn run_single_machine(
+    prog: &dyn VertexProgram,
+    g: &Csr,
+    iters: usize,
+) -> Vec<f64> {
+    let n = g.n();
+    let mut state: Vec<f64> = (0..n as Vertex).map(|v| prog.init(v, g)).collect();
+    for _ in 0..iters {
+        let mut next = vec![0.0f64; n];
+        for i in 0..n as Vertex {
+            let mut acc = prog.identity();
+            for &j in g.neighbors(i) {
+                let iv = prog.map(i, j, state[j as usize], g);
+                acc = prog.combine(acc, iv);
+            }
+            next[i as usize] = prog.finalize(i, acc, state[i as usize], g);
+        }
+        state = next;
+    }
+    state
+}

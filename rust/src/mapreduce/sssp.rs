@@ -1,0 +1,148 @@
+//! Single-source shortest paths as a [`VertexProgram`] — paper Example 2.
+//!
+//! `D^k(i) = min_{j∈N(i)} (D^{k-1}(j) + t(j,i))`, a Bellman–Ford sweep.
+//! Edge weights come from [`EdgeWeights`]: unit weights (hop counts) or a
+//! deterministic hash of the edge endpoints (reproducible "random" weights
+//! with no storage — both Mapper replicas derive identical `t(j,i)`).
+
+use super::program::VertexProgram;
+use crate::graph::csr::{Csr, Vertex};
+
+/// Large-but-finite stand-in for +∞ (survives addition without overflow
+/// and round-trips f64 <-> bits exactly).
+pub const INF: f64 = 1.0e30;
+
+/// Edge-weight model.
+#[derive(Clone, Copy, Debug)]
+pub enum EdgeWeights {
+    /// All edges weigh 1 (hop distance).
+    Unit,
+    /// `t(u,v) = 1 + (hash(min,max) % granularity) / granularity`, i.e.
+    /// uniform-ish in `[1, 2)`; deterministic in the *undirected* edge.
+    Hashed { granularity: u64 },
+}
+
+impl EdgeWeights {
+    /// Weight of undirected edge `{u, v}` (symmetric by construction).
+    #[inline]
+    pub fn weight(&self, u: Vertex, v: Vertex) -> f64 {
+        match *self {
+            EdgeWeights::Unit => 1.0,
+            EdgeWeights::Hashed { granularity } => {
+                let (a, b) = if u <= v { (u, v) } else { (v, u) };
+                let mut h = (a as u64) << 32 | b as u64;
+                // splitmix64 finalizer
+                h = h.wrapping_add(0x9E37_79B9_7F4A_7C15);
+                h = (h ^ (h >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+                h = (h ^ (h >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+                h ^= h >> 31;
+                1.0 + (h % granularity) as f64 / granularity as f64
+            }
+        }
+    }
+}
+
+/// SSSP program from `source`.
+#[derive(Clone, Copy, Debug)]
+pub struct Sssp {
+    pub source: Vertex,
+    pub weights: EdgeWeights,
+}
+
+impl Sssp {
+    pub fn unit(source: Vertex) -> Self {
+        Self { source, weights: EdgeWeights::Unit }
+    }
+
+    pub fn hashed(source: Vertex) -> Self {
+        Self { source, weights: EdgeWeights::Hashed { granularity: 1024 } }
+    }
+}
+
+impl VertexProgram for Sssp {
+    fn name(&self) -> &'static str {
+        "sssp"
+    }
+
+    fn init(&self, v: Vertex, _g: &Csr) -> f64 {
+        if v == self.source {
+            0.0
+        } else {
+            INF
+        }
+    }
+
+    #[inline]
+    fn map(&self, dst: Vertex, src: Vertex, src_state: f64, _g: &Csr) -> f64 {
+        // saturate: INF + w stays INF so "unreached" is preserved exactly
+        if src_state >= INF {
+            INF
+        } else {
+            src_state + self.weights.weight(src, dst)
+        }
+    }
+
+    fn identity(&self) -> f64 {
+        INF
+    }
+
+    #[inline]
+    fn combine(&self, acc: f64, iv: f64) -> f64 {
+        acc.min(iv)
+    }
+
+    fn finalize(&self, _v: Vertex, acc: f64, prev: f64, _g: &Csr) -> f64 {
+        acc.min(prev)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::program::run_single_machine;
+
+    #[test]
+    fn weights_symmetric_and_deterministic() {
+        let w = EdgeWeights::Hashed { granularity: 1024 };
+        for (u, v) in [(0u32, 5u32), (3, 9), (100, 2)] {
+            assert_eq!(w.weight(u, v), w.weight(v, u));
+            assert!(w.weight(u, v) >= 1.0 && w.weight(u, v) < 2.0);
+        }
+        assert_ne!(w.weight(0, 5), w.weight(0, 6)); // a.s.
+    }
+
+    #[test]
+    fn path_graph_hop_distances() {
+        // 0-1-2-3-4
+        let g = Csr::from_edges(5, &[(0, 1), (1, 2), (2, 3), (3, 4)]);
+        let state = run_single_machine(&Sssp::unit(0), &g, 4);
+        assert_eq!(state, vec![0.0, 1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn unreachable_stays_inf() {
+        let g = Csr::from_edges(4, &[(0, 1)]); // 2, 3 disconnected
+        let state = run_single_machine(&Sssp::unit(0), &g, 5);
+        assert_eq!(state[0], 0.0);
+        assert_eq!(state[1], 1.0);
+        assert!(state[2] >= INF && state[3] >= INF);
+    }
+
+    #[test]
+    fn triangle_shortcut() {
+        // 0-1 (w~[1,2)), 1-2, 0-2: direct edge always shortest
+        let g = Csr::from_edges(3, &[(0, 1), (1, 2), (0, 2)]);
+        let s = Sssp::hashed(0);
+        let state = run_single_machine(&s, &g, 3);
+        let direct = s.weights.weight(0, 2);
+        let via = s.weights.weight(0, 1) + s.weights.weight(1, 2);
+        assert!((state[2] - direct.min(via)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inf_saturates_in_map() {
+        let g = Csr::from_edges(2, &[(0, 1)]);
+        let s = Sssp::unit(0);
+        assert_eq!(s.map(0, 1, INF, &g), INF);
+    }
+}

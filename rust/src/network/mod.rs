@@ -1,0 +1,5 @@
+//! Network substrate: the paper's shared-medium communication model.
+
+pub mod bus;
+
+pub use bus::{Bus, BusConfig, Transmission};

@@ -1,0 +1,277 @@
+//! Tiled block executors: the coordinator-facing compute API.
+//!
+//! A worker's Reduce phase over its rows `R_k` is dense-tile linear
+//! algebra (DESIGN.md §Hardware-Adaptation): the adjacency block
+//! `A[R_k, :]` is streamed through the AOT `pagerank_block_B` /
+//! `sssp_block_B` artifacts in `B x B` tiles. Tiles are materialized from
+//! CSR into a reusable buffer (zero-padded at the edges), so memory is
+//! `O(B²)` regardless of graph size.
+
+use anyhow::Result;
+
+use super::client::{Arg, PjrtRuntime};
+use crate::graph::csr::{Csr, Vertex};
+use crate::mapreduce::sssp::{EdgeWeights, INF};
+
+/// Tiled executor bound to a runtime + tile size.
+pub struct BlockExecutor<'rt> {
+    rt: &'rt PjrtRuntime,
+    /// Tile edge `B` (from the manifest's best block artifacts).
+    pub block: usize,
+    pagerank_name: String,
+    sssp_name: Option<String>,
+    /// Scratch tile (`B x B`) reused across calls.
+    tile: Vec<f32>,
+    xtile: Vec<f32>,
+    /// Number of artifact executions performed (perf accounting).
+    pub executions: usize,
+}
+
+impl<'rt> BlockExecutor<'rt> {
+    pub fn new(rt: &'rt PjrtRuntime) -> Result<Self> {
+        let (pr, b) = rt
+            .manifest()
+            .best_block("pagerank_block")
+            .ok_or_else(|| anyhow::anyhow!("no pagerank_block artifact"))?;
+        let sssp = rt.manifest().best_block("sssp_block").map(|(e, _)| e.name.clone());
+        Ok(Self {
+            rt,
+            block: b,
+            pagerank_name: pr.name.clone(),
+            sssp_name: sssp,
+            tile: vec![0f32; b * b],
+            xtile: vec![0f32; b],
+            executions: 0,
+        })
+    }
+
+    /// PageRank partial sums for `rows`: `y[i] = Σ_j A_norm[i, j] x[j]`
+    /// where `A_norm[i, j] = 1{(j,i) ∈ E} * colscale[j]` — tiled over the
+    /// full column range `0..n`.
+    ///
+    /// `x` is the per-mapper Map-value vector (already `Π(j)/deg(j)` — so
+    /// `colscale` is baked by the caller into `x`; the tile holds the raw
+    /// 0/1 mask).
+    pub fn pagerank_rows(&mut self, g: &Csr, rows: &[Vertex], x: &[f32]) -> Result<Vec<f64>> {
+        let b = self.block;
+        let n = g.n();
+        assert_eq!(x.len(), n);
+        let mut y = vec![0f64; rows.len()];
+        for row_t in 0..rows.len().div_ceil(b) {
+            let row_lo = row_t * b;
+            let row_hi = (row_lo + b).min(rows.len());
+            let mut acc = vec![0f64; row_hi - row_lo];
+            for col_t in 0..n.div_ceil(b) {
+                let col_lo = (col_t * b) as Vertex;
+                let col_hi = ((col_t + 1) * b).min(n) as Vertex;
+                // materialize the 0/1 mask tile
+                self.tile.fill(0.0);
+                let mut nonzero = false;
+                for (ri, &i) in rows[row_lo..row_hi].iter().enumerate() {
+                    for &j in g.neighbors_in_range(i, col_lo, col_hi) {
+                        self.tile[ri * b + (j - col_lo) as usize] = 1.0;
+                        nonzero = true;
+                    }
+                }
+                if !nonzero {
+                    continue; // empty tile: skip the artifact call
+                }
+                self.xtile.fill(0.0);
+                self.xtile[..(col_hi - col_lo) as usize]
+                    .copy_from_slice(&x[col_lo as usize..col_hi as usize]);
+                let out = self
+                    .rt
+                    .execute_f32(&self.pagerank_name, &[Arg::F32(&self.tile), Arg::F32(&self.xtile)])?;
+                self.executions += 1;
+                for (ri, a) in acc.iter_mut().enumerate() {
+                    *a += out[ri] as f64;
+                }
+            }
+            for (ri, a) in acc.into_iter().enumerate() {
+                y[row_lo + ri] = a;
+            }
+        }
+        Ok(y)
+    }
+
+    /// SSSP relaxation for `rows`: `y[i] = min_j (W[i, j] + d[j])`, tiled.
+    /// Non-edges are `INF` in the tile; `d` is the distance vector.
+    pub fn sssp_rows(
+        &mut self,
+        g: &Csr,
+        rows: &[Vertex],
+        d: &[f32],
+        weights: EdgeWeights,
+    ) -> Result<Vec<f64>> {
+        let name = self
+            .sssp_name
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("no sssp_block artifact"))?;
+        let b = self.block;
+        let n = g.n();
+        assert_eq!(d.len(), n);
+        let inf32 = 3.0e38f32;
+        let mut y = vec![INF; rows.len()];
+        for row_t in 0..rows.len().div_ceil(b) {
+            let row_lo = row_t * b;
+            let row_hi = (row_lo + b).min(rows.len());
+            let mut acc = vec![INF; row_hi - row_lo];
+            for col_t in 0..n.div_ceil(b) {
+                let col_lo = (col_t * b) as Vertex;
+                let col_hi = ((col_t + 1) * b).min(n) as Vertex;
+                self.tile.fill(inf32);
+                let mut nonzero = false;
+                for (ri, &i) in rows[row_lo..row_hi].iter().enumerate() {
+                    for &j in g.neighbors_in_range(i, col_lo, col_hi) {
+                        self.tile[ri * b + (j - col_lo) as usize] =
+                            weights.weight(j, i) as f32;
+                        nonzero = true;
+                    }
+                }
+                if !nonzero {
+                    continue;
+                }
+                self.xtile.fill(inf32 / 4.0);
+                for (o, &v) in self.xtile[..(col_hi - col_lo) as usize]
+                    .iter_mut()
+                    .zip(&d[col_lo as usize..col_hi as usize])
+                {
+                    *o = v;
+                }
+                let out = self.rt.execute_f32(&name, &[Arg::F32(&self.tile), Arg::F32(&self.xtile)])?;
+                self.executions += 1;
+                for (ri, a) in acc.iter_mut().enumerate() {
+                    *a = a.min(out[ri] as f64);
+                }
+            }
+            for (ri, a) in acc.into_iter().enumerate() {
+                // clamp the f32 pseudo-inf back to the f64 INF sentinel
+                y[row_lo + ri] = if a > 1.0e30 { INF } else { a };
+            }
+        }
+        Ok(y)
+    }
+
+    /// Coded-shuffle Encode on the accelerator: XOR-fold an `r x m` i32
+    /// segment table (used by the runtime_exec bench to compare against
+    /// the rust encoder; zero-pads `m` up to the artifact width).
+    pub fn xor_fold(&mut self, rows: usize, table: &[i32]) -> Result<Vec<i32>> {
+        let m = table.len() / rows;
+        let entry = self
+            .rt
+            .manifest()
+            .entries
+            .iter()
+            .find(|e| e.name.starts_with(&format!("xor_fold_r{rows}_")))
+            .ok_or_else(|| anyhow::anyhow!("no xor_fold artifact for r={rows}"))?;
+        let width = entry.inputs[0].0[1];
+        let name = entry.name.clone();
+        let mut out = Vec::with_capacity(m);
+        let mut padded = vec![0i32; rows * width];
+        for chunk in 0..m.div_ceil(width) {
+            let lo = chunk * width;
+            let hi = (lo + width).min(m);
+            padded.fill(0);
+            for row in 0..rows {
+                padded[row * width..row * width + (hi - lo)]
+                    .copy_from_slice(&table[row * m + lo..row * m + hi]);
+            }
+            let folded = self.rt.execute_i32(&name, &[Arg::I32(&padded)])?;
+            self.executions += 1;
+            out.extend_from_slice(&folded[..hi - lo]);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::er::er;
+    use crate::mapreduce::reference::pagerank_power_iteration;
+    use crate::util::rng::DetRng;
+    use std::path::Path;
+
+    fn runtime() -> Option<PjrtRuntime> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping PJRT test: artifacts not built");
+            return None;
+        }
+        Some(PjrtRuntime::load(&dir).expect("runtime"))
+    }
+
+    #[test]
+    fn pagerank_rows_match_reference_iteration() {
+        let Some(rt) = runtime() else { return };
+        let mut ex = BlockExecutor::new(&rt).unwrap();
+        let g = er(300, 0.1, &mut DetRng::seed(31));
+        let n = g.n();
+        let damping = 0.15;
+        // one iteration via the artifact path
+        let pi0 = vec![1.0 / n as f64; n];
+        let x: Vec<f32> = (0..n as Vertex)
+            .map(|j| (pi0[j as usize] / g.degree(j).max(1) as f64) as f32)
+            .collect();
+        let rows: Vec<Vertex> = (0..n as Vertex).collect();
+        let y = ex.pagerank_rows(&g, &rows, &x).unwrap();
+        let pi1: Vec<f64> = y
+            .iter()
+            .map(|&s| (1.0 - damping) * s + damping / n as f64)
+            .collect();
+        let want = pagerank_power_iteration(&g, damping, 1);
+        for (a, b) in pi1.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+        assert!(ex.executions > 0);
+    }
+
+    #[test]
+    fn sssp_rows_match_relaxation() {
+        let Some(rt) = runtime() else { return };
+        let mut ex = BlockExecutor::new(&rt).unwrap();
+        let g = er(200, 0.05, &mut DetRng::seed(32));
+        let w = EdgeWeights::Hashed { granularity: 1024 };
+        // current distances: a few seeds finite
+        let mut d = vec![INF; 200];
+        d[0] = 0.0;
+        d[5] = 2.5;
+        let d32: Vec<f32> = d.iter().map(|&v| if v >= INF { 3.0e38 / 4.0 } else { v as f32 }).collect();
+        let rows: Vec<Vertex> = (0..200u32).collect();
+        let y = ex.sssp_rows(&g, &rows, &d32, w).unwrap();
+        // reference
+        for (i, &yi) in y.iter().enumerate() {
+            let mut want = INF;
+            for &j in g.neighbors(i as Vertex) {
+                if d[j as usize] < INF {
+                    want = want.min(d[j as usize] + w.weight(j, i as Vertex));
+                }
+            }
+            if want >= INF {
+                assert!(yi >= 1.0e29, "row {i}: {yi}");
+            } else {
+                assert!((yi - want).abs() < 1e-3, "row {i}: {yi} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn xor_fold_pads_and_chunks() {
+        let Some(rt) = runtime() else { return };
+        let mut ex = BlockExecutor::new(&rt).unwrap();
+        let rows = 3;
+        let m = 1500; // not a multiple of the artifact width
+        let mut t = vec![0i32; rows * m];
+        let mut s = 3u64;
+        for v in t.iter_mut() {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(7);
+            *v = (s >> 33) as i32;
+        }
+        let got = ex.xor_fold(rows, &t).unwrap();
+        assert_eq!(got.len(), m);
+        for c in (0..m).step_by(97) {
+            let want = t[c] ^ t[m + c] ^ t[2 * m + c];
+            assert_eq!(got[c], want);
+        }
+    }
+}

@@ -1,0 +1,207 @@
+//! The PJRT CPU client wrapper: HLO-text loading + compile cache.
+//!
+//! One `PjRtLoadedExecutable` per artifact, compiled lazily on first use
+//! and cached for the life of the runtime (executables are
+//! shape-monomorphic; the block executors pad to the artifact shapes).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::{ArtifactManifest, Dtype};
+
+/// Typed input buffer for an artifact call.
+pub enum Arg<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+/// PJRT runtime: client + manifest + compile cache.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    manifest: ArtifactManifest,
+    // name -> compiled executable (Mutex: xla handles are not Sync; the
+    // engine is single-threaded but tests may share a runtime)
+    cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU runtime over an artifact directory.
+    pub fn load(dir: &std::path::Path) -> Result<Self> {
+        let manifest = ArtifactManifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) the named artifact.
+    fn ensure_compiled(&self, name: &str) -> Result<()> {
+        let mut cache = self.cache.lock().unwrap();
+        if cache.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self
+            .manifest
+            .entry(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?;
+        let path = self.manifest.file_path(entry);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute artifact `name` with `args`; returns the flattened f32
+    /// outputs of the (single-element) result tuple.
+    pub fn execute_f32(&self, name: &str, args: &[Arg<'_>]) -> Result<Vec<f32>> {
+        let lit = self.execute_literal(name, args)?;
+        lit.to_vec::<f32>().map_err(|e| anyhow!("{name}: output to_vec: {e:?}"))
+    }
+
+    /// Execute artifact `name` returning i32 outputs.
+    pub fn execute_i32(&self, name: &str, args: &[Arg<'_>]) -> Result<Vec<i32>> {
+        let lit = self.execute_literal(name, args)?;
+        lit.to_vec::<i32>().map_err(|e| anyhow!("{name}: output to_vec: {e:?}"))
+    }
+
+    fn execute_literal(&self, name: &str, args: &[Arg<'_>]) -> Result<xla::Literal> {
+        self.ensure_compiled(name)?;
+        let entry = self.manifest.entry(name).unwrap();
+        if entry.inputs.len() != args.len() {
+            return Err(anyhow!(
+                "{name}: expected {} inputs, got {}",
+                entry.inputs.len(),
+                args.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (idx, (arg, (shape, dtype))) in args.iter().zip(&entry.inputs).enumerate() {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = match (arg, dtype) {
+                (Arg::F32(data), Dtype::F32) => {
+                    check_len(name, idx, data.len(), shape)?;
+                    reshape(xla::Literal::vec1(data), &dims)?
+                }
+                (Arg::I32(data), Dtype::I32) => {
+                    check_len(name, idx, data.len(), shape)?;
+                    reshape(xla::Literal::vec1(data), &dims)?
+                }
+                _ => return Err(anyhow!("{name}: input {idx} dtype mismatch")),
+            };
+            literals.push(lit);
+        }
+        let cache = self.cache.lock().unwrap();
+        let exe = cache.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("{name}: execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{name}: to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        result.to_tuple1().map_err(|e| anyhow!("{name}: to_tuple1: {e:?}"))
+    }
+}
+
+fn check_len(name: &str, idx: usize, got: usize, shape: &[usize]) -> Result<()> {
+    let want: usize = shape.iter().product();
+    if got != want {
+        return Err(anyhow!(
+            "{name}: input {idx} has {got} elements, shape {shape:?} wants {want}"
+        ));
+    }
+    Ok(())
+}
+
+fn reshape(lit: xla::Literal, dims: &[i64]) -> Result<xla::Literal> {
+    // scalars: vec1 of len 1 reshaped to rank-0
+    lit.reshape(dims).map_err(|e| anyhow!("reshape to {dims:?}: {e:?}")).context("reshape")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn runtime() -> Option<PjrtRuntime> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping PJRT test: artifacts not built");
+            return None;
+        }
+        Some(PjrtRuntime::load(&dir).expect("runtime"))
+    }
+
+    #[test]
+    fn pagerank_block_matches_cpu_matmul() {
+        let Some(rt) = runtime() else { return };
+        let (entry, b) = rt.manifest().best_block("pagerank_block").expect("artifact");
+        let name = entry.name.clone();
+        let mut a = vec![0f32; b * b];
+        let mut x = vec![0f32; b];
+        // deterministic pseudo-random fill
+        let mut s = 1u64;
+        for v in a.iter_mut().chain(x.iter_mut()) {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
+            *v = ((s >> 40) as f32) / (1u32 << 24) as f32;
+        }
+        let y = rt.execute_f32(&name, &[Arg::F32(&a), Arg::F32(&x)]).unwrap();
+        assert_eq!(y.len(), b);
+        for i in (0..b).step_by(37) {
+            let want: f32 = (0..b).map(|j| a[i * b + j] * x[j]).sum();
+            assert!((y[i] - want).abs() < 1e-2 * want.abs().max(1.0), "{} vs {want}", y[i]);
+        }
+    }
+
+    #[test]
+    fn xor_fold_matches_cpu() {
+        let Some(rt) = runtime() else { return };
+        let entry = rt
+            .manifest()
+            .entries
+            .iter()
+            .find(|e| e.name.starts_with("xor_fold_r3"))
+            .expect("xor artifact");
+        let (shape, _) = &entry.inputs[0];
+        let (r, m) = (shape[0], shape[1]);
+        let mut t = vec![0i32; r * m];
+        let mut s = 7u64;
+        for v in t.iter_mut() {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(11);
+            *v = (s >> 33) as i32;
+        }
+        let name = entry.name.clone();
+        let y = rt.execute_i32(&name, &[Arg::I32(&t)]).unwrap();
+        assert_eq!(y.len(), m);
+        for c in (0..m).step_by(101) {
+            let mut want = 0i32;
+            for row in 0..r {
+                want ^= t[row * m + c];
+            }
+            assert_eq!(y[c], want, "column {c}");
+        }
+    }
+
+    #[test]
+    fn input_validation_errors() {
+        let Some(rt) = runtime() else { return };
+        let (entry, b) = rt.manifest().best_block("pagerank_block").expect("artifact");
+        let name = entry.name.clone();
+        let a = vec![0f32; b * b];
+        // wrong arg count
+        assert!(rt.execute_f32(&name, &[Arg::F32(&a)]).is_err());
+        // wrong length
+        let short = vec![0f32; 3];
+        assert!(rt.execute_f32(&name, &[Arg::F32(&a), Arg::F32(&short)]).is_err());
+        // unknown artifact
+        assert!(rt.execute_f32("nope", &[]).is_err());
+    }
+}

@@ -1,0 +1,193 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and the rust runtime: artifact names, files, and input shapes/dtypes.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Dtypes the artifacts use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "float32" => Ok(Dtype::F32),
+            "int32" => Ok(Dtype::I32),
+            other => Err(anyhow!("unsupported dtype in manifest: {other}")),
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+}
+
+/// One AOT artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    /// HLO text file (relative to the manifest's directory).
+    pub file: PathBuf,
+    /// Input specs in call order.
+    pub inputs: Vec<(Vec<usize>, Dtype)>,
+}
+
+impl ArtifactEntry {
+    /// Element count of input `idx`.
+    pub fn input_len(&self, idx: usize) -> usize {
+        self.inputs[idx].0.iter().product()
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts` first)", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (separated out for tests).
+    pub fn parse(dir: &Path, text: &str) -> Result<Self> {
+        let v = Json::parse(text).context("manifest.json parse error")?;
+        let format = v
+            .get("format")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("manifest missing 'format'"))?;
+        if format != "hlo-text" {
+            return Err(anyhow!("unsupported artifact format {format:?}"));
+        }
+        let mut entries = Vec::new();
+        for e in v
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'entries'"))?
+        {
+            let name = e
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("entry missing name"))?
+                .to_string();
+            let file = e
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("entry {name}: missing file"))?;
+            let mut inputs = Vec::new();
+            for inp in e
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("entry {name}: missing inputs"))?
+            {
+                let shape: Vec<usize> = inp
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("entry {name}: input missing shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                    .collect::<Result<_>>()?;
+                let dtype = Dtype::parse(
+                    inp.get("dtype")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("entry {name}: input missing dtype"))?,
+                )?;
+                inputs.push((shape, dtype));
+            }
+            entries.push(ArtifactEntry { name, file: PathBuf::from(file), inputs });
+        }
+        Ok(Self { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Find an entry by exact name.
+    pub fn entry(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Find the `pagerank_block_<B>` entry with the largest tile `B`.
+    pub fn best_block(&self, prefix: &str) -> Option<(&ArtifactEntry, usize)> {
+        self.entries
+            .iter()
+            .filter_map(|e| {
+                e.name
+                    .strip_prefix(prefix)
+                    .and_then(|suffix| suffix.strip_prefix('_'))
+                    .and_then(|b| b.parse::<usize>().ok())
+                    .map(|b| (e, b))
+            })
+            .max_by_key(|&(_, b)| b)
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn file_path(&self, e: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&e.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text",
+      "entries": [
+        {"name": "pagerank_block_256", "file": "pagerank_block_256.hlo.txt",
+         "inputs": [{"shape": [256, 256], "dtype": "float32"},
+                    {"shape": [256, 1], "dtype": "float32"}]},
+        {"name": "pagerank_block_128", "file": "pagerank_block_128.hlo.txt",
+         "inputs": [{"shape": [128, 128], "dtype": "float32"},
+                    {"shape": [128, 1], "dtype": "float32"}]},
+        {"name": "xor_fold_r3_m1024", "file": "xor_fold_r3_m1024.hlo.txt",
+         "inputs": [{"shape": [3, 1024], "dtype": "int32"}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = ArtifactManifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 3);
+        let e = m.entry("pagerank_block_256").unwrap();
+        assert_eq!(e.inputs[0].0, vec![256, 256]);
+        assert_eq!(e.inputs[0].1, Dtype::F32);
+        assert_eq!(e.input_len(0), 65536);
+        assert_eq!(
+            m.file_path(e),
+            PathBuf::from("/tmp/a/pagerank_block_256.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn best_block_picks_largest() {
+        let m = ArtifactManifest::parse(Path::new("."), SAMPLE).unwrap();
+        let (e, b) = m.best_block("pagerank_block").unwrap();
+        assert_eq!(b, 256);
+        assert_eq!(e.name, "pagerank_block_256");
+        assert!(m.best_block("sssp_block").is_none());
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let bad = r#"{"format": "proto", "entries": []}"#;
+        assert!(ArtifactManifest::parse(Path::new("."), bad).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_dtype() {
+        let bad = r#"{"format": "hlo-text", "entries": [
+          {"name": "x", "file": "x.hlo.txt",
+           "inputs": [{"shape": [2], "dtype": "float64"}]}]}"#;
+        assert!(ArtifactManifest::parse(Path::new("."), bad).is_err());
+    }
+}

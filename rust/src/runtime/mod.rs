@@ -1,0 +1,21 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! The request path is pure rust: `make artifacts` runs Python **once** at
+//! build time (`python/compile/aot.py` lowers the L2 model + L1 Pallas
+//! kernels to HLO text); this module loads the text through the `xla`
+//! crate (`HloModuleProto::from_text_file` → `client.compile` →
+//! `execute`) and exposes typed entry points for the coordinator's
+//! compute phases.
+//!
+//! * [`manifest`] — parse `artifacts/manifest.json` (names, files, shapes).
+//! * [`client`] — the PJRT CPU client with a compile cache.
+//! * [`block`] — tiled block executors: PageRank SpMV, SSSP min-plus,
+//!   coded-shuffle XOR fold.
+
+pub mod block;
+pub mod client;
+pub mod manifest;
+
+pub use block::BlockExecutor;
+pub use client::PjrtRuntime;
+pub use manifest::{ArtifactEntry, ArtifactManifest};

@@ -1,0 +1,279 @@
+//! Combiner-augmented Shuffle (paper §VII future work; cf. [18]
+//! "Compressed Coded Distributed Computing").
+//!
+//! Pregel-style systems pre-aggregate ("combine") the IVs a server owes a
+//! single Reducer before transmitting. Our programs' Reduce folds are
+//! commutative monoids (sum for PageRank, min for SSSP), so all IVs
+//! `v_{i,j}` with `j` in one Mapped batch `B_t` collapse into a single
+//! *combined IV* keyed `(i, t)`:
+//!
+//! `u_{i,t} = fold_{j ∈ B_t ∩ N(i)} g_{i,j}(w_j)`.
+//!
+//! The coded scheme applies *on top*: within a multicast group `S`, row
+//! `k`'s entries are the `(i, t)` pairs with `i ∈ R_k`, `servers(t) =
+//! S\{k}`, and a non-empty neighborhood intersection. Every member of
+//! `S\{k}` Maps batch `t`, so it can recompute `u_{i,t}` locally and the
+//! XOR alignment goes through unchanged — the gains of combining and of
+//! coding multiply, which is [18]'s headline result.
+//!
+//! Keys are packed as `(reducer, batch-index)` so the segment/XOR
+//! machinery from [`super::coded`]/[`super::decoder`] is reused verbatim.
+
+use std::collections::HashMap;
+
+use crate::allocation::Allocation;
+use crate::graph::csr::{Csr, Vertex};
+use crate::mapreduce::program::VertexProgram;
+
+use super::load::ShuffleLoad;
+use super::plan::GroupPlan;
+
+/// Build combiner-granularity group plans: row entries are `(i, t)` pairs
+/// (`t` = batch index, stored in the mapper slot), canonical order
+/// `(t asc, i asc)`.
+pub fn build_combined_group_plans(g: &Csr, alloc: &Allocation) -> Vec<GroupPlan> {
+    let r = alloc.r;
+    let mut index: HashMap<Vec<u8>, usize> = HashMap::new();
+    let mut plans: Vec<GroupPlan> = Vec::new();
+    let mut s_buf: Vec<u8> = Vec::with_capacity(r + 1);
+    for (t, batch) in alloc.batches.iter().enumerate() {
+        // reducers with at least one edge into this batch, deduped
+        let mut seen: Vec<Vertex> = Vec::new();
+        for j in batch.vertices() {
+            for &i in g.neighbors(j) {
+                let k = alloc.reduce_owner[i as usize];
+                if batch.servers.binary_search(&k).is_ok() {
+                    continue;
+                }
+                seen.push(i);
+            }
+        }
+        seen.sort_unstable();
+        seen.dedup();
+        for i in seen {
+            let k = alloc.reduce_owner[i as usize];
+            s_buf.clear();
+            let ins = batch.servers.partition_point(|&x| x < k);
+            s_buf.extend_from_slice(&batch.servers[..ins]);
+            s_buf.push(k);
+            s_buf.extend_from_slice(&batch.servers[ins..]);
+            let plan_idx = match index.get(&s_buf) {
+                Some(&idx) => idx,
+                None => {
+                    let idx = plans.len();
+                    index.insert(s_buf.clone(), idx);
+                    plans.push(GroupPlan {
+                        servers: s_buf.clone(),
+                        rows: vec![Vec::new(); r + 1],
+                    });
+                    idx
+                }
+            };
+            // mapper slot carries the batch index
+            plans[plan_idx].rows[ins].push((i, t as Vertex));
+        }
+    }
+    // canonical (t asc, i asc) row order: entries were appended in
+    // (t asc, i asc) already because batches are visited ascending and
+    // `seen` is sorted per batch.
+    plans.sort_by(|a, b| a.servers.cmp(&b.servers));
+    plans
+}
+
+/// Evaluate a combined IV `u_{i,t}`: fold the program's Map over the
+/// batch/neighborhood intersection. Bit-deterministic: iteration is in
+/// ascending `j`, so every server derives identical bits.
+pub fn combined_value(
+    g: &Csr,
+    alloc: &Allocation,
+    prog: &dyn VertexProgram,
+    state: &[f64],
+    i: Vertex,
+    t: usize,
+) -> f64 {
+    let batch = &alloc.batches[t];
+    let mut acc = prog.identity();
+    // iterate the smaller side: N(i) within the batch range
+    for &j in g.neighbors_in_range(i, batch.start, batch.end) {
+        acc = prog.combine(acc, prog.map(i, j, state[j as usize], g));
+    }
+    acc
+}
+
+/// Uncoded-with-combiners transfer plan: one combined IV per
+/// (batch, reducer-with-edges), unicast from the batch's canonical mapper.
+pub struct CombinedTransfer {
+    pub sender: u8,
+    pub receiver: u8,
+    /// (reducer, batch-index) pairs.
+    pub ivs: Vec<(Vertex, u32)>,
+}
+
+/// Plan uncoded combined transfers.
+pub fn plan_uncoded_combined(g: &Csr, alloc: &Allocation) -> Vec<CombinedTransfer> {
+    let mut by_pair: HashMap<(u8, u8), Vec<(Vertex, u32)>> = HashMap::new();
+    for (t, batch) in alloc.batches.iter().enumerate() {
+        let sender = batch.servers[0];
+        let mut seen: Vec<Vertex> = Vec::new();
+        for j in batch.vertices() {
+            for &i in g.neighbors(j) {
+                if batch.servers.binary_search(&alloc.reduce_owner[i as usize]).is_err() {
+                    seen.push(i);
+                }
+            }
+        }
+        seen.sort_unstable();
+        seen.dedup();
+        for i in seen {
+            by_pair
+                .entry((sender, alloc.reduce_owner[i as usize]))
+                .or_default()
+                .push((i, t as u32));
+        }
+    }
+    let mut out: Vec<CombinedTransfer> = by_pair
+        .into_iter()
+        .map(|((sender, receiver), ivs)| CombinedTransfer { sender, receiver, ivs })
+        .collect();
+    out.sort_by_key(|t| (t.sender, t.receiver));
+    out
+}
+
+/// Normalized loads `(uncoded_combined, coded_combined)` — the ablation
+/// counterpart of [`crate::coordinator::measure_loads`].
+pub fn measure_combined_loads(g: &Csr, alloc: &Allocation) -> (f64, f64) {
+    let n = g.n();
+    let r = alloc.r;
+    let mut unc = ShuffleLoad::default();
+    for t in plan_uncoded_combined(g, alloc) {
+        unc.add_uncoded(t.ivs.len());
+    }
+    let mut cod = ShuffleLoad::default();
+    for plan in build_combined_group_plans(g, alloc) {
+        for s_idx in 0..plan.servers.len() {
+            let q = plan
+                .rows
+                .iter()
+                .enumerate()
+                .filter(|&(i, _)| i != s_idx)
+                .map(|(_, row)| row.len())
+                .max()
+                .unwrap_or(0);
+            if q > 0 {
+                cod.add_coded(q, r);
+            }
+        }
+    }
+    (unc.normalized(n), cod.normalized(n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::measure_loads;
+    use crate::graph::er::er;
+    use crate::mapreduce::PageRank;
+    use crate::shuffle::coded::encode_group;
+    use crate::shuffle::decoder::recover_group;
+    use crate::util::rng::DetRng;
+
+    #[test]
+    fn combined_plans_dedupe_edges() {
+        let g = er(120, 0.3, &mut DetRng::seed(1)); // dense: many edges per (i,t)
+        let alloc = Allocation::er_scheme(120, 4, 2);
+        let plain: usize = crate::shuffle::plan::build_group_plans(&g, &alloc)
+            .iter()
+            .map(|p| p.total_ivs())
+            .sum();
+        let combined: usize = build_combined_group_plans(&g, &alloc)
+            .iter()
+            .map(|p| p.total_ivs())
+            .sum();
+        assert!(combined < plain / 2, "combining must collapse: {combined} vs {plain}");
+        // upper bound: every (reducer, batch) pair at most once
+        assert!(combined <= 120 * alloc.batches.len());
+    }
+
+    #[test]
+    fn combined_value_is_batch_partial_fold() {
+        let g = er(60, 0.2, &mut DetRng::seed(2));
+        let alloc = Allocation::er_scheme(60, 3, 2);
+        let prog = PageRank::default();
+        let state: Vec<f64> = (0..60).map(|_| 1.0 / 60.0).collect();
+        for (t, batch) in alloc.batches.iter().enumerate() {
+            for i in 0..60u32 {
+                let want: f64 = g
+                    .neighbors(i)
+                    .iter()
+                    .filter(|&&j| batch.contains(j))
+                    .map(|&j| state[j as usize] / g.degree(j) as f64)
+                    .sum();
+                let got = combined_value(&g, &alloc, &prog, &state, i, t);
+                assert!((got - want).abs() < 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn coded_combined_roundtrip_bit_exact() {
+        let g = er(90, 0.25, &mut DetRng::seed(3));
+        let alloc = Allocation::er_scheme(90, 4, 2);
+        let prog = PageRank::default();
+        let state: Vec<f64> = (0..90).map(|v| (v as f64 + 1.0) / 90.0).collect();
+        let r = alloc.r;
+        let value = |i: Vertex, t: Vertex| {
+            combined_value(&g, &alloc, &prog, &state, i, t as usize).to_bits()
+        };
+        for plan in build_combined_group_plans(&g, &alloc) {
+            let msgs = encode_group(&plan, &value, r);
+            for (idx, &k) in plan.servers.iter().enumerate() {
+                let got = recover_group(&plan, k, &msgs, &value, r);
+                assert_eq!(got.len(), plan.rows[idx].len());
+                for (riv, &(i, t)) in got.iter().zip(&plan.rows[idx]) {
+                    assert_eq!(riv.bits, value(i, t), "({i},{t})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn combining_and_coding_gains_multiply() {
+        // dense graph: combiners shrink uncoded load ~(pg)x, coding adds ~r
+        let g = er(200, 0.4, &mut DetRng::seed(4));
+        let alloc = Allocation::er_scheme(200, 5, 2);
+        let (unc, cod) = measure_loads(&g, &alloc);
+        let (unc_c, cod_c) = measure_combined_loads(&g, &alloc);
+        assert!(unc_c < unc / 3.0, "combiners: {unc_c} vs {unc}");
+        assert!(cod_c < unc_c, "coding on top: {cod_c} vs {unc_c}");
+        let gain_vs_plain = unc / cod_c;
+        assert!(
+            gain_vs_plain > 2.0 * (unc / cod),
+            "multiplicative gain expected: total {gain_vs_plain:.1} vs coding-only {:.1}",
+            unc / cod
+        );
+    }
+
+    #[test]
+    fn sparse_graph_combiners_no_op() {
+        // when p*g << 1, (i,t) pairs mostly carry a single edge: loads match
+        let g = er(300, 0.01, &mut DetRng::seed(5));
+        let alloc = Allocation::er_scheme(300, 5, 2);
+        let (unc, _) = measure_loads(&g, &alloc);
+        let (unc_c, _) = measure_combined_loads(&g, &alloc);
+        assert!(unc_c <= unc);
+        assert!(unc_c > unc * 0.8, "sparse: combining buys little ({unc_c} vs {unc})");
+    }
+
+    #[test]
+    fn transfers_cover_all_pairs() {
+        let g = er(100, 0.2, &mut DetRng::seed(6));
+        let alloc = Allocation::er_scheme(100, 4, 2);
+        let planned: usize = build_combined_group_plans(&g, &alloc)
+            .iter()
+            .map(|p| p.total_ivs())
+            .sum();
+        let transferred: usize =
+            plan_uncoded_combined(&g, &alloc).iter().map(|t| t.ivs.len()).sum();
+        assert_eq!(planned, transferred);
+    }
+}

@@ -1,0 +1,207 @@
+//! The coded Shuffle decoder (receiver side of paper §IV-A).
+//!
+//! Receiver `k` processes the coded message of sender `s` as follows: for
+//! each column `c` within its own row length, XOR out of the column every
+//! segment belonging to the *other* rows `k' ∈ S\{s, k}` — receiver `k`
+//! Maps the batch `S\{k'}` those IVs come from, so it recomputes them
+//! locally, in the same canonical order the sender used. What remains is
+//! the sender-`s` segment of the `c`-th IV the receiver needs. Collecting
+//! segments from all `r` senders reassembles each needed IV exactly.
+
+use super::coded::{segment_index, CodedMessage};
+use super::plan::GroupPlan;
+use super::segments::{place_seg, seg_bytes, seg_mask, seg_of};
+use crate::graph::csr::Vertex;
+
+/// A fully reassembled intermediate value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RecoveredIv {
+    pub reducer: Vertex,
+    pub mapper: Vertex,
+    pub bits: u64,
+}
+
+/// Decode one sender's message at one receiver: returns the sender's
+/// segment of each IV in the receiver's row (index-aligned with
+/// `plan.rows[receiver_idx]`).
+///
+/// `vals` must contain the locally recomputable row values for every row
+/// other than the receiver's own (the receiver's entry is ignored); use
+/// [`super::coded::row_values`] with the receiver's Map state.
+pub fn decode_from_sender(
+    plan: &GroupPlan,
+    receiver_idx: usize,
+    msg: &CodedMessage,
+    vals: &[Vec<u64>],
+    r: usize,
+) -> Vec<u64> {
+    assert_ne!(msg.sender_idx, receiver_idx, "sender cannot decode itself");
+    let sb = seg_bytes(r);
+    let mask = seg_mask(sb);
+    let my_len = plan.rows[receiver_idx].len();
+    // row-major accumulation (§Perf): stream each foreign row through the
+    // accumulator instead of walking all rows per column — sequential
+    // loads, and the seg_of shift is loop-invariant per row.
+    let mut out: Vec<u64> = msg.columns[..my_len].to_vec();
+    for (row_idx, rvals) in vals.iter().enumerate() {
+        if row_idx == receiver_idx || row_idx == msg.sender_idx {
+            continue;
+        }
+        let seg_idx = segment_index(msg.sender_idx, row_idx);
+        let upto = rvals.len().min(my_len);
+        for (o, &v) in out[..upto].iter_mut().zip(&rvals[..upto]) {
+            *o ^= seg_of(v, seg_idx, sb);
+        }
+    }
+    for o in &mut out {
+        *o &= mask;
+    }
+    out
+}
+
+/// Full group recovery at one receiver: decode every sender's message and
+/// reassemble the receiver's needed IVs bit-exactly.
+///
+/// `local_value(i, j)` computes Map outputs for vertices the receiver Maps
+/// (used to cancel other rows); `msgs` are all `r` messages addressed to
+/// this receiver (any order).
+pub fn recover_group<F: Fn(Vertex, Vertex) -> u64>(
+    plan: &GroupPlan,
+    receiver: u8,
+    msgs: &[CodedMessage],
+    local_value: &F,
+    r: usize,
+) -> Vec<RecoveredIv> {
+    let receiver_idx = plan
+        .member_index(receiver)
+        .expect("receiver not in group");
+    // Recompute the other rows' values once (shared across senders).
+    let vals: Vec<Vec<u64>> = plan
+        .rows
+        .iter()
+        .enumerate()
+        .map(|(idx, row)| {
+            if idx == receiver_idx {
+                Vec::new() // own row: unknown, never read
+            } else {
+                row.iter().map(|&(i, j)| local_value(i, j)).collect()
+            }
+        })
+        .collect();
+    recover_group_shared(plan, receiver_idx, msgs, &vals, r)
+}
+
+/// [`recover_group`] with the row values already evaluated (the engine's
+/// fast path: encode already computed `row_values` for the whole group, so
+/// every receiver shares them instead of re-deriving `r-1` rows each —
+/// a §Perf optimization worth ~r× on the decode hot path).
+///
+/// `vals[receiver_idx]` may be populated or empty; it is never read.
+pub fn recover_group_shared(
+    plan: &GroupPlan,
+    receiver_idx: usize,
+    msgs: &[CodedMessage],
+    vals: &[Vec<u64>],
+    r: usize,
+) -> Vec<RecoveredIv> {
+    let sb = seg_bytes(r);
+    let my_row = &plan.rows[receiver_idx];
+    let mut bits = vec![0u64; my_row.len()];
+    let mut seen = vec![0usize; my_row.len()];
+    for msg in msgs {
+        if msg.sender_idx == receiver_idx {
+            continue; // own transmission carries nothing for us
+        }
+        let segs = decode_from_sender(plan, receiver_idx, msg, vals, r);
+        // the sender's segment index within *our* row:
+        let seg_idx = segment_index(msg.sender_idx, receiver_idx);
+        for (c, &s) in segs.iter().enumerate() {
+            bits[c] = place_seg(bits[c], s, seg_idx, sb);
+            seen[c] += 1;
+        }
+    }
+    debug_assert!(seen.iter().all(|&s| s == r || my_row.is_empty()));
+    my_row
+        .iter()
+        .zip(bits)
+        .map(|(&(i, j), b)| RecoveredIv { reducer: i, mapper: j, bits: b })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allocation::Allocation;
+    use crate::graph::csr::Csr;
+    use crate::graph::er::er;
+    use crate::shuffle::coded::encode_group;
+    use crate::shuffle::plan::build_group_plans;
+    use crate::util::rng::DetRng;
+
+    /// End-to-end: encode with a value oracle, decode at every member,
+    /// check bit-exact recovery of exactly the needed IVs.
+    fn roundtrip(g: &Csr, alloc: &Allocation) {
+        let r = alloc.r;
+        let value = |i: Vertex, j: Vertex| {
+            // arbitrary but deterministic full-width bits
+            let x = ((i as u64) << 32) ^ j as u64;
+            x.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0xDEAD_BEEF
+        };
+        for plan in build_group_plans(g, alloc) {
+            let msgs = encode_group(&plan, &value, r);
+            for (idx, &k) in plan.servers.iter().enumerate() {
+                let got = recover_group(&plan, k, &msgs, &value, r);
+                assert_eq!(got.len(), plan.rows[idx].len());
+                for (riv, &(i, j)) in got.iter().zip(&plan.rows[idx]) {
+                    assert_eq!((riv.reducer, riv.mapper), (i, j));
+                    assert_eq!(riv.bits, value(i, j), "IV ({i},{j}) corrupted");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fig3_roundtrip() {
+        let g = Csr::from_edges(6, &[(0, 4), (1, 5), (2, 3)]);
+        roundtrip(&g, &Allocation::er_scheme(6, 3, 2));
+    }
+
+    #[test]
+    fn er_roundtrip_various_r() {
+        let g = er(60, 0.2, &mut DetRng::seed(11));
+        for r in 1..=4 {
+            roundtrip(&g, &Allocation::er_scheme(60, 4, r));
+        }
+    }
+
+    #[test]
+    fn er_roundtrip_k6_r3() {
+        let g = er(120, 0.1, &mut DetRng::seed(12));
+        roundtrip(&g, &Allocation::er_scheme(120, 6, 3));
+    }
+
+    #[test]
+    fn bipartite_alloc_roundtrip() {
+        let g = crate::graph::bipartite::rb(40, 40, 0.2, &mut DetRng::seed(13));
+        roundtrip(&g, &Allocation::bipartite_scheme(40, 40, 6, 2));
+    }
+
+    #[test]
+    fn uneven_sizes_roundtrip() {
+        // n not divisible by C(K,r) or K
+        let g = er(97, 0.15, &mut DetRng::seed(14));
+        roundtrip(&g, &Allocation::er_scheme(97, 5, 2));
+        roundtrip(&g, &Allocation::er_scheme(97, 5, 3));
+    }
+
+    #[test]
+    #[should_panic(expected = "sender cannot decode itself")]
+    fn self_decode_rejected() {
+        let g = Csr::from_edges(6, &[(0, 4)]);
+        let alloc = Allocation::er_scheme(6, 3, 2);
+        let plan = &build_group_plans(&g, &alloc)[0];
+        let msgs = encode_group(plan, &|_, _| 1, 2);
+        let vals = crate::shuffle::coded::row_values(plan, &|_, _| 1);
+        decode_from_sender(plan, 0, &msgs[0], &vals, 2);
+    }
+}

@@ -1,0 +1,124 @@
+//! Communication-load accounting.
+//!
+//! Two parallel books are kept:
+//!
+//! * **Paper units** — bits counted exactly as Definition 2 prescribes:
+//!   an uncoded IV costs `T = 64` bits, a coded column costs `T/r` bits
+//!   (kept as an exact rational via `f64`; the paper's normalized load is
+//!   `Σ c_k / (n² T)`).
+//! * **Wire units** — the bytes a real network would carry: padded
+//!   segments (`ceil(8/r)` bytes per column) plus a fixed per-message
+//!   header. The bus simulator charges these.
+
+
+/// Per-message framing overhead on the wire (src, group id, phase, len —
+/// comparable to the pickled tuple headers of the paper's mpi4py code).
+pub const HEADER_BYTES: usize = 16;
+
+/// IV width: `T` bits (f64 state).
+pub const T_BITS: f64 = 64.0;
+
+/// Accumulated Shuffle traffic.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ShuffleLoad {
+    /// Paper-units bits (Definition 2 numerator `Σ c_k`).
+    pub paper_bits: f64,
+    /// Actual payload bytes (padded segments).
+    pub wire_payload_bytes: usize,
+    /// Number of bus transmissions.
+    pub messages: usize,
+}
+
+impl ShuffleLoad {
+    /// Record a coded multicast of `columns` XOR columns at load `r`.
+    pub fn add_coded(&mut self, columns: usize, r: usize) {
+        self.paper_bits += columns as f64 * T_BITS / r as f64;
+        self.wire_payload_bytes += columns * crate::shuffle::segments::seg_bytes(r);
+        self.messages += 1;
+    }
+
+    /// Record an uncoded unicast of `ivs` full intermediate values.
+    pub fn add_uncoded(&mut self, ivs: usize) {
+        self.paper_bits += ivs as f64 * T_BITS;
+        self.wire_payload_bytes += ivs * 8;
+        self.messages += 1;
+    }
+
+    /// Merge another tally (e.g. across groups).
+    pub fn merge(&mut self, other: &ShuffleLoad) {
+        self.paper_bits += other.paper_bits;
+        self.wire_payload_bytes += other.wire_payload_bytes;
+        self.messages += other.messages;
+    }
+
+    /// The paper's normalized communication load `L = Σ c_k / (n² T)`.
+    pub fn normalized(&self, n: usize) -> f64 {
+        self.paper_bits / (n as f64 * n as f64 * T_BITS)
+    }
+
+    /// Total bytes including per-message headers (what the bus charges).
+    pub fn wire_bytes_with_headers(&self) -> usize {
+        self.wire_payload_bytes + self.messages * HEADER_BYTES
+    }
+}
+
+/// Normalized load from raw paper-bits (convenience).
+pub fn normalized(paper_bits: f64, n: usize) -> f64 {
+    paper_bits / (n as f64 * n as f64 * T_BITS)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coded_column_costs_t_over_r() {
+        let mut l = ShuffleLoad::default();
+        l.add_coded(3, 2); // 3 columns at T/2 = 32 bits
+        assert_eq!(l.paper_bits, 96.0);
+        assert_eq!(l.wire_payload_bytes, 12); // 3 * 4
+        assert_eq!(l.messages, 1);
+    }
+
+    #[test]
+    fn uncoded_iv_costs_t() {
+        let mut l = ShuffleLoad::default();
+        l.add_uncoded(6);
+        assert_eq!(l.paper_bits, 384.0);
+        assert_eq!(l.wire_payload_bytes, 48);
+    }
+
+    #[test]
+    fn fig3_loads() {
+        // Paper's example: uncoded 6/36, coded 3/36 (n = 6).
+        let mut unc = ShuffleLoad::default();
+        for _ in 0..3 {
+            unc.add_uncoded(2); // three servers unicast 2 IVs each
+        }
+        assert!((unc.normalized(6) - 6.0 / 36.0).abs() < 1e-12);
+        let mut cod = ShuffleLoad::default();
+        for _ in 0..3 {
+            cod.add_coded(2, 2); // three senders, 2 columns each, r = 2
+        }
+        assert!((cod.normalized(6) - 3.0 / 36.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = ShuffleLoad::default();
+        a.add_coded(2, 2);
+        let mut b = ShuffleLoad::default();
+        b.add_uncoded(1);
+        a.merge(&b);
+        assert_eq!(a.messages, 2);
+        assert_eq!(a.paper_bits, 64.0 + 64.0);
+    }
+
+    #[test]
+    fn odd_r_padding_charged_on_wire_only() {
+        let mut l = ShuffleLoad::default();
+        l.add_coded(1, 3); // paper: 64/3 bits; wire: 3 bytes = 24 bits
+        assert!((l.paper_bits - 64.0 / 3.0).abs() < 1e-12);
+        assert_eq!(l.wire_payload_bytes, 3);
+    }
+}

@@ -1,0 +1,26 @@
+//! The Shuffle phase: the paper's coded scheme and the uncoded baseline.
+//!
+//! * [`plan`] — multicast-group planning: for every (r+1)-subset `S` of
+//!   servers, the per-member IV lists `Z^k_{S\{k}}` (paper eq. (14)).
+//! * [`segments`] — splitting a `T`-bit IV into `r` segments and
+//!   reassembling (paper §IV-A "each intermediate value is evenly split
+//!   into r segments").
+//! * [`coded`] — the encoder: per-sender segment tables and column XORs.
+//! * [`decoder`] — the receiver side: cancel locally-computable segments,
+//!   recover your own, reassemble IVs.
+//! * [`uncoded`] — the baseline: unicast every needed IV.
+//! * [`load`] — communication-load accounting in the paper's normalized
+//!   units plus raw wire bytes.
+
+pub mod coded;
+pub mod combined;
+pub mod decoder;
+pub mod load;
+pub mod plan;
+pub mod segments;
+pub mod uncoded;
+
+pub use coded::{encode_group, encode_sender, CodedMessage};
+pub use decoder::{decode_from_sender, recover_group, RecoveredIv};
+pub use load::{normalized, ShuffleLoad};
+pub use plan::{build_group_plans, GroupPlan};

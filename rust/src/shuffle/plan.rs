@@ -1,0 +1,230 @@
+//! Multicast-group planning (paper §IV-A, eq. (14)).
+//!
+//! For every needed IV `v_{i,j}` (Reducer `i` at server `k`, Mapper `j`
+//! not Mapped by `k`), the batch `T = servers(batch(j))` and `k` determine
+//! the unique multicast group `S = T ∪ {k}` of size `r + 1`. Grouping all
+//! needed IVs this way yields, per group, the sets
+//! `Z^k_{S\{k}} = {v_{i,j} : (i,j) ∈ E, i ∈ R_k, j ∈ ∩_{k'∈S\{k}} M_{k'}}`,
+//! one *row* per member — the inputs to the coded encoder.
+//!
+//! Row order is canonical (batches ascending, then `j`, then `i`): encoder
+//! and every decoder derive identical tables independently. The plan is
+//! graph-dependent but state-independent, so it is built once during
+//! pre-processing (as in the paper's EC2 setup) and reused every iteration.
+
+use std::collections::HashMap;
+
+use crate::allocation::Allocation;
+use crate::graph::csr::{Csr, Vertex};
+
+/// One multicast group `S` with its per-member needed-IV rows.
+#[derive(Clone, Debug)]
+pub struct GroupPlan {
+    /// Sorted member servers `S` (`|S| = r + 1`).
+    pub servers: Vec<u8>,
+    /// `rows[idx]` = the IVs needed by `servers[idx]` and exclusively
+    /// Mappable by the other members: canonical (reducer, mapper) pairs.
+    pub rows: Vec<Vec<(Vertex, Vertex)>>,
+}
+
+impl GroupPlan {
+    /// Index of server `k` within `S`.
+    #[inline]
+    pub fn member_index(&self, k: u8) -> Option<usize> {
+        self.servers.binary_search(&k).ok()
+    }
+
+    /// Longest row length = number of coded columns any sender may emit.
+    pub fn max_row_len(&self) -> usize {
+        self.rows.iter().map(|r| r.len()).max().unwrap_or(0)
+    }
+
+    /// Total IVs carried by this group.
+    pub fn total_ivs(&self) -> usize {
+        self.rows.iter().map(|r| r.len()).sum()
+    }
+}
+
+/// Build all (non-empty) group plans for `(g, alloc)`.
+///
+/// Runs in `O(Σ_j deg(j)) = O(m)` plus hash-map overhead; groups with no
+/// needed IVs are omitted. Groups are returned sorted by `S` for
+/// deterministic iteration order.
+pub fn build_group_plans(g: &Csr, alloc: &Allocation) -> Vec<GroupPlan> {
+    let r = alloc.r;
+    let k_total = alloc.k;
+    let mut index: HashMap<Vec<u8>, usize> = HashMap::new();
+    let mut plans: Vec<GroupPlan> = Vec::new();
+    // Per-edge hashing dominated the original implementation (§Perf):
+    // instead, resolve (batch, reducer) -> (plan, row) once per pair and
+    // cache it in a flat per-batch table; the edge loop is then a plain
+    // indexed push. `slot[k]` = plan row for reducer k of this batch
+    // (usize::MAX = unresolved, usize::MAX-1 = local/skip).
+    const UNRESOLVED: usize = usize::MAX;
+    const LOCAL: usize = usize::MAX - 1;
+    let mut slot = vec![(UNRESOLVED, 0usize); k_total];
+    let mut s_buf: Vec<u8> = Vec::with_capacity(r + 1);
+    for batch in &alloc.batches {
+        let t_servers = &batch.servers;
+        for s in slot.iter_mut() {
+            *s = (UNRESOLVED, 0);
+        }
+        for j in batch.vertices() {
+            for &i in g.neighbors(j) {
+                let k = alloc.reduce_owner[i as usize] as usize;
+                let (plan_idx, member) = {
+                    let cached = slot[k];
+                    if cached.0 == LOCAL {
+                        continue;
+                    }
+                    if cached.0 != UNRESOLVED {
+                        cached
+                    } else {
+                        // resolve once per (batch, k)
+                        if t_servers.binary_search(&(k as u8)).is_ok() {
+                            slot[k] = (LOCAL, 0);
+                            continue;
+                        }
+                        s_buf.clear();
+                        let ins = t_servers.partition_point(|&x| x < k as u8);
+                        s_buf.extend_from_slice(&t_servers[..ins]);
+                        s_buf.push(k as u8);
+                        s_buf.extend_from_slice(&t_servers[ins..]);
+                        let plan_idx = match index.get(&s_buf) {
+                            Some(&idx) => idx,
+                            None => {
+                                let idx = plans.len();
+                                index.insert(s_buf.clone(), idx);
+                                plans.push(GroupPlan {
+                                    servers: s_buf.clone(),
+                                    rows: vec![Vec::new(); r + 1],
+                                });
+                                idx
+                            }
+                        };
+                        slot[k] = (plan_idx, ins);
+                        (plan_idx, ins)
+                    }
+                };
+                debug_assert_eq!(plans[plan_idx].servers[member], k as u8);
+                plans[plan_idx].rows[member].push((i, j));
+            }
+        }
+    }
+    plans.sort_by(|a, b| a.servers.cmp(&b.servers));
+    plans
+}
+
+/// Count of *all* needed IVs (the uncoded traffic in IV units) — equals
+/// the sum of all plan rows; exposed for cross-checking the two schemes.
+pub fn total_needed_ivs(g: &Csr, alloc: &Allocation) -> usize {
+    let mut count = 0usize;
+    for batch in &alloc.batches {
+        for j in batch.vertices() {
+            for &i in g.neighbors(j) {
+                let k = alloc.reduce_owner[i as usize];
+                if batch.servers.binary_search(&k).is_err() {
+                    count += 1;
+                }
+            }
+        }
+    }
+    count
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::er::er;
+    use crate::util::rng::DetRng;
+
+    /// The paper's Fig 3 example graph (1-based ids 1..6 -> 0-based 0..5):
+    /// edges {1,5},{2,6},{3,4} -> {0,4},{1,5},{2,3}.
+    fn fig3_graph() -> Csr {
+        Csr::from_edges(6, &[(0, 4), (1, 5), (2, 3)])
+    }
+
+    #[test]
+    fn fig3_single_group_with_expected_rows() {
+        let g = fig3_graph();
+        let alloc = Allocation::er_scheme(6, 3, 2);
+        let plans = build_group_plans(&g, &alloc);
+        // only one (r+1)-subset exists for K=3, r=2: S = {0,1,2}
+        assert_eq!(plans.len(), 1);
+        let p = &plans[0];
+        assert_eq!(p.servers, vec![0, 1, 2]);
+        // Z^1_{{2,3}} = {v_{1,5}, v_{2,6}} (paper) -> 0-based server 0
+        // needs (0,4),(1,5)
+        assert_eq!(p.rows[0], vec![(0, 4), (1, 5)]);
+        // server 1 needs v_{3,4}, v_{4,3} -> (2,3),(3,2)
+        assert_eq!(p.rows[1], vec![(3, 2), (2, 3)]);
+        // server 2 needs v_{5,1}, v_{6,2} -> (4,0),(5,1)
+        assert_eq!(p.rows[2], vec![(4, 0), (5, 1)]);
+    }
+
+    #[test]
+    fn rows_cover_exactly_needed_ivs() {
+        let g = er(120, 0.15, &mut DetRng::seed(5));
+        for r in 1..5 {
+            let alloc = Allocation::er_scheme(120, 5, r);
+            let plans = build_group_plans(&g, &alloc);
+            let planned: usize = plans.iter().map(|p| p.total_ivs()).sum();
+            assert_eq!(planned, total_needed_ivs(&g, &alloc), "r={r}");
+        }
+    }
+
+    #[test]
+    fn group_count_bounded_by_choose() {
+        let g = er(100, 0.3, &mut DetRng::seed(6));
+        let alloc = Allocation::er_scheme(100, 6, 2);
+        let plans = build_group_plans(&g, &alloc);
+        assert!(plans.len() as u64 <= crate::combinatorics::choose(6, 3));
+        // dense enough that every group should appear
+        assert_eq!(plans.len() as u64, crate::combinatorics::choose(6, 3));
+    }
+
+    #[test]
+    fn every_iv_is_exclusively_mapped_by_other_members() {
+        let g = er(90, 0.2, &mut DetRng::seed(7));
+        let alloc = Allocation::er_scheme(90, 5, 3);
+        for p in build_group_plans(&g, &alloc) {
+            for (idx, row) in p.rows.iter().enumerate() {
+                let k = p.servers[idx];
+                for &(i, j) in row {
+                    assert_eq!(alloc.reduce_owner[i as usize], k);
+                    assert!(!alloc.maps(k, j), "k={k} maps j={j}");
+                    for &k2 in &p.servers {
+                        if k2 != k {
+                            assert!(alloc.maps(k2, j), "k'={k2} misses j={j}");
+                        }
+                    }
+                    assert!(g.has_edge(i, j));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rows_are_canonically_ordered() {
+        let g = er(150, 0.1, &mut DetRng::seed(8));
+        let alloc = Allocation::er_scheme(150, 5, 2);
+        for p in build_group_plans(&g, &alloc) {
+            for row in &p.rows {
+                // (j, i) strictly increasing lexicographically in (j, then i)
+                for w in row.windows(2) {
+                    let (i0, j0) = w[0];
+                    let (i1, j1) = w[1];
+                    assert!(j0 < j1 || (j0 == j1 && i0 < i1));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn r_equals_k_has_no_groups() {
+        let g = er(50, 0.3, &mut DetRng::seed(9));
+        let alloc = Allocation::er_scheme(50, 4, 4);
+        assert!(build_group_plans(&g, &alloc).is_empty());
+        assert_eq!(total_needed_ivs(&g, &alloc), 0);
+    }
+}

@@ -1,0 +1,142 @@
+//! The uncoded Shuffle baseline (paper §IV-A "Uncoded Shuffle").
+//!
+//! Every needed IV `v_{i,j}` (Reducer at `k`, `j ∉ M_k`) is unicast in
+//! full from a canonical Mapper of `j` — the lowest-id server of
+//! `batch(j)`'s replica set — to `k`. Messages are batched per
+//! (sender, receiver) pair, as the paper's mpi4py implementation does.
+//! Expected normalized load for `ER(n, p)` under the §IV-A allocation:
+//! `p (1 - r/K)`.
+
+
+use crate::allocation::Allocation;
+use crate::graph::csr::{Csr, Vertex};
+
+use super::load::ShuffleLoad;
+
+/// One sender→receiver uncoded transfer: the full IVs it carries.
+#[derive(Clone, Debug)]
+pub struct UncodedTransfer {
+    pub sender: u8,
+    pub receiver: u8,
+    /// (reducer, mapper) pairs, canonical (batch, j, i) order.
+    pub ivs: Vec<(Vertex, Vertex)>,
+}
+
+/// Plan all uncoded transfers for `(g, alloc)`.
+///
+/// Deterministic order: senders ascending, receivers ascending.
+pub fn plan_uncoded(g: &Csr, alloc: &Allocation) -> Vec<UncodedTransfer> {
+    // flat (sender, receiver) -> transfer-index table; per-(batch, k)
+    // membership resolved once via a slot cache, not per edge (§Perf)
+    let kk = alloc.k;
+    let mut pair_idx = vec![usize::MAX; kk * kk];
+    let mut out: Vec<UncodedTransfer> = Vec::new();
+    const UNRESOLVED: u8 = u8::MAX;
+    const LOCAL: u8 = u8::MAX - 1;
+    let mut slot = vec![UNRESOLVED; kk];
+    for batch in &alloc.batches {
+        let sender = batch.servers[0]; // canonical: lowest-id replica
+        slot.fill(UNRESOLVED);
+        for j in batch.vertices() {
+            for &i in g.neighbors(j) {
+                let k = alloc.reduce_owner[i as usize];
+                let s = slot[k as usize];
+                if s == LOCAL {
+                    continue;
+                }
+                if s == UNRESOLVED {
+                    if batch.servers.binary_search(&k).is_ok() {
+                        slot[k as usize] = LOCAL;
+                        continue;
+                    }
+                    slot[k as usize] = k;
+                }
+                let key = sender as usize * kk + k as usize;
+                let t = if pair_idx[key] == usize::MAX {
+                    pair_idx[key] = out.len();
+                    out.push(UncodedTransfer { sender, receiver: k, ivs: Vec::new() });
+                    out.len() - 1
+                } else {
+                    pair_idx[key]
+                };
+                out[t].ivs.push((i, j));
+            }
+        }
+    }
+    out.sort_by_key(|t| (t.sender, t.receiver));
+    out
+}
+
+/// Tally the uncoded load of a transfer plan.
+pub fn uncoded_load(transfers: &[UncodedTransfer]) -> ShuffleLoad {
+    let mut load = ShuffleLoad::default();
+    for t in transfers {
+        load.add_uncoded(t.ivs.len());
+    }
+    load
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::er::er;
+    use crate::shuffle::plan::total_needed_ivs;
+    use crate::util::rng::DetRng;
+
+    #[test]
+    fn fig3_uncoded_load_is_6_over_36() {
+        let g = Csr::from_edges(6, &[(0, 4), (1, 5), (2, 3)]);
+        let alloc = Allocation::er_scheme(6, 3, 2);
+        let transfers = plan_uncoded(&g, &alloc);
+        let load = uncoded_load(&transfers);
+        assert!((load.normalized(6) - 6.0 / 36.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn transfers_cover_all_needed_ivs() {
+        let g = er(100, 0.2, &mut DetRng::seed(21));
+        for r in 1..4 {
+            let alloc = Allocation::er_scheme(100, 4, r);
+            let transfers = plan_uncoded(&g, &alloc);
+            let total: usize = transfers.iter().map(|t| t.ivs.len()).sum();
+            assert_eq!(total, total_needed_ivs(&g, &alloc), "r={r}");
+        }
+    }
+
+    #[test]
+    fn senders_actually_map_their_ivs() {
+        let g = er(80, 0.2, &mut DetRng::seed(22));
+        let alloc = Allocation::er_scheme(80, 5, 2);
+        for t in plan_uncoded(&g, &alloc) {
+            for &(i, j) in &t.ivs {
+                assert!(alloc.maps(t.sender, j), "sender {} can't map {j}", t.sender);
+                assert!(!alloc.maps(t.receiver, j));
+                assert_eq!(alloc.reduce_owner[i as usize], t.receiver);
+            }
+        }
+    }
+
+    #[test]
+    fn load_matches_expectation_er() {
+        // E[L^UC] = p (1 - r/K); check within sampling noise
+        let n = 400;
+        let (p, k) = (0.1, 5);
+        let mut acc = 0.0;
+        let trials = 10;
+        for seed in 0..trials {
+            let g = er(n, p, &mut DetRng::seed(100 + seed));
+            let alloc = Allocation::er_scheme(n, k, 2);
+            acc += uncoded_load(&plan_uncoded(&g, &alloc)).normalized(n);
+        }
+        let mean = acc / trials as f64;
+        let want = p * (1.0 - 2.0 / k as f64);
+        assert!((mean - want).abs() / want < 0.05, "mean={mean} want={want}");
+    }
+
+    #[test]
+    fn r_equals_k_no_traffic() {
+        let g = er(60, 0.3, &mut DetRng::seed(23));
+        let alloc = Allocation::er_scheme(60, 4, 4);
+        assert!(plan_uncoded(&g, &alloc).is_empty());
+    }
+}

@@ -1,0 +1,182 @@
+//! Micro/meso benchmark harness (offline environment: no criterion).
+//!
+//! Minimal but honest methodology: warmup runs, fixed-count timed runs,
+//! mean / stddev / min, and a black-box guard against dead-code
+//! elimination. Bench binaries (`benches/*.rs`, `harness = false`) build
+//! their tables with [`Bench`] and print aligned rows so `cargo bench`
+//! output is the figure/table reproduction.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub iters: usize,
+}
+
+impl Measurement {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_s * 1e3
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        self.mean_s * 1e6
+    }
+
+    /// Throughput given a per-iteration work amount.
+    pub fn per_second(&self, work_per_iter: f64) -> f64 {
+        work_per_iter / self.mean_s
+    }
+}
+
+/// Benchmark runner with fixed warmup/measure counts.
+pub struct Bench {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self { warmup: 2, iters: 5 }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Self { warmup, iters }
+    }
+
+    /// Run `f` (result black-boxed) and collect a [`Measurement`].
+    pub fn run<T, F: FnMut() -> T>(&self, mut f: F) -> Measurement {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        summarize(&times)
+    }
+
+    /// Time a single run (for expensive end-to-end drivers).
+    pub fn once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+        let t0 = Instant::now();
+        let out = f();
+        (out, t0.elapsed().as_secs_f64())
+    }
+}
+
+fn summarize(times: &[f64]) -> Measurement {
+    let n = times.len().max(1) as f64;
+    let mean = times.iter().sum::<f64>() / n;
+    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / n;
+    Measurement {
+        mean_s: mean,
+        std_s: var.sqrt(),
+        min_s: times.iter().copied().fold(f64::INFINITY, f64::min),
+        iters: times.len(),
+    }
+}
+
+/// Aligned table printer for bench output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with per-column widths.
+    pub fn render(&self) -> String {
+        let cols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..cols {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            let mut line = String::new();
+            for (c, cell) in cells.iter().enumerate() {
+                if c > 0 {
+                    line.push_str("  ");
+                }
+                line.push_str(&format!("{:>w$}", cell, w = widths[c]));
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (cols - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measurement_statistics() {
+        let m = summarize(&[1.0, 2.0, 3.0]);
+        assert!((m.mean_s - 2.0).abs() < 1e-12);
+        assert!((m.std_s - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(m.min_s, 1.0);
+    }
+
+    #[test]
+    fn bench_runs_expected_iters() {
+        let mut count = 0;
+        let b = Bench::new(1, 3);
+        let m = b.run(|| {
+            count += 1;
+            count
+        });
+        assert_eq!(count, 4); // 1 warmup + 3 measured
+        assert_eq!(m.iters, 3);
+        assert!(m.mean_s >= 0.0);
+    }
+
+    #[test]
+    fn table_alignment() {
+        let mut t = Table::new(&["r", "load"]);
+        t.row(&["1".into(), "0.08".into()]);
+        t.row(&["10".into(), "0.004".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[2].ends_with("0.08"));
+        assert!(lines[3].starts_with("10"));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into()]);
+    }
+}

@@ -1,0 +1,128 @@
+//! Minimal command-line argument parser (offline environment: no clap).
+//!
+//! Supports `command --flag value --switch` grammars: positional
+//! subcommand first, then `--key value` pairs and bare `--switch`es.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: subcommand + options.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    opts: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                out.command = it.next();
+            }
+        }
+        while let Some(arg) = it.next() {
+            let Some(key) = arg.strip_prefix("--") else {
+                return Err(format!("unexpected positional argument {arg:?}"));
+            };
+            if key.is_empty() {
+                return Err("bare '--' not supported".into());
+            }
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    let v = it.next().unwrap();
+                    out.opts.insert(key.to_string(), v);
+                }
+                _ => out.switches.push(key.to_string()),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Result<Self, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(String::as_str)
+    }
+
+    /// Typed option with default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+        match self.opts.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: cannot parse {v:?}")),
+        }
+    }
+
+    /// Boolean switch (present / absent).
+    pub fn has(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+
+    /// Error on unknown options (catch typos).
+    pub fn check_known(&self, known: &[&str]) -> Result<(), String> {
+        for k in self.opts.keys().chain(self.switches.iter()) {
+            if !known.contains(&k.as_str()) {
+                return Err(format!("unknown option --{k} (known: {})", known.join(", ")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("fig5 --trials 50 --full --seed 7");
+        assert_eq!(a.command.as_deref(), Some("fig5"));
+        assert_eq!(a.get_or("trials", 0usize).unwrap(), 50);
+        assert_eq!(a.get_or("seed", 0u64).unwrap(), 7);
+        assert!(a.has("full"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("scenario");
+        assert_eq!(a.get_or("id", 2usize).unwrap(), 2);
+        assert_eq!(a.get(&"missing"), None);
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse("--trials 3");
+        assert_eq!(a.command, None);
+        assert_eq!(a.get_or("trials", 0usize).unwrap(), 3);
+    }
+
+    #[test]
+    fn bad_parse_reports_key() {
+        let a = parse("x --n abc");
+        let err = a.get_or("n", 5usize).unwrap_err();
+        assert!(err.contains("--n"), "{err}");
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let a = parse("x --toto 1");
+        assert!(a.check_known(&["n", "seed"]).is_err());
+        assert!(a.check_known(&["toto"]).is_ok());
+    }
+
+    #[test]
+    fn rejects_stray_positional() {
+        assert!(Args::parse(["x".into(), "y".into()]).is_err());
+    }
+}

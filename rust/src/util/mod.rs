@@ -1,0 +1,44 @@
+//! Shared utilities and in-tree substrates for the offline environment:
+//! deterministic RNG ([`rng`]), JSON ([`json`]), bench harness
+//! ([`benchkit`]), property-testing kit ([`testkit`]), padding math.
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod testkit;
+
+/// Round `x` up to the next multiple of `m` (`m > 0`).
+#[inline]
+pub fn round_up(x: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    x.div_ceil(m) * m
+}
+
+/// Ceiling division.
+#[inline]
+pub fn div_ceil(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+        assert_eq!(round_up(250, 128), 256);
+    }
+
+    #[test]
+    fn div_ceil_basics() {
+        assert_eq!(div_ceil(0, 3), 0);
+        assert_eq!(div_ceil(1, 3), 1);
+        assert_eq!(div_ceil(3, 3), 1);
+        assert_eq!(div_ceil(4, 3), 2);
+    }
+}

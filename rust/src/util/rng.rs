@@ -1,0 +1,203 @@
+//! Deterministic RNG for graph generation and tests.
+//!
+//! The build environment is offline (no `rand` crate), so this is a
+//! self-contained xoshiro256++ implementation (Blackman & Vigna) seeded
+//! through splitmix64 — the exact construction `rand`'s `SmallRng` family
+//! uses. All experiment harnesses seed explicitly so every figure
+//! regenerates bit-identically.
+
+/// Crate-wide deterministic RNG (xoshiro256++).
+#[derive(Clone, Debug)]
+pub struct DetRng {
+    s: [u64; 4],
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl DetRng {
+    /// Seed a fresh stream; different seeds give independent streams.
+    pub fn seed(seed: u64) -> Self {
+        let mut sm = seed;
+        Self {
+            s: [
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+            ],
+        }
+    }
+
+    /// Derive an independent child stream (e.g. one per worker shard).
+    pub fn split(&mut self, tag: u64) -> Self {
+        let s = self.u64();
+        Self::seed(s ^ tag.wrapping_mul(0xD129_0D3B_E213_DBCB))
+    }
+
+    /// Uniform `u64` (xoshiro256++ next).
+    #[inline]
+    pub fn u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform `f64` in `[0, 1)` (53-bit mantissa construction).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire-style rejection-free enough for
+    /// our purposes: modulo bias is < 2^-32 for all n we use).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        ((self.u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Geometric skip for `G(p)` edge sampling: the number of misses before
+    /// the next hit of a Bernoulli(p) process, i.e. `floor(ln U / ln(1-p))`.
+    ///
+    /// For `p >= 1` the skip is 0 (every trial hits). Returns `usize::MAX`
+    /// when the skip overflows (caller treats it as "past the end").
+    #[inline]
+    pub fn geometric_skip(&mut self, p: f64) -> usize {
+        if p >= 1.0 {
+            return 0;
+        }
+        if p <= 0.0 {
+            return usize::MAX;
+        }
+        let u = self.f64().max(f64::MIN_POSITIVE);
+        let s = (u.ln() / (1.0 - p).ln()).floor();
+        if s >= usize::MAX as f64 {
+            usize::MAX
+        } else {
+            s as usize
+        }
+    }
+
+    /// Fisher–Yates shuffle of a slice.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = DetRng::seed(42);
+        let mut b = DetRng::seed(42);
+        for _ in 0..100 {
+            assert_eq!(a.u64(), b.u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = DetRng::seed(1);
+        let mut b = DetRng::seed(2);
+        let same = (0..64).filter(|_| a.u64() == b.u64()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn f64_in_unit_interval_and_uniform_mean() {
+        let mut r = DetRng::seed(9);
+        let n = 50_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = DetRng::seed(4);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let x = r.below(10);
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn bernoulli_rate_close() {
+        let mut r = DetRng::seed(7);
+        let hits = (0..20_000).filter(|_| r.bernoulli(0.3)).count();
+        let rate = hits as f64 / 20_000.0;
+        assert!((rate - 0.3).abs() < 0.02, "rate={rate}");
+    }
+
+    #[test]
+    fn geometric_skip_mean_close() {
+        // E[skip] = (1-p)/p
+        let p = 0.2;
+        let mut r = DetRng::seed(11);
+        let n = 50_000;
+        let total: usize = (0..n).map(|_| r.geometric_skip(p)).sum();
+        let mean = total as f64 / n as f64;
+        assert!((mean - 4.0).abs() < 0.15, "mean={mean}");
+    }
+
+    #[test]
+    fn geometric_skip_extremes() {
+        let mut r = DetRng::seed(3);
+        assert_eq!(r.geometric_skip(1.0), 0);
+        assert_eq!(r.geometric_skip(0.0), usize::MAX);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = DetRng::seed(5);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn split_streams_independent() {
+        let mut root = DetRng::seed(1);
+        let mut a = root.split(0);
+        let mut b = root.split(1);
+        let same = (0..64).filter(|_| a.u64() == b.u64()).count();
+        assert!(same < 4);
+    }
+}

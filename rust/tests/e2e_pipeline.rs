@@ -1,0 +1,146 @@
+//! Cross-driver end-to-end tests: phase engine vs threaded cluster vs
+//! single-machine oracle, across graph models, programs, schemes, and
+//! allocation schemes — the "all layers compose" matrix.
+
+use coded_graph::allocation::Allocation;
+use coded_graph::coordinator::cluster::run_cluster;
+use coded_graph::coordinator::{run_rust, EngineConfig, Job, Scheme};
+use coded_graph::graph::{bipartite, er, powerlaw, sbm};
+use coded_graph::mapreduce::program::run_single_machine;
+use coded_graph::mapreduce::reference::{dijkstra, pagerank_power_iteration};
+use coded_graph::mapreduce::sssp::INF;
+use coded_graph::mapreduce::{PageRank, Sssp};
+use coded_graph::util::rng::DetRng;
+
+fn assert_close(a: &[f64], b: &[f64], tol: f64, what: &str) {
+    for (x, y) in a.iter().zip(b) {
+        assert!((x - y).abs() < tol, "{what}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn matrix_engine_vs_cluster_vs_oracle() {
+    let mut rng = DetRng::seed(1234);
+    let graphs = vec![
+        ("er", er::er(90, 0.12, &mut rng)),
+        ("rb", bipartite::rb(45, 45, 0.15, &mut rng)),
+        ("sbm", sbm::sbm(45, 45, 0.25, 0.05, &mut rng)),
+        (
+            "pl",
+            powerlaw::pl(
+                90,
+                powerlaw::PlParams { gamma: 2.4, max_degree: 1000, rho_scale: 2.0 },
+                &mut rng,
+            ),
+        ),
+    ];
+    for (name, g) in &graphs {
+        for (k, r) in [(3usize, 2usize), (4, 3), (5, 2)] {
+            let alloc = Allocation::er_scheme(g.n(), k, r);
+            let prog = PageRank::default();
+            let job = Job { graph: g, alloc: &alloc, program: &prog };
+            for scheme in [Scheme::Coded, Scheme::Uncoded] {
+                let cfg = EngineConfig { scheme, validate: true, ..Default::default() };
+                let engine = run_rust(&job, &cfg, 3).final_state;
+                let cluster = run_cluster(&job, &cfg, 3).final_state;
+                let oracle = run_single_machine(&prog, g, 3);
+                assert_close(&engine, &oracle, 1e-14, &format!("{name} engine {scheme}"));
+                assert_close(&cluster, &oracle, 1e-14, &format!("{name} cluster {scheme}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn pagerank_converges_to_power_iteration_fixed_point() {
+    let g = er::er(200, 0.08, &mut DetRng::seed(77));
+    let alloc = Allocation::er_scheme(200, 5, 3);
+    let prog = PageRank::default();
+    let job = Job { graph: &g, alloc: &alloc, program: &prog };
+    let cfg = EngineConfig { scheme: Scheme::Coded, ..Default::default() };
+    let dist = run_rust(&job, &cfg, 60).final_state;
+    let matrix = pagerank_power_iteration(&g, 0.15, 60);
+    assert_close(&dist, &matrix, 1e-12, "converged pagerank");
+    // probability mass preserved
+    let mass: f64 = dist.iter().sum();
+    assert!((mass - 1.0).abs() < 1e-9, "mass {mass}");
+}
+
+#[test]
+fn sssp_converges_to_dijkstra_across_schemes() {
+    let g = er::er(150, 0.04, &mut DetRng::seed(55));
+    let prog = Sssp::hashed(3);
+    let want = dijkstra(&g, 3, prog.weights);
+    for scheme in [Scheme::Coded, Scheme::Uncoded] {
+        let alloc = Allocation::er_scheme(150, 4, 2);
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let cfg = EngineConfig { scheme, ..Default::default() };
+        // 150 sweeps ≥ diameter: fully converged
+        let got = run_rust(&job, &cfg, 150).final_state;
+        assert_close(&got, &want, 1e-9, "sssp");
+    }
+}
+
+#[test]
+fn bipartite_allocation_on_bipartite_graph_full_stack() {
+    let g = bipartite::rb(60, 60, 0.2, &mut DetRng::seed(42));
+    let alloc = Allocation::bipartite_scheme(60, 60, 6, 2);
+    let prog = PageRank::default();
+    let job = Job { graph: &g, alloc: &alloc, program: &prog };
+    let cfg = EngineConfig { scheme: Scheme::Coded, validate: true, ..Default::default() };
+    let engine = run_rust(&job, &cfg, 4).final_state;
+    let cluster = run_cluster(&job, &cfg, 4).final_state;
+    let oracle = run_single_machine(&prog, &g, 4);
+    assert_close(&engine, &oracle, 1e-14, "bipartite engine");
+    assert_close(&cluster, &oracle, 1e-14, "bipartite cluster");
+}
+
+#[test]
+fn disconnected_graph_handled() {
+    // two components + isolated vertices
+    let mut edges = vec![];
+    for i in 0..20u32 {
+        edges.push((i, (i + 1) % 21)); // cycle on 0..=20
+    }
+    for i in 30..40u32 {
+        edges.push((i, i + 1));
+    }
+    let g = coded_graph::Csr::from_edges(50, &edges);
+    let alloc = Allocation::er_scheme(50, 4, 2);
+    let prog = Sssp::unit(0);
+    let job = Job { graph: &g, alloc: &alloc, program: &prog };
+    let cfg = EngineConfig { scheme: Scheme::Coded, validate: true, ..Default::default() };
+    let got = run_rust(&job, &cfg, 50).final_state;
+    let want = dijkstra(&g, 0, coded_graph::mapreduce::EdgeWeights::Unit);
+    assert_close(&got, &want, 1e-12, "disconnected sssp");
+    assert!(got[35] >= INF, "other component unreachable");
+    assert!(got[45] >= INF, "isolated unreachable");
+}
+
+#[test]
+fn empty_graph_runs_with_zero_traffic() {
+    let g = coded_graph::Csr::from_edges(40, &[]);
+    let alloc = Allocation::er_scheme(40, 4, 2);
+    let prog = PageRank::default();
+    let job = Job { graph: &g, alloc: &alloc, program: &prog };
+    let cfg = EngineConfig { scheme: Scheme::Coded, ..Default::default() };
+    let rep = run_rust(&job, &cfg, 2);
+    assert_eq!(rep.iterations[0].shuffle.messages, 0);
+    // all vertices dangling: rank = teleport mass only
+    for &x in &rep.final_state {
+        assert!((x - 0.15 / 40.0).abs() < 1e-15);
+    }
+}
+
+#[test]
+fn single_server_degenerate() {
+    let g = er::er(30, 0.2, &mut DetRng::seed(9));
+    let alloc = Allocation::er_scheme(30, 1, 1);
+    let prog = PageRank::default();
+    let job = Job { graph: &g, alloc: &alloc, program: &prog };
+    let cfg = EngineConfig { scheme: Scheme::Uncoded, ..Default::default() };
+    let rep = run_rust(&job, &cfg, 3);
+    assert_eq!(rep.iterations[0].shuffle.messages, 0, "K=1: all local");
+    let want = run_single_machine(&prog, &g, 3);
+    assert_close(&rep.final_state, &want, 1e-15, "K=1");
+}

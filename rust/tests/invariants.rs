@@ -1,0 +1,278 @@
+//! Property tests over the coordinator's core invariants (testkit-based;
+//! see DESIGN.md §6). Each property runs across randomly drawn graphs,
+//! server counts, computation loads, and allocation schemes.
+
+use coded_graph::allocation::Allocation;
+use coded_graph::coordinator::{measure_loads, run_rust, EngineConfig, Job, Scheme};
+use coded_graph::graph::csr::Csr;
+use coded_graph::graph::{bipartite, er, powerlaw, sbm};
+use coded_graph::mapreduce::program::run_single_machine;
+use coded_graph::mapreduce::{PageRank, Sssp};
+use coded_graph::shuffle::coded::encode_group;
+use coded_graph::shuffle::decoder::recover_group;
+use coded_graph::shuffle::plan::{build_group_plans, total_needed_ivs};
+use coded_graph::util::testkit::{property, Gen};
+use coded_graph::Vertex;
+
+/// Draw a random graph from a random model.
+fn any_graph(g: &mut Gen, n: usize) -> Csr {
+    match g.int(0, 3) {
+        0 => er::er(n, g.f64(0.02, 0.4), g.rng()),
+        1 => bipartite::rb(n / 2, n - n / 2, g.f64(0.02, 0.3), g.rng()),
+        2 => {
+            let p = g.f64(0.1, 0.4);
+            let q = g.f64(0.01, p);
+            sbm::sbm(n / 2, n - n / 2, p, q, g.rng())
+        }
+        _ => powerlaw::pl(
+            n,
+            powerlaw::PlParams { gamma: g.f64(2.1, 3.0), max_degree: 10_000, rho_scale: 1.0 },
+            g.rng(),
+        ),
+    }
+}
+
+/// Draw a valid allocation (ER or bipartite scheme) for n vertices.
+fn any_alloc(g: &mut Gen, n: usize) -> Allocation {
+    let k = g.int(2, 7);
+    if g.bool() {
+        let r = g.int(1, k);
+        Allocation::er_scheme(n, k, r)
+    } else {
+        let k = k.max(4);
+        let r = g.int(1, (k / 2).max(1));
+        Allocation::bipartite_scheme(n / 2, n - n / 2, k, r)
+    }
+}
+
+#[test]
+fn every_vertex_mapped_exactly_r_times() {
+    property(40, |gen| {
+        let n = gen.int(20, 150);
+        let alloc = any_alloc(gen, n);
+        for v in 0..n as Vertex {
+            let cnt = (0..alloc.k as u8).filter(|&s| alloc.maps(s, v)).count();
+            assert_eq!(cnt, alloc.r, "v={v} K={} r={}", alloc.k, alloc.r);
+        }
+    });
+}
+
+#[test]
+fn reduce_sets_partition_vertices() {
+    property(40, |gen| {
+        let n = gen.int(20, 150);
+        let alloc = any_alloc(gen, n);
+        let mut seen = vec![false; n];
+        for (k, set) in alloc.reduce_sets.iter().enumerate() {
+            for &v in set {
+                assert!(!seen[v as usize], "vertex {v} reduced twice");
+                seen[v as usize] = true;
+                assert_eq!(alloc.reducer_of(v) as usize, k);
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "some vertex never reduced");
+    });
+}
+
+#[test]
+fn coded_shuffle_delivers_exactly_the_needed_ivs_bit_exact() {
+    property(25, |gen| {
+        let n = gen.int(20, 120);
+        let g = any_graph(gen, n);
+        let alloc = any_alloc(gen, g.n());
+        let r = alloc.r;
+        let salt = gen.rng().u64();
+        let value = move |i: Vertex, j: Vertex| {
+            (((i as u64) << 32) ^ j as u64 ^ salt).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        };
+        let plans = build_group_plans(&g, &alloc);
+        // coverage: every needed IV appears in exactly one plan row
+        let planned: usize = plans.iter().map(|p| p.total_ivs()).sum();
+        assert_eq!(planned, total_needed_ivs(&g, &alloc));
+        for plan in &plans {
+            let msgs = encode_group(plan, &value, r);
+            for (idx, &k) in plan.servers.iter().enumerate() {
+                let got = recover_group(plan, k, &msgs, &value, r);
+                assert_eq!(got.len(), plan.rows[idx].len());
+                for (riv, &(i, j)) in got.iter().zip(&plan.rows[idx]) {
+                    assert_eq!((riv.reducer, riv.mapper), (i, j));
+                    assert_eq!(riv.bits, value(i, j), "IV ({i},{j})");
+                    // the receiver must actually need it
+                    assert_eq!(alloc.reducer_of(i), k);
+                    assert!(!alloc.maps(k, j));
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn coded_load_never_exceeds_uncoded() {
+    property(25, |gen| {
+        let n = gen.int(30, 150);
+        let g = any_graph(gen, n);
+        let alloc = any_alloc(gen, g.n());
+        let (unc, cod) = measure_loads(&g, &alloc);
+        assert!(
+            cod <= unc + 1e-12,
+            "coded {cod} > uncoded {unc} (K={} r={})",
+            alloc.k,
+            alloc.r
+        );
+    });
+}
+
+#[test]
+fn load_accounting_matches_message_tally() {
+    // the engine's ShuffleLoad equals what measure_loads computes
+    property(15, |gen| {
+        let n = gen.int(30, 100);
+        let g = any_graph(gen, n);
+        let alloc = any_alloc(gen, g.n());
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let (unc, cod) = measure_loads(&g, &alloc);
+        let rep_c = run_rust(
+            &job,
+            &EngineConfig { scheme: Scheme::Coded, ..Default::default() },
+            1,
+        );
+        let rep_u = run_rust(
+            &job,
+            &EngineConfig { scheme: Scheme::Uncoded, ..Default::default() },
+            1,
+        );
+        assert!((rep_c.iterations[0].shuffle.normalized(g.n()) - cod).abs() < 1e-12);
+        assert!((rep_u.iterations[0].shuffle.normalized(g.n()) - unc).abs() < 1e-12);
+    });
+}
+
+#[test]
+fn distributed_equals_single_machine_for_both_programs() {
+    property(12, |gen| {
+        let n = gen.int(30, 100);
+        let g = any_graph(gen, n);
+        let alloc = any_alloc(gen, g.n());
+        let iters = gen.int(1, 4);
+        let scheme = if gen.bool() { Scheme::Coded } else { Scheme::Uncoded };
+        let cfg = EngineConfig { scheme, validate: true, ..Default::default() };
+
+        let pr = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &pr };
+        let got = run_rust(&job, &cfg, iters).final_state;
+        let want = run_single_machine(&pr, &g, iters);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-14, "pagerank: {a} vs {b}");
+        }
+
+        let ss = Sssp::hashed(gen.int(0, g.n() - 1) as Vertex);
+        let job = Job { graph: &g, alloc: &alloc, program: &ss };
+        let got = run_rust(&job, &cfg, iters).final_state;
+        let want = run_single_machine(&ss, &g, iters);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-12, "sssp: {a} vs {b}");
+        }
+    });
+}
+
+#[test]
+fn r_equals_k_means_zero_shuffle() {
+    property(10, |gen| {
+        let n = gen.int(20, 80);
+        let g = any_graph(gen, n);
+        let k = gen.int(2, 5);
+        let alloc = Allocation::er_scheme(g.n(), k, k);
+        let (unc, cod) = measure_loads(&g, &alloc);
+        assert_eq!(unc, 0.0);
+        assert_eq!(cod, 0.0);
+    });
+}
+
+#[test]
+fn wire_bytes_consistent_with_paper_bits() {
+    // for the uncoded scheme wire payload == paper bits / 8; for coded the
+    // wire pays padding: payload >= paper bits / 8 always
+    property(15, |gen| {
+        let n = gen.int(30, 100);
+        let g = any_graph(gen, n);
+        let alloc = any_alloc(gen, g.n());
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        for scheme in [Scheme::Coded, Scheme::Uncoded] {
+            let rep = run_rust(&job, &EngineConfig { scheme, ..Default::default() }, 1);
+            let l = &rep.iterations[0].shuffle;
+            assert!(
+                (l.wire_payload_bytes as f64) >= l.paper_bits / 8.0 - 1e-9,
+                "{scheme}: wire {} < paper {}",
+                l.wire_payload_bytes,
+                l.paper_bits / 8.0
+            );
+            if scheme == Scheme::Uncoded {
+                assert!((l.wire_payload_bytes as f64 - l.paper_bits / 8.0).abs() < 1e-9);
+            }
+        }
+    });
+}
+
+#[test]
+fn combined_schemes_equal_plain_results() {
+    // all four schemes compute identical final states (they only move
+    // different bits); combined loads never exceed plain loads
+    property(10, |gen| {
+        let n = gen.int(40, 110);
+        let g = any_graph(gen, n);
+        let alloc = any_alloc(gen, g.n());
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let mut states: Vec<Vec<f64>> = Vec::new();
+        let mut loads: Vec<f64> = Vec::new();
+        for scheme in [
+            Scheme::Coded,
+            Scheme::Uncoded,
+            Scheme::CodedCombined,
+            Scheme::UncodedCombined,
+        ] {
+            let rep = run_rust(&job, &EngineConfig { scheme, ..Default::default() }, 2);
+            loads.push(rep.iterations[0].shuffle.normalized(g.n()));
+            states.push(rep.final_state);
+        }
+        for s in &states[1..] {
+            for (a, b) in states[0].iter().zip(s) {
+                assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+            }
+        }
+        // combined <= plain within each family
+        assert!(loads[2] <= loads[0] + 1e-12, "coded: {} vs {}", loads[2], loads[0]);
+        assert!(loads[3] <= loads[1] + 1e-12, "uncoded: {} vs {}", loads[3], loads[1]);
+    });
+}
+
+#[test]
+fn json_roundtrip_fuzz() {
+    // random JSON trees survive to_string -> parse exactly
+    use coded_graph::util::json::Json;
+    fn gen_json(g: &mut Gen, depth: usize) -> Json {
+        match if depth == 0 { g.int(0, 3) } else { g.int(0, 5) } {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool()),
+            2 => Json::Num((g.f64(-1e6, 1e6) * 100.0).round() / 100.0),
+            3 => Json::Str(
+                (0..g.int(0, 12))
+                    .map(|_| *g.choice(&['a', 'é', '"', '\\', '\n', 'z', ' ']))
+                    .collect(),
+            ),
+            4 => Json::Arr((0..g.int(0, 4)).map(|_| gen_json(g, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..g.int(0, 4))
+                    .map(|i| (format!("k{i}"), gen_json(g, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    property(60, |g| {
+        let v = gen_json(g, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("{text:?}: {e}"));
+        assert_eq!(v, back, "{text}");
+    });
+}

@@ -1,0 +1,122 @@
+//! PJRT runtime integration: the AOT JAX/Pallas artifacts driving the
+//! Reduce phase inside full engine iterations, cross-checked against the
+//! exact rust fold. Skipped (with a notice) if `make artifacts` hasn't run.
+
+use std::path::Path;
+
+use coded_graph::allocation::Allocation;
+use coded_graph::coordinator::{
+    prepare, run_iteration, Backend, EngineConfig, Job, Scheme, XlaKind,
+};
+use coded_graph::graph::{er, powerlaw};
+use coded_graph::mapreduce::{PageRank, Sssp, VertexProgram};
+use coded_graph::runtime::{BlockExecutor, PjrtRuntime};
+use coded_graph::util::rng::DetRng;
+use coded_graph::Vertex;
+
+fn runtime() -> Option<PjrtRuntime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping PJRT integration test: run `make artifacts`");
+        return None;
+    }
+    Some(PjrtRuntime::load(&dir).expect("runtime load"))
+}
+
+#[test]
+fn pjrt_pagerank_iteration_matches_rust_backend() {
+    let Some(rt) = runtime() else { return };
+    let g = er::er(700, 0.05, &mut DetRng::seed(21));
+    let n = g.n();
+    let alloc = Allocation::er_scheme(n, 5, 2);
+    let prog = PageRank::default();
+    let job = Job { graph: &g, alloc: &alloc, program: &prog };
+    let cfg = EngineConfig { scheme: Scheme::Coded, ..Default::default() };
+    let prep = prepare(&job, Scheme::Coded);
+    let st: Vec<f64> = (0..n as Vertex).map(|v| prog.init(v, &g)).collect();
+
+    let (rust_next, _) = run_iteration(&job, &prep, &st, &cfg, &mut Backend::Rust);
+    let mut exec = BlockExecutor::new(&rt).unwrap();
+    let mut backend = Backend::Pjrt { exec: &mut exec, kind: XlaKind::PageRank };
+    let (xla_next, _) = run_iteration(&job, &prep, &st, &cfg, &mut backend);
+    let mut max_err = 0.0f64;
+    for (a, b) in rust_next.iter().zip(&xla_next) {
+        assert!(b.is_finite());
+        max_err = max_err.max((a - b).abs());
+    }
+    assert!(max_err > 0.0, "paths should differ in f32 noise");
+    assert!(max_err < 1e-8, "f32 tile error too large: {max_err}");
+}
+
+#[test]
+fn pjrt_handles_isolated_vertices() {
+    // power-law graphs have isolated vertices; deg-0 columns must not
+    // poison the tile matmul with 0 * inf = NaN (regression test)
+    let Some(rt) = runtime() else { return };
+    let g = powerlaw::pl(
+        600,
+        powerlaw::PlParams { gamma: 2.3, max_degree: 10_000, rho_scale: 1.0 },
+        &mut DetRng::seed(5),
+    );
+    let isolated = (0..g.n() as Vertex).filter(|&v| g.degree(v) == 0).count();
+    assert!(isolated > 0, "need isolated vertices for this test");
+    let alloc = Allocation::er_scheme(g.n(), 4, 2);
+    let prog = PageRank::default();
+    let job = Job { graph: &g, alloc: &alloc, program: &prog };
+    let cfg = EngineConfig { scheme: Scheme::Coded, ..Default::default() };
+    let prep = prepare(&job, Scheme::Coded);
+    let st: Vec<f64> = (0..g.n() as Vertex).map(|v| prog.init(v, &g)).collect();
+    let mut exec = BlockExecutor::new(&rt).unwrap();
+    let mut backend = Backend::Pjrt { exec: &mut exec, kind: XlaKind::PageRank };
+    let (next, _) = run_iteration(&job, &prep, &st, &cfg, &mut backend);
+    for (v, &x) in next.iter().enumerate() {
+        assert!(x.is_finite(), "vertex {v} became non-finite");
+    }
+    let (rust_next, _) = run_iteration(&job, &prep, &st, &cfg, &mut Backend::Rust);
+    for (a, b) in rust_next.iter().zip(&next) {
+        assert!((a - b).abs() < 1e-8);
+    }
+}
+
+#[test]
+fn pjrt_sssp_iteration_matches_rust_backend() {
+    let Some(rt) = runtime() else { return };
+    let g = er::er(500, 0.02, &mut DetRng::seed(31));
+    let n = g.n();
+    let alloc = Allocation::er_scheme(n, 4, 2);
+    let prog = Sssp::hashed(0);
+    let job = Job { graph: &g, alloc: &alloc, program: &prog };
+    let cfg = EngineConfig { scheme: Scheme::Coded, ..Default::default() };
+    let prep = prepare(&job, Scheme::Coded);
+    // run a few rust sweeps first so distances are partially propagated
+    let mut st: Vec<f64> = (0..n as Vertex).map(|v| prog.init(v, &g)).collect();
+    for _ in 0..3 {
+        st = run_iteration(&job, &prep, &st, &cfg, &mut Backend::Rust).0;
+    }
+    let (rust_next, _) = run_iteration(&job, &prep, &st, &cfg, &mut Backend::Rust);
+    let mut exec = BlockExecutor::new(&rt).unwrap();
+    let mut backend = Backend::Pjrt { exec: &mut exec, kind: XlaKind::Sssp(prog.weights) };
+    let (xla_next, _) = run_iteration(&job, &prep, &st, &cfg, &mut backend);
+    for (v, (a, b)) in rust_next.iter().zip(&xla_next).enumerate() {
+        if *a >= 1e29 {
+            assert!(*b >= 1e29, "vertex {v}: rust INF but xla {b}");
+        } else {
+            assert!((a - b).abs() < 1e-3, "vertex {v}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn artifact_manifest_covers_engine_needs() {
+    let Some(rt) = runtime() else { return };
+    let m = rt.manifest();
+    assert!(m.best_block("pagerank_block").is_some());
+    assert!(m.best_block("sssp_block").is_some());
+    // xor folds for every r the experiments use
+    for r in 2..=7 {
+        assert!(
+            m.entries.iter().any(|e| e.name.starts_with(&format!("xor_fold_r{r}_"))),
+            "missing xor_fold for r={r}"
+        );
+    }
+}
