@@ -1,0 +1,31 @@
+# coded-graph — build / test / bench entry points.
+
+CARGO ?= cargo
+PYTHON ?= python3
+
+.PHONY: build test bench bench-smoke fmt clippy artifacts
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+fmt:
+	$(CARGO) fmt --check
+
+clippy:
+	$(CARGO) clippy --all-targets -- -D warnings
+
+# Full figure-reproduction benches (minutes).
+bench:
+	$(CARGO) bench
+
+# Tiny bench config to catch perf-harness bitrot in CI (seconds).
+bench-smoke:
+	$(CARGO) bench --bench shuffle_micro -- --smoke
+
+# AOT-lower the JAX/Pallas kernels to HLO text for the PJRT runtime
+# (build-time only; requires jax — see python/compile/aot.py).
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../rust/artifacts

@@ -9,6 +9,9 @@
 //! wrong bits produce wrong PageRanks, which the tests catch against the
 //! single-machine oracle.
 //!
+//! The job is [`prepare`]d once; workers share the flat
+//! [`ShufflePlan`] arena and the prepared reducer→slot index read-only.
+//!
 //! Offline note: the environment has no tokio; the driver uses
 //! `std::thread` + `mpsc`, which for a compute-bound K≤16 cluster is the
 //! same topology (one task per worker, message passing, leader barrier).
@@ -23,11 +26,11 @@ use crate::network::Bus;
 use crate::shuffle::coded::{encode_sender, row_values_except, CodedMessage};
 use crate::shuffle::decoder::{recover_group, RecoveredIv};
 use crate::shuffle::load::{ShuffleLoad, HEADER_BYTES};
-use crate::shuffle::plan::GroupPlan;
+use crate::shuffle::plan::ShufflePlan;
 use crate::shuffle::uncoded::UncodedTransfer;
 
 use super::config::EngineConfig;
-use super::engine::{prepare, reduce_worker_rust, Job};
+use super::engine::{prepare, reduce_worker_rust, Job, PreparedJob};
 use super::metrics::{IterationMetrics, JobReport, PhaseTimes};
 
 /// Leader -> worker commands.
@@ -67,29 +70,28 @@ pub fn run_cluster(job: &Job<'_>, cfg: &EngineConfig, iters: usize) -> JobReport
     let k = alloc.k;
     let r = alloc.r;
     let prep = prepare(job, cfg.scheme);
-    let groups: &[GroupPlan] = &prep.groups;
+    let plan: &ShufflePlan = &prep.plan;
     let transfers: &[UncodedTransfer] = &prep.transfers;
+    let reduce_slot: &[u32] = &prep.reduce_slot;
 
     // Per-worker routing tables (precomputed, read-only).
     // sender -> [(group_idx, sender_idx)]
     let mut send_plan: Vec<Vec<(usize, usize)>> = vec![Vec::new(); k];
     // receiver -> expected coded message count
     let mut expect_coded = vec![0usize; k];
-    for (gi, plan) in groups.iter().enumerate() {
-        for (si, &s) in plan.servers.iter().enumerate() {
-            // a sender only transmits if some *other* row is non-empty
-            let has_cols = plan
-                .rows
-                .iter()
-                .enumerate()
-                .any(|(i, row)| i != si && !row.is_empty());
-            if has_cols {
+    for gi in 0..plan.num_groups() {
+        let group = plan.group(gi);
+        for (si, &s) in group.servers.iter().enumerate() {
+            // a sender only transmits if some *other* row is non-empty —
+            // read the precomputed per-sender column counts so routing
+            // and the engine's accounting share one source of truth
+            if plan.sender_cols(gi)[si] > 0 {
                 send_plan[s as usize].push((gi, si));
             }
         }
-        for (mi, &m) in plan.servers.iter().enumerate() {
-            if !plan.rows[mi].is_empty() {
-                expect_coded[m as usize] += plan.servers.len() - 1;
+        for (mi, &m) in group.servers.iter().enumerate() {
+            if group.row_len(mi) > 0 {
+                expect_coded[m as usize] += group.members() - 1;
             }
         }
     }
@@ -118,8 +120,9 @@ pub fn run_cluster(job: &Job<'_>, cfg: &EngineConfig, iters: usize) -> JobReport
                     g,
                     alloc,
                     prog,
-                    groups,
+                    plan,
                     transfers,
+                    reduce_slot,
                     &send_plan[kk as usize],
                     &send_unc[kk as usize],
                     expect_coded[kk as usize],
@@ -131,7 +134,7 @@ pub fn run_cluster(job: &Job<'_>, cfg: &EngineConfig, iters: usize) -> JobReport
             });
         }
         drop(event_tx);
-        leader_loop(job, cfg, iters, groups, &cmd_txs, &event_rx)
+        leader_loop(job, cfg, iters, &prep, &cmd_txs, &event_rx)
     })
 }
 
@@ -140,14 +143,14 @@ fn leader_loop(
     job: &Job<'_>,
     cfg: &EngineConfig,
     iters: usize,
-    groups: &[GroupPlan],
+    prep: &PreparedJob,
     cmd_txs: &[Sender<Cmd>],
     event_rx: &Receiver<Event>,
 ) -> JobReport {
     let (g, alloc) = (job.graph, job.alloc);
     let k = alloc.k;
     let r = alloc.r;
-    let prep = prepare(job, cfg.scheme);
+    let plan = &prep.plan;
     let mut report = JobReport::default();
     let mut final_state = vec![0.0f64; g.n()];
 
@@ -172,12 +175,12 @@ fn leader_loop(
         while send_done < k {
             match event_rx.recv().expect("worker hung up") {
                 Event::Multicast(sender, gi, msg) => {
-                    let plan = &groups[gi];
+                    let group = plan.group(gi);
                     let bytes = msg.payload_bytes(r) + HEADER_BYTES;
-                    bus.transmit(sender, plan.servers.len() - 1, bytes);
+                    bus.transmit(sender, group.members() - 1, bytes);
                     shuffle_load.add_coded(msg.columns.len(), r);
-                    for (mi, &m) in plan.servers.iter().enumerate() {
-                        if m != sender && !plan.rows[mi].is_empty() {
+                    for (mi, &m) in group.servers.iter().enumerate() {
+                        if m != sender && group.row_len(mi) > 0 {
                             cmd_txs[m as usize]
                                 .send(Cmd::DeliverCoded(gi, msg.clone()))
                                 .unwrap();
@@ -227,19 +230,10 @@ fn leader_loop(
             }
         }
         if cfg.account_state_update && r > 1 {
-            for batch in &alloc.batches {
-                let mut per_reducer = std::collections::HashMap::<u8, usize>::new();
-                for v in batch.vertices() {
-                    *per_reducer.entry(alloc.reduce_owner[v as usize]).or_default() += 1;
-                }
-                for (&owner, &count) in &per_reducer {
-                    let others = batch.servers.iter().filter(|&&s| s != owner).count();
-                    if others == 0 {
-                        continue;
-                    }
-                    bus.transmit(owner, others, count * 8 + HEADER_BYTES);
-                    update_load.add_uncoded(count);
-                }
+            // replay the prepared deterministic multicast list
+            for &(owner, count, others) in prep.update_msgs() {
+                bus.transmit(owner, others as usize, count as usize * 8 + HEADER_BYTES);
+                update_load.add_uncoded(count as usize);
             }
             times.update_s = bus.clock();
         }
@@ -271,8 +265,9 @@ fn worker_loop(
     g: &Csr,
     alloc: &Allocation,
     prog: &dyn VertexProgram,
-    groups: &[GroupPlan],
+    plan: &ShufflePlan,
     transfers: &[UncodedTransfer],
+    reduce_slot: &[u32],
     my_sends: &[(usize, usize)],
     my_unc_sends: &[usize],
     expect_coded: usize,
@@ -307,9 +302,9 @@ fn worker_loop(
                 prog.map(i, j, s, g).to_bits()
             };
             for &(gi, si) in my_sends {
-                let plan = &groups[gi];
-                let vals = row_values_except(plan, si, &value);
-                let msg = encode_sender(plan, si, &vals, r);
+                let group = plan.group(gi);
+                let vals = row_values_except(group, si, &value);
+                let msg = encode_sender(group, si, &vals, r);
                 if !msg.columns.is_empty() {
                     tx.send(Event::Multicast(me, gi, msg)).unwrap();
                 }
@@ -358,14 +353,13 @@ fn worker_loop(
                 prog.map(i, j, s, g).to_bits()
             };
             for (gi, msgs) in pending {
-                let plan = &groups[gi];
-                received.extend(recover_group(plan, me, &msgs, &value, r));
+                received.extend(recover_group(plan.group(gi), me, &msgs, &value, r));
             }
         }
 
         // ---- Reduce (same fold as the engine) ----
         let mut next = vec![0.0f64; n];
-        reduce_worker_rust(g, alloc, prog, &state, me, &received, &mut next);
+        reduce_worker_rust(g, alloc, prog, &state, me, &received, reduce_slot, &mut next);
         let pairs: Vec<(Vertex, f64)> = alloc.reduce_sets[me as usize]
             .iter()
             .map(|&i| (i, next[i as usize]))

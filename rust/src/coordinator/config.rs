@@ -111,6 +111,13 @@ pub struct EngineConfig {
     /// Bit-exact validation of every recovered IV against a direct Map
     /// evaluation (O(needed IVs) extra work; on in tests, off in benches).
     pub validate: bool,
+    /// Run Map / Encode / Decode / Reduce across threads (rayon). Results
+    /// and metrics are bit-identical to the serial path — all writes go
+    /// to disjoint precomputed arena regions and every floating-point
+    /// merge replays in a fixed serial order — so this is purely a
+    /// wall-clock knob. Ignored (serial) when the `parallel` feature is
+    /// compiled out.
+    pub parallel: bool,
 }
 
 impl Default for EngineConfig {
@@ -121,6 +128,7 @@ impl Default for EngineConfig {
             time: TimeModel::default(),
             account_state_update: true,
             validate: false,
+            parallel: true,
         }
     }
 }

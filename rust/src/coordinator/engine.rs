@@ -5,25 +5,52 @@
 //! All data *really* flows: Map values are computed, coded messages are
 //! XOR-encoded, receivers cancel and reassemble IVs, and the Reduce folds
 //! the recovered bits. Wire time comes from the [`Bus`] model; compute
-//! time from the [`TimeModel`] (max over workers for parallel phases).
-//! The threaded driver ([`super::cluster`]) runs the same phase functions
-//! on real threads with real channels.
+//! time from the [`TimeModel`](super::config::TimeModel) (max over
+//! workers for parallel phases). The threaded driver ([`super::cluster`])
+//! runs the same phase functions on real threads with real channels.
+//!
+//! ## Architecture (§Perf)
+//!
+//! The hot path is built around two ideas:
+//!
+//! 1. **Everything state-independent is precomputed in [`prepare`]** —
+//!    the flat [`ShufflePlan`] arena, per-worker receive ranges into it,
+//!    the reducer→slot index (no per-IV `binary_search`), the encode /
+//!    decode work tallies, and the state-write-back message list. A
+//!    steady-state iteration only touches state-dependent bytes.
+//! 2. **All per-iteration buffers live in an [`EngineScratch`]** owned by
+//!    the caller. After the first iteration warms the capacities,
+//!    [`run_iteration_scratch`] performs **zero heap allocation** on the
+//!    rust backend (asserted by the `zero_alloc` integration test on the
+//!    serial path; under `parallel: true` the engine's data path is
+//!    unchanged but rayon's scheduler may allocate internally).
+//!
+//! Phases run in parallel (rayon, `parallel` feature + config flag):
+//! Encode/Decode fan out over multicast groups, Reduce over workers —
+//! each task writes a disjoint, statically-known arena region, and every
+//! floating-point or bus merge replays serially in canonical order
+//! afterwards, so results and metrics are **bit-identical** across the
+//! serial path, the parallel path, and any thread count.
+
+use std::time::Instant;
 
 use crate::allocation::Allocation;
 use crate::graph::csr::{Csr, Vertex};
 use crate::mapreduce::program::VertexProgram;
 use crate::mapreduce::sssp::EdgeWeights;
 use crate::network::Bus;
+#[cfg(feature = "xla")]
 use crate::runtime::BlockExecutor;
-use crate::shuffle::coded::{encode_sender, row_values};
+use crate::shuffle::coded::{encode_group_into, eval_group_values};
 use crate::shuffle::combined::{
     build_combined_group_plans, combined_value, plan_uncoded_combined,
 };
-use crate::shuffle::decoder::{recover_group_shared, RecoveredIv};
+use crate::shuffle::decoder::{decode_group_into, RecoveredIv};
 use crate::shuffle::load::{ShuffleLoad, HEADER_BYTES};
-use crate::shuffle::plan::{build_group_plans, GroupPlan};
+use crate::shuffle::plan::{build_group_plans, ShufflePlan};
 use crate::shuffle::segments::seg_bytes;
 use crate::shuffle::uncoded::{plan_uncoded, UncodedTransfer};
+use crate::util::par;
 
 use super::config::{EngineConfig, Scheme};
 use super::metrics::{IterationMetrics, JobReport, PhaseTimes};
@@ -43,6 +70,7 @@ pub enum XlaKind {
 }
 
 /// Reduce-phase compute backend.
+#[cfg(feature = "xla")]
 pub enum Backend<'e, 'rt> {
     /// Pure-rust fold (default; exact f64).
     Rust,
@@ -50,22 +78,69 @@ pub enum Backend<'e, 'rt> {
     Pjrt { exec: &'e mut BlockExecutor<'rt>, kind: XlaKind },
 }
 
+/// Reduce-phase compute backend (PJRT variant requires the `xla` feature).
+#[cfg(not(feature = "xla"))]
+pub enum Backend<'e, 'rt> {
+    /// Pure-rust fold (default; exact f64).
+    Rust,
+    #[doc(hidden)]
+    __Uninhabited(
+        std::convert::Infallible,
+        std::marker::PhantomData<(&'e (), &'rt ())>,
+    ),
+}
+
 /// Precomputed, state-independent job structures (the paper's
-/// pre-processing step): shuffle plans and per-worker work tallies.
+/// pre-processing step): the flat shuffle plan, per-worker work tallies,
+/// and every index the steady-state iteration needs.
 pub struct PreparedJob {
     pub scheme: Scheme,
-    pub groups: Vec<GroupPlan>,
+    /// Coded multicast plan (empty arena for uncoded schemes).
+    pub plan: ShufflePlan,
+    /// Uncoded unicast transfers (empty for coded schemes).
     pub transfers: Vec<UncodedTransfer>,
     /// Directed edges Mapped per worker (Map-phase work).
     pub mapped_edges: Vec<usize>,
     /// Directed edges Reduced per worker (Reduce-phase work).
     pub reduce_edges: Vec<usize>,
+    /// `reduce_slot[v]` = position of `v` inside its owner's
+    /// `reduce_sets` row — replaces the per-received-IV `binary_search`.
+    pub reduce_slot: Vec<u32>,
+    /// Per-worker offsets into the accumulator arena (prefix sums of
+    /// reduce-set lengths), length `K + 1`.
+    pub reduce_off: Vec<usize>,
+    /// Per-worker absolute pair ranges into the plan arena, in delivery
+    /// (group) order; worker `k` owns
+    /// `recv_ranges[recv_off[k]..recv_off[k+1]]`.
+    recv_ranges: Vec<(usize, usize)>,
+    recv_off: Vec<usize>,
+    /// Per-worker transfer indices (uncoded delivery order).
+    unc_recv: Vec<u32>,
+    unc_recv_off: Vec<usize>,
+    /// Modeled Encode table bytes per worker (state-independent).
+    encode_bytes: Vec<usize>,
+    /// Modeled Decode bytes per worker (state-independent).
+    decode_bytes: Vec<usize>,
+    /// State write-back multicasts `(owner, vertex_count, receivers)`,
+    /// batch-major then owner-ascending — a deterministic replay list
+    /// (the old per-iteration `HashMap` walk had hash-random bus order).
+    update_msgs: Vec<(u8, u32, u32)>,
 }
 
-/// Build the shuffle plan + work tallies for a job under `scheme`.
+impl PreparedJob {
+    /// The deterministic state write-back replay list `(owner,
+    /// vertex_count, receivers)` (shared with the cluster driver).
+    pub fn update_msgs(&self) -> &[(u8, u32, u32)] {
+        &self.update_msgs
+    }
+}
+
+/// Build the shuffle plan + work tallies + steady-state indices for a job
+/// under `scheme`.
 pub fn prepare(job: &Job<'_>, scheme: Scheme) -> PreparedJob {
     let (g, alloc) = (job.graph, job.alloc);
     let k = alloc.k;
+    let r = alloc.r;
     let mut mapped_edges = vec![0usize; k];
     for (kk, me) in mapped_edges.iter_mut().enumerate() {
         *me = alloc
@@ -77,12 +152,12 @@ pub fn prepare(job: &Job<'_>, scheme: Scheme) -> PreparedJob {
     for (kk, re) in reduce_edges.iter_mut().enumerate() {
         *re = alloc.reduce_sets[kk].iter().map(|&i| g.degree(i)).sum();
     }
-    let (groups, transfers) = match scheme {
+    let (plan, transfers) = match scheme {
         Scheme::Coded => (build_group_plans(g, alloc), Vec::new()),
-        Scheme::Uncoded => (Vec::new(), plan_uncoded(g, alloc)),
+        Scheme::Uncoded => (ShufflePlan::empty(r + 1), plan_uncoded(g, alloc)),
         Scheme::CodedCombined => (build_combined_group_plans(g, alloc), Vec::new()),
         Scheme::UncodedCombined => (
-            Vec::new(),
+            ShufflePlan::empty(r + 1),
             // combined transfers share the UncodedTransfer shape: the
             // "mapper" slot carries the batch index
             plan_uncoded_combined(g, alloc)
@@ -95,27 +170,220 @@ pub fn prepare(job: &Job<'_>, scheme: Scheme) -> PreparedJob {
                 .collect(),
         ),
     };
-    PreparedJob { scheme, groups, transfers, mapped_edges, reduce_edges }
+
+    // reducer -> slot within its owner's row, plus per-worker arena offsets
+    let mut reduce_slot = vec![0u32; alloc.n];
+    let mut reduce_off = Vec::with_capacity(k + 1);
+    reduce_off.push(0);
+    for set in &alloc.reduce_sets {
+        for (slot, &v) in set.iter().enumerate() {
+            reduce_slot[v as usize] = slot as u32;
+        }
+        reduce_off.push(reduce_off.last().unwrap() + set.len());
+    }
+
+    // per-worker receive ranges (coded) and transfer lists (uncoded), in
+    // the exact delivery order the serial engine has always used
+    let mut recv_lists: Vec<Vec<(usize, usize)>> = vec![Vec::new(); k];
+    let sb = seg_bytes(r);
+    let mut encode_bytes = vec![0usize; k];
+    let mut decode_bytes = vec![0usize; k];
+    for gi in 0..plan.num_groups() {
+        let group = plan.group(gi);
+        let base = group.pair_base();
+        for (s_idx, &q) in plan.sender_cols(gi).iter().enumerate() {
+            if q == 0 {
+                continue;
+            }
+            // encode work: XOR across the sender's table
+            let table: usize = (0..group.members())
+                .filter(|&i| i != s_idx)
+                .map(|i| group.row_len(i) * sb)
+                .sum();
+            encode_bytes[group.servers[s_idx] as usize] += table;
+        }
+        for mi in 0..group.members() {
+            let rlen = group.row_len(mi);
+            if rlen == 0 {
+                continue;
+            }
+            let lr = group.local_row_range(mi);
+            let worker = group.servers[mi] as usize;
+            recv_lists[worker].push((base + lr.start, base + lr.end));
+            // decode work: r-1 segment recomputations + 1 XOR per
+            // received byte of this member's row
+            decode_bytes[worker] += rlen * sb * r;
+        }
+    }
+    let mut recv_ranges = Vec::with_capacity(recv_lists.iter().map(|l| l.len()).sum());
+    let mut recv_off = Vec::with_capacity(k + 1);
+    recv_off.push(0);
+    for list in &recv_lists {
+        recv_ranges.extend_from_slice(list);
+        recv_off.push(recv_ranges.len());
+    }
+
+    let mut unc_lists: Vec<Vec<u32>> = vec![Vec::new(); k];
+    for (ti, t) in transfers.iter().enumerate() {
+        unc_lists[t.receiver as usize].push(ti as u32);
+    }
+    let mut unc_recv = Vec::with_capacity(transfers.len());
+    let mut unc_recv_off = Vec::with_capacity(k + 1);
+    unc_recv_off.push(0);
+    for list in &unc_lists {
+        unc_recv.extend_from_slice(list);
+        unc_recv_off.push(unc_recv.len());
+    }
+
+    // state write-back replay list: per (batch, reducer) multicast of the
+    // fresh states the reducer owns inside the batch, to the other
+    // replica holders (deterministic owner-ascending order)
+    let mut update_msgs = Vec::new();
+    if r > 1 {
+        let mut counts = vec![0u32; k];
+        for batch in &alloc.batches {
+            for v in batch.vertices() {
+                counts[alloc.reduce_owner[v as usize] as usize] += 1;
+            }
+            for (owner, count) in counts.iter_mut().enumerate() {
+                let c = *count;
+                if c == 0 {
+                    continue;
+                }
+                *count = 0;
+                let others = batch.servers.iter().filter(|&&s| s != owner as u8).count();
+                if others == 0 {
+                    continue;
+                }
+                update_msgs.push((owner as u8, c, others as u32));
+            }
+        }
+    }
+
+    PreparedJob {
+        scheme,
+        plan,
+        transfers,
+        mapped_edges,
+        reduce_edges,
+        reduce_slot,
+        reduce_off,
+        recv_ranges,
+        recv_off,
+        unc_recv,
+        unc_recv_off,
+        encode_bytes,
+        decode_bytes,
+        update_msgs,
+    }
 }
 
-/// Run one full iteration; returns the next state and the metrics.
-pub fn run_iteration(
+/// Reusable per-job scratch: the engine's entire per-iteration working
+/// set. Capacities grow during the first iteration and stay put, after
+/// which [`run_iteration_scratch`] allocates nothing on the rust backend.
+#[derive(Default)]
+pub struct EngineScratch {
+    /// Per-mapper Map-value cache (`map_depends_on_dst() == false` fast path).
+    qbits: Vec<u64>,
+    /// IV values, aligned with the plan's pair arena.
+    vals: Vec<u64>,
+    /// Coded XOR columns, sender-major per group.
+    cols: Vec<u64>,
+    /// Decoded IV bits, aligned with the pair arena.
+    bits: Vec<u64>,
+    /// Reduce accumulators, worker-major (`reduce_off` layout).
+    accs: Vec<f64>,
+}
+
+impl EngineScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Split the three group-aligned arenas and run `f(gi, vals, cols, bits)`
+/// for every group, in parallel when allowed. Regions are disjoint by the
+/// plan's offset tables, so no synchronization is needed and the output
+/// is position-determined (bit-identical at any thread count).
+fn for_each_group<F>(
+    plan: &ShufflePlan,
+    vals: &mut [u64],
+    cols: &mut [u64],
+    bits: &mut [u64],
+    parallel: bool,
+    f: &F,
+) where
+    F: Fn(usize, &mut [u64], &mut [u64], &mut [u64]) + Sync,
+{
+    if plan.num_groups() == 0 {
+        return;
+    }
+    group_rec(plan, 0, plan.num_groups(), vals, cols, bits, parallel && par::ENABLED, f);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn group_rec<F>(
+    plan: &ShufflePlan,
+    lo: usize,
+    hi: usize,
+    vals: &mut [u64],
+    cols: &mut [u64],
+    bits: &mut [u64],
+    parallel: bool,
+    f: &F,
+) where
+    F: Fn(usize, &mut [u64], &mut [u64], &mut [u64]) + Sync,
+{
+    if hi - lo == 1 {
+        f(lo, vals, cols, bits);
+        return;
+    }
+    let mid = lo + (hi - lo) / 2;
+    let po = plan.group_pair_offsets();
+    let co = plan.group_col_offsets();
+    let psplit = po[mid] - po[lo];
+    let csplit = co[mid] - co[lo];
+    let (v1, v2) = vals.split_at_mut(psplit);
+    let (c1, c2) = cols.split_at_mut(csplit);
+    let (b1, b2) = bits.split_at_mut(psplit);
+    if parallel {
+        par::join(
+            || group_rec(plan, lo, mid, v1, c1, b1, true, f),
+            || group_rec(plan, mid, hi, v2, c2, b2, true, f),
+        );
+    } else {
+        group_rec(plan, lo, mid, v1, c1, b1, false, f);
+        group_rec(plan, mid, hi, v2, c2, b2, false, f);
+    }
+}
+
+/// Run one full iteration into caller-provided buffers: `next` receives
+/// the new state (every vertex is written), `scratch` supplies all
+/// working memory. Zero steady-state heap allocation on
+/// [`Backend::Rust`].
+pub fn run_iteration_scratch(
     job: &Job<'_>,
     prep: &PreparedJob,
     state: &[f64],
     cfg: &EngineConfig,
     backend: &mut Backend<'_, '_>,
-) -> (Vec<f64>, IterationMetrics) {
-    let wall_start = std::time::Instant::now();
+    scratch: &mut EngineScratch,
+    next: &mut [f64],
+) -> IterationMetrics {
+    let wall_start = Instant::now();
     let (g, alloc, prog) = (job.graph, job.alloc, job.program);
     let n = g.n();
     assert_eq!(state.len(), n);
+    assert_eq!(next.len(), n);
     let k = alloc.k;
     let r = alloc.r;
+    let parallel = cfg.parallel;
     let mut times = PhaseTimes::default();
     let mut shuffle_load = ShuffleLoad::default();
     let mut bus = Bus::new(cfg.bus);
     let mut validated = 0usize;
+
+    let EngineScratch { qbits, vals, cols, bits, accs } = scratch;
 
     // The Map closure both schemes and the decoder share: IV bits for edge
     // (dst i <- src j). Pure function of (i, j, state[j]). When the program
@@ -125,20 +393,19 @@ pub fn run_iteration(
     // and the value is the per-(Reducer, batch) pre-aggregate
     let combined = prep.scheme.is_combined();
     let src_only = !combined && !prog.map_depends_on_dst();
-    let qbits: Vec<u64> = if src_only {
-        (0..n as Vertex)
-            .map(|j| {
-                if g.degree(j) == 0 {
-                    0
-                } else {
-                    prog.map(j, j, state[j as usize], g).to_bits()
-                }
-            })
-            .collect()
-    } else {
-        Vec::new()
-    };
-    let value = |i: Vertex, j: Vertex| {
+    if src_only {
+        qbits.resize(n, 0);
+        par::fill_indexed(qbits.as_mut_slice(), parallel, &|j| {
+            let j = j as Vertex;
+            if g.degree(j) == 0 {
+                0
+            } else {
+                prog.map(j, j, state[j as usize], g).to_bits()
+            }
+        });
+    }
+    let qbits: &[u64] = qbits.as_slice();
+    let value = move |i: Vertex, j: Vertex| {
         if combined {
             combined_value(g, alloc, prog, state, i, j as usize).to_bits()
         } else if src_only {
@@ -156,93 +423,99 @@ pub fn run_iteration(
         .fold(0.0, f64::max);
 
     // ---- Shuffle (Encode → bus → Decode) --------------------------------
-    let mut received: Vec<Vec<RecoveredIv>> = vec![Vec::new(); k];
     match prep.scheme {
         Scheme::Uncoded | Scheme::UncodedCombined => {
+            // IV values are evaluated lazily at Reduce time (the same
+            // pure `value` calls, in the same per-worker delivery order,
+            // as materializing them here would perform)
             for t in &prep.transfers {
                 let bytes = t.ivs.len() * 8 + HEADER_BYTES;
                 bus.transmit(t.sender, 1, bytes);
                 shuffle_load.add_uncoded(t.ivs.len());
-                let dst = &mut received[t.receiver as usize];
-                dst.reserve(t.ivs.len());
-                for &(i, j) in &t.ivs {
-                    dst.push(RecoveredIv { reducer: i, mapper: j, bits: value(i, j) });
-                }
             }
             times.shuffle_s = bus.clock();
         }
         Scheme::Coded | Scheme::CodedCombined => {
+            let plan = &prep.plan;
             let sb = seg_bytes(r);
-            let mut encode_bytes = vec![0usize; k];
-            let mut decode_bytes = vec![0usize; k];
-            for plan in &prep.groups {
-                // row values evaluated once and shared by the encoder and
-                // every receiver's decoder (§Perf: saves ~r re-derivations)
-                let vals = row_values(plan, &value);
-                let msgs: Vec<_> = (0..plan.servers.len())
-                    .map(|s_idx| encode_sender(plan, s_idx, &vals, r))
-                    .collect();
-                for (s_idx, msg) in msgs.iter().enumerate() {
-                    if msg.columns.is_empty() {
+            vals.resize(plan.total_ivs(), 0);
+            cols.resize(plan.total_cols(), 0);
+            bits.resize(plan.total_ivs(), 0);
+            // the real data path: evaluate, encode, decode — fanned out
+            // over groups, each writing its own arena region
+            for_each_group(
+                plan,
+                vals.as_mut_slice(),
+                cols.as_mut_slice(),
+                bits.as_mut_slice(),
+                parallel,
+                &|gi, gvals, gcols, gbits| {
+                    let group = plan.group(gi);
+                    eval_group_values(group, &value, gvals);
+                    encode_group_into(group, gvals, r, plan.sender_cols(gi), gcols);
+                    decode_group_into(group, gvals, gcols, plan.sender_cols(gi), r, gbits);
+                },
+            );
+            // serial accounting replay in canonical (group, sender) order:
+            // bus clock and load tallies are bit-identical however the
+            // compute above was scheduled
+            for gi in 0..plan.num_groups() {
+                let group = plan.group(gi);
+                let fanout = group.members() - 1;
+                for (s_idx, &q) in plan.sender_cols(gi).iter().enumerate() {
+                    if q == 0 {
                         continue;
                     }
-                    let sender = plan.servers[s_idx];
-                    let bytes = msg.payload_bytes(r) + HEADER_BYTES;
-                    bus.transmit(sender, plan.servers.len() - 1, bytes);
-                    shuffle_load.add_coded(msg.columns.len(), r);
-                    // encode work: XOR across the sender's table
-                    let table: usize = plan
-                        .rows
-                        .iter()
-                        .enumerate()
-                        .filter(|&(i, _)| i != s_idx)
-                        .map(|(_, row)| row.len() * sb)
-                        .sum();
-                    encode_bytes[sender as usize] += table;
-                }
-                for (m_idx, &member) in plan.servers.iter().enumerate() {
-                    if plan.rows[m_idx].is_empty() {
-                        continue;
-                    }
-                    let ivs = recover_group_shared(plan, m_idx, &msgs, &vals, r);
-                    // decode work: r-1 segment recomputations + 1 XOR per
-                    // received byte of this member's row
-                    decode_bytes[member as usize] += plan.rows[m_idx].len() * sb * r;
-                    if cfg.validate {
-                        for riv in &ivs {
-                            assert_eq!(
-                                riv.bits,
-                                value(riv.reducer, riv.mapper),
-                                "coded decode mismatch at ({}, {})",
-                                riv.reducer,
-                                riv.mapper
-                            );
-                            validated += 1;
-                        }
-                    }
-                    received[member as usize].extend(ivs);
+                    let q = q as usize;
+                    bus.transmit(group.servers[s_idx], fanout, q * sb + HEADER_BYTES);
+                    shuffle_load.add_coded(q, r);
                 }
             }
             times.shuffle_s = bus.clock();
-            times.encode_s = encode_bytes
+            times.encode_s = prep
+                .encode_bytes
                 .iter()
                 .map(|&b| b as f64 * cfg.time.encode_byte_s)
                 .fold(0.0, f64::max);
-            times.decode_s = decode_bytes
+            times.decode_s = prep
+                .decode_bytes
                 .iter()
                 .map(|&b| b as f64 * cfg.time.decode_byte_s)
                 .fold(0.0, f64::max);
+            if cfg.validate {
+                for (idx, &(i, j)) in plan.pairs().iter().enumerate() {
+                    assert_eq!(
+                        bits[idx],
+                        value(i, j),
+                        "coded decode mismatch at ({i}, {j})"
+                    );
+                }
+                validated = plan.total_ivs();
+            }
         }
     }
 
     // ---- Reduce phase ----------------------------------------------------
-    let mut next = vec![0.0f64; n];
+    let bits: &[u64] = bits.as_slice();
     match backend {
         Backend::Rust => {
+            accs.resize(n, 0.0);
+            par::for_each_chunk(&prep.reduce_off, accs.as_mut_slice(), parallel, &|kk, accs_w| {
+                accumulate_worker(g, alloc, prog, state, kk as u8, prep, bits, &value, accs_w);
+            });
+            // finalize serially (each vertex is reduced exactly once, so
+            // the order is immaterial to the values; serial keeps it cheap
+            // and obviously deterministic)
             for kk in 0..k {
-                reduce_worker_rust(g, alloc, prog, state, kk as u8, &received[kk], &mut next);
+                let rows = &alloc.reduce_sets[kk];
+                let base = prep.reduce_off[kk];
+                for (slot, &i) in rows.iter().enumerate() {
+                    next[i as usize] =
+                        prog.finalize(i, accs[base + slot], state[i as usize], g);
+                }
             }
         }
+        #[cfg(feature = "xla")]
         Backend::Pjrt { exec, kind } => {
             assert!(
                 !combined,
@@ -250,12 +523,15 @@ pub fn run_iteration(
                  path scatters per-mapper values, not per-batch aggregates)"
             );
             for kk in 0..k {
+                let received = collect_received(prep, bits, &value, kk);
                 reduce_worker_pjrt(
-                    g, alloc, prog, state, kk as u8, &received[kk], *kind, exec, &mut next,
+                    g, alloc, prog, state, kk as u8, &received, *kind, exec, next,
                 )
                 .expect("PJRT reduce");
             }
         }
+        #[cfg(not(feature = "xla"))]
+        Backend::__Uninhabited(inf, _) => match *inf {},
     }
     times.reduce_s = prep
         .reduce_edges
@@ -267,37 +543,128 @@ pub fn run_iteration(
     let mut update_load = ShuffleLoad::default();
     if cfg.account_state_update && r > 1 {
         bus.reset();
-        for batch in &alloc.batches {
-            // per (batch, reducer) multicast: reducer sends fresh states of
-            // its vertices in this batch to the other replica holders
-            let mut per_reducer = std::collections::HashMap::<u8, usize>::new();
-            for v in batch.vertices() {
-                *per_reducer.entry(alloc.reduce_owner[v as usize]).or_default() += 1;
-            }
-            for (&owner, &count) in &per_reducer {
-                let others = batch.servers.iter().filter(|&&s| s != owner).count();
-                if others == 0 {
-                    continue;
-                }
-                let bytes = count * 8 + HEADER_BYTES;
-                bus.transmit(owner, others, bytes);
-                update_load.add_uncoded(count);
-            }
+        for &(owner, count, others) in &prep.update_msgs {
+            let bytes = count as usize * 8 + HEADER_BYTES;
+            bus.transmit(owner, others as usize, bytes);
+            update_load.add_uncoded(count as usize);
         }
         times.update_s = bus.clock();
     }
 
-    let metrics = IterationMetrics {
+    IterationMetrics {
         times,
         wall_s: wall_start.elapsed().as_secs_f64(),
         shuffle: shuffle_load,
         update: update_load,
         validated_ivs: validated,
-    };
+    }
+}
+
+/// One worker's Reduce accumulation: local Map folds plus received IVs in
+/// delivery order, into the worker's accumulator slice (`reduce_off`
+/// layout). The combine sequence is exactly the serial engine's, so
+/// results are bit-identical regardless of how workers are scheduled.
+#[allow(clippy::too_many_arguments)]
+fn accumulate_worker<F: Fn(Vertex, Vertex) -> u64>(
+    g: &Csr,
+    alloc: &Allocation,
+    prog: &dyn VertexProgram,
+    state: &[f64],
+    worker: u8,
+    prep: &PreparedJob,
+    bits: &[u64],
+    value: &F,
+    accs: &mut [f64],
+) {
+    let wk = worker as usize;
+    let rows = &alloc.reduce_sets[wk];
+    debug_assert_eq!(accs.len(), rows.len());
+    for (slot, &i) in rows.iter().enumerate() {
+        let mut acc = prog.identity();
+        for &j in g.neighbors(i) {
+            if alloc.maps(worker, j) {
+                acc = prog.combine(acc, prog.map(i, j, state[j as usize], g));
+            }
+        }
+        accs[slot] = acc;
+    }
+    match prep.scheme {
+        Scheme::Coded | Scheme::CodedCombined => {
+            let pairs = prep.plan.pairs();
+            for &(start, end) in &prep.recv_ranges[prep.recv_off[wk]..prep.recv_off[wk + 1]] {
+                for idx in start..end {
+                    let i = pairs[idx].0;
+                    let slot = prep.reduce_slot[i as usize] as usize;
+                    accs[slot] = prog.combine(accs[slot], f64::from_bits(bits[idx]));
+                }
+            }
+        }
+        Scheme::Uncoded | Scheme::UncodedCombined => {
+            for &ti in &prep.unc_recv[prep.unc_recv_off[wk]..prep.unc_recv_off[wk + 1]] {
+                for &(i, j) in &prep.transfers[ti as usize].ivs {
+                    let slot = prep.reduce_slot[i as usize] as usize;
+                    accs[slot] = prog.combine(accs[slot], f64::from_bits(value(i, j)));
+                }
+            }
+        }
+    }
+}
+
+/// Materialize one worker's received IVs (PJRT backend path; allocates).
+#[cfg(feature = "xla")]
+fn collect_received<F: Fn(Vertex, Vertex) -> u64>(
+    prep: &PreparedJob,
+    bits: &[u64],
+    value: &F,
+    worker: usize,
+) -> Vec<RecoveredIv> {
+    let mut out = Vec::new();
+    match prep.scheme {
+        Scheme::Coded | Scheme::CodedCombined => {
+            let pairs = prep.plan.pairs();
+            for &(start, end) in
+                &prep.recv_ranges[prep.recv_off[worker]..prep.recv_off[worker + 1]]
+            {
+                for idx in start..end {
+                    let (i, j) = pairs[idx];
+                    out.push(RecoveredIv { reducer: i, mapper: j, bits: bits[idx] });
+                }
+            }
+        }
+        Scheme::Uncoded | Scheme::UncodedCombined => {
+            for &ti in &prep.unc_recv[prep.unc_recv_off[worker]..prep.unc_recv_off[worker + 1]] {
+                for &(i, j) in &prep.transfers[ti as usize].ivs {
+                    out.push(RecoveredIv { reducer: i, mapper: j, bits: value(i, j) });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Run one full iteration; returns the next state and the metrics.
+///
+/// Convenience wrapper over [`run_iteration_scratch`] that allocates a
+/// fresh scratch and output buffer; loops should hold an
+/// [`EngineScratch`] and call the scratch variant directly.
+pub fn run_iteration(
+    job: &Job<'_>,
+    prep: &PreparedJob,
+    state: &[f64],
+    cfg: &EngineConfig,
+    backend: &mut Backend<'_, '_>,
+) -> (Vec<f64>, IterationMetrics) {
+    let mut scratch = EngineScratch::new();
+    let mut next = vec![0.0f64; job.graph.n()];
+    let metrics = run_iteration_scratch(job, prep, state, cfg, backend, &mut scratch, &mut next);
     (next, metrics)
 }
 
 /// Pure-rust Reduce for one worker: fold local + received IVs.
+/// `reduce_slot` is the prepared reducer→slot index
+/// ([`PreparedJob::reduce_slot`]); the threaded cluster driver shares it
+/// across workers.
+#[allow(clippy::too_many_arguments)]
 pub fn reduce_worker_rust(
     g: &Csr,
     alloc: &Allocation,
@@ -305,6 +672,7 @@ pub fn reduce_worker_rust(
     state: &[f64],
     worker: u8,
     received: &[RecoveredIv],
+    reduce_slot: &[u32],
     next: &mut [f64],
 ) {
     let rows = &alloc.reduce_sets[worker as usize];
@@ -319,9 +687,15 @@ pub fn reduce_worker_rust(
         accs.push(acc);
     }
     for riv in received {
-        let pos = rows
-            .binary_search(&riv.reducer)
-            .expect("received IV for a vertex this worker does not reduce");
+        // hard check (the pre-arena code panicked here via binary_search):
+        // reduce_slot is populated for *every* vertex, so a misrouted IV
+        // would otherwise fold silently into the wrong accumulator
+        assert_eq!(
+            alloc.reduce_owner[riv.reducer as usize],
+            worker,
+            "received IV for a vertex this worker does not reduce"
+        );
+        let pos = reduce_slot[riv.reducer as usize] as usize;
         accs[pos] = prog.combine(accs[pos], f64::from_bits(riv.bits));
     }
     for (&i, acc) in rows.iter().zip(accs) {
@@ -331,6 +705,7 @@ pub fn reduce_worker_rust(
 
 /// PJRT Reduce for one worker: assemble the Map-value vector from local
 /// state + received IVs, then run the tiled artifact.
+#[cfg(feature = "xla")]
 #[allow(clippy::too_many_arguments)]
 pub fn reduce_worker_pjrt(
     g: &Csr,
@@ -388,7 +763,8 @@ pub fn reduce_worker_pjrt(
     Ok(())
 }
 
-/// Run a full job for `iters` iterations.
+/// Run a full job for `iters` iterations (double-buffered states, one
+/// scratch — steady-state iterations are allocation-free).
 pub fn run(
     job: &Job<'_>,
     cfg: &EngineConfig,
@@ -399,10 +775,13 @@ pub fn run(
     let mut state: Vec<f64> = (0..job.graph.n() as Vertex)
         .map(|v| job.program.init(v, job.graph))
         .collect();
+    let mut next = vec![0.0f64; job.graph.n()];
+    let mut scratch = EngineScratch::new();
     let mut report = JobReport::default();
     for _ in 0..iters {
-        let (next, metrics) = run_iteration(job, &prep, &state, cfg, backend);
-        state = next;
+        let metrics =
+            run_iteration_scratch(job, &prep, &state, cfg, backend, &mut scratch, &mut next);
+        std::mem::swap(&mut state, &mut next);
         report.iterations.push(metrics);
     }
     report.final_state = state;
@@ -429,14 +808,17 @@ pub fn run_until(
     let mut state: Vec<f64> = (0..job.graph.n() as Vertex)
         .map(|v| job.program.init(v, job.graph))
         .collect();
+    let mut next = vec![0.0f64; job.graph.n()];
+    let mut scratch = EngineScratch::new();
     let mut report = JobReport::default();
     let mut used = 0;
     for _ in 0..max_iters {
-        let (next, metrics) = run_iteration(job, &prep, &state, cfg, backend);
+        let metrics =
+            run_iteration_scratch(job, &prep, &state, cfg, backend, &mut scratch, &mut next);
         report.iterations.push(metrics);
         used += 1;
         let resid = job.program.residual(&state, &next);
-        state = next;
+        std::mem::swap(&mut state, &mut next);
         if resid < tol {
             break;
         }
@@ -447,26 +829,32 @@ pub fn run_until(
 
 /// Uncoded vs coded loads for one (graph, allocation) draw — the Fig 5
 /// inner loop. Returns `(uncoded_norm, coded_norm)` normalized loads.
+///
+/// Plans both schemes; callers holding prebuilt plans (e.g. the Fig 5
+/// trial loop) should use [`measure_loads_prepared`] instead.
 pub fn measure_loads(g: &Csr, alloc: &Allocation) -> (f64, f64) {
-    let n = g.n();
-    let r = alloc.r;
+    let plan = build_group_plans(g, alloc);
+    let transfers = plan_uncoded(g, alloc);
+    measure_loads_prepared(&plan, &transfers, g.n(), alloc.r)
+}
+
+/// [`measure_loads`] over prebuilt plans: pure accounting, no planning —
+/// the per-sender column counts are already in the [`ShufflePlan`].
+pub fn measure_loads_prepared(
+    plan: &ShufflePlan,
+    transfers: &[UncodedTransfer],
+    n: usize,
+    r: usize,
+) -> (f64, f64) {
     let mut unc = ShuffleLoad::default();
-    for t in plan_uncoded(g, alloc) {
+    for t in transfers {
         unc.add_uncoded(t.ivs.len());
     }
     let mut cod = ShuffleLoad::default();
-    for plan in build_group_plans(g, alloc) {
-        for (s_idx, _) in plan.servers.iter().enumerate() {
-            let q = plan
-                .rows
-                .iter()
-                .enumerate()
-                .filter(|&(i, _)| i != s_idx)
-                .map(|(_, row)| row.len())
-                .max()
-                .unwrap_or(0);
+    for gi in 0..plan.num_groups() {
+        for &q in plan.sender_cols(gi) {
             if q > 0 {
-                cod.add_coded(q, r);
+                cod.add_coded(q as usize, r);
             }
         }
     }
@@ -526,6 +914,77 @@ mod tests {
     }
 
     #[test]
+    fn coded_r_equals_one_matches_single_machine() {
+        // degenerate coding (2-member groups, whole-IV "segments")
+        let g = er(100, 0.1, &mut DetRng::seed(51));
+        let alloc = Allocation::er_scheme(100, 4, 1);
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let report = run_rust(&job, &cfg(Scheme::Coded), 4);
+        let want = run_single_machine(&prog, &g, 4);
+        for (a, b) in report.final_state.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        assert!(report.iterations[0].validated_ivs > 0);
+    }
+
+    #[test]
+    fn serial_and_parallel_paths_bit_identical() {
+        let g = er(200, 0.12, &mut DetRng::seed(52));
+        let alloc = Allocation::er_scheme(200, 5, 3);
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        for scheme in [Scheme::Coded, Scheme::Uncoded, Scheme::CodedCombined] {
+            let serial = run_rust(
+                &job,
+                &EngineConfig { scheme, parallel: false, ..Default::default() },
+                4,
+            );
+            let par = run_rust(
+                &job,
+                &EngineConfig { scheme, parallel: true, ..Default::default() },
+                4,
+            );
+            for (a, b) in serial.final_state.iter().zip(&par.final_state) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{scheme}: {a} vs {b}");
+            }
+            for (ms, mp) in serial.iterations.iter().zip(&par.iterations) {
+                assert_eq!(ms.shuffle.paper_bits, mp.shuffle.paper_bits);
+                assert_eq!(ms.shuffle.wire_payload_bytes, mp.shuffle.wire_payload_bytes);
+                assert_eq!(ms.shuffle.messages, mp.shuffle.messages);
+                assert_eq!(ms.times.shuffle_s, mp.times.shuffle_s);
+                assert_eq!(ms.times.update_s, mp.times.update_s);
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_stable() {
+        // the same scratch across many iterations must keep producing the
+        // same states as fresh buffers every time
+        let g = er(120, 0.1, &mut DetRng::seed(53));
+        let alloc = Allocation::er_scheme(120, 4, 2);
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let config = cfg(Scheme::Coded);
+        let prep = prepare(&job, Scheme::Coded);
+        let mut state: Vec<f64> = (0..120u32).map(|v| prog.init(v, &g)).collect();
+        let mut next = vec![0.0f64; 120];
+        let mut scratch = EngineScratch::new();
+        for _ in 0..5 {
+            // fresh-buffer reference for this exact state
+            let (want, _) = run_iteration(&job, &prep, &state, &config, &mut Backend::Rust);
+            run_iteration_scratch(
+                &job, &prep, &state, &config, &mut Backend::Rust, &mut scratch, &mut next,
+            );
+            for (a, b) in next.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            std::mem::swap(&mut state, &mut next);
+        }
+    }
+
+    #[test]
     fn coded_load_beats_uncoded() {
         let g = er(200, 0.1, &mut DetRng::seed(44));
         for r in 2..5 {
@@ -535,6 +994,19 @@ mod tests {
             // gain should be near r
             let gain = unc / cod;
             assert!(gain > 0.7 * r as f64, "r={r}: gain {gain}");
+        }
+    }
+
+    #[test]
+    fn measure_loads_prepared_matches_wrapper() {
+        let g = er(180, 0.15, &mut DetRng::seed(54));
+        for r in 1..5 {
+            let alloc = Allocation::er_scheme(180, 5, r);
+            let plan = build_group_plans(&g, &alloc);
+            let transfers = plan_uncoded(&g, &alloc);
+            let direct = measure_loads(&g, &alloc);
+            let prepared = measure_loads_prepared(&plan, &transfers, g.n(), alloc.r);
+            assert_eq!(direct, prepared, "r={r}");
         }
     }
 

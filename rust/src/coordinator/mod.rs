@@ -2,7 +2,9 @@
 //!
 //! * [`config`] — scheme selection, time model, engine options.
 //! * [`metrics`] — phase times, loads, job reports (the figures' data).
-//! * [`engine`] — the deterministic single-process phase engine.
+//! * [`engine`] — the deterministic phase engine: flat-arena shuffle
+//!   plans, a reusable [`EngineScratch`] (zero-allocation steady-state
+//!   iterations), and rayon-parallel phases with bit-identical results.
 //! * [`cluster`] — the threaded leader/worker driver (real channels, real
 //!   per-worker decode; same phase functions as the engine).
 
@@ -12,5 +14,8 @@ pub mod engine;
 pub mod metrics;
 
 pub use config::{EngineConfig, Scheme, TimeModel};
-pub use engine::{measure_loads, prepare, run, run_iteration, run_rust, Backend, Job, XlaKind};
+pub use engine::{
+    measure_loads, measure_loads_prepared, prepare, run, run_iteration, run_iteration_scratch,
+    run_rust, Backend, EngineScratch, Job, PreparedJob, XlaKind,
+};
 pub use metrics::{IterationMetrics, JobReport, PhaseTimes};

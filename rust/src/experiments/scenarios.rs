@@ -104,6 +104,7 @@ pub fn testbed() -> EngineConfig {
         time: TimeModel::default(),
         account_state_update: true,
         validate: false,
+        parallel: true,
     }
 }
 

@@ -33,11 +33,28 @@
 //! | [`combinatorics`] | binomials, subset ranking, the `C(K,r)` batch index |
 //! | [`allocation`] | Map batch allocation, Reduce partition, RB/SBM composite schemes |
 //! | [`mapreduce`] | vertex-program abstraction; PageRank and SSSP programs |
-//! | [`shuffle`] | uncoded unicast scheme + the paper's coded scheme (encode/decode) |
+//! | [`shuffle`] | uncoded unicast scheme + the paper's coded scheme; flat-arena [`shuffle::ShufflePlan`] + slice encode/decode kernels |
 //! | [`network`] | shared-bus wire-time model (one transmitter at a time) |
-//! | [`coordinator`] | phase engine + threaded cluster driver, metrics |
-//! | [`runtime`] | PJRT artifact loading / execution (AOT JAX+Pallas) |
+//! | [`coordinator`] | phase engine (reusable [`coordinator::EngineScratch`], zero-alloc steady state, rayon-parallel phases) + threaded cluster driver, metrics |
+//! | `runtime` | PJRT artifact loading / execution (AOT JAX+Pallas; `xla` feature) |
 //! | [`analysis`] | closed forms of Theorems 1–4, Lemma 3 bound, stats helpers |
+//! | [`util`] | deterministic RNG, JSON, bench/test kits, [`util::par`] parallelism shim |
+//!
+//! ## Performance architecture
+//!
+//! The coded-shuffle data path is allocation-free at steady state: all
+//! plans are flattened into one pair arena with CSR-style offset tables
+//! at [`coordinator::prepare`] time, and every per-iteration buffer lives
+//! in a caller-owned [`coordinator::EngineScratch`]. The engine's own
+//! data path allocates nothing after warm-up — asserted by a counting
+//! allocator on the serial path (`tests/zero_alloc.rs`); with
+//! parallelism on, rayon's scheduler may allocate internally, but the
+//! engine still reuses the same scratch arenas. Encode/Decode fan out
+//! over multicast groups and Reduce over workers (rayon, `parallel`
+//! feature); each task writes a disjoint precomputed arena region and
+//! all merges replay serially in canonical order, so results and metrics
+//! are bit-identical across the serial path, the parallel path, and any
+//! thread count.
 
 pub mod allocation;
 pub mod analysis;
@@ -47,6 +64,7 @@ pub mod coordinator;
 pub mod graph;
 pub mod mapreduce;
 pub mod network;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod shuffle;
 pub mod util;

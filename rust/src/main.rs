@@ -283,6 +283,15 @@ fn cmd_inspect(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+#[cfg(not(feature = "xla"))]
+fn cmd_artifacts(args: &Args) -> Result<(), String> {
+    args.check_known(&["dir"])?;
+    Err("this binary was built without the `xla` feature; rebuild with \
+         `--features xla` (and a vendored xla crate) to load PJRT artifacts"
+        .into())
+}
+
+#[cfg(feature = "xla")]
 fn cmd_artifacts(args: &Args) -> Result<(), String> {
     args.check_known(&["dir"])?;
     let dir = std::path::PathBuf::from(args.get("dir").unwrap_or("artifacts"));

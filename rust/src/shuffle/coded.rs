@@ -9,8 +9,18 @@
 //! own — it Maps the batches those rows' IVs come from — and so recovers
 //! one segment of each IV it needs; over the `r` senders it collects all
 //! `r` segments.
+//!
+//! Two API families (§Perf):
+//!
+//! * **Arena kernels** ([`eval_group_values`], [`encode_group_into`]) —
+//!   write into caller-provided slices aligned with the
+//!   [`ShufflePlan`](super::plan::ShufflePlan) arena layout; the engine's
+//!   zero-allocation hot path.
+//! * **Owned-message API** ([`encode_sender`], [`encode_group`],
+//!   [`CodedMessage`]) — allocates per message; used by the threaded
+//!   cluster driver (messages really travel through channels) and tests.
 
-use super::plan::GroupPlan;
+use super::plan::GroupRef;
 use super::segments::{seg_bytes, seg_of};
 use crate::graph::csr::Vertex;
 
@@ -30,9 +40,9 @@ impl CodedMessage {
     }
 }
 
-/// Segment index associated with `plan.servers[sender_idx]` for the row of
-/// `plan.servers[row_idx]`: the position of the sender within the sorted
-/// set `S \ {row server}`.
+/// Segment index associated with `servers[sender_idx]` for the row of
+/// `servers[row_idx]`: the position of the sender within the sorted set
+/// `S \ {row server}`.
 #[inline]
 pub fn segment_index(sender_idx: usize, row_idx: usize) -> usize {
     debug_assert_ne!(sender_idx, row_idx);
@@ -43,15 +53,68 @@ pub fn segment_index(sender_idx: usize, row_idx: usize) -> usize {
     }
 }
 
-/// Evaluate all row IV values of a group through `value(reducer, mapper)`.
+/// Evaluate every IV of a group into `vals`, aligned with the group's
+/// pair slice (`vals[c]` is the value of `group.group_pairs()[c]`).
 ///
-/// Shared helper for encode (sender's own table) and decode (receiver's
-/// reconstruction of the other rows) — both sides compute Map outputs
-/// independently and identically.
-pub fn row_values<F: Fn(Vertex, Vertex) -> u64>(plan: &GroupPlan, value: &F) -> Vec<Vec<u64>> {
-    plan.rows
-        .iter()
-        .map(|row| row.iter().map(|&(i, j)| value(i, j)).collect())
+/// Shared kernel for encode (sender tables) and decode (cancellation) —
+/// both sides compute Map outputs independently and identically. Writes
+/// only; no allocation.
+pub fn eval_group_values<F: Fn(Vertex, Vertex) -> u64>(
+    group: GroupRef<'_>,
+    value: &F,
+    vals: &mut [u64],
+) {
+    let pairs = group.group_pairs();
+    debug_assert_eq!(vals.len(), pairs.len());
+    for (slot, &(i, j)) in vals.iter_mut().zip(pairs) {
+        *slot = value(i, j);
+    }
+}
+
+/// Encode all senders of a group into a flat column arena (paper Fig 6).
+///
+/// `vals` is the group's value slice (from [`eval_group_values`]);
+/// `col_counts` the per-sender column counts
+/// ([`ShufflePlan::sender_cols`](super::plan::ShufflePlan::sender_cols));
+/// `cols` the output arena of length `col_counts.sum()`, sender-major.
+/// No allocation.
+pub fn encode_group_into(
+    group: GroupRef<'_>,
+    vals: &[u64],
+    r: usize,
+    col_counts: &[u32],
+    cols: &mut [u64],
+) {
+    let members = group.members();
+    debug_assert_eq!(col_counts.len(), members);
+    let sb = seg_bytes(r);
+    cols.fill(0);
+    let mut cbase = 0usize;
+    for s_idx in 0..members {
+        let q = col_counts[s_idx] as usize;
+        let ccols = &mut cols[cbase..cbase + q];
+        for row_idx in 0..members {
+            if row_idx == s_idx {
+                continue;
+            }
+            let seg_idx = segment_index(s_idx, row_idx);
+            let rvals = &vals[group.local_row_range(row_idx)];
+            // rvals.len() <= q by definition of the sender column count
+            for (col, &bits) in ccols.iter_mut().zip(rvals) {
+                *col ^= seg_of(bits, seg_idx, sb);
+            }
+        }
+        cbase += q;
+    }
+    debug_assert_eq!(cbase, cols.len());
+}
+
+/// Evaluate all row IV values of a group through `value(reducer, mapper)`
+/// into per-row `Vec`s (owned-message API; the engine uses
+/// [`eval_group_values`] instead).
+pub fn row_values<F: Fn(Vertex, Vertex) -> u64>(group: GroupRef<'_>, value: &F) -> Vec<Vec<u64>> {
+    (0..group.members())
+        .map(|idx| group.row(idx).iter().map(|&(i, j)| value(i, j)).collect())
         .collect()
 }
 
@@ -60,42 +123,33 @@ pub fn row_values<F: Fn(Vertex, Vertex) -> u64>(plan: &GroupPlan, value: &F) -> 
 /// [`encode_sender`] never reads it; the threaded cluster driver uses this
 /// so each worker touches only state it owns.
 pub fn row_values_except<F: Fn(Vertex, Vertex) -> u64>(
-    plan: &GroupPlan,
+    group: GroupRef<'_>,
     skip_idx: usize,
     value: &F,
 ) -> Vec<Vec<u64>> {
-    plan.rows
-        .iter()
-        .enumerate()
-        .map(|(idx, row)| {
+    (0..group.members())
+        .map(|idx| {
             if idx == skip_idx {
                 Vec::new()
             } else {
-                row.iter().map(|&(i, j)| value(i, j)).collect()
+                group.row(idx).iter().map(|&(i, j)| value(i, j)).collect()
             }
         })
         .collect()
 }
 
-/// Encode the multicast of one sender (paper Fig 6).
+/// Encode the multicast of one sender (paper Fig 6), owned-message API.
 ///
 /// `vals` are the group's row values (from [`row_values`]); `r` is the
 /// computation load (segment count).
 pub fn encode_sender(
-    plan: &GroupPlan,
+    group: GroupRef<'_>,
     sender_idx: usize,
     vals: &[Vec<u64>],
     r: usize,
 ) -> CodedMessage {
     let sb = seg_bytes(r);
-    let q = plan
-        .rows
-        .iter()
-        .enumerate()
-        .filter(|&(idx, _)| idx != sender_idx)
-        .map(|(_, row)| row.len())
-        .max()
-        .unwrap_or(0);
+    let q = group.sender_cols_needed(sender_idx);
     let mut columns = vec![0u64; q];
     for (row_idx, rvals) in vals.iter().enumerate() {
         if row_idx == sender_idx {
@@ -109,16 +163,16 @@ pub fn encode_sender(
     CodedMessage { sender_idx, columns }
 }
 
-/// Encode all `r + 1` senders of a group at once (sim-driver fast path:
-/// row values are computed once and shared across senders).
+/// Encode all `r + 1` senders of a group at once (row values are computed
+/// once and shared across senders).
 pub fn encode_group<F: Fn(Vertex, Vertex) -> u64>(
-    plan: &GroupPlan,
+    group: GroupRef<'_>,
     value: &F,
     r: usize,
 ) -> Vec<CodedMessage> {
-    let vals = row_values(plan, value);
-    (0..plan.servers.len())
-        .map(|s| encode_sender(plan, s, &vals, r))
+    let vals = row_values(group, value);
+    (0..group.members())
+        .map(|s| encode_sender(group, s, &vals, r))
         .collect()
 }
 
@@ -150,8 +204,8 @@ mod tests {
         // Paper: X_1 = {v51^1 ^ v43^1, v34^1 ^ v62^1} etc. With value(i,j)
         // chosen as distinguishable constants we can check the XOR algebra.
         let (g, alloc) = fig3();
-        let plans = build_group_plans(&g, &alloc);
-        let p = &plans[0];
+        let plan = build_group_plans(&g, &alloc);
+        let p = plan.group(0);
         // value = pack (i,j) into bits so segments are traceable
         let value = |i: Vertex, j: Vertex| ((i as u64) << 32) | j as u64;
         let msgs = encode_group(p, &value, 2);
@@ -169,10 +223,39 @@ mod tests {
     }
 
     #[test]
+    fn arena_encode_matches_owned_messages() {
+        let (g, alloc) = fig3();
+        let plan = build_group_plans(&g, &alloc);
+        let value = |i: Vertex, j: Vertex| {
+            (((i as u64) << 32) ^ j as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        };
+        let r = alloc.r;
+        let mut vals = vec![0u64; plan.total_ivs()];
+        let mut cols = vec![0u64; plan.total_cols()];
+        for gi in 0..plan.num_groups() {
+            let p = plan.group(gi);
+            let vrange = plan.pair_range(gi);
+            eval_group_values(p, &value, &mut vals[vrange.clone()]);
+            let crange = plan.col_range(gi);
+            encode_group_into(p, &vals[vrange], r, plan.sender_cols(gi), &mut cols[crange.clone()]);
+            // owned-message reference
+            let msgs = encode_group(p, &value, r);
+            let mut cursor = crange.start;
+            for (s_idx, msg) in msgs.iter().enumerate() {
+                let q = plan.sender_cols(gi)[s_idx] as usize;
+                assert_eq!(msg.columns.len(), q, "sender {s_idx}");
+                assert_eq!(&cols[cursor..cursor + q], &msg.columns[..], "sender {s_idx}");
+                cursor += q;
+            }
+            assert_eq!(cursor, crange.end);
+        }
+    }
+
+    #[test]
     fn payload_bytes_scale_with_r() {
         let (g, alloc) = fig3();
-        let plans = build_group_plans(&g, &alloc);
-        let msgs = encode_group(&plans[0], &|_, _| 0xABCD, 2);
+        let plan = build_group_plans(&g, &alloc);
+        let msgs = encode_group(plan.group(0), &|_, _| 0xABCD, 2);
         assert_eq!(msgs[0].payload_bytes(2), 2 * 4);
     }
 
@@ -182,12 +265,12 @@ mod tests {
         // 4 ∈ B_{1,2}) and server 2 needs v_{4,0}; server 1 needs nothing.
         let g = Csr::from_edges(6, &[(0, 4)]);
         let alloc = Allocation::er_scheme(6, 3, 2);
-        let plans = build_group_plans(&g, &alloc);
-        assert_eq!(plans.len(), 1);
-        let p = &plans[0];
-        assert_eq!(p.rows[0], vec![(0, 4)]);
-        assert!(p.rows[1].is_empty());
-        assert_eq!(p.rows[2], vec![(4, 0)]);
+        let plan = build_group_plans(&g, &alloc);
+        assert_eq!(plan.num_groups(), 1);
+        let p = plan.group(0);
+        assert_eq!(p.row(0), &[(0, 4)]);
+        assert!(p.row(1).is_empty());
+        assert_eq!(p.row(2), &[(4, 0)]);
         // every sender's table has max non-empty row length 1
         let msgs = encode_group(p, &|_, _| 7, 2);
         for m in &msgs {

@@ -17,7 +17,8 @@
 //! coding multiply, which is [18]'s headline result.
 //!
 //! Keys are packed as `(reducer, batch-index)` so the segment/XOR
-//! machinery from [`super::coded`]/[`super::decoder`] is reused verbatim.
+//! machinery from [`super::coded`]/[`super::decoder`] — including the
+//! flat [`ShufflePlan`] arena — is reused verbatim.
 
 use std::collections::HashMap;
 
@@ -26,15 +27,15 @@ use crate::graph::csr::{Csr, Vertex};
 use crate::mapreduce::program::VertexProgram;
 
 use super::load::ShuffleLoad;
-use super::plan::GroupPlan;
+use super::plan::ShufflePlan;
 
 /// Build combiner-granularity group plans: row entries are `(i, t)` pairs
 /// (`t` = batch index, stored in the mapper slot), canonical order
-/// `(t asc, i asc)`.
-pub fn build_combined_group_plans(g: &Csr, alloc: &Allocation) -> Vec<GroupPlan> {
+/// `(t asc, i asc)`. Group order is canonical (sorted by member set).
+pub fn build_combined_group_plans(g: &Csr, alloc: &Allocation) -> ShufflePlan {
     let r = alloc.r;
     let mut index: HashMap<Vec<u8>, usize> = HashMap::new();
-    let mut plans: Vec<GroupPlan> = Vec::new();
+    let mut nested: Vec<(Vec<u8>, Vec<Vec<(Vertex, Vertex)>>)> = Vec::new();
     let mut s_buf: Vec<u8> = Vec::with_capacity(r + 1);
     for (t, batch) in alloc.batches.iter().enumerate() {
         // reducers with at least one edge into this batch, deduped
@@ -57,27 +58,24 @@ pub fn build_combined_group_plans(g: &Csr, alloc: &Allocation) -> Vec<GroupPlan>
             s_buf.extend_from_slice(&batch.servers[..ins]);
             s_buf.push(k);
             s_buf.extend_from_slice(&batch.servers[ins..]);
-            let plan_idx = match index.get(&s_buf) {
+            let group_idx = match index.get(&s_buf) {
                 Some(&idx) => idx,
                 None => {
-                    let idx = plans.len();
+                    let idx = nested.len();
                     index.insert(s_buf.clone(), idx);
-                    plans.push(GroupPlan {
-                        servers: s_buf.clone(),
-                        rows: vec![Vec::new(); r + 1],
-                    });
+                    nested.push((s_buf.clone(), vec![Vec::new(); r + 1]));
                     idx
                 }
             };
             // mapper slot carries the batch index
-            plans[plan_idx].rows[ins].push((i, t as Vertex));
+            nested[group_idx].1[ins].push((i, t as Vertex));
         }
     }
     // canonical (t asc, i asc) row order: entries were appended in
     // (t asc, i asc) already because batches are visited ascending and
-    // `seen` is sorted per batch.
-    plans.sort_by(|a, b| a.servers.cmp(&b.servers));
-    plans
+    // `seen` is sorted per batch; group order canonicalized by the arena
+    // builder's sort.
+    ShufflePlan::from_nested(r + 1, nested)
 }
 
 /// Evaluate a combined IV `u_{i,t}`: fold the program's Map over the
@@ -148,19 +146,12 @@ pub fn measure_combined_loads(g: &Csr, alloc: &Allocation) -> (f64, f64) {
     for t in plan_uncoded_combined(g, alloc) {
         unc.add_uncoded(t.ivs.len());
     }
+    let plan = build_combined_group_plans(g, alloc);
     let mut cod = ShuffleLoad::default();
-    for plan in build_combined_group_plans(g, alloc) {
-        for s_idx in 0..plan.servers.len() {
-            let q = plan
-                .rows
-                .iter()
-                .enumerate()
-                .filter(|&(i, _)| i != s_idx)
-                .map(|(_, row)| row.len())
-                .max()
-                .unwrap_or(0);
+    for gi in 0..plan.num_groups() {
+        for &q in plan.sender_cols(gi) {
             if q > 0 {
-                cod.add_coded(q, r);
+                cod.add_coded(q as usize, r);
             }
         }
     }
@@ -181,14 +172,8 @@ mod tests {
     fn combined_plans_dedupe_edges() {
         let g = er(120, 0.3, &mut DetRng::seed(1)); // dense: many edges per (i,t)
         let alloc = Allocation::er_scheme(120, 4, 2);
-        let plain: usize = crate::shuffle::plan::build_group_plans(&g, &alloc)
-            .iter()
-            .map(|p| p.total_ivs())
-            .sum();
-        let combined: usize = build_combined_group_plans(&g, &alloc)
-            .iter()
-            .map(|p| p.total_ivs())
-            .sum();
+        let plain = crate::shuffle::plan::build_group_plans(&g, &alloc).total_ivs();
+        let combined = build_combined_group_plans(&g, &alloc).total_ivs();
         assert!(combined < plain / 2, "combining must collapse: {combined} vs {plain}");
         // upper bound: every (reducer, batch) pair at most once
         assert!(combined <= 120 * alloc.batches.len());
@@ -224,15 +209,28 @@ mod tests {
         let value = |i: Vertex, t: Vertex| {
             combined_value(&g, &alloc, &prog, &state, i, t as usize).to_bits()
         };
-        for plan in build_combined_group_plans(&g, &alloc) {
-            let msgs = encode_group(&plan, &value, r);
-            for (idx, &k) in plan.servers.iter().enumerate() {
-                let got = recover_group(&plan, k, &msgs, &value, r);
-                assert_eq!(got.len(), plan.rows[idx].len());
-                for (riv, &(i, t)) in got.iter().zip(&plan.rows[idx]) {
+        for group in build_combined_group_plans(&g, &alloc).groups() {
+            let msgs = encode_group(group, &value, r);
+            for (idx, &k) in group.servers.iter().enumerate() {
+                let got = recover_group(group, k, &msgs, &value, r);
+                assert_eq!(got.len(), group.row_len(idx));
+                for (riv, &(i, t)) in got.iter().zip(group.row(idx)) {
                     assert_eq!(riv.bits, value(i, t), "({i},{t})");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn combined_build_is_deterministic() {
+        let g = er(100, 0.2, &mut DetRng::seed(7));
+        let alloc = Allocation::er_scheme(100, 5, 2);
+        let a = build_combined_group_plans(&g, &alloc);
+        let b = build_combined_group_plans(&g, &alloc);
+        assert_eq!(a, b);
+        let keys: Vec<&[u8]> = a.groups().map(|p| p.servers).collect();
+        for w in keys.windows(2) {
+            assert!(w[0] < w[1], "groups out of order");
         }
     }
 
@@ -268,10 +266,7 @@ mod tests {
     fn transfers_cover_all_pairs() {
         let g = er(100, 0.2, &mut DetRng::seed(6));
         let alloc = Allocation::er_scheme(100, 4, 2);
-        let planned: usize = build_combined_group_plans(&g, &alloc)
-            .iter()
-            .map(|p| p.total_ivs())
-            .sum();
+        let planned = build_combined_group_plans(&g, &alloc).total_ivs();
         let transferred: usize =
             plan_uncoded_combined(&g, &alloc).iter().map(|t| t.ivs.len()).sum();
         assert_eq!(planned, transferred);

@@ -7,9 +7,18 @@
 //! locally, in the same canonical order the sender used. What remains is
 //! the sender-`s` segment of the `c`-th IV the receiver needs. Collecting
 //! segments from all `r` senders reassembles each needed IV exactly.
+//!
+//! [`decode_group_into`] is the engine's zero-allocation arena kernel: it
+//! decodes *every* member of a group straight into a bits arena aligned
+//! with the plan's pair layout. The column values are XORs of masked
+//! segments (each `seg_of` output fits the segment mask), so shifting a
+//! whole column into its reassembly position distributes over the
+//! cancellation XORs — one pass, no temporary buffers. The owned-message
+//! API ([`decode_from_sender`], [`recover_group`]) remains for the
+//! threaded cluster driver and tests.
 
 use super::coded::{segment_index, CodedMessage};
-use super::plan::GroupPlan;
+use super::plan::GroupRef;
 use super::segments::{place_seg, seg_bytes, seg_mask, seg_of};
 use crate::graph::csr::Vertex;
 
@@ -21,15 +30,80 @@ pub struct RecoveredIv {
     pub bits: u64,
 }
 
+/// Decode all members of a group from the flat column arena into `bits`
+/// (aligned with the group's pair slice, like the `vals` input).
+///
+/// `vals` must hold every row's values ([`super::coded::eval_group_values`]);
+/// `cols` the sender-major column arena ([`super::coded::encode_group_into`]);
+/// `col_counts` the per-sender column counts. After the call, `bits[c]`
+/// equals the full IV value of `group.group_pairs()[c]` for every pair.
+/// No allocation.
+pub fn decode_group_into(
+    group: GroupRef<'_>,
+    vals: &[u64],
+    cols: &[u64],
+    col_counts: &[u32],
+    r: usize,
+    bits: &mut [u64],
+) {
+    let members = group.members();
+    debug_assert_eq!(vals.len(), group.total_ivs());
+    debug_assert_eq!(bits.len(), group.total_ivs());
+    debug_assert_eq!(col_counts.len(), members);
+    let sb = seg_bytes(r);
+    bits.fill(0);
+    for m_idx in 0..members {
+        let my = group.local_row_range(m_idx);
+        let my_len = my.len();
+        if my_len == 0 {
+            continue;
+        }
+        let out = &mut bits[my.clone()];
+        let mut cbase = 0usize;
+        for s_idx in 0..members {
+            let q = col_counts[s_idx] as usize;
+            if s_idx == m_idx {
+                cbase += q;
+                continue;
+            }
+            // where sender s's segment lands inside *our* reassembled IV
+            let place = segment_index(s_idx, m_idx);
+            let shift = place * sb * 8;
+            if shift >= 64 {
+                cbase += q; // pure padding segment: contributes nothing
+                continue;
+            }
+            // sender's columns (masked by construction: XORs of seg_of
+            // outputs), shifted straight into place — XOR distributes
+            for (o, &col) in out.iter_mut().zip(&cols[cbase..cbase + my_len]) {
+                *o ^= col << shift;
+            }
+            // cancel the other rows' segments, row-major
+            for k_idx in 0..members {
+                if k_idx == m_idx || k_idx == s_idx {
+                    continue;
+                }
+                let seg_idx = segment_index(s_idx, k_idx);
+                let rr = group.local_row_range(k_idx);
+                let upto = rr.len().min(my_len);
+                for (o, &v) in out[..upto].iter_mut().zip(&vals[rr.start..rr.start + upto]) {
+                    *o ^= seg_of(v, seg_idx, sb) << shift;
+                }
+            }
+            cbase += q;
+        }
+    }
+}
+
 /// Decode one sender's message at one receiver: returns the sender's
 /// segment of each IV in the receiver's row (index-aligned with
-/// `plan.rows[receiver_idx]`).
+/// `group.row(receiver_idx)`).
 ///
 /// `vals` must contain the locally recomputable row values for every row
 /// other than the receiver's own (the receiver's entry is ignored); use
 /// [`super::coded::row_values`] with the receiver's Map state.
 pub fn decode_from_sender(
-    plan: &GroupPlan,
+    group: GroupRef<'_>,
     receiver_idx: usize,
     msg: &CodedMessage,
     vals: &[Vec<u64>],
@@ -38,7 +112,7 @@ pub fn decode_from_sender(
     assert_ne!(msg.sender_idx, receiver_idx, "sender cannot decode itself");
     let sb = seg_bytes(r);
     let mask = seg_mask(sb);
-    let my_len = plan.rows[receiver_idx].len();
+    let my_len = group.row_len(receiver_idx);
     // row-major accumulation (§Perf): stream each foreign row through the
     // accumulator instead of walking all rows per column — sequential
     // loads, and the seg_of shift is loop-invariant per row.
@@ -66,53 +140,50 @@ pub fn decode_from_sender(
 /// (used to cancel other rows); `msgs` are all `r` messages addressed to
 /// this receiver (any order).
 pub fn recover_group<F: Fn(Vertex, Vertex) -> u64>(
-    plan: &GroupPlan,
+    group: GroupRef<'_>,
     receiver: u8,
     msgs: &[CodedMessage],
     local_value: &F,
     r: usize,
 ) -> Vec<RecoveredIv> {
-    let receiver_idx = plan
+    let receiver_idx = group
         .member_index(receiver)
         .expect("receiver not in group");
     // Recompute the other rows' values once (shared across senders).
-    let vals: Vec<Vec<u64>> = plan
-        .rows
-        .iter()
-        .enumerate()
-        .map(|(idx, row)| {
+    let vals: Vec<Vec<u64>> = (0..group.members())
+        .map(|idx| {
             if idx == receiver_idx {
                 Vec::new() // own row: unknown, never read
             } else {
-                row.iter().map(|&(i, j)| local_value(i, j)).collect()
+                group.row(idx).iter().map(|&(i, j)| local_value(i, j)).collect()
             }
         })
         .collect();
-    recover_group_shared(plan, receiver_idx, msgs, &vals, r)
+    recover_group_shared(group, receiver_idx, msgs, &vals, r)
 }
 
-/// [`recover_group`] with the row values already evaluated (the engine's
-/// fast path: encode already computed `row_values` for the whole group, so
-/// every receiver shares them instead of re-deriving `r-1` rows each —
-/// a §Perf optimization worth ~r× on the decode hot path).
+/// [`recover_group`] with the row values already evaluated (when encode
+/// already computed `row_values` for the whole group, every receiver can
+/// share them instead of re-deriving `r-1` rows each — a §Perf
+/// optimization worth ~r× on the decode hot path).
 ///
 /// `vals[receiver_idx]` may be populated or empty; it is never read.
 pub fn recover_group_shared(
-    plan: &GroupPlan,
+    group: GroupRef<'_>,
     receiver_idx: usize,
     msgs: &[CodedMessage],
     vals: &[Vec<u64>],
     r: usize,
 ) -> Vec<RecoveredIv> {
     let sb = seg_bytes(r);
-    let my_row = &plan.rows[receiver_idx];
+    let my_row = group.row(receiver_idx);
     let mut bits = vec![0u64; my_row.len()];
     let mut seen = vec![0usize; my_row.len()];
     for msg in msgs {
         if msg.sender_idx == receiver_idx {
             continue; // own transmission carries nothing for us
         }
-        let segs = decode_from_sender(plan, receiver_idx, msg, vals, r);
+        let segs = decode_from_sender(group, receiver_idx, msg, vals, r);
         // the sender's segment index within *our* row:
         let seg_idx = segment_index(msg.sender_idx, receiver_idx);
         for (c, &s) in segs.iter().enumerate() {
@@ -134,29 +205,56 @@ mod tests {
     use crate::allocation::Allocation;
     use crate::graph::csr::Csr;
     use crate::graph::er::er;
-    use crate::shuffle::coded::encode_group;
+    use crate::shuffle::coded::{encode_group, encode_group_into, eval_group_values};
     use crate::shuffle::plan::build_group_plans;
     use crate::util::rng::DetRng;
 
+    fn oracle_value(i: Vertex, j: Vertex) -> u64 {
+        // arbitrary but deterministic full-width bits
+        let x = ((i as u64) << 32) ^ j as u64;
+        x.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0xDEAD_BEEF
+    }
+
     /// End-to-end: encode with a value oracle, decode at every member,
-    /// check bit-exact recovery of exactly the needed IVs.
+    /// check bit-exact recovery of exactly the needed IVs — through both
+    /// the owned-message API and the arena kernels.
     fn roundtrip(g: &Csr, alloc: &Allocation) {
         let r = alloc.r;
-        let value = |i: Vertex, j: Vertex| {
-            // arbitrary but deterministic full-width bits
-            let x = ((i as u64) << 32) ^ j as u64;
-            x.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0xDEAD_BEEF
-        };
-        for plan in build_group_plans(g, alloc) {
-            let msgs = encode_group(&plan, &value, r);
-            for (idx, &k) in plan.servers.iter().enumerate() {
-                let got = recover_group(&plan, k, &msgs, &value, r);
-                assert_eq!(got.len(), plan.rows[idx].len());
-                for (riv, &(i, j)) in got.iter().zip(&plan.rows[idx]) {
+        let value = oracle_value;
+        let plan = build_group_plans(g, alloc);
+        // owned-message path
+        for group in plan.groups() {
+            let msgs = encode_group(group, &value, r);
+            for (idx, &k) in group.servers.iter().enumerate() {
+                let got = recover_group(group, k, &msgs, &value, r);
+                assert_eq!(got.len(), group.row_len(idx));
+                for (riv, &(i, j)) in got.iter().zip(group.row(idx)) {
                     assert_eq!((riv.reducer, riv.mapper), (i, j));
                     assert_eq!(riv.bits, value(i, j), "IV ({i},{j}) corrupted");
                 }
             }
+        }
+        // arena path: every pair decodes to its oracle value
+        let mut vals = vec![0u64; plan.total_ivs()];
+        let mut cols = vec![0u64; plan.total_cols()];
+        let mut bits = vec![0u64; plan.total_ivs()];
+        for gi in 0..plan.num_groups() {
+            let group = plan.group(gi);
+            let vr = plan.pair_range(gi);
+            let cr = plan.col_range(gi);
+            eval_group_values(group, &value, &mut vals[vr.clone()]);
+            encode_group_into(group, &vals[vr.clone()], r, plan.sender_cols(gi), &mut cols[cr.clone()]);
+            decode_group_into(
+                group,
+                &vals[vr.clone()],
+                &cols[cr],
+                plan.sender_cols(gi),
+                r,
+                &mut bits[vr],
+            );
+        }
+        for (idx, &(i, j)) in plan.pairs().iter().enumerate() {
+            assert_eq!(bits[idx], value(i, j), "arena decode of ({i},{j})");
         }
     }
 
@@ -195,13 +293,118 @@ mod tests {
     }
 
     #[test]
+    fn r_equals_one_degenerate_roundtrip() {
+        // r = 1: groups have 2 members, one 64-bit segment, no real coding
+        // (each "coded column" is the full IV) — the degenerate base case
+        let g = er(50, 0.2, &mut DetRng::seed(15));
+        roundtrip(&g, &Allocation::er_scheme(50, 4, 1));
+        roundtrip(&g, &Allocation::er_scheme(50, 2, 1));
+    }
+
+    #[test]
+    fn empty_row_inside_group_roundtrip() {
+        // single edge: one member of the (only) group has an empty row and
+        // an empty sender table; decode must still recover the other rows
+        let g = Csr::from_edges(6, &[(0, 4)]);
+        let alloc = Allocation::er_scheme(6, 3, 2);
+        roundtrip(&g, &alloc);
+        let plan = build_group_plans(&g, &alloc);
+        let group = plan.group(0);
+        assert!(group.row(1).is_empty(), "precondition: middle member idle");
+        // the idle member still *sends* (its table holds the others' rows)
+        assert_eq!(group.sender_cols_needed(1), 1);
+    }
+
+    #[test]
+    fn sender_with_empty_table_sends_nothing() {
+        // K=4, r=2, single edge {0,5}: direction (0 <- 5) lands in group
+        // {0,2,3} as the only non-empty row (member 0's), so member 0's
+        // *own* sender table — the other members' rows — is empty: it
+        // emits zero columns while still receiving from senders 2 and 3
+        let g = Csr::from_edges(6, &[(0, 5)]);
+        let alloc = Allocation::er_scheme(6, 4, 2);
+        let plan = build_group_plans(&g, &alloc);
+        let group = plan
+            .groups()
+            .find(|p| p.servers == [0, 2, 3])
+            .expect("group {0,2,3} must exist");
+        let m0 = group.member_index(0).unwrap();
+        assert!(!group.row(m0).is_empty(), "member 0 needs the IV");
+        assert_eq!(group.sender_cols_needed(m0), 0, "empty table, no columns");
+        for idx in 0..group.members() {
+            if idx != m0 {
+                assert!(group.row(idx).is_empty());
+                assert!(group.sender_cols_needed(idx) > 0);
+            }
+        }
+        roundtrip(&g, &alloc);
+    }
+
+    #[test]
+    fn coded_and_uncoded_recover_identical_iv_multisets() {
+        // property: on random ER draws, the multiset of (reducer, mapper,
+        // bits) delivered by the coded scheme equals what the uncoded
+        // scheme would unicast
+        use crate::shuffle::uncoded::plan_uncoded;
+        for seed in 0..8u64 {
+            let mut rng = DetRng::seed(1000 + seed);
+            let n = 40 + (seed as usize) * 7;
+            let g = er(n, 0.08 + 0.03 * (seed % 4) as f64, &mut rng);
+            let k = 3 + (seed as usize % 3);
+            let r = 1 + (seed as usize % k.min(3));
+            let alloc = Allocation::er_scheme(n, k, r);
+            let value = oracle_value;
+
+            let plan = build_group_plans(&g, &alloc);
+            let mut vals = vec![0u64; plan.total_ivs()];
+            let mut cols = vec![0u64; plan.total_cols()];
+            let mut bits = vec![0u64; plan.total_ivs()];
+            for gi in 0..plan.num_groups() {
+                let group = plan.group(gi);
+                let vr = plan.pair_range(gi);
+                let cr = plan.col_range(gi);
+                eval_group_values(group, &value, &mut vals[vr.clone()]);
+                encode_group_into(
+                    group,
+                    &vals[vr.clone()],
+                    alloc.r,
+                    plan.sender_cols(gi),
+                    &mut cols[cr.clone()],
+                );
+                decode_group_into(
+                    group,
+                    &vals[vr.clone()],
+                    &cols[cr],
+                    plan.sender_cols(gi),
+                    alloc.r,
+                    &mut bits[vr],
+                );
+            }
+            let mut coded: Vec<(Vertex, Vertex, u64)> = plan
+                .pairs()
+                .iter()
+                .zip(&bits)
+                .map(|(&(i, j), &b)| (i, j, b))
+                .collect();
+            let mut uncoded: Vec<(Vertex, Vertex, u64)> = plan_uncoded(&g, &alloc)
+                .iter()
+                .flat_map(|t| t.ivs.iter().map(|&(i, j)| (i, j, value(i, j))))
+                .collect();
+            coded.sort_unstable();
+            uncoded.sort_unstable();
+            assert_eq!(coded, uncoded, "seed={seed} K={k} r={r}");
+        }
+    }
+
+    #[test]
     #[should_panic(expected = "sender cannot decode itself")]
     fn self_decode_rejected() {
         let g = Csr::from_edges(6, &[(0, 4)]);
         let alloc = Allocation::er_scheme(6, 3, 2);
-        let plan = &build_group_plans(&g, &alloc)[0];
-        let msgs = encode_group(plan, &|_, _| 1, 2);
-        let vals = crate::shuffle::coded::row_values(plan, &|_, _| 1);
-        decode_from_sender(plan, 0, &msgs[0], &vals, 2);
+        let plan = build_group_plans(&g, &alloc);
+        let group = plan.group(0);
+        let msgs = encode_group(group, &|_, _| 1, 2);
+        let vals = crate::shuffle::coded::row_values(group, &|_, _| 1);
+        decode_from_sender(group, 0, &msgs[0], &vals, 2);
     }
 }

@@ -1,7 +1,9 @@
 //! The Shuffle phase: the paper's coded scheme and the uncoded baseline.
 //!
 //! * [`plan`] — multicast-group planning: for every (r+1)-subset `S` of
-//!   servers, the per-member IV lists `Z^k_{S\{k}}` (paper eq. (14)).
+//!   servers, the per-member IV lists `Z^k_{S\{k}}` (paper eq. (14)),
+//!   stored as one flat pair arena + CSR-style offset tables
+//!   ([`ShufflePlan`]) in canonical group order.
 //! * [`segments`] — splitting a `T`-bit IV into `r` segments and
 //!   reassembling (paper §IV-A "each intermediate value is evenly split
 //!   into r segments").
@@ -23,4 +25,4 @@ pub mod uncoded;
 pub use coded::{encode_group, encode_sender, CodedMessage};
 pub use decoder::{decode_from_sender, recover_group, RecoveredIv};
 pub use load::{normalized, ShuffleLoad};
-pub use plan::{build_group_plans, GroupPlan};
+pub use plan::{build_group_plans, GroupRef, ShufflePlan};

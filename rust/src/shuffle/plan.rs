@@ -11,54 +11,312 @@
 //! and every decoder derive identical tables independently. The plan is
 //! graph-dependent but state-independent, so it is built once during
 //! pre-processing (as in the paper's EC2 setup) and reused every iteration.
+//!
+//! ## Storage (§Perf)
+//!
+//! All groups live in one [`ShufflePlan`]: a single flat `(reducer,
+//! mapper)` pair arena plus CSR-style `(group, row)` offset tables (the
+//! same layout idea as [`crate::graph::csr`]). The engine indexes its
+//! per-iteration value/bits scratch arenas with the *same* offsets, so
+//! the whole coded hot path is sequential array walks — no per-group or
+//! per-row heap allocation, no pointer chasing. [`GroupRef`] is a `Copy`
+//! view of one group used by the encode/decode kernels and the threaded
+//! cluster driver. Group order is canonical (sorted by the member-server
+//! set), independent of hash-map iteration order.
 
 use std::collections::HashMap;
 
 use crate::allocation::Allocation;
 use crate::graph::csr::{Csr, Vertex};
 
-/// One multicast group `S` with its per-member needed-IV rows.
-#[derive(Clone, Debug)]
-pub struct GroupPlan {
-    /// Sorted member servers `S` (`|S| = r + 1`).
-    pub servers: Vec<u8>,
-    /// `rows[idx]` = the IVs needed by `servers[idx]` and exclusively
-    /// Mappable by the other members: canonical (reducer, mapper) pairs.
-    pub rows: Vec<Vec<(Vertex, Vertex)>>,
+/// All multicast groups of a job, flattened into one arena.
+///
+/// Group `g`'s row `m` (the IVs needed by member `servers[g*(r+1)+m]`) is
+/// `pairs[row_off[g*(r+1)+m] .. row_off[g*(r+1)+m+1]]`, in canonical
+/// `(j asc, i asc)` order. `col_counts` holds, per `(group, sender)`, the
+/// number of coded columns that sender multicasts (the max length over
+/// the *other* members' rows) — precomputed here because it is needed by
+/// the encoder, the load accounting, and the engine's scratch layout.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShufflePlan {
+    /// Members per group (`r + 1`).
+    members: usize,
+    /// Number of groups.
+    num_groups: usize,
+    /// Flat sorted member-server lists, `num_groups * members`.
+    servers: Vec<u8>,
+    /// The pair arena: all rows of all groups, concatenated.
+    pairs: Vec<(Vertex, Vertex)>,
+    /// Row offsets into `pairs`, `num_groups * members + 1`.
+    row_off: Vec<usize>,
+    /// Per-(group, sender) coded column counts, `num_groups * members`.
+    col_counts: Vec<u32>,
+    /// Prefix sums of `col_counts`, `num_groups * members + 1`.
+    col_off: Vec<usize>,
+    /// Per-group pair offsets (`row_off` at stride `members`), `num_groups + 1`.
+    group_pair_off: Vec<usize>,
+    /// Per-group column offsets, `num_groups + 1`.
+    group_col_off: Vec<usize>,
 }
 
-impl GroupPlan {
+impl ShufflePlan {
+    /// An empty plan (no multicast groups), e.g. for `r = K` or uncoded
+    /// schemes.
+    pub fn empty(members: usize) -> Self {
+        ShufflePlan {
+            members: members.max(1),
+            num_groups: 0,
+            servers: Vec::new(),
+            pairs: Vec::new(),
+            row_off: vec![0],
+            col_counts: Vec::new(),
+            col_off: vec![0],
+            group_pair_off: vec![0],
+            group_col_off: vec![0],
+        }
+    }
+
+    /// Flatten nested per-group rows into the arena. Groups are sorted by
+    /// their server sets for a canonical, hash-independent order.
+    pub(crate) fn from_nested(
+        members: usize,
+        mut nested: Vec<(Vec<u8>, Vec<Vec<(Vertex, Vertex)>>)>,
+    ) -> Self {
+        nested.sort_by(|a, b| a.0.cmp(&b.0));
+        let num_groups = nested.len();
+        let total: usize = nested
+            .iter()
+            .map(|(_, rows)| rows.iter().map(|r| r.len()).sum::<usize>())
+            .sum();
+        let mut servers = Vec::with_capacity(num_groups * members);
+        let mut pairs = Vec::with_capacity(total);
+        let mut row_off = Vec::with_capacity(num_groups * members + 1);
+        let mut col_counts = Vec::with_capacity(num_groups * members);
+        let mut col_off = Vec::with_capacity(num_groups * members + 1);
+        let mut group_pair_off = Vec::with_capacity(num_groups + 1);
+        let mut group_col_off = Vec::with_capacity(num_groups + 1);
+        row_off.push(0);
+        col_off.push(0);
+        group_pair_off.push(0);
+        group_col_off.push(0);
+        for (s, rows) in nested {
+            debug_assert_eq!(s.len(), members);
+            debug_assert_eq!(rows.len(), members);
+            servers.extend_from_slice(&s);
+            for (idx, _) in rows.iter().enumerate() {
+                // sender's column count: max length over the *other* rows
+                let q = rows
+                    .iter()
+                    .enumerate()
+                    .filter(|&(other, _)| other != idx)
+                    .map(|(_, row)| row.len())
+                    .max()
+                    .unwrap_or(0);
+                col_counts.push(q as u32);
+                col_off.push(col_off.last().unwrap() + q);
+            }
+            for row in rows {
+                pairs.extend_from_slice(&row);
+                row_off.push(pairs.len());
+            }
+            group_pair_off.push(pairs.len());
+            group_col_off.push(*col_off.last().unwrap());
+        }
+        ShufflePlan {
+            members,
+            num_groups,
+            servers,
+            pairs,
+            row_off,
+            col_counts,
+            col_off,
+            group_pair_off,
+            group_col_off,
+        }
+    }
+
+    /// Members per group (`r + 1`).
+    #[inline]
+    pub fn members(&self) -> usize {
+        self.members
+    }
+
+    /// Number of multicast groups.
+    #[inline]
+    pub fn num_groups(&self) -> usize {
+        self.num_groups
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.num_groups == 0
+    }
+
+    /// Total IVs across all groups (the pair-arena length).
+    #[inline]
+    pub fn total_ivs(&self) -> usize {
+        self.pairs.len()
+    }
+
+    /// Total coded columns across all groups and senders.
+    #[inline]
+    pub fn total_cols(&self) -> usize {
+        *self.col_off.last().unwrap()
+    }
+
+    /// The whole pair arena (rows concatenated in canonical group order).
+    #[inline]
+    pub fn pairs(&self) -> &[(Vertex, Vertex)] {
+        &self.pairs
+    }
+
+    /// View of group `gi`.
+    #[inline]
+    pub fn group(&self, gi: usize) -> GroupRef<'_> {
+        let m = self.members;
+        GroupRef {
+            servers: &self.servers[gi * m..(gi + 1) * m],
+            row_off: &self.row_off[gi * m..gi * m + m + 1],
+            pairs: &self.pairs,
+        }
+    }
+
+    /// Iterate all groups in canonical order.
+    pub fn groups(&self) -> impl Iterator<Item = GroupRef<'_>> + '_ {
+        (0..self.num_groups).map(move |gi| self.group(gi))
+    }
+
+    /// Start of group `gi`'s pair range in the arena.
+    #[inline]
+    pub fn pair_start(&self, gi: usize) -> usize {
+        self.group_pair_off[gi]
+    }
+
+    /// Group `gi`'s pair range in the arena.
+    #[inline]
+    pub fn pair_range(&self, gi: usize) -> std::ops::Range<usize> {
+        self.group_pair_off[gi]..self.group_pair_off[gi + 1]
+    }
+
+    /// Group `gi`'s column range in a columns arena laid out by `col_off`.
+    #[inline]
+    pub fn col_range(&self, gi: usize) -> std::ops::Range<usize> {
+        self.group_col_off[gi]..self.group_col_off[gi + 1]
+    }
+
+    /// Per-sender coded column counts of group `gi` (`members` entries).
+    #[inline]
+    pub fn sender_cols(&self, gi: usize) -> &[u32] {
+        &self.col_counts[gi * self.members..(gi + 1) * self.members]
+    }
+
+    /// Per-group pair offsets (`num_groups + 1`), for partitioning a
+    /// pair-aligned arena across groups.
+    #[inline]
+    pub fn group_pair_offsets(&self) -> &[usize] {
+        &self.group_pair_off
+    }
+
+    /// Per-group column offsets (`num_groups + 1`).
+    #[inline]
+    pub fn group_col_offsets(&self) -> &[usize] {
+        &self.group_col_off
+    }
+}
+
+/// A borrowed view of one multicast group inside a [`ShufflePlan`].
+///
+/// `pairs` is the *whole* arena; `row_off` holds this group's `members +
+/// 1` absolute offsets into it, so [`GroupRef::pair_base`] lets callers
+/// align external arenas (values, decoded bits) with the plan layout.
+#[derive(Clone, Copy, Debug)]
+pub struct GroupRef<'a> {
+    /// Sorted member servers `S` (`|S| = r + 1`).
+    pub servers: &'a [u8],
+    row_off: &'a [usize],
+    pairs: &'a [(Vertex, Vertex)],
+}
+
+impl<'a> GroupRef<'a> {
+    /// Number of members (`r + 1`).
+    #[inline]
+    pub fn members(&self) -> usize {
+        self.servers.len()
+    }
+
     /// Index of server `k` within `S`.
     #[inline]
     pub fn member_index(&self, k: u8) -> Option<usize> {
         self.servers.binary_search(&k).ok()
     }
 
+    /// The IVs needed by member `idx`: canonical `(reducer, mapper)` pairs.
+    #[inline]
+    pub fn row(&self, idx: usize) -> &'a [(Vertex, Vertex)] {
+        &self.pairs[self.row_off[idx]..self.row_off[idx + 1]]
+    }
+
+    #[inline]
+    pub fn row_len(&self, idx: usize) -> usize {
+        self.row_off[idx + 1] - self.row_off[idx]
+    }
+
+    /// Arena offset where this group's pairs start.
+    #[inline]
+    pub fn pair_base(&self) -> usize {
+        self.row_off[0]
+    }
+
+    /// This group's full pair slice (all rows, concatenated).
+    #[inline]
+    pub fn group_pairs(&self) -> &'a [(Vertex, Vertex)] {
+        &self.pairs[self.row_off[0]..self.row_off[self.members()]]
+    }
+
+    /// Row `idx` as a range *local to the group's pair slice* (for
+    /// indexing value/bits scratch aligned with [`Self::group_pairs`]).
+    #[inline]
+    pub fn local_row_range(&self, idx: usize) -> std::ops::Range<usize> {
+        let base = self.row_off[0];
+        self.row_off[idx] - base..self.row_off[idx + 1] - base
+    }
+
     /// Longest row length = number of coded columns any sender may emit.
     pub fn max_row_len(&self) -> usize {
-        self.rows.iter().map(|r| r.len()).max().unwrap_or(0)
+        (0..self.members()).map(|i| self.row_len(i)).max().unwrap_or(0)
+    }
+
+    /// Coded columns sender `s_idx` emits: max length over the other rows.
+    pub fn sender_cols_needed(&self, s_idx: usize) -> usize {
+        (0..self.members())
+            .filter(|&i| i != s_idx)
+            .map(|i| self.row_len(i))
+            .max()
+            .unwrap_or(0)
     }
 
     /// Total IVs carried by this group.
     pub fn total_ivs(&self) -> usize {
-        self.rows.iter().map(|r| r.len()).sum()
+        self.row_off[self.members()] - self.row_off[0]
     }
 }
 
-/// Build all (non-empty) group plans for `(g, alloc)`.
+/// Build all (non-empty) group plans for `(g, alloc)` into one flat
+/// [`ShufflePlan`].
 ///
 /// Runs in `O(Σ_j deg(j)) = O(m)` plus hash-map overhead; groups with no
-/// needed IVs are omitted. Groups are returned sorted by `S` for
-/// deterministic iteration order.
-pub fn build_group_plans(g: &Csr, alloc: &Allocation) -> Vec<GroupPlan> {
+/// needed IVs are omitted. Group order is canonical (sorted by member
+/// set) and fully deterministic — two builds over the same inputs produce
+/// identical plans.
+pub fn build_group_plans(g: &Csr, alloc: &Allocation) -> ShufflePlan {
     let r = alloc.r;
     let k_total = alloc.k;
     let mut index: HashMap<Vec<u8>, usize> = HashMap::new();
-    let mut plans: Vec<GroupPlan> = Vec::new();
+    let mut nested: Vec<(Vec<u8>, Vec<Vec<(Vertex, Vertex)>>)> = Vec::new();
     // Per-edge hashing dominated the original implementation (§Perf):
-    // instead, resolve (batch, reducer) -> (plan, row) once per pair and
+    // instead, resolve (batch, reducer) -> (group, row) once per pair and
     // cache it in a flat per-batch table; the edge loop is then a plain
-    // indexed push. `slot[k]` = plan row for reducer k of this batch
+    // indexed push. `slot[k]` = group row for reducer k of this batch
     // (usize::MAX = unresolved, usize::MAX-1 = local/skip).
     const UNRESOLVED: usize = usize::MAX;
     const LOCAL: usize = usize::MAX - 1;
@@ -72,7 +330,7 @@ pub fn build_group_plans(g: &Csr, alloc: &Allocation) -> Vec<GroupPlan> {
         for j in batch.vertices() {
             for &i in g.neighbors(j) {
                 let k = alloc.reduce_owner[i as usize] as usize;
-                let (plan_idx, member) = {
+                let (group_idx, member) = {
                     let cached = slot[k];
                     if cached.0 == LOCAL {
                         continue;
@@ -90,33 +348,30 @@ pub fn build_group_plans(g: &Csr, alloc: &Allocation) -> Vec<GroupPlan> {
                         s_buf.extend_from_slice(&t_servers[..ins]);
                         s_buf.push(k as u8);
                         s_buf.extend_from_slice(&t_servers[ins..]);
-                        let plan_idx = match index.get(&s_buf) {
+                        let group_idx = match index.get(&s_buf) {
                             Some(&idx) => idx,
                             None => {
-                                let idx = plans.len();
+                                let idx = nested.len();
                                 index.insert(s_buf.clone(), idx);
-                                plans.push(GroupPlan {
-                                    servers: s_buf.clone(),
-                                    rows: vec![Vec::new(); r + 1],
-                                });
+                                nested.push((s_buf.clone(), vec![Vec::new(); r + 1]));
                                 idx
                             }
                         };
-                        slot[k] = (plan_idx, ins);
-                        (plan_idx, ins)
+                        slot[k] = (group_idx, ins);
+                        (group_idx, ins)
                     }
                 };
-                debug_assert_eq!(plans[plan_idx].servers[member], k as u8);
-                plans[plan_idx].rows[member].push((i, j));
+                debug_assert_eq!(nested[group_idx].0[member], k as u8);
+                nested[group_idx].1[member].push((i, j));
             }
         }
     }
-    plans.sort_by(|a, b| a.servers.cmp(&b.servers));
-    plans
+    ShufflePlan::from_nested(r + 1, nested)
 }
 
 /// Count of *all* needed IVs (the uncoded traffic in IV units) — equals
-/// the sum of all plan rows; exposed for cross-checking the two schemes.
+/// the plan's [`ShufflePlan::total_ivs`]; exposed for cross-checking the
+/// two schemes.
 pub fn total_needed_ivs(g: &Csr, alloc: &Allocation) -> usize {
     let mut count = 0usize;
     for batch in &alloc.batches {
@@ -148,18 +403,18 @@ mod tests {
     fn fig3_single_group_with_expected_rows() {
         let g = fig3_graph();
         let alloc = Allocation::er_scheme(6, 3, 2);
-        let plans = build_group_plans(&g, &alloc);
+        let plan = build_group_plans(&g, &alloc);
         // only one (r+1)-subset exists for K=3, r=2: S = {0,1,2}
-        assert_eq!(plans.len(), 1);
-        let p = &plans[0];
-        assert_eq!(p.servers, vec![0, 1, 2]);
+        assert_eq!(plan.num_groups(), 1);
+        let p = plan.group(0);
+        assert_eq!(p.servers, &[0, 1, 2]);
         // Z^1_{{2,3}} = {v_{1,5}, v_{2,6}} (paper) -> 0-based server 0
         // needs (0,4),(1,5)
-        assert_eq!(p.rows[0], vec![(0, 4), (1, 5)]);
+        assert_eq!(p.row(0), &[(0, 4), (1, 5)]);
         // server 1 needs v_{3,4}, v_{4,3} -> (2,3),(3,2)
-        assert_eq!(p.rows[1], vec![(3, 2), (2, 3)]);
+        assert_eq!(p.row(1), &[(3, 2), (2, 3)]);
         // server 2 needs v_{5,1}, v_{6,2} -> (4,0),(5,1)
-        assert_eq!(p.rows[2], vec![(4, 0), (5, 1)]);
+        assert_eq!(p.row(2), &[(4, 0), (5, 1)]);
     }
 
     #[test]
@@ -167,9 +422,8 @@ mod tests {
         let g = er(120, 0.15, &mut DetRng::seed(5));
         for r in 1..5 {
             let alloc = Allocation::er_scheme(120, 5, r);
-            let plans = build_group_plans(&g, &alloc);
-            let planned: usize = plans.iter().map(|p| p.total_ivs()).sum();
-            assert_eq!(planned, total_needed_ivs(&g, &alloc), "r={r}");
+            let plan = build_group_plans(&g, &alloc);
+            assert_eq!(plan.total_ivs(), total_needed_ivs(&g, &alloc), "r={r}");
         }
     }
 
@@ -177,23 +431,23 @@ mod tests {
     fn group_count_bounded_by_choose() {
         let g = er(100, 0.3, &mut DetRng::seed(6));
         let alloc = Allocation::er_scheme(100, 6, 2);
-        let plans = build_group_plans(&g, &alloc);
-        assert!(plans.len() as u64 <= crate::combinatorics::choose(6, 3));
+        let plan = build_group_plans(&g, &alloc);
+        assert!(plan.num_groups() as u64 <= crate::combinatorics::choose(6, 3));
         // dense enough that every group should appear
-        assert_eq!(plans.len() as u64, crate::combinatorics::choose(6, 3));
+        assert_eq!(plan.num_groups() as u64, crate::combinatorics::choose(6, 3));
     }
 
     #[test]
     fn every_iv_is_exclusively_mapped_by_other_members() {
         let g = er(90, 0.2, &mut DetRng::seed(7));
         let alloc = Allocation::er_scheme(90, 5, 3);
-        for p in build_group_plans(&g, &alloc) {
-            for (idx, row) in p.rows.iter().enumerate() {
+        for p in build_group_plans(&g, &alloc).groups() {
+            for idx in 0..p.members() {
                 let k = p.servers[idx];
-                for &(i, j) in row {
+                for &(i, j) in p.row(idx) {
                     assert_eq!(alloc.reduce_owner[i as usize], k);
                     assert!(!alloc.maps(k, j), "k={k} maps j={j}");
-                    for &k2 in &p.servers {
+                    for &k2 in p.servers {
                         if k2 != k {
                             assert!(alloc.maps(k2, j), "k'={k2} misses j={j}");
                         }
@@ -208,16 +462,73 @@ mod tests {
     fn rows_are_canonically_ordered() {
         let g = er(150, 0.1, &mut DetRng::seed(8));
         let alloc = Allocation::er_scheme(150, 5, 2);
-        for p in build_group_plans(&g, &alloc) {
-            for row in &p.rows {
+        for p in build_group_plans(&g, &alloc).groups() {
+            for idx in 0..p.members() {
                 // (j, i) strictly increasing lexicographically in (j, then i)
-                for w in row.windows(2) {
+                for w in p.row(idx).windows(2) {
                     let (i0, j0) = w[0];
                     let (i1, j1) = w[1];
                     assert!(j0 < j1 || (j0 == j1 && i0 < i1));
                 }
             }
         }
+    }
+
+    #[test]
+    fn groups_sorted_by_server_set() {
+        let g = er(140, 0.2, &mut DetRng::seed(10));
+        let alloc = Allocation::er_scheme(140, 6, 2);
+        let plan = build_group_plans(&g, &alloc);
+        let keys: Vec<&[u8]> = plan.groups().map(|p| p.servers).collect();
+        for w in keys.windows(2) {
+            assert!(w[0] < w[1], "groups out of order: {:?} then {:?}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn rebuild_is_bit_identical() {
+        // deterministic construction: two builds over the same inputs
+        // produce exactly the same plan (group order, rows, offsets,
+        // column counts) — no dependence on HashMap iteration order
+        let g = er(130, 0.18, &mut DetRng::seed(11));
+        for r in 1..5 {
+            let alloc = Allocation::er_scheme(130, 5, r);
+            let a = build_group_plans(&g, &alloc);
+            let b = build_group_plans(&g, &alloc);
+            assert_eq!(a, b, "r={r}");
+        }
+    }
+
+    #[test]
+    fn arena_offsets_consistent() {
+        let g = er(110, 0.2, &mut DetRng::seed(12));
+        let alloc = Allocation::er_scheme(110, 5, 2);
+        let plan = build_group_plans(&g, &alloc);
+        let mut pair_cursor = 0usize;
+        let mut col_cursor = 0usize;
+        for gi in 0..plan.num_groups() {
+            let p = plan.group(gi);
+            assert_eq!(plan.pair_start(gi), pair_cursor);
+            assert_eq!(p.pair_base(), pair_cursor);
+            assert_eq!(p.group_pairs().len(), p.total_ivs());
+            for idx in 0..p.members() {
+                let local = p.local_row_range(idx);
+                assert_eq!(&p.group_pairs()[local], p.row(idx));
+                assert_eq!(
+                    plan.sender_cols(gi)[idx] as usize,
+                    p.sender_cols_needed(idx),
+                    "col count mismatch gi={gi} idx={idx}"
+                );
+            }
+            pair_cursor += p.total_ivs();
+            col_cursor += plan.sender_cols(gi).iter().map(|&q| q as usize).sum::<usize>();
+            assert_eq!(plan.pair_range(gi).end, pair_cursor);
+            assert_eq!(plan.col_range(gi).end, col_cursor);
+        }
+        assert_eq!(pair_cursor, plan.total_ivs());
+        assert_eq!(col_cursor, plan.total_cols());
+        assert_eq!(plan.group_pair_offsets().len(), plan.num_groups() + 1);
+        assert_eq!(plan.group_col_offsets().len(), plan.num_groups() + 1);
     }
 
     #[test]

@@ -1,0 +1,172 @@
+//! Parallelism shim: rayon when the `parallel` feature is on, serial
+//! fallbacks otherwise.
+//!
+//! Every engine phase is expressed through these three primitives so the
+//! serial and parallel code paths are the *same code* — the only degrees
+//! of freedom are whether [`join`] actually forks and whether
+//! [`fill_indexed`] splits the slice. Results are bit-identical either
+//! way by construction: all writes go to disjoint, statically-computed
+//! slice regions, and all floating-point merges happen afterwards in a
+//! fixed serial order (see `coordinator::engine`).
+
+/// Compiled-in parallelism (the `parallel` feature). Callers still gate
+/// on their own runtime switch (e.g. `EngineConfig::parallel`).
+pub const ENABLED: bool = cfg!(feature = "parallel");
+
+/// Potentially-parallel fork-join of two closures.
+#[cfg(feature = "parallel")]
+#[inline]
+pub fn join<A, B, RA, RB>(a: A, b: B) -> (RA, RB)
+where
+    A: FnOnce() -> RA + Send,
+    B: FnOnce() -> RB + Send,
+    RA: Send,
+    RB: Send,
+{
+    rayon::join(a, b)
+}
+
+/// Serial fallback: run both closures in order.
+#[cfg(not(feature = "parallel"))]
+#[inline]
+pub fn join<A, B, RA, RB>(a: A, b: B) -> (RA, RB)
+where
+    A: FnOnce() -> RA + Send,
+    B: FnOnce() -> RB + Send,
+    RA: Send,
+    RB: Send,
+{
+    (a(), b())
+}
+
+/// Run `f(chunk_idx, chunk)` for every offset-delimited chunk of `data`:
+/// chunk `c` is `data[offsets[c] - offsets[0] .. offsets[c + 1] - offsets[0]]`.
+///
+/// `offsets` must be non-decreasing with `offsets.last() - offsets[0] ==
+/// data.len()`. Chunks may be empty. When `parallel` is false the chunks
+/// run in index order with no heap allocation; when true they run under
+/// recursive [`join`] (disjoint `&mut` regions, so no synchronization is
+/// needed and the per-chunk results are position-determined).
+pub fn for_each_chunk<T, F>(offsets: &[usize], data: &mut [T], parallel: bool, f: &F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let chunks = offsets.len().saturating_sub(1);
+    if chunks == 0 {
+        return;
+    }
+    debug_assert_eq!(offsets[chunks] - offsets[0], data.len(), "offsets must span data");
+    chunk_rec(offsets, 0, chunks, data, parallel && ENABLED, f);
+}
+
+fn chunk_rec<T, F>(offsets: &[usize], lo: usize, hi: usize, data: &mut [T], parallel: bool, f: &F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if hi - lo == 1 {
+        f(lo, data);
+        return;
+    }
+    let mid = lo + (hi - lo) / 2;
+    let split = offsets[mid] - offsets[lo];
+    let (left, right) = data.split_at_mut(split);
+    if parallel {
+        join(
+            || chunk_rec(offsets, lo, mid, left, true, f),
+            || chunk_rec(offsets, mid, hi, right, true, f),
+        );
+    } else {
+        chunk_rec(offsets, lo, mid, left, false, f);
+        chunk_rec(offsets, mid, hi, right, false, f);
+    }
+}
+
+/// Fill `out[i] = f(i)` for all `i`, splitting the slice across threads
+/// when `parallel` (and the feature) allow. The serial path is a plain
+/// loop with zero heap allocation.
+pub fn fill_indexed<T, F>(out: &mut [T], parallel: bool, f: &F)
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    fill_rec(out, 0, parallel && ENABLED, f);
+}
+
+fn fill_rec<T, F>(out: &mut [T], base: usize, parallel: bool, f: &F)
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    const SEQ_CHUNK: usize = 4096;
+    if parallel && out.len() > SEQ_CHUNK {
+        let mid = out.len() / 2;
+        let (left, right) = out.split_at_mut(mid);
+        join(
+            || fill_rec(left, base, true, f),
+            || fill_rec(right, base + mid, true, f),
+        );
+    } else {
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = f(base + i);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn join_returns_both() {
+        let (a, b) = join(|| 1 + 1, || "x");
+        assert_eq!(a, 2);
+        assert_eq!(b, "x");
+    }
+
+    #[test]
+    fn chunks_visit_disjoint_regions() {
+        for parallel in [false, true] {
+            let offsets = [0usize, 3, 3, 7, 10];
+            let mut data = vec![0u32; 10];
+            for_each_chunk(&offsets, &mut data, parallel, &|c, chunk| {
+                assert_eq!(chunk.len(), offsets[c + 1] - offsets[c]);
+                for x in chunk.iter_mut() {
+                    *x = c as u32 + 1;
+                }
+            });
+            assert_eq!(data, vec![1, 1, 1, 3, 3, 3, 3, 4, 4, 4]);
+        }
+    }
+
+    #[test]
+    fn chunks_with_nonzero_base_offset() {
+        let offsets = [5usize, 8, 12];
+        let mut data = vec![0u8; 7];
+        for_each_chunk(&offsets, &mut data, false, &|c, chunk| {
+            for x in chunk.iter_mut() {
+                *x = c as u8 + 1;
+            }
+        });
+        assert_eq!(data, vec![1, 1, 1, 2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn empty_offsets_no_op() {
+        let mut data: Vec<u8> = Vec::new();
+        for_each_chunk(&[], &mut data, true, &|_, _| panic!("no chunks"));
+        for_each_chunk(&[0], &mut data, true, &|_, _| panic!("no chunks"));
+    }
+
+    #[test]
+    fn fill_indexed_matches_serial() {
+        for parallel in [false, true] {
+            let mut out = vec![0u64; 10_000];
+            fill_indexed(&mut out, parallel, &|i| (i as u64).wrapping_mul(31) ^ 7);
+            for (i, &v) in out.iter().enumerate() {
+                assert_eq!(v, (i as u64).wrapping_mul(31) ^ 7);
+            }
+        }
+    }
+}

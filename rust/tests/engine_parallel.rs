@@ -1,0 +1,93 @@
+//! Parallel-path equivalence: the rayon-parallel engine must be
+//! **bit-identical** to the serial engine — same final-state bits, same
+//! metrics — at any thread count. This is the load-bearing guarantee that
+//! lets the parallel path replace the serial one everywhere (ISSUE 1
+//! acceptance criterion).
+
+use coded_graph::allocation::Allocation;
+use coded_graph::coordinator::{run_rust, EngineConfig, Job, JobReport, Scheme};
+use coded_graph::graph::er::er;
+use coded_graph::mapreduce::{PageRank, Sssp};
+use coded_graph::util::rng::DetRng;
+
+fn assert_reports_bit_identical(a: &JobReport, b: &JobReport, tag: &str) {
+    assert_eq!(a.final_state.len(), b.final_state.len(), "{tag}");
+    for (x, y) in a.final_state.iter().zip(&b.final_state) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: {x} vs {y}");
+    }
+    assert_eq!(a.iterations.len(), b.iterations.len(), "{tag}");
+    for (ma, mb) in a.iterations.iter().zip(&b.iterations) {
+        assert_eq!(ma.shuffle.paper_bits, mb.shuffle.paper_bits, "{tag}");
+        assert_eq!(ma.shuffle.wire_payload_bytes, mb.shuffle.wire_payload_bytes, "{tag}");
+        assert_eq!(ma.shuffle.messages, mb.shuffle.messages, "{tag}");
+        assert_eq!(ma.update.paper_bits, mb.update.paper_bits, "{tag}");
+        assert_eq!(ma.times.map_s, mb.times.map_s, "{tag}");
+        assert_eq!(ma.times.shuffle_s, mb.times.shuffle_s, "{tag}");
+        assert_eq!(ma.times.encode_s, mb.times.encode_s, "{tag}");
+        assert_eq!(ma.times.decode_s, mb.times.decode_s, "{tag}");
+        assert_eq!(ma.times.reduce_s, mb.times.reduce_s, "{tag}");
+        assert_eq!(ma.times.update_s, mb.times.update_s, "{tag}");
+        assert_eq!(ma.validated_ivs, mb.validated_ivs, "{tag}");
+    }
+}
+
+#[test]
+fn parallel_matches_serial_across_schemes_and_programs() {
+    let g = er(240, 0.1, &mut DetRng::seed(90));
+    let pr = PageRank::default();
+    let ss = Sssp::hashed(1);
+    for (k, r) in [(4usize, 2usize), (5, 3), (6, 2)] {
+        let alloc = Allocation::er_scheme(g.n(), k, r);
+        for scheme in [
+            Scheme::Coded,
+            Scheme::Uncoded,
+            Scheme::CodedCombined,
+            Scheme::UncodedCombined,
+        ] {
+            let tag = format!("K={k} r={r} {scheme}");
+            let mk = |parallel| EngineConfig {
+                scheme,
+                parallel,
+                validate: true,
+                ..Default::default()
+            };
+            let job = Job { graph: &g, alloc: &alloc, program: &pr };
+            let serial = run_rust(&job, &mk(false), 3);
+            let parallel = run_rust(&job, &mk(true), 3);
+            assert_reports_bit_identical(&serial, &parallel, &format!("pagerank {tag}"));
+
+            let job = Job { graph: &g, alloc: &alloc, program: &ss };
+            let serial = run_rust(&job, &mk(false), 3);
+            let parallel = run_rust(&job, &mk(true), 3);
+            assert_reports_bit_identical(&serial, &parallel, &format!("sssp {tag}"));
+        }
+    }
+}
+
+/// Same results at every thread count: run the parallel engine inside
+/// dedicated rayon pools of 1, 2, and 7 threads and compare bitwise
+/// against the serial reference.
+#[cfg(feature = "parallel")]
+#[test]
+fn parallel_results_independent_of_thread_count() {
+    let g = er(300, 0.12, &mut DetRng::seed(91));
+    let alloc = Allocation::er_scheme(g.n(), 5, 3);
+    let prog = PageRank::default();
+    let job = Job { graph: &g, alloc: &alloc, program: &prog };
+    let serial_cfg = EngineConfig {
+        scheme: Scheme::Coded,
+        parallel: false,
+        validate: true,
+        ..Default::default()
+    };
+    let par_cfg = EngineConfig { parallel: true, ..serial_cfg };
+    let reference = run_rust(&job, &serial_cfg, 4);
+    for threads in [1usize, 2, 7] {
+        let pool = rayon::ThreadPoolBuilder::new()
+            .num_threads(threads)
+            .build()
+            .expect("pool");
+        let report = pool.install(|| run_rust(&job, &par_cfg, 4));
+        assert_reports_bit_identical(&reference, &report, &format!("{threads} threads"));
+    }
+}

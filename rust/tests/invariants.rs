@@ -85,16 +85,15 @@ fn coded_shuffle_delivers_exactly_the_needed_ivs_bit_exact() {
         let value = move |i: Vertex, j: Vertex| {
             (((i as u64) << 32) ^ j as u64 ^ salt).wrapping_mul(0x9E37_79B9_7F4A_7C15)
         };
-        let plans = build_group_plans(&g, &alloc);
+        let plan = build_group_plans(&g, &alloc);
         // coverage: every needed IV appears in exactly one plan row
-        let planned: usize = plans.iter().map(|p| p.total_ivs()).sum();
-        assert_eq!(planned, total_needed_ivs(&g, &alloc));
-        for plan in &plans {
-            let msgs = encode_group(plan, &value, r);
-            for (idx, &k) in plan.servers.iter().enumerate() {
-                let got = recover_group(plan, k, &msgs, &value, r);
-                assert_eq!(got.len(), plan.rows[idx].len());
-                for (riv, &(i, j)) in got.iter().zip(&plan.rows[idx]) {
+        assert_eq!(plan.total_ivs(), total_needed_ivs(&g, &alloc));
+        for group in plan.groups() {
+            let msgs = encode_group(group, &value, r);
+            for (idx, &k) in group.servers.iter().enumerate() {
+                let got = recover_group(group, k, &msgs, &value, r);
+                assert_eq!(got.len(), group.row_len(idx));
+                for (riv, &(i, j)) in got.iter().zip(group.row(idx)) {
                     assert_eq!((riv.reducer, riv.mapper), (i, j));
                     assert_eq!(riv.bits, value(i, j), "IV ({i},{j})");
                     // the receiver must actually need it

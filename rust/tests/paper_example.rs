@@ -45,23 +45,23 @@ fn subgraph_allocation_matches_fig3c() {
 #[test]
 fn needed_iv_sets_match_fig3c() {
     let (g, alloc) = fig3();
-    let plans = build_group_plans(&g, &alloc);
-    assert_eq!(plans.len(), 1, "K=3, r=2: single multicast group");
-    let p = &plans[0];
-    assert_eq!(p.servers, vec![0, 1, 2]);
+    let plan = build_group_plans(&g, &alloc);
+    assert_eq!(plan.num_groups(), 1, "K=3, r=2: single multicast group");
+    let p = plan.group(0);
+    assert_eq!(p.servers, &[0, 1, 2]);
     // paper: server 1 needs {v_{1,5}, v_{2,6}} -> (0,4), (1,5)
-    assert_eq!(p.rows[0], vec![(0, 4), (1, 5)]);
+    assert_eq!(p.row(0), &[(0, 4), (1, 5)]);
     // server 2 needs {v_{3,4}, v_{4,3}} -> (2,3),(3,2) in (j,i) order
-    assert_eq!(p.rows[1], vec![(3, 2), (2, 3)]);
+    assert_eq!(p.row(1), &[(3, 2), (2, 3)]);
     // server 3 needs {v_{5,1}, v_{6,2}} -> (4,0),(5,1)
-    assert_eq!(p.rows[2], vec![(4, 0), (5, 1)]);
+    assert_eq!(p.row(2), &[(4, 0), (5, 1)]);
 }
 
 #[test]
 fn coded_messages_match_paper_xors() {
     let (g, alloc) = fig3();
-    let plans = build_group_plans(&g, &alloc);
-    let p = &plans[0];
+    let plan = build_group_plans(&g, &alloc);
+    let p = plan.group(0);
     let r = 2;
     let sb = seg_bytes(r); // 4 bytes
     // traceable IV "values": pack (i, j)
@@ -95,7 +95,7 @@ fn coded_messages_match_paper_xors() {
     // every server recovers its paper-specified IVs
     for (idx, &k) in p.servers.iter().enumerate() {
         let got = recover_group(p, k, &msgs, &value, r);
-        for (riv, &(i, j)) in got.iter().zip(&p.rows[idx]) {
+        for (riv, &(i, j)) in got.iter().zip(p.row(idx)) {
             assert_eq!(riv.bits, value(i, j), "server {k} IV ({i},{j})");
         }
     }

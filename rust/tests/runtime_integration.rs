@@ -1,6 +1,10 @@
 //! PJRT runtime integration: the AOT JAX/Pallas artifacts driving the
 //! Reduce phase inside full engine iterations, cross-checked against the
 //! exact rust fold. Skipped (with a notice) if `make artifacts` hasn't run.
+//! Compiled only with the `xla` feature (the PJRT runtime needs the
+//! vendored xla bindings crate).
+
+#![cfg(feature = "xla")]
 
 use std::path::Path;
 

@@ -1,0 +1,117 @@
+//! Steady-state allocation audit: after the first iteration warms the
+//! [`EngineScratch`] capacities, `run_iteration_scratch` on the rust
+//! backend must perform **zero heap allocation** — the §Perf contract of
+//! the flat-arena engine (ISSUE 1 acceptance criterion).
+//!
+//! A counting global allocator wraps `System`; the single test in this
+//! binary (one test ⇒ no concurrent test threads mutating the counters)
+//! runs warm-up iterations, snapshots the counters, runs more iterations
+//! on the serial path, and asserts the counters did not move. The
+//! parallel path is exercised elsewhere (`engine_parallel.rs`) — rayon's
+//! work-stealing runtime may allocate internally, which is outside the
+//! engine's own data-path contract audited here.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use coded_graph::allocation::Allocation;
+use coded_graph::coordinator::{
+    prepare, run_iteration_scratch, Backend, EngineConfig, EngineScratch, Job, Scheme,
+};
+use coded_graph::graph::er::er;
+use coded_graph::mapreduce::{PageRank, Sssp, VertexProgram};
+use coded_graph::util::rng::DetRng;
+use coded_graph::Vertex;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+static REALLOCS: AtomicUsize = AtomicUsize::new(0);
+static DEALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        DEALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        REALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn counters() -> (usize, usize, usize) {
+    (
+        ALLOCS.load(Ordering::SeqCst),
+        REALLOCS.load(Ordering::SeqCst),
+        DEALLOCS.load(Ordering::SeqCst),
+    )
+}
+
+fn assert_steady_state_allocation_free(scheme: Scheme, prog: &dyn VertexProgram, tag: &str) {
+    let n = 600;
+    let g = er(n, 0.08, &mut DetRng::seed(77));
+    let alloc = Allocation::er_scheme(n, 5, 3);
+    let job = Job { graph: &g, alloc: &alloc, program: prog };
+    // serial path: the engine's own data path must not touch the heap
+    // (validate off like production runs; state-update accounting on)
+    let cfg = EngineConfig { scheme, parallel: false, ..Default::default() };
+    let prep = prepare(&job, scheme);
+    let mut state: Vec<f64> = (0..n as Vertex).map(|v| prog.init(v, &g)).collect();
+    let mut next = vec![0.0f64; n];
+    let mut scratch = EngineScratch::new();
+
+    // warm-up: grows every scratch capacity to its steady-state size
+    for _ in 0..2 {
+        run_iteration_scratch(
+            &job, &prep, &state, &cfg, &mut Backend::Rust, &mut scratch, &mut next,
+        );
+        std::mem::swap(&mut state, &mut next);
+    }
+
+    let before = counters();
+    let mut checksum = 0.0f64;
+    for _ in 0..3 {
+        let metrics = run_iteration_scratch(
+            &job, &prep, &state, &cfg, &mut Backend::Rust, &mut scratch, &mut next,
+        );
+        checksum += metrics.shuffle.paper_bits;
+        std::mem::swap(&mut state, &mut next);
+    }
+    let after = counters();
+
+    assert_eq!(
+        (after.0 - before.0, after.1 - before.1, after.2 - before.2),
+        (0, 0, 0),
+        "{tag}: steady-state iteration touched the allocator \
+         (allocs/reallocs/deallocs deltas)"
+    );
+    assert!(checksum >= 0.0); // keep the loop observable
+    // sanity: the run actually computed something
+    assert!(state.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn steady_state_iterations_are_allocation_free() {
+    // one test in this binary by design: the counters are process-global
+    let pr = PageRank::default();
+    let ss = Sssp::hashed(0);
+    for (scheme, tag) in [
+        (Scheme::Coded, "coded"),
+        (Scheme::Uncoded, "uncoded"),
+        (Scheme::CodedCombined, "coded+combiners"),
+    ] {
+        assert_steady_state_allocation_free(scheme, &pr, &format!("pagerank/{tag}"));
+    }
+    // SSSP exercises the map_depends_on_dst (no qbits fast path) branch
+    assert_steady_state_allocation_free(Scheme::Coded, &ss, "sssp/coded");
+}
