@@ -3,7 +3,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test bench bench-smoke fmt clippy artifacts
+.PHONY: build test bench bench-smoke cluster-smoke fmt clippy artifacts
 
 build:
 	$(CARGO) build --release
@@ -24,6 +24,12 @@ bench:
 # Tiny bench config to catch perf-harness bitrot in CI (seconds).
 bench-smoke:
 	$(CARGO) bench --bench shuffle_micro -- --smoke
+
+# End-to-end cluster run over real localhost sockets (seconds): a small
+# ER PageRank job through the TCP transport, leader + 4 workers.
+cluster-smoke:
+	$(CARGO) run --release -- cluster --graph er --n 600 --k 4 --r 2 \
+	  --program pagerank --scheme coded --iters 2 --transport tcp
 
 # AOT-lower the JAX/Pallas kernels to HLO text for the PJRT runtime
 # (build-time only; requires jax — see python/compile/aot.py).

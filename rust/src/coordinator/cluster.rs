@@ -1,158 +1,199 @@
-//! Threaded leader/worker cluster driver.
+//! Leader/worker cluster driver over the [`transport`](crate::transport)
+//! layer.
 //!
 //! The engine ([`super::engine`]) simulates the cluster in one loop; this
-//! driver actually *runs* it: `K` OS threads, one per worker, exchanging
-//! real messages through channels, with the leader routing multicasts
-//! (the shared bus) and enforcing phase barriers. Each worker holds only
-//! the state it is entitled to — the states of vertices it Maps and
-//! Reduces — so a decode bug cannot be papered over by shared memory:
-//! wrong bits produce wrong PageRanks, which the tests catch against the
-//! single-machine oracle.
+//! driver actually *runs* it: `K` worker threads plus a leader, every
+//! message — coded multicasts, uncoded unicast batches, and all control
+//! traffic — serialized into wire-format [`frame`]s and moved by a
+//! pluggable [`Transport`] backend:
 //!
-//! The job is [`prepare`]d once; workers share the flat
-//! [`ShufflePlan`] arena and the prepared reducer→slot index read-only.
+//! * [`TransportKind::InProc`]: bounded per-worker rings of pooled frame
+//!   buffers (replaces the old `mpsc` + per-receiver `CodedMessage`
+//!   clone driver).
+//! * [`TransportKind::Tcp`]: a localhost socket mesh — the paper's EC2
+//!   testbed topology (§VI), every Shuffle byte crossing a real NIC
+//!   buffer and a real serialization boundary.
 //!
-//! Offline note: the environment has no tokio; the driver uses
-//! `std::thread` + `mpsc`, which for a compute-bound K≤16 cluster is the
-//! same topology (one task per worker, message passing, leader barrier).
+//! Each worker holds only the state it is entitled to — the states of
+//! vertices it Maps and Reduces — so a decode bug cannot be papered over
+//! by shared memory: wrong bits produce wrong PageRanks, which the tests
+//! catch against the single-machine oracle. Workers encode straight into
+//! reusable transport send buffers with the single-sender arena kernels
+//! ([`encode_sender_into`]) and decode from borrowed frame views
+//! ([`decode_sender_into`]); all routing tables come precomputed from
+//! [`PreparedJob`] — the same source of truth the engine replays.
+//!
+//! ## Model ≡ reality
+//!
+//! The leader's bus/load accounting replays the prepared plan in
+//! canonical order — bit-identical to the engine's replay — while the
+//! transport tallies the bytes it actually moved. Every iteration
+//! asserts `actual frame bytes == ShuffleLoad::wire_bytes_with_headers()`
+//! and `actual frames == messages`: the wire model *is* the wire.
+//! Results are bit-identical to [`engine::run_rust`](super::engine::run_rust)
+//! because every worker folds local and received IVs in exactly the
+//! engine's canonical order (groups ascending, then transfers ascending).
+//!
+//! ## Steady-state allocation (hand-audit)
+//!
+//! After the first iteration warms capacities, a worker's iteration path
+//! allocates nothing: sends reuse `vals`/`cols` scratch and one frame
+//! buffer per worker (cleared + extended in place), ring slots cycle
+//! through the `InProc` buffer pool, receives swap pooled buffers, and
+//! decode/reduce write into preallocated arenas (`garena`, `gvals`,
+//! `unc_arena`, `bits`, `accs`, `next_bits`); group values are evaluated
+//! once per iteration (at send time) and reused by decode. The
+//! send-path half of this contract is
+//! asserted under a counting allocator in `tests/transport_zero_alloc.rs`;
+//! the leader intentionally keeps a couple of per-iteration `Vec`s
+//! (routing the write-back), which are off the workers' data path.
+//!
+//! ## Phase protocol
+//!
+//! ```text
+//! leader:  StartShuffle* → [accounting replay] → StartReduce* →
+//!          StateUpdate* → Continue*/Stop*
+//! worker:  data sends + SendDone → decode/reduce + Reduced →
+//!          apply update → next iteration
+//! ```
+//!
+//! Barriers make the protocol race-free with one subtlety: a fast peer
+//! may start the *next* iteration's sends before this worker has drained
+//! its own control frames (different connections have no mutual
+//! ordering). Data frames are therefore accepted and stashed in every
+//! receive loop — storing them is state-independent (the bits were
+//! already evaluated by the sender), and the expected-count barrier
+//! keeps iterations from mixing.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::Instant;
 
 use crate::allocation::Allocation;
 use crate::graph::csr::{Csr, Vertex};
 use crate::mapreduce::program::VertexProgram;
 use crate::network::Bus;
-use crate::shuffle::coded::{encode_sender, row_values_except, CodedMessage};
-use crate::shuffle::decoder::{recover_group, RecoveredIv};
+use crate::shuffle::coded::{encode_sender_into, eval_rows_except};
+use crate::shuffle::combined::combined_value;
+use crate::shuffle::decoder::decode_sender_into;
 use crate::shuffle::load::{ShuffleLoad, HEADER_BYTES};
-use crate::shuffle::plan::ShufflePlan;
-use crate::shuffle::uncoded::UncodedTransfer;
+use crate::shuffle::segments::seg_bytes;
+use crate::transport::frame::{self, Frame, FrameKind};
+use crate::transport::{InProcNet, TcpNet, Transport, TransportKind};
 
-use super::config::EngineConfig;
-use super::engine::{prepare, reduce_worker_rust, Job, PreparedJob};
+use super::config::{EngineConfig, Scheme};
+use super::engine::{prepare, Job, PreparedJob};
 use super::metrics::{IterationMetrics, JobReport, PhaseTimes};
 
-/// Leader -> worker commands.
-enum Cmd {
-    /// Run Encode and emit shuffle traffic.
-    Shuffle,
-    /// A routed coded multicast (group index, message).
-    DeliverCoded(usize, CodedMessage),
-    /// A routed uncoded unicast: full IVs.
-    DeliverUncoded(Vec<RecoveredIv>),
-    /// All shuffle traffic delivered: run Reduce and report fresh states.
-    Reduce,
-    /// Fresh states for vertices this worker Maps (write-back).
-    StateUpdate(Vec<(Vertex, f64)>),
-    /// Iteration done; proceed to the next (or stop).
-    Continue,
-    Stop,
-}
-
-/// Worker -> leader events.
-enum Event {
-    /// Multicast request: group index + encoded message (leader routes).
-    Multicast(u8, usize, CodedMessage),
-    /// Unicast request: (sender, receiver, ivs).
-    Unicast(u8, u8, Vec<RecoveredIv>),
-    /// This worker finished emitting its shuffle traffic.
-    SendDone,
-    /// Reduce finished: fresh (vertex, state) pairs of this worker's rows.
-    Reduced(u8, Vec<(Vertex, f64)>),
-}
-
-/// Run a job on the threaded cluster. Semantics identical to
-/// [`super::engine::run_rust`]; metrics additionally carry real per-phase
-/// wall times (in `wall_s`) while the modeled times use the same bus.
+/// Run a job on the cluster over the in-process transport. Semantics
+/// identical to [`super::engine::run_rust`] (bit-identical final state
+/// and modeled metrics); `wall_s` additionally carries real per-iteration
+/// wall times.
 pub fn run_cluster(job: &Job<'_>, cfg: &EngineConfig, iters: usize) -> JobReport {
+    run_cluster_on(job, cfg, iters, TransportKind::InProc)
+}
+
+/// [`run_cluster`] with an explicit transport backend.
+pub fn run_cluster_on(
+    job: &Job<'_>,
+    cfg: &EngineConfig,
+    iters: usize,
+    kind: TransportKind,
+) -> JobReport {
+    let prep = prepare(job, cfg.scheme);
+    let caps = ring_capacities(&prep, job.alloc.k);
+    match kind {
+        TransportKind::InProc => drive(job, cfg, iters, &prep, &InProcNet::new(&caps)),
+        TransportKind::Tcp => {
+            let net = TcpNet::new(&caps).expect("tcp transport: localhost mesh setup");
+            drive(job, cfg, iters, &prep, &net)
+        }
+    }
+}
+
+/// Ring bounds from the prepared job: a worker's inbound traffic per
+/// iteration is its expected data frames plus a handful of control
+/// frames (at most StateUpdate + Continue of the previous iteration can
+/// still be queued when next-iteration data arrives); the leader sees
+/// `2K` events per iteration.
+fn ring_capacities(prep: &PreparedJob, k: usize) -> Vec<usize> {
+    let mut caps: Vec<usize> = (0..k)
+        .map(|kk| prep.expect_coded(kk) + prep.expect_unc(kk) + 8)
+        .collect();
+    caps.push(2 * k + 8);
+    caps
+}
+
+/// Detach an endpoint from the transport when its scope ends. A clean
+/// exit leaves (queued frames still drain at the peers); a panic aborts
+/// the whole transport so every blocked peer unblocks and the failure
+/// propagates out of the thread scope instead of deadlocking it.
+struct LeaveGuard<'a>(&'a dyn Transport, u8);
+
+impl Drop for LeaveGuard<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.abort();
+        } else {
+            self.0.leave(self.1);
+        }
+    }
+}
+
+fn drive(
+    job: &Job<'_>,
+    cfg: &EngineConfig,
+    iters: usize,
+    prep: &PreparedJob,
+    net: &dyn Transport,
+) -> JobReport {
     let (g, alloc, prog) = (job.graph, job.alloc, job.program);
     let k = alloc.k;
-    let r = alloc.r;
-    let prep = prepare(job, cfg.scheme);
-    let plan: &ShufflePlan = &prep.plan;
-    let transfers: &[UncodedTransfer] = &prep.transfers;
-    let reduce_slot: &[u32] = &prep.reduce_slot;
-
-    // Per-worker routing tables (precomputed, read-only).
-    // sender -> [(group_idx, sender_idx)]
-    let mut send_plan: Vec<Vec<(usize, usize)>> = vec![Vec::new(); k];
-    // receiver -> expected coded message count
-    let mut expect_coded = vec![0usize; k];
-    for gi in 0..plan.num_groups() {
-        let group = plan.group(gi);
-        for (si, &s) in group.servers.iter().enumerate() {
-            // a sender only transmits if some *other* row is non-empty —
-            // read the precomputed per-sender column counts so routing
-            // and the engine's accounting share one source of truth
-            if plan.sender_cols(gi)[si] > 0 {
-                send_plan[s as usize].push((gi, si));
-            }
-        }
-        for (mi, &m) in group.servers.iter().enumerate() {
-            if group.row_len(mi) > 0 {
-                expect_coded[m as usize] += group.members() - 1;
-            }
-        }
-    }
-    // uncoded: sender -> transfer indices; receiver -> expected unicasts
-    let mut send_unc: Vec<Vec<usize>> = vec![Vec::new(); k];
-    let mut expect_unc = vec![0usize; k];
-    for (ti, t) in transfers.iter().enumerate() {
-        send_unc[t.sender as usize].push(ti);
-        expect_unc[t.receiver as usize] += 1;
-    }
-
+    let leader = k as u8;
     std::thread::scope(|scope| {
-        let (event_tx, event_rx): (Sender<Event>, Receiver<Event>) = channel();
-        let mut cmd_txs: Vec<Sender<Cmd>> = Vec::with_capacity(k);
-        let send_plan = &send_plan;
-        let send_unc = &send_unc;
-        let expect_coded = &expect_coded;
-        let expect_unc = &expect_unc;
         for kk in 0..k as u8 {
-            let (tx, rx) = channel::<Cmd>();
-            cmd_txs.push(tx);
-            let etx = event_tx.clone();
             scope.spawn(move || {
-                worker_loop(
-                    kk,
-                    g,
-                    alloc,
-                    prog,
-                    plan,
-                    transfers,
-                    reduce_slot,
-                    &send_plan[kk as usize],
-                    &send_unc[kk as usize],
-                    expect_coded[kk as usize],
-                    expect_unc[kk as usize],
-                    r,
-                    rx,
-                    etx,
-                );
+                let _guard = LeaveGuard(net, kk);
+                Worker::new(kk, g, alloc, prog, prep, net, leader).run();
             });
         }
-        drop(event_tx);
-        leader_loop(job, cfg, iters, &prep, &cmd_txs, &event_rx)
+        let _guard = LeaveGuard(net, leader);
+        leader_loop(job, cfg, iters, prep, net, leader)
     })
 }
 
-/// The leader: phase barriers, bus accounting, message routing.
+/// The leader: phase barriers, deterministic accounting replay, state
+/// write-back routing, and the model-vs-wire cross-check.
 fn leader_loop(
     job: &Job<'_>,
     cfg: &EngineConfig,
     iters: usize,
     prep: &PreparedJob,
-    cmd_txs: &[Sender<Cmd>],
-    event_rx: &Receiver<Event>,
+    net: &dyn Transport,
+    leader: u8,
 ) -> JobReport {
     let (g, alloc) = (job.graph, job.alloc);
     let k = alloc.k;
     let r = alloc.r;
+    let sb = seg_bytes(r);
     let plan = &prep.plan;
     let mut report = JobReport::default();
     let mut final_state = vec![0.0f64; g.n()];
+    let mut sendbuf: Vec<u8> = Vec::new();
+    let mut rbuf: Vec<u8> = Vec::new();
+    let mut fresh_bits: Vec<Vec<u64>> = vec![Vec::new(); k];
+    let mut stats_mark = net.data_stats();
+
+    if iters == 0 {
+        // degenerate job: release the workers before returning, or they
+        // would wait forever for a StartShuffle that never comes; the
+        // final state is the init state, exactly like the engine's
+        for kk in 0..k as u8 {
+            frame::encode_control(&mut sendbuf, FrameKind::Stop, leader);
+            net.send_unicast(leader, kk, &sendbuf);
+        }
+        report.final_state =
+            (0..g.n() as Vertex).map(|v| job.program.init(v, g)).collect();
+        return report;
+    }
 
     for it in 0..iters {
         let iter_start = Instant::now();
@@ -160,75 +201,101 @@ fn leader_loop(
         let mut shuffle_load = ShuffleLoad::default();
         let mut bus = Bus::new(cfg.bus);
 
-        // modeled map time (workers Map from their local states)
-        times.map_s = prep
-            .mapped_edges
-            .iter()
-            .map(|&e| e as f64 * cfg.time.map_edge_s)
-            .fold(0.0, f64::max);
+        // modeled compute times — the same shared fold the engine uses,
+        // so the metrics are bit-identical by construction
+        let modeled = prep.modeled_compute_times(&cfg.time);
+        times.map_s = modeled.map_s;
 
         // ---- Shuffle ----
-        for tx in cmd_txs {
-            tx.send(Cmd::Shuffle).unwrap();
+        for kk in 0..k as u8 {
+            frame::encode_control(&mut sendbuf, FrameKind::StartShuffle, leader);
+            net.send_unicast(leader, kk, &sendbuf);
         }
         let mut send_done = 0usize;
         while send_done < k {
-            match event_rx.recv().expect("worker hung up") {
-                Event::Multicast(sender, gi, msg) => {
+            assert!(net.recv(leader, &mut rbuf), "leader: a worker disconnected");
+            let f = Frame::parse(&rbuf).expect("leader: bad frame");
+            match f.kind {
+                FrameKind::SendDone => send_done += 1,
+                other => unreachable!("leader: unexpected {other:?} before the send barrier"),
+            }
+        }
+        // deterministic accounting replay in canonical (group, sender) /
+        // transfer order — bit-identical to the engine's replay; the
+        // payloads themselves traveled worker-to-worker
+        match prep.scheme {
+            Scheme::Uncoded | Scheme::UncodedCombined => {
+                for t in &prep.transfers {
+                    bus.transmit(t.sender, 1, frame::uncoded_frame_len(t.ivs.len()));
+                    shuffle_load.add_uncoded(t.ivs.len());
+                }
+            }
+            Scheme::Coded | Scheme::CodedCombined => {
+                for gi in 0..plan.num_groups() {
                     let group = plan.group(gi);
-                    let bytes = msg.payload_bytes(r) + HEADER_BYTES;
-                    bus.transmit(sender, group.members() - 1, bytes);
-                    shuffle_load.add_coded(msg.columns.len(), r);
-                    for (mi, &m) in group.servers.iter().enumerate() {
-                        if m != sender && group.row_len(mi) > 0 {
-                            cmd_txs[m as usize]
-                                .send(Cmd::DeliverCoded(gi, msg.clone()))
-                                .unwrap();
+                    let fanout = group.members() - 1;
+                    for (s_idx, &q) in plan.sender_cols(gi).iter().enumerate() {
+                        if q == 0 {
+                            continue;
                         }
+                        bus.transmit(
+                            group.servers[s_idx],
+                            fanout,
+                            frame::coded_frame_len(q as usize, sb),
+                        );
+                        shuffle_load.add_coded(q as usize, r);
                     }
                 }
-                Event::Unicast(sender, receiver, ivs) => {
-                    let bytes = ivs.len() * 8 + HEADER_BYTES;
-                    bus.transmit(sender, 1, bytes);
-                    shuffle_load.add_uncoded(ivs.len());
-                    cmd_txs[receiver as usize].send(Cmd::DeliverUncoded(ivs)).unwrap();
-                }
-                Event::SendDone => send_done += 1,
-                Event::Reduced(..) => unreachable!("reduce before shuffle barrier"),
+                times.encode_s = modeled.encode_s;
+                times.decode_s = modeled.decode_s;
             }
         }
         times.shuffle_s = bus.clock();
 
+        // model ≡ reality: the transport moved exactly the frames and
+        // bytes the accounting charged (payload + 16-byte header each)
+        let stats = net.data_stats();
+        assert_eq!(
+            stats.data_frames - stats_mark.data_frames,
+            shuffle_load.messages,
+            "transport frame count diverges from the modeled message count"
+        );
+        assert_eq!(
+            stats.data_bytes - stats_mark.data_bytes,
+            shuffle_load.wire_bytes_with_headers(),
+            "serialized frame bytes diverge from the modeled wire bytes"
+        );
+        stats_mark = stats;
+
         // ---- Reduce ----
-        for tx in cmd_txs {
-            tx.send(Cmd::Reduce).unwrap();
+        for kk in 0..k as u8 {
+            frame::encode_control(&mut sendbuf, FrameKind::StartReduce, leader);
+            net.send_unicast(leader, kk, &sendbuf);
         }
-        let mut fresh: Vec<Vec<(Vertex, f64)>> = vec![Vec::new(); k];
+        let mut validated = 0usize;
         let mut reduced = 0usize;
         while reduced < k {
-            if let Event::Reduced(kk, pairs) = event_rx.recv().expect("worker hung up") {
-                fresh[kk as usize] = pairs;
-                reduced += 1;
+            assert!(net.recv(leader, &mut rbuf), "leader: a worker disconnected");
+            let f = Frame::parse(&rbuf).expect("leader: bad frame");
+            match f.kind {
+                FrameKind::Reduced => {
+                    let kk = f.sender as usize;
+                    let rows = &alloc.reduce_sets[kk];
+                    assert_eq!(f.count as usize, rows.len(), "short Reduced payload");
+                    let buf = &mut fresh_bits[kk];
+                    buf.clear();
+                    buf.extend((0..rows.len()).map(|c| f.word(c)));
+                    validated += f.index as usize;
+                    reduced += 1;
+                }
+                other => unreachable!("leader: unexpected {other:?} before the reduce barrier"),
             }
         }
-        times.reduce_s = prep
-            .reduce_edges
-            .iter()
-            .map(|&e| e as f64 * cfg.time.reduce_iv_s)
-            .fold(0.0, f64::max);
+        times.reduce_s = modeled.reduce_s;
 
         // ---- State write-back ----
         bus.reset();
         let mut update_load = ShuffleLoad::default();
-        let mut outgoing: Vec<Vec<(Vertex, f64)>> = vec![Vec::new(); k];
-        for pairs in &fresh {
-            for &(v, s) in pairs {
-                final_state[v as usize] = s;
-                for &m in &alloc.batches[alloc.batch_of(v)].servers {
-                    outgoing[m as usize].push((v, s));
-                }
-            }
-        }
         if cfg.account_state_update && r > 1 {
             // replay the prepared deterministic multicast list
             for &(owner, count, others) in prep.update_msgs() {
@@ -237,12 +304,30 @@ fn leader_loop(
             }
             times.update_s = bus.clock();
         }
-        for (kk, pairs) in outgoing.into_iter().enumerate() {
-            cmd_txs[kk].send(Cmd::StateUpdate(pairs)).unwrap();
+        // route fresh states to every replica holder (star-routed through
+        // the leader; the *accounting* above models the owner-to-replica
+        // multicasts the engine has always charged)
+        let mut outgoing: Vec<Vec<(u32, u64)>> = vec![Vec::new(); k];
+        for (kk, bits) in fresh_bits.iter().enumerate() {
+            for (&i, &b) in alloc.reduce_sets[kk].iter().zip(bits) {
+                final_state[i as usize] = f64::from_bits(b);
+                for &m in &alloc.batches[alloc.batch_of(i)].servers {
+                    outgoing[m as usize].push((i, b));
+                }
+            }
         }
         let last = it + 1 == iters;
-        for tx in cmd_txs {
-            tx.send(if last { Cmd::Stop } else { Cmd::Continue }).unwrap();
+        for (kk, pairs) in outgoing.iter().enumerate() {
+            frame::encode_state_update(&mut sendbuf, leader, pairs);
+            net.send_unicast(leader, kk as u8, &sendbuf);
+        }
+        for kk in 0..k as u8 {
+            frame::encode_control(
+                &mut sendbuf,
+                if last { FrameKind::Stop } else { FrameKind::Continue },
+                leader,
+            );
+            net.send_unicast(leader, kk, &sendbuf);
         }
 
         report.iterations.push(IterationMetrics {
@@ -250,141 +335,453 @@ fn leader_loop(
             wall_s: iter_start.elapsed().as_secs_f64(),
             shuffle: shuffle_load,
             update: update_load,
-            validated_ivs: 0,
+            // structural validation: every worker reports how many IVs it
+            // recovered and ownership-checked; for coded schemes the sum
+            // is the plan's full IV count, matching the engine's report
+            // (the cluster cannot re-evaluate received bits — the
+            // receiver lacks the source state by design; bit-level
+            // validation is the oracle tests' job)
+            validated_ivs: if cfg.validate && prep.scheme.is_coded() { validated } else { 0 },
         });
     }
     report.final_state = final_state;
     report
 }
 
-/// One worker thread: owns only its entitled state, performs real encode /
-/// decode / reduce.
-#[allow(clippy::too_many_arguments)]
-fn worker_loop(
+/// One worker: owns only its entitled state, performs real encode /
+/// decode / reduce over the transport.
+struct Worker<'a> {
     me: u8,
+    g: &'a Csr,
+    alloc: &'a Allocation,
+    prog: &'a dyn VertexProgram,
+    prep: &'a PreparedJob,
+    net: &'a dyn Transport,
+    leader: u8,
+    r: usize,
+    sb: usize,
+    combined: bool,
+    /// Groups this worker decodes (ascending), with its member index,
+    /// column-arena offset, and value-arena offset per group.
+    my_groups: &'a [u32],
+    my_row_idx: Vec<usize>,
+    garena_off: Vec<usize>,
+    gvals_off: Vec<usize>,
+    /// Transfers this worker receives (ascending) with IV-arena offsets.
+    my_unc_recv: &'a [u32],
+    unc_off: Vec<usize>,
+    expect_coded: usize,
+    expect_unc: usize,
+    /// Local state: only Mapped + Reduced vertices are valid; NaN poison
+    /// elsewhere so illegal reads surface in tests.
+    state: Vec<f64>,
+    // -- steady-state scratch (allocated once; see the module hand-audit) --
+    vals: Vec<u64>,
+    cols: Vec<u64>,
+    bits: Vec<u64>,
+    /// Received coded columns, `members * my_len` per group, sender-major.
+    garena: Vec<u64>,
+    /// Group IV values for the groups this worker decodes, evaluated once
+    /// per iteration during `send_all` (the sender-side skip index equals
+    /// the receiver-side one, and state is frozen until write-back) and
+    /// reused by `decode_and_reduce`. Recv-groups this worker does not
+    /// send in have all other rows empty, so their (stale) entries are
+    /// never read during decode.
+    gvals: Vec<u64>,
+    /// Received uncoded IV bits, canonical transfer order.
+    unc_arena: Vec<u64>,
+    ivbits: Vec<u64>,
+    accs: Vec<f64>,
+    next_bits: Vec<u64>,
+    receivers: Vec<u8>,
+    sendbuf: Vec<u8>,
+    got_coded: usize,
+    got_unc: usize,
+}
+
+/// The IV value both schemes and the decoder share — a pure function of
+/// `(i, j, state)`. For combined schemes the "mapper" slot carries a
+/// batch index and the value is the per-(Reducer, batch) pre-aggregate;
+/// every evaluation site in this driver only touches batches the worker
+/// Maps, so the NaN poison never leaks into results.
+#[inline]
+fn iv_value(
     g: &Csr,
     alloc: &Allocation,
     prog: &dyn VertexProgram,
-    plan: &ShufflePlan,
-    transfers: &[UncodedTransfer],
-    reduce_slot: &[u32],
-    my_sends: &[(usize, usize)],
-    my_unc_sends: &[usize],
-    expect_coded: usize,
-    expect_unc: usize,
-    r: usize,
-    rx: Receiver<Cmd>,
-    tx: Sender<Event>,
-) {
-    let n = g.n();
-    // Local state: only Mapped + Reduced vertices are valid. NaN poison
-    // elsewhere so illegal reads surface in tests.
-    let mut state = vec![f64::NAN; n];
-    for j in alloc.mapped_vertices(me) {
-        state[j as usize] = prog.init(j, g);
+    state: &[f64],
+    combined: bool,
+    i: Vertex,
+    j: Vertex,
+) -> u64 {
+    if combined {
+        combined_value(g, alloc, prog, state, i, j as usize).to_bits()
+    } else {
+        let s = state[j as usize];
+        debug_assert!(!s.is_nan(), "worker read unowned state {j}");
+        prog.map(i, j, s, g).to_bits()
     }
-    for &i in &alloc.reduce_sets[me as usize] {
-        state[i as usize] = prog.init(i, g);
-    }
+}
 
-    loop {
-        // ---- Shuffle phase ----
-        match rx.recv().unwrap() {
-            Cmd::Shuffle => {}
-            Cmd::Stop => return,
-            _ => unreachable!("protocol error: expected Shuffle"),
-        }
-        {
-            let state_ref = &state;
-            let value = move |i: Vertex, j: Vertex| {
-                let s = state_ref[j as usize];
-                debug_assert!(!s.is_nan(), "worker read unowned state {j}");
-                prog.map(i, j, s, g).to_bits()
-            };
-            for &(gi, si) in my_sends {
-                let group = plan.group(gi);
-                let vals = row_values_except(group, si, &value);
-                let msg = encode_sender(group, si, &vals, r);
-                if !msg.columns.is_empty() {
-                    tx.send(Event::Multicast(me, gi, msg)).unwrap();
-                }
-            }
-            for &ti in my_unc_sends {
-                let t = &transfers[ti];
-                let ivs: Vec<RecoveredIv> = t
-                    .ivs
-                    .iter()
-                    .map(|&(i, j)| RecoveredIv { reducer: i, mapper: j, bits: value(i, j) })
-                    .collect();
-                tx.send(Event::Unicast(me, t.receiver, ivs)).unwrap();
-            }
-        }
-        tx.send(Event::SendDone).unwrap();
+impl<'a> Worker<'a> {
+    fn new(
+        me: u8,
+        g: &'a Csr,
+        alloc: &'a Allocation,
+        prog: &'a dyn VertexProgram,
+        prep: &'a PreparedJob,
+        net: &'a dyn Transport,
+        leader: u8,
+    ) -> Worker<'a> {
+        let n = g.n();
+        let r = alloc.r;
+        let plan = &prep.plan;
+        let wk = me as usize;
+        let rows = &alloc.reduce_sets[wk];
 
-        // ---- Receive + decode until the Reduce barrier ----
-        let mut received: Vec<RecoveredIv> = Vec::new();
-        let mut pending: Vec<(usize, Vec<CodedMessage>)> = Vec::new();
-        let mut got_coded = 0usize;
-        let mut got_unc = 0usize;
-        loop {
-            match rx.recv().unwrap() {
-                Cmd::DeliverCoded(gi, msg) => {
-                    got_coded += 1;
-                    match pending.iter_mut().find(|(g0, _)| *g0 == gi) {
-                        Some((_, msgs)) => msgs.push(msg),
-                        None => pending.push((gi, vec![msg])),
-                    }
-                }
-                Cmd::DeliverUncoded(ivs) => {
-                    got_unc += 1;
-                    received.extend(ivs);
-                }
-                Cmd::Reduce => break,
-                _ => unreachable!("protocol error during shuffle"),
-            }
+        let mut state = vec![f64::NAN; n];
+        for j in alloc.mapped_vertices(me) {
+            state[j as usize] = prog.init(j, g);
         }
-        assert_eq!(got_coded, expect_coded, "worker {me}: missing coded msgs");
-        assert_eq!(got_unc, expect_unc, "worker {me}: missing unicasts");
-        {
-            let state_ref = &state;
-            let value = move |i: Vertex, j: Vertex| {
-                let s = state_ref[j as usize];
-                debug_assert!(!s.is_nan(), "worker read unowned state {j}");
-                prog.map(i, j, s, g).to_bits()
-            };
-            for (gi, msgs) in pending {
-                received.extend(recover_group(plan.group(gi), me, &msgs, &value, r));
-            }
+        for &i in rows {
+            state[i as usize] = prog.init(i, g);
         }
 
-        // ---- Reduce (same fold as the engine) ----
-        let mut next = vec![0.0f64; n];
-        reduce_worker_rust(g, alloc, prog, &state, me, &received, reduce_slot, &mut next);
-        let pairs: Vec<(Vertex, f64)> = alloc.reduce_sets[me as usize]
+        // scratch sizing: max value-arena / column counts over the groups
+        // this worker encodes or decodes
+        let mut vals_cap = 0usize;
+        let mut cols_cap = 0usize;
+        for &(gi, si) in prep.send_plan(wk) {
+            vals_cap = vals_cap.max(plan.group(gi as usize).total_ivs());
+            cols_cap = cols_cap.max(plan.sender_cols(gi as usize)[si as usize] as usize);
+        }
+        let my_groups = prep.recv_groups(wk);
+        let mut my_row_idx = Vec::with_capacity(my_groups.len());
+        let mut garena_off = Vec::with_capacity(my_groups.len());
+        let mut gvals_off = Vec::with_capacity(my_groups.len());
+        let mut garena_len = 0usize;
+        let mut gvals_len = 0usize;
+        let mut bits_cap = 0usize;
+        for &gi in my_groups {
+            let group = plan.group(gi as usize);
+            let m_idx = group.member_index(me).expect("routing: not a member");
+            let my_len = group.row_len(m_idx);
+            bits_cap = bits_cap.max(my_len);
+            my_row_idx.push(m_idx);
+            garena_off.push(garena_len);
+            garena_len += group.members() * my_len;
+            gvals_off.push(gvals_len);
+            gvals_len += group.total_ivs();
+        }
+        let my_unc_recv = prep.unc_recv(wk);
+        let mut unc_off = Vec::with_capacity(my_unc_recv.len());
+        let mut unc_len = 0usize;
+        for &ti in my_unc_recv {
+            unc_off.push(unc_len);
+            unc_len += prep.transfers[ti as usize].ivs.len();
+        }
+        let ivbits_cap = prep
+            .unc_sends(wk)
             .iter()
-            .map(|&i| (i, next[i as usize]))
-            .collect();
-        tx.send(Event::Reduced(me, pairs.clone())).unwrap();
+            .map(|&ti| prep.transfers[ti as usize].ivs.len())
+            .max()
+            .unwrap_or(0);
 
-        // ---- State write-back ----
-        for s in state.iter_mut() {
-            *s = f64::NAN;
+        Worker {
+            me,
+            g,
+            alloc,
+            prog,
+            prep,
+            net,
+            leader,
+            r,
+            sb: seg_bytes(r),
+            combined: prep.scheme.is_combined(),
+            my_groups,
+            my_row_idx,
+            garena_off,
+            gvals_off,
+            my_unc_recv,
+            unc_off,
+            expect_coded: prep.expect_coded(wk),
+            expect_unc: prep.expect_unc(wk),
+            state,
+            vals: vec![0u64; vals_cap],
+            cols: vec![0u64; cols_cap],
+            bits: vec![0u64; bits_cap],
+            garena: vec![0u64; garena_len],
+            gvals: vec![0u64; gvals_len],
+            unc_arena: vec![0u64; unc_len],
+            ivbits: Vec::with_capacity(ivbits_cap),
+            accs: vec![0.0f64; rows.len()],
+            next_bits: vec![0u64; rows.len()],
+            receivers: Vec::with_capacity(r + 1),
+            sendbuf: Vec::new(),
+            got_coded: 0,
+            got_unc: 0,
         }
-        loop {
-            match rx.recv().unwrap() {
-                Cmd::StateUpdate(updates) => {
-                    for (v, s) in updates {
-                        state[v as usize] = s;
-                    }
-                    // own reduce rows stay valid (finalize needs prev state)
-                    for &(i, s) in &pairs {
-                        state[i as usize] = s;
-                    }
+    }
+
+    /// Block for the next frame; a disconnected peer is a protocol
+    /// failure (panic unwinds the scope via the leave guards).
+    fn recv_frame<'b>(&self, rbuf: &'b mut Vec<u8>) -> Frame<'b> {
+        let ok = self.net.recv(self.me, rbuf);
+        assert!(ok, "worker {}: peer disconnected", self.me);
+        Frame::parse(rbuf).expect("worker: bad frame")
+    }
+
+    fn run(&mut self) {
+        let mut rbuf: Vec<u8> = Vec::new();
+        let mut reply: Vec<u8> = Vec::new();
+        'iterations: loop {
+            // ---- await the Shuffle barrier ----
+            loop {
+                let f = self.recv_frame(&mut rbuf);
+                match f.kind {
+                    FrameKind::StartShuffle => break,
+                    FrameKind::CodedData | FrameKind::UncodedData => self.handle_data(&f),
+                    // a zero-iteration job stops before any shuffle starts
+                    FrameKind::Stop => return,
+                    other => unreachable!("unexpected {other:?} awaiting shuffle"),
                 }
-                Cmd::Continue => break,
-                Cmd::Stop => return,
-                _ => unreachable!("protocol error at write-back"),
             }
+            self.send_all();
+
+            // ---- receive until the Reduce barrier AND all expected data ----
+            let mut got_reduce = false;
+            while !(got_reduce
+                && self.got_coded == self.expect_coded
+                && self.got_unc == self.expect_unc)
+            {
+                let f = self.recv_frame(&mut rbuf);
+                match f.kind {
+                    FrameKind::StartReduce => got_reduce = true,
+                    FrameKind::CodedData | FrameKind::UncodedData => self.handle_data(&f),
+                    other => unreachable!("unexpected {other:?} during shuffle"),
+                }
+            }
+            // this iteration's frames are all in the arenas; reset the
+            // tallies *before* replying so data that races ahead of our
+            // next controls counts toward the next barrier
+            self.got_coded = 0;
+            self.got_unc = 0;
+            let validated = self.decode_and_reduce();
+            frame::encode_reduced(&mut reply, self.me, validated, &self.next_bits);
+            self.net.send_unicast(self.me, self.leader, &reply);
+
+            // ---- state write-back ----
+            for s in self.state.iter_mut() {
+                *s = f64::NAN;
+            }
+            let mut got_update = false;
+            loop {
+                let f = self.recv_frame(&mut rbuf);
+                match f.kind {
+                    FrameKind::StateUpdate => {
+                        self.apply_update(&f);
+                        got_update = true;
+                    }
+                    FrameKind::Continue => {
+                        assert!(got_update, "Continue before StateUpdate");
+                        continue 'iterations;
+                    }
+                    FrameKind::Stop => return,
+                    FrameKind::CodedData | FrameKind::UncodedData => self.handle_data(&f),
+                    other => unreachable!("unexpected {other:?} at write-back"),
+                }
+            }
+        }
+    }
+
+    /// Encode and transmit everything this worker owes, then signal the
+    /// leader. Steady state: no allocation (scratch + frame buffer reuse).
+    fn send_all(&mut self) {
+        let (g, alloc, prog) = (self.g, self.alloc, self.prog);
+        let (combined, me, r, sb) = (self.combined, self.me, self.r, self.sb);
+        let plan = &self.prep.plan;
+        let state = &self.state;
+        let value = move |i: Vertex, j: Vertex| iv_value(g, alloc, prog, state, combined, i, j);
+
+        for &(gi, si) in self.prep.send_plan(me as usize) {
+            let group = plan.group(gi as usize);
+            let q = plan.sender_cols(gi as usize)[si as usize] as usize;
+            let nv = group.total_ivs();
+            // when we also decode this group, evaluate into the
+            // persistent per-group arena so decode_and_reduce can reuse
+            // the values (our skip index is the same on both sides and
+            // state is frozen until write-back)
+            let vals: &[u64] = match self.my_groups.binary_search(&gi) {
+                Ok(slot) => {
+                    let range = self.gvals_off[slot]..self.gvals_off[slot] + nv;
+                    eval_rows_except(group, si as usize, &value, &mut self.gvals[range.clone()]);
+                    &self.gvals[range]
+                }
+                Err(_) => {
+                    eval_rows_except(group, si as usize, &value, &mut self.vals[..nv]);
+                    &self.vals[..nv]
+                }
+            };
+            let (gi, si) = (gi as usize, si as usize);
+            encode_sender_into(group, si, vals, r, &mut self.cols[..q]);
+            frame::encode_coded(&mut self.sendbuf, me, gi as u32, &self.cols[..q], sb);
+            self.receivers.clear();
+            for (mi, &m) in group.servers.iter().enumerate() {
+                if m != me && group.row_len(mi) > 0 {
+                    self.receivers.push(m);
+                }
+            }
+            self.net.send_multicast(me, &self.receivers, &self.sendbuf);
+        }
+        for &ti in self.prep.unc_sends(me as usize) {
+            let t = &self.prep.transfers[ti as usize];
+            self.ivbits.clear();
+            self.ivbits.extend(t.ivs.iter().map(|&(i, j)| value(i, j)));
+            frame::encode_uncoded(&mut self.sendbuf, me, ti, &self.ivbits);
+            self.net.send_unicast(me, t.receiver, &self.sendbuf);
+        }
+        frame::encode_control(&mut self.sendbuf, FrameKind::SendDone, me);
+        self.net.send_unicast(me, self.leader, &self.sendbuf);
+    }
+
+    /// Stash one data frame into its arena slot (state-independent: the
+    /// sender already evaluated the bits, we only copy bytes) and count
+    /// it toward the current barrier.
+    fn handle_data(&mut self, f: &Frame<'_>) {
+        match f.kind {
+            FrameKind::CodedData => {
+                let slot = self
+                    .my_groups
+                    .binary_search(&f.index)
+                    .expect("coded frame for a group this worker has no row in");
+                let group = self.prep.plan.group(f.index as usize);
+                let m_idx = self.my_row_idx[slot];
+                let my_len = group.row_len(m_idx);
+                let s_idx = group.member_index(f.sender).expect("sender not in group");
+                debug_assert_ne!(s_idx, m_idx, "received own transmission");
+                debug_assert!(f.count as usize >= my_len, "short coded frame");
+                let base = self.garena_off[slot] + s_idx * my_len;
+                for (c, cell) in self.garena[base..base + my_len].iter_mut().enumerate() {
+                    *cell = f.col(c, self.sb);
+                }
+                self.got_coded += 1;
+            }
+            FrameKind::UncodedData => {
+                let pos = self
+                    .my_unc_recv
+                    .binary_search(&f.index)
+                    .expect("unicast for a transfer this worker does not receive");
+                let count = f.count as usize;
+                debug_assert_eq!(count, self.prep.transfers[f.index as usize].ivs.len());
+                let base = self.unc_off[pos];
+                for (c, cell) in self.unc_arena[base..base + count].iter_mut().enumerate() {
+                    *cell = f.word(c);
+                }
+                self.got_unc += 1;
+            }
+            _ => unreachable!("handle_data on a control frame"),
+        }
+    }
+
+    /// Decode received traffic and run the Reduce fold in *exactly* the
+    /// engine's canonical order (local Map values, then groups ascending,
+    /// then transfers ascending), so final states are bit-identical to
+    /// `engine::run_rust`. Returns the recovered-and-ownership-checked IV
+    /// count (the `validated_ivs` contribution).
+    fn decode_and_reduce(&mut self) -> u32 {
+        let (g, alloc, prog) = (self.g, self.alloc, self.prog);
+        let (me, r) = (self.me, self.r);
+        let plan = &self.prep.plan;
+        let reduce_slot: &[u32] = &self.prep.reduce_slot;
+        let state = &self.state;
+        let rows = &alloc.reduce_sets[me as usize];
+
+        // local fold (identical combine sequence to the engine)
+        for (slot, &i) in rows.iter().enumerate() {
+            let mut acc = prog.identity();
+            for &j in g.neighbors(i) {
+                if alloc.maps(me, j) {
+                    acc = prog.combine(acc, prog.map(i, j, state[j as usize], g));
+                }
+            }
+            self.accs[slot] = acc;
+        }
+
+        let mut validated = 0u32;
+        // coded: cancel + reassemble per group, fold in pair order. The
+        // cancellation values were already evaluated into `gvals` during
+        // send_all (same skip index, same state); a recv-group we did not
+        // send in has every other row empty, so its stale arena entries
+        // are never read by the decoder
+        for (slot_idx, &gi) in self.my_groups.iter().enumerate() {
+            let group = plan.group(gi as usize);
+            let m_idx = self.my_row_idx[slot_idx];
+            let my_len = group.row_len(m_idx);
+            let nv = group.total_ivs();
+            let gvals = &self.gvals[self.gvals_off[slot_idx]..self.gvals_off[slot_idx] + nv];
+            let bits = &mut self.bits[..my_len];
+            bits.fill(0);
+            let base = self.garena_off[slot_idx];
+            for s_idx in 0..group.members() {
+                if s_idx == m_idx {
+                    continue;
+                }
+                decode_sender_into(
+                    group,
+                    m_idx,
+                    s_idx,
+                    &self.garena[base + s_idx * my_len..base + (s_idx + 1) * my_len],
+                    gvals,
+                    r,
+                    bits,
+                );
+            }
+            for (c, &(i, _)) in group.row(m_idx).iter().enumerate() {
+                // hard check: reduce_slot is populated for *every* vertex,
+                // so a misrouted IV would otherwise fold silently into the
+                // wrong accumulator
+                assert_eq!(
+                    alloc.reduce_owner[i as usize], me,
+                    "decoded IV for a vertex this worker does not reduce"
+                );
+                let slot = reduce_slot[i as usize] as usize;
+                self.accs[slot] = prog.combine(self.accs[slot], f64::from_bits(bits[c]));
+            }
+            validated += my_len as u32;
+        }
+        // uncoded: fold received batches in canonical transfer order
+        for (pos, &ti) in self.my_unc_recv.iter().enumerate() {
+            let t = &self.prep.transfers[ti as usize];
+            let base = self.unc_off[pos];
+            for (c, &(i, _)) in t.ivs.iter().enumerate() {
+                assert_eq!(
+                    alloc.reduce_owner[i as usize], me,
+                    "received IV for a vertex this worker does not reduce"
+                );
+                let slot = reduce_slot[i as usize] as usize;
+                self.accs[slot] =
+                    prog.combine(self.accs[slot], f64::from_bits(self.unc_arena[base + c]));
+            }
+            validated += t.ivs.len() as u32;
+        }
+        // finalize into the Reduced payload (bit-exact states)
+        for (slot, &i) in rows.iter().enumerate() {
+            self.next_bits[slot] =
+                prog.finalize(i, self.accs[slot], state[i as usize], g).to_bits();
+        }
+        validated
+    }
+
+    /// Apply the leader's fresh states; own reduce rows stay valid (the
+    /// next finalize needs the previous state).
+    fn apply_update(&mut self, f: &Frame<'_>) {
+        for c in 0..f.count as usize {
+            let (v, bits) = f.update_pair(c);
+            self.state[v as usize] = f64::from_bits(bits);
+        }
+        let rows = &self.alloc.reduce_sets[self.me as usize];
+        for (slot, &i) in rows.iter().enumerate() {
+            self.state[i as usize] = f64::from_bits(self.next_bits[slot]);
         }
     }
 }
@@ -397,7 +794,7 @@ mod tests {
     use crate::mapreduce::{PageRank, Sssp};
     use crate::util::rng::DetRng;
 
-    use super::super::config::Scheme;
+    use super::super::engine::run_rust;
 
     fn cfg(scheme: Scheme) -> EngineConfig {
         EngineConfig { scheme, ..Default::default() }
@@ -443,17 +840,69 @@ mod tests {
     }
 
     #[test]
-    fn cluster_and_engine_agree_on_loads() {
+    fn cluster_is_bit_identical_to_engine() {
+        // the acceptance bar: final states equal run_rust's bit-for-bit,
+        // on every scheme the driver supports (combined included — the
+        // workers evaluate per-batch pre-aggregates locally)
         let g = er(150, 0.1, &mut DetRng::seed(64));
         let alloc = Allocation::er_scheme(150, 5, 2);
         let prog = PageRank::default();
         let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        for scheme in [
+            Scheme::Coded,
+            Scheme::Uncoded,
+            Scheme::CodedCombined,
+            Scheme::UncodedCombined,
+        ] {
+            let cl = run_cluster(&job, &cfg(scheme), 3);
+            let en = run_rust(&job, &cfg(scheme), 3);
+            for (a, b) in cl.final_state.iter().zip(&en.final_state) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{scheme}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn cluster_and_engine_agree_on_loads_and_times() {
+        let g = er(150, 0.1, &mut DetRng::seed(64));
+        let alloc = Allocation::er_scheme(150, 5, 2);
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        for scheme in [Scheme::Coded, Scheme::Uncoded] {
+            let cl = run_cluster(&job, &cfg(scheme), 2);
+            let en = run_rust(&job, &cfg(scheme), 2);
+            for (a, b) in cl.iterations.iter().zip(&en.iterations) {
+                assert_eq!(a.shuffle.paper_bits, b.shuffle.paper_bits);
+                assert_eq!(a.shuffle.wire_payload_bytes, b.shuffle.wire_payload_bytes);
+                assert_eq!(a.shuffle.messages, b.shuffle.messages);
+                assert_eq!(a.update.wire_payload_bytes, b.update.wire_payload_bytes);
+                // modeled phase times replay identically too
+                assert_eq!(a.times.map_s, b.times.map_s);
+                assert_eq!(a.times.shuffle_s, b.times.shuffle_s);
+                assert_eq!(a.times.encode_s, b.times.encode_s);
+                assert_eq!(a.times.decode_s, b.times.decode_s);
+                assert_eq!(a.times.reduce_s, b.times.reduce_s);
+                assert_eq!(a.times.update_s, b.times.update_s);
+            }
+        }
+    }
+
+    #[test]
+    fn cluster_validated_ivs_match_engine() {
+        let g = er(130, 0.12, &mut DetRng::seed(66));
+        let alloc = Allocation::er_scheme(130, 4, 2);
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let vcfg = EngineConfig { scheme: Scheme::Coded, validate: true, ..Default::default() };
+        let cl = run_cluster(&job, &vcfg, 2);
+        let en = run_rust(&job, &vcfg, 2);
+        for (a, b) in cl.iterations.iter().zip(&en.iterations) {
+            assert!(a.validated_ivs > 0);
+            assert_eq!(a.validated_ivs, b.validated_ivs);
+        }
+        // validation off: both report zero
         let cl = run_cluster(&job, &cfg(Scheme::Coded), 1);
-        let en = crate::coordinator::engine::run_rust(&job, &cfg(Scheme::Coded), 1);
-        let (a, b) = (&cl.iterations[0].shuffle, &en.iterations[0].shuffle);
-        assert_eq!(a.paper_bits, b.paper_bits);
-        assert_eq!(a.wire_payload_bytes, b.wire_payload_bytes);
-        assert_eq!(a.messages, b.messages);
+        assert_eq!(cl.iterations[0].validated_ivs, 0);
     }
 
     #[test]
@@ -467,5 +916,54 @@ mod tests {
         for (a, b) in report.final_state.iter().zip(&want) {
             assert!((a - b).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn tcp_backend_matches_inproc() {
+        // same job, both backends: identical bits end to end (the TCP
+        // loopback integration test covers the oracle + loads; this one
+        // pins backend-independence at the unit level)
+        let g = er(80, 0.15, &mut DetRng::seed(67));
+        let alloc = Allocation::er_scheme(80, 3, 2);
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let a = run_cluster_on(&job, &cfg(Scheme::Coded), 2, TransportKind::InProc);
+        let b = run_cluster_on(&job, &cfg(Scheme::Coded), 2, TransportKind::Tcp);
+        for (x, y) in a.final_state.iter().zip(&b.final_state) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(a.iterations[0].shuffle, b.iterations[0].shuffle);
+    }
+
+    #[test]
+    fn zero_iterations_returns_init_state() {
+        // must terminate (workers released with an immediate Stop) and
+        // report the init state, like the engine does
+        let g = er(60, 0.15, &mut DetRng::seed(69));
+        let alloc = Allocation::er_scheme(60, 3, 2);
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let report = run_cluster(&job, &cfg(Scheme::Coded), 0);
+        assert!(report.iterations.is_empty());
+        let en = run_rust(&job, &cfg(Scheme::Coded), 0);
+        for (a, b) in report.final_state.iter().zip(&en.final_state) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn single_worker_degenerate_cluster() {
+        // K=1, r=1: no shuffle traffic at all; the protocol still has to
+        // barrier correctly
+        let g = er(50, 0.2, &mut DetRng::seed(68));
+        let alloc = Allocation::er_scheme(50, 1, 1);
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let report = run_cluster(&job, &cfg(Scheme::Coded), 2);
+        let want = run_single_machine(&prog, &g, 2);
+        for (a, b) in report.final_state.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        assert_eq!(report.iterations[0].shuffle.messages, 0);
     }
 }

@@ -6,8 +6,10 @@
 //! XOR-encoded, receivers cancel and reassemble IVs, and the Reduce folds
 //! the recovered bits. Wire time comes from the [`Bus`] model; compute
 //! time from the [`TimeModel`](super::config::TimeModel) (max over
-//! workers for parallel phases). The threaded driver ([`super::cluster`])
-//! runs the same phase functions on real threads with real channels.
+//! workers for parallel phases). The cluster driver ([`super::cluster`])
+//! runs the same job on real threads over the wire-format transport
+//! layer, sharing this module's [`PreparedJob`] routing tables and
+//! modeled-time folds so its metrics replay bit-identically.
 //!
 //! ## Architecture (§Perf)
 //!
@@ -45,14 +47,16 @@ use crate::shuffle::coded::{encode_group_into, eval_group_values};
 use crate::shuffle::combined::{
     build_combined_group_plans, combined_value, plan_uncoded_combined,
 };
-use crate::shuffle::decoder::{decode_group_into, RecoveredIv};
+use crate::shuffle::decoder::decode_group_into;
+#[cfg(feature = "xla")]
+use crate::shuffle::decoder::RecoveredIv;
 use crate::shuffle::load::{ShuffleLoad, HEADER_BYTES};
 use crate::shuffle::plan::{build_group_plans, ShufflePlan};
 use crate::shuffle::segments::seg_bytes;
 use crate::shuffle::uncoded::{plan_uncoded, UncodedTransfer};
 use crate::util::par;
 
-use super::config::{EngineConfig, Scheme};
+use super::config::{EngineConfig, Scheme, TimeModel};
 use super::metrics::{IterationMetrics, JobReport, PhaseTimes};
 
 /// A distributed graph job: graph + allocation + vertex program.
@@ -113,10 +117,21 @@ pub struct PreparedJob {
     /// (group) order; worker `k` owns
     /// `recv_ranges[recv_off[k]..recv_off[k+1]]`.
     recv_ranges: Vec<(usize, usize)>,
+    /// Per-worker inbound group indices (ascending), 1:1 with
+    /// `recv_ranges` — the cluster workers' decode routing table.
+    recv_groups: Vec<u32>,
     recv_off: Vec<usize>,
     /// Per-worker transfer indices (uncoded delivery order).
     unc_recv: Vec<u32>,
     unc_recv_off: Vec<usize>,
+    /// Per-worker coded send items `(group, sender_idx)`, group-ascending
+    /// — the cluster workers' send routing table (flat; worker `k` owns
+    /// `send_items[send_off[k]..send_off[k+1]]`).
+    send_items: Vec<(u32, u32)>,
+    send_off: Vec<usize>,
+    /// Per-worker outbound uncoded transfer indices, ascending.
+    unc_send: Vec<u32>,
+    unc_send_off: Vec<usize>,
     /// Modeled Encode table bytes per worker (state-independent).
     encode_bytes: Vec<usize>,
     /// Modeled Decode bytes per worker (state-independent).
@@ -132,6 +147,63 @@ impl PreparedJob {
     /// vertex_count, receivers)` (shared with the cluster driver).
     pub fn update_msgs(&self) -> &[(u8, u32, u32)] {
         &self.update_msgs
+    }
+
+    /// Coded multicasts worker `k` transmits: `(group, sender_idx)`
+    /// pairs, group-ascending — only senders with a non-empty column
+    /// count appear (an all-other-rows-empty member sends nothing).
+    pub fn send_plan(&self, k: usize) -> &[(u32, u32)] {
+        &self.send_items[self.send_off[k]..self.send_off[k + 1]]
+    }
+
+    /// Uncoded transfers worker `k` sends (indices into
+    /// [`PreparedJob::transfers`], ascending).
+    pub fn unc_sends(&self, k: usize) -> &[u32] {
+        &self.unc_send[self.unc_send_off[k]..self.unc_send_off[k + 1]]
+    }
+
+    /// Multicast groups worker `k` receives from (its row is non-empty),
+    /// ascending — the canonical decode/fold order the engine also uses.
+    pub fn recv_groups(&self, k: usize) -> &[u32] {
+        &self.recv_groups[self.recv_off[k]..self.recv_off[k + 1]]
+    }
+
+    /// Uncoded transfers worker `k` receives (indices ascending — the
+    /// canonical fold order).
+    pub fn unc_recv(&self, k: usize) -> &[u32] {
+        &self.unc_recv[self.unc_recv_off[k]..self.unc_recv_off[k + 1]]
+    }
+
+    /// Coded messages worker `k` must receive per iteration: one from
+    /// each of the other `r` members of every group it has a row in
+    /// (whenever `k`'s row is non-empty, every other member's column
+    /// count is at least that row's length, so all of them transmit).
+    pub fn expect_coded(&self, k: usize) -> usize {
+        self.recv_groups(k).len() * (self.plan.members() - 1)
+    }
+
+    /// Uncoded unicast batches worker `k` must receive per iteration.
+    pub fn expect_unc(&self, k: usize) -> usize {
+        self.unc_recv(k).len()
+    }
+
+    /// Modeled compute-phase times (max over workers — the paper's
+    /// parallel phases): Map, Encode, Decode, Reduce. Shuffle/update are
+    /// bus time, not compute, and stay zero here. One implementation
+    /// shared by the engine and the cluster leader, so the two replays
+    /// cannot drift (the cluster's bit-identical-metrics contract).
+    /// Encode/Decode tallies are zero for uncoded schemes (empty plan).
+    pub fn modeled_compute_times(&self, time: &TimeModel) -> PhaseTimes {
+        fn fold_max(per_worker: &[usize], unit_s: f64) -> f64 {
+            per_worker.iter().map(|&w| w as f64 * unit_s).fold(0.0, f64::max)
+        }
+        PhaseTimes {
+            map_s: fold_max(&self.mapped_edges, time.map_edge_s),
+            encode_s: fold_max(&self.encode_bytes, time.encode_byte_s),
+            decode_s: fold_max(&self.decode_bytes, time.decode_byte_s),
+            reduce_s: fold_max(&self.reduce_edges, time.reduce_iv_s),
+            ..PhaseTimes::default()
+        }
     }
 }
 
@@ -182,9 +254,13 @@ pub fn prepare(job: &Job<'_>, scheme: Scheme) -> PreparedJob {
         reduce_off.push(reduce_off.last().unwrap() + set.len());
     }
 
-    // per-worker receive ranges (coded) and transfer lists (uncoded), in
-    // the exact delivery order the serial engine has always used
+    // per-worker receive ranges + group routing (coded), send routing,
+    // and transfer lists (uncoded), in the exact delivery order the
+    // serial engine has always used — the cluster driver shares these
+    // tables instead of rebuilding them per run
     let mut recv_lists: Vec<Vec<(usize, usize)>> = vec![Vec::new(); k];
+    let mut recv_group_lists: Vec<Vec<u32>> = vec![Vec::new(); k];
+    let mut send_lists: Vec<Vec<(u32, u32)>> = vec![Vec::new(); k];
     let sb = seg_bytes(r);
     let mut encode_bytes = vec![0usize; k];
     let mut decode_bytes = vec![0usize; k];
@@ -201,6 +277,7 @@ pub fn prepare(job: &Job<'_>, scheme: Scheme) -> PreparedJob {
                 .map(|i| group.row_len(i) * sb)
                 .sum();
             encode_bytes[group.servers[s_idx] as usize] += table;
+            send_lists[group.servers[s_idx] as usize].push((gi as u32, s_idx as u32));
         }
         for mi in 0..group.members() {
             let rlen = group.row_len(mi);
@@ -210,22 +287,34 @@ pub fn prepare(job: &Job<'_>, scheme: Scheme) -> PreparedJob {
             let lr = group.local_row_range(mi);
             let worker = group.servers[mi] as usize;
             recv_lists[worker].push((base + lr.start, base + lr.end));
+            recv_group_lists[worker].push(gi as u32);
             // decode work: r-1 segment recomputations + 1 XOR per
             // received byte of this member's row
             decode_bytes[worker] += rlen * sb * r;
         }
     }
     let mut recv_ranges = Vec::with_capacity(recv_lists.iter().map(|l| l.len()).sum());
+    let mut recv_groups = Vec::with_capacity(recv_ranges.capacity());
     let mut recv_off = Vec::with_capacity(k + 1);
     recv_off.push(0);
-    for list in &recv_lists {
+    for (list, glist) in recv_lists.iter().zip(&recv_group_lists) {
         recv_ranges.extend_from_slice(list);
+        recv_groups.extend_from_slice(glist);
         recv_off.push(recv_ranges.len());
+    }
+    let mut send_items = Vec::with_capacity(send_lists.iter().map(|l| l.len()).sum());
+    let mut send_off = Vec::with_capacity(k + 1);
+    send_off.push(0);
+    for list in &send_lists {
+        send_items.extend_from_slice(list);
+        send_off.push(send_items.len());
     }
 
     let mut unc_lists: Vec<Vec<u32>> = vec![Vec::new(); k];
+    let mut unc_send_lists: Vec<Vec<u32>> = vec![Vec::new(); k];
     for (ti, t) in transfers.iter().enumerate() {
         unc_lists[t.receiver as usize].push(ti as u32);
+        unc_send_lists[t.sender as usize].push(ti as u32);
     }
     let mut unc_recv = Vec::with_capacity(transfers.len());
     let mut unc_recv_off = Vec::with_capacity(k + 1);
@@ -233,6 +322,13 @@ pub fn prepare(job: &Job<'_>, scheme: Scheme) -> PreparedJob {
     for list in &unc_lists {
         unc_recv.extend_from_slice(list);
         unc_recv_off.push(unc_recv.len());
+    }
+    let mut unc_send = Vec::with_capacity(transfers.len());
+    let mut unc_send_off = Vec::with_capacity(k + 1);
+    unc_send_off.push(0);
+    for list in &unc_send_lists {
+        unc_send.extend_from_slice(list);
+        unc_send_off.push(unc_send.len());
     }
 
     // state write-back replay list: per (batch, reducer) multicast of the
@@ -269,9 +365,14 @@ pub fn prepare(job: &Job<'_>, scheme: Scheme) -> PreparedJob {
         reduce_slot,
         reduce_off,
         recv_ranges,
+        recv_groups,
         recv_off,
         unc_recv,
         unc_recv_off,
+        send_items,
+        send_off,
+        unc_send,
+        unc_send_off,
         encode_bytes,
         decode_bytes,
         update_msgs,
@@ -416,11 +517,8 @@ pub fn run_iteration_scratch(
     };
 
     // ---- Map phase (modeled: parallel across workers) -------------------
-    times.map_s = prep
-        .mapped_edges
-        .iter()
-        .map(|&e| e as f64 * cfg.time.map_edge_s)
-        .fold(0.0, f64::max);
+    let modeled = prep.modeled_compute_times(&cfg.time);
+    times.map_s = modeled.map_s;
 
     // ---- Shuffle (Encode → bus → Decode) --------------------------------
     match prep.scheme {
@@ -472,16 +570,8 @@ pub fn run_iteration_scratch(
                 }
             }
             times.shuffle_s = bus.clock();
-            times.encode_s = prep
-                .encode_bytes
-                .iter()
-                .map(|&b| b as f64 * cfg.time.encode_byte_s)
-                .fold(0.0, f64::max);
-            times.decode_s = prep
-                .decode_bytes
-                .iter()
-                .map(|&b| b as f64 * cfg.time.decode_byte_s)
-                .fold(0.0, f64::max);
+            times.encode_s = modeled.encode_s;
+            times.decode_s = modeled.decode_s;
             if cfg.validate {
                 for (idx, &(i, j)) in plan.pairs().iter().enumerate() {
                     assert_eq!(
@@ -533,11 +623,7 @@ pub fn run_iteration_scratch(
         #[cfg(not(feature = "xla"))]
         Backend::__Uninhabited(inf, _) => match *inf {},
     }
-    times.reduce_s = prep
-        .reduce_edges
-        .iter()
-        .map(|&e| e as f64 * cfg.time.reduce_iv_s)
-        .fold(0.0, f64::max);
+    times.reduce_s = modeled.reduce_s;
 
     // ---- State write-back (iterative jobs) --------------------------------
     let mut update_load = ShuffleLoad::default();
@@ -658,49 +744,6 @@ pub fn run_iteration(
     let mut next = vec![0.0f64; job.graph.n()];
     let metrics = run_iteration_scratch(job, prep, state, cfg, backend, &mut scratch, &mut next);
     (next, metrics)
-}
-
-/// Pure-rust Reduce for one worker: fold local + received IVs.
-/// `reduce_slot` is the prepared reducer→slot index
-/// ([`PreparedJob::reduce_slot`]); the threaded cluster driver shares it
-/// across workers.
-#[allow(clippy::too_many_arguments)]
-pub fn reduce_worker_rust(
-    g: &Csr,
-    alloc: &Allocation,
-    prog: &dyn VertexProgram,
-    state: &[f64],
-    worker: u8,
-    received: &[RecoveredIv],
-    reduce_slot: &[u32],
-    next: &mut [f64],
-) {
-    let rows = &alloc.reduce_sets[worker as usize];
-    let mut accs: Vec<f64> = Vec::with_capacity(rows.len());
-    for &i in rows {
-        let mut acc = prog.identity();
-        for &j in g.neighbors(i) {
-            if alloc.maps(worker, j) {
-                acc = prog.combine(acc, prog.map(i, j, state[j as usize], g));
-            }
-        }
-        accs.push(acc);
-    }
-    for riv in received {
-        // hard check (the pre-arena code panicked here via binary_search):
-        // reduce_slot is populated for *every* vertex, so a misrouted IV
-        // would otherwise fold silently into the wrong accumulator
-        assert_eq!(
-            alloc.reduce_owner[riv.reducer as usize],
-            worker,
-            "received IV for a vertex this worker does not reduce"
-        );
-        let pos = reduce_slot[riv.reducer as usize] as usize;
-        accs[pos] = prog.combine(accs[pos], f64::from_bits(riv.bits));
-    }
-    for (&i, acc) in rows.iter().zip(accs) {
-        next[i as usize] = prog.finalize(i, acc, state[i as usize], g);
-    }
 }
 
 /// PJRT Reduce for one worker: assemble the Map-value vector from local
@@ -981,6 +1024,56 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits());
             }
             std::mem::swap(&mut state, &mut next);
+        }
+    }
+
+    #[test]
+    fn prepared_routing_tables_are_consistent() {
+        // the cluster's routing tables (one precomputed source of truth
+        // in PreparedJob) must agree with a direct recount from the plan
+        let g = er(140, 0.12, &mut DetRng::seed(55));
+        for (scheme, r) in [
+            (Scheme::Coded, 2),
+            (Scheme::Coded, 1),
+            (Scheme::Uncoded, 3),
+            (Scheme::CodedCombined, 2),
+        ] {
+            let alloc = Allocation::er_scheme(140, 5, r);
+            let prog = PageRank::default();
+            let job = Job { graph: &g, alloc: &alloc, program: &prog };
+            let prep = prepare(&job, scheme);
+            let plan = &prep.plan;
+            let mut sends = 0usize;
+            for kk in 0..5 {
+                for &(gi, si) in prep.send_plan(kk) {
+                    assert!(plan.sender_cols(gi as usize)[si as usize] > 0);
+                    assert_eq!(plan.group(gi as usize).servers[si as usize] as usize, kk);
+                    sends += 1;
+                }
+                assert!(prep.send_plan(kk).windows(2).all(|w| w[0].0 <= w[1].0));
+                for &gi in prep.recv_groups(kk) {
+                    let group = plan.group(gi as usize);
+                    let mi = group.member_index(kk as u8).unwrap();
+                    assert!(group.row_len(mi) > 0, "recv group with empty row");
+                }
+                assert!(prep.recv_groups(kk).windows(2).all(|w| w[0] < w[1]));
+                for &ti in prep.unc_sends(kk) {
+                    assert_eq!(prep.transfers[ti as usize].sender as usize, kk);
+                }
+                for &ti in prep.unc_recv(kk) {
+                    assert_eq!(prep.transfers[ti as usize].receiver as usize, kk);
+                }
+                assert_eq!(prep.expect_unc(kk), prep.unc_recv(kk).len());
+                // everyone a row expects from transmits: r messages/group
+                assert_eq!(prep.expect_coded(kk), prep.recv_groups(kk).len() * r);
+            }
+            // every transmitting (group, sender) appears exactly once
+            let want_sends: usize = (0..plan.num_groups())
+                .map(|gi| plan.sender_cols(gi).iter().filter(|&&q| q > 0).count())
+                .sum();
+            assert_eq!(sends, want_sends, "{scheme} r={r}");
+            let total_unc: usize = (0..5).map(|kk| prep.unc_sends(kk).len()).sum();
+            assert_eq!(total_unc, prep.transfers.len());
         }
     }
 

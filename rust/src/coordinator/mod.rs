@@ -4,15 +4,19 @@
 //! * [`metrics`] — phase times, loads, job reports (the figures' data).
 //! * [`engine`] — the deterministic phase engine: flat-arena shuffle
 //!   plans, a reusable [`EngineScratch`] (zero-allocation steady-state
-//!   iterations), and rayon-parallel phases with bit-identical results.
-//! * [`cluster`] — the threaded leader/worker driver (real channels, real
-//!   per-worker decode; same phase functions as the engine).
+//!   iterations), rayon-parallel phases with bit-identical results, and
+//!   the precomputed per-worker routing tables the cluster shares.
+//! * [`cluster`] — the leader/worker driver over the pluggable
+//!   [`transport`](crate::transport) layer (wire-format frames, in-proc
+//!   rings or localhost TCP; real per-worker encode/decode, results
+//!   bit-identical to the engine).
 
 pub mod cluster;
 pub mod config;
 pub mod engine;
 pub mod metrics;
 
+pub use cluster::{run_cluster, run_cluster_on};
 pub use config::{EngineConfig, Scheme, TimeModel};
 pub use engine::{
     measure_loads, measure_loads_prepared, prepare, run, run_iteration, run_iteration_scratch,

@@ -35,7 +35,8 @@
 //! | [`mapreduce`] | vertex-program abstraction; PageRank and SSSP programs |
 //! | [`shuffle`] | uncoded unicast scheme + the paper's coded scheme; flat-arena [`shuffle::ShufflePlan`] + slice encode/decode kernels |
 //! | [`network`] | shared-bus wire-time model (one transmitter at a time) |
-//! | [`coordinator`] | phase engine (reusable [`coordinator::EngineScratch`], zero-alloc steady state, rayon-parallel phases) + threaded cluster driver, metrics |
+//! | [`transport`] | wire-format frames + pluggable backends (in-proc rings, localhost TCP) for the cluster driver |
+//! | [`coordinator`] | phase engine (reusable [`coordinator::EngineScratch`], zero-alloc steady state, rayon-parallel phases) + transport-backed cluster driver, metrics |
 //! | `runtime` | PJRT artifact loading / execution (AOT JAX+Pallas; `xla` feature) |
 //! | [`analysis`] | closed forms of Theorems 1–4, Lemma 3 bound, stats helpers |
 //! | [`util`] | deterministic RNG, JSON, bench/test kits, [`util::par`] parallelism shim |
@@ -55,6 +56,14 @@
 //! all merges replay serially in canonical order, so results and metrics
 //! are bit-identical across the serial path, the parallel path, and any
 //! thread count.
+//!
+//! The cluster driver runs the same job over a real message boundary: the
+//! [`transport`] layer serializes every coded multicast and uncoded
+//! unicast batch into a flat wire [`transport::Frame`] (whose length is
+//! exactly the bytes the load accounting charges) and moves it over
+//! bounded in-process rings or a localhost TCP mesh — final states stay
+//! bit-identical to the engine, and the driver asserts modeled wire
+//! bytes against the bytes the transport actually carried.
 
 pub mod allocation;
 pub mod analysis;
@@ -67,6 +76,7 @@ pub mod network;
 #[cfg(feature = "xla")]
 pub mod runtime;
 pub mod shuffle;
+pub mod transport;
 pub mod util;
 
 pub use graph::csr::{Csr, Vertex};

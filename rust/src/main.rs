@@ -2,11 +2,14 @@
 //!
 //! ```text
 //! coded-graph fig5      [--n 300] [--p 0.1] [--k 5] [--trials 20] [--seed 2018]
-//! coded-graph scenario  --id 1|2|3 [--scale S] [--full] [--seed 7]
+//! coded-graph scenario  --id 1|2|3|4 [--scale S] [--full] [--seed 7]
 //! coded-graph models    [--n 400] [--k 6] [--trials 8]
 //! coded-graph run       --graph er|rb|sbm|pl --n N --k K --r R
 //!                       [--p P] [--q Q] [--gamma G] [--program pagerank|sssp]
 //!                       [--scheme coded|uncoded] [--iters I] [--cluster]
+//! coded-graph cluster   --graph er|rb|sbm|pl --n N --k K --r R
+//!                       [--transport inproc|tcp] [--program ...] [--scheme ...]
+//!                       [--iters I]
 //! coded-graph inspect   --graph er|rb|sbm|pl --n N [--p P] [--q Q] [--gamma G]
 //! coded-graph artifacts [--dir artifacts]
 //! ```
@@ -18,11 +21,12 @@
 use coded_graph::allocation::Allocation;
 use coded_graph::analysis::theory;
 use coded_graph::coordinator::{
-    cluster::run_cluster, run_rust, EngineConfig, Job, Scheme,
+    run_cluster, run_cluster_on, run_rust, EngineConfig, Job, JobReport, Scheme,
 };
 use coded_graph::experiments::{fig5, models, scenarios};
 use coded_graph::graph::{bipartite, er, powerlaw, properties, sbm};
 use coded_graph::mapreduce::{ConnectedComponents, PageRank, Sssp, VertexProgram};
+use coded_graph::transport::TransportKind;
 use coded_graph::util::benchkit::Table;
 use coded_graph::util::cli::Args;
 use coded_graph::util::rng::DetRng;
@@ -42,6 +46,7 @@ fn main() {
         Some("scenario") => cmd_scenario(&args),
         Some("models") => cmd_models(&args),
         Some("run") => cmd_run(&args),
+        Some("cluster") => cmd_cluster(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("artifacts") => cmd_artifacts(&args),
         _ => {
@@ -60,9 +65,10 @@ fn usage() {
     println!("(reproduction of Prakash, Reisizadeh, Pedarsani, Avestimehr 2018)\n");
     println!("subcommands:");
     println!("  fig5       communication-load trade-off (paper Fig 5)");
-    println!("  scenario   EC2 PageRank scenarios 1-3 (paper Fig 2 / Fig 7)");
+    println!("  scenario   EC2 PageRank scenarios 1-4 (paper Fig 2 / Fig 7 + SBM)");
     println!("  models     Theorem 1-4 validation sweeps across graph models");
     println!("  run        run one distributed job (pagerank / sssp)");
+    println!("  cluster    run a job on the leader/worker cluster (--transport inproc|tcp)");
     println!("  inspect    generate a graph and print its statistics");
     println!("  artifacts  list the AOT artifacts and smoke-run one");
 }
@@ -199,50 +205,35 @@ fn build_graph(args: &Args) -> Result<Csr, String> {
     }
 }
 
-fn cmd_run(args: &Args) -> Result<(), String> {
-    args.check_known(&[
-        "graph", "n", "k", "r", "p", "q", "gamma", "rho-scale", "seed", "program", "scheme", "iters",
-        "cluster", "source",
-    ])?;
-    let g = build_graph(args)?;
-    let k = args.get_or("k", 5usize)?;
-    let r = args.get_or("r", 2usize)?;
-    let iters = args.get_or("iters", 3usize)?;
-    let scheme = match args.get("scheme").unwrap_or("coded") {
-        "coded" => Scheme::Coded,
-        "uncoded" => Scheme::Uncoded,
-        "coded-combined" => Scheme::CodedCombined,
-        "uncoded-combined" => Scheme::UncodedCombined,
-        other => return Err(format!("unknown scheme {other:?}")),
-    };
-    let alloc = Allocation::er_scheme(g.n(), k, r);
-    let prog_pr;
-    let prog_sssp;
-    let prog_cc;
-    let program: &dyn VertexProgram = match args.get("program").unwrap_or("pagerank") {
-        "pagerank" => {
-            prog_pr = PageRank::default();
-            &prog_pr
-        }
-        "sssp" => {
-            prog_sssp = Sssp::hashed(args.get_or("source", 0u32)?);
-            &prog_sssp
-        }
-        "cc" => {
-            prog_cc = ConnectedComponents;
-            &prog_cc
-        }
+fn parse_scheme(args: &Args) -> Result<Scheme, String> {
+    match args.get("scheme").unwrap_or("coded") {
+        "coded" => Ok(Scheme::Coded),
+        "uncoded" => Ok(Scheme::Uncoded),
+        "coded-combined" => Ok(Scheme::CodedCombined),
+        "uncoded-combined" => Ok(Scheme::UncodedCombined),
+        other => Err(format!("unknown scheme {other:?}")),
+    }
+}
+
+fn parse_program(args: &Args) -> Result<Box<dyn VertexProgram>, String> {
+    Ok(match args.get("program").unwrap_or("pagerank") {
+        "pagerank" => Box::new(PageRank::default()),
+        "sssp" => Box::new(Sssp::hashed(args.get_or("source", 0u32)?)),
+        "cc" => Box::new(ConnectedComponents),
         other => return Err(format!("unknown program {other:?}")),
-    };
-    let cfg = EngineConfig { scheme, ..Default::default() };
-    let job = Job { graph: &g, alloc: &alloc, program };
-    let report = if args.has("cluster") {
-        println!("driver: threaded cluster ({k} workers)");
-        run_cluster(&job, &cfg, iters)
-    } else {
-        println!("driver: phase engine");
-        run_rust(&job, &cfg, iters)
-    };
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn print_job_summary(
+    report: &JobReport,
+    program: &dyn VertexProgram,
+    g: &Csr,
+    k: usize,
+    r: usize,
+    scheme: Scheme,
+    iters: usize,
+) {
     println!(
         "{} x{} iterations on n={} m={} K={k} r={r} ({scheme})",
         program.name(),
@@ -262,6 +253,56 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     let mut top: Vec<(usize, f64)> = report.final_state.iter().copied().enumerate().collect();
     top.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
     println!("top-5 final states: {:?}", &top[..5.min(top.len())]);
+}
+
+fn cmd_run(args: &Args) -> Result<(), String> {
+    args.check_known(&[
+        "graph", "n", "k", "r", "p", "q", "gamma", "rho-scale", "seed", "program", "scheme", "iters",
+        "cluster", "source",
+    ])?;
+    let g = build_graph(args)?;
+    let k = args.get_or("k", 5usize)?;
+    let r = args.get_or("r", 2usize)?;
+    let iters = args.get_or("iters", 3usize)?;
+    let scheme = parse_scheme(args)?;
+    let alloc = Allocation::er_scheme(g.n(), k, r);
+    let program = parse_program(args)?;
+    let cfg = EngineConfig { scheme, ..Default::default() };
+    let job = Job { graph: &g, alloc: &alloc, program: &*program };
+    let report = if args.has("cluster") {
+        println!("driver: in-process cluster ({k} workers + leader)");
+        run_cluster(&job, &cfg, iters)
+    } else {
+        println!("driver: phase engine");
+        run_rust(&job, &cfg, iters)
+    };
+    print_job_summary(&report, &*program, &g, k, r, scheme, iters);
+    Ok(())
+}
+
+fn cmd_cluster(args: &Args) -> Result<(), String> {
+    args.check_known(&[
+        "graph", "n", "k", "r", "p", "q", "gamma", "rho-scale", "seed", "program", "scheme", "iters",
+        "transport", "source",
+    ])?;
+    let g = build_graph(args)?;
+    let k = args.get_or("k", 5usize)?;
+    let r = args.get_or("r", 2usize)?;
+    let iters = args.get_or("iters", 3usize)?;
+    let scheme = parse_scheme(args)?;
+    let transport: TransportKind = args
+        .get("transport")
+        .unwrap_or("inproc")
+        .parse()?;
+    let alloc = Allocation::er_scheme(g.n(), k, r);
+    let program = parse_program(args)?;
+    let cfg = EngineConfig { scheme, ..Default::default() };
+    let job = Job { graph: &g, alloc: &alloc, program: &*program };
+    println!("driver: cluster over {transport} ({k} workers + leader)");
+    let report = run_cluster_on(&job, &cfg, iters, transport);
+    print_job_summary(&report, &*program, &g, k, r, scheme, iters);
+    let wall: f64 = report.iterations.iter().map(|m| m.wall_s).sum();
+    println!("real wall time across iterations: {wall:.3}s");
     Ok(())
 }
 

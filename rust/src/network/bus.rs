@@ -12,10 +12,16 @@
 //! ```
 //!
 //! The bus is a *discrete-event accountant*: callers submit transmissions
-//! (real payloads flow through the coordinator's channels); the bus serially
-//! sums wire time — the serialization constraint makes total time the sum
-//! over all transmissions — and tracks byte/message/load tallies used by
-//! the experiment harnesses.
+//! (real payloads flow through the [`transport`](crate::transport) layer);
+//! the bus serially sums wire time — the serialization constraint makes
+//! total time the sum over all transmissions — and tracks
+//! byte/message/load tallies used by the experiment harnesses.
+//!
+//! The byte counts submitted by the engine and cluster are real frame
+//! lengths: `transport::frame` serializes a coded multicast to exactly
+//! `HEADER_BYTES + columns * seg_bytes(r)` bytes and an uncoded batch to
+//! `HEADER_BYTES + ivs * 8`, so the bus prices the same bytes a socket
+//! carries (asserted end-to-end by the cluster driver each iteration).
 
 
 /// Wire-time parameters. Defaults model the paper's testbed: 100 Mbps NICs,
@@ -189,5 +195,24 @@ mod tests {
         let cfg = BusConfig::default();
         // degenerate call should not underflow the penalty term
         assert!(cfg.wire_time(10, 0) > 0.0);
+    }
+
+    #[test]
+    fn bus_prices_real_frame_lengths() {
+        // the engine/cluster charge transport frame lengths; those are by
+        // construction the modeled payload + the accounted header
+        use crate::shuffle::load::HEADER_BYTES;
+        use crate::shuffle::segments::seg_bytes;
+        use crate::transport::frame::{coded_frame_len, uncoded_frame_len, HEADER_LEN};
+        assert_eq!(HEADER_LEN, HEADER_BYTES);
+        for r in 1..=6 {
+            let sb = seg_bytes(r);
+            assert_eq!(coded_frame_len(7, sb), 7 * sb + HEADER_BYTES, "r={r}");
+        }
+        assert_eq!(uncoded_frame_len(9), 9 * 8 + HEADER_BYTES);
+        // and the bus prices them like any transmission
+        let mut bus = Bus::new(BusConfig::ideal(1e8));
+        let t = bus.transmit(0, 2, coded_frame_len(7, seg_bytes(2)));
+        assert!((t - (7.0 * 4.0 + 16.0) * 8.0 / 1e8).abs() < 1e-15);
     }
 }

@@ -1,4 +1,11 @@
 //! Network substrate: the paper's shared-medium communication model.
+//!
+//! The [`Bus`] is the *accountant*: it prices transmissions under the
+//! paper's one-transmitter-at-a-time model. The bytes it is asked to
+//! price are not hypothetical — the cluster driver charges the exact
+//! serialized length of each [`transport`](crate::transport) frame
+//! (`HEADER_BYTES` header + payload), and asserts per iteration that the
+//! transport moved exactly the bytes the bus was charged.
 
 pub mod bus;
 

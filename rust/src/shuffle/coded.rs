@@ -85,28 +85,73 @@ pub fn encode_group_into(
     col_counts: &[u32],
     cols: &mut [u64],
 ) {
-    let members = group.members();
-    debug_assert_eq!(col_counts.len(), members);
-    let sb = seg_bytes(r);
-    cols.fill(0);
+    debug_assert_eq!(col_counts.len(), group.members());
     let mut cbase = 0usize;
-    for s_idx in 0..members {
-        let q = col_counts[s_idx] as usize;
-        let ccols = &mut cols[cbase..cbase + q];
-        for row_idx in 0..members {
-            if row_idx == s_idx {
-                continue;
-            }
-            let seg_idx = segment_index(s_idx, row_idx);
-            let rvals = &vals[group.local_row_range(row_idx)];
-            // rvals.len() <= q by definition of the sender column count
-            for (col, &bits) in ccols.iter_mut().zip(rvals) {
-                *col ^= seg_of(bits, seg_idx, sb);
-            }
-        }
+    for (s_idx, &q) in col_counts.iter().enumerate() {
+        let q = q as usize;
+        encode_sender_into(group, s_idx, vals, r, &mut cols[cbase..cbase + q]);
         cbase += q;
     }
     debug_assert_eq!(cbase, cols.len());
+}
+
+/// Encode *one* sender's coded columns from group-aligned `vals` — the
+/// arena sibling of [`encode_sender`], used by the cluster workers to
+/// encode straight into a transport send buffer. The sender's own row is
+/// never read, so `vals` may come from [`eval_rows_except`] (a worker
+/// cannot evaluate its own row: those are exactly the IVs it is
+/// missing). `cols.len()` must equal the sender's column count
+/// ([`ShufflePlan::sender_cols`](super::plan::ShufflePlan::sender_cols)).
+/// No allocation.
+pub fn encode_sender_into(
+    group: GroupRef<'_>,
+    s_idx: usize,
+    vals: &[u64],
+    r: usize,
+    cols: &mut [u64],
+) {
+    debug_assert_eq!(vals.len(), group.total_ivs());
+    debug_assert_eq!(cols.len(), group.sender_cols_needed(s_idx));
+    let sb = seg_bytes(r);
+    cols.fill(0);
+    for row_idx in 0..group.members() {
+        if row_idx == s_idx {
+            continue;
+        }
+        let seg_idx = segment_index(s_idx, row_idx);
+        let rvals = &vals[group.local_row_range(row_idx)];
+        // rvals.len() <= cols.len() by definition of the sender column count
+        for (col, &bits) in cols.iter_mut().zip(rvals) {
+            *col ^= seg_of(bits, seg_idx, sb);
+        }
+    }
+}
+
+/// [`eval_group_values`] with one row skipped: evaluates every row
+/// except `skip_idx` into the group-aligned `vals` slice, zeroing the
+/// skipped row's entries. The cluster workers use it on both sides of
+/// the wire — a *sender* cannot evaluate its own row (the IVs it is
+/// missing), and neither can a *receiver*; no kernel reads the skipped
+/// entries ([`encode_sender_into`] and
+/// [`decode_sender_into`](super::decoder::decode_sender_into) iterate
+/// other rows only). No allocation.
+pub fn eval_rows_except<F: Fn(Vertex, Vertex) -> u64>(
+    group: GroupRef<'_>,
+    skip_idx: usize,
+    value: &F,
+    vals: &mut [u64],
+) {
+    debug_assert_eq!(vals.len(), group.total_ivs());
+    for idx in 0..group.members() {
+        let rr = group.local_row_range(idx);
+        if idx == skip_idx {
+            vals[rr].fill(0);
+            continue;
+        }
+        for (slot, &(i, j)) in vals[rr].iter_mut().zip(group.row(idx)) {
+            *slot = value(i, j);
+        }
+    }
 }
 
 /// Evaluate all row IV values of a group through `value(reducer, mapper)`
@@ -248,6 +293,41 @@ mod tests {
                 cursor += q;
             }
             assert_eq!(cursor, crange.end);
+        }
+    }
+
+    #[test]
+    fn single_sender_kernel_matches_owned_messages() {
+        // encode_sender_into over eval_rows_except == encode_sender over
+        // row_values_except: the cluster worker's send path against the
+        // owned-message reference, on a graph with uneven rows
+        use crate::graph::er::er;
+        use crate::util::rng::DetRng;
+        let g = er(70, 0.15, &mut DetRng::seed(31));
+        for r in 1..=4 {
+            let alloc = Allocation::er_scheme(70, 4, r);
+            let plan = build_group_plans(&g, &alloc);
+            let value = |i: Vertex, j: Vertex| {
+                (((i as u64) << 32) ^ j as u64).wrapping_mul(0x2545_F491_4F6C_DD1D)
+            };
+            let mut vals = vec![0u64; plan.groups().map(|p| p.total_ivs()).max().unwrap_or(0)];
+            for group in plan.groups() {
+                let nv = group.total_ivs();
+                for s_idx in 0..group.members() {
+                    eval_rows_except(group, s_idx, &value, &mut vals[..nv]);
+                    // skipped row is zeroed, other rows evaluated
+                    for (idx, &(i, j)) in group.group_pairs().iter().enumerate() {
+                        let own = group.local_row_range(s_idx).contains(&idx);
+                        assert_eq!(vals[idx], if own { 0 } else { value(i, j) });
+                    }
+                    let q = group.sender_cols_needed(s_idx);
+                    let mut cols = vec![0u64; q];
+                    encode_sender_into(group, s_idx, &vals[..nv], r, &mut cols);
+                    let owned_vals = row_values_except(group, s_idx, &value);
+                    let want = encode_sender(group, s_idx, &owned_vals, r);
+                    assert_eq!(cols, want.columns, "r={r} s_idx={s_idx}");
+                }
+            }
         }
     }
 

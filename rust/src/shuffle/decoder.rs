@@ -95,6 +95,58 @@ pub fn decode_group_into(
     }
 }
 
+/// Decode *one* sender's columns at receiver `m_idx`, XOR-placing the
+/// sender's segment of each needed IV into the receiver-row-aligned
+/// `out` accumulator — the arena sibling of [`decode_from_sender`] for
+/// transport frames. Zero `out` before the first sender; after all `r`
+/// senders, `out[c]` holds the full IV bits of `group.row(m_idx)[c]`.
+///
+/// `cols` holds at least the receiver's row length of the sender's XOR
+/// columns in wire order (each masked to its segment width, which
+/// [`encode_sender_into`](super::coded::encode_sender_into) and the
+/// frame codec guarantee); `vals` is the group-aligned value slice with
+/// every row but the receiver's evaluated (see
+/// [`eval_rows_except`](super::coded::eval_rows_except)). No allocation.
+pub fn decode_sender_into(
+    group: GroupRef<'_>,
+    m_idx: usize,
+    s_idx: usize,
+    cols: &[u64],
+    vals: &[u64],
+    r: usize,
+    out: &mut [u64],
+) {
+    debug_assert_ne!(s_idx, m_idx, "sender cannot decode itself");
+    let sb = seg_bytes(r);
+    let my_len = group.row_len(m_idx);
+    debug_assert_eq!(out.len(), my_len);
+    debug_assert!(cols.len() >= my_len);
+    debug_assert!(cols[..my_len].iter().all(|&c| c & !seg_mask(sb) == 0));
+    // where this sender's segment lands inside the reassembled IV
+    let place = segment_index(s_idx, m_idx);
+    let shift = place * sb * 8;
+    if shift >= 64 {
+        return; // pure padding segment: contributes nothing
+    }
+    // the columns are XORs of masked segments, so shifting them into
+    // place distributes over the cancellation XORs (one pass, in place)
+    for (o, &col) in out.iter_mut().zip(cols) {
+        *o ^= col << shift;
+    }
+    // cancel the other rows' segments (the receiver Maps their batches)
+    for k_idx in 0..group.members() {
+        if k_idx == m_idx || k_idx == s_idx {
+            continue;
+        }
+        let seg_idx = segment_index(s_idx, k_idx);
+        let rr = group.local_row_range(k_idx);
+        let upto = rr.len().min(my_len);
+        for (o, &v) in out[..upto].iter_mut().zip(&vals[rr.start..rr.start + upto]) {
+            *o ^= seg_of(v, seg_idx, sb) << shift;
+        }
+    }
+}
+
 /// Decode one sender's message at one receiver: returns the sender's
 /// segment of each IV in the receiver's row (index-aligned with
 /// `group.row(receiver_idx)`).
@@ -338,6 +390,75 @@ mod tests {
             }
         }
         roundtrip(&g, &alloc);
+    }
+
+    #[test]
+    fn decode_sender_into_reassembles_exactly() {
+        // the cluster worker's receive path: per-sender arena decode over
+        // eval_rows_except-style vals reassembles every needed IV
+        // bit-exactly, including r=1 (whole-IV segments), empty rows, and
+        // padding segments (r=3)
+        use crate::shuffle::coded::{encode_sender_into, eval_rows_except, row_values_except};
+        let cases: Vec<(Csr, usize, usize)> = vec![
+            (Csr::from_edges(6, &[(0, 4), (1, 5), (2, 3)]), 3, 2),
+            (Csr::from_edges(6, &[(0, 4)]), 3, 2), // empty middle row
+            (er(60, 0.2, &mut DetRng::seed(17)), 4, 1),
+            (er(60, 0.2, &mut DetRng::seed(18)), 4, 3),
+            (er(80, 0.15, &mut DetRng::seed(19)), 5, 4),
+        ];
+        for (g, k, r) in cases {
+            let alloc = Allocation::er_scheme(g.n(), k, r);
+            let value = oracle_value;
+            let plan = build_group_plans(&g, &alloc);
+            for group in plan.groups() {
+                let nv = group.total_ivs();
+                let mut vals = vec![0u64; nv];
+                // sender side: every member encodes its own columns
+                let all_cols: Vec<Vec<u64>> = (0..group.members())
+                    .map(|s_idx| {
+                        eval_rows_except(group, s_idx, &value, &mut vals);
+                        let mut cols = vec![0u64; group.sender_cols_needed(s_idx)];
+                        encode_sender_into(group, s_idx, &vals, r, &mut cols);
+                        cols
+                    })
+                    .collect();
+                // receiver side: cancel + reassemble from each sender
+                for m_idx in 0..group.members() {
+                    let my_row = group.row(m_idx);
+                    eval_rows_except(group, m_idx, &value, &mut vals);
+                    let mut out = vec![0u64; my_row.len()];
+                    for s_idx in 0..group.members() {
+                        if s_idx == m_idx {
+                            continue;
+                        }
+                        decode_sender_into(
+                            group,
+                            m_idx,
+                            s_idx,
+                            &all_cols[s_idx][..my_row.len()],
+                            &vals,
+                            r,
+                            &mut out,
+                        );
+                    }
+                    for (c, &(i, j)) in my_row.iter().enumerate() {
+                        assert_eq!(out[c], value(i, j), "k={k} r={r} IV ({i},{j})");
+                    }
+                    // cross-check against the owned-message decoder
+                    let owned_vals = row_values_except(group, m_idx, &value);
+                    let msgs: Vec<CodedMessage> = all_cols
+                        .iter()
+                        .enumerate()
+                        .filter(|&(s, _)| s != m_idx)
+                        .map(|(s, cols)| CodedMessage { sender_idx: s, columns: cols.clone() })
+                        .collect();
+                    let got = recover_group_shared(group, m_idx, &msgs, &owned_vals, r);
+                    for (riv, (&(i, j), &bits)) in got.iter().zip(my_row.iter().zip(&out)) {
+                        assert_eq!((riv.reducer, riv.mapper, riv.bits), (i, j, bits));
+                    }
+                }
+            }
+        }
     }
 
     #[test]

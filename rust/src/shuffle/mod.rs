@@ -7,9 +7,12 @@
 //! * [`segments`] — splitting a `T`-bit IV into `r` segments and
 //!   reassembling (paper §IV-A "each intermediate value is evenly split
 //!   into r segments").
-//! * [`coded`] — the encoder: per-sender segment tables and column XORs.
+//! * [`coded`] — the encoder: per-sender segment tables and column XORs
+//!   (group-wide arena kernels for the engine, single-sender kernels for
+//!   the cluster workers' transport send path).
 //! * [`decoder`] — the receiver side: cancel locally-computable segments,
-//!   recover your own, reassemble IVs.
+//!   recover your own, reassemble IVs (group-wide and per-sender arena
+//!   kernels; the latter decode straight from transport frame views).
 //! * [`uncoded`] — the baseline: unicast every needed IV.
 //! * [`load`] — communication-load accounting in the paper's normalized
 //!   units plus raw wire bytes.
@@ -22,7 +25,7 @@ pub mod plan;
 pub mod segments;
 pub mod uncoded;
 
-pub use coded::{encode_group, encode_sender, CodedMessage};
-pub use decoder::{decode_from_sender, recover_group, RecoveredIv};
+pub use coded::{encode_group, encode_sender, encode_sender_into, eval_rows_except, CodedMessage};
+pub use decoder::{decode_from_sender, decode_sender_into, recover_group, RecoveredIv};
 pub use load::{normalized, ShuffleLoad};
 pub use plan::{build_group_plans, GroupRef, ShufflePlan};

@@ -1,0 +1,384 @@
+//! The wire format: one length-prefixed, flat byte frame per message.
+//!
+//! Every message of the cluster protocol — coded multicasts, uncoded
+//! unicast batches, *and* the leader's control traffic — serializes into
+//! the same frame shape, so a backend only ever moves opaque byte
+//! buffers:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     body length (u32 LE): bytes that follow this word
+//! 4       1     kind (FrameKind)
+//! 5       1     sender endpoint id
+//! 6       2     reserved (zero)
+//! 8       4     index (u32 LE): group / transfer id, or Reduced's
+//!               validated-IV count
+//! 12      4     count (u32 LE): payload items
+//! 16      ...   payload
+//! ```
+//!
+//! The 16-byte header is *exactly* the [`HEADER_BYTES`] the load
+//! accounting has always charged per message (checked at compile time
+//! below), and the payloads carry exactly the bytes the accounting
+//! models: `count * seg_bytes(r)` for a coded multicast (each XOR column
+//! truncated to its real segment width), `count * 8` for an uncoded
+//! batch (full IV bits; the `(reducer, mapper)` keys are *not* on the
+//! wire — both ends derive them from the shared transfer plan, exactly
+//! as the header's transfer id prescribes). So for every data frame,
+//! `frame.len() == modeled wire bytes`, which is what lets the cluster
+//! driver assert its [`ShuffleLoad`](crate::shuffle::load::ShuffleLoad)
+//! against reality (see [`coordinator::cluster`](crate::coordinator::cluster)).
+//!
+//! Encoding writes into a caller-owned `Vec<u8>` (cleared, then
+//! extended): once capacities are warm, the send path performs no heap
+//! allocation. Decoding is a zero-copy borrowed view ([`Frame`]) over
+//! the received buffer.
+
+use crate::shuffle::load::HEADER_BYTES;
+
+/// Serialized header length in bytes (the 4-byte length prefix included).
+pub const HEADER_LEN: usize = 16;
+
+// The wire header must cost exactly what the load accounting charges.
+const _: () = assert!(HEADER_LEN == HEADER_BYTES);
+
+/// What a frame carries. `CodedData` / `UncodedData` are the Shuffle
+/// payload frames (the ones the bus model charges); everything else is
+/// cluster control traffic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FrameKind {
+    /// One sender's XOR columns for one multicast group.
+    CodedData = 0,
+    /// One uncoded transfer's full IV bits.
+    UncodedData = 1,
+    /// Leader → worker: run the Shuffle phase.
+    StartShuffle = 2,
+    /// Leader → worker: all traffic routed, run Reduce.
+    StartReduce = 3,
+    /// Worker → leader: finished emitting shuffle traffic.
+    SendDone = 4,
+    /// Worker → leader: fresh reduce-set states (payload), validated-IV
+    /// count (index).
+    Reduced = 5,
+    /// Leader → worker: fresh states for the vertices this worker Maps.
+    StateUpdate = 6,
+    /// Leader → worker: iteration done, proceed to the next.
+    Continue = 7,
+    /// Leader → worker: job done, exit.
+    Stop = 8,
+}
+
+impl FrameKind {
+    /// Parse a kind byte.
+    pub fn from_u8(b: u8) -> Option<FrameKind> {
+        Some(match b {
+            0 => FrameKind::CodedData,
+            1 => FrameKind::UncodedData,
+            2 => FrameKind::StartShuffle,
+            3 => FrameKind::StartReduce,
+            4 => FrameKind::SendDone,
+            5 => FrameKind::Reduced,
+            6 => FrameKind::StateUpdate,
+            7 => FrameKind::Continue,
+            8 => FrameKind::Stop,
+            _ => return None,
+        })
+    }
+
+    /// Is this a Shuffle *data* frame (the kind the bus model charges)?
+    #[inline]
+    pub fn is_data(self) -> bool {
+        matches!(self, FrameKind::CodedData | FrameKind::UncodedData)
+    }
+}
+
+/// Why a byte buffer failed to parse as a frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameError {
+    /// Shorter than the fixed header.
+    Truncated { have: usize },
+    /// The length prefix disagrees with the buffer length.
+    LengthMismatch { declared: usize, have: usize },
+    /// Unknown kind byte.
+    BadKind(u8),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Truncated { have } => {
+                write!(f, "frame truncated: {have} bytes < {HEADER_LEN}-byte header")
+            }
+            FrameError::LengthMismatch { declared, have } => {
+                write!(f, "frame length prefix declares {declared} bytes, buffer has {have}")
+            }
+            FrameError::BadKind(b) => write!(f, "unknown frame kind {b}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// A zero-copy decoded view of one frame: header fields plus the
+/// borrowed payload. Accessors read payload items in place (LE byte
+/// reads), so decoding allocates nothing.
+#[derive(Clone, Copy, Debug)]
+pub struct Frame<'a> {
+    pub kind: FrameKind,
+    /// Sending endpoint id.
+    pub sender: u8,
+    /// Group / transfer id (data frames), validated-IV count (`Reduced`).
+    pub index: u32,
+    /// Payload item count (columns, IVs, states, or update pairs).
+    pub count: u32,
+    /// Raw payload bytes.
+    pub payload: &'a [u8],
+}
+
+impl<'a> Frame<'a> {
+    /// Parse a received buffer. Validates the header; payload item
+    /// bounds are checked by the accessors (they panic on short
+    /// payloads, which tests treat as malformed-frame detection).
+    pub fn parse(bytes: &'a [u8]) -> Result<Frame<'a>, FrameError> {
+        if bytes.len() < HEADER_LEN {
+            return Err(FrameError::Truncated { have: bytes.len() });
+        }
+        let body = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
+        if body + 4 != bytes.len() {
+            return Err(FrameError::LengthMismatch { declared: body + 4, have: bytes.len() });
+        }
+        let kind = FrameKind::from_u8(bytes[4]).ok_or(FrameError::BadKind(bytes[4]))?;
+        Ok(Frame {
+            kind,
+            sender: bytes[5],
+            index: u32::from_le_bytes(bytes[8..12].try_into().unwrap()),
+            count: u32::from_le_bytes(bytes[12..16].try_into().unwrap()),
+            payload: &bytes[HEADER_LEN..],
+        })
+    }
+
+    /// Coded column `i` (`seg_bytes` wire bytes, zero-extended to u64).
+    #[inline]
+    pub fn col(&self, i: usize, seg_bytes: usize) -> u64 {
+        let off = i * seg_bytes;
+        let mut word = [0u8; 8];
+        word[..seg_bytes].copy_from_slice(&self.payload[off..off + seg_bytes]);
+        u64::from_le_bytes(word)
+    }
+
+    /// Payload word `i` (8-byte LE): an uncoded IV's bits or a `Reduced`
+    /// state's bits.
+    #[inline]
+    pub fn word(&self, i: usize) -> u64 {
+        let off = i * 8;
+        u64::from_le_bytes(self.payload[off..off + 8].try_into().unwrap())
+    }
+
+    /// `StateUpdate` pair `i`: `(vertex, state bits)` (12-byte stride).
+    #[inline]
+    pub fn update_pair(&self, i: usize) -> (u32, u64) {
+        let off = i * 12;
+        (
+            u32::from_le_bytes(self.payload[off..off + 4].try_into().unwrap()),
+            u64::from_le_bytes(self.payload[off + 4..off + 12].try_into().unwrap()),
+        )
+    }
+}
+
+/// Serialized length of a coded multicast frame.
+#[inline]
+pub fn coded_frame_len(cols: usize, seg_bytes: usize) -> usize {
+    HEADER_LEN + cols * seg_bytes
+}
+
+/// Serialized length of an uncoded unicast-batch frame.
+#[inline]
+pub fn uncoded_frame_len(ivs: usize) -> usize {
+    HEADER_LEN + ivs * 8
+}
+
+fn header_into(
+    buf: &mut Vec<u8>,
+    kind: FrameKind,
+    sender: u8,
+    index: u32,
+    count: u32,
+    payload: usize,
+) {
+    buf.clear();
+    let body = (HEADER_LEN - 4 + payload) as u32;
+    buf.extend_from_slice(&body.to_le_bytes());
+    buf.push(kind as u8);
+    buf.push(sender);
+    buf.extend_from_slice(&[0, 0]);
+    buf.extend_from_slice(&index.to_le_bytes());
+    buf.extend_from_slice(&count.to_le_bytes());
+}
+
+/// Encode a coded multicast: each XOR column truncated to its real
+/// segment width (`seg_bytes(r)` wire bytes — exactly what the load
+/// accounting charges). `buf` is cleared and refilled.
+pub fn encode_coded(buf: &mut Vec<u8>, sender: u8, group: u32, cols: &[u64], seg_bytes: usize) {
+    let payload = cols.len() * seg_bytes;
+    header_into(buf, FrameKind::CodedData, sender, group, cols.len() as u32, payload);
+    for &c in cols {
+        buf.extend_from_slice(&c.to_le_bytes()[..seg_bytes]);
+    }
+}
+
+/// Encode an uncoded unicast batch: the transfer id plus the full IV
+/// bits in the transfer plan's canonical order (keys stay off the wire).
+pub fn encode_uncoded(buf: &mut Vec<u8>, sender: u8, transfer: u32, bits: &[u64]) {
+    header_into(buf, FrameKind::UncodedData, sender, transfer, bits.len() as u32, bits.len() * 8);
+    for &b in bits {
+        buf.extend_from_slice(&b.to_le_bytes());
+    }
+}
+
+/// Encode a payload-less control frame.
+pub fn encode_control(buf: &mut Vec<u8>, kind: FrameKind, sender: u8) {
+    header_into(buf, kind, sender, 0, 0, 0);
+}
+
+/// Encode a worker's `Reduced` reply: fresh state bits in the worker's
+/// canonical reduce-set order; `validated` rides in the index field.
+pub fn encode_reduced(buf: &mut Vec<u8>, sender: u8, validated: u32, state_bits: &[u64]) {
+    let count = state_bits.len() as u32;
+    header_into(buf, FrameKind::Reduced, sender, validated, count, state_bits.len() * 8);
+    for &b in state_bits {
+        buf.extend_from_slice(&b.to_le_bytes());
+    }
+}
+
+/// Encode a leader `StateUpdate`: `(vertex, state bits)` pairs.
+pub fn encode_state_update(buf: &mut Vec<u8>, sender: u8, pairs: &[(u32, u64)]) {
+    header_into(buf, FrameKind::StateUpdate, sender, 0, pairs.len() as u32, pairs.len() * 12);
+    for &(v, b) in pairs {
+        buf.extend_from_slice(&v.to_le_bytes());
+        buf.extend_from_slice(&b.to_le_bytes());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shuffle::segments::seg_bytes;
+    use crate::util::rng::DetRng;
+
+    #[test]
+    fn header_is_the_accounted_overhead() {
+        assert_eq!(HEADER_LEN, HEADER_BYTES);
+        assert_eq!(coded_frame_len(3, 4), 3 * 4 + HEADER_BYTES);
+        assert_eq!(uncoded_frame_len(5), 5 * 8 + HEADER_BYTES);
+        assert_eq!(coded_frame_len(0, 8), HEADER_BYTES);
+    }
+
+    #[test]
+    fn coded_roundtrip_all_segment_widths() {
+        // property: encode → parse recovers kind/sender/index/count and
+        // every column masked to its wire width, for every r (seg width)
+        let mut rng = DetRng::seed(99);
+        let mut buf = Vec::new();
+        for r in 1..=9usize {
+            let sb = seg_bytes(r);
+            let mask = if sb >= 8 { u64::MAX } else { (1u64 << (sb * 8)) - 1 };
+            for ncols in [0usize, 1, 2, 7, 33] {
+                let cols: Vec<u64> = (0..ncols).map(|_| rng.u64() & mask).collect();
+                encode_coded(&mut buf, 3, 41, &cols, sb);
+                assert_eq!(buf.len(), coded_frame_len(ncols, sb), "r={r} ncols={ncols}");
+                let f = Frame::parse(&buf).unwrap();
+                assert_eq!(f.kind, FrameKind::CodedData);
+                assert!(f.kind.is_data());
+                assert_eq!(f.sender, 3);
+                assert_eq!(f.index, 41);
+                assert_eq!(f.count as usize, ncols);
+                for (i, &c) in cols.iter().enumerate() {
+                    assert_eq!(f.col(i, sb), c, "r={r} col {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn r_equals_one_columns_are_full_words() {
+        // r = 1: degenerate coding, one 8-byte segment per column
+        let cols = [u64::MAX, 0, f64::to_bits(std::f64::consts::PI)];
+        let mut buf = Vec::new();
+        encode_coded(&mut buf, 0, 0, &cols, seg_bytes(1));
+        let f = Frame::parse(&buf).unwrap();
+        for (i, &c) in cols.iter().enumerate() {
+            assert_eq!(f.col(i, 8), c);
+        }
+    }
+
+    #[test]
+    fn uncoded_roundtrip_including_empty() {
+        let mut buf = Vec::new();
+        for n in [0usize, 1, 5, 100] {
+            let bits: Vec<u64> =
+                (0..n as u64).map(|i| i.wrapping_mul(0x9E37_79B9_7F4A_7C15)).collect();
+            encode_uncoded(&mut buf, 7, 12, &bits);
+            assert_eq!(buf.len(), uncoded_frame_len(n));
+            let f = Frame::parse(&buf).unwrap();
+            assert_eq!(f.kind, FrameKind::UncodedData);
+            assert_eq!((f.sender, f.index, f.count as usize), (7, 12, n));
+            for (i, &b) in bits.iter().enumerate() {
+                assert_eq!(f.word(i), b);
+            }
+        }
+    }
+
+    #[test]
+    fn control_reduced_and_update_roundtrip() {
+        let mut buf = Vec::new();
+        encode_control(&mut buf, FrameKind::StartShuffle, 9);
+        let f = Frame::parse(&buf).unwrap();
+        assert_eq!(f.kind, FrameKind::StartShuffle);
+        assert!(!f.kind.is_data());
+        assert!(f.payload.is_empty());
+
+        encode_reduced(&mut buf, 2, 17, &[1.5f64.to_bits(), 0, u64::MAX]);
+        let f = Frame::parse(&buf).unwrap();
+        assert_eq!((f.kind, f.sender, f.index, f.count), (FrameKind::Reduced, 2, 17, 3));
+        assert_eq!(f.word(0), 1.5f64.to_bits());
+        assert_eq!(f.word(2), u64::MAX);
+
+        let pairs = [(4u32, 2.5f64.to_bits()), (900, 0), (u32::MAX, 1)];
+        encode_state_update(&mut buf, 5, &pairs);
+        let f = Frame::parse(&buf).unwrap();
+        assert_eq!(f.kind, FrameKind::StateUpdate);
+        assert_eq!(f.count, 3);
+        for (i, &p) in pairs.iter().enumerate() {
+            assert_eq!(f.update_pair(i), p);
+        }
+    }
+
+    #[test]
+    fn buffer_reuse_replaces_content() {
+        // the same Vec is reused across frames of different sizes
+        let mut buf = Vec::new();
+        encode_uncoded(&mut buf, 1, 2, &[0xAA; 50]);
+        let long = buf.len();
+        encode_control(&mut buf, FrameKind::Stop, 1);
+        assert_eq!(buf.len(), HEADER_LEN);
+        assert!(buf.capacity() >= long);
+        assert_eq!(Frame::parse(&buf).unwrap().kind, FrameKind::Stop);
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(matches!(Frame::parse(&[]), Err(FrameError::Truncated { have: 0 })));
+        let mut buf = Vec::new();
+        encode_control(&mut buf, FrameKind::Continue, 0);
+        // short buffer
+        assert!(matches!(Frame::parse(&buf[..10]), Err(FrameError::Truncated { have: 10 })));
+        // length prefix vs buffer length disagreement
+        buf.push(0);
+        assert!(matches!(Frame::parse(&buf), Err(FrameError::LengthMismatch { .. })));
+        buf.pop();
+        // bad kind byte
+        buf[4] = 200;
+        assert!(matches!(Frame::parse(&buf), Err(FrameError::BadKind(200))));
+    }
+}

@@ -1,0 +1,271 @@
+//! In-process backend: one bounded ring of pooled frame buffers per
+//! endpoint.
+//!
+//! This replaces the old cluster driver's `mpsc` channels + per-receiver
+//! `CodedMessage` clones. Every endpoint owns an inbound [`Ring`]: a
+//! bounded queue of `Vec<u8>` frame slots backed by a free pool. A send
+//! pops a slot from the receiver's pool (or allocates one, cold),
+//! memcpys the serialized frame in, and enqueues it; a receive *swaps*
+//! the queued slot with the caller's buffer and returns the caller's old
+//! buffer to the pool. Buffers therefore cycle between pool, queue, and
+//! callers without ever being freed — after warm-up, the steady-state
+//! send/recv path performs **zero heap allocation** (asserted by
+//! `tests/transport_zero_alloc.rs` under a counting allocator).
+//!
+//! Rings are bounded (capacity chosen by the caller from the prepared
+//! job's expected per-iteration frame counts); a sender blocks when its
+//! receiver's ring is full, which the cluster's phase barriers make
+//! deadlock-free by construction.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+use super::{StatCounters, Transport, TransportStats};
+
+/// A bounded MPSC ring of pooled byte buffers (shared by the in-process
+/// and TCP backends — TCP's per-connection reader threads push into the
+/// same structure).
+pub(crate) struct Ring {
+    state: Mutex<RingState>,
+    readable: Condvar,
+    writable: Condvar,
+}
+
+struct RingState {
+    queue: VecDeque<Vec<u8>>,
+    pool: Vec<Vec<u8>>,
+    /// Writers still attached; `pop` returns `false` once this hits zero
+    /// with an empty queue (peer disconnect detection).
+    writers: usize,
+    cap: usize,
+    /// Set by [`Ring::poison`] on abnormal teardown: every blocked or
+    /// future `pop`/`push` bails out immediately.
+    dead: bool,
+}
+
+impl Ring {
+    pub(crate) fn new(cap: usize, writers: usize) -> Self {
+        let cap = cap.max(4);
+        Ring {
+            state: Mutex::new(RingState {
+                queue: VecDeque::with_capacity(cap),
+                pool: Vec::with_capacity(cap),
+                writers,
+                cap,
+                dead: false,
+            }),
+            readable: Condvar::new(),
+            writable: Condvar::new(),
+        }
+    }
+
+    /// Copy `frame` into a pooled slot and enqueue it (blocking while the
+    /// ring is full). A poisoned ring drops the frame — the teardown is
+    /// already in flight and the sender will observe it on its next pop.
+    pub(crate) fn push(&self, frame: &[u8]) {
+        let mut st = self.state.lock().unwrap();
+        while st.queue.len() >= st.cap {
+            if st.dead {
+                return;
+            }
+            st = self.writable.wait(st).unwrap();
+        }
+        if st.dead {
+            return;
+        }
+        let mut buf = st.pool.pop().unwrap_or_default();
+        buf.clear();
+        buf.extend_from_slice(frame);
+        st.queue.push_back(buf);
+        drop(st);
+        self.readable.notify_one();
+    }
+
+    /// Swap the next queued frame into `out`; the caller's previous
+    /// buffer joins the pool. Returns `false` when every writer has
+    /// detached and the queue is drained, or immediately once the ring is
+    /// poisoned.
+    pub(crate) fn pop(&self, out: &mut Vec<u8>) -> bool {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.dead {
+                return false;
+            }
+            if let Some(mut buf) = st.queue.pop_front() {
+                std::mem::swap(out, &mut buf);
+                st.pool.push(buf);
+                drop(st);
+                self.writable.notify_one();
+                return true;
+            }
+            if st.writers == 0 {
+                return false;
+            }
+            st = self.readable.wait(st).unwrap();
+        }
+    }
+
+    /// Detach one writer (clean peer shutdown); wakes blocked readers so
+    /// they can observe the disconnect once the queue drains.
+    pub(crate) fn close_writer(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.writers = st.writers.saturating_sub(1);
+        drop(st);
+        self.readable.notify_all();
+    }
+
+    /// Abnormal teardown: mark the ring dead and wake everyone — blocked
+    /// receivers see a disconnect, blocked senders unblock and drop.
+    pub(crate) fn poison(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.dead = true;
+        drop(st);
+        self.readable.notify_all();
+        self.writable.notify_all();
+    }
+}
+
+/// The in-process transport: `n` endpoints, one inbound [`Ring`] each.
+/// Endpoint ids are `0..n` (the cluster uses `0..K` for workers and `K`
+/// for the leader).
+pub struct InProcNet {
+    rings: Vec<Ring>,
+    stats: StatCounters,
+}
+
+impl InProcNet {
+    /// `caps[e]` bounds endpoint `e`'s inbound ring (in frames). Size it
+    /// from the prepared job's expected per-iteration frame counts so
+    /// steady-state sends never block.
+    pub fn new(caps: &[usize]) -> Self {
+        let writers = caps.len().saturating_sub(1);
+        InProcNet {
+            rings: caps.iter().map(|&c| Ring::new(c, writers)).collect(),
+            stats: StatCounters::default(),
+        }
+    }
+
+    /// Number of endpoints.
+    pub fn endpoints(&self) -> usize {
+        self.rings.len()
+    }
+}
+
+impl Transport for InProcNet {
+    fn send_multicast(&self, from: u8, receivers: &[u8], frame: &[u8]) {
+        self.stats.record(frame);
+        for &to in receivers {
+            debug_assert_ne!(to, from, "self-send");
+            self.rings[to as usize].push(frame);
+        }
+    }
+
+    fn recv(&self, me: u8, buf: &mut Vec<u8>) -> bool {
+        self.rings[me as usize].pop(buf)
+    }
+
+    fn leave(&self, me: u8) {
+        for (e, ring) in self.rings.iter().enumerate() {
+            if e != me as usize {
+                ring.close_writer();
+            }
+        }
+    }
+
+    fn abort(&self) {
+        for ring in &self.rings {
+            ring.poison();
+        }
+    }
+
+    fn data_stats(&self) -> TransportStats {
+        self.stats.snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::frame::{self, FrameKind};
+
+    #[test]
+    fn frames_flow_between_endpoints() {
+        let net = InProcNet::new(&[8, 8, 8]);
+        assert_eq!(net.endpoints(), 3);
+        let mut buf = Vec::new();
+        frame::encode_uncoded(&mut buf, 0, 5, &[11, 22, 33]);
+        net.send_multicast(0, &[1, 2], &buf);
+        for me in [1u8, 2] {
+            let mut rbuf = Vec::new();
+            assert!(net.recv(me, &mut rbuf));
+            let f = frame::Frame::parse(&rbuf).unwrap();
+            assert_eq!((f.kind, f.sender, f.index), (FrameKind::UncodedData, 0, 5));
+            assert_eq!(f.word(1), 22);
+        }
+    }
+
+    #[test]
+    fn data_stats_count_transmissions_not_deliveries() {
+        let net = InProcNet::new(&[8, 8, 8]);
+        let mut buf = Vec::new();
+        frame::encode_coded(&mut buf, 0, 1, &[7, 7], 4);
+        net.send_multicast(0, &[1, 2], &buf); // one multicast, two copies
+        frame::encode_control(&mut buf, FrameKind::SendDone, 0);
+        net.send_unicast(0, 1, &buf); // control: not data
+        let s = net.data_stats();
+        assert_eq!(s.data_frames, 1);
+        assert_eq!(s.data_bytes, frame::coded_frame_len(2, 4));
+    }
+
+    #[test]
+    fn leave_unblocks_receivers() {
+        let net = InProcNet::new(&[4, 4]);
+        net.leave(1); // endpoint 0 has no writers left
+        let mut buf = Vec::new();
+        assert!(!net.recv(0, &mut buf));
+    }
+
+    #[test]
+    fn queued_frames_survive_leave() {
+        let net = InProcNet::new(&[4, 4]);
+        let mut buf = Vec::new();
+        frame::encode_control(&mut buf, FrameKind::Stop, 1);
+        net.send_unicast(1, 0, &buf);
+        net.leave(1);
+        let mut rbuf = Vec::new();
+        assert!(net.recv(0, &mut rbuf), "queued frame must still deliver");
+        assert_eq!(frame::Frame::parse(&rbuf).unwrap().kind, FrameKind::Stop);
+        assert!(!net.recv(0, &mut rbuf), "then the disconnect surfaces");
+    }
+
+    #[test]
+    fn poison_unblocks_receivers_immediately() {
+        // abnormal teardown: even with frames queued and writers still
+        // attached, a poisoned ring reports disconnect right away
+        let net = InProcNet::new(&[4, 4]);
+        let mut buf = Vec::new();
+        frame::encode_control(&mut buf, FrameKind::Continue, 0);
+        net.send_unicast(0, 1, &buf);
+        net.abort();
+        let mut rbuf = Vec::new();
+        assert!(!net.recv(1, &mut rbuf));
+        // and sends to a poisoned ring drop instead of blocking
+        net.send_unicast(0, 1, &buf);
+        assert!(!net.recv(1, &mut rbuf));
+    }
+
+    #[test]
+    fn buffers_are_pooled_and_swapped() {
+        let net = InProcNet::new(&[4, 4]);
+        let mut buf = Vec::new();
+        let mut rbuf = Vec::new();
+        for round in 0..10u64 {
+            frame::encode_uncoded(&mut buf, 0, round as u32, &[round; 16]);
+            net.send_unicast(0, 1, &buf);
+            assert!(net.recv(1, &mut rbuf));
+            let f = frame::Frame::parse(&rbuf).unwrap();
+            assert_eq!(f.index as u64, round);
+            assert_eq!(f.word(15), round);
+        }
+    }
+}

@@ -1,0 +1,263 @@
+//! TCP backend: real sockets on localhost, one listener per endpoint,
+//! a full mesh of length-prefixed frame streams — the topology of the
+//! paper's EC2 testbed (§VI), where every Shuffle byte crosses a NIC.
+//!
+//! Layout: endpoint `e` binds `127.0.0.1:0` and accepts one inbound
+//! connection from every other endpoint (identified by a 1-byte
+//! handshake). Each inbound connection gets a detached reader thread
+//! that deframes the stream (the frame's own 4-byte length prefix is
+//! the record boundary) and pushes complete frames into the endpoint's
+//! [`Ring`] — so above the socket layer, `recv` is identical to the
+//! in-process backend. Sends write the already-serialized frame to the
+//! per-destination stream; a multicast is a unicast loop, exactly like
+//! the paper's mpi4py implementation (and why the bus model charges a
+//! per-extra-receiver penalty).
+//!
+//! The mesh is wired eagerly in [`TcpNet::new`] on one thread: all
+//! connects are issued first (the OS accept backlog holds them; at most
+//! `n - 1 ≤ 16` per listener), then every listener drains its accepts.
+//! Leader and workers only share the `TcpNet` handle for *addressing* —
+//! all data crosses real sockets, so the same wiring works with
+//! endpoints in separate processes once a bootstrap channel distributes
+//! the addresses (see ROADMAP).
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+
+use super::inproc::Ring;
+use super::{StatCounters, Transport, TransportStats};
+
+/// Refuse absurd length prefixes (corrupt stream) instead of resizing.
+const MAX_BODY: usize = 1 << 28;
+
+/// `streams[from][to]`: outbound write halves (None on the diagonal).
+type StreamMesh = Vec<Vec<Option<Mutex<TcpStream>>>>;
+
+struct Inner {
+    rings: Vec<Ring>,
+    /// Each stream is written only by endpoint `from`, but a mutex keeps
+    /// the trait object shareable without unsafe.
+    streams: StreamMesh,
+    stats: StatCounters,
+}
+
+/// The TCP transport handle. Dropping it shuts every stream down, which
+/// terminates the detached reader threads.
+pub struct TcpNet {
+    inner: Arc<Inner>,
+}
+
+impl TcpNet {
+    /// Build a localhost mesh of `caps.len()` endpoints; `caps[e]`
+    /// bounds endpoint `e`'s inbound ring in frames (same sizing rule as
+    /// [`super::InProcNet::new`]).
+    pub fn new(caps: &[usize]) -> std::io::Result<TcpNet> {
+        let n = caps.len();
+        let writers = n.saturating_sub(1);
+        let listeners: Vec<TcpListener> = (0..n)
+            .map(|_| TcpListener::bind("127.0.0.1:0"))
+            .collect::<std::io::Result<_>>()?;
+        let addrs: Vec<SocketAddr> =
+            listeners.iter().map(|l| l.local_addr()).collect::<std::io::Result<_>>()?;
+
+        // dial the full mesh first; the kernel backlog parks the
+        // connections until the accept loop below collects them
+        let mut streams: StreamMesh = Vec::with_capacity(n);
+        for from in 0..n {
+            let mut row = Vec::with_capacity(n);
+            for (to, addr) in addrs.iter().enumerate() {
+                if to == from {
+                    row.push(None);
+                    continue;
+                }
+                let mut s = TcpStream::connect(addr)?;
+                s.set_nodelay(true)?;
+                s.write_all(&[from as u8])?;
+                row.push(Some(Mutex::new(s)));
+            }
+            streams.push(row);
+        }
+
+        let inner = Arc::new(Inner {
+            rings: caps.iter().map(|&c| Ring::new(c, writers)).collect(),
+            streams,
+            stats: StatCounters::default(),
+        });
+
+        if let Err(e) = accept_inbound(listeners, &inner) {
+            // tear the half-built mesh down so already-spawned readers
+            // terminate instead of leaking blocked threads + sockets
+            teardown(&inner);
+            return Err(e);
+        }
+        Ok(TcpNet { inner })
+    }
+
+    /// Number of endpoints.
+    pub fn endpoints(&self) -> usize {
+        self.inner.rings.len()
+    }
+}
+
+/// Accept and identify every inbound connection, spawning one reader
+/// thread per connection. The 1-byte handshake must name a distinct,
+/// in-range peer — a stray local connection grabbing an accept slot
+/// would otherwise silently displace a real peer and hang the cluster
+/// with no diagnostic.
+fn accept_inbound(listeners: Vec<TcpListener>, inner: &Arc<Inner>) -> std::io::Result<()> {
+    let n = listeners.len();
+    let writers = n.saturating_sub(1);
+    for (me, listener) in listeners.into_iter().enumerate() {
+        let mut seen = vec![false; n];
+        for _ in 0..writers {
+            let (mut s, _) = listener.accept()?;
+            s.set_nodelay(true)?;
+            let mut id = [0u8; 1];
+            s.read_exact(&mut id)?;
+            let from = id[0] as usize;
+            if from >= n || from == me || seen[from] {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("unexpected peer handshake {from} at endpoint {me}"),
+                ));
+            }
+            seen[from] = true;
+            let inner = Arc::clone(inner);
+            std::thread::spawn(move || reader_loop(s, &inner, me));
+        }
+    }
+    Ok(())
+}
+
+/// Poison every ring and shut every stream down: blocked receivers and
+/// senders unblock, reader threads hit EOF and exit.
+fn teardown(inner: &Inner) {
+    for ring in &inner.rings {
+        ring.poison();
+    }
+    for stream in inner.streams.iter().flatten().flatten() {
+        let _ = stream.lock().unwrap().shutdown(Shutdown::Both);
+    }
+}
+
+/// Deframe one inbound connection into the endpoint's ring until EOF /
+/// error, then detach as a writer so `recv` can report the disconnect.
+fn reader_loop(mut s: TcpStream, inner: &Inner, me: usize) {
+    let mut len_buf = [0u8; 4];
+    let mut frame: Vec<u8> = Vec::new();
+    loop {
+        if s.read_exact(&mut len_buf).is_err() {
+            break;
+        }
+        let body = u32::from_le_bytes(len_buf) as usize;
+        if !(super::frame::HEADER_LEN - 4..=MAX_BODY).contains(&body) {
+            break; // corrupt stream
+        }
+        frame.clear();
+        frame.extend_from_slice(&len_buf);
+        frame.resize(4 + body, 0);
+        if s.read_exact(&mut frame[4..]).is_err() {
+            break;
+        }
+        inner.rings[me].push(&frame);
+    }
+    inner.rings[me].close_writer();
+}
+
+impl Transport for TcpNet {
+    fn send_multicast(&self, from: u8, receivers: &[u8], frame: &[u8]) {
+        self.inner.stats.record(frame);
+        for &to in receivers {
+            debug_assert_ne!(to, from, "self-send");
+            let stream = self.inner.streams[from as usize][to as usize]
+                .as_ref()
+                .expect("no stream for destination");
+            stream
+                .lock()
+                .unwrap()
+                .write_all(frame)
+                .expect("tcp transport: peer write failed");
+        }
+    }
+
+    fn recv(&self, me: u8, buf: &mut Vec<u8>) -> bool {
+        self.inner.rings[me as usize].pop(buf)
+    }
+
+    fn leave(&self, me: u8) {
+        // half-close our outbound streams: queued bytes still flush, then
+        // every peer's reader sees EOF and detaches from its ring
+        for stream in self.inner.streams[me as usize].iter().flatten() {
+            let _ = stream.lock().unwrap().shutdown(Shutdown::Write);
+        }
+    }
+
+    fn abort(&self) {
+        // poison every local ring (wakes blocked recv/push) and tear the
+        // sockets down so remote readers fail fast too
+        teardown(&self.inner);
+    }
+
+    fn data_stats(&self) -> TransportStats {
+        self.inner.stats.snapshot()
+    }
+}
+
+impl Drop for TcpNet {
+    fn drop(&mut self) {
+        // force-terminate any reader still blocked on a socket
+        teardown(&self.inner);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::frame::{self, FrameKind};
+
+    #[test]
+    fn loopback_frames_roundtrip() {
+        let net = TcpNet::new(&[8, 8, 8]).expect("bind localhost");
+        assert_eq!(net.endpoints(), 3);
+        let mut buf = Vec::new();
+        frame::encode_coded(&mut buf, 2, 9, &[0xAB, 0xCD, 0xEF], 4);
+        net.send_multicast(2, &[0, 1], &buf);
+        for me in [0u8, 1] {
+            let mut rbuf = Vec::new();
+            assert!(net.recv(me, &mut rbuf));
+            let f = frame::Frame::parse(&rbuf).unwrap();
+            assert_eq!((f.kind, f.sender, f.index, f.count), (FrameKind::CodedData, 2, 9, 3));
+            assert_eq!(f.col(2, 4), 0xEF);
+        }
+        let s = net.data_stats();
+        assert_eq!(s.data_frames, 1);
+        assert_eq!(s.data_bytes, frame::coded_frame_len(3, 4));
+    }
+
+    #[test]
+    fn streams_preserve_frame_order() {
+        let net = TcpNet::new(&[64, 64]).expect("bind localhost");
+        let mut buf = Vec::new();
+        for i in 0..50u32 {
+            frame::encode_uncoded(&mut buf, 0, i, &[i as u64; 3]);
+            net.send_unicast(0, 1, &buf);
+        }
+        let mut rbuf = Vec::new();
+        for i in 0..50u32 {
+            assert!(net.recv(1, &mut rbuf));
+            let f = frame::Frame::parse(&rbuf).unwrap();
+            assert_eq!(f.index, i);
+            assert_eq!(f.word(0), i as u64);
+        }
+    }
+
+    #[test]
+    fn leave_surfaces_as_disconnect() {
+        let net = TcpNet::new(&[4, 4]).expect("bind localhost");
+        net.leave(0);
+        let mut rbuf = Vec::new();
+        // endpoint 1's only writer (0) half-closed: recv drains to EOF
+        assert!(!net.recv(1, &mut rbuf));
+    }
+}

@@ -1,0 +1,156 @@
+//! Steady-state allocation audit of the transport **send path** — the
+//! ISSUE-2 acceptance criterion for `InProc` cluster iterations.
+//!
+//! The path under audit is byte-for-byte what a cluster worker executes
+//! per coded multicast / uncoded batch each iteration:
+//! `eval_rows_except` → `encode_sender_into` → `frame::encode_*` into a
+//! reused send buffer → `InProcNet::send_multicast` (pooled ring slot)
+//! → `recv` (buffer swap) → `Frame::parse` (borrowed view) → column
+//! reads. A counting global allocator wraps `System`; after warm-up
+//! passes grow every buffer (the ring rotates a small set of pooled
+//! buffers, so a few passes are needed before each has seen the largest
+//! frame), a full measured pass must leave the counters untouched.
+//!
+//! Like `tests/zero_alloc.rs`, this binary holds a single `#[test]` so
+//! no concurrent test thread can perturb the process-global counters.
+//!
+//! The remaining worker-side iteration state (`garena`, `unc_arena`,
+//! `bits`, `accs`, `next_bits`) is preallocated in `Worker::new` and
+//! only ever indexed — see the hand-audit in `coordinator::cluster`'s
+//! module docs. The leader keeps two per-iteration `Vec`s for write-back
+//! routing, which are off the workers' send path by design.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use coded_graph::allocation::Allocation;
+use coded_graph::graph::csr::Vertex;
+use coded_graph::graph::er::er;
+use coded_graph::shuffle::coded::{encode_sender_into, eval_rows_except};
+use coded_graph::shuffle::plan::build_group_plans;
+use coded_graph::shuffle::segments::seg_bytes;
+use coded_graph::shuffle::uncoded::plan_uncoded;
+use coded_graph::transport::frame::{self, Frame, FrameKind};
+use coded_graph::transport::{InProcNet, Transport};
+use coded_graph::util::rng::DetRng;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+static REALLOCS: AtomicUsize = AtomicUsize::new(0);
+static DEALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        DEALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        REALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn counters() -> (usize, usize, usize) {
+    (
+        ALLOCS.load(Ordering::SeqCst),
+        REALLOCS.load(Ordering::SeqCst),
+        DEALLOCS.load(Ordering::SeqCst),
+    )
+}
+
+#[test]
+fn inproc_send_path_is_allocation_free_at_steady_state() {
+    let n = 300;
+    let g = er(n, 0.1, &mut DetRng::seed(88));
+    let alloc = Allocation::er_scheme(n, 5, 3);
+    let r = alloc.r;
+    let sb = seg_bytes(r);
+    let plan = build_group_plans(&g, &alloc);
+    let transfers = plan_uncoded(&g, &alloc);
+    assert!(plan.num_groups() > 0 && !transfers.is_empty(), "need real traffic");
+    let value = |i: Vertex, j: Vertex| {
+        (((i as u64) << 32) ^ j as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+    };
+
+    // two endpoints: 0 sends (the worker role under audit), 1 receives
+    let net = InProcNet::new(&[16, 16]);
+    let receivers = [1u8];
+    let max_vals = plan.groups().map(|p| p.total_ivs()).max().unwrap_or(0);
+    let max_cols = (0..plan.num_groups())
+        .flat_map(|gi| plan.sender_cols(gi).iter().copied())
+        .max()
+        .unwrap_or(0) as usize;
+    let max_ivs = transfers.iter().map(|t| t.ivs.len()).max().unwrap_or(0);
+    let mut vals = vec![0u64; max_vals];
+    let mut cols = vec![0u64; max_cols];
+    let mut ivbits: Vec<u64> = Vec::with_capacity(max_ivs);
+    let mut sendbuf: Vec<u8> = Vec::new();
+    let mut rbuf: Vec<u8> = Vec::new();
+    let mut checksum = 0u64;
+    let mut before = None;
+
+    // passes 0..4 are warm-up: the ring's pooled buffers rotate (send
+    // slot, recv swap, caller buffer), so several passes are needed until
+    // every buffer in the rotation has reached its repeating capacity;
+    // pass 4 is measured
+    for pass in 0..5 {
+        if pass == 4 {
+            before = Some(counters());
+        }
+        // coded sends: every (group, sender) the plan prescribes
+        for gi in 0..plan.num_groups() {
+            let group = plan.group(gi);
+            let nv = group.total_ivs();
+            for (s_idx, &q) in plan.sender_cols(gi).iter().enumerate() {
+                let q = q as usize;
+                if q == 0 {
+                    continue;
+                }
+                eval_rows_except(group, s_idx, &value, &mut vals[..nv]);
+                encode_sender_into(group, s_idx, &vals[..nv], r, &mut cols[..q]);
+                frame::encode_coded(&mut sendbuf, 0, gi as u32, &cols[..q], sb);
+                net.send_multicast(0, &receivers, &sendbuf);
+                assert!(net.recv(1, &mut rbuf));
+                let f = Frame::parse(&rbuf).unwrap();
+                assert_eq!(f.kind, FrameKind::CodedData);
+                assert_eq!(f.count as usize, q);
+                for c in 0..q {
+                    checksum = checksum.wrapping_add(f.col(c, sb));
+                }
+            }
+        }
+        // uncoded sends: every transfer in the plan
+        for (ti, t) in transfers.iter().enumerate() {
+            ivbits.clear();
+            ivbits.extend(t.ivs.iter().map(|&(i, j)| value(i, j)));
+            frame::encode_uncoded(&mut sendbuf, 0, ti as u32, &ivbits);
+            net.send_unicast(0, 1, &sendbuf);
+            assert!(net.recv(1, &mut rbuf));
+            let f = Frame::parse(&rbuf).unwrap();
+            assert_eq!(f.kind, FrameKind::UncodedData);
+            for c in 0..f.count as usize {
+                checksum = checksum.wrapping_add(f.word(c));
+            }
+        }
+    }
+
+    let after = counters();
+    let before = before.unwrap();
+    assert_eq!(
+        (after.0 - before.0, after.1 - before.1, after.2 - before.2),
+        (0, 0, 0),
+        "steady-state transport send path touched the allocator \
+         (allocs/reallocs/deallocs deltas)"
+    );
+    assert!(checksum != 0, "keep the data path observable");
+}
