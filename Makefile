@@ -3,7 +3,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test bench bench-smoke cluster-smoke fmt clippy artifacts
+.PHONY: build test bench bench-smoke cluster-smoke docs fmt clippy artifacts
 
 build:
 	$(CARGO) build --release
@@ -25,11 +25,25 @@ bench:
 bench-smoke:
 	$(CARGO) bench --bench shuffle_micro -- --smoke
 
-# End-to-end cluster run over real localhost sockets (seconds): a small
-# ER PageRank job through the TCP transport, leader + 4 workers.
+# End-to-end cluster runs over real localhost sockets (seconds):
+#  1) a small ER PageRank job through the threaded TCP mesh;
+#  2) the same job as REAL separate OS processes (leader spawns workers,
+#     bootstrap rendezvous distributes the roster + job spec) with
+#     --check asserting final states bit-identical to the engine.
 cluster-smoke:
 	$(CARGO) run --release -- cluster --graph er --n 600 --k 4 --r 2 \
 	  --program pagerank --scheme coded --iters 2 --transport tcp
+	$(CARGO) run --release -- cluster --graph er --n 400 --k 2 --r 2 \
+	  --program pagerank --scheme coded --iters 2 --transport tcp \
+	  --processes --check
+	$(CARGO) run --release -- cluster --graph er --n 400 --k 2 --r 2 \
+	  --program pagerank --scheme uncoded --iters 2 --transport tcp \
+	  --processes --check
+
+# Docs must build warning-clean (broken links, private-item links, bad
+# HTML in rustdoc all fail CI).
+docs:
+	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
 
 # AOT-lower the JAX/Pallas kernels to HLO text for the PJRT runtime
 # (build-time only; requires jax — see python/compile/aot.py).

@@ -2,7 +2,7 @@
 //! layer.
 //!
 //! The engine ([`super::engine`]) simulates the cluster in one loop; this
-//! driver actually *runs* it: `K` worker threads plus a leader, every
+//! driver actually *runs* it: `K` workers plus a leader, every
 //! message — coded multicasts, uncoded unicast batches, and all control
 //! traffic — serialized into wire-format [`frame`]s and moved by a
 //! pluggable [`Transport`] backend:
@@ -13,6 +13,17 @@
 //! * [`TransportKind::Tcp`]: a localhost socket mesh — the paper's EC2
 //!   testbed topology (§VI), every Shuffle byte crossing a real NIC
 //!   buffer and a real serialization boundary.
+//!
+//! Endpoints and OS processes are independent axes: [`run_cluster_on`]
+//! drives all `K + 1` endpoints as threads of one process, while
+//! [`run_worker`] / [`run_leader`] are the same protocol loops exposed
+//! for *process-separated* deployment — `coded-graph worker` wires one
+//! [`TcpEndpoint`](crate::transport::TcpEndpoint) from the
+//! [`bootstrap`](crate::transport::bootstrap) roster and calls
+//! [`run_worker`]; the `--processes` leader does the mirror-image with
+//! [`run_leader`]. Nothing in the protocol knows which deployment it is
+//! in; only teardown differs (a panicking process aborts its own
+//! endpoint, and peers observe the hangup instead of a shared unwind).
 //!
 //! Each worker holds only the state it is entitled to — the states of
 //! vertices it Maps and Reduces — so a decode bug cannot be papered over
@@ -29,7 +40,14 @@
 //! canonical order — bit-identical to the engine's replay — while the
 //! transport tallies the bytes it actually moved. Every iteration
 //! asserts `actual frame bytes == ShuffleLoad::wire_bytes_with_headers()`
-//! and `actual frames == messages`: the wire model *is* the wire.
+//! and `actual frames == messages`: the wire model *is* the wire. The
+//! actuals come from two independent meters: each worker's `SendDone`
+//! carries its own per-iteration (frames, bytes) tally — the form that
+//! survives process separation, where no shared counter exists — and on
+//! shared in-process transports the leader additionally checks the
+//! transport's global [`data_stats`](Transport::data_stats) delta
+//! (process-separated workers verify their local counters against the
+//! hand tally on exit instead).
 //! Results are bit-identical to [`engine::run_rust`](super::engine::run_rust)
 //! because every worker folds local and received IVs in exactly the
 //! engine's canonical order (groups ascending, then transfers ascending).
@@ -109,16 +127,25 @@ pub fn run_cluster_on(
     }
 }
 
-/// Ring bounds from the prepared job: a worker's inbound traffic per
-/// iteration is its expected data frames plus a handful of control
-/// frames (at most StateUpdate + Continue of the previous iteration can
-/// still be queued when next-iteration data arrives); the leader sees
-/// `2K` events per iteration.
+/// Inbound ring bound for worker `k`: its expected data frames per
+/// iteration plus a handful of control frames (at most StateUpdate +
+/// Continue of the previous iteration can still be queued when
+/// next-iteration data arrives). Worker processes use the same rule, so
+/// in-process and process-separated runs have identical backpressure.
+pub fn worker_ring_capacity(prep: &PreparedJob, k: usize) -> usize {
+    prep.expect_coded(k) + prep.expect_unc(k) + 8
+}
+
+/// Inbound ring bound for the leader endpoint: `2K` events per iteration
+/// (one SendDone + one Reduced per worker).
+pub fn leader_ring_capacity(k: usize) -> usize {
+    2 * k + 8
+}
+
+/// Ring bounds for a whole in-process mesh, leader last.
 fn ring_capacities(prep: &PreparedJob, k: usize) -> Vec<usize> {
-    let mut caps: Vec<usize> = (0..k)
-        .map(|kk| prep.expect_coded(kk) + prep.expect_unc(kk) + 8)
-        .collect();
-    caps.push(2 * k + 8);
+    let mut caps: Vec<usize> = (0..k).map(|kk| worker_ring_capacity(prep, kk)).collect();
+    caps.push(leader_ring_capacity(k));
     caps
 }
 
@@ -145,19 +172,40 @@ fn drive(
     prep: &PreparedJob,
     net: &dyn Transport,
 ) -> JobReport {
-    let (g, alloc, prog) = (job.graph, job.alloc, job.program);
-    let k = alloc.k;
-    let leader = k as u8;
+    let k = job.alloc.k;
     std::thread::scope(|scope| {
         for kk in 0..k as u8 {
-            scope.spawn(move || {
-                let _guard = LeaveGuard(net, kk);
-                Worker::new(kk, g, alloc, prog, prep, net, leader).run();
-            });
+            scope.spawn(move || run_worker(kk, job, prep, net));
         }
-        let _guard = LeaveGuard(net, leader);
-        leader_loop(job, cfg, iters, prep, net, leader)
+        run_leader(job, cfg, iters, prep, net)
     })
+}
+
+/// Run one worker endpoint to completion over `net` — the entry point a
+/// `coded-graph worker` *process* shares with the in-process driver's
+/// threads. Expects the cluster convention: workers `0..K`, leader `K`.
+/// Installs the leave guard itself: a clean exit half-closes the
+/// endpoint, a panic aborts the transport so every peer unblocks.
+pub fn run_worker(me: u8, job: &Job<'_>, prep: &PreparedJob, net: &dyn Transport) {
+    let leader = job.alloc.k as u8;
+    let _guard = LeaveGuard(net, me);
+    Worker::new(me, job.graph, job.alloc, job.program, prep, net, leader).run();
+}
+
+/// Run the leader endpoint over `net` — shared by the in-process driver
+/// and the `--processes` leader. Same leave-guard semantics as
+/// [`run_worker`]; panics when a worker disconnects mid-run (the caller
+/// decides whether that unwinds a thread scope or an OS process).
+pub fn run_leader(
+    job: &Job<'_>,
+    cfg: &EngineConfig,
+    iters: usize,
+    prep: &PreparedJob,
+    net: &dyn Transport,
+) -> JobReport {
+    let leader = job.alloc.k as u8;
+    let _guard = LeaveGuard(net, leader);
+    leader_loop(job, cfg, iters, prep, net, leader)
 }
 
 /// The leader: phase barriers, deterministic accounting replay, state
@@ -212,11 +260,19 @@ fn leader_loop(
             net.send_unicast(leader, kk, &sendbuf);
         }
         let mut send_done = 0usize;
+        let mut sent_frames = 0usize;
+        let mut sent_bytes = 0usize;
         while send_done < k {
             assert!(net.recv(leader, &mut rbuf), "leader: a worker disconnected");
             let f = Frame::parse(&rbuf).expect("leader: bad frame");
             match f.kind {
-                FrameKind::SendDone => send_done += 1,
+                FrameKind::SendDone => {
+                    // each worker's own per-iteration tally (frames in the
+                    // index field, bytes as the payload word)
+                    sent_frames += f.index as usize;
+                    sent_bytes += f.word(0) as usize;
+                    send_done += 1;
+                }
                 other => unreachable!("leader: unexpected {other:?} before the send barrier"),
             }
         }
@@ -252,20 +308,38 @@ fn leader_loop(
         }
         times.shuffle_s = bus.clock();
 
-        // model ≡ reality: the transport moved exactly the frames and
-        // bytes the accounting charged (payload + 16-byte header each)
-        let stats = net.data_stats();
+        // model ≡ reality, across process boundaries: the workers' own
+        // send tallies (summed off the SendDone frames) must equal the
+        // frames and bytes the accounting charged (payload + 16-byte
+        // header each)
         assert_eq!(
-            stats.data_frames - stats_mark.data_frames,
+            sent_frames,
             shuffle_load.messages,
-            "transport frame count diverges from the modeled message count"
+            "workers' data-frame tally diverges from the modeled message count"
         );
         assert_eq!(
-            stats.data_bytes - stats_mark.data_bytes,
+            sent_bytes,
             shuffle_load.wire_bytes_with_headers(),
-            "serialized frame bytes diverge from the modeled wire bytes"
+            "workers' serialized byte tally diverges from the modeled wire bytes"
         );
-        stats_mark = stats;
+        // when every endpoint shares this transport handle, the
+        // transport's own counters must agree too; a process-separated
+        // leader only observes its own (control) sends, so the tally
+        // above is the cross-process form of the same invariant
+        if net.stats_are_global() {
+            let stats = net.data_stats();
+            assert_eq!(
+                stats.data_frames - stats_mark.data_frames,
+                shuffle_load.messages,
+                "transport frame count diverges from the modeled message count"
+            );
+            assert_eq!(
+                stats.data_bytes - stats_mark.data_bytes,
+                shuffle_load.wire_bytes_with_headers(),
+                "serialized frame bytes diverge from the modeled wire bytes"
+            );
+            stats_mark = stats;
+        }
 
         // ---- Reduce ----
         for kk in 0..k as u8 {
@@ -397,6 +471,12 @@ struct Worker<'a> {
     sendbuf: Vec<u8>,
     got_coded: usize,
     got_unc: usize,
+    /// Lifetime data-send tally (frames, serialized bytes) — what this
+    /// worker's transport actually carried; per-iteration deltas ride on
+    /// `SendDone` so the leader can cross-check the wire model without a
+    /// shared counter.
+    sent_frames: usize,
+    sent_bytes: usize,
 }
 
 /// The IV value both schemes and the decoder share — a pure function of
@@ -520,6 +600,8 @@ impl<'a> Worker<'a> {
             sendbuf: Vec::new(),
             got_coded: 0,
             got_unc: 0,
+            sent_frames: 0,
+            sent_bytes: 0,
         }
     }
 
@@ -542,7 +624,10 @@ impl<'a> Worker<'a> {
                     FrameKind::StartShuffle => break,
                     FrameKind::CodedData | FrameKind::UncodedData => self.handle_data(&f),
                     // a zero-iteration job stops before any shuffle starts
-                    FrameKind::Stop => return,
+                    FrameKind::Stop => {
+                        self.check_local_stats();
+                        return;
+                    }
                     other => unreachable!("unexpected {other:?} awaiting shuffle"),
                 }
             }
@@ -586,7 +671,10 @@ impl<'a> Worker<'a> {
                         assert!(got_update, "Continue before StateUpdate");
                         continue 'iterations;
                     }
-                    FrameKind::Stop => return,
+                    FrameKind::Stop => {
+                        self.check_local_stats();
+                        return;
+                    }
                     FrameKind::CodedData | FrameKind::UncodedData => self.handle_data(&f),
                     other => unreachable!("unexpected {other:?} at write-back"),
                 }
@@ -595,13 +683,16 @@ impl<'a> Worker<'a> {
     }
 
     /// Encode and transmit everything this worker owes, then signal the
-    /// leader. Steady state: no allocation (scratch + frame buffer reuse).
+    /// leader (the SendDone carries this iteration's data-send tally).
+    /// Steady state: no allocation (scratch + frame buffer reuse).
     fn send_all(&mut self) {
         let (g, alloc, prog) = (self.g, self.alloc, self.prog);
         let (combined, me, r, sb) = (self.combined, self.me, self.r, self.sb);
         let plan = &self.prep.plan;
         let state = &self.state;
         let value = move |i: Vertex, j: Vertex| iv_value(g, alloc, prog, state, combined, i, j);
+        let mut iter_frames = 0u32;
+        let mut iter_bytes = 0u64;
 
         for &(gi, si) in self.prep.send_plan(me as usize) {
             let group = plan.group(gi as usize);
@@ -632,6 +723,8 @@ impl<'a> Worker<'a> {
                 }
             }
             self.net.send_multicast(me, &self.receivers, &self.sendbuf);
+            iter_frames += 1; // one multicast = one transmission
+            iter_bytes += self.sendbuf.len() as u64;
         }
         for &ti in self.prep.unc_sends(me as usize) {
             let t = &self.prep.transfers[ti as usize];
@@ -639,9 +732,30 @@ impl<'a> Worker<'a> {
             self.ivbits.extend(t.ivs.iter().map(|&(i, j)| value(i, j)));
             frame::encode_uncoded(&mut self.sendbuf, me, ti, &self.ivbits);
             self.net.send_unicast(me, t.receiver, &self.sendbuf);
+            iter_frames += 1;
+            iter_bytes += self.sendbuf.len() as u64;
         }
-        frame::encode_control(&mut self.sendbuf, FrameKind::SendDone, me);
+        self.sent_frames += iter_frames as usize;
+        self.sent_bytes += iter_bytes as usize;
+        frame::encode_send_done(&mut self.sendbuf, me, iter_frames, iter_bytes);
         self.net.send_unicast(me, self.leader, &self.sendbuf);
+    }
+
+    /// On a process-separated transport the endpoint's own counters see
+    /// exactly this worker's sends: verify the hand tallies against them
+    /// before exiting (a shared in-process transport aggregates every
+    /// endpoint, so there the *leader* checks the global counter
+    /// instead).
+    fn check_local_stats(&self) {
+        if !self.net.stats_are_global() {
+            let s = self.net.data_stats();
+            assert_eq!(
+                (s.data_frames, s.data_bytes),
+                (self.sent_frames, self.sent_bytes),
+                "worker {}: transport counters disagree with the send tally",
+                self.me
+            );
+        }
     }
 
     /// Stash one data frame into its arena slot (state-independent: the

@@ -27,6 +27,35 @@ impl Scheme {
     pub fn is_coded(&self) -> bool {
         matches!(self, Scheme::Coded | Scheme::CodedCombined)
     }
+
+    /// The stable CLI / job-spec token ([`std::fmt::Display`] renders a
+    /// prettier form for tables; this one parses back via [`std::str::FromStr`]).
+    pub fn token(&self) -> &'static str {
+        match self {
+            Scheme::Coded => "coded",
+            Scheme::Uncoded => "uncoded",
+            Scheme::CodedCombined => "coded-combined",
+            Scheme::UncodedCombined => "uncoded-combined",
+        }
+    }
+}
+
+impl std::str::FromStr for Scheme {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(match s {
+            "coded" => Scheme::Coded,
+            "uncoded" => Scheme::Uncoded,
+            "coded-combined" => Scheme::CodedCombined,
+            "uncoded-combined" => Scheme::UncodedCombined,
+            other => {
+                return Err(format!(
+                    "unknown scheme {other:?} (expected coded|uncoded|coded-combined|uncoded-combined)"
+                ))
+            }
+        })
+    }
 }
 
 impl std::fmt::Display for Scheme {
@@ -149,6 +178,19 @@ mod tests {
     fn scheme_display() {
         assert_eq!(Scheme::Coded.to_string(), "coded");
         assert_eq!(Scheme::Uncoded.to_string(), "uncoded");
+    }
+
+    #[test]
+    fn scheme_token_parse_roundtrip() {
+        for s in [
+            Scheme::Coded,
+            Scheme::Uncoded,
+            Scheme::CodedCombined,
+            Scheme::UncodedCombined,
+        ] {
+            assert_eq!(s.token().parse::<Scheme>().unwrap(), s);
+        }
+        assert!("laplace".parse::<Scheme>().is_err());
     }
 
     #[test]

@@ -8,16 +8,22 @@
 //!   the precomputed per-worker routing tables the cluster shares.
 //! * [`cluster`] — the leader/worker driver over the pluggable
 //!   [`transport`](crate::transport) layer (wire-format frames, in-proc
-//!   rings or localhost TCP; real per-worker encode/decode, results
+//!   rings, a localhost TCP mesh, or one process-separated TCP endpoint
+//!   per OS process; real per-worker encode/decode, results
 //!   bit-identical to the engine).
+//! * [`spec`] — serializable job specs: the single line the bootstrap
+//!   rendezvous ships so worker processes can deterministically rebuild
+//!   graph, allocation, program, and shuffle plan.
 
 pub mod cluster;
 pub mod config;
 pub mod engine;
 pub mod metrics;
+pub mod spec;
 
-pub use cluster::{run_cluster, run_cluster_on};
+pub use cluster::{run_cluster, run_cluster_on, run_leader, run_worker};
 pub use config::{EngineConfig, Scheme, TimeModel};
+pub use spec::{AllocKind, BuiltJob, GraphKind, GraphSpec, JobSpec, ProgramSpec};
 pub use engine::{
     measure_loads, measure_loads_prepared, prepare, run, run_iteration, run_iteration_scratch,
     run_rust, Backend, EngineScratch, Job, PreparedJob, XlaKind,

@@ -1,0 +1,353 @@
+//! Serializable job specifications: how a worker *process* learns its
+//! job.
+//!
+//! The [`bootstrap`](crate::transport::bootstrap) rendezvous ships one
+//! opaque line from the leader to every worker; this module defines
+//! that line. Instead of serializing the CSR and allocation (megabytes
+//! of state), the spec names the deterministic generators and seeds
+//! that produce them: every generator in this crate is
+//! [`DetRng`]-seeded and platform-independent, so a worker rebuilding
+//! `(graph, allocation, program)` from the spec gets structures
+//! bit-identical to the leader's — which is what lets the cluster keep
+//! its shared-[`PreparedJob`](super::PreparedJob) routing tables without
+//! ever putting a routing table on the wire.
+//!
+//! The wire form is a single `v1`-prefixed line of `key=value` tokens,
+//! e.g.
+//!
+//! ```text
+//! v1 graph=er n=600 p=0.1 seed=1 alloc=er k=4 r=2 program=pagerank scheme=coded iters=2
+//! ```
+//!
+//! Floats round-trip exactly (Rust's `Display` for `f64` prints the
+//! shortest string that parses back to the same bits).
+
+use crate::allocation::Allocation;
+use crate::graph::csr::Csr;
+use crate::graph::{bipartite, er, powerlaw, sbm};
+use crate::mapreduce::{ConnectedComponents, PageRank, Sssp, VertexProgram};
+use crate::util::rng::DetRng;
+
+use super::config::Scheme;
+use super::engine::Job;
+
+/// Graph family + parameters (the CLI's `--graph` surface).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum GraphKind {
+    /// Erdős–Rényi `ER(n, p)`.
+    Er { p: f64 },
+    /// Random bi-partite, halves `n/2` and `n - n/2`, cross-density `q`.
+    Rb { q: f64 },
+    /// Two-cluster stochastic block model (intra `p`, inter `q`).
+    Sbm { p: f64, q: f64 },
+    /// Power-law degree graph (`max_degree` fixed at 100 000, as
+    /// everywhere else in this crate).
+    Pl { gamma: f64, rho_scale: f64 },
+}
+
+/// A deterministic graph recipe: family, size, RNG seed.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GraphSpec {
+    pub kind: GraphKind,
+    pub n: usize,
+    pub seed: u64,
+}
+
+impl GraphSpec {
+    /// Generate the graph (bit-identical on every host: the generators
+    /// only consume [`DetRng`] draws).
+    pub fn build(&self) -> Csr {
+        let mut rng = DetRng::seed(self.seed);
+        match self.kind {
+            GraphKind::Er { p } => er::er(self.n, p, &mut rng),
+            GraphKind::Rb { q } => bipartite::rb(self.n / 2, self.n - self.n / 2, q, &mut rng),
+            GraphKind::Sbm { p, q } => sbm::sbm(self.n / 2, self.n - self.n / 2, p, q, &mut rng),
+            GraphKind::Pl { gamma, rho_scale } => powerlaw::pl(
+                self.n,
+                powerlaw::PlParams { gamma, max_degree: 100_000, rho_scale },
+                &mut rng,
+            ),
+        }
+    }
+}
+
+/// Which allocation scheme to build (paper §IV / Appendix C).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllocKind {
+    /// `M_k = R_k`, no replication (`r = 1` naive baseline).
+    Single,
+    /// The ER scheme: all `C(K, r)` batches.
+    Er,
+    /// The SBM composite scheme over the two halves.
+    Sbm,
+    /// The random bi-partite scheme over the two halves.
+    Bipartite,
+}
+
+/// The vertex program to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProgramSpec {
+    PageRank,
+    Sssp { source: u32 },
+    Cc,
+}
+
+impl ProgramSpec {
+    /// Instantiate the program.
+    pub fn build(&self) -> Box<dyn VertexProgram> {
+        match *self {
+            ProgramSpec::PageRank => Box::new(PageRank::default()),
+            ProgramSpec::Sssp { source } => Box::new(Sssp::hashed(source)),
+            ProgramSpec::Cc => Box::new(ConnectedComponents),
+        }
+    }
+}
+
+/// Everything a process needs to rebuild a cluster job: graph recipe,
+/// allocation recipe, program, Shuffle scheme, and iteration count.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct JobSpec {
+    pub graph: GraphSpec,
+    pub alloc: AllocKind,
+    pub k: usize,
+    pub r: usize,
+    pub program: ProgramSpec,
+    pub scheme: Scheme,
+    pub iters: usize,
+}
+
+/// A fully materialized job (owned), built deterministically from a
+/// [`JobSpec`]; borrow it as the engine's [`Job`] view.
+pub struct BuiltJob {
+    pub graph: Csr,
+    pub alloc: Allocation,
+    pub program: Box<dyn VertexProgram>,
+}
+
+impl BuiltJob {
+    /// The borrowed [`Job`] view the engine and cluster driver consume.
+    pub fn job(&self) -> Job<'_> {
+        Job { graph: &self.graph, alloc: &self.alloc, program: &*self.program }
+    }
+}
+
+impl JobSpec {
+    /// Build the allocation for this spec's graph size.
+    pub fn build_alloc(&self) -> Allocation {
+        let n = self.graph.n;
+        let (k, r) = (self.k, self.r);
+        match self.alloc {
+            AllocKind::Single => Allocation::single(n, k),
+            AllocKind::Er => Allocation::er_scheme(n, k, r),
+            AllocKind::Sbm => Allocation::sbm_scheme(n / 2, n - n / 2, k, r),
+            AllocKind::Bipartite => Allocation::bipartite_scheme(n / 2, n - n / 2, k, r),
+        }
+    }
+
+    /// Materialize graph + allocation + program.
+    pub fn materialize(&self) -> BuiltJob {
+        BuiltJob {
+            graph: self.graph.build(),
+            alloc: self.build_alloc(),
+            program: self.program.build(),
+        }
+    }
+
+    /// Serialize to the single-line bootstrap wire form.
+    pub fn encode_line(&self) -> String {
+        let mut parts: Vec<String> = vec!["v1".into()];
+        let (gname, gparams) = match self.graph.kind {
+            GraphKind::Er { p } => ("er", format!("p={p}")),
+            GraphKind::Rb { q } => ("rb", format!("q={q}")),
+            GraphKind::Sbm { p, q } => ("sbm", format!("p={p} q={q}")),
+            GraphKind::Pl { gamma, rho_scale } => {
+                ("pl", format!("gamma={gamma} rho-scale={rho_scale}"))
+            }
+        };
+        parts.push(format!("graph={gname}"));
+        parts.push(format!("n={}", self.graph.n));
+        parts.push(gparams);
+        parts.push(format!("seed={}", self.graph.seed));
+        let alloc = match self.alloc {
+            AllocKind::Single => "single",
+            AllocKind::Er => "er",
+            AllocKind::Sbm => "sbm",
+            AllocKind::Bipartite => "rb",
+        };
+        parts.push(format!("alloc={alloc}"));
+        parts.push(format!("k={}", self.k));
+        parts.push(format!("r={}", self.r));
+        match self.program {
+            ProgramSpec::PageRank => parts.push("program=pagerank".into()),
+            ProgramSpec::Sssp { source } => {
+                parts.push("program=sssp".into());
+                parts.push(format!("source={source}"));
+            }
+            ProgramSpec::Cc => parts.push("program=cc".into()),
+        }
+        parts.push(format!("scheme={}", self.scheme.token()));
+        parts.push(format!("iters={}", self.iters));
+        parts.join(" ")
+    }
+
+    /// Parse the single-line wire form back into a spec.
+    pub fn decode_line(line: &str) -> Result<JobSpec, String> {
+        let mut tok = line.split_whitespace();
+        match tok.next() {
+            Some("v1") => {}
+            other => return Err(format!("unsupported job spec version {other:?}")),
+        }
+        let mut kv: Vec<(&str, &str)> = Vec::new();
+        for t in tok {
+            let pair = t.split_once('=').ok_or_else(|| format!("bad job spec token {t:?}"))?;
+            kv.push(pair);
+        }
+        fn val<T: std::str::FromStr>(kv: &[(&str, &str)], key: &str) -> Result<T, String> {
+            let v = kv
+                .iter()
+                .find(|(k, _)| *k == key)
+                .map(|(_, v)| *v)
+                .ok_or_else(|| format!("job spec missing {key}"))?;
+            v.parse().map_err(|_| format!("job spec: cannot parse {key}={v}"))
+        }
+        let kind = match val::<String>(&kv, "graph")?.as_str() {
+            "er" => GraphKind::Er { p: val(&kv, "p")? },
+            "rb" => GraphKind::Rb { q: val(&kv, "q")? },
+            "sbm" => GraphKind::Sbm { p: val(&kv, "p")?, q: val(&kv, "q")? },
+            "pl" => GraphKind::Pl { gamma: val(&kv, "gamma")?, rho_scale: val(&kv, "rho-scale")? },
+            other => return Err(format!("unknown graph kind {other:?}")),
+        };
+        let alloc = match val::<String>(&kv, "alloc")?.as_str() {
+            "single" => AllocKind::Single,
+            "er" => AllocKind::Er,
+            "sbm" => AllocKind::Sbm,
+            "rb" => AllocKind::Bipartite,
+            other => return Err(format!("unknown allocation {other:?}")),
+        };
+        let program = match val::<String>(&kv, "program")?.as_str() {
+            "pagerank" => ProgramSpec::PageRank,
+            "sssp" => ProgramSpec::Sssp { source: val(&kv, "source")? },
+            "cc" => ProgramSpec::Cc,
+            other => return Err(format!("unknown program {other:?}")),
+        };
+        Ok(JobSpec {
+            graph: GraphSpec { kind, n: val(&kv, "n")?, seed: val(&kv, "seed")? },
+            alloc,
+            k: val(&kv, "k")?,
+            r: val(&kv, "r")?,
+            program,
+            scheme: val::<String>(&kv, "scheme")?.parse()?,
+            iters: val(&kv, "iters")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<JobSpec> {
+        vec![
+            JobSpec {
+                graph: GraphSpec { kind: GraphKind::Er { p: 0.1 }, n: 600, seed: 1 },
+                alloc: AllocKind::Er,
+                k: 4,
+                r: 2,
+                program: ProgramSpec::PageRank,
+                scheme: Scheme::Coded,
+                iters: 2,
+            },
+            JobSpec {
+                graph: GraphSpec { kind: GraphKind::Sbm { p: 0.3, q: 0.03 }, n: 400, seed: 13 },
+                alloc: AllocKind::Sbm,
+                k: 8,
+                r: 3,
+                program: ProgramSpec::Sssp { source: 7 },
+                scheme: Scheme::UncodedCombined,
+                iters: 5,
+            },
+            JobSpec {
+                graph: GraphSpec {
+                    kind: GraphKind::Pl { gamma: 2.3, rho_scale: 11.0 },
+                    n: 578,
+                    seed: 9,
+                },
+                alloc: AllocKind::Single,
+                k: 6,
+                r: 1,
+                program: ProgramSpec::Cc,
+                scheme: Scheme::Uncoded,
+                iters: 1,
+            },
+            JobSpec {
+                graph: GraphSpec { kind: GraphKind::Rb { q: 0.05 }, n: 120, seed: 65 },
+                alloc: AllocKind::Bipartite,
+                k: 6,
+                r: 2,
+                program: ProgramSpec::PageRank,
+                scheme: Scheme::CodedCombined,
+                iters: 3,
+            },
+        ]
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        for spec in specs() {
+            let line = spec.encode_line();
+            assert!(!line.contains('\n'));
+            let back = JobSpec::decode_line(&line).expect(&line);
+            assert_eq!(back, spec, "{line}");
+        }
+    }
+
+    #[test]
+    fn floats_roundtrip_exactly() {
+        // shortest-roundtrip Display: awkward decimals survive the line
+        let spec = JobSpec {
+            graph: GraphSpec { kind: GraphKind::Er { p: 0.1 + 0.2 }, n: 10, seed: 3 },
+            alloc: AllocKind::Er,
+            k: 2,
+            r: 2,
+            program: ProgramSpec::PageRank,
+            scheme: Scheme::Coded,
+            iters: 1,
+        };
+        let back = JobSpec::decode_line(&spec.encode_line()).unwrap();
+        match (back.graph.kind, spec.graph.kind) {
+            (GraphKind::Er { p: a }, GraphKind::Er { p: b }) => {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn materialize_matches_direct_construction() {
+        let all = specs();
+        let spec = &all[0];
+        let built = spec.materialize();
+        let direct = er::er(600, 0.1, &mut DetRng::seed(1));
+        assert_eq!(built.graph.n(), direct.n());
+        assert_eq!(built.graph.m(), direct.m());
+        for v in [0u32, 17, 599] {
+            assert_eq!(built.graph.neighbors(v), direct.neighbors(v));
+        }
+        assert_eq!(built.alloc.k, 4);
+        assert_eq!(built.alloc.r, 2);
+        assert_eq!(built.program.name(), PageRank::default().name());
+        let job = built.job();
+        assert_eq!(job.graph.n(), 600);
+    }
+
+    #[test]
+    fn decode_rejects_malformed() {
+        assert!(JobSpec::decode_line("").is_err());
+        assert!(JobSpec::decode_line("v2 graph=er").is_err());
+        assert!(JobSpec::decode_line("v1 graph=warp n=10").is_err());
+        let good = specs()[0].encode_line();
+        assert!(JobSpec::decode_line(&good.replace("scheme=coded", "scheme=x")).is_err());
+        assert!(JobSpec::decode_line(&good.replace(" n=600", "")).is_err());
+        assert!(JobSpec::decode_line(&good.replace("n=600", "n=sixhundred")).is_err());
+    }
+}

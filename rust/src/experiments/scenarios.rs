@@ -15,13 +15,17 @@
 //! preserved, only absolute seconds change.
 
 use crate::allocation::Allocation;
-use crate::coordinator::{run_rust, EngineConfig, Job, PhaseTimes, Scheme, TimeModel};
+use crate::coordinator::spec::{self, AllocKind, GraphSpec, JobSpec, ProgramSpec};
+use crate::coordinator::{
+    run_cluster_on, run_rust, EngineConfig, Job, JobReport, PhaseTimes, Scheme, TimeModel,
+};
 use crate::graph::csr::Csr;
 use crate::graph::er::er;
 use crate::graph::powerlaw::{pl, PlParams};
 use crate::graph::sbm::sbm;
 use crate::mapreduce::PageRank;
 use crate::network::BusConfig;
+use crate::transport::TransportKind;
 use crate::util::rng::DetRng;
 
 /// Graph family of a scenario.
@@ -142,6 +146,30 @@ pub fn scaled_testbed(sc: &Scenario, scale: usize) -> EngineConfig {
     cfg
 }
 
+/// Which executor runs a scenario's rows.
+#[derive(Clone, Copy, Debug)]
+pub enum ScenarioDriver {
+    /// The deterministic phase engine (fast; what the benches use).
+    Engine,
+    /// The leader/worker cluster driver in one process over the given
+    /// transport backend — same modeled metrics (bit-identical to the
+    /// engine), plus a real wire under the Shuffle. Multi-*process*
+    /// scenario runs go through the CLI (`scenario --driver processes`),
+    /// which feeds [`job_spec`] to spawned `coded-graph worker`s.
+    Cluster(TransportKind),
+}
+
+/// The allocation + scheme a scenario uses at replication `r` (`r = 1`
+/// is the naive `M_k = R_k` uncoded baseline; SBM scenarios get the
+/// Appendix-C composite allocation — Theorem 3's regime). Derived from
+/// [`job_spec`] so the in-process drivers and the multi-process path
+/// cannot encode divergent rules; `n` overrides the scenario's size for
+/// callers that pass an externally built graph.
+fn alloc_for(sc: &Scenario, n: usize, r: usize) -> (Allocation, Scheme) {
+    let spec = job_spec(&Scenario { n, ..*sc }, r, 0, 1);
+    (spec.build_alloc(), spec.scheme)
+}
+
 /// Run a scenario: `r = 1` naive baseline + coded at `r = 2..=r_max`,
 /// on the paper's testbed config.
 pub fn run_scenario(sc: &Scenario, seed: u64) -> Vec<ScenarioRow> {
@@ -149,38 +177,87 @@ pub fn run_scenario(sc: &Scenario, seed: u64) -> Vec<ScenarioRow> {
     run_scenario_on(&g, sc, &testbed())
 }
 
-/// Run the r-sweep on a pre-built graph under a given testbed config.
+/// Run the r-sweep on a pre-built graph under a given testbed config
+/// (engine driver; see [`run_scenario_with`] for driver selection).
 pub fn run_scenario_on(g: &Csr, sc: &Scenario, base: &EngineConfig) -> Vec<ScenarioRow> {
+    run_scenario_with(g, sc, base, ScenarioDriver::Engine)
+}
+
+/// Run the r-sweep on a pre-built graph with a selectable driver. The
+/// modeled rows (times, loads) are identical across drivers — the
+/// cluster drivers replay the same prepared plan — so driver choice only
+/// changes what physically carries the Shuffle bytes (and `wall_s`).
+pub fn run_scenario_with(
+    g: &Csr,
+    sc: &Scenario,
+    base: &EngineConfig,
+    driver: ScenarioDriver,
+) -> Vec<ScenarioRow> {
     let prog = PageRank::default();
     let mut rows = Vec::new();
     for r in 1..=sc.r_max.min(sc.k) {
-        let (alloc, scheme) = if r == 1 {
-            (Allocation::single(g.n(), sc.k), Scheme::Uncoded)
-        } else {
-            let alloc = match sc.kind {
-                // the Appendix-C composite allocation exploits the
-                // two-cluster structure (Theorem 3's regime)
-                GraphKind::Sbm { .. } => {
-                    Allocation::sbm_scheme(g.n() / 2, g.n() - g.n() / 2, sc.k, r)
-                }
-                _ => Allocation::er_scheme(g.n(), sc.k, r),
-            };
-            (alloc, Scheme::Coded)
-        };
+        let (alloc, scheme) = alloc_for(sc, g.n(), r);
         let cfg = EngineConfig { scheme, ..*base };
         let job = Job { graph: g, alloc: &alloc, program: &prog };
-        let report = run_rust(&job, &cfg, 1);
-        let m = &report.iterations[0];
-        rows.push(ScenarioRow {
-            r,
-            scheme,
-            times: m.times,
-            total_s: m.times.total(),
-            load: m.shuffle.normalized(g.n()),
-            wall_s: m.wall_s,
-        });
+        let report = match driver {
+            ScenarioDriver::Engine => run_rust(&job, &cfg, 1),
+            ScenarioDriver::Cluster(kind) => run_cluster_on(&job, &cfg, 1, kind),
+        };
+        rows.push(row_from_report(r, scheme, &report, g.n()));
     }
     rows
+}
+
+/// Assemble one sweep row from a driver's single-iteration report (the
+/// one constructor every driver — engine, threaded cluster, and the
+/// CLI's multi-process path — shares, so the row shape cannot drift).
+pub fn row_from_report(r: usize, scheme: Scheme, report: &JobReport, n: usize) -> ScenarioRow {
+    let m = &report.iterations[0];
+    ScenarioRow {
+        r,
+        scheme,
+        times: m.times,
+        total_s: m.times.total(),
+        load: m.shuffle.normalized(n),
+        wall_s: m.wall_s,
+    }
+}
+
+/// Generate the graph and run the scale-corrected testbed sweep over the
+/// in-process cluster driver (the CLI's `--driver cluster-*` path).
+pub fn run_scenario_cluster_scaled(
+    sc: &Scenario,
+    seed: u64,
+    scale: usize,
+    kind: TransportKind,
+) -> Vec<ScenarioRow> {
+    let g = build_graph(sc, seed);
+    run_scenario_with(&g, sc, &scaled_testbed(sc, scale), ScenarioDriver::Cluster(kind))
+}
+
+/// The [`JobSpec`] for scenario `sc` at replication `r` — what the
+/// multi-process driver ships to `coded-graph worker` processes. Builds
+/// the *same* graph and allocation as [`run_scenario_with`]'s rows
+/// (generators are deterministic in `seed`).
+pub fn job_spec(sc: &Scenario, r: usize, seed: u64, iters: usize) -> JobSpec {
+    let (kind, alloc) = match sc.kind {
+        GraphKind::Er { p } => (spec::GraphKind::Er { p }, AllocKind::Er),
+        GraphKind::Pl { gamma, rho_scale } => {
+            (spec::GraphKind::Pl { gamma, rho_scale }, AllocKind::Er)
+        }
+        GraphKind::Sbm { p, q } => (spec::GraphKind::Sbm { p, q }, AllocKind::Sbm),
+    };
+    let (alloc, scheme) =
+        if r == 1 { (AllocKind::Single, Scheme::Uncoded) } else { (alloc, Scheme::Coded) };
+    JobSpec {
+        graph: GraphSpec { kind, n: sc.n, seed },
+        alloc,
+        k: sc.k,
+        r,
+        program: ProgramSpec::PageRank,
+        scheme,
+        iters,
+    }
 }
 
 /// Convenience: generate the graph and run under the scale-corrected
@@ -274,6 +351,42 @@ mod tests {
         let (best_r, speedup) = speedup_over_naive(&rows);
         assert!(best_r > 1, "coding should win");
         assert!(speedup > 0.1, "speedup {speedup}");
+    }
+
+    #[test]
+    fn cluster_driver_rows_match_engine_rows() {
+        // modeled metrics are driver-independent: the cluster replays the
+        // same prepared plan the engine does, bit-identically
+        let sc = scenario(2, 20); // n = 630, K = 10
+        let g = build_graph(&sc, 7);
+        let base = scaled_testbed(&sc, 20);
+        let en = run_scenario_with(&g, &sc, &base, ScenarioDriver::Engine);
+        let cl = run_scenario_with(&g, &sc, &base, ScenarioDriver::Cluster(TransportKind::InProc));
+        assert_eq!(en.len(), cl.len());
+        for (a, b) in en.iter().zip(&cl) {
+            assert_eq!(a.r, b.r);
+            assert_eq!(a.scheme, b.scheme);
+            assert_eq!(a.times.map_s, b.times.map_s);
+            assert_eq!(a.times.shuffle_s, b.times.shuffle_s);
+            assert_eq!(a.load, b.load);
+            assert_eq!(a.total_s, b.total_s);
+        }
+    }
+
+    #[test]
+    fn scenario_job_specs_roundtrip_and_match() {
+        let sc = scenario(4, 8);
+        let spec = job_spec(&sc, 3, 13, 2);
+        assert_eq!(spec, JobSpec::decode_line(&spec.encode_line()).unwrap());
+        let built = spec.materialize();
+        let direct = build_graph(&sc, 13);
+        assert_eq!(built.graph.n(), direct.n());
+        assert_eq!(built.graph.m(), direct.m());
+        assert_eq!((built.alloc.k, built.alloc.r), (sc.k, 3));
+        // r = 1 falls back to the naive single allocation + uncoded shuffle
+        let naive = job_spec(&sc, 1, 13, 2);
+        assert_eq!(naive.alloc, AllocKind::Single);
+        assert_eq!(naive.scheme, Scheme::Uncoded);
     }
 
     #[test]

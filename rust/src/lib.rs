@@ -21,7 +21,7 @@
 //! * **L1 (python/compile/kernels/, build-time)** — Pallas kernels (masked
 //!   SpMV, tropical min-plus, XOR fold) called from L2.
 //!
-//! L2+L1 are lowered once (`make artifacts`) to HLO text; [`runtime`] loads
+//! L2+L1 are lowered once (`make artifacts`) to HLO text; `runtime` loads
 //! and executes them through the PJRT C API (`xla` crate). Python is never
 //! on the request path.
 //!
@@ -35,8 +35,8 @@
 //! | [`mapreduce`] | vertex-program abstraction; PageRank and SSSP programs |
 //! | [`shuffle`] | uncoded unicast scheme + the paper's coded scheme; flat-arena [`shuffle::ShufflePlan`] + slice encode/decode kernels |
 //! | [`network`] | shared-bus wire-time model (one transmitter at a time) |
-//! | [`transport`] | wire-format frames + pluggable backends (in-proc rings, localhost TCP) for the cluster driver |
-//! | [`coordinator`] | phase engine (reusable [`coordinator::EngineScratch`], zero-alloc steady state, rayon-parallel phases) + transport-backed cluster driver, metrics |
+//! | [`transport`] | wire-format frames + pluggable backends (in-proc rings, localhost TCP mesh, process-separated endpoints) + the bootstrap rendezvous |
+//! | [`coordinator`] | phase engine (reusable [`coordinator::EngineScratch`], zero-alloc steady state, rayon-parallel phases) + transport-backed cluster driver, serializable job specs, metrics |
 //! | `runtime` | PJRT artifact loading / execution (AOT JAX+Pallas; `xla` feature) |
 //! | [`analysis`] | closed forms of Theorems 1–4, Lemma 3 bound, stats helpers |
 //! | [`util`] | deterministic RNG, JSON, bench/test kits, [`util::par`] parallelism shim |
@@ -61,9 +61,14 @@
 //! [`transport`] layer serializes every coded multicast and uncoded
 //! unicast batch into a flat wire [`transport::Frame`] (whose length is
 //! exactly the bytes the load accounting charges) and moves it over
-//! bounded in-process rings or a localhost TCP mesh — final states stay
-//! bit-identical to the engine, and the driver asserts modeled wire
-//! bytes against the bytes the transport actually carried.
+//! bounded in-process rings, a localhost TCP mesh, or — after the
+//! [`transport::bootstrap`] rendezvous distributes listener addresses
+//! and a serialized [`coordinator::spec::JobSpec`] — one
+//! [`transport::TcpEndpoint`] per separate OS process (`coded-graph
+//! cluster --transport tcp --processes`). Final states stay
+//! bit-identical to the engine in every deployment, and the driver
+//! asserts modeled wire bytes against the bytes the transport actually
+//! carried (per-worker `SendDone` tallies across process boundaries).
 
 pub mod allocation;
 pub mod analysis;

@@ -3,13 +3,15 @@
 //! ```text
 //! coded-graph fig5      [--n 300] [--p 0.1] [--k 5] [--trials 20] [--seed 2018]
 //! coded-graph scenario  --id 1|2|3|4 [--scale S] [--full] [--seed 7]
+//!                       [--driver engine|cluster-inproc|cluster-tcp|processes]
 //! coded-graph models    [--n 400] [--k 6] [--trials 8]
 //! coded-graph run       --graph er|rb|sbm|pl --n N --k K --r R
 //!                       [--p P] [--q Q] [--gamma G] [--program pagerank|sssp]
 //!                       [--scheme coded|uncoded] [--iters I] [--cluster]
 //! coded-graph cluster   --graph er|rb|sbm|pl --n N --k K --r R
-//!                       [--transport inproc|tcp] [--program ...] [--scheme ...]
-//!                       [--iters I]
+//!                       [--transport inproc|tcp] [--processes] [--no-spawn]
+//!                       [--check] [--program ...] [--scheme ...] [--iters I]
+//! coded-graph worker    --connect ADDR --id K [--timeout-s 60]
 //! coded-graph inspect   --graph er|rb|sbm|pl --n N [--p P] [--q Q] [--gamma G]
 //! coded-graph artifacts [--dir artifacts]
 //! ```
@@ -17,19 +19,32 @@
 //! Every experiment harness lives in `coded_graph::experiments`; the CLI is
 //! a thin printer. `cargo bench` regenerates the paper's figures through
 //! the same harnesses.
+//!
+//! `cluster --transport tcp --processes` runs the cluster as real
+//! separate OS processes: the leader binds a rendezvous socket, spawns
+//! `K` children of this same binary in `worker` mode, distributes the
+//! roster + job spec through the bootstrap protocol
+//! (`transport::bootstrap`), and drives the unchanged frame protocol
+//! across process boundaries. With `--no-spawn` the leader spawns
+//! nothing and instead waits (default 600 s) for `K` hand-started
+//! `worker` processes to dial the printed rendezvous address.
+
+use std::net::TcpListener;
+use std::time::Duration;
 
 use coded_graph::allocation::Allocation;
 use coded_graph::analysis::theory;
+use coded_graph::coordinator::cluster::{leader_ring_capacity, worker_ring_capacity};
 use coded_graph::coordinator::{
-    run_cluster, run_cluster_on, run_rust, EngineConfig, Job, JobReport, Scheme,
+    prepare, run_cluster, run_cluster_on, run_leader, run_rust, run_worker, AllocKind, BuiltJob,
+    EngineConfig, GraphKind, GraphSpec, Job, JobReport, JobSpec, ProgramSpec, Scheme,
 };
 use coded_graph::experiments::{fig5, models, scenarios};
-use coded_graph::graph::{bipartite, er, powerlaw, properties, sbm};
-use coded_graph::mapreduce::{ConnectedComponents, PageRank, Sssp, VertexProgram};
-use coded_graph::transport::TransportKind;
+use coded_graph::graph::properties;
+use coded_graph::mapreduce::VertexProgram;
+use coded_graph::transport::{bootstrap, TcpEndpoint, TransportKind};
 use coded_graph::util::benchkit::Table;
 use coded_graph::util::cli::Args;
-use coded_graph::util::rng::DetRng;
 use coded_graph::Csr;
 
 fn main() {
@@ -47,6 +62,7 @@ fn main() {
         Some("models") => cmd_models(&args),
         Some("run") => cmd_run(&args),
         Some("cluster") => cmd_cluster(&args),
+        Some("worker") => cmd_worker(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("artifacts") => cmd_artifacts(&args),
         _ => {
@@ -68,7 +84,9 @@ fn usage() {
     println!("  scenario   EC2 PageRank scenarios 1-4 (paper Fig 2 / Fig 7 + SBM)");
     println!("  models     Theorem 1-4 validation sweeps across graph models");
     println!("  run        run one distributed job (pagerank / sssp)");
-    println!("  cluster    run a job on the leader/worker cluster (--transport inproc|tcp)");
+    println!("  cluster    run a job on the leader/worker cluster (--transport inproc|tcp,");
+    println!("             --processes spawns real worker processes, --check vs the engine)");
+    println!("  worker     join a --processes cluster (--connect <rendezvous addr> --id <k>)");
     println!("  inspect    generate a graph and print its statistics");
     println!("  artifacts  list the AOT artifacts and smoke-run one");
 }
@@ -106,13 +124,31 @@ fn cmd_fig5(args: &Args) -> Result<(), String> {
 }
 
 fn cmd_scenario(args: &Args) -> Result<(), String> {
-    args.check_known(&["id", "scale", "full", "seed"])?;
+    args.check_known(&["id", "scale", "full", "seed", "driver", "timeout-s"])?;
     let id = args.get_or("id", 2usize)?;
     let scale = if args.has("full") { 1 } else { args.get_or("scale", 6usize)? };
     let seed = args.get_or("seed", 7u64)?;
     let sc = scenarios::scenario(id, scale);
-    println!("Scenario {id}: {} (n={}, K={})\n", sc.name, sc.n, sc.k);
-    let rows = scenarios::run_scenario_scaled(&sc, seed, scale);
+    let driver = args.get("driver").unwrap_or("engine");
+    println!("Scenario {id}: {} (n={}, K={}, driver={driver})\n", sc.name, sc.n, sc.k);
+    let rows = match driver {
+        "engine" => scenarios::run_scenario_scaled(&sc, seed, scale),
+        "cluster-inproc" => {
+            scenarios::run_scenario_cluster_scaled(&sc, seed, scale, TransportKind::InProc)
+        }
+        "cluster-tcp" => {
+            scenarios::run_scenario_cluster_scaled(&sc, seed, scale, TransportKind::Tcp)
+        }
+        "processes" => {
+            let timeout = Duration::from_secs(args.get_or("timeout-s", 120u64)?);
+            scenario_rows_processes(&sc, seed, scale, timeout)?
+        }
+        other => {
+            return Err(format!(
+                "unknown driver {other:?} (engine|cluster-inproc|cluster-tcp|processes)"
+            ))
+        }
+    };
     print_scenario_rows(&rows);
     let (best_r, speedup) = scenarios::speedup_over_naive(&rows);
     let naive = rows.iter().find(|r| r.r == 1).unwrap();
@@ -126,6 +162,32 @@ fn cmd_scenario(args: &Args) -> Result<(), String> {
     );
     println!("Remark 10 heuristic r* = sqrt(T_shuffle/T_map) = {rs:.2}");
     Ok(())
+}
+
+/// The scenario r-sweep with every row executed as a real multi-process
+/// cluster: one bootstrap + spawn cycle per `r`, same rows as the engine
+/// driver (modeled metrics are driver-independent).
+fn scenario_rows_processes(
+    sc: &scenarios::Scenario,
+    seed: u64,
+    scale: usize,
+    timeout: Duration,
+) -> Result<Vec<scenarios::ScenarioRow>, String> {
+    let base = scenarios::scaled_testbed(sc, scale);
+    // the graph is identical for every r (only allocation and scheme
+    // vary with r): generate it once and move it through each round's
+    // BuiltJob instead of regenerating per row
+    let mut graph = scenarios::job_spec(sc, 1, seed, 1).graph.build();
+    let mut rows = Vec::new();
+    for r in 1..=sc.r_max.min(sc.k) {
+        let spec = scenarios::job_spec(sc, r, seed, 1);
+        let cfg = EngineConfig { scheme: spec.scheme, ..base };
+        let built = BuiltJob { graph, alloc: spec.build_alloc(), program: spec.program.build() };
+        let report = run_processes(&spec, &built, &cfg, timeout, true)?;
+        rows.push(scenarios::row_from_report(r, spec.scheme, &report, built.graph.n()));
+        graph = built.graph;
+    }
+    Ok(rows)
 }
 
 fn print_scenario_rows(rows: &[scenarios::ScenarioRow]) {
@@ -178,50 +240,45 @@ fn cmd_models(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn build_graph(args: &Args) -> Result<Csr, String> {
+/// The graph recipe named by `--graph`/`--n`/`--seed` + family params —
+/// one construction path shared with worker processes (which decode the
+/// same [`GraphSpec`] from the bootstrap job line), so leader and
+/// workers cannot drift.
+fn graph_spec(args: &Args) -> Result<GraphSpec, String> {
     let n = args.get_or("n", 1000usize)?;
     let seed = args.get_or("seed", 1u64)?;
-    let mut rng = DetRng::seed(seed);
-    match args.get("graph").unwrap_or("er") {
-        "er" => Ok(er::er(n, args.get_or("p", 0.1f64)?, &mut rng)),
-        "rb" => Ok(bipartite::rb(n / 2, n - n / 2, args.get_or("q", 0.05f64)?, &mut rng)),
-        "sbm" => Ok(sbm::sbm(
-            n / 2,
-            n - n / 2,
-            args.get_or("p", 0.2f64)?,
-            args.get_or("q", 0.05f64)?,
-            &mut rng,
-        )),
-        "pl" => Ok(powerlaw::pl(
-            n,
-            powerlaw::PlParams {
-                gamma: args.get_or("gamma", 2.3f64)?,
-                max_degree: 100_000,
-                rho_scale: args.get_or("rho-scale", 1.0f64)?,
-            },
-            &mut rng,
-        )),
-        other => Err(format!("unknown graph model {other:?}")),
-    }
+    let kind = match args.get("graph").unwrap_or("er") {
+        "er" => GraphKind::Er { p: args.get_or("p", 0.1f64)? },
+        "rb" => GraphKind::Rb { q: args.get_or("q", 0.05f64)? },
+        "sbm" => GraphKind::Sbm { p: args.get_or("p", 0.2f64)?, q: args.get_or("q", 0.05f64)? },
+        "pl" => GraphKind::Pl {
+            gamma: args.get_or("gamma", 2.3f64)?,
+            rho_scale: args.get_or("rho-scale", 1.0f64)?,
+        },
+        other => return Err(format!("unknown graph model {other:?}")),
+    };
+    Ok(GraphSpec { kind, n, seed })
+}
+
+fn build_graph(args: &Args) -> Result<Csr, String> {
+    Ok(graph_spec(args)?.build())
 }
 
 fn parse_scheme(args: &Args) -> Result<Scheme, String> {
-    match args.get("scheme").unwrap_or("coded") {
-        "coded" => Ok(Scheme::Coded),
-        "uncoded" => Ok(Scheme::Uncoded),
-        "coded-combined" => Ok(Scheme::CodedCombined),
-        "uncoded-combined" => Ok(Scheme::UncodedCombined),
-        other => Err(format!("unknown scheme {other:?}")),
-    }
+    args.get("scheme").unwrap_or("coded").parse()
+}
+
+fn program_spec(args: &Args) -> Result<ProgramSpec, String> {
+    Ok(match args.get("program").unwrap_or("pagerank") {
+        "pagerank" => ProgramSpec::PageRank,
+        "sssp" => ProgramSpec::Sssp { source: args.get_or("source", 0u32)? },
+        "cc" => ProgramSpec::Cc,
+        other => return Err(format!("unknown program {other:?}")),
+    })
 }
 
 fn parse_program(args: &Args) -> Result<Box<dyn VertexProgram>, String> {
-    Ok(match args.get("program").unwrap_or("pagerank") {
-        "pagerank" => Box::new(PageRank::default()),
-        "sssp" => Box::new(Sssp::hashed(args.get_or("source", 0u32)?)),
-        "cc" => Box::new(ConnectedComponents),
-        other => return Err(format!("unknown program {other:?}")),
-    })
+    Ok(program_spec(args)?.build())
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -280,29 +337,216 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// The full [`JobSpec`] named by a `cluster` invocation's arguments.
+fn cluster_job_spec(args: &Args) -> Result<JobSpec, String> {
+    Ok(JobSpec {
+        graph: graph_spec(args)?,
+        alloc: AllocKind::Er,
+        k: args.get_or("k", 5usize)?,
+        r: args.get_or("r", 2usize)?,
+        program: program_spec(args)?,
+        scheme: parse_scheme(args)?,
+        iters: args.get_or("iters", 3usize)?,
+    })
+}
+
 fn cmd_cluster(args: &Args) -> Result<(), String> {
     args.check_known(&[
         "graph", "n", "k", "r", "p", "q", "gamma", "rho-scale", "seed", "program", "scheme", "iters",
-        "transport", "source",
+        "transport", "source", "processes", "check", "timeout-s", "no-spawn",
     ])?;
-    let g = build_graph(args)?;
-    let k = args.get_or("k", 5usize)?;
-    let r = args.get_or("r", 2usize)?;
-    let iters = args.get_or("iters", 3usize)?;
-    let scheme = parse_scheme(args)?;
-    let transport: TransportKind = args
-        .get("transport")
-        .unwrap_or("inproc")
-        .parse()?;
-    let alloc = Allocation::er_scheme(g.n(), k, r);
-    let program = parse_program(args)?;
-    let cfg = EngineConfig { scheme, ..Default::default() };
-    let job = Job { graph: &g, alloc: &alloc, program: &*program };
-    println!("driver: cluster over {transport} ({k} workers + leader)");
-    let report = run_cluster_on(&job, &cfg, iters, transport);
-    print_job_summary(&report, &*program, &g, k, r, scheme, iters);
+    let spec = cluster_job_spec(args)?;
+    let transport: TransportKind = args.get("transport").unwrap_or("inproc").parse()?;
+    let processes = args.has("processes") || args.has("no-spawn");
+    if processes && transport != TransportKind::Tcp {
+        return Err("--processes requires --transport tcp".into());
+    }
+    let cfg = EngineConfig { scheme: spec.scheme, ..Default::default() };
+    let built = spec.materialize();
+    let (k, r) = (spec.k, spec.r);
+
+    let report = if processes {
+        let spawn = !args.has("no-spawn");
+        let default_timeout = if spawn { 60 } else { 600 };
+        let timeout = Duration::from_secs(args.get_or("timeout-s", default_timeout)?);
+        if spawn {
+            println!("driver: process-separated cluster over tcp ({k} worker processes + leader)");
+        } else {
+            println!(
+                "driver: process-separated cluster over tcp; waiting for {k} external workers"
+            );
+        }
+        run_processes(&spec, &built, &cfg, timeout, spawn)?
+    } else {
+        println!("driver: cluster over {transport} ({k} workers + leader)");
+        run_cluster_on(&built.job(), &cfg, spec.iters, transport)
+    };
+
+    print_job_summary(&report, &*built.program, &built.graph, k, r, spec.scheme, spec.iters);
     let wall: f64 = report.iterations.iter().map(|m| m.wall_s).sum();
     println!("real wall time across iterations: {wall:.3}s");
+    if args.has("check") {
+        let want = run_rust(&built.job(), &cfg, spec.iters);
+        for (i, (a, b)) in report.final_state.iter().zip(&want.final_state).enumerate() {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("--check: state {i} diverges from the engine: {a} vs {b}"));
+            }
+        }
+        println!("--check: final states bit-identical to engine::run_rust");
+    }
+    Ok(())
+}
+
+/// Spawned worker processes, killed on drop so no child outlives a
+/// failed leader.
+struct Children(Vec<std::process::Child>);
+
+impl Children {
+    fn kill_all(&mut self) {
+        for c in &mut self.0 {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+        self.0.clear();
+    }
+
+    /// Collect every child's exit status (they exit on their own after
+    /// the leader's Stop); whoever is still running past the deadline is
+    /// killed and reported.
+    fn reap(&mut self, timeout: Duration) -> Result<(), String> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut failed = Vec::new();
+        for (i, c) in self.0.iter_mut().enumerate() {
+            loop {
+                match c.try_wait() {
+                    Ok(Some(st)) if st.success() => break,
+                    Ok(Some(st)) => {
+                        failed.push(format!("worker {i} exited with {st}"));
+                        break;
+                    }
+                    Ok(None) if std::time::Instant::now() < deadline => {
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    Ok(None) => {
+                        let _ = c.kill();
+                        let _ = c.wait();
+                        failed.push(format!("worker {i} did not exit in time; killed"));
+                        break;
+                    }
+                    Err(e) => {
+                        failed.push(format!("worker {i} wait failed: {e}"));
+                        break;
+                    }
+                }
+            }
+        }
+        self.0.clear();
+        if failed.is_empty() {
+            Ok(())
+        } else {
+            Err(failed.join("; "))
+        }
+    }
+}
+
+impl Drop for Children {
+    fn drop(&mut self) {
+        self.kill_all();
+    }
+}
+
+/// Run one job as a process-separated cluster: bind the rendezvous +
+/// leader data listeners, spawn `K` children of this binary in `worker`
+/// mode, bootstrap the roster, wire the leader's own [`TcpEndpoint`],
+/// and drive the unchanged frame protocol across process boundaries. A
+/// leader-side panic (worker death, protocol violation) tears the mesh
+/// down, kills the remaining children, and surfaces as an error.
+fn run_processes(
+    spec: &JobSpec,
+    built: &BuiltJob,
+    cfg: &EngineConfig,
+    timeout: Duration,
+    spawn: bool,
+) -> Result<JobReport, String> {
+    let job = built.job();
+    let prep = prepare(&job, cfg.scheme);
+
+    let rendezvous = TcpListener::bind("127.0.0.1:0").map_err(|e| e.to_string())?;
+    let rv_addr = rendezvous.local_addr().map_err(|e| e.to_string())?;
+    let data_listener = TcpListener::bind("127.0.0.1:0").map_err(|e| e.to_string())?;
+    let leader_addr = data_listener.local_addr().map_err(|e| e.to_string())?;
+    println!("rendezvous: {rv_addr}");
+
+    let mut children = Children(Vec::with_capacity(spec.k));
+    if spawn {
+        let exe = std::env::current_exe().map_err(|e| e.to_string())?;
+        for kk in 0..spec.k {
+            let child = std::process::Command::new(&exe)
+                .args(["worker", "--connect", &rv_addr.to_string(), "--id", &kk.to_string()])
+                .args(["--timeout-s", &timeout.as_secs().to_string()])
+                .spawn()
+                .map_err(|e| format!("spawn worker {kk}: {e}"))?;
+            children.0.push(child);
+        }
+    }
+
+    let roster = bootstrap::lead(&rendezvous, spec.k, leader_addr, &spec.encode_line(), timeout)
+        .map_err(|e| e.to_string())?;
+    let cap = leader_ring_capacity(spec.k);
+    let net = TcpEndpoint::wire(spec.k as u8, &data_listener, &roster, cap, timeout)
+        .map_err(|e| e.to_string())?;
+
+    let report = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        run_leader(&job, cfg, spec.iters, &prep, &net)
+    }))
+    .map_err(|p| {
+        let msg = p
+            .downcast_ref::<String>()
+            .map(String::as_str)
+            .or_else(|| p.downcast_ref::<&str>().copied())
+            .unwrap_or("panic");
+        format!("cluster run aborted: {msg}")
+    })?;
+    // clean end: run_leader's guard already half-closed our endpoint, so
+    // the workers drain their Stop frames and exit on their own
+    children.reap(timeout)?;
+    Ok(report)
+}
+
+fn cmd_worker(args: &Args) -> Result<(), String> {
+    args.check_known(&["connect", "id", "timeout-s"])?;
+    let rendezvous = args
+        .get("connect")
+        .ok_or("worker: --connect <rendezvous addr> is required")?
+        .parse()
+        .map_err(|e| format!("--connect: {e}"))?;
+    let id: u8 = args
+        .get("id")
+        .ok_or("worker: --id <k> is required")?
+        .parse()
+        .map_err(|_| "--id: expected a worker index".to_string())?;
+    let timeout = Duration::from_secs(args.get_or("timeout-s", 60u64)?);
+
+    let data_listener = TcpListener::bind("127.0.0.1:0").map_err(|e| e.to_string())?;
+    let data_addr = data_listener.local_addr().map_err(|e| e.to_string())?;
+    let (roster, job_line) =
+        bootstrap::join(rendezvous, id, data_addr, timeout).map_err(|e| e.to_string())?;
+    let spec = JobSpec::decode_line(&job_line)?;
+    if spec.k + 1 != roster.len() {
+        return Err(format!("job spec K={} does not match roster size {}", spec.k, roster.len()));
+    }
+
+    // rebuild the job deterministically from the spec (bit-identical to
+    // the leader's) and wire our endpoint into the mesh
+    let built = spec.materialize();
+    let job = built.job();
+    let prep = prepare(&job, spec.scheme);
+    let cap = worker_ring_capacity(&prep, id as usize);
+    let net = TcpEndpoint::wire(id, &data_listener, &roster, cap, timeout)
+        .map_err(|e| e.to_string())?;
+    // a peer failure panics out of run_worker; the guard inside aborts
+    // our endpoint and the nonzero exit is the leader's signal
+    run_worker(id, &job, &prep, &net);
     Ok(())
 }
 

@@ -17,8 +17,11 @@
 //!   [`ShufflePlan`](super::plan::ShufflePlan) arena layout; the engine's
 //!   zero-allocation hot path.
 //! * **Owned-message API** ([`encode_sender`], [`encode_group`],
-//!   [`CodedMessage`]) — allocates per message; used by the threaded
-//!   cluster driver (messages really travel through channels) and tests.
+//!   [`CodedMessage`]) — allocates per message; kept for the paper-example
+//!   and invariant tests. The cluster driver stopped exchanging owned
+//!   messages in the transport rewrite: workers now encode with the
+//!   single-sender arena kernels ([`eval_rows_except`],
+//!   [`encode_sender_into`]) straight into reusable wire-frame buffers.
 
 use super::plan::GroupRef;
 use super::segments::{seg_bytes, seg_of};
@@ -165,8 +168,10 @@ pub fn row_values<F: Fn(Vertex, Vertex) -> u64>(group: GroupRef<'_>, value: &F) 
 
 /// [`row_values`] with one row skipped (left empty). A *sender* cannot
 /// evaluate its own row — those are the IVs it is missing — and
-/// [`encode_sender`] never reads it; the threaded cluster driver uses this
-/// so each worker touches only state it owns.
+/// [`encode_sender`] never reads it; kept so tests can drive the
+/// owned-message encoder with only the state one worker owns (the
+/// cluster itself uses the arena-kernel equivalent,
+/// [`eval_rows_except`]).
 pub fn row_values_except<F: Fn(Vertex, Vertex) -> u64>(
     group: GroupRef<'_>,
     skip_idx: usize,

@@ -13,9 +13,11 @@
 //! with the plan's pair layout. The column values are XORs of masked
 //! segments (each `seg_of` output fits the segment mask), so shifting a
 //! whole column into its reassembly position distributes over the
-//! cancellation XORs — one pass, no temporary buffers. The owned-message
+//! cancellation XORs — one pass, no temporary buffers.
+//! [`decode_sender_into`] is the cluster workers' per-sender sibling,
+//! fed directly from received transport-frame columns. The owned-message
 //! API ([`decode_from_sender`], [`recover_group`]) remains for the
-//! threaded cluster driver and tests.
+//! paper-example and invariant tests.
 
 use super::coded::{segment_index, CodedMessage};
 use super::plan::GroupRef;

@@ -1,0 +1,419 @@
+//! The bootstrap rendezvous: how separate OS processes become one TCP
+//! mesh.
+//!
+//! The paper's testbed (§VI) runs leader and workers on separate EC2
+//! machines; the only thing the in-process [`TcpNet`](super::TcpNet)
+//! mesh was missing to do the same is an out-of-band channel that
+//! distributes every endpoint's data-listener address before wiring
+//! begins. This module is that channel:
+//!
+//! ```text
+//! worker k                                leader (rendezvous socket)
+//! --------                                --------------------------
+//! bind data listener (127.0.0.1:0)        bind data listener + rendezvous
+//! connect(rendezvous)          ────────►  accept
+//! "hello <k> <data_addr>\n"    ────────►  validate id (range, duplicate)
+//!                              ◄────────  "reject <reason>\n"  (invalid)
+//!        ... leader waits until all K workers have said hello ...
+//!                              ◄────────  "roster <n> <addr_0> ... <addr_{n-1}>\n"
+//!                              ◄────────  "job <spec line>\n"
+//! TcpEndpoint::wire(k, roster)            TcpEndpoint::wire(K, roster)
+//! ```
+//!
+//! The roster is indexed by endpoint id with the leader's own data
+//! address last (`n = K + 1`, leader `= K` — the same convention the
+//! cluster driver uses). Because every data listener is bound *before*
+//! its address is announced, the subsequent
+//! [`TcpEndpoint::wire`](super::TcpEndpoint::wire)
+//! dial-all-then-accept-all step is deadlock-free regardless of process
+//! start order: connects land in OS accept backlogs and wait there.
+//!
+//! The job spec rides along as one opaque line (see
+//! [`coordinator::spec`](crate::coordinator::spec)) so a worker process
+//! can rebuild the exact graph, allocation, program, and shuffle plan
+//! deterministically instead of shipping megabytes of CSR over the
+//! rendezvous socket.
+//!
+//! Failure paths: a `hello` with an out-of-range or duplicate id gets a
+//! `reject` line and its connection dropped (the slot stays open for the
+//! real worker); a worker that never dials in makes [`lead`] return
+//! [`BootstrapError::Timeout`] once the deadline passes; a connection
+//! that dies or stalls mid-hello is dropped after a short grace (the
+//! rendezvous services hellos serially, so the grace also bounds how
+//! long a stray silent connection can delay the real workers queued
+//! behind it).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use super::time_left;
+
+/// Longest accepted protocol line (the roster for 17 endpoints is well
+/// under 500 bytes; anything bigger is a garbage peer).
+const MAX_LINE: usize = 8192;
+
+/// Why a bootstrap handshake failed.
+#[derive(Debug)]
+pub enum BootstrapError {
+    /// Socket-level failure (bind, connect, read, write).
+    Io(std::io::Error),
+    /// The leader's deadline passed with workers still missing.
+    Timeout { joined: usize, expected: usize },
+    /// The leader refused this worker's `hello` (bad or duplicate id).
+    Rejected(String),
+    /// A peer spoke something that is not the bootstrap protocol.
+    Protocol(String),
+}
+
+impl std::fmt::Display for BootstrapError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BootstrapError::Io(e) => write!(f, "bootstrap i/o: {e}"),
+            BootstrapError::Timeout { joined, expected } => {
+                write!(f, "bootstrap timeout: only {joined}/{expected} workers dialed in")
+            }
+            BootstrapError::Rejected(msg) => write!(f, "bootstrap rejected: {msg}"),
+            BootstrapError::Protocol(msg) => write!(f, "bootstrap protocol error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for BootstrapError {}
+
+impl From<std::io::Error> for BootstrapError {
+    fn from(e: std::io::Error) -> Self {
+        BootstrapError::Io(e)
+    }
+}
+
+fn timed_out(what: &str) -> BootstrapError {
+    BootstrapError::Io(std::io::Error::new(std::io::ErrorKind::TimedOut, what.to_string()))
+}
+
+/// Read one `\n`-terminated line, byte-at-a-time (the rendezvous
+/// exchanges a handful of tiny lines; buffering would only complicate
+/// things), giving up once `deadline` passes. The per-byte re-arm of
+/// the read timeout is what makes the deadline a bound on the *whole*
+/// line: a peer trickling one byte per timeout window cannot reset the
+/// clock. The trailing newline is stripped.
+fn read_line(s: &mut TcpStream, deadline: Instant) -> Result<String, BootstrapError> {
+    let mut line = Vec::new();
+    let mut byte = [0u8; 1];
+    loop {
+        let left = time_left(deadline).ok_or_else(|| timed_out("bootstrap line read"))?;
+        s.set_read_timeout(Some(left))?;
+        s.read_exact(&mut byte)?;
+        if byte[0] == b'\n' {
+            return String::from_utf8(line)
+                .map_err(|_| BootstrapError::Protocol("non-utf8 bootstrap line".into()));
+        }
+        line.push(byte[0]);
+        if line.len() > MAX_LINE {
+            return Err(BootstrapError::Protocol("bootstrap line too long".into()));
+        }
+    }
+}
+
+/// Longest a pending connection may sit silent mid-`hello` before the
+/// leader drops it and services the next one. Without this cap a single
+/// stalled stray connection would hold the (serial) rendezvous for the
+/// whole remaining deadline and starve the real workers behind it.
+const HELLO_GRACE: Duration = Duration::from_secs(2);
+
+/// Parse and validate one `hello` line against the current slot state.
+fn parse_hello(
+    line: &str,
+    k: usize,
+    taken: &[bool],
+) -> Result<(usize, SocketAddr), BootstrapError> {
+    let mut tok = line.split_whitespace();
+    let (verb, id, addr) = (tok.next(), tok.next(), tok.next());
+    if verb != Some("hello") || tok.next().is_some() {
+        return Err(BootstrapError::Protocol(format!("expected 'hello <id> <addr>': {line:?}")));
+    }
+    let id: usize = id
+        .and_then(|t| t.parse().ok())
+        .ok_or_else(|| BootstrapError::Protocol(format!("bad worker id in {line:?}")))?;
+    let addr: SocketAddr = addr
+        .and_then(|t| t.parse().ok())
+        .ok_or_else(|| BootstrapError::Protocol(format!("bad worker address in {line:?}")))?;
+    if id >= k {
+        return Err(BootstrapError::Rejected(format!(
+            "worker id {id} out of range for {k} workers"
+        )));
+    }
+    if taken[id] {
+        return Err(BootstrapError::Rejected(format!("duplicate worker id {id}")));
+    }
+    Ok((id, addr))
+}
+
+/// Leader side: collect `k` workers on the `rendezvous` listener within
+/// `timeout`, then send every one of them the full roster (worker data
+/// addresses indexed by id, the leader's `leader_addr` last) and the
+/// opaque `job_line`. Returns the roster, ready for
+/// [`TcpEndpoint::wire`](super::TcpEndpoint::wire).
+///
+/// Invalid `hello`s (unparseable, out-of-range id, duplicate id) are
+/// answered with a `reject` line and dropped — the slot stays open until
+/// the real worker dials in or the deadline passes.
+pub fn lead(
+    rendezvous: &TcpListener,
+    k: usize,
+    leader_addr: SocketAddr,
+    job_line: &str,
+    timeout: Duration,
+) -> Result<Vec<SocketAddr>, BootstrapError> {
+    assert!(k >= 1 && k <= u8::MAX as usize, "worker count {k} out of range");
+    assert!(!job_line.contains('\n'), "job spec must be a single bootstrap line");
+    let deadline = Instant::now() + timeout;
+    let mut conns: Vec<Option<TcpStream>> = (0..k).map(|_| None).collect();
+    let mut addrs: Vec<Option<SocketAddr>> = vec![None; k];
+    let mut taken = vec![false; k];
+    let mut joined = 0usize;
+
+    rendezvous.set_nonblocking(true)?;
+    let collected = (|| -> Result<(), BootstrapError> {
+        while joined < k {
+            let mut s = match rendezvous.accept() {
+                Ok((s, _)) => s,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if time_left(deadline).is_none() {
+                        return Err(BootstrapError::Timeout { joined, expected: k });
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                    continue;
+                }
+                Err(e) => return Err(e.into()),
+            };
+            // one worker's hello; a stalled, dead, or garbage connection
+            // is bounced without failing the whole rendezvous
+            let hello = (|s: &mut TcpStream| -> Result<(usize, SocketAddr), BootstrapError> {
+                s.set_nonblocking(false)?;
+                // cap this connection's whole hello at the grace window
+                // (or the overall deadline, whichever is sooner)
+                let grace = deadline.min(Instant::now() + HELLO_GRACE);
+                parse_hello(&read_line(s, grace)?, k, &taken)
+            })(&mut s);
+            match hello {
+                Ok((id, addr)) => {
+                    conns[id] = Some(s);
+                    addrs[id] = Some(addr);
+                    taken[id] = true;
+                    joined += 1;
+                }
+                Err(BootstrapError::Rejected(msg) | BootstrapError::Protocol(msg)) => {
+                    let _ = s.write_all(format!("reject {msg}\n").as_bytes());
+                    // connection dropped; keep waiting for the real worker
+                }
+                Err(_) => {} // dead connection mid-hello: drop, keep waiting
+            }
+        }
+        Ok(())
+    })();
+    let _ = rendezvous.set_nonblocking(false);
+    collected?;
+
+    let mut roster: Vec<SocketAddr> = addrs.into_iter().map(Option::unwrap).collect();
+    roster.push(leader_addr);
+    let mut roster_line = format!("roster {}", roster.len());
+    for a in &roster {
+        roster_line.push(' ');
+        roster_line.push_str(&a.to_string());
+    }
+    roster_line.push('\n');
+    for s in conns.iter_mut().map(|c| c.as_mut().unwrap()) {
+        s.write_all(roster_line.as_bytes())?;
+        s.write_all(format!("job {job_line}\n").as_bytes())?;
+    }
+    Ok(roster)
+}
+
+/// Worker side: dial the `rendezvous` address (retrying while the leader
+/// is not up yet, so start order does not matter), announce
+/// `(id, data_addr)`, and block for the roster + job line. `data_addr`
+/// must already be bound — peers dial it as soon as they get the roster.
+pub fn join(
+    rendezvous: SocketAddr,
+    id: u8,
+    data_addr: SocketAddr,
+    timeout: Duration,
+) -> Result<(Vec<SocketAddr>, String), BootstrapError> {
+    let deadline = Instant::now() + timeout;
+    let mut s = loop {
+        match TcpStream::connect(rendezvous) {
+            Ok(s) => break s,
+            Err(e) => match time_left(deadline) {
+                Some(_) if e.kind() == std::io::ErrorKind::ConnectionRefused => {
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+                _ => return Err(e.into()),
+            },
+        }
+    };
+    s.set_nodelay(true)?;
+    s.write_all(format!("hello {id} {data_addr}\n").as_bytes())?;
+
+    let line = read_line(&mut s, deadline)?;
+    if let Some(msg) = line.strip_prefix("reject ") {
+        return Err(BootstrapError::Rejected(msg.to_string()));
+    }
+    let mut tok = line.split_whitespace();
+    if tok.next() != Some("roster") {
+        return Err(BootstrapError::Protocol(format!("expected roster line, got {line:?}")));
+    }
+    let n: usize = tok
+        .next()
+        .and_then(|t| t.parse().ok())
+        .ok_or_else(|| BootstrapError::Protocol(format!("bad roster count in {line:?}")))?;
+    let roster: Vec<SocketAddr> = tok
+        .map(|t| t.parse())
+        .collect::<Result<_, _>>()
+        .map_err(|e| BootstrapError::Protocol(format!("bad roster address: {e}")))?;
+    if roster.len() != n || (id as usize) >= n.saturating_sub(1) {
+        return Err(BootstrapError::Protocol(format!(
+            "roster of {} addresses does not fit 'roster {n}' with worker id {id}",
+            roster.len()
+        )));
+    }
+    if roster[id as usize] != data_addr {
+        return Err(BootstrapError::Protocol(format!(
+            "roster slot {id} holds {}, expected our listener {data_addr}",
+            roster[id as usize]
+        )));
+    }
+
+    let line = read_line(&mut s, deadline)?;
+    let job = line
+        .strip_prefix("job ")
+        .ok_or_else(|| BootstrapError::Protocol(format!("expected job line, got {line:?}")))?;
+    Ok((roster, job.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A generous test-side read deadline.
+    fn soon() -> Instant {
+        Instant::now() + Duration::from_secs(10)
+    }
+
+    fn local_listener() -> (TcpListener, SocketAddr) {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let a = l.local_addr().unwrap();
+        (l, a)
+    }
+
+    #[test]
+    fn rendezvous_roundtrip_two_workers() {
+        let (rendezvous, rv_addr) = local_listener();
+        let (_l0, a0) = local_listener();
+        let (_l1, a1) = local_listener();
+        let (_ll, leader_addr) = local_listener();
+        let job = "v1 graph=er n=60 p=0.2 seed=1 k=2 r=2 program=pagerank scheme=coded iters=2";
+
+        // workers join out of id order to prove the roster is id-indexed
+        let w1 = std::thread::spawn(move || {
+            join(rv_addr, 1, a1, Duration::from_secs(10)).expect("worker 1 join")
+        });
+        let w0 = std::thread::spawn(move || {
+            join(rv_addr, 0, a0, Duration::from_secs(10)).expect("worker 0 join")
+        });
+        let roster = lead(&rendezvous, 2, leader_addr, job, Duration::from_secs(10))
+            .expect("leader bootstrap");
+        assert_eq!(roster, vec![a0, a1, leader_addr]);
+
+        let (r1, j1) = w1.join().unwrap();
+        let (r0, j0) = w0.join().unwrap();
+        assert_eq!(r0, roster);
+        assert_eq!(r1, roster);
+        assert_eq!(j0, job);
+        assert_eq!(j1, job);
+    }
+
+    #[test]
+    fn out_of_range_and_duplicate_ids_are_rejected() {
+        let (rendezvous, rv_addr) = local_listener();
+        let (_l0, a0) = local_listener();
+        let (_l1, a1) = local_listener();
+        let (_ll, leader_addr) = local_listener();
+        let leader = std::thread::spawn(move || {
+            lead(&rendezvous, 2, leader_addr, "job", Duration::from_secs(10)).expect("lead")
+        });
+
+        // out-of-range id: bounced with a reason
+        let mut bad = TcpStream::connect(rv_addr).unwrap();
+        bad.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        bad.write_all(b"hello 9 127.0.0.1:19\n").unwrap();
+        let reply = read_line(&mut bad, soon()).unwrap();
+        assert!(reply.starts_with("reject ") && reply.contains("out of range"), "{reply}");
+
+        // two hellos for id 0: the first takes the slot (loopback accepts
+        // are FIFO in connect order), the second bounces as a duplicate
+        let mut first = TcpStream::connect(rv_addr).unwrap();
+        first.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        first.write_all(format!("hello 0 {a0}\n").as_bytes()).unwrap();
+        let mut dup = TcpStream::connect(rv_addr).unwrap();
+        dup.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        dup.write_all(format!("hello 0 {a0}\n").as_bytes()).unwrap();
+        let reply = read_line(&mut dup, soon()).unwrap();
+        assert!(reply.starts_with("reject ") && reply.contains("duplicate"), "{reply}");
+
+        // the real worker 1 completes the rendezvous for everyone
+        let (roster, job) = join(rv_addr, 1, a1, Duration::from_secs(10)).expect("worker 1");
+        assert_eq!(roster, vec![a0, a1, leader_addr]);
+        assert_eq!(job, "job");
+        assert_eq!(leader.join().unwrap(), roster);
+        // the slot winner received the same roster
+        let line = read_line(&mut first, soon()).unwrap();
+        assert_eq!(line, format!("roster 3 {a0} {a1} {leader_addr}"));
+    }
+
+    #[test]
+    fn stalled_connection_does_not_starve_the_rendezvous() {
+        let (rendezvous, rv_addr) = local_listener();
+        let (_l0, a0) = local_listener();
+        let (_ll, leader_addr) = local_listener();
+        let leader = std::thread::spawn(move || {
+            lead(&rendezvous, 1, leader_addr, "job", Duration::from_secs(30)).expect("lead")
+        });
+        // dials first but never says hello: must be dropped after the
+        // grace instead of holding the rendezvous for the full deadline
+        let _stall = TcpStream::connect(rv_addr).unwrap();
+        let (roster, _) = join(rv_addr, 0, a0, Duration::from_secs(30)).expect("real worker");
+        assert_eq!(roster, vec![a0, leader_addr]);
+        assert_eq!(leader.join().unwrap(), roster);
+    }
+
+    #[test]
+    fn lead_times_out_when_workers_never_dial() {
+        let (rendezvous, _) = local_listener();
+        let (_ll, leader_addr) = local_listener();
+        let t0 = Instant::now();
+        let err = lead(&rendezvous, 2, leader_addr, "job", Duration::from_millis(150))
+            .expect_err("must time out");
+        assert!(matches!(err, BootstrapError::Timeout { joined: 0, expected: 2 }), "{err}");
+        assert!(t0.elapsed() < Duration::from_secs(5), "timeout must be prompt");
+    }
+
+    #[test]
+    fn garbage_hello_is_bounced_without_poisoning_the_rendezvous() {
+        let (rendezvous, rv_addr) = local_listener();
+        let (_l0, a0) = local_listener();
+        let (_ll, leader_addr) = local_listener();
+        let leader = std::thread::spawn(move || {
+            lead(&rendezvous, 1, leader_addr, "job", Duration::from_secs(10)).expect("lead")
+        });
+        let mut noise = TcpStream::connect(rv_addr).unwrap();
+        noise.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        noise.write_all(b"GET / HTTP/1.1\n").unwrap();
+        let reply = read_line(&mut noise, soon()).unwrap();
+        assert!(reply.starts_with("reject "), "{reply}");
+
+        let (roster, _) = join(rv_addr, 0, a0, Duration::from_secs(10)).expect("real worker");
+        assert_eq!(roster, vec![a0, leader_addr]);
+        assert_eq!(leader.join().unwrap(), roster);
+    }
+}

@@ -33,6 +33,21 @@
 //! extended): once capacities are warm, the send path performs no heap
 //! allocation. Decoding is a zero-copy borrowed view ([`Frame`]) over
 //! the received buffer.
+//!
+//! ```
+//! use coded_graph::transport::frame::{self, Frame, FrameKind};
+//!
+//! // encode a 3-column coded multicast (4-byte segments), parse it
+//! // back, and confirm the serialized length is exactly what the load
+//! // accounting charges for it
+//! let mut buf = Vec::new();
+//! frame::encode_coded(&mut buf, 2, 7, &[0xAB, 0xCD, 0xEF], 4);
+//! assert_eq!(buf.len(), frame::coded_frame_len(3, 4));
+//!
+//! let f = Frame::parse(&buf).expect("well-formed frame");
+//! assert_eq!((f.kind, f.sender, f.index, f.count), (FrameKind::CodedData, 2, 7, 3));
+//! assert_eq!(f.col(1, 4), 0xCD);
+//! ```
 
 use crate::shuffle::load::HEADER_BYTES;
 
@@ -56,7 +71,11 @@ pub enum FrameKind {
     StartShuffle = 2,
     /// Leader → worker: all traffic routed, run Reduce.
     StartReduce = 3,
-    /// Worker → leader: finished emitting shuffle traffic.
+    /// Worker → leader: finished emitting shuffle traffic. Carries the
+    /// worker's per-iteration send tally (data frames in `index`, one
+    /// payload word of data bytes) so the leader can check the modeled
+    /// wire bytes even when the transport spans process boundaries and
+    /// no shared counter exists.
     SendDone = 4,
     /// Worker → leader: fresh reduce-set states (payload), validated-IV
     /// count (index).
@@ -241,6 +260,17 @@ pub fn encode_control(buf: &mut Vec<u8>, kind: FrameKind, sender: u8) {
     header_into(buf, kind, sender, 0, 0, 0);
 }
 
+/// Encode a worker's `SendDone` barrier frame with its per-iteration
+/// data-send tally: `frames` rides in the index field, `bytes` as the
+/// single payload word. The leader sums these across workers and asserts
+/// the total against `ShuffleLoad::wire_bytes_with_headers()` — the
+/// cross-check that still works when every endpoint lives in its own
+/// process and only sees its own counters.
+pub fn encode_send_done(buf: &mut Vec<u8>, sender: u8, frames: u32, bytes: u64) {
+    header_into(buf, FrameKind::SendDone, sender, frames, 1, 8);
+    buf.extend_from_slice(&bytes.to_le_bytes());
+}
+
 /// Encode a worker's `Reduced` reply: fresh state bits in the worker's
 /// canonical reduce-set order; `validated` rides in the index field.
 pub fn encode_reduced(buf: &mut Vec<u8>, sender: u8, validated: u32, state_bits: &[u64]) {
@@ -352,6 +382,16 @@ mod tests {
         for (i, &p) in pairs.iter().enumerate() {
             assert_eq!(f.update_pair(i), p);
         }
+    }
+
+    #[test]
+    fn send_done_roundtrip_carries_the_tally() {
+        let mut buf = Vec::new();
+        encode_send_done(&mut buf, 3, 41, 987_654_321_000);
+        let f = Frame::parse(&buf).unwrap();
+        assert_eq!((f.kind, f.sender, f.index, f.count), (FrameKind::SendDone, 3, 41, 1));
+        assert!(!f.kind.is_data(), "SendDone is control traffic, not charged");
+        assert_eq!(f.word(0), 987_654_321_000);
     }
 
     #[test]

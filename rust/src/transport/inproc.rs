@@ -2,7 +2,7 @@
 //! endpoint.
 //!
 //! This replaces the old cluster driver's `mpsc` channels + per-receiver
-//! `CodedMessage` clones. Every endpoint owns an inbound [`Ring`]: a
+//! `CodedMessage` clones. Every endpoint owns an inbound `Ring`: a
 //! bounded queue of `Vec<u8>` frame slots backed by a free pool. A send
 //! pops a slot from the receiver's pool (or allocates one, cold),
 //! memcpys the serialized frame in, and enqueues it; a receive *swaps*
@@ -114,6 +114,20 @@ impl Ring {
         self.readable.notify_all();
     }
 
+    /// Treat *every* writer as disconnected, but let already-queued
+    /// frames drain first (unlike [`Ring::poison`], which drops them).
+    /// Used by process-separated TCP endpoints when a critical peer (the
+    /// leader) hangs up: any frames it sent before the hangup — a `Stop`
+    /// racing its own connection close — are still delivered, and only
+    /// then does `pop` report the disconnect.
+    pub(crate) fn fail(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.writers = 0;
+        drop(st);
+        self.readable.notify_all();
+        self.writable.notify_all();
+    }
+
     /// Abnormal teardown: mark the ring dead and wake everyone — blocked
     /// receivers see a disconnect, blocked senders unblock and drop.
     pub(crate) fn poison(&self) {
@@ -125,7 +139,7 @@ impl Ring {
     }
 }
 
-/// The in-process transport: `n` endpoints, one inbound [`Ring`] each.
+/// The in-process transport: `n` endpoints, one inbound `Ring` each.
 /// Endpoint ids are `0..n` (the cluster uses `0..K` for workers and `K`
 /// for the leader).
 pub struct InProcNet {
@@ -236,6 +250,21 @@ mod tests {
         assert!(net.recv(0, &mut rbuf), "queued frame must still deliver");
         assert_eq!(frame::Frame::parse(&rbuf).unwrap().kind, FrameKind::Stop);
         assert!(!net.recv(0, &mut rbuf), "then the disconnect surfaces");
+    }
+
+    #[test]
+    fn fail_drains_queue_then_disconnects() {
+        // drain-first disconnect: a Stop that raced the peer's hangup is
+        // still delivered before the disconnect surfaces
+        let ring = Ring::new(4, 2);
+        let mut buf = Vec::new();
+        frame::encode_control(&mut buf, FrameKind::Stop, 0);
+        ring.push(&buf);
+        ring.fail();
+        let mut rbuf = Vec::new();
+        assert!(ring.pop(&mut rbuf), "queued frame must still deliver");
+        assert_eq!(frame::Frame::parse(&rbuf).unwrap().kind, FrameKind::Stop);
+        assert!(!ring.pop(&mut rbuf), "then every writer reads as disconnected");
     }
 
     #[test]

@@ -20,22 +20,28 @@
 //!   (zero steady-state allocation; replaces the old `mpsc` +
 //!   per-receiver `CodedMessage` clone driver).
 //! * [`TcpNet`] — `std::net` sockets on localhost, one listener per
-//!   endpoint, length-prefixed streams: the paper's testbed topology,
-//!   process-separable once a bootstrap channel distributes addresses.
+//!   endpoint, length-prefixed streams: the paper's testbed topology in
+//!   one process.
+//! * [`TcpEndpoint`] — **one** endpoint of a process-separated TCP mesh:
+//!   what `coded-graph worker` and the `--processes` leader each build
+//!   after the [`bootstrap`] rendezvous distributes the roster of
+//!   `(endpoint, listener address)` pairs and the job spec.
 //!
 //! A future multi-node backend slots in by implementing [`Transport`]
 //! over its own address book; the cluster driver and frame codec are
 //! already agnostic to everything below `send`/`recv`.
 
+pub mod bootstrap;
 pub mod frame;
 pub mod inproc;
 pub mod tcp;
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
 
 pub use frame::{Frame, FrameError, FrameKind};
 pub use inproc::InProcNet;
-pub use tcp::TcpNet;
+pub use tcp::{TcpEndpoint, TcpNet};
 
 /// Cumulative tally of Shuffle *data* frames (kinds
 /// [`FrameKind::CodedData`] / [`FrameKind::UncodedData`]) submitted to a
@@ -46,6 +52,18 @@ pub use tcp::TcpNet;
 pub struct TransportStats {
     pub data_frames: usize,
     pub data_bytes: usize,
+}
+
+/// Time remaining until `deadline`, or `None` once it has passed —
+/// shared by the wiring and bootstrap deadline loops so their handling
+/// cannot drift.
+pub(crate) fn time_left(deadline: Instant) -> Option<Duration> {
+    let now = Instant::now();
+    if now < deadline {
+        Some(deadline - now)
+    } else {
+        None
+    }
 }
 
 /// Shared counter implementation for backends.
@@ -104,6 +122,17 @@ pub trait Transport: Sync {
 
     /// Cumulative data-frame tally (see [`TransportStats`]).
     fn data_stats(&self) -> TransportStats;
+
+    /// Does [`Transport::data_stats`] observe the *whole mesh* (every
+    /// endpoint shares this handle — the in-process backends), or only
+    /// this endpoint's own sends (process-separated [`TcpEndpoint`]s)?
+    /// The cluster leader uses this to decide whether the transport's
+    /// byte tally is directly comparable to the modeled wire bytes;
+    /// across process boundaries it instead sums the per-worker tallies
+    /// each `SendDone` frame reports.
+    fn stats_are_global(&self) -> bool {
+        true
+    }
 }
 
 /// Which backend `run_cluster_on` should wire up.

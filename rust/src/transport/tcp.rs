@@ -1,29 +1,55 @@
-//! TCP backend: real sockets on localhost, one listener per endpoint,
-//! a full mesh of length-prefixed frame streams — the topology of the
-//! paper's EC2 testbed (§VI), where every Shuffle byte crosses a NIC.
+//! TCP backend: real sockets, one listener per endpoint, a full mesh of
+//! length-prefixed frame streams — the topology of the paper's EC2
+//! testbed (§VI), where every Shuffle byte crosses a NIC.
 //!
-//! Layout: endpoint `e` binds `127.0.0.1:0` and accepts one inbound
-//! connection from every other endpoint (identified by a 1-byte
-//! handshake). Each inbound connection gets a detached reader thread
-//! that deframes the stream (the frame's own 4-byte length prefix is
-//! the record boundary) and pushes complete frames into the endpoint's
-//! [`Ring`] — so above the socket layer, `recv` is identical to the
-//! in-process backend. Sends write the already-serialized frame to the
-//! per-destination stream; a multicast is a unicast loop, exactly like
-//! the paper's mpi4py implementation (and why the bus model charges a
-//! per-extra-receiver penalty).
+//! Two construction paths share all wiring internals:
 //!
-//! The mesh is wired eagerly in [`TcpNet::new`] on one thread: all
-//! connects are issued first (the OS accept backlog holds them; at most
-//! `n - 1 ≤ 16` per listener), then every listener drains its accepts.
-//! Leader and workers only share the `TcpNet` handle for *addressing* —
-//! all data crosses real sockets, so the same wiring works with
-//! endpoints in separate processes once a bootstrap channel distributes
-//! the addresses (see ROADMAP).
+//! * [`TcpNet::new`] — the in-process mesh: every endpoint of one
+//!   process, wired eagerly on one thread (what
+//!   `coded-graph cluster --transport tcp` without `--processes` runs).
+//! * [`TcpEndpoint::wire`] — **one** endpoint's view of a multi-process
+//!   mesh: the caller owns a pre-bound listener and a roster of peer
+//!   addresses (distributed by [`super::bootstrap`]), dials every peer,
+//!   accepts every inbound connection, and ends up with only its own
+//!   inbound ring + outbound write-halves. This is what
+//!   `coded-graph worker` and the `--processes` leader build, one per
+//!   OS process.
+//!
+//! Layout: endpoint `e` accepts one inbound connection from every other
+//! endpoint (identified by a 1-byte handshake, so each connection is
+//! unidirectional after it). Each inbound connection gets a detached
+//! reader thread that deframes the stream (the frame's own 4-byte length
+//! prefix is the record boundary) and pushes complete frames into the
+//! endpoint's inbound ring — so above the socket layer, `recv` is
+//! identical to the in-process backend. Sends write the
+//! already-serialized frame to the per-destination stream; a multicast
+//! is a unicast loop, exactly like the paper's mpi4py implementation
+//! (and why the bus model charges a per-extra-receiver penalty).
+//!
+//! Wiring is dial-all-then-accept-all: every listener is bound *before*
+//! any endpoint learns the roster (the in-process constructor binds them
+//! itself; the bootstrap protocol distributes addresses only after every
+//! worker's listener is up), so all connects land in OS accept backlogs
+//! and the accept loops drain them without any ordering constraint.
+//!
+//! ## Failure semantics (process mode)
+//!
+//! Connections are unidirectional after the handshake, so a reader
+//! observing EOF means its peer hung up. By convention endpoint `n - 1`
+//! is the cluster leader; [`TcpEndpoint::wire`] treats a hangup on any
+//! leader-involved connection as a whole-ring disconnect **after
+//! draining** queued frames (`Ring::fail`): a `Stop` that raced the
+//! leader's own close is still delivered, while a worker killed
+//! mid-iteration unblocks the leader's `recv`, whose `false` return the
+//! cluster driver escalates into an abort. Worker-to-worker hangups
+//! merely detach that one writer — they are normal during staggered
+//! shutdown, and a genuine mid-run worker death is always observed by
+//! the leader too, whose abort then cascades to every survivor.
 
 use std::io::{Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use super::inproc::Ring;
 use super::{StatCounters, Transport, TransportStats};
@@ -31,119 +57,145 @@ use super::{StatCounters, Transport, TransportStats};
 /// Refuse absurd length prefixes (corrupt stream) instead of resizing.
 const MAX_BODY: usize = 1 << 28;
 
-/// `streams[from][to]`: outbound write halves (None on the diagonal).
-type StreamMesh = Vec<Vec<Option<Mutex<TcpStream>>>>;
+/// How a reader thread reports its connection's EOF to the ring.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum EofAction {
+    /// Detach one writer: queued and future frames from others still flow.
+    Detach,
+    /// Disconnect the whole ring once queued frames drain (process-mode
+    /// leader-involved connections: no progress is possible anyway).
+    Fail,
+}
 
-struct Inner {
-    rings: Vec<Ring>,
-    /// Each stream is written only by endpoint `from`, but a mutex keeps
-    /// the trait object shareable without unsafe.
-    streams: StreamMesh,
+/// One endpoint's wiring — its inbound ring plus the outbound write-half
+/// to every peer — shared by the in-process mesh and the per-process
+/// [`TcpEndpoint`].
+struct Endpoint {
+    me: u8,
+    ring: Ring,
+    /// Outbound write halves indexed by destination (`None` at `me`).
+    peers: Vec<Option<Mutex<TcpStream>>>,
+    /// Clones of the accepted inbound streams, kept so `teardown` can
+    /// unblock this endpoint's own reader threads.
+    inbound: Mutex<Vec<TcpStream>>,
     stats: StatCounters,
 }
 
-/// The TCP transport handle. Dropping it shuts every stream down, which
-/// terminates the detached reader threads.
-pub struct TcpNet {
-    inner: Arc<Inner>,
+impl Endpoint {
+    fn send(&self, to: u8, frame: &[u8]) {
+        let stream = self.peers[to as usize].as_ref().expect("no stream for destination");
+        stream
+            .lock()
+            .unwrap()
+            .write_all(frame)
+            .expect("tcp transport: peer write failed");
+    }
+
+    /// Half-close every outbound stream (clean exit): queued bytes still
+    /// flush, then each peer's reader observes EOF.
+    fn half_close(&self) {
+        for stream in self.peers.iter().flatten() {
+            let _ = stream.lock().unwrap().shutdown(Shutdown::Write);
+        }
+    }
+
+    /// Abnormal teardown: poison the inbound ring (wakes blocked
+    /// `recv`/`push`) and shut every stream down both ways so local and
+    /// remote reader threads fail fast instead of leaking blocked.
+    fn teardown(&self) {
+        self.ring.poison();
+        for stream in self.peers.iter().flatten() {
+            let _ = stream.lock().unwrap().shutdown(Shutdown::Both);
+        }
+        for stream in self.inbound.lock().unwrap().iter() {
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+    }
 }
 
-impl TcpNet {
-    /// Build a localhost mesh of `caps.len()` endpoints; `caps[e]`
-    /// bounds endpoint `e`'s inbound ring in frames (same sizing rule as
-    /// [`super::InProcNet::new`]).
-    pub fn new(caps: &[usize]) -> std::io::Result<TcpNet> {
-        let n = caps.len();
-        let writers = n.saturating_sub(1);
-        let listeners: Vec<TcpListener> = (0..n)
-            .map(|_| TcpListener::bind("127.0.0.1:0"))
-            .collect::<std::io::Result<_>>()?;
-        let addrs: Vec<SocketAddr> =
-            listeners.iter().map(|l| l.local_addr()).collect::<std::io::Result<_>>()?;
-
-        // dial the full mesh first; the kernel backlog parks the
-        // connections until the accept loop below collects them
-        let mut streams: StreamMesh = Vec::with_capacity(n);
-        for from in 0..n {
-            let mut row = Vec::with_capacity(n);
-            for (to, addr) in addrs.iter().enumerate() {
-                if to == from {
-                    row.push(None);
-                    continue;
+/// Accept one connection, optionally bounded by `deadline` (the
+/// in-process mesh passes `None`: its dials are already parked in the
+/// backlog, so a blocking accept cannot hang).
+fn accept_one(listener: &TcpListener, deadline: Option<Instant>) -> std::io::Result<TcpStream> {
+    let Some(deadline) = deadline else {
+        return listener.accept().map(|(s, _)| s);
+    };
+    listener.set_nonblocking(true)?;
+    let out = loop {
+        match listener.accept() {
+            Ok((s, _)) => break Ok(s),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    break Err(std::io::Error::new(
+                        std::io::ErrorKind::TimedOut,
+                        "timed out waiting for mesh peers to dial in",
+                    ));
                 }
-                let mut s = TcpStream::connect(addr)?;
-                s.set_nodelay(true)?;
-                s.write_all(&[from as u8])?;
-                row.push(Some(Mutex::new(s)));
+                std::thread::sleep(Duration::from_millis(2));
             }
-            streams.push(row);
+            Err(e) => break Err(e),
         }
-
-        let inner = Arc::new(Inner {
-            rings: caps.iter().map(|&c| Ring::new(c, writers)).collect(),
-            streams,
-            stats: StatCounters::default(),
-        });
-
-        if let Err(e) = accept_inbound(listeners, &inner) {
-            // tear the half-built mesh down so already-spawned readers
-            // terminate instead of leaking blocked threads + sockets
-            teardown(&inner);
-            return Err(e);
-        }
-        Ok(TcpNet { inner })
-    }
-
-    /// Number of endpoints.
-    pub fn endpoints(&self) -> usize {
-        self.inner.rings.len()
-    }
+    };
+    let _ = listener.set_nonblocking(false);
+    let s = out?;
+    s.set_nonblocking(false)?;
+    Ok(s)
 }
 
-/// Accept and identify every inbound connection, spawning one reader
-/// thread per connection. The 1-byte handshake must name a distinct,
-/// in-range peer — a stray local connection grabbing an accept slot
-/// would otherwise silently displace a real peer and hang the cluster
-/// with no diagnostic.
-fn accept_inbound(listeners: Vec<TcpListener>, inner: &Arc<Inner>) -> std::io::Result<()> {
-    let n = listeners.len();
-    let writers = n.saturating_sub(1);
-    for (me, listener) in listeners.into_iter().enumerate() {
-        let mut seen = vec![false; n];
-        for _ in 0..writers {
-            let (mut s, _) = listener.accept()?;
-            s.set_nodelay(true)?;
-            let mut id = [0u8; 1];
-            s.read_exact(&mut id)?;
-            let from = id[0] as usize;
-            if from >= n || from == me || seen[from] {
-                return Err(std::io::Error::new(
-                    std::io::ErrorKind::InvalidData,
-                    format!("unexpected peer handshake {from} at endpoint {me}"),
-                ));
-            }
-            seen[from] = true;
-            let inner = Arc::clone(inner);
-            std::thread::spawn(move || reader_loop(s, &inner, me));
+fn time_left(deadline: Instant) -> std::io::Result<Duration> {
+    super::time_left(deadline).ok_or_else(|| {
+        std::io::Error::new(std::io::ErrorKind::TimedOut, "mesh wiring deadline expired")
+    })
+}
+
+/// Accept and identify every inbound connection for `ep`, spawning one
+/// detached reader thread per connection. The 1-byte handshake must name
+/// a distinct, in-range peer — a stray local connection grabbing an
+/// accept slot would otherwise silently displace a real peer and hang
+/// the cluster with no diagnostic. With `fail_on_leader`, connections
+/// touching endpoint `n - 1` (the cluster-leader convention) fail the
+/// ring on EOF instead of detaching (see the module docs).
+fn accept_inbound(
+    listener: &TcpListener,
+    ep: &Arc<Endpoint>,
+    n: usize,
+    fail_on_leader: bool,
+    deadline: Option<Instant>,
+) -> std::io::Result<()> {
+    let me = ep.me as usize;
+    let mut seen = vec![false; n];
+    for _ in 0..n.saturating_sub(1) {
+        let mut s = accept_one(listener, deadline)?;
+        s.set_nodelay(true)?;
+        if let Some(d) = deadline {
+            s.set_read_timeout(Some(time_left(d)?))?;
         }
+        let mut id = [0u8; 1];
+        s.read_exact(&mut id)?;
+        s.set_read_timeout(None)?;
+        let from = id[0] as usize;
+        if from >= n || from == me || seen[from] {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("unexpected peer handshake {from} at endpoint {me}"),
+            ));
+        }
+        seen[from] = true;
+        let on_eof = if fail_on_leader && (me == n - 1 || from == n - 1) {
+            EofAction::Fail
+        } else {
+            EofAction::Detach
+        };
+        ep.inbound.lock().unwrap().push(s.try_clone()?);
+        let ep = Arc::clone(ep);
+        std::thread::spawn(move || reader_loop(s, &ep, on_eof));
     }
     Ok(())
 }
 
-/// Poison every ring and shut every stream down: blocked receivers and
-/// senders unblock, reader threads hit EOF and exit.
-fn teardown(inner: &Inner) {
-    for ring in &inner.rings {
-        ring.poison();
-    }
-    for stream in inner.streams.iter().flatten().flatten() {
-        let _ = stream.lock().unwrap().shutdown(Shutdown::Both);
-    }
-}
-
 /// Deframe one inbound connection into the endpoint's ring until EOF /
-/// error, then detach as a writer so `recv` can report the disconnect.
-fn reader_loop(mut s: TcpStream, inner: &Inner, me: usize) {
+/// error, then report the hangup per `on_eof`.
+fn reader_loop(mut s: TcpStream, ep: &Endpoint, on_eof: EofAction) {
     let mut len_buf = [0u8; 4];
     let mut frame: Vec<u8> = Vec::new();
     loop {
@@ -160,54 +212,220 @@ fn reader_loop(mut s: TcpStream, inner: &Inner, me: usize) {
         if s.read_exact(&mut frame[4..]).is_err() {
             break;
         }
-        inner.rings[me].push(&frame);
+        ep.ring.push(&frame);
     }
-    inner.rings[me].close_writer();
+    match on_eof {
+        EofAction::Detach => ep.ring.close_writer(),
+        EofAction::Fail => ep.ring.fail(),
+    }
+}
+
+/// The in-process TCP mesh handle: every endpoint of one process, wired
+/// over localhost. Dropping it shuts every stream down, which terminates
+/// the detached reader threads.
+pub struct TcpNet {
+    endpoints: Vec<Arc<Endpoint>>,
+}
+
+impl TcpNet {
+    /// Build a localhost mesh of `caps.len()` endpoints; `caps[e]`
+    /// bounds endpoint `e`'s inbound ring in frames (same sizing rule as
+    /// [`super::InProcNet::new`]).
+    pub fn new(caps: &[usize]) -> std::io::Result<TcpNet> {
+        let n = caps.len();
+        let writers = n.saturating_sub(1);
+        let listeners: Vec<TcpListener> = (0..n)
+            .map(|_| TcpListener::bind("127.0.0.1:0"))
+            .collect::<std::io::Result<_>>()?;
+        let addrs: Vec<SocketAddr> =
+            listeners.iter().map(|l| l.local_addr()).collect::<std::io::Result<_>>()?;
+
+        // dial the full mesh first; the kernel backlog parks the
+        // connections until the accept loops below collect them
+        let mut endpoints: Vec<Arc<Endpoint>> = Vec::with_capacity(n);
+        let wired = (|endpoints: &mut Vec<Arc<Endpoint>>| -> std::io::Result<()> {
+            for from in 0..n {
+                let mut peers = Vec::with_capacity(n);
+                for (to, addr) in addrs.iter().enumerate() {
+                    if to == from {
+                        peers.push(None);
+                        continue;
+                    }
+                    let mut s = TcpStream::connect(addr)?;
+                    s.set_nodelay(true)?;
+                    s.write_all(&[from as u8])?;
+                    peers.push(Some(Mutex::new(s)));
+                }
+                endpoints.push(Arc::new(Endpoint {
+                    me: from as u8,
+                    ring: Ring::new(caps[from], writers),
+                    peers,
+                    inbound: Mutex::new(Vec::new()),
+                    stats: StatCounters::default(),
+                }));
+            }
+            for (me, listener) in listeners.iter().enumerate() {
+                accept_inbound(listener, &endpoints[me], n, false, None)?;
+            }
+            Ok(())
+        })(&mut endpoints);
+        if let Err(e) = wired {
+            // tear the half-built mesh down so already-spawned readers
+            // terminate instead of leaking blocked threads + sockets
+            for ep in &endpoints {
+                ep.teardown();
+            }
+            return Err(e);
+        }
+        Ok(TcpNet { endpoints })
+    }
+
+    /// Number of endpoints.
+    pub fn endpoints(&self) -> usize {
+        self.endpoints.len()
+    }
 }
 
 impl Transport for TcpNet {
     fn send_multicast(&self, from: u8, receivers: &[u8], frame: &[u8]) {
-        self.inner.stats.record(frame);
+        let ep = &self.endpoints[from as usize];
+        ep.stats.record(frame);
         for &to in receivers {
             debug_assert_ne!(to, from, "self-send");
-            let stream = self.inner.streams[from as usize][to as usize]
-                .as_ref()
-                .expect("no stream for destination");
-            stream
-                .lock()
-                .unwrap()
-                .write_all(frame)
-                .expect("tcp transport: peer write failed");
+            ep.send(to, frame);
         }
     }
 
     fn recv(&self, me: u8, buf: &mut Vec<u8>) -> bool {
-        self.inner.rings[me as usize].pop(buf)
+        self.endpoints[me as usize].ring.pop(buf)
     }
 
     fn leave(&self, me: u8) {
         // half-close our outbound streams: queued bytes still flush, then
         // every peer's reader sees EOF and detaches from its ring
-        for stream in self.inner.streams[me as usize].iter().flatten() {
-            let _ = stream.lock().unwrap().shutdown(Shutdown::Write);
-        }
+        self.endpoints[me as usize].half_close();
     }
 
     fn abort(&self) {
-        // poison every local ring (wakes blocked recv/push) and tear the
-        // sockets down so remote readers fail fast too
-        teardown(&self.inner);
+        for ep in &self.endpoints {
+            ep.teardown();
+        }
     }
 
     fn data_stats(&self) -> TransportStats {
-        self.inner.stats.snapshot()
+        let mut total = TransportStats::default();
+        for ep in &self.endpoints {
+            let s = ep.stats.snapshot();
+            total.data_frames += s.data_frames;
+            total.data_bytes += s.data_bytes;
+        }
+        total
     }
 }
 
 impl Drop for TcpNet {
     fn drop(&mut self) {
         // force-terminate any reader still blocked on a socket
-        teardown(&self.inner);
+        self.abort();
+    }
+}
+
+/// One OS process's endpoint of a multi-process TCP mesh: its inbound
+/// ring fed by the pre-bound listener, plus outbound write-halves to
+/// every peer in the bootstrap roster. [`Transport::data_stats`] counts
+/// only this endpoint's own sends ([`Transport::stats_are_global`] is
+/// `false`) — the cluster leader therefore cross-checks modeled wire
+/// bytes against the per-worker tallies riding on `SendDone` frames.
+pub struct TcpEndpoint {
+    inner: Arc<Endpoint>,
+}
+
+impl TcpEndpoint {
+    /// Wire endpoint `me` into the mesh described by `addrs` (the
+    /// bootstrap roster: data-listener addresses indexed by endpoint id,
+    /// leader last). `listener` must be the already-bound listener whose
+    /// address the peers were given — binding every listener before the
+    /// roster is distributed is what makes dial-all-then-accept-all
+    /// deadlock-free. `cap` bounds the inbound ring in frames; `timeout`
+    /// bounds the whole wiring phase (a peer that dies between bootstrap
+    /// and wiring would otherwise hang the accept loop forever).
+    pub fn wire(
+        me: u8,
+        listener: &TcpListener,
+        addrs: &[SocketAddr],
+        cap: usize,
+        timeout: Duration,
+    ) -> std::io::Result<TcpEndpoint> {
+        let n = addrs.len();
+        assert!((me as usize) < n, "endpoint id {me} out of roster range {n}");
+        let deadline = Instant::now() + timeout;
+        let mut peers = Vec::with_capacity(n);
+        for (to, addr) in addrs.iter().enumerate() {
+            if to == me as usize {
+                peers.push(None);
+                continue;
+            }
+            let mut s = TcpStream::connect(addr)?;
+            s.set_nodelay(true)?;
+            s.write_all(&[me])?;
+            peers.push(Some(Mutex::new(s)));
+        }
+        let ep = Arc::new(Endpoint {
+            me,
+            ring: Ring::new(cap, n.saturating_sub(1)),
+            peers,
+            inbound: Mutex::new(Vec::new()),
+            stats: StatCounters::default(),
+        });
+        if let Err(e) = accept_inbound(listener, &ep, n, true, Some(deadline)) {
+            ep.teardown();
+            return Err(e);
+        }
+        Ok(TcpEndpoint { inner: ep })
+    }
+
+    /// This endpoint's id in the roster.
+    pub fn id(&self) -> u8 {
+        self.inner.me
+    }
+}
+
+impl Transport for TcpEndpoint {
+    fn send_multicast(&self, from: u8, receivers: &[u8], frame: &[u8]) {
+        debug_assert_eq!(from, self.inner.me, "process endpoint can only send as itself");
+        self.inner.stats.record(frame);
+        for &to in receivers {
+            debug_assert_ne!(to, from, "self-send");
+            self.inner.send(to, frame);
+        }
+    }
+
+    fn recv(&self, me: u8, buf: &mut Vec<u8>) -> bool {
+        debug_assert_eq!(me, self.inner.me, "process endpoint can only recv as itself");
+        self.inner.ring.pop(buf)
+    }
+
+    fn leave(&self, me: u8) {
+        debug_assert_eq!(me, self.inner.me, "process endpoint can only leave as itself");
+        self.inner.half_close();
+    }
+
+    fn abort(&self) {
+        self.inner.teardown();
+    }
+
+    fn data_stats(&self) -> TransportStats {
+        self.inner.stats.snapshot()
+    }
+
+    fn stats_are_global(&self) -> bool {
+        false
+    }
+}
+
+impl Drop for TcpEndpoint {
+    fn drop(&mut self) {
+        self.inner.teardown();
     }
 }
 
@@ -259,5 +477,79 @@ mod tests {
         let mut rbuf = Vec::new();
         // endpoint 1's only writer (0) half-closed: recv drains to EOF
         assert!(!net.recv(1, &mut rbuf));
+    }
+
+    /// Wire `caps.len()` standalone endpoints over localhost, each on its
+    /// own thread (as separate processes would), from pre-bound listeners
+    /// plus the shared address roster.
+    fn wire_endpoints(caps: &[usize]) -> Vec<TcpEndpoint> {
+        let n = caps.len();
+        let listeners: Vec<TcpListener> =
+            (0..n).map(|_| TcpListener::bind("127.0.0.1:0").unwrap()).collect();
+        let addrs: Vec<SocketAddr> = listeners.iter().map(|l| l.local_addr().unwrap()).collect();
+        let handles: Vec<_> = listeners
+            .into_iter()
+            .enumerate()
+            .map(|(i, listener)| {
+                let addrs = addrs.clone();
+                let cap = caps[i];
+                std::thread::spawn(move || {
+                    TcpEndpoint::wire(i as u8, &listener, &addrs, cap, Duration::from_secs(10))
+                        .expect("wire endpoint")
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn process_endpoints_roundtrip() {
+        let eps = wire_endpoints(&[8, 8, 8]);
+        let mut buf = Vec::new();
+        frame::encode_coded(&mut buf, 0, 3, &[1, 2, 3], 4);
+        eps[0].send_multicast(0, &[1, 2], &buf);
+        for me in [1u8, 2] {
+            let mut rbuf = Vec::new();
+            assert!(eps[me as usize].recv(me, &mut rbuf));
+            let f = frame::Frame::parse(&rbuf).unwrap();
+            assert_eq!((f.kind, f.sender, f.index), (FrameKind::CodedData, 0, 3));
+            assert_eq!(f.col(1, 4), 2);
+        }
+        // per-endpoint stats: only the sender tallied the data frame
+        assert!(!eps[0].stats_are_global());
+        assert_eq!(eps[0].data_stats().data_frames, 1);
+        assert_eq!(eps[0].data_stats().data_bytes, frame::coded_frame_len(3, 4));
+        assert_eq!(eps[1].data_stats(), TransportStats::default());
+    }
+
+    #[test]
+    fn leader_hangup_drains_then_disconnects() {
+        // leader = endpoint n-1 by convention; a Stop racing the leader's
+        // own teardown must still deliver before the disconnect surfaces
+        let mut eps = wire_endpoints(&[4, 4]);
+        let leader = eps.pop().unwrap();
+        let worker = eps.pop().unwrap();
+        let mut buf = Vec::new();
+        frame::encode_control(&mut buf, FrameKind::Stop, 1);
+        leader.send_unicast(1, 0, &buf);
+        drop(leader); // teardown: shutdown(Both) on every stream
+        let mut rbuf = Vec::new();
+        assert!(worker.recv(0, &mut rbuf), "queued Stop must outlive the hangup");
+        assert_eq!(frame::Frame::parse(&rbuf).unwrap().kind, FrameKind::Stop);
+        assert!(!worker.recv(0, &mut rbuf), "then the ring reads disconnected");
+    }
+
+    #[test]
+    fn worker_death_unblocks_leader_recv() {
+        // a worker dying mid-run must surface as a disconnect at the
+        // leader's blocked recv (no deadlock), even though another worker
+        // is still attached
+        let mut eps = wire_endpoints(&[4, 4, 4]);
+        let leader = eps.pop().unwrap(); // id 2 == n-1
+        let _w1 = eps.pop().unwrap();
+        let w0 = eps.pop().unwrap();
+        drop(w0); // "killed": closes all its sockets
+        let mut rbuf = Vec::new();
+        assert!(!leader.recv(2, &mut rbuf), "leader must observe the death");
     }
 }

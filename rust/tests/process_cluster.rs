@@ -1,0 +1,134 @@
+//! True multi-process cluster end-to-end: spawn the real `coded-graph`
+//! binary as the `--processes` leader, which itself spawns one OS
+//! process per worker, bootstraps them over the rendezvous socket, and
+//! drives the frame protocol across process boundaries.
+//!
+//! `--check` makes the leader re-run the job on the in-process engine
+//! and verify the final states are **bit-identical** — so a green run
+//! here is the ISSUE-3 acceptance criterion executed in its strongest
+//! form (and the per-iteration `actual bytes ==
+//! wire_bytes_with_headers()` assertion held across processes, or the
+//! leader would have aborted).
+
+use std::process::Command;
+
+const BIN: &str = env!("CARGO_BIN_EXE_coded-graph");
+
+fn run_cluster_processes(extra: &[&str]) -> (bool, String, String) {
+    let mut cmd = Command::new(BIN);
+    cmd.args([
+        "cluster",
+        "--graph",
+        "er",
+        "--n",
+        "300",
+        "--k",
+        "3",
+        "--r",
+        "2",
+        "--iters",
+        "2",
+        "--transport",
+        "tcp",
+        "--processes",
+        "--check",
+        "--timeout-s",
+        "120",
+    ]);
+    cmd.args(extra);
+    let out = cmd.output().expect("spawn the coded-graph leader");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+#[test]
+fn processes_cluster_is_bit_identical_on_all_schemes() {
+    for scheme in ["coded", "uncoded", "coded-combined", "uncoded-combined"] {
+        let (ok, stdout, stderr) = run_cluster_processes(&["--scheme", scheme]);
+        assert!(ok, "scheme {scheme} failed\nstdout:\n{stdout}\nstderr:\n{stderr}");
+        assert!(
+            stdout.contains("bit-identical to engine::run_rust"),
+            "scheme {scheme}: --check did not report\n{stdout}"
+        );
+        assert!(
+            stdout.contains("process-separated cluster over tcp"),
+            "must actually take the multi-process path\n{stdout}"
+        );
+    }
+}
+
+#[test]
+fn processes_cluster_runs_sssp_too() {
+    let (ok, stdout, stderr) = run_cluster_processes(&["--program", "sssp", "--source", "3"]);
+    assert!(ok, "sssp failed\nstdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains("bit-identical to engine::run_rust"), "{stdout}");
+}
+
+#[test]
+fn no_spawn_leader_accepts_hand_started_workers() {
+    // the manual operator surface: a --no-spawn leader prints its
+    // rendezvous address and waits; workers started by hand join it
+    use std::io::{BufRead, BufReader};
+    let mut leader = Command::new(BIN)
+        .args([
+            "cluster",
+            "--graph",
+            "er",
+            "--n",
+            "200",
+            "--k",
+            "2",
+            "--r",
+            "2",
+            "--iters",
+            "1",
+            "--transport",
+            "tcp",
+            "--no-spawn",
+            "--check",
+            "--timeout-s",
+            "60",
+        ])
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawn leader");
+    let stdout = leader.stdout.take().unwrap();
+    let mut lines = BufReader::new(stdout).lines();
+    let addr = loop {
+        let line = lines.next().expect("leader exited before printing rendezvous").unwrap();
+        if let Some(a) = line.strip_prefix("rendezvous: ") {
+            break a.to_string();
+        }
+    };
+    let workers: Vec<_> = (0..2)
+        .map(|id: u8| {
+            Command::new(BIN)
+                .args(["worker", "--connect", &addr, "--id", &id.to_string()])
+                .spawn()
+                .expect("spawn worker by hand")
+        })
+        .collect();
+    // drain the leader's stdout (ends when the leader exits) so the
+    // pipe cannot fill and block it
+    let rest: Vec<String> = lines.map(|l| l.unwrap()).collect();
+    let status = leader.wait().expect("leader wait");
+    assert!(status.success(), "leader failed:\n{}", rest.join("\n"));
+    assert!(rest.iter().any(|l| l.contains("bit-identical")), "{}", rest.join("\n"));
+    for mut w in workers {
+        assert!(w.wait().expect("worker wait").success());
+    }
+}
+
+#[test]
+fn processes_flag_requires_tcp_transport() {
+    let out = Command::new(BIN)
+        .args(["cluster", "--processes", "--transport", "inproc"])
+        .output()
+        .expect("spawn");
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("--processes requires --transport tcp"), "{stderr}");
+}
