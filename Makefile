@@ -21,9 +21,12 @@ clippy:
 bench:
 	$(CARGO) bench
 
-# Tiny bench config to catch perf-harness bitrot in CI (seconds).
+# Tiny bench config to catch perf-harness bitrot in CI (seconds); also
+# emits the machine-readable perf trajectory CI parses and archives.
+# (cargo bench runs the harness with CWD at the package root, so the
+# JSON path is anchored to the invocation directory explicitly)
 bench-smoke:
-	$(CARGO) bench --bench shuffle_micro -- --smoke
+	$(CARGO) bench --bench shuffle_micro -- --smoke --json $(CURDIR)/BENCH_shuffle_micro.json
 
 # End-to-end cluster runs over real localhost sockets (seconds):
 #  1) a small ER PageRank job through the threaded TCP mesh;

@@ -5,20 +5,29 @@
 //!   * coded Encode throughput (arena kernel, bytes/s),
 //!   * coded Decode throughput (arena kernel, bytes/s),
 //!   * uncoded transfer planning,
-//! on a dense mid-size ER graph, then full coded engine iterations
-//! (Map → Encode → Shuffle → Decode → Reduce → write-back) on a
-//! ~200k-edge ER graph with a warm [`EngineScratch`] — the steady-state
-//! iterations are allocation-free (see the `zero_alloc` test) — on both
-//! the serial and the rayon-parallel path.
+//! on a dense mid-size ER graph; then sharded vs full prepare at
+//! (K=10, r=3) scale (the per-worker `prepare_worker` path the cluster
+//! workers run — expected ≥2× faster than the global `prepare`); then
+//! full coded engine iterations (Map → Encode → Shuffle → Decode →
+//! Reduce → write-back) on a ~200k-edge ER graph with a warm
+//! [`EngineScratch`] on both the serial and the rayon-parallel path;
+//! and finally the TCP batched wire path (per-frame writes vs one
+//! buffered flush per destination).
 //!
 //! ```sh
-//! cargo bench --bench shuffle_micro             # full configuration
-//! cargo bench --bench shuffle_micro -- --smoke  # seconds-scale CI smoke
+//! cargo bench --bench shuffle_micro                   # full configuration
+//! cargo bench --bench shuffle_micro -- --smoke        # seconds-scale CI smoke
+//! cargo bench --bench shuffle_micro -- --smoke --json BENCH_shuffle_micro.json
 //! ```
+//!
+//! `--json PATH` additionally writes every measurement as one JSON
+//! record (`{"suite": "shuffle_micro", "records": [...]}`) — the perf
+//! trajectory CI archives per commit.
 
 use coded_graph::allocation::Allocation;
 use coded_graph::coordinator::{
-    prepare, run_iteration_scratch, Backend, EngineConfig, EngineScratch, Job, Scheme,
+    prepare, prepare_worker, run_iteration_scratch, Backend, EngineConfig, EngineScratch, Job,
+    Scheme,
 };
 use coded_graph::graph::er::er;
 use coded_graph::mapreduce::{PageRank, VertexProgram};
@@ -27,18 +36,37 @@ use coded_graph::shuffle::decoder::decode_group_into;
 use coded_graph::shuffle::plan::build_group_plans;
 use coded_graph::shuffle::segments::seg_bytes;
 use coded_graph::shuffle::uncoded::plan_uncoded;
-use coded_graph::util::benchkit::{Bench, Table};
+use coded_graph::transport::{frame, TcpNet, Transport};
+use coded_graph::util::benchkit::{Bench, BenchJson, Table};
+use coded_graph::util::json::Json;
 use coded_graph::util::rng::DetRng;
 use coded_graph::Vertex;
 
 fn main() {
-    let smoke = std::env::args().any(|a| a == "--smoke");
-    micro(smoke);
-    iteration_throughput(smoke);
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let mut report = BenchJson::new("shuffle_micro");
+    micro(smoke, &mut report);
+    prepare_sharded(smoke, &mut report);
+    iteration_throughput(smoke, &mut report);
+    tcp_batching(smoke, &mut report);
+    if let Some(path) = json_path {
+        report.write(&path).expect("write bench json");
+        println!("\nwrote {path}");
+    }
+}
+
+fn num(x: f64) -> Json {
+    Json::Num(x)
 }
 
 /// Arena-kernel microbenchmarks: plan / encode / decode / uncoded-plan.
-fn micro(smoke: bool) {
+fn micro(smoke: bool, report: &mut BenchJson) {
     let (n, p, k) = if smoke { (600usize, 0.1f64, 5usize) } else { (3000, 0.1, 6) };
     let g = er(n, p, &mut DetRng::seed(123));
     println!("# Shuffle micro-benchmarks: ER(n={n}, p={p}), K={k}, m={}\n", g.m());
@@ -103,6 +131,30 @@ fn micro(smoke: bool) {
 
         let m_unc = bench.run(|| plan_uncoded(&g, &alloc));
 
+        let params = |extra: &[(&'static str, Json)]| -> Vec<(&'static str, Json)> {
+            let mut fields = vec![
+                ("n", num(n as f64)),
+                ("p", num(p)),
+                ("k", num(k as f64)),
+                ("r", num(r as f64)),
+            ];
+            fields.extend_from_slice(extra);
+            fields
+        };
+        report.record(
+            "plan",
+            &params(&[("mean_s", num(m_plan.mean_s)), ("ivs", num(total_ivs as f64))]),
+        );
+        report.record(
+            "encode",
+            &params(&[("mean_s", num(m_enc.mean_s)), ("bytes", num(enc_bytes as f64))]),
+        );
+        report.record(
+            "decode",
+            &params(&[("mean_s", num(m_dec.mean_s)), ("bytes", num(dec_bytes as f64))]),
+        );
+        report.record("uncoded_plan", &params(&[("mean_s", num(m_unc.mean_s))]));
+
         t.row(&[
             r.to_string(),
             format!("{:.2}", m_plan.mean_ms()),
@@ -119,9 +171,66 @@ fn micro(smoke: bool) {
     println!("byte throughput is inherently ~1/r of encode's on the same table.\n");
 }
 
+/// Sharded vs full prepare at (K=10, r=3) scale: what a cluster worker
+/// runs at startup. `prepare_worker` only materializes the `(r+1)/K`
+/// fraction of groups the worker is a member of and skips the global
+/// tallies, so it should beat the full `prepare` by well over 2×.
+fn prepare_sharded(smoke: bool, report: &mut BenchJson) {
+    let (n, p) = if smoke { (1200usize, 0.06f64) } else { (4000, 0.05) };
+    let (k, r) = (10usize, 3usize);
+    let g = er(n, p, &mut DetRng::seed(777));
+    let alloc = Allocation::er_scheme(n, k, r);
+    let prog = PageRank::default();
+    let job = Job { graph: &g, alloc: &alloc, program: &prog };
+    let bench = if smoke { Bench::new(1, 3) } else { Bench::new(2, 5) };
+
+    let m_full = bench.run(|| prepare(&job, Scheme::Coded));
+    let m_shard = bench.run(|| prepare_worker(&job, Scheme::Coded, 0));
+    let full_ivs = prepare(&job, Scheme::Coded).plan.total_ivs();
+    let shard_ivs = prepare_worker(&job, Scheme::Coded, 0).plan.total_ivs();
+    let speedup = m_full.mean_s / m_shard.mean_s;
+
+    println!("# Sharded prepare: ER(n={n}, p={p}), K={k}, r={r}, m={}\n", g.m());
+    println!(
+        "full prepare: {:.2} ms ({} ivs)   prepare_worker(0): {:.2} ms ({} ivs)   speedup {speedup:.1}x",
+        m_full.mean_ms(),
+        full_ivs,
+        m_shard.mean_ms(),
+        shard_ivs,
+    );
+    println!(
+        "shard fraction: {:.3} of the global pair arena ((r+1)/K = {:.3})\n",
+        shard_ivs as f64 / full_ivs as f64,
+        (r + 1) as f64 / k as f64
+    );
+    report.record(
+        "prepare_full",
+        &[
+            ("n", num(n as f64)),
+            ("p", num(p)),
+            ("k", num(k as f64)),
+            ("r", num(r as f64)),
+            ("mean_s", num(m_full.mean_s)),
+            ("ivs", num(full_ivs as f64)),
+        ],
+    );
+    report.record(
+        "prepare_worker",
+        &[
+            ("n", num(n as f64)),
+            ("p", num(p)),
+            ("k", num(k as f64)),
+            ("r", num(r as f64)),
+            ("mean_s", num(m_shard.mean_s)),
+            ("ivs", num(shard_ivs as f64)),
+            ("speedup_vs_full", num(speedup)),
+        ],
+    );
+}
+
 /// Full coded engine iterations on a ~200k-edge ER graph: the headline
 /// steady-state throughput number (warm scratch, zero allocation).
-fn iteration_throughput(smoke: bool) {
+fn iteration_throughput(smoke: bool, report: &mut BenchJson) {
     let (n, p, k) = if smoke { (500usize, 0.08f64, 5usize) } else { (2000, 0.1, 6) };
     let g = er(n, p, &mut DetRng::seed(321));
     println!("# Coded engine iterations: ER(n={n}, p={p}), K={k}, m={} (~200k edges full size)\n", g.m());
@@ -156,6 +265,19 @@ fn iteration_throughput(smoke: bool) {
             );
         });
 
+        report.record(
+            "iteration",
+            &[
+                ("n", num(n as f64)),
+                ("p", num(p)),
+                ("k", num(k as f64)),
+                ("r", num(r as f64)),
+                ("serial_mean_s", num(m_serial.mean_s)),
+                ("parallel_mean_s", num(m_par.mean_s)),
+                ("norm_load", num(load)),
+            ],
+        );
+
         t.row(&[
             r.to_string(),
             format!("{:.2}", m_serial.mean_ms()),
@@ -166,5 +288,66 @@ fn iteration_throughput(smoke: bool) {
     }
     t.print();
     println!("\nserial and parallel paths are bit-identical (asserted in the test suite);");
-    println!("steady-state iterations perform zero heap allocation (tests/zero_alloc.rs).");
+    println!("steady-state iterations perform zero heap allocation (tests/zero_alloc.rs).\n");
+}
+
+/// The TCP batched wire path: the same frame stream sent with one
+/// syscall per frame vs staged and flushed with one buffered write per
+/// destination — the syscall cost the cluster's Shuffle sheds.
+fn tcp_batching(smoke: bool, report: &mut BenchJson) {
+    let frames = if smoke { 512usize } else { 4096 };
+    let r = 3usize;
+    let sb = seg_bytes(r);
+    let cols = vec![0x5AA5_5AA5_5AA5_5AA5u64 & ((1u64 << (sb * 8)) - 1); 16];
+    let net = match TcpNet::new(&[frames + 8, frames + 8]) {
+        Ok(net) => net,
+        Err(e) => {
+            println!("# TCP batching: skipped (no localhost sockets: {e})");
+            return;
+        }
+    };
+    let mut buf = Vec::new();
+    let mut rbuf = Vec::new();
+
+    let (_, per_frame_s) = Bench::once(|| {
+        for i in 0..frames {
+            frame::encode_coded(&mut buf, 0, i as u32, &cols, sb);
+            net.send_unicast(0, 1, &buf);
+        }
+        for _ in 0..frames {
+            assert!(net.recv(1, &mut rbuf));
+        }
+    });
+    let (_, batched_s) = Bench::once(|| {
+        for i in 0..frames {
+            frame::encode_coded(&mut buf, 0, i as u32, &cols, sb);
+            net.send_unicast_buffered(0, 1, &buf);
+        }
+        net.flush(0);
+        for _ in 0..frames {
+            assert!(net.recv(1, &mut rbuf));
+        }
+    });
+    let writes = net.data_stats().batched_writes;
+
+    println!("# TCP batched wire path: {frames} coded frames to one peer\n");
+    println!(
+        "per-frame writes: {:.2} ms ({frames} syscalls)   batched: {:.2} ms ({writes} flush write{})   {:.1}x",
+        per_frame_s * 1e3,
+        batched_s * 1e3,
+        if writes == 1 { "" } else { "s" },
+        per_frame_s / batched_s,
+    );
+    report.record(
+        "tcp_send_per_frame",
+        &[("frames", num(frames as f64)), ("mean_s", num(per_frame_s))],
+    );
+    report.record(
+        "tcp_send_batched",
+        &[
+            ("frames", num(frames as f64)),
+            ("mean_s", num(batched_s)),
+            ("batched_writes", num(writes as f64)),
+        ],
+    );
 }

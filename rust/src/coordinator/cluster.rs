@@ -31,8 +31,22 @@
 //! catch against the single-machine oracle. Workers encode straight into
 //! reusable transport send buffers with the single-sender arena kernels
 //! ([`encode_sender_into`]) and decode from borrowed frame views
-//! ([`decode_sender_into`]); all routing tables come precomputed from
-//! [`PreparedJob`] — the same source of truth the engine replays.
+//! ([`decode_sender_into`]).
+//!
+//! ## Sharded prepare: workers scale with their shard
+//!
+//! The **leader** keeps the global [`PreparedJob`] — it needs the whole
+//! plan for the accounting replay and the ring-capacity table — but each
+//! **worker** consumes only its own
+//! [`PreparedWorker`](super::engine::PreparedWorker) shard
+//! ([`prepare_worker`]): the groups it is a member of (`≈ (r+1)/K` of
+//! the global pair arena, built in `O(m·(r+1)/K)`) plus its own
+//! transfers and routing. On the wire, coded frames carry the group's
+//! canonical *subset rank* and uncoded frames `sender·K + receiver` —
+//! ids every party derives locally, whose ascending order equals the
+//! global plan's canonical order, so sharded workers still decode and
+//! fold in exactly the engine's sequence (the bit-identity contract).
+//! The leader never reads data-frame ids; they are worker↔worker only.
 //!
 //! ## Model ≡ reality
 //!
@@ -59,12 +73,25 @@
 //! buffer per worker (cleared + extended in place), ring slots cycle
 //! through the `InProc` buffer pool, receives swap pooled buffers, and
 //! decode/reduce write into preallocated arenas (`garena`, `gvals`,
-//! `unc_arena`, `bits`, `accs`, `next_bits`); group values are evaluated
-//! once per iteration (at send time) and reused by decode. The
-//! send-path half of this contract is
+//! `unc_arena`, `bits`, `accs`, `next_bits`, `qbits`); group values are
+//! evaluated once per iteration (at send time) and reused by decode,
+//! and when the program's Map is destination-independent the per-mapper
+//! values are cached once per iteration in `qbits` (the engine's
+//! mapper-once fast path, now on the workers too). The send-path half
+//! of this contract — including the batched staging buffers — is
 //! asserted under a counting allocator in `tests/transport_zero_alloc.rs`;
 //! the leader intentionally keeps a couple of per-iteration `Vec`s
 //! (routing the write-back), which are off the workers' data path.
+//!
+//! ## Batched wire path
+//!
+//! Workers emit their whole iteration of shuffle frames through the
+//! transport's buffered surface and `flush` once before `SendDone`: on
+//! TCP every peer connection gets **one** buffered write per iteration
+//! (`O(peers)` syscalls instead of `O(frames × receivers)`), while the
+//! in-process rings deliver eagerly (nothing to batch). Control frames
+//! stay eager — they share no connection with staged data, so per-stream
+//! ordering is preserved.
 //!
 //! ## Phase protocol
 //!
@@ -98,7 +125,7 @@ use crate::transport::frame::{self, Frame, FrameKind};
 use crate::transport::{InProcNet, TcpNet, Transport, TransportKind};
 
 use super::config::{EngineConfig, Scheme};
-use super::engine::{prepare, Job, PreparedJob};
+use super::engine::{prepare, prepare_worker, Job, PreparedJob, PreparedWorker};
 use super::metrics::{IterationMetrics, JobReport, PhaseTimes};
 
 /// Run a job on the cluster over the in-process transport. Semantics
@@ -127,11 +154,13 @@ pub fn run_cluster_on(
     }
 }
 
-/// Inbound ring bound for worker `k`: its expected data frames per
-/// iteration plus a handful of control frames (at most StateUpdate +
-/// Continue of the previous iteration can still be queued when
-/// next-iteration data arrives). Worker processes use the same rule, so
-/// in-process and process-separated runs have identical backpressure.
+/// Inbound ring bound for worker `k`, computed from the leader's global
+/// tables: its expected data frames per iteration plus a handful of
+/// control frames (at most StateUpdate + Continue of the previous
+/// iteration can still be queued when next-iteration data arrives).
+/// Worker processes apply the same rule to their own shard
+/// ([`PreparedWorker::ring_capacity`]), so in-process and
+/// process-separated runs have identical backpressure.
 pub fn worker_ring_capacity(prep: &PreparedJob, k: usize) -> usize {
     prep.expect_coded(k) + prep.expect_unc(k) + 8
 }
@@ -173,9 +202,15 @@ fn drive(
     net: &dyn Transport,
 ) -> JobReport {
     let k = job.alloc.k;
+    let scheme = cfg.scheme;
     std::thread::scope(|scope| {
         for kk in 0..k as u8 {
-            scope.spawn(move || run_worker(kk, job, prep, net));
+            scope.spawn(move || {
+                // each worker thread builds only its own shard — the same
+                // code path a worker *process* runs from the job spec
+                let shard = prepare_worker(job, scheme, kk);
+                run_worker(kk, job, &shard, net)
+            });
         }
         run_leader(job, cfg, iters, prep, net)
     })
@@ -184,10 +219,13 @@ fn drive(
 /// Run one worker endpoint to completion over `net` — the entry point a
 /// `coded-graph worker` *process* shares with the in-process driver's
 /// threads. Expects the cluster convention: workers `0..K`, leader `K`.
-/// Installs the leave guard itself: a clean exit half-closes the
-/// endpoint, a panic aborts the transport so every peer unblocks.
-pub fn run_worker(me: u8, job: &Job<'_>, prep: &PreparedJob, net: &dyn Transport) {
+/// Consumes the worker's own [`PreparedWorker`] shard (from
+/// [`prepare_worker`]) — never the global prepared job. Installs the
+/// leave guard itself: a clean exit half-closes the endpoint, a panic
+/// aborts the transport so every peer unblocks.
+pub fn run_worker(me: u8, job: &Job<'_>, prep: &PreparedWorker, net: &dyn Transport) {
     let leader = job.alloc.k as u8;
+    assert_eq!(prep.me, me, "sharded prep was built for worker {}", prep.me);
     let _guard = LeaveGuard(net, me);
     Worker::new(me, job.graph, job.alloc, job.program, prep, net, leader).run();
 }
@@ -422,27 +460,35 @@ fn leader_loop(
     report
 }
 
-/// One worker: owns only its entitled state, performs real encode /
-/// decode / reduce over the transport.
+/// One worker: owns only its entitled state (and only its shard of the
+/// plan), performs real encode / decode / reduce over the transport.
 struct Worker<'a> {
     me: u8,
     g: &'a Csr,
     alloc: &'a Allocation,
     prog: &'a dyn VertexProgram,
-    prep: &'a PreparedJob,
+    prep: &'a PreparedWorker,
     net: &'a dyn Transport,
     leader: u8,
     r: usize,
     sb: usize,
     combined: bool,
-    /// Groups this worker decodes (ascending), with its member index,
-    /// column-arena offset, and value-arena offset per group.
+    /// Does the program's Map ignore the destination? If so, `qbits`
+    /// caches one value per mapped vertex per iteration (engine fast
+    /// path) instead of a dyn-dispatched `map` call per pair.
+    src_only: bool,
+    /// Local indices (into the shard plan) of the groups this worker
+    /// decodes, ascending — also the canonical fold order.
     my_groups: &'a [u32],
+    /// Wire ids of `my_groups`, ascending (inbound frame routing).
+    my_gids: Vec<u32>,
     my_row_idx: Vec<usize>,
     garena_off: Vec<usize>,
     gvals_off: Vec<usize>,
-    /// Transfers this worker receives (ascending) with IV-arena offsets.
+    /// Indices into the shard's transfers this worker receives
+    /// (ascending), their wire ids, and IV-arena offsets.
     my_unc_recv: &'a [u32],
+    my_unc_ids: Vec<u32>,
     unc_off: Vec<usize>,
     expect_coded: usize,
     expect_unc: usize,
@@ -450,6 +496,9 @@ struct Worker<'a> {
     /// elsewhere so illegal reads surface in tests.
     state: Vec<f64>,
     // -- steady-state scratch (allocated once; see the module hand-audit) --
+    /// Per-mapper Map-value cache (`src_only` fast path), refreshed once
+    /// per iteration at send time (state is frozen until write-back).
+    qbits: Vec<u64>,
     vals: Vec<u64>,
     cols: Vec<u64>,
     bits: Vec<u64>,
@@ -509,7 +558,7 @@ impl<'a> Worker<'a> {
         g: &'a Csr,
         alloc: &'a Allocation,
         prog: &'a dyn VertexProgram,
-        prep: &'a PreparedJob,
+        prep: &'a PreparedWorker,
         net: &'a dyn Transport,
         leader: u8,
     ) -> Worker<'a> {
@@ -528,44 +577,50 @@ impl<'a> Worker<'a> {
         }
 
         // scratch sizing: max value-arena / column counts over the groups
-        // this worker encodes or decodes
+        // this worker encodes or decodes (shard-local indices throughout)
         let mut vals_cap = 0usize;
         let mut cols_cap = 0usize;
-        for &(gi, si) in prep.send_plan(wk) {
-            vals_cap = vals_cap.max(plan.group(gi as usize).total_ivs());
-            cols_cap = cols_cap.max(plan.sender_cols(gi as usize)[si as usize] as usize);
+        for &(l, si) in prep.send_plan() {
+            vals_cap = vals_cap.max(plan.group(l as usize).total_ivs());
+            cols_cap = cols_cap.max(plan.sender_cols(l as usize)[si as usize] as usize);
         }
-        let my_groups = prep.recv_groups(wk);
+        let my_groups = prep.recv_groups();
+        let mut my_gids = Vec::with_capacity(my_groups.len());
         let mut my_row_idx = Vec::with_capacity(my_groups.len());
         let mut garena_off = Vec::with_capacity(my_groups.len());
         let mut gvals_off = Vec::with_capacity(my_groups.len());
         let mut garena_len = 0usize;
         let mut gvals_len = 0usize;
         let mut bits_cap = 0usize;
-        for &gi in my_groups {
-            let group = plan.group(gi as usize);
+        for &l in my_groups {
+            let group = plan.group(l as usize);
             let m_idx = group.member_index(me).expect("routing: not a member");
             let my_len = group.row_len(m_idx);
             bits_cap = bits_cap.max(my_len);
+            my_gids.push(plan.wire_id(l as usize));
             my_row_idx.push(m_idx);
             garena_off.push(garena_len);
             garena_len += group.members() * my_len;
             gvals_off.push(gvals_len);
             gvals_len += group.total_ivs();
         }
-        let my_unc_recv = prep.unc_recv(wk);
+        let my_unc_recv = prep.unc_recv();
+        let mut my_unc_ids = Vec::with_capacity(my_unc_recv.len());
         let mut unc_off = Vec::with_capacity(my_unc_recv.len());
         let mut unc_len = 0usize;
         for &ti in my_unc_recv {
+            my_unc_ids.push(prep.transfer_ids[ti as usize]);
             unc_off.push(unc_len);
             unc_len += prep.transfers[ti as usize].ivs.len();
         }
         let ivbits_cap = prep
-            .unc_sends(wk)
+            .unc_sends()
             .iter()
             .map(|&ti| prep.transfers[ti as usize].ivs.len())
             .max()
             .unwrap_or(0);
+        let combined = prep.scheme.is_combined();
+        let src_only = !combined && !prog.map_depends_on_dst();
 
         Worker {
             me,
@@ -577,16 +632,20 @@ impl<'a> Worker<'a> {
             leader,
             r,
             sb: seg_bytes(r),
-            combined: prep.scheme.is_combined(),
+            combined,
+            src_only,
             my_groups,
+            my_gids,
             my_row_idx,
             garena_off,
             gvals_off,
             my_unc_recv,
+            my_unc_ids,
             unc_off,
-            expect_coded: prep.expect_coded(wk),
-            expect_unc: prep.expect_unc(wk),
+            expect_coded: prep.expect_coded(),
+            expect_unc: prep.expect_unc(),
             state,
+            qbits: vec![0u64; if src_only { n } else { 0 }],
             vals: vec![0u64; vals_cap],
             cols: vec![0u64; cols_cap],
             bits: vec![0u64; bits_cap],
@@ -682,27 +741,51 @@ impl<'a> Worker<'a> {
         }
     }
 
-    /// Encode and transmit everything this worker owes, then signal the
-    /// leader (the SendDone carries this iteration's data-send tally).
-    /// Steady state: no allocation (scratch + frame buffer reuse).
+    /// Encode and transmit everything this worker owes through the
+    /// transport's **batched** surface, flush once per peer, then signal
+    /// the leader (the SendDone carries this iteration's data-send
+    /// tally). Steady state: no allocation (scratch + frame buffer +
+    /// staging buffer reuse).
     fn send_all(&mut self) {
         let (g, alloc, prog) = (self.g, self.alloc, self.prog);
-        let (combined, me, r, sb) = (self.combined, self.me, self.r, self.sb);
+        let (combined, me, r, sb, src_only) =
+            (self.combined, self.me, self.r, self.sb, self.src_only);
+        // mapper-once fast path: when Map ignores the destination,
+        // evaluate each mapped vertex once per iteration (state is
+        // frozen until write-back, so the cache also serves the local
+        // Reduce fold in decode_and_reduce)
+        if src_only {
+            let state = &self.state;
+            let qbits = &mut self.qbits;
+            for j in alloc.mapped_vertices(me) {
+                let s = state[j as usize];
+                debug_assert!(!s.is_nan(), "worker {me} mapped-state poison at {j}");
+                qbits[j as usize] =
+                    if g.degree(j) == 0 { 0 } else { prog.map(j, j, s, g).to_bits() };
+            }
+        }
         let plan = &self.prep.plan;
         let state = &self.state;
-        let value = move |i: Vertex, j: Vertex| iv_value(g, alloc, prog, state, combined, i, j);
+        let qbits: &[u64] = &self.qbits;
+        let value = move |i: Vertex, j: Vertex| {
+            if src_only {
+                qbits[j as usize]
+            } else {
+                iv_value(g, alloc, prog, state, combined, i, j)
+            }
+        };
         let mut iter_frames = 0u32;
         let mut iter_bytes = 0u64;
 
-        for &(gi, si) in self.prep.send_plan(me as usize) {
-            let group = plan.group(gi as usize);
-            let q = plan.sender_cols(gi as usize)[si as usize] as usize;
+        for &(l, si) in self.prep.send_plan() {
+            let group = plan.group(l as usize);
+            let q = plan.sender_cols(l as usize)[si as usize] as usize;
             let nv = group.total_ivs();
             // when we also decode this group, evaluate into the
             // persistent per-group arena so decode_and_reduce can reuse
             // the values (our skip index is the same on both sides and
             // state is frozen until write-back)
-            let vals: &[u64] = match self.my_groups.binary_search(&gi) {
+            let vals: &[u64] = match self.my_groups.binary_search(&l) {
                 Ok(slot) => {
                     let range = self.gvals_off[slot]..self.gvals_off[slot] + nv;
                     eval_rows_except(group, si as usize, &value, &mut self.gvals[range.clone()]);
@@ -713,28 +796,35 @@ impl<'a> Worker<'a> {
                     &self.vals[..nv]
                 }
             };
-            let (gi, si) = (gi as usize, si as usize);
+            let si = si as usize;
             encode_sender_into(group, si, vals, r, &mut self.cols[..q]);
-            frame::encode_coded(&mut self.sendbuf, me, gi as u32, &self.cols[..q], sb);
+            frame::encode_coded(&mut self.sendbuf, me, plan.wire_id(l as usize), &self.cols[..q], sb);
             self.receivers.clear();
             for (mi, &m) in group.servers.iter().enumerate() {
                 if m != me && group.row_len(mi) > 0 {
                     self.receivers.push(m);
                 }
             }
-            self.net.send_multicast(me, &self.receivers, &self.sendbuf);
+            self.net.send_multicast_buffered(me, &self.receivers, &self.sendbuf);
             iter_frames += 1; // one multicast = one transmission
             iter_bytes += self.sendbuf.len() as u64;
         }
-        for &ti in self.prep.unc_sends(me as usize) {
+        for &ti in self.prep.unc_sends() {
             let t = &self.prep.transfers[ti as usize];
             self.ivbits.clear();
             self.ivbits.extend(t.ivs.iter().map(|&(i, j)| value(i, j)));
-            frame::encode_uncoded(&mut self.sendbuf, me, ti, &self.ivbits);
-            self.net.send_unicast(me, t.receiver, &self.sendbuf);
+            frame::encode_uncoded(
+                &mut self.sendbuf,
+                me,
+                self.prep.transfer_ids[ti as usize],
+                &self.ivbits,
+            );
+            self.net.send_unicast_buffered(me, t.receiver, &self.sendbuf);
             iter_frames += 1;
             iter_bytes += self.sendbuf.len() as u64;
         }
+        // one physical write per peer with staged data (O(peers) syscalls)
+        self.net.flush(me);
         self.sent_frames += iter_frames as usize;
         self.sent_bytes += iter_bytes as usize;
         frame::encode_send_done(&mut self.sendbuf, me, iter_frames, iter_bytes);
@@ -764,11 +854,13 @@ impl<'a> Worker<'a> {
     fn handle_data(&mut self, f: &Frame<'_>) {
         match f.kind {
             FrameKind::CodedData => {
+                // frame carries the group's canonical wire id (subset
+                // rank) — resolve it to our shard-local slot
                 let slot = self
-                    .my_groups
+                    .my_gids
                     .binary_search(&f.index)
                     .expect("coded frame for a group this worker has no row in");
-                let group = self.prep.plan.group(f.index as usize);
+                let group = self.prep.plan.group(self.my_groups[slot] as usize);
                 let m_idx = self.my_row_idx[slot];
                 let my_len = group.row_len(m_idx);
                 let s_idx = group.member_index(f.sender).expect("sender not in group");
@@ -781,12 +873,17 @@ impl<'a> Worker<'a> {
                 self.got_coded += 1;
             }
             FrameKind::UncodedData => {
+                // frame carries the transfer's canonical wire id
+                // (sender·K + receiver) — resolve to our shard transfer
                 let pos = self
-                    .my_unc_recv
+                    .my_unc_ids
                     .binary_search(&f.index)
                     .expect("unicast for a transfer this worker does not receive");
                 let count = f.count as usize;
-                debug_assert_eq!(count, self.prep.transfers[f.index as usize].ivs.len());
+                debug_assert_eq!(
+                    count,
+                    self.prep.transfers[self.my_unc_recv[pos] as usize].ivs.len()
+                );
                 let base = self.unc_off[pos];
                 for (c, cell) in self.unc_arena[base..base + count].iter_mut().enumerate() {
                     *cell = f.word(c);
@@ -804,18 +901,27 @@ impl<'a> Worker<'a> {
     /// count (the `validated_ivs` contribution).
     fn decode_and_reduce(&mut self) -> u32 {
         let (g, alloc, prog) = (self.g, self.alloc, self.prog);
-        let (me, r) = (self.me, self.r);
+        let (me, r, src_only) = (self.me, self.r, self.src_only);
         let plan = &self.prep.plan;
         let reduce_slot: &[u32] = &self.prep.reduce_slot;
         let state = &self.state;
+        let qbits: &[u64] = &self.qbits;
         let rows = &alloc.reduce_sets[me as usize];
 
-        // local fold (identical combine sequence to the engine)
+        // local fold (identical combine sequence to the engine); the
+        // src_only path reuses the per-iteration `qbits` cache filled at
+        // send time — every neighbor j here has degree ≥ 1 and is mapped
+        // by this worker, so its cache entry is a real Map value
         for (slot, &i) in rows.iter().enumerate() {
             let mut acc = prog.identity();
             for &j in g.neighbors(i) {
                 if alloc.maps(me, j) {
-                    acc = prog.combine(acc, prog.map(i, j, state[j as usize], g));
+                    let v = if src_only {
+                        f64::from_bits(qbits[j as usize])
+                    } else {
+                        prog.map(i, j, state[j as usize], g)
+                    };
+                    acc = prog.combine(acc, v);
                 }
             }
             self.accs[slot] = acc;
@@ -851,8 +957,9 @@ impl<'a> Worker<'a> {
                 );
             }
             for (c, &(i, _)) in group.row(m_idx).iter().enumerate() {
-                // hard check: reduce_slot is populated for *every* vertex,
-                // so a misrouted IV would otherwise fold silently into the
+                // hard check before touching reduce_slot: the shard only
+                // populates slots for this worker's own vertices, so a
+                // misrouted IV would otherwise fold silently into the
                 // wrong accumulator
                 assert_eq!(
                     alloc.reduce_owner[i as usize], me,
@@ -1047,6 +1154,33 @@ mod tests {
             assert_eq!(x.to_bits(), y.to_bits());
         }
         assert_eq!(a.iterations[0].shuffle, b.iterations[0].shuffle);
+    }
+
+    #[test]
+    fn tcp_data_path_flushes_once_per_iteration_and_peer() {
+        // the batched wire path acceptance gate: shuffle data crosses the
+        // sockets in at most one buffered write per (iteration, worker,
+        // peer), while the leader's per-iteration byte accounting (which
+        // drive() asserts internally) still holds
+        let g = er(120, 0.12, &mut DetRng::seed(73));
+        let k = 4usize;
+        let alloc = Allocation::er_scheme(120, k, 2);
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let iters = 3usize;
+        let prep = prepare(&job, Scheme::Coded);
+        let caps = ring_capacities(&prep, k);
+        let net = TcpNet::new(&caps).expect("tcp transport: localhost mesh setup");
+        let report = drive(&job, &cfg(Scheme::Coded), iters, &prep, &net);
+        assert_eq!(report.iterations.len(), iters);
+        let stats = net.data_stats();
+        assert!(stats.data_frames > 0, "need real coded traffic");
+        assert!(stats.batched_writes > 0, "data path must use the batched surface");
+        assert!(
+            stats.batched_writes <= iters * k * (k - 1),
+            "write count {} exceeds one per (iteration, worker, peer)",
+            stats.batched_writes
+        );
     }
 
     #[test]

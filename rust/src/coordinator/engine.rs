@@ -7,9 +7,11 @@
 //! the recovered bits. Wire time comes from the [`Bus`] model; compute
 //! time from the [`TimeModel`](super::config::TimeModel) (max over
 //! workers for parallel phases). The cluster driver ([`super::cluster`])
-//! runs the same job on real threads over the wire-format transport
-//! layer, sharing this module's [`PreparedJob`] routing tables and
-//! modeled-time folds so its metrics replay bit-identically.
+//! runs the same job on real threads (or processes) over the wire-format
+//! transport layer: its *leader* shares this module's [`PreparedJob`]
+//! accounting replay and modeled-time folds (bit-identical metrics),
+//! while each *worker* consumes only its own [`PreparedWorker`] shard
+//! ([`prepare_worker`]) — membership-sized plan, same canonical orders.
 //!
 //! ## Architecture (§Perf)
 //!
@@ -45,15 +47,16 @@ use crate::network::Bus;
 use crate::runtime::BlockExecutor;
 use crate::shuffle::coded::{encode_group_into, eval_group_values};
 use crate::shuffle::combined::{
-    build_combined_group_plans, combined_value, plan_uncoded_combined,
+    build_combined_group_plans, build_combined_group_plans_sharded, combined_value,
+    plan_uncoded_combined, plan_uncoded_combined_for,
 };
 use crate::shuffle::decoder::decode_group_into;
 #[cfg(feature = "xla")]
 use crate::shuffle::decoder::RecoveredIv;
 use crate::shuffle::load::{ShuffleLoad, HEADER_BYTES};
-use crate::shuffle::plan::{build_group_plans, ShufflePlan};
+use crate::shuffle::plan::{build_group_plans, build_group_plans_sharded, ShufflePlan, WorkerPlan};
 use crate::shuffle::segments::seg_bytes;
-use crate::shuffle::uncoded::{plan_uncoded, UncodedTransfer};
+use crate::shuffle::uncoded::{plan_uncoded, plan_uncoded_for, UncodedTransfer};
 use crate::util::par;
 
 use super::config::{EngineConfig, Scheme, TimeModel};
@@ -204,6 +207,170 @@ impl PreparedJob {
             reduce_s: fold_max(&self.reduce_edges, time.reduce_iv_s),
             ..PhaseTimes::default()
         }
+    }
+}
+
+/// One worker's shard of the prepared job: the local [`WorkerPlan`] (or
+/// transfer shard), its own routing tables, and the reducer→slot index —
+/// everything [`run_worker`](super::cluster::run_worker) needs, sized by
+/// the worker's membership (`≈ (r+1)/K` of the global plan) instead of
+/// the whole graph. Built by [`prepare_worker`] without ever
+/// materializing the global [`PreparedJob`]; the cluster leader keeps
+/// the global one for accounting and ring sizing.
+pub struct PreparedWorker {
+    pub scheme: Scheme,
+    /// The worker this shard belongs to.
+    pub me: u8,
+    /// Computation load `r`.
+    pub r: usize,
+    /// Local multicast-group shard (empty for uncoded schemes).
+    pub plan: WorkerPlan,
+    /// The uncoded transfers this worker sends *or* receives, ascending
+    /// by wire id (empty for coded schemes).
+    pub transfers: Vec<UncodedTransfer>,
+    /// Canonical wire ids (`sender * K + receiver`), 1:1 with
+    /// [`PreparedWorker::transfers`], ascending.
+    pub transfer_ids: Vec<u32>,
+    /// Coded sends: `(local group, sender idx)`, group-ascending.
+    send_items: Vec<(u32, u32)>,
+    /// Local groups whose own row is non-empty, ascending — the decode
+    /// and fold order (identical to the engine's canonical group order).
+    recv_locals: Vec<u32>,
+    /// Indices into `transfers` this worker sends, ascending.
+    unc_send: Vec<u32>,
+    /// Indices into `transfers` this worker receives, ascending.
+    unc_recv: Vec<u32>,
+    /// `reduce_slot[v]` = position of `v` inside this worker's reduce
+    /// row (only the worker's own vertices are populated).
+    pub reduce_slot: Vec<u32>,
+}
+
+impl PreparedWorker {
+    /// Coded multicasts this worker transmits: `(local group, sender
+    /// idx)` pairs, group-ascending (only senders with a non-zero column
+    /// count appear).
+    pub fn send_plan(&self) -> &[(u32, u32)] {
+        &self.send_items
+    }
+
+    /// Local indices of the groups this worker decodes, ascending.
+    pub fn recv_groups(&self) -> &[u32] {
+        &self.recv_locals
+    }
+
+    /// Indices into [`PreparedWorker::transfers`] this worker sends.
+    pub fn unc_sends(&self) -> &[u32] {
+        &self.unc_send
+    }
+
+    /// Indices into [`PreparedWorker::transfers`] this worker receives.
+    pub fn unc_recv(&self) -> &[u32] {
+        &self.unc_recv
+    }
+
+    /// Coded frames expected per iteration: one from each of the other
+    /// `r` members of every group this worker has a non-empty row in.
+    pub fn expect_coded(&self) -> usize {
+        self.recv_locals.len() * self.r
+    }
+
+    /// Uncoded unicast batches expected per iteration.
+    pub fn expect_unc(&self) -> usize {
+        self.unc_recv.len()
+    }
+
+    /// Inbound ring bound for this worker's endpoint — the same rule
+    /// [`super::cluster::worker_ring_capacity`] applies to the global
+    /// tables, so in-process and process-separated runs keep identical
+    /// backpressure.
+    pub fn ring_capacity(&self) -> usize {
+        self.expect_coded() + self.expect_unc() + 8
+    }
+}
+
+/// Build *one worker's* shard of the prepared job — the sharded-path
+/// counterpart of [`prepare`]. The worker only materializes the groups
+/// (or transfers) it is a party to, in `O(m·(r+1)/K)`; group wire ids
+/// are canonical subset ranks and transfer wire ids `sender*K +
+/// receiver`, both order-compatible with the global plan, so a cluster
+/// of sharded workers stays bit-identical to the engine.
+pub fn prepare_worker(job: &Job<'_>, scheme: Scheme, me: u8) -> PreparedWorker {
+    let (g, alloc) = (job.graph, job.alloc);
+    let r = alloc.r;
+    let wk = me as usize;
+    let (plan, id_transfers): (WorkerPlan, Vec<(u32, UncodedTransfer)>) = match scheme {
+        Scheme::Coded => (build_group_plans_sharded(g, alloc, me), Vec::new()),
+        Scheme::Uncoded => {
+            (WorkerPlan::empty(me, r + 1, alloc.k), plan_uncoded_for(g, alloc, me))
+        }
+        Scheme::CodedCombined => (build_combined_group_plans_sharded(g, alloc, me), Vec::new()),
+        Scheme::UncodedCombined => (
+            WorkerPlan::empty(me, r + 1, alloc.k),
+            plan_uncoded_combined_for(g, alloc, me)
+                .into_iter()
+                .map(|(id, t)| {
+                    (
+                        id,
+                        UncodedTransfer {
+                            sender: t.sender,
+                            receiver: t.receiver,
+                            ivs: t.ivs.into_iter().map(|(i, b)| (i, b as Vertex)).collect(),
+                        },
+                    )
+                })
+                .collect(),
+        ),
+    };
+
+    let mut send_items = Vec::new();
+    let mut recv_locals = Vec::new();
+    for l in 0..plan.num_groups() {
+        let group = plan.group(l);
+        for (s_idx, &q) in plan.sender_cols(l).iter().enumerate() {
+            if q > 0 && group.servers[s_idx] == me {
+                send_items.push((l as u32, s_idx as u32));
+            }
+        }
+        let m_idx = group.member_index(me).expect("sharded plan: worker not a member");
+        if group.row_len(m_idx) > 0 {
+            recv_locals.push(l as u32);
+        }
+    }
+
+    let mut transfer_ids = Vec::with_capacity(id_transfers.len());
+    let mut transfers = Vec::with_capacity(id_transfers.len());
+    for (id, t) in id_transfers {
+        transfer_ids.push(id);
+        transfers.push(t);
+    }
+    let mut unc_send = Vec::new();
+    let mut unc_recv = Vec::new();
+    for (ti, t) in transfers.iter().enumerate() {
+        if t.sender == me {
+            unc_send.push(ti as u32);
+        } else {
+            debug_assert_eq!(t.receiver, me, "sharded transfer without its worker");
+            unc_recv.push(ti as u32);
+        }
+    }
+
+    let mut reduce_slot = vec![0u32; alloc.n];
+    for (slot, &v) in alloc.reduce_sets[wk].iter().enumerate() {
+        reduce_slot[v as usize] = slot as u32;
+    }
+
+    PreparedWorker {
+        scheme,
+        me,
+        r,
+        plan,
+        transfers,
+        transfer_ids,
+        send_items,
+        recv_locals,
+        unc_send,
+        unc_recv,
+        reduce_slot,
     }
 }
 
@@ -1074,6 +1241,92 @@ mod tests {
             assert_eq!(sends, want_sends, "{scheme} r={r}");
             let total_unc: usize = (0..5).map(|kk| prep.unc_sends(kk).len()).sum();
             assert_eq!(total_unc, prep.transfers.len());
+        }
+    }
+
+    #[test]
+    fn prepare_worker_matches_global_routing() {
+        // the sharded prepare must reproduce exactly the per-worker slice
+        // of the global routing tables: send/recv groups (via subset-rank
+        // wire ids), expected frame counts, transfers, and reduce slots
+        use crate::combinatorics::subset_rank;
+        let g = er(150, 0.12, &mut DetRng::seed(56));
+        for (scheme, r) in [
+            (Scheme::Coded, 2),
+            (Scheme::Coded, 1),
+            (Scheme::Uncoded, 3),
+            (Scheme::CodedCombined, 2),
+            (Scheme::UncodedCombined, 2),
+        ] {
+            let k = 5usize;
+            let alloc = Allocation::er_scheme(150, k, r);
+            let prog = PageRank::default();
+            let job = Job { graph: &g, alloc: &alloc, program: &prog };
+            let prep = prepare(&job, scheme);
+            for me in 0..k as u8 {
+                let pw = prepare_worker(&job, scheme, me);
+                assert_eq!(pw.me, me);
+                assert_eq!(pw.r, r);
+                // coded routing: same (group, sender) sequence via wire ids
+                let want_sends: Vec<(u32, u32)> = prep
+                    .send_plan(me as usize)
+                    .iter()
+                    .map(|&(gi, si)| {
+                        (subset_rank(k, prep.plan.group(gi as usize).servers) as u32, si)
+                    })
+                    .collect();
+                let got_sends: Vec<(u32, u32)> = pw
+                    .send_plan()
+                    .iter()
+                    .map(|&(l, si)| (pw.plan.wire_id(l as usize), si))
+                    .collect();
+                assert_eq!(got_sends, want_sends, "{scheme} me={me}");
+                let want_recv: Vec<u32> = prep
+                    .recv_groups(me as usize)
+                    .iter()
+                    .map(|&gi| subset_rank(k, prep.plan.group(gi as usize).servers) as u32)
+                    .collect();
+                let got_recv: Vec<u32> = pw
+                    .recv_groups()
+                    .iter()
+                    .map(|&l| pw.plan.wire_id(l as usize))
+                    .collect();
+                assert_eq!(got_recv, want_recv, "{scheme} me={me}");
+                assert_eq!(pw.expect_coded(), prep.expect_coded(me as usize));
+                assert_eq!(pw.expect_unc(), prep.expect_unc(me as usize));
+                // uncoded routing: the same transfers, in the same order
+                let want_send_ti: Vec<&UncodedTransfer> = prep
+                    .unc_sends(me as usize)
+                    .iter()
+                    .map(|&ti| &prep.transfers[ti as usize])
+                    .collect();
+                let got_send_ti: Vec<&UncodedTransfer> =
+                    pw.unc_sends().iter().map(|&ti| &pw.transfers[ti as usize]).collect();
+                assert_eq!(got_send_ti.len(), want_send_ti.len());
+                for (a, b) in got_send_ti.iter().zip(&want_send_ti) {
+                    assert_eq!((a.sender, a.receiver), (b.sender, b.receiver));
+                    assert_eq!(a.ivs, b.ivs, "{scheme} me={me}");
+                }
+                let want_recv_ti: Vec<&UncodedTransfer> = prep
+                    .unc_recv(me as usize)
+                    .iter()
+                    .map(|&ti| &prep.transfers[ti as usize])
+                    .collect();
+                let got_recv_ti: Vec<&UncodedTransfer> =
+                    pw.unc_recv().iter().map(|&ti| &pw.transfers[ti as usize]).collect();
+                assert_eq!(got_recv_ti.len(), want_recv_ti.len());
+                for (a, b) in got_recv_ti.iter().zip(&want_recv_ti) {
+                    assert_eq!((a.sender, a.receiver), (b.sender, b.receiver));
+                    assert_eq!(a.ivs, b.ivs, "{scheme} me={me}");
+                }
+                // reduce slots agree on every vertex this worker owns
+                for &v in &alloc.reduce_sets[me as usize] {
+                    assert_eq!(pw.reduce_slot[v as usize], prep.reduce_slot[v as usize]);
+                }
+                let leader_view =
+                    super::super::cluster::worker_ring_capacity(&prep, me as usize);
+                assert_eq!(pw.ring_capacity(), leader_view, "{scheme} me={me}");
+            }
         }
     }
 

@@ -4,8 +4,10 @@
 //! * [`metrics`] — phase times, loads, job reports (the figures' data).
 //! * [`engine`] — the deterministic phase engine: flat-arena shuffle
 //!   plans, a reusable [`EngineScratch`] (zero-allocation steady-state
-//!   iterations), rayon-parallel phases with bit-identical results, and
-//!   the precomputed per-worker routing tables the cluster shares.
+//!   iterations), rayon-parallel phases with bit-identical results, the
+//!   precomputed global routing tables the leader replays
+//!   ([`PreparedJob`]), and the per-worker shard the cluster workers
+//!   consume instead ([`PreparedWorker`] via [`prepare_worker`]).
 //! * [`cluster`] — the leader/worker driver over the pluggable
 //!   [`transport`](crate::transport) layer (wire-format frames, in-proc
 //!   rings, a localhost TCP mesh, or one process-separated TCP endpoint
@@ -25,7 +27,8 @@ pub use cluster::{run_cluster, run_cluster_on, run_leader, run_worker};
 pub use config::{EngineConfig, Scheme, TimeModel};
 pub use spec::{AllocKind, BuiltJob, GraphKind, GraphSpec, JobSpec, ProgramSpec};
 pub use engine::{
-    measure_loads, measure_loads_prepared, prepare, run, run_iteration, run_iteration_scratch,
-    run_rust, Backend, EngineScratch, Job, PreparedJob, XlaKind,
+    measure_loads, measure_loads_prepared, prepare, prepare_worker, run, run_iteration,
+    run_iteration_scratch, run_rust, Backend, EngineScratch, Job, PreparedJob, PreparedWorker,
+    XlaKind,
 };
 pub use metrics::{IterationMetrics, JobReport, PhaseTimes};

@@ -8,9 +8,16 @@
 //! that produce them: every generator in this crate is
 //! [`DetRng`]-seeded and platform-independent, so a worker rebuilding
 //! `(graph, allocation, program)` from the spec gets structures
-//! bit-identical to the leader's — which is what lets the cluster keep
-//! its shared-[`PreparedJob`](super::PreparedJob) routing tables without
-//! ever putting a routing table on the wire.
+//! bit-identical to the leader's — no routing table ever touches the
+//! wire. Under the **sharded path** the round trip is: leader
+//! [`encode_line`](JobSpec::encode_line) → bootstrap → worker
+//! [`decode_line`](JobSpec::decode_line) → [`JobSpec::materialize`] →
+//! [`JobSpec::prepare_worker`], after which the worker holds only its
+//! own [`PreparedWorker`](super::PreparedWorker) shard (`≈ (r+1)/K` of
+//! the plan) while the leader keeps the global
+//! [`PreparedJob`](super::PreparedJob) for accounting; the shard's
+//! subset-rank wire ids are derived from `(K, r)` alone, so both sides
+//! agree on every frame id without exchanging plans.
 //!
 //! The wire form is a single `v1`-prefixed line of `key=value` tokens,
 //! e.g.
@@ -29,7 +36,7 @@ use crate::mapreduce::{ConnectedComponents, PageRank, Sssp, VertexProgram};
 use crate::util::rng::DetRng;
 
 use super::config::Scheme;
-use super::engine::Job;
+use super::engine::{prepare_worker, Job, PreparedWorker};
 
 /// Graph family + parameters (the CLI's `--graph` surface).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -151,6 +158,14 @@ impl JobSpec {
             alloc: self.build_alloc(),
             program: self.program.build(),
         }
+    }
+
+    /// Prepare worker `me`'s shard of this spec's job — what a
+    /// `coded-graph worker` process builds after
+    /// [`JobSpec::materialize`]: only the groups/transfers the worker is
+    /// a party to, never the global prepared job.
+    pub fn prepare_worker(&self, built: &BuiltJob, me: u8) -> PreparedWorker {
+        prepare_worker(&built.job(), self.scheme, me)
     }
 
     /// Serialize to the single-line bootstrap wire form.
@@ -338,6 +353,23 @@ mod tests {
         assert_eq!(built.program.name(), PageRank::default().name());
         let job = built.job();
         assert_eq!(job.graph.n(), 600);
+    }
+
+    #[test]
+    fn sharded_prepare_survives_the_wire_round_trip() {
+        // a worker that only ever saw the encoded line builds the same
+        // shard as one built from the original spec — the sharded path's
+        // determinism contract
+        let spec = specs()[0];
+        let wire = JobSpec::decode_line(&spec.encode_line()).unwrap();
+        let a = spec.prepare_worker(&spec.materialize(), 1);
+        let b = wire.prepare_worker(&wire.materialize(), 1);
+        assert_eq!(a.me, b.me);
+        assert_eq!(a.plan.wire_ids(), b.plan.wire_ids());
+        assert_eq!(a.plan.total_ivs(), b.plan.total_ivs());
+        assert_eq!(a.send_plan(), b.send_plan());
+        assert_eq!(a.recv_groups(), b.recv_groups());
+        assert_eq!(a.transfer_ids, b.transfer_ids);
     }
 
     #[test]

@@ -34,7 +34,7 @@ use std::time::Duration;
 
 use coded_graph::allocation::Allocation;
 use coded_graph::analysis::theory;
-use coded_graph::coordinator::cluster::{leader_ring_capacity, worker_ring_capacity};
+use coded_graph::coordinator::cluster::leader_ring_capacity;
 use coded_graph::coordinator::{
     prepare, run_cluster, run_cluster_on, run_leader, run_rust, run_worker, AllocKind, BuiltJob,
     EngineConfig, GraphKind, GraphSpec, Job, JobReport, JobSpec, ProgramSpec, Scheme,
@@ -537,11 +537,13 @@ fn cmd_worker(args: &Args) -> Result<(), String> {
     }
 
     // rebuild the job deterministically from the spec (bit-identical to
-    // the leader's) and wire our endpoint into the mesh
+    // the leader's), prepare only this worker's shard of it, and wire
+    // our endpoint into the mesh — startup and memory scale with the
+    // shard (≈ (r+1)/K of the plan), not the whole graph's plan
     let built = spec.materialize();
     let job = built.job();
-    let prep = prepare(&job, spec.scheme);
-    let cap = worker_ring_capacity(&prep, id as usize);
+    let prep = spec.prepare_worker(&built, id);
+    let cap = prep.ring_capacity();
     let net = TcpEndpoint::wire(id, &data_listener, &roster, cap, timeout)
         .map_err(|e| e.to_string())?;
     // a peer failure panics out of run_worker; the guard inside aborts

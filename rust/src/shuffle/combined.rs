@@ -27,7 +27,8 @@ use crate::graph::csr::{Csr, Vertex};
 use crate::mapreduce::program::VertexProgram;
 
 use super::load::ShuffleLoad;
-use super::plan::ShufflePlan;
+use super::plan::{ShufflePlan, WorkerPlan};
+use super::uncoded::transfer_wire_id;
 
 /// Build combiner-granularity group plans: row entries are `(i, t)` pairs
 /// (`t` = batch index, stored in the mapper slot), canonical order
@@ -76,6 +77,178 @@ pub fn build_combined_group_plans(g: &Csr, alloc: &Allocation) -> ShufflePlan {
     // `seen` is sorted per batch; group order canonicalized by the arena
     // builder's sort.
     ShufflePlan::from_nested(r + 1, nested)
+}
+
+/// One worker's shard of the combined group plans: only groups
+/// containing `me`, rows identical to [`build_combined_group_plans`]
+/// restricted to membership — the combined-scheme sibling of
+/// [`super::plan::build_group_plans_sharded`] (same two-sweep shape:
+/// foreign rows from the batches this worker Maps, its own row from its
+/// Reduce set, dedup + `(t, i)` sort restoring the canonical order).
+pub fn build_combined_group_plans_sharded(g: &Csr, alloc: &Allocation, me: u8) -> WorkerPlan {
+    let r = alloc.r;
+    let mut index: HashMap<Vec<u8>, usize> = HashMap::new();
+    let mut nested: Vec<(Vec<u8>, Vec<Vec<(Vertex, Vertex)>>)> = Vec::new();
+    let mut s_buf: Vec<u8> = Vec::with_capacity(r + 1);
+    let resolve = |s_buf: &[u8],
+                   index: &mut HashMap<Vec<u8>, usize>,
+                   nested: &mut Vec<(Vec<u8>, Vec<Vec<(Vertex, Vertex)>>)>|
+     -> usize {
+        match index.get(s_buf) {
+            Some(&idx) => idx,
+            None => {
+                let idx = nested.len();
+                index.insert(s_buf.to_vec(), idx);
+                nested.push((s_buf.to_vec(), vec![Vec::new(); r + 1]));
+                idx
+            }
+        }
+    };
+
+    // sweep 1: foreign rows, from the batches this worker Maps
+    let mut seen: Vec<Vertex> = Vec::new();
+    for &t in &alloc.mapped_batches[me as usize] {
+        let batch = &alloc.batches[t];
+        seen.clear();
+        for j in batch.vertices() {
+            for &i in g.neighbors(j) {
+                if batch.servers.binary_search(&alloc.reduce_owner[i as usize]).is_err() {
+                    seen.push(i);
+                }
+            }
+        }
+        seen.sort_unstable();
+        seen.dedup();
+        for &i in &seen {
+            let k = alloc.reduce_owner[i as usize];
+            s_buf.clear();
+            let ins = batch.servers.partition_point(|&x| x < k);
+            s_buf.extend_from_slice(&batch.servers[..ins]);
+            s_buf.push(k);
+            s_buf.extend_from_slice(&batch.servers[ins..]);
+            let group_idx = resolve(&s_buf, &mut index, &mut nested);
+            nested[group_idx].1[ins].push((i, t as Vertex));
+        }
+    }
+
+    // sweep 2: this worker's own row — (i, t) keys for its reducers with
+    // edges into foreign batches, deduped and sorted to canonical (t, i)
+    let mut mine: Vec<(u32, Vertex)> = Vec::new();
+    for &i in &alloc.reduce_sets[me as usize] {
+        for &j in g.neighbors(i) {
+            let t = alloc.batch_of(j);
+            if alloc.batches[t].servers.binary_search(&me).is_err() {
+                mine.push((t as u32, i));
+            }
+        }
+    }
+    mine.sort_unstable();
+    mine.dedup();
+    const UNRESOLVED: usize = usize::MAX;
+    let mut bslot: Vec<(usize, usize)> = vec![(UNRESOLVED, 0); alloc.batches.len()];
+    for &(t, i) in &mine {
+        let (group_idx, member) = {
+            let cached = bslot[t as usize];
+            if cached.0 != UNRESOLVED {
+                cached
+            } else {
+                let t_servers = &alloc.batches[t as usize].servers;
+                s_buf.clear();
+                let ins = t_servers.partition_point(|&x| x < me);
+                s_buf.extend_from_slice(&t_servers[..ins]);
+                s_buf.push(me);
+                s_buf.extend_from_slice(&t_servers[ins..]);
+                let group_idx = resolve(&s_buf, &mut index, &mut nested);
+                bslot[t as usize] = (group_idx, ins);
+                (group_idx, ins)
+            }
+        };
+        nested[group_idx].1[member].push((i, t as Vertex));
+    }
+
+    WorkerPlan::from_nested(me, r + 1, alloc.k, nested)
+}
+
+/// Plan only the combined transfers worker `me` sends or receives, each
+/// tagged with its canonical wire id
+/// ([`super::uncoded::transfer_wire_id`]), ascending — the combined
+/// sibling of [`super::uncoded::plan_uncoded_for`]. Equals
+/// [`plan_uncoded_combined`] filtered to `sender == me || receiver == me`
+/// with identical `(t asc, i asc)` IV order per transfer.
+pub fn plan_uncoded_combined_for(
+    g: &Csr,
+    alloc: &Allocation,
+    me: u8,
+) -> Vec<(u32, CombinedTransfer)> {
+    let kk = alloc.k;
+    let mut out: Vec<(u32, CombinedTransfer)> = Vec::new();
+
+    // sends: batches whose canonical mapper is me, in batch order
+    let mut pair_idx = vec![usize::MAX; kk];
+    let mut seen: Vec<Vertex> = Vec::new();
+    for &t in &alloc.mapped_batches[me as usize] {
+        let batch = &alloc.batches[t];
+        if batch.servers[0] != me {
+            continue;
+        }
+        seen.clear();
+        for j in batch.vertices() {
+            for &i in g.neighbors(j) {
+                if batch.servers.binary_search(&alloc.reduce_owner[i as usize]).is_err() {
+                    seen.push(i);
+                }
+            }
+        }
+        seen.sort_unstable();
+        seen.dedup();
+        for &i in &seen {
+            let k = alloc.reduce_owner[i as usize];
+            let ti = if pair_idx[k as usize] == usize::MAX {
+                pair_idx[k as usize] = out.len();
+                out.push((
+                    transfer_wire_id(kk, me, k),
+                    CombinedTransfer { sender: me, receiver: k, ivs: Vec::new() },
+                ));
+                out.len() - 1
+            } else {
+                pair_idx[k as usize]
+            };
+            out[ti].1.ivs.push((i, t as u32));
+        }
+    }
+
+    // receives: reducer-major over the worker's Reduce set, deduped and
+    // sorted back to the canonical (t, i) order per sender
+    let recv_start = out.len();
+    let mut recv_idx = vec![usize::MAX; kk];
+    for &i in &alloc.reduce_sets[me as usize] {
+        for &j in g.neighbors(i) {
+            let t = alloc.batch_of(j);
+            let batch = &alloc.batches[t];
+            if batch.servers.binary_search(&me).is_ok() {
+                continue;
+            }
+            let s = batch.servers[0];
+            let ti = if recv_idx[s as usize] == usize::MAX {
+                recv_idx[s as usize] = out.len();
+                out.push((
+                    transfer_wire_id(kk, s, me),
+                    CombinedTransfer { sender: s, receiver: me, ivs: Vec::new() },
+                ));
+                out.len() - 1
+            } else {
+                recv_idx[s as usize]
+            };
+            out[ti].1.ivs.push((i, t as u32));
+        }
+    }
+    for (_, t) in &mut out[recv_start..] {
+        t.ivs.sort_unstable_by_key(|&(i, b)| (b, i));
+        t.ivs.dedup();
+    }
+
+    out.sort_by_key(|&(id, _)| id);
+    out
 }
 
 /// Evaluate a combined IV `u_{i,t}`: fold the program's Map over the
@@ -260,6 +433,53 @@ mod tests {
         let (unc_c, _) = measure_combined_loads(&g, &alloc);
         assert!(unc_c <= unc);
         assert!(unc_c > unc * 0.8, "sparse: combining buys little ({unc_c} vs {unc})");
+    }
+
+    #[test]
+    fn sharded_combined_plan_matches_global_membership_filter() {
+        let g = er(140, 0.2, &mut DetRng::seed(8));
+        for r in 1..4 {
+            let alloc = Allocation::er_scheme(140, 5, r);
+            let global = build_combined_group_plans(&g, &alloc);
+            for me in 0..5u8 {
+                let shard = build_combined_group_plans_sharded(&g, &alloc, me);
+                let mut l = 0usize;
+                for gi in 0..global.num_groups() {
+                    let gp = global.group(gi);
+                    if gp.member_index(me).is_none() {
+                        continue;
+                    }
+                    let sp = shard.group(l);
+                    assert_eq!(sp.servers, gp.servers, "me={me} r={r}");
+                    for idx in 0..gp.members() {
+                        assert_eq!(sp.row(idx), gp.row(idx), "me={me} r={r} row {idx}");
+                    }
+                    assert_eq!(shard.sender_cols(l), global.sender_cols(gi));
+                    l += 1;
+                }
+                assert_eq!(l, shard.num_groups(), "me={me} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_combined_transfers_match_global_party_filter() {
+        let g = er(130, 0.2, &mut DetRng::seed(9));
+        let alloc = Allocation::er_scheme(130, 5, 2);
+        let global = plan_uncoded_combined(&g, &alloc);
+        for me in 0..5u8 {
+            let mine = plan_uncoded_combined_for(&g, &alloc, me);
+            let want: Vec<&CombinedTransfer> = global
+                .iter()
+                .filter(|t| t.sender == me || t.receiver == me)
+                .collect();
+            assert_eq!(mine.len(), want.len(), "me={me}");
+            for ((id, got), w) in mine.iter().zip(&want) {
+                assert_eq!(*id, transfer_wire_id(5, w.sender, w.receiver));
+                assert_eq!((got.sender, got.receiver), (w.sender, w.receiver));
+                assert_eq!(got.ivs, w.ivs, "me={me} {}->{}", w.sender, w.receiver);
+            }
+        }
     }
 
     #[test]

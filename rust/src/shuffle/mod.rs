@@ -3,7 +3,11 @@
 //! * [`plan`] — multicast-group planning: for every (r+1)-subset `S` of
 //!   servers, the per-member IV lists `Z^k_{S\{k}}` (paper eq. (14)),
 //!   stored as one flat pair arena + CSR-style offset tables
-//!   ([`ShufflePlan`]) in canonical group order.
+//!   ([`ShufflePlan`]) in canonical group order — plus the per-worker
+//!   shard ([`WorkerPlan`], [`build_group_plans_sharded`]): only the
+//!   groups a worker is a member of, labeled with global-order-preserving
+//!   subset-rank wire ids, so cluster workers scale with their shard
+//!   instead of the whole graph.
 //! * [`segments`] — splitting a `T`-bit IV into `r` segments and
 //!   reassembling (paper §IV-A "each intermediate value is evenly split
 //!   into r segments").
@@ -28,4 +32,4 @@ pub mod uncoded;
 pub use coded::{encode_group, encode_sender, encode_sender_into, eval_rows_except, CodedMessage};
 pub use decoder::{decode_from_sender, decode_sender_into, recover_group, RecoveredIv};
 pub use load::{normalized, ShuffleLoad};
-pub use plan::{build_group_plans, GroupRef, ShufflePlan};
+pub use plan::{build_group_plans, build_group_plans_sharded, GroupRef, ShufflePlan, WorkerPlan};

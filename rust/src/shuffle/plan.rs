@@ -27,6 +27,7 @@
 use std::collections::HashMap;
 
 use crate::allocation::Allocation;
+use crate::combinatorics::{choose, subset_rank};
 use crate::graph::csr::{Csr, Vertex};
 
 /// All multicast groups of a job, flattened into one arena.
@@ -369,6 +370,268 @@ pub fn build_group_plans(g: &Csr, alloc: &Allocation) -> ShufflePlan {
     ShufflePlan::from_nested(r + 1, nested)
 }
 
+/// One worker's shard of the multicast-group plan: only the groups the
+/// worker is a *member* of — roughly a `(r+1)/K` fraction of the global
+/// pair arena — in the same canonical order the global plan uses.
+///
+/// ## Wire ids without global state
+///
+/// The global [`ShufflePlan`] numbers its (non-empty) groups densely in
+/// canonical sorted-by-member-set order; a worker that never builds the
+/// global plan cannot know those dense ids. Instead, the shard labels
+/// each group with its **lexicographic subset rank** among all
+/// `C(K, r+1)` member sets ([`crate::combinatorics::subset_rank`]).
+/// Because the global canonical order *is* lexicographic subset order,
+/// rank-ascending equals dense-id-ascending — so workers that exchange
+/// ranks on the wire decode and fold in exactly the engine's canonical
+/// group order, and final states stay bit-identical without any worker
+/// ever materializing a group it is not a member of.
+///
+/// Storage reuses the [`ShufflePlan`] flat-arena layout (pairs, row
+/// offsets, per-sender column counts), restricted to the member groups.
+pub struct WorkerPlan {
+    me: u8,
+    /// Total servers `K` (the wire-id space is (r+1)-subsets of `[K]`).
+    k_total: usize,
+    /// Canonical wire ids, 1:1 with the shard's groups, strictly ascending.
+    gids: Vec<u32>,
+    /// The shard arena: global-plan layout, member groups only.
+    shard: ShufflePlan,
+}
+
+impl WorkerPlan {
+    /// An empty shard (uncoded schemes, or `r = K`).
+    pub fn empty(me: u8, members: usize, k_total: usize) -> Self {
+        WorkerPlan { me, k_total, gids: Vec::new(), shard: ShufflePlan::empty(members) }
+    }
+
+    /// Wrap sharded nested rows (every group must contain `me`) into the
+    /// canonical arena and label each group with its subset rank.
+    pub(crate) fn from_nested(
+        me: u8,
+        members: usize,
+        k_total: usize,
+        nested: Vec<(Vec<u8>, Vec<Vec<(Vertex, Vertex)>>)>,
+    ) -> Self {
+        assert!(
+            choose(k_total, members) <= u32::MAX as u64,
+            "C({k_total}, {members}) group ids do not fit the u32 wire field"
+        );
+        let shard = ShufflePlan::from_nested(members, nested);
+        let gids: Vec<u32> = (0..shard.num_groups())
+            .map(|l| {
+                let servers = shard.group(l).servers;
+                debug_assert!(servers.contains(&me), "sharded group without its worker");
+                subset_rank(k_total, servers) as u32
+            })
+            .collect();
+        debug_assert!(
+            gids.windows(2).all(|w| w[0] < w[1]),
+            "subset ranks must preserve the canonical group order"
+        );
+        WorkerPlan { me, k_total, gids, shard }
+    }
+
+    /// The worker this shard belongs to.
+    #[inline]
+    pub fn me(&self) -> u8 {
+        self.me
+    }
+
+    /// Total servers `K` the wire-id space ranges over.
+    #[inline]
+    pub fn k_total(&self) -> usize {
+        self.k_total
+    }
+
+    /// Members per group (`r + 1`).
+    #[inline]
+    pub fn members(&self) -> usize {
+        self.shard.members()
+    }
+
+    /// Number of member groups in the shard.
+    #[inline]
+    pub fn num_groups(&self) -> usize {
+        self.shard.num_groups()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.shard.is_empty()
+    }
+
+    /// Shard pair-arena length: the sum of the member groups' IV counts
+    /// (strictly below the global plan's [`ShufflePlan::total_ivs`]
+    /// whenever `K > r + 1` and some non-member group is non-empty).
+    #[inline]
+    pub fn total_ivs(&self) -> usize {
+        self.shard.total_ivs()
+    }
+
+    /// View of local group `l` (same [`GroupRef`] the kernels consume).
+    #[inline]
+    pub fn group(&self, l: usize) -> GroupRef<'_> {
+        self.shard.group(l)
+    }
+
+    /// Per-sender coded column counts of local group `l`.
+    #[inline]
+    pub fn sender_cols(&self, l: usize) -> &[u32] {
+        self.shard.sender_cols(l)
+    }
+
+    /// Canonical wire id of local group `l`.
+    #[inline]
+    pub fn wire_id(&self, l: usize) -> u32 {
+        self.gids[l]
+    }
+
+    /// All wire ids, ascending (1:1 with local group indices).
+    #[inline]
+    pub fn wire_ids(&self) -> &[u32] {
+        &self.gids
+    }
+
+    /// Local index of the group with canonical wire id `wire`.
+    #[inline]
+    pub fn local_of(&self, wire: u32) -> Option<usize> {
+        self.gids.binary_search(&wire).ok()
+    }
+
+    /// The underlying shard arena (global-plan layout, member groups only).
+    #[inline]
+    pub fn shard(&self) -> &ShufflePlan {
+        &self.shard
+    }
+}
+
+/// Build *one worker's* shard of the group plans: only groups containing
+/// `me`, with rows, pair order, and column counts identical to the global
+/// [`build_group_plans`] restricted to those groups — built in one pass
+/// without constructing the global plan.
+///
+/// Two sweeps cover every row of every member group exactly once:
+///
+/// 1. **Other members' rows.** The row of member `k ≠ me` in group `S`
+///    comes from batch `S \ {k}`, which contains `me` — so walking only
+///    the batches this worker Maps (an `r/K` fraction of the edges)
+///    produces every foreign row, already in canonical `(j, i)` order.
+/// 2. **This worker's own rows.** The row of `me` in `S` comes from batch
+///    `S \ {me}` (which does *not* contain `me`); walking the worker's
+///    own Reduce set (`Σ deg ≈ m/K` edges) finds each such pair as
+///    `(i ∈ R_me, j ∈ N(i))`, and a per-row sort restores the canonical
+///    `(j, i)` order the reducer-major walk scrambles.
+///
+/// Total work is `O(m·(r+1)/K)` instead of the global build's `O(m)`.
+pub fn build_group_plans_sharded(g: &Csr, alloc: &Allocation, me: u8) -> WorkerPlan {
+    let r = alloc.r;
+    let k_total = alloc.k;
+    let mut index: HashMap<Vec<u8>, usize> = HashMap::new();
+    let mut nested: Vec<(Vec<u8>, Vec<Vec<(Vertex, Vertex)>>)> = Vec::new();
+    const UNRESOLVED: usize = usize::MAX;
+    const LOCAL: usize = usize::MAX - 1;
+    let mut s_buf: Vec<u8> = Vec::with_capacity(r + 1);
+    // one canonicalize-and-resolve path for both sweeps: insert `extra`
+    // into the sorted batch set, look the group up (or create it), and
+    // return (group index, extra's member position). State comes in as
+    // parameters (not captures) so the sweeps can keep pushing into
+    // `nested` between calls.
+    let resolve = |t_servers: &[u8],
+                   extra: u8,
+                   s_buf: &mut Vec<u8>,
+                   index: &mut HashMap<Vec<u8>, usize>,
+                   nested: &mut Vec<(Vec<u8>, Vec<Vec<(Vertex, Vertex)>>)>|
+     -> (usize, usize) {
+        s_buf.clear();
+        let ins = t_servers.partition_point(|&x| x < extra);
+        s_buf.extend_from_slice(&t_servers[..ins]);
+        s_buf.push(extra);
+        s_buf.extend_from_slice(&t_servers[ins..]);
+        let group_idx = match index.get(s_buf.as_slice()) {
+            Some(&idx) => idx,
+            None => {
+                let idx = nested.len();
+                index.insert(s_buf.clone(), idx);
+                nested.push((s_buf.clone(), vec![Vec::new(); r + 1]));
+                idx
+            }
+        };
+        (group_idx, ins)
+    };
+
+    // sweep 1: foreign rows, from the batches this worker Maps
+    let mut slot = vec![(UNRESOLVED, 0usize); k_total];
+    for &t in &alloc.mapped_batches[me as usize] {
+        let batch = &alloc.batches[t];
+        let t_servers = &batch.servers;
+        for s in slot.iter_mut() {
+            *s = (UNRESOLVED, 0);
+        }
+        for j in batch.vertices() {
+            for &i in g.neighbors(j) {
+                let k = alloc.reduce_owner[i as usize] as usize;
+                let (group_idx, member) = {
+                    let cached = slot[k];
+                    if cached.0 == LOCAL {
+                        continue;
+                    }
+                    if cached.0 != UNRESOLVED {
+                        cached
+                    } else {
+                        if t_servers.binary_search(&(k as u8)).is_ok() {
+                            slot[k] = (LOCAL, 0);
+                            continue;
+                        }
+                        let resolved =
+                            resolve(t_servers, k as u8, &mut s_buf, &mut index, &mut nested);
+                        slot[k] = resolved;
+                        resolved
+                    }
+                };
+                debug_assert_eq!(nested[group_idx].0[member], k as u8);
+                nested[group_idx].1[member].push((i, j));
+            }
+        }
+    }
+
+    // sweep 2: this worker's own rows, reducer-major over its Reduce set
+    let mut bslot: Vec<(usize, usize)> = vec![(UNRESOLVED, 0); alloc.batches.len()];
+    for &i in &alloc.reduce_sets[me as usize] {
+        for &j in g.neighbors(i) {
+            let t = alloc.batch_of(j);
+            let (group_idx, member) = {
+                let cached = bslot[t];
+                if cached.0 == LOCAL {
+                    continue;
+                }
+                if cached.0 != UNRESOLVED {
+                    cached
+                } else {
+                    let t_servers = &alloc.batches[t].servers;
+                    if t_servers.binary_search(&me).is_ok() {
+                        bslot[t] = (LOCAL, 0);
+                        continue;
+                    }
+                    let resolved = resolve(t_servers, me, &mut s_buf, &mut index, &mut nested);
+                    bslot[t] = resolved;
+                    resolved
+                }
+            };
+            debug_assert_eq!(nested[group_idx].0[member], me);
+            nested[group_idx].1[member].push((i, j));
+        }
+    }
+    // restore the canonical (j asc, i asc) order the reducer-major sweep
+    // scrambled (batches tile 0..n ascending, so (j, i) also sorts by batch)
+    for (servers, rows) in nested.iter_mut() {
+        let m = servers.iter().position(|&x| x == me).expect("me in own group");
+        rows[m].sort_unstable_by_key(|&(i, j)| (j, i));
+    }
+
+    WorkerPlan::from_nested(me, r + 1, k_total, nested)
+}
+
 /// Count of *all* needed IVs (the uncoded traffic in IV units) — equals
 /// the plan's [`ShufflePlan::total_ivs`]; exposed for cross-checking the
 /// two schemes.
@@ -537,5 +800,65 @@ mod tests {
         let alloc = Allocation::er_scheme(50, 4, 4);
         assert!(build_group_plans(&g, &alloc).is_empty());
         assert_eq!(total_needed_ivs(&g, &alloc), 0);
+    }
+
+    #[test]
+    fn sharded_plan_matches_global_membership_filter() {
+        // every worker's shard == the global plan restricted to the
+        // groups it is a member of: same servers, rows, column counts,
+        // and the wire ids preserve the canonical order
+        let g = er(160, 0.12, &mut DetRng::seed(14));
+        for r in 1..5 {
+            let alloc = Allocation::er_scheme(160, 5, r);
+            let global = build_group_plans(&g, &alloc);
+            for me in 0..5u8 {
+                let shard = build_group_plans_sharded(&g, &alloc, me);
+                let mut l = 0usize;
+                let mut pair_sum = 0usize;
+                for gi in 0..global.num_groups() {
+                    let gp = global.group(gi);
+                    if gp.member_index(me).is_none() {
+                        continue;
+                    }
+                    let sp = shard.group(l);
+                    assert_eq!(sp.servers, gp.servers, "me={me} gi={gi}");
+                    for idx in 0..gp.members() {
+                        assert_eq!(sp.row(idx), gp.row(idx), "me={me} gi={gi} row {idx}");
+                    }
+                    assert_eq!(shard.sender_cols(l), global.sender_cols(gi));
+                    assert_eq!(
+                        shard.wire_id(l),
+                        crate::combinatorics::subset_rank(5, gp.servers) as u32
+                    );
+                    assert_eq!(shard.local_of(shard.wire_id(l)), Some(l));
+                    pair_sum += gp.total_ivs();
+                    l += 1;
+                }
+                assert_eq!(l, shard.num_groups(), "me={me} r={r}: extra shard groups");
+                // the acceptance arithmetic: shard arena == member-group sum,
+                // strictly below the global arena whenever K > r + 1
+                assert_eq!(shard.total_ivs(), pair_sum, "me={me} r={r}");
+                if 5 > r + 1 && global.total_ivs() > 0 {
+                    assert!(
+                        shard.total_ivs() < global.total_ivs(),
+                        "me={me} r={r}: shard must be a strict subset"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_plan_wire_ids_strictly_ascend() {
+        let g = er(140, 0.15, &mut DetRng::seed(15));
+        let alloc = Allocation::er_scheme(140, 6, 2);
+        for me in 0..6u8 {
+            let shard = build_group_plans_sharded(&g, &alloc, me);
+            assert!(shard.wire_ids().windows(2).all(|w| w[0] < w[1]), "me={me}");
+            for l in 0..shard.num_groups() {
+                assert!(shard.group(l).servers.contains(&me));
+            }
+            assert!(shard.local_of(u32::MAX).is_none());
+        }
     }
 }

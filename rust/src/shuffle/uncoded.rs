@@ -27,12 +27,14 @@ pub struct UncodedTransfer {
 /// Deterministic order: senders ascending, receivers ascending.
 pub fn plan_uncoded(g: &Csr, alloc: &Allocation) -> Vec<UncodedTransfer> {
     // flat (sender, receiver) -> transfer-index table; per-(batch, k)
-    // membership resolved once via a slot cache, not per edge (§Perf)
+    // membership resolved once via a slot cache, not per edge (§Perf).
+    // Sentinels are u16 so they cannot collide with a legal u8 worker id
+    // (at K = 255, id 254 would otherwise equal a u8 LOCAL marker).
     let kk = alloc.k;
     let mut pair_idx = vec![usize::MAX; kk * kk];
     let mut out: Vec<UncodedTransfer> = Vec::new();
-    const UNRESOLVED: u8 = u8::MAX;
-    const LOCAL: u8 = u8::MAX - 1;
+    const UNRESOLVED: u16 = u16::MAX;
+    const LOCAL: u16 = u16::MAX - 1;
     let mut slot = vec![UNRESOLVED; kk];
     for batch in &alloc.batches {
         let sender = batch.servers[0]; // canonical: lowest-id replica
@@ -49,7 +51,7 @@ pub fn plan_uncoded(g: &Csr, alloc: &Allocation) -> Vec<UncodedTransfer> {
                         slot[k as usize] = LOCAL;
                         continue;
                     }
-                    slot[k as usize] = k;
+                    slot[k as usize] = k as u16;
                 }
                 let key = sender as usize * kk + k as usize;
                 let t = if pair_idx[key] == usize::MAX {
@@ -64,6 +66,104 @@ pub fn plan_uncoded(g: &Csr, alloc: &Allocation) -> Vec<UncodedTransfer> {
         }
     }
     out.sort_by_key(|t| (t.sender, t.receiver));
+    out
+}
+
+/// Canonical wire id of an uncoded transfer — `sender * K + receiver`.
+///
+/// [`plan_uncoded`] sorts globally by `(sender, receiver)`, so ascending
+/// wire ids reproduce the global transfer order without any worker
+/// having to build (or even count) the transfers it is not a party to;
+/// the cluster workers put this id in the frame header's index field.
+#[inline]
+pub fn transfer_wire_id(k: usize, sender: u8, receiver: u8) -> u32 {
+    sender as u32 * k as u32 + receiver as u32
+}
+
+/// Plan only the transfers worker `me` *sends or receives*, each tagged
+/// with its canonical wire id ([`transfer_wire_id`]), ascending.
+///
+/// Equals [`plan_uncoded`] filtered to `sender == me || receiver == me`
+/// (same transfers, same canonical IV order), but built from the
+/// worker's own batches and Reduce set — `O(m·(r+1)/K)` instead of the
+/// global `O(m)`.
+pub fn plan_uncoded_for(g: &Csr, alloc: &Allocation, me: u8) -> Vec<(u32, UncodedTransfer)> {
+    let kk = alloc.k;
+    let mut out: Vec<(u32, UncodedTransfer)> = Vec::new();
+
+    // transfers this worker sends: batches whose canonical mapper
+    // (lowest-id replica) is me — walked in batch order, like the global
+    // plan, so per-pair IV order is identical. u16 sentinels: see
+    // [`plan_uncoded`] (a u8 marker would collide with id 254 at K=255).
+    let mut pair_idx = vec![usize::MAX; kk]; // receiver -> out index
+    const UNRESOLVED: u16 = u16::MAX;
+    const LOCAL: u16 = u16::MAX - 1;
+    let mut slot = vec![UNRESOLVED; kk];
+    for &t in &alloc.mapped_batches[me as usize] {
+        let batch = &alloc.batches[t];
+        if batch.servers[0] != me {
+            continue;
+        }
+        slot.fill(UNRESOLVED);
+        for j in batch.vertices() {
+            for &i in g.neighbors(j) {
+                let k = alloc.reduce_owner[i as usize];
+                let s = slot[k as usize];
+                if s == LOCAL {
+                    continue;
+                }
+                if s == UNRESOLVED {
+                    if batch.servers.binary_search(&k).is_ok() {
+                        slot[k as usize] = LOCAL;
+                        continue;
+                    }
+                    slot[k as usize] = k as u16;
+                }
+                let ti = if pair_idx[k as usize] == usize::MAX {
+                    pair_idx[k as usize] = out.len();
+                    out.push((
+                        transfer_wire_id(kk, me, k),
+                        UncodedTransfer { sender: me, receiver: k, ivs: Vec::new() },
+                    ));
+                    out.len() - 1
+                } else {
+                    pair_idx[k as usize]
+                };
+                out[ti].1.ivs.push((i, j));
+            }
+        }
+    }
+
+    // transfers this worker receives: walk its own Reduce set; a per-pair
+    // sort restores the canonical (batch, j, i) order — (j, i) suffices
+    // because batches tile 0..n ascending
+    let recv_start = out.len();
+    let mut recv_idx = vec![usize::MAX; kk]; // sender -> out index
+    for &i in &alloc.reduce_sets[me as usize] {
+        for &j in g.neighbors(i) {
+            let batch = &alloc.batches[alloc.batch_of(j)];
+            if batch.servers.binary_search(&me).is_ok() {
+                continue;
+            }
+            let s = batch.servers[0];
+            let ti = if recv_idx[s as usize] == usize::MAX {
+                recv_idx[s as usize] = out.len();
+                out.push((
+                    transfer_wire_id(kk, s, me),
+                    UncodedTransfer { sender: s, receiver: me, ivs: Vec::new() },
+                ));
+                out.len() - 1
+            } else {
+                recv_idx[s as usize]
+            };
+            out[ti].1.ivs.push((i, j));
+        }
+    }
+    for (_, t) in &mut out[recv_start..] {
+        t.ivs.sort_unstable_by_key(|&(i, j)| (j, i));
+    }
+
+    out.sort_by_key(|&(id, _)| id);
     out
 }
 
@@ -138,5 +238,32 @@ mod tests {
         let g = er(60, 0.3, &mut DetRng::seed(23));
         let alloc = Allocation::er_scheme(60, 4, 4);
         assert!(plan_uncoded(&g, &alloc).is_empty());
+    }
+
+    #[test]
+    fn sharded_transfers_match_global_party_filter() {
+        // plan_uncoded_for(me) == plan_uncoded filtered to transfers me
+        // sends or receives, in the same canonical order, tagged with the
+        // (sender, receiver)-monotone wire id
+        let g = er(120, 0.15, &mut DetRng::seed(24));
+        for r in 1..4 {
+            let alloc = Allocation::er_scheme(120, 5, r);
+            let global = plan_uncoded(&g, &alloc);
+            for me in 0..5u8 {
+                let mine = plan_uncoded_for(&g, &alloc, me);
+                let want: Vec<&UncodedTransfer> = global
+                    .iter()
+                    .filter(|t| t.sender == me || t.receiver == me)
+                    .collect();
+                assert_eq!(mine.len(), want.len(), "me={me} r={r}");
+                for ((id, got), w) in mine.iter().zip(&want) {
+                    assert_eq!(*id, transfer_wire_id(5, w.sender, w.receiver));
+                    assert_eq!(got.sender, w.sender);
+                    assert_eq!(got.receiver, w.receiver);
+                    assert_eq!(got.ivs, w.ivs, "me={me} r={r} {}->{}", w.sender, w.receiver);
+                }
+                assert!(mine.windows(2).all(|w| w[0].0 < w[1].0), "wire ids ascend");
+            }
+        }
     }
 }

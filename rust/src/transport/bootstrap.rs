@@ -30,9 +30,9 @@
 //!
 //! The job spec rides along as one opaque line (see
 //! [`coordinator::spec`](crate::coordinator::spec)) so a worker process
-//! can rebuild the exact graph, allocation, program, and shuffle plan
-//! deterministically instead of shipping megabytes of CSR over the
-//! rendezvous socket.
+//! can rebuild the exact graph, allocation, and program — and prepare
+//! *its own shard* of the shuffle plan — deterministically, instead of
+//! shipping megabytes of CSR over the rendezvous socket.
 //!
 //! Failure paths: a `hello` with an out-of-range or duplicate id gets a
 //! `reject` line and its connection dropped (the slot stays open for the

@@ -174,6 +174,16 @@ impl Transport for InProcNet {
         }
     }
 
+    /// The batched surface over the rings: delivery is already
+    /// frame-granular and syscall-free, so staging would only add a
+    /// copy — buffered sends deliver eagerly and [`Transport::flush`]
+    /// stays a no-op (`batched_writes` remains zero). The cluster's
+    /// batched send path is therefore identical in cost to the eager
+    /// one on this backend, and the zero-allocation audit covers both.
+    fn send_multicast_buffered(&self, from: u8, receivers: &[u8], frame: &[u8]) {
+        self.send_multicast(from, receivers, frame);
+    }
+
     fn recv(&self, me: u8, buf: &mut Vec<u8>) -> bool {
         self.rings[me as usize].pop(buf)
     }
@@ -281,6 +291,22 @@ mod tests {
         // and sends to a poisoned ring drop instead of blocking
         net.send_unicast(0, 1, &buf);
         assert!(!net.recv(1, &mut rbuf));
+    }
+
+    #[test]
+    fn buffered_surface_delivers_eagerly() {
+        // rings have no syscall to batch: buffered sends deliver at once,
+        // flush is a no-op, and the batched-write counter stays zero
+        let net = InProcNet::new(&[8, 8]);
+        let mut buf = Vec::new();
+        frame::encode_uncoded(&mut buf, 0, 3, &[9, 9]);
+        net.send_unicast_buffered(0, 1, &buf);
+        let mut rbuf = Vec::new();
+        assert!(net.recv(1, &mut rbuf), "delivered before any flush");
+        assert_eq!(frame::Frame::parse(&rbuf).unwrap().index, 3);
+        net.flush(0);
+        let s = net.data_stats();
+        assert_eq!((s.data_frames, s.batched_writes), (1, 0));
     }
 
     #[test]

@@ -52,6 +52,12 @@ pub use tcp::{TcpEndpoint, TcpNet};
 pub struct TransportStats {
     pub data_frames: usize,
     pub data_bytes: usize,
+    /// Physical writes performed by the batched send path
+    /// ([`Transport::flush`]): one per `(flush, destination)` with staged
+    /// bytes. TCP backends drive this to `O(peers)` per iteration
+    /// regardless of frame count; the in-process rings deliver eagerly
+    /// (frame-granular, syscall-free) and leave it at zero.
+    pub batched_writes: usize,
 }
 
 /// Time remaining until `deadline`, or `None` once it has passed —
@@ -71,6 +77,7 @@ pub(crate) fn time_left(deadline: Instant) -> Option<Duration> {
 pub(crate) struct StatCounters {
     frames: AtomicUsize,
     bytes: AtomicUsize,
+    writes: AtomicUsize,
 }
 
 impl StatCounters {
@@ -82,10 +89,16 @@ impl StatCounters {
         }
     }
 
+    /// Tally one physical batched write (a flushed destination buffer).
+    pub(crate) fn record_write(&self) {
+        self.writes.fetch_add(1, Ordering::SeqCst);
+    }
+
     pub(crate) fn snapshot(&self) -> TransportStats {
         TransportStats {
             data_frames: self.frames.load(Ordering::SeqCst),
             data_bytes: self.bytes.load(Ordering::SeqCst),
+            batched_writes: self.writes.load(Ordering::SeqCst),
         }
     }
 }
@@ -103,6 +116,29 @@ pub trait Transport: Sync {
     fn send_unicast(&self, from: u8, to: u8, frame: &[u8]) {
         self.send_multicast(from, std::slice::from_ref(&to), frame);
     }
+
+    /// Stage one frame for every endpoint in `receivers`, to be
+    /// delivered by the next [`Transport::flush`] from this sender.
+    /// Tallied in [`Transport::data_stats`] exactly like
+    /// [`Transport::send_multicast`] (once per call, at staging time), so
+    /// the leader's byte accounting is batching-agnostic. Backends with
+    /// no physical batching opportunity (the in-process rings) may
+    /// deliver immediately — the default.
+    fn send_multicast_buffered(&self, from: u8, receivers: &[u8], frame: &[u8]) {
+        self.send_multicast(from, receivers, frame);
+    }
+
+    /// Buffered unicast sibling of [`Transport::send_unicast`].
+    fn send_unicast_buffered(&self, from: u8, to: u8, frame: &[u8]) {
+        self.send_multicast_buffered(from, std::slice::from_ref(&to), frame);
+    }
+
+    /// Deliver everything `from` staged since its last flush, with at
+    /// most **one physical write per destination** (counted in
+    /// [`TransportStats::batched_writes`]) — the surface that drops the
+    /// TCP data path from `O(frames × receivers)` syscalls per iteration
+    /// to `O(peers)`. A no-op on eager backends.
+    fn flush(&self, _from: u8) {}
 
     /// Block for the next frame addressed to `me`, filling `buf` (buffer
     /// contents are replaced; capacity is recycled). Returns `false`
@@ -185,6 +221,11 @@ mod tests {
         c.record(&[1]); // too short to classify
         assert_eq!(c.snapshot(), TransportStats::default());
         c.record(&[0, 0, 0, 0, 0, 0, 0, 0]); // coded kind
-        assert_eq!(c.snapshot(), TransportStats { data_frames: 1, data_bytes: 8 });
+        assert_eq!(
+            c.snapshot(),
+            TransportStats { data_frames: 1, data_bytes: 8, batched_writes: 0 }
+        );
+        c.record_write();
+        assert_eq!(c.snapshot().batched_writes, 1);
     }
 }

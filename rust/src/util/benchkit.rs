@@ -9,6 +9,8 @@
 use std::hint::black_box;
 use std::time::Instant;
 
+use super::json::Json;
+
 /// One benchmark measurement.
 #[derive(Clone, Copy, Debug)]
 pub struct Measurement {
@@ -81,6 +83,56 @@ fn summarize(times: &[f64]) -> Measurement {
         std_s: var.sqrt(),
         min_s: times.iter().copied().fold(f64::INFINITY, f64::min),
         iters: times.len(),
+    }
+}
+
+/// Machine-readable bench results: a flat list of records, one JSON
+/// object per measurement, written as a single document
+/// `{"suite": ..., "records": [...]}`. Bench binaries collect records
+/// alongside their printed tables and write the file when `--json PATH`
+/// is passed — the repo's perf trajectory (`BENCH_*.json`) comes from
+/// here.
+pub struct BenchJson {
+    suite: String,
+    records: Vec<Json>,
+}
+
+impl BenchJson {
+    pub fn new(suite: &str) -> Self {
+        BenchJson { suite: suite.to_string(), records: Vec::new() }
+    }
+
+    /// Append one record; `bench` names the measurement, `fields` carry
+    /// its parameters and results (e.g. `n`, `r`, `mean_s`, `bytes`).
+    pub fn record(&mut self, bench: &str, fields: &[(&str, Json)]) {
+        let mut pairs: Vec<(String, Json)> =
+            vec![("bench".to_string(), Json::Str(bench.to_string()))];
+        for (k, v) in fields {
+            pairs.push(((*k).to_string(), v.clone()));
+        }
+        self.records.push(Json::obj(pairs));
+    }
+
+    /// Number of records collected so far.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// The whole document as one [`Json`] value.
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("suite", Json::Str(self.suite.clone())),
+            ("records", Json::Arr(self.records.clone())),
+        ])
+    }
+
+    /// Write the document (newline-terminated) to `path`.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
     }
 }
 
@@ -178,5 +230,21 @@ mod tests {
     fn table_rejects_ragged_rows() {
         let mut t = Table::new(&["a", "b"]);
         t.row(&["1".into()]);
+    }
+
+    #[test]
+    fn bench_json_document_parses_back() {
+        let mut r = BenchJson::new("unit");
+        assert!(r.is_empty());
+        r.record("plan", &[("r", Json::Num(2.0)), ("mean_s", Json::Num(0.0125))]);
+        r.record("encode", &[("bytes", Json::Num(4096.0))]);
+        assert_eq!(r.len(), 2);
+        let doc = Json::parse(&r.to_json().to_string()).expect("self-produced JSON parses");
+        assert_eq!(doc.get("suite").unwrap().as_str(), Some("unit"));
+        let records = doc.get("records").unwrap().as_arr().unwrap();
+        assert_eq!(records.len(), 2);
+        assert_eq!(records[0].get("bench").unwrap().as_str(), Some("plan"));
+        assert_eq!(records[0].get("r").unwrap().as_usize(), Some(2));
+        assert_eq!(records[1].get("bytes").unwrap().as_f64(), Some(4096.0));
     }
 }

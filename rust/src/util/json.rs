@@ -51,6 +51,12 @@ impl Json {
         }
     }
 
+    /// Build an object from key/value pairs (result-record convenience;
+    /// later duplicates of a key win, matching `BTreeMap::insert`).
+    pub fn obj<K: Into<String>>(pairs: impl IntoIterator<Item = (K, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.into(), v)).collect())
+    }
+
     /// Parse a JSON document.
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
@@ -360,5 +366,12 @@ mod tests {
     fn empty_containers() {
         assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
         assert_eq!(Json::parse("{}").unwrap(), Json::Obj(BTreeMap::new()));
+    }
+
+    #[test]
+    fn obj_builder_roundtrips() {
+        let v = Json::obj([("a", Json::Num(1.0)), ("b", Json::Str("x".into()))]);
+        assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
+        assert_eq!(v.get("b").unwrap().as_str(), Some("x"));
     }
 }

@@ -18,7 +18,7 @@ use std::net::TcpListener;
 use std::sync::mpsc;
 use std::time::Duration;
 
-use coded_graph::coordinator::cluster::{leader_ring_capacity, worker_ring_capacity};
+use coded_graph::coordinator::cluster::leader_ring_capacity;
 use coded_graph::coordinator::{
     prepare, run_leader, run_rust, run_worker, AllocKind, EngineConfig, GraphKind, GraphSpec,
     JobReport, JobSpec, ProgramSpec, Scheme,
@@ -56,12 +56,13 @@ fn run_process_style(spec: JobSpec, cfg: EngineConfig) -> JobReport {
             let addr = listener.local_addr().unwrap();
             let (roster, line) = bootstrap::join(rv_addr, id, addr, PATIENCE).expect("join");
             assert_eq!(line, want_line, "job line must arrive verbatim");
-            // rebuild everything from the wire line, like a real process
+            // rebuild everything from the wire line, like a real process;
+            // the worker prepares only its own shard, never the global job
             let spec = JobSpec::decode_line(&line).expect("decode job line");
             let built = spec.materialize();
             let job = built.job();
-            let prep = prepare(&job, spec.scheme);
-            let cap = worker_ring_capacity(&prep, id as usize);
+            let prep = spec.prepare_worker(&built, id);
+            let cap = prep.ring_capacity();
             let net = TcpEndpoint::wire(id, &listener, &roster, cap, PATIENCE).expect("wire");
             run_worker(id, &job, &prep, &net);
         }));
@@ -144,9 +145,8 @@ fn worker_death_aborts_the_run_instead_of_deadlocking() {
             let (roster, line) = bootstrap::join(rv_addr, 0, addr, PATIENCE).expect("join");
             let spec = JobSpec::decode_line(&line).unwrap();
             let built = spec.materialize();
-            let job = built.job();
-            let prep = prepare(&job, spec.scheme);
-            let cap = worker_ring_capacity(&prep, 0);
+            let prep = spec.prepare_worker(&built, 0);
+            let cap = prep.ring_capacity();
             let net = TcpEndpoint::wire(0, &listener, &roster, cap, PATIENCE).expect("wire");
             drop(net); // "killed" before its first send
         });
@@ -157,8 +157,8 @@ fn worker_death_aborts_the_run_instead_of_deadlocking() {
             let spec = JobSpec::decode_line(&line).unwrap();
             let built = spec.materialize();
             let job = built.job();
-            let prep = prepare(&job, spec.scheme);
-            let cap = worker_ring_capacity(&prep, 1);
+            let prep = spec.prepare_worker(&built, 1);
+            let cap = prep.ring_capacity();
             let net = TcpEndpoint::wire(1, &listener, &roster, cap, PATIENCE).expect("wire");
             run_worker(1, &job, &prep, &net); // must panic, not hang
         });

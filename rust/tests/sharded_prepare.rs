@@ -1,0 +1,143 @@
+//! Shard-equivalence gates for the sharded prepare pipeline (ISSUE-4):
+//!
+//! * every worker's [`PreparedWorker`]/`WorkerPlan` equals the global
+//!   plan filtered to its membership — pairs, sender column counts, and
+//!   canonical (subset-rank) wire ids — across all four schemes and
+//!   three graph families (ER, power-law, SBM);
+//! * the acceptance arithmetic: the shard pair arena is exactly the sum
+//!   of the member groups' IV counts and **strictly** smaller than the
+//!   global `total_ivs()` whenever `K > r + 1`;
+//! * cluster drivers running on the shards stay bit-identical to
+//!   `engine::run_rust` (the inproc/TCP drivers below; the process-style
+//!   and real-process drivers are covered by `bootstrap_cluster.rs` /
+//!   `process_cluster.rs`, which also run the sharded worker path now).
+
+use coded_graph::allocation::Allocation;
+use coded_graph::combinatorics::subset_rank;
+use coded_graph::coordinator::{
+    prepare, prepare_worker, run_cluster_on, run_rust, EngineConfig, Job, Scheme,
+};
+use coded_graph::graph::er::er;
+use coded_graph::graph::powerlaw::{pl, PlParams};
+use coded_graph::graph::sbm::sbm;
+use coded_graph::mapreduce::PageRank;
+use coded_graph::transport::TransportKind;
+use coded_graph::util::rng::DetRng;
+use coded_graph::Csr;
+
+/// The three graph fixtures with a matching allocation each.
+fn fixtures() -> Vec<(&'static str, Csr, Allocation)> {
+    let er_g = er(260, 0.1, &mut DetRng::seed(91));
+    let pl_g = pl(
+        260,
+        PlParams { gamma: 2.3, max_degree: 100_000, rho_scale: 4.0 },
+        &mut DetRng::seed(92),
+    );
+    let sbm_g = sbm(130, 130, 0.2, 0.04, &mut DetRng::seed(93));
+    vec![
+        ("er", er_g, Allocation::er_scheme(260, 5, 2)),
+        ("pl", pl_g, Allocation::er_scheme(260, 5, 3)),
+        ("sbm", sbm_g, Allocation::sbm_scheme(130, 130, 6, 2)),
+    ]
+}
+
+#[test]
+fn worker_plans_match_global_plan_filtered_to_membership() {
+    let prog = PageRank::default();
+    for (name, g, alloc) in fixtures() {
+        let k = alloc.k;
+        let r = alloc.r;
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        for scheme in [
+            Scheme::Coded,
+            Scheme::Uncoded,
+            Scheme::CodedCombined,
+            Scheme::UncodedCombined,
+        ] {
+            let prep = prepare(&job, scheme);
+            for me in 0..k as u8 {
+                let pw = prepare_worker(&job, scheme, me);
+                // --- coded shard: groups filtered to membership ---
+                let mut l = 0usize;
+                let mut member_pairs = 0usize;
+                for gi in 0..prep.plan.num_groups() {
+                    let gp = prep.plan.group(gi);
+                    if gp.member_index(me).is_none() {
+                        continue;
+                    }
+                    let sp = pw.plan.group(l);
+                    assert_eq!(sp.servers, gp.servers, "{name} {scheme} me={me}");
+                    for idx in 0..gp.members() {
+                        assert_eq!(sp.row(idx), gp.row(idx), "{name} {scheme} me={me} row {idx}");
+                    }
+                    assert_eq!(
+                        pw.plan.sender_cols(l),
+                        prep.plan.sender_cols(gi),
+                        "{name} {scheme} me={me}"
+                    );
+                    assert_eq!(
+                        pw.plan.wire_id(l),
+                        subset_rank(k, gp.servers) as u32,
+                        "{name} {scheme} me={me}: canonical wire id"
+                    );
+                    member_pairs += gp.total_ivs();
+                    l += 1;
+                }
+                assert_eq!(l, pw.plan.num_groups(), "{name} {scheme} me={me}: extra groups");
+                // acceptance: shard arena == sum over member groups,
+                // strictly below the global arena when K > r + 1
+                assert_eq!(pw.plan.total_ivs(), member_pairs, "{name} {scheme} me={me}");
+                if k > r + 1 && prep.plan.total_ivs() > 0 {
+                    assert!(
+                        pw.plan.total_ivs() < prep.plan.total_ivs(),
+                        "{name} {scheme} me={me}: shard ({}) must be strictly \
+                         smaller than the global arena ({})",
+                        pw.plan.total_ivs(),
+                        prep.plan.total_ivs()
+                    );
+                }
+                // --- uncoded shard: transfers filtered to party ---
+                let want: Vec<_> = prep
+                    .transfers
+                    .iter()
+                    .filter(|t| t.sender == me || t.receiver == me)
+                    .collect();
+                assert_eq!(pw.transfers.len(), want.len(), "{name} {scheme} me={me}");
+                for (got, w) in pw.transfers.iter().zip(&want) {
+                    assert_eq!((got.sender, got.receiver), (w.sender, w.receiver));
+                    assert_eq!(got.ivs, w.ivs, "{name} {scheme} me={me}");
+                }
+                assert_eq!(pw.expect_coded(), prep.expect_coded(me as usize));
+                assert_eq!(pw.expect_unc(), prep.expect_unc(me as usize));
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_cluster_drivers_stay_bit_identical_to_the_engine() {
+    // the drivers below run every worker on its own shard; final states
+    // and loads must still replay the engine bit-for-bit on all schemes
+    let prog = PageRank::default();
+    let g = er(150, 0.12, &mut DetRng::seed(94));
+    let alloc = Allocation::er_scheme(150, 5, 2);
+    let job = Job { graph: &g, alloc: &alloc, program: &prog };
+    for scheme in [
+        Scheme::Coded,
+        Scheme::Uncoded,
+        Scheme::CodedCombined,
+        Scheme::UncodedCombined,
+    ] {
+        let cfg = EngineConfig { scheme, ..Default::default() };
+        let en = run_rust(&job, &cfg, 3);
+        for kind in [TransportKind::InProc, TransportKind::Tcp] {
+            let cl = run_cluster_on(&job, &cfg, 3, kind);
+            for (a, b) in cl.final_state.iter().zip(&en.final_state) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{scheme} over {kind}");
+            }
+            for (a, b) in cl.iterations.iter().zip(&en.iterations) {
+                assert_eq!(a.shuffle, b.shuffle, "{scheme} over {kind}");
+            }
+        }
+    }
+}

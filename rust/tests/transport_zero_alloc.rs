@@ -4,9 +4,12 @@
 //! The path under audit is byte-for-byte what a cluster worker executes
 //! per coded multicast / uncoded batch each iteration:
 //! `eval_rows_except` → `encode_sender_into` → `frame::encode_*` into a
-//! reused send buffer → `InProcNet::send_multicast` (pooled ring slot)
-//! → `recv` (buffer swap) → `Frame::parse` (borrowed view) → column
-//! reads. A counting global allocator wraps `System`; after warm-up
+//! reused send buffer → the transport's **batched** surface
+//! (`send_multicast_buffered` + one `flush` per pass — the path the
+//! workers now drive; on `InProc` it delivers eagerly over the same
+//! pooled rings) → `recv` (buffer swap) → `Frame::parse` (borrowed
+//! view) → column reads. A counting global allocator wraps `System`;
+//! after warm-up
 //! passes grow every buffer (the ring rotates a small set of pooled
 //! buffers, so a few passes are needed before each has seen the largest
 //! frame), a full measured pass must leave the counters untouched.
@@ -107,7 +110,9 @@ fn inproc_send_path_is_allocation_free_at_steady_state() {
         if pass == 4 {
             before = Some(counters());
         }
-        // coded sends: every (group, sender) the plan prescribes
+        // coded sends via the batched surface: every (group, sender) the
+        // plan prescribes (on InProc the buffered call delivers eagerly,
+        // so each frame is drained immediately after staging)
         for gi in 0..plan.num_groups() {
             let group = plan.group(gi);
             let nv = group.total_ivs();
@@ -119,7 +124,7 @@ fn inproc_send_path_is_allocation_free_at_steady_state() {
                 eval_rows_except(group, s_idx, &value, &mut vals[..nv]);
                 encode_sender_into(group, s_idx, &vals[..nv], r, &mut cols[..q]);
                 frame::encode_coded(&mut sendbuf, 0, gi as u32, &cols[..q], sb);
-                net.send_multicast(0, &receivers, &sendbuf);
+                net.send_multicast_buffered(0, &receivers, &sendbuf);
                 assert!(net.recv(1, &mut rbuf));
                 let f = Frame::parse(&rbuf).unwrap();
                 assert_eq!(f.kind, FrameKind::CodedData);
@@ -129,12 +134,12 @@ fn inproc_send_path_is_allocation_free_at_steady_state() {
                 }
             }
         }
-        // uncoded sends: every transfer in the plan
+        // uncoded sends, batched like the workers' iteration path
         for (ti, t) in transfers.iter().enumerate() {
             ivbits.clear();
             ivbits.extend(t.ivs.iter().map(|&(i, j)| value(i, j)));
             frame::encode_uncoded(&mut sendbuf, 0, ti as u32, &ivbits);
-            net.send_unicast(0, 1, &sendbuf);
+            net.send_unicast_buffered(0, 1, &sendbuf);
             assert!(net.recv(1, &mut rbuf));
             let f = Frame::parse(&rbuf).unwrap();
             assert_eq!(f.kind, FrameKind::UncodedData);
@@ -142,6 +147,9 @@ fn inproc_send_path_is_allocation_free_at_steady_state() {
                 checksum = checksum.wrapping_add(f.word(c));
             }
         }
+        // the workers' per-iteration flush: a no-op on InProc, but part
+        // of the audited surface
+        net.flush(0);
     }
 
     let after = counters();
