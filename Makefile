@@ -3,7 +3,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test bench bench-smoke cluster-smoke docs fmt clippy artifacts
+.PHONY: build test bench bench-smoke cluster-smoke examples docs fmt clippy artifacts
 
 build:
 	$(CARGO) build --release
@@ -42,6 +42,14 @@ cluster-smoke:
 	$(CARGO) run --release -- cluster --graph er --n 400 --k 2 --r 2 \
 	  --program pagerank --scheme uncoded --iters 2 --transport tcp \
 	  --processes --check
+
+# Build every example, then run the two that pin the public API surface
+# (quickstart's 60-second tour and the end-to-end e2e driver — the
+# latter runs the exact rust Reduce unless built with --features xla).
+examples:
+	$(CARGO) build --release --examples
+	$(CARGO) run --release --example quickstart
+	$(CARGO) run --release --example coded_pagerank_e2e
 
 # Docs must build warning-clean (broken links, private-item links, bad
 # HTML in rustdoc all fail CI).

@@ -11,7 +11,9 @@
 //! ```
 
 use coded_graph::allocation::Allocation;
-use coded_graph::coordinator::{prepare, run_iteration, Backend, EngineConfig, Job, Scheme, XlaKind};
+use coded_graph::coordinator::{
+    prepare, run_iteration_scratch, Backend, EngineConfig, EngineScratch, Job, Scheme, XlaKind,
+};
 use coded_graph::graph::er::er;
 use coded_graph::mapreduce::{PageRank, VertexProgram};
 use coded_graph::runtime::{BlockExecutor, PjrtRuntime};
@@ -79,13 +81,17 @@ fn main() -> anyhow::Result<()> {
     let cfg = EngineConfig { scheme: Scheme::Coded, ..Default::default() };
     let prep = prepare(&job, Scheme::Coded);
     let st: Vec<f64> = (0..n as Vertex).map(|v| prog.init(v, &g)).collect();
+    let mut scratch = EngineScratch::new();
+    let mut next = vec![0.0f64; n];
     let m_iter_rust = bench.run(|| {
-        run_iteration(&job, &prep, &st, &cfg, &mut Backend::Rust).0
+        run_iteration_scratch(&job, &prep, &st, &cfg, &mut Backend::Rust, &mut scratch, &mut next);
+        next[0]
     });
     let mut exec2 = BlockExecutor::new(&rt)?;
     let m_iter_pjrt = bench.run(|| {
         let mut backend = Backend::Pjrt { exec: &mut exec2, kind: XlaKind::PageRank };
-        run_iteration(&job, &prep, &st, &cfg, &mut backend).0
+        run_iteration_scratch(&job, &prep, &st, &cfg, &mut backend, &mut scratch, &mut next);
+        next[0]
     });
     let mut t = Table::new(&["backend", "wall/iter (ms)"]);
     t.row(&["rust fold".into(), format!("{:.1}", m_iter_rust.mean_ms())]);

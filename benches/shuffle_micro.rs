@@ -2,17 +2,23 @@
 //!
 //! Measures, per computation load r:
 //!   * group-plan construction (pre-processing, O(m)) into the flat arena,
-//!   * coded Encode throughput (arena kernel, bytes/s),
-//!   * coded Decode throughput (arena kernel, bytes/s),
+//!   * coded Encode throughput (the production single-sender kernels —
+//!     `eval_rows_except` + `encode_sender_into`, exactly what every
+//!     driver's worker core runs — bytes/s),
+//!   * coded Decode throughput (`decode_sender_into`, per (member,
+//!     sender), bytes/s),
 //!   * uncoded transfer planning,
 //! on a dense mid-size ER graph; then sharded vs full prepare at
-//! (K=10, r=3) scale (the per-worker `prepare_worker` path the cluster
-//! workers run — expected ≥2× faster than the global `prepare`); then
+//! (K=10, r=3) scale (the per-worker `prepare_worker` path every worker
+//! core runs — expected ≥2× faster than the global `prepare`); then
 //! full coded engine iterations (Map → Encode → Shuffle → Decode →
 //! Reduce → write-back) on a ~200k-edge ER graph with a warm
 //! [`EngineScratch`] on both the serial and the rayon-parallel path;
-//! and finally the TCP batched wire path (per-frame writes vs one
-//! buffered flush per destination).
+//! then the `core_parity` section: per-iteration wall time of the
+//! unified `WorkerCore` + `DirectFabric` engine at the ISSUE-5 pin
+//! (K=10, r=3), the record to diff against pre-refactor `iteration`
+//! numbers for perf-neutrality; and finally the TCP batched wire path
+//! (per-frame writes vs one buffered flush per destination).
 //!
 //! ```sh
 //! cargo bench --bench shuffle_micro                   # full configuration
@@ -31,8 +37,8 @@ use coded_graph::coordinator::{
 };
 use coded_graph::graph::er::er;
 use coded_graph::mapreduce::{PageRank, VertexProgram};
-use coded_graph::shuffle::coded::{encode_group_into, eval_group_values};
-use coded_graph::shuffle::decoder::decode_group_into;
+use coded_graph::shuffle::coded::{encode_sender_into, eval_rows_except};
+use coded_graph::shuffle::decoder::decode_sender_into;
 use coded_graph::shuffle::plan::build_group_plans;
 use coded_graph::shuffle::segments::seg_bytes;
 use coded_graph::shuffle::uncoded::plan_uncoded;
@@ -54,6 +60,7 @@ fn main() {
     micro(smoke, &mut report);
     prepare_sharded(smoke, &mut report);
     iteration_throughput(smoke, &mut report);
+    core_parity(smoke, &mut report);
     tcp_batching(smoke, &mut report);
     if let Some(path) = json_path {
         report.write(&path).expect("write bench json");
@@ -84,48 +91,80 @@ fn micro(smoke: bool, report: &mut BenchJson) {
         let total_ivs = plan.total_ivs();
         let value = |i: Vertex, j: Vertex| prog.map(i, j, state[j as usize], &g).to_bits();
 
-        // warm arenas shared by the encode and decode measurements
+        // warm arenas shared by the encode and decode measurements; the
+        // per-group values are evaluated inline (every row) so decode can
+        // cancel with them — the worker core keeps the equivalent `gvals`
+        // arena warm across an iteration
         let mut vals = vec![0u64; plan.total_ivs()];
         let mut cols = vec![0u64; plan.total_cols()];
-        let mut bits = vec![0u64; plan.total_ivs()];
+        let mut bits = vec![0u64; plan.groups().map(|gp| gp.max_row_len()).max().unwrap_or(0)];
         for gi in 0..plan.num_groups() {
             let vr = plan.pair_range(gi);
-            eval_group_values(plan.group(gi), &value, &mut vals[vr]);
+            for (slot, &(i, j)) in vals[vr].iter_mut().zip(plan.group(gi).group_pairs()) {
+                *slot = value(i, j);
+            }
         }
 
-        // encode: all groups, all senders, straight into the column arena
+        // encode: every (group, sender) through the production kernels —
+        // evaluate the foreign rows, XOR the sender's columns into the
+        // sender-major arena (what one iteration of send staging costs)
+        let mut evals = vec![0u64; plan.groups().map(|gp| gp.total_ivs()).max().unwrap_or(0)];
         let m_enc = bench.run(|| {
             for gi in 0..plan.num_groups() {
-                let vr = plan.pair_range(gi);
+                let group = plan.group(gi);
+                let nv = group.total_ivs();
                 let cr = plan.col_range(gi);
-                encode_group_into(
-                    plan.group(gi),
-                    &vals[vr],
-                    r,
-                    plan.sender_cols(gi),
-                    &mut cols[cr],
-                );
+                let gcols = &mut cols[cr];
+                let mut cbase = 0usize;
+                for (s_idx, &q) in plan.sender_cols(gi).iter().enumerate() {
+                    let q = q as usize;
+                    eval_rows_except(group, s_idx, &value, &mut evals[..nv]);
+                    encode_sender_into(group, s_idx, &evals[..nv], r, &mut gcols[cbase..cbase + q]);
+                    cbase += q;
+                }
             }
             cols.last().copied()
         });
         // table bytes XORed per full encode: every row appears in r tables
         let enc_bytes = total_ivs * seg_bytes(r) * r;
 
-        // decode: every member of every group, into the bits arena
+        // decode: every (member, sender) pair through the production
+        // kernel, reassembling each member's row from the column arena
         let m_dec = bench.run(|| {
+            let mut check = 0u64;
             for gi in 0..plan.num_groups() {
+                let group = plan.group(gi);
                 let vr = plan.pair_range(gi);
+                let gvals = &vals[vr];
                 let cr = plan.col_range(gi);
-                decode_group_into(
-                    plan.group(gi),
-                    &vals[vr.clone()],
-                    &cols[cr],
-                    plan.sender_cols(gi),
-                    r,
-                    &mut bits[vr],
-                );
+                let gcols = &cols[cr];
+                for m_idx in 0..group.members() {
+                    let my_len = group.row_len(m_idx);
+                    if my_len == 0 {
+                        continue;
+                    }
+                    let out = &mut bits[..my_len];
+                    out.fill(0);
+                    let mut cbase = 0usize;
+                    for (s_idx, &q) in plan.sender_cols(gi).iter().enumerate() {
+                        let q = q as usize;
+                        if s_idx != m_idx {
+                            decode_sender_into(
+                                group,
+                                m_idx,
+                                s_idx,
+                                &gcols[cbase..cbase + my_len],
+                                gvals,
+                                r,
+                                out,
+                            );
+                        }
+                        cbase += q;
+                    }
+                    check = check.wrapping_add(out[my_len - 1]);
+                }
             }
-            bits.last().copied()
+            check
         });
         let dec_bytes = total_ivs * seg_bytes(r) * r; // segments recovered
 
@@ -289,6 +328,62 @@ fn iteration_throughput(smoke: bool, report: &mut BenchJson) {
     t.print();
     println!("\nserial and parallel paths are bit-identical (asserted in the test suite);");
     println!("steady-state iterations perform zero heap allocation (tests/zero_alloc.rs).\n");
+}
+
+/// Core parity at the ISSUE-5 pin (K=10, r=3): per-iteration wall time
+/// of the unified engine — `K` `WorkerCore`s exchanging serialized
+/// frames over the in-memory `DirectFabric` — on serial and parallel
+/// paths. Diff the `core_parity` records in `BENCH_shuffle_micro.json`
+/// against the pre-refactor full-iteration numbers to confirm the
+/// one-worker-core refactor is perf-neutral-or-better.
+fn core_parity(smoke: bool, report: &mut BenchJson) {
+    let (n, p) = if smoke { (800usize, 0.05f64) } else { (3000, 0.05) };
+    let (k, r) = (10usize, 3usize);
+    let g = er(n, p, &mut DetRng::seed(999));
+    let prog = PageRank::default();
+    let alloc = Allocation::er_scheme(n, k, r);
+    let job = Job { graph: &g, alloc: &alloc, program: &prog };
+    let prep = prepare(&job, Scheme::Coded);
+    let state: Vec<f64> = (0..n as Vertex).map(|v| prog.init(v, &g)).collect();
+    let mut next = vec![0.0f64; n];
+    let mut scratch = EngineScratch::new();
+    let bench = if smoke { Bench::new(1, 3) } else { Bench::new(2, 6) };
+    let mut load = 0.0;
+
+    let serial_cfg = EngineConfig { scheme: Scheme::Coded, parallel: false, ..Default::default() };
+    let m_serial = bench.run(|| {
+        let m = run_iteration_scratch(
+            &job, &prep, &state, &serial_cfg, &mut Backend::Rust, &mut scratch, &mut next,
+        );
+        load = m.shuffle.normalized(n);
+    });
+    let par_cfg = EngineConfig { scheme: Scheme::Coded, parallel: true, ..Default::default() };
+    let m_par = bench.run(|| {
+        run_iteration_scratch(
+            &job, &prep, &state, &par_cfg, &mut Backend::Rust, &mut scratch, &mut next,
+        );
+    });
+
+    println!("# Core parity: WorkerCore + DirectFabric engine, ER(n={n}, p={p}), K={k}, r={r}\n");
+    println!(
+        "serial iter: {:.2} ms   parallel iter: {:.2} ms   norm load {:.5}",
+        m_serial.mean_ms(),
+        m_par.mean_ms(),
+        load
+    );
+    println!("(diff against the pre-refactor `iteration` records to confirm perf parity)\n");
+    report.record(
+        "core_parity",
+        &[
+            ("n", num(n as f64)),
+            ("p", num(p)),
+            ("k", num(k as f64)),
+            ("r", num(r as f64)),
+            ("serial_mean_s", num(m_serial.mean_s)),
+            ("parallel_mean_s", num(m_par.mean_s)),
+            ("norm_load", num(load)),
+        ],
+    );
 }
 
 /// The TCP batched wire path: the same frame stream sent with one

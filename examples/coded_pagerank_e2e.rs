@@ -1,31 +1,40 @@
-//! End-to-end driver: the full three-layer stack on a real small workload.
+//! End-to-end driver: the full stack on a real small workload.
 //!
-//! This is the repo's proof that all layers compose (DESIGN.md §5):
+//! Workload: PageRank on a Marker-Cafe-like power-law graph (the
+//! paper's Scenario-1 substitution at 1/8 scale), K = 6 workers,
+//! sweeping the computation load r like Fig 2. Every iteration runs the
+//! unified execution core (`WorkerCore` + `DirectFabric` — the same
+//! phase machine the cluster drivers use), and the final sweep is
+//! cross-checked against the exact single-machine oracle and the
+//! threaded cluster driver.
+//!
+//! With the `xla` feature (DESIGN.md §5's three-layer proof), the
+//! Reduce phase additionally runs through the AOT JAX/Pallas artifacts
+//! (f32 tiles) over PJRT:
 //!
 //!   L1/L2 (JAX + Pallas, AOT)  →  artifacts/*.hlo.txt
 //!   runtime (PJRT CPU client)  →  tiled masked-SpMV Reduce
 //!   L3 (rust coordinator)      →  allocation, coded Shuffle, bus, metrics
 //!
-//! Workload: PageRank to convergence on a Marker-Cafe-like power-law graph
-//! (the paper's Scenario-1 substitution at 1/8 scale), K = 6 workers,
-//! sweeping the computation load r like Fig 2. The Reduce phase runs
-//! through the AOT JAX/Pallas artifacts (f32 tiles) and is cross-checked
-//! against the exact rust fold and the single-machine oracle. Results are
-//! recorded in EXPERIMENTS.md.
-//!
 //! ```sh
-//! make artifacts && cargo run --release --example coded_pagerank_e2e
+//! cargo run --release --example coded_pagerank_e2e            # exact rust Reduce
+//! make artifacts && cargo run --release --features xla \
+//!     --example coded_pagerank_e2e                            # PJRT tile Reduce
 //! ```
 
 use coded_graph::allocation::Allocation;
 use coded_graph::analysis::theory;
 use coded_graph::coordinator::{
-    cluster::run_cluster, prepare, run_iteration, Backend, EngineConfig, Job, Scheme, XlaKind,
+    cluster::run_cluster, prepare, run_iteration_scratch, Backend, EngineConfig, EngineScratch,
+    Job, Scheme,
 };
+#[cfg(feature = "xla")]
+use coded_graph::coordinator::XlaKind;
 use coded_graph::graph::powerlaw::{pl, PlParams};
 use coded_graph::graph::properties;
 use coded_graph::mapreduce::program::run_single_machine;
 use coded_graph::mapreduce::{PageRank, VertexProgram};
+#[cfg(feature = "xla")]
 use coded_graph::runtime::{BlockExecutor, PjrtRuntime};
 use coded_graph::util::benchkit::Table;
 use coded_graph::util::rng::DetRng;
@@ -44,21 +53,32 @@ fn main() -> anyhow::Result<()> {
     );
     println!("cluster: K={k} workers, 100 Mbps shared bus\n");
 
-    // ---- PJRT runtime over the AOT artifacts ------------------------------
-    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let rt = PjrtRuntime::load(&artifacts)?;
-    println!(
-        "runtime: PJRT CPU, {} artifacts loaded from {}\n",
-        rt.manifest().entries.len(),
-        artifacts.display()
-    );
+    // ---- Reduce backend --------------------------------------------------
+    #[cfg(feature = "xla")]
+    let rt = {
+        let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let rt = PjrtRuntime::load(&artifacts)?;
+        println!(
+            "runtime: PJRT CPU, {} artifacts loaded from {}\n",
+            rt.manifest().entries.len(),
+            artifacts.display()
+        );
+        rt
+    };
+    #[cfg(not(feature = "xla"))]
+    println!("runtime: exact rust fold (rebuild with --features xla for the PJRT tile path)\n");
+    // f32 tiles accumulate rounding noise; the rust fold is bit-exact
+    #[cfg(feature = "xla")]
+    let err_tol = 1e-4f64;
+    #[cfg(not(feature = "xla"))]
+    let err_tol = 1e-12f64;
 
     let prog = PageRank::default();
     let oracle = run_single_machine(&prog, &g, iters);
 
-    // ---- r-sweep: coded scheme with the PJRT (JAX/Pallas) Reduce ----------
+    // ---- r-sweep: coded scheme through the unified worker cores ----------
     let mut table = Table::new(&[
-        "r", "scheme", "map+enc", "shuffle", "dec+red", "total", "load", "xla-execs", "max|err|",
+        "r", "scheme", "map+enc", "shuffle", "dec+red", "total", "load", "max|err|",
     ]);
     let mut totals: Vec<(usize, f64)> = Vec::new();
     for r in 1..=4usize {
@@ -70,16 +90,24 @@ fn main() -> anyhow::Result<()> {
         let cfg = EngineConfig { scheme, ..Default::default() };
         let job = Job { graph: &g, alloc: &alloc, program: &prog };
         let prep = prepare(&job, scheme);
+        #[cfg(feature = "xla")]
         let mut exec = BlockExecutor::new(&rt)?;
+        let mut scratch = EngineScratch::new();
         let mut state: Vec<f64> = (0..n as Vertex).map(|v| prog.init(v, &g)).collect();
+        let mut next = vec![0.0f64; n];
         let mut t_map = 0.0;
         let mut t_shuffle = 0.0;
         let mut t_reduce = 0.0;
         let mut load = 0.0;
         for _ in 0..iters {
+            #[cfg(feature = "xla")]
             let mut backend = Backend::Pjrt { exec: &mut exec, kind: XlaKind::PageRank };
-            let (next, m) = run_iteration(&job, &prep, &state, &cfg, &mut backend);
-            state = next;
+            #[cfg(not(feature = "xla"))]
+            let mut backend = Backend::Rust;
+            let m = run_iteration_scratch(
+                &job, &prep, &state, &cfg, &mut backend, &mut scratch, &mut next,
+            );
+            std::mem::swap(&mut state, &mut next);
             let (pm, ps, pr) = m.times.paper_buckets();
             t_map += pm;
             t_shuffle += ps;
@@ -88,12 +116,12 @@ fn main() -> anyhow::Result<()> {
         }
         let total = t_map + t_shuffle + t_reduce;
         totals.push((r, total));
-        // accuracy: f32 tiles against the f64 oracle
+        // accuracy vs the f64 oracle
         let max_err = state
             .iter()
             .zip(&oracle)
             .map(|(a, b)| {
-                assert!(a.is_finite(), "non-finite state from the tile path");
+                assert!(a.is_finite(), "non-finite state from the Reduce path");
                 (a - b).abs()
             })
             .fold(0.0f64, f64::max);
@@ -105,10 +133,9 @@ fn main() -> anyhow::Result<()> {
             format!("{t_reduce:.2}s"),
             format!("{total:.2}s"),
             format!("{load:.5}"),
-            exec.executions.to_string(),
             format!("{max_err:.1e}"),
         ]);
-        assert!(max_err < 1e-4, "f32 tile accuracy blew up: {max_err}");
+        assert!(max_err < err_tol, "Reduce accuracy blew up: {max_err}");
     }
     println!("simulated execution time, {iters} PageRank iterations (paper Fig 2 buckets):");
     table.print();
@@ -138,11 +165,11 @@ fn main() -> anyhow::Result<()> {
     println!(
         "\ncluster driver (6 threads, real channels, r=2): max|err| vs oracle = {max_err:.2e}"
     );
-    assert!(max_err < 1e-15, "cluster fold must be bit-exact");
+    assert!(max_err < 1e-12, "cluster fold must be exact");
 
     // Remark 10 sanity
     let rs = theory::r_star(totals[0].1 / iters as f64 / 1.0, 1.0);
     let _ = rs;
-    println!("\nE2E OK: all three layers compose; see EXPERIMENTS.md for the recorded run.");
+    println!("\nE2E OK: all layers compose (engine cores, cluster driver, Reduce backend).");
     Ok(())
 }

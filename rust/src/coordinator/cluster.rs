@@ -7,9 +7,8 @@
 //! traffic — serialized into wire-format [`frame`]s and moved by a
 //! pluggable [`Transport`] backend:
 //!
-//! * [`TransportKind::InProc`]: bounded per-worker rings of pooled frame
-//!   buffers (replaces the old `mpsc` + per-receiver `CodedMessage`
-//!   clone driver).
+//! * [`TransportKind::InProc`]: bounded per-worker rings of pooled
+//!   frame buffers (zero steady-state allocation).
 //! * [`TransportKind::Tcp`]: a localhost socket mesh — the paper's EC2
 //!   testbed topology (§VI), every Shuffle byte crossing a real NIC
 //!   buffer and a real serialization boundary.
@@ -28,10 +27,11 @@
 //! Each worker holds only the state it is entitled to — the states of
 //! vertices it Maps and Reduces — so a decode bug cannot be papered over
 //! by shared memory: wrong bits produce wrong PageRanks, which the tests
-//! catch against the single-machine oracle. Workers encode straight into
-//! reusable transport send buffers with the single-sender arena kernels
-//! ([`encode_sender_into`]) and decode from borrowed frame views
-//! ([`decode_sender_into`]).
+//! catch against the single-machine oracle. The per-worker algorithm
+//! itself lives in [`WorkerCore`](super::exec::WorkerCore) — **the same
+//! execution core the engine drives** — plugged into the transport via
+//! [`TransportFabric`](super::exec::TransportFabric); this module only
+//! sequences the control protocol around it.
 //!
 //! ## Sharded prepare: workers scale with their shard
 //!
@@ -66,22 +66,18 @@
 //! because every worker folds local and received IVs in exactly the
 //! engine's canonical order (groups ascending, then transfers ascending).
 //!
-//! ## Steady-state allocation (hand-audit)
+//! ## Steady-state allocation
 //!
 //! After the first iteration warms capacities, a worker's iteration path
-//! allocates nothing: sends reuse `vals`/`cols` scratch and one frame
-//! buffer per worker (cleared + extended in place), ring slots cycle
-//! through the `InProc` buffer pool, receives swap pooled buffers, and
-//! decode/reduce write into preallocated arenas (`garena`, `gvals`,
-//! `unc_arena`, `bits`, `accs`, `next_bits`, `qbits`); group values are
-//! evaluated once per iteration (at send time) and reused by decode,
-//! and when the program's Map is destination-independent the per-mapper
-//! values are cached once per iteration in `qbits` (the engine's
-//! mapper-once fast path, now on the workers too). The send-path half
-//! of this contract — including the batched staging buffers — is
-//! asserted under a counting allocator in `tests/transport_zero_alloc.rs`;
-//! the leader intentionally keeps a couple of per-iteration `Vec`s
-//! (routing the write-back), which are off the workers' data path.
+//! allocates nothing: the core's arenas and frame buffer are reused,
+//! ring slots cycle through the `InProc` buffer pool, and receives swap
+//! pooled buffers (see the audit in
+//! [`coordinator::exec`](super::exec)'s module docs; asserted under a
+//! counting allocator in `tests/zero_alloc.rs` for the core over both
+//! fabrics and in `tests/transport_zero_alloc.rs` for the raw transport
+//! send path). The leader intentionally keeps a couple of per-iteration
+//! `Vec`s (routing the write-back), which are off the workers' data
+//! path.
 //!
 //! ## Batched wire path
 //!
@@ -112,13 +108,8 @@
 
 use std::time::Instant;
 
-use crate::allocation::Allocation;
-use crate::graph::csr::{Csr, Vertex};
-use crate::mapreduce::program::VertexProgram;
+use crate::graph::csr::Vertex;
 use crate::network::Bus;
-use crate::shuffle::coded::{encode_sender_into, eval_rows_except};
-use crate::shuffle::combined::combined_value;
-use crate::shuffle::decoder::decode_sender_into;
 use crate::shuffle::load::{ShuffleLoad, HEADER_BYTES};
 use crate::shuffle::segments::seg_bytes;
 use crate::transport::frame::{self, Frame, FrameKind};
@@ -126,6 +117,7 @@ use crate::transport::{InProcNet, TcpNet, Transport, TransportKind};
 
 use super::config::{EngineConfig, Scheme};
 use super::engine::{prepare, prepare_worker, Job, PreparedJob, PreparedWorker};
+use super::exec::{TransportFabric, WorkerCore};
 use super::metrics::{IterationMetrics, JobReport, PhaseTimes};
 
 /// Run a job on the cluster over the in-process transport. Semantics
@@ -209,7 +201,7 @@ fn drive(
                 // each worker thread builds only its own shard — the same
                 // code path a worker *process* runs from the job spec
                 let shard = prepare_worker(job, scheme, kk);
-                run_worker(kk, job, &shard, net)
+                run_worker(kk, job, shard, net)
             });
         }
         run_leader(job, cfg, iters, prep, net)
@@ -220,14 +212,102 @@ fn drive(
 /// `coded-graph worker` *process* shares with the in-process driver's
 /// threads. Expects the cluster convention: workers `0..K`, leader `K`.
 /// Consumes the worker's own [`PreparedWorker`] shard (from
-/// [`prepare_worker`]) — never the global prepared job. Installs the
-/// leave guard itself: a clean exit half-closes the endpoint, a panic
-/// aborts the transport so every peer unblocks.
-pub fn run_worker(me: u8, job: &Job<'_>, prep: &PreparedWorker, net: &dyn Transport) {
+/// [`prepare_worker`]) — never the global prepared job — which the
+/// [`WorkerCore`] takes ownership of. Installs the leave guard itself: a
+/// clean exit half-closes the endpoint, a panic aborts the transport so
+/// every peer unblocks.
+///
+/// The per-worker algorithm is entirely the core's
+/// (encode → stage → ingest → decode → fold); this loop adds only the
+/// control protocol: barriers, the `Reduced` reply, and the state
+/// write-back. Data frames racing ahead of our control stream are
+/// stashed into the core from every receive loop.
+pub fn run_worker(me: u8, job: &Job<'_>, prep: PreparedWorker, net: &dyn Transport) {
     let leader = job.alloc.k as u8;
     assert_eq!(prep.me, me, "sharded prep was built for worker {}", prep.me);
     let _guard = LeaveGuard(net, me);
-    Worker::new(me, job.graph, job.alloc, job.program, prep, net, leader).run();
+    let (g, alloc, prog) = (job.graph, job.alloc, job.program);
+
+    // the canonical phase machine plus this worker's entitled state:
+    // only Mapped and Reduced vertices are valid, NaN poison elsewhere
+    // so an illegal read surfaces in tests instead of folding silently
+    let mut core = WorkerCore::new(job, prep);
+    let mut state = vec![f64::NAN; g.n()];
+    for j in alloc.mapped_vertices(me) {
+        state[j as usize] = prog.init(j, g);
+    }
+    for &i in &alloc.reduce_sets[me as usize] {
+        state[i as usize] = prog.init(i, g);
+    }
+
+    let mut fab = TransportFabric::new(net, me, leader);
+    let mut rbuf: Vec<u8> = Vec::new();
+    let mut reply: Vec<u8> = Vec::new();
+    let rows = &alloc.reduce_sets[me as usize];
+    'iterations: loop {
+        // ---- await the Shuffle barrier ----
+        loop {
+            let f = recv_frame(net, me, &mut rbuf);
+            match f.kind {
+                FrameKind::StartShuffle => break,
+                FrameKind::CodedData | FrameKind::UncodedData => core.ingest(&f),
+                // a zero-iteration job stops before any shuffle starts
+                FrameKind::Stop => {
+                    fab.check_local_stats();
+                    return;
+                }
+                other => unreachable!("unexpected {other:?} awaiting shuffle"),
+            }
+        }
+        // encode → stage (batched) → flush + SendDone → ingest until all
+        // expected data arrived → consume the leader's Reduce barrier
+        core.stage_sends(job, &state, &mut fab);
+        core.ingest_all(&mut fab);
+        fab.await_reduce_barrier(&mut rbuf);
+        let validated = core.decode_and_fold(job, &state, None);
+        frame::encode_reduced(&mut reply, me, validated, core.next_bits());
+        net.send_unicast(me, leader, &reply);
+
+        // ---- state write-back ----
+        for s in state.iter_mut() {
+            *s = f64::NAN;
+        }
+        let mut got_update = false;
+        loop {
+            let f = recv_frame(net, me, &mut rbuf);
+            match f.kind {
+                FrameKind::StateUpdate => {
+                    for c in 0..f.count as usize {
+                        let (v, bits) = f.update_pair(c);
+                        state[v as usize] = f64::from_bits(bits);
+                    }
+                    // own reduce rows stay valid (the next finalize needs
+                    // the previous state)
+                    for (slot, &i) in rows.iter().enumerate() {
+                        state[i as usize] = f64::from_bits(core.next_bits()[slot]);
+                    }
+                    got_update = true;
+                }
+                FrameKind::Continue => {
+                    assert!(got_update, "Continue before StateUpdate");
+                    continue 'iterations;
+                }
+                FrameKind::Stop => {
+                    fab.check_local_stats();
+                    return;
+                }
+                FrameKind::CodedData | FrameKind::UncodedData => core.ingest(&f),
+                other => unreachable!("unexpected {other:?} at write-back"),
+            }
+        }
+    }
+}
+
+/// Block for the next frame at `me`; a disconnected peer is a protocol
+/// failure (the panic unwinds the scope via the leave guards).
+fn recv_frame<'b>(net: &dyn Transport, me: u8, rbuf: &'b mut Vec<u8>) -> Frame<'b> {
+    assert!(net.recv(me, rbuf), "worker {me}: peer disconnected");
+    Frame::parse(rbuf).expect("worker: bad frame")
 }
 
 /// Run the leader endpoint over `net` — shared by the in-process driver
@@ -460,556 +540,10 @@ fn leader_loop(
     report
 }
 
-/// One worker: owns only its entitled state (and only its shard of the
-/// plan), performs real encode / decode / reduce over the transport.
-struct Worker<'a> {
-    me: u8,
-    g: &'a Csr,
-    alloc: &'a Allocation,
-    prog: &'a dyn VertexProgram,
-    prep: &'a PreparedWorker,
-    net: &'a dyn Transport,
-    leader: u8,
-    r: usize,
-    sb: usize,
-    combined: bool,
-    /// Does the program's Map ignore the destination? If so, `qbits`
-    /// caches one value per mapped vertex per iteration (engine fast
-    /// path) instead of a dyn-dispatched `map` call per pair.
-    src_only: bool,
-    /// Local indices (into the shard plan) of the groups this worker
-    /// decodes, ascending — also the canonical fold order.
-    my_groups: &'a [u32],
-    /// Wire ids of `my_groups`, ascending (inbound frame routing).
-    my_gids: Vec<u32>,
-    my_row_idx: Vec<usize>,
-    garena_off: Vec<usize>,
-    gvals_off: Vec<usize>,
-    /// Indices into the shard's transfers this worker receives
-    /// (ascending), their wire ids, and IV-arena offsets.
-    my_unc_recv: &'a [u32],
-    my_unc_ids: Vec<u32>,
-    unc_off: Vec<usize>,
-    expect_coded: usize,
-    expect_unc: usize,
-    /// Local state: only Mapped + Reduced vertices are valid; NaN poison
-    /// elsewhere so illegal reads surface in tests.
-    state: Vec<f64>,
-    // -- steady-state scratch (allocated once; see the module hand-audit) --
-    /// Per-mapper Map-value cache (`src_only` fast path), refreshed once
-    /// per iteration at send time (state is frozen until write-back).
-    qbits: Vec<u64>,
-    vals: Vec<u64>,
-    cols: Vec<u64>,
-    bits: Vec<u64>,
-    /// Received coded columns, `members * my_len` per group, sender-major.
-    garena: Vec<u64>,
-    /// Group IV values for the groups this worker decodes, evaluated once
-    /// per iteration during `send_all` (the sender-side skip index equals
-    /// the receiver-side one, and state is frozen until write-back) and
-    /// reused by `decode_and_reduce`. Recv-groups this worker does not
-    /// send in have all other rows empty, so their (stale) entries are
-    /// never read during decode.
-    gvals: Vec<u64>,
-    /// Received uncoded IV bits, canonical transfer order.
-    unc_arena: Vec<u64>,
-    ivbits: Vec<u64>,
-    accs: Vec<f64>,
-    next_bits: Vec<u64>,
-    receivers: Vec<u8>,
-    sendbuf: Vec<u8>,
-    got_coded: usize,
-    got_unc: usize,
-    /// Lifetime data-send tally (frames, serialized bytes) — what this
-    /// worker's transport actually carried; per-iteration deltas ride on
-    /// `SendDone` so the leader can cross-check the wire model without a
-    /// shared counter.
-    sent_frames: usize,
-    sent_bytes: usize,
-}
-
-/// The IV value both schemes and the decoder share — a pure function of
-/// `(i, j, state)`. For combined schemes the "mapper" slot carries a
-/// batch index and the value is the per-(Reducer, batch) pre-aggregate;
-/// every evaluation site in this driver only touches batches the worker
-/// Maps, so the NaN poison never leaks into results.
-#[inline]
-fn iv_value(
-    g: &Csr,
-    alloc: &Allocation,
-    prog: &dyn VertexProgram,
-    state: &[f64],
-    combined: bool,
-    i: Vertex,
-    j: Vertex,
-) -> u64 {
-    if combined {
-        combined_value(g, alloc, prog, state, i, j as usize).to_bits()
-    } else {
-        let s = state[j as usize];
-        debug_assert!(!s.is_nan(), "worker read unowned state {j}");
-        prog.map(i, j, s, g).to_bits()
-    }
-}
-
-impl<'a> Worker<'a> {
-    fn new(
-        me: u8,
-        g: &'a Csr,
-        alloc: &'a Allocation,
-        prog: &'a dyn VertexProgram,
-        prep: &'a PreparedWorker,
-        net: &'a dyn Transport,
-        leader: u8,
-    ) -> Worker<'a> {
-        let n = g.n();
-        let r = alloc.r;
-        let plan = &prep.plan;
-        let wk = me as usize;
-        let rows = &alloc.reduce_sets[wk];
-
-        let mut state = vec![f64::NAN; n];
-        for j in alloc.mapped_vertices(me) {
-            state[j as usize] = prog.init(j, g);
-        }
-        for &i in rows {
-            state[i as usize] = prog.init(i, g);
-        }
-
-        // scratch sizing: max value-arena / column counts over the groups
-        // this worker encodes or decodes (shard-local indices throughout)
-        let mut vals_cap = 0usize;
-        let mut cols_cap = 0usize;
-        for &(l, si) in prep.send_plan() {
-            vals_cap = vals_cap.max(plan.group(l as usize).total_ivs());
-            cols_cap = cols_cap.max(plan.sender_cols(l as usize)[si as usize] as usize);
-        }
-        let my_groups = prep.recv_groups();
-        let mut my_gids = Vec::with_capacity(my_groups.len());
-        let mut my_row_idx = Vec::with_capacity(my_groups.len());
-        let mut garena_off = Vec::with_capacity(my_groups.len());
-        let mut gvals_off = Vec::with_capacity(my_groups.len());
-        let mut garena_len = 0usize;
-        let mut gvals_len = 0usize;
-        let mut bits_cap = 0usize;
-        for &l in my_groups {
-            let group = plan.group(l as usize);
-            let m_idx = group.member_index(me).expect("routing: not a member");
-            let my_len = group.row_len(m_idx);
-            bits_cap = bits_cap.max(my_len);
-            my_gids.push(plan.wire_id(l as usize));
-            my_row_idx.push(m_idx);
-            garena_off.push(garena_len);
-            garena_len += group.members() * my_len;
-            gvals_off.push(gvals_len);
-            gvals_len += group.total_ivs();
-        }
-        let my_unc_recv = prep.unc_recv();
-        let mut my_unc_ids = Vec::with_capacity(my_unc_recv.len());
-        let mut unc_off = Vec::with_capacity(my_unc_recv.len());
-        let mut unc_len = 0usize;
-        for &ti in my_unc_recv {
-            my_unc_ids.push(prep.transfer_ids[ti as usize]);
-            unc_off.push(unc_len);
-            unc_len += prep.transfers[ti as usize].ivs.len();
-        }
-        let ivbits_cap = prep
-            .unc_sends()
-            .iter()
-            .map(|&ti| prep.transfers[ti as usize].ivs.len())
-            .max()
-            .unwrap_or(0);
-        let combined = prep.scheme.is_combined();
-        let src_only = !combined && !prog.map_depends_on_dst();
-
-        Worker {
-            me,
-            g,
-            alloc,
-            prog,
-            prep,
-            net,
-            leader,
-            r,
-            sb: seg_bytes(r),
-            combined,
-            src_only,
-            my_groups,
-            my_gids,
-            my_row_idx,
-            garena_off,
-            gvals_off,
-            my_unc_recv,
-            my_unc_ids,
-            unc_off,
-            expect_coded: prep.expect_coded(),
-            expect_unc: prep.expect_unc(),
-            state,
-            qbits: vec![0u64; if src_only { n } else { 0 }],
-            vals: vec![0u64; vals_cap],
-            cols: vec![0u64; cols_cap],
-            bits: vec![0u64; bits_cap],
-            garena: vec![0u64; garena_len],
-            gvals: vec![0u64; gvals_len],
-            unc_arena: vec![0u64; unc_len],
-            ivbits: Vec::with_capacity(ivbits_cap),
-            accs: vec![0.0f64; rows.len()],
-            next_bits: vec![0u64; rows.len()],
-            receivers: Vec::with_capacity(r + 1),
-            sendbuf: Vec::new(),
-            got_coded: 0,
-            got_unc: 0,
-            sent_frames: 0,
-            sent_bytes: 0,
-        }
-    }
-
-    /// Block for the next frame; a disconnected peer is a protocol
-    /// failure (panic unwinds the scope via the leave guards).
-    fn recv_frame<'b>(&self, rbuf: &'b mut Vec<u8>) -> Frame<'b> {
-        let ok = self.net.recv(self.me, rbuf);
-        assert!(ok, "worker {}: peer disconnected", self.me);
-        Frame::parse(rbuf).expect("worker: bad frame")
-    }
-
-    fn run(&mut self) {
-        let mut rbuf: Vec<u8> = Vec::new();
-        let mut reply: Vec<u8> = Vec::new();
-        'iterations: loop {
-            // ---- await the Shuffle barrier ----
-            loop {
-                let f = self.recv_frame(&mut rbuf);
-                match f.kind {
-                    FrameKind::StartShuffle => break,
-                    FrameKind::CodedData | FrameKind::UncodedData => self.handle_data(&f),
-                    // a zero-iteration job stops before any shuffle starts
-                    FrameKind::Stop => {
-                        self.check_local_stats();
-                        return;
-                    }
-                    other => unreachable!("unexpected {other:?} awaiting shuffle"),
-                }
-            }
-            self.send_all();
-
-            // ---- receive until the Reduce barrier AND all expected data ----
-            let mut got_reduce = false;
-            while !(got_reduce
-                && self.got_coded == self.expect_coded
-                && self.got_unc == self.expect_unc)
-            {
-                let f = self.recv_frame(&mut rbuf);
-                match f.kind {
-                    FrameKind::StartReduce => got_reduce = true,
-                    FrameKind::CodedData | FrameKind::UncodedData => self.handle_data(&f),
-                    other => unreachable!("unexpected {other:?} during shuffle"),
-                }
-            }
-            // this iteration's frames are all in the arenas; reset the
-            // tallies *before* replying so data that races ahead of our
-            // next controls counts toward the next barrier
-            self.got_coded = 0;
-            self.got_unc = 0;
-            let validated = self.decode_and_reduce();
-            frame::encode_reduced(&mut reply, self.me, validated, &self.next_bits);
-            self.net.send_unicast(self.me, self.leader, &reply);
-
-            // ---- state write-back ----
-            for s in self.state.iter_mut() {
-                *s = f64::NAN;
-            }
-            let mut got_update = false;
-            loop {
-                let f = self.recv_frame(&mut rbuf);
-                match f.kind {
-                    FrameKind::StateUpdate => {
-                        self.apply_update(&f);
-                        got_update = true;
-                    }
-                    FrameKind::Continue => {
-                        assert!(got_update, "Continue before StateUpdate");
-                        continue 'iterations;
-                    }
-                    FrameKind::Stop => {
-                        self.check_local_stats();
-                        return;
-                    }
-                    FrameKind::CodedData | FrameKind::UncodedData => self.handle_data(&f),
-                    other => unreachable!("unexpected {other:?} at write-back"),
-                }
-            }
-        }
-    }
-
-    /// Encode and transmit everything this worker owes through the
-    /// transport's **batched** surface, flush once per peer, then signal
-    /// the leader (the SendDone carries this iteration's data-send
-    /// tally). Steady state: no allocation (scratch + frame buffer +
-    /// staging buffer reuse).
-    fn send_all(&mut self) {
-        let (g, alloc, prog) = (self.g, self.alloc, self.prog);
-        let (combined, me, r, sb, src_only) =
-            (self.combined, self.me, self.r, self.sb, self.src_only);
-        // mapper-once fast path: when Map ignores the destination,
-        // evaluate each mapped vertex once per iteration (state is
-        // frozen until write-back, so the cache also serves the local
-        // Reduce fold in decode_and_reduce)
-        if src_only {
-            let state = &self.state;
-            let qbits = &mut self.qbits;
-            for j in alloc.mapped_vertices(me) {
-                let s = state[j as usize];
-                debug_assert!(!s.is_nan(), "worker {me} mapped-state poison at {j}");
-                qbits[j as usize] =
-                    if g.degree(j) == 0 { 0 } else { prog.map(j, j, s, g).to_bits() };
-            }
-        }
-        let plan = &self.prep.plan;
-        let state = &self.state;
-        let qbits: &[u64] = &self.qbits;
-        let value = move |i: Vertex, j: Vertex| {
-            if src_only {
-                qbits[j as usize]
-            } else {
-                iv_value(g, alloc, prog, state, combined, i, j)
-            }
-        };
-        let mut iter_frames = 0u32;
-        let mut iter_bytes = 0u64;
-
-        for &(l, si) in self.prep.send_plan() {
-            let group = plan.group(l as usize);
-            let q = plan.sender_cols(l as usize)[si as usize] as usize;
-            let nv = group.total_ivs();
-            // when we also decode this group, evaluate into the
-            // persistent per-group arena so decode_and_reduce can reuse
-            // the values (our skip index is the same on both sides and
-            // state is frozen until write-back)
-            let vals: &[u64] = match self.my_groups.binary_search(&l) {
-                Ok(slot) => {
-                    let range = self.gvals_off[slot]..self.gvals_off[slot] + nv;
-                    eval_rows_except(group, si as usize, &value, &mut self.gvals[range.clone()]);
-                    &self.gvals[range]
-                }
-                Err(_) => {
-                    eval_rows_except(group, si as usize, &value, &mut self.vals[..nv]);
-                    &self.vals[..nv]
-                }
-            };
-            let si = si as usize;
-            encode_sender_into(group, si, vals, r, &mut self.cols[..q]);
-            frame::encode_coded(&mut self.sendbuf, me, plan.wire_id(l as usize), &self.cols[..q], sb);
-            self.receivers.clear();
-            for (mi, &m) in group.servers.iter().enumerate() {
-                if m != me && group.row_len(mi) > 0 {
-                    self.receivers.push(m);
-                }
-            }
-            self.net.send_multicast_buffered(me, &self.receivers, &self.sendbuf);
-            iter_frames += 1; // one multicast = one transmission
-            iter_bytes += self.sendbuf.len() as u64;
-        }
-        for &ti in self.prep.unc_sends() {
-            let t = &self.prep.transfers[ti as usize];
-            self.ivbits.clear();
-            self.ivbits.extend(t.ivs.iter().map(|&(i, j)| value(i, j)));
-            frame::encode_uncoded(
-                &mut self.sendbuf,
-                me,
-                self.prep.transfer_ids[ti as usize],
-                &self.ivbits,
-            );
-            self.net.send_unicast_buffered(me, t.receiver, &self.sendbuf);
-            iter_frames += 1;
-            iter_bytes += self.sendbuf.len() as u64;
-        }
-        // one physical write per peer with staged data (O(peers) syscalls)
-        self.net.flush(me);
-        self.sent_frames += iter_frames as usize;
-        self.sent_bytes += iter_bytes as usize;
-        frame::encode_send_done(&mut self.sendbuf, me, iter_frames, iter_bytes);
-        self.net.send_unicast(me, self.leader, &self.sendbuf);
-    }
-
-    /// On a process-separated transport the endpoint's own counters see
-    /// exactly this worker's sends: verify the hand tallies against them
-    /// before exiting (a shared in-process transport aggregates every
-    /// endpoint, so there the *leader* checks the global counter
-    /// instead).
-    fn check_local_stats(&self) {
-        if !self.net.stats_are_global() {
-            let s = self.net.data_stats();
-            assert_eq!(
-                (s.data_frames, s.data_bytes),
-                (self.sent_frames, self.sent_bytes),
-                "worker {}: transport counters disagree with the send tally",
-                self.me
-            );
-        }
-    }
-
-    /// Stash one data frame into its arena slot (state-independent: the
-    /// sender already evaluated the bits, we only copy bytes) and count
-    /// it toward the current barrier.
-    fn handle_data(&mut self, f: &Frame<'_>) {
-        match f.kind {
-            FrameKind::CodedData => {
-                // frame carries the group's canonical wire id (subset
-                // rank) — resolve it to our shard-local slot
-                let slot = self
-                    .my_gids
-                    .binary_search(&f.index)
-                    .expect("coded frame for a group this worker has no row in");
-                let group = self.prep.plan.group(self.my_groups[slot] as usize);
-                let m_idx = self.my_row_idx[slot];
-                let my_len = group.row_len(m_idx);
-                let s_idx = group.member_index(f.sender).expect("sender not in group");
-                debug_assert_ne!(s_idx, m_idx, "received own transmission");
-                debug_assert!(f.count as usize >= my_len, "short coded frame");
-                let base = self.garena_off[slot] + s_idx * my_len;
-                for (c, cell) in self.garena[base..base + my_len].iter_mut().enumerate() {
-                    *cell = f.col(c, self.sb);
-                }
-                self.got_coded += 1;
-            }
-            FrameKind::UncodedData => {
-                // frame carries the transfer's canonical wire id
-                // (sender·K + receiver) — resolve to our shard transfer
-                let pos = self
-                    .my_unc_ids
-                    .binary_search(&f.index)
-                    .expect("unicast for a transfer this worker does not receive");
-                let count = f.count as usize;
-                debug_assert_eq!(
-                    count,
-                    self.prep.transfers[self.my_unc_recv[pos] as usize].ivs.len()
-                );
-                let base = self.unc_off[pos];
-                for (c, cell) in self.unc_arena[base..base + count].iter_mut().enumerate() {
-                    *cell = f.word(c);
-                }
-                self.got_unc += 1;
-            }
-            _ => unreachable!("handle_data on a control frame"),
-        }
-    }
-
-    /// Decode received traffic and run the Reduce fold in *exactly* the
-    /// engine's canonical order (local Map values, then groups ascending,
-    /// then transfers ascending), so final states are bit-identical to
-    /// `engine::run_rust`. Returns the recovered-and-ownership-checked IV
-    /// count (the `validated_ivs` contribution).
-    fn decode_and_reduce(&mut self) -> u32 {
-        let (g, alloc, prog) = (self.g, self.alloc, self.prog);
-        let (me, r, src_only) = (self.me, self.r, self.src_only);
-        let plan = &self.prep.plan;
-        let reduce_slot: &[u32] = &self.prep.reduce_slot;
-        let state = &self.state;
-        let qbits: &[u64] = &self.qbits;
-        let rows = &alloc.reduce_sets[me as usize];
-
-        // local fold (identical combine sequence to the engine); the
-        // src_only path reuses the per-iteration `qbits` cache filled at
-        // send time — every neighbor j here has degree ≥ 1 and is mapped
-        // by this worker, so its cache entry is a real Map value
-        for (slot, &i) in rows.iter().enumerate() {
-            let mut acc = prog.identity();
-            for &j in g.neighbors(i) {
-                if alloc.maps(me, j) {
-                    let v = if src_only {
-                        f64::from_bits(qbits[j as usize])
-                    } else {
-                        prog.map(i, j, state[j as usize], g)
-                    };
-                    acc = prog.combine(acc, v);
-                }
-            }
-            self.accs[slot] = acc;
-        }
-
-        let mut validated = 0u32;
-        // coded: cancel + reassemble per group, fold in pair order. The
-        // cancellation values were already evaluated into `gvals` during
-        // send_all (same skip index, same state); a recv-group we did not
-        // send in has every other row empty, so its stale arena entries
-        // are never read by the decoder
-        for (slot_idx, &gi) in self.my_groups.iter().enumerate() {
-            let group = plan.group(gi as usize);
-            let m_idx = self.my_row_idx[slot_idx];
-            let my_len = group.row_len(m_idx);
-            let nv = group.total_ivs();
-            let gvals = &self.gvals[self.gvals_off[slot_idx]..self.gvals_off[slot_idx] + nv];
-            let bits = &mut self.bits[..my_len];
-            bits.fill(0);
-            let base = self.garena_off[slot_idx];
-            for s_idx in 0..group.members() {
-                if s_idx == m_idx {
-                    continue;
-                }
-                decode_sender_into(
-                    group,
-                    m_idx,
-                    s_idx,
-                    &self.garena[base + s_idx * my_len..base + (s_idx + 1) * my_len],
-                    gvals,
-                    r,
-                    bits,
-                );
-            }
-            for (c, &(i, _)) in group.row(m_idx).iter().enumerate() {
-                // hard check before touching reduce_slot: the shard only
-                // populates slots for this worker's own vertices, so a
-                // misrouted IV would otherwise fold silently into the
-                // wrong accumulator
-                assert_eq!(
-                    alloc.reduce_owner[i as usize], me,
-                    "decoded IV for a vertex this worker does not reduce"
-                );
-                let slot = reduce_slot[i as usize] as usize;
-                self.accs[slot] = prog.combine(self.accs[slot], f64::from_bits(bits[c]));
-            }
-            validated += my_len as u32;
-        }
-        // uncoded: fold received batches in canonical transfer order
-        for (pos, &ti) in self.my_unc_recv.iter().enumerate() {
-            let t = &self.prep.transfers[ti as usize];
-            let base = self.unc_off[pos];
-            for (c, &(i, _)) in t.ivs.iter().enumerate() {
-                assert_eq!(
-                    alloc.reduce_owner[i as usize], me,
-                    "received IV for a vertex this worker does not reduce"
-                );
-                let slot = reduce_slot[i as usize] as usize;
-                self.accs[slot] =
-                    prog.combine(self.accs[slot], f64::from_bits(self.unc_arena[base + c]));
-            }
-            validated += t.ivs.len() as u32;
-        }
-        // finalize into the Reduced payload (bit-exact states)
-        for (slot, &i) in rows.iter().enumerate() {
-            self.next_bits[slot] =
-                prog.finalize(i, self.accs[slot], state[i as usize], g).to_bits();
-        }
-        validated
-    }
-
-    /// Apply the leader's fresh states; own reduce rows stay valid (the
-    /// next finalize needs the previous state).
-    fn apply_update(&mut self, f: &Frame<'_>) {
-        for c in 0..f.count as usize {
-            let (v, bits) = f.update_pair(c);
-            self.state[v as usize] = f64::from_bits(bits);
-        }
-        let rows = &self.alloc.reduce_sets[self.me as usize];
-        for (slot, &i) in rows.iter().enumerate() {
-            self.state[i as usize] = f64::from_bits(self.next_bits[slot]);
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::allocation::Allocation;
     use crate::graph::er::er;
     use crate::mapreduce::program::run_single_machine;
     use crate::mapreduce::{PageRank, Sssp};
@@ -1020,6 +554,11 @@ mod tests {
     fn cfg(scheme: Scheme) -> EngineConfig {
         EngineConfig { scheme, ..Default::default() }
     }
+
+    // NOTE: cross-driver bit-identity (engine / inproc / tcp / process-style
+    // x all four schemes x ER/PL/SBM, including loads, modeled times, and
+    // validated_ivs) lives in tests/driver_matrix.rs since PR 5 — the unit
+    // tests here cover the oracle and protocol edge cases only.
 
     #[test]
     fn cluster_coded_pagerank_matches_oracle() {
@@ -1058,72 +597,6 @@ mod tests {
         for (a, b) in report.final_state.iter().zip(&want) {
             assert!((a - b).abs() < 1e-12);
         }
-    }
-
-    #[test]
-    fn cluster_is_bit_identical_to_engine() {
-        // the acceptance bar: final states equal run_rust's bit-for-bit,
-        // on every scheme the driver supports (combined included — the
-        // workers evaluate per-batch pre-aggregates locally)
-        let g = er(150, 0.1, &mut DetRng::seed(64));
-        let alloc = Allocation::er_scheme(150, 5, 2);
-        let prog = PageRank::default();
-        let job = Job { graph: &g, alloc: &alloc, program: &prog };
-        for scheme in [
-            Scheme::Coded,
-            Scheme::Uncoded,
-            Scheme::CodedCombined,
-            Scheme::UncodedCombined,
-        ] {
-            let cl = run_cluster(&job, &cfg(scheme), 3);
-            let en = run_rust(&job, &cfg(scheme), 3);
-            for (a, b) in cl.final_state.iter().zip(&en.final_state) {
-                assert_eq!(a.to_bits(), b.to_bits(), "{scheme}: {a} vs {b}");
-            }
-        }
-    }
-
-    #[test]
-    fn cluster_and_engine_agree_on_loads_and_times() {
-        let g = er(150, 0.1, &mut DetRng::seed(64));
-        let alloc = Allocation::er_scheme(150, 5, 2);
-        let prog = PageRank::default();
-        let job = Job { graph: &g, alloc: &alloc, program: &prog };
-        for scheme in [Scheme::Coded, Scheme::Uncoded] {
-            let cl = run_cluster(&job, &cfg(scheme), 2);
-            let en = run_rust(&job, &cfg(scheme), 2);
-            for (a, b) in cl.iterations.iter().zip(&en.iterations) {
-                assert_eq!(a.shuffle.paper_bits, b.shuffle.paper_bits);
-                assert_eq!(a.shuffle.wire_payload_bytes, b.shuffle.wire_payload_bytes);
-                assert_eq!(a.shuffle.messages, b.shuffle.messages);
-                assert_eq!(a.update.wire_payload_bytes, b.update.wire_payload_bytes);
-                // modeled phase times replay identically too
-                assert_eq!(a.times.map_s, b.times.map_s);
-                assert_eq!(a.times.shuffle_s, b.times.shuffle_s);
-                assert_eq!(a.times.encode_s, b.times.encode_s);
-                assert_eq!(a.times.decode_s, b.times.decode_s);
-                assert_eq!(a.times.reduce_s, b.times.reduce_s);
-                assert_eq!(a.times.update_s, b.times.update_s);
-            }
-        }
-    }
-
-    #[test]
-    fn cluster_validated_ivs_match_engine() {
-        let g = er(130, 0.12, &mut DetRng::seed(66));
-        let alloc = Allocation::er_scheme(130, 4, 2);
-        let prog = PageRank::default();
-        let job = Job { graph: &g, alloc: &alloc, program: &prog };
-        let vcfg = EngineConfig { scheme: Scheme::Coded, validate: true, ..Default::default() };
-        let cl = run_cluster(&job, &vcfg, 2);
-        let en = run_rust(&job, &vcfg, 2);
-        for (a, b) in cl.iterations.iter().zip(&en.iterations) {
-            assert!(a.validated_ivs > 0);
-            assert_eq!(a.validated_ivs, b.validated_ivs);
-        }
-        // validation off: both report zero
-        let cl = run_cluster(&job, &cfg(Scheme::Coded), 1);
-        assert_eq!(cl.iterations[0].validated_ivs, 0);
     }
 
     #[test]

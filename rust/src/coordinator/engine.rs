@@ -13,28 +13,33 @@
 //! while each *worker* consumes only its own [`PreparedWorker`] shard
 //! ([`prepare_worker`]) — membership-sized plan, same canonical orders.
 //!
-//! ## Architecture (§Perf)
+//! ## Architecture (§Perf, unified core)
 //!
-//! The hot path is built around two ideas:
+//! Since PR 5 the engine no longer has its own shuffle data path: one
+//! iteration *is* `K` [`WorkerCore`]s — the same per-worker phase
+//! machine the cluster drivers run — exchanging serialized frames over
+//! an in-memory [`DirectFabric`], plus this module's deterministic
+//! accounting replay. Three ideas carry the hot path:
 //!
-//! 1. **Everything state-independent is precomputed in [`prepare`]** —
-//!    the flat [`ShufflePlan`] arena, per-worker receive ranges into it,
-//!    the reducer→slot index (no per-IV `binary_search`), the encode /
-//!    decode work tallies, and the state-write-back message list. A
-//!    steady-state iteration only touches state-dependent bytes.
-//! 2. **All per-iteration buffers live in an [`EngineScratch`]** owned by
-//!    the caller. After the first iteration warms the capacities,
-//!    [`run_iteration_scratch`] performs **zero heap allocation** on the
-//!    rust backend (asserted by the `zero_alloc` integration test on the
-//!    serial path; under `parallel: true` the engine's data path is
-//!    unchanged but rayon's scheduler may allocate internally).
-//!
-//! Phases run in parallel (rayon, `parallel` feature + config flag):
-//! Encode/Decode fan out over multicast groups, Reduce over workers —
-//! each task writes a disjoint, statically-known arena region, and every
-//! floating-point or bus merge replays serially in canonical order
-//! afterwards, so results and metrics are **bit-identical** across the
-//! serial path, the parallel path, and any thread count.
+//! 1. **Everything state-independent is precomputed** — the global
+//!    [`PreparedJob`] (accounting replay tables, work tallies, the
+//!    write-back message list) and, per core, a [`PreparedWorker`]
+//!    shard with its routing.
+//! 2. **All per-iteration buffers persist**: each core owns its arenas,
+//!    the fabric's send logs retain capacity, and both live in the
+//!    caller-owned [`EngineScratch`]. After the first iteration warms
+//!    the capacities, [`run_iteration_scratch`] performs **zero heap
+//!    allocation** on the rust backend (asserted by the `zero_alloc`
+//!    integration test on the serial path; under `parallel: true` the
+//!    data path is unchanged but rayon's scheduler may allocate
+//!    internally).
+//! 3. **Phases fan out over cores** (rayon, `parallel` feature +
+//!    config flag): each core stages into its own send log and ingests
+//!    read-only from all of them, so both phases need no
+//!    synchronization, and every floating-point fold and bus merge
+//!    replays serially in canonical order — results and metrics are
+//!    **bit-identical** across the serial path, the parallel path, any
+//!    thread count, and every cluster driver.
 
 use std::time::Instant;
 
@@ -45,12 +50,10 @@ use crate::mapreduce::sssp::EdgeWeights;
 use crate::network::Bus;
 #[cfg(feature = "xla")]
 use crate::runtime::BlockExecutor;
-use crate::shuffle::coded::{encode_group_into, eval_group_values};
 use crate::shuffle::combined::{
     build_combined_group_plans, build_combined_group_plans_sharded, combined_value,
     plan_uncoded_combined, plan_uncoded_combined_for,
 };
-use crate::shuffle::decoder::decode_group_into;
 #[cfg(feature = "xla")]
 use crate::shuffle::decoder::RecoveredIv;
 use crate::shuffle::load::{ShuffleLoad, HEADER_BYTES};
@@ -60,6 +63,7 @@ use crate::shuffle::uncoded::{plan_uncoded, plan_uncoded_for, UncodedTransfer};
 use crate::util::par;
 
 use super::config::{EngineConfig, Scheme, TimeModel};
+use super::exec::{DirectFabric, DirectReceiver, DirectSender, WorkerCore};
 use super::metrics::{IterationMetrics, JobReport, PhaseTimes};
 
 /// A distributed graph job: graph + allocation + vertex program.
@@ -111,17 +115,13 @@ pub struct PreparedJob {
     /// Directed edges Reduced per worker (Reduce-phase work).
     pub reduce_edges: Vec<usize>,
     /// `reduce_slot[v]` = position of `v` inside its owner's
-    /// `reduce_sets` row — replaces the per-received-IV `binary_search`.
+    /// `reduce_sets` row — the global view of
+    /// [`PreparedWorker::reduce_slot`], kept for the sharded-prepare
+    /// cross-checks (the data path lives in the worker shards now).
     pub reduce_slot: Vec<u32>,
-    /// Per-worker offsets into the accumulator arena (prefix sums of
-    /// reduce-set lengths), length `K + 1`.
-    pub reduce_off: Vec<usize>,
-    /// Per-worker absolute pair ranges into the plan arena, in delivery
-    /// (group) order; worker `k` owns
-    /// `recv_ranges[recv_off[k]..recv_off[k+1]]`.
-    recv_ranges: Vec<(usize, usize)>,
-    /// Per-worker inbound group indices (ascending), 1:1 with
-    /// `recv_ranges` — the cluster workers' decode routing table.
+    /// Per-worker inbound group indices (ascending) — the canonical
+    /// decode/fold order the leader's accounting and the ring-sizing
+    /// rule share with the worker shards.
     recv_groups: Vec<u32>,
     recv_off: Vec<usize>,
     /// Per-worker transfer indices (uncoded delivery order).
@@ -410,22 +410,18 @@ pub fn prepare(job: &Job<'_>, scheme: Scheme) -> PreparedJob {
         ),
     };
 
-    // reducer -> slot within its owner's row, plus per-worker arena offsets
+    // reducer -> slot within its owner's row (global cross-check view)
     let mut reduce_slot = vec![0u32; alloc.n];
-    let mut reduce_off = Vec::with_capacity(k + 1);
-    reduce_off.push(0);
     for set in &alloc.reduce_sets {
         for (slot, &v) in set.iter().enumerate() {
             reduce_slot[v as usize] = slot as u32;
         }
-        reduce_off.push(reduce_off.last().unwrap() + set.len());
     }
 
-    // per-worker receive ranges + group routing (coded), send routing,
-    // and transfer lists (uncoded), in the exact delivery order the
-    // serial engine has always used — the cluster driver shares these
-    // tables instead of rebuilding them per run
-    let mut recv_lists: Vec<Vec<(usize, usize)>> = vec![Vec::new(); k];
+    // per-worker group routing (coded), send routing, and transfer
+    // lists (uncoded), in the exact canonical delivery order — the
+    // accounting replay and ring sizing share these tables with the
+    // worker shards
     let mut recv_group_lists: Vec<Vec<u32>> = vec![Vec::new(); k];
     let mut send_lists: Vec<Vec<(u32, u32)>> = vec![Vec::new(); k];
     let sb = seg_bytes(r);
@@ -433,7 +429,6 @@ pub fn prepare(job: &Job<'_>, scheme: Scheme) -> PreparedJob {
     let mut decode_bytes = vec![0usize; k];
     for gi in 0..plan.num_groups() {
         let group = plan.group(gi);
-        let base = group.pair_base();
         for (s_idx, &q) in plan.sender_cols(gi).iter().enumerate() {
             if q == 0 {
                 continue;
@@ -451,23 +446,19 @@ pub fn prepare(job: &Job<'_>, scheme: Scheme) -> PreparedJob {
             if rlen == 0 {
                 continue;
             }
-            let lr = group.local_row_range(mi);
             let worker = group.servers[mi] as usize;
-            recv_lists[worker].push((base + lr.start, base + lr.end));
             recv_group_lists[worker].push(gi as u32);
             // decode work: r-1 segment recomputations + 1 XOR per
             // received byte of this member's row
             decode_bytes[worker] += rlen * sb * r;
         }
     }
-    let mut recv_ranges = Vec::with_capacity(recv_lists.iter().map(|l| l.len()).sum());
-    let mut recv_groups = Vec::with_capacity(recv_ranges.capacity());
+    let mut recv_groups = Vec::with_capacity(recv_group_lists.iter().map(|l| l.len()).sum());
     let mut recv_off = Vec::with_capacity(k + 1);
     recv_off.push(0);
-    for (list, glist) in recv_lists.iter().zip(&recv_group_lists) {
-        recv_ranges.extend_from_slice(list);
+    for glist in &recv_group_lists {
         recv_groups.extend_from_slice(glist);
-        recv_off.push(recv_ranges.len());
+        recv_off.push(recv_groups.len());
     }
     let mut send_items = Vec::with_capacity(send_lists.iter().map(|l| l.len()).sum());
     let mut send_off = Vec::with_capacity(k + 1);
@@ -530,8 +521,6 @@ pub fn prepare(job: &Job<'_>, scheme: Scheme) -> PreparedJob {
         mapped_edges,
         reduce_edges,
         reduce_slot,
-        reduce_off,
-        recv_ranges,
         recv_groups,
         recv_off,
         unc_recv,
@@ -547,88 +536,106 @@ pub fn prepare(job: &Job<'_>, scheme: Scheme) -> PreparedJob {
 }
 
 /// Reusable per-job scratch: the engine's entire per-iteration working
-/// set. Capacities grow during the first iteration and stay put, after
-/// which [`run_iteration_scratch`] allocates nothing on the rust backend.
+/// set — `K` [`WorkerCore`]s (each owning its [`PreparedWorker`] shard
+/// and arenas) plus the in-memory [`DirectFabric`] they exchange frames
+/// over. The cores are built lazily on the first iteration for a given
+/// job shape and reused afterwards; capacities grow during the first
+/// iteration and stay put, after which [`run_iteration_scratch`]
+/// allocates nothing on the rust backend.
 #[derive(Default)]
 pub struct EngineScratch {
-    /// Per-mapper Map-value cache (`map_depends_on_dst() == false` fast path).
-    qbits: Vec<u64>,
-    /// IV values, aligned with the plan's pair arena.
-    vals: Vec<u64>,
-    /// Coded XOR columns, sender-major per group.
-    cols: Vec<u64>,
-    /// Decoded IV bits, aligned with the pair arena.
-    bits: Vec<u64>,
-    /// Reduce accumulators, worker-major (`reduce_off` layout).
-    accs: Vec<f64>,
+    cores: Vec<WorkerCore>,
+    fabric: DirectFabric,
+    /// Job fingerprint the cores were built for (see [`ScratchKey`]).
+    key: Option<ScratchKey>,
+}
+
+/// Fingerprint of the job a scratch's cores were built for: scheme, the
+/// allocation's shape (`K`, `r`, batch count, first reduce-row length —
+/// enough to tell this crate's deterministic allocation schemes apart
+/// at equal dimensions), the graph's `(n, m)` plus an O(1) structural
+/// probe (sampled degrees and adjacency), and the program's identity
+/// (name + destination-dependence, which decides the `qbits` fast
+/// path). A scratch is still logically *per job*, like a
+/// [`PreparedJob`]; the fingerprint exists so accidental reuse on a
+/// different job rebuilds the cores instead of corrupting results.
+#[derive(Clone, Copy, PartialEq, Eq)]
+struct ScratchKey {
+    scheme: Scheme,
+    k: usize,
+    r: usize,
+    batches: usize,
+    first_reduce_row: usize,
+    n: usize,
+    m: usize,
+    graph_probe: u64,
+    program: &'static str,
+    dst_dependent: bool,
+}
+
+impl ScratchKey {
+    fn of(job: &Job<'_>, scheme: Scheme) -> ScratchKey {
+        let g = job.graph;
+        // cheap per-call structural probe: degree + adjacency samples at
+        // 8 fixed positions, so two graphs that merely share (n, m) and
+        // allocation shape still rebuild the cores (equal dims with
+        // different wiring would otherwise silently reuse stale plans)
+        let n = g.n();
+        let mut probe = 0xcbf2_9ce4_8422_2325u64; // FNV offset basis
+        let samples = if n == 0 { 0 } else { 8usize };
+        for s in 0..samples {
+            let v = (s * n / 8).min(n - 1) as Vertex;
+            let row = g.neighbors(v);
+            let sample = ((row.len() as u64) << 32)
+                ^ row.first().copied().unwrap_or(0) as u64
+                ^ ((row.last().copied().unwrap_or(0) as u64) << 16);
+            probe = (probe ^ sample).wrapping_mul(0x1000_0000_01b3);
+        }
+        ScratchKey {
+            scheme,
+            k: job.alloc.k,
+            r: job.alloc.r,
+            batches: job.alloc.batches.len(),
+            first_reduce_row: job.alloc.reduce_sets.first().map_or(0, Vec::len),
+            n,
+            m: g.m(),
+            graph_probe: probe,
+            program: job.program.name(),
+            dst_dependent: job.program.map_depends_on_dst(),
+        }
+    }
 }
 
 impl EngineScratch {
     pub fn new() -> Self {
         Self::default()
     }
-}
 
-/// Split the three group-aligned arenas and run `f(gi, vals, cols, bits)`
-/// for every group, in parallel when allowed. Regions are disjoint by the
-/// plan's offset tables, so no synchronization is needed and the output
-/// is position-determined (bit-identical at any thread count).
-fn for_each_group<F>(
-    plan: &ShufflePlan,
-    vals: &mut [u64],
-    cols: &mut [u64],
-    bits: &mut [u64],
-    parallel: bool,
-    f: &F,
-) where
-    F: Fn(usize, &mut [u64], &mut [u64], &mut [u64]) + Sync,
-{
-    if plan.num_groups() == 0 {
-        return;
-    }
-    group_rec(plan, 0, plan.num_groups(), vals, cols, bits, parallel && par::ENABLED, f);
-}
-
-#[allow(clippy::too_many_arguments)]
-fn group_rec<F>(
-    plan: &ShufflePlan,
-    lo: usize,
-    hi: usize,
-    vals: &mut [u64],
-    cols: &mut [u64],
-    bits: &mut [u64],
-    parallel: bool,
-    f: &F,
-) where
-    F: Fn(usize, &mut [u64], &mut [u64], &mut [u64]) + Sync,
-{
-    if hi - lo == 1 {
-        f(lo, vals, cols, bits);
-        return;
-    }
-    let mid = lo + (hi - lo) / 2;
-    let po = plan.group_pair_offsets();
-    let co = plan.group_col_offsets();
-    let psplit = po[mid] - po[lo];
-    let csplit = co[mid] - co[lo];
-    let (v1, v2) = vals.split_at_mut(psplit);
-    let (c1, c2) = cols.split_at_mut(csplit);
-    let (b1, b2) = bits.split_at_mut(psplit);
-    if parallel {
-        par::join(
-            || group_rec(plan, lo, mid, v1, c1, b1, true, f),
-            || group_rec(plan, mid, hi, v2, c2, b2, true, f),
-        );
-    } else {
-        group_rec(plan, lo, mid, v1, c1, b1, false, f);
-        group_rec(plan, mid, hi, v2, c2, b2, false, f);
+    /// Build (or reuse) the per-worker cores for `(job, scheme)`.
+    /// Reusing a scratch on a different job or scheme rebuilds the
+    /// cores (detected via [`ScratchKey`]).
+    fn ensure_cores(&mut self, job: &Job<'_>, scheme: Scheme) {
+        let key = ScratchKey::of(job, scheme);
+        if self.key != Some(key) {
+            self.cores = (0..job.alloc.k)
+                .map(|kk| WorkerCore::new(job, prepare_worker(job, scheme, kk as u8)))
+                .collect();
+            self.fabric = DirectFabric::default();
+            self.key = Some(key);
+        }
     }
 }
 
 /// Run one full iteration into caller-provided buffers: `next` receives
 /// the new state (every vertex is written), `scratch` supplies all
-/// working memory. Zero steady-state heap allocation on
-/// [`Backend::Rust`].
+/// working memory (the `K` worker cores and their fabric). Zero
+/// steady-state heap allocation on [`Backend::Rust`].
+///
+/// The data path is the canonical per-worker phase machine
+/// ([`WorkerCore`]) over the in-memory [`DirectFabric`]; this function
+/// adds only the deterministic accounting replay (bus clock, load
+/// tallies, modeled phase times) and the model-vs-staged cross-check —
+/// exactly the split the cluster leader uses, so drivers cannot drift.
 pub fn run_iteration_scratch(
     job: &Job<'_>,
     prep: &PreparedJob,
@@ -649,81 +656,36 @@ pub fn run_iteration_scratch(
     let mut times = PhaseTimes::default();
     let mut shuffle_load = ShuffleLoad::default();
     let mut bus = Bus::new(cfg.bus);
-    let mut validated = 0usize;
 
-    let EngineScratch { qbits, vals, cols, bits, accs } = scratch;
-
-    // The Map closure both schemes and the decoder share: IV bits for edge
-    // (dst i <- src j). Pure function of (i, j, state[j]). When the program
-    // declares dst-independence (PageRank), evaluate each Mapper once up
-    // front — O(n) instead of O(r·m) dyn-dispatched calls (§Perf).
-    // combined schemes: the "mapper" slot of an IV key is a batch index
-    // and the value is the per-(Reducer, batch) pre-aggregate
-    let combined = prep.scheme.is_combined();
-    let src_only = !combined && !prog.map_depends_on_dst();
-    if src_only {
-        qbits.resize(n, 0);
-        par::fill_indexed(qbits.as_mut_slice(), parallel, &|j| {
-            let j = j as Vertex;
-            if g.degree(j) == 0 {
-                0
-            } else {
-                prog.map(j, j, state[j as usize], g).to_bits()
-            }
-        });
-    }
-    let qbits: &[u64] = qbits.as_slice();
-    let value = move |i: Vertex, j: Vertex| {
-        if combined {
-            combined_value(g, alloc, prog, state, i, j as usize).to_bits()
-        } else if src_only {
-            qbits[j as usize]
-        } else {
-            prog.map(i, j, state[j as usize], g).to_bits()
-        }
-    };
+    scratch.ensure_cores(job, prep.scheme);
+    let EngineScratch { cores, fabric, .. } = scratch;
+    let cores = cores.as_mut_slice();
 
     // ---- Map phase (modeled: parallel across workers) -------------------
     let modeled = prep.modeled_compute_times(&cfg.time);
     times.map_s = modeled.map_s;
 
-    // ---- Shuffle (Encode → bus → Decode) --------------------------------
+    // ---- Shuffle: every core encodes + stages its frames ----------------
+    // (rayon fan-out over cores; each core writes only its own send log)
+    fabric.begin_iteration(k);
+    par::for_each_zip(cores, fabric.logs_mut(), parallel, &|_kk, core, log| {
+        core.stage_sends(job, state, &mut DirectSender::new(log));
+    });
+
+    // serial accounting replay in canonical (group, sender) / transfer
+    // order: bus clock and load tallies are bit-identical however the
+    // staging above was scheduled
     match prep.scheme {
         Scheme::Uncoded | Scheme::UncodedCombined => {
-            // IV values are evaluated lazily at Reduce time (the same
-            // pure `value` calls, in the same per-worker delivery order,
-            // as materializing them here would perform)
             for t in &prep.transfers {
                 let bytes = t.ivs.len() * 8 + HEADER_BYTES;
                 bus.transmit(t.sender, 1, bytes);
                 shuffle_load.add_uncoded(t.ivs.len());
             }
-            times.shuffle_s = bus.clock();
         }
         Scheme::Coded | Scheme::CodedCombined => {
             let plan = &prep.plan;
             let sb = seg_bytes(r);
-            vals.resize(plan.total_ivs(), 0);
-            cols.resize(plan.total_cols(), 0);
-            bits.resize(plan.total_ivs(), 0);
-            // the real data path: evaluate, encode, decode — fanned out
-            // over groups, each writing its own arena region
-            for_each_group(
-                plan,
-                vals.as_mut_slice(),
-                cols.as_mut_slice(),
-                bits.as_mut_slice(),
-                parallel,
-                &|gi, gvals, gcols, gbits| {
-                    let group = plan.group(gi);
-                    eval_group_values(group, &value, gvals);
-                    encode_group_into(group, gvals, r, plan.sender_cols(gi), gcols);
-                    decode_group_into(group, gvals, gcols, plan.sender_cols(gi), r, gbits);
-                },
-            );
-            // serial accounting replay in canonical (group, sender) order:
-            // bus clock and load tallies are bit-identical however the
-            // compute above was scheduled
             for gi in 0..plan.num_groups() {
                 let group = plan.group(gi);
                 let fanout = group.members() - 1;
@@ -736,39 +698,59 @@ pub fn run_iteration_scratch(
                     shuffle_load.add_coded(q, r);
                 }
             }
-            times.shuffle_s = bus.clock();
             times.encode_s = modeled.encode_s;
             times.decode_s = modeled.decode_s;
-            if cfg.validate {
-                for (idx, &(i, j)) in plan.pairs().iter().enumerate() {
-                    assert_eq!(
-                        bits[idx],
-                        value(i, j),
-                        "coded decode mismatch at ({i}, {j})"
-                    );
-                }
-                validated = plan.total_ivs();
-            }
         }
     }
+    times.shuffle_s = bus.clock();
 
-    // ---- Reduce phase ----------------------------------------------------
-    let bits: &[u64] = bits.as_slice();
+    // model ≡ staged reality: the frames and serialized bytes the cores
+    // actually staged must equal what the replay charged — the same
+    // invariant the cluster leader asserts against its transport
+    let (staged_frames, staged_bytes) = fabric.tally();
+    assert_eq!(
+        staged_frames, shuffle_load.messages,
+        "cores staged a different frame count than the accounting modeled"
+    );
+    assert_eq!(
+        staged_bytes,
+        shuffle_load.wire_bytes_with_headers(),
+        "cores staged different wire bytes than the accounting modeled"
+    );
+
+    // ---- Ingest → Decode → Reduce ---------------------------------------
+    let combined = prep.scheme.is_combined();
+    let validate_coded = cfg.validate && prep.scheme.is_coded();
+    // bit-level validation oracle: only the engine holds the full state,
+    // so only here can every decoded bit be re-derived and asserted (a
+    // cluster receiver lacks the source state by design)
+    let oracle_fn = |i: Vertex, j: Vertex| -> u64 {
+        if combined {
+            combined_value(g, alloc, prog, state, i, j as usize).to_bits()
+        } else {
+            prog.map(i, j, state[j as usize], g).to_bits()
+        }
+    };
+    let oracle: Option<&(dyn Fn(Vertex, Vertex) -> u64 + Sync)> =
+        if validate_coded { Some(&oracle_fn) } else { None };
+    let mut validated = 0usize;
     match backend {
         Backend::Rust => {
-            accs.resize(n, 0.0);
-            par::for_each_chunk(&prep.reduce_off, accs.as_mut_slice(), parallel, &|kk, accs_w| {
-                accumulate_worker(g, alloc, prog, state, kk as u8, prep, bits, &value, accs_w);
+            let logs = fabric.logs();
+            par::for_each_mut(cores, parallel, &|kk, core| {
+                let mut rx = DirectReceiver::new(logs, kk as u8);
+                core.ingest_all(&mut rx);
+                core.decode_and_fold(job, state, oracle);
             });
-            // finalize serially (each vertex is reduced exactly once, so
-            // the order is immaterial to the values; serial keeps it cheap
-            // and obviously deterministic)
-            for kk in 0..k {
-                let rows = &alloc.reduce_sets[kk];
-                let base = prep.reduce_off[kk];
-                for (slot, &i) in rows.iter().enumerate() {
-                    next[i as usize] =
-                        prog.finalize(i, accs[base + slot], state[i as usize], g);
+            if validate_coded {
+                validated = cores.iter().map(|c| c.last_validated() as usize).sum();
+            }
+            // state write-back: each vertex is finalized exactly once by
+            // its owner core, so the assembly order is immaterial to the
+            // values; serial keeps it cheap and obviously deterministic
+            for (kk, core) in cores.iter().enumerate() {
+                for (slot, &i) in alloc.reduce_sets[kk].iter().enumerate() {
+                    next[i as usize] = f64::from_bits(core.next_bits()[slot]);
                 }
             }
         }
@@ -779,12 +761,17 @@ pub fn run_iteration_scratch(
                 "combined schemes are engine/Rust-backend only (the tile \
                  path scatters per-mapper values, not per-batch aggregates)"
             );
-            for kk in 0..k {
-                let received = collect_received(prep, bits, &value, kk);
+            for (kk, core) in cores.iter_mut().enumerate() {
+                let mut rx = DirectReceiver::new(fabric.logs(), kk as u8);
+                core.ingest_all(&mut rx);
+                let received = core.collect_received(oracle);
                 reduce_worker_pjrt(
                     g, alloc, prog, state, kk as u8, &received, *kind, exec, next,
                 )
                 .expect("PJRT reduce");
+            }
+            if validate_coded {
+                validated = cores.iter().map(|c| c.last_validated() as usize).sum();
             }
         }
         #[cfg(not(feature = "xla"))]
@@ -811,106 +798,6 @@ pub fn run_iteration_scratch(
         update: update_load,
         validated_ivs: validated,
     }
-}
-
-/// One worker's Reduce accumulation: local Map folds plus received IVs in
-/// delivery order, into the worker's accumulator slice (`reduce_off`
-/// layout). The combine sequence is exactly the serial engine's, so
-/// results are bit-identical regardless of how workers are scheduled.
-#[allow(clippy::too_many_arguments)]
-fn accumulate_worker<F: Fn(Vertex, Vertex) -> u64>(
-    g: &Csr,
-    alloc: &Allocation,
-    prog: &dyn VertexProgram,
-    state: &[f64],
-    worker: u8,
-    prep: &PreparedJob,
-    bits: &[u64],
-    value: &F,
-    accs: &mut [f64],
-) {
-    let wk = worker as usize;
-    let rows = &alloc.reduce_sets[wk];
-    debug_assert_eq!(accs.len(), rows.len());
-    for (slot, &i) in rows.iter().enumerate() {
-        let mut acc = prog.identity();
-        for &j in g.neighbors(i) {
-            if alloc.maps(worker, j) {
-                acc = prog.combine(acc, prog.map(i, j, state[j as usize], g));
-            }
-        }
-        accs[slot] = acc;
-    }
-    match prep.scheme {
-        Scheme::Coded | Scheme::CodedCombined => {
-            let pairs = prep.plan.pairs();
-            for &(start, end) in &prep.recv_ranges[prep.recv_off[wk]..prep.recv_off[wk + 1]] {
-                for idx in start..end {
-                    let i = pairs[idx].0;
-                    let slot = prep.reduce_slot[i as usize] as usize;
-                    accs[slot] = prog.combine(accs[slot], f64::from_bits(bits[idx]));
-                }
-            }
-        }
-        Scheme::Uncoded | Scheme::UncodedCombined => {
-            for &ti in &prep.unc_recv[prep.unc_recv_off[wk]..prep.unc_recv_off[wk + 1]] {
-                for &(i, j) in &prep.transfers[ti as usize].ivs {
-                    let slot = prep.reduce_slot[i as usize] as usize;
-                    accs[slot] = prog.combine(accs[slot], f64::from_bits(value(i, j)));
-                }
-            }
-        }
-    }
-}
-
-/// Materialize one worker's received IVs (PJRT backend path; allocates).
-#[cfg(feature = "xla")]
-fn collect_received<F: Fn(Vertex, Vertex) -> u64>(
-    prep: &PreparedJob,
-    bits: &[u64],
-    value: &F,
-    worker: usize,
-) -> Vec<RecoveredIv> {
-    let mut out = Vec::new();
-    match prep.scheme {
-        Scheme::Coded | Scheme::CodedCombined => {
-            let pairs = prep.plan.pairs();
-            for &(start, end) in
-                &prep.recv_ranges[prep.recv_off[worker]..prep.recv_off[worker + 1]]
-            {
-                for idx in start..end {
-                    let (i, j) = pairs[idx];
-                    out.push(RecoveredIv { reducer: i, mapper: j, bits: bits[idx] });
-                }
-            }
-        }
-        Scheme::Uncoded | Scheme::UncodedCombined => {
-            for &ti in &prep.unc_recv[prep.unc_recv_off[worker]..prep.unc_recv_off[worker + 1]] {
-                for &(i, j) in &prep.transfers[ti as usize].ivs {
-                    out.push(RecoveredIv { reducer: i, mapper: j, bits: value(i, j) });
-                }
-            }
-        }
-    }
-    out
-}
-
-/// Run one full iteration; returns the next state and the metrics.
-///
-/// Convenience wrapper over [`run_iteration_scratch`] that allocates a
-/// fresh scratch and output buffer; loops should hold an
-/// [`EngineScratch`] and call the scratch variant directly.
-pub fn run_iteration(
-    job: &Job<'_>,
-    prep: &PreparedJob,
-    state: &[f64],
-    cfg: &EngineConfig,
-    backend: &mut Backend<'_, '_>,
-) -> (Vec<f64>, IterationMetrics) {
-    let mut scratch = EngineScratch::new();
-    let mut next = vec![0.0f64; job.graph.n()];
-    let metrics = run_iteration_scratch(job, prep, state, cfg, backend, &mut scratch, &mut next);
-    (next, metrics)
 }
 
 /// PJRT Reduce for one worker: assemble the Map-value vector from local
@@ -1182,8 +1069,12 @@ mod tests {
         let mut next = vec![0.0f64; 120];
         let mut scratch = EngineScratch::new();
         for _ in 0..5 {
-            // fresh-buffer reference for this exact state
-            let (want, _) = run_iteration(&job, &prep, &state, &config, &mut Backend::Rust);
+            // fresh-core reference for this exact state
+            let mut fresh = EngineScratch::new();
+            let mut want = vec![0.0f64; 120];
+            run_iteration_scratch(
+                &job, &prep, &state, &config, &mut Backend::Rust, &mut fresh, &mut want,
+            );
             run_iteration_scratch(
                 &job, &prep, &state, &config, &mut Backend::Rust, &mut scratch, &mut next,
             );

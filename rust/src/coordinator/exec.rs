@@ -1,0 +1,1023 @@
+//! The single per-worker execution core (PR 5): one implementation of
+//! the paper's per-server algorithm, shared by every driver.
+//!
+//! The paper's scheme (§IV) is *one* algorithm per server — Map the
+//! stored batches, encode per multicast group, decode received messages
+//! with locally-computed IVs, Reduce — yet this repo used to implement
+//! it twice: the engine ran it group-centrically in one process, the
+//! cluster driver sender-centrically over the transport. This module is
+//! the merge point. [`WorkerCore`] owns **all** steady-state per-worker
+//! iteration state (the worker's [`PreparedWorker`] shard, derived
+//! routing, scratch arenas, the per-iteration `qbits` mapper-once cache,
+//! the validated-IV tally) and drives the canonical phase machine
+//!
+//! ```text
+//! encode → stage sends → ingest frames → decode → fold → write-back
+//! ```
+//!
+//! against a small [`Fabric`] trait — the core's only view of the
+//! outside world. Two fabrics exist:
+//!
+//! * [`DirectFabric`] — in-memory frame handoff between the `K` cores of
+//!   one process. Each core stages its serialized frames (with receiver
+//!   lists) into its own send log; after a phase barrier every core
+//!   ingests, from all logs, exactly the frames addressed to it. The
+//!   engine fans the cores out over rayon — staging writes only the
+//!   core's own log and ingesting only reads the logs, so both phases
+//!   parallelize without synchronization and stay bit-identical at any
+//!   thread count.
+//! * [`TransportFabric`] — a thin adapter over the
+//!   [`Transport`](crate::transport::Transport) buffered surface: stages
+//!   ride the batched wire path, `complete_sends` flushes once per peer
+//!   and emits the `SendDone` tally frame, and `recv_data` filters the
+//!   leader's `StartReduce` barrier out of the inbound stream.
+//!
+//! Both fabrics move the *same serialized frames* ([`frame`]), so a
+//! frame's bytes — and therefore the wire accounting — are identical
+//! whether they cross a rayon task boundary, an in-process ring, or a
+//! real socket. Results are bit-identical across drivers because the
+//! core folds local and received IVs in one canonical order (local Map
+//! values, then groups ascending by wire id, then transfers ascending).
+//!
+//! ## Steady-state allocation (audited)
+//!
+//! After the first iteration warms every buffer, the core's data path
+//! allocates nothing: encode reuses `vals`/`cols`/`gvals` arenas and one
+//! frame buffer, staging appends into capacity-retained fabric buffers,
+//! ingest copies into preallocated arenas, and decode/fold write into
+//! fixed slices. `tests/zero_alloc.rs` asserts this under a counting
+//! allocator for the core driven by **both** fabrics (serial path).
+
+use crate::allocation::Allocation;
+use crate::graph::csr::{Csr, Vertex};
+use crate::mapreduce::program::VertexProgram;
+use crate::shuffle::coded::{encode_sender_into, eval_rows_except};
+use crate::shuffle::combined::combined_value;
+use crate::shuffle::decoder::decode_sender_into;
+#[cfg(feature = "xla")]
+use crate::shuffle::decoder::RecoveredIv;
+use crate::shuffle::segments::seg_bytes;
+use crate::transport::frame::{self, Frame, FrameKind};
+use crate::transport::Transport;
+
+use super::engine::{Job, PreparedWorker};
+
+/// The execution core's view of the outside world: where staged frames
+/// go and where inbound data frames come from. Implementations decide
+/// what a "send" physically is (an in-memory log entry, a buffered
+/// socket write); the core only ever sees serialized [`frame`]s.
+///
+/// Contract: during [`WorkerCore::stage_sends`] the core calls only the
+/// staging half (`stage_multicast` / `stage_unicast`, then exactly one
+/// `complete_sends` with the iteration's data tally); during
+/// [`WorkerCore::ingest_all`] it calls only `recv_data`. A fabric
+/// endpoint that serves a single phase may leave the other half
+/// unreachable.
+pub trait Fabric {
+    /// Stage one serialized data frame toward every endpoint in
+    /// `receivers` (one logical transmission, like one bus slot).
+    fn stage_multicast(&mut self, receivers: &[u8], frame: &[u8]);
+
+    /// Stage one serialized data frame toward a single endpoint.
+    fn stage_unicast(&mut self, to: u8, frame: &[u8]);
+
+    /// All of this iteration's frames are staged: push them toward the
+    /// peers and hand over the data tally (`frames` transmissions,
+    /// `bytes` serialized bytes) to whoever accounts for it — the
+    /// transport fabric flushes the batched wire path and emits the
+    /// `SendDone` barrier frame; the direct fabric records the tally for
+    /// the engine's model-vs-staged cross-check.
+    fn complete_sends(&mut self, frames: u32, bytes: u64);
+
+    /// Block for the next inbound *data* frame, filling `buf` (contents
+    /// replaced, capacity recycled). Control traffic is fabric-internal.
+    /// Returns `false` when no frame can ever arrive again — the core
+    /// treats that as a failed peer and panics.
+    fn recv_data(&mut self, buf: &mut Vec<u8>) -> bool;
+}
+
+/// One worker's execution core: the canonical per-server iteration state
+/// machine, owning the worker's [`PreparedWorker`] shard plus every
+/// steady-state buffer. Drivers differ only in how they sequence the
+/// phases and which [`Fabric`] they plug in.
+pub struct WorkerCore {
+    prep: PreparedWorker,
+    r: usize,
+    sb: usize,
+    combined: bool,
+    /// Does the program's Map ignore the destination? If so, `qbits`
+    /// caches one value per mapped vertex per iteration instead of a
+    /// dyn-dispatched `map` call per pair (the mapper-once fast path).
+    src_only: bool,
+    /// Wire ids of the groups this worker decodes, ascending — 1:1 with
+    /// `prep.recv_groups()` (inbound frame routing).
+    my_gids: Vec<u32>,
+    /// Member index of this worker within each recv group.
+    my_row_idx: Vec<usize>,
+    garena_off: Vec<usize>,
+    gvals_off: Vec<usize>,
+    /// Wire ids of the transfers this worker receives, ascending, and
+    /// their IV-arena offsets (1:1 with `prep.unc_recv()`).
+    my_unc_ids: Vec<u32>,
+    unc_off: Vec<usize>,
+    expect_coded: usize,
+    expect_unc: usize,
+    // -- steady-state scratch (allocated once; see the module audit) --
+    /// Per-mapper Map-value cache (`src_only` fast path), refreshed once
+    /// per iteration at stage time (state is frozen until write-back).
+    /// Indexed by global vertex id for O(1) reads on the encode and
+    /// fold hot paths, so it is `n`-sized per core even though only the
+    /// worker's mapped entries are ever touched — a per-worker process
+    /// always paid that, and the engine driver now pays `K·n` words for
+    /// its `K` in-process cores (a deliberate memory-for-speed trade at
+    /// this repo's scales; a shard-indexed cache would need a
+    /// `batch_of` lookup per read — see the ROADMAP standing note).
+    qbits: Vec<u64>,
+    vals: Vec<u64>,
+    cols: Vec<u64>,
+    bits: Vec<u64>,
+    /// Received coded columns, `members * my_len` per group, sender-major.
+    garena: Vec<u64>,
+    /// Group IV values for the groups this worker decodes, evaluated
+    /// once per iteration during [`WorkerCore::stage_sends`] (the
+    /// sender-side skip index equals the receiver-side one, and state is
+    /// frozen until write-back) and reused by decode. Recv-groups this
+    /// worker does not send in have all other rows empty, so their
+    /// (stale) entries are never read during decode.
+    gvals: Vec<u64>,
+    /// Received uncoded IV bits, canonical transfer order.
+    unc_arena: Vec<u64>,
+    ivbits: Vec<u64>,
+    accs: Vec<f64>,
+    next_bits: Vec<u64>,
+    receivers: Vec<u8>,
+    sendbuf: Vec<u8>,
+    rbuf: Vec<u8>,
+    got_coded: usize,
+    got_unc: usize,
+    last_validated: u32,
+}
+
+/// The IV value both schemes and the decoder share — a pure function of
+/// `(i, j, state)`. For combined schemes the "mapper" slot carries a
+/// batch index and the value is the per-(Reducer, batch) pre-aggregate;
+/// every evaluation site in the core only touches batches the worker
+/// Maps, so a cluster worker's NaN state poison never leaks into
+/// results (engine cores see the full state and never trip the check).
+#[inline]
+fn iv_value(
+    g: &Csr,
+    alloc: &Allocation,
+    prog: &dyn VertexProgram,
+    state: &[f64],
+    combined: bool,
+    i: Vertex,
+    j: Vertex,
+) -> u64 {
+    if combined {
+        combined_value(g, alloc, prog, state, i, j as usize).to_bits()
+    } else {
+        let s = state[j as usize];
+        debug_assert!(!s.is_nan(), "worker read unowned state {j}");
+        prog.map(i, j, s, g).to_bits()
+    }
+}
+
+impl WorkerCore {
+    /// Build the core for one worker: derived routing plus every
+    /// steady-state buffer, sized from the shard (`job` must be the job
+    /// the shard was prepared from).
+    pub fn new(job: &Job<'_>, prep: PreparedWorker) -> WorkerCore {
+        let (g, alloc, prog) = (job.graph, job.alloc, job.program);
+        let n = g.n();
+        let r = alloc.r;
+        let me = prep.me;
+        let plan = &prep.plan;
+        let rows = &alloc.reduce_sets[me as usize];
+
+        // scratch sizing: max value-arena / column counts over the groups
+        // this worker encodes or decodes (shard-local indices throughout)
+        let mut vals_cap = 0usize;
+        let mut cols_cap = 0usize;
+        for &(l, si) in prep.send_plan() {
+            vals_cap = vals_cap.max(plan.group(l as usize).total_ivs());
+            cols_cap = cols_cap.max(plan.sender_cols(l as usize)[si as usize] as usize);
+        }
+        let my_groups = prep.recv_groups();
+        let mut my_gids = Vec::with_capacity(my_groups.len());
+        let mut my_row_idx = Vec::with_capacity(my_groups.len());
+        let mut garena_off = Vec::with_capacity(my_groups.len());
+        let mut gvals_off = Vec::with_capacity(my_groups.len());
+        let mut garena_len = 0usize;
+        let mut gvals_len = 0usize;
+        let mut bits_cap = 0usize;
+        for &l in my_groups {
+            let group = plan.group(l as usize);
+            let m_idx = group.member_index(me).expect("routing: not a member");
+            let my_len = group.row_len(m_idx);
+            bits_cap = bits_cap.max(my_len);
+            my_gids.push(plan.wire_id(l as usize));
+            my_row_idx.push(m_idx);
+            garena_off.push(garena_len);
+            garena_len += group.members() * my_len;
+            gvals_off.push(gvals_len);
+            gvals_len += group.total_ivs();
+        }
+        let my_unc_recv = prep.unc_recv();
+        let mut my_unc_ids = Vec::with_capacity(my_unc_recv.len());
+        let mut unc_off = Vec::with_capacity(my_unc_recv.len());
+        let mut unc_len = 0usize;
+        for &ti in my_unc_recv {
+            my_unc_ids.push(prep.transfer_ids[ti as usize]);
+            unc_off.push(unc_len);
+            unc_len += prep.transfers[ti as usize].ivs.len();
+        }
+        let ivbits_cap = prep
+            .unc_sends()
+            .iter()
+            .map(|&ti| prep.transfers[ti as usize].ivs.len())
+            .max()
+            .unwrap_or(0);
+        let combined = prep.scheme.is_combined();
+        let src_only = !combined && !prog.map_depends_on_dst();
+        let expect_coded = prep.expect_coded();
+        let expect_unc = prep.expect_unc();
+
+        WorkerCore {
+            prep,
+            r,
+            sb: seg_bytes(r),
+            combined,
+            src_only,
+            my_gids,
+            my_row_idx,
+            garena_off,
+            gvals_off,
+            my_unc_ids,
+            unc_off,
+            expect_coded,
+            expect_unc,
+            qbits: vec![0u64; if src_only { n } else { 0 }],
+            vals: vec![0u64; vals_cap],
+            cols: vec![0u64; cols_cap],
+            bits: vec![0u64; bits_cap],
+            garena: vec![0u64; garena_len],
+            gvals: vec![0u64; gvals_len],
+            unc_arena: vec![0u64; unc_len],
+            ivbits: Vec::with_capacity(ivbits_cap),
+            accs: vec![0.0f64; rows.len()],
+            next_bits: vec![0u64; rows.len()],
+            receivers: Vec::with_capacity(r + 1),
+            sendbuf: Vec::new(),
+            rbuf: Vec::new(),
+            got_coded: 0,
+            got_unc: 0,
+            last_validated: 0,
+        }
+    }
+
+    /// The worker this core executes.
+    #[inline]
+    pub fn me(&self) -> u8 {
+        self.prep.me
+    }
+
+    /// Finalized reduce-set state bits of the last
+    /// [`WorkerCore::decode_and_fold`], in the worker's canonical
+    /// reduce-set order.
+    #[inline]
+    pub fn next_bits(&self) -> &[u64] {
+        &self.next_bits
+    }
+
+    /// Recovered-and-ownership-checked IV count of the last
+    /// [`WorkerCore::decode_and_fold`].
+    #[inline]
+    pub fn last_validated(&self) -> u32 {
+        self.last_validated
+    }
+
+    /// Phase 1–2 (encode → stage sends): evaluate this worker's IVs,
+    /// encode its coded columns and uncoded batches into wire frames,
+    /// stage everything through the fabric, and close the phase with
+    /// `complete_sends(frames, bytes)`. When Map ignores the destination
+    /// the per-mapper values are cached once in `qbits` (state is frozen
+    /// until write-back, so the cache also serves the local Reduce fold
+    /// in [`WorkerCore::decode_and_fold`]). Steady state: no allocation.
+    pub fn stage_sends(&mut self, job: &Job<'_>, state: &[f64], fabric: &mut dyn Fabric) {
+        let (g, alloc, prog) = (job.graph, job.alloc, job.program);
+        let me = self.prep.me;
+        let (combined, r, sb, src_only) = (self.combined, self.r, self.sb, self.src_only);
+        if src_only {
+            let qbits = &mut self.qbits;
+            for j in alloc.mapped_vertices(me) {
+                let s = state[j as usize];
+                debug_assert!(!s.is_nan(), "worker {me} mapped-state poison at {j}");
+                qbits[j as usize] =
+                    if g.degree(j) == 0 { 0 } else { prog.map(j, j, s, g).to_bits() };
+            }
+        }
+        let qbits: &[u64] = &self.qbits;
+        let value = move |i: Vertex, j: Vertex| {
+            if src_only {
+                qbits[j as usize]
+            } else {
+                iv_value(g, alloc, prog, state, combined, i, j)
+            }
+        };
+        let mut iter_frames = 0u32;
+        let mut iter_bytes = 0u64;
+
+        let plan = &self.prep.plan;
+        for &(l, si) in self.prep.send_plan() {
+            let group = plan.group(l as usize);
+            let q = plan.sender_cols(l as usize)[si as usize] as usize;
+            let nv = group.total_ivs();
+            // when we also decode this group, evaluate into the
+            // persistent per-group arena so decode can reuse the values
+            // (our skip index is the same on both sides and state is
+            // frozen until write-back)
+            let vals: &[u64] = match self.prep.recv_groups().binary_search(&l) {
+                Ok(slot) => {
+                    let range = self.gvals_off[slot]..self.gvals_off[slot] + nv;
+                    eval_rows_except(group, si as usize, &value, &mut self.gvals[range.clone()]);
+                    &self.gvals[range]
+                }
+                Err(_) => {
+                    eval_rows_except(group, si as usize, &value, &mut self.vals[..nv]);
+                    &self.vals[..nv]
+                }
+            };
+            let si = si as usize;
+            encode_sender_into(group, si, vals, r, &mut self.cols[..q]);
+            let wire = plan.wire_id(l as usize);
+            frame::encode_coded(&mut self.sendbuf, me, wire, &self.cols[..q], sb);
+            self.receivers.clear();
+            for (mi, &m) in group.servers.iter().enumerate() {
+                if m != me && group.row_len(mi) > 0 {
+                    self.receivers.push(m);
+                }
+            }
+            fabric.stage_multicast(&self.receivers, &self.sendbuf);
+            iter_frames += 1; // one multicast = one transmission
+            iter_bytes += self.sendbuf.len() as u64;
+        }
+        for &ti in self.prep.unc_sends() {
+            let t = &self.prep.transfers[ti as usize];
+            self.ivbits.clear();
+            self.ivbits.extend(t.ivs.iter().map(|&(i, j)| value(i, j)));
+            frame::encode_uncoded(
+                &mut self.sendbuf,
+                me,
+                self.prep.transfer_ids[ti as usize],
+                &self.ivbits,
+            );
+            fabric.stage_unicast(t.receiver, &self.sendbuf);
+            iter_frames += 1;
+            iter_bytes += self.sendbuf.len() as u64;
+        }
+        fabric.complete_sends(iter_frames, iter_bytes);
+    }
+
+    /// Stash one data frame into its arena slot (state-independent: the
+    /// sender already evaluated the bits, we only copy bytes) and count
+    /// it toward the current iteration's barrier. Callable from any
+    /// receive loop — frames that race ahead of a driver's control
+    /// traffic are accepted here and counted toward the next barrier.
+    pub fn ingest(&mut self, f: &Frame<'_>) {
+        match f.kind {
+            FrameKind::CodedData => {
+                // frame carries the group's canonical wire id (subset
+                // rank) — resolve it to our shard-local slot
+                let slot = self
+                    .my_gids
+                    .binary_search(&f.index)
+                    .expect("coded frame for a group this worker has no row in");
+                let l = self.prep.recv_groups()[slot] as usize;
+                let group = self.prep.plan.group(l);
+                let m_idx = self.my_row_idx[slot];
+                let my_len = group.row_len(m_idx);
+                let s_idx = group.member_index(f.sender).expect("sender not in group");
+                debug_assert_ne!(s_idx, m_idx, "received own transmission");
+                debug_assert!(f.count as usize >= my_len, "short coded frame");
+                let base = self.garena_off[slot] + s_idx * my_len;
+                for (c, cell) in self.garena[base..base + my_len].iter_mut().enumerate() {
+                    *cell = f.col(c, self.sb);
+                }
+                self.got_coded += 1;
+            }
+            FrameKind::UncodedData => {
+                // frame carries the transfer's canonical wire id
+                // (sender·K + receiver) — resolve to our shard transfer
+                let pos = self
+                    .my_unc_ids
+                    .binary_search(&f.index)
+                    .expect("unicast for a transfer this worker does not receive");
+                let count = f.count as usize;
+                debug_assert_eq!(
+                    count,
+                    self.prep.transfers[self.prep.unc_recv()[pos] as usize].ivs.len()
+                );
+                let base = self.unc_off[pos];
+                for (c, cell) in self.unc_arena[base..base + count].iter_mut().enumerate() {
+                    *cell = f.word(c);
+                }
+                self.got_unc += 1;
+            }
+            _ => unreachable!("ingest on a control frame"),
+        }
+    }
+
+    /// Has this iteration's expected data all arrived?
+    #[inline]
+    pub fn data_complete(&self) -> bool {
+        self.got_coded == self.expect_coded && self.got_unc == self.expect_unc
+    }
+
+    /// Phase 3 (ingest frames): pull data frames from the fabric until
+    /// the expected per-iteration counts are met, then reset the tallies
+    /// so data racing ahead of the next barrier counts toward it.
+    pub fn ingest_all(&mut self, fabric: &mut dyn Fabric) {
+        let mut rbuf = std::mem::take(&mut self.rbuf);
+        while !self.data_complete() {
+            assert!(
+                fabric.recv_data(&mut rbuf),
+                "worker {}: peer disconnected mid-shuffle",
+                self.prep.me
+            );
+            let f = Frame::parse(&rbuf).expect("worker: bad frame");
+            self.ingest(&f);
+        }
+        self.rbuf = rbuf;
+        self.got_coded = 0;
+        self.got_unc = 0;
+    }
+
+    /// Phases 4–6 (decode → fold → finalize): cancel and reassemble the
+    /// received coded columns, fold local and received IVs in *exactly*
+    /// the canonical order every driver shares (local Map values, then
+    /// groups ascending, then transfers ascending), and finalize this
+    /// worker's fresh states into [`WorkerCore::next_bits`]. Returns the
+    /// recovered-and-ownership-checked IV count (the `validated_ivs`
+    /// contribution). `oracle`, when given (the engine's validation
+    /// mode), must be the IV value function over the *full* state; every
+    /// decoded bit is asserted against it — a receiver over a real
+    /// transport lacks the source state by design and passes `None`.
+    pub fn decode_and_fold(
+        &mut self,
+        job: &Job<'_>,
+        state: &[f64],
+        oracle: Option<&(dyn Fn(Vertex, Vertex) -> u64 + Sync)>,
+    ) -> u32 {
+        let (g, alloc, prog) = (job.graph, job.alloc, job.program);
+        let me = self.prep.me;
+        let (r, src_only) = (self.r, self.src_only);
+        let plan = &self.prep.plan;
+        let reduce_slot: &[u32] = &self.prep.reduce_slot;
+        let qbits: &[u64] = &self.qbits;
+        let rows = &alloc.reduce_sets[me as usize];
+
+        // local fold; the src_only path reuses the per-iteration `qbits`
+        // cache filled at stage time — every neighbor j here has degree
+        // ≥ 1 and is mapped by this worker, so its entry is a real value
+        for (slot, &i) in rows.iter().enumerate() {
+            let mut acc = prog.identity();
+            for &j in g.neighbors(i) {
+                if alloc.maps(me, j) {
+                    let v = if src_only {
+                        f64::from_bits(qbits[j as usize])
+                    } else {
+                        prog.map(i, j, state[j as usize], g)
+                    };
+                    acc = prog.combine(acc, v);
+                }
+            }
+            self.accs[slot] = acc;
+        }
+
+        let mut validated = 0u32;
+        // coded: cancel + reassemble per group, fold in pair order. The
+        // cancellation values were evaluated into `gvals` at stage time
+        // (same skip index, same frozen state); a recv-group we did not
+        // send in has every other row empty, so its stale arena entries
+        // are never read by the decoder
+        for (slot_idx, &gi) in self.prep.recv_groups().iter().enumerate() {
+            let group = plan.group(gi as usize);
+            let m_idx = self.my_row_idx[slot_idx];
+            let my_len = group.row_len(m_idx);
+            let nv = group.total_ivs();
+            let gvals = &self.gvals[self.gvals_off[slot_idx]..self.gvals_off[slot_idx] + nv];
+            let bits = &mut self.bits[..my_len];
+            bits.fill(0);
+            let base = self.garena_off[slot_idx];
+            for s_idx in 0..group.members() {
+                if s_idx == m_idx {
+                    continue;
+                }
+                decode_sender_into(
+                    group,
+                    m_idx,
+                    s_idx,
+                    &self.garena[base + s_idx * my_len..base + (s_idx + 1) * my_len],
+                    gvals,
+                    r,
+                    bits,
+                );
+            }
+            for (c, &(i, j)) in group.row(m_idx).iter().enumerate() {
+                // hard check before touching reduce_slot: the shard only
+                // populates slots for this worker's own vertices, so a
+                // misrouted IV would otherwise fold silently into the
+                // wrong accumulator
+                assert_eq!(
+                    alloc.reduce_owner[i as usize], me,
+                    "decoded IV for a vertex this worker does not reduce"
+                );
+                if let Some(oracle) = oracle {
+                    assert_eq!(bits[c], oracle(i, j), "coded decode mismatch at ({i}, {j})");
+                }
+                let slot = reduce_slot[i as usize] as usize;
+                self.accs[slot] = prog.combine(self.accs[slot], f64::from_bits(bits[c]));
+            }
+            validated += my_len as u32;
+        }
+        // uncoded: fold received batches in canonical transfer order
+        for (pos, &ti) in self.prep.unc_recv().iter().enumerate() {
+            let t = &self.prep.transfers[ti as usize];
+            let base = self.unc_off[pos];
+            for (c, &(i, _)) in t.ivs.iter().enumerate() {
+                assert_eq!(
+                    alloc.reduce_owner[i as usize], me,
+                    "received IV for a vertex this worker does not reduce"
+                );
+                let slot = reduce_slot[i as usize] as usize;
+                self.accs[slot] =
+                    prog.combine(self.accs[slot], f64::from_bits(self.unc_arena[base + c]));
+            }
+            validated += t.ivs.len() as u32;
+        }
+        // finalize into the write-back payload (bit-exact states)
+        for (slot, &i) in rows.iter().enumerate() {
+            self.next_bits[slot] =
+                prog.finalize(i, self.accs[slot], state[i as usize], g).to_bits();
+        }
+        self.last_validated = validated;
+        validated
+    }
+
+    /// Materialize this worker's received IVs — decoded coded rows (the
+    /// `gvals` cancellation arena must be fresh from this iteration's
+    /// [`WorkerCore::stage_sends`]) plus received uncoded bits — in the
+    /// canonical order. Like [`WorkerCore::decode_and_fold`], an
+    /// `oracle` (the engine's validation mode) asserts every decoded
+    /// bit and the recovered count lands in
+    /// [`WorkerCore::last_validated`]. PJRT backend path; allocates.
+    #[cfg(feature = "xla")]
+    pub fn collect_received(
+        &mut self,
+        oracle: Option<&(dyn Fn(Vertex, Vertex) -> u64 + Sync)>,
+    ) -> Vec<RecoveredIv> {
+        let mut out = Vec::new();
+        let prep = &self.prep;
+        let r = self.r;
+        let mut validated = 0u32;
+        for (slot_idx, &gi) in prep.recv_groups().iter().enumerate() {
+            let group = prep.plan.group(gi as usize);
+            let m_idx = self.my_row_idx[slot_idx];
+            let my_len = group.row_len(m_idx);
+            let nv = group.total_ivs();
+            let gvals = &self.gvals[self.gvals_off[slot_idx]..self.gvals_off[slot_idx] + nv];
+            let bits = &mut self.bits[..my_len];
+            bits.fill(0);
+            let base = self.garena_off[slot_idx];
+            for s_idx in 0..group.members() {
+                if s_idx == m_idx {
+                    continue;
+                }
+                decode_sender_into(
+                    group,
+                    m_idx,
+                    s_idx,
+                    &self.garena[base + s_idx * my_len..base + (s_idx + 1) * my_len],
+                    gvals,
+                    r,
+                    bits,
+                );
+            }
+            for (c, &(i, j)) in group.row(m_idx).iter().enumerate() {
+                if let Some(oracle) = oracle {
+                    assert_eq!(bits[c], oracle(i, j), "coded decode mismatch at ({i}, {j})");
+                }
+                out.push(RecoveredIv { reducer: i, mapper: j, bits: bits[c] });
+            }
+            validated += my_len as u32;
+        }
+        for (pos, &ti) in prep.unc_recv().iter().enumerate() {
+            let t = &prep.transfers[ti as usize];
+            let base = self.unc_off[pos];
+            for (c, &(i, j)) in t.ivs.iter().enumerate() {
+                out.push(RecoveredIv { reducer: i, mapper: j, bits: self.unc_arena[base + c] });
+            }
+            validated += t.ivs.len() as u32;
+        }
+        self.last_validated = validated;
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TransportFabric: the core over a real Transport endpoint
+// ---------------------------------------------------------------------------
+
+/// [`Fabric`] over the [`Transport`] buffered surface — what
+/// [`run_worker`](super::cluster::run_worker) plugs into the core.
+/// Stages ride the batched wire path (one physical write per peer per
+/// flush on TCP), `complete_sends` emits the `SendDone` barrier frame
+/// carrying the data tally, and `recv_data` filters the leader's
+/// `StartReduce` out of the inbound stream (remembered for
+/// [`TransportFabric::await_reduce_barrier`]). Keeps the endpoint's
+/// lifetime data-send tally for the exit-time counter cross-check.
+pub struct TransportFabric<'a> {
+    net: &'a dyn Transport,
+    me: u8,
+    leader: u8,
+    ctrl: Vec<u8>,
+    saw_start_reduce: bool,
+    sent_frames: usize,
+    sent_bytes: usize,
+}
+
+impl<'a> TransportFabric<'a> {
+    pub fn new(net: &'a dyn Transport, me: u8, leader: u8) -> TransportFabric<'a> {
+        TransportFabric {
+            net,
+            me,
+            leader,
+            ctrl: Vec::new(),
+            saw_start_reduce: false,
+            sent_frames: 0,
+            sent_bytes: 0,
+        }
+    }
+
+    /// Consume the leader's `StartReduce` barrier: a no-op if
+    /// [`Fabric::recv_data`] already swallowed it during the ingest
+    /// loop, a blocking receive otherwise. Must be called exactly once
+    /// per iteration, after the core's data is complete.
+    pub fn await_reduce_barrier(&mut self, rbuf: &mut Vec<u8>) {
+        if !self.saw_start_reduce {
+            assert!(self.net.recv(self.me, rbuf), "worker {}: peer disconnected", self.me);
+            let f = Frame::parse(rbuf).expect("worker: bad frame");
+            assert!(
+                f.kind == FrameKind::StartReduce,
+                "worker {}: unexpected {:?} at the reduce barrier",
+                self.me,
+                f.kind
+            );
+        }
+        self.saw_start_reduce = false;
+    }
+
+    /// On a process-separated transport the endpoint's own counters see
+    /// exactly this worker's sends: verify the lifetime tallies against
+    /// them before exiting (a shared in-process transport aggregates
+    /// every endpoint, so there the *leader* checks the global counter
+    /// instead).
+    pub fn check_local_stats(&self) {
+        if !self.net.stats_are_global() {
+            let s = self.net.data_stats();
+            assert_eq!(
+                (s.data_frames, s.data_bytes),
+                (self.sent_frames, self.sent_bytes),
+                "worker {}: transport counters disagree with the send tally",
+                self.me
+            );
+        }
+    }
+}
+
+impl Fabric for TransportFabric<'_> {
+    fn stage_multicast(&mut self, receivers: &[u8], frame: &[u8]) {
+        self.net.send_multicast_buffered(self.me, receivers, frame);
+    }
+
+    fn stage_unicast(&mut self, to: u8, frame: &[u8]) {
+        self.net.send_unicast_buffered(self.me, to, frame);
+    }
+
+    fn complete_sends(&mut self, frames: u32, bytes: u64) {
+        // one physical write per peer with staged data (O(peers) syscalls)
+        self.net.flush(self.me);
+        self.sent_frames += frames as usize;
+        self.sent_bytes += bytes as usize;
+        frame::encode_send_done(&mut self.ctrl, self.me, frames, bytes);
+        self.net.send_unicast(self.me, self.leader, &self.ctrl);
+    }
+
+    fn recv_data(&mut self, buf: &mut Vec<u8>) -> bool {
+        loop {
+            if !self.net.recv(self.me, buf) {
+                return false;
+            }
+            let kind = Frame::parse(buf).expect("worker: bad frame").kind;
+            match kind {
+                FrameKind::CodedData | FrameKind::UncodedData => return true,
+                FrameKind::StartReduce => {
+                    assert!(!self.saw_start_reduce, "duplicate StartReduce");
+                    self.saw_start_reduce = true;
+                }
+                other => unreachable!("unexpected {other:?} during shuffle"),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DirectFabric: in-memory frame handoff between the cores of one process
+// ---------------------------------------------------------------------------
+
+/// One core's staged output for one iteration: serialized frames plus
+/// per-frame receiver lists, all in capacity-retained flat buffers
+/// (steady state: no allocation).
+#[derive(Default)]
+pub struct SendLog {
+    bytes: Vec<u8>,
+    /// Per frame: `(byte start, byte end, receiver start, receiver end)`.
+    frames: Vec<(u32, u32, u32, u32)>,
+    recv: Vec<u8>,
+    frames_tally: u32,
+    bytes_tally: u64,
+}
+
+impl SendLog {
+    fn clear(&mut self) {
+        self.bytes.clear();
+        self.frames.clear();
+        self.recv.clear();
+        self.frames_tally = 0;
+        self.bytes_tally = 0;
+    }
+}
+
+/// In-memory [`Fabric`] between the `K` cores of one process: per-core
+/// send logs, phase-synchronous. The driver stages every core (possibly
+/// in parallel — each [`DirectSender`] writes only its own log), then
+/// lets every core ingest (again in parallel — [`DirectReceiver`]s only
+/// read the logs). Ingest order is senders ascending, staging order
+/// within a sender: deterministic, and immaterial to results because
+/// the core stashes frames position-determined by wire id.
+#[derive(Default)]
+pub struct DirectFabric {
+    logs: Vec<SendLog>,
+}
+
+impl DirectFabric {
+    /// Reset for a new iteration of `k` cores (buffers retain capacity).
+    pub fn begin_iteration(&mut self, k: usize) {
+        if self.logs.len() != k {
+            self.logs = (0..k).map(|_| SendLog::default()).collect();
+        }
+        for log in &mut self.logs {
+            log.clear();
+        }
+    }
+
+    /// The per-core send logs, for zipping with the cores in the stage
+    /// phase (`logs_mut()[kk]` belongs to core `kk`).
+    pub fn logs_mut(&mut self) -> &mut [SendLog] {
+        &mut self.logs
+    }
+
+    /// Read view of the logs for the ingest phase.
+    pub fn logs(&self) -> &[SendLog] {
+        &self.logs
+    }
+
+    /// Total staged data tally across all cores: `(frames, serialized
+    /// bytes)` — the engine asserts it equals the accounting replay's
+    /// modeled message count and `wire_bytes_with_headers()`.
+    pub fn tally(&self) -> (usize, usize) {
+        self.logs
+            .iter()
+            .fold((0, 0), |(f, b), log| {
+                (f + log.frames_tally as usize, b + log.bytes_tally as usize)
+            })
+    }
+}
+
+/// The staging half of the [`DirectFabric`]: one core's endpoint during
+/// the stage phase. `recv_data` is unreachable by the [`Fabric`]
+/// contract.
+pub struct DirectSender<'a> {
+    log: &'a mut SendLog,
+}
+
+impl<'a> DirectSender<'a> {
+    pub fn new(log: &'a mut SendLog) -> DirectSender<'a> {
+        DirectSender { log }
+    }
+}
+
+impl Fabric for DirectSender<'_> {
+    fn stage_multicast(&mut self, receivers: &[u8], frame: &[u8]) {
+        let (b0, r0) = (self.log.bytes.len() as u32, self.log.recv.len() as u32);
+        self.log.bytes.extend_from_slice(frame);
+        self.log.recv.extend_from_slice(receivers);
+        self.log
+            .frames
+            .push((b0, self.log.bytes.len() as u32, r0, self.log.recv.len() as u32));
+    }
+
+    fn stage_unicast(&mut self, to: u8, frame: &[u8]) {
+        self.stage_multicast(std::slice::from_ref(&to), frame);
+    }
+
+    fn complete_sends(&mut self, frames: u32, bytes: u64) {
+        debug_assert_eq!(frames as usize, self.log.frames.len(), "stage/tally drift");
+        self.log.frames_tally = frames;
+        self.log.bytes_tally = bytes;
+    }
+
+    fn recv_data(&mut self, _buf: &mut Vec<u8>) -> bool {
+        unreachable!("DirectFabric: the stage phase has no inbound frames")
+    }
+}
+
+/// The ingest half of the [`DirectFabric`]: a cursor over all cores'
+/// logs yielding, in sender-ascending order, exactly the frames
+/// addressed to `me`. Staging calls are unreachable by the [`Fabric`]
+/// contract.
+pub struct DirectReceiver<'a> {
+    logs: &'a [SendLog],
+    me: u8,
+    sender: usize,
+    frame: usize,
+}
+
+impl<'a> DirectReceiver<'a> {
+    pub fn new(logs: &'a [SendLog], me: u8) -> DirectReceiver<'a> {
+        DirectReceiver { logs, me, sender: 0, frame: 0 }
+    }
+}
+
+impl Fabric for DirectReceiver<'_> {
+    fn stage_multicast(&mut self, _receivers: &[u8], _frame: &[u8]) {
+        unreachable!("DirectFabric: the ingest phase stages nothing")
+    }
+
+    fn stage_unicast(&mut self, _to: u8, _frame: &[u8]) {
+        unreachable!("DirectFabric: the ingest phase stages nothing")
+    }
+
+    fn complete_sends(&mut self, _frames: u32, _bytes: u64) {
+        unreachable!("DirectFabric: the ingest phase stages nothing")
+    }
+
+    fn recv_data(&mut self, buf: &mut Vec<u8>) -> bool {
+        while self.sender < self.logs.len() {
+            let log = &self.logs[self.sender];
+            while self.frame < log.frames.len() {
+                let (b0, b1, r0, r1) = log.frames[self.frame];
+                self.frame += 1;
+                if log.recv[r0 as usize..r1 as usize].contains(&self.me) {
+                    buf.clear();
+                    buf.extend_from_slice(&log.bytes[b0 as usize..b1 as usize]);
+                    return true;
+                }
+            }
+            self.sender += 1;
+            self.frame = 0;
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::config::Scheme;
+    use super::super::engine::prepare_worker;
+    use super::*;
+    use crate::allocation::Allocation;
+    use crate::graph::er::er;
+    use crate::mapreduce::program::run_single_machine;
+    use crate::mapreduce::PageRank;
+    use crate::transport::InProcNet;
+    use crate::util::rng::DetRng;
+
+    #[test]
+    fn direct_fabric_routes_frames_by_receiver_list() {
+        let mut fab = DirectFabric::default();
+        fab.begin_iteration(3);
+        let mut buf = Vec::new();
+        {
+            let logs = fab.logs_mut();
+            let mut s0 = DirectSender::new(&mut logs[0]);
+            frame::encode_coded(&mut buf, 0, 7, &[0xAA, 0xBB], 4);
+            s0.stage_multicast(&[1, 2], &buf);
+            frame::encode_uncoded(&mut buf, 0, 2, &[5]);
+            s0.stage_unicast(2, &buf);
+            s0.complete_sends(2, 0);
+        }
+        {
+            let logs = fab.logs_mut();
+            let mut s1 = DirectSender::new(&mut logs[1]);
+            frame::encode_uncoded(&mut buf, 1, 5, &[9, 9]);
+            s1.stage_unicast(2, &buf);
+            s1.complete_sends(1, 0);
+        }
+        // receiver 1 sees only the multicast
+        let mut rx = DirectReceiver::new(fab.logs(), 1);
+        let mut rbuf = Vec::new();
+        assert!(rx.recv_data(&mut rbuf));
+        let f = Frame::parse(&rbuf).unwrap();
+        assert_eq!((f.kind, f.index), (FrameKind::CodedData, 7));
+        assert_eq!(f.col(1, 4), 0xBB);
+        assert!(!rx.recv_data(&mut rbuf), "nothing else addressed to 1");
+        // receiver 2 sees all three, sender-ascending
+        let mut rx = DirectReceiver::new(fab.logs(), 2);
+        let mut kinds = Vec::new();
+        while rx.recv_data(&mut rbuf) {
+            kinds.push((Frame::parse(&rbuf).unwrap().sender, Frame::parse(&rbuf).unwrap().kind));
+        }
+        assert_eq!(
+            kinds,
+            vec![
+                (0, FrameKind::CodedData),
+                (0, FrameKind::UncodedData),
+                (1, FrameKind::UncodedData)
+            ]
+        );
+        // sender 0 staged nothing for itself
+        let mut rx = DirectReceiver::new(fab.logs(), 0);
+        assert!(!rx.recv_data(&mut rbuf));
+        assert_eq!(fab.tally().0, 3);
+    }
+
+    #[test]
+    fn transport_fabric_filters_the_reduce_barrier_and_emits_send_done() {
+        // endpoints: 0 = worker under test, 1 = peer, 2 = "leader"
+        let net = InProcNet::new(&[8, 8, 8]);
+        let mut fab = TransportFabric::new(&net, 0, 2);
+        let mut buf = Vec::new();
+        // peer data + a StartReduce interleaved ahead of it
+        frame::encode_control(&mut buf, FrameKind::StartReduce, 2);
+        net.send_unicast(2, 0, &buf);
+        frame::encode_uncoded(&mut buf, 1, 1, &[42]);
+        net.send_unicast(1, 0, &buf);
+        let mut rbuf = Vec::new();
+        assert!(fab.recv_data(&mut rbuf), "data frame must come through");
+        assert_eq!(Frame::parse(&rbuf).unwrap().kind, FrameKind::UncodedData);
+        // the barrier was swallowed and remembered: await returns at once
+        fab.await_reduce_barrier(&mut rbuf);
+        // staged sends flush + SendDone reaches the leader with the tally
+        frame::encode_uncoded(&mut buf, 0, 0, &[7]);
+        fab.stage_unicast(1, &buf);
+        fab.complete_sends(1, buf.len() as u64);
+        assert!(net.recv(1, &mut rbuf));
+        assert_eq!(Frame::parse(&rbuf).unwrap().kind, FrameKind::UncodedData);
+        assert!(net.recv(2, &mut rbuf));
+        let f = Frame::parse(&rbuf).unwrap();
+        assert_eq!(f.kind, FrameKind::SendDone);
+        assert_eq!(f.index, 1);
+        assert_eq!(f.word(0), buf.len() as u64);
+    }
+
+    /// Drive K cores by hand through one DirectFabric iteration and
+    /// check the assembled next state against the single-machine oracle
+    /// — the core's phase machine, with no engine driver around it.
+    #[test]
+    fn cores_over_direct_fabric_match_single_machine() {
+        let n = 90;
+        let g = er(n, 0.15, &mut DetRng::seed(75));
+        let k = 3usize;
+        let alloc = Allocation::er_scheme(n, k, 2);
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        for scheme in [Scheme::Coded, Scheme::Uncoded, Scheme::CodedCombined] {
+            let mut cores: Vec<WorkerCore> = (0..k)
+                .map(|kk| WorkerCore::new(&job, prepare_worker(&job, scheme, kk as u8)))
+                .collect();
+            let state: Vec<f64> = (0..n as Vertex).map(|v| prog.init(v, &g)).collect();
+            let mut fab = DirectFabric::default();
+            fab.begin_iteration(k);
+            for (core, log) in cores.iter_mut().zip(fab.logs_mut()) {
+                core.stage_sends(&job, &state, &mut DirectSender::new(log));
+            }
+            let mut next = vec![0.0f64; n];
+            for core in cores.iter_mut() {
+                let mut rx = DirectReceiver::new(fab.logs(), core.me());
+                core.ingest_all(&mut rx);
+                core.decode_and_fold(&job, &state, None);
+            }
+            for (kk, core) in cores.iter().enumerate() {
+                for (slot, &i) in alloc.reduce_sets[kk].iter().enumerate() {
+                    next[i as usize] = f64::from_bits(core.next_bits()[slot]);
+                }
+            }
+            let want = run_single_machine(&prog, &g, 1);
+            for (a, b) in next.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-14, "{scheme}: {a} vs {b}");
+            }
+        }
+    }
+}

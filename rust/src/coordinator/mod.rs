@@ -2,17 +2,24 @@
 //!
 //! * [`config`] — scheme selection, time model, engine options.
 //! * [`metrics`] — phase times, loads, job reports (the figures' data).
-//! * [`engine`] — the deterministic phase engine: flat-arena shuffle
-//!   plans, a reusable [`EngineScratch`] (zero-allocation steady-state
-//!   iterations), rayon-parallel phases with bit-identical results, the
-//!   precomputed global routing tables the leader replays
-//!   ([`PreparedJob`]), and the per-worker shard the cluster workers
-//!   consume instead ([`PreparedWorker`] via [`prepare_worker`]).
+//! * [`exec`] — **the one worker core** (PR 5): [`WorkerCore`] owns all
+//!   steady-state per-worker iteration state and drives the canonical
+//!   phase machine (encode → stage sends → ingest frames → decode →
+//!   fold → write-back) against the small [`Fabric`] trait; every
+//!   driver below plugs in a fabric instead of re-implementing the
+//!   algorithm.
+//! * [`engine`] — the deterministic phase engine: `K` worker cores over
+//!   the in-memory [`DirectFabric`] plus the accounting replay, in a
+//!   reusable [`EngineScratch`] (zero-allocation steady-state
+//!   iterations, rayon fan-out over cores with bit-identical results);
+//!   also the precomputed global tables the leader replays
+//!   ([`PreparedJob`]) and the per-worker shard every core consumes
+//!   ([`PreparedWorker`] via [`prepare_worker`]).
 //! * [`cluster`] — the leader/worker driver over the pluggable
 //!   [`transport`](crate::transport) layer (wire-format frames, in-proc
 //!   rings, a localhost TCP mesh, or one process-separated TCP endpoint
-//!   per OS process; real per-worker encode/decode, results
-//!   bit-identical to the engine).
+//!   per OS process): one core per worker over a [`TransportFabric`],
+//!   results bit-identical to the engine.
 //! * [`spec`] — serializable job specs: the single line the bootstrap
 //!   rendezvous ships so worker processes can deterministically rebuild
 //!   graph, allocation, program, and shuffle plan.
@@ -20,15 +27,16 @@
 pub mod cluster;
 pub mod config;
 pub mod engine;
+pub mod exec;
 pub mod metrics;
 pub mod spec;
 
 pub use cluster::{run_cluster, run_cluster_on, run_leader, run_worker};
 pub use config::{EngineConfig, Scheme, TimeModel};
+pub use exec::{DirectFabric, Fabric, TransportFabric, WorkerCore};
 pub use spec::{AllocKind, BuiltJob, GraphKind, GraphSpec, JobSpec, ProgramSpec};
 pub use engine::{
-    measure_loads, measure_loads_prepared, prepare, prepare_worker, run, run_iteration,
-    run_iteration_scratch, run_rust, Backend, EngineScratch, Job, PreparedJob, PreparedWorker,
-    XlaKind,
+    measure_loads, measure_loads_prepared, prepare, prepare_worker, run, run_iteration_scratch,
+    run_rust, Backend, EngineScratch, Job, PreparedJob, PreparedWorker, XlaKind,
 };
 pub use metrics::{IterationMetrics, JobReport, PhaseTimes};

@@ -36,7 +36,7 @@
 //! | [`shuffle`] | uncoded unicast scheme + the paper's coded scheme; flat-arena [`shuffle::ShufflePlan`] + slice encode/decode kernels |
 //! | [`network`] | shared-bus wire-time model (one transmitter at a time) |
 //! | [`transport`] | wire-format frames + pluggable backends (in-proc rings, localhost TCP mesh, process-separated endpoints) + the bootstrap rendezvous |
-//! | [`coordinator`] | phase engine (reusable [`coordinator::EngineScratch`], zero-alloc steady state, rayon-parallel phases) + transport-backed cluster driver, serializable job specs, metrics |
+//! | [`coordinator`] | the one worker core ([`coordinator::WorkerCore`] + [`coordinator::Fabric`]), phase engine (reusable [`coordinator::EngineScratch`], zero-alloc steady state, rayon fan-out over cores), transport-backed cluster driver, serializable job specs, metrics |
 //! | `runtime` | PJRT artifact loading / execution (AOT JAX+Pallas; `xla` feature) |
 //! | [`analysis`] | closed forms of Theorems 1–4, Lemma 3 bound, stats helpers |
 //! | [`util`] | deterministic RNG, JSON, bench/test kits, [`util::par`] parallelism shim |
@@ -48,14 +48,17 @@
 //! at [`coordinator::prepare`] time, and every per-iteration buffer lives
 //! in a caller-owned [`coordinator::EngineScratch`]. The engine's own
 //! data path allocates nothing after warm-up — asserted by a counting
-//! allocator on the serial path (`tests/zero_alloc.rs`); with
-//! parallelism on, rayon's scheduler may allocate internally, but the
-//! engine still reuses the same scratch arenas. Encode/Decode fan out
-//! over multicast groups and Reduce over workers (rayon, `parallel`
-//! feature); each task writes a disjoint precomputed arena region and
-//! all merges replay serially in canonical order, so results and metrics
-//! are bit-identical across the serial path, the parallel path, and any
-//! thread count.
+//! allocator on the serial path for the core over **both** fabrics
+//! (`tests/zero_alloc.rs`); with parallelism on, rayon's scheduler may
+//! allocate internally, but the engine still reuses the same scratch
+//! arenas. The per-server algorithm exists exactly once: every driver
+//! runs the same [`coordinator::WorkerCore`] phase machine (encode →
+//! stage sends → ingest frames → decode → fold → write-back) behind the
+//! small [`coordinator::Fabric`] trait — the engine fans `K` cores out
+//! over rayon with an in-memory [`coordinator::DirectFabric`], and
+//! every fold replays in one canonical order, so results and metrics
+//! are bit-identical across the serial path, the parallel path, any
+//! thread count, and every cluster driver.
 //!
 //! The cluster driver runs the same job over a real message boundary: the
 //! [`transport`] layer serializes every coded multicast and uncoded

@@ -11,7 +11,9 @@
 //! coded-graph cluster   --graph er|rb|sbm|pl --n N --k K --r R
 //!                       [--transport inproc|tcp] [--processes] [--no-spawn]
 //!                       [--check] [--program ...] [--scheme ...] [--iters I]
+//!                       [--bind IP[:PORT]] [--advertise IP[:PORT]]
 //! coded-graph worker    --connect ADDR --id K [--timeout-s 60]
+//!                       [--bind IP[:PORT]] [--advertise IP[:PORT]]
 //! coded-graph inspect   --graph er|rb|sbm|pl --n N [--p P] [--q Q] [--gamma G]
 //! coded-graph artifacts [--dir artifacts]
 //! ```
@@ -28,8 +30,21 @@
 //! across process boundaries. With `--no-spawn` the leader spawns
 //! nothing and instead waits (default 600 s) for `K` hand-started
 //! `worker` processes to dial the printed rendezvous address.
+//!
+//! ## Multi-host surface (`--bind` / `--advertise`)
+//!
+//! Everything defaults to loopback (`127.0.0.1`, ephemeral ports). For a
+//! real multi-host `--no-spawn` deployment, give the leader
+//! `--bind 0.0.0.0[:PORT]` (PORT pins the rendezvous socket; data
+//! listeners always take ephemeral ports on the same interface) and
+//! `--advertise <leader-ip>` so the roster carries a routable address;
+//! start each worker with `--connect <leader-ip>:PORT --bind 0.0.0.0
+//! --advertise <worker-ip>`. **Caveat: there is no authentication or
+//! encryption on the rendezvous or data sockets** — anything that can
+//! reach the port can join or disrupt the cluster. Bind non-loopback
+//! interfaces only inside a trusted network segment.
 
-use std::net::TcpListener;
+use std::net::{SocketAddr, TcpListener};
 use std::time::Duration;
 
 use coded_graph::allocation::Allocation;
@@ -87,6 +102,10 @@ fn usage() {
     println!("  cluster    run a job on the leader/worker cluster (--transport inproc|tcp,");
     println!("             --processes spawns real worker processes, --check vs the engine)");
     println!("  worker     join a --processes cluster (--connect <rendezvous addr> --id <k>)");
+    println!();
+    println!("  cluster/worker accept --bind IP[:PORT] / --advertise IP[:PORT] for");
+    println!("  multi-host --no-spawn deployments (loopback default; the sockets");
+    println!("  carry no auth — bind non-loopback only on trusted networks)");
     println!("  inspect    generate a graph and print its statistics");
     println!("  artifacts  list the AOT artifacts and smoke-run one");
 }
@@ -183,7 +202,8 @@ fn scenario_rows_processes(
         let spec = scenarios::job_spec(sc, r, seed, 1);
         let cfg = EngineConfig { scheme: spec.scheme, ..base };
         let built = BuiltJob { graph, alloc: spec.build_alloc(), program: spec.program.build() };
-        let report = run_processes(&spec, &built, &cfg, timeout, true)?;
+        let loopback: SocketAddr = "127.0.0.1:0".parse().unwrap();
+        let report = run_processes(&spec, &built, &cfg, timeout, true, loopback, None)?;
         rows.push(scenarios::row_from_report(r, spec.scheme, &report, built.graph.n()));
         graph = built.graph;
     }
@@ -238,6 +258,42 @@ fn cmd_models(args: &Args) -> Result<(), String> {
         t.print();
     }
     Ok(())
+}
+
+/// Parse `IP` or `IP:PORT` (a bare IP gets port 0 = ephemeral).
+fn parse_host_port(raw: &str) -> Result<SocketAddr, String> {
+    if let Ok(a) = raw.parse::<SocketAddr>() {
+        return Ok(a);
+    }
+    raw.parse::<std::net::IpAddr>()
+        .map(|ip| SocketAddr::new(ip, 0))
+        .map_err(|_| format!("bad address {raw:?} (expected IP or IP:PORT)"))
+}
+
+/// The `--bind IP[:PORT]` listener address; loopback-ephemeral default.
+fn bind_addr(args: &Args) -> Result<SocketAddr, String> {
+    parse_host_port(args.get("bind").unwrap_or("127.0.0.1:0"))
+}
+
+/// The address peers should dial for the locally-bound `bound`: an
+/// `--advertise IP[:PORT]` override replaces the host (multi-homed or
+/// NATed deployments); port 0 (or a bare IP) keeps the bound port.
+fn advertised(bound: SocketAddr, advertise: Option<&str>) -> Result<SocketAddr, String> {
+    let out = match advertise {
+        None => bound,
+        Some(raw) => {
+            let a = parse_host_port(raw)?;
+            let port = if a.port() == 0 { bound.port() } else { a.port() };
+            SocketAddr::new(a.ip(), port)
+        }
+    };
+    if out.ip().is_unspecified() {
+        return Err(format!(
+            "{out} is not dialable: binding a wildcard interface requires \
+             --advertise <routable-ip> so peers get a concrete address"
+        ));
+    }
+    Ok(out)
 }
 
 /// The graph recipe named by `--graph`/`--n`/`--seed` + family params —
@@ -353,7 +409,7 @@ fn cluster_job_spec(args: &Args) -> Result<JobSpec, String> {
 fn cmd_cluster(args: &Args) -> Result<(), String> {
     args.check_known(&[
         "graph", "n", "k", "r", "p", "q", "gamma", "rho-scale", "seed", "program", "scheme", "iters",
-        "transport", "source", "processes", "check", "timeout-s", "no-spawn",
+        "transport", "source", "processes", "check", "timeout-s", "no-spawn", "bind", "advertise",
     ])?;
     let spec = cluster_job_spec(args)?;
     let transport: TransportKind = args.get("transport").unwrap_or("inproc").parse()?;
@@ -376,7 +432,7 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
                 "driver: process-separated cluster over tcp; waiting for {k} external workers"
             );
         }
-        run_processes(&spec, &built, &cfg, timeout, spawn)?
+        run_processes(&spec, &built, &cfg, timeout, spawn, bind_addr(args)?, args.get("advertise"))?
     } else {
         println!("driver: cluster over {transport} ({k} workers + leader)");
         run_cluster_on(&built.job(), &cfg, spec.iters, transport)
@@ -456,25 +512,38 @@ impl Drop for Children {
 }
 
 /// Run one job as a process-separated cluster: bind the rendezvous +
-/// leader data listeners, spawn `K` children of this binary in `worker`
+/// leader data listeners (on `bind`'s interface; its port, if any, pins
+/// the rendezvous socket), spawn `K` children of this binary in `worker`
 /// mode, bootstrap the roster, wire the leader's own [`TcpEndpoint`],
-/// and drive the unchanged frame protocol across process boundaries. A
+/// and drive the unchanged frame protocol across process boundaries.
+/// `advertise` rewrites the announced addresses for multi-host
+/// `--no-spawn` use (see the module docs for the no-auth caveat). A
 /// leader-side panic (worker death, protocol violation) tears the mesh
 /// down, kills the remaining children, and surfaces as an error.
+#[allow(clippy::too_many_arguments)]
 fn run_processes(
     spec: &JobSpec,
     built: &BuiltJob,
     cfg: &EngineConfig,
     timeout: Duration,
     spawn: bool,
+    bind: SocketAddr,
+    advertise: Option<&str>,
 ) -> Result<JobReport, String> {
     let job = built.job();
     let prep = prepare(&job, cfg.scheme);
 
-    let rendezvous = TcpListener::bind("127.0.0.1:0").map_err(|e| e.to_string())?;
-    let rv_addr = rendezvous.local_addr().map_err(|e| e.to_string())?;
-    let data_listener = TcpListener::bind("127.0.0.1:0").map_err(|e| e.to_string())?;
-    let leader_addr = data_listener.local_addr().map_err(|e| e.to_string())?;
+    let rendezvous = TcpListener::bind(bind).map_err(|e| e.to_string())?;
+    let rv_addr = advertised(
+        rendezvous.local_addr().map_err(|e| e.to_string())?,
+        advertise,
+    )?;
+    // data listeners always take an ephemeral port on the bind interface
+    let data_listener =
+        TcpListener::bind(SocketAddr::new(bind.ip(), 0)).map_err(|e| e.to_string())?;
+    let leader_bound = data_listener.local_addr().map_err(|e| e.to_string())?;
+    // an --advertise port override only applies to the rendezvous socket
+    let leader_addr = SocketAddr::new(rv_addr.ip(), leader_bound.port());
     println!("rendezvous: {rv_addr}");
 
     let mut children = Children(Vec::with_capacity(spec.k));
@@ -514,7 +583,7 @@ fn run_processes(
 }
 
 fn cmd_worker(args: &Args) -> Result<(), String> {
-    args.check_known(&["connect", "id", "timeout-s"])?;
+    args.check_known(&["connect", "id", "timeout-s", "bind", "advertise"])?;
     let rendezvous = args
         .get("connect")
         .ok_or("worker: --connect <rendezvous addr> is required")?
@@ -527,8 +596,11 @@ fn cmd_worker(args: &Args) -> Result<(), String> {
         .map_err(|_| "--id: expected a worker index".to_string())?;
     let timeout = Duration::from_secs(args.get_or("timeout-s", 60u64)?);
 
-    let data_listener = TcpListener::bind("127.0.0.1:0").map_err(|e| e.to_string())?;
-    let data_addr = data_listener.local_addr().map_err(|e| e.to_string())?;
+    let data_listener = TcpListener::bind(bind_addr(args)?).map_err(|e| e.to_string())?;
+    let data_addr = advertised(
+        data_listener.local_addr().map_err(|e| e.to_string())?,
+        args.get("advertise"),
+    )?;
     let (roster, job_line) =
         bootstrap::join(rendezvous, id, data_addr, timeout).map_err(|e| e.to_string())?;
     let spec = JobSpec::decode_line(&job_line)?;
@@ -548,7 +620,7 @@ fn cmd_worker(args: &Args) -> Result<(), String> {
         .map_err(|e| e.to_string())?;
     // a peer failure panics out of run_worker; the guard inside aborts
     // our endpoint and the nonzero exit is the leader's signal
-    run_worker(id, &job, &prep, &net);
+    run_worker(id, &job, prep, &net);
     Ok(())
 }
 
@@ -602,4 +674,45 @@ fn cmd_artifacts(args: &Args) -> Result<(), String> {
         println!("\nsmoke: {name}(uniform) -> y[0] = {} (want 1.0)", y[0]);
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_port_parsing() {
+        assert_eq!(parse_host_port("127.0.0.1:9000").unwrap().port(), 9000);
+        let bare = parse_host_port("10.1.2.3").unwrap();
+        assert_eq!((bare.ip().to_string().as_str(), bare.port()), ("10.1.2.3", 0));
+        assert!(parse_host_port("not-an-ip").is_err());
+        assert!(parse_host_port("example.com:80").is_err(), "hostnames are not resolved");
+    }
+
+    #[test]
+    fn advertise_rewrites_host_and_keeps_bound_port() {
+        let bound: SocketAddr = "127.0.0.1:4321".parse().unwrap();
+        assert_eq!(advertised(bound, None).unwrap(), bound);
+        // bare IP: keep the bound port
+        assert_eq!(
+            advertised(bound, Some("10.0.0.5")).unwrap(),
+            "10.0.0.5:4321".parse().unwrap()
+        );
+        // explicit port: forwarded/mapped deployments override it
+        assert_eq!(
+            advertised(bound, Some("10.0.0.5:19000")).unwrap(),
+            "10.0.0.5:19000".parse().unwrap()
+        );
+        assert!(advertised(bound, Some("bogus")).is_err());
+    }
+
+    #[test]
+    fn wildcard_binds_require_a_routable_advertise() {
+        let bound: SocketAddr = "0.0.0.0:4321".parse().unwrap();
+        assert!(advertised(bound, None).is_err(), "0.0.0.0 must not enter a roster");
+        assert_eq!(
+            advertised(bound, Some("192.168.1.9")).unwrap(),
+            "192.168.1.9:4321".parse().unwrap()
+        );
+    }
 }

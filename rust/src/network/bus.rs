@@ -14,8 +14,9 @@
 //! The bus is a *discrete-event accountant*: callers submit transmissions
 //! (real payloads flow through the [`transport`](crate::transport) layer);
 //! the bus serially sums wire time — the serialization constraint makes
-//! total time the sum over all transmissions — and tracks
-//! byte/message/load tallies used by the experiment harnesses.
+//! total time the sum over all transmissions. Byte/message/load tallies
+//! ride in [`ShuffleLoad`](crate::shuffle::load::ShuffleLoad), which the
+//! accounting replays maintain alongside the clock.
 //!
 //! The byte counts submitted by the engine and cluster are real frame
 //! lengths: `transport::frame` serializes a coded multicast to exactly
@@ -69,50 +70,29 @@ impl BusConfig {
     }
 }
 
-/// A completed transmission record.
-#[derive(Clone, Debug)]
-pub struct Transmission {
-    pub src: u8,
-    pub receivers: usize,
-    pub payload_bytes: usize,
-    pub wire_time_s: f64,
-}
-
-/// The serial shared bus: accumulates wire time and tallies.
+/// The serial shared bus: accumulates wire time. Pruned (PR 5) to
+/// exactly what the accounting replays use — submit transmissions, read
+/// the clock, reset between phases; byte/message tallies live in
+/// [`ShuffleLoad`](crate::shuffle::load::ShuffleLoad), which the replay
+/// maintains alongside (the old per-transmission log and duplicate
+/// tallies had no remaining callers).
 #[derive(Clone, Debug)]
 pub struct Bus {
     cfg: BusConfig,
     clock_s: f64,
-    total_bytes: usize,
-    total_msgs: usize,
-    log: Option<Vec<Transmission>>,
 }
 
 impl Bus {
     pub fn new(cfg: BusConfig) -> Self {
-        Self { cfg, clock_s: 0.0, total_bytes: 0, total_msgs: 0, log: None }
-    }
-
-    /// Enable per-transmission logging (tests / traces).
-    pub fn with_log(mut self) -> Self {
-        self.log = Some(Vec::new());
-        self
-    }
-
-    pub fn config(&self) -> &BusConfig {
-        &self.cfg
+        Self { cfg, clock_s: 0.0 }
     }
 
     /// Submit one transmission; returns its wire time. The bus is serial,
     /// so the simulated clock advances by exactly this amount.
     pub fn transmit(&mut self, src: u8, receivers: usize, payload_bytes: usize) -> f64 {
+        let _ = src; // kept in the signature: replay sites read naturally
         let t = self.cfg.wire_time(payload_bytes, receivers);
         self.clock_s += t;
-        self.total_bytes += payload_bytes;
-        self.total_msgs += 1;
-        if let Some(log) = &mut self.log {
-            log.push(Transmission { src, receivers, payload_bytes, wire_time_s: t });
-        }
         t
     }
 
@@ -121,26 +101,9 @@ impl Bus {
         self.clock_s
     }
 
-    pub fn total_bytes(&self) -> usize {
-        self.total_bytes
-    }
-
-    pub fn total_msgs(&self) -> usize {
-        self.total_msgs
-    }
-
-    pub fn log(&self) -> Option<&[Transmission]> {
-        self.log.as_deref()
-    }
-
-    /// Reset the clock/tallies (e.g. between phases) keeping the config.
+    /// Reset the clock (e.g. between phases) keeping the config.
     pub fn reset(&mut self) {
         self.clock_s = 0.0;
-        self.total_bytes = 0;
-        self.total_msgs = 0;
-        if let Some(log) = &mut self.log {
-            log.clear();
-        }
     }
 }
 
@@ -172,13 +135,10 @@ mod tests {
 
     #[test]
     fn bus_is_serial_sum() {
-        let mut bus = Bus::new(BusConfig::ideal(1e8)).with_log();
+        let mut bus = Bus::new(BusConfig::ideal(1e8));
         let t1 = bus.transmit(0, 1, 12_500); // 1 ms
         let t2 = bus.transmit(1, 4, 12_500); // 1 ms
         assert!((bus.clock() - (t1 + t2)).abs() < 1e-12);
-        assert_eq!(bus.total_bytes(), 25_000);
-        assert_eq!(bus.total_msgs(), 2);
-        assert_eq!(bus.log().unwrap().len(), 2);
     }
 
     #[test]
@@ -187,7 +147,6 @@ mod tests {
         bus.transmit(0, 2, 100);
         bus.reset();
         assert_eq!(bus.clock(), 0.0);
-        assert_eq!(bus.total_msgs(), 0);
     }
 
     #[test]

@@ -9,4 +9,4 @@
 
 pub mod bus;
 
-pub use bus::{Bus, BusConfig, Transmission};
+pub use bus::{Bus, BusConfig};

@@ -10,38 +10,21 @@
 //! one segment of each IV it needs; over the `r` senders it collects all
 //! `r` segments.
 //!
-//! Two API families (§Perf):
-//!
-//! * **Arena kernels** ([`eval_group_values`], [`encode_group_into`]) —
-//!   write into caller-provided slices aligned with the
-//!   [`ShufflePlan`](super::plan::ShufflePlan) arena layout; the engine's
-//!   zero-allocation hot path.
-//! * **Owned-message API** ([`encode_sender`], [`encode_group`],
-//!   [`CodedMessage`]) — allocates per message; kept for the paper-example
-//!   and invariant tests. The cluster driver stopped exchanging owned
-//!   messages in the transport rewrite: workers now encode with the
-//!   single-sender arena kernels ([`eval_rows_except`],
-//!   [`encode_sender_into`]) straight into reusable wire-frame buffers.
+//! All kernels write into caller-provided slices aligned with the
+//! [`ShufflePlan`](super::plan::ShufflePlan) arena layout — no
+//! allocation anywhere. The **single-sender** kernels
+//! ([`eval_rows_except`], [`encode_sender_into`]) are the *only*
+//! production encode path: every driver runs them through the one worker
+//! core ([`coordinator::exec`](crate::coordinator::exec)), straight into
+//! reusable wire-frame buffers. The **group-wide** kernels
+//! ([`eval_group_values`], [`encode_group_into`]) encode all `r + 1`
+//! senders of a group at once over shared row values; they survive as
+//! the unit-test reference implementation the sender kernels are checked
+//! against (the owned-`CodedMessage` API they once backed is retired).
 
 use super::plan::GroupRef;
 use super::segments::{seg_bytes, seg_of};
 use crate::graph::csr::Vertex;
-
-/// One sender's coded multicast within a group.
-#[derive(Clone, Debug, PartialEq, Eq)]
-pub struct CodedMessage {
-    /// Index of the sender within `plan.servers`.
-    pub sender_idx: usize,
-    /// XOR columns (the `Q` coded packets, each `T/r` bits + padding).
-    pub columns: Vec<u64>,
-}
-
-impl CodedMessage {
-    /// Wire payload in bytes for computation load `r` (padded segments).
-    pub fn payload_bytes(&self, r: usize) -> usize {
-        self.columns.len() * seg_bytes(r)
-    }
-}
 
 /// Segment index associated with `servers[sender_idx]` for the row of
 /// `servers[row_idx]`: the position of the sender within the sorted set
@@ -59,9 +42,9 @@ pub fn segment_index(sender_idx: usize, row_idx: usize) -> usize {
 /// Evaluate every IV of a group into `vals`, aligned with the group's
 /// pair slice (`vals[c]` is the value of `group.group_pairs()[c]`).
 ///
-/// Shared kernel for encode (sender tables) and decode (cancellation) —
-/// both sides compute Map outputs independently and identically. Writes
-/// only; no allocation.
+/// Reference kernel (unit tests): production encode/decode evaluates
+/// through [`eval_rows_except`] — a worker can never evaluate its own
+/// row. Writes only; no allocation.
 pub fn eval_group_values<F: Fn(Vertex, Vertex) -> u64>(
     group: GroupRef<'_>,
     value: &F,
@@ -80,7 +63,7 @@ pub fn eval_group_values<F: Fn(Vertex, Vertex) -> u64>(
 /// `col_counts` the per-sender column counts
 /// ([`ShufflePlan::sender_cols`](super::plan::ShufflePlan::sender_cols));
 /// `cols` the output arena of length `col_counts.sum()`, sender-major.
-/// No allocation.
+/// Reference kernel (unit tests). No allocation.
 pub fn encode_group_into(
     group: GroupRef<'_>,
     vals: &[u64],
@@ -99,11 +82,11 @@ pub fn encode_group_into(
 }
 
 /// Encode *one* sender's coded columns from group-aligned `vals` — the
-/// arena sibling of [`encode_sender`], used by the cluster workers to
-/// encode straight into a transport send buffer. The sender's own row is
-/// never read, so `vals` may come from [`eval_rows_except`] (a worker
-/// cannot evaluate its own row: those are exactly the IVs it is
-/// missing). `cols.len()` must equal the sender's column count
+/// production kernel the worker core uses to encode straight into a
+/// transport send buffer. The sender's own row is never read, so `vals`
+/// may come from [`eval_rows_except`] (a worker cannot evaluate its own
+/// row: those are exactly the IVs it is missing). `cols.len()` must
+/// equal the sender's column count
 /// ([`ShufflePlan::sender_cols`](super::plan::ShufflePlan::sender_cols)).
 /// No allocation.
 pub fn encode_sender_into(
@@ -132,8 +115,8 @@ pub fn encode_sender_into(
 
 /// [`eval_group_values`] with one row skipped: evaluates every row
 /// except `skip_idx` into the group-aligned `vals` slice, zeroing the
-/// skipped row's entries. The cluster workers use it on both sides of
-/// the wire — a *sender* cannot evaluate its own row (the IVs it is
+/// skipped row's entries. The worker core uses it on both sides of the
+/// wire — a *sender* cannot evaluate its own row (the IVs it is
 /// missing), and neither can a *receiver*; no kernel reads the skipped
 /// entries ([`encode_sender_into`] and
 /// [`decode_sender_into`](super::decoder::decode_sender_into) iterate
@@ -157,75 +140,6 @@ pub fn eval_rows_except<F: Fn(Vertex, Vertex) -> u64>(
     }
 }
 
-/// Evaluate all row IV values of a group through `value(reducer, mapper)`
-/// into per-row `Vec`s (owned-message API; the engine uses
-/// [`eval_group_values`] instead).
-pub fn row_values<F: Fn(Vertex, Vertex) -> u64>(group: GroupRef<'_>, value: &F) -> Vec<Vec<u64>> {
-    (0..group.members())
-        .map(|idx| group.row(idx).iter().map(|&(i, j)| value(i, j)).collect())
-        .collect()
-}
-
-/// [`row_values`] with one row skipped (left empty). A *sender* cannot
-/// evaluate its own row — those are the IVs it is missing — and
-/// [`encode_sender`] never reads it; kept so tests can drive the
-/// owned-message encoder with only the state one worker owns (the
-/// cluster itself uses the arena-kernel equivalent,
-/// [`eval_rows_except`]).
-pub fn row_values_except<F: Fn(Vertex, Vertex) -> u64>(
-    group: GroupRef<'_>,
-    skip_idx: usize,
-    value: &F,
-) -> Vec<Vec<u64>> {
-    (0..group.members())
-        .map(|idx| {
-            if idx == skip_idx {
-                Vec::new()
-            } else {
-                group.row(idx).iter().map(|&(i, j)| value(i, j)).collect()
-            }
-        })
-        .collect()
-}
-
-/// Encode the multicast of one sender (paper Fig 6), owned-message API.
-///
-/// `vals` are the group's row values (from [`row_values`]); `r` is the
-/// computation load (segment count).
-pub fn encode_sender(
-    group: GroupRef<'_>,
-    sender_idx: usize,
-    vals: &[Vec<u64>],
-    r: usize,
-) -> CodedMessage {
-    let sb = seg_bytes(r);
-    let q = group.sender_cols_needed(sender_idx);
-    let mut columns = vec![0u64; q];
-    for (row_idx, rvals) in vals.iter().enumerate() {
-        if row_idx == sender_idx {
-            continue;
-        }
-        let seg_idx = segment_index(sender_idx, row_idx);
-        for (c, &bits) in rvals.iter().enumerate() {
-            columns[c] ^= seg_of(bits, seg_idx, sb);
-        }
-    }
-    CodedMessage { sender_idx, columns }
-}
-
-/// Encode all `r + 1` senders of a group at once (row values are computed
-/// once and shared across senders).
-pub fn encode_group<F: Fn(Vertex, Vertex) -> u64>(
-    group: GroupRef<'_>,
-    value: &F,
-    r: usize,
-) -> Vec<CodedMessage> {
-    let vals = row_values(group, value);
-    (0..group.members())
-        .map(|s| encode_sender(group, s, &vals, r))
-        .collect()
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -240,6 +154,21 @@ mod tests {
         )
     }
 
+    /// One sender's columns through the production path: evaluate the
+    /// other rows ([`eval_rows_except`]) and encode.
+    fn sender_cols<F: Fn(Vertex, Vertex) -> u64>(
+        group: GroupRef<'_>,
+        s_idx: usize,
+        value: &F,
+        r: usize,
+    ) -> Vec<u64> {
+        let mut vals = vec![0u64; group.total_ivs()];
+        eval_rows_except(group, s_idx, value, &mut vals);
+        let mut cols = vec![0u64; group.sender_cols_needed(s_idx)];
+        encode_sender_into(group, s_idx, &vals, r, &mut cols);
+        cols
+    }
+
     #[test]
     fn segment_index_is_rank_without_row() {
         // S indices {0,1,2}: sender 0 for row 1 -> S\{1} = [0,2], pos 0
@@ -252,28 +181,38 @@ mod tests {
     #[test]
     fn fig3_coded_messages_match_paper() {
         // Paper: X_1 = {v51^1 ^ v43^1, v34^1 ^ v62^1} etc. With value(i,j)
-        // chosen as distinguishable constants we can check the XOR algebra.
+        // chosen as distinguishable constants we can check the XOR algebra
+        // of the production sender kernel.
         let (g, alloc) = fig3();
         let plan = build_group_plans(&g, &alloc);
         let p = plan.group(0);
         // value = pack (i,j) into bits so segments are traceable
         let value = |i: Vertex, j: Vertex| ((i as u64) << 32) | j as u64;
-        let msgs = encode_group(p, &value, 2);
-        assert_eq!(msgs.len(), 3);
         // every sender sends Q = max other-row length = 2 columns
-        for m in &msgs {
-            assert_eq!(m.columns.len(), 2);
+        let all: Vec<Vec<u64>> = (0..3).map(|s| sender_cols(p, s, &value, 2)).collect();
+        for cols in &all {
+            assert_eq!(cols.len(), 2);
         }
-        // sender 0 (server 0): rows 1 and 2. seg idx for row1 = 0 (low half),
-        // for row2 = 0 as well? segment_index(0,2) = 0. Column 0 =
-        // low32(v(3,2)) ^ low32(v(4,0)).
+        // sender 0 (server 0): rows 1 and 2, both at segment index 0
+        // (low half). Column 0 = low32(v(3,2)) ^ low32(v(4,0)).
         let sb = seg_bytes(2); // 4 bytes
         let expect0 = seg_of(value(3, 2), 0, sb) ^ seg_of(value(4, 0), 0, sb);
-        assert_eq!(msgs[0].columns[0], expect0);
+        assert_eq!(all[0][0], expect0);
+        // sender 1: row 0 at seg 0, row 2 at seg 1 — X_2's first column
+        // is v_{1,5}^{(1)} ^ v_{5,1}^{(2)} in paper terms
+        let expect1 = seg_of(value(0, 4), segment_index(1, 0), sb)
+            ^ seg_of(value(4, 0), segment_index(1, 2), sb);
+        assert_eq!(all[1][0], expect1);
+        // sender 2: X_3's second column is v_{2,6}^{(2)} ^ v_{3,4}^{(2)}
+        let expect2 = seg_of(value(1, 5), segment_index(2, 0), sb)
+            ^ seg_of(value(2, 3), segment_index(2, 1), sb);
+        assert_eq!(all[2][1], expect2);
     }
 
     #[test]
-    fn arena_encode_matches_owned_messages() {
+    fn group_kernel_matches_sender_kernel() {
+        // the group-wide reference kernel and the production per-sender
+        // kernel must emit identical columns, sender by sender
         let (g, alloc) = fig3();
         let plan = build_group_plans(&g, &alloc);
         let value = |i: Vertex, j: Vertex| {
@@ -288,13 +227,12 @@ mod tests {
             eval_group_values(p, &value, &mut vals[vrange.clone()]);
             let crange = plan.col_range(gi);
             encode_group_into(p, &vals[vrange], r, plan.sender_cols(gi), &mut cols[crange.clone()]);
-            // owned-message reference
-            let msgs = encode_group(p, &value, r);
             let mut cursor = crange.start;
-            for (s_idx, msg) in msgs.iter().enumerate() {
+            for s_idx in 0..p.members() {
                 let q = plan.sender_cols(gi)[s_idx] as usize;
-                assert_eq!(msg.columns.len(), q, "sender {s_idx}");
-                assert_eq!(&cols[cursor..cursor + q], &msg.columns[..], "sender {s_idx}");
+                let got = sender_cols(p, s_idx, &value, r);
+                assert_eq!(got.len(), q, "sender {s_idx}");
+                assert_eq!(&cols[cursor..cursor + q], &got[..], "sender {s_idx}");
                 cursor += q;
             }
             assert_eq!(cursor, crange.end);
@@ -302,10 +240,10 @@ mod tests {
     }
 
     #[test]
-    fn single_sender_kernel_matches_owned_messages() {
-        // encode_sender_into over eval_rows_except == encode_sender over
-        // row_values_except: the cluster worker's send path against the
-        // owned-message reference, on a graph with uneven rows
+    fn eval_rows_except_zeroes_exactly_the_skipped_row() {
+        // on a graph with uneven rows, for every (group, sender): the
+        // skipped row is zeroed, the others carry real values, and the
+        // resulting columns match the group-kernel reference
         use crate::graph::er::er;
         use crate::util::rng::DetRng;
         let g = er(70, 0.15, &mut DetRng::seed(31));
@@ -316,8 +254,10 @@ mod tests {
                 (((i as u64) << 32) ^ j as u64).wrapping_mul(0x2545_F491_4F6C_DD1D)
             };
             let mut vals = vec![0u64; plan.groups().map(|p| p.total_ivs()).max().unwrap_or(0)];
+            let mut full = vals.clone();
             for group in plan.groups() {
                 let nv = group.total_ivs();
+                eval_group_values(group, &value, &mut full[..nv]);
                 for s_idx in 0..group.members() {
                     eval_rows_except(group, s_idx, &value, &mut vals[..nv]);
                     // skipped row is zeroed, other rows evaluated
@@ -328,20 +268,14 @@ mod tests {
                     let q = group.sender_cols_needed(s_idx);
                     let mut cols = vec![0u64; q];
                     encode_sender_into(group, s_idx, &vals[..nv], r, &mut cols);
-                    let owned_vals = row_values_except(group, s_idx, &value);
-                    let want = encode_sender(group, s_idx, &owned_vals, r);
-                    assert_eq!(cols, want.columns, "r={r} s_idx={s_idx}");
+                    // the sender kernel never reads its own row, so the
+                    // full-values reference must agree exactly
+                    let mut want = vec![0u64; q];
+                    encode_sender_into(group, s_idx, &full[..nv], r, &mut want);
+                    assert_eq!(cols, want, "r={r} s_idx={s_idx}");
                 }
             }
         }
-    }
-
-    #[test]
-    fn payload_bytes_scale_with_r() {
-        let (g, alloc) = fig3();
-        let plan = build_group_plans(&g, &alloc);
-        let msgs = encode_group(plan.group(0), &|_, _| 0xABCD, 2);
-        assert_eq!(msgs[0].payload_bytes(2), 2 * 4);
     }
 
     #[test]
@@ -357,9 +291,8 @@ mod tests {
         assert!(p.row(1).is_empty());
         assert_eq!(p.row(2), &[(4, 0)]);
         // every sender's table has max non-empty row length 1
-        let msgs = encode_group(p, &|_, _| 7, 2);
-        for m in &msgs {
-            assert_eq!(m.columns.len(), 1);
+        for s_idx in 0..3 {
+            assert_eq!(sender_cols(p, s_idx, &|_, _| 7, 2).len(), 1);
         }
     }
 }

@@ -337,8 +337,8 @@ mod tests {
     use crate::coordinator::measure_loads;
     use crate::graph::er::er;
     use crate::mapreduce::PageRank;
-    use crate::shuffle::coded::encode_group;
-    use crate::shuffle::decoder::recover_group;
+    use crate::shuffle::coded::{encode_sender_into, eval_rows_except};
+    use crate::shuffle::decoder::decode_sender_into;
     use crate::util::rng::DetRng;
 
     #[test]
@@ -383,12 +383,35 @@ mod tests {
             combined_value(&g, &alloc, &prog, &state, i, t as usize).to_bits()
         };
         for group in build_combined_group_plans(&g, &alloc).groups() {
-            let msgs = encode_group(group, &value, r);
-            for (idx, &k) in group.servers.iter().enumerate() {
-                let got = recover_group(group, k, &msgs, &value, r);
-                assert_eq!(got.len(), group.row_len(idx));
-                for (riv, &(i, t)) in got.iter().zip(group.row(idx)) {
-                    assert_eq!(riv.bits, value(i, t), "({i},{t})");
+            let mut vals = vec![0u64; group.total_ivs()];
+            let msgs: Vec<Vec<u64>> = (0..group.members())
+                .map(|s_idx| {
+                    eval_rows_except(group, s_idx, &value, &mut vals);
+                    let mut cols = vec![0u64; group.sender_cols_needed(s_idx)];
+                    encode_sender_into(group, s_idx, &vals, r, &mut cols);
+                    cols
+                })
+                .collect();
+            for idx in 0..group.members() {
+                let my_row = group.row(idx);
+                eval_rows_except(group, idx, &value, &mut vals);
+                let mut out = vec![0u64; my_row.len()];
+                for s_idx in 0..group.members() {
+                    if s_idx == idx {
+                        continue;
+                    }
+                    decode_sender_into(
+                        group,
+                        idx,
+                        s_idx,
+                        &msgs[s_idx][..my_row.len()],
+                        &vals,
+                        r,
+                        &mut out,
+                    );
+                }
+                for (c, &(i, t)) in my_row.iter().enumerate() {
+                    assert_eq!(out[c], value(i, t), "({i},{t})");
                 }
             }
         }

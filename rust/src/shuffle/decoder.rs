@@ -8,20 +8,21 @@
 //! the sender-`s` segment of the `c`-th IV the receiver needs. Collecting
 //! segments from all `r` senders reassembles each needed IV exactly.
 //!
-//! [`decode_group_into`] is the engine's zero-allocation arena kernel: it
-//! decodes *every* member of a group straight into a bits arena aligned
-//! with the plan's pair layout. The column values are XORs of masked
-//! segments (each `seg_of` output fits the segment mask), so shifting a
-//! whole column into its reassembly position distributes over the
-//! cancellation XORs — one pass, no temporary buffers.
-//! [`decode_sender_into`] is the cluster workers' per-sender sibling,
-//! fed directly from received transport-frame columns. The owned-message
-//! API ([`decode_from_sender`], [`recover_group`]) remains for the
-//! paper-example and invariant tests.
+//! [`decode_sender_into`] is the production kernel: the one worker core
+//! ([`coordinator::exec`](crate::coordinator::exec)) decodes *one*
+//! sender's columns — fed directly from received transport-frame bytes —
+//! into its receiver-row accumulator, for every driver (engine and
+//! cluster alike). The column values are XORs of masked segments (each
+//! `seg_of` output fits the segment mask), so shifting a whole column
+//! into its reassembly position distributes over the cancellation XORs —
+//! one pass, no temporary buffers. [`decode_group_into`] decodes every
+//! member of a group at once from the group-wide column arena; it
+//! survives as the unit-test reference implementation (the
+//! owned-message API that once lived beside it is retired).
 
-use super::coded::{segment_index, CodedMessage};
+use super::coded::segment_index;
 use super::plan::GroupRef;
-use super::segments::{place_seg, seg_bytes, seg_mask, seg_of};
+use super::segments::{seg_bytes, seg_mask, seg_of};
 use crate::graph::csr::Vertex;
 
 /// A fully reassembled intermediate value.
@@ -39,7 +40,7 @@ pub struct RecoveredIv {
 /// `cols` the sender-major column arena ([`super::coded::encode_group_into`]);
 /// `col_counts` the per-sender column counts. After the call, `bits[c]`
 /// equals the full IV value of `group.group_pairs()[c]` for every pair.
-/// No allocation.
+/// Reference kernel (unit tests). No allocation.
 pub fn decode_group_into(
     group: GroupRef<'_>,
     vals: &[u64],
@@ -99,9 +100,10 @@ pub fn decode_group_into(
 
 /// Decode *one* sender's columns at receiver `m_idx`, XOR-placing the
 /// sender's segment of each needed IV into the receiver-row-aligned
-/// `out` accumulator — the arena sibling of [`decode_from_sender`] for
-/// transport frames. Zero `out` before the first sender; after all `r`
-/// senders, `out[c]` holds the full IV bits of `group.row(m_idx)[c]`.
+/// `out` accumulator — the production kernel, fed directly from
+/// transport frames by the worker core. Zero `out` before the first
+/// sender; after all `r` senders, `out[c]` holds the full IV bits of
+/// `group.row(m_idx)[c]`.
 ///
 /// `cols` holds at least the receiver's row length of the sender's XOR
 /// columns in wire order (each masked to its segment width, which
@@ -149,117 +151,15 @@ pub fn decode_sender_into(
     }
 }
 
-/// Decode one sender's message at one receiver: returns the sender's
-/// segment of each IV in the receiver's row (index-aligned with
-/// `group.row(receiver_idx)`).
-///
-/// `vals` must contain the locally recomputable row values for every row
-/// other than the receiver's own (the receiver's entry is ignored); use
-/// [`super::coded::row_values`] with the receiver's Map state.
-pub fn decode_from_sender(
-    group: GroupRef<'_>,
-    receiver_idx: usize,
-    msg: &CodedMessage,
-    vals: &[Vec<u64>],
-    r: usize,
-) -> Vec<u64> {
-    assert_ne!(msg.sender_idx, receiver_idx, "sender cannot decode itself");
-    let sb = seg_bytes(r);
-    let mask = seg_mask(sb);
-    let my_len = group.row_len(receiver_idx);
-    // row-major accumulation (§Perf): stream each foreign row through the
-    // accumulator instead of walking all rows per column — sequential
-    // loads, and the seg_of shift is loop-invariant per row.
-    let mut out: Vec<u64> = msg.columns[..my_len].to_vec();
-    for (row_idx, rvals) in vals.iter().enumerate() {
-        if row_idx == receiver_idx || row_idx == msg.sender_idx {
-            continue;
-        }
-        let seg_idx = segment_index(msg.sender_idx, row_idx);
-        let upto = rvals.len().min(my_len);
-        for (o, &v) in out[..upto].iter_mut().zip(&rvals[..upto]) {
-            *o ^= seg_of(v, seg_idx, sb);
-        }
-    }
-    for o in &mut out {
-        *o &= mask;
-    }
-    out
-}
-
-/// Full group recovery at one receiver: decode every sender's message and
-/// reassemble the receiver's needed IVs bit-exactly.
-///
-/// `local_value(i, j)` computes Map outputs for vertices the receiver Maps
-/// (used to cancel other rows); `msgs` are all `r` messages addressed to
-/// this receiver (any order).
-pub fn recover_group<F: Fn(Vertex, Vertex) -> u64>(
-    group: GroupRef<'_>,
-    receiver: u8,
-    msgs: &[CodedMessage],
-    local_value: &F,
-    r: usize,
-) -> Vec<RecoveredIv> {
-    let receiver_idx = group
-        .member_index(receiver)
-        .expect("receiver not in group");
-    // Recompute the other rows' values once (shared across senders).
-    let vals: Vec<Vec<u64>> = (0..group.members())
-        .map(|idx| {
-            if idx == receiver_idx {
-                Vec::new() // own row: unknown, never read
-            } else {
-                group.row(idx).iter().map(|&(i, j)| local_value(i, j)).collect()
-            }
-        })
-        .collect();
-    recover_group_shared(group, receiver_idx, msgs, &vals, r)
-}
-
-/// [`recover_group`] with the row values already evaluated (when encode
-/// already computed `row_values` for the whole group, every receiver can
-/// share them instead of re-deriving `r-1` rows each — a §Perf
-/// optimization worth ~r× on the decode hot path).
-///
-/// `vals[receiver_idx]` may be populated or empty; it is never read.
-pub fn recover_group_shared(
-    group: GroupRef<'_>,
-    receiver_idx: usize,
-    msgs: &[CodedMessage],
-    vals: &[Vec<u64>],
-    r: usize,
-) -> Vec<RecoveredIv> {
-    let sb = seg_bytes(r);
-    let my_row = group.row(receiver_idx);
-    let mut bits = vec![0u64; my_row.len()];
-    let mut seen = vec![0usize; my_row.len()];
-    for msg in msgs {
-        if msg.sender_idx == receiver_idx {
-            continue; // own transmission carries nothing for us
-        }
-        let segs = decode_from_sender(group, receiver_idx, msg, vals, r);
-        // the sender's segment index within *our* row:
-        let seg_idx = segment_index(msg.sender_idx, receiver_idx);
-        for (c, &s) in segs.iter().enumerate() {
-            bits[c] = place_seg(bits[c], s, seg_idx, sb);
-            seen[c] += 1;
-        }
-    }
-    debug_assert!(seen.iter().all(|&s| s == r || my_row.is_empty()));
-    my_row
-        .iter()
-        .zip(bits)
-        .map(|(&(i, j), b)| RecoveredIv { reducer: i, mapper: j, bits: b })
-        .collect()
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::allocation::Allocation;
     use crate::graph::csr::Csr;
     use crate::graph::er::er;
-    use crate::shuffle::coded::{encode_group, encode_group_into, eval_group_values};
+    use crate::shuffle::coded::{
+        encode_group_into, encode_sender_into, eval_group_values, eval_rows_except,
+    };
     use crate::shuffle::plan::build_group_plans;
     use crate::util::rng::DetRng;
 
@@ -271,24 +171,14 @@ mod tests {
 
     /// End-to-end: encode with a value oracle, decode at every member,
     /// check bit-exact recovery of exactly the needed IVs — through both
-    /// the owned-message API and the arena kernels.
+    /// the group-wide reference kernels and the production per-sender
+    /// kernels (receivers evaluating only foreign rows, like real
+    /// workers).
     fn roundtrip(g: &Csr, alloc: &Allocation) {
         let r = alloc.r;
         let value = oracle_value;
         let plan = build_group_plans(g, alloc);
-        // owned-message path
-        for group in plan.groups() {
-            let msgs = encode_group(group, &value, r);
-            for (idx, &k) in group.servers.iter().enumerate() {
-                let got = recover_group(group, k, &msgs, &value, r);
-                assert_eq!(got.len(), group.row_len(idx));
-                for (riv, &(i, j)) in got.iter().zip(group.row(idx)) {
-                    assert_eq!((riv.reducer, riv.mapper), (i, j));
-                    assert_eq!(riv.bits, value(i, j), "IV ({i},{j}) corrupted");
-                }
-            }
-        }
-        // arena path: every pair decodes to its oracle value
+        // reference path: every pair decodes to its oracle value
         let mut vals = vec![0u64; plan.total_ivs()];
         let mut cols = vec![0u64; plan.total_cols()];
         let mut bits = vec![0u64; plan.total_ivs()];
@@ -297,7 +187,8 @@ mod tests {
             let vr = plan.pair_range(gi);
             let cr = plan.col_range(gi);
             eval_group_values(group, &value, &mut vals[vr.clone()]);
-            encode_group_into(group, &vals[vr.clone()], r, plan.sender_cols(gi), &mut cols[cr.clone()]);
+            let counts = plan.sender_cols(gi);
+            encode_group_into(group, &vals[vr.clone()], r, counts, &mut cols[cr.clone()]);
             decode_group_into(
                 group,
                 &vals[vr.clone()],
@@ -308,7 +199,43 @@ mod tests {
             );
         }
         for (idx, &(i, j)) in plan.pairs().iter().enumerate() {
-            assert_eq!(bits[idx], value(i, j), "arena decode of ({i},{j})");
+            assert_eq!(bits[idx], value(i, j), "reference decode of ({i},{j})");
+        }
+        // production path: per-sender encode over skipped-row values,
+        // per-sender decode at every member
+        for group in plan.groups() {
+            let nv = group.total_ivs();
+            let mut gvals = vec![0u64; nv];
+            let all_cols: Vec<Vec<u64>> = (0..group.members())
+                .map(|s_idx| {
+                    eval_rows_except(group, s_idx, &value, &mut gvals);
+                    let mut c = vec![0u64; group.sender_cols_needed(s_idx)];
+                    encode_sender_into(group, s_idx, &gvals, r, &mut c);
+                    c
+                })
+                .collect();
+            for m_idx in 0..group.members() {
+                let my_row = group.row(m_idx);
+                eval_rows_except(group, m_idx, &value, &mut gvals);
+                let mut out = vec![0u64; my_row.len()];
+                for s_idx in 0..group.members() {
+                    if s_idx == m_idx {
+                        continue;
+                    }
+                    decode_sender_into(
+                        group,
+                        m_idx,
+                        s_idx,
+                        &all_cols[s_idx][..my_row.len()],
+                        &gvals,
+                        r,
+                        &mut out,
+                    );
+                }
+                for (c, &(i, j)) in my_row.iter().enumerate() {
+                    assert_eq!(out[c], value(i, j), "sender-kernel decode of ({i},{j})");
+                }
+            }
         }
     }
 
@@ -396,11 +323,8 @@ mod tests {
 
     #[test]
     fn decode_sender_into_reassembles_exactly() {
-        // the cluster worker's receive path: per-sender arena decode over
-        // eval_rows_except-style vals reassembles every needed IV
-        // bit-exactly, including r=1 (whole-IV segments), empty rows, and
-        // padding segments (r=3)
-        use crate::shuffle::coded::{encode_sender_into, eval_rows_except, row_values_except};
+        // the production receive path across edge cases: r=1 (whole-IV
+        // segments), empty rows, and padding segments (r=3, r=4)
         let cases: Vec<(Csr, usize, usize)> = vec![
             (Csr::from_edges(6, &[(0, 4), (1, 5), (2, 3)]), 3, 2),
             (Csr::from_edges(6, &[(0, 4)]), 3, 2), // empty middle row
@@ -445,18 +369,6 @@ mod tests {
                     }
                     for (c, &(i, j)) in my_row.iter().enumerate() {
                         assert_eq!(out[c], value(i, j), "k={k} r={r} IV ({i},{j})");
-                    }
-                    // cross-check against the owned-message decoder
-                    let owned_vals = row_values_except(group, m_idx, &value);
-                    let msgs: Vec<CodedMessage> = all_cols
-                        .iter()
-                        .enumerate()
-                        .filter(|&(s, _)| s != m_idx)
-                        .map(|(s, cols)| CodedMessage { sender_idx: s, columns: cols.clone() })
-                        .collect();
-                    let got = recover_group_shared(group, m_idx, &msgs, &owned_vals, r);
-                    for (riv, (&(i, j), &bits)) in got.iter().zip(my_row.iter().zip(&out)) {
-                        assert_eq!((riv.reducer, riv.mapper, riv.bits), (i, j, bits));
                     }
                 }
             }
@@ -517,17 +429,5 @@ mod tests {
             uncoded.sort_unstable();
             assert_eq!(coded, uncoded, "seed={seed} K={k} r={r}");
         }
-    }
-
-    #[test]
-    #[should_panic(expected = "sender cannot decode itself")]
-    fn self_decode_rejected() {
-        let g = Csr::from_edges(6, &[(0, 4)]);
-        let alloc = Allocation::er_scheme(6, 3, 2);
-        let plan = build_group_plans(&g, &alloc);
-        let group = plan.group(0);
-        let msgs = encode_group(group, &|_, _| 1, 2);
-        let vals = crate::shuffle::coded::row_values(group, &|_, _| 1);
-        decode_from_sender(group, 0, &msgs[0], &vals, 2);
     }
 }

@@ -11,12 +11,16 @@
 //! * [`segments`] — splitting a `T`-bit IV into `r` segments and
 //!   reassembling (paper §IV-A "each intermediate value is evenly split
 //!   into r segments").
-//! * [`coded`] — the encoder: per-sender segment tables and column XORs
-//!   (group-wide arena kernels for the engine, single-sender kernels for
-//!   the cluster workers' transport send path).
+//! * [`coded`] — the encoder: per-sender segment tables and column XORs.
+//!   The single-sender arena kernels ([`encode_sender_into`],
+//!   [`eval_rows_except`]) are the *only* production encode path — every
+//!   driver runs them through the one worker core
+//!   ([`coordinator::exec`](crate::coordinator::exec)); the group-wide
+//!   kernels survive as a unit-test reference implementation.
 //! * [`decoder`] — the receiver side: cancel locally-computable segments,
-//!   recover your own, reassemble IVs (group-wide and per-sender arena
-//!   kernels; the latter decode straight from transport frame views).
+//!   recover your own, reassemble IVs. Same split: [`decode_sender_into`]
+//!   is the production path (fed straight from frame views), the
+//!   group-wide kernel is a unit-test reference.
 //! * [`uncoded`] — the baseline: unicast every needed IV.
 //! * [`load`] — communication-load accounting in the paper's normalized
 //!   units plus raw wire bytes.
@@ -29,7 +33,7 @@ pub mod plan;
 pub mod segments;
 pub mod uncoded;
 
-pub use coded::{encode_group, encode_sender, encode_sender_into, eval_rows_except, CodedMessage};
-pub use decoder::{decode_from_sender, decode_sender_into, recover_group, RecoveredIv};
+pub use coded::{encode_sender_into, eval_rows_except};
+pub use decoder::{decode_sender_into, RecoveredIv};
 pub use load::{normalized, ShuffleLoad};
 pub use plan::{build_group_plans, build_group_plans_sharded, GroupRef, ShufflePlan, WorkerPlan};

@@ -1,8 +1,8 @@
 //! In-process backend: one bounded ring of pooled frame buffers per
 //! endpoint.
 //!
-//! This replaces the old cluster driver's `mpsc` channels + per-receiver
-//! `CodedMessage` clones. Every endpoint owns an inbound `Ring`: a
+//! This replaced the original cluster driver's `mpsc` channels +
+//! per-receiver owned-message clones. Every endpoint owns an inbound `Ring`: a
 //! bounded queue of `Vec<u8>` frame slots backed by a free pool. A send
 //! pops a slot from the receiver's pool (or allocates one, cold),
 //! memcpys the serialized frame in, and enqueues it; a receive *swaps*

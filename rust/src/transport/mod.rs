@@ -17,8 +17,8 @@
 //!   signalling (`leave`) and data-frame tallies for the
 //!   model-vs-reality cross-check.
 //! * [`InProcNet`] — bounded per-endpoint rings of pooled frame buffers
-//!   (zero steady-state allocation; replaces the old `mpsc` +
-//!   per-receiver `CodedMessage` clone driver).
+//!   (zero steady-state allocation; replaced the original `mpsc` +
+//!   per-receiver owned-message clone driver).
 //! * [`TcpNet`] — `std::net` sockets on localhost, one listener per
 //!   endpoint, length-prefixed streams: the paper's testbed topology in
 //!   one process.

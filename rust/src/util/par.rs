@@ -114,6 +114,82 @@ where
     }
 }
 
+/// Run `f(i, &mut xs[i])` for every element, fanning out under
+/// recursive [`join`] when `parallel` (and the feature) allow. Elements
+/// are disjoint `&mut` regions, so no synchronization is needed and the
+/// per-element results are position-determined. The serial path is a
+/// plain loop with zero heap allocation.
+pub fn for_each_mut<T, F>(xs: &mut [T], parallel: bool, f: &F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    each_rec(xs, 0, parallel && ENABLED, f);
+}
+
+fn each_rec<T, F>(xs: &mut [T], base: usize, parallel: bool, f: &F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    match xs.len() {
+        0 => {}
+        1 => f(base, &mut xs[0]),
+        len => {
+            let mid = len / 2;
+            let (left, right) = xs.split_at_mut(mid);
+            if parallel {
+                join(
+                    || each_rec(left, base, true, f),
+                    || each_rec(right, base + mid, true, f),
+                );
+            } else {
+                each_rec(left, base, false, f);
+                each_rec(right, base + mid, false, f);
+            }
+        }
+    }
+}
+
+/// [`for_each_mut`] over two equal-length slices in lockstep:
+/// `f(i, &mut a[i], &mut b[i])`. The execution-core driver uses it to
+/// hand every worker core its own fabric endpoint in parallel.
+pub fn for_each_zip<A, B, F>(a: &mut [A], b: &mut [B], parallel: bool, f: &F)
+where
+    A: Send,
+    B: Send,
+    F: Fn(usize, &mut A, &mut B) + Sync,
+{
+    assert_eq!(a.len(), b.len(), "for_each_zip: slice lengths differ");
+    zip_rec(a, b, 0, parallel && ENABLED, f);
+}
+
+fn zip_rec<A, B, F>(a: &mut [A], b: &mut [B], base: usize, parallel: bool, f: &F)
+where
+    A: Send,
+    B: Send,
+    F: Fn(usize, &mut A, &mut B) + Sync,
+{
+    match a.len() {
+        0 => {}
+        1 => f(base, &mut a[0], &mut b[0]),
+        len => {
+            let mid = len / 2;
+            let (a1, a2) = a.split_at_mut(mid);
+            let (b1, b2) = b.split_at_mut(mid);
+            if parallel {
+                join(
+                    || zip_rec(a1, b1, base, true, f),
+                    || zip_rec(a2, b2, base + mid, true, f),
+                );
+            } else {
+                zip_rec(a1, b1, base, false, f);
+                zip_rec(a2, b2, base + mid, false, f);
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -157,6 +233,39 @@ mod tests {
         let mut data: Vec<u8> = Vec::new();
         for_each_chunk(&[], &mut data, true, &|_, _| panic!("no chunks"));
         for_each_chunk(&[0], &mut data, true, &|_, _| panic!("no chunks"));
+    }
+
+    #[test]
+    fn for_each_mut_visits_every_element_once() {
+        for parallel in [false, true] {
+            let mut xs = vec![0u32; 37];
+            for_each_mut(&mut xs, parallel, &|i, x| *x = i as u32 + 1);
+            for (i, &x) in xs.iter().enumerate() {
+                assert_eq!(x, i as u32 + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn for_each_zip_pairs_by_index() {
+        for parallel in [false, true] {
+            let mut a = vec![0u32; 9];
+            let mut b: Vec<u32> = (0..9).collect();
+            for_each_zip(&mut a, &mut b, parallel, &|i, x, y| {
+                *x = *y * 2 + i as u32;
+            });
+            for (i, &x) in a.iter().enumerate() {
+                assert_eq!(x, i as u32 * 3);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "slice lengths differ")]
+    fn for_each_zip_rejects_length_mismatch() {
+        let mut a = [0u8; 2];
+        let mut b = [0u8; 3];
+        for_each_zip(&mut a, &mut b, false, &|_, _, _| {});
     }
 
     #[test]

@@ -1,0 +1,182 @@
+//! The unified-core acceptance gate (ISSUE 5): **one shared helper**
+//! runs the same [`JobSpec`] through every driver — phase engine,
+//! cluster over in-process rings, cluster over TCP sockets, and the
+//! process-style path (bootstrap rendezvous + per-endpoint
+//! `TcpEndpoint` + spec-rebuilt jobs, i.e. exactly what `coded-graph
+//! worker` processes execute minus the address-space boundary, which
+//! `tests/process_cluster.rs` covers with the real binary) — and
+//! asserts, for all four schemes × ER/PL/SBM graphs:
+//!
+//! * final states **bit-identical** across drivers,
+//! * `validated_ivs` identical per iteration,
+//! * shuffle/update loads and every modeled phase time identical.
+//!
+//! This matrix replaces the per-file ad-hoc bit-identity copies that
+//! used to live in `coordinator::cluster`'s unit tests,
+//! `tests/cluster_transport.rs`, and `tests/bootstrap_cluster.rs` —
+//! all drivers now share one `WorkerCore` implementation, and this is
+//! the single place that pins them together.
+
+use std::net::TcpListener;
+use std::time::Duration;
+
+use coded_graph::coordinator::cluster::leader_ring_capacity;
+use coded_graph::coordinator::{
+    prepare, run_cluster_on, run_leader, run_rust, run_worker, AllocKind, EngineConfig, GraphKind,
+    GraphSpec, JobReport, JobSpec, ProgramSpec, Scheme,
+};
+use coded_graph::transport::{bootstrap, TcpEndpoint, TransportKind};
+
+const PATIENCE: Duration = Duration::from_secs(60);
+
+#[derive(Clone, Copy, Debug)]
+enum Driver {
+    Engine,
+    ClusterInproc,
+    ClusterTcp,
+    ProcessStyle,
+}
+
+const DRIVERS: [Driver; 3] = [Driver::ClusterInproc, Driver::ClusterTcp, Driver::ProcessStyle];
+
+/// The matrix rows: one spec per (graph family, scheme). Small sizes —
+/// the point is coverage of every driver × scheme × allocation shape,
+/// not scale. The SBM row runs the Appendix-C composite allocation.
+fn spec_for(graph: &str, scheme: Scheme) -> JobSpec {
+    let (kind, alloc) = match graph {
+        "er" => (GraphKind::Er { p: 0.12 }, AllocKind::Er),
+        "pl" => (GraphKind::Pl { gamma: 2.4, rho_scale: 2.0 }, AllocKind::Er),
+        "sbm" => (GraphKind::Sbm { p: 0.25, q: 0.05 }, AllocKind::Sbm),
+        other => panic!("unknown matrix graph {other}"),
+    };
+    JobSpec {
+        graph: GraphSpec { kind, n: 120, seed: 64 },
+        alloc,
+        k: 4,
+        r: 2,
+        program: ProgramSpec::PageRank,
+        scheme,
+        iters: 2,
+    }
+}
+
+/// Run `spec` under `driver` — the one helper every matrix cell shares.
+fn run_driver(spec: &JobSpec, cfg: &EngineConfig, driver: Driver) -> JobReport {
+    match driver {
+        Driver::Engine => {
+            let built = spec.materialize();
+            run_rust(&built.job(), cfg, spec.iters)
+        }
+        Driver::ClusterInproc => {
+            let built = spec.materialize();
+            run_cluster_on(&built.job(), cfg, spec.iters, TransportKind::InProc)
+        }
+        Driver::ClusterTcp => {
+            let built = spec.materialize();
+            run_cluster_on(&built.job(), cfg, spec.iters, TransportKind::Tcp)
+        }
+        Driver::ProcessStyle => run_process_style(*spec, *cfg),
+    }
+}
+
+/// The process-style driver: real bootstrap rendezvous, one standalone
+/// `TcpEndpoint` per endpoint, workers rebuilding their job + shard from
+/// the serialized spec line — `coded-graph worker`'s exact code path, on
+/// threads.
+fn run_process_style(spec: JobSpec, cfg: EngineConfig) -> JobReport {
+    let rendezvous = TcpListener::bind("127.0.0.1:0").unwrap();
+    let rv_addr = rendezvous.local_addr().unwrap();
+    let job_line = spec.encode_line();
+    let k = spec.k;
+
+    let mut workers = Vec::new();
+    for id in 0..k as u8 {
+        workers.push(std::thread::spawn(move || {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            let (roster, line) = bootstrap::join(rv_addr, id, addr, PATIENCE).expect("join");
+            let spec = JobSpec::decode_line(&line).expect("decode job line");
+            let built = spec.materialize();
+            let job = built.job();
+            let prep = spec.prepare_worker(&built, id);
+            let cap = prep.ring_capacity();
+            let net = TcpEndpoint::wire(id, &listener, &roster, cap, PATIENCE).expect("wire");
+            run_worker(id, &job, prep, &net);
+        }));
+    }
+
+    let data_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let leader_addr = data_listener.local_addr().unwrap();
+    let roster = bootstrap::lead(&rendezvous, k, leader_addr, &job_line, PATIENCE).expect("lead");
+    let built = spec.materialize();
+    let job = built.job();
+    let prep = prepare(&job, cfg.scheme);
+    let cap = leader_ring_capacity(k);
+    let net = TcpEndpoint::wire(k as u8, &data_listener, &roster, cap, PATIENCE).expect("wire");
+    let report = run_leader(&job, &cfg, spec.iters, &prep, &net);
+    for w in workers {
+        w.join().expect("worker endpoint");
+    }
+    report
+}
+
+fn assert_matches_reference(reference: &JobReport, got: &JobReport, tag: &str) {
+    assert_eq!(reference.final_state.len(), got.final_state.len(), "{tag}");
+    for (a, b) in reference.final_state.iter().zip(&got.final_state) {
+        assert_eq!(a.to_bits(), b.to_bits(), "{tag}: {a} vs {b}");
+    }
+    assert_eq!(reference.iterations.len(), got.iterations.len(), "{tag}");
+    for (e, c) in reference.iterations.iter().zip(&got.iterations) {
+        assert_eq!(e.validated_ivs, c.validated_ivs, "{tag}: validated_ivs");
+        assert_eq!(e.shuffle, c.shuffle, "{tag}: shuffle load");
+        assert_eq!(e.update, c.update, "{tag}: update load");
+        assert_eq!(e.times.map_s, c.times.map_s, "{tag}");
+        assert_eq!(e.times.encode_s, c.times.encode_s, "{tag}");
+        assert_eq!(e.times.shuffle_s, c.times.shuffle_s, "{tag}");
+        assert_eq!(e.times.decode_s, c.times.decode_s, "{tag}");
+        assert_eq!(e.times.reduce_s, c.times.reduce_s, "{tag}");
+        assert_eq!(e.times.update_s, c.times.update_s, "{tag}");
+    }
+}
+
+const SCHEMES: [Scheme; 4] = [
+    Scheme::Coded,
+    Scheme::Uncoded,
+    Scheme::CodedCombined,
+    Scheme::UncodedCombined,
+];
+
+/// One matrix slice per graph family so a failure names its row and the
+/// slices run in parallel under the default test harness.
+fn matrix_for_graph(graph: &str) {
+    for scheme in SCHEMES {
+        let spec = spec_for(graph, scheme);
+        let cfg = EngineConfig { scheme, validate: true, ..Default::default() };
+        let reference = run_driver(&spec, &cfg, Driver::Engine);
+        if scheme.is_coded() {
+            assert!(
+                reference.iterations.iter().all(|m| m.validated_ivs > 0),
+                "{graph}/{scheme}: validation must actually run"
+            );
+        }
+        for driver in DRIVERS {
+            let got = run_driver(&spec, &cfg, driver);
+            assert_matches_reference(&reference, &got, &format!("{graph}/{scheme}/{driver:?}"));
+        }
+    }
+}
+
+#[test]
+fn driver_matrix_er() {
+    matrix_for_graph("er");
+}
+
+#[test]
+fn driver_matrix_powerlaw() {
+    matrix_for_graph("pl");
+}
+
+#[test]
+fn driver_matrix_sbm() {
+    matrix_for_graph("sbm");
+}

@@ -8,8 +8,8 @@ use coded_graph::graph::csr::Csr;
 use coded_graph::graph::{bipartite, er, powerlaw, sbm};
 use coded_graph::mapreduce::program::run_single_machine;
 use coded_graph::mapreduce::{PageRank, Sssp};
-use coded_graph::shuffle::coded::encode_group;
-use coded_graph::shuffle::decoder::recover_group;
+use coded_graph::shuffle::coded::{encode_sender_into, eval_rows_except};
+use coded_graph::shuffle::decoder::decode_sender_into;
 use coded_graph::shuffle::plan::{build_group_plans, total_needed_ivs};
 use coded_graph::util::testkit::{property, Gen};
 use coded_graph::Vertex;
@@ -89,13 +89,37 @@ fn coded_shuffle_delivers_exactly_the_needed_ivs_bit_exact() {
         // coverage: every needed IV appears in exactly one plan row
         assert_eq!(plan.total_ivs(), total_needed_ivs(&g, &alloc));
         for group in plan.groups() {
-            let msgs = encode_group(group, &value, r);
+            // production sender kernels: each member encodes the rows it
+            // can evaluate (everyone's but its own)
+            let mut vals = vec![0u64; group.total_ivs()];
+            let msgs: Vec<Vec<u64>> = (0..group.members())
+                .map(|s_idx| {
+                    eval_rows_except(group, s_idx, &value, &mut vals);
+                    let mut cols = vec![0u64; group.sender_cols_needed(s_idx)];
+                    encode_sender_into(group, s_idx, &vals, r, &mut cols);
+                    cols
+                })
+                .collect();
             for (idx, &k) in group.servers.iter().enumerate() {
-                let got = recover_group(group, k, &msgs, &value, r);
-                assert_eq!(got.len(), group.row_len(idx));
-                for (riv, &(i, j)) in got.iter().zip(group.row(idx)) {
-                    assert_eq!((riv.reducer, riv.mapper), (i, j));
-                    assert_eq!(riv.bits, value(i, j), "IV ({i},{j})");
+                let my_row = group.row(idx);
+                eval_rows_except(group, idx, &value, &mut vals);
+                let mut out = vec![0u64; my_row.len()];
+                for s_idx in 0..group.members() {
+                    if s_idx == idx {
+                        continue;
+                    }
+                    decode_sender_into(
+                        group,
+                        idx,
+                        s_idx,
+                        &msgs[s_idx][..my_row.len()],
+                        &vals,
+                        r,
+                        &mut out,
+                    );
+                }
+                for (c, &(i, j)) in my_row.iter().enumerate() {
+                    assert_eq!(out[c], value(i, j), "IV ({i},{j})");
                     // the receiver must actually need it
                     assert_eq!(alloc.reducer_of(i), k);
                     assert!(!alloc.maps(k, j));

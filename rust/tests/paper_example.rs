@@ -14,8 +14,8 @@ use coded_graph::coordinator::{measure_loads, run_rust, EngineConfig, Job, Schem
 use coded_graph::graph::csr::Csr;
 use coded_graph::mapreduce::program::run_single_machine;
 use coded_graph::mapreduce::PageRank;
-use coded_graph::shuffle::coded::{encode_group, segment_index};
-use coded_graph::shuffle::decoder::recover_group;
+use coded_graph::shuffle::coded::{encode_sender_into, eval_rows_except, segment_index};
+use coded_graph::shuffle::decoder::decode_sender_into;
 use coded_graph::shuffle::plan::build_group_plans;
 use coded_graph::shuffle::segments::{seg_bytes, seg_of};
 use coded_graph::Vertex;
@@ -59,6 +59,8 @@ fn needed_iv_sets_match_fig3c() {
 
 #[test]
 fn coded_messages_match_paper_xors() {
+    // the production sender kernels — the ones every driver now runs
+    // through the unified WorkerCore — reproduce the paper's X_1..X_3
     let (g, alloc) = fig3();
     let plan = build_group_plans(&g, &alloc);
     let p = plan.group(0);
@@ -66,7 +68,17 @@ fn coded_messages_match_paper_xors() {
     let sb = seg_bytes(r); // 4 bytes
     // traceable IV "values": pack (i, j)
     let value = |i: Vertex, j: Vertex| ((i as u64) << 32) | (j as u64 + 1) << 8 | 0xAB;
-    let msgs = encode_group(p, &value, r);
+    // each sender evaluates every row but its own (exactly what a real
+    // worker can do) and encodes its coded columns
+    let mut vals = vec![0u64; p.total_ivs()];
+    let msgs: Vec<Vec<u64>> = (0..3)
+        .map(|s_idx| {
+            eval_rows_except(p, s_idx, &value, &mut vals);
+            let mut cols = vec![0u64; p.sender_cols_needed(s_idx)];
+            encode_sender_into(p, s_idx, &vals, r, &mut cols);
+            cols
+        })
+        .collect();
 
     // X_1 (server 0 = paper's server 1): columns are
     //   v_{5,1}^{(1)} ^ v_{4,3}^{(1)}  and  v_{3,4}^{(1)} ^ v_{6,2}^{(1)}
@@ -76,27 +88,36 @@ fn coded_messages_match_paper_xors() {
         ^ seg_of(value(4, 0), segment_index(0, 2), sb);
     let x1c1 = seg_of(value(2, 3), segment_index(0, 1), sb)
         ^ seg_of(value(5, 1), segment_index(0, 2), sb);
-    assert_eq!(msgs[0].columns, vec![x1c0, x1c1]);
+    assert_eq!(msgs[0], vec![x1c0, x1c1]);
 
     // X_2 (server 1): v_{5,1}^{(2)} ^ v_{1,5}^{(1)} and v_{6,2}^{(2)} ^ v_{2,6}^{(1)}
     let x2c0 = seg_of(value(0, 4), segment_index(1, 0), sb)
         ^ seg_of(value(4, 0), segment_index(1, 2), sb);
     let x2c1 = seg_of(value(1, 5), segment_index(1, 0), sb)
         ^ seg_of(value(5, 1), segment_index(1, 2), sb);
-    assert_eq!(msgs[1].columns, vec![x2c0, x2c1]);
+    assert_eq!(msgs[1], vec![x2c0, x2c1]);
 
     // X_3 (server 2): v_{4,3}^{(2)} ^ v_{1,5}^{(2)} and v_{3,4}^{(2)} ^ v_{2,6}^{(2)}
     let x3c0 = seg_of(value(0, 4), segment_index(2, 0), sb)
         ^ seg_of(value(3, 2), segment_index(2, 1), sb);
     let x3c1 = seg_of(value(1, 5), segment_index(2, 0), sb)
         ^ seg_of(value(2, 3), segment_index(2, 1), sb);
-    assert_eq!(msgs[2].columns, vec![x3c0, x3c1]);
+    assert_eq!(msgs[2], vec![x3c0, x3c1]);
 
-    // every server recovers its paper-specified IVs
-    for (idx, &k) in p.servers.iter().enumerate() {
-        let got = recover_group(p, k, &msgs, &value, r);
-        for (riv, &(i, j)) in got.iter().zip(p.row(idx)) {
-            assert_eq!(riv.bits, value(i, j), "server {k} IV ({i},{j})");
+    // every server recovers its paper-specified IVs through the
+    // production per-sender decoder
+    for m_idx in 0..3 {
+        let my_row = p.row(m_idx);
+        eval_rows_except(p, m_idx, &value, &mut vals);
+        let mut out = vec![0u64; my_row.len()];
+        for s_idx in 0..3 {
+            if s_idx == m_idx {
+                continue;
+            }
+            decode_sender_into(p, m_idx, s_idx, &msgs[s_idx][..my_row.len()], &vals, r, &mut out);
+        }
+        for (c, &(i, j)) in my_row.iter().enumerate() {
+            assert_eq!(out[c], value(i, j), "server {m_idx} IV ({i},{j})");
         }
     }
 }

@@ -10,13 +10,30 @@ use std::path::Path;
 
 use coded_graph::allocation::Allocation;
 use coded_graph::coordinator::{
-    prepare, run_iteration, Backend, EngineConfig, Job, Scheme, XlaKind,
+    prepare, run_iteration_scratch, Backend, EngineConfig, EngineScratch, Job, PreparedJob,
+    Scheme, XlaKind,
 };
 use coded_graph::graph::{er, powerlaw};
 use coded_graph::mapreduce::{PageRank, Sssp, VertexProgram};
 use coded_graph::runtime::{BlockExecutor, PjrtRuntime};
 use coded_graph::util::rng::DetRng;
 use coded_graph::Vertex;
+
+/// One iteration into fresh buffers (the deleted `run_iteration`
+/// convenience, local to these tests — production loops hold an
+/// [`EngineScratch`] and call the scratch variant directly).
+fn run_iter(
+    job: &Job<'_>,
+    prep: &PreparedJob,
+    st: &[f64],
+    cfg: &EngineConfig,
+    backend: &mut Backend<'_, '_>,
+) -> Vec<f64> {
+    let mut scratch = EngineScratch::new();
+    let mut next = vec![0.0f64; job.graph.n()];
+    run_iteration_scratch(job, prep, st, cfg, backend, &mut scratch, &mut next);
+    next
+}
 
 fn runtime() -> Option<PjrtRuntime> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -39,10 +56,10 @@ fn pjrt_pagerank_iteration_matches_rust_backend() {
     let prep = prepare(&job, Scheme::Coded);
     let st: Vec<f64> = (0..n as Vertex).map(|v| prog.init(v, &g)).collect();
 
-    let (rust_next, _) = run_iteration(&job, &prep, &st, &cfg, &mut Backend::Rust);
+    let rust_next = run_iter(&job, &prep, &st, &cfg, &mut Backend::Rust);
     let mut exec = BlockExecutor::new(&rt).unwrap();
     let mut backend = Backend::Pjrt { exec: &mut exec, kind: XlaKind::PageRank };
-    let (xla_next, _) = run_iteration(&job, &prep, &st, &cfg, &mut backend);
+    let xla_next = run_iter(&job, &prep, &st, &cfg, &mut backend);
     let mut max_err = 0.0f64;
     for (a, b) in rust_next.iter().zip(&xla_next) {
         assert!(b.is_finite());
@@ -72,11 +89,11 @@ fn pjrt_handles_isolated_vertices() {
     let st: Vec<f64> = (0..g.n() as Vertex).map(|v| prog.init(v, &g)).collect();
     let mut exec = BlockExecutor::new(&rt).unwrap();
     let mut backend = Backend::Pjrt { exec: &mut exec, kind: XlaKind::PageRank };
-    let (next, _) = run_iteration(&job, &prep, &st, &cfg, &mut backend);
+    let next = run_iter(&job, &prep, &st, &cfg, &mut backend);
     for (v, &x) in next.iter().enumerate() {
         assert!(x.is_finite(), "vertex {v} became non-finite");
     }
-    let (rust_next, _) = run_iteration(&job, &prep, &st, &cfg, &mut Backend::Rust);
+    let rust_next = run_iter(&job, &prep, &st, &cfg, &mut Backend::Rust);
     for (a, b) in rust_next.iter().zip(&next) {
         assert!((a - b).abs() < 1e-8);
     }
@@ -95,12 +112,12 @@ fn pjrt_sssp_iteration_matches_rust_backend() {
     // run a few rust sweeps first so distances are partially propagated
     let mut st: Vec<f64> = (0..n as Vertex).map(|v| prog.init(v, &g)).collect();
     for _ in 0..3 {
-        st = run_iteration(&job, &prep, &st, &cfg, &mut Backend::Rust).0;
+        st = run_iter(&job, &prep, &st, &cfg, &mut Backend::Rust);
     }
-    let (rust_next, _) = run_iteration(&job, &prep, &st, &cfg, &mut Backend::Rust);
+    let rust_next = run_iter(&job, &prep, &st, &cfg, &mut Backend::Rust);
     let mut exec = BlockExecutor::new(&rt).unwrap();
     let mut backend = Backend::Pjrt { exec: &mut exec, kind: XlaKind::Sssp(prog.weights) };
-    let (xla_next, _) = run_iteration(&job, &prep, &st, &cfg, &mut backend);
+    let xla_next = run_iter(&job, &prep, &st, &cfg, &mut backend);
     for (v, (a, b)) in rust_next.iter().zip(&xla_next).enumerate() {
         if *a >= 1e29 {
             assert!(*b >= 1e29, "vertex {v}: rust INF but xla {b}");

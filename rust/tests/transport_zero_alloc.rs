@@ -1,13 +1,13 @@
 //! Steady-state allocation audit of the transport **send path** — the
 //! ISSUE-2 acceptance criterion for `InProc` cluster iterations.
 //!
-//! The path under audit is byte-for-byte what a cluster worker executes
+//! The path under audit is byte-for-byte what a worker core executes
 //! per coded multicast / uncoded batch each iteration:
 //! `eval_rows_except` → `encode_sender_into` → `frame::encode_*` into a
 //! reused send buffer → the transport's **batched** surface
 //! (`send_multicast_buffered` + one `flush` per pass — the path the
-//! workers now drive; on `InProc` it delivers eagerly over the same
-//! pooled rings) → `recv` (buffer swap) → `Frame::parse` (borrowed
+//! `TransportFabric` drives; on `InProc` it delivers eagerly over the
+//! same pooled rings) → `recv` (buffer swap) → `Frame::parse` (borrowed
 //! view) → column reads. A counting global allocator wraps `System`;
 //! after warm-up
 //! passes grow every buffer (the ring rotates a small set of pooled
@@ -18,10 +18,11 @@
 //! no concurrent test thread can perturb the process-global counters.
 //!
 //! The remaining worker-side iteration state (`garena`, `unc_arena`,
-//! `bits`, `accs`, `next_bits`) is preallocated in `Worker::new` and
-//! only ever indexed — see the hand-audit in `coordinator::cluster`'s
-//! module docs. The leader keeps two per-iteration `Vec`s for write-back
-//! routing, which are off the workers' send path by design.
+//! `bits`, `accs`, `next_bits`) is preallocated in `WorkerCore::new` and
+//! only ever indexed — see the audit in `coordinator::exec`'s module
+//! docs and the both-fabrics core audit in `tests/zero_alloc.rs`. The
+//! leader keeps two per-iteration `Vec`s for write-back routing, which
+//! are off the workers' send path by design.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};

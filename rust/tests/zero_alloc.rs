@@ -1,25 +1,35 @@
-//! Steady-state allocation audit: after the first iteration warms the
-//! [`EngineScratch`] capacities, `run_iteration_scratch` on the rust
-//! backend must perform **zero heap allocation** — the §Perf contract of
-//! the flat-arena engine (ISSUE 1 acceptance criterion).
+//! Steady-state allocation audit of the **one worker core** driven by
+//! **both fabrics** (ISSUE 5 acceptance criterion, extending ISSUE 1's):
+//!
+//! * [`DirectFabric`]: after the first iteration warms the
+//!   [`EngineScratch`] capacities (cores + send logs),
+//!   `run_iteration_scratch` on the rust backend must perform **zero
+//!   heap allocation**;
+//! * [`TransportFabric`]: the same cores, hand-driven over a real
+//!   `InProcNet` transport (staged sends, `SendDone`, ring receive,
+//!   decode + fold), must also leave the allocator untouched at steady
+//!   state.
 //!
 //! A counting global allocator wraps `System`; the single test in this
 //! binary (one test ⇒ no concurrent test threads mutating the counters)
-//! runs warm-up iterations, snapshots the counters, runs more iterations
-//! on the serial path, and asserts the counters did not move. The
-//! parallel path is exercised elsewhere (`engine_parallel.rs`) — rayon's
+//! runs warm-up passes, snapshots the counters, runs more passes on the
+//! serial path, and asserts the counters did not move. The parallel
+//! path is exercised elsewhere (`engine_parallel.rs`) — rayon's
 //! work-stealing runtime may allocate internally, which is outside the
-//! engine's own data-path contract audited here.
+//! core's own data-path contract audited here.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use coded_graph::allocation::Allocation;
+use coded_graph::coordinator::cluster::{leader_ring_capacity, worker_ring_capacity};
 use coded_graph::coordinator::{
-    prepare, run_iteration_scratch, Backend, EngineConfig, EngineScratch, Job, Scheme,
+    prepare, prepare_worker, run_iteration_scratch, Backend, EngineConfig, EngineScratch, Job,
+    Scheme, TransportFabric, WorkerCore,
 };
 use coded_graph::graph::er::er;
 use coded_graph::mapreduce::{PageRank, Sssp, VertexProgram};
+use coded_graph::transport::{InProcNet, Transport};
 use coded_graph::util::rng::DetRng;
 use coded_graph::Vertex;
 
@@ -100,6 +110,63 @@ fn assert_steady_state_allocation_free(scheme: Scheme, prog: &dyn VertexProgram,
     assert!(state.iter().all(|x| x.is_finite()));
 }
 
+/// The TransportFabric half of the audit: K cores hand-driven over a
+/// real `InProcNet` (no cluster threads — phases interleave on this
+/// thread, which the eager in-process delivery makes possible). The
+/// "leader" endpoint only collects the SendDone frames the fabrics emit.
+fn assert_transport_core_allocation_free(scheme: Scheme, prog: &dyn VertexProgram, tag: &str) {
+    let n = 400;
+    let g = er(n, 0.08, &mut DetRng::seed(78));
+    let k = 4usize;
+    let alloc = Allocation::er_scheme(n, k, 2);
+    let job = Job { graph: &g, alloc: &alloc, program: prog };
+    let prep = prepare(&job, scheme);
+    let mut caps: Vec<usize> = (0..k).map(|kk| worker_ring_capacity(&prep, kk)).collect();
+    caps.push(leader_ring_capacity(k));
+    let net = InProcNet::new(&caps);
+    let mut cores: Vec<WorkerCore> = (0..k)
+        .map(|kk| WorkerCore::new(&job, prepare_worker(&job, scheme, kk as u8)))
+        .collect();
+    let mut fabs: Vec<TransportFabric<'_>> =
+        (0..k).map(|kk| TransportFabric::new(&net, kk as u8, k as u8)).collect();
+    // the full state works for every core (a core only reads entitled
+    // entries; the cluster's NaN poison is a separate test concern)
+    let state: Vec<f64> = (0..n as Vertex).map(|v| prog.init(v, &g)).collect();
+    let mut lbuf: Vec<u8> = Vec::new();
+    let mut checksum = 0u64;
+    let mut before = None;
+
+    // warm-up passes let the ring's pooled buffers rotate until every
+    // buffer has seen its largest frame; the last two passes are measured
+    for pass in 0..7 {
+        if pass == 5 {
+            before = Some(counters());
+        }
+        for (core, fab) in cores.iter_mut().zip(&mut fabs) {
+            core.stage_sends(&job, &state, fab);
+        }
+        for (core, fab) in cores.iter_mut().zip(&mut fabs) {
+            core.ingest_all(fab);
+            checksum = checksum.wrapping_add(core.decode_and_fold(&job, &state, None) as u64);
+            checksum = checksum.wrapping_add(core.next_bits()[0]);
+        }
+        // drain the K SendDone frames at the leader endpoint
+        for _ in 0..k {
+            assert!(net.recv(k as u8, &mut lbuf), "missing SendDone");
+        }
+    }
+
+    let after = counters();
+    let before = before.unwrap();
+    assert_eq!(
+        (after.0 - before.0, after.1 - before.1, after.2 - before.2),
+        (0, 0, 0),
+        "{tag}: steady-state core-over-transport pass touched the allocator \
+         (allocs/reallocs/deallocs deltas)"
+    );
+    assert!(checksum != 0, "keep the data path observable");
+}
+
 #[test]
 fn steady_state_iterations_are_allocation_free() {
     // one test in this binary by design: the counters are process-global
@@ -114,4 +181,11 @@ fn steady_state_iterations_are_allocation_free() {
     }
     // SSSP exercises the map_depends_on_dst (no qbits fast path) branch
     assert_steady_state_allocation_free(Scheme::Coded, &ss, "sssp/coded");
+
+    // the same core, now over a real transport (TransportFabric): the
+    // ISSUE-5 "both fabrics" half of the contract
+    for (scheme, tag) in [(Scheme::Coded, "coded"), (Scheme::Uncoded, "uncoded")] {
+        assert_transport_core_allocation_free(scheme, &pr, &format!("transport/pagerank/{tag}"));
+    }
+    assert_transport_core_allocation_free(Scheme::Coded, &ss, "transport/sssp/coded");
 }
