@@ -25,14 +25,25 @@ bench:
 # emits the machine-readable perf trajectory CI parses and archives.
 # (cargo bench runs the harness with CWD at the package root, so the
 # JSON path is anchored to the invocation directory explicitly)
+# The trailing check asserts the degraded-mode `recovery` section made it
+# into the document and that its failure-free row reports zero inflation.
 bench-smoke:
 	$(CARGO) bench --bench shuffle_micro -- --smoke --json $(CURDIR)/BENCH_shuffle_micro.json
+	$(PYTHON) -c "import json; \
+	recs = [r for r in json.load(open('$(CURDIR)/BENCH_shuffle_micro.json'))['records'] if r['bench'] == 'recovery']; \
+	assert {int(r['failures']) for r in recs} == {0, 1, 2}, recs; \
+	assert all(r['recovered_groups'] > 0 for r in recs if r['failures'] > 0), recs; \
+	clean = [r for r in recs if r['failures'] == 0]; \
+	assert clean and clean[0]['load_inflation'] == 0.0, recs; \
+	print(f'recovery section: {len(recs)} records ok')"
 
 # End-to-end cluster runs over real localhost sockets (seconds):
 #  1) a small ER PageRank job through the threaded TCP mesh;
 #  2) the same job as REAL separate OS processes (leader spawns workers,
 #     bootstrap rendezvous distributes the roster + job spec) with
-#     --check asserting final states bit-identical to the engine.
+#     --check asserting final states bit-identical to the engine;
+#  3) a process-separated run that loses worker 2 at iteration 1 and must
+#     recover onto the surviving replicas, still bit-identical (--check).
 cluster-smoke:
 	$(CARGO) run --release -- cluster --graph er --n 600 --k 4 --r 2 \
 	  --program pagerank --scheme coded --iters 2 --transport tcp
@@ -42,6 +53,9 @@ cluster-smoke:
 	$(CARGO) run --release -- cluster --graph er --n 400 --k 2 --r 2 \
 	  --program pagerank --scheme uncoded --iters 2 --transport tcp \
 	  --processes --check
+	$(CARGO) run --release -- cluster --graph er --n 400 --k 3 --r 2 \
+	  --program pagerank --scheme coded --iters 3 --transport tcp \
+	  --processes --check --fail-worker 2@1
 
 # Build every example, then run the two that pin the public API surface
 # (quickstart's 60-second tour and the end-to-end e2e driver — the

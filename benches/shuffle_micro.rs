@@ -17,8 +17,11 @@
 //! then the `core_parity` section: per-iteration wall time of the
 //! unified `WorkerCore` + `DirectFabric` engine at the ISSUE-5 pin
 //! (K=10, r=3), the record to diff against pre-refactor `iteration`
-//! numbers for perf-neutrality; and finally the TCP batched wire path
-//! (per-frame writes vs one buffered flush per destination).
+//! numbers for perf-neutrality; then the TCP batched wire path
+//! (per-frame writes vs one buffered flush per destination); and
+//! finally the `recovery` section: degraded-mode cost at (K=10, r=3) —
+//! recovery latency, re-planned groups, and wire-byte inflation as the
+//! in-process cluster survives 0, 1, and 2 injected worker deaths.
 //!
 //! ```sh
 //! cargo bench --bench shuffle_micro                   # full configuration
@@ -32,8 +35,8 @@
 
 use coded_graph::allocation::Allocation;
 use coded_graph::coordinator::{
-    prepare, prepare_worker, run_iteration_scratch, Backend, EngineConfig, EngineScratch, Job,
-    Scheme,
+    prepare, prepare_worker, run_iteration_scratch, try_run_cluster_on, Backend, EngineConfig,
+    EngineScratch, FailWorker, Job, Scheme,
 };
 use coded_graph::graph::er::er;
 use coded_graph::mapreduce::{PageRank, VertexProgram};
@@ -42,7 +45,7 @@ use coded_graph::shuffle::decoder::decode_sender_into;
 use coded_graph::shuffle::plan::build_group_plans;
 use coded_graph::shuffle::segments::seg_bytes;
 use coded_graph::shuffle::uncoded::plan_uncoded;
-use coded_graph::transport::{frame, TcpNet, Transport};
+use coded_graph::transport::{frame, TcpNet, Transport, TransportKind};
 use coded_graph::util::benchkit::{Bench, BenchJson, Table};
 use coded_graph::util::json::Json;
 use coded_graph::util::rng::DetRng;
@@ -62,6 +65,7 @@ fn main() {
     iteration_throughput(smoke, &mut report);
     core_parity(smoke, &mut report);
     tcp_batching(smoke, &mut report);
+    recovery(smoke, &mut report);
     if let Some(path) = json_path {
         report.write(&path).expect("write bench json");
         println!("\nwrote {path}");
@@ -384,6 +388,73 @@ fn core_parity(smoke: bool, report: &mut BenchJson) {
             ("norm_load", num(load)),
         ],
     );
+}
+
+/// Degraded-mode recovery cost at the ISSUE-6 pin (K=10, r=3): run the
+/// in-process cluster with 0, 1, and 2 injected worker deaths (the full
+/// `r − 1` tolerance) and record what surviving them cost — leader
+/// re-plan latency, re-planned groups/transfers, straggler skips, and
+/// the wire-byte inflation over the no-failure model. The failure-free
+/// row doubles as the regression pin: its inflation must be exactly 0.
+fn recovery(smoke: bool, report: &mut BenchJson) {
+    let (n, p) = if smoke { (600usize, 0.06f64) } else { (2000, 0.05) };
+    let (k, r) = (10usize, 3usize);
+    let iters = 4usize;
+    let g = er(n, p, &mut DetRng::seed(4242));
+    let prog = PageRank::default();
+    let alloc = Allocation::er_scheme(n, k, r);
+    let job = Job { graph: &g, alloc: &alloc, program: &prog };
+
+    println!("# Degraded-mode recovery: ER(n={n}, p={p}), K={k}, r={r}, {iters} iters, m={}\n", g.m());
+    let mut t = Table::new(&[
+        "failures", "recovered", "recovery (ms)", "load inflation", "extra KiB", "wall (ms)",
+    ]);
+    for f in 0..=2usize {
+        let mut cfg = EngineConfig { scheme: Scheme::Coded, ..Default::default() };
+        if f >= 1 {
+            cfg.fail_workers[0] = Some(FailWorker { worker: 3, at_iter: 1 });
+        }
+        if f >= 2 {
+            cfg.fail_workers[1] = Some(FailWorker { worker: 7, at_iter: 2 });
+        }
+        let t0 = std::time::Instant::now();
+        let rep = try_run_cluster_on(&job, &cfg, iters, TransportKind::InProc)
+            .expect("within the r-1 tolerance");
+        let wall_s = t0.elapsed().as_secs_f64();
+        assert_eq!(rep.recovery.failures, f, "every injected death must be recovered");
+        let modeled: usize =
+            rep.iterations.iter().map(|m| m.shuffle.wire_bytes_with_headers()).sum();
+        let extra_bytes = rep.recovery.load_inflation * modeled as f64;
+
+        report.record(
+            "recovery",
+            &[
+                ("n", num(n as f64)),
+                ("p", num(p)),
+                ("k", num(k as f64)),
+                ("r", num(r as f64)),
+                ("iters", num(iters as f64)),
+                ("failures", num(f as f64)),
+                ("recovered_groups", num(rep.recovery.recovered_groups as f64)),
+                ("recovery_ms", num(rep.recovery.recovery_ms)),
+                ("load_inflation", num(rep.recovery.load_inflation)),
+                ("extra_bytes", num(extra_bytes)),
+                ("skipped_frames", num(rep.recovery.skipped_frames as f64)),
+                ("wall_s", num(wall_s)),
+            ],
+        );
+        t.row(&[
+            f.to_string(),
+            rep.recovery.recovered_groups.to_string(),
+            format!("{:.3}", rep.recovery.recovery_ms),
+            format!("{:.4}", rep.recovery.load_inflation),
+            format!("{:.1}", extra_bytes / 1024.0),
+            format!("{:.1}", wall_s * 1e3),
+        ]);
+    }
+    t.print();
+    println!("\nfailures are injected at iteration 1 (worker 3) and 2 (worker 7); the");
+    println!("final state stays bit-identical to the no-failure run (tests/fault_matrix.rs).\n");
 }
 
 /// The TCP batched wire path: the same frame stream sent with one

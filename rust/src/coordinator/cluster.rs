@@ -48,20 +48,74 @@
 //! fold in exactly the engine's sequence (the bit-identity contract).
 //! The leader never reads data-frame ids; they are worker↔worker only.
 //!
+//! ## Degraded mode: surviving worker loss
+//!
+//! The same `r`-fold replication that powers the coded multicasts is a
+//! fault-tolerance budget: every batch (and therefore every IV) is
+//! Mapped by `r` workers, so up to `r − 1` losses leave at least one
+//! live holder of everything. The protocol exploits that end to end:
+//!
+//! 1. **Detection** — the leader receives with
+//!    [`Transport::recv_deadline`]: a dead worker surfaces as a typed
+//!    [`RecvOutcome::PeerDown`], and (when `--phase-deadline-ms` is set)
+//!    a hung worker surfaces as a timeout — indistinguishable from dead
+//!    past the cutoff.
+//! 2. **Re-plan** — the leader admits the loss, bumps the recovery
+//!    *epoch*, and broadcasts [`FrameKind::Recover`] to the survivors:
+//!    the dead id, the new epoch, and (to the *adopter* — the lowest
+//!    surviving id) the dead worker's entitled state slice off the
+//!    leader's committed copy. `recovered_groups`, `recovery_ms` and
+//!    `load_inflation` land in [`RecoveryStats`].
+//! 3. **Adoption** — every survivor extends its [`WorkerCore`] via
+//!    `adopt`: degraded groups (any dead member) stop multicasting and
+//!    instead ship each needed row raw ([`FrameKind::RecoverRow`]) from
+//!    the lowest live replica; a dead *sender*'s uncoded transfers are
+//!    re-evaluated by each IV's lowest live replica
+//!    ([`FrameKind::RecoverPairs`]); a dead *receiver*'s frames reroute
+//!    to the adopter, which hosts a ghost core per dead worker and
+//!    answers its `Reduced` and write-back on its behalf.
+//! 4. **Restart** — the interrupted iteration replays under the new
+//!    epoch (state only mutates at the committed write-back, so an
+//!    attempt is idempotent); every data frame and barrier carries its
+//!    epoch, stale traffic is dropped, and frames from a peer that
+//!    adopted *earlier* than us are stashed and replayed after our own
+//!    adoption. The finished job is **bit-identical** to the no-failure
+//!    run: same IVs, same canonical fold order, different senders.
+//!
+//! Failures beyond `r − 1` — or losing the adopter, the sole holder of
+//! previously adopted state — abort the job with a typed
+//! [`ClusterError`] (surfaced by [`try_run_cluster_on`]) instead of a
+//! hang: the leader releases every survivor with an `Abort` frame first.
+//!
+//! ## Straggler cutoff
+//!
+//! With `--phase-deadline-ms`, a worker whose shuffle receive stalls
+//! checks whether every still-missing coded frame is *pure padding*
+//! (the missing sender's segment of our row lies beyond the 64-bit
+//! value width, so the decoder never reads it). If so it proceeds to
+//! decode at the deadline and tallies the skipped frames (reported on
+//! its `Reduced`, summed into [`RecoveryStats::skipped_frames`]) —
+//! bit-identical by construction, since skipped frames are never read.
+//!
 //! ## Model ≡ reality
 //!
 //! The leader's bus/load accounting replays the prepared plan in
 //! canonical order — bit-identical to the engine's replay — while the
-//! transport tallies the bytes it actually moved. Every iteration
-//! asserts `actual frame bytes == ShuffleLoad::wire_bytes_with_headers()`
-//! and `actual frames == messages`: the wire model *is* the wire. The
-//! actuals come from two independent meters: each worker's `SendDone`
-//! carries its own per-iteration (frames, bytes) tally — the form that
-//! survives process separation, where no shared counter exists — and on
-//! shared in-process transports the leader additionally checks the
-//! transport's global [`data_stats`](Transport::data_stats) delta
+//! transport tallies the bytes it actually moved. Every *clean*
+//! iteration asserts `actual frame bytes ==
+//! ShuffleLoad::wire_bytes_with_headers()` and `actual frames ==
+//! messages`: the wire model *is* the wire. The actuals come from two
+//! independent meters: each worker's `SendDone` carries its own
+//! per-iteration (frames, bytes) tally — the form that survives process
+//! separation, where no shared counter exists — and on shared
+//! in-process transports the leader additionally checks the transport's
+//! global [`data_stats`](Transport::data_stats) delta
 //! (process-separated workers verify their local counters against the
-//! hand tally on exit instead).
+//! hand tally on exit instead). After a failure the modeled load no
+//! longer describes the wire — recovery rows are raw and attempts
+//! replay — so the asserts yield to the [`RecoveryStats::load_inflation`]
+//! meter: total actual bytes (stale attempts included) over the
+//! committed iterations' modeled bytes, minus one.
 //! Results are bit-identical to [`engine::run_rust`](super::engine::run_rust)
 //! because every worker folds local and received IVs in exactly the
 //! engine's canonical order (groups ascending, then transfers ascending).
@@ -77,7 +131,8 @@
 //! fabrics and in `tests/transport_zero_alloc.rs` for the raw transport
 //! send path). The leader intentionally keeps a couple of per-iteration
 //! `Vec`s (routing the write-back), which are off the workers' data
-//! path.
+//! path; degraded-mode recovery allocates freely (it is off the steady
+//! state by definition).
 //!
 //! ## Batched wire path
 //!
@@ -96,6 +151,12 @@
 //!          StateUpdate* → Continue*/Stop*
 //! worker:  data sends + SendDone → decode/reduce + Reduced →
 //!          apply update → next iteration
+//!
+//! on failure (PeerDown / deadline at the leader):
+//! leader:  Recover* (dead id, epoch+1, state slice to the adopter) →
+//!          restart the iteration's barriers under the new epoch
+//! worker:  adopt → replay the iteration; donors ship RecoverRow /
+//!          RecoverPairs; the adopter answers for its ghosts
 //! ```
 //!
 //! Barriers make the protocol race-free with one subtlety: a fast peer
@@ -104,21 +165,25 @@
 //! ordering). Data frames are therefore accepted and stashed in every
 //! receive loop — storing them is state-independent (the bits were
 //! already evaluated by the sender), and the expected-count barrier
-//! keeps iterations from mixing.
+//! keeps iterations from mixing. Epochs extend the same discipline
+//! across failures: per-connection FIFO guarantees `Recover` precedes
+//! any frame of the new epoch on the leader connection, and data
+//! connections carry the epoch on every frame.
 
-use std::time::Instant;
+use std::cell::Cell;
+use std::time::{Duration, Instant};
 
 use crate::graph::csr::Vertex;
 use crate::network::Bus;
 use crate::shuffle::load::{ShuffleLoad, HEADER_BYTES};
 use crate::shuffle::segments::seg_bytes;
 use crate::transport::frame::{self, Frame, FrameKind};
-use crate::transport::{InProcNet, TcpNet, Transport, TransportKind};
+use crate::transport::{InProcNet, RecvOutcome, TcpNet, Transport, TransportKind};
 
 use super::config::{EngineConfig, Scheme};
 use super::engine::{prepare, prepare_worker, Job, PreparedJob, PreparedWorker};
-use super::exec::{TransportFabric, WorkerCore};
-use super::metrics::{IterationMetrics, JobReport, PhaseTimes};
+use super::exec::{stage_dead_sender_transfers, TransportFabric, WorkerCore};
+use super::metrics::{IterationMetrics, JobReport, PhaseTimes, RecoveryStats};
 
 /// Run a job on the cluster over the in-process transport. Semantics
 /// identical to [`super::engine::run_rust`] (bit-identical final state
@@ -146,21 +211,72 @@ pub fn run_cluster_on(
     }
 }
 
-/// Inbound ring bound for worker `k`, computed from the leader's global
-/// tables: its expected data frames per iteration plus a handful of
-/// control frames (at most StateUpdate + Continue of the previous
-/// iteration can still be queued when next-iteration data arrives).
-/// Worker processes apply the same rule to their own shard
-/// ([`PreparedWorker::ring_capacity`]), so in-process and
-/// process-separated runs have identical backpressure.
-pub fn worker_ring_capacity(prep: &PreparedJob, k: usize) -> usize {
-    prep.expect_coded(k) + prep.expect_unc(k) + 8
+/// Typed, recoverable cluster failures: the degraded-mode protocol had
+/// to abandon the job. Raised as a panic payload by the leader (after
+/// releasing every survivor with an `Abort` frame) and caught back into
+/// a `Result` by [`try_run_cluster_on`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClusterError {
+    /// More worker losses than the redundancy-`r` plan's `r − 1` slack.
+    ToleranceExceeded { failures: usize, r: usize },
+    /// The adopter died — it held the only copy of previously adopted
+    /// state, so the loss cannot be re-planned again.
+    AdopterLost { worker: u8 },
 }
 
-/// Inbound ring bound for the leader endpoint: `2K` events per iteration
-/// (one SendDone + one Reduced per worker).
+impl std::fmt::Display for ClusterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClusterError::ToleranceExceeded { failures, r } => write!(
+                f,
+                "{failures} worker failures exceed the redundancy-{r} plan's tolerance of {}",
+                r.saturating_sub(1)
+            ),
+            ClusterError::AdopterLost { worker } => {
+                write!(f, "adopter worker {worker} died holding previously adopted state")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ClusterError {}
+
+/// [`run_cluster_on`] with typed failure handling: a job the recovery
+/// protocol had to abandon (see [`ClusterError`]) comes back as `Err`
+/// instead of a panic; any other panic propagates unchanged.
+pub fn try_run_cluster_on(
+    job: &Job<'_>,
+    cfg: &EngineConfig,
+    iters: usize,
+    kind: TransportKind,
+) -> Result<JobReport, ClusterError> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        run_cluster_on(job, cfg, iters, kind)
+    })) {
+        Ok(report) => Ok(report),
+        Err(payload) => match payload.downcast::<ClusterError>() {
+            Ok(err) => Err(*err),
+            Err(other) => std::panic::resume_unwind(other),
+        },
+    }
+}
+
+/// Inbound ring bound for worker `k`, computed from the leader's global
+/// tables: 3× its expected data frames per iteration plus a generous
+/// control allowance — degraded mode can leave a failed attempt's
+/// frames queued behind a restarted attempt's full load plus its
+/// recovery replacements. Worker processes apply the same rule to their
+/// own shard ([`PreparedWorker::ring_capacity`]), so in-process and
+/// process-separated runs have identical backpressure.
+pub fn worker_ring_capacity(prep: &PreparedJob, k: usize) -> usize {
+    3 * (prep.expect_coded(k) + prep.expect_unc(k)) + 64
+}
+
+/// Inbound ring bound for the leader endpoint: `2K` events per clean
+/// iteration (one SendDone + one Reduced per worker), doubled for the
+/// stale barrier frames a recovery restart can leave queued.
 pub fn leader_ring_capacity(k: usize) -> usize {
-    2 * k + 8
+    4 * k + 16
 }
 
 /// Ring bounds for a whole in-process mesh, leader last.
@@ -168,6 +284,18 @@ fn ring_capacities(prep: &PreparedJob, k: usize) -> Vec<usize> {
     let mut caps: Vec<usize> = (0..k).map(|kk| worker_ring_capacity(prep, kk)).collect();
     caps.push(leader_ring_capacity(k));
     caps
+}
+
+/// Per-worker runtime options for the cluster drivers.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkerOpts {
+    /// Fault injection: die abnormally (peers observe `PeerDown`) at the
+    /// top of this 0-based iteration; the process still exits cleanly.
+    pub fail_at: Option<usize>,
+    /// Straggler cutoff: after this long with no inbound frame during
+    /// the shuffle ingest, proceed to decode if every missing coded
+    /// frame is pure padding (see [`WorkerCore::try_cutoff`]).
+    pub phase_deadline: Option<Duration>,
 }
 
 /// Detach an endpoint from the transport when its scope ends. A clean
@@ -186,6 +314,26 @@ impl Drop for LeaveGuard<'_> {
     }
 }
 
+/// The leader's teardown guard: like [`LeaveGuard`], but a *typed*
+/// abort ([`ClusterError`]) leaves instead of poisoning — the leader has
+/// already released every survivor with an `Abort` frame, and poisoning
+/// the mesh would race those frames out of the survivors' queues.
+struct LeaderGuard<'a> {
+    net: &'a dyn Transport,
+    me: u8,
+    typed_abort: Cell<bool>,
+}
+
+impl Drop for LeaderGuard<'_> {
+    fn drop(&mut self) {
+        if self.typed_abort.get() || !std::thread::panicking() {
+            self.net.leave(self.me);
+        } else {
+            self.net.abort();
+        }
+    }
+}
+
 fn drive(
     job: &Job<'_>,
     cfg: &EngineConfig,
@@ -195,42 +343,64 @@ fn drive(
 ) -> JobReport {
     let k = job.alloc.k;
     let scheme = cfg.scheme;
+    let deadline = cfg.phase_deadline_ms.map(Duration::from_millis);
     std::thread::scope(|scope| {
         for kk in 0..k as u8 {
+            let fail_at = cfg
+                .fail_workers
+                .iter()
+                .flatten()
+                .find(|fw| fw.worker == kk)
+                .map(|fw| fw.at_iter);
+            let opts = WorkerOpts { fail_at, phase_deadline: deadline };
             scope.spawn(move || {
                 // each worker thread builds only its own shard — the same
                 // code path a worker *process* runs from the job spec
                 let shard = prepare_worker(job, scheme, kk);
-                run_worker(kk, job, shard, net)
+                run_worker_with(kk, job, shard, net, opts)
             });
         }
         run_leader(job, cfg, iters, prep, net)
     })
 }
 
-/// Run one worker endpoint to completion over `net` — the entry point a
-/// `coded-graph worker` *process* shares with the in-process driver's
-/// threads. Expects the cluster convention: workers `0..K`, leader `K`.
-/// Consumes the worker's own [`PreparedWorker`] shard (from
-/// [`prepare_worker`]) — never the global prepared job — which the
-/// [`WorkerCore`] takes ownership of. Installs the leave guard itself: a
-/// clean exit half-closes the endpoint, a panic aborts the transport so
-/// every peer unblocks.
+/// Run one worker endpoint to completion over `net` with default options
+/// — the entry point a `coded-graph worker` *process* shares with the
+/// in-process driver's threads. See [`run_worker_with`].
+pub fn run_worker(me: u8, job: &Job<'_>, prep: PreparedWorker, net: &dyn Transport) {
+    run_worker_with(me, job, prep, net, WorkerOpts::default());
+}
+
+/// Run one worker endpoint to completion over `net`. Expects the cluster
+/// convention: workers `0..K`, leader `K`. Consumes the worker's own
+/// [`PreparedWorker`] shard (from [`prepare_worker`]) — never the global
+/// prepared job — which the [`WorkerCore`] takes ownership of. Installs
+/// the leave guard itself: a clean exit half-closes the endpoint, a
+/// panic aborts the transport so every peer unblocks.
 ///
 /// The per-worker algorithm is entirely the core's
-/// (encode → stage → ingest → decode → fold); this loop adds only the
-/// control protocol: barriers, the `Reduced` reply, and the state
-/// write-back. Data frames racing ahead of our control stream are
-/// stashed into the core from every receive loop.
-pub fn run_worker(me: u8, job: &Job<'_>, prep: PreparedWorker, net: &dyn Transport) {
+/// (encode → stage → ingest → decode → fold); this loop adds the control
+/// protocol — barriers, the `Reduced` reply, the state write-back — and
+/// the degraded-mode machinery: epoch-filtered receives, `Recover`
+/// adoption (ghost cores on the adopter, donor shards elsewhere), the
+/// straggler cutoff, and fault injection ([`WorkerOpts`]).
+pub fn run_worker_with(
+    me: u8,
+    job: &Job<'_>,
+    prep: PreparedWorker,
+    net: &dyn Transport,
+    opts: WorkerOpts,
+) {
     let leader = job.alloc.k as u8;
     assert_eq!(prep.me, me, "sharded prep was built for worker {}", prep.me);
-    let _guard = LeaveGuard(net, me);
+    let scheme = prep.scheme;
+    let guard = LeaveGuard(net, me);
     let (g, alloc, prog) = (job.graph, job.alloc, job.program);
 
     // the canonical phase machine plus this worker's entitled state:
-    // only Mapped and Reduced vertices are valid, NaN poison elsewhere
-    // so an illegal read surfaces in tests instead of folding silently
+    // only Mapped and Reduced vertices (plus any adopted ghost's) are
+    // ever valid; everything else stays NaN poison so an illegal read
+    // surfaces in tests instead of folding silently
     let mut core = WorkerCore::new(job, prep);
     let mut state = vec![f64::NAN; g.n()];
     for j in alloc.mapped_vertices(me) {
@@ -243,77 +413,337 @@ pub fn run_worker(me: u8, job: &Job<'_>, prep: PreparedWorker, net: &dyn Transpo
     let mut fab = TransportFabric::new(net, me, leader);
     let mut rbuf: Vec<u8> = Vec::new();
     let mut reply: Vec<u8> = Vec::new();
-    let rows = &alloc.reduce_sets[me as usize];
-    'iterations: loop {
-        // ---- await the Shuffle barrier ----
-        loop {
-            let f = recv_frame(net, me, &mut rbuf);
-            match f.kind {
-                FrameKind::StartShuffle => break,
-                FrameKind::CodedData | FrameKind::UncodedData => core.ingest(&f),
-                // a zero-iteration job stops before any shuffle starts
-                FrameKind::Stop => {
-                    fab.check_local_stats();
-                    return;
-                }
-                other => unreachable!("unexpected {other:?} awaiting shuffle"),
-            }
-        }
-        // encode → stage (batched) → flush + SendDone → ingest until all
-        // expected data arrived → consume the leader's Reduce barrier
-        core.stage_sends(job, &state, &mut fab);
-        core.ingest_all(&mut fab);
-        fab.await_reduce_barrier(&mut rbuf);
-        let validated = core.decode_and_fold(job, &state, None);
-        frame::encode_reduced(&mut reply, me, validated, core.next_bits());
-        net.send_unicast(me, leader, &reply);
 
-        // ---- state write-back ----
-        for s in state.iter_mut() {
-            *s = f64::NAN;
+    // degraded-mode bookkeeping — empty/identity until a Recover arrives
+    let mut epoch = 0u8;
+    let mut dead: Vec<u8> = Vec::new();
+    let mut route: Vec<u8> = (0..alloc.k as u8).collect();
+    // dead workers this endpoint answers for (adopter only)
+    let mut ghosts: Vec<WorkerCore> = Vec::new();
+    // dead workers' shards held for donor duties (non-adopters)
+    let mut ghost_preps: Vec<PreparedWorker> = Vec::new();
+    // data frames from a future epoch (a peer that adopted before us)
+    let mut pending: Vec<Vec<u8>> = Vec::new();
+
+    let mut it = 0usize;
+    'iterations: loop {
+        if opts.fail_at == Some(it) {
+            // fault injection: abnormal endpoint death — peers observe a
+            // typed PeerDown — but a clean process exit (status 0), so
+            // harnesses reap the child without masking real crashes
+            std::mem::forget(guard);
+            net.fail_endpoint(me);
+            return;
         }
-        let mut got_update = false;
-        loop {
-            let f = recv_frame(net, me, &mut rbuf);
-            match f.kind {
-                FrameKind::StateUpdate => {
-                    for c in 0..f.count as usize {
-                        let (v, bits) = f.update_pair(c);
-                        state[v as usize] = f64::from_bits(bits);
+        'attempt: loop {
+            // ---- await the Shuffle barrier ----
+            loop {
+                match net.recv_deadline(me, &mut rbuf, None) {
+                    RecvOutcome::Frame => {}
+                    // the leader drives recovery; a peer's death marker is
+                    // informational here — keep waiting for its Recover
+                    RecvOutcome::PeerDown(_) => continue,
+                    RecvOutcome::TimedOut => unreachable!("receive without a deadline"),
+                    RecvOutcome::Closed => {
+                        panic!("worker {me}: peer disconnected awaiting shuffle")
                     }
-                    // own reduce rows stay valid (the next finalize needs
-                    // the previous state)
-                    for (slot, &i) in rows.iter().enumerate() {
-                        state[i as usize] = f64::from_bits(core.next_bits()[slot]);
+                }
+                let f = Frame::parse(&rbuf).expect("worker: bad frame");
+                match f.kind {
+                    FrameKind::StartShuffle if f.epoch == epoch => break,
+                    // a failed attempt's barrier, superseded by Recover
+                    FrameKind::StartShuffle | FrameKind::StartReduce => {
+                        assert!(f.epoch < epoch, "worker {me}: barrier from a future epoch")
                     }
-                    got_update = true;
+                    FrameKind::CodedData
+                    | FrameKind::UncodedData
+                    | FrameKind::RecoverRow
+                    | FrameKind::RecoverPairs => {
+                        route_data(&f, &rbuf, epoch, &mut core, &mut ghosts, &mut pending)
+                    }
+                    FrameKind::Recover => {
+                        adopt_recovery(
+                            &f, job, scheme, me, &mut state, &mut epoch, &mut dead, &mut route,
+                            &mut core, &mut ghosts, &mut ghost_preps, &mut pending, &mut fab,
+                        );
+                        continue 'attempt;
+                    }
+                    FrameKind::Abort => return,
+                    // a zero-iteration job stops before any shuffle starts
+                    FrameKind::Stop => {
+                        fab.check_local_stats();
+                        return;
+                    }
+                    other => unreachable!("unexpected {other:?} awaiting shuffle"),
                 }
-                FrameKind::Continue => {
-                    assert!(got_update, "Continue before StateUpdate");
-                    continue 'iterations;
+            }
+
+            // ---- stage: dead peers' donor duties first, then own sends
+            // (one flush and one SendDone tally cover the whole iteration)
+            let mut extra = (0u32, 0u64);
+            for gp in &ghost_preps {
+                let (fr, by) = stage_dead_sender_transfers(
+                    job, gp, &dead, me, &route, &state, epoch, &mut fab,
+                );
+                extra.0 += fr;
+                extra.1 += by;
+            }
+            for gc in &ghosts {
+                let (fr, by) = stage_dead_sender_transfers(
+                    job, gc.prep(), &dead, me, &route, &state, epoch, &mut fab,
+                );
+                extra.0 += fr;
+                extra.1 += by;
+            }
+            core.stage_sends_with_extra(job, &state, &mut fab, extra);
+            // frames the adopter addressed to itself (acting as its own
+            // ghost's donor) never cross the wire — drain them directly
+            while let Some(frm) = fab.pop_loopback() {
+                let f = Frame::parse(&frm).expect("worker: bad loopback frame");
+                route_data(&f, &frm, epoch, &mut core, &mut ghosts, &mut pending);
+            }
+
+            // ---- ingest until every hosted core is complete, then
+            // consume the leader's Reduce barrier ----
+            let mut saw_start_reduce = false;
+            loop {
+                let complete =
+                    core.data_complete() && ghosts.iter().all(WorkerCore::data_complete);
+                if complete && saw_start_reduce {
+                    break;
                 }
-                FrameKind::Stop => {
-                    fab.check_local_stats();
-                    return;
+                let deadline = if complete { None } else { opts.phase_deadline };
+                match net.recv_deadline(me, &mut rbuf, deadline) {
+                    RecvOutcome::Frame => {}
+                    RecvOutcome::PeerDown(_) => continue,
+                    RecvOutcome::TimedOut => {
+                        // straggler cutoff: proceed when the stragglers owe
+                        // only padding segments (ghost slots hold sole raw
+                        // copies and never cut off). A peer that is truly
+                        // dead is the leader's call — its Recover will
+                        // arrive on a later pass of this loop.
+                        let _ = core.try_cutoff();
+                        continue;
+                    }
+                    RecvOutcome::Closed => {
+                        panic!("worker {me}: peer disconnected mid-shuffle")
+                    }
                 }
-                FrameKind::CodedData | FrameKind::UncodedData => core.ingest(&f),
-                other => unreachable!("unexpected {other:?} at write-back"),
+                let f = Frame::parse(&rbuf).expect("worker: bad frame");
+                match f.kind {
+                    FrameKind::CodedData
+                    | FrameKind::UncodedData
+                    | FrameKind::RecoverRow
+                    | FrameKind::RecoverPairs => {
+                        route_data(&f, &rbuf, epoch, &mut core, &mut ghosts, &mut pending)
+                    }
+                    FrameKind::StartReduce => {
+                        if f.epoch == epoch {
+                            assert!(!saw_start_reduce, "duplicate StartReduce");
+                            saw_start_reduce = true;
+                        } else {
+                            assert!(f.epoch < epoch, "worker {me}: barrier from a future epoch");
+                        }
+                    }
+                    FrameKind::Recover => {
+                        adopt_recovery(
+                            &f, job, scheme, me, &mut state, &mut epoch, &mut dead, &mut route,
+                            &mut core, &mut ghosts, &mut ghost_preps, &mut pending, &mut fab,
+                        );
+                        continue 'attempt;
+                    }
+                    FrameKind::Abort => return,
+                    other => unreachable!("unexpected {other:?} during shuffle"),
+                }
+            }
+
+            // ---- decode + reduce: one Reduced per hosted logical worker
+            let skipped = core.skipped();
+            core.reset_ingest();
+            let validated = core.decode_and_fold(job, &state, None);
+            frame::encode_reduced(&mut reply, me, validated, skipped.min(255) as u8, core.next_bits());
+            frame::stamp_epoch(&mut reply, epoch);
+            net.send_unicast(me, leader, &reply);
+            for gc in &mut ghosts {
+                gc.reset_ingest();
+                gc.refresh_local_cache(job, &state);
+                let gv = gc.decode_and_fold(job, &state, None);
+                frame::encode_reduced(&mut reply, gc.me(), gv, 0, gc.next_bits());
+                frame::stamp_epoch(&mut reply, epoch);
+                net.send_unicast(me, leader, &reply);
+            }
+
+            // ---- state write-back ----
+            // state stays valid (not poisoned) until the updates land, so
+            // an attempt restarted by a Recover arriving *here* — the
+            // leader lost a worker while collecting Reduceds — can still
+            // replay the whole iteration from the previous commit
+            let need_updates = 1 + ghosts.len();
+            let mut got_updates = 0usize;
+            loop {
+                match net.recv_deadline(me, &mut rbuf, None) {
+                    RecvOutcome::Frame => {}
+                    RecvOutcome::PeerDown(_) => continue,
+                    RecvOutcome::TimedOut => unreachable!("receive without a deadline"),
+                    RecvOutcome::Closed => {
+                        panic!("worker {me}: peer disconnected at write-back")
+                    }
+                }
+                let f = Frame::parse(&rbuf).expect("worker: bad frame");
+                match f.kind {
+                    FrameKind::StateUpdate => {
+                        // only committed iterations write back, so the
+                        // epoch can never be stale here
+                        assert_eq!(f.epoch, epoch, "write-back from another epoch");
+                        for c in 0..f.count as usize {
+                            let (v, bits) = f.update_pair(c);
+                            state[v as usize] = f64::from_bits(bits);
+                        }
+                        // the target's own reduce rows stay fresh from its
+                        // decode (the next finalize needs the previous
+                        // state); `target` routes multi-hosted write-backs
+                        let t = f.target;
+                        let tcore: &WorkerCore = if t == me {
+                            &core
+                        } else {
+                            ghosts
+                                .iter()
+                                .find(|gc| gc.me() == t)
+                                .expect("state update for an unhosted worker")
+                        };
+                        for (slot, &i) in alloc.reduce_sets[t as usize].iter().enumerate() {
+                            state[i as usize] = f64::from_bits(tcore.next_bits()[slot]);
+                        }
+                        got_updates += 1;
+                    }
+                    FrameKind::Continue => {
+                        assert_eq!(f.epoch, epoch, "Continue from another epoch");
+                        assert_eq!(got_updates, need_updates, "Continue before the write-back");
+                        it += 1;
+                        continue 'iterations;
+                    }
+                    FrameKind::Stop => {
+                        fab.check_local_stats();
+                        return;
+                    }
+                    // the next iteration racing ahead of our control frames
+                    FrameKind::CodedData
+                    | FrameKind::UncodedData
+                    | FrameKind::RecoverRow
+                    | FrameKind::RecoverPairs => {
+                        route_data(&f, &rbuf, epoch, &mut core, &mut ghosts, &mut pending)
+                    }
+                    FrameKind::Recover => {
+                        adopt_recovery(
+                            &f, job, scheme, me, &mut state, &mut epoch, &mut dead, &mut route,
+                            &mut core, &mut ghosts, &mut ghost_preps, &mut pending, &mut fab,
+                        );
+                        continue 'attempt;
+                    }
+                    FrameKind::Abort => return,
+                    other => unreachable!("unexpected {other:?} at write-back"),
+                }
             }
         }
     }
 }
 
-/// Block for the next frame at `me`; a disconnected peer is a protocol
-/// failure (the panic unwinds the scope via the leave guards).
-fn recv_frame<'b>(net: &dyn Transport, me: u8, rbuf: &'b mut Vec<u8>) -> Frame<'b> {
-    assert!(net.recv(me, rbuf), "worker {me}: peer disconnected");
-    Frame::parse(rbuf).expect("worker: bad frame")
+/// Route one data frame by epoch: stale traffic (a failed attempt's) is
+/// dropped, future traffic (a peer that adopted before we did) is
+/// stashed for replay after our own adoption, and current traffic is
+/// offered to the worker's own core and then to any hosted ghost cores
+/// — disjoint shard id spaces (plus the `target` byte on recovery
+/// frames) make exactly one core accept.
+fn route_data(
+    f: &Frame<'_>,
+    raw: &[u8],
+    epoch: u8,
+    core: &mut WorkerCore,
+    ghosts: &mut [WorkerCore],
+    pending: &mut Vec<Vec<u8>>,
+) {
+    if f.epoch > epoch {
+        pending.push(raw.to_vec());
+        return;
+    }
+    if f.epoch < epoch {
+        return;
+    }
+    let accepted = core.try_ingest(f) || ghosts.iter_mut().any(|gc| gc.try_ingest(f));
+    assert!(
+        accepted,
+        "worker {}: {:?} frame (id {}) matches no hosted core",
+        core.me(),
+        f.kind,
+        f.index
+    );
+}
+
+/// Apply one leader `Recover` frame: admit the dead worker, advance the
+/// epoch, rebuild the route, extend every hosted core for degraded mode,
+/// take on the dead worker's shard (as live ghost cores if this endpoint
+/// is the adopter, as a donor-duty shard otherwise), and replay stashed
+/// future-epoch frames that now match. The caller restarts the iteration
+/// attempt afterwards.
+#[allow(clippy::too_many_arguments)]
+fn adopt_recovery(
+    f: &Frame<'_>,
+    job: &Job<'_>,
+    scheme: Scheme,
+    me: u8,
+    state: &mut [f64],
+    epoch: &mut u8,
+    dead: &mut Vec<u8>,
+    route: &mut [u8],
+    core: &mut WorkerCore,
+    ghosts: &mut Vec<WorkerCore>,
+    ghost_preps: &mut Vec<PreparedWorker>,
+    pending: &mut Vec<Vec<u8>>,
+    fab: &mut TransportFabric<'_>,
+) {
+    let alloc = job.alloc;
+    let w = f.index as u8;
+    assert!(f.epoch > *epoch, "worker {me}: Recover must advance the epoch");
+    *epoch = f.epoch;
+    dead.push(w);
+    dead.sort_unstable();
+    // the dead worker's entitled state rides the frame (non-empty only
+    // toward the adopter, which becomes its sole holder)
+    for c in 0..f.count as usize {
+        let (v, bits) = f.update_pair(c);
+        state[v as usize] = f64::from_bits(bits);
+    }
+    let adopter =
+        (0..alloc.k as u8).find(|x| !dead.contains(x)).expect("recovery: no survivors");
+    for (x, hop) in route.iter_mut().enumerate() {
+        *hop = if dead.contains(&(x as u8)) { adopter } else { x as u8 };
+    }
+    core.adopt(job, dead, *epoch);
+    core.reset_ingest();
+    fab.set_epoch(*epoch);
+    if me == adopter {
+        ghosts.push(WorkerCore::new(job, prepare_worker(job, scheme, w)));
+        ghosts.sort_by_key(|gc| gc.me());
+        for gc in ghosts.iter_mut() {
+            gc.adopt(job, dead, *epoch);
+            gc.reset_ingest();
+        }
+    } else {
+        ghost_preps.push(prepare_worker(job, scheme, w));
+    }
+    // frames from this epoch that overtook the Recover on peer connections
+    let stashed = std::mem::take(pending);
+    for frm in stashed {
+        let pf = Frame::parse(&frm).expect("worker: bad stashed frame");
+        route_data(&pf, &frm, *epoch, core, ghosts, pending);
+    }
 }
 
 /// Run the leader endpoint over `net` — shared by the in-process driver
 /// and the `--processes` leader. Same leave-guard semantics as
-/// [`run_worker`]; panics when a worker disconnects mid-run (the caller
-/// decides whether that unwinds a thread scope or an OS process).
+/// [`run_worker`]; panics when the job cannot continue (typed
+/// [`ClusterError`] for recovery overruns — the caller decides whether
+/// that unwinds a thread scope or an OS process).
 pub fn run_leader(
     job: &Job<'_>,
     cfg: &EngineConfig,
@@ -322,12 +752,115 @@ pub fn run_leader(
     net: &dyn Transport,
 ) -> JobReport {
     let leader = job.alloc.k as u8;
-    let _guard = LeaveGuard(net, leader);
-    leader_loop(job, cfg, iters, prep, net, leader)
+    let guard = LeaderGuard { net, me: leader, typed_abort: Cell::new(false) };
+    leader_loop(job, cfg, iters, prep, net, leader, &guard)
+}
+
+/// The leader's failure bookkeeping: the admitted dead set, the current
+/// recovery epoch, and the job-level [`RecoveryStats`].
+#[derive(Default)]
+struct FaultState {
+    dead: Vec<u8>,
+    epoch: u8,
+    stats: RecoveryStats,
+}
+
+impl FaultState {
+    fn adopter(&self, k: usize) -> u8 {
+        (0..k as u8).find(|x| !self.dead.contains(x)).expect("recovery: no survivors")
+    }
+
+    fn live(&self, k: usize) -> usize {
+        k - self.dead.len()
+    }
+}
+
+/// Declare worker `w` dead: tolerance checks, epoch bump, recovered-work
+/// tally, and the `Recover` broadcast — the dead worker's entitled state
+/// (its Mapped ∪ Reduce vertices off the leader's committed copy) to the
+/// adopter, slim frames to everyone else. A loss beyond the plan's
+/// tolerance (or of the adopter itself) releases the survivors with
+/// `Abort` frames and panics with the typed [`ClusterError`].
+fn recover(
+    w: u8,
+    st: &mut FaultState,
+    job: &Job<'_>,
+    prep: &PreparedJob,
+    net: &dyn Transport,
+    leader: u8,
+    final_state: &[f64],
+    sendbuf: &mut Vec<u8>,
+    guard: &LeaderGuard<'_>,
+) {
+    if st.dead.contains(&w) {
+        return; // duplicate death marker (already re-planned)
+    }
+    let t0 = Instant::now();
+    let alloc = job.alloc;
+    let k = alloc.k;
+    let was_adopter = !st.dead.is_empty() && st.adopter(k) == w;
+    // count the newly degraded work *before* admitting w: groups and
+    // transfers already touching an earlier dead worker were recovered
+    // by that failure's re-plan
+    let mut fresh = 0usize;
+    for gi in 0..prep.plan.num_groups() {
+        let servers = prep.plan.group(gi).servers;
+        if servers.contains(&w) && !servers.iter().any(|s| st.dead.contains(s)) {
+            fresh += 1;
+        }
+    }
+    for t in &prep.transfers {
+        if (t.sender == w || t.receiver == w)
+            && !st.dead.contains(&t.sender)
+            && !st.dead.contains(&t.receiver)
+        {
+            fresh += 1;
+        }
+    }
+    st.dead.push(w);
+    st.dead.sort_unstable();
+    st.stats.failures += 1;
+    if st.dead.len() > alloc.r.saturating_sub(1) || was_adopter {
+        let err = if was_adopter {
+            ClusterError::AdopterLost { worker: w }
+        } else {
+            ClusterError::ToleranceExceeded { failures: st.dead.len(), r: alloc.r }
+        };
+        for kk in 0..k as u8 {
+            if st.dead.contains(&kk) {
+                continue;
+            }
+            frame::encode_control(sendbuf, FrameKind::Abort, leader);
+            net.send_unicast(leader, kk, sendbuf);
+        }
+        guard.typed_abort.set(true);
+        std::panic::panic_any(err);
+    }
+    st.epoch += 1;
+    st.stats.recovered_groups += fresh;
+    // the dead worker's entitled state slice, ascending and deduped
+    let mut verts: Vec<Vertex> = alloc.mapped_vertices(w).collect();
+    verts.extend(alloc.reduce_sets[w as usize].iter().copied());
+    verts.sort_unstable();
+    verts.dedup();
+    let pairs: Vec<(u32, u64)> =
+        verts.iter().map(|&v| (v, final_state[v as usize].to_bits())).collect();
+    let adopter = st.adopter(k);
+    for kk in 0..k as u8 {
+        if st.dead.contains(&kk) {
+            continue;
+        }
+        let p: &[(u32, u64)] = if kk == adopter { &pairs } else { &[] };
+        frame::encode_recover(sendbuf, leader, w, st.epoch, p);
+        net.send_unicast(leader, kk, sendbuf);
+    }
+    st.stats.recovery_ms += t0.elapsed().as_secs_f64() * 1e3;
 }
 
 /// The leader: phase barriers, deterministic accounting replay, state
-/// write-back routing, and the model-vs-wire cross-check.
+/// write-back routing, the model-vs-wire cross-check, and degraded-mode
+/// recovery (see the module docs).
+#[allow(clippy::too_many_arguments)]
 fn leader_loop(
     job: &Job<'_>,
     cfg: &EngineConfig,
@@ -335,18 +868,29 @@ fn leader_loop(
     prep: &PreparedJob,
     net: &dyn Transport,
     leader: u8,
+    guard: &LeaderGuard<'_>,
 ) -> JobReport {
     let (g, alloc) = (job.graph, job.alloc);
     let k = alloc.k;
     let r = alloc.r;
     let sb = seg_bytes(r);
     let plan = &prep.plan;
+    let deadline = cfg.phase_deadline_ms.map(Duration::from_millis);
     let mut report = JobReport::default();
-    let mut final_state = vec![0.0f64; g.n()];
+    // the committed state, seeded with the init values: recovery ships a
+    // dead worker's entitled slice of this mid-job, so it must be
+    // authoritative from iteration zero, not only after a write-back
+    let mut final_state: Vec<f64> =
+        (0..g.n() as Vertex).map(|v| job.program.init(v, g)).collect();
     let mut sendbuf: Vec<u8> = Vec::new();
     let mut rbuf: Vec<u8> = Vec::new();
     let mut fresh_bits: Vec<Vec<u64>> = vec![Vec::new(); k];
     let mut stats_mark = net.data_stats();
+    let mut st = FaultState::default();
+    // actual wire bytes across every attempt (stale tallies included)
+    // vs the committed iterations' modeled bytes: the load_inflation meter
+    let mut actual_bytes = 0usize;
+    let mut modeled_bytes = 0usize;
 
     if iters == 0 {
         // degenerate job: release the workers before returning, or they
@@ -356,187 +900,281 @@ fn leader_loop(
             frame::encode_control(&mut sendbuf, FrameKind::Stop, leader);
             net.send_unicast(leader, kk, &sendbuf);
         }
-        report.final_state =
-            (0..g.n() as Vertex).map(|v| job.program.init(v, g)).collect();
+        report.final_state = final_state;
         return report;
     }
 
     for it in 0..iters {
-        let iter_start = Instant::now();
-        let mut times = PhaseTimes::default();
-        let mut shuffle_load = ShuffleLoad::default();
-        let mut bus = Bus::new(cfg.bus);
+        'attempt: loop {
+            let iter_start = Instant::now();
+            let mut times = PhaseTimes::default();
+            let mut shuffle_load = ShuffleLoad::default();
+            let mut bus = Bus::new(cfg.bus);
 
-        // modeled compute times — the same shared fold the engine uses,
-        // so the metrics are bit-identical by construction
-        let modeled = prep.modeled_compute_times(&cfg.time);
-        times.map_s = modeled.map_s;
+            // modeled compute times — the same shared fold the engine
+            // uses, so the metrics are bit-identical by construction (the
+            // model keeps describing the *no-failure* plan after a loss)
+            let modeled = prep.modeled_compute_times(&cfg.time);
+            times.map_s = modeled.map_s;
 
-        // ---- Shuffle ----
-        for kk in 0..k as u8 {
-            frame::encode_control(&mut sendbuf, FrameKind::StartShuffle, leader);
-            net.send_unicast(leader, kk, &sendbuf);
-        }
-        let mut send_done = 0usize;
-        let mut sent_frames = 0usize;
-        let mut sent_bytes = 0usize;
-        while send_done < k {
-            assert!(net.recv(leader, &mut rbuf), "leader: a worker disconnected");
-            let f = Frame::parse(&rbuf).expect("leader: bad frame");
-            match f.kind {
-                FrameKind::SendDone => {
-                    // each worker's own per-iteration tally (frames in the
-                    // index field, bytes as the payload word)
-                    sent_frames += f.index as usize;
-                    sent_bytes += f.word(0) as usize;
-                    send_done += 1;
+            // ---- Shuffle ----
+            for kk in 0..k as u8 {
+                if st.dead.contains(&kk) {
+                    continue;
                 }
-                other => unreachable!("leader: unexpected {other:?} before the send barrier"),
+                frame::encode_control(&mut sendbuf, FrameKind::StartShuffle, leader);
+                frame::stamp_epoch(&mut sendbuf, st.epoch);
+                net.send_unicast(leader, kk, &sendbuf);
             }
-        }
-        // deterministic accounting replay in canonical (group, sender) /
-        // transfer order — bit-identical to the engine's replay; the
-        // payloads themselves traveled worker-to-worker
-        match prep.scheme {
-            Scheme::Uncoded | Scheme::UncodedCombined => {
-                for t in &prep.transfers {
-                    bus.transmit(t.sender, 1, frame::uncoded_frame_len(t.ivs.len()));
-                    shuffle_load.add_uncoded(t.ivs.len());
+            let mut send_done = vec![false; k];
+            let mut done = 0usize;
+            let mut sent_frames = 0usize;
+            let mut sent_bytes = 0usize;
+            while done < st.live(k) {
+                match net.recv_deadline(leader, &mut rbuf, deadline) {
+                    RecvOutcome::Frame => {}
+                    RecvOutcome::PeerDown(w) => {
+                        recover(w, &mut st, job, prep, net, leader, &final_state, &mut sendbuf, guard);
+                        continue 'attempt;
+                    }
+                    RecvOutcome::TimedOut => {
+                        // a hung worker is indistinguishable from a dead
+                        // one past the cutoff: declare the lowest laggard
+                        let w = (0..k as u8)
+                            .find(|&x| !st.dead.contains(&x) && !send_done[x as usize])
+                            .expect("send timeout with every barrier met");
+                        recover(w, &mut st, job, prep, net, leader, &final_state, &mut sendbuf, guard);
+                        continue 'attempt;
+                    }
+                    RecvOutcome::Closed => panic!("leader: transport closed mid-run"),
                 }
-            }
-            Scheme::Coded | Scheme::CodedCombined => {
-                for gi in 0..plan.num_groups() {
-                    let group = plan.group(gi);
-                    let fanout = group.members() - 1;
-                    for (s_idx, &q) in plan.sender_cols(gi).iter().enumerate() {
-                        if q == 0 {
-                            continue;
+                let f = Frame::parse(&rbuf).expect("leader: bad frame");
+                match f.kind {
+                    FrameKind::SendDone => {
+                        // each worker's own per-iteration tally (frames in
+                        // the index field, bytes as the payload word);
+                        // stale tallies still count toward the actual
+                        // bytes the job moved — that is the inflation
+                        actual_bytes += f.word(0) as usize;
+                        if f.epoch == st.epoch {
+                            let kk = f.sender as usize;
+                            assert!(!send_done[kk], "duplicate SendDone");
+                            send_done[kk] = true;
+                            sent_frames += f.index as usize;
+                            sent_bytes += f.word(0) as usize;
+                            done += 1;
                         }
-                        bus.transmit(
-                            group.servers[s_idx],
-                            fanout,
-                            frame::coded_frame_len(q as usize, sb),
-                        );
-                        shuffle_load.add_coded(q as usize, r);
+                    }
+                    // a failed attempt's Reduced, superseded by the restart
+                    FrameKind::Reduced => {
+                        assert!(f.epoch < st.epoch, "Reduced before the send barrier")
+                    }
+                    other => unreachable!("leader: unexpected {other:?} before the send barrier"),
+                }
+            }
+            // deterministic accounting replay in canonical (group, sender)
+            // / transfer order — bit-identical to the engine's replay; the
+            // payloads themselves traveled worker-to-worker
+            match prep.scheme {
+                Scheme::Uncoded | Scheme::UncodedCombined => {
+                    for t in &prep.transfers {
+                        bus.transmit(t.sender, 1, frame::uncoded_frame_len(t.ivs.len()));
+                        shuffle_load.add_uncoded(t.ivs.len());
                     }
                 }
-                times.encode_s = modeled.encode_s;
-                times.decode_s = modeled.decode_s;
-            }
-        }
-        times.shuffle_s = bus.clock();
-
-        // model ≡ reality, across process boundaries: the workers' own
-        // send tallies (summed off the SendDone frames) must equal the
-        // frames and bytes the accounting charged (payload + 16-byte
-        // header each)
-        assert_eq!(
-            sent_frames,
-            shuffle_load.messages,
-            "workers' data-frame tally diverges from the modeled message count"
-        );
-        assert_eq!(
-            sent_bytes,
-            shuffle_load.wire_bytes_with_headers(),
-            "workers' serialized byte tally diverges from the modeled wire bytes"
-        );
-        // when every endpoint shares this transport handle, the
-        // transport's own counters must agree too; a process-separated
-        // leader only observes its own (control) sends, so the tally
-        // above is the cross-process form of the same invariant
-        if net.stats_are_global() {
-            let stats = net.data_stats();
-            assert_eq!(
-                stats.data_frames - stats_mark.data_frames,
-                shuffle_load.messages,
-                "transport frame count diverges from the modeled message count"
-            );
-            assert_eq!(
-                stats.data_bytes - stats_mark.data_bytes,
-                shuffle_load.wire_bytes_with_headers(),
-                "serialized frame bytes diverge from the modeled wire bytes"
-            );
-            stats_mark = stats;
-        }
-
-        // ---- Reduce ----
-        for kk in 0..k as u8 {
-            frame::encode_control(&mut sendbuf, FrameKind::StartReduce, leader);
-            net.send_unicast(leader, kk, &sendbuf);
-        }
-        let mut validated = 0usize;
-        let mut reduced = 0usize;
-        while reduced < k {
-            assert!(net.recv(leader, &mut rbuf), "leader: a worker disconnected");
-            let f = Frame::parse(&rbuf).expect("leader: bad frame");
-            match f.kind {
-                FrameKind::Reduced => {
-                    let kk = f.sender as usize;
-                    let rows = &alloc.reduce_sets[kk];
-                    assert_eq!(f.count as usize, rows.len(), "short Reduced payload");
-                    let buf = &mut fresh_bits[kk];
-                    buf.clear();
-                    buf.extend((0..rows.len()).map(|c| f.word(c)));
-                    validated += f.index as usize;
-                    reduced += 1;
-                }
-                other => unreachable!("leader: unexpected {other:?} before the reduce barrier"),
-            }
-        }
-        times.reduce_s = modeled.reduce_s;
-
-        // ---- State write-back ----
-        bus.reset();
-        let mut update_load = ShuffleLoad::default();
-        if cfg.account_state_update && r > 1 {
-            // replay the prepared deterministic multicast list
-            for &(owner, count, others) in prep.update_msgs() {
-                bus.transmit(owner, others as usize, count as usize * 8 + HEADER_BYTES);
-                update_load.add_uncoded(count as usize);
-            }
-            times.update_s = bus.clock();
-        }
-        // route fresh states to every replica holder (star-routed through
-        // the leader; the *accounting* above models the owner-to-replica
-        // multicasts the engine has always charged)
-        let mut outgoing: Vec<Vec<(u32, u64)>> = vec![Vec::new(); k];
-        for (kk, bits) in fresh_bits.iter().enumerate() {
-            for (&i, &b) in alloc.reduce_sets[kk].iter().zip(bits) {
-                final_state[i as usize] = f64::from_bits(b);
-                for &m in &alloc.batches[alloc.batch_of(i)].servers {
-                    outgoing[m as usize].push((i, b));
+                Scheme::Coded | Scheme::CodedCombined => {
+                    for gi in 0..plan.num_groups() {
+                        let group = plan.group(gi);
+                        let fanout = group.members() - 1;
+                        for (s_idx, &q) in plan.sender_cols(gi).iter().enumerate() {
+                            if q == 0 {
+                                continue;
+                            }
+                            bus.transmit(
+                                group.servers[s_idx],
+                                fanout,
+                                frame::coded_frame_len(q as usize, sb),
+                            );
+                            shuffle_load.add_coded(q as usize, r);
+                        }
+                    }
+                    times.encode_s = modeled.encode_s;
+                    times.decode_s = modeled.decode_s;
                 }
             }
-        }
-        let last = it + 1 == iters;
-        for (kk, pairs) in outgoing.iter().enumerate() {
-            frame::encode_state_update(&mut sendbuf, leader, pairs);
-            net.send_unicast(leader, kk as u8, &sendbuf);
-        }
-        for kk in 0..k as u8 {
-            frame::encode_control(
-                &mut sendbuf,
-                if last { FrameKind::Stop } else { FrameKind::Continue },
-                leader,
-            );
-            net.send_unicast(leader, kk, &sendbuf);
-        }
+            times.shuffle_s = bus.clock();
 
-        report.iterations.push(IterationMetrics {
-            times,
-            wall_s: iter_start.elapsed().as_secs_f64(),
-            shuffle: shuffle_load,
-            update: update_load,
-            // structural validation: every worker reports how many IVs it
-            // recovered and ownership-checked; for coded schemes the sum
-            // is the plan's full IV count, matching the engine's report
-            // (the cluster cannot re-evaluate received bits — the
-            // receiver lacks the source state by design; bit-level
-            // validation is the oracle tests' job)
-            validated_ivs: if cfg.validate && prep.scheme.is_coded() { validated } else { 0 },
-        });
+            // model ≡ reality, across process boundaries: the workers' own
+            // send tallies (summed off the SendDone frames) must equal the
+            // frames and bytes the accounting charged (payload + 16-byte
+            // header each). Once a failure re-planned any traffic the
+            // modeled wire no longer describes reality — the divergence is
+            // *measured* instead, as RecoveryStats::load_inflation.
+            if st.stats.failures == 0 {
+                assert_eq!(
+                    sent_frames,
+                    shuffle_load.messages,
+                    "workers' data-frame tally diverges from the modeled message count"
+                );
+                assert_eq!(
+                    sent_bytes,
+                    shuffle_load.wire_bytes_with_headers(),
+                    "workers' serialized byte tally diverges from the modeled wire bytes"
+                );
+                // when every endpoint shares this transport handle, the
+                // transport's own counters must agree too; a
+                // process-separated leader only observes its own (control)
+                // sends, so the tally above is the cross-process form
+                if net.stats_are_global() {
+                    let stats = net.data_stats();
+                    assert_eq!(
+                        stats.data_frames - stats_mark.data_frames,
+                        shuffle_load.messages,
+                        "transport frame count diverges from the modeled message count"
+                    );
+                    assert_eq!(
+                        stats.data_bytes - stats_mark.data_bytes,
+                        shuffle_load.wire_bytes_with_headers(),
+                        "serialized frame bytes diverge from the modeled wire bytes"
+                    );
+                    stats_mark = stats;
+                }
+            }
+
+            // ---- Reduce ----
+            for kk in 0..k as u8 {
+                if st.dead.contains(&kk) {
+                    continue;
+                }
+                frame::encode_control(&mut sendbuf, FrameKind::StartReduce, leader);
+                frame::stamp_epoch(&mut sendbuf, st.epoch);
+                net.send_unicast(leader, kk, &sendbuf);
+            }
+            // one *logical* Reduced per worker id — the adopter answers
+            // for its ghosts, so dead ids still report
+            let mut got_red = vec![false; k];
+            let mut reduced = 0usize;
+            let mut validated = 0usize;
+            while reduced < k {
+                match net.recv_deadline(leader, &mut rbuf, deadline) {
+                    RecvOutcome::Frame => {}
+                    RecvOutcome::PeerDown(w) => {
+                        recover(w, &mut st, job, prep, net, leader, &final_state, &mut sendbuf, guard);
+                        continue 'attempt;
+                    }
+                    RecvOutcome::TimedOut => {
+                        // a survivor still owes its own Reduced ⇒ it
+                        // hangs; every survivor reported but ghosts are
+                        // missing ⇒ the adopter hangs
+                        let w = (0..k as u8)
+                            .find(|&x| !st.dead.contains(&x) && !got_red[x as usize])
+                            .unwrap_or_else(|| st.adopter(k));
+                        recover(w, &mut st, job, prep, net, leader, &final_state, &mut sendbuf, guard);
+                        continue 'attempt;
+                    }
+                    RecvOutcome::Closed => panic!("leader: transport closed mid-run"),
+                }
+                let f = Frame::parse(&rbuf).expect("leader: bad frame");
+                match f.kind {
+                    FrameKind::Reduced => {
+                        if f.epoch != st.epoch {
+                            assert!(f.epoch < st.epoch, "Reduced from a future epoch");
+                            continue;
+                        }
+                        let kk = f.sender as usize;
+                        assert!(!got_red[kk], "duplicate Reduced for worker {kk}");
+                        let rows = &alloc.reduce_sets[kk];
+                        assert_eq!(f.count as usize, rows.len(), "short Reduced payload");
+                        let buf = &mut fresh_bits[kk];
+                        buf.clear();
+                        buf.extend((0..rows.len()).map(|c| f.word(c)));
+                        validated += f.index as usize;
+                        // the target byte doubles as the straggler-skip
+                        // tally on Reduced frames
+                        st.stats.skipped_frames += f.target as usize;
+                        got_red[kk] = true;
+                        reduced += 1;
+                    }
+                    FrameKind::SendDone => {
+                        assert!(f.epoch < st.epoch, "SendDone after the send barrier");
+                        actual_bytes += f.word(0) as usize;
+                    }
+                    other => unreachable!("leader: unexpected {other:?} before the reduce barrier"),
+                }
+            }
+            times.reduce_s = modeled.reduce_s;
+
+            // ---- State write-back ----
+            bus.reset();
+            let mut update_load = ShuffleLoad::default();
+            if cfg.account_state_update && r > 1 {
+                // replay the prepared deterministic multicast list
+                for &(owner, count, others) in prep.update_msgs() {
+                    bus.transmit(owner, others as usize, count as usize * 8 + HEADER_BYTES);
+                    update_load.add_uncoded(count as usize);
+                }
+                times.update_s = bus.clock();
+            }
+            // route fresh states to every replica holder (star-routed
+            // through the leader; the *accounting* above models the
+            // owner-to-replica multicasts the engine has always charged)
+            let mut outgoing: Vec<Vec<(u32, u64)>> = vec![Vec::new(); k];
+            for (kk, bits) in fresh_bits.iter().enumerate() {
+                for (&i, &b) in alloc.reduce_sets[kk].iter().zip(bits) {
+                    final_state[i as usize] = f64::from_bits(b);
+                    for &m in &alloc.batches[alloc.batch_of(i)].servers {
+                        outgoing[m as usize].push((i, b));
+                    }
+                }
+            }
+            let last = it + 1 == iters;
+            let adopter = st.adopter(k);
+            for (kk, pairs) in outgoing.iter().enumerate() {
+                let kk = kk as u8;
+                // a dead worker's write-back goes to its adopter, tagged
+                // with the logical target so the ghost applies it
+                frame::encode_state_update(&mut sendbuf, leader, kk, pairs);
+                frame::stamp_epoch(&mut sendbuf, st.epoch);
+                let to = if st.dead.contains(&kk) { adopter } else { kk };
+                net.send_unicast(leader, to, &sendbuf);
+            }
+            for kk in 0..k as u8 {
+                if st.dead.contains(&kk) {
+                    continue;
+                }
+                frame::encode_control(
+                    &mut sendbuf,
+                    if last { FrameKind::Stop } else { FrameKind::Continue },
+                    leader,
+                );
+                frame::stamp_epoch(&mut sendbuf, st.epoch);
+                net.send_unicast(leader, kk, &sendbuf);
+            }
+
+            modeled_bytes += shuffle_load.wire_bytes_with_headers();
+            report.iterations.push(IterationMetrics {
+                times,
+                wall_s: iter_start.elapsed().as_secs_f64(),
+                shuffle: shuffle_load,
+                update: update_load,
+                // structural validation: every worker reports how many IVs
+                // it recovered and ownership-checked; for coded schemes
+                // the sum is the plan's full IV count, matching the
+                // engine's report (the cluster cannot re-evaluate received
+                // bits — the receiver lacks the source state by design;
+                // bit-level validation is the oracle tests' job)
+                validated_ivs: if cfg.validate && prep.scheme.is_coded() { validated } else { 0 },
+            });
+            break 'attempt;
+        }
     }
     report.final_state = final_state;
+    st.stats.load_inflation = if modeled_bytes > 0 {
+        actual_bytes as f64 / modeled_bytes as f64 - 1.0
+    } else {
+        0.0
+    };
+    report.recovery = st.stats;
     report
 }
 
@@ -549,6 +1187,7 @@ mod tests {
     use crate::mapreduce::{PageRank, Sssp};
     use crate::util::rng::DetRng;
 
+    use super::super::config::FailWorker;
     use super::super::engine::run_rust;
 
     fn cfg(scheme: Scheme) -> EngineConfig {
@@ -557,8 +1196,10 @@ mod tests {
 
     // NOTE: cross-driver bit-identity (engine / inproc / tcp / process-style
     // x all four schemes x ER/PL/SBM, including loads, modeled times, and
-    // validated_ivs) lives in tests/driver_matrix.rs since PR 5 — the unit
-    // tests here cover the oracle and protocol edge cases only.
+    // validated_ivs) lives in tests/driver_matrix.rs since PR 5, and the
+    // failure matrix (kill w@t x scheme x graph vs the engine oracle) in
+    // tests/fault_matrix.rs since PR 6 — the unit tests here cover the
+    // oracle and protocol edge cases only.
 
     #[test]
     fn cluster_coded_pagerank_matches_oracle() {
@@ -571,6 +1212,7 @@ mod tests {
         for (a, b) in report.final_state.iter().zip(&want) {
             assert!((a - b).abs() < 1e-12, "{a} vs {b}");
         }
+        assert_eq!(report.recovery, RecoveryStats::default(), "clean run, clean stats");
     }
 
     #[test]
@@ -686,5 +1328,80 @@ mod tests {
             assert!((a - b).abs() < 1e-12);
         }
         assert_eq!(report.iterations[0].shuffle.messages, 0);
+    }
+
+    #[test]
+    fn mid_job_worker_loss_is_bit_identical_to_clean_run() {
+        // the tentpole acceptance at unit scale: kill worker 1 at the top
+        // of iteration 1 (of 3) and finish bit-identical to the engine
+        let g = er(120, 0.12, &mut DetRng::seed(71));
+        let alloc = Allocation::er_scheme(120, 4, 2);
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let mut c = cfg(Scheme::Coded);
+        c.fail_workers[0] = Some(FailWorker { worker: 1, at_iter: 1 });
+        let report = run_cluster(&job, &c, 3);
+        let want = run_rust(&job, &cfg(Scheme::Coded), 3);
+        for (a, b) in report.final_state.iter().zip(&want.final_state) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(report.recovery.failures, 1);
+        assert!(report.recovery.recovered_groups > 0, "worker 1 was in some group");
+        assert!(report.recovery.load_inflation > 0.0, "recovery moved extra bytes");
+        assert!(report.recovery.recovery_ms >= 0.0);
+    }
+
+    #[test]
+    fn mid_job_worker_loss_uncoded_scheme() {
+        // uncoded transfers re-plan too: dead-sender IVs re-evaluated by
+        // surviving replicas, dead-receiver batches rerouted to the adopter
+        let g = er(100, 0.15, &mut DetRng::seed(72));
+        let alloc = Allocation::er_scheme(100, 4, 2);
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let mut c = cfg(Scheme::Uncoded);
+        c.fail_workers[0] = Some(FailWorker { worker: 2, at_iter: 1 });
+        let report = run_cluster(&job, &c, 3);
+        let want = run_rust(&job, &cfg(Scheme::Uncoded), 3);
+        for (a, b) in report.final_state.iter().zip(&want.final_state) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(report.recovery.recovered_groups > 0);
+    }
+
+    #[test]
+    fn loss_beyond_tolerance_aborts_with_typed_error() {
+        // r = 2 tolerates one loss; the second must abort cleanly (typed
+        // error, workers released) instead of hanging
+        let g = er(100, 0.15, &mut DetRng::seed(74));
+        let alloc = Allocation::er_scheme(100, 5, 2);
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let mut c = cfg(Scheme::Coded);
+        c.fail_workers = [
+            Some(FailWorker { worker: 3, at_iter: 1 }),
+            Some(FailWorker { worker: 4, at_iter: 2 }),
+        ];
+        let err = try_run_cluster_on(&job, &c, 4, TransportKind::InProc)
+            .expect_err("two losses must exceed r-1 = 1");
+        assert_eq!(err, ClusterError::ToleranceExceeded { failures: 2, r: 2 });
+    }
+
+    #[test]
+    fn clean_run_with_phase_deadline_matches_oracle() {
+        // a deadline that never fires meaningfully must not perturb the
+        // protocol (cutoffs only ever skip pure padding)
+        let g = er(90, 0.12, &mut DetRng::seed(76));
+        let alloc = Allocation::er_scheme(90, 4, 2);
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let mut c = cfg(Scheme::Coded);
+        c.phase_deadline_ms = Some(2000);
+        let report = run_cluster(&job, &c, 2);
+        let want = run_single_machine(&prog, &g, 2);
+        for (a, b) in report.final_state.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        assert_eq!(report.recovery, RecoveryStats::default());
     }
 }

@@ -128,6 +128,38 @@ impl TimeModel {
     }
 }
 
+/// Fault injection: kill one worker at the top of one iteration
+/// (`--fail-worker ID@ITER`). The worker tears its endpoint down
+/// abnormally — peers observe a typed `PeerDown` — and exits cleanly, so
+/// the surviving cluster's recovery path is what gets exercised.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FailWorker {
+    /// Worker endpoint id (`0..K`).
+    pub worker: u8,
+    /// 0-based iteration at whose start the worker dies.
+    pub at_iter: usize,
+}
+
+impl std::str::FromStr for FailWorker {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let (w, t) = s
+            .split_once('@')
+            .ok_or_else(|| format!("bad fail spec {s:?} (expected ID@ITER, e.g. 2@1)"))?;
+        Ok(FailWorker {
+            worker: w.parse().map_err(|e| format!("bad worker id {w:?}: {e}"))?,
+            at_iter: t.parse().map_err(|e| format!("bad iteration {t:?}: {e}"))?,
+        })
+    }
+}
+
+impl std::fmt::Display for FailWorker {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}@{}", self.worker, self.at_iter)
+    }
+}
+
 /// Full engine configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct EngineConfig {
@@ -147,6 +179,15 @@ pub struct EngineConfig {
     /// wall-clock knob. Ignored (serial) when the `parallel` feature is
     /// compiled out.
     pub parallel: bool,
+    /// Fault injection for the cluster drivers: up to two workers that
+    /// die at the top of a given iteration. Ignored by the engine.
+    pub fail_workers: [Option<FailWorker>; 2],
+    /// Per-phase receive deadline in milliseconds for the cluster
+    /// drivers. The leader treats a worker producing nothing for this
+    /// long as dead; workers use it as the straggler cutoff (proceed to
+    /// decode once every missing coded frame is pure padding). `None`
+    /// waits forever.
+    pub phase_deadline_ms: Option<u64>,
 }
 
 impl Default for EngineConfig {
@@ -158,6 +199,8 @@ impl Default for EngineConfig {
             account_state_update: true,
             validate: false,
             parallel: true,
+            fail_workers: [None, None],
+            phase_deadline_ms: None,
         }
     }
 }
@@ -191,6 +234,16 @@ mod tests {
             assert_eq!(s.token().parse::<Scheme>().unwrap(), s);
         }
         assert!("laplace".parse::<Scheme>().is_err());
+    }
+
+    #[test]
+    fn fail_worker_parse_roundtrip() {
+        let f: FailWorker = "2@1".parse().unwrap();
+        assert_eq!(f, FailWorker { worker: 2, at_iter: 1 });
+        assert_eq!(f.to_string(), "2@1");
+        assert!("2".parse::<FailWorker>().is_err());
+        assert!("x@1".parse::<FailWorker>().is_err());
+        assert!("2@y".parse::<FailWorker>().is_err());
     }
 
     #[test]

@@ -282,9 +282,11 @@ impl PreparedWorker {
     /// Inbound ring bound for this worker's endpoint — the same rule
     /// [`super::cluster::worker_ring_capacity`] applies to the global
     /// tables, so in-process and process-separated runs keep identical
-    /// backpressure.
+    /// backpressure. Sized at 3× the per-iteration expectation: degraded
+    /// mode can leave a failed attempt's frames queued behind a restarted
+    /// attempt's full load plus its recovery replacements.
     pub fn ring_capacity(&self) -> usize {
-        self.expect_coded() + self.expect_unc() + 8
+        3 * (self.expect_coded() + self.expect_unc()) + 64
     }
 }
 

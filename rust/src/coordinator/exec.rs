@@ -51,14 +51,17 @@
 use crate::allocation::Allocation;
 use crate::graph::csr::{Csr, Vertex};
 use crate::mapreduce::program::VertexProgram;
-use crate::shuffle::coded::{encode_sender_into, eval_rows_except};
+use crate::shuffle::coded::{encode_sender_into, eval_rows_except, segment_index};
 use crate::shuffle::combined::combined_value;
 use crate::shuffle::decoder::decode_sender_into;
 #[cfg(feature = "xla")]
 use crate::shuffle::decoder::RecoveredIv;
+use crate::shuffle::plan::surviving_donor;
 use crate::shuffle::segments::seg_bytes;
 use crate::transport::frame::{self, Frame, FrameKind};
 use crate::transport::Transport;
+
+use std::collections::VecDeque;
 
 use super::engine::{Job, PreparedWorker};
 
@@ -156,6 +159,28 @@ pub struct WorkerCore {
     got_coded: usize,
     got_unc: usize,
     last_validated: u32,
+    // -- degraded-mode state (inert until the leader ships a `Recover`) --
+    /// Recovery generation, stamped into every staged frame so receivers
+    /// can drop pre-failure stragglers and stash post-restart early birds.
+    epoch: u8,
+    /// Dead workers, ascending (leader-authoritative).
+    dead: Vec<u8>,
+    /// Physical endpoint adopting each logical worker's frames —
+    /// identity for live workers, the adopter for dead ones.
+    route: Vec<u8>,
+    /// Per recv slot: does the group contain a dead member? A degraded
+    /// group carries no coded frames — one raw [`FrameKind::RecoverRow`]
+    /// from a surviving donor replaces them.
+    degraded: Vec<bool>,
+    /// Which senders delivered this iteration, per `(slot, member)`
+    /// (`slot * (r + 1) + s_idx`). Duplicates — a straggler's late
+    /// delivery racing its next iteration down the same FIFO connection
+    /// — overwrite the arena without re-counting.
+    seen: Vec<bool>,
+    /// Straggler frames skipped by the last deadline cutoff.
+    skipped: u32,
+    /// Raw-row scratch for degraded-group donor duties.
+    raw_row: Vec<u64>,
 }
 
 /// The IV value both schemes and the decoder share — a pure function of
@@ -242,6 +267,7 @@ impl WorkerCore {
         let src_only = !combined && !prog.map_depends_on_dst();
         let expect_coded = prep.expect_coded();
         let expect_unc = prep.expect_unc();
+        let n_slots = my_gids.len();
 
         WorkerCore {
             prep,
@@ -273,6 +299,13 @@ impl WorkerCore {
             got_coded: 0,
             got_unc: 0,
             last_validated: 0,
+            epoch: 0,
+            dead: Vec::new(),
+            route: (0..alloc.k as u8).collect(),
+            degraded: vec![false; n_slots],
+            seen: vec![false; n_slots * (r + 1)],
+            skipped: 0,
+            raw_row: Vec::new(),
         }
     }
 
@@ -297,6 +330,158 @@ impl WorkerCore {
         self.last_validated
     }
 
+    /// The worker's prepared shard — read access for drivers that derive
+    /// recovery duties from it.
+    #[inline]
+    pub fn prep(&self) -> &PreparedWorker {
+        &self.prep
+    }
+
+    /// Current recovery generation (zero until a failure).
+    #[inline]
+    pub fn epoch(&self) -> u8 {
+        self.epoch
+    }
+
+    /// Straggler frames skipped by this iteration's deadline cutoff
+    /// (reset by [`WorkerCore::reset_ingest`]).
+    #[inline]
+    pub fn skipped(&self) -> u32 {
+        self.skipped
+    }
+
+    /// Extend this core for degraded-mode execution after the leader
+    /// declared `dead` (ascending): flag the degraded recv slots,
+    /// recompute the per-iteration expectations (a degraded group
+    /// delivers one raw [`FrameKind::RecoverRow`] instead of `r` coded
+    /// frames; a dead-sender transfer delivers one
+    /// [`FrameKind::RecoverPairs`] per surviving donor), derive the
+    /// adoption route (dead workers' frames go to the lowest survivor),
+    /// and size the raw-row scratch. Callable repeatedly — everything
+    /// here is a pure function of `dead`. The caller restarts the
+    /// iteration afterwards ([`WorkerCore::reset_ingest`]): state only
+    /// mutates at write-back, so a partially ingested iteration is
+    /// safely re-entrant.
+    pub fn adopt(&mut self, job: &Job<'_>, dead: &[u8], epoch: u8) {
+        let alloc = job.alloc;
+        self.epoch = epoch;
+        self.dead.clear();
+        self.dead.extend_from_slice(dead);
+        let adopter =
+            (0..alloc.k as u8).find(|w| !dead.contains(w)).expect("recovery: no survivors");
+        for (w, hop) in self.route.iter_mut().enumerate() {
+            *hop = if dead.contains(&(w as u8)) { adopter } else { w as u8 };
+        }
+        let plan = &self.prep.plan;
+        let mut expect_coded = 0usize;
+        for (slot, &l) in self.prep.recv_groups().iter().enumerate() {
+            let group = plan.group(l as usize);
+            let degr = group.servers.iter().any(|s| dead.contains(s));
+            self.degraded[slot] = degr;
+            expect_coded += if degr { 1 } else { group.members() - 1 };
+        }
+        self.expect_coded = expect_coded;
+        // donor duties may ship any member's row of any degraded group
+        let mut raw_cap = 0usize;
+        for l in 0..plan.num_groups() {
+            let group = plan.group(l);
+            if group.servers.iter().any(|s| dead.contains(s)) {
+                for mi in 0..group.members() {
+                    raw_cap = raw_cap.max(group.row_len(mi));
+                }
+            }
+        }
+        if self.raw_row.capacity() < raw_cap {
+            self.raw_row.reserve(raw_cap - self.raw_row.capacity());
+        }
+        let mut expect_unc = 0usize;
+        for &ti in self.prep.unc_recv() {
+            let t = &self.prep.transfers[ti as usize];
+            if dead.contains(&t.sender) {
+                // one frame per distinct surviving donor: the lowest live
+                // replica of each IV's batch — the exact rule the donors
+                // themselves apply in `stage_dead_sender_transfers`
+                let mut donors = vec![false; alloc.k];
+                for &(_, j) in &t.ivs {
+                    let b = if self.combined { j as usize } else { alloc.batch_of(j) };
+                    let d = surviving_donor(&alloc.batches[b].servers, t.sender, dead)
+                        .expect("recovery: failures exceed the plan's redundancy");
+                    donors[d as usize] = true;
+                }
+                expect_unc += donors.iter().filter(|&&d| d).count();
+            } else {
+                expect_unc += 1;
+            }
+        }
+        self.expect_unc = expect_unc;
+    }
+
+    /// Refill the per-iteration `qbits` mapper cache without staging any
+    /// sends — the ghost-core path: an adopted worker contributes no new
+    /// transmissions (all its groups are degraded, so donors replace its
+    /// traffic), but its local Reduce fold still reads the cache.
+    pub fn refresh_local_cache(&mut self, job: &Job<'_>, state: &[f64]) {
+        if !self.src_only {
+            return;
+        }
+        let (g, alloc, prog) = (job.graph, job.alloc, job.program);
+        let me = self.prep.me;
+        for j in alloc.mapped_vertices(me) {
+            let s = state[j as usize];
+            debug_assert!(!s.is_nan(), "worker {me} mapped-state poison at {j}");
+            self.qbits[j as usize] =
+                if g.degree(j) == 0 { 0 } else { prog.map(j, j, s, g).to_bits() };
+        }
+    }
+
+    /// Deadline cutoff: may this iteration's decode proceed without the
+    /// frames still missing? True — after tallying them as skipped —
+    /// iff every absent coded contribution is pure padding: segment
+    /// `segment_index(s_idx, m_idx)` of the receiver's row lies beyond
+    /// the 64-bit value width, so
+    /// [`decode_sender_into`](crate::shuffle::decoder::decode_sender_into)
+    /// ignores that sender's frame entirely (the receiver effectively
+    /// holds the sender's share by construction). Uncoded unicasts and
+    /// degraded-group raw rows carry sole copies — never cut off.
+    pub fn try_cutoff(&mut self) -> bool {
+        if self.got_unc != self.expect_unc {
+            return false;
+        }
+        let mut extra = 0u32;
+        for (slot, &l) in self.prep.recv_groups().iter().enumerate() {
+            let group = self.prep.plan.group(l as usize);
+            let m_idx = self.my_row_idx[slot];
+            if self.degraded[slot] {
+                if !self.seen[slot * (self.r + 1) + m_idx] {
+                    return false; // the raw row is the sole copy
+                }
+                continue;
+            }
+            for s_idx in 0..group.members() {
+                if s_idx == m_idx || self.seen[slot * (self.r + 1) + s_idx] {
+                    continue;
+                }
+                if segment_index(s_idx, m_idx) * self.sb * 8 < 64 {
+                    return false; // a real segment is still missing
+                }
+                extra += 1;
+            }
+        }
+        self.skipped += extra;
+        self.got_coded = self.expect_coded;
+        true
+    }
+
+    /// Zero the per-iteration ingest tallies, the duplicate-detection
+    /// bitmap, and the straggler-skip count: the end of a completed
+    /// ingest, or an epoch restart discarding a partial iteration.
+    pub fn reset_ingest(&mut self) {
+        self.got_coded = 0;
+        self.got_unc = 0;
+        self.seen.fill(false);
+        self.skipped = 0;
+    }
+
     /// Phase 1–2 (encode → stage sends): evaluate this worker's IVs,
     /// encode its coded columns and uncoded batches into wire frames,
     /// stage everything through the fabric, and close the phase with
@@ -305,18 +490,25 @@ impl WorkerCore {
     /// until write-back, so the cache also serves the local Reduce fold
     /// in [`WorkerCore::decode_and_fold`]). Steady state: no allocation.
     pub fn stage_sends(&mut self, job: &Job<'_>, state: &[f64], fabric: &mut dyn Fabric) {
+        self.stage_sends_with_extra(job, state, fabric, (0, 0));
+    }
+
+    /// [`WorkerCore::stage_sends`] with a pre-staged tally folded into
+    /// the `complete_sends` accounting: the cluster worker stages its
+    /// dead-peer donor duties ([`stage_dead_sender_transfers`]) through
+    /// the same fabric *before* this call, so one flush and one
+    /// `SendDone` cover the whole iteration.
+    pub fn stage_sends_with_extra(
+        &mut self,
+        job: &Job<'_>,
+        state: &[f64],
+        fabric: &mut dyn Fabric,
+        extra: (u32, u64),
+    ) {
         let (g, alloc, prog) = (job.graph, job.alloc, job.program);
         let me = self.prep.me;
         let (combined, r, sb, src_only) = (self.combined, self.r, self.sb, self.src_only);
-        if src_only {
-            let qbits = &mut self.qbits;
-            for j in alloc.mapped_vertices(me) {
-                let s = state[j as usize];
-                debug_assert!(!s.is_nan(), "worker {me} mapped-state poison at {j}");
-                qbits[j as usize] =
-                    if g.degree(j) == 0 { 0 } else { prog.map(j, j, s, g).to_bits() };
-            }
-        }
+        self.refresh_local_cache(job, state);
         let qbits: &[u64] = &self.qbits;
         let value = move |i: Vertex, j: Vertex| {
             if src_only {
@@ -325,12 +517,16 @@ impl WorkerCore {
                 iv_value(g, alloc, prog, state, combined, i, j)
             }
         };
-        let mut iter_frames = 0u32;
-        let mut iter_bytes = 0u64;
+        let mut iter_frames = extra.0;
+        let mut iter_bytes = extra.1;
 
         let plan = &self.prep.plan;
+        let failed = !self.dead.is_empty();
         for &(l, si) in self.prep.send_plan() {
             let group = plan.group(l as usize);
+            if failed && group.servers.iter().any(|s| self.dead.contains(s)) {
+                continue; // degraded group: raw donor rows replace the code
+            }
             let q = plan.sender_cols(l as usize)[si as usize] as usize;
             let nv = group.total_ivs();
             // when we also decode this group, evaluate into the
@@ -352,6 +548,7 @@ impl WorkerCore {
             encode_sender_into(group, si, vals, r, &mut self.cols[..q]);
             let wire = plan.wire_id(l as usize);
             frame::encode_coded(&mut self.sendbuf, me, wire, &self.cols[..q], sb);
+            frame::stamp_epoch(&mut self.sendbuf, self.epoch);
             self.receivers.clear();
             for (mi, &m) in group.servers.iter().enumerate() {
                 if m != me && group.row_len(mi) > 0 {
@@ -372,9 +569,48 @@ impl WorkerCore {
                 self.prep.transfer_ids[ti as usize],
                 &self.ivbits,
             );
-            fabric.stage_unicast(t.receiver, &self.sendbuf);
-            iter_frames += 1;
-            iter_bytes += self.sendbuf.len() as u64;
+            frame::stamp_epoch(&mut self.sendbuf, self.epoch);
+            // a dead receiver's transfers reroute to its adopter (identity
+            // route while everyone is alive)
+            let to = self.route[t.receiver as usize];
+            fabric.stage_unicast(to, &self.sendbuf);
+            if to != me {
+                iter_frames += 1;
+                iter_bytes += self.sendbuf.len() as u64;
+            }
+        }
+        if failed {
+            // donor duties: each degraded group's needed rows ship raw,
+            // each from the lowest live member other than the row's owner
+            // — every survivor derives the same assignment from its own
+            // shard (a `GroupRef` carries all members' rows, and any
+            // other member Maps the row's whole batch)
+            for l in 0..plan.num_groups() {
+                let group = plan.group(l);
+                if !group.servers.iter().any(|s| self.dead.contains(s)) {
+                    continue;
+                }
+                let wire = plan.wire_id(l);
+                for (mi, &m) in group.servers.iter().enumerate() {
+                    if group.row_len(mi) == 0
+                        || surviving_donor(group.servers, m, &self.dead) != Some(me)
+                    {
+                        continue;
+                    }
+                    self.raw_row.clear();
+                    for &(i, j) in group.row(mi) {
+                        self.raw_row.push(value(i, j));
+                    }
+                    frame::encode_recover_row(&mut self.sendbuf, me, wire, m, &self.raw_row);
+                    frame::stamp_epoch(&mut self.sendbuf, self.epoch);
+                    let to = self.route[m as usize];
+                    fabric.stage_unicast(to, &self.sendbuf);
+                    if to != me {
+                        iter_frames += 1;
+                        iter_bytes += self.sendbuf.len() as u64;
+                    }
+                }
+            }
         }
         fabric.complete_sends(iter_frames, iter_bytes);
     }
@@ -385,14 +621,32 @@ impl WorkerCore {
     /// receive loop — frames that race ahead of a driver's control
     /// traffic are accepted here and counted toward the next barrier.
     pub fn ingest(&mut self, f: &Frame<'_>) {
+        assert!(
+            self.try_ingest(f),
+            "worker {}: {:?} frame (id {}) for a slot this worker does not receive",
+            self.prep.me,
+            f.kind,
+            f.index
+        );
+    }
+
+    /// [`WorkerCore::ingest`], but misrouted frames return `false`
+    /// instead of panicking — the cluster worker's receive loop offers
+    /// each frame to its own core and then to any adopted ghost cores
+    /// (id spaces are disjoint across shards, so exactly one core
+    /// accepts). Also routes the recovery replacements: a
+    /// [`FrameKind::RecoverRow`] lands in the degraded slot's arena
+    /// (sender-0 region, unused by coded traffic there), a
+    /// [`FrameKind::RecoverPairs`] scatters into the transfer's IV arena
+    /// by position.
+    pub fn try_ingest(&mut self, f: &Frame<'_>) -> bool {
         match f.kind {
             FrameKind::CodedData => {
                 // frame carries the group's canonical wire id (subset
                 // rank) — resolve it to our shard-local slot
-                let slot = self
-                    .my_gids
-                    .binary_search(&f.index)
-                    .expect("coded frame for a group this worker has no row in");
+                let Ok(slot) = self.my_gids.binary_search(&f.index) else {
+                    return false;
+                };
                 let l = self.prep.recv_groups()[slot] as usize;
                 let group = self.prep.plan.group(l);
                 let m_idx = self.my_row_idx[slot];
@@ -404,15 +658,46 @@ impl WorkerCore {
                 for (c, cell) in self.garena[base..base + my_len].iter_mut().enumerate() {
                     *cell = f.col(c, self.sb);
                 }
-                self.got_coded += 1;
+                // duplicates (a straggler's late frame racing its next
+                // iteration down the same FIFO connection) overwrite
+                // without re-counting — only padding contributions can
+                // be in that race, so the bits are immaterial either way
+                let seen = &mut self.seen[slot * (self.r + 1) + s_idx];
+                if !*seen {
+                    *seen = true;
+                    self.got_coded += 1;
+                }
+                true
+            }
+            FrameKind::RecoverRow => {
+                if f.target != self.prep.me {
+                    return false;
+                }
+                let Ok(slot) = self.my_gids.binary_search(&f.index) else {
+                    return false;
+                };
+                debug_assert!(self.degraded[slot], "raw row for a healthy group");
+                let l = self.prep.recv_groups()[slot] as usize;
+                let m_idx = self.my_row_idx[slot];
+                let my_len = self.prep.plan.group(l).row_len(m_idx);
+                debug_assert_eq!(f.count as usize, my_len, "raw row length mismatch");
+                let base = self.garena_off[slot];
+                for (c, cell) in self.garena[base..base + my_len].iter_mut().enumerate() {
+                    *cell = f.word(c);
+                }
+                let seen = &mut self.seen[slot * (self.r + 1) + m_idx];
+                if !*seen {
+                    *seen = true;
+                    self.got_coded += 1;
+                }
+                true
             }
             FrameKind::UncodedData => {
                 // frame carries the transfer's canonical wire id
                 // (sender·K + receiver) — resolve to our shard transfer
-                let pos = self
-                    .my_unc_ids
-                    .binary_search(&f.index)
-                    .expect("unicast for a transfer this worker does not receive");
+                let Ok(pos) = self.my_unc_ids.binary_search(&f.index) else {
+                    return false;
+                };
                 let count = f.count as usize;
                 debug_assert_eq!(
                     count,
@@ -423,6 +708,26 @@ impl WorkerCore {
                     *cell = f.word(c);
                 }
                 self.got_unc += 1;
+                true
+            }
+            FrameKind::RecoverPairs => {
+                if f.target != self.prep.me {
+                    return false;
+                }
+                let Ok(pos) = self.my_unc_ids.binary_search(&f.index) else {
+                    return false;
+                };
+                let base = self.unc_off[pos];
+                let end =
+                    base + self.prep.transfers[self.prep.unc_recv()[pos] as usize].ivs.len();
+                for p in 0..f.count as usize {
+                    let (at, bits) = f.update_pair(p);
+                    let cell = base + at as usize;
+                    assert!(cell < end, "recovery pair out of transfer range");
+                    self.unc_arena[cell] = bits;
+                }
+                self.got_unc += 1;
+                true
             }
             _ => unreachable!("ingest on a control frame"),
         }
@@ -449,8 +754,7 @@ impl WorkerCore {
             self.ingest(&f);
         }
         self.rbuf = rbuf;
-        self.got_coded = 0;
-        self.got_unc = 0;
+        self.reset_ingest();
     }
 
     /// Phases 4–6 (decode → fold → finalize): cancel and reassemble the
@@ -508,21 +812,27 @@ impl WorkerCore {
             let nv = group.total_ivs();
             let gvals = &self.gvals[self.gvals_off[slot_idx]..self.gvals_off[slot_idx] + nv];
             let bits = &mut self.bits[..my_len];
-            bits.fill(0);
             let base = self.garena_off[slot_idx];
-            for s_idx in 0..group.members() {
-                if s_idx == m_idx {
-                    continue;
+            if self.degraded[slot_idx] {
+                // degraded group: the donor shipped this row raw — no
+                // cancellation, the stored words *are* the IV bits
+                bits.copy_from_slice(&self.garena[base..base + my_len]);
+            } else {
+                bits.fill(0);
+                for s_idx in 0..group.members() {
+                    if s_idx == m_idx {
+                        continue;
+                    }
+                    decode_sender_into(
+                        group,
+                        m_idx,
+                        s_idx,
+                        &self.garena[base + s_idx * my_len..base + (s_idx + 1) * my_len],
+                        gvals,
+                        r,
+                        bits,
+                    );
                 }
-                decode_sender_into(
-                    group,
-                    m_idx,
-                    s_idx,
-                    &self.garena[base + s_idx * my_len..base + (s_idx + 1) * my_len],
-                    gvals,
-                    r,
-                    bits,
-                );
             }
             for (c, &(i, j)) in group.row(m_idx).iter().enumerate() {
                 // hard check before touching reduce_slot: the shard only
@@ -625,6 +935,63 @@ impl WorkerCore {
     }
 }
 
+/// Stage the [`FrameKind::RecoverPairs`] replacing a dead worker's
+/// uncoded sends: every IV of every transfer the dead worker would have
+/// sent is re-evaluated by the lowest surviving replica of its batch,
+/// and each donor ships its share as one frame per transfer, addressed
+/// to the logical receiver (`target` byte) and routed to that worker's
+/// adopter. Every survivor runs this over the same rebuilt shard
+/// (`ghost` = `prepare_worker` for the dead id) and stages only its own
+/// share, so the pieces are disjoint and complete. Returns the
+/// `(frames, bytes)` staged over the wire (self-addressed loopback
+/// frames are untallied) for folding into
+/// [`WorkerCore::stage_sends_with_extra`].
+pub fn stage_dead_sender_transfers(
+    job: &Job<'_>,
+    ghost: &PreparedWorker,
+    dead: &[u8],
+    me: u8,
+    route: &[u8],
+    state: &[f64],
+    epoch: u8,
+    fabric: &mut dyn Fabric,
+) -> (u32, u64) {
+    let (g, alloc, prog) = (job.graph, job.alloc, job.program);
+    let combined = ghost.scheme.is_combined();
+    let mut pairs: Vec<(u32, u64)> = Vec::new();
+    let mut buf = Vec::new();
+    let (mut frames, mut bytes) = (0u32, 0u64);
+    for &ti in ghost.unc_sends() {
+        let t = &ghost.transfers[ti as usize];
+        pairs.clear();
+        for (p, &(i, j)) in t.ivs.iter().enumerate() {
+            let b = if combined { j as usize } else { alloc.batch_of(j) };
+            if surviving_donor(&alloc.batches[b].servers, t.sender, dead) != Some(me) {
+                continue;
+            }
+            pairs.push((p as u32, iv_value(g, alloc, prog, state, combined, i, j)));
+        }
+        if pairs.is_empty() {
+            continue;
+        }
+        frame::encode_recover_pairs(
+            &mut buf,
+            me,
+            ghost.transfer_ids[ti as usize],
+            t.receiver,
+            &pairs,
+        );
+        frame::stamp_epoch(&mut buf, epoch);
+        let to = route[t.receiver as usize];
+        fabric.stage_unicast(to, &buf);
+        if to != me {
+            frames += 1;
+            bytes += buf.len() as u64;
+        }
+    }
+    (frames, bytes)
+}
+
 // ---------------------------------------------------------------------------
 // TransportFabric: the core over a real Transport endpoint
 // ---------------------------------------------------------------------------
@@ -645,6 +1012,13 @@ pub struct TransportFabric<'a> {
     saw_start_reduce: bool,
     sent_frames: usize,
     sent_bytes: usize,
+    epoch: u8,
+    /// Self-addressed staged frames (an adopter acting as its own
+    /// ghost's donor): held here instead of crossing the wire, drained
+    /// by the worker's receive loop. Untallied everywhere — the
+    /// transport counters never see them either, so the model-vs-wire
+    /// accounting stays consistent.
+    loopback: VecDeque<Vec<u8>>,
 }
 
 impl<'a> TransportFabric<'a> {
@@ -657,7 +1031,20 @@ impl<'a> TransportFabric<'a> {
             saw_start_reduce: false,
             sent_frames: 0,
             sent_bytes: 0,
+            epoch: 0,
+            loopback: VecDeque::new(),
         }
+    }
+
+    /// Stamp subsequent `SendDone` barriers with the current recovery
+    /// generation so the leader can drop pre-failure stragglers.
+    pub fn set_epoch(&mut self, epoch: u8) {
+        self.epoch = epoch;
+    }
+
+    /// Drain one self-addressed staged frame (see the `loopback` field).
+    pub fn pop_loopback(&mut self) -> Option<Vec<u8>> {
+        self.loopback.pop_front()
     }
 
     /// Consume the leader's `StartReduce` barrier: a no-op if
@@ -702,6 +1089,10 @@ impl Fabric for TransportFabric<'_> {
     }
 
     fn stage_unicast(&mut self, to: u8, frame: &[u8]) {
+        if to == self.me {
+            self.loopback.push_back(frame.to_vec());
+            return;
+        }
         self.net.send_unicast_buffered(self.me, to, frame);
     }
 
@@ -711,6 +1102,7 @@ impl Fabric for TransportFabric<'_> {
         self.sent_frames += frames as usize;
         self.sent_bytes += bytes as usize;
         frame::encode_send_done(&mut self.ctrl, self.me, frames, bytes);
+        frame::stamp_epoch(&mut self.ctrl, self.epoch);
         self.net.send_unicast(self.me, self.leader, &self.ctrl);
     }
 
@@ -833,7 +1225,8 @@ impl Fabric for DirectSender<'_> {
     }
 
     fn complete_sends(&mut self, frames: u32, bytes: u64) {
-        debug_assert_eq!(frames as usize, self.log.frames.len(), "stage/tally drift");
+        // `<=`: self-addressed recovery frames are staged but untallied
+        debug_assert!(frames as usize <= self.log.frames.len(), "stage/tally drift");
         self.log.frames_tally = frames;
         self.log.bytes_tally = bytes;
     }
@@ -1019,5 +1412,194 @@ mod tests {
                 assert!((a - b).abs() < 1e-14, "{scheme}: {a} vs {b}");
             }
         }
+    }
+
+    /// Drive one iteration of `k` cores over a [`DirectFabric`], with
+    /// the workers in `dead` killed before the iteration: survivors (and
+    /// the adopter's ghost cores) adopt, stage donor duties, and route
+    /// inbound frames by hand exactly like the cluster worker loop.
+    /// Returns the assembled next state as bits.
+    fn drive_one_degraded_iteration(
+        job: &Job<'_>,
+        scheme: Scheme,
+        k: usize,
+        dead: &[u8],
+    ) -> Vec<u64> {
+        let (g, alloc, prog) = (job.graph, job.alloc, job.program);
+        let n = g.n();
+        let epoch = u8::from(!dead.is_empty());
+        let survivors: Vec<u8> = (0..k as u8).filter(|w| !dead.contains(w)).collect();
+        let adopter = survivors[0];
+        let route: Vec<u8> =
+            (0..k as u8).map(|w| if dead.contains(&w) { adopter } else { w }).collect();
+        let ghost_preps: Vec<_> =
+            dead.iter().map(|&w| prepare_worker(job, scheme, w)).collect();
+        let mut ghosts: Vec<WorkerCore> = dead
+            .iter()
+            .map(|&w| {
+                let mut ghost = WorkerCore::new(job, prepare_worker(job, scheme, w));
+                ghost.adopt(job, dead, epoch);
+                ghost
+            })
+            .collect();
+        let mut cores: Vec<WorkerCore> = survivors
+            .iter()
+            .map(|&kk| {
+                let mut c = WorkerCore::new(job, prepare_worker(job, scheme, kk));
+                if !dead.is_empty() {
+                    c.adopt(job, dead, epoch);
+                }
+                c
+            })
+            .collect();
+        let state: Vec<f64> = (0..n as Vertex).map(|v| prog.init(v, g)).collect();
+        let mut fab = DirectFabric::default();
+        fab.begin_iteration(k);
+        for core in cores.iter_mut() {
+            let me = core.me();
+            let mut sender = DirectSender::new(&mut fab.logs_mut()[me as usize]);
+            let mut extra = (0u32, 0u64);
+            for ghost_prep in &ghost_preps {
+                let (f, b) = stage_dead_sender_transfers(
+                    job, ghost_prep, dead, me, &route, &state, epoch, &mut sender,
+                );
+                extra.0 += f;
+                extra.1 += b;
+            }
+            core.stage_sends_with_extra(job, &state, &mut sender, extra);
+        }
+        let mut next_bits = vec![0u64; n];
+        let mut rbuf = Vec::new();
+        for core in cores.iter_mut() {
+            let me = core.me();
+            let hosts_ghosts = me == adopter;
+            let mut rx = DirectReceiver::new(fab.logs(), me);
+            while !(core.data_complete()
+                && (!hosts_ghosts || ghosts.iter().all(WorkerCore::data_complete)))
+            {
+                assert!(rx.recv_data(&mut rbuf), "{scheme}: worker {me} starved");
+                let f = Frame::parse(&rbuf).unwrap();
+                let taken = core.try_ingest(&f)
+                    || (hosts_ghosts && ghosts.iter_mut().any(|ghost| ghost.try_ingest(&f)));
+                assert!(taken, "{scheme}: unroutable {:?} frame at worker {me}", f.kind);
+            }
+            core.reset_ingest();
+            core.decode_and_fold(job, &state, None);
+            for (slot, &i) in alloc.reduce_sets[me as usize].iter().enumerate() {
+                next_bits[i as usize] = core.next_bits()[slot];
+            }
+        }
+        for ghost in ghosts.iter_mut() {
+            ghost.reset_ingest();
+            ghost.refresh_local_cache(job, &state);
+            ghost.decode_and_fold(job, &state, None);
+            for (slot, &i) in alloc.reduce_sets[ghost.me() as usize].iter().enumerate() {
+                next_bits[i as usize] = ghost.next_bits()[slot];
+            }
+        }
+        next_bits
+    }
+
+    /// Kill a worker and re-drive the iteration degraded: coded groups
+    /// touching the dead worker collapse to raw donor rows, dead-sender
+    /// transfers are re-covered by surviving batch replicas, rerouted
+    /// frames feed the adopter's ghost core — and the assembled next
+    /// state is **bit-identical** to the no-failure run (same IVs,
+    /// different senders), on every scheme.
+    #[test]
+    fn degraded_iteration_is_bit_identical_to_clean_run() {
+        let n = 120;
+        let g = er(n, 0.12, &mut DetRng::seed(41));
+        let k = 4usize;
+        let alloc = Allocation::er_scheme(n, k, 2);
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        for scheme in
+            [Scheme::Coded, Scheme::Uncoded, Scheme::CodedCombined, Scheme::UncodedCombined]
+        {
+            let clean = drive_one_degraded_iteration(&job, scheme, k, &[]);
+            let degraded = drive_one_degraded_iteration(&job, scheme, k, &[1]);
+            assert_eq!(clean, degraded, "{scheme}: degraded run diverged");
+            // absolute anchor: the clean run tracks the single machine
+            let want = run_single_machine(&prog, &g, 1);
+            for (a, b) in clean.iter().zip(&want) {
+                let a = f64::from_bits(*a);
+                assert!((a - b).abs() < 1e-14, "{scheme}: {a} vs {b}");
+            }
+        }
+    }
+
+    /// Two simultaneous failures within `r − 1 = 2` tolerance: both
+    /// ghost shards stack on the adopter and the result still matches
+    /// the clean run bit for bit.
+    #[test]
+    fn degraded_iteration_survives_two_failures_within_tolerance() {
+        let n = 100;
+        let g = er(n, 0.15, &mut DetRng::seed(43));
+        let k = 5usize;
+        let alloc = Allocation::er_scheme(n, k, 3);
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        for scheme in [Scheme::Coded, Scheme::Uncoded] {
+            let clean = drive_one_degraded_iteration(&job, scheme, k, &[]);
+            let degraded = drive_one_degraded_iteration(&job, scheme, k, &[1, 3]);
+            assert_eq!(clean, degraded, "{scheme}: double-failure run diverged");
+        }
+    }
+
+    /// At `r = 5` the per-value segment count (`ceil(8 / seg_bytes)` =
+    /// 4 real segments of 2 bytes) is smaller than `r`, so the
+    /// highest-ranked sender of each group carries pure padding for the
+    /// lowest member: the cutoff may skip exactly that sender's frame
+    /// and no other, and the decode still reconstructs every bit.
+    #[test]
+    fn straggler_cutoff_skips_only_padding_segments() {
+        let n = 60;
+        let g = er(n, 0.2, &mut DetRng::seed(77));
+        let k = 6usize;
+        let alloc = Allocation::er_scheme(n, k, 5);
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let scheme = Scheme::Coded;
+        let mut cores: Vec<WorkerCore> = (0..k)
+            .map(|kk| WorkerCore::new(&job, prepare_worker(&job, scheme, kk as u8)))
+            .collect();
+        let state: Vec<f64> = (0..n as Vertex).map(|v| prog.init(v, &g)).collect();
+        let mut fab = DirectFabric::default();
+        fab.begin_iteration(k);
+        for (core, log) in cores.iter_mut().zip(fab.logs_mut()) {
+            core.stage_sends(&job, &state, &mut DirectSender::new(log));
+        }
+        // deliver to worker 0 everything except the frames from senders
+        // 4 and 5 (5 is pure padding for member 0, 4 is a real segment)
+        let core = &mut cores[0];
+        let mut rx = DirectReceiver::new(fab.logs(), 0);
+        let mut rbuf = Vec::new();
+        let mut held = Vec::new();
+        while rx.recv_data(&mut rbuf) {
+            let f = Frame::parse(&rbuf).unwrap();
+            if f.kind == FrameKind::CodedData && f.sender >= 4 {
+                held.push(rbuf.clone());
+                continue;
+            }
+            core.ingest(&f);
+        }
+        assert!(!core.data_complete());
+        assert!(!core.try_cutoff(), "a real segment is missing: no cutoff");
+        for buf in &held {
+            let f = Frame::parse(buf).unwrap();
+            if f.sender == 4 {
+                core.ingest(&f);
+            }
+        }
+        assert!(core.try_cutoff(), "only padding is missing now");
+        assert!(core.data_complete());
+        assert_eq!(core.skipped(), core.prep().recv_groups().len() as u32);
+        // the cutoff decode is still exact on every recovered bit
+        let oracle = |i: Vertex, j: Vertex| prog.map(i, j, state[j as usize], &g).to_bits();
+        core.reset_ingest();
+        let skipped_would_reset = core.skipped();
+        assert_eq!(skipped_would_reset, 0, "reset clears the skip tally");
+        core.decode_and_fold(&job, &state, Some(&oracle));
     }
 }

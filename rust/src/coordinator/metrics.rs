@@ -45,11 +45,34 @@ pub struct IterationMetrics {
     pub validated_ivs: usize,
 }
 
+/// What surviving worker loss cost the job — all zeros for a clean run.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RecoveryStats {
+    /// Workers declared dead over the whole job.
+    pub failures: usize,
+    /// Multicast groups plus uncoded transfers whose traffic was
+    /// re-planned onto surviving replicas.
+    pub recovered_groups: usize,
+    /// Wall-clock the leader spent computing and shipping recovery
+    /// plans (milliseconds, summed over failures).
+    pub recovery_ms: f64,
+    /// Actual shuffle wire bytes (including failed attempts and raw
+    /// donor rows) over the no-failure model's bytes, minus one.
+    /// Exactly `0.0` for a clean run.
+    pub load_inflation: f64,
+    /// Coded straggler frames skipped by worker deadline cutoffs (pure
+    /// padding segments — skipping them never changes any bit).
+    pub skipped_frames: usize,
+}
+
 /// A whole job (possibly multiple iterations).
 #[derive(Clone, Debug, Default)]
 pub struct JobReport {
     pub iterations: Vec<IterationMetrics>,
     pub final_state: Vec<f64>,
+    /// Degraded-mode accounting (cluster drivers only; the engine never
+    /// fails and leaves this at the default).
+    pub recovery: RecoveryStats,
 }
 
 impl JobReport {

@@ -19,7 +19,9 @@
 //!   [`transport`](crate::transport) layer (wire-format frames, in-proc
 //!   rings, a localhost TCP mesh, or one process-separated TCP endpoint
 //!   per OS process): one core per worker over a [`TransportFabric`],
-//!   results bit-identical to the engine.
+//!   results bit-identical to the engine. Includes the degraded-mode
+//!   recovery protocol (PR 6): survive up to `r − 1` worker losses by
+//!   re-planning onto surviving replicas, with straggler deadlines.
 //! * [`spec`] — serializable job specs: the single line the bootstrap
 //!   rendezvous ships so worker processes can deterministically rebuild
 //!   graph, allocation, program, and shuffle plan.
@@ -31,12 +33,15 @@ pub mod exec;
 pub mod metrics;
 pub mod spec;
 
-pub use cluster::{run_cluster, run_cluster_on, run_leader, run_worker};
-pub use config::{EngineConfig, Scheme, TimeModel};
+pub use cluster::{
+    run_cluster, run_cluster_on, run_leader, run_worker, run_worker_with, try_run_cluster_on,
+    ClusterError, WorkerOpts,
+};
+pub use config::{EngineConfig, FailWorker, Scheme, TimeModel};
 pub use exec::{DirectFabric, Fabric, TransportFabric, WorkerCore};
 pub use spec::{AllocKind, BuiltJob, GraphKind, GraphSpec, JobSpec, ProgramSpec};
 pub use engine::{
     measure_loads, measure_loads_prepared, prepare, prepare_worker, run, run_iteration_scratch,
     run_rust, Backend, EngineScratch, Job, PreparedJob, PreparedWorker, XlaKind,
 };
-pub use metrics::{IterationMetrics, JobReport, PhaseTimes};
+pub use metrics::{IterationMetrics, JobReport, PhaseTimes, RecoveryStats};

@@ -12,8 +12,10 @@
 //!                       [--transport inproc|tcp] [--processes] [--no-spawn]
 //!                       [--check] [--program ...] [--scheme ...] [--iters I]
 //!                       [--bind IP[:PORT]] [--advertise IP[:PORT]]
+//!                       [--fail-worker ID@ITER[,ID@ITER]] [--phase-deadline-ms MS]
 //! coded-graph worker    --connect ADDR --id K [--timeout-s 60]
 //!                       [--bind IP[:PORT]] [--advertise IP[:PORT]]
+//!                       [--fail-at ITER] [--phase-deadline-ms MS]
 //! coded-graph inspect   --graph er|rb|sbm|pl --n N [--p P] [--q Q] [--gamma G]
 //! coded-graph artifacts [--dir artifacts]
 //! ```
@@ -51,8 +53,9 @@ use coded_graph::allocation::Allocation;
 use coded_graph::analysis::theory;
 use coded_graph::coordinator::cluster::leader_ring_capacity;
 use coded_graph::coordinator::{
-    prepare, run_cluster, run_cluster_on, run_leader, run_rust, run_worker, AllocKind, BuiltJob,
-    EngineConfig, GraphKind, GraphSpec, Job, JobReport, JobSpec, ProgramSpec, Scheme,
+    prepare, run_cluster, run_leader, run_rust, run_worker_with, try_run_cluster_on, AllocKind,
+    BuiltJob, ClusterError, EngineConfig, FailWorker, GraphKind, GraphSpec, Job, JobReport,
+    JobSpec, ProgramSpec, Scheme, WorkerOpts,
 };
 use coded_graph::experiments::{fig5, models, scenarios};
 use coded_graph::graph::properties;
@@ -102,6 +105,10 @@ fn usage() {
     println!("  cluster    run a job on the leader/worker cluster (--transport inproc|tcp,");
     println!("             --processes spawns real worker processes, --check vs the engine)");
     println!("  worker     join a --processes cluster (--connect <rendezvous addr> --id <k>)");
+    println!();
+    println!("  cluster accepts --fail-worker ID@ITER[,ID@ITER] (inject worker deaths;");
+    println!("  the job survives up to r-1 of them) and --phase-deadline-ms MS (declare");
+    println!("  hung workers dead / cut off stragglers whose frames are pure padding)");
     println!();
     println!("  cluster/worker accept --bind IP[:PORT] / --advertise IP[:PORT] for");
     println!("  multi-host --no-spawn deployments (loopback default; the sockets");
@@ -393,6 +400,23 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// `--fail-worker ID@ITER[,ID@ITER]`: up to two injected worker deaths.
+fn parse_fail_workers(args: &Args) -> Result<[Option<FailWorker>; 2], String> {
+    let mut out = [None, None];
+    let Some(raw) = args.get("fail-worker") else { return Ok(out) };
+    let mut specs = raw.split(',');
+    for slot in &mut out {
+        match specs.next() {
+            Some(s) => *slot = Some(s.parse::<FailWorker>().map_err(|e| format!("--fail-worker: {e}"))?),
+            None => break,
+        }
+    }
+    if specs.next().is_some() {
+        return Err("--fail-worker: at most two ID@ITER specs are supported".into());
+    }
+    Ok(out)
+}
+
 /// The full [`JobSpec`] named by a `cluster` invocation's arguments.
 fn cluster_job_spec(args: &Args) -> Result<JobSpec, String> {
     Ok(JobSpec {
@@ -410,6 +434,7 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
     args.check_known(&[
         "graph", "n", "k", "r", "p", "q", "gamma", "rho-scale", "seed", "program", "scheme", "iters",
         "transport", "source", "processes", "check", "timeout-s", "no-spawn", "bind", "advertise",
+        "fail-worker", "phase-deadline-ms",
     ])?;
     let spec = cluster_job_spec(args)?;
     let transport: TransportKind = args.get("transport").unwrap_or("inproc").parse()?;
@@ -417,9 +442,19 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
     if processes && transport != TransportKind::Tcp {
         return Err("--processes requires --transport tcp".into());
     }
-    let cfg = EngineConfig { scheme: spec.scheme, ..Default::default() };
+    let mut cfg = EngineConfig { scheme: spec.scheme, ..Default::default() };
+    cfg.fail_workers = parse_fail_workers(args)?;
+    cfg.phase_deadline_ms = args
+        .get("phase-deadline-ms")
+        .map(|v| v.parse::<u64>().map_err(|_| format!("--phase-deadline-ms: cannot parse {v:?}")))
+        .transpose()?;
     let built = spec.materialize();
     let (k, r) = (spec.k, spec.r);
+    for fw in cfg.fail_workers.iter().flatten() {
+        if fw.worker as usize >= k {
+            return Err(format!("--fail-worker {fw}: worker id out of range (K={k})"));
+        }
+    }
 
     let report = if processes {
         let spawn = !args.has("no-spawn");
@@ -435,7 +470,8 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
         run_processes(&spec, &built, &cfg, timeout, spawn, bind_addr(args)?, args.get("advertise"))?
     } else {
         println!("driver: cluster over {transport} ({k} workers + leader)");
-        run_cluster_on(&built.job(), &cfg, spec.iters, transport)
+        try_run_cluster_on(&built.job(), &cfg, spec.iters, transport)
+            .map_err(|e| format!("cluster run aborted: {e}"))?
     };
 
     print_job_summary(&report, &*built.program, &built.graph, k, r, spec.scheme, spec.iters);
@@ -550,11 +586,20 @@ fn run_processes(
     if spawn {
         let exe = std::env::current_exe().map_err(|e| e.to_string())?;
         for kk in 0..spec.k {
-            let child = std::process::Command::new(&exe)
-                .args(["worker", "--connect", &rv_addr.to_string(), "--id", &kk.to_string()])
-                .args(["--timeout-s", &timeout.as_secs().to_string()])
-                .spawn()
-                .map_err(|e| format!("spawn worker {kk}: {e}"))?;
+            let mut cmd = std::process::Command::new(&exe);
+            cmd.args(["worker", "--connect", &rv_addr.to_string(), "--id", &kk.to_string()])
+                .args(["--timeout-s", &timeout.as_secs().to_string()]);
+            // forward fault injection / straggler flags to the child they
+            // apply to, so the recovery path runs across real processes
+            if let Some(fw) =
+                cfg.fail_workers.iter().flatten().find(|fw| fw.worker as usize == kk)
+            {
+                cmd.args(["--fail-at", &fw.at_iter.to_string()]);
+            }
+            if let Some(ms) = cfg.phase_deadline_ms {
+                cmd.args(["--phase-deadline-ms", &ms.to_string()]);
+            }
+            let child = cmd.spawn().map_err(|e| format!("spawn worker {kk}: {e}"))?;
             children.0.push(child);
         }
     }
@@ -569,6 +614,9 @@ fn run_processes(
         run_leader(&job, cfg, spec.iters, &prep, &net)
     }))
     .map_err(|p| {
+        if let Some(err) = p.downcast_ref::<ClusterError>() {
+            return format!("cluster run aborted: {err}");
+        }
         let msg = p
             .downcast_ref::<String>()
             .map(String::as_str)
@@ -583,7 +631,9 @@ fn run_processes(
 }
 
 fn cmd_worker(args: &Args) -> Result<(), String> {
-    args.check_known(&["connect", "id", "timeout-s", "bind", "advertise"])?;
+    args.check_known(&[
+        "connect", "id", "timeout-s", "bind", "advertise", "fail-at", "phase-deadline-ms",
+    ])?;
     let rendezvous = args
         .get("connect")
         .ok_or("worker: --connect <rendezvous addr> is required")?
@@ -618,9 +668,25 @@ fn cmd_worker(args: &Args) -> Result<(), String> {
     let cap = prep.ring_capacity();
     let net = TcpEndpoint::wire(id, &data_listener, &roster, cap, timeout)
         .map_err(|e| e.to_string())?;
-    // a peer failure panics out of run_worker; the guard inside aborts
-    // our endpoint and the nonzero exit is the leader's signal
-    run_worker(id, &job, prep, &net);
+    let opts = WorkerOpts {
+        fail_at: args
+            .get("fail-at")
+            .map(|v| v.parse::<usize>().map_err(|_| format!("--fail-at: cannot parse {v:?}")))
+            .transpose()?,
+        phase_deadline: args
+            .get("phase-deadline-ms")
+            .map(|v| {
+                v.parse::<u64>()
+                    .map(Duration::from_millis)
+                    .map_err(|_| format!("--phase-deadline-ms: cannot parse {v:?}"))
+            })
+            .transpose()?,
+    };
+    // a peer failure panics out of run_worker_with; the guard inside
+    // aborts our endpoint and the nonzero exit is the leader's signal
+    // (an injected --fail-at death still exits 0: the *endpoint* dies
+    // abnormally, the process is reaped cleanly)
+    run_worker_with(id, &job, prep, &net, opts);
     Ok(())
 }
 

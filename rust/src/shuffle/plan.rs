@@ -632,6 +632,17 @@ pub fn build_group_plans_sharded(g: &Csr, alloc: &Allocation, me: u8) -> WorkerP
     WorkerPlan::from_nested(me, r + 1, k_total, nested)
 }
 
+/// Pick the member of `servers` that stands in for `exclude`'s shuffle
+/// duties after a failure: the lowest-id member that is neither
+/// `exclude` itself nor in `dead`. Deterministic and derivable from any
+/// survivor's own shard (every group member knows the full member set),
+/// so the leader and every worker agree on donors without exchanging a
+/// plan. `None` only when failures exceed the `r − 1` the redundancy
+/// tolerates — each batch `S \ {exclude}` has `r` replicas.
+pub fn surviving_donor(servers: &[u8], exclude: u8, dead: &[u8]) -> Option<u8> {
+    servers.iter().copied().find(|&s| s != exclude && !dead.contains(&s))
+}
+
 /// Count of *all* needed IVs (the uncoded traffic in IV units) — equals
 /// the plan's [`ShufflePlan::total_ivs`]; exposed for cross-checking the
 /// two schemes.
@@ -678,6 +689,16 @@ mod tests {
         assert_eq!(p.row(1), &[(3, 2), (2, 3)]);
         // server 2 needs v_{5,1}, v_{6,2} -> (4,0),(5,1)
         assert_eq!(p.row(2), &[(4, 0), (5, 1)]);
+    }
+
+    #[test]
+    fn surviving_donor_is_lowest_live_other_member() {
+        let servers = [1u8, 4, 6, 9];
+        assert_eq!(surviving_donor(&servers, 4, &[]), Some(1));
+        assert_eq!(surviving_donor(&servers, 1, &[]), Some(4));
+        assert_eq!(surviving_donor(&servers, 4, &[1]), Some(6));
+        assert_eq!(surviving_donor(&servers, 4, &[1, 6]), Some(9));
+        assert_eq!(surviving_donor(&servers, 4, &[1, 6, 9]), None);
     }
 
     #[test]

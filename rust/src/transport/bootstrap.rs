@@ -121,11 +121,15 @@ fn read_line(s: &mut TcpStream, deadline: Instant) -> Result<String, BootstrapEr
 /// whole remaining deadline and starve the real workers behind it.
 const HELLO_GRACE: Duration = Duration::from_secs(2);
 
-/// Parse and validate one `hello` line against the current slot state.
+/// Parse and validate one `hello` line against the already-registered
+/// slots. A second `hello` for a taken id is always bounced; when it
+/// announces a *different* data address than the registered worker the
+/// reject names the current holder — the telltale of a misconfigured
+/// (or impersonating) peer rather than a harmless double dial.
 fn parse_hello(
     line: &str,
     k: usize,
-    taken: &[bool],
+    addrs: &[Option<SocketAddr>],
 ) -> Result<(usize, SocketAddr), BootstrapError> {
     let mut tok = line.split_whitespace();
     let (verb, id, addr) = (tok.next(), tok.next(), tok.next());
@@ -143,8 +147,12 @@ fn parse_hello(
             "worker id {id} out of range for {k} workers"
         )));
     }
-    if taken[id] {
-        return Err(BootstrapError::Rejected(format!("duplicate worker id {id}")));
+    if let Some(prev) = addrs[id] {
+        return Err(BootstrapError::Rejected(if prev == addr {
+            format!("duplicate worker id {id}")
+        } else {
+            format!("worker id {id} already registered from {prev}")
+        }));
     }
     Ok((id, addr))
 }
@@ -170,7 +178,6 @@ pub fn lead(
     let deadline = Instant::now() + timeout;
     let mut conns: Vec<Option<TcpStream>> = (0..k).map(|_| None).collect();
     let mut addrs: Vec<Option<SocketAddr>> = vec![None; k];
-    let mut taken = vec![false; k];
     let mut joined = 0usize;
 
     rendezvous.set_nonblocking(true)?;
@@ -194,13 +201,12 @@ pub fn lead(
                 // cap this connection's whole hello at the grace window
                 // (or the overall deadline, whichever is sooner)
                 let grace = deadline.min(Instant::now() + HELLO_GRACE);
-                parse_hello(&read_line(s, grace)?, k, &taken)
+                parse_hello(&read_line(s, grace)?, k, &addrs)
             })(&mut s);
             match hello {
                 Ok((id, addr)) => {
                     conns[id] = Some(s);
                     addrs[id] = Some(addr);
-                    taken[id] = true;
                     joined += 1;
                 }
                 Err(BootstrapError::Rejected(msg) | BootstrapError::Protocol(msg)) => {
@@ -230,10 +236,30 @@ pub fn lead(
     Ok(roster)
 }
 
-/// Worker side: dial the `rendezvous` address (retrying while the leader
-/// is not up yet, so start order does not matter), announce
-/// `(id, data_addr)`, and block for the roster + job line. `data_addr`
-/// must already be bound — peers dial it as soon as they get the roster.
+/// First re-dial wait when the leader is not up yet; doubles per attempt.
+const DIAL_BACKOFF_FLOOR_MS: u64 = 5;
+/// Cap on the doubling: `5ms << 6 = 320ms` between late attempts.
+const DIAL_BACKOFF_DOUBLINGS: u32 = 6;
+
+/// How long a re-dialing worker sleeps before attempt `attempt + 1`:
+/// capped exponential backoff (connect storms from a K-wide spawn wave
+/// thin out fast) plus a deterministic per-worker jitter — a hash of
+/// `(id, attempt)`, up to half the base — so the wave never re-dials in
+/// lockstep. Pure arithmetic: reproducible, no RNG state.
+fn dial_backoff(id: u8, attempt: u32) -> Duration {
+    let base = DIAL_BACKOFF_FLOOR_MS << attempt.min(DIAL_BACKOFF_DOUBLINGS);
+    let hash = (id as u64)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(attempt as u64)
+        .wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    Duration::from_millis(base + hash % (base / 2 + 1))
+}
+
+/// Worker side: dial the `rendezvous` address (retrying with capped
+/// exponential backoff while the leader is not up yet, so start order
+/// does not matter), announce `(id, data_addr)`, and block for the
+/// roster + job line. `data_addr` must already be bound — peers dial it
+/// as soon as they get the roster.
 pub fn join(
     rendezvous: SocketAddr,
     id: u8,
@@ -241,12 +267,14 @@ pub fn join(
     timeout: Duration,
 ) -> Result<(Vec<SocketAddr>, String), BootstrapError> {
     let deadline = Instant::now() + timeout;
+    let mut attempt = 0u32;
     let mut s = loop {
         match TcpStream::connect(rendezvous) {
             Ok(s) => break s,
             Err(e) => match time_left(deadline) {
-                Some(_) if e.kind() == std::io::ErrorKind::ConnectionRefused => {
-                    std::thread::sleep(Duration::from_millis(25));
+                Some(left) if e.kind() == std::io::ErrorKind::ConnectionRefused => {
+                    std::thread::sleep(dial_backoff(id, attempt).min(left));
+                    attempt += 1;
                 }
                 _ => return Err(e.into()),
             },
@@ -369,6 +397,100 @@ mod tests {
         // the slot winner received the same roster
         let line = read_line(&mut first, soon()).unwrap();
         assert_eq!(line, format!("roster 3 {a0} {a1} {leader_addr}"));
+    }
+
+    #[test]
+    fn join_retries_until_the_listener_binds_late() {
+        // reserve a port, release it, and only re-bind the rendezvous
+        // after the worker has started dialing: the capped-backoff retry
+        // loop must carry the worker through the refused window
+        let (probe, rv_addr) = local_listener();
+        drop(probe);
+        let (_l0, a0) = local_listener();
+        let (_ll, leader_addr) = local_listener();
+        let leader = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(250));
+            let rendezvous = TcpListener::bind(rv_addr).expect("re-bind reserved port");
+            lead(&rendezvous, 1, leader_addr, "job", Duration::from_secs(10)).expect("lead")
+        });
+        let t0 = Instant::now();
+        let (roster, job) = join(rv_addr, 0, a0, Duration::from_secs(10)).expect("late join");
+        assert!(t0.elapsed() >= Duration::from_millis(200), "must have actually waited");
+        assert_eq!(roster, vec![a0, leader_addr]);
+        assert_eq!(job, "job");
+        assert_eq!(leader.join().unwrap(), roster);
+    }
+
+    #[test]
+    fn backoff_is_capped_and_jittered() {
+        let floor = Duration::from_millis(DIAL_BACKOFF_FLOOR_MS);
+        let cap = Duration::from_millis(
+            (DIAL_BACKOFF_FLOOR_MS << DIAL_BACKOFF_DOUBLINGS) * 3 / 2,
+        );
+        for id in [0u8, 3, 16] {
+            for attempt in 0..40 {
+                let d = dial_backoff(id, attempt);
+                assert!(d >= floor, "attempt {attempt}: {d:?} under the floor");
+                assert!(d <= cap, "attempt {attempt}: {d:?} over the cap");
+            }
+        }
+        // deterministic, but not lockstep across workers
+        assert_eq!(dial_backoff(2, 5), dial_backoff(2, 5));
+        assert!((0..8).any(|id| dial_backoff(id, 7) != dial_backoff(id + 1, 7)));
+    }
+
+    #[test]
+    fn duplicate_id_from_a_different_address_names_the_holder() {
+        let (rendezvous, rv_addr) = local_listener();
+        let (_l0, a0) = local_listener();
+        let (_l1, a1) = local_listener();
+        let (_ll, leader_addr) = local_listener();
+        let leader = std::thread::spawn(move || {
+            lead(&rendezvous, 2, leader_addr, "job", Duration::from_secs(10)).expect("lead")
+        });
+
+        let mut first = TcpStream::connect(rv_addr).unwrap();
+        first.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        first.write_all(format!("hello 0 {a0}\n").as_bytes()).unwrap();
+        // same id, different data address: the reject names the holder
+        let (_lx, ax) = local_listener();
+        let mut imp = TcpStream::connect(rv_addr).unwrap();
+        imp.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        imp.write_all(format!("hello 0 {ax}\n").as_bytes()).unwrap();
+        let reply = read_line(&mut imp, soon()).unwrap();
+        assert!(
+            reply.starts_with("reject ")
+                && reply.contains("already registered")
+                && reply.contains(&a0.to_string()),
+            "{reply}"
+        );
+
+        let (roster, _) = join(rv_addr, 1, a1, Duration::from_secs(10)).expect("worker 1");
+        assert_eq!(roster, vec![a0, a1, leader_addr]);
+        assert_eq!(leader.join().unwrap(), roster);
+        let line = read_line(&mut first, soon()).unwrap();
+        assert!(line.starts_with("roster 3 "), "{line}");
+    }
+
+    #[test]
+    fn garbage_after_the_roster_is_a_protocol_error() {
+        // a fake leader that serves a valid roster and then junk instead
+        // of the job line: join must fail typed, not hang or panic
+        let (fake, rv_addr) = local_listener();
+        let (_l0, a0) = local_listener();
+        let leader_addr: SocketAddr = "127.0.0.1:19".parse().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = fake.accept().unwrap();
+            let _ = read_line(&mut s, soon()).unwrap(); // the hello
+            s.write_all(format!("roster 2 {a0} {leader_addr}\n").as_bytes()).unwrap();
+            s.write_all(b"jbo oops-not-a-job-line\n").unwrap();
+        });
+        let err = join(rv_addr, 0, a0, Duration::from_secs(10)).expect_err("garbage job line");
+        assert!(
+            matches!(&err, BootstrapError::Protocol(msg) if msg.contains("expected job line")),
+            "{err}"
+        );
+        server.join().unwrap();
     }
 
     #[test]

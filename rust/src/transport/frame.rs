@@ -10,7 +10,9 @@
 //! 0       4     body length (u32 LE): bytes that follow this word
 //! 4       1     kind (FrameKind)
 //! 5       1     sender endpoint id
-//! 6       2     reserved (zero)
+//! 6       1     epoch (recovery generation; zero until a failure)
+//! 7       1     target (logical worker a recovery frame is for; zero
+//!               otherwise — Reduced reuses it for the straggler tally)
 //! 8       4     index (u32 LE): group / transfer id, or Reduced's
 //!               validated-IV count
 //! 12      4     count (u32 LE): payload items
@@ -86,6 +88,24 @@ pub enum FrameKind {
     Continue = 7,
     /// Leader → worker: job done, exit.
     Stop = 8,
+    /// Survivor → survivor: one dead member's raw (undecoded) IV row for
+    /// one degraded coded group. `index` is the group wire id, `target`
+    /// the logical worker whose row this is, payload full u64 IV bits in
+    /// the group's canonical row order.
+    RecoverRow = 9,
+    /// Survivor → survivor: raw IVs replacing a dead sender's uncoded
+    /// transfer. `index` is the transfer wire id, `target` the logical
+    /// receiver, payload `(position, bits)` pairs (12-byte stride) into
+    /// the transfer's canonical IV order.
+    RecoverPairs = 10,
+    /// Leader → worker: a peer died; adopt the recovery delta and restart
+    /// the current iteration. `index` is the dead worker's id, `epoch`
+    /// the new recovery generation, payload `(vertex, state bits)` pairs
+    /// seeding the adopter's ghost state.
+    Recover = 11,
+    /// Leader → worker: unrecoverable failure (tolerance exceeded) —
+    /// unwind cleanly instead of hanging.
+    Abort = 12,
 }
 
 impl FrameKind {
@@ -101,14 +121,26 @@ impl FrameKind {
             6 => FrameKind::StateUpdate,
             7 => FrameKind::Continue,
             8 => FrameKind::Stop,
+            9 => FrameKind::RecoverRow,
+            10 => FrameKind::RecoverPairs,
+            11 => FrameKind::Recover,
+            12 => FrameKind::Abort,
             _ => return None,
         })
     }
 
     /// Is this a Shuffle *data* frame (the kind the bus model charges)?
+    /// Recovery replacements count as data: they ride the peer data path
+    /// and their bytes are the degraded run's real wire cost.
     #[inline]
     pub fn is_data(self) -> bool {
-        matches!(self, FrameKind::CodedData | FrameKind::UncodedData)
+        matches!(
+            self,
+            FrameKind::CodedData
+                | FrameKind::UncodedData
+                | FrameKind::RecoverRow
+                | FrameKind::RecoverPairs
+        )
     }
 }
 
@@ -147,6 +179,11 @@ pub struct Frame<'a> {
     pub kind: FrameKind,
     /// Sending endpoint id.
     pub sender: u8,
+    /// Recovery generation this frame belongs to (zero until a failure).
+    pub epoch: u8,
+    /// Logical worker a recovery frame addresses (zero otherwise;
+    /// `Reduced` reuses the byte for the straggler-skip tally).
+    pub target: u8,
     /// Group / transfer id (data frames), validated-IV count (`Reduced`).
     pub index: u32,
     /// Payload item count (columns, IVs, states, or update pairs).
@@ -171,6 +208,8 @@ impl<'a> Frame<'a> {
         Ok(Frame {
             kind,
             sender: bytes[5],
+            epoch: bytes[6],
+            target: bytes[7],
             index: u32::from_le_bytes(bytes[8..12].try_into().unwrap()),
             count: u32::from_le_bytes(bytes[12..16].try_into().unwrap()),
             payload: &bytes[HEADER_LEN..],
@@ -272,18 +311,74 @@ pub fn encode_send_done(buf: &mut Vec<u8>, sender: u8, frames: u32, bytes: u64) 
 }
 
 /// Encode a worker's `Reduced` reply: fresh state bits in the worker's
-/// canonical reduce-set order; `validated` rides in the index field.
-pub fn encode_reduced(buf: &mut Vec<u8>, sender: u8, validated: u32, state_bits: &[u64]) {
+/// canonical reduce-set order; `validated` rides in the index field and
+/// `skipped` (straggler frames dropped at the cutoff, clamped to u8)
+/// reuses the target byte.
+pub fn encode_reduced(buf: &mut Vec<u8>, sender: u8, validated: u32, skipped: u8, state_bits: &[u64]) {
     let count = state_bits.len() as u32;
     header_into(buf, FrameKind::Reduced, sender, validated, count, state_bits.len() * 8);
+    buf[7] = skipped;
     for &b in state_bits {
         buf.extend_from_slice(&b.to_le_bytes());
     }
 }
 
-/// Encode a leader `StateUpdate`: `(vertex, state bits)` pairs.
-pub fn encode_state_update(buf: &mut Vec<u8>, sender: u8, pairs: &[(u32, u64)]) {
+/// Encode a leader `StateUpdate`: `(vertex, state bits)` pairs. `target`
+/// is the *logical* worker the pairs are for — normally the receiving
+/// endpoint itself, but after a failure the adopter receives the dead
+/// worker's updates addressed to the ghost id.
+pub fn encode_state_update(buf: &mut Vec<u8>, sender: u8, target: u8, pairs: &[(u32, u64)]) {
     header_into(buf, FrameKind::StateUpdate, sender, 0, pairs.len() as u32, pairs.len() * 12);
+    buf[7] = target;
+    for &(v, b) in pairs {
+        buf.extend_from_slice(&v.to_le_bytes());
+        buf.extend_from_slice(&b.to_le_bytes());
+    }
+}
+
+/// Stamp the recovery epoch onto an already-encoded frame (offset 6).
+/// Epoch-agnostic encoders leave the byte zero; the cluster send path
+/// stamps every outgoing frame so receivers can drop stale traffic from
+/// an abandoned iteration attempt.
+#[inline]
+pub fn stamp_epoch(buf: &mut [u8], epoch: u8) {
+    buf[6] = epoch;
+}
+
+/// Encode a degraded-group row replacement: the dead `target` worker's
+/// full raw IV row for group `group`, shipped by a surviving replica.
+pub fn encode_recover_row(buf: &mut Vec<u8>, sender: u8, group: u32, target: u8, bits: &[u64]) {
+    header_into(buf, FrameKind::RecoverRow, sender, group, bits.len() as u32, bits.len() * 8);
+    buf[7] = target;
+    for &b in bits {
+        buf.extend_from_slice(&b.to_le_bytes());
+    }
+}
+
+/// Encode an uncoded-transfer replacement: `(position, bits)` pairs into
+/// transfer `transfer`'s canonical IV order, addressed to the logical
+/// receiver `target` (the frame may physically land on its adopter).
+pub fn encode_recover_pairs(
+    buf: &mut Vec<u8>,
+    sender: u8,
+    transfer: u32,
+    target: u8,
+    pairs: &[(u32, u64)],
+) {
+    header_into(buf, FrameKind::RecoverPairs, sender, transfer, pairs.len() as u32, pairs.len() * 12);
+    buf[7] = target;
+    for &(p, b) in pairs {
+        buf.extend_from_slice(&p.to_le_bytes());
+        buf.extend_from_slice(&b.to_le_bytes());
+    }
+}
+
+/// Encode the leader's `Recover` delta: dead worker id in `index`, the
+/// new epoch stamped in the header, and `(vertex, state bits)` pairs
+/// seeding the adopter's ghost state (empty for non-adopters).
+pub fn encode_recover(buf: &mut Vec<u8>, sender: u8, dead: u8, epoch: u8, pairs: &[(u32, u64)]) {
+    header_into(buf, FrameKind::Recover, sender, dead as u32, pairs.len() as u32, pairs.len() * 12);
+    stamp_epoch(buf, epoch);
     for &(v, b) in pairs {
         buf.extend_from_slice(&v.to_le_bytes());
         buf.extend_from_slice(&b.to_le_bytes());
@@ -368,20 +463,57 @@ mod tests {
         assert!(!f.kind.is_data());
         assert!(f.payload.is_empty());
 
-        encode_reduced(&mut buf, 2, 17, &[1.5f64.to_bits(), 0, u64::MAX]);
+        encode_reduced(&mut buf, 2, 17, 4, &[1.5f64.to_bits(), 0, u64::MAX]);
         let f = Frame::parse(&buf).unwrap();
         assert_eq!((f.kind, f.sender, f.index, f.count), (FrameKind::Reduced, 2, 17, 3));
+        assert_eq!(f.target, 4, "Reduced reuses the target byte for the skip tally");
         assert_eq!(f.word(0), 1.5f64.to_bits());
         assert_eq!(f.word(2), u64::MAX);
 
         let pairs = [(4u32, 2.5f64.to_bits()), (900, 0), (u32::MAX, 1)];
-        encode_state_update(&mut buf, 5, &pairs);
+        encode_state_update(&mut buf, 5, 3, &pairs);
         let f = Frame::parse(&buf).unwrap();
         assert_eq!(f.kind, FrameKind::StateUpdate);
-        assert_eq!(f.count, 3);
+        assert_eq!((f.count, f.target), (3, 3));
         for (i, &p) in pairs.iter().enumerate() {
             assert_eq!(f.update_pair(i), p);
         }
+    }
+
+    #[test]
+    fn recovery_frames_roundtrip_with_epoch_and_target() {
+        let mut buf = Vec::new();
+        let row = [1.25f64.to_bits(), 0, u64::MAX];
+        encode_recover_row(&mut buf, 4, 19, 7, &row);
+        stamp_epoch(&mut buf, 2);
+        let f = Frame::parse(&buf).unwrap();
+        assert_eq!((f.kind, f.sender, f.index, f.count), (FrameKind::RecoverRow, 4, 19, 3));
+        assert_eq!((f.epoch, f.target), (2, 7));
+        assert!(f.kind.is_data(), "replacement rows ride the data path");
+        for (i, &b) in row.iter().enumerate() {
+            assert_eq!(f.word(i), b);
+        }
+
+        let pairs = [(0u32, 9.5f64.to_bits()), (6, 1)];
+        encode_recover_pairs(&mut buf, 1, 23, 5, &pairs);
+        let f = Frame::parse(&buf).unwrap();
+        assert_eq!((f.kind, f.index, f.target, f.count), (FrameKind::RecoverPairs, 23, 5, 2));
+        assert!(f.kind.is_data());
+        for (i, &p) in pairs.iter().enumerate() {
+            assert_eq!(f.update_pair(i), p);
+        }
+
+        let state = [(11u32, 0.5f64.to_bits())];
+        encode_recover(&mut buf, 10, 3, 1, &state);
+        let f = Frame::parse(&buf).unwrap();
+        assert_eq!((f.kind, f.sender, f.index, f.epoch), (FrameKind::Recover, 10, 3, 1));
+        assert!(!f.kind.is_data(), "Recover is control traffic");
+        assert_eq!(f.update_pair(0), state[0]);
+
+        encode_control(&mut buf, FrameKind::Abort, 10);
+        let f = Frame::parse(&buf).unwrap();
+        assert_eq!(f.kind, FrameKind::Abort);
+        assert!(!f.kind.is_data());
     }
 
     #[test]

@@ -19,8 +19,9 @@
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
-use super::{StatCounters, Transport, TransportStats};
+use super::{RecvOutcome, StatCounters, Transport, TransportStats};
 
 /// A bounded MPSC ring of pooled byte buffers (shared by the in-process
 /// and TCP backends — TCP's per-connection reader threads push into the
@@ -41,6 +42,10 @@ struct RingState {
     /// Set by [`Ring::poison`] on abnormal teardown: every blocked or
     /// future `pop`/`push` bails out immediately.
     dead: bool,
+    /// Peers that died abnormally, queued for delivery as
+    /// [`RecvOutcome::PeerDown`] — after already-queued frames drain,
+    /// before the all-writers-gone disconnect.
+    downs: VecDeque<u8>,
 }
 
 impl Ring {
@@ -53,6 +58,7 @@ impl Ring {
                 writers,
                 cap,
                 dead: false,
+                downs: VecDeque::new(),
             }),
             readable: Condvar::new(),
             writable: Condvar::new(),
@@ -103,6 +109,59 @@ impl Ring {
             }
             st = self.readable.wait(st).unwrap();
         }
+    }
+
+    /// [`Ring::pop`] with typed outcomes and an optional deadline.
+    /// Queued frames deliver first; then pending peer-death markers
+    /// surface as [`RecvOutcome::PeerDown`]; only with both exhausted
+    /// does an empty writer set read as [`RecvOutcome::Closed`]. With a
+    /// deadline, the wait gives up as [`RecvOutcome::TimedOut`] once it
+    /// elapses (a poisoned ring is always an immediate `Closed`).
+    pub(crate) fn pop_deadline(&self, out: &mut Vec<u8>, deadline: Option<Duration>) -> RecvOutcome {
+        let limit = deadline.map(|d| Instant::now() + d);
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.dead {
+                return RecvOutcome::Closed;
+            }
+            if let Some(mut buf) = st.queue.pop_front() {
+                std::mem::swap(out, &mut buf);
+                st.pool.push(buf);
+                drop(st);
+                self.writable.notify_one();
+                return RecvOutcome::Frame;
+            }
+            if let Some(id) = st.downs.pop_front() {
+                return RecvOutcome::PeerDown(id);
+            }
+            if st.writers == 0 {
+                return RecvOutcome::Closed;
+            }
+            match limit {
+                None => st = self.readable.wait(st).unwrap(),
+                Some(t) => {
+                    let now = Instant::now();
+                    if now >= t {
+                        return RecvOutcome::TimedOut;
+                    }
+                    let (next, res) = self.readable.wait_timeout(st, t - now).unwrap();
+                    st = next;
+                    if res.timed_out() && st.queue.is_empty() && st.downs.is_empty() {
+                        return RecvOutcome::TimedOut;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Record peer `id`'s abnormal death: detaches its writer slot and
+    /// queues a [`RecvOutcome::PeerDown`] marker for the reader.
+    pub(crate) fn peer_down(&self, id: u8) {
+        let mut st = self.state.lock().unwrap();
+        st.writers = st.writers.saturating_sub(1);
+        st.downs.push_back(id);
+        drop(st);
+        self.readable.notify_all();
     }
 
     /// Detach one writer (clean peer shutdown); wakes blocked readers so
@@ -186,6 +245,22 @@ impl Transport for InProcNet {
 
     fn recv(&self, me: u8, buf: &mut Vec<u8>) -> bool {
         self.rings[me as usize].pop(buf)
+    }
+
+    fn recv_deadline(&self, me: u8, buf: &mut Vec<u8>, deadline: Option<Duration>) -> RecvOutcome {
+        self.rings[me as usize].pop_deadline(buf, deadline)
+    }
+
+    /// Abnormal death of endpoint `me`: its own ring is poisoned (it will
+    /// never receive again) and every peer gets a `PeerDown(me)` marker —
+    /// the mesh stays up for survivors instead of cascading.
+    fn fail_endpoint(&self, me: u8) {
+        self.rings[me as usize].poison();
+        for (e, ring) in self.rings.iter().enumerate() {
+            if e != me as usize {
+                ring.peer_down(me);
+            }
+        }
     }
 
     fn leave(&self, me: u8) {
@@ -307,6 +382,58 @@ mod tests {
         net.flush(0);
         let s = net.data_stats();
         assert_eq!((s.data_frames, s.batched_writes), (1, 0));
+    }
+
+    #[test]
+    fn fail_endpoint_marks_the_peer_after_queued_frames() {
+        // worker 0 dies after sending: its queued frame still delivers,
+        // then the typed PeerDown surfaces, then the remaining (live)
+        // writers keep the ring open
+        let net = InProcNet::new(&[8, 8, 8]);
+        let mut buf = Vec::new();
+        frame::encode_uncoded(&mut buf, 0, 1, &[42]);
+        net.send_unicast(0, 1, &buf);
+        net.fail_endpoint(0);
+        let mut rbuf = Vec::new();
+        assert_eq!(net.recv_deadline(1, &mut rbuf, None), RecvOutcome::Frame);
+        assert_eq!(frame::Frame::parse(&rbuf).unwrap().word(0), 42);
+        assert_eq!(net.recv_deadline(1, &mut rbuf, None), RecvOutcome::PeerDown(0));
+        // endpoint 2 still reaches endpoint 1
+        frame::encode_control(&mut buf, FrameKind::Continue, 2);
+        net.send_unicast(2, 1, &buf);
+        assert_eq!(net.recv_deadline(1, &mut rbuf, None), RecvOutcome::Frame);
+        // and the dead endpoint's own ring reads as closed
+        assert_eq!(net.recv_deadline(0, &mut rbuf, None), RecvOutcome::Closed);
+    }
+
+    #[test]
+    fn recv_deadline_times_out_then_still_delivers() {
+        let net = InProcNet::new(&[4, 4]);
+        let mut rbuf = Vec::new();
+        let t0 = std::time::Instant::now();
+        assert_eq!(
+            net.recv_deadline(0, &mut rbuf, Some(std::time::Duration::from_millis(30))),
+            RecvOutcome::TimedOut
+        );
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(25));
+        let mut buf = Vec::new();
+        frame::encode_control(&mut buf, FrameKind::Stop, 1);
+        net.send_unicast(1, 0, &buf);
+        assert_eq!(
+            net.recv_deadline(0, &mut rbuf, Some(std::time::Duration::from_secs(5))),
+            RecvOutcome::Frame
+        );
+    }
+
+    #[test]
+    fn last_writer_dying_surfaces_down_before_closed() {
+        let net = InProcNet::new(&[4, 4]);
+        net.fail_endpoint(1);
+        let mut rbuf = Vec::new();
+        assert_eq!(net.recv_deadline(0, &mut rbuf, None), RecvOutcome::PeerDown(1));
+        assert_eq!(net.recv_deadline(0, &mut rbuf, None), RecvOutcome::Closed);
+        // the legacy surface folds both into a disconnect
+        assert!(!net.recv(0, &mut rbuf));
     }
 
     #[test]

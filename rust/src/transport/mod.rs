@@ -146,6 +146,27 @@ pub trait Transport: Sync {
     /// cluster treats that as a failed peer and panics.
     fn recv(&self, me: u8, buf: &mut Vec<u8>) -> bool;
 
+    /// Like [`Transport::recv`], but surfaces peer deaths as typed
+    /// [`RecvOutcome::PeerDown`] events instead of folding them into the
+    /// all-gone `false`, and gives up with [`RecvOutcome::TimedOut`] once
+    /// `deadline` elapses (`None` waits forever). The default delegates
+    /// to `recv` — correct for backends that never report peer deaths,
+    /// ignoring the deadline; the cluster backends override it.
+    fn recv_deadline(&self, me: u8, buf: &mut Vec<u8>, _deadline: Option<Duration>) -> RecvOutcome {
+        if self.recv(me, buf) {
+            RecvOutcome::Frame
+        } else {
+            RecvOutcome::Closed
+        }
+    }
+
+    /// Simulate/effect the abnormal death of endpoint `me` **only**:
+    /// peers observe [`RecvOutcome::PeerDown`]`(me)` while the rest of
+    /// the mesh keeps flowing. Fault injection (`--fail-worker`) and the
+    /// dying endpoint's own teardown both route here. The default is a
+    /// no-op for backends without per-peer failure signalling.
+    fn fail_endpoint(&self, _me: u8) {}
+
     /// Announce that endpoint `me` is done sending (clean worker/leader
     /// exit): receivers observe the disconnect once they drain what was
     /// already sent.
@@ -169,6 +190,23 @@ pub trait Transport: Sync {
     fn stats_are_global(&self) -> bool {
         true
     }
+}
+
+/// What [`Transport::recv_deadline`] observed. Distinguishes a delivered
+/// frame from the three ways a receive can end without one: a peer's
+/// abnormal death (`PeerDown`), the phase deadline expiring (`TimedOut`,
+/// a hung worker is indistinguishable from a dead one past the cutoff),
+/// and the whole mesh winding down (`Closed`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecvOutcome {
+    /// A frame was delivered into the caller's buffer.
+    Frame,
+    /// The named peer died abnormally; the mesh stays up for survivors.
+    PeerDown(u8),
+    /// No frame arrived before the deadline.
+    TimedOut,
+    /// Every writer detached (clean shutdown) or the mesh was aborted.
+    Closed,
 }
 
 /// Which backend `run_cluster_on` should wire up.

@@ -43,19 +43,22 @@
 //! worker's listener is up), so all connects land in OS accept backlogs
 //! and the accept loops drain them without any ordering constraint.
 //!
-//! ## Failure semantics (process mode)
+//! ## Failure semantics
 //!
 //! Connections are unidirectional after the handshake, so a reader
-//! observing EOF means its peer hung up. By convention endpoint `n - 1`
-//! is the cluster leader; [`TcpEndpoint::wire`] treats a hangup on any
-//! leader-involved connection as a whole-ring disconnect **after
-//! draining** queued frames (`Ring::fail`): a `Stop` that raced the
-//! leader's own close is still delivered, while a worker killed
-//! mid-iteration unblocks the leader's `recv`, whose `false` return the
-//! cluster driver escalates into an abort. Worker-to-worker hangups
-//! merely detach that one writer — they are normal during staggered
-//! shutdown, and a genuine mid-run worker death is always observed by
-//! the leader too, whose abort then cascades to every survivor.
+//! observing EOF means its peer hung up. A hangup marks *that one peer*
+//! down at the observer's ring ([`RecvOutcome::PeerDown`] from
+//! `recv_deadline`; the legacy `recv` folds it into its disconnect
+//! `false` once no writers remain) — the mesh stays up for survivors, so
+//! the cluster leader can re-plan the dead worker's load onto its
+//! replicas instead of aborting the job. The one exception: a *worker*
+//! observing the **leader**'s hangup ([`TcpEndpoint::wire`]'s `n - 1`
+//! convention) still disconnects the whole ring after draining queued
+//! frames (`Ring::fail`) — a `Stop` racing the leader's close is
+//! delivered, and no progress is possible without a leader anyway.
+//! Writes to a dead peer's stream are swallowed: a survivor finishing an
+//! already-staged multicast must not unwind just because one receiver
+//! died mid-iteration.
 
 use std::io::{Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
@@ -63,7 +66,7 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use super::inproc::Ring;
-use super::{StatCounters, Transport, TransportStats};
+use super::{RecvOutcome, StatCounters, Transport, TransportStats};
 
 /// Refuse absurd length prefixes (corrupt stream) instead of resizing.
 const MAX_BODY: usize = 1 << 28;
@@ -71,10 +74,11 @@ const MAX_BODY: usize = 1 << 28;
 /// How a reader thread reports its connection's EOF to the ring.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum EofAction {
-    /// Detach one writer: queued and future frames from others still flow.
-    Detach,
-    /// Disconnect the whole ring once queued frames drain (process-mode
-    /// leader-involved connections: no progress is possible anyway).
+    /// Mark the named peer down: queued and future frames from others
+    /// still flow, and `recv_deadline` surfaces a typed `PeerDown`.
+    Down(u8),
+    /// Disconnect the whole ring once queued frames drain (a worker
+    /// observing the leader's hangup: no progress is possible anyway).
     Fail,
 }
 
@@ -98,13 +102,12 @@ struct Endpoint {
 }
 
 impl Endpoint {
+    /// Write one frame to `to`, swallowing stream errors: a dead peer's
+    /// write-half fails with EPIPE/reset, and a survivor mid-multicast
+    /// must keep serving its live receivers instead of unwinding.
     fn send(&self, to: u8, frame: &[u8]) {
         let stream = self.peers[to as usize].as_ref().expect("no stream for destination");
-        stream
-            .lock()
-            .unwrap()
-            .write_all(frame)
-            .expect("tcp transport: peer write failed");
+        let _ = stream.lock().unwrap().write_all(frame);
     }
 
     /// Stage one already-serialized frame for `to` (batched path).
@@ -113,22 +116,26 @@ impl Endpoint {
     }
 
     /// Write every non-empty staged buffer to its stream — one syscall
-    /// per destination — and tally the batched writes.
+    /// per destination — and tally the batched writes. A dead peer's
+    /// failed write is swallowed (its staged bytes are dropped); only
+    /// successful writes are tallied.
     fn flush_staged(&self) {
         for (to, buf) in self.outbuf.iter().enumerate() {
             let mut buf = buf.lock().unwrap();
             if buf.is_empty() {
                 continue;
             }
-            self.peers[to]
+            let ok = self.peers[to]
                 .as_ref()
                 .expect("staged frames for an unconnected destination")
                 .lock()
                 .unwrap()
                 .write_all(&buf)
-                .expect("tcp transport: peer write failed");
+                .is_ok();
             buf.clear();
-            self.stats.record_write();
+            if ok {
+                self.stats.record_write();
+            }
         }
     }
 
@@ -222,10 +229,12 @@ fn accept_inbound(
             ));
         }
         seen[from] = true;
-        let on_eof = if fail_on_leader && (me == n - 1 || from == n - 1) {
+        // a worker losing its leader is terminal; every other hangup
+        // marks just that peer down so the survivors can re-plan
+        let on_eof = if fail_on_leader && me != n - 1 && from == n - 1 {
             EofAction::Fail
         } else {
-            EofAction::Detach
+            EofAction::Down(from as u8)
         };
         ep.inbound.lock().unwrap().push(s.try_clone()?);
         let ep = Arc::clone(ep);
@@ -256,7 +265,7 @@ fn reader_loop(mut s: TcpStream, ep: &Endpoint, on_eof: EofAction) {
         ep.ring.push(&frame);
     }
     match on_eof {
-        EofAction::Detach => ep.ring.close_writer(),
+        EofAction::Down(from) => ep.ring.peer_down(from),
         EofAction::Fail => ep.ring.fail(),
     }
 }
@@ -353,6 +362,17 @@ impl Transport for TcpNet {
 
     fn recv(&self, me: u8, buf: &mut Vec<u8>) -> bool {
         self.endpoints[me as usize].ring.pop(buf)
+    }
+
+    fn recv_deadline(&self, me: u8, buf: &mut Vec<u8>, deadline: Option<Duration>) -> RecvOutcome {
+        self.endpoints[me as usize].ring.pop_deadline(buf, deadline)
+    }
+
+    /// Abnormal death of endpoint `me`: shut all its streams down, so
+    /// every peer's reader observes EOF and marks `me` down at its own
+    /// ring while the rest of the mesh keeps flowing.
+    fn fail_endpoint(&self, me: u8) {
+        self.endpoints[me as usize].teardown();
     }
 
     fn leave(&self, me: u8) {
@@ -474,6 +494,20 @@ impl Transport for TcpEndpoint {
     fn recv(&self, me: u8, buf: &mut Vec<u8>) -> bool {
         debug_assert_eq!(me, self.inner.me, "process endpoint can only recv as itself");
         self.inner.ring.pop(buf)
+    }
+
+    fn recv_deadline(&self, me: u8, buf: &mut Vec<u8>, deadline: Option<Duration>) -> RecvOutcome {
+        debug_assert_eq!(me, self.inner.me, "process endpoint can only recv as itself");
+        self.inner.ring.pop_deadline(buf, deadline)
+    }
+
+    /// Abnormal death of this endpoint: tear its streams down so every
+    /// remote peer's reader observes EOF and marks it down. (A process
+    /// being killed gets the same effect from the OS closing its
+    /// sockets — this is the in-process fault-injection equivalent.)
+    fn fail_endpoint(&self, me: u8) {
+        debug_assert_eq!(me, self.inner.me, "process endpoint can only fail as itself");
+        self.inner.teardown();
     }
 
     fn leave(&self, me: u8) {
@@ -660,16 +694,61 @@ mod tests {
     }
 
     #[test]
-    fn worker_death_unblocks_leader_recv() {
-        // a worker dying mid-run must surface as a disconnect at the
-        // leader's blocked recv (no deadlock), even though another worker
-        // is still attached
+    fn worker_death_surfaces_as_typed_peer_down() {
+        // a worker dying mid-run surfaces as PeerDown at the leader's
+        // recv_deadline — not a whole-ring disconnect: the survivor's
+        // traffic keeps flowing so the leader can re-plan
         let mut eps = wire_endpoints(&[4, 4, 4]);
         let leader = eps.pop().unwrap(); // id 2 == n-1
-        let _w1 = eps.pop().unwrap();
+        let w1 = eps.pop().unwrap();
         let w0 = eps.pop().unwrap();
         drop(w0); // "killed": closes all its sockets
         let mut rbuf = Vec::new();
-        assert!(!leader.recv(2, &mut rbuf), "leader must observe the death");
+        // both EOFs (w0's two connections die at leader and w1) surface
+        // as typed PeerDown; the wait is bounded, not a deadlock
+        assert_eq!(
+            leader.recv_deadline(2, &mut rbuf, Some(Duration::from_secs(10))),
+            RecvOutcome::PeerDown(0),
+            "leader must observe the death as a typed event"
+        );
+        assert_eq!(
+            w1.recv_deadline(1, &mut rbuf, Some(Duration::from_secs(10))),
+            RecvOutcome::PeerDown(0),
+            "surviving worker observes it too"
+        );
+        // and the survivor's connection to the leader still works
+        let mut buf = Vec::new();
+        frame::encode_send_done(&mut buf, 1, 3, 99);
+        w1.send_unicast(1, 2, &buf);
+        assert_eq!(
+            leader.recv_deadline(2, &mut rbuf, Some(Duration::from_secs(10))),
+            RecvOutcome::Frame
+        );
+        assert_eq!(frame::Frame::parse(&rbuf).unwrap().kind, FrameKind::SendDone);
+    }
+
+    #[test]
+    fn fail_endpoint_keeps_survivor_traffic_flowing() {
+        // in-process mesh fault injection: failing one endpoint marks it
+        // down at every peer while survivor↔survivor traffic continues
+        let net = TcpNet::new(&[8, 8, 8]).expect("bind localhost");
+        net.fail_endpoint(0);
+        let mut rbuf = Vec::new();
+        assert_eq!(
+            net.recv_deadline(1, &mut rbuf, Some(Duration::from_secs(10))),
+            RecvOutcome::PeerDown(0)
+        );
+        let mut buf = Vec::new();
+        frame::encode_uncoded(&mut buf, 2, 4, &[17]);
+        net.send_unicast(2, 1, &buf);
+        assert_eq!(
+            net.recv_deadline(1, &mut rbuf, Some(Duration::from_secs(10))),
+            RecvOutcome::Frame
+        );
+        assert_eq!(frame::Frame::parse(&rbuf).unwrap().word(0), 17);
+        // sends addressed to the dead endpoint are swallowed, not a panic
+        net.send_unicast(2, 0, &buf);
+        net.send_unicast_buffered(2, 0, &buf);
+        net.flush(2);
     }
 }

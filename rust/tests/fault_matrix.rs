@@ -1,0 +1,217 @@
+//! The degraded-mode acceptance gate (ISSUE 6): kill workers mid-job and
+//! require the cluster to finish **bit-identical to the no-failure
+//! engine run** — same IVs, same canonical fold order, different
+//! senders.
+//!
+//! The matrix: every scheme × {ER, PL} at the (K=10, r=3) pin, one
+//! worker killed at the top of iteration 1, over both the in-process
+//! rings and the localhost TCP mesh. On top of the matrix:
+//!
+//! * a within-tolerance **double** failure (r = 3 tolerates two) is
+//!   still bit-identical and tallies both recoveries,
+//! * a loss beyond `r − 1` aborts with the typed
+//!   [`ClusterError::ToleranceExceeded`] — promptly (watchdog-bounded),
+//!   never a hang,
+//! * losing the adopter aborts with [`ClusterError::AdopterLost`],
+//! * a seeded random sweep (util::testkit) varies the victim and the
+//!   kill iteration.
+
+use std::sync::mpsc;
+use std::time::Duration;
+
+use coded_graph::coordinator::{
+    run_rust, try_run_cluster_on, AllocKind, ClusterError, EngineConfig, FailWorker, GraphKind,
+    GraphSpec, JobReport, JobSpec, ProgramSpec, Scheme,
+};
+use coded_graph::transport::TransportKind;
+use coded_graph::util::testkit::property_seed;
+
+const SCHEMES: [Scheme; 4] = [
+    Scheme::Coded,
+    Scheme::Uncoded,
+    Scheme::CodedCombined,
+    Scheme::UncodedCombined,
+];
+
+/// The matrix pin: K=10, r=3 (two-failure tolerance), 3 iterations.
+fn spec_for(graph: &str, scheme: Scheme) -> JobSpec {
+    let kind = match graph {
+        "er" => GraphKind::Er { p: 0.1 },
+        "pl" => GraphKind::Pl { gamma: 2.4, rho_scale: 2.0 },
+        other => panic!("unknown matrix graph {other}"),
+    };
+    JobSpec {
+        graph: GraphSpec { kind, n: 150, seed: 1801 },
+        alloc: AllocKind::Er,
+        k: 10,
+        r: 3,
+        program: ProgramSpec::PageRank,
+        scheme,
+        iters: 3,
+    }
+}
+
+fn cfg_with(scheme: Scheme, fails: &[FailWorker]) -> EngineConfig {
+    let mut cfg = EngineConfig { scheme, ..Default::default() };
+    for (slot, fw) in cfg.fail_workers.iter_mut().zip(fails) {
+        *slot = Some(*fw);
+    }
+    cfg
+}
+
+fn run_with_failures(
+    spec: &JobSpec,
+    fails: &[FailWorker],
+    kind: TransportKind,
+) -> Result<JobReport, ClusterError> {
+    let built = spec.materialize();
+    try_run_cluster_on(&built.job(), &cfg_with(spec.scheme, fails), spec.iters, kind)
+}
+
+fn assert_bit_identical(reference: &JobReport, got: &JobReport, tag: &str) {
+    assert_eq!(reference.final_state.len(), got.final_state.len(), "{tag}");
+    for (i, (a, b)) in reference.final_state.iter().zip(&got.final_state).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{tag}: state {i}: {a} vs {b}");
+    }
+}
+
+/// Run `f` on its own thread and fail the test if it has not finished
+/// within `secs` — the guard that turns "abort became a hang" into a
+/// diagnosable failure instead of a stuck CI job.
+fn bounded<T: Send + 'static>(secs: u64, f: impl FnOnce() -> T + Send + 'static) -> T {
+    let (tx, rx) = mpsc::channel();
+    let h = std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(v) => {
+            let _ = h.join();
+            v
+        }
+        Err(mpsc::RecvTimeoutError::Disconnected) => {
+            // the closure panicked before sending: surface that panic
+            match h.join() {
+                Err(p) => std::panic::resume_unwind(p),
+                Ok(()) => unreachable!("sender dropped without a panic"),
+            }
+        }
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            panic!("watchdog: run exceeded {secs}s — a hang where a typed abort was required")
+        }
+    }
+}
+
+/// One matrix slice: every scheme under `graph`/`kind`, one mid-job kill.
+fn kill_matrix(graph: &str, kind: TransportKind) {
+    for scheme in SCHEMES {
+        let spec = spec_for(graph, scheme);
+        let clean_cfg = EngineConfig { scheme, ..Default::default() };
+        let reference = run_rust(&spec.materialize().job(), &clean_cfg, spec.iters);
+        let fails = [FailWorker { worker: 4, at_iter: 1 }];
+        let got = run_with_failures(&spec, &fails, kind)
+            .unwrap_or_else(|e| panic!("{graph}/{scheme}/{kind:?}: must survive one loss: {e}"));
+        let tag = format!("{graph}/{scheme}/{kind:?}");
+        assert_bit_identical(&reference, &got, &tag);
+        assert_eq!(got.recovery.failures, 1, "{tag}");
+        assert!(got.recovery.recovered_groups > 0, "{tag}: worker 4 had re-plannable work");
+        assert!(got.recovery.load_inflation > 0.0, "{tag}: recovery moved extra bytes");
+    }
+}
+
+#[test]
+fn fault_matrix_er_inproc() {
+    kill_matrix("er", TransportKind::InProc);
+}
+
+#[test]
+fn fault_matrix_powerlaw_inproc() {
+    kill_matrix("pl", TransportKind::InProc);
+}
+
+#[test]
+fn fault_matrix_er_tcp() {
+    kill_matrix("er", TransportKind::Tcp);
+}
+
+#[test]
+fn fault_matrix_powerlaw_tcp() {
+    kill_matrix("pl", TransportKind::Tcp);
+}
+
+#[test]
+fn double_failure_within_tolerance_is_bit_identical() {
+    // r = 3 tolerates two losses; both recoveries must compose — the
+    // second re-plan happens on an already-degraded cluster
+    for scheme in [Scheme::Coded, Scheme::Uncoded] {
+        let spec = spec_for("er", scheme);
+        let reference = run_rust(
+            &spec.materialize().job(),
+            &EngineConfig { scheme, ..Default::default() },
+            spec.iters,
+        );
+        let fails =
+            [FailWorker { worker: 3, at_iter: 1 }, FailWorker { worker: 5, at_iter: 2 }];
+        let got = run_with_failures(&spec, &fails, TransportKind::InProc)
+            .unwrap_or_else(|e| panic!("{scheme}: two losses are within r-1 = 2: {e}"));
+        assert_bit_identical(&reference, &got, &format!("double/{scheme}"));
+        assert_eq!(got.recovery.failures, 2);
+        assert!(got.recovery.recovered_groups > 0);
+    }
+}
+
+#[test]
+fn over_tolerance_failure_aborts_typed_not_hung() {
+    // r = 2 tolerates one loss; the second must produce the typed error
+    // within the watchdog window — a hang here means Abort frames or the
+    // survivors' drain logic regressed
+    let err = bounded(60, || {
+        let mut spec = spec_for("er", Scheme::Coded);
+        spec.k = 6;
+        spec.r = 2;
+        let fails =
+            [FailWorker { worker: 2, at_iter: 1 }, FailWorker { worker: 4, at_iter: 2 }];
+        run_with_failures(&spec, &fails, TransportKind::InProc)
+            .expect_err("two losses must exceed r-1 = 1")
+    });
+    assert_eq!(err, ClusterError::ToleranceExceeded { failures: 2, r: 2 });
+}
+
+#[test]
+fn losing_the_adopter_aborts_typed() {
+    // worker 0 becomes the adopter after the first loss; killing it next
+    // destroys the only copy of the adopted state — typed abort, even
+    // though the raw failure count is still within tolerance
+    let err = bounded(60, || {
+        let spec = spec_for("er", Scheme::Coded);
+        let fails =
+            [FailWorker { worker: 1, at_iter: 1 }, FailWorker { worker: 0, at_iter: 2 }];
+        run_with_failures(&spec, &fails, TransportKind::InProc)
+            .expect_err("adopter loss cannot be re-planned")
+    });
+    assert_eq!(err, ClusterError::AdopterLost { worker: 0 });
+}
+
+#[test]
+fn seeded_random_kills_stay_bit_identical() {
+    // testkit-seeded sweep: random victim and kill iteration (never the
+    // initial adopter, worker 0 — that case is pinned above)
+    property_seed(0xC0DE_D64A, |g| {
+        for _ in 0..3 {
+            let scheme = *g.choice(&SCHEMES);
+            let spec = spec_for("er", scheme);
+            let fails = [FailWorker {
+                worker: g.int(1, spec.k - 1) as u8,
+                at_iter: g.int(0, spec.iters - 1),
+            }];
+            let reference = run_rust(
+                &spec.materialize().job(),
+                &EngineConfig { scheme, ..Default::default() },
+                spec.iters,
+            );
+            let got = run_with_failures(&spec, &fails, TransportKind::InProc)
+                .unwrap_or_else(|e| panic!("{scheme}/{:?}: {e}", fails[0]));
+            assert_bit_identical(&reference, &got, &format!("seeded/{scheme}/{:?}", fails[0]));
+            assert_eq!(got.recovery.failures, 1);
+        }
+    });
+}
