@@ -3,7 +3,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test bench bench-smoke cluster-smoke examples docs fmt clippy artifacts
+.PHONY: build test bench bench-smoke bench-compare bench-snapshot cluster-smoke examples docs fmt clippy artifacts
 
 build:
 	$(CARGO) build --release
@@ -25,8 +25,10 @@ bench:
 # emits the machine-readable perf trajectory CI parses and archives.
 # (cargo bench runs the harness with CWD at the package root, so the
 # JSON path is anchored to the invocation directory explicitly)
-# The trailing check asserts the degraded-mode `recovery` section made it
-# into the document and that its failure-free row reports zero inflation.
+# The trailing checks assert the degraded-mode `recovery` section made it
+# into the document (failure-free row reports zero inflation) and that
+# the `observer_overhead` section landed under the ISSUE-7 5% tracing
+# budget.
 bench-smoke:
 	$(CARGO) bench --bench shuffle_micro -- --smoke --json $(CURDIR)/BENCH_shuffle_micro.json
 	$(PYTHON) -c "import json; \
@@ -36,6 +38,24 @@ bench-smoke:
 	clean = [r for r in recs if r['failures'] == 0]; \
 	assert clean and clean[0]['load_inflation'] == 0.0, recs; \
 	print(f'recovery section: {len(recs)} records ok')"
+	$(PYTHON) -c "import json; \
+	recs = [r for r in json.load(open('$(CURDIR)/BENCH_shuffle_micro.json'))['records'] if r['bench'] == 'observer_overhead']; \
+	assert len(recs) == 1, recs; \
+	r = recs[0]; \
+	assert r['traced_mean_s'] > 0 and r['untraced_mean_s'] > 0, r; \
+	assert r['overhead'] < 0.05, f\"flight recorder overhead {r['overhead']:.2%} breaks the 5% budget\"; \
+	print(f\"observer overhead: {r['overhead']:+.2%} (budget 5%) ok\")"
+
+# Diff the current bench-smoke output against the committed per-PR
+# snapshot (benches/snapshots/). Non-fatal by design: CI runs it with
+# continue-on-error so a perf swing is visible in the log, not a gate.
+bench-compare:
+	$(PYTHON) tools/bench_compare.py $(CURDIR)/BENCH_shuffle_micro.json benches/snapshots/BENCH_shuffle_micro.json
+
+# Refresh the committed snapshot from the current machine's bench-smoke
+# output (run bench-smoke first; commit the result with the PR).
+bench-snapshot:
+	cp $(CURDIR)/BENCH_shuffle_micro.json benches/snapshots/BENCH_shuffle_micro.json
 
 # End-to-end cluster runs over real localhost sockets (seconds):
 #  1) a small ER PageRank job through the threaded TCP mesh;

@@ -17,7 +17,10 @@
 //! then the `core_parity` section: per-iteration wall time of the
 //! unified `WorkerCore` + `DirectFabric` engine at the ISSUE-5 pin
 //! (K=10, r=3), the record to diff against pre-refactor `iteration`
-//! numbers for perf-neutrality; then the TCP batched wire path
+//! numbers for perf-neutrality; then the `observer_overhead` section:
+//! the same serial iteration with the ISSUE-7 flight recorder on (the
+//! default) vs off, pinning the tracing cost under its 5% budget; then
+//! the TCP batched wire path
 //! (per-frame writes vs one buffered flush per destination); and
 //! finally the `recovery` section: degraded-mode cost at (K=10, r=3) —
 //! recovery latency, re-planned groups, and wire-byte inflation as the
@@ -64,6 +67,7 @@ fn main() {
     prepare_sharded(smoke, &mut report);
     iteration_throughput(smoke, &mut report);
     core_parity(smoke, &mut report);
+    observer_overhead(smoke, &mut report);
     tcp_batching(smoke, &mut report);
     recovery(smoke, &mut report);
     if let Some(path) = json_path {
@@ -386,6 +390,68 @@ fn core_parity(smoke: bool, report: &mut BenchJson) {
             ("serial_mean_s", num(m_serial.mean_s)),
             ("parallel_mean_s", num(m_par.mean_s)),
             ("norm_load", num(load)),
+        ],
+    );
+}
+
+/// Observer effect at the ISSUE-7 pin (K=10, r=3): the same serial
+/// engine iteration with the flight recorder on (the default) vs off.
+/// Recording is a fixed-size slot write into a preallocated ring plus a
+/// handful of clock reads per phase, all gated on one branch when off —
+/// `make bench-smoke` pins the measured overhead under the 5% budget.
+fn observer_overhead(smoke: bool, report: &mut BenchJson) {
+    let (n, p) = if smoke { (800usize, 0.05f64) } else { (3000, 0.05) };
+    let (k, r) = (10usize, 3usize);
+    let g = er(n, p, &mut DetRng::seed(2718));
+    let prog = PageRank::default();
+    let alloc = Allocation::er_scheme(n, k, r);
+    let job = Job { graph: &g, alloc: &alloc, program: &prog };
+    let prep = prepare(&job, Scheme::Coded);
+    let state: Vec<f64> = (0..n as Vertex).map(|v| prog.init(v, &g)).collect();
+    let mut next = vec![0.0f64; n];
+    let mut scratch = EngineScratch::new();
+    let bench = if smoke { Bench::new(1, 5) } else { Bench::new(2, 8) };
+
+    let on_cfg = EngineConfig { scheme: Scheme::Coded, parallel: false, ..Default::default() };
+    let off_cfg = EngineConfig { trace: false, ..on_cfg };
+    // warm both paths once so neither measurement pays first-touch costs
+    run_iteration_scratch(
+        &job, &prep, &state, &on_cfg, &mut Backend::Rust, &mut scratch, &mut next,
+    );
+    run_iteration_scratch(
+        &job, &prep, &state, &off_cfg, &mut Backend::Rust, &mut scratch, &mut next,
+    );
+
+    let m_off = bench.run(|| {
+        run_iteration_scratch(
+            &job, &prep, &state, &off_cfg, &mut Backend::Rust, &mut scratch, &mut next,
+        );
+    });
+    let m_on = bench.run(|| {
+        run_iteration_scratch(
+            &job, &prep, &state, &on_cfg, &mut Backend::Rust, &mut scratch, &mut next,
+        );
+    });
+    let overhead = m_on.mean_s / m_off.mean_s - 1.0;
+
+    println!("# Observer overhead: flight recorder on vs off, ER(n={n}, p={p}), K={k}, r={r}\n");
+    println!(
+        "untraced iter: {:.3} ms   traced iter: {:.3} ms   overhead {:+.2}%",
+        m_off.mean_ms(),
+        m_on.mean_ms(),
+        overhead * 100.0
+    );
+    println!("(budget: under 5%; asserted by `make bench-smoke`)\n");
+    report.record(
+        "observer_overhead",
+        &[
+            ("n", num(n as f64)),
+            ("p", num(p)),
+            ("k", num(k as f64)),
+            ("r", num(r as f64)),
+            ("traced_mean_s", num(m_on.mean_s)),
+            ("untraced_mean_s", num(m_off.mean_s)),
+            ("overhead", num(overhead)),
         ],
     );
 }

@@ -175,6 +175,7 @@ use std::time::{Duration, Instant};
 
 use crate::graph::csr::Vertex;
 use crate::network::Bus;
+use crate::obs::{measured_phase_times, now_ns, Phase, TraceSpan};
 use crate::shuffle::load::{ShuffleLoad, HEADER_BYTES};
 use crate::shuffle::segments::seg_bytes;
 use crate::transport::frame::{self, Frame, FrameKind};
@@ -287,7 +288,7 @@ fn ring_capacities(prep: &PreparedJob, k: usize) -> Vec<usize> {
 }
 
 /// Per-worker runtime options for the cluster drivers.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug)]
 pub struct WorkerOpts {
     /// Fault injection: die abnormally (peers observe `PeerDown`) at the
     /// top of this 0-based iteration; the process still exits cleanly.
@@ -296,6 +297,18 @@ pub struct WorkerOpts {
     /// the shuffle ingest, proceed to decode if every missing coded
     /// frame is pure padding (see [`WorkerCore::try_cutoff`]).
     pub phase_deadline: Option<Duration>,
+    /// Record flight-recorder spans ([`crate::obs`]) on every hosted
+    /// core (on by default, mirroring `EngineConfig::trace`). The `Stats`
+    /// frame each hosted core ships at job end is sent either way —
+    /// empty when tracing is off — so the leader's collection never
+    /// depends on the workers' setting.
+    pub trace: bool,
+}
+
+impl Default for WorkerOpts {
+    fn default() -> Self {
+        WorkerOpts { fail_at: None, phase_deadline: None, trace: true }
+    }
 }
 
 /// Detach an endpoint from the transport when its scope ends. A clean
@@ -352,7 +365,7 @@ fn drive(
                 .flatten()
                 .find(|fw| fw.worker == kk)
                 .map(|fw| fw.at_iter);
-            let opts = WorkerOpts { fail_at, phase_deadline: deadline };
+            let opts = WorkerOpts { fail_at, phase_deadline: deadline, trace: cfg.trace };
             scope.spawn(move || {
                 // each worker thread builds only its own shard — the same
                 // code path a worker *process* runs from the job spec
@@ -390,7 +403,7 @@ pub fn run_worker_with(
     prep: PreparedWorker,
     net: &dyn Transport,
     opts: WorkerOpts,
-) {
+) -> Vec<TraceSpan> {
     let leader = job.alloc.k as u8;
     assert_eq!(prep.me, me, "sharded prep was built for worker {}", prep.me);
     let scheme = prep.scheme;
@@ -402,6 +415,7 @@ pub fn run_worker_with(
     // ever valid; everything else stays NaN poison so an illegal read
     // surfaces in tests instead of folding silently
     let mut core = WorkerCore::new(job, prep);
+    core.set_trace(opts.trace);
     let mut state = vec![f64::NAN; g.n()];
     for j in alloc.mapped_vertices(me) {
         state[j as usize] = prog.init(j, g);
@@ -433,9 +447,19 @@ pub fn run_worker_with(
             // harnesses reap the child without masking real crashes
             std::mem::forget(guard);
             net.fail_endpoint(me);
-            return;
+            // the ring dies with the endpoint: a failed worker's own spans
+            // are lost; its logical core reappears in the timeline as the
+            // adopter's ghost, tagged with the recovery epoch
+            return Vec::new();
         }
         'attempt: loop {
+            // every hosted core tags this attempt's spans with the driver
+            // iteration (ghosts adopted mid-attempt pick the tag up here
+            // after the `continue 'attempt`)
+            core.set_trace_iter(it as u32);
+            for gc in &mut ghosts {
+                gc.set_trace_iter(it as u32);
+            }
             // ---- await the Shuffle barrier ----
             loop {
                 match net.recv_deadline(me, &mut rbuf, None) {
@@ -468,11 +492,13 @@ pub fn run_worker_with(
                         );
                         continue 'attempt;
                     }
-                    FrameKind::Abort => return,
+                    FrameKind::Abort => return Vec::new(),
                     // a zero-iteration job stops before any shuffle starts
                     FrameKind::Stop => {
                         fab.check_local_stats();
-                        return;
+                        return ship_stats(
+                            me, leader, epoch, &mut core, &mut ghosts, net, &mut reply,
+                        );
                     }
                     other => unreachable!("unexpected {other:?} awaiting shuffle"),
                 }
@@ -505,7 +531,16 @@ pub fn run_worker_with(
 
             // ---- ingest until every hosted core is complete, then
             // consume the leader's Reduce barrier ----
+            // the cluster worker owns this receive loop (the engine's
+            // `ingest_all` does not run here), so the RecvWait / Ingest
+            // spans are carved out externally: blocked-in-recv time is
+            // accumulated around each receive, the remainder of the
+            // window is ingest work
             let mut saw_start_reduce = false;
+            let t_ing = if opts.trace { now_ns() } else { 0 };
+            let mut wait_ns = 0u64;
+            let mut in_bytes = 0u64;
+            let mut in_frames = 0u32;
             loop {
                 let complete =
                     core.data_complete() && ghosts.iter().all(WorkerCore::data_complete);
@@ -513,7 +548,12 @@ pub fn run_worker_with(
                     break;
                 }
                 let deadline = if complete { None } else { opts.phase_deadline };
-                match net.recv_deadline(me, &mut rbuf, deadline) {
+                let tw = if opts.trace { now_ns() } else { 0 };
+                let outcome = net.recv_deadline(me, &mut rbuf, deadline);
+                if opts.trace {
+                    wait_ns += now_ns() - tw;
+                }
+                match outcome {
                     RecvOutcome::Frame => {}
                     RecvOutcome::PeerDown(_) => continue,
                     RecvOutcome::TimedOut => {
@@ -535,6 +575,10 @@ pub fn run_worker_with(
                     | FrameKind::UncodedData
                     | FrameKind::RecoverRow
                     | FrameKind::RecoverPairs => {
+                        if opts.trace {
+                            in_bytes += rbuf.len() as u64;
+                            in_frames += 1;
+                        }
                         route_data(&f, &rbuf, epoch, &mut core, &mut ghosts, &mut pending)
                     }
                     FrameKind::StartReduce => {
@@ -552,9 +596,14 @@ pub fn run_worker_with(
                         );
                         continue 'attempt;
                     }
-                    FrameKind::Abort => return,
+                    FrameKind::Abort => return Vec::new(),
                     other => unreachable!("unexpected {other:?} during shuffle"),
                 }
+            }
+            if opts.trace {
+                let ingest_ns = (now_ns() - t_ing).saturating_sub(wait_ns);
+                core.note_span(Phase::RecvWait, t_ing, wait_ns, 0, 0);
+                core.note_span(Phase::Ingest, t_ing + wait_ns, ingest_ns, in_bytes, in_frames);
             }
 
             // ---- decode + reduce: one Reduced per hosted logical worker
@@ -595,6 +644,7 @@ pub fn run_worker_with(
                         // only committed iterations write back, so the
                         // epoch can never be stale here
                         assert_eq!(f.epoch, epoch, "write-back from another epoch");
+                        let tb = if opts.trace { now_ns() } else { 0 };
                         for c in 0..f.count as usize {
                             let (v, bits) = f.update_pair(c);
                             state[v as usize] = f64::from_bits(bits);
@@ -603,16 +653,21 @@ pub fn run_worker_with(
                         // decode (the next finalize needs the previous
                         // state); `target` routes multi-hosted write-backs
                         let t = f.target;
-                        let tcore: &WorkerCore = if t == me {
-                            &core
+                        let tcore: &mut WorkerCore = if t == me {
+                            &mut core
                         } else {
                             ghosts
-                                .iter()
+                                .iter_mut()
                                 .find(|gc| gc.me() == t)
                                 .expect("state update for an unhosted worker")
                         };
-                        for (slot, &i) in alloc.reduce_sets[t as usize].iter().enumerate() {
+                        let rows = &alloc.reduce_sets[t as usize];
+                        for (slot, &i) in rows.iter().enumerate() {
                             state[i as usize] = f64::from_bits(tcore.next_bits()[slot]);
+                        }
+                        if opts.trace {
+                            let by = f.count as u64 * 12 + rows.len() as u64 * 8;
+                            tcore.note_span(Phase::WriteBack, tb, now_ns() - tb, by, f.count);
                         }
                         got_updates += 1;
                     }
@@ -624,7 +679,9 @@ pub fn run_worker_with(
                     }
                     FrameKind::Stop => {
                         fab.check_local_stats();
-                        return;
+                        return ship_stats(
+                            me, leader, epoch, &mut core, &mut ghosts, net, &mut reply,
+                        );
                     }
                     // the next iteration racing ahead of our control frames
                     FrameKind::CodedData
@@ -640,12 +697,43 @@ pub fn run_worker_with(
                         );
                         continue 'attempt;
                     }
-                    FrameKind::Abort => return,
+                    FrameKind::Abort => return Vec::new(),
                     other => unreachable!("unexpected {other:?} at write-back"),
                 }
             }
         }
     }
+}
+
+/// Job end: drain every hosted core's flight-recorder ring and ship one
+/// `Stats` frame per hosted *logical* core to the leader — the worker's
+/// own core plus any adopted ghosts, the latter carrying their recovery
+/// epoch in the span words. The frame is sent even when tracing is off
+/// (empty payload), so the leader's end-of-job collection never depends
+/// on the workers' tracing setting. Returns the drained spans so a
+/// worker *process* can also write its own `--trace` file.
+fn ship_stats(
+    me: u8,
+    leader: u8,
+    epoch: u8,
+    core: &mut WorkerCore,
+    ghosts: &mut [WorkerCore],
+    net: &dyn Transport,
+    reply: &mut Vec<u8>,
+) -> Vec<TraceSpan> {
+    let mut spans: Vec<TraceSpan> = Vec::new();
+    for idx in 0..=ghosts.len() {
+        let c: &mut WorkerCore =
+            if idx == 0 { &mut *core } else { &mut ghosts[idx - 1] };
+        let core_id = c.me();
+        let begin = spans.len();
+        let dropped = c.drain_spans(me, &mut spans);
+        let words: Vec<u64> = spans[begin..].iter().flat_map(TraceSpan::to_words).collect();
+        frame::encode_stats(reply, me, core_id, dropped.min(u32::MAX as u64) as u32, &words);
+        frame::stamp_epoch(reply, epoch);
+        net.send_unicast(me, leader, reply);
+    }
+    spans
 }
 
 /// Route one data frame by epoch: stale traffic (a failed attempt's) is
@@ -722,9 +810,13 @@ fn adopt_recovery(
     core.reset_ingest();
     fab.set_epoch(*epoch);
     if me == adopter {
+        let tracing = core.spans_enabled();
         ghosts.push(WorkerCore::new(job, prepare_worker(job, scheme, w)));
         ghosts.sort_by_key(|gc| gc.me());
         for gc in ghosts.iter_mut() {
+            // ghost spans carry the dead worker's logical id and the
+            // recovery epoch — the timeline shows where its work moved
+            gc.set_trace(tracing);
             gc.adopt(job, dead, *epoch);
             gc.reset_ingest();
         }
@@ -900,6 +992,8 @@ fn leader_loop(
             frame::encode_control(&mut sendbuf, FrameKind::Stop, leader);
             net.send_unicast(leader, kk, &sendbuf);
         }
+        collect_stats(&mut report, net, leader, k, cfg.trace, &mut rbuf);
+        report.measured = measured_phase_times(&report.spans);
         report.final_state = final_state;
         return report;
     }
@@ -1168,6 +1262,8 @@ fn leader_loop(
             break 'attempt;
         }
     }
+    collect_stats(&mut report, net, leader, k, cfg.trace, &mut rbuf);
+    report.measured = measured_phase_times(&report.spans);
     report.final_state = final_state;
     st.stats.load_inflation = if modeled_bytes > 0 {
         actual_bytes as f64 / modeled_bytes as f64 - 1.0
@@ -1176,6 +1272,70 @@ fn leader_loop(
     };
     report.recovery = st.stats;
     report
+}
+
+/// Assemble the cluster-wide flight-recorder timeline: every worker
+/// ships one `Stats` frame per hosted logical core right after its
+/// `Stop` (per-sender FIFO puts it behind all of that worker's other
+/// frames), so the leader waits until all `K` logical cores have
+/// reported — a dead worker's own ring died with it, but its logical
+/// id reports via the adopter's ghost, so coverage stays complete.
+///
+/// Permissive by design: observability must never hang or fail a job
+/// that already finished, so a dead endpoint, a timeout, or a closed
+/// transport just truncates the timeline to what arrived.
+fn collect_stats(
+    report: &mut JobReport,
+    net: &dyn Transport,
+    leader: u8,
+    k: usize,
+    trace: bool,
+    rbuf: &mut Vec<u8>,
+) {
+    let mut got = vec![false; k];
+    let mut missing = k;
+    // bounded best-effort wait — generous for TCP, instant in-process
+    let deadline = Some(Duration::from_millis(2000));
+    while missing > 0 {
+        match net.recv_deadline(leader, rbuf, deadline) {
+            RecvOutcome::Frame => {}
+            RecvOutcome::PeerDown(_) => continue,
+            RecvOutcome::TimedOut | RecvOutcome::Closed => break,
+        }
+        let f = Frame::parse(rbuf).expect("leader: bad frame");
+        match f.kind {
+            FrameKind::Stats => {
+                let core = f.target as usize;
+                if core >= k || got[core] {
+                    continue;
+                }
+                got[core] = true;
+                missing -= 1;
+                if !trace {
+                    // the frames are still drained (workers always send
+                    // them) but an untraced leader reports no timeline,
+                    // whatever the workers' own setting was
+                    continue;
+                }
+                for i in 0..f.count as usize {
+                    let w = [
+                        f.word(i * 5),
+                        f.word(i * 5 + 1),
+                        f.word(i * 5 + 2),
+                        f.word(i * 5 + 3),
+                        f.word(i * 5 + 4),
+                    ];
+                    if let Some(s) = TraceSpan::from_words(f.sender, core as u8, &w) {
+                        report.spans.push(s);
+                    }
+                }
+            }
+            // a failed attempt's stale tallies can trail in behind the
+            // Stop — they were accounted (or superseded) already
+            _ => continue,
+        }
+    }
+    report.spans.sort_by_key(|s| (s.worker, s.core, s.start_ns, s.dur_ns));
 }
 
 #[cfg(test)]

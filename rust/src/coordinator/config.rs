@@ -188,6 +188,12 @@ pub struct EngineConfig {
     /// decode once every missing coded frame is pure padding). `None`
     /// waits forever.
     pub phase_deadline_ms: Option<u64>,
+    /// Record flight-recorder phase spans ([`crate::obs`]) on every
+    /// core. On by default: recording is allocation-free and the
+    /// `observer_overhead` bench section pins its cost under 5%.
+    /// Traced and untraced runs are bit-identical on every driver
+    /// (pinned in `tests/driver_matrix.rs`).
+    pub trace: bool,
 }
 
 impl Default for EngineConfig {
@@ -201,6 +207,7 @@ impl Default for EngineConfig {
             parallel: true,
             fail_workers: [None, None],
             phase_deadline_ms: None,
+            trace: true,
         }
     }
 }
@@ -215,6 +222,7 @@ mod tests {
         assert_eq!(c.scheme, Scheme::Coded);
         assert!(c.time.map_edge_s > 0.0);
         assert!(!c.validate);
+        assert!(c.trace, "the flight recorder is on by default");
     }
 
     #[test]

@@ -48,6 +48,7 @@ use crate::graph::csr::{Csr, Vertex};
 use crate::mapreduce::program::VertexProgram;
 use crate::mapreduce::sssp::EdgeWeights;
 use crate::network::Bus;
+use crate::obs::{measured_phase_times, now_ns, Phase, TraceSpan};
 #[cfg(feature = "xla")]
 use crate::runtime::BlockExecutor;
 use crate::shuffle::combined::{
@@ -550,6 +551,9 @@ pub struct EngineScratch {
     fabric: DirectFabric,
     /// Job fingerprint the cores were built for (see [`ScratchKey`]).
     key: Option<ScratchKey>,
+    /// Iterations run since the cores were (re)built — the flight
+    /// recorder's iteration tag.
+    iters_run: u32,
 }
 
 /// Fingerprint of the job a scratch's cores were built for: scheme, the
@@ -624,7 +628,21 @@ impl EngineScratch {
                 .collect();
             self.fabric = DirectFabric::default();
             self.key = Some(key);
+            self.iters_run = 0;
         }
+    }
+
+    /// Drain every core's flight-recorder spans (oldest first, cores
+    /// ascending) into one timeline — the engine's cores are in-process,
+    /// so each span's physical worker equals its logical core. Called at
+    /// job end (allocates; the per-iteration hot path never drains).
+    pub fn take_spans(&mut self) -> Vec<TraceSpan> {
+        let mut out = Vec::new();
+        for core in &mut self.cores {
+            let me = core.me();
+            core.drain_spans(me, &mut out);
+        }
+        out
     }
 }
 
@@ -660,8 +678,14 @@ pub fn run_iteration_scratch(
     let mut bus = Bus::new(cfg.bus);
 
     scratch.ensure_cores(job, prep.scheme);
+    let iter_tag = scratch.iters_run;
+    scratch.iters_run += 1;
     let EngineScratch { cores, fabric, .. } = scratch;
     let cores = cores.as_mut_slice();
+    for core in cores.iter_mut() {
+        core.set_trace(cfg.trace);
+        core.set_trace_iter(iter_tag);
+    }
 
     // ---- Map phase (modeled: parallel across workers) -------------------
     let modeled = prep.modeled_compute_times(&cfg.time);
@@ -750,9 +774,21 @@ pub fn run_iteration_scratch(
             // state write-back: each vertex is finalized exactly once by
             // its owner core, so the assembly order is immaterial to the
             // values; serial keeps it cheap and obviously deterministic
-            for (kk, core) in cores.iter().enumerate() {
-                for (slot, &i) in alloc.reduce_sets[kk].iter().enumerate() {
+            for (kk, core) in cores.iter_mut().enumerate() {
+                let rows = &alloc.reduce_sets[kk];
+                let traced = core.spans_enabled();
+                let t0 = if traced { now_ns() } else { 0 };
+                for (slot, &i) in rows.iter().enumerate() {
                     next[i as usize] = f64::from_bits(core.next_bits()[slot]);
+                }
+                if traced {
+                    core.note_span(
+                        Phase::WriteBack,
+                        t0,
+                        now_ns() - t0,
+                        rows.len() as u64 * 8,
+                        rows.len() as u32,
+                    );
                 }
             }
         }
@@ -883,6 +919,8 @@ pub fn run(
         std::mem::swap(&mut state, &mut next);
         report.iterations.push(metrics);
     }
+    report.spans = scratch.take_spans();
+    report.measured = measured_phase_times(&report.spans);
     report.final_state = state;
     report
 }
@@ -922,6 +960,8 @@ pub fn run_until(
             break;
         }
     }
+    report.spans = scratch.take_spans();
+    report.measured = measured_phase_times(&report.spans);
     report.final_state = state;
     (report, used)
 }

@@ -51,6 +51,7 @@
 use crate::allocation::Allocation;
 use crate::graph::csr::{Csr, Vertex};
 use crate::mapreduce::program::VertexProgram;
+use crate::obs::{now_ns, Phase, SpanRing, TraceSpan};
 use crate::shuffle::coded::{encode_sender_into, eval_rows_except, segment_index};
 use crate::shuffle::combined::combined_value;
 use crate::shuffle::decoder::decode_sender_into;
@@ -181,6 +182,10 @@ pub struct WorkerCore {
     skipped: u32,
     /// Raw-row scratch for degraded-group donor duties.
     raw_row: Vec<u64>,
+    /// Flight-recorder span ring ([`crate::obs`]): preallocated at
+    /// construction, written in place on the hot path (no steady-state
+    /// allocation — covered by the `tests/zero_alloc.rs` audit).
+    obs: SpanRing,
 }
 
 /// The IV value both schemes and the decoder share — a pure function of
@@ -306,6 +311,7 @@ impl WorkerCore {
             seen: vec![false; n_slots * (r + 1)],
             skipped: 0,
             raw_row: Vec::new(),
+            obs: SpanRing::default(),
         }
     }
 
@@ -350,6 +356,39 @@ impl WorkerCore {
         self.skipped
     }
 
+    /// Turn flight-recorder span recording on or off ([`crate::obs`];
+    /// on by default).
+    pub fn set_trace(&mut self, on: bool) {
+        self.obs.set_enabled(on);
+    }
+
+    /// Is the flight recorder recording on this core?
+    #[inline]
+    pub fn spans_enabled(&self) -> bool {
+        self.obs.enabled()
+    }
+
+    /// Tag subsequently recorded spans with iteration `it`.
+    pub fn set_trace_iter(&mut self, it: u32) {
+        self.obs.set_iter(it);
+    }
+
+    /// Record an externally measured span into this core's ring — for
+    /// the phase windows the core does not own: the engine's serial
+    /// write-back, the cluster worker's own receive loop, and its
+    /// state-update application. No-op while tracing is off.
+    pub fn note_span(&mut self, phase: Phase, start_ns: u64, dur_ns: u64, bytes: u64, frames: u32) {
+        self.obs.record(phase, start_ns, dur_ns, bytes, frames);
+    }
+
+    /// Drain this core's recorded spans (oldest first) into `out`,
+    /// stamped with the *physical* hosting endpoint `worker` (the core's
+    /// own id is the logical tid — they differ for adopted ghost cores).
+    /// Returns how many spans the ring overwrote before this drain.
+    pub fn drain_spans(&mut self, worker: u8, out: &mut Vec<TraceSpan>) -> u64 {
+        self.obs.drain_into(worker, self.prep.me, out)
+    }
+
     /// Extend this core for degraded-mode execution after the leader
     /// declared `dead` (ascending): flag the degraded recv slots,
     /// recompute the per-iteration expectations (a degraded group
@@ -365,6 +404,7 @@ impl WorkerCore {
     pub fn adopt(&mut self, job: &Job<'_>, dead: &[u8], epoch: u8) {
         let alloc = job.alloc;
         self.epoch = epoch;
+        self.obs.set_epoch(epoch);
         self.dead.clear();
         self.dead.extend_from_slice(dead);
         let adopter =
@@ -508,6 +548,14 @@ impl WorkerCore {
         let (g, alloc, prog) = (job.graph, job.alloc, job.program);
         let me = self.prep.me;
         let (combined, r, sb, src_only) = (self.combined, self.r, self.sb, self.src_only);
+        // flight recorder: everything outside the fabric calls is Encode
+        // (Map evaluation is fused into the encode loops); time spent
+        // inside `stage_*` is Stage and `complete_sends` is Flush. The
+        // clock only runs while tracing is on, so untraced runs pay a
+        // branch per fabric call and nothing else.
+        let traced = self.obs.enabled();
+        let t0 = if traced { now_ns() } else { 0 };
+        let mut stage_ns = 0u64;
         self.refresh_local_cache(job, state);
         let qbits: &[u64] = &self.qbits;
         let value = move |i: Vertex, j: Vertex| {
@@ -555,7 +603,11 @@ impl WorkerCore {
                     self.receivers.push(m);
                 }
             }
+            let ts = if traced { now_ns() } else { 0 };
             fabric.stage_multicast(&self.receivers, &self.sendbuf);
+            if traced {
+                stage_ns += now_ns() - ts;
+            }
             iter_frames += 1; // one multicast = one transmission
             iter_bytes += self.sendbuf.len() as u64;
         }
@@ -573,7 +625,11 @@ impl WorkerCore {
             // a dead receiver's transfers reroute to its adopter (identity
             // route while everyone is alive)
             let to = self.route[t.receiver as usize];
+            let ts = if traced { now_ns() } else { 0 };
             fabric.stage_unicast(to, &self.sendbuf);
+            if traced {
+                stage_ns += now_ns() - ts;
+            }
             if to != me {
                 iter_frames += 1;
                 iter_bytes += self.sendbuf.len() as u64;
@@ -604,7 +660,11 @@ impl WorkerCore {
                     frame::encode_recover_row(&mut self.sendbuf, me, wire, m, &self.raw_row);
                     frame::stamp_epoch(&mut self.sendbuf, self.epoch);
                     let to = self.route[m as usize];
+                    let ts = if traced { now_ns() } else { 0 };
                     fabric.stage_unicast(to, &self.sendbuf);
+                    if traced {
+                        stage_ns += now_ns() - ts;
+                    }
                     if to != me {
                         iter_frames += 1;
                         iter_bytes += self.sendbuf.len() as u64;
@@ -612,7 +672,18 @@ impl WorkerCore {
                 }
             }
         }
+        let tf = if traced { now_ns() } else { 0 };
         fabric.complete_sends(iter_frames, iter_bytes);
+        if traced {
+            let flush_ns = now_ns() - tf;
+            // re-lay the interleaved encode/stage work as sequential
+            // spans inside the real [t0, tf] window so the per-core
+            // timeline stays monotonic and non-overlapping
+            let encode_ns = (tf - t0).saturating_sub(stage_ns);
+            self.obs.record(Phase::Encode, t0, encode_ns, 0, 0);
+            self.obs.record(Phase::Stage, t0 + encode_ns, stage_ns, iter_bytes, iter_frames);
+            self.obs.record(Phase::Flush, tf, flush_ns, 0, 0);
+        }
     }
 
     /// Stash one data frame into its arena slot (state-independent: the
@@ -743,18 +814,36 @@ impl WorkerCore {
     /// the expected per-iteration counts are met, then reset the tallies
     /// so data racing ahead of the next barrier counts toward it.
     pub fn ingest_all(&mut self, fabric: &mut dyn Fabric) {
+        // flight recorder: time blocked inside `recv_data` is RecvWait,
+        // the remainder (parse + arena placement) is Ingest
+        let traced = self.obs.enabled();
+        let t0 = if traced { now_ns() } else { 0 };
+        let mut wait_ns = 0u64;
+        let mut bytes = 0u64;
+        let mut frames = 0u32;
         let mut rbuf = std::mem::take(&mut self.rbuf);
         while !self.data_complete() {
+            let tw = if traced { now_ns() } else { 0 };
             assert!(
                 fabric.recv_data(&mut rbuf),
                 "worker {}: peer disconnected mid-shuffle",
                 self.prep.me
             );
+            if traced {
+                wait_ns += now_ns() - tw;
+                bytes += rbuf.len() as u64;
+                frames += 1;
+            }
             let f = Frame::parse(&rbuf).expect("worker: bad frame");
             self.ingest(&f);
         }
         self.rbuf = rbuf;
         self.reset_ingest();
+        if traced {
+            let ingest_ns = (now_ns() - t0).saturating_sub(wait_ns);
+            self.obs.record(Phase::RecvWait, t0, wait_ns, 0, 0);
+            self.obs.record(Phase::Ingest, t0 + wait_ns, ingest_ns, bytes, frames);
+        }
     }
 
     /// Phases 4–6 (decode → fold → finalize): cancel and reassemble the
@@ -780,6 +869,10 @@ impl WorkerCore {
         let reduce_slot: &[u32] = &self.prep.reduce_slot;
         let qbits: &[u64] = &self.qbits;
         let rows = &alloc.reduce_sets[me as usize];
+        // flight recorder: the coded cancellation loop is Decode, the
+        // rest (local fold, uncoded fold, finalize) is Fold
+        let traced = self.obs.enabled();
+        let t0 = if traced { now_ns() } else { 0 };
 
         // local fold; the src_only path reuses the per-iteration `qbits`
         // cache filled at stage time — every neighbor j here has degree
@@ -800,6 +893,7 @@ impl WorkerCore {
         }
 
         let mut validated = 0u32;
+        let td = if traced { now_ns() } else { 0 };
         // coded: cancel + reassemble per group, fold in pair order. The
         // cancellation values were evaluated into `gvals` at stage time
         // (same skip index, same frozen state); a recv-group we did not
@@ -851,6 +945,7 @@ impl WorkerCore {
             }
             validated += my_len as u32;
         }
+        let decode_ns = if traced { now_ns() - td } else { 0 };
         // uncoded: fold received batches in canonical transfer order
         for (pos, &ti) in self.prep.unc_recv().iter().enumerate() {
             let t = &self.prep.transfers[ti as usize];
@@ -872,6 +967,14 @@ impl WorkerCore {
                 prog.finalize(i, self.accs[slot], state[i as usize], g).to_bits();
         }
         self.last_validated = validated;
+        if traced {
+            // re-lay as Decode-then-Fold inside the real window (the
+            // local fold actually ran first; the track only needs to be
+            // monotonic and the durations honest)
+            let fold_ns = (now_ns() - t0).saturating_sub(decode_ns);
+            self.obs.record(Phase::Decode, t0, decode_ns, 0, self.my_gids.len() as u32);
+            self.obs.record(Phase::Fold, t0 + decode_ns, fold_ns, 0, validated);
+        }
         validated
     }
 

@@ -1,5 +1,6 @@
 //! Phase metrics: the quantities every figure of the paper plots.
 
+use crate::obs::{TraceSpan, WorkerPhaseTimes};
 use crate::shuffle::load::ShuffleLoad;
 
 /// Simulated per-phase times of one iteration (paper Fig 2 / Fig 7 bars).
@@ -73,6 +74,16 @@ pub struct JobReport {
     /// Degraded-mode accounting (cluster drivers only; the engine never
     /// fails and leaves this at the default).
     pub recovery: RecoveryStats,
+    /// The flight recorder's raw span timeline (empty when tracing is
+    /// off): every phase span of every core, cluster-wide — the engine
+    /// drains its cores directly, the cluster leader assembles the
+    /// workers' end-of-job `Stats` frames.
+    pub spans: Vec<TraceSpan>,
+    /// *Measured* wall-clock phase times per `(worker, core)`, folded
+    /// from [`JobReport::spans`] — the real counterpart of the modeled
+    /// [`PhaseTimes`] in [`IterationMetrics::times`], making
+    /// modeled-vs-measured drift a first-class quantity.
+    pub measured: Vec<WorkerPhaseTimes>,
 }
 
 impl JobReport {

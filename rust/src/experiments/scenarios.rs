@@ -17,7 +17,8 @@
 use crate::allocation::Allocation;
 use crate::coordinator::spec::{self, AllocKind, GraphSpec, JobSpec, ProgramSpec};
 use crate::coordinator::{
-    run_cluster_on, run_rust, EngineConfig, Job, JobReport, PhaseTimes, Scheme, TimeModel,
+    run_cluster_on, run_rust, EngineConfig, Job, JobReport, PhaseTimes, RecoveryStats, Scheme,
+    TimeModel,
 };
 use crate::graph::csr::Csr;
 use crate::graph::er::er;
@@ -25,6 +26,7 @@ use crate::graph::powerlaw::{pl, PlParams};
 use crate::graph::sbm::sbm;
 use crate::mapreduce::PageRank;
 use crate::network::BusConfig;
+use crate::obs::{TraceSpan, WorkerPhaseTimes};
 use crate::transport::TransportKind;
 use crate::util::rng::DetRng;
 
@@ -114,6 +116,13 @@ pub struct ScenarioRow {
     pub load: f64,
     /// Engine wall time (the rust implementation's own speed).
     pub wall_s: f64,
+    /// *Measured* per-(worker, core) phase times from the flight
+    /// recorder — the real-wall counterpart of the modeled `times`.
+    pub measured: Vec<WorkerPhaseTimes>,
+    /// Degraded-mode accounting of this row's run (all zeros normally).
+    pub recovery: RecoveryStats,
+    /// The raw span timeline (feeds the scenario CLI's `--trace`).
+    pub spans: Vec<TraceSpan>,
 }
 
 /// The testbed config: paper's 100 Mbps NICs + mpi4py-ish compute speeds.
@@ -125,6 +134,7 @@ pub fn testbed() -> EngineConfig {
         account_state_update: true,
         validate: false,
         parallel: true,
+        ..EngineConfig::default()
     }
 }
 
@@ -220,6 +230,9 @@ pub fn row_from_report(r: usize, scheme: Scheme, report: &JobReport, n: usize) -
         total_s: m.times.total(),
         load: m.shuffle.normalized(n),
         wall_s: m.wall_s,
+        measured: report.measured.clone(),
+        recovery: report.recovery,
+        spans: report.spans.clone(),
     }
 }
 

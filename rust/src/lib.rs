@@ -37,6 +37,7 @@
 //! | [`network`] | shared-bus wire-time model (one transmitter at a time) |
 //! | [`transport`] | wire-format frames + pluggable backends (in-proc rings, localhost TCP mesh, process-separated endpoints) + the bootstrap rendezvous |
 //! | [`coordinator`] | the one worker core ([`coordinator::WorkerCore`] + [`coordinator::Fabric`]), phase engine (reusable [`coordinator::EngineScratch`], zero-alloc steady state, rayon fan-out over cores), transport-backed cluster driver, serializable job specs, metrics |
+//! | [`obs`] | the flight recorder: preallocated per-core [`obs::SpanRing`] phase spans, measured per-worker [`obs::WorkerPhaseTimes`], Chrome trace-event export |
 //! | `runtime` | PJRT artifact loading / execution (AOT JAX+Pallas; `xla` feature) |
 //! | [`analysis`] | closed forms of Theorems 1–4, Lemma 3 bound, stats helpers |
 //! | [`util`] | deterministic RNG, JSON, bench/test kits, [`util::par`] parallelism shim |
@@ -81,6 +82,7 @@ pub mod coordinator;
 pub mod graph;
 pub mod mapreduce;
 pub mod network;
+pub mod obs;
 #[cfg(feature = "xla")]
 pub mod runtime;
 pub mod shuffle;

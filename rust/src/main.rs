@@ -8,17 +8,29 @@
 //! coded-graph run       --graph er|rb|sbm|pl --n N --k K --r R
 //!                       [--p P] [--q Q] [--gamma G] [--program pagerank|sssp]
 //!                       [--scheme coded|uncoded] [--iters I] [--cluster]
+//!                       [--trace PATH]
 //! coded-graph cluster   --graph er|rb|sbm|pl --n N --k K --r R
 //!                       [--transport inproc|tcp] [--processes] [--no-spawn]
 //!                       [--check] [--program ...] [--scheme ...] [--iters I]
 //!                       [--bind IP[:PORT]] [--advertise IP[:PORT]]
 //!                       [--fail-worker ID@ITER[,ID@ITER]] [--phase-deadline-ms MS]
+//!                       [--trace PATH] [--json PATH]
 //! coded-graph worker    --connect ADDR --id K [--timeout-s 60]
 //!                       [--bind IP[:PORT]] [--advertise IP[:PORT]]
-//!                       [--fail-at ITER] [--phase-deadline-ms MS]
+//!                       [--fail-at ITER] [--phase-deadline-ms MS] [--trace PATH]
+//! coded-graph trace-summary --path TRACE.json
 //! coded-graph inspect   --graph er|rb|sbm|pl --n N [--p P] [--q Q] [--gamma G]
 //! coded-graph artifacts [--dir artifacts]
 //! ```
+//!
+//! `--trace PATH` (run / scenario / cluster / worker) writes the flight
+//! recorder's timeline ([`coded_graph::obs`]) as Chrome trace-event JSON
+//! — one pid per worker, one tid per core, phase spans as complete
+//! events, recovery epochs as instant events — viewable in
+//! `chrome://tracing` / Perfetto and foldable back into the paper's
+//! phase buckets with `trace-summary`. `--json PATH` (scenario /
+//! cluster) writes a machine-readable report: loads, paper buckets,
+//! modeled *and* measured phase times, and recovery stats.
 //!
 //! Every experiment harness lives in `coded_graph::experiments`; the CLI is
 //! a thin printer. `cargo bench` regenerates the paper's figures through
@@ -60,9 +72,11 @@ use coded_graph::coordinator::{
 use coded_graph::experiments::{fig5, models, scenarios};
 use coded_graph::graph::properties;
 use coded_graph::mapreduce::VertexProgram;
+use coded_graph::obs::{self, Phase};
 use coded_graph::transport::{bootstrap, TcpEndpoint, TransportKind};
 use coded_graph::util::benchkit::Table;
 use coded_graph::util::cli::Args;
+use coded_graph::util::json::Json;
 use coded_graph::Csr;
 
 fn main() {
@@ -81,6 +95,7 @@ fn main() {
         Some("run") => cmd_run(&args),
         Some("cluster") => cmd_cluster(&args),
         Some("worker") => cmd_worker(&args),
+        Some("trace-summary") => cmd_trace_summary(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("artifacts") => cmd_artifacts(&args),
         _ => {
@@ -113,8 +128,185 @@ fn usage() {
     println!("  cluster/worker accept --bind IP[:PORT] / --advertise IP[:PORT] for");
     println!("  multi-host --no-spawn deployments (loopback default; the sockets");
     println!("  carry no auth — bind non-loopback only on trusted networks)");
+    println!();
+    println!("  run/scenario/cluster/worker accept --trace PATH (write the flight");
+    println!("  recorder's timeline as Chrome trace-event JSON: load it in");
+    println!("  chrome://tracing or Perfetto; one pid per worker, one tid per core);");
+    println!("  scenario/cluster also accept --json PATH (machine-readable report:");
+    println!("  loads, paper buckets, modeled + measured phase times, recovery stats)");
+    println!("  trace-summary  print per-phase totals of a --trace file (--path FILE)");
     println!("  inspect    generate a graph and print its statistics");
     println!("  artifacts  list the AOT artifacts and smoke-run one");
+}
+
+/// `--trace PATH`: dump the report's flight-recorder spans as a Chrome
+/// trace-event file (a no-op message when the run recorded nothing).
+fn write_trace_if_asked(args: &Args, report: &JobReport) -> Result<(), String> {
+    let Some(path) = args.get("trace") else { return Ok(()) };
+    obs::write_chrome_trace(path, &report.spans).map_err(|e| format!("--trace {path}: {e}"))?;
+    println!("chrome trace: {} spans -> {path}", report.spans.len());
+    Ok(())
+}
+
+/// One `measured` entry as JSON (seconds, same field names as the
+/// modeled times so report consumers can diff them directly).
+fn measured_json(w: &coded_graph::obs::WorkerPhaseTimes) -> Json {
+    let t = &w.times;
+    Json::obj(vec![
+        ("worker", Json::Num(w.worker as f64)),
+        ("core", Json::Num(w.core as f64)),
+        ("map_s", Json::Num(t.map_s)),
+        ("encode_s", Json::Num(t.encode_s)),
+        ("shuffle_s", Json::Num(t.shuffle_s)),
+        ("decode_s", Json::Num(t.decode_s)),
+        ("reduce_s", Json::Num(t.reduce_s)),
+        ("update_s", Json::Num(t.update_s)),
+    ])
+}
+
+/// The machine-readable job report behind `cluster --json PATH`.
+fn report_json(report: &JobReport, n: usize, k: usize, r: usize, scheme: Scheme) -> Json {
+    let t = report.summed_times();
+    let (map, shuffle, reduce) = t.paper_buckets();
+    let iters: Vec<Json> = report
+        .iterations
+        .iter()
+        .map(|m| {
+            Json::obj(vec![
+                ("modeled_total_s", Json::Num(m.times.total())),
+                ("wall_s", Json::Num(m.wall_s)),
+                ("normalized_load", Json::Num(m.shuffle.normalized(n))),
+                ("validated_ivs", Json::Num(m.validated_ivs as f64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("n", Json::Num(n as f64)),
+        ("k", Json::Num(k as f64)),
+        ("r", Json::Num(r as f64)),
+        ("scheme", Json::Str(scheme.token().into())),
+        ("iterations", Json::Arr(iters)),
+        (
+            "modeled_times_s",
+            Json::obj(vec![
+                ("map", Json::Num(t.map_s)),
+                ("encode", Json::Num(t.encode_s)),
+                ("shuffle", Json::Num(t.shuffle_s)),
+                ("decode", Json::Num(t.decode_s)),
+                ("reduce", Json::Num(t.reduce_s)),
+                ("update", Json::Num(t.update_s)),
+                ("total", Json::Num(t.total())),
+            ]),
+        ),
+        (
+            "paper_buckets_s",
+            Json::obj(vec![
+                ("map", Json::Num(map)),
+                ("shuffle", Json::Num(shuffle)),
+                ("reduce", Json::Num(reduce)),
+            ]),
+        ),
+        ("mean_normalized_load", Json::Num(report.mean_normalized_load(n))),
+        ("measured", Json::Arr(report.measured.iter().map(measured_json).collect())),
+        ("span_count", Json::Num(report.spans.len() as f64)),
+        ("recovery", recovery_json(&report.recovery)),
+    ])
+}
+
+fn recovery_json(rec: &coded_graph::coordinator::RecoveryStats) -> Json {
+    Json::obj(vec![
+        ("failures", Json::Num(rec.failures as f64)),
+        ("recovered_groups", Json::Num(rec.recovered_groups as f64)),
+        ("recovery_ms", Json::Num(rec.recovery_ms)),
+        ("load_inflation", Json::Num(rec.load_inflation)),
+        ("skipped_frames", Json::Num(rec.skipped_frames as f64)),
+    ])
+}
+
+/// The machine-readable r-sweep behind `scenario --json PATH`.
+fn scenario_json(sc: &scenarios::Scenario, driver: &str, rows: &[scenarios::ScenarioRow]) -> Json {
+    let jrows: Vec<Json> = rows
+        .iter()
+        .map(|row| {
+            let t = &row.times;
+            let (map, shuffle, reduce) = t.paper_buckets();
+            Json::obj(vec![
+                ("r", Json::Num(row.r as f64)),
+                ("scheme", Json::Str(row.scheme.token().into())),
+                (
+                    "modeled_times_s",
+                    Json::obj(vec![
+                        ("map", Json::Num(t.map_s)),
+                        ("encode", Json::Num(t.encode_s)),
+                        ("shuffle", Json::Num(t.shuffle_s)),
+                        ("decode", Json::Num(t.decode_s)),
+                        ("reduce", Json::Num(t.reduce_s)),
+                        ("update", Json::Num(t.update_s)),
+                        ("total", Json::Num(row.total_s)),
+                    ]),
+                ),
+                (
+                    "paper_buckets_s",
+                    Json::obj(vec![
+                        ("map", Json::Num(map)),
+                        ("shuffle", Json::Num(shuffle)),
+                        ("reduce", Json::Num(reduce)),
+                    ]),
+                ),
+                ("normalized_load", Json::Num(row.load)),
+                ("wall_s", Json::Num(row.wall_s)),
+                ("measured", Json::Arr(row.measured.iter().map(measured_json).collect())),
+                ("recovery", recovery_json(&row.recovery)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("scenario", Json::Num(sc.id as f64)),
+        ("name", Json::Str(sc.name.into())),
+        ("n", Json::Num(sc.n as f64)),
+        ("k", Json::Num(sc.k as f64)),
+        ("driver", Json::Str(driver.into())),
+        ("rows", Json::Arr(jrows)),
+    ])
+}
+
+/// `--json PATH`: write `json` (pretty enough for diffs: one object).
+fn write_json_if_asked(args: &Args, json: &Json) -> Result<(), String> {
+    let Some(path) = args.get("json") else { return Ok(()) };
+    std::fs::write(path, format!("{json}\n")).map_err(|e| format!("--json {path}: {e}"))?;
+    println!("json report -> {path}");
+    Ok(())
+}
+
+/// `coded-graph trace-summary --path FILE`: fold a `--trace` file back
+/// into the paper's phase buckets and print a bar table.
+fn cmd_trace_summary(args: &Args) -> Result<(), String> {
+    args.check_known(&["path"])?;
+    let path = args.get("path").ok_or("trace-summary: --path <trace.json> is required")?;
+    let raw = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    let json = Json::parse(&raw).map_err(|e| format!("{path}: {e}"))?;
+    let s = obs::summarize_chrome(&json)?;
+    println!(
+        "{path}: {} events over {} workers x {} cores ({} recovery marks)\n",
+        s.events,
+        s.pids.len(),
+        s.tids.len(),
+        s.recovery_marks
+    );
+    let max_ms = s.totals_ms.iter().cloned().fold(0.0f64, f64::max).max(1e-9);
+    let mut t = Table::new(&["phase", "total", "spans", ""]);
+    for ph in Phase::ALL {
+        let (ms, cnt) = (s.totals_ms[ph as usize], s.counts[ph as usize]);
+        let bar = "#".repeat(((ms / max_ms) * 40.0).round() as usize);
+        t.row(&[ph.name().to_string(), format!("{ms:.3}ms"), cnt.to_string(), bar]);
+    }
+    t.print();
+    let (map, shuffle, reduce) = s.paper_buckets_ms();
+    println!(
+        "\npaper buckets: map+encode={map:.3}ms shuffle={shuffle:.3}ms reduce+update={reduce:.3}ms (total {:.3}ms)",
+        s.total_ms()
+    );
+    Ok(())
 }
 
 fn cmd_fig5(args: &Args) -> Result<(), String> {
@@ -150,7 +342,7 @@ fn cmd_fig5(args: &Args) -> Result<(), String> {
 }
 
 fn cmd_scenario(args: &Args) -> Result<(), String> {
-    args.check_known(&["id", "scale", "full", "seed", "driver", "timeout-s"])?;
+    args.check_known(&["id", "scale", "full", "seed", "driver", "timeout-s", "trace", "json"])?;
     let id = args.get_or("id", 2usize)?;
     let scale = if args.has("full") { 1 } else { args.get_or("scale", 6usize)? };
     let seed = args.get_or("seed", 7u64)?;
@@ -176,6 +368,13 @@ fn cmd_scenario(args: &Args) -> Result<(), String> {
         }
     };
     print_scenario_rows(&rows);
+    write_json_if_asked(args, &scenario_json(&sc, driver, &rows))?;
+    if let Some(path) = args.get("trace") {
+        // one timeline per file: the sweep's last (highest-r) row
+        let spans = &rows.last().expect("sweep has rows").spans;
+        obs::write_chrome_trace(path, spans).map_err(|e| format!("--trace {path}: {e}"))?;
+        println!("chrome trace (last row, {} spans) -> {path}", spans.len());
+    }
     let (best_r, speedup) = scenarios::speedup_over_naive(&rows);
     let naive = rows.iter().find(|r| r.r == 1).unwrap();
     println!(
@@ -370,6 +569,16 @@ fn print_job_summary(
         "mean normalized shuffle load: {:.6}",
         report.mean_normalized_load(g.n())
     );
+    if !report.measured.is_empty() {
+        println!("measured phase times ({} cores):", report.measured.len());
+        for w in &report.measured {
+            let t = &w.times;
+            println!(
+                "  worker {:2} core {:2}: encode={:.4}s shuffle={:.4}s decode={:.4}s reduce={:.4}s update={:.4}s",
+                w.worker, w.core, t.encode_s, t.shuffle_s, t.decode_s, t.reduce_s, t.update_s
+            );
+        }
+    }
     let mut top: Vec<(usize, f64)> = report.final_state.iter().copied().enumerate().collect();
     top.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
     println!("top-5 final states: {:?}", &top[..5.min(top.len())]);
@@ -378,7 +587,7 @@ fn print_job_summary(
 fn cmd_run(args: &Args) -> Result<(), String> {
     args.check_known(&[
         "graph", "n", "k", "r", "p", "q", "gamma", "rho-scale", "seed", "program", "scheme", "iters",
-        "cluster", "source",
+        "cluster", "source", "trace",
     ])?;
     let g = build_graph(args)?;
     let k = args.get_or("k", 5usize)?;
@@ -397,6 +606,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         run_rust(&job, &cfg, iters)
     };
     print_job_summary(&report, &*program, &g, k, r, scheme, iters);
+    write_trace_if_asked(args, &report)?;
     Ok(())
 }
 
@@ -434,7 +644,7 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
     args.check_known(&[
         "graph", "n", "k", "r", "p", "q", "gamma", "rho-scale", "seed", "program", "scheme", "iters",
         "transport", "source", "processes", "check", "timeout-s", "no-spawn", "bind", "advertise",
-        "fail-worker", "phase-deadline-ms",
+        "fail-worker", "phase-deadline-ms", "trace", "json",
     ])?;
     let spec = cluster_job_spec(args)?;
     let transport: TransportKind = args.get("transport").unwrap_or("inproc").parse()?;
@@ -477,6 +687,8 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
     print_job_summary(&report, &*built.program, &built.graph, k, r, spec.scheme, spec.iters);
     let wall: f64 = report.iterations.iter().map(|m| m.wall_s).sum();
     println!("real wall time across iterations: {wall:.3}s");
+    write_trace_if_asked(args, &report)?;
+    write_json_if_asked(args, &report_json(&report, built.graph.n(), k, r, spec.scheme))?;
     if args.has("check") {
         let want = run_rust(&built.job(), &cfg, spec.iters);
         for (i, (a, b)) in report.final_state.iter().zip(&want.final_state).enumerate() {
@@ -632,7 +844,7 @@ fn run_processes(
 
 fn cmd_worker(args: &Args) -> Result<(), String> {
     args.check_known(&[
-        "connect", "id", "timeout-s", "bind", "advertise", "fail-at", "phase-deadline-ms",
+        "connect", "id", "timeout-s", "bind", "advertise", "fail-at", "phase-deadline-ms", "trace",
     ])?;
     let rendezvous = args
         .get("connect")
@@ -681,12 +893,18 @@ fn cmd_worker(args: &Args) -> Result<(), String> {
                     .map_err(|_| format!("--phase-deadline-ms: cannot parse {v:?}"))
             })
             .transpose()?,
+        trace: true,
     };
     // a peer failure panics out of run_worker_with; the guard inside
     // aborts our endpoint and the nonzero exit is the leader's signal
     // (an injected --fail-at death still exits 0: the *endpoint* dies
     // abnormally, the process is reaped cleanly)
-    run_worker_with(id, &job, prep, &net, opts);
+    let spans = run_worker_with(id, &job, prep, &net, opts);
+    // the leader gets the same spans via the Stats frames; --trace here
+    // additionally keeps a local per-process timeline
+    if let Some(path) = args.get("trace") {
+        obs::write_chrome_trace(path, &spans).map_err(|e| format!("--trace {path}: {e}"))?;
+    }
     Ok(())
 }
 

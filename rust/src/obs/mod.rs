@@ -1,0 +1,718 @@
+//! The flight recorder: zero-allocation phase tracing for every driver.
+//!
+//! The paper's headline evidence is a *measured* per-phase time breakdown
+//! (§VI bar charts). The engine and cluster drivers model those times
+//! deterministically ([`PhaseTimes`]); this module measures them for
+//! real, per worker, per core, per iteration, with overhead low enough
+//! to leave on (the `observer_overhead` bench section pins it < 5%).
+//!
+//! ## Span taxonomy
+//!
+//! One [`WorkerCore`](crate::coordinator::WorkerCore) iteration emits up
+//! to eight [`Phase`] spans, re-laid sequentially inside each phase
+//! window so every `(pid, tid)` track is monotonic and non-overlapping:
+//!
+//! | span | measures |
+//! |---|---|
+//! | `Encode` | Map-value evaluation + XOR table encode (fused loop) |
+//! | `Stage` | serializing frames into the fabric's send surface |
+//! | `Flush` | `Fabric::complete_sends` (wire flush + `SendDone`) |
+//! | `RecvWait` | blocking inside `recv` while frames are owed |
+//! | `Ingest` | parsing + arena placement of received frames |
+//! | `Decode` | XOR cancellation of coded multicasts |
+//! | `Fold` | Reduce folds (local, uncoded, finalize) |
+//! | `WriteBack` | state write-back application |
+//!
+//! Each span records `(iter, epoch, phase, start_ns, dur_ns, bytes,
+//! frames)` into a preallocated per-core [`SpanRing`] — no steady-state
+//! heap allocation (audited by `tests/zero_alloc.rs` with tracing ON).
+//! The ring is a true flight recorder: when it wraps, the oldest spans
+//! are overwritten and counted in [`SpanRing::dropped`].
+//!
+//! ## Wire path and export
+//!
+//! Remote workers ship their rings to the leader at job end in one
+//! `Stats` frame per hosted core (ghost cores included, tagged with
+//! their recovery epoch) — see
+//! [`frame::encode_stats`](crate::transport::frame::encode_stats). The
+//! leader assembles the cluster-wide timeline into
+//! [`JobReport::spans`](crate::coordinator::JobReport) and folds it to
+//! [`JobReport::measured`](crate::coordinator::JobReport) — measured
+//! [`PhaseTimes`] per worker, directly comparable against the modeled
+//! ones. `--trace PATH` exports Chrome trace-event JSON ([`chrome_trace`];
+//! loadable in `chrome://tracing` / Perfetto): one pid per physical
+//! worker, one tid per logical core, phases as complete events, recovery
+//! epochs as instant events.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use crate::coordinator::metrics::PhaseTimes;
+use crate::util::json::Json;
+
+/// Default span-ring capacity per core (~40 KB): eight spans per
+/// iteration means ~128 iterations of history before the recorder
+/// starts overwriting its oldest spans.
+pub const SPAN_RING_CAPACITY: usize = 1024;
+
+static T0: OnceLock<Instant> = OnceLock::new();
+
+/// Monotonic nanoseconds since the first call in this process — one
+/// shared timebase for every core of a process, so their spans interleave
+/// correctly on one timeline. Allocation-free after the first call.
+/// (Process-separated workers each have their own zero; per-pid tracks
+/// in the Chrome export are self-consistent but not cross-aligned.)
+#[inline]
+pub fn now_ns() -> u64 {
+    T0.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// One instrumented section of the `WorkerCore` phase machine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Phase {
+    Encode = 0,
+    Stage = 1,
+    RecvWait = 2,
+    Ingest = 3,
+    Decode = 4,
+    Fold = 5,
+    WriteBack = 6,
+    Flush = 7,
+}
+
+impl Phase {
+    /// Every phase, in pipeline order.
+    pub const ALL: [Phase; 8] = [
+        Phase::Encode,
+        Phase::Stage,
+        Phase::Flush,
+        Phase::RecvWait,
+        Phase::Ingest,
+        Phase::Decode,
+        Phase::Fold,
+        Phase::WriteBack,
+    ];
+
+    /// Parse a discriminant byte (the wire form in `Stats` frames).
+    pub fn from_u8(b: u8) -> Option<Phase> {
+        Some(match b {
+            0 => Phase::Encode,
+            1 => Phase::Stage,
+            2 => Phase::RecvWait,
+            3 => Phase::Ingest,
+            4 => Phase::Decode,
+            5 => Phase::Fold,
+            6 => Phase::WriteBack,
+            7 => Phase::Flush,
+            _ => return None,
+        })
+    }
+
+    /// Stable event name (the Chrome trace `name` field).
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Encode => "encode",
+            Phase::Stage => "stage",
+            Phase::RecvWait => "recv-wait",
+            Phase::Ingest => "ingest",
+            Phase::Decode => "decode",
+            Phase::Fold => "fold",
+            Phase::WriteBack => "write-back",
+            Phase::Flush => "flush",
+        }
+    }
+
+    /// Inverse of [`Phase::name`].
+    pub fn from_name(s: &str) -> Option<Phase> {
+        Some(match s {
+            "encode" => Phase::Encode,
+            "stage" => Phase::Stage,
+            "recv-wait" => Phase::RecvWait,
+            "ingest" => Phase::Ingest,
+            "decode" => Phase::Decode,
+            "fold" => Phase::Fold,
+            "write-back" => Phase::WriteBack,
+            "flush" => Phase::Flush,
+            _ => return None,
+        })
+    }
+}
+
+impl std::fmt::Display for Phase {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One recorded span as it sits in the ring (no owner ids — those are
+/// the ring's identity, attached when draining to [`TraceSpan`]).
+#[derive(Clone, Copy, Debug)]
+struct Span {
+    iter: u32,
+    epoch: u8,
+    phase: Phase,
+    start_ns: u64,
+    dur_ns: u64,
+    bytes: u64,
+    frames: u32,
+}
+
+impl Default for Span {
+    fn default() -> Self {
+        Span {
+            iter: 0,
+            epoch: 0,
+            phase: Phase::Encode,
+            start_ns: 0,
+            dur_ns: 0,
+            bytes: 0,
+            frames: 0,
+        }
+    }
+}
+
+/// Preallocated per-core span recorder. [`SpanRing::record`] never
+/// allocates: the backing storage is sized once at construction and
+/// overwrites its oldest entry on wrap (counting the loss).
+#[derive(Clone, Debug)]
+pub struct SpanRing {
+    spans: Vec<Span>,
+    next: usize,
+    len: usize,
+    dropped: u64,
+    enabled: bool,
+    iter: u32,
+    epoch: u8,
+}
+
+impl Default for SpanRing {
+    fn default() -> Self {
+        SpanRing::with_capacity(SPAN_RING_CAPACITY)
+    }
+}
+
+impl SpanRing {
+    /// Preallocate a ring for `cap` spans (all memory up front).
+    pub fn with_capacity(cap: usize) -> SpanRing {
+        SpanRing {
+            spans: vec![Span::default(); cap.max(1)],
+            next: 0,
+            len: 0,
+            dropped: 0,
+            enabled: true,
+            iter: 0,
+            epoch: 0,
+        }
+    }
+
+    /// Turn recording on or off ([`record`](SpanRing::record) is a no-op
+    /// while disabled; the storage stays allocated).
+    pub fn set_enabled(&mut self, on: bool) {
+        self.enabled = on;
+    }
+
+    /// Is recording on?
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Tag subsequent spans with iteration `it`.
+    pub fn set_iter(&mut self, it: u32) {
+        self.iter = it;
+    }
+
+    /// Tag subsequent spans with recovery epoch `e`.
+    pub fn set_epoch(&mut self, e: u8) {
+        self.epoch = e;
+    }
+
+    /// Record one span. Allocation-free; overwrites the oldest entry
+    /// (and bumps [`dropped`](SpanRing::dropped)) once the ring is full.
+    #[inline]
+    pub fn record(&mut self, phase: Phase, start_ns: u64, dur_ns: u64, bytes: u64, frames: u32) {
+        if !self.enabled {
+            return;
+        }
+        let cap = self.spans.len();
+        self.spans[self.next] =
+            Span { iter: self.iter, epoch: self.epoch, phase, start_ns, dur_ns, bytes, frames };
+        self.next = (self.next + 1) % cap;
+        if self.len == cap {
+            self.dropped += 1;
+        } else {
+            self.len += 1;
+        }
+    }
+
+    /// Spans currently held.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// No spans recorded (or all drained)?
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Spans overwritten since the last drain.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Drain every held span (oldest first) into `out` as [`TraceSpan`]s
+    /// owned by `(worker, core)`, resetting the ring. Returns the number
+    /// of spans that were overwritten before this drain.
+    pub fn drain_into(&mut self, worker: u8, core: u8, out: &mut Vec<TraceSpan>) -> u64 {
+        let cap = self.spans.len();
+        let start = if self.len == cap { self.next } else { 0 };
+        for i in 0..self.len {
+            let s = self.spans[(start + i) % cap];
+            out.push(TraceSpan {
+                worker,
+                core,
+                iter: s.iter,
+                epoch: s.epoch,
+                phase: s.phase,
+                start_ns: s.start_ns,
+                dur_ns: s.dur_ns,
+                bytes: s.bytes,
+                frames: s.frames,
+            });
+        }
+        let dropped = self.dropped;
+        self.next = 0;
+        self.len = 0;
+        self.dropped = 0;
+        dropped
+    }
+}
+
+/// One drained span with its owner attached: `worker` is the *physical*
+/// endpoint that recorded it (the Chrome pid), `core` the *logical*
+/// worker the span belongs to (the Chrome tid) — they differ exactly for
+/// ghost cores a survivor adopted after a failure (`epoch > 0`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceSpan {
+    pub worker: u8,
+    pub core: u8,
+    pub iter: u32,
+    pub epoch: u8,
+    pub phase: Phase,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    pub bytes: u64,
+    pub frames: u32,
+}
+
+impl TraceSpan {
+    /// Pack into the `Stats`-frame wire form: five u64 words.
+    /// Word 0 packs `iter << 32 | epoch << 8 | phase`.
+    pub fn to_words(&self) -> [u64; 5] {
+        [
+            (self.iter as u64) << 32 | (self.epoch as u64) << 8 | self.phase as u64,
+            self.start_ns,
+            self.dur_ns,
+            self.bytes,
+            self.frames as u64,
+        ]
+    }
+
+    /// Unpack the `Stats`-frame wire form ([`TraceSpan::to_words`]).
+    pub fn from_words(worker: u8, core: u8, w: &[u64; 5]) -> Option<TraceSpan> {
+        Some(TraceSpan {
+            worker,
+            core,
+            iter: (w[0] >> 32) as u32,
+            epoch: (w[0] >> 8) as u8,
+            phase: Phase::from_u8(w[0] as u8)?,
+            start_ns: w[1],
+            dur_ns: w[2],
+            bytes: w[3],
+            frames: w[4] as u32,
+        })
+    }
+}
+
+/// Measured per-core phase times — the flight recorder's answer to the
+/// modeled [`PhaseTimes`], folded from real spans via
+/// [`measured_phase_times`]. `map_s` stays zero: the unified core fuses
+/// Map evaluation into the Encode loop, so measured Map time rides in
+/// `encode_s` (same bucket the paper groups them into anyway).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkerPhaseTimes {
+    /// Physical endpoint that recorded the spans.
+    pub worker: u8,
+    /// Logical core the times belong to (differs from `worker` for
+    /// adopted ghost cores).
+    pub core: u8,
+    /// Measured seconds per phase (wall clock, summed over iterations).
+    pub times: PhaseTimes,
+}
+
+/// Fold spans into per-`(worker, core)` measured [`PhaseTimes`]:
+/// `Encode → encode_s`, `Stage + Flush + RecvWait + Ingest → shuffle_s`,
+/// `Decode → decode_s`, `Fold → reduce_s`, `WriteBack → update_s`.
+pub fn measured_phase_times(spans: &[TraceSpan]) -> Vec<WorkerPhaseTimes> {
+    let mut out: Vec<WorkerPhaseTimes> = Vec::new();
+    for s in spans {
+        let entry = match out.iter_mut().find(|w| w.worker == s.worker && w.core == s.core) {
+            Some(e) => e,
+            None => {
+                out.push(WorkerPhaseTimes { worker: s.worker, core: s.core, ..Default::default() });
+                out.last_mut().unwrap()
+            }
+        };
+        let secs = s.dur_ns as f64 * 1e-9;
+        match s.phase {
+            Phase::Encode => entry.times.encode_s += secs,
+            Phase::Stage | Phase::Flush | Phase::RecvWait | Phase::Ingest => {
+                entry.times.shuffle_s += secs
+            }
+            Phase::Decode => entry.times.decode_s += secs,
+            Phase::Fold => entry.times.reduce_s += secs,
+            Phase::WriteBack => entry.times.update_s += secs,
+        }
+    }
+    out.sort_by_key(|w| (w.worker, w.core));
+    out
+}
+
+/// Build a Chrome trace-event document from drained spans: complete
+/// (`"ph": "X"`) events on one pid per physical worker and one tid per
+/// logical core, timestamps in microseconds, plus one instant
+/// (`"ph": "i"`) event per `(pid, tid)` at each recovery-epoch change.
+/// Loadable in `chrome://tracing` / Perfetto.
+pub fn chrome_trace(spans: &[TraceSpan]) -> Json {
+    let mut sorted: Vec<&TraceSpan> = spans.iter().collect();
+    sorted.sort_by_key(|s| (s.worker, s.core, s.start_ns, s.dur_ns));
+    let mut events: Vec<Json> = Vec::with_capacity(sorted.len());
+    // (worker, core) -> last seen epoch; an increase emits an instant event
+    let mut last_epoch: Vec<((u8, u8), u8)> = Vec::new();
+    for s in sorted {
+        let key = (s.worker, s.core);
+        let prev = match last_epoch.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, e)) => e,
+            None => {
+                last_epoch.push((key, 0));
+                &mut last_epoch.last_mut().unwrap().1
+            }
+        };
+        if s.epoch != *prev {
+            events.push(Json::obj([
+                ("name", Json::Str(format!("recovery epoch {}", s.epoch))),
+                ("cat", Json::Str("recovery".into())),
+                ("ph", Json::Str("i".into())),
+                ("s", Json::Str("t".into())),
+                ("ts", Json::Num(s.start_ns as f64 / 1e3)),
+                ("pid", Json::Num(s.worker as f64)),
+                ("tid", Json::Num(s.core as f64)),
+            ]));
+            *prev = s.epoch;
+        }
+        events.push(Json::obj([
+            ("name", Json::Str(s.phase.name().into())),
+            ("cat", Json::Str("phase".into())),
+            ("ph", Json::Str("X".into())),
+            ("ts", Json::Num(s.start_ns as f64 / 1e3)),
+            ("dur", Json::Num(s.dur_ns as f64 / 1e3)),
+            ("pid", Json::Num(s.worker as f64)),
+            ("tid", Json::Num(s.core as f64)),
+            (
+                "args",
+                Json::obj([
+                    ("iter", Json::Num(s.iter as f64)),
+                    ("epoch", Json::Num(s.epoch as f64)),
+                    ("bytes", Json::Num(s.bytes as f64)),
+                    ("frames", Json::Num(s.frames as f64)),
+                ]),
+            ),
+        ]));
+    }
+    Json::obj([
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".into())),
+    ])
+}
+
+/// Serialize [`chrome_trace`] to `path`.
+pub fn write_chrome_trace(path: &str, spans: &[TraceSpan]) -> std::io::Result<()> {
+    std::fs::write(path, chrome_trace(spans).to_string())
+}
+
+/// Aggregate view of a Chrome trace document (`trace-summary`): total
+/// milliseconds and event counts per phase, indexed by `Phase as usize`.
+#[derive(Clone, Debug, Default)]
+pub struct TraceSummary {
+    pub totals_ms: [f64; 8],
+    pub counts: [usize; 8],
+    /// Complete events seen (instant events excluded).
+    pub events: usize,
+    /// Instant recovery-epoch markers seen.
+    pub recovery_marks: usize,
+    /// Distinct pids (physical workers) in the trace.
+    pub pids: Vec<u8>,
+    /// Distinct tids (logical cores) in the trace.
+    pub tids: Vec<u8>,
+}
+
+impl TraceSummary {
+    /// Summed milliseconds across all phases.
+    pub fn total_ms(&self) -> f64 {
+        self.totals_ms.iter().sum()
+    }
+
+    /// The paper's bucket grouping, in milliseconds: `(Map+Encode,
+    /// Shuffle, Reduce+Decode+Update)` — the same fold
+    /// [`measured_phase_times`] applies per core.
+    pub fn paper_buckets_ms(&self) -> (f64, f64, f64) {
+        let t = |p: Phase| self.totals_ms[p as usize];
+        (
+            t(Phase::Encode),
+            t(Phase::Stage) + t(Phase::Flush) + t(Phase::RecvWait) + t(Phase::Ingest),
+            t(Phase::Decode) + t(Phase::Fold) + t(Phase::WriteBack),
+        )
+    }
+}
+
+/// Summarize a parsed Chrome trace document ([`chrome_trace`] output or
+/// anything shape-compatible): per-phase totals, pid/tid coverage, and
+/// recovery markers.
+pub fn summarize_chrome(doc: &Json) -> Result<TraceSummary, String> {
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or("not a trace document: missing traceEvents array")?;
+    let mut sum = TraceSummary::default();
+    for (i, e) in events.iter().enumerate() {
+        let ph = e
+            .get("ph")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("event {i}: missing ph"))?;
+        let pid = e
+            .get("pid")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("event {i}: missing pid"))? as u8;
+        let tid = e
+            .get("tid")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("event {i}: missing tid"))? as u8;
+        if !sum.pids.contains(&pid) {
+            sum.pids.push(pid);
+        }
+        if !sum.tids.contains(&tid) {
+            sum.tids.push(tid);
+        }
+        match ph {
+            "X" => {
+                let name = e
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| format!("event {i}: missing name"))?;
+                let phase = Phase::from_name(name)
+                    .ok_or_else(|| format!("event {i}: unknown phase {name:?}"))?;
+                let dur = e
+                    .get("dur")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| format!("event {i}: missing dur"))?;
+                sum.totals_ms[phase as usize] += dur / 1e3;
+                sum.counts[phase as usize] += 1;
+                sum.events += 1;
+            }
+            "i" => sum.recovery_marks += 1,
+            other => return Err(format!("event {i}: unexpected ph {other:?}")),
+        }
+    }
+    sum.pids.sort_unstable();
+    sum.tids.sort_unstable();
+    Ok(sum)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(core: u8, iter: u32, phase: Phase, start: u64, dur: u64) -> TraceSpan {
+        TraceSpan {
+            worker: core,
+            core,
+            iter,
+            epoch: 0,
+            phase,
+            start_ns: start,
+            dur_ns: dur,
+            bytes: 0,
+            frames: 0,
+        }
+    }
+
+    #[test]
+    fn ring_records_and_drains_in_order() {
+        let mut ring = SpanRing::with_capacity(8);
+        ring.set_iter(3);
+        ring.set_epoch(1);
+        ring.record(Phase::Encode, 100, 10, 0, 0);
+        ring.record(Phase::Stage, 110, 5, 640, 4);
+        assert_eq!(ring.len(), 2);
+        let mut out = Vec::new();
+        let dropped = ring.drain_into(2, 2, &mut out);
+        assert_eq!(dropped, 0);
+        assert!(ring.is_empty());
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].phase, Phase::Encode);
+        assert_eq!(out[1].phase, Phase::Stage);
+        assert_eq!((out[1].iter, out[1].epoch), (3, 1));
+        assert_eq!((out[1].bytes, out[1].frames), (640, 4));
+        assert_eq!((out[0].worker, out[0].core), (2, 2));
+    }
+
+    #[test]
+    fn ring_wraparound_keeps_newest_and_counts_dropped() {
+        let mut ring = SpanRing::with_capacity(4);
+        for i in 0..7u64 {
+            ring.set_iter(i as u32);
+            ring.record(Phase::Fold, i * 100, 1, 0, 0);
+        }
+        assert_eq!(ring.len(), 4, "saturates at capacity");
+        assert_eq!(ring.dropped(), 3, "three oldest overwritten");
+        let mut out = Vec::new();
+        let dropped = ring.drain_into(0, 0, &mut out);
+        assert_eq!(dropped, 3);
+        // oldest-first, the newest 4 survive (iters 3..=6)
+        let iters: Vec<u32> = out.iter().map(|s| s.iter).collect();
+        assert_eq!(iters, vec![3, 4, 5, 6]);
+        // drain resets the loss counter too
+        assert_eq!(ring.dropped(), 0);
+    }
+
+    #[test]
+    fn disabled_ring_records_nothing() {
+        let mut ring = SpanRing::with_capacity(4);
+        ring.set_enabled(false);
+        ring.record(Phase::Encode, 0, 1, 0, 0);
+        assert!(ring.is_empty());
+        ring.set_enabled(true);
+        ring.record(Phase::Encode, 0, 1, 0, 0);
+        assert_eq!(ring.len(), 1);
+    }
+
+    #[test]
+    fn phase_wire_roundtrip() {
+        for p in Phase::ALL {
+            assert_eq!(Phase::from_u8(p as u8), Some(p));
+            assert_eq!(Phase::from_name(p.name()), Some(p));
+        }
+        assert_eq!(Phase::from_u8(99), None);
+        assert_eq!(Phase::from_name("naptime"), None);
+    }
+
+    #[test]
+    fn span_words_roundtrip() {
+        let s = TraceSpan {
+            worker: 3,
+            core: 1,
+            iter: 70000,
+            epoch: 2,
+            phase: Phase::RecvWait,
+            start_ns: u64::MAX / 3,
+            dur_ns: 12_345,
+            bytes: 1 << 40,
+            frames: 4_000_000_000,
+        };
+        let w = s.to_words();
+        assert_eq!(TraceSpan::from_words(3, 1, &w), Some(s));
+        // an invalid phase byte is rejected, not misattributed
+        let mut bad = w;
+        bad[0] |= 0xFF;
+        assert_eq!(TraceSpan::from_words(3, 1, &bad), None);
+    }
+
+    #[test]
+    fn measured_times_fold_into_paper_buckets() {
+        let ns = 1_000_000_000; // 1 s
+        let spans = vec![
+            span(0, 0, Phase::Encode, 0, ns),
+            span(0, 0, Phase::Stage, ns, ns),
+            span(0, 0, Phase::Flush, 2 * ns, ns),
+            span(0, 0, Phase::RecvWait, 3 * ns, ns),
+            span(0, 0, Phase::Ingest, 4 * ns, ns),
+            span(0, 0, Phase::Decode, 5 * ns, ns),
+            span(0, 0, Phase::Fold, 6 * ns, ns),
+            span(0, 0, Phase::WriteBack, 7 * ns, ns),
+            span(1, 0, Phase::Decode, 0, 2 * ns),
+        ];
+        let m = measured_phase_times(&spans);
+        assert_eq!(m.len(), 2);
+        let w0 = &m[0];
+        assert_eq!((w0.worker, w0.core), (0, 0));
+        assert!((w0.times.encode_s - 1.0).abs() < 1e-9);
+        assert!((w0.times.shuffle_s - 4.0).abs() < 1e-9);
+        assert!((w0.times.decode_s - 1.0).abs() < 1e-9);
+        assert!((w0.times.reduce_s - 1.0).abs() < 1e-9);
+        assert!((w0.times.update_s - 1.0).abs() < 1e-9);
+        assert_eq!(w0.times.map_s, 0.0, "Map is fused into Encode");
+        assert!((m[1].times.decode_s - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn chrome_trace_roundtrips_through_summary() {
+        let mut spans = vec![
+            span(0, 0, Phase::Encode, 1000, 500),
+            span(0, 0, Phase::Stage, 1500, 250),
+            span(1, 1, Phase::Encode, 900, 400),
+        ];
+        // a ghost core: physical worker 0 hosting logical core 1, epoch 1
+        spans.push(TraceSpan {
+            worker: 0,
+            core: 1,
+            iter: 1,
+            epoch: 1,
+            phase: Phase::Decode,
+            start_ns: 3000,
+            dur_ns: 100,
+            bytes: 0,
+            frames: 0,
+        });
+        let doc = chrome_trace(&spans);
+        // survives a serialize → parse cycle (what --trace writes)
+        let parsed = Json::parse(&doc.to_string()).expect("valid JSON");
+        let sum = summarize_chrome(&parsed).expect("valid trace");
+        assert_eq!(sum.events, 4);
+        assert_eq!(sum.recovery_marks, 1, "epoch change emits an instant event");
+        assert_eq!(sum.pids, vec![0, 1]);
+        assert_eq!(sum.tids, vec![0, 1]);
+        assert_eq!(sum.counts[Phase::Encode as usize], 2);
+        assert!((sum.totals_ms[Phase::Encode as usize] - 0.0009).abs() < 1e-12);
+        let (me, sh, rd) = sum.paper_buckets_ms();
+        assert!(me > 0.0 && sh > 0.0 && rd > 0.0);
+        // per-(pid, tid) complete events are monotonic and non-overlapping
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        let mut last_end: Vec<((f64, f64), f64)> = Vec::new();
+        for e in events {
+            if e.get("ph").unwrap().as_str() != Some("X") {
+                continue;
+            }
+            let key = (
+                e.get("pid").unwrap().as_f64().unwrap(),
+                e.get("tid").unwrap().as_f64().unwrap(),
+            );
+            let ts = e.get("ts").unwrap().as_f64().unwrap();
+            let dur = e.get("dur").unwrap().as_f64().unwrap();
+            match last_end.iter_mut().find(|(k, _)| *k == key) {
+                Some((_, end)) => {
+                    assert!(ts >= *end, "overlap on {key:?}: {ts} < {end}");
+                    *end = ts + dur;
+                }
+                None => last_end.push((key, ts + dur)),
+            }
+        }
+    }
+
+    #[test]
+    fn summary_rejects_non_traces() {
+        assert!(summarize_chrome(&Json::parse("{}").unwrap()).is_err());
+        let bad = r#"{"traceEvents":[{"ph":"X","pid":0,"tid":0,"name":"naptime","dur":1}]}"#;
+        assert!(summarize_chrome(&Json::parse(bad).unwrap()).is_err());
+    }
+}

@@ -106,6 +106,13 @@ pub enum FrameKind {
     /// Leader → worker: unrecoverable failure (tolerance exceeded) —
     /// unwind cleanly instead of hanging.
     Abort = 12,
+    /// Worker → leader, once per hosted core at job end (after `Stop`):
+    /// the core's drained flight-recorder spans. `target` is the
+    /// *logical* core the spans belong to (an adopter reports its ghosts
+    /// under their own ids), `index` the ring's overwritten-span count,
+    /// `count` the spans carried; payload five u64 words per span (see
+    /// [`encode_stats`]). Control traffic — never charged as data.
+    Stats = 13,
 }
 
 impl FrameKind {
@@ -125,6 +132,7 @@ impl FrameKind {
             10 => FrameKind::RecoverPairs,
             11 => FrameKind::Recover,
             12 => FrameKind::Abort,
+            13 => FrameKind::Stats,
             _ => return None,
         })
     }
@@ -345,6 +353,21 @@ pub fn stamp_epoch(buf: &mut [u8], epoch: u8) {
     buf[6] = epoch;
 }
 
+/// Encode a worker's end-of-job `Stats` frame: flight-recorder spans for
+/// one hosted `core` (the logical id rides the target byte — an adopter
+/// reports ghost cores under their own ids), packed five u64 words per
+/// span ([`TraceSpan::to_words`](crate::obs::TraceSpan::to_words)).
+/// `dropped` (ring overwrites) rides in the index field.
+pub fn encode_stats(buf: &mut Vec<u8>, sender: u8, core: u8, dropped: u32, words: &[u64]) {
+    debug_assert_eq!(words.len() % 5, 0, "Stats payload is 5 words per span");
+    let spans = (words.len() / 5) as u32;
+    header_into(buf, FrameKind::Stats, sender, dropped, spans, words.len() * 8);
+    buf[7] = core;
+    for &w in words {
+        buf.extend_from_slice(&w.to_le_bytes());
+    }
+}
+
 /// Encode a degraded-group row replacement: the dead `target` worker's
 /// full raw IV row for group `group`, shipped by a surviving replica.
 pub fn encode_recover_row(buf: &mut Vec<u8>, sender: u8, group: u32, target: u8, bits: &[u64]) {
@@ -524,6 +547,52 @@ mod tests {
         assert_eq!((f.kind, f.sender, f.index, f.count), (FrameKind::SendDone, 3, 41, 1));
         assert!(!f.kind.is_data(), "SendDone is control traffic, not charged");
         assert_eq!(f.word(0), 987_654_321_000);
+    }
+
+    #[test]
+    fn stats_roundtrip_carries_spans() {
+        use crate::obs::{Phase, TraceSpan};
+        let spans = [
+            TraceSpan {
+                worker: 3,
+                core: 1,
+                iter: 2,
+                epoch: 1,
+                phase: Phase::Decode,
+                start_ns: 123_456_789,
+                dur_ns: 42,
+                bytes: 640,
+                frames: 7,
+            },
+            TraceSpan {
+                worker: 3,
+                core: 1,
+                iter: 3,
+                epoch: 1,
+                phase: Phase::Fold,
+                start_ns: 223_456_789,
+                dur_ns: 99,
+                bytes: 0,
+                frames: 0,
+            },
+        ];
+        let words: Vec<u64> = spans.iter().flat_map(|s| s.to_words()).collect();
+        let mut buf = Vec::new();
+        encode_stats(&mut buf, 3, 1, 5, &words);
+        let f = Frame::parse(&buf).unwrap();
+        assert_eq!((f.kind, f.sender, f.target), (FrameKind::Stats, 3, 1));
+        assert_eq!((f.index, f.count), (5, 2), "dropped count + span count");
+        assert!(!f.kind.is_data(), "Stats is control traffic, never charged");
+        for (i, want) in spans.iter().enumerate() {
+            let w = [
+                f.word(i * 5),
+                f.word(i * 5 + 1),
+                f.word(i * 5 + 2),
+                f.word(i * 5 + 3),
+                f.word(i * 5 + 4),
+            ];
+            assert_eq!(TraceSpan::from_words(f.sender, f.target, &w).unwrap(), *want);
+        }
     }
 
     #[test]

@@ -148,6 +148,10 @@ const SCHEMES: [Scheme; 4] = [
 
 /// One matrix slice per graph family so a failure names its row and the
 /// slices run in parallel under the default test harness.
+///
+/// Every cell runs twice — flight recorder on (the default) and off —
+/// and both runs must match the engine reference bit-for-bit: tracing
+/// is observability, never allowed to perturb a result (ISSUE 7).
 fn matrix_for_graph(graph: &str) {
     for scheme in SCHEMES {
         let spec = spec_for(graph, scheme);
@@ -159,9 +163,24 @@ fn matrix_for_graph(graph: &str) {
                 "{graph}/{scheme}: validation must actually run"
             );
         }
+        assert!(
+            !reference.spans.is_empty() && !reference.measured.is_empty(),
+            "{graph}/{scheme}: traced engine run must record spans"
+        );
+        let untraced_cfg = EngineConfig { trace: false, ..cfg };
+        let engine_off = run_driver(&spec, &untraced_cfg, Driver::Engine);
+        assert_matches_reference(&reference, &engine_off, &format!("{graph}/{scheme}/engine-off"));
+        assert!(engine_off.spans.is_empty(), "{graph}/{scheme}: trace off must record nothing");
         for driver in DRIVERS {
             let got = run_driver(&spec, &cfg, driver);
             assert_matches_reference(&reference, &got, &format!("{graph}/{scheme}/{driver:?}"));
+            assert!(
+                !got.spans.is_empty() && !got.measured.is_empty(),
+                "{graph}/{scheme}/{driver:?}: leader must assemble worker spans"
+            );
+            let off = run_driver(&spec, &untraced_cfg, driver);
+            assert_matches_reference(&reference, &off, &format!("{graph}/{scheme}/{driver:?}-off"));
+            assert!(off.spans.is_empty(), "{graph}/{scheme}/{driver:?}: trace off leaks spans");
         }
     }
 }

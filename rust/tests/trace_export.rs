@@ -1,0 +1,158 @@
+//! Flight-recorder export acceptance (ISSUE 7): a cluster run's report
+//! carries a span timeline covering every logical core and every
+//! iteration, the Chrome-trace JSON export is structurally valid
+//! (complete events with `ph`/`ts`/`dur`/`pid`/`tid`, per-track
+//! monotonic timestamps), recovery epochs appear as instant events, and
+//! `trace-summary`'s folding agrees with the raw spans.
+
+use coded_graph::coordinator::{
+    run_cluster_on, run_rust, AllocKind, EngineConfig, FailWorker, GraphKind, GraphSpec,
+    JobReport, JobSpec, ProgramSpec, Scheme,
+};
+use coded_graph::obs::{self, Phase};
+use coded_graph::transport::TransportKind;
+use coded_graph::util::json::Json;
+
+const K: usize = 4;
+const ITERS: usize = 2;
+
+fn spec(scheme: Scheme) -> JobSpec {
+    JobSpec {
+        graph: GraphSpec { kind: GraphKind::Er { p: 0.12 }, n: 120, seed: 64 },
+        alloc: AllocKind::Er,
+        k: K,
+        r: 2,
+        program: ProgramSpec::PageRank,
+        scheme,
+        iters: ITERS,
+    }
+}
+
+fn run(scheme: Scheme, fail: Option<FailWorker>) -> JobReport {
+    let sp = spec(scheme);
+    let mut cfg = EngineConfig { scheme, ..Default::default() };
+    cfg.fail_workers = [fail, None];
+    run_cluster_on(&sp.materialize().job(), &cfg, sp.iters, TransportKind::InProc)
+}
+
+/// Every logical core reports, and every (core, iteration) pair shows
+/// the full receive-side phase sequence.
+#[test]
+fn cluster_timeline_covers_every_core_and_iteration() {
+    let report = run(Scheme::Coded, None);
+    assert!(!report.spans.is_empty());
+    for core in 0..K as u8 {
+        for it in 0..ITERS as u32 {
+            for ph in [Phase::Encode, Phase::Stage, Phase::Flush, Phase::RecvWait, Phase::Decode] {
+                assert!(
+                    report
+                        .spans
+                        .iter()
+                        .any(|s| s.core == core && s.iter == it && s.phase == ph),
+                    "missing {ph} span for core {core} iteration {it}"
+                );
+            }
+        }
+    }
+    // measured folds one entry per (worker, core), and only real phases
+    assert_eq!(report.measured.len(), K, "one measured row per core");
+    for w in &report.measured {
+        assert_eq!(w.times.map_s, 0.0, "map is fused into encode in this implementation");
+        assert!(w.times.encode_s >= 0.0 && w.times.shuffle_s > 0.0, "{w:?}");
+    }
+}
+
+/// The engine driver reports the same span taxonomy from its own cores.
+#[test]
+fn engine_timeline_nonempty_and_measured_consistent() {
+    let sp = spec(Scheme::Coded);
+    let report = run_rust(&sp.materialize().job(), &EngineConfig::default(), sp.iters);
+    assert!(!report.spans.is_empty());
+    assert_eq!(report.measured.len(), K);
+    // the measured fold must account exactly the spans it was fed
+    let total_spans_s: f64 =
+        report.spans.iter().map(|s| s.dur_ns as f64 / 1e9).sum();
+    let total_measured_s: f64 = report
+        .measured
+        .iter()
+        .map(|w| {
+            let t = &w.times;
+            t.map_s + t.encode_s + t.shuffle_s + t.decode_s + t.reduce_s + t.update_s
+        })
+        .sum();
+    assert!(
+        (total_spans_s - total_measured_s).abs() < 1e-9,
+        "{total_spans_s} vs {total_measured_s}"
+    );
+}
+
+/// Structural validity of the emitted Chrome trace file, round-tripped
+/// through the crate's own JSON parser.
+#[test]
+fn chrome_trace_file_is_valid_and_monotonic_per_track() {
+    let report = run(Scheme::Coded, None);
+    let path = std::env::temp_dir().join(format!("coded-graph-trace-{}.json", std::process::id()));
+    let path = path.to_str().unwrap().to_string();
+    obs::write_chrome_trace(&path, &report.spans).unwrap();
+    let raw = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let doc = Json::parse(&raw).unwrap();
+    let Json::Obj(top) = &doc else { panic!("trace root must be an object") };
+    let Some(Json::Arr(events)) = top.get("traceEvents") else {
+        panic!("missing traceEvents")
+    };
+    assert!(!events.is_empty());
+    let mut last_end: std::collections::BTreeMap<(u64, u64), f64> = Default::default();
+    for ev in events {
+        let Json::Obj(e) = ev else { panic!("event must be an object") };
+        for key in ["ph", "ts", "pid", "tid", "name"] {
+            assert!(e.contains_key(key), "event missing {key}: {ev}");
+        }
+        let (Some(Json::Num(ts)), Some(Json::Num(pid)), Some(Json::Num(tid))) =
+            (e.get("ts"), e.get("pid"), e.get("tid"))
+        else {
+            panic!("ts/pid/tid must be numbers: {ev}")
+        };
+        match e.get("ph") {
+            Some(Json::Str(ph)) if ph == "X" => {
+                let Some(Json::Num(dur)) = e.get("dur") else {
+                    panic!("complete event missing dur: {ev}")
+                };
+                // per-(pid, tid) tracks must not overlap: the recorder
+                // re-lays interleaved work as sequential spans
+                let track = (*pid as u64, *tid as u64);
+                let prev = last_end.get(&track).copied().unwrap_or(0.0);
+                assert!(*ts >= prev - 1e-9, "track {track:?} overlaps: {ts} < {prev}");
+                last_end.insert(track, ts + dur);
+            }
+            Some(Json::Str(ph)) if ph == "i" => {}
+            other => panic!("unexpected ph {other:?}"),
+        }
+    }
+    // and the crate's own summarizer accepts what it emitted
+    let summary = obs::summarize_chrome(&doc).unwrap();
+    assert_eq!(summary.events, events.len());
+    assert_eq!(summary.tids.len(), K);
+    assert!(summary.total_ms() > 0.0);
+}
+
+/// A run that loses a worker shows the ghost core's spans under the
+/// adopter's pid with a recovery epoch, and the export marks the epoch
+/// change as an instant event.
+#[test]
+fn recovery_run_keeps_full_coverage_and_marks_the_epoch() {
+    let fail = FailWorker { worker: 2, at_iter: 1 };
+    let report = run(Scheme::Coded, Some(fail));
+    assert_eq!(report.recovery.failures, 1);
+    // the dead worker's logical core still reports — via the adopter
+    let ghost: Vec<_> = report.spans.iter().filter(|s| s.core == fail.worker).collect();
+    assert!(!ghost.is_empty(), "ghost core must appear in the timeline");
+    assert!(
+        ghost.iter().all(|s| s.worker != fail.worker && s.epoch >= 1),
+        "ghost spans carry the adopter pid and the recovery epoch"
+    );
+    let summary_input = obs::chrome_trace(&report.spans);
+    let summary = obs::summarize_chrome(&summary_input).unwrap();
+    assert!(summary.recovery_marks >= 1, "epoch change must emit an instant event");
+    assert_eq!(summary.tids.len(), K, "all K logical cores in the trace");
+}

@@ -1,0 +1,80 @@
+#!/usr/bin/env python3
+"""Diff a bench-smoke JSON document against the committed snapshot.
+
+Usage: bench_compare.py CURRENT.json SNAPSHOT.json
+
+Both files are `BenchJson` documents (`{"suite": ..., "records": [...]}`)
+as written by `cargo bench --bench shuffle_micro -- --smoke --json PATH`.
+Records are matched by section name (`bench`) plus every non-timing
+parameter (n, r, failures, ...); timing fields (`*_s`) are reported as
+percent deltas, current vs snapshot.
+
+This is a trend report, not a gate: machines differ, CI hosts are noisy,
+and the snapshot is refreshed per PR (`make bench-snapshot`). The script
+exits 0 unless a file is unreadable or structurally invalid. An empty
+snapshot (`{"records": []}`) means "no baseline yet" and is reported as
+such. Stdlib only — no third-party dependencies.
+"""
+
+import json
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        doc = json.load(f)
+    if not isinstance(doc.get("records"), list):
+        raise SystemExit(f"{path}: not a BenchJson document (missing 'records' list)")
+    return doc["records"]
+
+
+def is_timing(key, value):
+    return isinstance(value, (int, float)) and key.endswith("_s")
+
+
+def record_key(rec):
+    """Identity of a record: its section plus all non-timing parameters."""
+    params = tuple(
+        sorted((k, v) for k, v in rec.items() if k != "bench" and not is_timing(k, v))
+    )
+    return (rec.get("bench", "?"), params)
+
+
+def main(argv):
+    if len(argv) != 3:
+        raise SystemExit(__doc__.strip().splitlines()[2])
+    current, snapshot = load(argv[1]), load(argv[2])
+    if not snapshot:
+        print(f"bench-compare: snapshot {argv[2]} has no records (no baseline yet) — skipping")
+        return 0
+    base = {record_key(r): r for r in snapshot}
+    matched = missing = 0
+    for rec in current:
+        key = record_key(rec)
+        name = key[0]
+        old = base.pop(key, None)
+        if old is None:
+            missing += 1
+            print(f"  {name:<22} (no matching snapshot record — params changed or section is new)")
+            continue
+        matched += 1
+        for field, val in rec.items():
+            if not is_timing(field, val):
+                continue
+            ref = old.get(field)
+            if not isinstance(ref, (int, float)) or ref == 0:
+                continue
+            delta = (val / ref - 1.0) * 100.0
+            flag = "  <-- " + ("slower" if delta > 10 else "faster") if abs(delta) > 10 else ""
+            print(f"  {name:<22} {field:<18} {ref * 1e3:9.3f} ms -> {val * 1e3:9.3f} ms  {delta:+7.1f}%{flag}")
+    for key in base:
+        print(f"  {key[0]:<22} (snapshot record has no current counterpart)")
+    print(
+        f"bench-compare: {matched} matched, {missing} unmatched, "
+        f"{len(base)} snapshot-only (informational — not a gate)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
