@@ -3,7 +3,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test bench bench-smoke bench-compare bench-snapshot cluster-smoke examples docs fmt clippy artifacts
+.PHONY: build test bench bench-smoke bench-compare bench-snapshot cluster-smoke sim-smoke examples docs fmt clippy artifacts
 
 build:
 	$(CARGO) build --release
@@ -76,6 +76,22 @@ cluster-smoke:
 	$(CARGO) run --release -- cluster --graph er --n 400 --k 3 --r 2 \
 	  --program pagerank --scheme coded --iters 3 --transport tcp \
 	  --processes --check --fail-worker 2@1
+
+# SimFabric smoke (seconds): a tiny sim-sweep (two K × r points on both
+# graph models plus the K=8 failure replay) emitting the same
+# Fig-5-style JSON the full-scale sweep produces, gated by a json.tool
+# round-trip; then the PR-8 acceptance check — two same-seed `simulate`
+# runs at K=512 must emit byte-identical JSON.
+sim-smoke:
+	$(CARGO) run --release -- sim-sweep --ks 8,16 --rs 2 --n-min 256 --n-max 256 \
+	  --trials 2 --fail-k 8 --json $(CURDIR)/BENCH_sim_sweep.json
+	$(PYTHON) -m json.tool $(CURDIR)/BENCH_sim_sweep.json > /dev/null
+	$(CARGO) run --release -- simulate --graph er --n 1024 --k 512 --r 3 --iters 2 \
+	  --straggler-prob 0.25 --json $(CURDIR)/sim_replay_a.json
+	$(CARGO) run --release -- simulate --graph er --n 1024 --k 512 --r 3 --iters 2 \
+	  --straggler-prob 0.25 --json $(CURDIR)/sim_replay_b.json
+	cmp $(CURDIR)/sim_replay_a.json $(CURDIR)/sim_replay_b.json
+	rm -f $(CURDIR)/sim_replay_a.json $(CURDIR)/sim_replay_b.json
 
 # Build every example, then run the two that pin the public API surface
 # (quickstart's 60-second tour and the end-to-end e2e driver — the

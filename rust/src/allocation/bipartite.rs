@@ -12,6 +12,7 @@
 use super::core::{Allocation, Batch};
 use crate::combinatorics::{choose, subsets};
 use crate::graph::csr::Vertex;
+use crate::WorkerId;
 
 impl Allocation {
     /// Appendix-A scheme for a two-cluster graph with `V1 = 0..n1`,
@@ -32,8 +33,8 @@ impl Allocation {
              Theorem 2's regime is r < K/2",
             k1.min(k2)
         );
-        let g1: Vec<u8> = (0..k1 as u8).collect();
-        let g2: Vec<u8> = (k1 as u8..k as u8).collect();
+        let g1: Vec<WorkerId> = (0..k1 as WorkerId).collect();
+        let g2: Vec<WorkerId> = (k1 as WorkerId..k as WorkerId).collect();
 
         // --- Map batches: §IV-A pattern within each group ---------------
         let mut batches = Vec::new();
@@ -52,7 +53,7 @@ impl Allocation {
         let v2_to_g1 = n2.min(cap_g1);
         let v1_to_g2 = n1.min(cap_g2 - (n2 - v2_to_g1));
 
-        let mut reduce_owner = vec![0u8; n];
+        let mut reduce_owner = vec![0 as WorkerId; n];
         // V1 = 0..n1: first v1_to_g2 to G2 balanced, rest to G1.
         assign_balanced(&mut reduce_owner[..v1_to_g2], &g2, 0);
         assign_balanced(&mut reduce_owner[v1_to_g2..n1], &g1, 0);
@@ -76,14 +77,14 @@ impl Allocation {
 
 /// Tile `count` vertices starting at `base` into `C(|group|, r)` contiguous
 /// batches, one per r-subset of `group` (remainder spread from the front).
-fn tile_batches(out: &mut Vec<Batch>, base: Vertex, count: usize, group: &[u8], r: usize) {
+fn tile_batches(out: &mut Vec<Batch>, base: Vertex, count: usize, group: &[WorkerId], r: usize) {
     let nb = choose(group.len(), r) as usize;
     let unit = count / nb;
     let extra = count % nb;
     let mut start = base;
     for (t, local) in subsets(group.len(), r).into_iter().enumerate() {
         let len = unit + usize::from(t < extra);
-        let servers: Vec<u8> = local.into_iter().map(|i| group[i as usize]).collect();
+        let servers: Vec<WorkerId> = local.into_iter().map(|i| group[i as usize]).collect();
         out.push(Batch { start, end: start + len as Vertex, servers });
         start += len as Vertex;
     }
@@ -93,7 +94,7 @@ fn tile_batches(out: &mut Vec<Batch>, base: Vertex, count: usize, group: &[u8], 
 /// Assign `slots` to `group` servers in balanced contiguous chunks;
 /// `pre` biases which servers get the remainder (so stacked calls stay
 /// balanced overall).
-fn assign_balanced(slots: &mut [u8], group: &[u8], pre: usize) {
+fn assign_balanced(slots: &mut [WorkerId], group: &[WorkerId], pre: usize) {
     let n = slots.len();
     if n == 0 {
         return;
@@ -129,7 +130,7 @@ mod tests {
         assert_eq!(a.n, 120);
         // every vertex mapped exactly r times
         for v in 0..120u32 {
-            let cnt = (0..6u8).filter(|&s| a.maps(s, v)).count();
+            let cnt = (0..6 as WorkerId).filter(|&s| a.maps(s, v)).count();
             assert_eq!(cnt, 2);
         }
         // reduce sets are balanced
@@ -179,7 +180,7 @@ mod tests {
         // n1 < n2 also works (mirrored overflow)
         let a = Allocation::bipartite_scheme(40, 80, 6, 2);
         for v in 0..120u32 {
-            let cnt = (0..6u8).filter(|&s| a.maps(s, v)).count();
+            let cnt = (0..6 as WorkerId).filter(|&s| a.maps(s, v)).count();
             assert_eq!(cnt, 2);
         }
         let total: usize = a.reduce_sets.iter().map(|s| s.len()).sum();

@@ -2,6 +2,7 @@
 
 use crate::combinatorics::{choose, subsets};
 use crate::graph::csr::Vertex;
+use crate::WorkerId;
 
 /// A batch of vertices Mapped by the same set of servers: the atomic unit
 /// of the paper's redundancy pattern.
@@ -11,7 +12,7 @@ pub struct Batch {
     pub start: Vertex,
     pub end: Vertex,
     /// Sorted server ids that Map this batch (`|servers| = r`).
-    pub servers: Vec<u8>,
+    pub servers: Vec<WorkerId>,
 }
 
 impl Batch {
@@ -48,7 +49,7 @@ pub struct Allocation {
     /// Disjoint batches covering `0..n`, ascending by `start`.
     pub batches: Vec<Batch>,
     /// `reduce_owner[v]` = the server Reducing vertex `v`.
-    pub reduce_owner: Vec<u8>,
+    pub reduce_owner: Vec<WorkerId>,
     /// Per-server sorted Reduce sets (inverse of `reduce_owner`).
     pub reduce_sets: Vec<Vec<Vertex>>,
     /// Per-server sorted list of batch indices it Maps.
@@ -66,7 +67,7 @@ impl Allocation {
         k: usize,
         r: usize,
         batches: Vec<Batch>,
-        reduce_owner: Vec<u8>,
+        reduce_owner: Vec<WorkerId>,
     ) -> Self {
         assert_eq!(reduce_owner.len(), n);
         assert!(r >= 1 && r <= k, "need 1 <= r <= K (r={r}, K={k})");
@@ -117,6 +118,32 @@ impl Allocation {
         Self::from_parts(n, k, r, batches, reduce_owner)
     }
 
+    /// Cyclic replication: `K` contiguous batches, batch `t` Mapped by
+    /// the window `{(t + i) mod K : i < r}`. Same per-vertex redundancy
+    /// `r` as [`er_scheme`], but only `K` batches instead of `C(K, r)` —
+    /// the layout the at-scale simulation uses, since at `K` in the
+    /// thousands `C(K, r)` batches are infeasible to even enumerate.
+    /// Multicast groups are still `(r+1)`-subsets; only the subsets that
+    /// actually share batches (consecutive windows) carry traffic, so the
+    /// shuffle plan stays sparse.
+    pub fn cyclic_scheme(n: usize, k: usize, r: usize) -> Self {
+        assert!(k >= 1 && r >= 1 && r <= k, "need 1 <= r <= K (r={r}, K={k})");
+        let base = n / k;
+        let extra = n % k;
+        let mut batches = Vec::with_capacity(k);
+        let mut start: Vertex = 0;
+        for t in 0..k {
+            let len = base + usize::from(t < extra);
+            let mut servers: Vec<WorkerId> =
+                (0..r).map(|i| ((t + i) % k) as WorkerId).collect();
+            servers.sort_unstable();
+            batches.push(Batch { start, end: start + len as Vertex, servers });
+            start += len as Vertex;
+        }
+        let reduce_owner = balanced_owners(n, k);
+        Self::from_parts(n, k, r, batches, reduce_owner)
+    }
+
     /// The `r = 1` naive baseline with `M_k = R_k` (paper §VI). This is a
     /// special case of [`er_scheme`] — with `r = 1` the batch for `{k}` and
     /// the Reduce range of `k` coincide by construction — provided here by
@@ -134,23 +161,23 @@ impl Allocation {
 
     /// Does server `k` Map vertex `v`?
     #[inline]
-    pub fn maps(&self, k: u8, v: Vertex) -> bool {
+    pub fn maps(&self, k: WorkerId, v: Vertex) -> bool {
         self.batches[self.batch_of(v)].servers.binary_search(&k).is_ok()
     }
 
     /// The server Reducing vertex `v`.
     #[inline]
-    pub fn reducer_of(&self, v: Vertex) -> u8 {
+    pub fn reducer_of(&self, v: Vertex) -> WorkerId {
         self.reduce_owner[v as usize]
     }
 
     /// Number of vertices Mapped by server `k` (`|M_k|`).
-    pub fn mapped_count(&self, k: u8) -> usize {
+    pub fn mapped_count(&self, k: WorkerId) -> usize {
         self.mapped_batches[k as usize].iter().map(|&t| self.batches[t].len()).sum()
     }
 
     /// Iterate the vertices Mapped by server `k`, ascending.
-    pub fn mapped_vertices(&self, k: u8) -> impl Iterator<Item = Vertex> + '_ {
+    pub fn mapped_vertices(&self, k: WorkerId) -> impl Iterator<Item = Vertex> + '_ {
         self.mapped_batches[k as usize]
             .iter()
             .flat_map(move |&t| self.batches[t].vertices())
@@ -159,7 +186,7 @@ impl Allocation {
     /// Realized computation load `Σ|M_k| / n` (paper Definition 1);
     /// equals `r` exactly when batches divide evenly.
     pub fn computation_load(&self) -> f64 {
-        let total: usize = (0..self.k as u8).map(|k| self.mapped_count(k)).sum();
+        let total: usize = (0..self.k as WorkerId).map(|k| self.mapped_count(k)).sum();
         total as f64 / self.n as f64
     }
 
@@ -176,13 +203,13 @@ impl Allocation {
 
 /// Balanced owner array: `n` items over `k` owners, contiguous blocks,
 /// remainder spread one-per-owner from the front.
-pub fn balanced_owners(n: usize, k: usize) -> Vec<u8> {
+pub fn balanced_owners(n: usize, k: usize) -> Vec<WorkerId> {
     let base = n / k;
     let extra = n % k;
     let mut owner = Vec::with_capacity(n);
     for s in 0..k {
         let len = base + usize::from(s < extra);
-        owner.extend(std::iter::repeat(s as u8).take(len));
+        owner.extend(std::iter::repeat(s as WorkerId).take(len));
     }
     owner
 }
@@ -218,7 +245,7 @@ mod tests {
         for (n, k, r) in [(100, 5, 2), (97, 5, 3), (64, 4, 4), (30, 6, 1)] {
             let a = Allocation::er_scheme(n, k, r);
             for v in 0..n as Vertex {
-                let cnt = (0..k as u8).filter(|&s| a.maps(s, v)).count();
+                let cnt = (0..k as WorkerId).filter(|&s| a.maps(s, v)).count();
                 assert_eq!(cnt, r, "v={v} n={n} k={k} r={r}");
             }
         }
@@ -246,7 +273,7 @@ mod tests {
     #[test]
     fn single_is_mk_eq_rk() {
         let a = Allocation::single(60, 6);
-        for k in 0..6u8 {
+        for k in 0..6 as WorkerId {
             let m: Vec<Vertex> = a.mapped_vertices(k).collect();
             assert_eq!(m, a.reduce_sets[k as usize]);
         }
@@ -256,7 +283,7 @@ mod tests {
     #[test]
     fn r_equals_k_maps_everything_everywhere() {
         let a = Allocation::er_scheme(40, 4, 4);
-        for k in 0..4u8 {
+        for k in 0..4 as WorkerId {
             assert_eq!(a.mapped_count(k), 40);
         }
     }
@@ -282,5 +309,27 @@ mod tests {
     #[should_panic(expected = "1 <= r <= K")]
     fn rejects_r_over_k() {
         Allocation::er_scheme(10, 3, 4);
+    }
+
+    #[test]
+    fn cyclic_scheme_maps_every_vertex_r_times() {
+        for (n, k, r) in [(100, 5, 2), (97, 8, 3), (64, 4, 4), (301, 300, 2)] {
+            let a = Allocation::cyclic_scheme(n, k, r);
+            assert_eq!(a.batches.len(), k, "K batches, not C(K, r)");
+            for v in 0..n as Vertex {
+                let cnt = (0..k as WorkerId).filter(|&s| a.maps(s, v)).count();
+                assert_eq!(cnt, r, "v={v} n={n} k={k} r={r}");
+            }
+            assert!((a.computation_load() - r as f64).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn cyclic_scheme_wraps_past_u8() {
+        // batch K-1's window wraps to {0, .., K-1}-ids above 255
+        let a = Allocation::cyclic_scheme(600, 300, 3);
+        let last = &a.batches[299];
+        assert_eq!(last.servers, vec![0, 1, 299]);
+        assert!(a.batches.iter().any(|b| b.servers.iter().any(|&s| s > 255)));
     }
 }

@@ -6,9 +6,15 @@
 //! groups from (r+1)-subsets `S ⊆ [K]`. Everything downstream (allocation,
 //! encode, decode) needs a *canonical*, cheap bijection between subsets and
 //! indices — that bijection (the combinatorial number system) lives here.
+//!
+//! Subset elements are [`WorkerId`]s (`u16`): the simulation fabric sweeps
+//! `K` into the thousands, past the old `u8` ceiling of 256.
+
+use crate::WorkerId;
 
 /// Binomial coefficient `C(n, k)` as `u64` (exact for every case we use;
-/// `K <= 64` in any conceivable run). Returns 0 when `k > n`.
+/// the u128 intermediates keep `C(2048, 6)`-class values exact). Returns 0
+/// when `k > n`.
 pub fn choose(n: usize, k: usize) -> u64 {
     if k > n {
         return 0;
@@ -25,12 +31,12 @@ pub fn choose(n: usize, k: usize) -> u64 {
 ///
 /// The subsets come out sorted ascending internally, and the sequence is
 /// lexicographic, so `subsets(n, k)[rank]` agrees with [`subset_rank`].
-pub fn subsets(n: usize, k: usize) -> Vec<Vec<u8>> {
+pub fn subsets(n: usize, k: usize) -> Vec<Vec<WorkerId>> {
     let mut out = Vec::with_capacity(choose(n, k) as usize);
     if k > n {
         return out;
     }
-    let mut cur: Vec<u8> = (0..k as u8).collect();
+    let mut cur: Vec<WorkerId> = (0..k as WorkerId).collect();
     loop {
         out.push(cur.clone());
         // advance to the next lexicographic k-subset
@@ -54,7 +60,7 @@ pub fn subsets(n: usize, k: usize) -> Vec<Vec<u8>> {
 /// Lexicographic rank of a sorted k-subset of `[n]`.
 ///
 /// Inverse of indexing into [`subsets`]`(n, k)`.
-pub fn subset_rank(n: usize, set: &[u8]) -> u64 {
+pub fn subset_rank(n: usize, set: &[WorkerId]) -> u64 {
     let k = set.len();
     let mut rank = 0u64;
     let mut prev = 0usize; // smallest value the current position may take
@@ -68,14 +74,14 @@ pub fn subset_rank(n: usize, set: &[u8]) -> u64 {
 }
 
 /// Unrank: the `rank`-th (lexicographic) k-subset of `[n]`.
-pub fn subset_unrank(n: usize, k: usize, mut rank: u64) -> Vec<u8> {
+pub fn subset_unrank(n: usize, k: usize, mut rank: u64) -> Vec<WorkerId> {
     let mut out = Vec::with_capacity(k);
     let mut x = 0usize;
     for i in 0..k {
         loop {
             let c = choose(n - x - 1, k - i - 1);
             if rank < c {
-                out.push(x as u8);
+                out.push(x as WorkerId);
                 x += 1;
                 break;
             }
@@ -87,7 +93,7 @@ pub fn subset_unrank(n: usize, k: usize, mut rank: u64) -> Vec<u8> {
 }
 
 /// Iterator over all k-subsets *containing* a fixed element `e` of `[n]`.
-pub fn subsets_containing(n: usize, k: usize, e: u8) -> Vec<Vec<u8>> {
+pub fn subsets_containing(n: usize, k: usize, e: WorkerId) -> Vec<Vec<WorkerId>> {
     subsets(n, k)
         .into_iter()
         .filter(|s| s.contains(&e))
@@ -97,13 +103,13 @@ pub fn subsets_containing(n: usize, k: usize, e: u8) -> Vec<Vec<u8>> {
 /// Position of `e` in the sorted subset `s` (panics if absent) — the
 /// segment index assignment of the coded scheme keys off this.
 #[inline]
-pub fn pos_in(s: &[u8], e: u8) -> usize {
+pub fn pos_in(s: &[WorkerId], e: WorkerId) -> usize {
     s.iter().position(|&x| x == e).expect("element not in subset")
 }
 
 /// Sorted set difference `s \ {e}` for small sets.
 #[inline]
-pub fn minus(s: &[u8], e: u8) -> Vec<u8> {
+pub fn minus(s: &[WorkerId], e: WorkerId) -> Vec<WorkerId> {
     s.iter().copied().filter(|&x| x != e).collect()
 }
 
@@ -140,6 +146,15 @@ mod tests {
     }
 
     #[test]
+    fn choose_large_k_fits_u64() {
+        // The wire id of a group is a subset rank, so the biggest ids the
+        // sim sweep produces must stay exact: C(2048, 6) ≈ 1.0e17 < 2^63.
+        assert_eq!(choose(1024, 4), 45_545_029_376u64);
+        assert!(choose(2048, 6) > choose(2048, 5));
+        assert!(choose(2048, 6) < u64::MAX / 2);
+    }
+
+    #[test]
     fn subsets_count_and_order() {
         let ss = subsets(5, 2);
         assert_eq!(ss.len(), 10);
@@ -154,7 +169,7 @@ mod tests {
 
     #[test]
     fn subsets_edge_cases() {
-        assert_eq!(subsets(4, 0), vec![Vec::<u8>::new()]);
+        assert_eq!(subsets(4, 0), vec![Vec::<WorkerId>::new()]);
         assert_eq!(subsets(4, 4), vec![vec![0, 1, 2, 3]]);
         assert!(subsets(3, 4).is_empty());
     }
@@ -172,11 +187,20 @@ mod tests {
     }
 
     #[test]
+    fn rank_unrank_roundtrip_past_u8() {
+        // Ids above 255 are the whole point of the u16 widening.
+        let n = 300usize;
+        let set: Vec<WorkerId> = vec![7, 255, 256, 299];
+        let rank = subset_rank(n, &set);
+        assert_eq!(subset_unrank(n, set.len(), rank), set);
+    }
+
+    #[test]
     fn subsets_containing_counts() {
         // each element appears in C(n-1, k-1) subsets
         for n in 2..8 {
             for k in 1..=n {
-                for e in 0..n as u8 {
+                for e in 0..n as WorkerId {
                     assert_eq!(
                         subsets_containing(n, k, e).len() as u64,
                         choose(n - 1, k - 1)
@@ -188,7 +212,7 @@ mod tests {
 
     #[test]
     fn minus_and_pos() {
-        let s = vec![1u8, 3, 5, 7];
+        let s = vec![1 as WorkerId, 3, 5, 7];
         assert_eq!(minus(&s, 3), vec![1, 5, 7]);
         assert_eq!(pos_in(&s, 5), 2);
     }

@@ -175,6 +175,7 @@ use std::time::{Duration, Instant};
 
 use crate::graph::csr::Vertex;
 use crate::network::Bus;
+use crate::WorkerId;
 use crate::obs::{measured_phase_times, now_ns, Phase, TraceSpan};
 use crate::shuffle::load::{ShuffleLoad, HEADER_BYTES};
 use crate::shuffle::segments::seg_bytes;
@@ -222,7 +223,7 @@ pub enum ClusterError {
     ToleranceExceeded { failures: usize, r: usize },
     /// The adopter died — it held the only copy of previously adopted
     /// state, so the loss cannot be re-planned again.
-    AdopterLost { worker: u8 },
+    AdopterLost { worker: WorkerId },
 }
 
 impl std::fmt::Display for ClusterError {
@@ -315,7 +316,7 @@ impl Default for WorkerOpts {
 /// exit leaves (queued frames still drain at the peers); a panic aborts
 /// the whole transport so every blocked peer unblocks and the failure
 /// propagates out of the thread scope instead of deadlocking it.
-struct LeaveGuard<'a>(&'a dyn Transport, u8);
+struct LeaveGuard<'a>(&'a dyn Transport, WorkerId);
 
 impl Drop for LeaveGuard<'_> {
     fn drop(&mut self) {
@@ -333,7 +334,7 @@ impl Drop for LeaveGuard<'_> {
 /// the mesh would race those frames out of the survivors' queues.
 struct LeaderGuard<'a> {
     net: &'a dyn Transport,
-    me: u8,
+    me: WorkerId,
     typed_abort: Cell<bool>,
 }
 
@@ -358,7 +359,7 @@ fn drive(
     let scheme = cfg.scheme;
     let deadline = cfg.phase_deadline_ms.map(Duration::from_millis);
     std::thread::scope(|scope| {
-        for kk in 0..k as u8 {
+        for kk in 0..k as WorkerId {
             let fail_at = cfg
                 .fail_workers
                 .iter()
@@ -380,7 +381,7 @@ fn drive(
 /// Run one worker endpoint to completion over `net` with default options
 /// — the entry point a `coded-graph worker` *process* shares with the
 /// in-process driver's threads. See [`run_worker_with`].
-pub fn run_worker(me: u8, job: &Job<'_>, prep: PreparedWorker, net: &dyn Transport) {
+pub fn run_worker(me: WorkerId, job: &Job<'_>, prep: PreparedWorker, net: &dyn Transport) {
     run_worker_with(me, job, prep, net, WorkerOpts::default());
 }
 
@@ -398,13 +399,13 @@ pub fn run_worker(me: u8, job: &Job<'_>, prep: PreparedWorker, net: &dyn Transpo
 /// adoption (ghost cores on the adopter, donor shards elsewhere), the
 /// straggler cutoff, and fault injection ([`WorkerOpts`]).
 pub fn run_worker_with(
-    me: u8,
+    me: WorkerId,
     job: &Job<'_>,
     prep: PreparedWorker,
     net: &dyn Transport,
     opts: WorkerOpts,
 ) -> Vec<TraceSpan> {
-    let leader = job.alloc.k as u8;
+    let leader = job.alloc.k as WorkerId;
     assert_eq!(prep.me, me, "sharded prep was built for worker {}", prep.me);
     let scheme = prep.scheme;
     let guard = LeaveGuard(net, me);
@@ -430,8 +431,8 @@ pub fn run_worker_with(
 
     // degraded-mode bookkeeping — empty/identity until a Recover arrives
     let mut epoch = 0u8;
-    let mut dead: Vec<u8> = Vec::new();
-    let mut route: Vec<u8> = (0..alloc.k as u8).collect();
+    let mut dead: Vec<WorkerId> = Vec::new();
+    let mut route: Vec<WorkerId> = (0..alloc.k as WorkerId).collect();
     // dead workers this endpoint answers for (adopter only)
     let mut ghosts: Vec<WorkerCore> = Vec::new();
     // dead workers' shards held for donor duties (non-adopters)
@@ -610,14 +611,20 @@ pub fn run_worker_with(
             let skipped = core.skipped();
             core.reset_ingest();
             let validated = core.decode_and_fold(job, &state, None);
-            frame::encode_reduced(&mut reply, me, validated, skipped.min(255) as u8, core.next_bits());
+            frame::encode_reduced(
+                &mut reply,
+                me,
+                u64::from(validated),
+                skipped.min(u16::MAX as u32) as u16,
+                core.next_bits(),
+            );
             frame::stamp_epoch(&mut reply, epoch);
             net.send_unicast(me, leader, &reply);
             for gc in &mut ghosts {
                 gc.reset_ingest();
                 gc.refresh_local_cache(job, &state);
                 let gv = gc.decode_and_fold(job, &state, None);
-                frame::encode_reduced(&mut reply, gc.me(), gv, 0, gc.next_bits());
+                frame::encode_reduced(&mut reply, gc.me(), u64::from(gv), 0, gc.next_bits());
                 frame::stamp_epoch(&mut reply, epoch);
                 net.send_unicast(me, leader, &reply);
             }
@@ -713,8 +720,8 @@ pub fn run_worker_with(
 /// on the workers' tracing setting. Returns the drained spans so a
 /// worker *process* can also write its own `--trace` file.
 fn ship_stats(
-    me: u8,
-    leader: u8,
+    me: WorkerId,
+    leader: WorkerId,
     epoch: u8,
     core: &mut WorkerCore,
     ghosts: &mut [WorkerCore],
@@ -729,7 +736,7 @@ fn ship_stats(
         let begin = spans.len();
         let dropped = c.drain_spans(me, &mut spans);
         let words: Vec<u64> = spans[begin..].iter().flat_map(TraceSpan::to_words).collect();
-        frame::encode_stats(reply, me, core_id, dropped.min(u32::MAX as u64) as u32, &words);
+        frame::encode_stats(reply, me, core_id, dropped, &words);
         frame::stamp_epoch(reply, epoch);
         net.send_unicast(me, leader, reply);
     }
@@ -778,11 +785,11 @@ fn adopt_recovery(
     f: &Frame<'_>,
     job: &Job<'_>,
     scheme: Scheme,
-    me: u8,
+    me: WorkerId,
     state: &mut [f64],
     epoch: &mut u8,
-    dead: &mut Vec<u8>,
-    route: &mut [u8],
+    dead: &mut Vec<WorkerId>,
+    route: &mut [WorkerId],
     core: &mut WorkerCore,
     ghosts: &mut Vec<WorkerCore>,
     ghost_preps: &mut Vec<PreparedWorker>,
@@ -790,7 +797,7 @@ fn adopt_recovery(
     fab: &mut TransportFabric<'_>,
 ) {
     let alloc = job.alloc;
-    let w = f.index as u8;
+    let w = f.index as WorkerId;
     assert!(f.epoch > *epoch, "worker {me}: Recover must advance the epoch");
     *epoch = f.epoch;
     dead.push(w);
@@ -802,9 +809,9 @@ fn adopt_recovery(
         state[v as usize] = f64::from_bits(bits);
     }
     let adopter =
-        (0..alloc.k as u8).find(|x| !dead.contains(x)).expect("recovery: no survivors");
+        (0..alloc.k as WorkerId).find(|x| !dead.contains(x)).expect("recovery: no survivors");
     for (x, hop) in route.iter_mut().enumerate() {
-        *hop = if dead.contains(&(x as u8)) { adopter } else { x as u8 };
+        *hop = if dead.contains(&(x as WorkerId)) { adopter } else { x as WorkerId };
     }
     core.adopt(job, dead, *epoch);
     core.reset_ingest();
@@ -843,7 +850,7 @@ pub fn run_leader(
     prep: &PreparedJob,
     net: &dyn Transport,
 ) -> JobReport {
-    let leader = job.alloc.k as u8;
+    let leader = job.alloc.k as WorkerId;
     let guard = LeaderGuard { net, me: leader, typed_abort: Cell::new(false) };
     leader_loop(job, cfg, iters, prep, net, leader, &guard)
 }
@@ -852,14 +859,14 @@ pub fn run_leader(
 /// recovery epoch, and the job-level [`RecoveryStats`].
 #[derive(Default)]
 struct FaultState {
-    dead: Vec<u8>,
+    dead: Vec<WorkerId>,
     epoch: u8,
     stats: RecoveryStats,
 }
 
 impl FaultState {
-    fn adopter(&self, k: usize) -> u8 {
-        (0..k as u8).find(|x| !self.dead.contains(x)).expect("recovery: no survivors")
+    fn adopter(&self, k: usize) -> WorkerId {
+        (0..k as WorkerId).find(|x| !self.dead.contains(x)).expect("recovery: no survivors")
     }
 
     fn live(&self, k: usize) -> usize {
@@ -874,12 +881,12 @@ impl FaultState {
 /// tolerance (or of the adopter itself) releases the survivors with
 /// `Abort` frames and panics with the typed [`ClusterError`].
 fn recover(
-    w: u8,
+    w: WorkerId,
     st: &mut FaultState,
     job: &Job<'_>,
     prep: &PreparedJob,
     net: &dyn Transport,
-    leader: u8,
+    leader: WorkerId,
     final_state: &[f64],
     sendbuf: &mut Vec<u8>,
     guard: &LeaderGuard<'_>,
@@ -918,7 +925,7 @@ fn recover(
         } else {
             ClusterError::ToleranceExceeded { failures: st.dead.len(), r: alloc.r }
         };
-        for kk in 0..k as u8 {
+        for kk in 0..k as WorkerId {
             if st.dead.contains(&kk) {
                 continue;
             }
@@ -938,7 +945,7 @@ fn recover(
     let pairs: Vec<(u32, u64)> =
         verts.iter().map(|&v| (v, final_state[v as usize].to_bits())).collect();
     let adopter = st.adopter(k);
-    for kk in 0..k as u8 {
+    for kk in 0..k as WorkerId {
         if st.dead.contains(&kk) {
             continue;
         }
@@ -959,7 +966,7 @@ fn leader_loop(
     iters: usize,
     prep: &PreparedJob,
     net: &dyn Transport,
-    leader: u8,
+    leader: WorkerId,
     guard: &LeaderGuard<'_>,
 ) -> JobReport {
     let (g, alloc) = (job.graph, job.alloc);
@@ -988,7 +995,7 @@ fn leader_loop(
         // degenerate job: release the workers before returning, or they
         // would wait forever for a StartShuffle that never comes; the
         // final state is the init state, exactly like the engine's
-        for kk in 0..k as u8 {
+        for kk in 0..k as WorkerId {
             frame::encode_control(&mut sendbuf, FrameKind::Stop, leader);
             net.send_unicast(leader, kk, &sendbuf);
         }
@@ -1012,7 +1019,7 @@ fn leader_loop(
             times.map_s = modeled.map_s;
 
             // ---- Shuffle ----
-            for kk in 0..k as u8 {
+            for kk in 0..k as WorkerId {
                 if st.dead.contains(&kk) {
                     continue;
                 }
@@ -1034,7 +1041,7 @@ fn leader_loop(
                     RecvOutcome::TimedOut => {
                         // a hung worker is indistinguishable from a dead
                         // one past the cutoff: declare the lowest laggard
-                        let w = (0..k as u8)
+                        let w = (0..k as WorkerId)
                             .find(|&x| !st.dead.contains(&x) && !send_done[x as usize])
                             .expect("send timeout with every barrier met");
                         recover(w, &mut st, job, prep, net, leader, &final_state, &mut sendbuf, guard);
@@ -1100,8 +1107,8 @@ fn leader_loop(
 
             // model ≡ reality, across process boundaries: the workers' own
             // send tallies (summed off the SendDone frames) must equal the
-            // frames and bytes the accounting charged (payload + 16-byte
-            // header each). Once a failure re-planned any traffic the
+            // frames and bytes the accounting charged (payload +
+            // `HEADER_BYTES` each). Once a failure re-planned any traffic the
             // modeled wire no longer describes reality — the divergence is
             // *measured* instead, as RecoveryStats::load_inflation.
             if st.stats.failures == 0 {
@@ -1136,7 +1143,7 @@ fn leader_loop(
             }
 
             // ---- Reduce ----
-            for kk in 0..k as u8 {
+            for kk in 0..k as WorkerId {
                 if st.dead.contains(&kk) {
                     continue;
                 }
@@ -1160,7 +1167,7 @@ fn leader_loop(
                         // a survivor still owes its own Reduced ⇒ it
                         // hangs; every survivor reported but ghosts are
                         // missing ⇒ the adopter hangs
-                        let w = (0..k as u8)
+                        let w = (0..k as WorkerId)
                             .find(|&x| !st.dead.contains(&x) && !got_red[x as usize])
                             .unwrap_or_else(|| st.adopter(k));
                         recover(w, &mut st, job, prep, net, leader, &final_state, &mut sendbuf, guard);
@@ -1224,7 +1231,7 @@ fn leader_loop(
             let last = it + 1 == iters;
             let adopter = st.adopter(k);
             for (kk, pairs) in outgoing.iter().enumerate() {
-                let kk = kk as u8;
+                let kk = kk as WorkerId;
                 // a dead worker's write-back goes to its adopter, tagged
                 // with the logical target so the ghost applies it
                 frame::encode_state_update(&mut sendbuf, leader, kk, pairs);
@@ -1232,7 +1239,7 @@ fn leader_loop(
                 let to = if st.dead.contains(&kk) { adopter } else { kk };
                 net.send_unicast(leader, to, &sendbuf);
             }
-            for kk in 0..k as u8 {
+            for kk in 0..k as WorkerId {
                 if st.dead.contains(&kk) {
                     continue;
                 }
@@ -1287,7 +1294,7 @@ fn leader_loop(
 fn collect_stats(
     report: &mut JobReport,
     net: &dyn Transport,
-    leader: u8,
+    leader: WorkerId,
     k: usize,
     trace: bool,
     rbuf: &mut Vec<u8>,
@@ -1325,7 +1332,7 @@ fn collect_stats(
                         f.word(i * 5 + 3),
                         f.word(i * 5 + 4),
                     ];
-                    if let Some(s) = TraceSpan::from_words(f.sender, core as u8, &w) {
+                    if let Some(s) = TraceSpan::from_words(f.sender, core as WorkerId, &w) {
                         report.spans.push(s);
                     }
                 }

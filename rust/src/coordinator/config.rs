@@ -1,6 +1,7 @@
 //! Job configuration: scheme selection and the execution-time model.
 
 use crate::network::BusConfig;
+use crate::WorkerId;
 
 /// Which Shuffle scheme to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -135,7 +136,7 @@ impl TimeModel {
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct FailWorker {
     /// Worker endpoint id (`0..K`).
-    pub worker: u8,
+    pub worker: WorkerId,
     /// 0-based iteration at whose start the worker dies.
     pub at_iter: usize,
 }

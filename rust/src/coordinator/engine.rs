@@ -62,6 +62,7 @@ use crate::shuffle::plan::{build_group_plans, build_group_plans_sharded, Shuffle
 use crate::shuffle::segments::seg_bytes;
 use crate::shuffle::uncoded::{plan_uncoded, plan_uncoded_for, UncodedTransfer};
 use crate::util::par;
+use crate::WorkerId;
 
 use super::config::{EngineConfig, Scheme, TimeModel};
 use super::exec::{DirectFabric, DirectReceiver, DirectSender, WorkerCore};
@@ -143,13 +144,13 @@ pub struct PreparedJob {
     /// State write-back multicasts `(owner, vertex_count, receivers)`,
     /// batch-major then owner-ascending — a deterministic replay list
     /// (the old per-iteration `HashMap` walk had hash-random bus order).
-    update_msgs: Vec<(u8, u32, u32)>,
+    update_msgs: Vec<(WorkerId, u32, u32)>,
 }
 
 impl PreparedJob {
     /// The deterministic state write-back replay list `(owner,
     /// vertex_count, receivers)` (shared with the cluster driver).
-    pub fn update_msgs(&self) -> &[(u8, u32, u32)] {
+    pub fn update_msgs(&self) -> &[(WorkerId, u32, u32)] {
         &self.update_msgs
     }
 
@@ -198,16 +199,45 @@ impl PreparedJob {
     /// cannot drift (the cluster's bit-identical-metrics contract).
     /// Encode/Decode tallies are zero for uncoded schemes (empty plan).
     pub fn modeled_compute_times(&self, time: &TimeModel) -> PhaseTimes {
+        Self::compute_times(
+            &self.mapped_edges,
+            &self.encode_bytes,
+            &self.decode_bytes,
+            &self.reduce_edges,
+            time,
+        )
+    }
+
+    /// [`PreparedJob::modeled_compute_times`] over caller-supplied work
+    /// tallies — shared with the sim fabric, whose per-worker tallies
+    /// come from the same tables but get straggler-scaled first.
+    pub fn compute_times(
+        mapped_edges: &[usize],
+        encode_bytes: &[usize],
+        decode_bytes: &[usize],
+        reduce_edges: &[usize],
+        time: &TimeModel,
+    ) -> PhaseTimes {
         fn fold_max(per_worker: &[usize], unit_s: f64) -> f64 {
             per_worker.iter().map(|&w| w as f64 * unit_s).fold(0.0, f64::max)
         }
         PhaseTimes {
-            map_s: fold_max(&self.mapped_edges, time.map_edge_s),
-            encode_s: fold_max(&self.encode_bytes, time.encode_byte_s),
-            decode_s: fold_max(&self.decode_bytes, time.decode_byte_s),
-            reduce_s: fold_max(&self.reduce_edges, time.reduce_iv_s),
+            map_s: fold_max(mapped_edges, time.map_edge_s),
+            encode_s: fold_max(encode_bytes, time.encode_byte_s),
+            decode_s: fold_max(decode_bytes, time.decode_byte_s),
+            reduce_s: fold_max(reduce_edges, time.reduce_iv_s),
             ..PhaseTimes::default()
         }
+    }
+
+    /// Modeled Encode table bytes per worker (state-independent).
+    pub fn encode_bytes(&self) -> &[usize] {
+        &self.encode_bytes
+    }
+
+    /// Modeled Decode bytes per worker (state-independent).
+    pub fn decode_bytes(&self) -> &[usize] {
+        &self.decode_bytes
     }
 }
 
@@ -221,7 +251,7 @@ impl PreparedJob {
 pub struct PreparedWorker {
     pub scheme: Scheme,
     /// The worker this shard belongs to.
-    pub me: u8,
+    pub me: WorkerId,
     /// Computation load `r`.
     pub r: usize,
     /// Local multicast-group shard (empty for uncoded schemes).
@@ -231,7 +261,7 @@ pub struct PreparedWorker {
     pub transfers: Vec<UncodedTransfer>,
     /// Canonical wire ids (`sender * K + receiver`), 1:1 with
     /// [`PreparedWorker::transfers`], ascending.
-    pub transfer_ids: Vec<u32>,
+    pub transfer_ids: Vec<u64>,
     /// Coded sends: `(local group, sender idx)`, group-ascending.
     send_items: Vec<(u32, u32)>,
     /// Local groups whose own row is non-empty, ascending — the decode
@@ -297,11 +327,11 @@ impl PreparedWorker {
 /// are canonical subset ranks and transfer wire ids `sender*K +
 /// receiver`, both order-compatible with the global plan, so a cluster
 /// of sharded workers stays bit-identical to the engine.
-pub fn prepare_worker(job: &Job<'_>, scheme: Scheme, me: u8) -> PreparedWorker {
+pub fn prepare_worker(job: &Job<'_>, scheme: Scheme, me: WorkerId) -> PreparedWorker {
     let (g, alloc) = (job.graph, job.alloc);
     let r = alloc.r;
     let wk = me as usize;
-    let (plan, id_transfers): (WorkerPlan, Vec<(u32, UncodedTransfer)>) = match scheme {
+    let (plan, id_transfers): (WorkerPlan, Vec<(u64, UncodedTransfer)>) = match scheme {
         Scheme::Coded => (build_group_plans_sharded(g, alloc, me), Vec::new()),
         Scheme::Uncoded => {
             (WorkerPlan::empty(me, r + 1, alloc.k), plan_uncoded_for(g, alloc, me))
@@ -386,7 +416,7 @@ pub fn prepare(job: &Job<'_>, scheme: Scheme) -> PreparedJob {
     let mut mapped_edges = vec![0usize; k];
     for (kk, me) in mapped_edges.iter_mut().enumerate() {
         *me = alloc
-            .mapped_vertices(kk as u8)
+            .mapped_vertices(kk as WorkerId)
             .map(|j| g.degree(j))
             .sum();
     }
@@ -508,11 +538,12 @@ pub fn prepare(job: &Job<'_>, scheme: Scheme) -> PreparedJob {
                     continue;
                 }
                 *count = 0;
-                let others = batch.servers.iter().filter(|&&s| s != owner as u8).count();
+                let others =
+                    batch.servers.iter().filter(|&&s| s != owner as WorkerId).count();
                 if others == 0 {
                     continue;
                 }
-                update_msgs.push((owner as u8, c, others as u32));
+                update_msgs.push((owner as WorkerId, c, others as u32));
             }
         }
     }
@@ -624,7 +655,7 @@ impl EngineScratch {
         let key = ScratchKey::of(job, scheme);
         if self.key != Some(key) {
             self.cores = (0..job.alloc.k)
-                .map(|kk| WorkerCore::new(job, prepare_worker(job, scheme, kk as u8)))
+                .map(|kk| WorkerCore::new(job, prepare_worker(job, scheme, kk as WorkerId)))
                 .collect();
             self.fabric = DirectFabric::default();
             self.key = Some(key);
@@ -764,7 +795,7 @@ pub fn run_iteration_scratch(
         Backend::Rust => {
             let logs = fabric.logs();
             par::for_each_mut(cores, parallel, &|kk, core| {
-                let mut rx = DirectReceiver::new(logs, kk as u8);
+                let mut rx = DirectReceiver::new(logs, kk as WorkerId);
                 core.ingest_all(&mut rx);
                 core.decode_and_fold(job, state, oracle);
             });
@@ -800,11 +831,11 @@ pub fn run_iteration_scratch(
                  path scatters per-mapper values, not per-batch aggregates)"
             );
             for (kk, core) in cores.iter_mut().enumerate() {
-                let mut rx = DirectReceiver::new(fabric.logs(), kk as u8);
+                let mut rx = DirectReceiver::new(fabric.logs(), kk as WorkerId);
                 core.ingest_all(&mut rx);
                 let received = core.collect_received(oracle);
                 reduce_worker_pjrt(
-                    g, alloc, prog, state, kk as u8, &received, *kind, exec, next,
+                    g, alloc, prog, state, kk as WorkerId, &received, *kind, exec, next,
                 )
                 .expect("PJRT reduce");
             }
@@ -847,7 +878,7 @@ pub fn reduce_worker_pjrt(
     alloc: &Allocation,
     prog: &dyn VertexProgram,
     state: &[f64],
-    worker: u8,
+    worker: WorkerId,
     received: &[RecoveredIv],
     kind: XlaKind,
     exec: &mut BlockExecutor<'_>,
@@ -1153,7 +1184,7 @@ mod tests {
                 assert!(prep.send_plan(kk).windows(2).all(|w| w[0].0 <= w[1].0));
                 for &gi in prep.recv_groups(kk) {
                     let group = plan.group(gi as usize);
-                    let mi = group.member_index(kk as u8).unwrap();
+                    let mi = group.member_index(kk as WorkerId).unwrap();
                     assert!(group.row_len(mi) > 0, "recv group with empty row");
                 }
                 assert!(prep.recv_groups(kk).windows(2).all(|w| w[0] < w[1]));
@@ -1196,30 +1227,30 @@ mod tests {
             let prog = PageRank::default();
             let job = Job { graph: &g, alloc: &alloc, program: &prog };
             let prep = prepare(&job, scheme);
-            for me in 0..k as u8 {
+            for me in 0..k as WorkerId {
                 let pw = prepare_worker(&job, scheme, me);
                 assert_eq!(pw.me, me);
                 assert_eq!(pw.r, r);
                 // coded routing: same (group, sender) sequence via wire ids
-                let want_sends: Vec<(u32, u32)> = prep
+                let want_sends: Vec<(u64, u32)> = prep
                     .send_plan(me as usize)
                     .iter()
                     .map(|&(gi, si)| {
-                        (subset_rank(k, prep.plan.group(gi as usize).servers) as u32, si)
+                        (subset_rank(k, prep.plan.group(gi as usize).servers), si)
                     })
                     .collect();
-                let got_sends: Vec<(u32, u32)> = pw
+                let got_sends: Vec<(u64, u32)> = pw
                     .send_plan()
                     .iter()
                     .map(|&(l, si)| (pw.plan.wire_id(l as usize), si))
                     .collect();
                 assert_eq!(got_sends, want_sends, "{scheme} me={me}");
-                let want_recv: Vec<u32> = prep
+                let want_recv: Vec<u64> = prep
                     .recv_groups(me as usize)
                     .iter()
-                    .map(|&gi| subset_rank(k, prep.plan.group(gi as usize).servers) as u32)
+                    .map(|&gi| subset_rank(k, prep.plan.group(gi as usize).servers))
                     .collect();
-                let got_recv: Vec<u32> = pw
+                let got_recv: Vec<u64> = pw
                     .recv_groups()
                     .iter()
                     .map(|&l| pw.plan.wire_id(l as usize))

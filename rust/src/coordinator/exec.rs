@@ -61,6 +61,7 @@ use crate::shuffle::plan::surviving_donor;
 use crate::shuffle::segments::seg_bytes;
 use crate::transport::frame::{self, Frame, FrameKind};
 use crate::transport::Transport;
+use crate::WorkerId;
 
 use std::collections::VecDeque;
 
@@ -80,10 +81,10 @@ use super::engine::{Job, PreparedWorker};
 pub trait Fabric {
     /// Stage one serialized data frame toward every endpoint in
     /// `receivers` (one logical transmission, like one bus slot).
-    fn stage_multicast(&mut self, receivers: &[u8], frame: &[u8]);
+    fn stage_multicast(&mut self, receivers: &[WorkerId], frame: &[u8]);
 
     /// Stage one serialized data frame toward a single endpoint.
-    fn stage_unicast(&mut self, to: u8, frame: &[u8]);
+    fn stage_unicast(&mut self, to: WorkerId, frame: &[u8]);
 
     /// All of this iteration's frames are staged: push them toward the
     /// peers and hand over the data tally (`frames` transmissions,
@@ -115,14 +116,14 @@ pub struct WorkerCore {
     src_only: bool,
     /// Wire ids of the groups this worker decodes, ascending — 1:1 with
     /// `prep.recv_groups()` (inbound frame routing).
-    my_gids: Vec<u32>,
+    my_gids: Vec<u64>,
     /// Member index of this worker within each recv group.
     my_row_idx: Vec<usize>,
     garena_off: Vec<usize>,
     gvals_off: Vec<usize>,
     /// Wire ids of the transfers this worker receives, ascending, and
     /// their IV-arena offsets (1:1 with `prep.unc_recv()`).
-    my_unc_ids: Vec<u32>,
+    my_unc_ids: Vec<u64>,
     unc_off: Vec<usize>,
     expect_coded: usize,
     expect_unc: usize,
@@ -154,7 +155,7 @@ pub struct WorkerCore {
     ivbits: Vec<u64>,
     accs: Vec<f64>,
     next_bits: Vec<u64>,
-    receivers: Vec<u8>,
+    receivers: Vec<WorkerId>,
     sendbuf: Vec<u8>,
     rbuf: Vec<u8>,
     got_coded: usize,
@@ -165,10 +166,10 @@ pub struct WorkerCore {
     /// can drop pre-failure stragglers and stash post-restart early birds.
     epoch: u8,
     /// Dead workers, ascending (leader-authoritative).
-    dead: Vec<u8>,
+    dead: Vec<WorkerId>,
     /// Physical endpoint adopting each logical worker's frames —
     /// identity for live workers, the adopter for dead ones.
-    route: Vec<u8>,
+    route: Vec<WorkerId>,
     /// Per recv slot: does the group contain a dead member? A degraded
     /// group carries no coded frames — one raw [`FrameKind::RecoverRow`]
     /// from a surviving donor replaces them.
@@ -306,7 +307,7 @@ impl WorkerCore {
             last_validated: 0,
             epoch: 0,
             dead: Vec::new(),
-            route: (0..alloc.k as u8).collect(),
+            route: (0..alloc.k as WorkerId).collect(),
             degraded: vec![false; n_slots],
             seen: vec![false; n_slots * (r + 1)],
             skipped: 0,
@@ -317,7 +318,7 @@ impl WorkerCore {
 
     /// The worker this core executes.
     #[inline]
-    pub fn me(&self) -> u8 {
+    pub fn me(&self) -> WorkerId {
         self.prep.me
     }
 
@@ -385,7 +386,7 @@ impl WorkerCore {
     /// stamped with the *physical* hosting endpoint `worker` (the core's
     /// own id is the logical tid — they differ for adopted ghost cores).
     /// Returns how many spans the ring overwrote before this drain.
-    pub fn drain_spans(&mut self, worker: u8, out: &mut Vec<TraceSpan>) -> u64 {
+    pub fn drain_spans(&mut self, worker: WorkerId, out: &mut Vec<TraceSpan>) -> u64 {
         self.obs.drain_into(worker, self.prep.me, out)
     }
 
@@ -401,16 +402,28 @@ impl WorkerCore {
     /// iteration afterwards ([`WorkerCore::reset_ingest`]): state only
     /// mutates at write-back, so a partially ingested iteration is
     /// safely re-entrant.
-    pub fn adopt(&mut self, job: &Job<'_>, dead: &[u8], epoch: u8) {
+    pub fn adopt(&mut self, job: &Job<'_>, dead: &[WorkerId], epoch: u8) {
+        let adopter = (0..job.alloc.k as WorkerId)
+            .find(|w| !dead.contains(w))
+            .expect("recovery: no survivors");
+        self.adopt_with(job, dead, epoch, adopter);
+    }
+
+    /// [`WorkerCore::adopt`] with an explicit ghost-placement choice:
+    /// every dead worker's frames reroute to `adopter` instead of the
+    /// default lowest survivor. All cores of a job must be given the
+    /// same adopter — the route is part of the shared recovery plan.
+    /// Used by the sim fabric to compare placement policies
+    /// (lowest-survivor vs load-spread) at large `K`.
+    pub fn adopt_with(&mut self, job: &Job<'_>, dead: &[WorkerId], epoch: u8, adopter: WorkerId) {
         let alloc = job.alloc;
+        assert!(!dead.contains(&adopter), "recovery: adopter is dead");
         self.epoch = epoch;
         self.obs.set_epoch(epoch);
         self.dead.clear();
         self.dead.extend_from_slice(dead);
-        let adopter =
-            (0..alloc.k as u8).find(|w| !dead.contains(w)).expect("recovery: no survivors");
         for (w, hop) in self.route.iter_mut().enumerate() {
-            *hop = if dead.contains(&(w as u8)) { adopter } else { w as u8 };
+            *hop = if dead.contains(&(w as WorkerId)) { adopter } else { w as WorkerId };
         }
         let plan = &self.prep.plan;
         let mut expect_coded = 0usize;
@@ -1052,9 +1065,9 @@ impl WorkerCore {
 pub fn stage_dead_sender_transfers(
     job: &Job<'_>,
     ghost: &PreparedWorker,
-    dead: &[u8],
-    me: u8,
-    route: &[u8],
+    dead: &[WorkerId],
+    me: WorkerId,
+    route: &[WorkerId],
     state: &[f64],
     epoch: u8,
     fabric: &mut dyn Fabric,
@@ -1109,8 +1122,8 @@ pub fn stage_dead_sender_transfers(
 /// lifetime data-send tally for the exit-time counter cross-check.
 pub struct TransportFabric<'a> {
     net: &'a dyn Transport,
-    me: u8,
-    leader: u8,
+    me: WorkerId,
+    leader: WorkerId,
     ctrl: Vec<u8>,
     saw_start_reduce: bool,
     sent_frames: usize,
@@ -1125,7 +1138,7 @@ pub struct TransportFabric<'a> {
 }
 
 impl<'a> TransportFabric<'a> {
-    pub fn new(net: &'a dyn Transport, me: u8, leader: u8) -> TransportFabric<'a> {
+    pub fn new(net: &'a dyn Transport, me: WorkerId, leader: WorkerId) -> TransportFabric<'a> {
         TransportFabric {
             net,
             me,
@@ -1187,11 +1200,11 @@ impl<'a> TransportFabric<'a> {
 }
 
 impl Fabric for TransportFabric<'_> {
-    fn stage_multicast(&mut self, receivers: &[u8], frame: &[u8]) {
+    fn stage_multicast(&mut self, receivers: &[WorkerId], frame: &[u8]) {
         self.net.send_multicast_buffered(self.me, receivers, frame);
     }
 
-    fn stage_unicast(&mut self, to: u8, frame: &[u8]) {
+    fn stage_unicast(&mut self, to: WorkerId, frame: &[u8]) {
         if to == self.me {
             self.loopback.push_back(frame.to_vec());
             return;
@@ -1204,7 +1217,7 @@ impl Fabric for TransportFabric<'_> {
         self.net.flush(self.me);
         self.sent_frames += frames as usize;
         self.sent_bytes += bytes as usize;
-        frame::encode_send_done(&mut self.ctrl, self.me, frames, bytes);
+        frame::encode_send_done(&mut self.ctrl, self.me, u64::from(frames), bytes);
         frame::stamp_epoch(&mut self.ctrl, self.epoch);
         self.net.send_unicast(self.me, self.leader, &self.ctrl);
     }
@@ -1239,7 +1252,7 @@ pub struct SendLog {
     bytes: Vec<u8>,
     /// Per frame: `(byte start, byte end, receiver start, receiver end)`.
     frames: Vec<(u32, u32, u32, u32)>,
-    recv: Vec<u8>,
+    recv: Vec<WorkerId>,
     frames_tally: u32,
     bytes_tally: u64,
 }
@@ -1314,7 +1327,7 @@ impl<'a> DirectSender<'a> {
 }
 
 impl Fabric for DirectSender<'_> {
-    fn stage_multicast(&mut self, receivers: &[u8], frame: &[u8]) {
+    fn stage_multicast(&mut self, receivers: &[WorkerId], frame: &[u8]) {
         let (b0, r0) = (self.log.bytes.len() as u32, self.log.recv.len() as u32);
         self.log.bytes.extend_from_slice(frame);
         self.log.recv.extend_from_slice(receivers);
@@ -1323,7 +1336,7 @@ impl Fabric for DirectSender<'_> {
             .push((b0, self.log.bytes.len() as u32, r0, self.log.recv.len() as u32));
     }
 
-    fn stage_unicast(&mut self, to: u8, frame: &[u8]) {
+    fn stage_unicast(&mut self, to: WorkerId, frame: &[u8]) {
         self.stage_multicast(std::slice::from_ref(&to), frame);
     }
 
@@ -1345,23 +1358,23 @@ impl Fabric for DirectSender<'_> {
 /// contract.
 pub struct DirectReceiver<'a> {
     logs: &'a [SendLog],
-    me: u8,
+    me: WorkerId,
     sender: usize,
     frame: usize,
 }
 
 impl<'a> DirectReceiver<'a> {
-    pub fn new(logs: &'a [SendLog], me: u8) -> DirectReceiver<'a> {
+    pub fn new(logs: &'a [SendLog], me: WorkerId) -> DirectReceiver<'a> {
         DirectReceiver { logs, me, sender: 0, frame: 0 }
     }
 }
 
 impl Fabric for DirectReceiver<'_> {
-    fn stage_multicast(&mut self, _receivers: &[u8], _frame: &[u8]) {
+    fn stage_multicast(&mut self, _receivers: &[WorkerId], _frame: &[u8]) {
         unreachable!("DirectFabric: the ingest phase stages nothing")
     }
 
-    fn stage_unicast(&mut self, _to: u8, _frame: &[u8]) {
+    fn stage_unicast(&mut self, _to: WorkerId, _frame: &[u8]) {
         unreachable!("DirectFabric: the ingest phase stages nothing")
     }
 
@@ -1491,7 +1504,7 @@ mod tests {
         let job = Job { graph: &g, alloc: &alloc, program: &prog };
         for scheme in [Scheme::Coded, Scheme::Uncoded, Scheme::CodedCombined] {
             let mut cores: Vec<WorkerCore> = (0..k)
-                .map(|kk| WorkerCore::new(&job, prepare_worker(&job, scheme, kk as u8)))
+                .map(|kk| WorkerCore::new(&job, prepare_worker(&job, scheme, kk as WorkerId)))
                 .collect();
             let state: Vec<f64> = (0..n as Vertex).map(|v| prog.init(v, &g)).collect();
             let mut fab = DirectFabric::default();
@@ -1526,15 +1539,15 @@ mod tests {
         job: &Job<'_>,
         scheme: Scheme,
         k: usize,
-        dead: &[u8],
+        dead: &[WorkerId],
     ) -> Vec<u64> {
         let (g, alloc, prog) = (job.graph, job.alloc, job.program);
         let n = g.n();
         let epoch = u8::from(!dead.is_empty());
-        let survivors: Vec<u8> = (0..k as u8).filter(|w| !dead.contains(w)).collect();
+        let survivors: Vec<WorkerId> = (0..k as WorkerId).filter(|w| !dead.contains(w)).collect();
         let adopter = survivors[0];
-        let route: Vec<u8> =
-            (0..k as u8).map(|w| if dead.contains(&w) { adopter } else { w }).collect();
+        let route: Vec<WorkerId> =
+            (0..k as WorkerId).map(|w| if dead.contains(&w) { adopter } else { w }).collect();
         let ghost_preps: Vec<_> =
             dead.iter().map(|&w| prepare_worker(job, scheme, w)).collect();
         let mut ghosts: Vec<WorkerCore> = dead
@@ -1665,7 +1678,7 @@ mod tests {
         let job = Job { graph: &g, alloc: &alloc, program: &prog };
         let scheme = Scheme::Coded;
         let mut cores: Vec<WorkerCore> = (0..k)
-            .map(|kk| WorkerCore::new(&job, prepare_worker(&job, scheme, kk as u8)))
+            .map(|kk| WorkerCore::new(&job, prepare_worker(&job, scheme, kk as WorkerId)))
             .collect();
         let state: Vec<f64> = (0..n as Vertex).map(|v| prog.init(v, &g)).collect();
         let mut fab = DirectFabric::default();

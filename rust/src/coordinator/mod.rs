@@ -22,6 +22,11 @@
 //!   results bit-identical to the engine. Includes the degraded-mode
 //!   recovery protocol (PR 6): survive up to `r − 1` worker losses by
 //!   re-planning onto surviving replicas, with straggler deadlines.
+//! * [`sim`] — the deterministic virtual-time fabric (PR 8): `K` worker
+//!   cores over a frame-stepped virtual clock with per-link
+//!   latency/bandwidth, seeded stragglers, and failure replay at `K` in
+//!   the thousands; results bit-identical to the engine, span timelines
+//!   bit-identical across same-seed runs.
 //! * [`spec`] — serializable job specs: the single line the bootstrap
 //!   rendezvous ships so worker processes can deterministically rebuild
 //!   graph, allocation, program, and shuffle plan.
@@ -31,6 +36,7 @@ pub mod config;
 pub mod engine;
 pub mod exec;
 pub mod metrics;
+pub mod sim;
 pub mod spec;
 
 pub use cluster::{
@@ -45,3 +51,6 @@ pub use engine::{
     run_rust, Backend, EngineScratch, Job, PreparedJob, PreparedWorker, XlaKind,
 };
 pub use metrics::{IterationMetrics, JobReport, PhaseTimes, RecoveryStats};
+pub use sim::{
+    clean_iteration_load, run_sim, RecoveryPolicy, SimConfig, SimIterRecord, SimReport,
+};

@@ -1,0 +1,813 @@
+//! Deterministic virtual-time simulation: the paper's asymptotics at `K`
+//! in the thousands, in one process, on one wall-clock-free timeline.
+//!
+//! [`run_sim`] drives `K` [`WorkerCore`]s — the exact per-worker phase
+//! machine behind every other driver — over a frame-stepped virtual
+//! clock. All data really flows: frames are encoded, serialized,
+//! delivered in arrival order, decoded, and folded bit-for-bit, so the
+//! final state is bit-identical to the engine on the same job. Only
+//! *time* is simulated:
+//!
+//! * each worker's compute phases are priced by the [`TimeModel`] over
+//!   the [`PreparedJob`]'s per-worker work tallies — the same tables
+//!   the engine's modeled times fold, straggler-scaled first;
+//! * every staged frame pays NIC serialization (`len / bandwidth`) on
+//!   the sender's virtual cursor plus a one-way link latency, and one
+//!   serialization covers every receiver of a *multicast* — exactly
+//!   the saving the coded scheme banks on;
+//! * seeded per-worker straggler draws ([`DetRng`] split streams, one
+//!   stream per worker so draws are independent of any other worker's
+//!   fate) stretch compute phases by a configurable slowdown.
+//!
+//! The flight-recorder spans ([`crate::obs`]) carry *virtual*
+//! timestamps (the cores run with wall-clock tracing off; the driver
+//! re-records each phase window via [`WorkerCore::note_span`]), so two
+//! runs with the same [`SimConfig::seed`] are bit-identical in results,
+//! loads, iteration records, **and** span timelines.
+//!
+//! Failure injection replays the cluster's degraded mode (PR 6) at
+//! scales the TCP driver cannot reach: a dead worker's coded groups
+//! collapse to raw donor rows, its uncoded transfers are re-covered by
+//! surviving batch replicas, and its ghost core lands on one adopter
+//! chosen by a [`RecoveryPolicy`] — the placement knob this module
+//! exists to compare at large `K`.
+
+use crate::graph::csr::Vertex;
+use crate::obs::{Phase, TraceSpan};
+use crate::shuffle::load::ShuffleLoad;
+use crate::transport::frame::Frame;
+use crate::util::rng::DetRng;
+use crate::WorkerId;
+
+use super::config::{FailWorker, Scheme, TimeModel};
+use super::engine::{prepare, prepare_worker, Job, PreparedJob, PreparedWorker};
+use super::exec::{stage_dead_sender_transfers, Fabric, WorkerCore};
+use super::metrics::RecoveryStats;
+
+/// Where a dead worker's ghost core (and all frames addressed to it) go.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecoveryPolicy {
+    /// The cluster driver's default: ghosts stack on the lowest
+    /// surviving worker id.
+    LowestSurvivor,
+    /// Ghosts land on the survivor with the least modeled compute work
+    /// (mapped + reduced edges) — spreading the extra decode/fold load
+    /// away from already-busy workers.
+    LoadSpread,
+}
+
+impl RecoveryPolicy {
+    /// Stable CLI token (parses back via [`std::str::FromStr`]).
+    pub fn token(&self) -> &'static str {
+        match self {
+            RecoveryPolicy::LowestSurvivor => "lowest",
+            RecoveryPolicy::LoadSpread => "spread",
+        }
+    }
+}
+
+impl std::str::FromStr for RecoveryPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(match s {
+            "lowest" | "lowest-survivor" => RecoveryPolicy::LowestSurvivor,
+            "spread" | "load-spread" => RecoveryPolicy::LoadSpread,
+            other => {
+                return Err(format!(
+                    "unknown recovery policy {other:?} (expected lowest|spread)"
+                ))
+            }
+        })
+    }
+}
+
+impl std::fmt::Display for RecoveryPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.token())
+    }
+}
+
+/// Virtual cluster parameters: link model, straggler model, failure
+/// injection. Defaults approximate the paper's testbed (100 Mbps NIC,
+/// sub-millisecond LAN latency, Python-speed compute).
+#[derive(Clone, Copy, Debug)]
+pub struct SimConfig {
+    /// Root seed for every stochastic choice (stragglers). Two runs
+    /// with equal seeds are bit-identical end to end.
+    pub seed: u64,
+    /// One-way link latency in virtual nanoseconds.
+    pub latency_ns: u64,
+    /// Per-NIC serialization bandwidth, bits per second.
+    pub bandwidth_bps: f64,
+    /// Per-(worker, iteration) probability of straggling.
+    pub straggler_prob: f64,
+    /// Compute-time multiplier applied to a straggling worker (>= 1).
+    pub straggler_slowdown: f64,
+    /// Per-operation compute-time model.
+    pub time: TimeModel,
+    /// Up to two workers that die at the top of a given iteration
+    /// (the cluster drivers' `--fail-worker` shape).
+    pub fail_workers: [Option<FailWorker>; 2],
+    /// Ghost-placement policy after a failure.
+    pub policy: RecoveryPolicy,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self {
+            seed: 2018,
+            latency_ns: 500_000,
+            bandwidth_bps: 100e6,
+            straggler_prob: 0.0,
+            straggler_slowdown: 4.0,
+            time: TimeModel::python_speed(),
+            fail_workers: [None, None],
+            policy: RecoveryPolicy::LowestSurvivor,
+        }
+    }
+}
+
+/// One simulated iteration's record.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SimIterRecord {
+    /// Virtual start time of the iteration (the BSP barrier).
+    pub start_ns: u64,
+    /// Virtual makespan: the slowest worker's finish minus `start_ns`.
+    pub makespan_ns: u64,
+    /// Wire frames staged this iteration (loopback excluded).
+    pub wire_frames: u64,
+    /// Wire bytes staged this iteration (headers included).
+    pub wire_bytes: u64,
+    /// Recovery generation the iteration ran under.
+    pub epoch: u8,
+}
+
+/// Everything a simulation run produces.
+#[derive(Clone, Debug, Default)]
+pub struct SimReport {
+    /// Final state after the last iteration (bit-identical to the
+    /// engine on the same job).
+    pub final_state: Vec<f64>,
+    /// Per-iteration virtual-time and wire records.
+    pub iterations: Vec<SimIterRecord>,
+    /// One *healthy* iteration's shuffle load from the deterministic
+    /// accounting replay (paper units; state-independent). The sim
+    /// asserts its staged wire tallies against this on every
+    /// failure-free iteration — the engine's model ≡ staged invariant.
+    pub clean_load: ShuffleLoad,
+    /// Flight-recorder spans with virtual timestamps, drained at job
+    /// end (cores ascending, then ghost cores).
+    pub spans: Vec<TraceSpan>,
+    /// Degraded-mode accounting (defaults for a clean run).
+    pub recovery: RecoveryStats,
+    /// Total virtual time of the job.
+    pub total_ns: u64,
+}
+
+impl SimReport {
+    /// Total virtual seconds.
+    pub fn total_virtual_s(&self) -> f64 {
+        self.total_ns as f64 * 1e-9
+    }
+
+    /// FNV-1a digest over the final state's bit patterns — a compact
+    /// determinism witness for CLI output and tests.
+    pub fn state_digest(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for s in &self.final_state {
+            h = (h ^ s.to_bits()).wrapping_mul(0x1000_0000_01b3);
+        }
+        h
+    }
+}
+
+/// The deterministic accounting replay of one healthy iteration's
+/// shuffle — identical to the engine's (canonical group/transfer order),
+/// shared so the sim's loads and the theory-validation tests measure
+/// exactly what the engine would.
+pub fn clean_iteration_load(prep: &PreparedJob) -> ShuffleLoad {
+    let mut load = ShuffleLoad::default();
+    match prep.scheme {
+        Scheme::Uncoded | Scheme::UncodedCombined => {
+            for t in &prep.transfers {
+                load.add_uncoded(t.ivs.len());
+            }
+        }
+        Scheme::Coded | Scheme::CodedCombined => {
+            let r = prep.plan.members() - 1;
+            for gi in 0..prep.plan.num_groups() {
+                for &q in prep.plan.sender_cols(gi) {
+                    if q > 0 {
+                        load.add_coded(q as usize, r);
+                    }
+                }
+            }
+        }
+    }
+    load
+}
+
+/// Deterministic f64-seconds → virtual-ns conversion.
+#[inline]
+fn ns(secs: f64) -> u64 {
+    (secs * 1e9).round() as u64
+}
+
+/// One staged frame in flight: arrival time, a global staging-order
+/// tie-break, and its byte range in the iteration arena.
+#[derive(Clone, Copy)]
+struct Msg {
+    arrival_ns: u64,
+    seq: u64,
+    start: u32,
+    end: u32,
+}
+
+/// Per-iteration frame store: one flat byte arena (all senders append
+/// serially) plus per-receiver inboxes sorted by `(arrival, seq)`
+/// before ingest — virtual-time delivery order, fully deterministic.
+#[derive(Default)]
+struct SimNet {
+    arena: Vec<u8>,
+    inboxes: Vec<Vec<Msg>>,
+    seq: u64,
+}
+
+impl SimNet {
+    fn begin_iteration(&mut self, k: usize) {
+        if self.inboxes.len() != k {
+            self.inboxes = (0..k).map(|_| Vec::new()).collect();
+        }
+        for ib in &mut self.inboxes {
+            ib.clear();
+        }
+        self.arena.clear();
+        self.seq = 0;
+    }
+
+    fn push(&mut self, to: WorkerId, arrival_ns: u64, start: u32, end: u32) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.inboxes[to as usize].push(Msg { arrival_ns, seq, start, end });
+    }
+
+    fn sort_inbox(&mut self, k: usize) {
+        self.inboxes[k].sort_unstable_by_key(|m| (m.arrival_ns, m.seq));
+    }
+}
+
+/// The staging half: one worker's NIC during the stage phase. The
+/// cursor starts where the worker's (straggler-scaled) Map + Encode
+/// compute ends; each staged frame advances it by the frame's
+/// serialization time, and receivers see the frame one link latency
+/// after serialization completes. Self-addressed frames (an adopter
+/// acting as its own ghost's donor) cross no wire: delivered at the
+/// current cursor, untallied — the same rule every other fabric applies.
+struct SimSender<'a> {
+    net: &'a mut SimNet,
+    me: WorkerId,
+    cursor_ns: u64,
+    latency_ns: u64,
+    ns_per_byte: f64,
+    staged_frames: u32,
+    staged_bytes: u64,
+}
+
+impl Fabric for SimSender<'_> {
+    fn stage_multicast(&mut self, receivers: &[WorkerId], frame: &[u8]) {
+        let start = self.net.arena.len() as u32;
+        self.net.arena.extend_from_slice(frame);
+        let end = self.net.arena.len() as u32;
+        self.cursor_ns += (frame.len() as f64 * self.ns_per_byte).round() as u64;
+        let arrival = self.cursor_ns + self.latency_ns;
+        for &to in receivers {
+            self.net.push(to, arrival, start, end);
+        }
+        self.staged_frames += 1;
+        self.staged_bytes += frame.len() as u64;
+    }
+
+    fn stage_unicast(&mut self, to: WorkerId, frame: &[u8]) {
+        if to == self.me {
+            let start = self.net.arena.len() as u32;
+            self.net.arena.extend_from_slice(frame);
+            let end = self.net.arena.len() as u32;
+            self.net.push(to, self.cursor_ns, start, end);
+            return;
+        }
+        self.stage_multicast(std::slice::from_ref(&to), frame);
+    }
+
+    fn complete_sends(&mut self, frames: u32, bytes: u64) {
+        // the core's own tally (donor extras folded in, loopback
+        // excluded) must equal what actually crossed the virtual wire
+        assert_eq!(
+            (frames, bytes),
+            (self.staged_frames, self.staged_bytes),
+            "sim: worker {} staged tally disagrees with the core's accounting",
+            self.me
+        );
+    }
+
+    fn recv_data(&mut self, _buf: &mut Vec<u8>) -> bool {
+        unreachable!("sim: the stage phase has no inbound frames")
+    }
+}
+
+/// The ingest half: a cursor over one worker's arrival-sorted inbox.
+struct SimReceiver<'a> {
+    net: &'a SimNet,
+    me: usize,
+    pos: usize,
+    last_arrival_ns: u64,
+}
+
+impl SimReceiver<'_> {
+    fn drained(&self) -> bool {
+        self.pos >= self.net.inboxes[self.me].len()
+    }
+}
+
+impl Fabric for SimReceiver<'_> {
+    fn stage_multicast(&mut self, _receivers: &[WorkerId], _frame: &[u8]) {
+        unreachable!("sim: the ingest phase stages nothing")
+    }
+
+    fn stage_unicast(&mut self, _to: WorkerId, _frame: &[u8]) {
+        unreachable!("sim: the ingest phase stages nothing")
+    }
+
+    fn complete_sends(&mut self, _frames: u32, _bytes: u64) {
+        unreachable!("sim: the ingest phase stages nothing")
+    }
+
+    fn recv_data(&mut self, buf: &mut Vec<u8>) -> bool {
+        let inbox = &self.net.inboxes[self.me];
+        if self.pos >= inbox.len() {
+            return false;
+        }
+        let m = inbox[self.pos];
+        self.pos += 1;
+        self.last_arrival_ns = self.last_arrival_ns.max(m.arrival_ns);
+        buf.clear();
+        buf.extend_from_slice(&self.net.arena[m.start as usize..m.end as usize]);
+        true
+    }
+}
+
+/// How many multicast groups plus uncoded transfers `dead` degrades —
+/// the traffic the recovery re-plans onto surviving replicas.
+fn count_recovered(prep: &PreparedJob, dead: &[WorkerId]) -> usize {
+    let mut n = 0usize;
+    for gi in 0..prep.plan.num_groups() {
+        if prep.plan.group(gi).servers.iter().any(|s| dead.contains(s)) {
+            n += 1;
+        }
+    }
+    n + prep.transfers.iter().filter(|t| dead.contains(&t.sender)).count()
+}
+
+/// Run `iters` iterations of `job` under `scheme` on the virtual-time
+/// fabric. Results are bit-identical to the engine; time, spans, and
+/// failure recovery follow [`SimConfig`]. Serial by construction — the
+/// virtual clock, not the host's core count, orders every event.
+pub fn run_sim(job: &Job<'_>, scheme: Scheme, iters: usize, cfg: &SimConfig) -> SimReport {
+    let (g, alloc, prog) = (job.graph, job.alloc, job.program);
+    let n = g.n();
+    let k = alloc.k;
+    assert!(k >= 2 && k < WorkerId::MAX as usize, "sim: K = {k} out of range");
+    assert!(cfg.straggler_slowdown >= 1.0, "sim: slowdown must be >= 1");
+    let prep = prepare(job, scheme);
+    let clean_load = clean_iteration_load(&prep);
+    let ns_per_byte = 8e9 / cfg.bandwidth_bps;
+
+    // one straggler stream per worker: a worker's draws never depend on
+    // any other worker's fate, so policy comparisons replay identical
+    // straggler weather
+    let mut root = DetRng::seed(cfg.seed);
+    let mut wrng: Vec<DetRng> = (0..k).map(|w| root.split(w as u64)).collect();
+
+    let mut cores: Vec<Option<WorkerCore>> = (0..k)
+        .map(|kk| Some(WorkerCore::new(job, prepare_worker(job, scheme, kk as WorkerId))))
+        .collect();
+    // wall-clock tracing stays off; the driver records virtual spans
+    for c in cores.iter_mut().flatten() {
+        c.set_trace(false);
+    }
+    let mut ghosts: Vec<WorkerCore> = Vec::new();
+    let mut ghost_preps: Vec<PreparedWorker> = Vec::new();
+    let mut dead: Vec<WorkerId> = Vec::new();
+    let mut route: Vec<WorkerId> = (0..k as WorkerId).collect();
+    let mut adopter: WorkerId = 0;
+    let mut epoch = 0u8;
+    let mut recovery = RecoveryStats::default();
+
+    let mut state: Vec<f64> = (0..n as Vertex).map(|v| prog.init(v, g)).collect();
+    let mut next = vec![0.0f64; n];
+    let mut net = SimNet::default();
+    let mut records: Vec<SimIterRecord> = Vec::with_capacity(iters);
+    let mut rbuf: Vec<u8> = Vec::new();
+    let mut t = 0u64;
+
+    for it in 0..iters {
+        // ---- failure injection at the top of the iteration ------------
+        let newly: Vec<WorkerId> = cfg
+            .fail_workers
+            .iter()
+            .flatten()
+            .filter(|f| f.at_iter == it)
+            .map(|f| f.worker)
+            .collect();
+        if !newly.is_empty() {
+            for &w in &newly {
+                assert!(
+                    (w as usize) < k && !dead.contains(&w),
+                    "sim: bad fail spec {w}@{it}"
+                );
+                dead.push(w);
+            }
+            dead.sort_unstable();
+            assert!(
+                dead.len() < alloc.r.max(1),
+                "sim: {} failures exceed the plan's r - 1 = {} tolerance",
+                dead.len(),
+                alloc.r.saturating_sub(1)
+            );
+            epoch += 1;
+            let survivors: Vec<WorkerId> =
+                (0..k as WorkerId).filter(|w| !dead.contains(w)).collect();
+            adopter = match cfg.policy {
+                RecoveryPolicy::LowestSurvivor => survivors[0],
+                RecoveryPolicy::LoadSpread => survivors
+                    .iter()
+                    .copied()
+                    .min_by_key(|&w| {
+                        prep.mapped_edges[w as usize] + prep.reduce_edges[w as usize]
+                    })
+                    .expect("sim: no survivors"),
+            };
+            for (w, hop) in route.iter_mut().enumerate() {
+                *hop = if dead.contains(&(w as WorkerId)) { adopter } else { w as WorkerId };
+            }
+            for &w in &newly {
+                cores[w as usize] = None;
+                ghost_preps.push(prepare_worker(job, scheme, w));
+                let mut gc = WorkerCore::new(job, prepare_worker(job, scheme, w));
+                gc.set_trace(false);
+                ghosts.push(gc);
+            }
+            for c in cores.iter_mut().flatten() {
+                c.adopt_with(job, &dead, epoch, adopter);
+            }
+            for gc in ghosts.iter_mut() {
+                gc.adopt_with(job, &dead, epoch, adopter);
+            }
+            recovery.failures = dead.len();
+            recovery.recovered_groups = count_recovered(&prep, &dead);
+        }
+
+        // ---- stage phase: encode + serialize on every live NIC --------
+        net.begin_iteration(k);
+        let mut straggle = vec![1.0f64; k];
+        let mut send_end = vec![t; k];
+        let mut wire_frames = 0u64;
+        let mut wire_bytes = 0u64;
+        for w in 0..k {
+            let Some(core) = cores[w].as_mut() else { continue };
+            let s = if wrng[w].bernoulli(cfg.straggler_prob) {
+                cfg.straggler_slowdown
+            } else {
+                1.0
+            };
+            straggle[w] = s;
+            let enc_ns = ns(
+                (prep.mapped_edges[w] as f64 * cfg.time.map_edge_s
+                    + prep.encode_bytes()[w] as f64 * cfg.time.encode_byte_s)
+                    * s,
+            );
+            let mut sender = SimSender {
+                net: &mut net,
+                me: w as WorkerId,
+                cursor_ns: t + enc_ns,
+                latency_ns: cfg.latency_ns,
+                ns_per_byte,
+                staged_frames: 0,
+                staged_bytes: 0,
+            };
+            let mut extra = (0u32, 0u64);
+            for gp in &ghost_preps {
+                let (f, b) = stage_dead_sender_transfers(
+                    job,
+                    gp,
+                    &dead,
+                    w as WorkerId,
+                    &route,
+                    &state,
+                    epoch,
+                    &mut sender,
+                );
+                extra.0 += f;
+                extra.1 += b;
+            }
+            core.stage_sends_with_extra(job, &state, &mut sender, extra);
+            send_end[w] = sender.cursor_ns;
+            wire_frames += sender.staged_frames as u64;
+            wire_bytes += sender.staged_bytes;
+            let stage_ns = send_end[w] - (t + enc_ns);
+            let (sb, sf) = (sender.staged_bytes, sender.staged_frames);
+            core.set_trace(true);
+            core.set_trace_iter(it as u32);
+            core.note_span(Phase::Encode, t, enc_ns, 0, 0);
+            core.note_span(Phase::Stage, t + enc_ns, stage_ns, sb, sf);
+            core.set_trace(false);
+        }
+
+        // model ≡ staged: on a failure-free iteration the cores must
+        // stage exactly what the accounting replay charges (the same
+        // invariant the engine and the cluster leader assert)
+        if dead.is_empty() {
+            assert_eq!(
+                wire_frames as usize, clean_load.messages,
+                "sim staged a different frame count than the accounting modeled"
+            );
+            assert_eq!(
+                wire_bytes as usize,
+                clean_load.wire_bytes_with_headers(),
+                "sim staged different wire bytes than the accounting modeled"
+            );
+        }
+
+        // ---- ingest → decode → fold in virtual arrival order ----------
+        let mut done_ns = vec![t; k];
+        let mut ghost_windows: Vec<(u64, u64, u64)> = Vec::new();
+        for w in 0..k {
+            if cores[w].is_none() {
+                continue;
+            }
+            net.sort_inbox(w);
+            let hosts_ghosts = w as WorkerId == adopter && !ghosts.is_empty();
+            let mut rx = SimReceiver { net: &net, me: w, pos: 0, last_arrival_ns: 0 };
+            let core = cores[w].as_mut().expect("live core");
+            while !(core.data_complete()
+                && (!hosts_ghosts || ghosts.iter().all(WorkerCore::data_complete)))
+            {
+                assert!(rx.recv_data(&mut rbuf), "sim: worker {w} starved mid-shuffle");
+                let f = Frame::parse(&rbuf).expect("sim: bad frame");
+                let taken = core.try_ingest(&f)
+                    || (hosts_ghosts && ghosts.iter_mut().any(|gc| gc.try_ingest(&f)));
+                assert!(taken, "sim: unroutable {:?} frame at worker {w}", f.kind);
+            }
+            assert!(rx.drained(), "sim: leftover frames at worker {w}");
+            core.reset_ingest();
+            core.decode_and_fold(job, &state, None);
+            for (slot, &i) in alloc.reduce_sets[w].iter().enumerate() {
+                next[i as usize] = f64::from_bits(core.next_bits()[slot]);
+            }
+            let ready = send_end[w].max(rx.last_arrival_ns);
+            let dec_ns =
+                ns(prep.decode_bytes()[w] as f64 * cfg.time.decode_byte_s * straggle[w]);
+            let red_ns =
+                ns(prep.reduce_edges[w] as f64 * cfg.time.reduce_iv_s * straggle[w]);
+            core.set_trace(true);
+            core.note_span(Phase::RecvWait, send_end[w], ready - send_end[w], 0, 0);
+            core.note_span(Phase::Decode, ready, dec_ns, 0, 0);
+            core.note_span(Phase::Fold, ready + dec_ns, red_ns, 0, core.last_validated());
+            core.set_trace(false);
+            let mut cursor = ready + dec_ns + red_ns;
+            if hosts_ghosts {
+                // adopted ghost work runs after the adopter's own, on
+                // the same physical timeline (windows in ghost order)
+                for gc in ghosts.iter() {
+                    let gw = gc.me() as usize;
+                    let gdec = ns(
+                        prep.decode_bytes()[gw] as f64
+                            * cfg.time.decode_byte_s
+                            * straggle[w],
+                    );
+                    let gred = ns(
+                        prep.reduce_edges[gw] as f64
+                            * cfg.time.reduce_iv_s
+                            * straggle[w],
+                    );
+                    ghost_windows.push((cursor, gdec, gred));
+                    cursor += gdec + gred;
+                }
+            }
+            done_ns[w] = cursor;
+        }
+        for (gi, gc) in ghosts.iter_mut().enumerate() {
+            gc.reset_ingest();
+            gc.refresh_local_cache(job, &state);
+            gc.decode_and_fold(job, &state, None);
+            for (slot, &i) in alloc.reduce_sets[gc.me() as usize].iter().enumerate() {
+                next[i as usize] = f64::from_bits(gc.next_bits()[slot]);
+            }
+            let (start, gdec, gred) = ghost_windows[gi];
+            gc.set_trace(true);
+            gc.set_trace_iter(it as u32);
+            gc.note_span(Phase::Decode, start, gdec, 0, 0);
+            gc.note_span(Phase::Fold, start + gdec, gred, 0, gc.last_validated());
+            gc.set_trace(false);
+        }
+
+        let end = (0..k)
+            .filter(|&w| cores[w].is_some())
+            .map(|w| done_ns[w])
+            .max()
+            .unwrap_or(t);
+        records.push(SimIterRecord {
+            start_ns: t,
+            makespan_ns: end - t,
+            wire_frames,
+            wire_bytes,
+            epoch,
+        });
+        t = end;
+        std::mem::swap(&mut state, &mut next);
+    }
+
+    // load inflation: actual wire bytes (failed epochs' donor rows and
+    // recovery pairs included) over the clean model's, minus one —
+    // exactly 0.0 for a clean run by the model ≡ staged assert above
+    let clean_bytes = clean_load.wire_bytes_with_headers() as f64 * iters as f64;
+    if clean_bytes > 0.0 {
+        let actual: f64 = records.iter().map(|rec| rec.wire_bytes as f64).sum();
+        recovery.load_inflation = actual / clean_bytes - 1.0;
+    }
+
+    let mut spans = Vec::new();
+    for c in cores.iter_mut().flatten() {
+        let me = c.me();
+        c.drain_spans(me, &mut spans);
+    }
+    for gc in ghosts.iter_mut() {
+        gc.drain_spans(adopter, &mut spans);
+    }
+
+    SimReport {
+        final_state: state,
+        iterations: records,
+        clean_load,
+        spans,
+        recovery,
+        total_ns: t,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allocation::Allocation;
+    use crate::coordinator::config::EngineConfig;
+    use crate::coordinator::engine::run_rust;
+    use crate::graph::er::er;
+    use crate::mapreduce::program::run_single_machine;
+    use crate::mapreduce::PageRank;
+
+    fn sim_cfg(seed: u64) -> SimConfig {
+        SimConfig { seed, straggler_prob: 0.3, ..Default::default() }
+    }
+
+    #[test]
+    fn same_seed_runs_are_bit_identical() {
+        let g = er(160, 0.1, &mut DetRng::seed(61));
+        let alloc = Allocation::cyclic_scheme(160, 8, 3);
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let a = run_sim(&job, Scheme::Coded, 3, &sim_cfg(7));
+        let b = run_sim(&job, Scheme::Coded, 3, &sim_cfg(7));
+        let bits = |r: &SimReport| r.final_state.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a), bits(&b));
+        assert_eq!(a.iterations, b.iterations);
+        assert_eq!(a.spans, b.spans, "span timelines must replay exactly");
+        assert_eq!(a.state_digest(), b.state_digest());
+        assert!(a.total_ns > 0);
+        assert!(!a.spans.is_empty());
+    }
+
+    #[test]
+    fn different_seeds_move_the_timeline_not_the_results() {
+        let g = er(160, 0.1, &mut DetRng::seed(61));
+        let alloc = Allocation::cyclic_scheme(160, 8, 3);
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let a = run_sim(&job, Scheme::Coded, 3, &sim_cfg(7));
+        let b = run_sim(&job, Scheme::Coded, 3, &sim_cfg(8));
+        for (x, y) in a.final_state.iter().zip(&b.final_state) {
+            assert_eq!(x.to_bits(), y.to_bits(), "stragglers must not change results");
+        }
+        assert_ne!(
+            a.iterations, b.iterations,
+            "different straggler draws should move the virtual timeline"
+        );
+    }
+
+    #[test]
+    fn sim_matches_engine_bit_for_bit() {
+        let g = er(150, 0.12, &mut DetRng::seed(62));
+        let alloc = Allocation::er_scheme(150, 5, 2);
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        for scheme in [Scheme::Coded, Scheme::Uncoded, Scheme::CodedCombined] {
+            let sim = run_sim(&job, scheme, 4, &SimConfig::default());
+            let eng = run_rust(&job, &EngineConfig { scheme, ..Default::default() }, 4);
+            for (a, b) in sim.final_state.iter().zip(&eng.final_state) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{scheme}: sim diverged from engine");
+            }
+            // absolute anchor
+            let want = run_single_machine(&prog, &g, 4);
+            for (a, b) in sim.final_state.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-12, "{scheme}: {a} vs {b}");
+            }
+            // load replay matches the engine's accounting
+            assert_eq!(
+                sim.clean_load.paper_bits.to_bits(),
+                eng.iterations[0].shuffle.paper_bits.to_bits(),
+                "{scheme}"
+            );
+            assert_eq!(sim.recovery.load_inflation, 0.0, "{scheme}: clean run inflates");
+        }
+    }
+
+    #[test]
+    fn failure_replay_recovers_bit_identically_under_both_policies() {
+        let g = er(120, 0.15, &mut DetRng::seed(63));
+        let alloc = Allocation::er_scheme(120, 5, 3);
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let clean = run_sim(&job, Scheme::Coded, 3, &SimConfig::default());
+        for policy in [RecoveryPolicy::LowestSurvivor, RecoveryPolicy::LoadSpread] {
+            let cfg = SimConfig {
+                fail_workers: [Some(FailWorker { worker: 1, at_iter: 1 }), None],
+                policy,
+                ..Default::default()
+            };
+            let failed = run_sim(&job, Scheme::Coded, 3, &cfg);
+            for (a, b) in clean.final_state.iter().zip(&failed.final_state) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{policy}: recovery changed results");
+            }
+            assert_eq!(failed.recovery.failures, 1);
+            assert!(failed.recovery.recovered_groups > 0, "{policy}");
+            assert!(
+                failed.recovery.load_inflation > 0.0,
+                "{policy}: raw donor rows must cost wire bytes"
+            );
+            // ghost spans ride the adopter's physical timeline
+            let ghost_spans =
+                failed.spans.iter().filter(|s| s.core == 1 && s.epoch > 0).count();
+            assert!(ghost_spans > 0, "{policy}: ghost core left no spans");
+        }
+    }
+
+    #[test]
+    fn two_failures_within_tolerance_recover() {
+        let g = er(100, 0.15, &mut DetRng::seed(64));
+        let alloc = Allocation::er_scheme(100, 5, 3);
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let clean = run_sim(&job, Scheme::Uncoded, 3, &SimConfig::default());
+        let cfg = SimConfig {
+            fail_workers: [
+                Some(FailWorker { worker: 1, at_iter: 1 }),
+                Some(FailWorker { worker: 3, at_iter: 2 }),
+            ],
+            ..Default::default()
+        };
+        let failed = run_sim(&job, Scheme::Uncoded, 3, &cfg);
+        for (a, b) in clean.final_state.iter().zip(&failed.final_state) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(failed.recovery.failures, 2);
+        assert_eq!(failed.iterations[0].epoch, 0);
+        assert_eq!(failed.iterations[1].epoch, 1);
+        assert_eq!(failed.iterations[2].epoch, 2);
+    }
+
+    #[test]
+    fn policy_tokens_roundtrip() {
+        for p in [RecoveryPolicy::LowestSurvivor, RecoveryPolicy::LoadSpread] {
+            assert_eq!(p.token().parse::<RecoveryPolicy>().unwrap(), p);
+        }
+        assert!("sideways".parse::<RecoveryPolicy>().is_err());
+    }
+
+    #[test]
+    fn stragglers_stretch_the_makespan() {
+        let g = er(160, 0.1, &mut DetRng::seed(65));
+        let alloc = Allocation::cyclic_scheme(160, 8, 2);
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let calm = run_sim(&job, Scheme::Coded, 2, &SimConfig::default());
+        let stormy = run_sim(
+            &job,
+            Scheme::Coded,
+            2,
+            &SimConfig { straggler_prob: 1.0, straggler_slowdown: 8.0, ..Default::default() },
+        );
+        assert!(
+            stormy.total_ns > calm.total_ns,
+            "an 8x slowdown on every worker must stretch virtual time"
+        );
+    }
+}

@@ -164,7 +164,7 @@ impl JobSpec {
     /// `coded-graph worker` process builds after
     /// [`JobSpec::materialize`]: only the groups/transfers the worker is
     /// a party to, never the global prepared job.
-    pub fn prepare_worker(&self, built: &BuiltJob, me: u8) -> PreparedWorker {
+    pub fn prepare_worker(&self, built: &BuiltJob, me: crate::WorkerId) -> PreparedWorker {
         prepare_worker(&built.job(), self.scheme, me)
     }
 

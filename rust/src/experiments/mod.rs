@@ -5,3 +5,4 @@
 pub mod fig5;
 pub mod models;
 pub mod scenarios;
+pub mod sim_sweep;

@@ -1,0 +1,434 @@
+//! Large-`K` load sweep over the sim fabric's accounting, plus the
+//! failure-recovery policy comparison ([`crate::coordinator::sim`]).
+//!
+//! The sweep measures normalized shuffle loads for ER and power-law
+//! graphs under the §IV-A allocation at `K` from tens to thousands and
+//! emits a Fig-5-style table against the theory curves. Two regimes
+//! show up, both captured by [`theory::coded_load_er_finite`]:
+//!
+//! * **dense / small `K`** — batch products are large (`λ = p g̃ ≳ 1`),
+//!   multicast groups carry long rows, and the coded scheme banks its
+//!   `≈ r` gain (the paper's Fig 5 setting);
+//! * **sparse / large `K`** — at practical `n`, `g̃ = n²/(K C(K,r))`
+//!   collapses, rows are mostly empty, `E[max]` degenerates to the sum,
+//!   and the coded load converges to the uncoded one. The finite-`n`
+//!   prediction tracks the measurement through the crossover — the
+//!   asymptote `p/r (1 − r/K)` does not.
+//!
+//! The policy section replays PR 6's failure injection on the
+//! virtual-time fabric at `K` far beyond what the TCP driver reaches,
+//! comparing ghost placement policies ([`RecoveryPolicy`]): both must
+//! recover bit-identical results; the JSON records what each costs in
+//! virtual makespan and wire-load inflation.
+
+use crate::allocation::Allocation;
+use crate::analysis::stats::{summarize, Summary};
+use crate::analysis::theory;
+use crate::combinatorics::choose;
+use crate::coordinator::engine::Job;
+use crate::coordinator::sim::{run_sim, RecoveryPolicy, SimConfig};
+use crate::coordinator::{measure_loads_prepared, FailWorker, Scheme};
+use crate::graph::er::er;
+use crate::graph::powerlaw::{pl, PlParams};
+use crate::graph::Csr;
+use crate::mapreduce::PageRank;
+use crate::shuffle::plan::build_group_plans;
+use crate::shuffle::uncoded::plan_uncoded;
+use crate::util::json::Json;
+use crate::util::rng::DetRng;
+
+/// Parameters of the sim sweep (defaults: dense anchors at small `K`,
+/// sparse asymptotic points up to `K = 2048`).
+#[derive(Clone, Debug)]
+pub struct SimSweepParams {
+    /// Worker counts to sweep.
+    pub ks: Vec<usize>,
+    /// Computation loads to sweep (infeasible `(K, r)` pairs — more
+    /// than `max_batches` batches — are skipped).
+    pub rs: Vec<usize>,
+    /// Vertices per worker: `n = clamp(n_factor * K, n_min, n_max)`.
+    pub n_factor: usize,
+    pub n_min: usize,
+    pub n_max: usize,
+    /// ER edge probability.
+    pub p: f64,
+    /// Power-law exponent (> 2).
+    pub gamma: f64,
+    /// Graph realizations per point.
+    pub trials: usize,
+    pub seed: u64,
+    /// Skip `(K, r)` when `C(K, r)` exceeds this (allocation size cap).
+    pub max_batches: u64,
+    /// `K` for the failure-policy replay section.
+    pub fail_k: usize,
+    /// `r` (cyclic allocation) for the replay; tolerates `r - 1` deaths.
+    pub fail_r: usize,
+    /// Iterations per simulated job in the replay.
+    pub sim_iters: usize,
+}
+
+impl Default for SimSweepParams {
+    fn default() -> Self {
+        Self {
+            ks: vec![16, 32, 64, 128, 256, 512, 1024, 2048],
+            rs: vec![2, 3],
+            n_factor: 4,
+            n_min: 512,
+            n_max: 4096,
+            p: 0.1,
+            gamma: 2.3,
+            trials: 3,
+            seed: 2018,
+            max_batches: 2_500_000,
+            fail_k: 512,
+            fail_r: 3,
+            sim_iters: 3,
+        }
+    }
+}
+
+impl SimSweepParams {
+    /// Vertex count used at worker count `k`.
+    pub fn n_of(&self, k: usize) -> usize {
+        (self.n_factor * k).clamp(self.n_min, self.n_max)
+    }
+}
+
+/// One measured `(model, K, r)` point with its theory columns.
+#[derive(Clone, Debug)]
+pub struct SimSweepRow {
+    /// `"er"` or `"pl"`.
+    pub model: &'static str,
+    pub k: usize,
+    pub r: usize,
+    pub n: usize,
+    /// Mean empirical edge density `2m / (n (n-1))` over the trials —
+    /// the `p` the theory columns are evaluated at (for ER it tracks
+    /// the configured `p`; for power-law it is the Chung–Lu outcome).
+    pub density: f64,
+    pub uncoded: Summary,
+    pub coded: Summary,
+    /// `p (1 - r/K)` at the empirical density.
+    pub uncoded_pred: f64,
+    /// Finite-`n` prediction (eq. (16) + Lemma 1) at the empirical
+    /// density — valid through both the dense and sparse regimes.
+    pub coded_finite_pred: f64,
+    /// Theorem 1 asymptote `(p/r)(1 - r/K)` at the empirical density.
+    pub coded_asym_pred: f64,
+    /// Theorem 4 bound on `L` (power-law rows only).
+    pub pl_upper_pred: Option<f64>,
+}
+
+impl SimSweepRow {
+    /// Measured gain `L^UC / L^C`.
+    pub fn gain(&self) -> f64 {
+        self.uncoded.mean / self.coded.mean.max(1e-300)
+    }
+}
+
+/// One failure-policy replay outcome.
+#[derive(Clone, Debug)]
+pub struct PolicyRow {
+    pub policy: RecoveryPolicy,
+    pub k: usize,
+    pub r: usize,
+    pub n: usize,
+    /// Virtual time of the clean (no-failure) reference run.
+    pub clean_total_ns: u64,
+    /// Virtual time with the injected failure under this policy.
+    pub total_ns: u64,
+    /// Wire-byte inflation over the clean model (RecoveryStats).
+    pub load_inflation: f64,
+    pub recovered_groups: usize,
+    /// Recovery is only a success if the final state stayed bit-exact.
+    pub state_matches_clean: bool,
+}
+
+impl PolicyRow {
+    /// Virtual-makespan inflation over the clean run.
+    pub fn makespan_inflation(&self) -> f64 {
+        self.total_ns as f64 / (self.clean_total_ns as f64).max(1.0) - 1.0
+    }
+}
+
+/// The whole sweep: load rows plus the policy replay.
+#[derive(Clone, Debug, Default)]
+pub struct SimSweepReport {
+    pub rows: Vec<SimSweepRow>,
+    pub policies: Vec<PolicyRow>,
+}
+
+fn mix_seed(seed: u64, model: u64, k: usize, r: usize, trial: usize) -> u64 {
+    let mut h = seed ^ model.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    h = (h ^ (k as u64)).wrapping_mul(0x1000_0000_01b3);
+    h = (h ^ (r as u64)).wrapping_mul(0x1000_0000_01b3);
+    (h ^ (trial as u64)).wrapping_mul(0x1000_0000_01b3)
+}
+
+/// Measured `(uncoded, coded)` normalized loads plus empirical density
+/// over `trials` realizations of one `(model, K, r)` point.
+fn measure_point(
+    params: &SimSweepParams,
+    model: &'static str,
+    alloc: &Allocation,
+    k: usize,
+    r: usize,
+    n: usize,
+) -> (Summary, Summary, f64) {
+    let mut unc = Vec::with_capacity(params.trials);
+    let mut cod = Vec::with_capacity(params.trials);
+    let mut density = 0.0;
+    for t in 0..params.trials {
+        let tag = if model == "er" { 1 } else { 2 };
+        let mut rng = DetRng::seed(mix_seed(params.seed, tag, k, r, t));
+        let g: Csr = if model == "er" {
+            er(n, params.p, &mut rng)
+        } else {
+            pl(n, PlParams { gamma: params.gamma, ..Default::default() }, &mut rng)
+        };
+        density += 2.0 * g.m() as f64 / (n as f64 * (n as f64 - 1.0));
+        let plan = build_group_plans(&g, alloc);
+        let transfers = plan_uncoded(&g, alloc);
+        let (u, c) = measure_loads_prepared(&plan, &transfers, n, r);
+        unc.push(u);
+        cod.push(c);
+    }
+    (summarize(&unc), summarize(&cod), density / params.trials as f64)
+}
+
+/// Run the load sweep over both graph models.
+pub fn run(params: &SimSweepParams) -> SimSweepReport {
+    assert!(params.trials >= 1, "sim sweep needs at least one trial");
+    let mut rows = Vec::new();
+    for &k in &params.ks {
+        let n = params.n_of(k);
+        for &r in &params.rs {
+            if r >= k || choose(k, r) > params.max_batches {
+                continue; // allocation infeasible at this (K, r)
+            }
+            // structure depends only on (n, K, r): one allocation,
+            // reused across models and graph draws
+            let alloc = Allocation::er_scheme(n, k, r);
+            for model in ["er", "pl"] {
+                let (uncoded, coded, density) =
+                    measure_point(params, model, &alloc, k, r, n);
+                rows.push(SimSweepRow {
+                    model,
+                    k,
+                    r,
+                    n,
+                    density,
+                    uncoded,
+                    coded,
+                    uncoded_pred: theory::uncoded_load_er(density, r as f64, k),
+                    coded_finite_pred: theory::coded_load_er_finite(n, density, r, k),
+                    coded_asym_pred: theory::coded_load_er(density, r as f64, k),
+                    pl_upper_pred: (model == "pl")
+                        .then(|| theory::pl_upper(n, params.gamma, r as f64, k)),
+                });
+            }
+        }
+    }
+    SimSweepReport { rows, policies: run_policies(params) }
+}
+
+/// Replay one injected failure at `fail_k` under every recovery policy,
+/// against a clean reference run on the same job.
+pub fn run_policies(params: &SimSweepParams) -> Vec<PolicyRow> {
+    let (k, r) = (params.fail_k, params.fail_r);
+    assert!(k >= 4 && r >= 2 && r < k, "policy replay needs 2 <= r < K");
+    let n = params.n_of(k);
+    // sparse ER keeps the replay fast while exercising every frame kind
+    let p = 8.0 / n as f64;
+    let g = er(n, p, &mut DetRng::seed(mix_seed(params.seed, 3, k, r, 0)));
+    let alloc = Allocation::cyclic_scheme(n, k, r);
+    let prog = PageRank::default();
+    let job = Job { graph: &g, alloc: &alloc, program: &prog };
+    let base = SimConfig { seed: params.seed, ..Default::default() };
+    let clean = run_sim(&job, Scheme::Coded, params.sim_iters, &base);
+    let mut out = Vec::new();
+    for policy in [RecoveryPolicy::LowestSurvivor, RecoveryPolicy::LoadSpread] {
+        let cfg = SimConfig {
+            fail_workers: [Some(FailWorker { worker: 1, at_iter: 1 }), None],
+            policy,
+            ..base
+        };
+        let failed = run_sim(&job, Scheme::Coded, params.sim_iters, &cfg);
+        out.push(PolicyRow {
+            policy,
+            k,
+            r,
+            n,
+            clean_total_ns: clean.total_ns,
+            total_ns: failed.total_ns,
+            load_inflation: failed.recovery.load_inflation,
+            recovered_groups: failed.recovery.recovered_groups,
+            state_matches_clean: failed.state_digest() == clean.state_digest(),
+        });
+    }
+    out
+}
+
+/// `Json::Num` with non-finite values mapped to `null` (a bare `NaN`
+/// would corrupt the document).
+fn num(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Null
+    }
+}
+
+impl SimSweepReport {
+    /// The machine-readable report (`BENCH_sim_sweep.json`): key order
+    /// is BTreeMap-deterministic, so same-seed runs are byte-identical.
+    pub fn to_json(&self, params: &SimSweepParams) -> Json {
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|row| {
+                Json::obj(vec![
+                    ("model", Json::Str(row.model.into())),
+                    ("k", Json::Num(row.k as f64)),
+                    ("r", Json::Num(row.r as f64)),
+                    ("n", Json::Num(row.n as f64)),
+                    ("density", num(row.density)),
+                    ("uncoded_mean", num(row.uncoded.mean)),
+                    ("uncoded_ci95", num(row.uncoded.ci95())),
+                    ("coded_mean", num(row.coded.mean)),
+                    ("coded_ci95", num(row.coded.ci95())),
+                    ("gain", num(row.gain())),
+                    ("uncoded_pred", num(row.uncoded_pred)),
+                    ("coded_finite_pred", num(row.coded_finite_pred)),
+                    ("coded_asym_pred", num(row.coded_asym_pred)),
+                    ("pl_upper_pred", row.pl_upper_pred.map_or(Json::Null, num)),
+                ])
+            })
+            .collect();
+        let policies: Vec<Json> = self
+            .policies
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("policy", Json::Str(p.policy.token().into())),
+                    ("k", Json::Num(p.k as f64)),
+                    ("r", Json::Num(p.r as f64)),
+                    ("n", Json::Num(p.n as f64)),
+                    ("clean_total_ns", Json::Num(p.clean_total_ns as f64)),
+                    ("total_ns", Json::Num(p.total_ns as f64)),
+                    ("makespan_inflation", num(p.makespan_inflation())),
+                    ("load_inflation", num(p.load_inflation)),
+                    ("recovered_groups", Json::Num(p.recovered_groups as f64)),
+                    ("state_matches_clean", Json::Bool(p.state_matches_clean)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("kind", Json::Str("sim_sweep".into())),
+            (
+                "params",
+                Json::obj(vec![
+                    ("p", num(params.p)),
+                    ("gamma", num(params.gamma)),
+                    ("trials", Json::Num(params.trials as f64)),
+                    ("seed", Json::Num(params.seed as f64)),
+                    ("fail_k", Json::Num(params.fail_k as f64)),
+                    ("fail_r", Json::Num(params.fail_r as f64)),
+                    ("sim_iters", Json::Num(params.sim_iters as f64)),
+                ]),
+            ),
+            ("rows", Json::Arr(rows)),
+            ("policies", Json::Arr(policies)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> SimSweepParams {
+        SimSweepParams {
+            ks: vec![8, 16],
+            rs: vec![2],
+            n_min: 256,
+            n_max: 256,
+            trials: 2,
+            fail_k: 8,
+            fail_r: 3,
+            sim_iters: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn sweep_rows_cover_both_models() {
+        let rep = run(&tiny());
+        assert_eq!(rep.rows.len(), 2 * 2, "2 K values x 2 models at r=2");
+        for row in &rep.rows {
+            assert!(row.uncoded.mean > 0.0, "{}/{}", row.model, row.k);
+            assert!(row.coded.mean > 0.0);
+            assert!(row.coded.mean <= row.uncoded.mean * 1.001);
+            assert_eq!(row.pl_upper_pred.is_some(), row.model == "pl");
+        }
+    }
+
+    #[test]
+    fn dense_er_point_tracks_finite_prediction() {
+        let rep = run(&tiny());
+        for row in rep.rows.iter().filter(|r| r.model == "er") {
+            let rel = (row.coded.mean - row.coded_finite_pred).abs() / row.coded.mean;
+            assert!(
+                rel < 0.2,
+                "K={}: measured {} vs finite pred {}",
+                row.k,
+                row.coded.mean,
+                row.coded_finite_pred
+            );
+        }
+    }
+
+    #[test]
+    fn policy_replay_recovers_under_both_policies() {
+        let rows = run_policies(&tiny());
+        assert_eq!(rows.len(), 2);
+        for p in &rows {
+            assert!(p.state_matches_clean, "{}: recovery corrupted state", p.policy);
+            assert!(p.recovered_groups > 0, "{}", p.policy);
+            assert!(p.load_inflation > 0.0, "{}", p.policy);
+            assert!(p.total_ns > 0 && p.clean_total_ns > 0);
+        }
+    }
+
+    #[test]
+    fn infeasible_points_are_skipped_not_fatal() {
+        let rep = run(&SimSweepParams {
+            ks: vec![8],
+            rs: vec![2, 7, 9], // r=9 > K, r=7 -> C(8,7)=8 fine
+            max_batches: 50,   // C(8,2)=28 ok, C(8,7)=8 ok
+            n_min: 128,
+            n_max: 128,
+            trials: 1,
+            fail_k: 8,
+            fail_r: 3,
+            sim_iters: 1,
+            ..Default::default()
+        });
+        // r=9 skipped; r in {2, 7} ran for both models
+        assert_eq!(rep.rows.len(), 2 * 2);
+    }
+
+    #[test]
+    fn json_report_is_deterministic_and_parses() {
+        let params = tiny();
+        let a = run(&params).to_json(&params).to_string();
+        let b = run(&params).to_json(&params).to_string();
+        assert_eq!(a, b, "same-seed sweeps must serialize byte-identically");
+        let parsed = Json::parse(&a).expect("report must be valid JSON");
+        assert_eq!(
+            parsed.get("kind").and_then(Json::as_str),
+            Some("sim_sweep")
+        );
+        assert!(!parsed.get("rows").and_then(Json::as_arr).unwrap().is_empty());
+    }
+}

@@ -74,6 +74,12 @@
 //! asserts modeled wire bytes against the bytes the transport actually
 //! carried (per-worker `SendDone` tallies across process boundaries).
 
+/// Logical worker / endpoint identifier. Widened from `u8` to `u16` so
+/// the frame header, routing tables, and the simulation fabric can carry
+/// `K` well past 256 (the paper's asymptotics live at K in the
+/// thousands); real clusters use a tiny prefix of the id space.
+pub type WorkerId = u16;
+
 pub mod allocation;
 pub mod analysis;
 pub mod combinatorics;

@@ -18,6 +18,15 @@
 //! coded-graph worker    --connect ADDR --id K [--timeout-s 60]
 //!                       [--bind IP[:PORT]] [--advertise IP[:PORT]]
 //!                       [--fail-at ITER] [--phase-deadline-ms MS] [--trace PATH]
+//! coded-graph simulate  --graph er|rb|sbm|pl --n N --k K --r R
+//!                       [--alloc cyclic|er] [--scheme coded|uncoded] [--iters I]
+//!                       [--sim-seed S] [--latency-ns NS] [--bandwidth-mbps M]
+//!                       [--straggler-prob P] [--straggler-slowdown X]
+//!                       [--time python|rust|zero] [--policy lowest|spread]
+//!                       [--fail-worker ID@ITER[,ID@ITER]] [--trace PATH] [--json PATH]
+//! coded-graph sim-sweep [--ks 16,32,...,2048] [--rs 2,3] [--trials T] [--p P]
+//!                       [--gamma G] [--seed S] [--fail-k K] [--fail-r R]
+//!                       [--max-batches B] [--json PATH]
 //! coded-graph trace-summary --path TRACE.json
 //! coded-graph inspect   --graph er|rb|sbm|pl --n N [--p P] [--q Q] [--gamma G]
 //! coded-graph artifacts [--dir artifacts]
@@ -63,13 +72,14 @@ use std::time::Duration;
 
 use coded_graph::allocation::Allocation;
 use coded_graph::analysis::theory;
+use coded_graph::combinatorics::choose;
 use coded_graph::coordinator::cluster::leader_ring_capacity;
 use coded_graph::coordinator::{
-    prepare, run_cluster, run_leader, run_rust, run_worker_with, try_run_cluster_on, AllocKind,
-    BuiltJob, ClusterError, EngineConfig, FailWorker, GraphKind, GraphSpec, Job, JobReport,
-    JobSpec, ProgramSpec, Scheme, WorkerOpts,
+    prepare, run_cluster, run_leader, run_rust, run_sim, run_worker_with, try_run_cluster_on,
+    AllocKind, BuiltJob, ClusterError, EngineConfig, FailWorker, GraphKind, GraphSpec, Job,
+    JobReport, JobSpec, ProgramSpec, Scheme, SimConfig, SimReport, TimeModel, WorkerOpts,
 };
-use coded_graph::experiments::{fig5, models, scenarios};
+use coded_graph::experiments::{fig5, models, scenarios, sim_sweep};
 use coded_graph::graph::properties;
 use coded_graph::mapreduce::VertexProgram;
 use coded_graph::obs::{self, Phase};
@@ -77,7 +87,7 @@ use coded_graph::transport::{bootstrap, TcpEndpoint, TransportKind};
 use coded_graph::util::benchkit::Table;
 use coded_graph::util::cli::Args;
 use coded_graph::util::json::Json;
-use coded_graph::Csr;
+use coded_graph::{Csr, WorkerId};
 
 fn main() {
     let args = match Args::from_env() {
@@ -95,6 +105,8 @@ fn main() {
         Some("run") => cmd_run(&args),
         Some("cluster") => cmd_cluster(&args),
         Some("worker") => cmd_worker(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("sim-sweep") => cmd_sim_sweep(&args),
         Some("trace-summary") => cmd_trace_summary(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("artifacts") => cmd_artifacts(&args),
@@ -120,6 +132,11 @@ fn usage() {
     println!("  cluster    run a job on the leader/worker cluster (--transport inproc|tcp,");
     println!("             --processes spawns real worker processes, --check vs the engine)");
     println!("  worker     join a --processes cluster (--connect <rendezvous addr> --id <k>)");
+    println!("  simulate   run one job on the deterministic virtual-time sim fabric");
+    println!("             (K in the thousands; same-seed runs are byte-identical,");
+    println!("             --straggler-prob / --fail-worker / --policy lowest|spread)");
+    println!("  sim-sweep  large-K load sweep vs theory + failure-policy replay on");
+    println!("             the sim fabric (paper Fig 5 asymptotics; --json PATH)");
     println!();
     println!("  cluster accepts --fail-worker ID@ITER[,ID@ITER] (inject worker deaths;");
     println!("  the job survives up to r-1 of them) and --phase-deadline-ms MS (declare");
@@ -819,7 +836,7 @@ fn run_processes(
     let roster = bootstrap::lead(&rendezvous, spec.k, leader_addr, &spec.encode_line(), timeout)
         .map_err(|e| e.to_string())?;
     let cap = leader_ring_capacity(spec.k);
-    let net = TcpEndpoint::wire(spec.k as u8, &data_listener, &roster, cap, timeout)
+    let net = TcpEndpoint::wire(spec.k as WorkerId, &data_listener, &roster, cap, timeout)
         .map_err(|e| e.to_string())?;
 
     let report = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
@@ -851,7 +868,7 @@ fn cmd_worker(args: &Args) -> Result<(), String> {
         .ok_or("worker: --connect <rendezvous addr> is required")?
         .parse()
         .map_err(|e| format!("--connect: {e}"))?;
-    let id: u8 = args
+    let id: WorkerId = args
         .get("id")
         .ok_or("worker: --id <k> is required")?
         .parse()
@@ -905,6 +922,226 @@ fn cmd_worker(args: &Args) -> Result<(), String> {
     if let Some(path) = args.get("trace") {
         obs::write_chrome_trace(path, &spans).map_err(|e| format!("--trace {path}: {e}"))?;
     }
+    Ok(())
+}
+
+/// The machine-readable sim report behind `simulate --json PATH`. Every
+/// value is virtual-time-derived, so same-seed runs write byte-identical
+/// files (the acceptance check behind `make sim-smoke`).
+fn sim_report_json(rep: &SimReport, n: usize, k: usize, r: usize, scheme: Scheme, cfg: &SimConfig) -> Json {
+    let iters: Vec<Json> = rep
+        .iterations
+        .iter()
+        .map(|it| {
+            Json::obj(vec![
+                ("start_ns", Json::Num(it.start_ns as f64)),
+                ("makespan_ns", Json::Num(it.makespan_ns as f64)),
+                ("wire_frames", Json::Num(it.wire_frames as f64)),
+                ("wire_bytes", Json::Num(it.wire_bytes as f64)),
+                ("epoch", Json::Num(it.epoch as f64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("kind", Json::Str("simulate".into())),
+        ("n", Json::Num(n as f64)),
+        ("k", Json::Num(k as f64)),
+        ("r", Json::Num(r as f64)),
+        ("scheme", Json::Str(scheme.token().into())),
+        ("policy", Json::Str(cfg.policy.token().into())),
+        ("sim_seed", Json::Num(cfg.seed as f64)),
+        ("latency_ns", Json::Num(cfg.latency_ns as f64)),
+        ("bandwidth_bps", Json::Num(cfg.bandwidth_bps)),
+        ("straggler_prob", Json::Num(cfg.straggler_prob)),
+        ("total_ns", Json::Num(rep.total_ns as f64)),
+        ("total_virtual_s", Json::Num(rep.total_virtual_s())),
+        ("state_digest", Json::Str(format!("{:016x}", rep.state_digest()))),
+        ("clean_normalized_load", Json::Num(rep.clean_load.normalized(n))),
+        ("iterations", Json::Arr(iters)),
+        ("recovery", recovery_json(&rep.recovery)),
+        ("span_count", Json::Num(rep.spans.len() as f64)),
+    ])
+}
+
+/// `coded-graph simulate`: one job on the virtual-time fabric
+/// ([`coded_graph::coordinator::sim`]) — the path that reaches `K` in
+/// the thousands, deterministically, on one machine.
+fn cmd_simulate(args: &Args) -> Result<(), String> {
+    args.check_known(&[
+        "graph", "n", "k", "r", "p", "q", "gamma", "rho-scale", "seed", "program", "scheme",
+        "iters", "alloc", "source", "sim-seed", "latency-ns", "bandwidth-mbps", "straggler-prob",
+        "straggler-slowdown", "time", "policy", "fail-worker", "trace", "json",
+    ])?;
+    let g = build_graph(args)?;
+    let k = args.get_or("k", 16usize)?;
+    let r = args.get_or("r", 2usize)?;
+    let iters = args.get_or("iters", 3usize)?;
+    let scheme = parse_scheme(args)?;
+    // cyclic is the default: K batches, so per-worker planning stays
+    // feasible at K in the thousands; er is the paper's C(K,r) design
+    let alloc = match args.get("alloc").unwrap_or("cyclic") {
+        "cyclic" => Allocation::cyclic_scheme(g.n(), k, r),
+        "er" => {
+            if choose(k, r) > 5_000_000 {
+                return Err(format!(
+                    "--alloc er at K={k} r={r} needs C(K,r) = {} batches; use --alloc cyclic",
+                    choose(k, r)
+                ));
+            }
+            Allocation::er_scheme(g.n(), k, r)
+        }
+        other => return Err(format!("unknown allocation {other:?} (cyclic|er)")),
+    };
+    let program = parse_program(args)?;
+    let time = match args.get("time").unwrap_or("python") {
+        "python" => TimeModel::python_speed(),
+        "rust" => TimeModel::rust_speed(),
+        "zero" => TimeModel::zero(),
+        other => return Err(format!("unknown time model {other:?} (python|rust|zero)")),
+    };
+    let fail_workers = parse_fail_workers(args)?;
+    for fw in fail_workers.iter().flatten() {
+        if fw.worker as usize >= k {
+            return Err(format!("--fail-worker {fw}: worker id out of range (K={k})"));
+        }
+    }
+    if fail_workers.iter().flatten().count() >= r.max(1) {
+        return Err(format!(
+            "--fail-worker: at most r-1 = {} deaths are recoverable",
+            r.saturating_sub(1)
+        ));
+    }
+    let cfg = SimConfig {
+        seed: args.get_or("sim-seed", 2018u64)?,
+        latency_ns: args.get_or("latency-ns", 500_000u64)?,
+        bandwidth_bps: args.get_or("bandwidth-mbps", 100.0f64)? * 1e6,
+        straggler_prob: args.get_or("straggler-prob", 0.0f64)?,
+        straggler_slowdown: args.get_or("straggler-slowdown", 4.0f64)?,
+        time,
+        fail_workers,
+        policy: args.get("policy").unwrap_or("lowest").parse()?,
+    };
+    println!(
+        "sim fabric: {} x{iters} iterations on n={} m={} K={k} r={r} ({scheme}, policy={})",
+        program.name(),
+        g.n(),
+        g.m(),
+        cfg.policy
+    );
+    let job = Job { graph: &g, alloc: &alloc, program: &*program };
+    let rep = run_sim(&job, scheme, iters, &cfg);
+    let mut t = Table::new(&["iter", "epoch", "start", "makespan", "frames", "bytes"]);
+    for (i, it) in rep.iterations.iter().enumerate() {
+        t.row(&[
+            i.to_string(),
+            it.epoch.to_string(),
+            format!("{:.3}ms", it.start_ns as f64 / 1e6),
+            format!("{:.3}ms", it.makespan_ns as f64 / 1e6),
+            it.wire_frames.to_string(),
+            it.wire_bytes.to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nvirtual makespan: {:.4}s; clean normalized load {:.6}; state digest {:016x}",
+        rep.total_virtual_s(),
+        rep.clean_load.normalized(g.n()),
+        rep.state_digest()
+    );
+    if rep.recovery.failures > 0 {
+        println!(
+            "recovery: {} failures, {} groups re-planned, load inflation {:.2}%",
+            rep.recovery.failures,
+            rep.recovery.recovered_groups,
+            rep.recovery.load_inflation * 100.0
+        );
+    }
+    if let Some(path) = args.get("trace") {
+        obs::write_chrome_trace(path, &rep.spans).map_err(|e| format!("--trace {path}: {e}"))?;
+        println!("chrome trace (virtual time): {} spans -> {path}", rep.spans.len());
+    }
+    write_json_if_asked(args, &sim_report_json(&rep, g.n(), k, r, scheme, &cfg))?;
+    Ok(())
+}
+
+/// Parse `--NAME a,b,c` into a usize list (default when absent).
+fn parse_usize_list(args: &Args, name: &str, default: &[usize]) -> Result<Vec<usize>, String> {
+    match args.get(name) {
+        None => Ok(default.to_vec()),
+        Some(raw) => raw
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<usize>()
+                    .map_err(|_| format!("--{name}: cannot parse {s:?}"))
+            })
+            .collect(),
+    }
+}
+
+/// `coded-graph sim-sweep`: the Fig-5-style large-`K` sweep plus the
+/// failure-policy replay ([`sim_sweep`]); `--json` writes
+/// `BENCH_sim_sweep.json` (byte-identical across same-seed runs).
+fn cmd_sim_sweep(args: &Args) -> Result<(), String> {
+    args.check_known(&[
+        "ks", "rs", "n-factor", "n-min", "n-max", "p", "gamma", "trials", "seed", "max-batches",
+        "fail-k", "fail-r", "sim-iters", "json",
+    ])?;
+    let d = sim_sweep::SimSweepParams::default();
+    let params = sim_sweep::SimSweepParams {
+        ks: parse_usize_list(args, "ks", &d.ks)?,
+        rs: parse_usize_list(args, "rs", &d.rs)?,
+        n_factor: args.get_or("n-factor", d.n_factor)?,
+        n_min: args.get_or("n-min", d.n_min)?,
+        n_max: args.get_or("n-max", d.n_max)?,
+        p: args.get_or("p", d.p)?,
+        gamma: args.get_or("gamma", d.gamma)?,
+        trials: args.get_or("trials", d.trials)?,
+        seed: args.get_or("seed", d.seed)?,
+        max_batches: args.get_or("max-batches", d.max_batches)?,
+        fail_k: args.get_or("fail-k", d.fail_k)?,
+        fail_r: args.get_or("fail-r", d.fail_r)?,
+        sim_iters: args.get_or("sim-iters", d.sim_iters)?,
+    };
+    println!(
+        "sim sweep: K in {:?}, r in {:?}, p={}, gamma={}, {} trials/point\n",
+        params.ks, params.rs, params.p, params.gamma, params.trials
+    );
+    let rep = sim_sweep::run(&params);
+    let mut t = Table::new(&[
+        "model", "K", "r", "n", "uncoded", "coded", "gain", "finite-pred", "asym-pred",
+    ]);
+    for row in &rep.rows {
+        t.row(&[
+            row.model.to_string(),
+            row.k.to_string(),
+            row.r.to_string(),
+            row.n.to_string(),
+            format!("{:.6}", row.uncoded.mean),
+            format!("{:.6}", row.coded.mean),
+            format!("{:.2}x", row.gain()),
+            format!("{:.6}", row.coded_finite_pred),
+            format!("{:.6}", row.coded_asym_pred),
+        ]);
+    }
+    t.print();
+    println!("\nfailure-policy replay at K={} (cyclic, r={}):", params.fail_k, params.fail_r);
+    let mut t = Table::new(&[
+        "policy", "makespan", "clean", "inflation", "load-infl", "groups", "state",
+    ]);
+    for p in &rep.policies {
+        t.row(&[
+            p.policy.to_string(),
+            format!("{:.4}s", p.total_ns as f64 / 1e9),
+            format!("{:.4}s", p.clean_total_ns as f64 / 1e9),
+            format!("{:.2}%", p.makespan_inflation() * 100.0),
+            format!("{:.2}%", p.load_inflation * 100.0),
+            p.recovered_groups.to_string(),
+            if p.state_matches_clean { "bit-exact" } else { "DIVERGED" }.to_string(),
+        ]);
+    }
+    t.print();
+    write_json_if_asked(args, &rep.to_json(&params))?;
     Ok(())
 }
 

@@ -89,7 +89,7 @@ impl Bus {
 
     /// Submit one transmission; returns its wire time. The bus is serial,
     /// so the simulated clock advances by exactly this amount.
-    pub fn transmit(&mut self, src: u8, receivers: usize, payload_bytes: usize) -> f64 {
+    pub fn transmit(&mut self, src: crate::WorkerId, receivers: usize, payload_bytes: usize) -> f64 {
         let _ = src; // kept in the signature: replay sites read naturally
         let t = self.cfg.wire_time(payload_bytes, receivers);
         self.clock_s += t;
@@ -172,6 +172,6 @@ mod tests {
         // and the bus prices them like any transmission
         let mut bus = Bus::new(BusConfig::ideal(1e8));
         let t = bus.transmit(0, 2, coded_frame_len(7, seg_bytes(2)));
-        assert!((t - (7.0 * 4.0 + 16.0) * 8.0 / 1e8).abs() < 1e-15);
+        assert!((t - (7.0 * 4.0 + HEADER_BYTES as f64) * 8.0 / 1e8).abs() < 1e-15);
     }
 }

@@ -49,6 +49,7 @@ use std::time::Instant;
 
 use crate::coordinator::metrics::PhaseTimes;
 use crate::util::json::Json;
+use crate::WorkerId;
 
 /// Default span-ring capacity per core (~40 KB): eight spans per
 /// iteration means ~128 iterations of history before the recorder
@@ -264,7 +265,7 @@ impl SpanRing {
     /// Drain every held span (oldest first) into `out` as [`TraceSpan`]s
     /// owned by `(worker, core)`, resetting the ring. Returns the number
     /// of spans that were overwritten before this drain.
-    pub fn drain_into(&mut self, worker: u8, core: u8, out: &mut Vec<TraceSpan>) -> u64 {
+    pub fn drain_into(&mut self, worker: WorkerId, core: WorkerId, out: &mut Vec<TraceSpan>) -> u64 {
         let cap = self.spans.len();
         let start = if self.len == cap { self.next } else { 0 };
         for i in 0..self.len {
@@ -295,8 +296,8 @@ impl SpanRing {
 /// ghost cores a survivor adopted after a failure (`epoch > 0`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct TraceSpan {
-    pub worker: u8,
-    pub core: u8,
+    pub worker: WorkerId,
+    pub core: WorkerId,
     pub iter: u32,
     pub epoch: u8,
     pub phase: Phase,
@@ -320,7 +321,7 @@ impl TraceSpan {
     }
 
     /// Unpack the `Stats`-frame wire form ([`TraceSpan::to_words`]).
-    pub fn from_words(worker: u8, core: u8, w: &[u64; 5]) -> Option<TraceSpan> {
+    pub fn from_words(worker: WorkerId, core: WorkerId, w: &[u64; 5]) -> Option<TraceSpan> {
         Some(TraceSpan {
             worker,
             core,
@@ -343,10 +344,10 @@ impl TraceSpan {
 #[derive(Clone, Copy, Debug, Default)]
 pub struct WorkerPhaseTimes {
     /// Physical endpoint that recorded the spans.
-    pub worker: u8,
+    pub worker: WorkerId,
     /// Logical core the times belong to (differs from `worker` for
     /// adopted ghost cores).
-    pub core: u8,
+    pub core: WorkerId,
     /// Measured seconds per phase (wall clock, summed over iterations).
     pub times: PhaseTimes,
 }
@@ -389,7 +390,7 @@ pub fn chrome_trace(spans: &[TraceSpan]) -> Json {
     sorted.sort_by_key(|s| (s.worker, s.core, s.start_ns, s.dur_ns));
     let mut events: Vec<Json> = Vec::with_capacity(sorted.len());
     // (worker, core) -> last seen epoch; an increase emits an instant event
-    let mut last_epoch: Vec<((u8, u8), u8)> = Vec::new();
+    let mut last_epoch: Vec<((WorkerId, WorkerId), u8)> = Vec::new();
     for s in sorted {
         let key = (s.worker, s.core);
         let prev = match last_epoch.iter_mut().find(|(k, _)| *k == key) {
@@ -452,9 +453,9 @@ pub struct TraceSummary {
     /// Instant recovery-epoch markers seen.
     pub recovery_marks: usize,
     /// Distinct pids (physical workers) in the trace.
-    pub pids: Vec<u8>,
+    pub pids: Vec<WorkerId>,
     /// Distinct tids (logical cores) in the trace.
-    pub tids: Vec<u8>,
+    pub tids: Vec<WorkerId>,
 }
 
 impl TraceSummary {
@@ -493,11 +494,11 @@ pub fn summarize_chrome(doc: &Json) -> Result<TraceSummary, String> {
         let pid = e
             .get("pid")
             .and_then(Json::as_f64)
-            .ok_or_else(|| format!("event {i}: missing pid"))? as u8;
+            .ok_or_else(|| format!("event {i}: missing pid"))? as WorkerId;
         let tid = e
             .get("tid")
             .and_then(Json::as_f64)
-            .ok_or_else(|| format!("event {i}: missing tid"))? as u8;
+            .ok_or_else(|| format!("event {i}: missing tid"))? as WorkerId;
         if !sum.pids.contains(&pid) {
             sum.pids.push(pid);
         }
@@ -533,7 +534,7 @@ pub fn summarize_chrome(doc: &Json) -> Result<TraceSummary, String> {
 mod tests {
     use super::*;
 
-    fn span(core: u8, iter: u32, phase: Phase, start: u64, dur: u64) -> TraceSpan {
+    fn span(core: WorkerId, iter: u32, phase: Phase, start: u64, dur: u64) -> TraceSpan {
         TraceSpan {
             worker: core,
             core,

@@ -25,6 +25,7 @@ use std::collections::HashMap;
 use crate::allocation::Allocation;
 use crate::graph::csr::{Csr, Vertex};
 use crate::mapreduce::program::VertexProgram;
+use crate::WorkerId;
 
 use super::load::ShuffleLoad;
 use super::plan::{ShufflePlan, WorkerPlan};
@@ -35,9 +36,9 @@ use super::uncoded::transfer_wire_id;
 /// `(t asc, i asc)`. Group order is canonical (sorted by member set).
 pub fn build_combined_group_plans(g: &Csr, alloc: &Allocation) -> ShufflePlan {
     let r = alloc.r;
-    let mut index: HashMap<Vec<u8>, usize> = HashMap::new();
-    let mut nested: Vec<(Vec<u8>, Vec<Vec<(Vertex, Vertex)>>)> = Vec::new();
-    let mut s_buf: Vec<u8> = Vec::with_capacity(r + 1);
+    let mut index: HashMap<Vec<WorkerId>, usize> = HashMap::new();
+    let mut nested: Vec<(Vec<WorkerId>, Vec<Vec<(Vertex, Vertex)>>)> = Vec::new();
+    let mut s_buf: Vec<WorkerId> = Vec::with_capacity(r + 1);
     for (t, batch) in alloc.batches.iter().enumerate() {
         // reducers with at least one edge into this batch, deduped
         let mut seen: Vec<Vertex> = Vec::new();
@@ -85,14 +86,14 @@ pub fn build_combined_group_plans(g: &Csr, alloc: &Allocation) -> ShufflePlan {
 /// [`super::plan::build_group_plans_sharded`] (same two-sweep shape:
 /// foreign rows from the batches this worker Maps, its own row from its
 /// Reduce set, dedup + `(t, i)` sort restoring the canonical order).
-pub fn build_combined_group_plans_sharded(g: &Csr, alloc: &Allocation, me: u8) -> WorkerPlan {
+pub fn build_combined_group_plans_sharded(g: &Csr, alloc: &Allocation, me: WorkerId) -> WorkerPlan {
     let r = alloc.r;
-    let mut index: HashMap<Vec<u8>, usize> = HashMap::new();
-    let mut nested: Vec<(Vec<u8>, Vec<Vec<(Vertex, Vertex)>>)> = Vec::new();
-    let mut s_buf: Vec<u8> = Vec::with_capacity(r + 1);
-    let resolve = |s_buf: &[u8],
-                   index: &mut HashMap<Vec<u8>, usize>,
-                   nested: &mut Vec<(Vec<u8>, Vec<Vec<(Vertex, Vertex)>>)>|
+    let mut index: HashMap<Vec<WorkerId>, usize> = HashMap::new();
+    let mut nested: Vec<(Vec<WorkerId>, Vec<Vec<(Vertex, Vertex)>>)> = Vec::new();
+    let mut s_buf: Vec<WorkerId> = Vec::with_capacity(r + 1);
+    let resolve = |s_buf: &[WorkerId],
+                   index: &mut HashMap<Vec<WorkerId>, usize>,
+                   nested: &mut Vec<(Vec<WorkerId>, Vec<Vec<(Vertex, Vertex)>>)>|
      -> usize {
         match index.get(s_buf) {
             Some(&idx) => idx,
@@ -178,10 +179,10 @@ pub fn build_combined_group_plans_sharded(g: &Csr, alloc: &Allocation, me: u8) -
 pub fn plan_uncoded_combined_for(
     g: &Csr,
     alloc: &Allocation,
-    me: u8,
-) -> Vec<(u32, CombinedTransfer)> {
+    me: WorkerId,
+) -> Vec<(u64, CombinedTransfer)> {
     let kk = alloc.k;
-    let mut out: Vec<(u32, CombinedTransfer)> = Vec::new();
+    let mut out: Vec<(u64, CombinedTransfer)> = Vec::new();
 
     // sends: batches whose canonical mapper is me, in batch order
     let mut pair_idx = vec![usize::MAX; kk];
@@ -274,15 +275,15 @@ pub fn combined_value(
 /// Uncoded-with-combiners transfer plan: one combined IV per
 /// (batch, reducer-with-edges), unicast from the batch's canonical mapper.
 pub struct CombinedTransfer {
-    pub sender: u8,
-    pub receiver: u8,
+    pub sender: WorkerId,
+    pub receiver: WorkerId,
     /// (reducer, batch-index) pairs.
     pub ivs: Vec<(Vertex, u32)>,
 }
 
 /// Plan uncoded combined transfers.
 pub fn plan_uncoded_combined(g: &Csr, alloc: &Allocation) -> Vec<CombinedTransfer> {
-    let mut by_pair: HashMap<(u8, u8), Vec<(Vertex, u32)>> = HashMap::new();
+    let mut by_pair: HashMap<(WorkerId, WorkerId), Vec<(Vertex, u32)>> = HashMap::new();
     for (t, batch) in alloc.batches.iter().enumerate() {
         let sender = batch.servers[0];
         let mut seen: Vec<Vertex> = Vec::new();
@@ -424,7 +425,7 @@ mod tests {
         let a = build_combined_group_plans(&g, &alloc);
         let b = build_combined_group_plans(&g, &alloc);
         assert_eq!(a, b);
-        let keys: Vec<&[u8]> = a.groups().map(|p| p.servers).collect();
+        let keys: Vec<&[WorkerId]> = a.groups().map(|p| p.servers).collect();
         for w in keys.windows(2) {
             assert!(w[0] < w[1], "groups out of order");
         }
@@ -464,7 +465,7 @@ mod tests {
         for r in 1..4 {
             let alloc = Allocation::er_scheme(140, 5, r);
             let global = build_combined_group_plans(&g, &alloc);
-            for me in 0..5u8 {
+            for me in 0..5 as WorkerId {
                 let shard = build_combined_group_plans_sharded(&g, &alloc, me);
                 let mut l = 0usize;
                 for gi in 0..global.num_groups() {
@@ -490,7 +491,7 @@ mod tests {
         let g = er(130, 0.2, &mut DetRng::seed(9));
         let alloc = Allocation::er_scheme(130, 5, 2);
         let global = plan_uncoded_combined(&g, &alloc);
-        for me in 0..5u8 {
+        for me in 0..5 as WorkerId {
             let mine = plan_uncoded_combined_for(&g, &alloc, me);
             let want: Vec<&CombinedTransfer> = global
                 .iter()

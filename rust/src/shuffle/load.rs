@@ -11,9 +11,12 @@
 //!   header. The bus simulator charges these.
 
 
-/// Per-message framing overhead on the wire (src, group id, phase, len —
-/// comparable to the pickled tuple headers of the paper's mpi4py code).
-pub const HEADER_BYTES: usize = 16;
+/// Per-message framing overhead on the wire (len, kind, epoch, u16
+/// sender/target, count, u64 group/transfer id — comparable to the pickled
+/// tuple headers of the paper's mpi4py code). Must equal
+/// `transport::frame::HEADER_LEN`; 24 since the id widening that lets the
+/// sim fabric carry K past 256 and subset-rank wire ids past `u32`.
+pub const HEADER_BYTES: usize = 24;
 
 /// IV width: `T` bits (f64 state).
 pub const T_BITS: f64 = 64.0;

@@ -27,8 +27,9 @@
 use std::collections::HashMap;
 
 use crate::allocation::Allocation;
-use crate::combinatorics::{choose, subset_rank};
+use crate::combinatorics::subset_rank;
 use crate::graph::csr::{Csr, Vertex};
+use crate::WorkerId;
 
 /// All multicast groups of a job, flattened into one arena.
 ///
@@ -45,7 +46,7 @@ pub struct ShufflePlan {
     /// Number of groups.
     num_groups: usize,
     /// Flat sorted member-server lists, `num_groups * members`.
-    servers: Vec<u8>,
+    servers: Vec<WorkerId>,
     /// The pair arena: all rows of all groups, concatenated.
     pairs: Vec<(Vertex, Vertex)>,
     /// Row offsets into `pairs`, `num_groups * members + 1`.
@@ -81,7 +82,7 @@ impl ShufflePlan {
     /// their server sets for a canonical, hash-independent order.
     pub(crate) fn from_nested(
         members: usize,
-        mut nested: Vec<(Vec<u8>, Vec<Vec<(Vertex, Vertex)>>)>,
+        mut nested: Vec<(Vec<WorkerId>, Vec<Vec<(Vertex, Vertex)>>)>,
     ) -> Self {
         nested.sort_by(|a, b| a.0.cmp(&b.0));
         let num_groups = nested.len();
@@ -233,7 +234,7 @@ impl ShufflePlan {
 #[derive(Clone, Copy, Debug)]
 pub struct GroupRef<'a> {
     /// Sorted member servers `S` (`|S| = r + 1`).
-    pub servers: &'a [u8],
+    pub servers: &'a [WorkerId],
     row_off: &'a [usize],
     pairs: &'a [(Vertex, Vertex)],
 }
@@ -247,7 +248,7 @@ impl<'a> GroupRef<'a> {
 
     /// Index of server `k` within `S`.
     #[inline]
-    pub fn member_index(&self, k: u8) -> Option<usize> {
+    pub fn member_index(&self, k: WorkerId) -> Option<usize> {
         self.servers.binary_search(&k).ok()
     }
 
@@ -312,8 +313,8 @@ impl<'a> GroupRef<'a> {
 pub fn build_group_plans(g: &Csr, alloc: &Allocation) -> ShufflePlan {
     let r = alloc.r;
     let k_total = alloc.k;
-    let mut index: HashMap<Vec<u8>, usize> = HashMap::new();
-    let mut nested: Vec<(Vec<u8>, Vec<Vec<(Vertex, Vertex)>>)> = Vec::new();
+    let mut index: HashMap<Vec<WorkerId>, usize> = HashMap::new();
+    let mut nested: Vec<(Vec<WorkerId>, Vec<Vec<(Vertex, Vertex)>>)> = Vec::new();
     // Per-edge hashing dominated the original implementation (§Perf):
     // instead, resolve (batch, reducer) -> (group, row) once per pair and
     // cache it in a flat per-batch table; the edge loop is then a plain
@@ -322,8 +323,14 @@ pub fn build_group_plans(g: &Csr, alloc: &Allocation) -> ShufflePlan {
     const UNRESOLVED: usize = usize::MAX;
     const LOCAL: usize = usize::MAX - 1;
     let mut slot = vec![(UNRESOLVED, 0usize); k_total];
-    let mut s_buf: Vec<u8> = Vec::with_capacity(r + 1);
+    let mut s_buf: Vec<WorkerId> = Vec::with_capacity(r + 1);
     for batch in &alloc.batches {
+        // allocations with more batches than vertices (large-K er_scheme
+        // sweeps) leave most batches empty: skip them before paying the
+        // O(K) slot reset
+        if batch.start == batch.end {
+            continue;
+        }
         let t_servers = &batch.servers;
         for s in slot.iter_mut() {
             *s = (UNRESOLVED, 0);
@@ -340,14 +347,14 @@ pub fn build_group_plans(g: &Csr, alloc: &Allocation) -> ShufflePlan {
                         cached
                     } else {
                         // resolve once per (batch, k)
-                        if t_servers.binary_search(&(k as u8)).is_ok() {
+                        if t_servers.binary_search(&(k as WorkerId)).is_ok() {
                             slot[k] = (LOCAL, 0);
                             continue;
                         }
                         s_buf.clear();
-                        let ins = t_servers.partition_point(|&x| x < k as u8);
+                        let ins = t_servers.partition_point(|&x| x < k as WorkerId);
                         s_buf.extend_from_slice(&t_servers[..ins]);
-                        s_buf.push(k as u8);
+                        s_buf.push(k as WorkerId);
                         s_buf.extend_from_slice(&t_servers[ins..]);
                         let group_idx = match index.get(&s_buf) {
                             Some(&idx) => idx,
@@ -362,7 +369,7 @@ pub fn build_group_plans(g: &Csr, alloc: &Allocation) -> ShufflePlan {
                         (group_idx, ins)
                     }
                 };
-                debug_assert_eq!(nested[group_idx].0[member], k as u8);
+                debug_assert_eq!(nested[group_idx].0[member], k as WorkerId);
                 nested[group_idx].1[member].push((i, j));
             }
         }
@@ -390,39 +397,38 @@ pub fn build_group_plans(g: &Csr, alloc: &Allocation) -> ShufflePlan {
 /// Storage reuses the [`ShufflePlan`] flat-arena layout (pairs, row
 /// offsets, per-sender column counts), restricted to the member groups.
 pub struct WorkerPlan {
-    me: u8,
+    me: WorkerId,
     /// Total servers `K` (the wire-id space is (r+1)-subsets of `[K]`).
     k_total: usize,
     /// Canonical wire ids, 1:1 with the shard's groups, strictly ascending.
-    gids: Vec<u32>,
+    /// `u64`: `C(K, r+1)` subset ranks overflow `u32` well inside the
+    /// sim fabric's range (`C(1024, 4)` already does); the frame header
+    /// carries a 64-bit index field.
+    gids: Vec<u64>,
     /// The shard arena: global-plan layout, member groups only.
     shard: ShufflePlan,
 }
 
 impl WorkerPlan {
     /// An empty shard (uncoded schemes, or `r = K`).
-    pub fn empty(me: u8, members: usize, k_total: usize) -> Self {
+    pub fn empty(me: WorkerId, members: usize, k_total: usize) -> Self {
         WorkerPlan { me, k_total, gids: Vec::new(), shard: ShufflePlan::empty(members) }
     }
 
     /// Wrap sharded nested rows (every group must contain `me`) into the
     /// canonical arena and label each group with its subset rank.
     pub(crate) fn from_nested(
-        me: u8,
+        me: WorkerId,
         members: usize,
         k_total: usize,
-        nested: Vec<(Vec<u8>, Vec<Vec<(Vertex, Vertex)>>)>,
+        nested: Vec<(Vec<WorkerId>, Vec<Vec<(Vertex, Vertex)>>)>,
     ) -> Self {
-        assert!(
-            choose(k_total, members) <= u32::MAX as u64,
-            "C({k_total}, {members}) group ids do not fit the u32 wire field"
-        );
         let shard = ShufflePlan::from_nested(members, nested);
-        let gids: Vec<u32> = (0..shard.num_groups())
+        let gids: Vec<u64> = (0..shard.num_groups())
             .map(|l| {
                 let servers = shard.group(l).servers;
                 debug_assert!(servers.contains(&me), "sharded group without its worker");
-                subset_rank(k_total, servers) as u32
+                subset_rank(k_total, servers)
             })
             .collect();
         debug_assert!(
@@ -434,7 +440,7 @@ impl WorkerPlan {
 
     /// The worker this shard belongs to.
     #[inline]
-    pub fn me(&self) -> u8 {
+    pub fn me(&self) -> WorkerId {
         self.me
     }
 
@@ -483,19 +489,19 @@ impl WorkerPlan {
 
     /// Canonical wire id of local group `l`.
     #[inline]
-    pub fn wire_id(&self, l: usize) -> u32 {
+    pub fn wire_id(&self, l: usize) -> u64 {
         self.gids[l]
     }
 
     /// All wire ids, ascending (1:1 with local group indices).
     #[inline]
-    pub fn wire_ids(&self) -> &[u32] {
+    pub fn wire_ids(&self) -> &[u64] {
         &self.gids
     }
 
     /// Local index of the group with canonical wire id `wire`.
     #[inline]
-    pub fn local_of(&self, wire: u32) -> Option<usize> {
+    pub fn local_of(&self, wire: u64) -> Option<usize> {
         self.gids.binary_search(&wire).ok()
     }
 
@@ -524,24 +530,24 @@ impl WorkerPlan {
 ///    `(j, i)` order the reducer-major walk scrambles.
 ///
 /// Total work is `O(m·(r+1)/K)` instead of the global build's `O(m)`.
-pub fn build_group_plans_sharded(g: &Csr, alloc: &Allocation, me: u8) -> WorkerPlan {
+pub fn build_group_plans_sharded(g: &Csr, alloc: &Allocation, me: WorkerId) -> WorkerPlan {
     let r = alloc.r;
     let k_total = alloc.k;
-    let mut index: HashMap<Vec<u8>, usize> = HashMap::new();
-    let mut nested: Vec<(Vec<u8>, Vec<Vec<(Vertex, Vertex)>>)> = Vec::new();
+    let mut index: HashMap<Vec<WorkerId>, usize> = HashMap::new();
+    let mut nested: Vec<(Vec<WorkerId>, Vec<Vec<(Vertex, Vertex)>>)> = Vec::new();
     const UNRESOLVED: usize = usize::MAX;
     const LOCAL: usize = usize::MAX - 1;
-    let mut s_buf: Vec<u8> = Vec::with_capacity(r + 1);
+    let mut s_buf: Vec<WorkerId> = Vec::with_capacity(r + 1);
     // one canonicalize-and-resolve path for both sweeps: insert `extra`
     // into the sorted batch set, look the group up (or create it), and
     // return (group index, extra's member position). State comes in as
     // parameters (not captures) so the sweeps can keep pushing into
     // `nested` between calls.
-    let resolve = |t_servers: &[u8],
-                   extra: u8,
-                   s_buf: &mut Vec<u8>,
-                   index: &mut HashMap<Vec<u8>, usize>,
-                   nested: &mut Vec<(Vec<u8>, Vec<Vec<(Vertex, Vertex)>>)>|
+    let resolve = |t_servers: &[WorkerId],
+                   extra: WorkerId,
+                   s_buf: &mut Vec<WorkerId>,
+                   index: &mut HashMap<Vec<WorkerId>, usize>,
+                   nested: &mut Vec<(Vec<WorkerId>, Vec<Vec<(Vertex, Vertex)>>)>|
      -> (usize, usize) {
         s_buf.clear();
         let ins = t_servers.partition_point(|&x| x < extra);
@@ -564,6 +570,9 @@ pub fn build_group_plans_sharded(g: &Csr, alloc: &Allocation, me: u8) -> WorkerP
     let mut slot = vec![(UNRESOLVED, 0usize); k_total];
     for &t in &alloc.mapped_batches[me as usize] {
         let batch = &alloc.batches[t];
+        if batch.start == batch.end {
+            continue; // empty batch: skip the O(K) slot reset
+        }
         let t_servers = &batch.servers;
         for s in slot.iter_mut() {
             *s = (UNRESOLVED, 0);
@@ -579,17 +588,17 @@ pub fn build_group_plans_sharded(g: &Csr, alloc: &Allocation, me: u8) -> WorkerP
                     if cached.0 != UNRESOLVED {
                         cached
                     } else {
-                        if t_servers.binary_search(&(k as u8)).is_ok() {
+                        if t_servers.binary_search(&(k as WorkerId)).is_ok() {
                             slot[k] = (LOCAL, 0);
                             continue;
                         }
                         let resolved =
-                            resolve(t_servers, k as u8, &mut s_buf, &mut index, &mut nested);
+                            resolve(t_servers, k as WorkerId, &mut s_buf, &mut index, &mut nested);
                         slot[k] = resolved;
                         resolved
                     }
                 };
-                debug_assert_eq!(nested[group_idx].0[member], k as u8);
+                debug_assert_eq!(nested[group_idx].0[member], k as WorkerId);
                 nested[group_idx].1[member].push((i, j));
             }
         }
@@ -639,7 +648,11 @@ pub fn build_group_plans_sharded(g: &Csr, alloc: &Allocation, me: u8) -> WorkerP
 /// so the leader and every worker agree on donors without exchanging a
 /// plan. `None` only when failures exceed the `r − 1` the redundancy
 /// tolerates — each batch `S \ {exclude}` has `r` replicas.
-pub fn surviving_donor(servers: &[u8], exclude: u8, dead: &[u8]) -> Option<u8> {
+pub fn surviving_donor(
+    servers: &[WorkerId],
+    exclude: WorkerId,
+    dead: &[WorkerId],
+) -> Option<WorkerId> {
     servers.iter().copied().find(|&s| s != exclude && !dead.contains(&s))
 }
 
@@ -693,7 +706,7 @@ mod tests {
 
     #[test]
     fn surviving_donor_is_lowest_live_other_member() {
-        let servers = [1u8, 4, 6, 9];
+        let servers = [1 as WorkerId, 4, 6, 9];
         assert_eq!(surviving_donor(&servers, 4, &[]), Some(1));
         assert_eq!(surviving_donor(&servers, 1, &[]), Some(4));
         assert_eq!(surviving_donor(&servers, 4, &[1]), Some(6));
@@ -763,7 +776,7 @@ mod tests {
         let g = er(140, 0.2, &mut DetRng::seed(10));
         let alloc = Allocation::er_scheme(140, 6, 2);
         let plan = build_group_plans(&g, &alloc);
-        let keys: Vec<&[u8]> = plan.groups().map(|p| p.servers).collect();
+        let keys: Vec<&[WorkerId]> = plan.groups().map(|p| p.servers).collect();
         for w in keys.windows(2) {
             assert!(w[0] < w[1], "groups out of order: {:?} then {:?}", w[0], w[1]);
         }
@@ -832,7 +845,7 @@ mod tests {
         for r in 1..5 {
             let alloc = Allocation::er_scheme(160, 5, r);
             let global = build_group_plans(&g, &alloc);
-            for me in 0..5u8 {
+            for me in 0..5 as WorkerId {
                 let shard = build_group_plans_sharded(&g, &alloc, me);
                 let mut l = 0usize;
                 let mut pair_sum = 0usize;
@@ -849,7 +862,7 @@ mod tests {
                     assert_eq!(shard.sender_cols(l), global.sender_cols(gi));
                     assert_eq!(
                         shard.wire_id(l),
-                        crate::combinatorics::subset_rank(5, gp.servers) as u32
+                        crate::combinatorics::subset_rank(5, gp.servers)
                     );
                     assert_eq!(shard.local_of(shard.wire_id(l)), Some(l));
                     pair_sum += gp.total_ivs();
@@ -873,13 +886,13 @@ mod tests {
     fn sharded_plan_wire_ids_strictly_ascend() {
         let g = er(140, 0.15, &mut DetRng::seed(15));
         let alloc = Allocation::er_scheme(140, 6, 2);
-        for me in 0..6u8 {
+        for me in 0..6 as WorkerId {
             let shard = build_group_plans_sharded(&g, &alloc, me);
             assert!(shard.wire_ids().windows(2).all(|w| w[0] < w[1]), "me={me}");
             for l in 0..shard.num_groups() {
                 assert!(shard.group(l).servers.contains(&me));
             }
-            assert!(shard.local_of(u32::MAX).is_none());
+            assert!(shard.local_of(u64::MAX).is_none());
         }
     }
 }

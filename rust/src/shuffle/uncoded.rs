@@ -10,14 +10,15 @@
 
 use crate::allocation::Allocation;
 use crate::graph::csr::{Csr, Vertex};
+use crate::WorkerId;
 
 use super::load::ShuffleLoad;
 
 /// One sender→receiver uncoded transfer: the full IVs it carries.
 #[derive(Clone, Debug)]
 pub struct UncodedTransfer {
-    pub sender: u8,
-    pub receiver: u8,
+    pub sender: WorkerId,
+    pub receiver: WorkerId,
     /// (reducer, mapper) pairs, canonical (batch, j, i) order.
     pub ivs: Vec<(Vertex, Vertex)>,
 }
@@ -28,15 +29,18 @@ pub struct UncodedTransfer {
 pub fn plan_uncoded(g: &Csr, alloc: &Allocation) -> Vec<UncodedTransfer> {
     // flat (sender, receiver) -> transfer-index table; per-(batch, k)
     // membership resolved once via a slot cache, not per edge (§Perf).
-    // Sentinels are u16 so they cannot collide with a legal u8 worker id
-    // (at K = 255, id 254 would otherwise equal a u8 LOCAL marker).
+    // Sentinels are u32 so they cannot collide with a legal u16 worker id
+    // (at K = 65535, id 65534 would otherwise equal a u16 LOCAL marker).
     let kk = alloc.k;
     let mut pair_idx = vec![usize::MAX; kk * kk];
     let mut out: Vec<UncodedTransfer> = Vec::new();
-    const UNRESOLVED: u16 = u16::MAX;
-    const LOCAL: u16 = u16::MAX - 1;
+    const UNRESOLVED: u32 = u32::MAX;
+    const LOCAL: u32 = u32::MAX - 1;
     let mut slot = vec![UNRESOLVED; kk];
     for batch in &alloc.batches {
+        if batch.start == batch.end {
+            continue; // empty batch (large-K sweeps): skip the O(K) reset
+        }
         let sender = batch.servers[0]; // canonical: lowest-id replica
         slot.fill(UNRESOLVED);
         for j in batch.vertices() {
@@ -51,7 +55,7 @@ pub fn plan_uncoded(g: &Csr, alloc: &Allocation) -> Vec<UncodedTransfer> {
                         slot[k as usize] = LOCAL;
                         continue;
                     }
-                    slot[k as usize] = k as u16;
+                    slot[k as usize] = k as u32;
                 }
                 let key = sender as usize * kk + k as usize;
                 let t = if pair_idx[key] == usize::MAX {
@@ -76,8 +80,8 @@ pub fn plan_uncoded(g: &Csr, alloc: &Allocation) -> Vec<UncodedTransfer> {
 /// having to build (or even count) the transfers it is not a party to;
 /// the cluster workers put this id in the frame header's index field.
 #[inline]
-pub fn transfer_wire_id(k: usize, sender: u8, receiver: u8) -> u32 {
-    sender as u32 * k as u32 + receiver as u32
+pub fn transfer_wire_id(k: usize, sender: WorkerId, receiver: WorkerId) -> u64 {
+    sender as u64 * k as u64 + receiver as u64
 }
 
 /// Plan only the transfers worker `me` *sends or receives*, each tagged
@@ -87,21 +91,21 @@ pub fn transfer_wire_id(k: usize, sender: u8, receiver: u8) -> u32 {
 /// (same transfers, same canonical IV order), but built from the
 /// worker's own batches and Reduce set — `O(m·(r+1)/K)` instead of the
 /// global `O(m)`.
-pub fn plan_uncoded_for(g: &Csr, alloc: &Allocation, me: u8) -> Vec<(u32, UncodedTransfer)> {
+pub fn plan_uncoded_for(g: &Csr, alloc: &Allocation, me: WorkerId) -> Vec<(u64, UncodedTransfer)> {
     let kk = alloc.k;
-    let mut out: Vec<(u32, UncodedTransfer)> = Vec::new();
+    let mut out: Vec<(u64, UncodedTransfer)> = Vec::new();
 
     // transfers this worker sends: batches whose canonical mapper
     // (lowest-id replica) is me — walked in batch order, like the global
-    // plan, so per-pair IV order is identical. u16 sentinels: see
-    // [`plan_uncoded`] (a u8 marker would collide with id 254 at K=255).
+    // plan, so per-pair IV order is identical. u32 sentinels: see
+    // [`plan_uncoded`] (a u16 marker would collide with a worker id).
     let mut pair_idx = vec![usize::MAX; kk]; // receiver -> out index
-    const UNRESOLVED: u16 = u16::MAX;
-    const LOCAL: u16 = u16::MAX - 1;
+    const UNRESOLVED: u32 = u32::MAX;
+    const LOCAL: u32 = u32::MAX - 1;
     let mut slot = vec![UNRESOLVED; kk];
     for &t in &alloc.mapped_batches[me as usize] {
         let batch = &alloc.batches[t];
-        if batch.servers[0] != me {
+        if batch.servers[0] != me || batch.start == batch.end {
             continue;
         }
         slot.fill(UNRESOLVED);
@@ -117,7 +121,7 @@ pub fn plan_uncoded_for(g: &Csr, alloc: &Allocation, me: u8) -> Vec<(u32, Uncode
                         slot[k as usize] = LOCAL;
                         continue;
                     }
-                    slot[k as usize] = k as u16;
+                    slot[k as usize] = k as u32;
                 }
                 let ti = if pair_idx[k as usize] == usize::MAX {
                     pair_idx[k as usize] = out.len();
@@ -249,7 +253,7 @@ mod tests {
         for r in 1..4 {
             let alloc = Allocation::er_scheme(120, 5, r);
             let global = plan_uncoded(&g, &alloc);
-            for me in 0..5u8 {
+            for me in 0..5 as WorkerId {
                 let mine = plan_uncoded_for(&g, &alloc, me);
                 let want: Vec<&UncodedTransfer> = global
                     .iter()

@@ -48,6 +48,7 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::time::{Duration, Instant};
 
 use super::time_left;
+use crate::WorkerId;
 
 /// Longest accepted protocol line (the roster for 17 endpoints is well
 /// under 500 bytes; anything bigger is a garbage peer).
@@ -173,7 +174,8 @@ pub fn lead(
     job_line: &str,
     timeout: Duration,
 ) -> Result<Vec<SocketAddr>, BootstrapError> {
-    assert!(k >= 1 && k <= u8::MAX as usize, "worker count {k} out of range");
+    // the leader occupies endpoint id K, so K itself must fit a WorkerId
+    assert!(k >= 1 && k < WorkerId::MAX as usize, "worker count {k} out of range");
     assert!(!job_line.contains('\n'), "job spec must be a single bootstrap line");
     let deadline = Instant::now() + timeout;
     let mut conns: Vec<Option<TcpStream>> = (0..k).map(|_| None).collect();
@@ -246,7 +248,7 @@ const DIAL_BACKOFF_DOUBLINGS: u32 = 6;
 /// thin out fast) plus a deterministic per-worker jitter — a hash of
 /// `(id, attempt)`, up to half the base — so the wave never re-dials in
 /// lockstep. Pure arithmetic: reproducible, no RNG state.
-fn dial_backoff(id: u8, attempt: u32) -> Duration {
+fn dial_backoff(id: WorkerId, attempt: u32) -> Duration {
     let base = DIAL_BACKOFF_FLOOR_MS << attempt.min(DIAL_BACKOFF_DOUBLINGS);
     let hash = (id as u64)
         .wrapping_mul(0x9E37_79B9_7F4A_7C15)
@@ -262,7 +264,7 @@ fn dial_backoff(id: u8, attempt: u32) -> Duration {
 /// as soon as they get the roster.
 pub fn join(
     rendezvous: SocketAddr,
-    id: u8,
+    id: WorkerId,
     data_addr: SocketAddr,
     timeout: Duration,
 ) -> Result<(Vec<SocketAddr>, String), BootstrapError> {
@@ -427,7 +429,7 @@ mod tests {
         let cap = Duration::from_millis(
             (DIAL_BACKOFF_FLOOR_MS << DIAL_BACKOFF_DOUBLINGS) * 3 / 2,
         );
-        for id in [0u8, 3, 16] {
+        for id in [0 as WorkerId, 3, 16] {
             for attempt in 0..40 {
                 let d = dial_backoff(id, attempt);
                 assert!(d >= floor, "attempt {attempt}: {d:?} under the floor");

@@ -9,17 +9,24 @@
 //! offset  size  field
 //! 0       4     body length (u32 LE): bytes that follow this word
 //! 4       1     kind (FrameKind)
-//! 5       1     sender endpoint id
-//! 6       1     epoch (recovery generation; zero until a failure)
-//! 7       1     target (logical worker a recovery frame is for; zero
-//!               otherwise — Reduced reuses it for the straggler tally)
-//! 8       4     index (u32 LE): group / transfer id, or Reduced's
-//!               validated-IV count
+//! 5       1     epoch (recovery generation; zero until a failure)
+//! 6       2     sender endpoint id (u16 LE)
+//! 8       2     target (u16 LE): logical worker a recovery frame is
+//!               for; zero otherwise — Reduced reuses it for the
+//!               straggler tally, Stats for the logical core id
+//! 10      2     reserved (zero)
 //! 12      4     count (u32 LE): payload items
-//! 16      ...   payload
+//! 16      8     index (u64 LE): group / transfer id, or Reduced's
+//!               validated-IV count
+//! 24      ...   payload
 //! ```
 //!
-//! The 16-byte header is *exactly* the [`HEADER_BYTES`] the load
+//! Worker ids are 16-bit ([`WorkerId`]) so the simulation fabric can
+//! carry `K` in the thousands, and the group/transfer `index` is 64-bit
+//! because coded wire ids are subset ranks of `(r+1)`-subsets of `[K]` —
+//! `C(1024, 4) ≈ 4.6e10` already overflows `u32`.
+//!
+//! The 24-byte header is *exactly* the [`HEADER_BYTES`] the load
 //! accounting has always charged per message (checked at compile time
 //! below), and the payloads carry exactly the bytes the accounting
 //! models: `count * seg_bytes(r)` for a coded multicast (each XOR column
@@ -34,7 +41,10 @@
 //! Encoding writes into a caller-owned `Vec<u8>` (cleared, then
 //! extended): once capacities are warm, the send path performs no heap
 //! allocation. Decoding is a zero-copy borrowed view ([`Frame`]) over
-//! the received buffer.
+//! the received buffer. [`Frame::parse`] validates the payload length
+//! against the kind's item stride, so a malformed frame surfaces as a
+//! typed [`FrameError`] — never a panic or an out-of-bounds accessor
+//! read downstream.
 //!
 //! ```
 //! use coded_graph::transport::frame::{self, Frame, FrameKind};
@@ -52,9 +62,10 @@
 //! ```
 
 use crate::shuffle::load::HEADER_BYTES;
+use crate::WorkerId;
 
 /// Serialized header length in bytes (the 4-byte length prefix included).
-pub const HEADER_LEN: usize = 16;
+pub const HEADER_LEN: usize = 24;
 
 // The wire header must cost exactly what the load accounting charges.
 const _: () = assert!(HEADER_LEN == HEADER_BYTES);
@@ -161,6 +172,9 @@ pub enum FrameError {
     LengthMismatch { declared: usize, have: usize },
     /// Unknown kind byte.
     BadKind(u8),
+    /// The payload length is impossible for this kind's declared item
+    /// count (wrong stride, or items that could over-read the buffer).
+    BadPayload { kind: FrameKind, count: u32, have: usize },
 }
 
 impl std::fmt::Display for FrameError {
@@ -173,6 +187,9 @@ impl std::fmt::Display for FrameError {
                 write!(f, "frame length prefix declares {declared} bytes, buffer has {have}")
             }
             FrameError::BadKind(b) => write!(f, "unknown frame kind {b}"),
+            FrameError::BadPayload { kind, count, have } => {
+                write!(f, "{kind:?} frame declares {count} items but carries {have} payload bytes")
+            }
         }
     }
 }
@@ -186,14 +203,15 @@ impl std::error::Error for FrameError {}
 pub struct Frame<'a> {
     pub kind: FrameKind,
     /// Sending endpoint id.
-    pub sender: u8,
+    pub sender: WorkerId,
     /// Recovery generation this frame belongs to (zero until a failure).
     pub epoch: u8,
     /// Logical worker a recovery frame addresses (zero otherwise;
-    /// `Reduced` reuses the byte for the straggler-skip tally).
-    pub target: u8,
+    /// `Reduced` reuses the field for the straggler-skip tally, `Stats`
+    /// for the logical core id).
+    pub target: WorkerId,
     /// Group / transfer id (data frames), validated-IV count (`Reduced`).
-    pub index: u32,
+    pub index: u64,
     /// Payload item count (columns, IVs, states, or update pairs).
     pub count: u32,
     /// Raw payload bytes.
@@ -201,9 +219,11 @@ pub struct Frame<'a> {
 }
 
 impl<'a> Frame<'a> {
-    /// Parse a received buffer. Validates the header; payload item
-    /// bounds are checked by the accessors (they panic on short
-    /// payloads, which tests treat as malformed-frame detection).
+    /// Parse a received buffer. Validates the header *and* that the
+    /// payload length is consistent with the kind's item stride and
+    /// declared count, so the item accessors can never over-read: a
+    /// malformed or hostile buffer comes back as a typed [`FrameError`],
+    /// never a panic.
     pub fn parse(bytes: &'a [u8]) -> Result<Frame<'a>, FrameError> {
         if bytes.len() < HEADER_LEN {
             return Err(FrameError::Truncated { have: bytes.len() });
@@ -213,14 +233,52 @@ impl<'a> Frame<'a> {
             return Err(FrameError::LengthMismatch { declared: body + 4, have: bytes.len() });
         }
         let kind = FrameKind::from_u8(bytes[4]).ok_or(FrameError::BadKind(bytes[4]))?;
+        let count = u32::from_le_bytes(bytes[12..16].try_into().unwrap());
+        let payload = &bytes[HEADER_LEN..];
+        let ok = match kind {
+            // coded columns: `count` segments of one fixed width 1..=8
+            // (the receiver derives the width from its plan's r; parse
+            // only pins divisibility + a sane range)
+            FrameKind::CodedData => {
+                if count == 0 {
+                    payload.is_empty()
+                } else {
+                    payload.len() % count as usize == 0 && {
+                        let sb = payload.len() / count as usize;
+                        (1..=8).contains(&sb)
+                    }
+                }
+            }
+            // full 8-byte words per item
+            FrameKind::UncodedData | FrameKind::Reduced | FrameKind::RecoverRow => {
+                payload.len() == count as usize * 8
+            }
+            // (u32, u64) pairs, 12-byte stride
+            FrameKind::StateUpdate | FrameKind::RecoverPairs | FrameKind::Recover => {
+                payload.len() == count as usize * 12
+            }
+            // five u64 words per span
+            FrameKind::Stats => payload.len() == count as usize * 40,
+            // the send tally: exactly one payload word
+            FrameKind::SendDone => count == 1 && payload.len() == 8,
+            // payload-less control
+            FrameKind::StartShuffle
+            | FrameKind::StartReduce
+            | FrameKind::Continue
+            | FrameKind::Stop
+            | FrameKind::Abort => count == 0 && payload.is_empty(),
+        };
+        if !ok {
+            return Err(FrameError::BadPayload { kind, count, have: payload.len() });
+        }
         Ok(Frame {
             kind,
-            sender: bytes[5],
-            epoch: bytes[6],
-            target: bytes[7],
-            index: u32::from_le_bytes(bytes[8..12].try_into().unwrap()),
-            count: u32::from_le_bytes(bytes[12..16].try_into().unwrap()),
-            payload: &bytes[HEADER_LEN..],
+            sender: u16::from_le_bytes(bytes[6..8].try_into().unwrap()),
+            epoch: bytes[5],
+            target: u16::from_le_bytes(bytes[8..10].try_into().unwrap()),
+            index: u64::from_le_bytes(bytes[16..24].try_into().unwrap()),
+            count,
+            payload,
         })
     }
 
@@ -267,8 +325,8 @@ pub fn uncoded_frame_len(ivs: usize) -> usize {
 fn header_into(
     buf: &mut Vec<u8>,
     kind: FrameKind,
-    sender: u8,
-    index: u32,
+    sender: WorkerId,
+    index: u64,
     count: u32,
     payload: usize,
 ) {
@@ -276,16 +334,24 @@ fn header_into(
     let body = (HEADER_LEN - 4 + payload) as u32;
     buf.extend_from_slice(&body.to_le_bytes());
     buf.push(kind as u8);
-    buf.push(sender);
-    buf.extend_from_slice(&[0, 0]);
-    buf.extend_from_slice(&index.to_le_bytes());
+    buf.push(0); // epoch — stamped later by the send path
+    buf.extend_from_slice(&sender.to_le_bytes());
+    buf.extend_from_slice(&[0, 0]); // target
+    buf.extend_from_slice(&[0, 0]); // reserved
     buf.extend_from_slice(&count.to_le_bytes());
+    buf.extend_from_slice(&index.to_le_bytes());
+}
+
+/// Write the target field of an already-laid header (offset 8).
+#[inline]
+fn set_target(buf: &mut [u8], target: WorkerId) {
+    buf[8..10].copy_from_slice(&target.to_le_bytes());
 }
 
 /// Encode a coded multicast: each XOR column truncated to its real
 /// segment width (`seg_bytes(r)` wire bytes — exactly what the load
 /// accounting charges). `buf` is cleared and refilled.
-pub fn encode_coded(buf: &mut Vec<u8>, sender: u8, group: u32, cols: &[u64], seg_bytes: usize) {
+pub fn encode_coded(buf: &mut Vec<u8>, sender: WorkerId, group: u64, cols: &[u64], seg_bytes: usize) {
     let payload = cols.len() * seg_bytes;
     header_into(buf, FrameKind::CodedData, sender, group, cols.len() as u32, payload);
     for &c in cols {
@@ -295,7 +361,7 @@ pub fn encode_coded(buf: &mut Vec<u8>, sender: u8, group: u32, cols: &[u64], seg
 
 /// Encode an uncoded unicast batch: the transfer id plus the full IV
 /// bits in the transfer plan's canonical order (keys stay off the wire).
-pub fn encode_uncoded(buf: &mut Vec<u8>, sender: u8, transfer: u32, bits: &[u64]) {
+pub fn encode_uncoded(buf: &mut Vec<u8>, sender: WorkerId, transfer: u64, bits: &[u64]) {
     header_into(buf, FrameKind::UncodedData, sender, transfer, bits.len() as u32, bits.len() * 8);
     for &b in bits {
         buf.extend_from_slice(&b.to_le_bytes());
@@ -303,7 +369,7 @@ pub fn encode_uncoded(buf: &mut Vec<u8>, sender: u8, transfer: u32, bits: &[u64]
 }
 
 /// Encode a payload-less control frame.
-pub fn encode_control(buf: &mut Vec<u8>, kind: FrameKind, sender: u8) {
+pub fn encode_control(buf: &mut Vec<u8>, kind: FrameKind, sender: WorkerId) {
     header_into(buf, kind, sender, 0, 0, 0);
 }
 
@@ -313,19 +379,25 @@ pub fn encode_control(buf: &mut Vec<u8>, kind: FrameKind, sender: u8) {
 /// the total against `ShuffleLoad::wire_bytes_with_headers()` — the
 /// cross-check that still works when every endpoint lives in its own
 /// process and only sees its own counters.
-pub fn encode_send_done(buf: &mut Vec<u8>, sender: u8, frames: u32, bytes: u64) {
+pub fn encode_send_done(buf: &mut Vec<u8>, sender: WorkerId, frames: u64, bytes: u64) {
     header_into(buf, FrameKind::SendDone, sender, frames, 1, 8);
     buf.extend_from_slice(&bytes.to_le_bytes());
 }
 
 /// Encode a worker's `Reduced` reply: fresh state bits in the worker's
 /// canonical reduce-set order; `validated` rides in the index field and
-/// `skipped` (straggler frames dropped at the cutoff, clamped to u8)
-/// reuses the target byte.
-pub fn encode_reduced(buf: &mut Vec<u8>, sender: u8, validated: u32, skipped: u8, state_bits: &[u64]) {
+/// `skipped` (straggler frames dropped at the cutoff, clamped to u16)
+/// reuses the target field.
+pub fn encode_reduced(
+    buf: &mut Vec<u8>,
+    sender: WorkerId,
+    validated: u64,
+    skipped: u16,
+    state_bits: &[u64],
+) {
     let count = state_bits.len() as u32;
     header_into(buf, FrameKind::Reduced, sender, validated, count, state_bits.len() * 8);
-    buf[7] = skipped;
+    set_target(buf, skipped);
     for &b in state_bits {
         buf.extend_from_slice(&b.to_le_bytes());
     }
@@ -335,34 +407,34 @@ pub fn encode_reduced(buf: &mut Vec<u8>, sender: u8, validated: u32, skipped: u8
 /// is the *logical* worker the pairs are for — normally the receiving
 /// endpoint itself, but after a failure the adopter receives the dead
 /// worker's updates addressed to the ghost id.
-pub fn encode_state_update(buf: &mut Vec<u8>, sender: u8, target: u8, pairs: &[(u32, u64)]) {
+pub fn encode_state_update(buf: &mut Vec<u8>, sender: WorkerId, target: WorkerId, pairs: &[(u32, u64)]) {
     header_into(buf, FrameKind::StateUpdate, sender, 0, pairs.len() as u32, pairs.len() * 12);
-    buf[7] = target;
+    set_target(buf, target);
     for &(v, b) in pairs {
         buf.extend_from_slice(&v.to_le_bytes());
         buf.extend_from_slice(&b.to_le_bytes());
     }
 }
 
-/// Stamp the recovery epoch onto an already-encoded frame (offset 6).
+/// Stamp the recovery epoch onto an already-encoded frame (offset 5).
 /// Epoch-agnostic encoders leave the byte zero; the cluster send path
 /// stamps every outgoing frame so receivers can drop stale traffic from
 /// an abandoned iteration attempt.
 #[inline]
 pub fn stamp_epoch(buf: &mut [u8], epoch: u8) {
-    buf[6] = epoch;
+    buf[5] = epoch;
 }
 
 /// Encode a worker's end-of-job `Stats` frame: flight-recorder spans for
-/// one hosted `core` (the logical id rides the target byte — an adopter
+/// one hosted `core` (the logical id rides the target field — an adopter
 /// reports ghost cores under their own ids), packed five u64 words per
 /// span ([`TraceSpan::to_words`](crate::obs::TraceSpan::to_words)).
 /// `dropped` (ring overwrites) rides in the index field.
-pub fn encode_stats(buf: &mut Vec<u8>, sender: u8, core: u8, dropped: u32, words: &[u64]) {
+pub fn encode_stats(buf: &mut Vec<u8>, sender: WorkerId, core: WorkerId, dropped: u64, words: &[u64]) {
     debug_assert_eq!(words.len() % 5, 0, "Stats payload is 5 words per span");
     let spans = (words.len() / 5) as u32;
     header_into(buf, FrameKind::Stats, sender, dropped, spans, words.len() * 8);
-    buf[7] = core;
+    set_target(buf, core);
     for &w in words {
         buf.extend_from_slice(&w.to_le_bytes());
     }
@@ -370,9 +442,9 @@ pub fn encode_stats(buf: &mut Vec<u8>, sender: u8, core: u8, dropped: u32, words
 
 /// Encode a degraded-group row replacement: the dead `target` worker's
 /// full raw IV row for group `group`, shipped by a surviving replica.
-pub fn encode_recover_row(buf: &mut Vec<u8>, sender: u8, group: u32, target: u8, bits: &[u64]) {
+pub fn encode_recover_row(buf: &mut Vec<u8>, sender: WorkerId, group: u64, target: WorkerId, bits: &[u64]) {
     header_into(buf, FrameKind::RecoverRow, sender, group, bits.len() as u32, bits.len() * 8);
-    buf[7] = target;
+    set_target(buf, target);
     for &b in bits {
         buf.extend_from_slice(&b.to_le_bytes());
     }
@@ -383,13 +455,13 @@ pub fn encode_recover_row(buf: &mut Vec<u8>, sender: u8, group: u32, target: u8,
 /// receiver `target` (the frame may physically land on its adopter).
 pub fn encode_recover_pairs(
     buf: &mut Vec<u8>,
-    sender: u8,
-    transfer: u32,
-    target: u8,
+    sender: WorkerId,
+    transfer: u64,
+    target: WorkerId,
     pairs: &[(u32, u64)],
 ) {
     header_into(buf, FrameKind::RecoverPairs, sender, transfer, pairs.len() as u32, pairs.len() * 12);
-    buf[7] = target;
+    set_target(buf, target);
     for &(p, b) in pairs {
         buf.extend_from_slice(&p.to_le_bytes());
         buf.extend_from_slice(&b.to_le_bytes());
@@ -399,8 +471,8 @@ pub fn encode_recover_pairs(
 /// Encode the leader's `Recover` delta: dead worker id in `index`, the
 /// new epoch stamped in the header, and `(vertex, state bits)` pairs
 /// seeding the adopter's ghost state (empty for non-adopters).
-pub fn encode_recover(buf: &mut Vec<u8>, sender: u8, dead: u8, epoch: u8, pairs: &[(u32, u64)]) {
-    header_into(buf, FrameKind::Recover, sender, dead as u32, pairs.len() as u32, pairs.len() * 12);
+pub fn encode_recover(buf: &mut Vec<u8>, sender: WorkerId, dead: WorkerId, epoch: u8, pairs: &[(u32, u64)]) {
+    header_into(buf, FrameKind::Recover, sender, dead as u64, pairs.len() as u32, pairs.len() * 12);
     stamp_epoch(buf, epoch);
     for &(v, b) in pairs {
         buf.extend_from_slice(&v.to_le_bytes());
@@ -449,6 +521,32 @@ mod tests {
     }
 
     #[test]
+    fn wide_ids_roundtrip() {
+        // ids past the old u8/u32 ceilings survive the wire: sender 2047,
+        // group id C(2048, 6)-scale (needs the u64 index field)
+        let big_group = choose_like(2048, 6);
+        assert!(big_group > u32::MAX as u64);
+        let mut buf = Vec::new();
+        encode_coded(&mut buf, 2047, big_group, &[0xFF, 0x01], 4);
+        let f = Frame::parse(&buf).unwrap();
+        assert_eq!((f.sender, f.index, f.count), (2047, big_group, 2));
+
+        encode_recover_row(&mut buf, 300, big_group, 1999, &[7]);
+        let f = Frame::parse(&buf).unwrap();
+        assert_eq!((f.sender, f.index, f.target), (300, big_group, 1999));
+    }
+
+    // local mirror of combinatorics::choose to keep this module's tests
+    // self-contained about the magnitude claim
+    fn choose_like(n: u128, k: u128) -> u64 {
+        let mut num: u128 = 1;
+        for i in 0..k {
+            num = num * (n - i) / (i + 1);
+        }
+        num as u64
+    }
+
+    #[test]
     fn r_equals_one_columns_are_full_words() {
         // r = 1: degenerate coding, one 8-byte segment per column
         let cols = [u64::MAX, 0, f64::to_bits(std::f64::consts::PI)];
@@ -489,7 +587,7 @@ mod tests {
         encode_reduced(&mut buf, 2, 17, 4, &[1.5f64.to_bits(), 0, u64::MAX]);
         let f = Frame::parse(&buf).unwrap();
         assert_eq!((f.kind, f.sender, f.index, f.count), (FrameKind::Reduced, 2, 17, 3));
-        assert_eq!(f.target, 4, "Reduced reuses the target byte for the skip tally");
+        assert_eq!(f.target, 4, "Reduced reuses the target field for the skip tally");
         assert_eq!(f.word(0), 1.5f64.to_bits());
         assert_eq!(f.word(2), u64::MAX);
 
@@ -621,5 +719,88 @@ mod tests {
         // bad kind byte
         buf[4] = 200;
         assert!(matches!(Frame::parse(&buf), Err(FrameError::BadKind(200))));
+    }
+
+    #[test]
+    fn every_truncation_boundary_is_typed() {
+        // Truncated below the header, LengthMismatch above it — the
+        // whole prefix lattice of a real frame is typed, never a panic
+        // (tests/frame_fuzz.rs drives the randomized version)
+        let mut buf = Vec::new();
+        encode_state_update(&mut buf, 1, 2, &[(3, 4), (5, 6)]);
+        for cut in 0..buf.len() {
+            match Frame::parse(&buf[..cut]) {
+                Err(FrameError::Truncated { have }) => {
+                    assert!(cut < HEADER_LEN && have == cut, "cut={cut}");
+                }
+                Err(FrameError::LengthMismatch { declared, have }) => {
+                    assert!(cut >= HEADER_LEN, "cut={cut}");
+                    assert_eq!((declared, have), (buf.len(), cut));
+                }
+                other => panic!("cut={cut}: {other:?}"),
+            }
+        }
+        // an oversized declared length must not tempt an over-read
+        let body = (buf.len() + 9 - 4) as u32;
+        buf[0..4].copy_from_slice(&body.to_le_bytes());
+        assert!(matches!(
+            Frame::parse(&buf),
+            Err(FrameError::LengthMismatch { declared, have }) if declared == have + 9
+        ));
+    }
+
+    #[test]
+    fn parse_rejects_inconsistent_payloads() {
+        let mut buf = Vec::new();
+        // uncoded frame whose declared count disagrees with the payload:
+        // bump count without adding bytes
+        encode_uncoded(&mut buf, 0, 0, &[1, 2, 3]);
+        buf[12..16].copy_from_slice(&4u32.to_le_bytes());
+        assert!(matches!(
+            Frame::parse(&buf),
+            Err(FrameError::BadPayload { kind: FrameKind::UncodedData, count: 4, .. })
+        ));
+
+        // a control frame must carry nothing: graft a payload byte on
+        // (and fix the length prefix so only the payload rule can trip)
+        encode_control(&mut buf, FrameKind::Stop, 0);
+        buf.push(0xEE);
+        let body = (buf.len() - 4) as u32;
+        buf[0..4].copy_from_slice(&body.to_le_bytes());
+        assert!(matches!(
+            Frame::parse(&buf),
+            Err(FrameError::BadPayload { kind: FrameKind::Stop, .. })
+        ));
+
+        // coded frame with a segment width outside 1..=8: 2 columns over
+        // a 20-byte payload would mean 10-byte segments
+        encode_coded(&mut buf, 0, 0, &[1, 2], 8);
+        buf.extend_from_slice(&[0; 4]);
+        let body = (buf.len() - 4) as u32;
+        buf[0..4].copy_from_slice(&body.to_le_bytes());
+        assert!(matches!(
+            Frame::parse(&buf),
+            Err(FrameError::BadPayload { kind: FrameKind::CodedData, count: 2, have: 20 })
+        ));
+
+        // pair-stride frame off by one byte
+        encode_state_update(&mut buf, 0, 0, &[(1, 2)]);
+        buf.pop();
+        let body = (buf.len() - 4) as u32;
+        buf[0..4].copy_from_slice(&body.to_le_bytes());
+        assert!(matches!(
+            Frame::parse(&buf),
+            Err(FrameError::BadPayload { kind: FrameKind::StateUpdate, count: 1, have: 11 })
+        ));
+
+        // SendDone must carry exactly one word
+        encode_send_done(&mut buf, 0, 1, 2);
+        buf.extend_from_slice(&[0; 8]);
+        let body = (buf.len() - 4) as u32;
+        buf[0..4].copy_from_slice(&body.to_le_bytes());
+        assert!(matches!(
+            Frame::parse(&buf),
+            Err(FrameError::BadPayload { kind: FrameKind::SendDone, .. })
+        ));
     }
 }

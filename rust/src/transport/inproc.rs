@@ -22,6 +22,7 @@ use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::{RecvOutcome, StatCounters, Transport, TransportStats};
+use crate::WorkerId;
 
 /// A bounded MPSC ring of pooled byte buffers (shared by the in-process
 /// and TCP backends — TCP's per-connection reader threads push into the
@@ -45,7 +46,7 @@ struct RingState {
     /// Peers that died abnormally, queued for delivery as
     /// [`RecvOutcome::PeerDown`] — after already-queued frames drain,
     /// before the all-writers-gone disconnect.
-    downs: VecDeque<u8>,
+    downs: VecDeque<WorkerId>,
 }
 
 impl Ring {
@@ -156,7 +157,7 @@ impl Ring {
 
     /// Record peer `id`'s abnormal death: detaches its writer slot and
     /// queues a [`RecvOutcome::PeerDown`] marker for the reader.
-    pub(crate) fn peer_down(&self, id: u8) {
+    pub(crate) fn peer_down(&self, id: WorkerId) {
         let mut st = self.state.lock().unwrap();
         st.writers = st.writers.saturating_sub(1);
         st.downs.push_back(id);
@@ -225,7 +226,7 @@ impl InProcNet {
 }
 
 impl Transport for InProcNet {
-    fn send_multicast(&self, from: u8, receivers: &[u8], frame: &[u8]) {
+    fn send_multicast(&self, from: WorkerId, receivers: &[WorkerId], frame: &[u8]) {
         self.stats.record(frame);
         for &to in receivers {
             debug_assert_ne!(to, from, "self-send");
@@ -239,22 +240,27 @@ impl Transport for InProcNet {
     /// stays a no-op (`batched_writes` remains zero). The cluster's
     /// batched send path is therefore identical in cost to the eager
     /// one on this backend, and the zero-allocation audit covers both.
-    fn send_multicast_buffered(&self, from: u8, receivers: &[u8], frame: &[u8]) {
+    fn send_multicast_buffered(&self, from: WorkerId, receivers: &[WorkerId], frame: &[u8]) {
         self.send_multicast(from, receivers, frame);
     }
 
-    fn recv(&self, me: u8, buf: &mut Vec<u8>) -> bool {
+    fn recv(&self, me: WorkerId, buf: &mut Vec<u8>) -> bool {
         self.rings[me as usize].pop(buf)
     }
 
-    fn recv_deadline(&self, me: u8, buf: &mut Vec<u8>, deadline: Option<Duration>) -> RecvOutcome {
+    fn recv_deadline(
+        &self,
+        me: WorkerId,
+        buf: &mut Vec<u8>,
+        deadline: Option<Duration>,
+    ) -> RecvOutcome {
         self.rings[me as usize].pop_deadline(buf, deadline)
     }
 
     /// Abnormal death of endpoint `me`: its own ring is poisoned (it will
     /// never receive again) and every peer gets a `PeerDown(me)` marker —
     /// the mesh stays up for survivors instead of cascading.
-    fn fail_endpoint(&self, me: u8) {
+    fn fail_endpoint(&self, me: WorkerId) {
         self.rings[me as usize].poison();
         for (e, ring) in self.rings.iter().enumerate() {
             if e != me as usize {
@@ -263,7 +269,7 @@ impl Transport for InProcNet {
         }
     }
 
-    fn leave(&self, me: u8) {
+    fn leave(&self, me: WorkerId) {
         for (e, ring) in self.rings.iter().enumerate() {
             if e != me as usize {
                 ring.close_writer();
@@ -294,7 +300,7 @@ mod tests {
         let mut buf = Vec::new();
         frame::encode_uncoded(&mut buf, 0, 5, &[11, 22, 33]);
         net.send_multicast(0, &[1, 2], &buf);
-        for me in [1u8, 2] {
+        for me in [1 as WorkerId, 2] {
             let mut rbuf = Vec::new();
             assert!(net.recv(me, &mut rbuf));
             let f = frame::Frame::parse(&rbuf).unwrap();
@@ -442,11 +448,11 @@ mod tests {
         let mut buf = Vec::new();
         let mut rbuf = Vec::new();
         for round in 0..10u64 {
-            frame::encode_uncoded(&mut buf, 0, round as u32, &[round; 16]);
+            frame::encode_uncoded(&mut buf, 0, round, &[round; 16]);
             net.send_unicast(0, 1, &buf);
             assert!(net.recv(1, &mut rbuf));
             let f = frame::Frame::parse(&rbuf).unwrap();
-            assert_eq!(f.index as u64, round);
+            assert_eq!(f.index, round);
             assert_eq!(f.word(15), round);
         }
     }

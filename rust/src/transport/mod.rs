@@ -39,6 +39,8 @@ pub mod tcp;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::{Duration, Instant};
 
+use crate::WorkerId;
+
 pub use frame::{Frame, FrameError, FrameKind};
 pub use inproc::InProcNet;
 pub use tcp::{TcpEndpoint, TcpNet};
@@ -110,10 +112,10 @@ pub trait Transport: Sync {
     /// Deliver one serialized frame to every endpoint in `receivers`.
     /// Tallied once per call in [`Transport::data_stats`] (a multicast is
     /// one transmission, like one bus slot).
-    fn send_multicast(&self, from: u8, receivers: &[u8], frame: &[u8]);
+    fn send_multicast(&self, from: WorkerId, receivers: &[WorkerId], frame: &[u8]);
 
     /// Deliver one frame to a single endpoint.
-    fn send_unicast(&self, from: u8, to: u8, frame: &[u8]) {
+    fn send_unicast(&self, from: WorkerId, to: WorkerId, frame: &[u8]) {
         self.send_multicast(from, std::slice::from_ref(&to), frame);
     }
 
@@ -124,12 +126,12 @@ pub trait Transport: Sync {
     /// the leader's byte accounting is batching-agnostic. Backends with
     /// no physical batching opportunity (the in-process rings) may
     /// deliver immediately — the default.
-    fn send_multicast_buffered(&self, from: u8, receivers: &[u8], frame: &[u8]) {
+    fn send_multicast_buffered(&self, from: WorkerId, receivers: &[WorkerId], frame: &[u8]) {
         self.send_multicast(from, receivers, frame);
     }
 
     /// Buffered unicast sibling of [`Transport::send_unicast`].
-    fn send_unicast_buffered(&self, from: u8, to: u8, frame: &[u8]) {
+    fn send_unicast_buffered(&self, from: WorkerId, to: WorkerId, frame: &[u8]) {
         self.send_multicast_buffered(from, std::slice::from_ref(&to), frame);
     }
 
@@ -138,13 +140,13 @@ pub trait Transport: Sync {
     /// [`TransportStats::batched_writes`]) — the surface that drops the
     /// TCP data path from `O(frames × receivers)` syscalls per iteration
     /// to `O(peers)`. A no-op on eager backends.
-    fn flush(&self, _from: u8) {}
+    fn flush(&self, _from: WorkerId) {}
 
     /// Block for the next frame addressed to `me`, filling `buf` (buffer
     /// contents are replaced; capacity is recycled). Returns `false`
     /// when every peer has disconnected and no frames remain — the
     /// cluster treats that as a failed peer and panics.
-    fn recv(&self, me: u8, buf: &mut Vec<u8>) -> bool;
+    fn recv(&self, me: WorkerId, buf: &mut Vec<u8>) -> bool;
 
     /// Like [`Transport::recv`], but surfaces peer deaths as typed
     /// [`RecvOutcome::PeerDown`] events instead of folding them into the
@@ -152,7 +154,12 @@ pub trait Transport: Sync {
     /// `deadline` elapses (`None` waits forever). The default delegates
     /// to `recv` — correct for backends that never report peer deaths,
     /// ignoring the deadline; the cluster backends override it.
-    fn recv_deadline(&self, me: u8, buf: &mut Vec<u8>, _deadline: Option<Duration>) -> RecvOutcome {
+    fn recv_deadline(
+        &self,
+        me: WorkerId,
+        buf: &mut Vec<u8>,
+        _deadline: Option<Duration>,
+    ) -> RecvOutcome {
         if self.recv(me, buf) {
             RecvOutcome::Frame
         } else {
@@ -165,12 +172,12 @@ pub trait Transport: Sync {
     /// the mesh keeps flowing. Fault injection (`--fail-worker`) and the
     /// dying endpoint's own teardown both route here. The default is a
     /// no-op for backends without per-peer failure signalling.
-    fn fail_endpoint(&self, _me: u8) {}
+    fn fail_endpoint(&self, _me: WorkerId) {}
 
     /// Announce that endpoint `me` is done sending (clean worker/leader
     /// exit): receivers observe the disconnect once they drain what was
     /// already sent.
-    fn leave(&self, _me: u8) {}
+    fn leave(&self, _me: WorkerId) {}
 
     /// Abnormal teardown (an endpoint is unwinding): wake *every* blocked
     /// sender and receiver immediately so the failure propagates instead
@@ -202,7 +209,7 @@ pub enum RecvOutcome {
     /// A frame was delivered into the caller's buffer.
     Frame,
     /// The named peer died abnormally; the mesh stays up for survivors.
-    PeerDown(u8),
+    PeerDown(WorkerId),
     /// No frame arrived before the deadline.
     TimedOut,
     /// Every writer detached (clean shutdown) or the mesh was aborted.

@@ -67,6 +67,7 @@ use std::time::{Duration, Instant};
 
 use super::inproc::Ring;
 use super::{RecvOutcome, StatCounters, Transport, TransportStats};
+use crate::WorkerId;
 
 /// Refuse absurd length prefixes (corrupt stream) instead of resizing.
 const MAX_BODY: usize = 1 << 28;
@@ -76,7 +77,7 @@ const MAX_BODY: usize = 1 << 28;
 enum EofAction {
     /// Mark the named peer down: queued and future frames from others
     /// still flow, and `recv_deadline` surfaces a typed `PeerDown`.
-    Down(u8),
+    Down(WorkerId),
     /// Disconnect the whole ring once queued frames drain (a worker
     /// observing the leader's hangup: no progress is possible anyway).
     Fail,
@@ -86,7 +87,7 @@ enum EofAction {
 /// to every peer — shared by the in-process mesh and the per-process
 /// [`TcpEndpoint`].
 struct Endpoint {
-    me: u8,
+    me: WorkerId,
     ring: Ring,
     /// Outbound write halves indexed by destination (`None` at `me`).
     peers: Vec<Option<Mutex<TcpStream>>>,
@@ -105,13 +106,13 @@ impl Endpoint {
     /// Write one frame to `to`, swallowing stream errors: a dead peer's
     /// write-half fails with EPIPE/reset, and a survivor mid-multicast
     /// must keep serving its live receivers instead of unwinding.
-    fn send(&self, to: u8, frame: &[u8]) {
+    fn send(&self, to: WorkerId, frame: &[u8]) {
         let stream = self.peers[to as usize].as_ref().expect("no stream for destination");
         let _ = stream.lock().unwrap().write_all(frame);
     }
 
     /// Stage one already-serialized frame for `to` (batched path).
-    fn stage(&self, to: u8, frame: &[u8]) {
+    fn stage(&self, to: WorkerId, frame: &[u8]) {
         self.outbuf[to as usize].lock().unwrap().extend_from_slice(frame);
     }
 
@@ -197,7 +198,8 @@ fn time_left(deadline: Instant) -> std::io::Result<Duration> {
 }
 
 /// Accept and identify every inbound connection for `ep`, spawning one
-/// detached reader thread per connection. The 1-byte handshake must name
+/// detached reader thread per connection. The 2-byte (LE `WorkerId`)
+/// handshake must name
 /// a distinct, in-range peer — a stray local connection grabbing an
 /// accept slot would otherwise silently displace a real peer and hang
 /// the cluster with no diagnostic. With `fail_on_leader`, connections
@@ -218,10 +220,10 @@ fn accept_inbound(
         if let Some(d) = deadline {
             s.set_read_timeout(Some(time_left(d)?))?;
         }
-        let mut id = [0u8; 1];
+        let mut id = [0u8; 2];
         s.read_exact(&mut id)?;
         s.set_read_timeout(None)?;
-        let from = id[0] as usize;
+        let from = u16::from_le_bytes(id) as usize;
         if from >= n || from == me || seen[from] {
             return Err(std::io::Error::new(
                 std::io::ErrorKind::InvalidData,
@@ -234,7 +236,7 @@ fn accept_inbound(
         let on_eof = if fail_on_leader && me != n - 1 && from == n - 1 {
             EofAction::Fail
         } else {
-            EofAction::Down(from as u8)
+            EofAction::Down(from as WorkerId)
         };
         ep.inbound.lock().unwrap().push(s.try_clone()?);
         let ep = Arc::clone(ep);
@@ -303,11 +305,11 @@ impl TcpNet {
                     }
                     let mut s = TcpStream::connect(addr)?;
                     s.set_nodelay(true)?;
-                    s.write_all(&[from as u8])?;
+                    s.write_all(&(from as WorkerId).to_le_bytes())?;
                     peers.push(Some(Mutex::new(s)));
                 }
                 endpoints.push(Arc::new(Endpoint {
-                    me: from as u8,
+                    me: from as WorkerId,
                     ring: Ring::new(caps[from], writers),
                     peers,
                     outbuf: (0..n).map(|_| Mutex::new(Vec::new())).collect(),
@@ -338,7 +340,7 @@ impl TcpNet {
 }
 
 impl Transport for TcpNet {
-    fn send_multicast(&self, from: u8, receivers: &[u8], frame: &[u8]) {
+    fn send_multicast(&self, from: WorkerId, receivers: &[WorkerId], frame: &[u8]) {
         let ep = &self.endpoints[from as usize];
         ep.stats.record(frame);
         for &to in receivers {
@@ -347,7 +349,7 @@ impl Transport for TcpNet {
         }
     }
 
-    fn send_multicast_buffered(&self, from: u8, receivers: &[u8], frame: &[u8]) {
+    fn send_multicast_buffered(&self, from: WorkerId, receivers: &[WorkerId], frame: &[u8]) {
         let ep = &self.endpoints[from as usize];
         ep.stats.record(frame);
         for &to in receivers {
@@ -356,26 +358,31 @@ impl Transport for TcpNet {
         }
     }
 
-    fn flush(&self, from: u8) {
+    fn flush(&self, from: WorkerId) {
         self.endpoints[from as usize].flush_staged();
     }
 
-    fn recv(&self, me: u8, buf: &mut Vec<u8>) -> bool {
+    fn recv(&self, me: WorkerId, buf: &mut Vec<u8>) -> bool {
         self.endpoints[me as usize].ring.pop(buf)
     }
 
-    fn recv_deadline(&self, me: u8, buf: &mut Vec<u8>, deadline: Option<Duration>) -> RecvOutcome {
+    fn recv_deadline(
+        &self,
+        me: WorkerId,
+        buf: &mut Vec<u8>,
+        deadline: Option<Duration>,
+    ) -> RecvOutcome {
         self.endpoints[me as usize].ring.pop_deadline(buf, deadline)
     }
 
     /// Abnormal death of endpoint `me`: shut all its streams down, so
     /// every peer's reader observes EOF and marks `me` down at its own
     /// ring while the rest of the mesh keeps flowing.
-    fn fail_endpoint(&self, me: u8) {
+    fn fail_endpoint(&self, me: WorkerId) {
         self.endpoints[me as usize].teardown();
     }
 
-    fn leave(&self, me: u8) {
+    fn leave(&self, me: WorkerId) {
         // half-close our outbound streams: queued bytes still flush, then
         // every peer's reader sees EOF and detaches from its ring
         self.endpoints[me as usize].half_close();
@@ -426,7 +433,7 @@ impl TcpEndpoint {
     /// bounds the whole wiring phase (a peer that dies between bootstrap
     /// and wiring would otherwise hang the accept loop forever).
     pub fn wire(
-        me: u8,
+        me: WorkerId,
         listener: &TcpListener,
         addrs: &[SocketAddr],
         cap: usize,
@@ -443,7 +450,7 @@ impl TcpEndpoint {
             }
             let mut s = TcpStream::connect(addr)?;
             s.set_nodelay(true)?;
-            s.write_all(&[me])?;
+            s.write_all(&me.to_le_bytes())?;
             peers.push(Some(Mutex::new(s)));
         }
         let ep = Arc::new(Endpoint {
@@ -462,13 +469,13 @@ impl TcpEndpoint {
     }
 
     /// This endpoint's id in the roster.
-    pub fn id(&self) -> u8 {
+    pub fn id(&self) -> WorkerId {
         self.inner.me
     }
 }
 
 impl Transport for TcpEndpoint {
-    fn send_multicast(&self, from: u8, receivers: &[u8], frame: &[u8]) {
+    fn send_multicast(&self, from: WorkerId, receivers: &[WorkerId], frame: &[u8]) {
         debug_assert_eq!(from, self.inner.me, "process endpoint can only send as itself");
         self.inner.stats.record(frame);
         for &to in receivers {
@@ -477,7 +484,7 @@ impl Transport for TcpEndpoint {
         }
     }
 
-    fn send_multicast_buffered(&self, from: u8, receivers: &[u8], frame: &[u8]) {
+    fn send_multicast_buffered(&self, from: WorkerId, receivers: &[WorkerId], frame: &[u8]) {
         debug_assert_eq!(from, self.inner.me, "process endpoint can only send as itself");
         self.inner.stats.record(frame);
         for &to in receivers {
@@ -486,17 +493,22 @@ impl Transport for TcpEndpoint {
         }
     }
 
-    fn flush(&self, from: u8) {
+    fn flush(&self, from: WorkerId) {
         debug_assert_eq!(from, self.inner.me, "process endpoint can only flush as itself");
         self.inner.flush_staged();
     }
 
-    fn recv(&self, me: u8, buf: &mut Vec<u8>) -> bool {
+    fn recv(&self, me: WorkerId, buf: &mut Vec<u8>) -> bool {
         debug_assert_eq!(me, self.inner.me, "process endpoint can only recv as itself");
         self.inner.ring.pop(buf)
     }
 
-    fn recv_deadline(&self, me: u8, buf: &mut Vec<u8>, deadline: Option<Duration>) -> RecvOutcome {
+    fn recv_deadline(
+        &self,
+        me: WorkerId,
+        buf: &mut Vec<u8>,
+        deadline: Option<Duration>,
+    ) -> RecvOutcome {
         debug_assert_eq!(me, self.inner.me, "process endpoint can only recv as itself");
         self.inner.ring.pop_deadline(buf, deadline)
     }
@@ -505,12 +517,12 @@ impl Transport for TcpEndpoint {
     /// remote peer's reader observes EOF and marks it down. (A process
     /// being killed gets the same effect from the OS closing its
     /// sockets — this is the in-process fault-injection equivalent.)
-    fn fail_endpoint(&self, me: u8) {
+    fn fail_endpoint(&self, me: WorkerId) {
         debug_assert_eq!(me, self.inner.me, "process endpoint can only fail as itself");
         self.inner.teardown();
     }
 
-    fn leave(&self, me: u8) {
+    fn leave(&self, me: WorkerId) {
         debug_assert_eq!(me, self.inner.me, "process endpoint can only leave as itself");
         self.inner.half_close();
     }
@@ -546,7 +558,7 @@ mod tests {
         let mut buf = Vec::new();
         frame::encode_coded(&mut buf, 2, 9, &[0xAB, 0xCD, 0xEF], 4);
         net.send_multicast(2, &[0, 1], &buf);
-        for me in [0u8, 1] {
+        for me in [0 as WorkerId, 1] {
             let mut rbuf = Vec::new();
             assert!(net.recv(me, &mut rbuf));
             let f = frame::Frame::parse(&rbuf).unwrap();
@@ -562,16 +574,16 @@ mod tests {
     fn streams_preserve_frame_order() {
         let net = TcpNet::new(&[64, 64]).expect("bind localhost");
         let mut buf = Vec::new();
-        for i in 0..50u32 {
-            frame::encode_uncoded(&mut buf, 0, i, &[i as u64; 3]);
+        for i in 0..50u64 {
+            frame::encode_uncoded(&mut buf, 0, i, &[i; 3]);
             net.send_unicast(0, 1, &buf);
         }
         let mut rbuf = Vec::new();
-        for i in 0..50u32 {
+        for i in 0..50u64 {
             assert!(net.recv(1, &mut rbuf));
             let f = frame::Frame::parse(&rbuf).unwrap();
             assert_eq!(f.index, i);
-            assert_eq!(f.word(0), i as u64);
+            assert_eq!(f.word(0), i);
         }
     }
 
@@ -580,8 +592,8 @@ mod tests {
         let net = TcpNet::new(&[64, 64, 64]).expect("bind localhost");
         let mut buf = Vec::new();
         // stage 10 frames to each of two destinations; nothing moves yet
-        for i in 0..10u32 {
-            frame::encode_uncoded(&mut buf, 0, i, &[i as u64; 4]);
+        for i in 0..10u64 {
+            frame::encode_uncoded(&mut buf, 0, i, &[i; 4]);
             net.send_multicast_buffered(0, &[1, 2], &buf);
         }
         assert_eq!(net.data_stats().batched_writes, 0, "no writes before flush");
@@ -589,13 +601,13 @@ mod tests {
         net.flush(0);
         // one physical write per destination, all frames delivered in order
         assert_eq!(net.data_stats().batched_writes, 2);
-        for me in [1u8, 2] {
+        for me in [1 as WorkerId, 2] {
             let mut rbuf = Vec::new();
-            for i in 0..10u32 {
+            for i in 0..10u64 {
                 assert!(net.recv(me, &mut rbuf));
                 let f = frame::Frame::parse(&rbuf).unwrap();
                 assert_eq!((f.kind, f.index), (FrameKind::UncodedData, i));
-                assert_eq!(f.word(3), i as u64);
+                assert_eq!(f.word(3), i);
             }
         }
         // an empty flush writes nothing
@@ -607,19 +619,19 @@ mod tests {
     fn process_endpoint_buffered_path_roundtrips() {
         let eps = wire_endpoints(&[16, 16]);
         let mut buf = Vec::new();
-        for i in 0..5u32 {
-            frame::encode_coded(&mut buf, 0, i, &[i as u64, 7], 4);
+        for i in 0..5u64 {
+            frame::encode_coded(&mut buf, 0, i, &[i, 7], 4);
             eps[0].send_unicast_buffered(0, 1, &buf);
         }
         eps[0].flush(0);
         assert_eq!(eps[0].data_stats().batched_writes, 1);
         assert_eq!(eps[0].data_stats().data_frames, 5);
         let mut rbuf = Vec::new();
-        for i in 0..5u32 {
+        for i in 0..5u64 {
             assert!(eps[1].recv(1, &mut rbuf));
             let f = frame::Frame::parse(&rbuf).unwrap();
             assert_eq!((f.kind, f.index), (FrameKind::CodedData, i));
-            assert_eq!(f.col(0, 4), i as u64);
+            assert_eq!(f.col(0, 4), i);
         }
         assert_eq!(eps[1].data_stats().batched_writes, 0);
     }
@@ -648,7 +660,7 @@ mod tests {
                 let addrs = addrs.clone();
                 let cap = caps[i];
                 std::thread::spawn(move || {
-                    TcpEndpoint::wire(i as u8, &listener, &addrs, cap, Duration::from_secs(10))
+                    TcpEndpoint::wire(i as WorkerId, &listener, &addrs, cap, Duration::from_secs(10))
                         .expect("wire endpoint")
                 })
             })
@@ -662,7 +674,7 @@ mod tests {
         let mut buf = Vec::new();
         frame::encode_coded(&mut buf, 0, 3, &[1, 2, 3], 4);
         eps[0].send_multicast(0, &[1, 2], &buf);
-        for me in [1u8, 2] {
+        for me in [1 as WorkerId, 2] {
             let mut rbuf = Vec::new();
             assert!(eps[me as usize].recv(me, &mut rbuf));
             let f = frame::Frame::parse(&rbuf).unwrap();

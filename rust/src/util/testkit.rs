@@ -1,12 +1,90 @@
-//! Property-testing kit (offline environment: no proptest crate).
+//! Property-testing kit and shared test fixtures/oracles (offline
+//! environment: no proptest crate).
 //!
 //! [`property`] runs a closure over `cases` independently-seeded random
 //! inputs; a panic is caught, re-raised with the failing seed so the case
 //! reproduces with `property_seed`. Generation happens through [`Gen`],
 //! a thin sampler over [`DetRng`] with the distributions the coordinator
 //! invariants need (graph sizes, K/r pairs, densities).
+//!
+//! The fixture/oracle half (PR 8) is the one home for what every
+//! integration gate used to re-declare privately: the four-scheme list
+//! ([`ALL_SCHEMES`]), the bit-identity oracles
+//! ([`assert_states_bit_identical`] / [`assert_reports_match`] — the
+//! repo's correctness bar is `f64::to_bits` equality, never an epsilon),
+//! and the [`bounded`] watchdog that turns "abort became a hang" into a
+//! diagnosable panic instead of a stuck CI job.
+
+use std::sync::mpsc;
+use std::time::Duration;
+
+use crate::coordinator::{JobReport, Scheme};
 
 use super::rng::DetRng;
+
+/// Every scheme the engine supports — the matrix axis each driver /
+/// fault / shard gate iterates.
+pub const ALL_SCHEMES: [Scheme; 4] = [
+    Scheme::Coded,
+    Scheme::Uncoded,
+    Scheme::CodedCombined,
+    Scheme::UncodedCombined,
+];
+
+/// The bit-identity oracle on raw states: same length, every `f64`
+/// equal by `to_bits` (NaN-safe, and strict about `-0.0` vs `0.0`).
+pub fn assert_states_bit_identical(reference: &[f64], got: &[f64], tag: &str) {
+    assert_eq!(reference.len(), got.len(), "{tag}: state length");
+    for (i, (a, b)) in reference.iter().zip(got).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{tag}: state {i}: {a} vs {b}");
+    }
+}
+
+/// The full report oracle: bit-identical states plus per-iteration
+/// validated-IV counts, shuffle/update loads, and every modeled phase
+/// time — what "two drivers ran the same job" means in this repo.
+pub fn assert_reports_match(reference: &JobReport, got: &JobReport, tag: &str) {
+    assert_states_bit_identical(&reference.final_state, &got.final_state, tag);
+    assert_eq!(reference.iterations.len(), got.iterations.len(), "{tag}: iteration count");
+    for (e, c) in reference.iterations.iter().zip(&got.iterations) {
+        assert_eq!(e.validated_ivs, c.validated_ivs, "{tag}: validated_ivs");
+        assert_eq!(e.shuffle, c.shuffle, "{tag}: shuffle load");
+        assert_eq!(e.update, c.update, "{tag}: update load");
+        assert_eq!(e.times.map_s, c.times.map_s, "{tag}: map_s");
+        assert_eq!(e.times.encode_s, c.times.encode_s, "{tag}: encode_s");
+        assert_eq!(e.times.shuffle_s, c.times.shuffle_s, "{tag}: shuffle_s");
+        assert_eq!(e.times.decode_s, c.times.decode_s, "{tag}: decode_s");
+        assert_eq!(e.times.reduce_s, c.times.reduce_s, "{tag}: reduce_s");
+        assert_eq!(e.times.update_s, c.times.update_s, "{tag}: update_s");
+    }
+}
+
+/// Run `f` on its own thread and panic if it has not finished within
+/// `secs` — the watchdog every networked test wraps its run in, so a
+/// regression that turns a typed abort into a hang fails fast with a
+/// message instead of timing out the whole CI job.
+pub fn bounded<T: Send + 'static>(secs: u64, f: impl FnOnce() -> T + Send + 'static) -> T {
+    let (tx, rx) = mpsc::channel();
+    let h = std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(v) => {
+            let _ = h.join();
+            v
+        }
+        Err(mpsc::RecvTimeoutError::Disconnected) => {
+            // the closure panicked before sending: surface that panic
+            match h.join() {
+                Err(p) => std::panic::resume_unwind(p),
+                Ok(()) => unreachable!("sender dropped without a panic"),
+            }
+        }
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            panic!("watchdog: run exceeded {secs}s — a hang where completion was required")
+        }
+    }
+}
 
 /// Random-input sampler handed to property closures.
 pub struct Gen {
@@ -87,6 +165,22 @@ pub fn property_seed<F: FnOnce(&mut Gen)>(seed: u64, f: F) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn bounded_returns_value_and_surfaces_panics() {
+        assert_eq!(bounded(10, || 7), 7);
+        let res = std::panic::catch_unwind(|| bounded(10, || panic!("inner boom")));
+        assert!(res.is_err(), "inner panic must propagate through the watchdog");
+    }
+
+    #[test]
+    fn state_oracle_is_bitwise() {
+        assert_states_bit_identical(&[0.5, 1.0], &[0.5, 1.0], "same");
+        let res = std::panic::catch_unwind(|| {
+            assert_states_bit_identical(&[0.0], &[-0.0], "signed zero")
+        });
+        assert!(res.is_err(), "-0.0 must not equal 0.0 bitwise");
+    }
 
     #[test]
     fn int_bounds_inclusive() {

@@ -15,7 +15,6 @@
 //!   deadlocking (watchdog-bounded).
 
 use std::net::TcpListener;
-use std::sync::mpsc;
 use std::time::Duration;
 
 use coded_graph::coordinator::cluster::leader_ring_capacity;
@@ -24,6 +23,8 @@ use coded_graph::coordinator::{
     JobReport, JobSpec, ProgramSpec, Scheme,
 };
 use coded_graph::transport::{bootstrap, TcpEndpoint};
+use coded_graph::util::testkit::bounded;
+use coded_graph::WorkerId;
 
 const PATIENCE: Duration = Duration::from_secs(30);
 
@@ -49,7 +50,7 @@ fn run_process_style(spec: JobSpec, cfg: EngineConfig) -> JobReport {
     let k = spec.k;
 
     let mut workers = Vec::new();
-    for id in 0..k as u8 {
+    for id in 0..k as WorkerId {
         let want_line = job_line.clone();
         workers.push(std::thread::spawn(move || {
             let listener = TcpListener::bind("127.0.0.1:0").unwrap();
@@ -75,7 +76,7 @@ fn run_process_style(spec: JobSpec, cfg: EngineConfig) -> JobReport {
     let job = built.job();
     let prep = prepare(&job, cfg.scheme);
     let cap = leader_ring_capacity(k);
-    let net = TcpEndpoint::wire(k as u8, &data_listener, &roster, cap, PATIENCE).expect("wire");
+    let net = TcpEndpoint::wire(k as WorkerId, &data_listener, &roster, cap, PATIENCE).expect("wire");
     let report = run_leader(&job, &cfg, spec.iters, &prep, &net);
     for w in workers {
         w.join().expect("worker endpoint");
@@ -102,9 +103,9 @@ fn worker_death_aborts_the_run_instead_of_deadlocking() {
     // worker 0 completes bootstrap + wiring, then dies before sending a
     // single frame (the teardown closes all its sockets — the same
     // signal an OS kill produces). Leader and the surviving worker must
-    // both abort; the watchdog converts a deadlock into a test failure.
-    let (done_tx, done_rx) = mpsc::channel::<()>();
-    std::thread::spawn(move || {
+    // both abort; the testkit watchdog converts a deadlock into a test
+    // failure instead of a hung run.
+    bounded(120, || {
         let k = 2usize; // small cluster: victim + survivor
         let s = JobSpec { k, ..spec(Scheme::Coded, 3) };
         let job_line = s.encode_line();
@@ -145,16 +146,12 @@ fn worker_death_aborts_the_run_instead_of_deadlocking() {
         let cfg = EngineConfig { scheme: s.scheme, ..Default::default() };
         let cap = leader_ring_capacity(k);
         let net =
-            TcpEndpoint::wire(k as u8, &data_listener, &roster, cap, PATIENCE).expect("wire");
+            TcpEndpoint::wire(k as WorkerId, &data_listener, &roster, cap, PATIENCE).expect("wire");
         let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             run_leader(&job, &cfg, s.iters, &prep, &net)
         }));
         assert!(out.is_err(), "leader must abort when a worker dies");
         assert!(survivor.join().is_err(), "surviving worker must abort too");
         victim.join().expect("victim only bootstraps then exits");
-        done_tx.send(()).unwrap();
     });
-    done_rx
-        .recv_timeout(Duration::from_secs(120))
-        .expect("cluster deadlocked instead of aborting on worker death");
 }

@@ -4,7 +4,7 @@
 //!   single-machine oracle and be bit-identical to the engine.
 //! * The driver itself asserts, every iteration, that the serialized
 //!   frame bytes the transport moved equal the bytes charged to
-//!   `ShuffleLoad`/`Bus` (payload + 16-byte header per message), so a
+//!   `ShuffleLoad`/`Bus` (payload + 24-byte header per message), so a
 //!   green run here *is* the wire-format equality check. (The
 //!   backends × schemes bit-identity matrix lives in
 //!   `tests/driver_matrix.rs` since PR 5.)
@@ -16,13 +16,22 @@ use coded_graph::mapreduce::program::run_single_machine;
 use coded_graph::mapreduce::{PageRank, Sssp};
 use coded_graph::transport::TransportKind;
 use coded_graph::util::rng::DetRng;
+use coded_graph::util::testkit::bounded;
 
 fn cfg(scheme: Scheme) -> EngineConfig {
     EngineConfig { scheme, ..Default::default() }
 }
 
+// The TCP endpoints inside `run_cluster_on` always bind 127.0.0.1:0 (OS-
+// assigned ports), so these tests never collide; the testkit watchdog
+// turns a wedged socket mesh into a failure instead of a hung suite.
+
 #[test]
 fn tcp_loopback_matches_oracle_and_engine() {
+    bounded(120, tcp_loopback_matches_oracle_and_engine_inner);
+}
+
+fn tcp_loopback_matches_oracle_and_engine_inner() {
     let g = er(200, 0.1, &mut DetRng::seed(71));
     let alloc = Allocation::er_scheme(200, 5, 2);
     let prog = PageRank::default();
@@ -53,13 +62,15 @@ fn tcp_loopback_matches_oracle_and_engine() {
 fn tcp_sssp_multi_iteration() {
     // a second program over TCP: state write-back + NaN-poison ownership
     // checks across 4 iterations of SSSP
-    let g = er(100, 0.1, &mut DetRng::seed(73));
-    let alloc = Allocation::er_scheme(100, 4, 2);
-    let prog = Sssp::hashed(0);
-    let job = Job { graph: &g, alloc: &alloc, program: &prog };
-    let report = run_cluster_on(&job, &cfg(Scheme::Coded), 4, TransportKind::Tcp);
-    let want = run_single_machine(&prog, &g, 4);
-    for (a, b) in report.final_state.iter().zip(&want) {
-        assert!((a - b).abs() < 1e-12);
-    }
+    bounded(120, || {
+        let g = er(100, 0.1, &mut DetRng::seed(73));
+        let alloc = Allocation::er_scheme(100, 4, 2);
+        let prog = Sssp::hashed(0);
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let report = run_cluster_on(&job, &cfg(Scheme::Coded), 4, TransportKind::Tcp);
+        let want = run_single_machine(&prog, &g, 4);
+        for (a, b) in report.final_state.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    });
 }

@@ -22,10 +22,12 @@ use std::time::Duration;
 
 use coded_graph::coordinator::cluster::leader_ring_capacity;
 use coded_graph::coordinator::{
-    prepare, run_cluster_on, run_leader, run_rust, run_worker, AllocKind, EngineConfig, GraphKind,
-    GraphSpec, JobReport, JobSpec, ProgramSpec, Scheme,
+    prepare, run_cluster_on, run_leader, run_rust, run_sim, run_worker, AllocKind, EngineConfig,
+    GraphKind, GraphSpec, JobReport, JobSpec, ProgramSpec, Scheme, SimConfig,
 };
 use coded_graph::transport::{bootstrap, TcpEndpoint, TransportKind};
+use coded_graph::util::testkit::{assert_reports_match, assert_states_bit_identical, ALL_SCHEMES};
+use coded_graph::WorkerId;
 
 const PATIENCE: Duration = Duration::from_secs(60);
 
@@ -90,7 +92,7 @@ fn run_process_style(spec: JobSpec, cfg: EngineConfig) -> JobReport {
     let k = spec.k;
 
     let mut workers = Vec::new();
-    for id in 0..k as u8 {
+    for id in 0..k as WorkerId {
         workers.push(std::thread::spawn(move || {
             let listener = TcpListener::bind("127.0.0.1:0").unwrap();
             let addr = listener.local_addr().unwrap();
@@ -112,39 +114,14 @@ fn run_process_style(spec: JobSpec, cfg: EngineConfig) -> JobReport {
     let job = built.job();
     let prep = prepare(&job, cfg.scheme);
     let cap = leader_ring_capacity(k);
-    let net = TcpEndpoint::wire(k as u8, &data_listener, &roster, cap, PATIENCE).expect("wire");
+    let net =
+        TcpEndpoint::wire(k as WorkerId, &data_listener, &roster, cap, PATIENCE).expect("wire");
     let report = run_leader(&job, &cfg, spec.iters, &prep, &net);
     for w in workers {
         w.join().expect("worker endpoint");
     }
     report
 }
-
-fn assert_matches_reference(reference: &JobReport, got: &JobReport, tag: &str) {
-    assert_eq!(reference.final_state.len(), got.final_state.len(), "{tag}");
-    for (a, b) in reference.final_state.iter().zip(&got.final_state) {
-        assert_eq!(a.to_bits(), b.to_bits(), "{tag}: {a} vs {b}");
-    }
-    assert_eq!(reference.iterations.len(), got.iterations.len(), "{tag}");
-    for (e, c) in reference.iterations.iter().zip(&got.iterations) {
-        assert_eq!(e.validated_ivs, c.validated_ivs, "{tag}: validated_ivs");
-        assert_eq!(e.shuffle, c.shuffle, "{tag}: shuffle load");
-        assert_eq!(e.update, c.update, "{tag}: update load");
-        assert_eq!(e.times.map_s, c.times.map_s, "{tag}");
-        assert_eq!(e.times.encode_s, c.times.encode_s, "{tag}");
-        assert_eq!(e.times.shuffle_s, c.times.shuffle_s, "{tag}");
-        assert_eq!(e.times.decode_s, c.times.decode_s, "{tag}");
-        assert_eq!(e.times.reduce_s, c.times.reduce_s, "{tag}");
-        assert_eq!(e.times.update_s, c.times.update_s, "{tag}");
-    }
-}
-
-const SCHEMES: [Scheme; 4] = [
-    Scheme::Coded,
-    Scheme::Uncoded,
-    Scheme::CodedCombined,
-    Scheme::UncodedCombined,
-];
 
 /// One matrix slice per graph family so a failure names its row and the
 /// slices run in parallel under the default test harness.
@@ -153,7 +130,7 @@ const SCHEMES: [Scheme; 4] = [
 /// and both runs must match the engine reference bit-for-bit: tracing
 /// is observability, never allowed to perturb a result (ISSUE 7).
 fn matrix_for_graph(graph: &str) {
-    for scheme in SCHEMES {
+    for scheme in ALL_SCHEMES {
         let spec = spec_for(graph, scheme);
         let cfg = EngineConfig { scheme, validate: true, ..Default::default() };
         let reference = run_driver(&spec, &cfg, Driver::Engine);
@@ -169,19 +146,34 @@ fn matrix_for_graph(graph: &str) {
         );
         let untraced_cfg = EngineConfig { trace: false, ..cfg };
         let engine_off = run_driver(&spec, &untraced_cfg, Driver::Engine);
-        assert_matches_reference(&reference, &engine_off, &format!("{graph}/{scheme}/engine-off"));
+        assert_reports_match(&reference, &engine_off, &format!("{graph}/{scheme}/engine-off"));
         assert!(engine_off.spans.is_empty(), "{graph}/{scheme}: trace off must record nothing");
         for driver in DRIVERS {
             let got = run_driver(&spec, &cfg, driver);
-            assert_matches_reference(&reference, &got, &format!("{graph}/{scheme}/{driver:?}"));
+            assert_reports_match(&reference, &got, &format!("{graph}/{scheme}/{driver:?}"));
             assert!(
                 !got.spans.is_empty() && !got.measured.is_empty(),
                 "{graph}/{scheme}/{driver:?}: leader must assemble worker spans"
             );
             let off = run_driver(&spec, &untraced_cfg, driver);
-            assert_matches_reference(&reference, &off, &format!("{graph}/{scheme}/{driver:?}-off"));
+            assert_reports_match(&reference, &off, &format!("{graph}/{scheme}/{driver:?}-off"));
             assert!(off.spans.is_empty(), "{graph}/{scheme}/{driver:?}: trace off leaks spans");
         }
+        // the sim-fabric row (PR 8): the virtual-time driver replays the
+        // same cores, so states are bit-identical and its clean-load
+        // accounting equals the engine's measured per-iteration load
+        let built = spec.materialize();
+        let sim = run_sim(&built.job(), scheme, spec.iters, &SimConfig::default());
+        assert_states_bit_identical(
+            &reference.final_state,
+            &sim.final_state,
+            &format!("{graph}/{scheme}/sim"),
+        );
+        assert_eq!(
+            sim.clean_load, reference.iterations[0].shuffle,
+            "{graph}/{scheme}/sim: clean-load accounting"
+        );
+        assert_eq!(sim.iterations.len(), spec.iters, "{graph}/{scheme}/sim");
     }
 }
 

@@ -16,22 +16,15 @@
 //! * a seeded random sweep (util::testkit) varies the victim and the
 //!   kill iteration.
 
-use std::sync::mpsc;
-use std::time::Duration;
-
 use coded_graph::coordinator::{
     run_rust, try_run_cluster_on, AllocKind, ClusterError, EngineConfig, FailWorker, GraphKind,
     GraphSpec, JobReport, JobSpec, ProgramSpec, Scheme,
 };
 use coded_graph::transport::TransportKind;
-use coded_graph::util::testkit::property_seed;
-
-const SCHEMES: [Scheme; 4] = [
-    Scheme::Coded,
-    Scheme::Uncoded,
-    Scheme::CodedCombined,
-    Scheme::UncodedCombined,
-];
+use coded_graph::util::testkit::{
+    assert_states_bit_identical, bounded, property_seed, ALL_SCHEMES,
+};
+use coded_graph::WorkerId;
 
 /// The matrix pin: K=10, r=3 (two-failure tolerance), 3 iterations.
 fn spec_for(graph: &str, scheme: Scheme) -> JobSpec {
@@ -69,41 +62,12 @@ fn run_with_failures(
 }
 
 fn assert_bit_identical(reference: &JobReport, got: &JobReport, tag: &str) {
-    assert_eq!(reference.final_state.len(), got.final_state.len(), "{tag}");
-    for (i, (a, b)) in reference.final_state.iter().zip(&got.final_state).enumerate() {
-        assert_eq!(a.to_bits(), b.to_bits(), "{tag}: state {i}: {a} vs {b}");
-    }
-}
-
-/// Run `f` on its own thread and fail the test if it has not finished
-/// within `secs` — the guard that turns "abort became a hang" into a
-/// diagnosable failure instead of a stuck CI job.
-fn bounded<T: Send + 'static>(secs: u64, f: impl FnOnce() -> T + Send + 'static) -> T {
-    let (tx, rx) = mpsc::channel();
-    let h = std::thread::spawn(move || {
-        let _ = tx.send(f());
-    });
-    match rx.recv_timeout(Duration::from_secs(secs)) {
-        Ok(v) => {
-            let _ = h.join();
-            v
-        }
-        Err(mpsc::RecvTimeoutError::Disconnected) => {
-            // the closure panicked before sending: surface that panic
-            match h.join() {
-                Err(p) => std::panic::resume_unwind(p),
-                Ok(()) => unreachable!("sender dropped without a panic"),
-            }
-        }
-        Err(mpsc::RecvTimeoutError::Timeout) => {
-            panic!("watchdog: run exceeded {secs}s — a hang where a typed abort was required")
-        }
-    }
+    assert_states_bit_identical(&reference.final_state, &got.final_state, tag);
 }
 
 /// One matrix slice: every scheme under `graph`/`kind`, one mid-job kill.
 fn kill_matrix(graph: &str, kind: TransportKind) {
-    for scheme in SCHEMES {
+    for scheme in ALL_SCHEMES {
         let spec = spec_for(graph, scheme);
         let clean_cfg = EngineConfig { scheme, ..Default::default() };
         let reference = run_rust(&spec.materialize().job(), &clean_cfg, spec.iters);
@@ -197,10 +161,10 @@ fn seeded_random_kills_stay_bit_identical() {
     // initial adopter, worker 0 — that case is pinned above)
     property_seed(0xC0DE_D64A, |g| {
         for _ in 0..3 {
-            let scheme = *g.choice(&SCHEMES);
+            let scheme = *g.choice(&ALL_SCHEMES);
             let spec = spec_for("er", scheme);
             let fails = [FailWorker {
-                worker: g.int(1, spec.k - 1) as u8,
+                worker: g.int(1, spec.k - 1) as WorkerId,
                 at_iter: g.int(0, spec.iters - 1),
             }];
             let reference = run_rust(

@@ -51,7 +51,7 @@ fn every_vertex_mapped_exactly_r_times() {
         let n = gen.int(20, 150);
         let alloc = any_alloc(gen, n);
         for v in 0..n as Vertex {
-            let cnt = (0..alloc.k as u8).filter(|&s| alloc.maps(s, v)).count();
+            let cnt = (0..alloc.k as u16).filter(|&s| alloc.maps(s, v)).count();
             assert_eq!(cnt, alloc.r, "v={v} K={} r={}", alloc.k, alloc.r);
         }
     });

@@ -30,7 +30,7 @@ fn fig3() -> (Csr, Allocation) {
 fn subgraph_allocation_matches_fig3c() {
     let (_, alloc) = fig3();
     let m: Vec<Vec<Vertex>> =
-        (0..3u8).map(|k| alloc.mapped_vertices(k).collect()).collect();
+        (0..3u16).map(|k| alloc.mapped_vertices(k).collect()).collect();
     // paper (1-based): M_1 = {1,2,3,4}, M_2 = {1,2,5,6}, M_3 = {3,4,5,6}
     assert_eq!(m[0], vec![0, 1, 2, 3]);
     assert_eq!(m[1], vec![0, 1, 4, 5]);

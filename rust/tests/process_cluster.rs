@@ -12,6 +12,9 @@
 
 use std::process::Command;
 
+use coded_graph::util::testkit::bounded;
+use coded_graph::WorkerId;
+
 const BIN: &str = env!("CARGO_BIN_EXE_coded-graph");
 
 fn run_cluster_processes(extra: &[&str]) -> (bool, String, String) {
@@ -70,7 +73,13 @@ fn processes_cluster_runs_sssp_too() {
 #[test]
 fn no_spawn_leader_accepts_hand_started_workers() {
     // the manual operator surface: a --no-spawn leader prints its
-    // rendezvous address and waits; workers started by hand join it
+    // rendezvous address and waits; workers started by hand join it.
+    // Watchdog-bounded: a leader that never prints its rendezvous line
+    // (or never exits) fails the test instead of hanging the suite.
+    bounded(120, no_spawn_leader_accepts_hand_started_workers_inner);
+}
+
+fn no_spawn_leader_accepts_hand_started_workers_inner() {
     use std::io::{BufRead, BufReader};
     let mut leader = Command::new(BIN)
         .args([
@@ -104,7 +113,7 @@ fn no_spawn_leader_accepts_hand_started_workers() {
         }
     };
     let workers: Vec<_> = (0..2)
-        .map(|id: u8| {
+        .map(|id: WorkerId| {
             Command::new(BIN)
                 .args(["worker", "--connect", &addr, "--id", &id.to_string()])
                 .spawn()

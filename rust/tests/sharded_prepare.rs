@@ -14,16 +14,15 @@
 
 use coded_graph::allocation::Allocation;
 use coded_graph::combinatorics::subset_rank;
-use coded_graph::coordinator::{
-    prepare, prepare_worker, run_cluster_on, run_rust, EngineConfig, Job, Scheme,
-};
+use coded_graph::coordinator::{prepare, prepare_worker, run_cluster_on, run_rust, EngineConfig, Job};
 use coded_graph::graph::er::er;
 use coded_graph::graph::powerlaw::{pl, PlParams};
 use coded_graph::graph::sbm::sbm;
 use coded_graph::mapreduce::PageRank;
 use coded_graph::transport::TransportKind;
 use coded_graph::util::rng::DetRng;
-use coded_graph::Csr;
+use coded_graph::util::testkit::{assert_states_bit_identical, ALL_SCHEMES};
+use coded_graph::{Csr, WorkerId};
 
 /// The three graph fixtures with a matching allocation each.
 fn fixtures() -> Vec<(&'static str, Csr, Allocation)> {
@@ -48,14 +47,9 @@ fn worker_plans_match_global_plan_filtered_to_membership() {
         let k = alloc.k;
         let r = alloc.r;
         let job = Job { graph: &g, alloc: &alloc, program: &prog };
-        for scheme in [
-            Scheme::Coded,
-            Scheme::Uncoded,
-            Scheme::CodedCombined,
-            Scheme::UncodedCombined,
-        ] {
+        for scheme in ALL_SCHEMES {
             let prep = prepare(&job, scheme);
-            for me in 0..k as u8 {
+            for me in 0..k as WorkerId {
                 let pw = prepare_worker(&job, scheme, me);
                 // --- coded shard: groups filtered to membership ---
                 let mut l = 0usize;
@@ -122,19 +116,16 @@ fn sharded_cluster_drivers_stay_bit_identical_to_the_engine() {
     let g = er(150, 0.12, &mut DetRng::seed(94));
     let alloc = Allocation::er_scheme(150, 5, 2);
     let job = Job { graph: &g, alloc: &alloc, program: &prog };
-    for scheme in [
-        Scheme::Coded,
-        Scheme::Uncoded,
-        Scheme::CodedCombined,
-        Scheme::UncodedCombined,
-    ] {
+    for scheme in ALL_SCHEMES {
         let cfg = EngineConfig { scheme, ..Default::default() };
         let en = run_rust(&job, &cfg, 3);
         for kind in [TransportKind::InProc, TransportKind::Tcp] {
             let cl = run_cluster_on(&job, &cfg, 3, kind);
-            for (a, b) in cl.final_state.iter().zip(&en.final_state) {
-                assert_eq!(a.to_bits(), b.to_bits(), "{scheme} over {kind}");
-            }
+            assert_states_bit_identical(
+                &en.final_state,
+                &cl.final_state,
+                &format!("{scheme} over {kind}"),
+            );
             for (a, b) in cl.iterations.iter().zip(&en.iterations) {
                 assert_eq!(a.shuffle, b.shuffle, "{scheme} over {kind}");
             }

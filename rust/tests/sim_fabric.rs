@@ -1,0 +1,103 @@
+//! SimFabric acceptance (PR 8): the deterministic virtual-time driver at
+//! the paper's scale — K in the hundreds, where real sockets and threads
+//! would dominate the test budget.
+//!
+//! * **Replayability**: two `run_sim` calls with the same [`SimConfig`]
+//!   seed are bit-identical end to end — final states, per-iteration
+//!   records (virtual makespans, wire tallies), and the full recorded
+//!   span timeline. A different straggler seed moves the virtual clock
+//!   but never the computed states: timing is observability, results are
+//!   the replayed cores.
+//! * **Recovery at scale**: killing a worker mid-job at K = 512 re-plans
+//!   onto replicas under both recovery policies and still lands on the
+//!   clean run's state digest.
+//!
+//! (The sim-vs-engine oracle row at small K lives in
+//! `tests/driver_matrix.rs`; the theory-tracking loads live in
+//! `tests/theory_validation.rs`.)
+
+use coded_graph::allocation::Allocation;
+use coded_graph::coordinator::{run_sim, FailWorker, Job, RecoveryPolicy, Scheme, SimConfig};
+use coded_graph::graph::er::er;
+use coded_graph::mapreduce::PageRank;
+use coded_graph::util::rng::DetRng;
+use coded_graph::util::testkit::{assert_states_bit_identical, bounded};
+
+const K: usize = 512;
+const R: usize = 3;
+const N: usize = 1024;
+const ITERS: usize = 2;
+
+/// The K=512 fixture: sparse ER (constant average degree, so the sim
+/// stays fast at scale) on the cyclic allocation.
+fn fixture() -> (coded_graph::Csr, Allocation) {
+    let g = er(N, 8.0 / N as f64, &mut DetRng::seed(512));
+    let alloc = Allocation::cyclic_scheme(N, K, R);
+    (g, alloc)
+}
+
+#[test]
+fn same_seed_runs_are_bit_identical_at_k512() {
+    bounded(300, || {
+        let (g, alloc) = fixture();
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        // stragglers on, so the seeded RNG actually steers the schedule
+        let cfg = SimConfig { straggler_prob: 0.25, ..SimConfig::default() };
+        let a = run_sim(&job, Scheme::Coded, ITERS, &cfg);
+        let b = run_sim(&job, Scheme::Coded, ITERS, &cfg);
+
+        assert_states_bit_identical(&a.final_state, &b.final_state, "sim/k512/replay");
+        assert_eq!(a.state_digest(), b.state_digest());
+        assert_eq!(a.iterations, b.iterations, "virtual-time records must replay");
+        assert_eq!(a.spans, b.spans, "the span timeline must replay");
+        assert_eq!(a.total_ns, b.total_ns);
+        assert_eq!(a.clean_load, b.clean_load);
+        assert_eq!(a.iterations.len(), ITERS);
+        assert!(a.total_ns > 0 && !a.spans.is_empty(), "the clock and recorder must run");
+
+        // a different straggler seed reshuffles the virtual clock but
+        // cannot perturb the computation itself
+        let other = run_sim(&job, Scheme::Coded, ITERS, &SimConfig { seed: 7, ..cfg });
+        assert_states_bit_identical(&a.final_state, &other.final_state, "sim/k512/reseed");
+        assert_ne!(
+            a.iterations, other.iterations,
+            "a reseeded straggler draw must move some virtual makespan"
+        );
+    });
+}
+
+#[test]
+fn injected_failure_at_k512_recovers_under_both_policies() {
+    bounded(300, || {
+        let (g, alloc) = fixture();
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let clean = run_sim(&job, Scheme::Coded, ITERS, &SimConfig::default());
+        assert_eq!(clean.recovery.failures, 0);
+
+        for policy in [RecoveryPolicy::LowestSurvivor, RecoveryPolicy::LoadSpread] {
+            let cfg = SimConfig {
+                fail_workers: [Some(FailWorker { worker: 9, at_iter: 1 }), None],
+                policy,
+                ..SimConfig::default()
+            };
+            let failed = run_sim(&job, Scheme::Coded, ITERS, &cfg);
+            assert_eq!(failed.recovery.failures, 1, "{policy}");
+            assert!(
+                failed.recovery.recovered_groups > 0,
+                "{policy}: worker 9 had re-plannable work at K=512"
+            );
+            assert!(failed.recovery.load_inflation > 0.0, "{policy}: recovery moved extra bytes");
+            assert_eq!(
+                failed.state_digest(),
+                clean.state_digest(),
+                "{policy}: degraded run must land on the clean states"
+            );
+            assert!(
+                failed.total_ns >= clean.total_ns,
+                "{policy}: recovery cannot make the virtual job faster"
+            );
+        }
+    });
+}

@@ -12,6 +12,7 @@ use coded_graph::coordinator::{
 use coded_graph::obs::{self, Phase};
 use coded_graph::transport::TransportKind;
 use coded_graph::util::json::Json;
+use coded_graph::WorkerId;
 
 const K: usize = 4;
 const ITERS: usize = 2;
@@ -41,7 +42,7 @@ fn run(scheme: Scheme, fail: Option<FailWorker>) -> JobReport {
 fn cluster_timeline_covers_every_core_and_iteration() {
     let report = run(Scheme::Coded, None);
     assert!(!report.spans.is_empty());
-    for core in 0..K as u8 {
+    for core in 0..K as WorkerId {
         for it in 0..ITERS as u32 {
             for ph in [Phase::Encode, Phase::Stage, Phase::Flush, Phase::RecvWait, Phase::Decode] {
                 assert!(

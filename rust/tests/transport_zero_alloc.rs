@@ -88,7 +88,7 @@ fn inproc_send_path_is_allocation_free_at_steady_state() {
 
     // two endpoints: 0 sends (the worker role under audit), 1 receives
     let net = InProcNet::new(&[16, 16]);
-    let receivers = [1u8];
+    let receivers = [1u16];
     let max_vals = plan.groups().map(|p| p.total_ivs()).max().unwrap_or(0);
     let max_cols = (0..plan.num_groups())
         .flat_map(|gi| plan.sender_cols(gi).iter().copied())
@@ -124,7 +124,7 @@ fn inproc_send_path_is_allocation_free_at_steady_state() {
                 }
                 eval_rows_except(group, s_idx, &value, &mut vals[..nv]);
                 encode_sender_into(group, s_idx, &vals[..nv], r, &mut cols[..q]);
-                frame::encode_coded(&mut sendbuf, 0, gi as u32, &cols[..q], sb);
+                frame::encode_coded(&mut sendbuf, 0, gi as u64, &cols[..q], sb);
                 net.send_multicast_buffered(0, &receivers, &sendbuf);
                 assert!(net.recv(1, &mut rbuf));
                 let f = Frame::parse(&rbuf).unwrap();
@@ -139,7 +139,7 @@ fn inproc_send_path_is_allocation_free_at_steady_state() {
         for (ti, t) in transfers.iter().enumerate() {
             ivbits.clear();
             ivbits.extend(t.ivs.iter().map(|&(i, j)| value(i, j)));
-            frame::encode_uncoded(&mut sendbuf, 0, ti as u32, &ivbits);
+            frame::encode_uncoded(&mut sendbuf, 0, ti as u64, &ivbits);
             net.send_unicast_buffered(0, 1, &sendbuf);
             assert!(net.recv(1, &mut rbuf));
             let f = Frame::parse(&rbuf).unwrap();

@@ -31,7 +31,7 @@ use coded_graph::graph::er::er;
 use coded_graph::mapreduce::{PageRank, Sssp, VertexProgram};
 use coded_graph::transport::{InProcNet, Transport};
 use coded_graph::util::rng::DetRng;
-use coded_graph::Vertex;
+use coded_graph::{Vertex, WorkerId};
 
 struct CountingAlloc;
 
@@ -125,10 +125,10 @@ fn assert_transport_core_allocation_free(scheme: Scheme, prog: &dyn VertexProgra
     caps.push(leader_ring_capacity(k));
     let net = InProcNet::new(&caps);
     let mut cores: Vec<WorkerCore> = (0..k)
-        .map(|kk| WorkerCore::new(&job, prepare_worker(&job, scheme, kk as u8)))
+        .map(|kk| WorkerCore::new(&job, prepare_worker(&job, scheme, kk as WorkerId)))
         .collect();
     let mut fabs: Vec<TransportFabric<'_>> =
-        (0..k).map(|kk| TransportFabric::new(&net, kk as u8, k as u8)).collect();
+        (0..k).map(|kk| TransportFabric::new(&net, kk as WorkerId, k as WorkerId)).collect();
     // the full state works for every core (a core only reads entitled
     // entries; the cluster's NaN poison is a separate test concern)
     let state: Vec<f64> = (0..n as Vertex).map(|v| prog.init(v, &g)).collect();
@@ -152,7 +152,7 @@ fn assert_transport_core_allocation_free(scheme: Scheme, prog: &dyn VertexProgra
         }
         // drain the K SendDone frames at the leader endpoint
         for _ in 0..k {
-            assert!(net.recv(k as u8, &mut lbuf), "missing SendDone");
+            assert!(net.recv(k as WorkerId, &mut lbuf), "missing SendDone");
         }
     }
 
