@@ -63,7 +63,14 @@ bench-snapshot:
 #     bootstrap rendezvous distributes the roster + job spec) with
 #     --check asserting final states bit-identical to the engine;
 #  3) a process-separated run that loses worker 2 at iteration 1 and must
-#     recover onto the surviving replicas, still bit-identical (--check).
+#     recover onto the surviving replicas, still bit-identical (--check);
+#  4) the adopter cascade: worker 1 dies at iteration 1, then worker 0 —
+#     the adopter elected for it — dies at iteration 2; r=3 tolerates
+#     both, chaining two recovery epochs, still bit-identical (--check);
+#  5) checkpoint → kill past tolerance → resume: the first run aborts
+#     typed (hence the leading `!`) but leaves a committed-state
+#     checkpoint; the --resume run warm-starts a fresh mesh from it and
+#     --check pins the final state to the full-length engine oracle.
 cluster-smoke:
 	$(CARGO) run --release -- cluster --graph er --n 600 --k 4 --r 2 \
 	  --program pagerank --scheme coded --iters 2 --transport tcp
@@ -76,12 +83,24 @@ cluster-smoke:
 	$(CARGO) run --release -- cluster --graph er --n 400 --k 3 --r 2 \
 	  --program pagerank --scheme coded --iters 3 --transport tcp \
 	  --processes --check --fail-worker 2@1
+	$(CARGO) run --release -- cluster --graph er --n 400 --k 4 --r 3 \
+	  --program pagerank --scheme coded --iters 3 --transport tcp \
+	  --processes --check --fail-worker 1@1,0@2
+	! $(CARGO) run --release -- cluster --graph er --n 400 --k 4 --r 2 \
+	  --program pagerank --scheme coded --iters 3 --transport tcp \
+	  --fail-worker 1@1,3@2 \
+	  --checkpoint $(CURDIR)/cluster_ckpt.json --checkpoint-every 1
+	$(CARGO) run --release -- cluster --resume $(CURDIR)/cluster_ckpt.json \
+	  --transport tcp --check
+	rm -f $(CURDIR)/cluster_ckpt.json
 
 # SimFabric smoke (seconds): a tiny sim-sweep (two K × r points on both
-# graph models plus the K=8 failure replay) emitting the same
-# Fig-5-style JSON the full-scale sweep produces, gated by a json.tool
-# round-trip; then the PR-8 acceptance check — two same-seed `simulate`
-# runs at K=512 must emit byte-identical JSON.
+# graph models plus the K=8 failure-policy replay at f=1 and the f=2
+# adopter cascade) emitting the same Fig-5-style JSON the full-scale
+# sweep produces, gated by a json.tool round-trip; then the PR-8
+# acceptance check — two same-seed `simulate` runs at K=512 must emit
+# byte-identical JSON, under both straggler distributions (the lognormal
+# pair also exercises the PR-9 `--straggler-dist` path).
 sim-smoke:
 	$(CARGO) run --release -- sim-sweep --ks 8,16 --rs 2 --n-min 256 --n-max 256 \
 	  --trials 2 --fail-k 8 --json $(CURDIR)/BENCH_sim_sweep.json
@@ -90,6 +109,11 @@ sim-smoke:
 	  --straggler-prob 0.25 --json $(CURDIR)/sim_replay_a.json
 	$(CARGO) run --release -- simulate --graph er --n 1024 --k 512 --r 3 --iters 2 \
 	  --straggler-prob 0.25 --json $(CURDIR)/sim_replay_b.json
+	cmp $(CURDIR)/sim_replay_a.json $(CURDIR)/sim_replay_b.json
+	$(CARGO) run --release -- simulate --graph er --n 1024 --k 512 --r 3 --iters 2 \
+	  --straggler-prob 0.25 --straggler-dist lognormal --json $(CURDIR)/sim_replay_a.json
+	$(CARGO) run --release -- simulate --graph er --n 1024 --k 512 --r 3 --iters 2 \
+	  --straggler-prob 0.25 --straggler-dist lognormal --json $(CURDIR)/sim_replay_b.json
 	cmp $(CURDIR)/sim_replay_a.json $(CURDIR)/sim_replay_b.json
 	rm -f $(CURDIR)/sim_replay_a.json $(CURDIR)/sim_replay_b.json
 

@@ -24,7 +24,9 @@
 //! (per-frame writes vs one buffered flush per destination); and
 //! finally the `recovery` section: degraded-mode cost at (K=10, r=3) —
 //! recovery latency, re-planned groups, and wire-byte inflation as the
-//! in-process cluster survives 0, 1, and 2 injected worker deaths.
+//! in-process cluster survives 0, 1, and 2 injected worker deaths, plus
+//! the PR 9 records: the adopter-kill cascade (two chained recovery
+//! epochs) and the checkpoint write / parse / warm-resume costs.
 //!
 //! ```sh
 //! cargo bench --bench shuffle_micro                   # full configuration
@@ -38,8 +40,9 @@
 
 use coded_graph::allocation::Allocation;
 use coded_graph::coordinator::{
-    prepare, prepare_worker, run_iteration_scratch, try_run_cluster_on, Backend, EngineConfig,
-    EngineScratch, FailWorker, Job, Scheme,
+    prepare, prepare_worker, run_iteration_scratch, try_run_cluster_on, try_run_cluster_on_with,
+    AllocKind, Backend, Checkpoint, EngineConfig, EngineScratch, FailWorker, GraphKind, GraphSpec,
+    Job, JobSpec, ProgramSpec, RunOpts, Scheme,
 };
 use coded_graph::graph::er::er;
 use coded_graph::mapreduce::{PageRank, VertexProgram};
@@ -462,6 +465,14 @@ fn observer_overhead(smoke: bool, report: &mut BenchJson) {
 /// re-plan latency, re-planned groups/transfers, straggler skips, and
 /// the wire-byte inflation over the no-failure model. The failure-free
 /// row doubles as the regression pin: its inflation must be exactly 0.
+///
+/// PR 9 adds two kinds of record on top: `recovery_cascade` (the second
+/// kill lands on the adopter elected after the first, so the two-epoch
+/// re-adoption chain is what's being timed — diff against the plain
+/// `failures=1` row for the cascade's marginal cost) and
+/// `checkpoint_resume` (serialize/parse cost of the committed-state
+/// checkpoint file plus the wall time of a warm-started resume run that
+/// must land bit-identical to the uninterrupted job).
 fn recovery(smoke: bool, report: &mut BenchJson) {
     let (n, p) = if smoke { (600usize, 0.06f64) } else { (2000, 0.05) };
     let (k, r) = (10usize, 3usize);
@@ -518,9 +529,128 @@ fn recovery(smoke: bool, report: &mut BenchJson) {
             format!("{:.1}", wall_s * 1e3),
         ]);
     }
+    // the cascade row: worker 3 dies at iteration 1, and the second kill
+    // lands on worker 0 — the lowest survivor, i.e. exactly the adopter
+    // the leader elected at epoch 1 — forcing the two-epoch re-adoption
+    let mut cfg = EngineConfig { scheme: Scheme::Coded, ..Default::default() };
+    cfg.fail_workers[0] = Some(FailWorker { worker: 3, at_iter: 1 });
+    cfg.fail_workers[1] = Some(FailWorker { worker: 0, at_iter: 2 });
+    let t0 = std::time::Instant::now();
+    let rep = try_run_cluster_on(&job, &cfg, iters, TransportKind::InProc)
+        .expect("an adopter kill cascades, it does not abort");
+    let wall_s = t0.elapsed().as_secs_f64();
+    assert_eq!(rep.recovery.failures, 2, "both deaths recovered across two epochs");
+    let modeled: usize = rep.iterations.iter().map(|m| m.shuffle.wire_bytes_with_headers()).sum();
+    let extra_bytes = rep.recovery.load_inflation * modeled as f64;
+    report.record(
+        "recovery_cascade",
+        &[
+            ("n", num(n as f64)),
+            ("p", num(p)),
+            ("k", num(k as f64)),
+            ("r", num(r as f64)),
+            ("iters", num(iters as f64)),
+            ("failures", num(2.0)),
+            ("recovered_groups", num(rep.recovery.recovered_groups as f64)),
+            ("recovery_ms", num(rep.recovery.recovery_ms)),
+            ("load_inflation", num(rep.recovery.load_inflation)),
+            ("extra_bytes", num(extra_bytes)),
+            ("skipped_frames", num(rep.recovery.skipped_frames as f64)),
+            ("wall_s", num(wall_s)),
+        ],
+    );
+    t.row(&[
+        "2 (adopter)".into(),
+        rep.recovery.recovered_groups.to_string(),
+        format!("{:.3}", rep.recovery.recovery_ms),
+        format!("{:.4}", rep.recovery.load_inflation),
+        format!("{:.1}", extra_bytes / 1024.0),
+        format!("{:.1}", wall_s * 1e3),
+    ]);
     t.print();
     println!("\nfailures are injected at iteration 1 (worker 3) and 2 (worker 7); the");
-    println!("final state stays bit-identical to the no-failure run (tests/fault_matrix.rs).\n");
+    println!("cascade row re-kills the elected adopter (worker 0) instead; the final");
+    println!("state stays bit-identical to the no-failure run (tests/fault_matrix.rs).\n");
+
+    checkpoint_resume(smoke, report, &job, n, p, k, r, iters);
+}
+
+/// Checkpoint write/read cost plus the wall time of a resume run
+/// warm-started from the mid-job committed state (PR 9). The resume must
+/// finish on exactly the bits the uninterrupted run produced.
+#[allow(clippy::too_many_arguments)]
+fn checkpoint_resume(
+    smoke: bool,
+    report: &mut BenchJson,
+    job: &Job<'_>,
+    n: usize,
+    p: f64,
+    k: usize,
+    r: usize,
+    iters: usize,
+) {
+    let cfg = EngineConfig { scheme: Scheme::Coded, ..Default::default() };
+    let clean = try_run_cluster_on(job, &cfg, iters, TransportKind::InProc).expect("clean run");
+    let committed = iters / 2;
+    let half =
+        try_run_cluster_on(job, &cfg, committed, TransportKind::InProc).expect("half run");
+    let spec = JobSpec {
+        graph: GraphSpec { kind: GraphKind::Er { p }, n, seed: 4242 },
+        alloc: AllocKind::Er,
+        k,
+        r,
+        program: ProgramSpec::PageRank,
+        scheme: Scheme::Coded,
+        iters,
+    };
+    let ck = Checkpoint { spec, iter: committed, epoch: 0, state: half.final_state };
+    let path = std::env::temp_dir().join("coded-graph-bench-ckpt.json");
+    let bench = if smoke { Bench::new(1, 3) } else { Bench::new(2, 6) };
+    let m_write = bench.run(|| ck.write(&path).expect("checkpoint write"));
+    let file_bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+    let m_read = bench.run(|| Checkpoint::read(&path).expect("checkpoint read"));
+    std::fs::remove_file(&path).ok();
+
+    let opts = RunOpts { warm: Some(ck.state.clone()), ..Default::default() };
+    let t0 = std::time::Instant::now();
+    let resumed =
+        try_run_cluster_on_with(job, &cfg, iters - committed, TransportKind::InProc, &opts)
+            .expect("resume run");
+    let resume_wall_s = t0.elapsed().as_secs_f64();
+    assert!(
+        clean
+            .final_state
+            .iter()
+            .zip(&resumed.final_state)
+            .all(|(a, b)| a.to_bits() == b.to_bits()),
+        "resume must land bit-identical to the uninterrupted run"
+    );
+
+    println!("# Checkpoint/resume: ER(n={n}, p={p}), K={k}, r={r}, committed iter {committed}\n");
+    println!(
+        "checkpoint write: {:.3} ms   read: {:.3} ms   file {:.1} KiB   resume ({} iters): {:.1} ms",
+        m_write.mean_ms(),
+        m_read.mean_ms(),
+        file_bytes as f64 / 1024.0,
+        iters - committed,
+        resume_wall_s * 1e3,
+    );
+    println!("(resume warm-start is bit-identical to the uninterrupted run — asserted here)\n");
+    report.record(
+        "checkpoint_resume",
+        &[
+            ("n", num(n as f64)),
+            ("p", num(p)),
+            ("k", num(k as f64)),
+            ("r", num(r as f64)),
+            ("iters", num(iters as f64)),
+            ("committed_iter", num(committed as f64)),
+            ("write_mean_s", num(m_write.mean_s)),
+            ("read_mean_s", num(m_read.mean_s)),
+            ("file_bytes", num(file_bytes as f64)),
+            ("resume_wall_s", num(resume_wall_s)),
+        ],
+    );
 }
 
 /// The TCP batched wire path: the same frame stream sent with one

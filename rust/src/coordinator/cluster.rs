@@ -61,11 +61,15 @@
 //!    a hung worker surfaces as a timeout — indistinguishable from dead
 //!    past the cutoff.
 //! 2. **Re-plan** — the leader admits the loss, bumps the recovery
-//!    *epoch*, and broadcasts [`FrameKind::Recover`] to the survivors:
-//!    the dead id, the new epoch, and (to the *adopter* — the lowest
-//!    surviving id) the dead worker's entitled state slice off the
-//!    leader's committed copy. `recovered_groups`, `recovery_ms` and
-//!    `load_inflation` land in [`RecoveryStats`].
+//!    *epoch*, picks the *adopter* under the active
+//!    [`RecoveryPolicy`](super::config::RecoveryPolicy) (lowest
+//!    survivor, or the least statically loaded one), and broadcasts
+//!    [`FrameKind::Recover`] to the survivors: the dead id, the new
+//!    epoch, the adopter id in the frame's `target` field (workers
+//!    *follow* the choice; the policy is leader-side state), and — to
+//!    the adopter only — the entitled state slices of **every** dead
+//!    worker so far off the leader's committed copy. `recovered_groups`,
+//!    `recovery_ms` and `load_inflation` land in [`RecoveryStats`].
 //! 3. **Adoption** — every survivor extends its [`WorkerCore`] via
 //!    `adopt`: degraded groups (any dead member) stop multicasting and
 //!    instead ship each needed row raw ([`FrameKind::RecoverRow`]) from
@@ -82,10 +86,42 @@
 //!    adoption. The finished job is **bit-identical** to the no-failure
 //!    run: same IVs, same canonical fold order, different senders.
 //!
-//! Failures beyond `r − 1` — or losing the adopter, the sole holder of
-//! previously adopted state — abort the job with a typed
-//! [`ClusterError`] (surfaced by [`try_run_cluster_on`]) instead of a
-//! hang: the leader releases every survivor with an `Abort` frame first.
+//! Recovery *cascades*: losing the adopter itself is just another
+//! failure. The next epoch re-runs the policy over the remaining
+//! survivors, the whole ghost set migrates onto the new adopter (which
+//! rebuilds the ghost cores from the donor-duty shards it already held
+//! and warm-loads their state from the Recover frame's union slice),
+//! and the chain continues until *cumulative distinct* failures exceed
+//! `r − 1`. Both policies are monotone over static loads — a live
+//! worker never loses its ghosts; the adopter only ever changes when
+//! the previous one died — which keeps adopted state single-homed.
+//!
+//! Failures beyond `r − 1` abort the job with a typed [`ClusterError`]
+//! (surfaced by [`try_run_cluster_on`]) instead of a hang: the leader
+//! releases every survivor with an `Abort` frame first. With
+//! checkpointing enabled ([`CheckpointCfg`]) the abort is *resumable*:
+//! the leader serializes the committed state (a [`Checkpoint`] of the
+//! job spec, iteration, epoch, and bit-exact states) periodically and
+//! once more at the abort, and the error carries the file's path — the
+//! CLI's `cluster --resume` rebuilds a fresh mesh and warm-starts the
+//! remaining iterations, bit-identical to an uninterrupted run because
+//! every iteration is a pure function of the committed state.
+//!
+//! ## Wire integrity
+//!
+//! Every frame carries a CRC-32 of its payload (see
+//! [`frame`](crate::transport::frame)); a flipped bit in flight
+//! surfaces as a typed [`FrameError::Checksum`](crate::transport::frame::FrameError)
+//! at parse, never as silent state divergence. Workers treat a corrupt
+//! frame as fatal for their endpoint (in-process that becomes a
+//! `PeerDown` and recovery takes over); the leader is more patient —
+//! it drops the frame and charges the sender a *strike*, and a peer
+//! reaching three strikes is released with a targeted `Abort` and
+//! declared dead, so persistent corruption degrades into the same
+//! recovery path as a crash. The seeded
+//! [`ChaosNet`](crate::transport::ChaosNet) wrapper replays kill,
+//! delay, and bit-flip schedules deterministically against this
+//! machinery.
 //!
 //! ## Straggler cutoff
 //!
@@ -152,9 +188,11 @@
 //! worker:  data sends + SendDone → decode/reduce + Reduced →
 //!          apply update → next iteration
 //!
-//! on failure (PeerDown / deadline at the leader):
-//! leader:  Recover* (dead id, epoch+1, state slice to the adopter) →
-//!          restart the iteration's barriers under the new epoch
+//! on failure (PeerDown / deadline / 3 checksum strikes at the leader):
+//! leader:  Recover* (dead id, epoch+1, adopter in `target`, union
+//!          state slice to the adopter) → restart the iteration's
+//!          barriers under the new epoch; repeats per failure, epochs
+//!          chaining 1, 2, … while distinct losses stay ≤ r − 1
 //! worker:  adopt → replay the iteration; donors ship RecoverRow /
 //!          RecoverPairs; the adopter answers for its ghosts
 //! ```
@@ -171,6 +209,7 @@
 //! connections carry the epoch on every frame.
 
 use std::cell::Cell;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 use crate::graph::csr::Vertex;
@@ -179,13 +218,14 @@ use crate::WorkerId;
 use crate::obs::{measured_phase_times, now_ns, Phase, TraceSpan};
 use crate::shuffle::load::{ShuffleLoad, HEADER_BYTES};
 use crate::shuffle::segments::seg_bytes;
-use crate::transport::frame::{self, Frame, FrameKind};
+use crate::transport::frame::{self, Frame, FrameError, FrameKind};
 use crate::transport::{InProcNet, RecvOutcome, TcpNet, Transport, TransportKind};
 
-use super::config::{EngineConfig, Scheme};
+use super::config::{EngineConfig, RecoveryPolicy, Scheme};
 use super::engine::{prepare, prepare_worker, Job, PreparedJob, PreparedWorker};
 use super::exec::{stage_dead_sender_transfers, TransportFabric, WorkerCore};
 use super::metrics::{IterationMetrics, JobReport, PhaseTimes, RecoveryStats};
+use super::spec::{Checkpoint, JobSpec};
 
 /// Run a job on the cluster over the in-process transport. Semantics
 /// identical to [`super::engine::run_rust`] (bit-identical final state
@@ -202,40 +242,73 @@ pub fn run_cluster_on(
     iters: usize,
     kind: TransportKind,
 ) -> JobReport {
+    run_cluster_on_with(job, cfg, iters, kind, &RunOpts::default())
+}
+
+/// [`run_cluster_on`] with run options (warm start + checkpointing) —
+/// the `cluster --resume` / `--checkpoint` entry point.
+pub fn run_cluster_on_with(
+    job: &Job<'_>,
+    cfg: &EngineConfig,
+    iters: usize,
+    kind: TransportKind,
+    opts: &RunOpts,
+) -> JobReport {
     let prep = prepare(job, cfg.scheme);
-    let caps = ring_capacities(&prep, job.alloc.k);
+    let caps = mesh_ring_capacities(&prep, job.alloc.k);
     match kind {
-        TransportKind::InProc => drive(job, cfg, iters, &prep, &InProcNet::new(&caps)),
+        TransportKind::InProc => drive(job, cfg, iters, &prep, &InProcNet::new(&caps), opts),
         TransportKind::Tcp => {
             let net = TcpNet::new(&caps).expect("tcp transport: localhost mesh setup");
-            drive(job, cfg, iters, &prep, &net)
+            drive(job, cfg, iters, &prep, &net, opts)
         }
     }
+}
+
+/// Drive a whole in-process mesh over a *caller-supplied* transport —
+/// the seam the chaos harness uses to wrap the real backend in a
+/// [`ChaosNet`](crate::transport::ChaosNet). The transport must expose
+/// `K + 1` endpoints sized by [`mesh_ring_capacities`] (workers `0..K`,
+/// leader `K`).
+pub fn run_cluster_net(
+    job: &Job<'_>,
+    cfg: &EngineConfig,
+    iters: usize,
+    net: &dyn Transport,
+    opts: &RunOpts,
+) -> JobReport {
+    let prep = prepare(job, cfg.scheme);
+    drive(job, cfg, iters, &prep, net, opts)
 }
 
 /// Typed, recoverable cluster failures: the degraded-mode protocol had
 /// to abandon the job. Raised as a panic payload by the leader (after
 /// releasing every survivor with an `Abort` frame) and caught back into
 /// a `Result` by [`try_run_cluster_on`].
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum ClusterError {
-    /// More worker losses than the redundancy-`r` plan's `r − 1` slack.
-    ToleranceExceeded { failures: usize, r: usize },
-    /// The adopter died — it held the only copy of previously adopted
-    /// state, so the loss cannot be re-planned again.
-    AdopterLost { worker: WorkerId },
+    /// More *distinct* worker losses than the redundancy-`r` plan's
+    /// `r − 1` slack — adopter cascades included, the hard wall.
+    /// When the leader was checkpointing, `checkpoint` names the file
+    /// holding the committed state at the abort: the job is resumable
+    /// from there (`cluster --resume`), losing only the interrupted
+    /// iteration.
+    ToleranceExceeded { failures: usize, r: usize, checkpoint: Option<PathBuf> },
 }
 
 impl std::fmt::Display for ClusterError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            ClusterError::ToleranceExceeded { failures, r } => write!(
-                f,
-                "{failures} worker failures exceed the redundancy-{r} plan's tolerance of {}",
-                r.saturating_sub(1)
-            ),
-            ClusterError::AdopterLost { worker } => {
-                write!(f, "adopter worker {worker} died holding previously adopted state")
+            ClusterError::ToleranceExceeded { failures, r, checkpoint } => {
+                write!(
+                    f,
+                    "{failures} worker failures exceed the redundancy-{r} plan's tolerance of {}",
+                    r.saturating_sub(1)
+                )?;
+                if let Some(p) = checkpoint {
+                    write!(f, " (committed state checkpointed to {}; resumable)", p.display())?;
+                }
+                Ok(())
             }
         }
     }
@@ -252,9 +325,33 @@ pub fn try_run_cluster_on(
     iters: usize,
     kind: TransportKind,
 ) -> Result<JobReport, ClusterError> {
-    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        run_cluster_on(job, cfg, iters, kind)
-    })) {
+    catch_cluster(|| run_cluster_on(job, cfg, iters, kind))
+}
+
+/// [`run_cluster_on_with`] with typed failure handling.
+pub fn try_run_cluster_on_with(
+    job: &Job<'_>,
+    cfg: &EngineConfig,
+    iters: usize,
+    kind: TransportKind,
+    opts: &RunOpts,
+) -> Result<JobReport, ClusterError> {
+    catch_cluster(|| run_cluster_on_with(job, cfg, iters, kind, opts))
+}
+
+/// [`run_cluster_net`] with typed failure handling.
+pub fn try_run_cluster_net(
+    job: &Job<'_>,
+    cfg: &EngineConfig,
+    iters: usize,
+    net: &dyn Transport,
+    opts: &RunOpts,
+) -> Result<JobReport, ClusterError> {
+    catch_cluster(|| run_cluster_net(job, cfg, iters, net, opts))
+}
+
+fn catch_cluster(f: impl FnOnce() -> JobReport) -> Result<JobReport, ClusterError> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
         Ok(report) => Ok(report),
         Err(payload) => match payload.downcast::<ClusterError>() {
             Ok(err) => Err(*err),
@@ -281,15 +378,45 @@ pub fn leader_ring_capacity(k: usize) -> usize {
     4 * k + 16
 }
 
-/// Ring bounds for a whole in-process mesh, leader last.
-fn ring_capacities(prep: &PreparedJob, k: usize) -> Vec<usize> {
+/// Ring bounds for a whole in-process mesh, leader last — public so the
+/// chaos/test harnesses can size an [`InProcNet`] (or a wrapper around
+/// one) exactly as the built-in drivers do.
+pub fn mesh_ring_capacities(prep: &PreparedJob, k: usize) -> Vec<usize> {
     let mut caps: Vec<usize> = (0..k).map(|kk| worker_ring_capacity(prep, kk)).collect();
     caps.push(leader_ring_capacity(k));
     caps
 }
 
+/// Leader-side run options: checkpoint/resume plumbing shared by every
+/// entry point that can be interrupted and warm-started.
+#[derive(Clone, Debug, Default)]
+pub struct RunOpts {
+    /// Committed state to warm-start from (a checkpoint's `state`):
+    /// seeds the leader's authoritative copy and every worker's entitled
+    /// slice in place of `program.init`. `None` is a cold start.
+    pub warm: Option<Vec<f64>>,
+    /// Periodic checkpointing of the committed state.
+    pub checkpoint: Option<CheckpointCfg>,
+}
+
+/// Where and how often the leader checkpoints committed state.
+#[derive(Clone, Debug)]
+pub struct CheckpointCfg {
+    /// Checkpoint file (atomically replaced: tmp + rename).
+    pub path: PathBuf,
+    /// Write every `every` committed iterations (≥ 1); an abort past
+    /// tolerance always writes a final checkpoint regardless.
+    pub every: usize,
+    /// The job spec embedded in every checkpoint so `--resume` can
+    /// rebuild the mesh without the original command line.
+    pub spec: JobSpec,
+    /// Iterations already committed before this run (a resumed run's
+    /// offset); checkpoint files carry absolute iteration numbers.
+    pub base_iter: usize,
+}
+
 /// Per-worker runtime options for the cluster drivers.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct WorkerOpts {
     /// Fault injection: die abnormally (peers observe `PeerDown`) at the
     /// top of this 0-based iteration; the process still exits cleanly.
@@ -304,11 +431,14 @@ pub struct WorkerOpts {
     /// empty when tracing is off — so the leader's collection never
     /// depends on the workers' setting.
     pub trace: bool,
+    /// Committed state to warm-start the worker's entitled slice from
+    /// (checkpoint resume); `None` initializes via `program.init`.
+    pub warm: Option<Vec<f64>>,
 }
 
 impl Default for WorkerOpts {
     fn default() -> Self {
-        WorkerOpts { fail_at: None, phase_deadline: None, trace: true }
+        WorkerOpts { fail_at: None, phase_deadline: None, trace: true, warm: None }
     }
 }
 
@@ -354,6 +484,7 @@ fn drive(
     iters: usize,
     prep: &PreparedJob,
     net: &dyn Transport,
+    opts: &RunOpts,
 ) -> JobReport {
     let k = job.alloc.k;
     let scheme = cfg.scheme;
@@ -366,15 +497,20 @@ fn drive(
                 .flatten()
                 .find(|fw| fw.worker == kk)
                 .map(|fw| fw.at_iter);
-            let opts = WorkerOpts { fail_at, phase_deadline: deadline, trace: cfg.trace };
+            let wopts = WorkerOpts {
+                fail_at,
+                phase_deadline: deadline,
+                trace: cfg.trace,
+                warm: opts.warm.clone(),
+            };
             scope.spawn(move || {
                 // each worker thread builds only its own shard — the same
                 // code path a worker *process* runs from the job spec
                 let shard = prepare_worker(job, scheme, kk);
-                run_worker_with(kk, job, shard, net, opts)
+                run_worker_with(kk, job, shard, net, wopts)
             });
         }
-        run_leader(job, cfg, iters, prep, net)
+        run_leader_with(job, cfg, iters, prep, net, opts)
     })
 }
 
@@ -414,15 +550,24 @@ pub fn run_worker_with(
     // the canonical phase machine plus this worker's entitled state:
     // only Mapped and Reduced vertices (plus any adopted ghost's) are
     // ever valid; everything else stays NaN poison so an illegal read
-    // surfaces in tests instead of folding silently
+    // surfaces in tests instead of folding silently. A checkpoint
+    // resume warm-starts the slice from the committed states instead —
+    // iterations are pure functions of committed state, so the resumed
+    // run stays bit-identical to an uninterrupted one.
     let mut core = WorkerCore::new(job, prep);
     core.set_trace(opts.trace);
     let mut state = vec![f64::NAN; g.n()];
-    for j in alloc.mapped_vertices(me) {
-        state[j as usize] = prog.init(j, g);
-    }
-    for &i in &alloc.reduce_sets[me as usize] {
-        state[i as usize] = prog.init(i, g);
+    {
+        let seed = |v: Vertex| match &opts.warm {
+            Some(w) => w[v as usize],
+            None => prog.init(v, g),
+        };
+        for j in alloc.mapped_vertices(me) {
+            state[j as usize] = seed(j);
+        }
+        for &i in &alloc.reduce_sets[me as usize] {
+            state[i as usize] = seed(i);
+        }
     }
 
     let mut fab = TransportFabric::new(net, me, leader);
@@ -775,11 +920,17 @@ fn route_data(
 }
 
 /// Apply one leader `Recover` frame: admit the dead worker, advance the
-/// epoch, rebuild the route, extend every hosted core for degraded mode,
-/// take on the dead worker's shard (as live ghost cores if this endpoint
-/// is the adopter, as a donor-duty shard otherwise), and replay stashed
-/// future-epoch frames that now match. The caller restarts the iteration
-/// attempt afterwards.
+/// epoch, follow the leader's adopter choice (the frame's `target`
+/// field), rebuild the route, extend every hosted core for degraded
+/// mode, take on the dead worker's shard (as live ghost cores if this
+/// endpoint is the adopter, as a donor-duty shard otherwise), and
+/// replay stashed future-epoch frames that now match. Chains across
+/// epochs: when the previous adopter is the one that died, the endpoint
+/// the leader promotes converts every donor-duty shard it holds into a
+/// live ghost core and warm-loads the whole dead set's state from the
+/// frame's union slice — adoption stays a pure function of `dead`, so
+/// any number of re-adoptions replay identically. The caller restarts
+/// the iteration attempt afterwards.
 #[allow(clippy::too_many_arguments)]
 fn adopt_recovery(
     f: &Frame<'_>,
@@ -796,38 +947,50 @@ fn adopt_recovery(
     pending: &mut Vec<Vec<u8>>,
     fab: &mut TransportFabric<'_>,
 ) {
-    let alloc = job.alloc;
     let w = f.index as WorkerId;
     assert!(f.epoch > *epoch, "worker {me}: Recover must advance the epoch");
     *epoch = f.epoch;
     dead.push(w);
     dead.sort_unstable();
-    // the dead worker's entitled state rides the frame (non-empty only
-    // toward the adopter, which becomes its sole holder)
+    // every dead worker's entitled state rides the frame (non-empty only
+    // toward the adopter, which becomes the set's sole worker-side
+    // holder — a freshly promoted adopter needs the older slices too)
     for c in 0..f.count as usize {
         let (v, bits) = f.update_pair(c);
         state[v as usize] = f64::from_bits(bits);
     }
-    let adopter =
-        (0..alloc.k as WorkerId).find(|x| !dead.contains(x)).expect("recovery: no survivors");
+    // the leader's policy choice rides the frame; workers follow it
+    let adopter = f.target;
+    assert!(!dead.contains(&adopter), "worker {me}: Recover names a dead adopter");
     for (x, hop) in route.iter_mut().enumerate() {
         *hop = if dead.contains(&(x as WorkerId)) { adopter } else { x as WorkerId };
     }
-    core.adopt(job, dead, *epoch);
+    core.adopt_with(job, dead, *epoch, adopter);
     core.reset_ingest();
     fab.set_epoch(*epoch);
     if me == adopter {
         let tracing = core.spans_enabled();
+        // shards held for donor duty become live ghosts: this endpoint
+        // either was already the adopter (empty `ghost_preps`) or was
+        // just promoted because the old adopter died — in which case it
+        // inherits that adopter's whole ghost set, state warm-loaded
+        // from the union slice above
+        for gp in ghost_preps.drain(..) {
+            ghosts.push(WorkerCore::new(job, gp));
+        }
         ghosts.push(WorkerCore::new(job, prepare_worker(job, scheme, w)));
         ghosts.sort_by_key(|gc| gc.me());
         for gc in ghosts.iter_mut() {
             // ghost spans carry the dead worker's logical id and the
             // recovery epoch — the timeline shows where its work moved
             gc.set_trace(tracing);
-            gc.adopt(job, dead, *epoch);
+            gc.adopt_with(job, dead, *epoch, adopter);
             gc.reset_ingest();
         }
     } else {
+        // both policies are monotone: a live adopter is never demoted,
+        // so an endpoint with ghosts can only ever see itself chosen
+        assert!(ghosts.is_empty(), "worker {me}: a live adopter lost its ghosts");
         ghost_preps.push(prepare_worker(job, scheme, w));
     }
     // frames from this epoch that overtook the Recover on peer connections
@@ -850,36 +1013,63 @@ pub fn run_leader(
     prep: &PreparedJob,
     net: &dyn Transport,
 ) -> JobReport {
+    run_leader_with(job, cfg, iters, prep, net, &RunOpts::default())
+}
+
+/// [`run_leader`] with explicit [`RunOpts`]: warm-start state for
+/// `--resume` and a [`CheckpointCfg`] for periodic + abort-time
+/// checkpoints. The plain entry point delegates here with defaults.
+pub fn run_leader_with(
+    job: &Job<'_>,
+    cfg: &EngineConfig,
+    iters: usize,
+    prep: &PreparedJob,
+    net: &dyn Transport,
+    opts: &RunOpts,
+) -> JobReport {
     let leader = job.alloc.k as WorkerId;
     let guard = LeaderGuard { net, me: leader, typed_abort: Cell::new(false) };
-    leader_loop(job, cfg, iters, prep, net, leader, &guard)
+    leader_loop(job, cfg, iters, prep, net, leader, &guard, opts)
 }
 
 /// The leader's failure bookkeeping: the admitted dead set, the current
-/// recovery epoch, and the job-level [`RecoveryStats`].
+/// recovery epoch, the policy-chosen adopter, and the job-level
+/// [`RecoveryStats`].
 #[derive(Default)]
 struct FaultState {
     dead: Vec<WorkerId>,
     epoch: u8,
+    /// The survivor hosting every ghost, recomputed by [`recover`] under
+    /// the active [`RecoveryPolicy`] at each epoch. Meaningful only once
+    /// `dead` is non-empty (stays at the default `0` before that).
+    adopter: WorkerId,
     stats: RecoveryStats,
 }
 
 impl FaultState {
-    fn adopter(&self, k: usize) -> WorkerId {
-        (0..k as WorkerId).find(|x| !self.dead.contains(x)).expect("recovery: no survivors")
-    }
-
     fn live(&self, k: usize) -> usize {
         k - self.dead.len()
     }
 }
 
+/// Checksum strikes before the leader declares a corrupting peer dead:
+/// one flipped bit in flight is survivable noise (the frame is dropped
+/// and its sender re-declared by the barrier logic), but a peer that
+/// keeps producing corrupt frames is indistinguishable from a failing
+/// NIC — recovery replaces it.
+const CORRUPTION_STRIKES: usize = 3;
+
 /// Declare worker `w` dead: tolerance checks, epoch bump, recovered-work
-/// tally, and the `Recover` broadcast — the dead worker's entitled state
-/// (its Mapped ∪ Reduce vertices off the leader's committed copy) to the
-/// adopter, slim frames to everyone else. A loss beyond the plan's
-/// tolerance (or of the adopter itself) releases the survivors with
-/// `Abort` frames and panics with the typed [`ClusterError`].
+/// tally, policy re-election of the adopter, and the `Recover` broadcast
+/// — the *union* of every dead worker's entitled state (Mapped ∪ Reduce
+/// vertices off the leader's committed copy) to the adopter, slim frames
+/// to everyone else. Losing the adopter is just another failure: the
+/// next epoch's election cascades the whole ghost set onto the new
+/// choice. Only a loss beyond the plan's tolerance (`> r − 1` distinct
+/// workers) aborts — the survivors are released with `Abort` frames, the
+/// committed state is checkpointed when a [`CheckpointCfg`] is present,
+/// and the leader panics with the typed, resumable [`ClusterError`].
+#[allow(clippy::too_many_arguments)]
 fn recover(
     w: WorkerId,
     st: &mut FaultState,
@@ -890,6 +1080,9 @@ fn recover(
     final_state: &[f64],
     sendbuf: &mut Vec<u8>,
     guard: &LeaderGuard<'_>,
+    policy: RecoveryPolicy,
+    committed: usize,
+    ckpt: Option<&CheckpointCfg>,
 ) {
     if st.dead.contains(&w) {
         return; // duplicate death marker (already re-planned)
@@ -897,7 +1090,6 @@ fn recover(
     let t0 = Instant::now();
     let alloc = job.alloc;
     let k = alloc.k;
-    let was_adopter = !st.dead.is_empty() && st.adopter(k) == w;
     // count the newly degraded work *before* admitting w: groups and
     // transfers already touching an earlier dead worker were recovered
     // by that failure's re-plan
@@ -919,12 +1111,22 @@ fn recover(
     st.dead.push(w);
     st.dead.sort_unstable();
     st.stats.failures += 1;
-    if st.dead.len() > alloc.r.saturating_sub(1) || was_adopter {
-        let err = if was_adopter {
-            ClusterError::AdopterLost { worker: w }
-        } else {
-            ClusterError::ToleranceExceeded { failures: st.dead.len(), r: alloc.r }
-        };
+    if st.dead.len() > alloc.r.saturating_sub(1) {
+        // the committed state is still valid at abort time: persist it
+        // so the failure is resumable even if no periodic checkpoint
+        // ever fired, and point the typed error at the file
+        let checkpoint = ckpt.map(|c| {
+            Checkpoint {
+                spec: c.spec,
+                iter: c.base_iter + committed,
+                epoch: st.epoch,
+                state: final_state.to_vec(),
+            }
+            .write(&c.path)
+            .expect("recovery: cannot write the abort checkpoint");
+            c.path.clone()
+        });
+        let err = ClusterError::ToleranceExceeded { failures: st.dead.len(), r: alloc.r, checkpoint };
         for kk in 0..k as WorkerId {
             if st.dead.contains(&kk) {
                 continue;
@@ -937,20 +1139,36 @@ fn recover(
     }
     st.epoch += 1;
     st.stats.recovered_groups += fresh;
-    // the dead worker's entitled state slice, ascending and deduped
-    let mut verts: Vec<Vertex> = alloc.mapped_vertices(w).collect();
-    verts.extend(alloc.reduce_sets[w as usize].iter().copied());
+    // re-run the policy over the survivors: both policies are monotone
+    // under the plan's static loads, so the choice only moves when the
+    // previous adopter is the one that died — the cascade case
+    st.adopter = match policy {
+        RecoveryPolicy::LowestSurvivor => {
+            (0..k as WorkerId).find(|x| !st.dead.contains(x)).expect("recovery: no survivors")
+        }
+        RecoveryPolicy::LoadSpread => (0..k as WorkerId)
+            .filter(|x| !st.dead.contains(x))
+            .min_by_key(|&x| prep.mapped_edges[x as usize] + prep.reduce_edges[x as usize])
+            .expect("recovery: no survivors"),
+    };
+    // the union of every dead worker's entitled slices, ascending and
+    // deduped: a freshly promoted adopter never held the earlier
+    // victims' state, so each Recover re-seeds the whole dead set
+    let mut verts: Vec<Vertex> = Vec::new();
+    for &d in &st.dead {
+        verts.extend(alloc.mapped_vertices(d));
+        verts.extend(alloc.reduce_sets[d as usize].iter().copied());
+    }
     verts.sort_unstable();
     verts.dedup();
     let pairs: Vec<(u32, u64)> =
         verts.iter().map(|&v| (v, final_state[v as usize].to_bits())).collect();
-    let adopter = st.adopter(k);
     for kk in 0..k as WorkerId {
         if st.dead.contains(&kk) {
             continue;
         }
-        let p: &[(u32, u64)] = if kk == adopter { &pairs } else { &[] };
-        frame::encode_recover(sendbuf, leader, w, st.epoch, p);
+        let p: &[(u32, u64)] = if kk == st.adopter { &pairs } else { &[] };
+        frame::encode_recover(sendbuf, leader, w, st.epoch, st.adopter, p);
         net.send_unicast(leader, kk, sendbuf);
     }
     st.stats.recovery_ms += t0.elapsed().as_secs_f64() * 1e3;
@@ -968,6 +1186,7 @@ fn leader_loop(
     net: &dyn Transport,
     leader: WorkerId,
     guard: &LeaderGuard<'_>,
+    opts: &RunOpts,
 ) -> JobReport {
     let (g, alloc) = (job.graph, job.alloc);
     let k = alloc.k;
@@ -976,16 +1195,25 @@ fn leader_loop(
     let plan = &prep.plan;
     let deadline = cfg.phase_deadline_ms.map(Duration::from_millis);
     let mut report = JobReport::default();
-    // the committed state, seeded with the init values: recovery ships a
-    // dead worker's entitled slice of this mid-job, so it must be
-    // authoritative from iteration zero, not only after a write-back
-    let mut final_state: Vec<f64> =
-        (0..g.n() as Vertex).map(|v| job.program.init(v, g)).collect();
+    // the committed state, seeded with the init values (or a resumed
+    // checkpoint's committed state): recovery ships dead workers'
+    // entitled slices of this mid-job, so it must be authoritative from
+    // iteration zero, not only after a write-back
+    let mut final_state: Vec<f64> = match &opts.warm {
+        Some(warm) => {
+            assert_eq!(warm.len(), g.n(), "warm state length must match the graph");
+            warm.clone()
+        }
+        None => (0..g.n() as Vertex).map(|v| job.program.init(v, g)).collect(),
+    };
     let mut sendbuf: Vec<u8> = Vec::new();
     let mut rbuf: Vec<u8> = Vec::new();
     let mut fresh_bits: Vec<Vec<u64>> = vec![Vec::new(); k];
     let mut stats_mark = net.data_stats();
     let mut st = FaultState::default();
+    // per-sender CRC strike tallies: a peer whose frames keep failing
+    // their payload checksum is treated as dead at the third strike
+    let mut strikes = vec![0usize; k];
     // actual wire bytes across every attempt (stale tallies included)
     // vs the committed iterations' modeled bytes: the load_inflation meter
     let mut actual_bytes = 0usize;
@@ -1035,21 +1263,55 @@ fn leader_loop(
                 match net.recv_deadline(leader, &mut rbuf, deadline) {
                     RecvOutcome::Frame => {}
                     RecvOutcome::PeerDown(w) => {
-                        recover(w, &mut st, job, prep, net, leader, &final_state, &mut sendbuf, guard);
+                        recover(
+                            w, &mut st, job, prep, net, leader, &final_state, &mut sendbuf,
+                            guard, cfg.policy, it, opts.checkpoint.as_ref(),
+                        );
                         continue 'attempt;
                     }
                     RecvOutcome::TimedOut => {
                         // a hung worker is indistinguishable from a dead
-                        // one past the cutoff: declare the lowest laggard
+                        // one past the cutoff: declare the lowest laggard.
+                        // Release it with a targeted Abort first — a
+                        // live-but-stalled zombie would otherwise hang
+                        // the mesh teardown, while a genuinely dead
+                        // endpoint's ring just drops the frame
                         let w = (0..k as WorkerId)
                             .find(|&x| !st.dead.contains(&x) && !send_done[x as usize])
                             .expect("send timeout with every barrier met");
-                        recover(w, &mut st, job, prep, net, leader, &final_state, &mut sendbuf, guard);
+                        frame::encode_control(&mut sendbuf, FrameKind::Abort, leader);
+                        net.send_unicast(leader, w, &sendbuf);
+                        recover(
+                            w, &mut st, job, prep, net, leader, &final_state, &mut sendbuf,
+                            guard, cfg.policy, it, opts.checkpoint.as_ref(),
+                        );
                         continue 'attempt;
                     }
                     RecvOutcome::Closed => panic!("leader: transport closed mid-run"),
                 }
-                let f = Frame::parse(&rbuf).expect("leader: bad frame");
+                let f = match Frame::parse(&rbuf) {
+                    Ok(f) => f,
+                    Err(FrameError::Checksum { sender }) => {
+                        // corrupt in flight: drop the frame, charge the
+                        // (header-attributed) sender a strike, and at
+                        // the threshold treat it like a death — Abort
+                        // releases it if it is still alive
+                        strikes[sender as usize] += 1;
+                        if strikes[sender as usize] >= CORRUPTION_STRIKES
+                            && !st.dead.contains(&sender)
+                        {
+                            frame::encode_control(&mut sendbuf, FrameKind::Abort, leader);
+                            net.send_unicast(leader, sender, &sendbuf);
+                            recover(
+                                sender, &mut st, job, prep, net, leader, &final_state,
+                                &mut sendbuf, guard, cfg.policy, it, opts.checkpoint.as_ref(),
+                            );
+                            continue 'attempt;
+                        }
+                        continue;
+                    }
+                    Err(e) => panic!("leader: bad frame: {e}"),
+                };
                 match f.kind {
                     FrameKind::SendDone => {
                         // each worker's own per-iteration tally (frames in
@@ -1160,22 +1422,50 @@ fn leader_loop(
                 match net.recv_deadline(leader, &mut rbuf, deadline) {
                     RecvOutcome::Frame => {}
                     RecvOutcome::PeerDown(w) => {
-                        recover(w, &mut st, job, prep, net, leader, &final_state, &mut sendbuf, guard);
+                        recover(
+                            w, &mut st, job, prep, net, leader, &final_state, &mut sendbuf,
+                            guard, cfg.policy, it, opts.checkpoint.as_ref(),
+                        );
                         continue 'attempt;
                     }
                     RecvOutcome::TimedOut => {
                         // a survivor still owes its own Reduced ⇒ it
                         // hangs; every survivor reported but ghosts are
-                        // missing ⇒ the adopter hangs
+                        // missing ⇒ the adopter hangs. Same targeted
+                        // Abort as the send barrier: release a live
+                        // zombie before re-planning around it
                         let w = (0..k as WorkerId)
                             .find(|&x| !st.dead.contains(&x) && !got_red[x as usize])
-                            .unwrap_or_else(|| st.adopter(k));
-                        recover(w, &mut st, job, prep, net, leader, &final_state, &mut sendbuf, guard);
+                            .unwrap_or(st.adopter);
+                        frame::encode_control(&mut sendbuf, FrameKind::Abort, leader);
+                        net.send_unicast(leader, w, &sendbuf);
+                        recover(
+                            w, &mut st, job, prep, net, leader, &final_state, &mut sendbuf,
+                            guard, cfg.policy, it, opts.checkpoint.as_ref(),
+                        );
                         continue 'attempt;
                     }
                     RecvOutcome::Closed => panic!("leader: transport closed mid-run"),
                 }
-                let f = Frame::parse(&rbuf).expect("leader: bad frame");
+                let f = match Frame::parse(&rbuf) {
+                    Ok(f) => f,
+                    Err(FrameError::Checksum { sender }) => {
+                        strikes[sender as usize] += 1;
+                        if strikes[sender as usize] >= CORRUPTION_STRIKES
+                            && !st.dead.contains(&sender)
+                        {
+                            frame::encode_control(&mut sendbuf, FrameKind::Abort, leader);
+                            net.send_unicast(leader, sender, &sendbuf);
+                            recover(
+                                sender, &mut st, job, prep, net, leader, &final_state,
+                                &mut sendbuf, guard, cfg.policy, it, opts.checkpoint.as_ref(),
+                            );
+                            continue 'attempt;
+                        }
+                        continue;
+                    }
+                    Err(e) => panic!("leader: bad frame: {e}"),
+                };
                 match f.kind {
                     FrameKind::Reduced => {
                         if f.epoch != st.epoch {
@@ -1229,7 +1519,7 @@ fn leader_loop(
                 }
             }
             let last = it + 1 == iters;
-            let adopter = st.adopter(k);
+            let adopter = st.adopter;
             for (kk, pairs) in outgoing.iter().enumerate() {
                 let kk = kk as WorkerId;
                 // a dead worker's write-back goes to its adopter, tagged
@@ -1266,6 +1556,21 @@ fn leader_loop(
                 // bit-level validation is the oracle tests' job)
                 validated_ivs: if cfg.validate && prep.scheme.is_coded() { validated } else { 0 },
             });
+            // the iteration is committed: persist the checkpoint cadence
+            // (`iter` is absolute — `base_iter` carries the offset when
+            // this run itself started from a resume)
+            if let Some(c) = &opts.checkpoint {
+                if c.every > 0 && (it + 1) % c.every == 0 {
+                    Checkpoint {
+                        spec: c.spec,
+                        iter: c.base_iter + it + 1,
+                        epoch: st.epoch,
+                        state: final_state.clone(),
+                    }
+                    .write(&c.path)
+                    .expect("cluster: cannot write the periodic checkpoint");
+                }
+            }
             break 'attempt;
         }
     }
@@ -1309,7 +1614,12 @@ fn collect_stats(
             RecvOutcome::PeerDown(_) => continue,
             RecvOutcome::TimedOut | RecvOutcome::Closed => break,
         }
-        let f = Frame::parse(rbuf).expect("leader: bad frame");
+        // permissive: a trailing corrupt frame must not fail a finished
+        // job — a missing Stats frame only truncates the timeline
+        let f = match Frame::parse(rbuf) {
+            Ok(f) => f,
+            Err(_) => continue,
+        };
         match f.kind {
             FrameKind::Stats => {
                 let core = f.target as usize;
@@ -1356,6 +1666,7 @@ mod tests {
 
     use super::super::config::FailWorker;
     use super::super::engine::run_rust;
+    use super::super::spec::{AllocKind, GraphKind, GraphSpec, ProgramSpec};
 
     fn cfg(scheme: Scheme) -> EngineConfig {
         EngineConfig { scheme, ..Default::default() }
@@ -1451,9 +1762,9 @@ mod tests {
         let job = Job { graph: &g, alloc: &alloc, program: &prog };
         let iters = 3usize;
         let prep = prepare(&job, Scheme::Coded);
-        let caps = ring_capacities(&prep, k);
+        let caps = mesh_ring_capacities(&prep, k);
         let net = TcpNet::new(&caps).expect("tcp transport: localhost mesh setup");
-        let report = drive(&job, &cfg(Scheme::Coded), iters, &prep, &net);
+        let report = drive(&job, &cfg(Scheme::Coded), iters, &prep, &net, &RunOpts::default());
         assert_eq!(report.iterations.len(), iters);
         let stats = net.data_stats();
         assert!(stats.data_frames > 0, "need real coded traffic");
@@ -1551,7 +1862,143 @@ mod tests {
         ];
         let err = try_run_cluster_on(&job, &c, 4, TransportKind::InProc)
             .expect_err("two losses must exceed r-1 = 1");
-        assert_eq!(err, ClusterError::ToleranceExceeded { failures: 2, r: 2 });
+        assert_eq!(
+            err,
+            ClusterError::ToleranceExceeded { failures: 2, r: 2, checkpoint: None }
+        );
+    }
+
+    #[test]
+    fn adopter_loss_cascades_and_stays_bit_identical() {
+        // r = 3 tolerates two losses: kill worker 1, then kill worker 0
+        // — the epoch-1 adopter under the default lowest-survivor policy
+        // — and the whole ghost set must cascade onto worker 2 with the
+        // final state still bit-identical to the engine oracle
+        let g = er(120, 0.12, &mut DetRng::seed(77));
+        let alloc = Allocation::er_scheme(120, 4, 3);
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let mut c = cfg(Scheme::Coded);
+        c.fail_workers = [
+            Some(FailWorker { worker: 1, at_iter: 1 }),
+            Some(FailWorker { worker: 0, at_iter: 2 }),
+        ];
+        let report = run_cluster(&job, &c, 3);
+        let want = run_rust(&job, &cfg(Scheme::Coded), 3);
+        for (a, b) in report.final_state.iter().zip(&want.final_state) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(report.recovery.failures, 2, "both deaths recovered, neither aborted");
+        assert!(report.recovery.recovered_groups > 0);
+    }
+
+    #[test]
+    fn load_spread_policy_is_bit_identical_to_lowest() {
+        // the policy only moves *where* recovered work lands, never its
+        // values: both adopter choices end bit-identical to each other
+        let g = er(120, 0.12, &mut DetRng::seed(78));
+        let alloc = Allocation::er_scheme(120, 4, 2);
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let mut c = cfg(Scheme::Coded);
+        c.fail_workers[0] = Some(FailWorker { worker: 2, at_iter: 1 });
+        let lowest = run_cluster(&job, &c, 3);
+        c.policy = RecoveryPolicy::LoadSpread;
+        let spread = run_cluster(&job, &c, 3);
+        for (a, b) in lowest.final_state.iter().zip(&spread.final_state) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(lowest.recovery.failures, spread.recovery.failures);
+    }
+
+    #[test]
+    fn checkpoint_resume_round_trip_is_bit_identical() {
+        // run 1: 4 iterations straight through. Run 2: 2 iterations with
+        // a checkpoint, then a fresh mesh warm-started off the file for
+        // the remaining 2. Same bits either way.
+        let g = er(100, 0.15, &mut DetRng::seed(79));
+        let alloc = Allocation::er_scheme(100, 4, 2);
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let spec = JobSpec {
+            graph: GraphSpec { kind: GraphKind::Er { p: 0.15 }, n: 100, seed: 79 },
+            alloc: AllocKind::Er,
+            k: 4,
+            r: 2,
+            program: ProgramSpec::PageRank,
+            scheme: Scheme::Coded,
+            iters: 4,
+        };
+        let path = std::env::temp_dir().join("coded-graph-unit-ckpt.json");
+        let full = run_cluster(&job, &cfg(Scheme::Coded), 4);
+        let opts = RunOpts {
+            warm: None,
+            checkpoint: Some(CheckpointCfg { path: path.clone(), every: 2, spec, base_iter: 0 }),
+        };
+        run_cluster_on_with(&job, &cfg(Scheme::Coded), 2, TransportKind::InProc, &opts);
+        let ck = Checkpoint::read(&path).expect("checkpoint must parse back");
+        assert_eq!((ck.iter, ck.epoch), (2, 0));
+        let resumed = run_cluster_on_with(
+            &job,
+            &cfg(Scheme::Coded),
+            2,
+            TransportKind::InProc,
+            &RunOpts { warm: Some(ck.state), checkpoint: None },
+        );
+        for (a, b) in full.final_state.iter().zip(&resumed.final_state) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn abort_past_tolerance_writes_a_resumable_checkpoint() {
+        // the second loss exceeds r - 1 = 1: the typed error must carry
+        // the checkpoint path and the file must hold the state committed
+        // before the fatal iteration, good enough to resume bit-identical
+        let g = er(100, 0.15, &mut DetRng::seed(80));
+        let alloc = Allocation::er_scheme(100, 5, 2);
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let spec = JobSpec {
+            graph: GraphSpec { kind: GraphKind::Er { p: 0.15 }, n: 100, seed: 80 },
+            alloc: AllocKind::Er,
+            k: 5,
+            r: 2,
+            program: ProgramSpec::PageRank,
+            scheme: Scheme::Coded,
+            iters: 4,
+        };
+        let path = std::env::temp_dir().join("coded-graph-unit-abort-ckpt.json");
+        let mut c = cfg(Scheme::Coded);
+        c.fail_workers = [
+            Some(FailWorker { worker: 3, at_iter: 1 }),
+            Some(FailWorker { worker: 4, at_iter: 2 }),
+        ];
+        let opts = RunOpts {
+            warm: None,
+            checkpoint: Some(CheckpointCfg { path: path.clone(), every: 0, spec, base_iter: 0 }),
+        };
+        let err = try_run_cluster_on_with(&job, &c, 4, TransportKind::InProc, &opts)
+            .expect_err("two losses must exceed r-1 = 1");
+        assert_eq!(
+            err,
+            ClusterError::ToleranceExceeded { failures: 2, r: 2, checkpoint: Some(path.clone()) }
+        );
+        let ck = Checkpoint::read(&path).expect("abort checkpoint must parse back");
+        assert_eq!(ck.iter, 2, "both iterations before the fatal one were committed");
+        let resumed = run_cluster_on_with(
+            &job,
+            &cfg(Scheme::Coded),
+            spec.iters - ck.iter,
+            TransportKind::InProc,
+            &RunOpts { warm: Some(ck.state), checkpoint: None },
+        );
+        let want = run_rust(&job, &cfg(Scheme::Coded), 4);
+        for (a, b) in resumed.final_state.iter().zip(&want.final_state) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

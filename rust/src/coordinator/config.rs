@@ -129,6 +129,54 @@ impl TimeModel {
     }
 }
 
+/// How the leader picks the *adopter* — the survivor that hosts the
+/// ghost cores of every dead worker — at each recovery epoch. When the
+/// current adopter itself dies, the next epoch's choice re-runs the same
+/// policy over the remaining survivors and the whole ghost set cascades
+/// onto it. Shared by the cluster driver (`--policy` on `cluster`) and
+/// the sim fabric (`--policy` on `simulate`); both policies finish
+/// bit-identical to the clean run — the policy only moves *where* the
+/// recovered work lands, never its values.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RecoveryPolicy {
+    /// Lowest surviving worker id (the PR 6 behavior): deterministic and
+    /// cheap, but piles every ghost onto one end of the id space.
+    #[default]
+    LowestSurvivor,
+    /// Survivor with the smallest static load (mapped + reduce edges),
+    /// ties broken by id: spreads adopted work toward the lightest
+    /// worker the plan produced.
+    LoadSpread,
+}
+
+impl RecoveryPolicy {
+    /// The stable CLI token.
+    pub fn token(&self) -> &'static str {
+        match self {
+            RecoveryPolicy::LowestSurvivor => "lowest",
+            RecoveryPolicy::LoadSpread => "spread",
+        }
+    }
+}
+
+impl std::str::FromStr for RecoveryPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "lowest" => Ok(RecoveryPolicy::LowestSurvivor),
+            "spread" => Ok(RecoveryPolicy::LoadSpread),
+            other => Err(format!("unknown recovery policy {other:?} (expected lowest|spread)")),
+        }
+    }
+}
+
+impl std::fmt::Display for RecoveryPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.token())
+    }
+}
+
 /// Fault injection: kill one worker at the top of one iteration
 /// (`--fail-worker ID@ITER`). The worker tears its endpoint down
 /// abnormally — peers observe a typed `PeerDown` — and exits cleanly, so
@@ -183,6 +231,10 @@ pub struct EngineConfig {
     /// Fault injection for the cluster drivers: up to two workers that
     /// die at the top of a given iteration. Ignored by the engine.
     pub fail_workers: [Option<FailWorker>; 2],
+    /// Adopter choice at each recovery epoch (cluster drivers and the
+    /// sim fabric). Leader-side state: workers follow the adopter id the
+    /// `Recover` frame carries instead of recomputing the policy.
+    pub policy: RecoveryPolicy,
     /// Per-phase receive deadline in milliseconds for the cluster
     /// drivers. The leader treats a worker producing nothing for this
     /// long as dead; workers use it as the straggler cutoff (proceed to
@@ -207,6 +259,7 @@ impl Default for EngineConfig {
             validate: false,
             parallel: true,
             fail_workers: [None, None],
+            policy: RecoveryPolicy::default(),
             phase_deadline_ms: None,
             trace: true,
         }

@@ -396,12 +396,21 @@ impl WorkerCore {
     /// delivers one raw [`FrameKind::RecoverRow`] instead of `r` coded
     /// frames; a dead-sender transfer delivers one
     /// [`FrameKind::RecoverPairs`] per surviving donor), derive the
-    /// adoption route (dead workers' frames go to the lowest survivor),
-    /// and size the raw-row scratch. Callable repeatedly — everything
-    /// here is a pure function of `dead`. The caller restarts the
-    /// iteration afterwards ([`WorkerCore::reset_ingest`]): state only
-    /// mutates at write-back, so a partially ingested iteration is
-    /// safely re-entrant.
+    /// adoption route (dead workers' frames go to the adopter), and
+    /// size the raw-row scratch. Callable repeatedly — everything
+    /// here is a pure function of `dead`, which is what makes cascading
+    /// re-adoption safe: any epoch's call produces the same plan no
+    /// matter how many earlier adoptions it replaces. The caller
+    /// restarts the iteration afterwards ([`WorkerCore::reset_ingest`]):
+    /// state only mutates at write-back, so a partially ingested
+    /// iteration is safely re-entrant.
+    ///
+    /// This convenience form defaults the adopter to the lowest
+    /// survivor ([`RecoveryPolicy::LowestSurvivor`] semantics); the
+    /// cluster and sim drivers call [`WorkerCore::adopt_with`] with the
+    /// leader's policy choice instead.
+    ///
+    /// [`RecoveryPolicy::LowestSurvivor`]: super::config::RecoveryPolicy::LowestSurvivor
     pub fn adopt(&mut self, job: &Job<'_>, dead: &[WorkerId], epoch: u8) {
         let adopter = (0..job.alloc.k as WorkerId)
             .find(|w| !dead.contains(w))
@@ -412,9 +421,11 @@ impl WorkerCore {
     /// [`WorkerCore::adopt`] with an explicit ghost-placement choice:
     /// every dead worker's frames reroute to `adopter` instead of the
     /// default lowest survivor. All cores of a job must be given the
-    /// same adopter — the route is part of the shared recovery plan.
-    /// Used by the sim fabric to compare placement policies
-    /// (lowest-survivor vs load-spread) at large `K`.
+    /// same adopter — the route is part of the shared recovery plan,
+    /// which is why the cluster's `Recover` frame carries the leader's
+    /// choice in its `target` field for workers to follow. Used by the
+    /// cluster driver's cascade path and by the sim fabric to compare
+    /// placement policies (lowest-survivor vs load-spread) at large `K`.
     pub fn adopt_with(&mut self, job: &Job<'_>, dead: &[WorkerId], epoch: u8, adopter: WorkerId) {
         let alloc = job.alloc;
         assert!(!dead.contains(&adopter), "recovery: adopter is dead");

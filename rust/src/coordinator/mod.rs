@@ -20,8 +20,11 @@
 //!   rings, a localhost TCP mesh, or one process-separated TCP endpoint
 //!   per OS process): one core per worker over a [`TransportFabric`],
 //!   results bit-identical to the engine. Includes the degraded-mode
-//!   recovery protocol (PR 6): survive up to `r − 1` worker losses by
-//!   re-planning onto surviving replicas, with straggler deadlines.
+//!   recovery protocol (PR 6, cascading since PR 9): survive up to
+//!   `r − 1` worker losses — adopters included — by re-planning onto
+//!   surviving replicas across a chain of recovery epochs, with
+//!   straggler deadlines, periodic checkpoints, and typed resumable
+//!   aborts past tolerance.
 //! * [`sim`] — the deterministic virtual-time fabric (PR 8): `K` worker
 //!   cores over a frame-stepped virtual clock with per-link
 //!   latency/bandwidth, seeded stragglers, and failure replay at `K` in
@@ -40,12 +43,13 @@ pub mod sim;
 pub mod spec;
 
 pub use cluster::{
-    run_cluster, run_cluster_on, run_leader, run_worker, run_worker_with, try_run_cluster_on,
-    ClusterError, WorkerOpts,
+    mesh_ring_capacities, run_cluster, run_cluster_net, run_cluster_on, run_cluster_on_with,
+    run_leader, run_leader_with, run_worker, run_worker_with, try_run_cluster_net,
+    try_run_cluster_on, try_run_cluster_on_with, CheckpointCfg, ClusterError, RunOpts, WorkerOpts,
 };
 pub use config::{EngineConfig, FailWorker, Scheme, TimeModel};
 pub use exec::{DirectFabric, Fabric, TransportFabric, WorkerCore};
-pub use spec::{AllocKind, BuiltJob, GraphKind, GraphSpec, JobSpec, ProgramSpec};
+pub use spec::{AllocKind, BuiltJob, Checkpoint, GraphKind, GraphSpec, JobSpec, ProgramSpec};
 pub use engine::{
     measure_loads, measure_loads_prepared, prepare, prepare_worker, run, run_iteration_scratch,
     run_rust, Backend, EngineScratch, Job, PreparedJob, PreparedWorker, XlaKind,
@@ -53,4 +57,5 @@ pub use engine::{
 pub use metrics::{IterationMetrics, JobReport, PhaseTimes, RecoveryStats};
 pub use sim::{
     clean_iteration_load, run_sim, RecoveryPolicy, SimConfig, SimIterRecord, SimReport,
+    StragglerDist,
 };

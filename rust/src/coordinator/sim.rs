@@ -44,45 +44,54 @@ use super::engine::{prepare, prepare_worker, Job, PreparedJob, PreparedWorker};
 use super::exec::{stage_dead_sender_transfers, Fabric, WorkerCore};
 use super::metrics::RecoveryStats;
 
-/// Where a dead worker's ghost core (and all frames addressed to it) go.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum RecoveryPolicy {
-    /// The cluster driver's default: ghosts stack on the lowest
-    /// surviving worker id.
-    LowestSurvivor,
-    /// Ghosts land on the survivor with the least modeled compute work
-    /// (mapped + reduced edges) — spreading the extra decode/fold load
-    /// away from already-busy workers.
-    LoadSpread,
+// The ghost-placement policy moved to `config` when the cluster driver
+// grew the same knob (`--policy` works on `cluster` and `simulate`
+// alike); re-exported here so sim-facing callers keep their import path.
+pub use super::config::RecoveryPolicy;
+
+/// The straggler *service-time* model: how much slower a straggling
+/// worker's compute phases run this iteration.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum StragglerDist {
+    /// With probability [`SimConfig::straggler_prob`] a worker's phases
+    /// stretch by exactly [`SimConfig::straggler_slowdown`]; otherwise
+    /// they run at speed 1. The paper's two-point model.
+    #[default]
+    Bernoulli,
+    /// Every worker draws a lognormal multiplier
+    /// `exp(sigma * N(0,1)).max(1)` with
+    /// `sigma = ln(straggler_slowdown.max(1))`, so the configured
+    /// slowdown becomes the one-sigma stretch instead of a hard mode —
+    /// the heavy-tailed service times measured on real clusters.
+    /// `straggler_prob` is ignored; the tail is always on.
+    Lognormal,
 }
 
-impl RecoveryPolicy {
-    /// Stable CLI token (parses back via [`std::str::FromStr`]).
+impl StragglerDist {
+    /// The stable CLI token.
     pub fn token(&self) -> &'static str {
         match self {
-            RecoveryPolicy::LowestSurvivor => "lowest",
-            RecoveryPolicy::LoadSpread => "spread",
+            StragglerDist::Bernoulli => "bernoulli",
+            StragglerDist::Lognormal => "lognormal",
         }
     }
 }
 
-impl std::str::FromStr for RecoveryPolicy {
+impl std::str::FromStr for StragglerDist {
     type Err = String;
 
     fn from_str(s: &str) -> Result<Self, Self::Err> {
-        Ok(match s {
-            "lowest" | "lowest-survivor" => RecoveryPolicy::LowestSurvivor,
-            "spread" | "load-spread" => RecoveryPolicy::LoadSpread,
-            other => {
-                return Err(format!(
-                    "unknown recovery policy {other:?} (expected lowest|spread)"
-                ))
-            }
-        })
+        match s {
+            "bernoulli" => Ok(StragglerDist::Bernoulli),
+            "lognormal" => Ok(StragglerDist::Lognormal),
+            other => Err(format!(
+                "unknown straggler distribution {other:?} (expected bernoulli|lognormal)"
+            )),
+        }
     }
 }
 
-impl std::fmt::Display for RecoveryPolicy {
+impl std::fmt::Display for StragglerDist {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.write_str(self.token())
     }
@@ -100,10 +109,15 @@ pub struct SimConfig {
     pub latency_ns: u64,
     /// Per-NIC serialization bandwidth, bits per second.
     pub bandwidth_bps: f64,
-    /// Per-(worker, iteration) probability of straggling.
+    /// Per-(worker, iteration) probability of straggling (the
+    /// [`StragglerDist::Bernoulli`] model; ignored by `Lognormal`).
     pub straggler_prob: f64,
     /// Compute-time multiplier applied to a straggling worker (>= 1).
+    /// Under [`StragglerDist::Lognormal`] this sets the one-sigma
+    /// stretch: `sigma = ln(straggler_slowdown)`.
     pub straggler_slowdown: f64,
+    /// Shape of the straggler service-time draw.
+    pub straggler_dist: StragglerDist,
     /// Per-operation compute-time model.
     pub time: TimeModel,
     /// Up to two workers that die at the top of a given iteration
@@ -121,6 +135,7 @@ impl Default for SimConfig {
             bandwidth_bps: 100e6,
             straggler_prob: 0.0,
             straggler_slowdown: 4.0,
+            straggler_dist: StragglerDist::Bernoulli,
             time: TimeModel::python_speed(),
             fail_workers: [None, None],
             policy: RecoveryPolicy::LowestSurvivor,
@@ -475,10 +490,21 @@ pub fn run_sim(job: &Job<'_>, scheme: Scheme, iters: usize, cfg: &SimConfig) -> 
         let mut wire_bytes = 0u64;
         for w in 0..k {
             let Some(core) = cores[w].as_mut() else { continue };
-            let s = if wrng[w].bernoulli(cfg.straggler_prob) {
-                cfg.straggler_slowdown
-            } else {
-                1.0
+            let s = match cfg.straggler_dist {
+                StragglerDist::Bernoulli => {
+                    if wrng[w].bernoulli(cfg.straggler_prob) {
+                        cfg.straggler_slowdown
+                    } else {
+                        1.0
+                    }
+                }
+                StragglerDist::Lognormal => {
+                    // sigma = ln(slowdown): the configured slowdown is the
+                    // one-sigma stretch; clamp at 1 — stragglers are only
+                    // ever slow, matching the Bernoulli model's floor
+                    let sigma = cfg.straggler_slowdown.max(1.0).ln();
+                    (sigma * wrng[w].normal()).exp().max(1.0)
+                }
             };
             straggle[w] = s;
             let enc_ns = ns(
@@ -782,6 +808,43 @@ mod tests {
         assert_eq!(failed.iterations[0].epoch, 0);
         assert_eq!(failed.iterations[1].epoch, 1);
         assert_eq!(failed.iterations[2].epoch, 2);
+    }
+
+    #[test]
+    fn lognormal_stragglers_are_deterministic_and_result_neutral() {
+        let g = er(160, 0.1, &mut DetRng::seed(66));
+        let alloc = Allocation::cyclic_scheme(160, 8, 2);
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let cfg = SimConfig {
+            seed: 19,
+            straggler_dist: StragglerDist::Lognormal,
+            straggler_slowdown: 6.0,
+            ..Default::default()
+        };
+        let a = run_sim(&job, Scheme::Coded, 3, &cfg);
+        let b = run_sim(&job, Scheme::Coded, 3, &cfg);
+        assert_eq!(a.iterations, b.iterations, "same seed must replay the same tail");
+        assert_eq!(a.state_digest(), b.state_digest());
+        // service-time noise moves the clock, never the values
+        let calm = run_sim(&job, Scheme::Coded, 3, &SimConfig::default());
+        for (x, y) in a.final_state.iter().zip(&calm.final_state) {
+            assert_eq!(x.to_bits(), y.to_bits(), "lognormal tail changed results");
+        }
+        // a heavy tail over 8 workers x 3 iterations all but surely
+        // stretches at least one phase (P[all 24 draws <= 0] = 2^-24)
+        assert!(
+            a.total_ns > calm.total_ns,
+            "lognormal multipliers should stretch the virtual makespan"
+        );
+    }
+
+    #[test]
+    fn straggler_dist_tokens_roundtrip() {
+        for d in [StragglerDist::Bernoulli, StragglerDist::Lognormal] {
+            assert_eq!(d.token().parse::<StragglerDist>().unwrap(), d);
+        }
+        assert!("pareto".parse::<StragglerDist>().is_err());
     }
 
     #[test]

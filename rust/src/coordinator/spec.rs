@@ -29,10 +29,13 @@
 //! Floats round-trip exactly (Rust's `Display` for `f64` prints the
 //! shortest string that parses back to the same bits).
 
+use std::path::Path;
+
 use crate::allocation::Allocation;
 use crate::graph::csr::Csr;
 use crate::graph::{bipartite, er, powerlaw, sbm};
 use crate::mapreduce::{ConnectedComponents, PageRank, Sssp, VertexProgram};
+use crate::util::json::Json;
 use crate::util::rng::DetRng;
 
 use super::config::Scheme;
@@ -257,6 +260,116 @@ impl JobSpec {
     }
 }
 
+/// A committed-state snapshot the cluster leader can resume from: the
+/// job recipe, how many iterations were fully committed (write-back
+/// applied at the leader), the recovery epoch at capture time
+/// (provenance only — a resumed run rebuilds a fresh full-`K` mesh at
+/// epoch 0), and the committed state vector.
+///
+/// The on-disk form is a single versioned JSON object. State values are
+/// stored as 16-hex-digit strings of their [`f64::to_bits`] — JSON
+/// numbers are doubles and cannot round-trip arbitrary bit patterns
+/// (NaN payloads, signed zeros) textually, but the bits themselves can:
+///
+/// ```text
+/// {"epoch":0,"iter":2,"spec":"v1 graph=er n=600 ...","state":["3fe0c49ba5e353f8",...],"version":1}
+/// ```
+///
+/// [`Checkpoint::write`] goes through a `.tmp` sibling plus an atomic
+/// rename, so a crash mid-write can never destroy the previous good
+/// checkpoint at the same path.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    /// The job this state belongs to (`iters` is the *total* target,
+    /// so a resume runs `spec.iters - iter` more).
+    pub spec: JobSpec,
+    /// Absolute number of committed iterations the state reflects.
+    pub iter: usize,
+    /// Recovery epoch when the snapshot was taken (provenance).
+    pub epoch: u8,
+    /// The committed state vector, one value per vertex.
+    pub state: Vec<f64>,
+}
+
+impl Checkpoint {
+    /// On-disk format version this build writes and accepts.
+    pub const VERSION: usize = 1;
+
+    /// The JSON document form (see the struct docs for the layout).
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("version", Json::Num(Self::VERSION as f64)),
+            ("spec", Json::Str(self.spec.encode_line())),
+            ("iter", Json::Num(self.iter as f64)),
+            ("epoch", Json::Num(self.epoch as f64)),
+            (
+                "state",
+                Json::Arr(
+                    self.state.iter().map(|v| Json::Str(format!("{:016x}", v.to_bits()))).collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse the JSON document form, rejecting unknown versions and any
+    /// structural mismatch with a descriptive error.
+    pub fn from_json(j: &Json) -> Result<Checkpoint, String> {
+        let version = j
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or("checkpoint: missing version field")?;
+        if version != Self::VERSION {
+            return Err(format!(
+                "unsupported checkpoint version {version} (this build reads version {})",
+                Self::VERSION
+            ));
+        }
+        let spec_line =
+            j.get("spec").and_then(Json::as_str).ok_or("checkpoint: missing spec field")?;
+        let spec = JobSpec::decode_line(spec_line)?;
+        let iter =
+            j.get("iter").and_then(Json::as_usize).ok_or("checkpoint: missing iter field")?;
+        let epoch =
+            j.get("epoch").and_then(Json::as_usize).ok_or("checkpoint: missing epoch field")?;
+        if epoch > u8::MAX as usize {
+            return Err(format!("checkpoint: epoch {epoch} out of range"));
+        }
+        let arr =
+            j.get("state").and_then(Json::as_arr).ok_or("checkpoint: missing state array")?;
+        if arr.len() != spec.graph.n {
+            return Err(format!(
+                "checkpoint: state holds {} values but the spec's graph has {} vertices",
+                arr.len(),
+                spec.graph.n
+            ));
+        }
+        let mut state = Vec::with_capacity(arr.len());
+        for (i, v) in arr.iter().enumerate() {
+            let s = v.as_str().ok_or_else(|| format!("checkpoint: state[{i}] is not a string"))?;
+            let bits = u64::from_str_radix(s, 16)
+                .map_err(|_| format!("checkpoint: state[{i}]={s:?} is not a hex bit pattern"))?;
+            state.push(f64::from_bits(bits));
+        }
+        Ok(Checkpoint { spec, iter, epoch: epoch as u8, state })
+    }
+
+    /// Serialize to `path` atomically: write a `.tmp` sibling, then
+    /// rename over the destination.
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, format!("{}\n", self.to_json()))?;
+        std::fs::rename(&tmp, path)
+    }
+
+    /// Read and parse a checkpoint file.
+    pub fn read(path: &Path) -> Result<Checkpoint, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("checkpoint {}: {e}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| format!("checkpoint {}: {e}", path.display()))?;
+        Self::from_json(&j)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -370,6 +483,56 @@ mod tests {
         assert_eq!(a.send_plan(), b.send_plan());
         assert_eq!(a.recv_groups(), b.recv_groups());
         assert_eq!(a.transfer_ids, b.transfer_ids);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_is_bit_exact() {
+        // the hex-bit encoding must survive values plain JSON numbers
+        // cannot: NaN (with payload), infinities, signed zero, subnormals
+        let mut spec = specs()[0];
+        spec.graph.n = 8;
+        let state = vec![
+            0.15,
+            -0.0,
+            f64::NAN,
+            f64::from_bits(0x7ff8_0000_0000_babe), // NaN payload
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::MIN_POSITIVE / 2.0, // subnormal
+            1.0 / 3.0,
+        ];
+        let ck = Checkpoint { spec, iter: 3, epoch: 1, state };
+        let path = std::env::temp_dir().join("coded-graph-spec-ckpt.json");
+        ck.write(&path).unwrap();
+        let back = Checkpoint::read(&path).unwrap();
+        assert_eq!((back.spec, back.iter, back.epoch), (ck.spec, ck.iter, ck.epoch));
+        for (a, b) in back.state.iter().zip(&ck.state) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn checkpoint_rejects_bad_documents() {
+        let mut spec = specs()[0];
+        spec.graph.n = 1;
+        let good = Checkpoint { spec, iter: 1, epoch: 0, state: vec![1.0] }.to_json().to_string();
+        assert!(Checkpoint::from_json(&Json::parse(&good).unwrap()).is_ok());
+        // wrong version
+        let bad = good.replace("\"version\":1", "\"version\":9");
+        assert!(Checkpoint::from_json(&Json::parse(&bad).unwrap())
+            .unwrap_err()
+            .contains("version 9"));
+        // state length disagrees with the spec's graph
+        let bad = good.replace("n=1", "n=2");
+        assert!(Checkpoint::from_json(&Json::parse(&bad).unwrap())
+            .unwrap_err()
+            .contains("vertices"));
+        // non-hex state entry
+        let bad = good.replace("3ff0000000000000", "zz");
+        assert!(Checkpoint::from_json(&Json::parse(&bad).unwrap()).is_err());
+        // not json at all
+        assert!(Json::parse("{nope").is_err());
     }
 
     #[test]

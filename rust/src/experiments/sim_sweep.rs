@@ -17,9 +17,12 @@
 //!
 //! The policy section replays PR 6's failure injection on the
 //! virtual-time fabric at `K` far beyond what the TCP driver reaches,
-//! comparing ghost placement policies ([`RecoveryPolicy`]): both must
-//! recover bit-identical results; the JSON records what each costs in
-//! virtual makespan and wire-load inflation.
+//! comparing ghost placement policies ([`RecoveryPolicy`]) at every
+//! tolerated failure count `f ∈ {1..r−1}` — the two-failure schedules
+//! kill the first failure's adopter, exercising the cascading
+//! re-adoption path. Every row must recover bit-identical results; the
+//! JSON records what each costs in virtual makespan and wire-load
+//! inflation.
 
 use crate::allocation::Allocation;
 use crate::analysis::stats::{summarize, Summary};
@@ -133,6 +136,10 @@ pub struct PolicyRow {
     pub k: usize,
     pub r: usize,
     pub n: usize,
+    /// Distinct workers killed in this replay (`1..=r-1`); at two or
+    /// more the second kill lands on the first failure's adopter, so
+    /// the row exercises the cascading re-adoption path.
+    pub failures: usize,
     /// Virtual time of the clean (no-failure) reference run.
     pub clean_total_ns: u64,
     /// Virtual time with the injected failure under this policy.
@@ -232,11 +239,20 @@ pub fn run(params: &SimSweepParams) -> SimSweepReport {
     SimSweepReport { rows, policies: run_policies(params) }
 }
 
-/// Replay one injected failure at `fail_k` under every recovery policy,
-/// against a clean reference run on the same job.
+/// Replay `f ∈ {1..r-1}` injected failures at `fail_k` under every
+/// recovery policy, against a clean reference run on the same job. The
+/// second kill of each two-failure schedule lands on worker 0 at the
+/// iteration after the first — under `lowest` that is the freshly
+/// elected adopter, so the sweep covers the cascade path, not just the
+/// single-epoch one.
 pub fn run_policies(params: &SimSweepParams) -> Vec<PolicyRow> {
     let (k, r) = (params.fail_k, params.fail_r);
     assert!(k >= 4 && r >= 2 && r < k, "policy replay needs 2 <= r < K");
+    assert!(r <= 3, "sim failure schedule holds at most two kills (r - 1 <= 2)");
+    assert!(
+        r == 2 || params.sim_iters >= 3,
+        "the second kill fires at iteration 2; need sim_iters >= 3"
+    );
     let n = params.n_of(k);
     // sparse ER keeps the replay fast while exercising every frame kind
     let p = 8.0 / n as f64;
@@ -248,23 +264,26 @@ pub fn run_policies(params: &SimSweepParams) -> Vec<PolicyRow> {
     let clean = run_sim(&job, Scheme::Coded, params.sim_iters, &base);
     let mut out = Vec::new();
     for policy in [RecoveryPolicy::LowestSurvivor, RecoveryPolicy::LoadSpread] {
-        let cfg = SimConfig {
-            fail_workers: [Some(FailWorker { worker: 1, at_iter: 1 }), None],
-            policy,
-            ..base
-        };
-        let failed = run_sim(&job, Scheme::Coded, params.sim_iters, &cfg);
-        out.push(PolicyRow {
-            policy,
-            k,
-            r,
-            n,
-            clean_total_ns: clean.total_ns,
-            total_ns: failed.total_ns,
-            load_inflation: failed.recovery.load_inflation,
-            recovered_groups: failed.recovery.recovered_groups,
-            state_matches_clean: failed.state_digest() == clean.state_digest(),
-        });
+        for failures in 1..r {
+            let fail_workers = [
+                Some(FailWorker { worker: 1, at_iter: 1 }),
+                (failures >= 2).then_some(FailWorker { worker: 0, at_iter: 2 }),
+            ];
+            let cfg = SimConfig { fail_workers, policy, ..base };
+            let failed = run_sim(&job, Scheme::Coded, params.sim_iters, &cfg);
+            out.push(PolicyRow {
+                policy,
+                k,
+                r,
+                n,
+                failures,
+                clean_total_ns: clean.total_ns,
+                total_ns: failed.total_ns,
+                load_inflation: failed.recovery.load_inflation,
+                recovered_groups: failed.recovery.recovered_groups,
+                state_matches_clean: failed.state_digest() == clean.state_digest(),
+            });
+        }
     }
     out
 }
@@ -314,6 +333,7 @@ impl SimSweepReport {
                     ("k", Json::Num(p.k as f64)),
                     ("r", Json::Num(p.r as f64)),
                     ("n", Json::Num(p.n as f64)),
+                    ("failures", Json::Num(p.failures as f64)),
                     ("clean_total_ns", Json::Num(p.clean_total_ns as f64)),
                     ("total_ns", Json::Num(p.total_ns as f64)),
                     ("makespan_inflation", num(p.makespan_inflation())),
@@ -356,7 +376,7 @@ mod tests {
             trials: 2,
             fail_k: 8,
             fail_r: 3,
-            sim_iters: 2,
+            sim_iters: 3,
             ..Default::default()
         }
     }
@@ -391,12 +411,29 @@ mod tests {
     #[test]
     fn policy_replay_recovers_under_both_policies() {
         let rows = run_policies(&tiny());
-        assert_eq!(rows.len(), 2);
+        assert_eq!(rows.len(), 4, "2 policies x f in {{1, 2}} at r=3");
         for p in &rows {
-            assert!(p.state_matches_clean, "{}: recovery corrupted state", p.policy);
-            assert!(p.recovered_groups > 0, "{}", p.policy);
-            assert!(p.load_inflation > 0.0, "{}", p.policy);
+            assert!(
+                p.state_matches_clean,
+                "{} f={}: recovery corrupted state",
+                p.policy, p.failures
+            );
+            assert!(p.recovered_groups > 0, "{} f={}", p.policy, p.failures);
+            assert!(p.load_inflation > 0.0, "{} f={}", p.policy, p.failures);
             assert!(p.total_ns > 0 && p.clean_total_ns > 0);
+        }
+        // the cascade rows (second kill lands on the adopter) must cost
+        // at least as much recovery traffic as the single-failure rows
+        for policy in ["lowest", "spread"] {
+            let by_f = |f: usize| {
+                rows.iter()
+                    .find(|p| p.policy.token() == policy && p.failures == f)
+                    .expect("row present")
+            };
+            assert!(
+                by_f(2).recovered_groups >= by_f(1).recovered_groups,
+                "{policy}: cascade recovered fewer groups than one failure"
+            );
         }
     }
 
@@ -410,8 +447,8 @@ mod tests {
             n_max: 128,
             trials: 1,
             fail_k: 8,
-            fail_r: 3,
-            sim_iters: 1,
+            fail_r: 2,
+            sim_iters: 2,
             ..Default::default()
         });
         // r=9 skipped; r in {2, 7} ran for both models

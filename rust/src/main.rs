@@ -14,14 +14,18 @@
 //!                       [--check] [--program ...] [--scheme ...] [--iters I]
 //!                       [--bind IP[:PORT]] [--advertise IP[:PORT]]
 //!                       [--fail-worker ID@ITER[,ID@ITER]] [--phase-deadline-ms MS]
-//!                       [--trace PATH] [--json PATH]
+//!                       [--policy lowest|spread] [--checkpoint PATH]
+//!                       [--checkpoint-every N] [--trace PATH] [--json PATH]
+//! coded-graph cluster   --resume PATH [--transport ...] [--check] [--checkpoint ...]
 //! coded-graph worker    --connect ADDR --id K [--timeout-s 60]
 //!                       [--bind IP[:PORT]] [--advertise IP[:PORT]]
-//!                       [--fail-at ITER] [--phase-deadline-ms MS] [--trace PATH]
+//!                       [--fail-at ITER] [--phase-deadline-ms MS]
+//!                       [--resume PATH] [--trace PATH]
 //! coded-graph simulate  --graph er|rb|sbm|pl --n N --k K --r R
 //!                       [--alloc cyclic|er] [--scheme coded|uncoded] [--iters I]
 //!                       [--sim-seed S] [--latency-ns NS] [--bandwidth-mbps M]
 //!                       [--straggler-prob P] [--straggler-slowdown X]
+//!                       [--straggler-dist bernoulli|lognormal]
 //!                       [--time python|rust|zero] [--policy lowest|spread]
 //!                       [--fail-worker ID@ITER[,ID@ITER]] [--trace PATH] [--json PATH]
 //! coded-graph sim-sweep [--ks 16,32,...,2048] [--rs 2,3] [--trials T] [--p P]
@@ -68,6 +72,7 @@
 //! interfaces only inside a trusted network segment.
 
 use std::net::{SocketAddr, TcpListener};
+use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 use coded_graph::allocation::Allocation;
@@ -75,9 +80,10 @@ use coded_graph::analysis::theory;
 use coded_graph::combinatorics::choose;
 use coded_graph::coordinator::cluster::leader_ring_capacity;
 use coded_graph::coordinator::{
-    prepare, run_cluster, run_leader, run_rust, run_sim, run_worker_with, try_run_cluster_on,
-    AllocKind, BuiltJob, ClusterError, EngineConfig, FailWorker, GraphKind, GraphSpec, Job,
-    JobReport, JobSpec, ProgramSpec, Scheme, SimConfig, SimReport, TimeModel, WorkerOpts,
+    prepare, run_cluster, run_leader_with, run_rust, run_sim, run_worker_with,
+    try_run_cluster_on_with, AllocKind, BuiltJob, Checkpoint, CheckpointCfg, ClusterError,
+    EngineConfig, FailWorker, GraphKind, GraphSpec, Job, JobReport, JobSpec, ProgramSpec, RunOpts,
+    Scheme, SimConfig, SimReport, TimeModel, WorkerOpts,
 };
 use coded_graph::experiments::{fig5, models, scenarios, sim_sweep};
 use coded_graph::graph::properties;
@@ -134,13 +140,22 @@ fn usage() {
     println!("  worker     join a --processes cluster (--connect <rendezvous addr> --id <k>)");
     println!("  simulate   run one job on the deterministic virtual-time sim fabric");
     println!("             (K in the thousands; same-seed runs are byte-identical,");
-    println!("             --straggler-prob / --fail-worker / --policy lowest|spread)");
+    println!("             --straggler-prob / --straggler-dist bernoulli|lognormal /");
+    println!("             --fail-worker / --policy lowest|spread)");
     println!("  sim-sweep  large-K load sweep vs theory + failure-policy replay on");
     println!("             the sim fabric (paper Fig 5 asymptotics; --json PATH)");
     println!();
     println!("  cluster accepts --fail-worker ID@ITER[,ID@ITER] (inject worker deaths;");
-    println!("  the job survives up to r-1 of them) and --phase-deadline-ms MS (declare");
-    println!("  hung workers dead / cut off stragglers whose frames are pure padding)");
+    println!("  the job survives up to r-1 of them, adopters included — losing the");
+    println!("  adopter cascades its ghosts onto the next survivor under --policy");
+    println!("  lowest|spread) and --phase-deadline-ms MS (declare hung workers dead /");
+    println!("  cut off stragglers whose frames are pure padding)");
+    println!();
+    println!("  cluster --checkpoint PATH [--checkpoint-every N] persists committed");
+    println!("  state every N iterations (and always on an abort past tolerance);");
+    println!("  cluster --resume PATH rebuilds the job from the checkpoint, warm-");
+    println!("  starts a fresh mesh, and finishes bit-identical to an uninterrupted");
+    println!("  run (worker --resume PATH warm-starts external worker processes)");
     println!();
     println!("  cluster/worker accept --bind IP[:PORT] / --advertise IP[:PORT] for");
     println!("  multi-host --no-spawn deployments (loopback default; the sockets");
@@ -661,9 +676,29 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
     args.check_known(&[
         "graph", "n", "k", "r", "p", "q", "gamma", "rho-scale", "seed", "program", "scheme", "iters",
         "transport", "source", "processes", "check", "timeout-s", "no-spawn", "bind", "advertise",
-        "fail-worker", "phase-deadline-ms", "trace", "json",
+        "fail-worker", "phase-deadline-ms", "policy", "checkpoint", "checkpoint-every", "resume",
+        "trace", "json",
     ])?;
-    let spec = cluster_job_spec(args)?;
+    // --resume PATH: the checkpoint carries the whole job recipe; any
+    // job-shape flags on the command line are ignored in its favor
+    let (spec, warm, base_iter) = match args.get("resume") {
+        Some(path) => {
+            let ck = Checkpoint::read(Path::new(path)).map_err(|e| format!("--resume: {e}"))?;
+            if ck.iter >= ck.spec.iters {
+                return Err(format!(
+                    "--resume {path}: checkpoint already holds all {} committed iterations",
+                    ck.spec.iters
+                ));
+            }
+            println!(
+                "resuming from {path}: {}/{} iterations committed (epoch {} at capture)",
+                ck.iter, ck.spec.iters, ck.epoch
+            );
+            (ck.spec, Some(ck.state), ck.iter)
+        }
+        None => (cluster_job_spec(args)?, None, 0),
+    };
+    let run_iters = spec.iters - base_iter;
     let transport: TransportKind = args.get("transport").unwrap_or("inproc").parse()?;
     let processes = args.has("processes") || args.has("no-spawn");
     if processes && transport != TransportKind::Tcp {
@@ -675,6 +710,22 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
         .get("phase-deadline-ms")
         .map(|v| v.parse::<u64>().map_err(|_| format!("--phase-deadline-ms: cannot parse {v:?}")))
         .transpose()?;
+    cfg.policy = args.get("policy").unwrap_or("lowest").parse()?;
+    let checkpoint = match args.get("checkpoint") {
+        Some(path) => Some(CheckpointCfg {
+            path: PathBuf::from(path),
+            every: args.get_or("checkpoint-every", 1usize)?,
+            spec,
+            base_iter,
+        }),
+        None => {
+            if args.get("checkpoint-every").is_some() {
+                return Err("--checkpoint-every requires --checkpoint PATH".into());
+            }
+            None
+        }
+    };
+    let opts = RunOpts { warm, checkpoint };
     let built = spec.materialize();
     let (k, r) = (spec.k, spec.r);
     for fw in cfg.fail_workers.iter().flatten() {
@@ -694,14 +745,25 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
                 "driver: process-separated cluster over tcp; waiting for {k} external workers"
             );
         }
-        run_processes(&spec, &built, &cfg, timeout, spawn, bind_addr(args)?, args.get("advertise"))?
+        run_processes(
+            &spec,
+            &built,
+            &cfg,
+            run_iters,
+            &opts,
+            args.get("resume"),
+            timeout,
+            spawn,
+            bind_addr(args)?,
+            args.get("advertise"),
+        )?
     } else {
         println!("driver: cluster over {transport} ({k} workers + leader)");
-        try_run_cluster_on(&built.job(), &cfg, spec.iters, transport)
+        try_run_cluster_on_with(&built.job(), &cfg, run_iters, transport, &opts)
             .map_err(|e| format!("cluster run aborted: {e}"))?
     };
 
-    print_job_summary(&report, &*built.program, &built.graph, k, r, spec.scheme, spec.iters);
+    print_job_summary(&report, &*built.program, &built.graph, k, r, spec.scheme, run_iters);
     let wall: f64 = report.iterations.iter().map(|m| m.wall_s).sum();
     println!("real wall time across iterations: {wall:.3}s");
     write_trace_if_asked(args, &report)?;
@@ -781,6 +843,10 @@ impl Drop for Children {
 /// the rendezvous socket), spawn `K` children of this binary in `worker`
 /// mode, bootstrap the roster, wire the leader's own [`TcpEndpoint`],
 /// and drive the unchanged frame protocol across process boundaries.
+/// `iters` is how many iterations *this* run executes (fewer than
+/// `spec.iters` on a resume); `resume` is forwarded to spawned children
+/// so their entitled state warm-starts off the same checkpoint file
+/// (`--no-spawn` workers must be given `--resume` by hand).
 /// `advertise` rewrites the announced addresses for multi-host
 /// `--no-spawn` use (see the module docs for the no-auth caveat). A
 /// leader-side panic (worker death, protocol violation) tears the mesh
@@ -790,6 +856,9 @@ fn run_processes(
     spec: &JobSpec,
     built: &BuiltJob,
     cfg: &EngineConfig,
+    iters: usize,
+    opts: &RunOpts,
+    resume: Option<&str>,
     timeout: Duration,
     spawn: bool,
     bind: SocketAddr,
@@ -828,6 +897,9 @@ fn run_processes(
             if let Some(ms) = cfg.phase_deadline_ms {
                 cmd.args(["--phase-deadline-ms", &ms.to_string()]);
             }
+            if let Some(path) = resume {
+                cmd.args(["--resume", path]);
+            }
             let child = cmd.spawn().map_err(|e| format!("spawn worker {kk}: {e}"))?;
             children.0.push(child);
         }
@@ -840,7 +912,7 @@ fn run_processes(
         .map_err(|e| e.to_string())?;
 
     let report = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        run_leader(&job, cfg, spec.iters, &prep, &net)
+        run_leader_with(&job, cfg, iters, &prep, &net, opts)
     }))
     .map_err(|p| {
         if let Some(err) = p.downcast_ref::<ClusterError>() {
@@ -861,7 +933,8 @@ fn run_processes(
 
 fn cmd_worker(args: &Args) -> Result<(), String> {
     args.check_known(&[
-        "connect", "id", "timeout-s", "bind", "advertise", "fail-at", "phase-deadline-ms", "trace",
+        "connect", "id", "timeout-s", "bind", "advertise", "fail-at", "phase-deadline-ms",
+        "resume", "trace",
     ])?;
     let rendezvous = args
         .get("connect")
@@ -897,6 +970,21 @@ fn cmd_worker(args: &Args) -> Result<(), String> {
     let cap = prep.ring_capacity();
     let net = TcpEndpoint::wire(id, &data_listener, &roster, cap, timeout)
         .map_err(|e| e.to_string())?;
+    // --resume: warm-start this worker's entitled slice off the same
+    // checkpoint file the resuming leader read (the leader replays the
+    // remaining iterations; the worker only needs the committed state)
+    let warm = match args.get("resume") {
+        Some(path) => {
+            let ck = Checkpoint::read(Path::new(path)).map_err(|e| format!("--resume: {e}"))?;
+            if ck.spec != spec {
+                return Err(format!(
+                    "--resume {path}: checkpoint describes a different job than the rendezvous spec"
+                ));
+            }
+            Some(ck.state)
+        }
+        None => None,
+    };
     let opts = WorkerOpts {
         fail_at: args
             .get("fail-at")
@@ -911,6 +999,7 @@ fn cmd_worker(args: &Args) -> Result<(), String> {
             })
             .transpose()?,
         trace: true,
+        warm,
     };
     // a peer failure panics out of run_worker_with; the guard inside
     // aborts our endpoint and the nonzero exit is the leader's signal
@@ -953,6 +1042,7 @@ fn sim_report_json(rep: &SimReport, n: usize, k: usize, r: usize, scheme: Scheme
         ("latency_ns", Json::Num(cfg.latency_ns as f64)),
         ("bandwidth_bps", Json::Num(cfg.bandwidth_bps)),
         ("straggler_prob", Json::Num(cfg.straggler_prob)),
+        ("straggler_dist", Json::Str(cfg.straggler_dist.token().into())),
         ("total_ns", Json::Num(rep.total_ns as f64)),
         ("total_virtual_s", Json::Num(rep.total_virtual_s())),
         ("state_digest", Json::Str(format!("{:016x}", rep.state_digest()))),
@@ -970,7 +1060,7 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
     args.check_known(&[
         "graph", "n", "k", "r", "p", "q", "gamma", "rho-scale", "seed", "program", "scheme",
         "iters", "alloc", "source", "sim-seed", "latency-ns", "bandwidth-mbps", "straggler-prob",
-        "straggler-slowdown", "time", "policy", "fail-worker", "trace", "json",
+        "straggler-slowdown", "straggler-dist", "time", "policy", "fail-worker", "trace", "json",
     ])?;
     let g = build_graph(args)?;
     let k = args.get_or("k", 16usize)?;
@@ -1017,6 +1107,7 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
         bandwidth_bps: args.get_or("bandwidth-mbps", 100.0f64)? * 1e6,
         straggler_prob: args.get_or("straggler-prob", 0.0f64)?,
         straggler_slowdown: args.get_or("straggler-slowdown", 4.0f64)?,
+        straggler_dist: args.get("straggler-dist").unwrap_or("bernoulli").parse()?,
         time,
         fail_workers,
         policy: args.get("policy").unwrap_or("lowest").parse()?,
@@ -1127,11 +1218,12 @@ fn cmd_sim_sweep(args: &Args) -> Result<(), String> {
     t.print();
     println!("\nfailure-policy replay at K={} (cyclic, r={}):", params.fail_k, params.fail_r);
     let mut t = Table::new(&[
-        "policy", "makespan", "clean", "inflation", "load-infl", "groups", "state",
+        "policy", "f", "makespan", "clean", "inflation", "load-infl", "groups", "state",
     ]);
     for p in &rep.policies {
         t.row(&[
             p.policy.to_string(),
+            p.failures.to_string(),
             format!("{:.4}s", p.total_ns as f64 / 1e9),
             format!("{:.4}s", p.clean_total_ns as f64 / 1e9),
             format!("{:.2}%", p.makespan_inflation() * 100.0),

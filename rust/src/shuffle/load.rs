@@ -12,11 +12,12 @@
 
 
 /// Per-message framing overhead on the wire (len, kind, epoch, u16
-/// sender/target, count, u64 group/transfer id — comparable to the pickled
-/// tuple headers of the paper's mpi4py code). Must equal
-/// `transport::frame::HEADER_LEN`; 24 since the id widening that lets the
-/// sim fabric carry K past 256 and subset-rank wire ids past `u32`.
-pub const HEADER_BYTES: usize = 24;
+/// sender/target, count, u64 group/transfer id, payload CRC-32 —
+/// comparable to the pickled tuple headers of the paper's mpi4py code).
+/// Must equal `transport::frame::HEADER_LEN`; 24 since the id widening
+/// that lets the sim fabric carry K past 256 and subset-rank wire ids
+/// past `u32`, 28 since the payload checksum.
+pub const HEADER_BYTES: usize = 28;
 
 /// IV width: `T` bits (f64 state).
 pub const T_BITS: f64 = 64.0;

@@ -1,0 +1,338 @@
+//! `ChaosNet`: a deterministic fault-injection wrapper around any
+//! [`Transport`] backend.
+//!
+//! Robustness claims are only as good as the faults they were tested
+//! against, and ad-hoc fault injection (kill a thread here, flip a byte
+//! there) is unrepeatable. `ChaosNet` makes the fault *schedule* a
+//! first-class, seeded artifact: wrap any inner transport, hand it a
+//! [`ChaosPlan`], and the same seed replays the exact same connection
+//! kills, flush delays, and payload bit-flips — so a chaos run is a
+//! regression test, not a dice roll.
+//!
+//! Determinism discipline: every endpoint gets its **own** [`DetRng`]
+//! stream (split from the plan seed by endpoint id) and its own send
+//! counter, and every fault decision is drawn from the *sending*
+//! endpoint's stream in its own send order. Since each endpoint is
+//! driven by one thread executing a deterministic protocol, the fault
+//! sequence is a pure function of the plan — independent of cross-thread
+//! interleaving.
+//!
+//! Fault classes:
+//!
+//! * **Kills** — `(endpoint, nth send)` pairs: at its n-th outbound
+//!   frame the endpoint's connection dies. The frame is dropped, the
+//!   inner transport's [`fail_endpoint`](Transport::fail_endpoint) makes
+//!   every peer observe [`RecvOutcome::PeerDown`], further sends and
+//!   flushes from the endpoint are swallowed, and its own receives yield
+//!   a synthesized `Abort` frame so the victim's protocol loop unwinds
+//!   cleanly (mirroring the cooperative `--fail-worker` teardown — the
+//!   difference is that chaos kills strike *mid-send*, at frame
+//!   granularity, where cooperative injection only kills at iteration
+//!   boundaries).
+//! * **Corruption** — with probability `corrupt_prob` per matching
+//!   data-bearing frame, one payload bit (never the header) is flipped
+//!   *without* resealing the CRC: the receiver's [`Frame::parse`] comes
+//!   back [`FrameError::Checksum`], which the cluster leader converts
+//!   into strikes and, past the limit, a `PeerDown`-equivalent recovery.
+//! * **Delays** — up to `max_flush_delay_us` of seeded sleep before each
+//!   flush, stressing barrier timeouts without changing any bytes.
+//!
+//! [`FrameError::Checksum`]: super::frame::FrameError::Checksum
+//! [`Frame::parse`]: super::frame::Frame::parse
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::transport::frame::{self, FrameKind, HEADER_LEN};
+use crate::transport::{RecvOutcome, Transport, TransportStats};
+use crate::util::rng::DetRng;
+use crate::WorkerId;
+
+/// A seeded fault schedule for [`ChaosNet`]. `Default` is the empty
+/// plan: no faults, byte-transparent.
+#[derive(Clone, Debug)]
+pub struct ChaosPlan {
+    /// Root seed; endpoint streams are split from it by endpoint id.
+    pub seed: u64,
+    /// Probability that a matching payload-bearing frame gets one
+    /// payload bit flipped (CRC left stale). Zero disables corruption.
+    pub corrupt_prob: f64,
+    /// Restrict corruption to frames *from* this endpoint (`None`: any).
+    pub corrupt_from: Option<WorkerId>,
+    /// Restrict corruption to frames *to* this endpoint (`None`: any).
+    /// A multicast matches if the endpoint is among its receivers.
+    pub corrupt_to: Option<WorkerId>,
+    /// Connection kills: endpoint `w` dies at its `n`-th outbound frame
+    /// (1-based count across all of `w`'s sends).
+    pub kills: Vec<(WorkerId, usize)>,
+    /// Upper bound on the seeded delay injected before each flush, in
+    /// microseconds. Zero disables delays.
+    pub max_flush_delay_us: u64,
+}
+
+impl Default for ChaosPlan {
+    fn default() -> Self {
+        ChaosPlan {
+            seed: 0,
+            corrupt_prob: 0.0,
+            corrupt_from: None,
+            corrupt_to: None,
+            kills: Vec::new(),
+            max_flush_delay_us: 0,
+        }
+    }
+}
+
+/// Per-endpoint fault state: its RNG stream, send counter, and whether
+/// its connection has been killed.
+struct Lane {
+    rng: DetRng,
+    sends: usize,
+    killed: bool,
+}
+
+/// A [`Transport`] that injects a seeded [`ChaosPlan`] of faults around
+/// an inner backend. See the module docs for the determinism contract.
+pub struct ChaosNet<T: Transport> {
+    inner: T,
+    plan: ChaosPlan,
+    lanes: Vec<Mutex<Lane>>,
+}
+
+impl<T: Transport> ChaosNet<T> {
+    /// Wrap `inner`, which exposes `endpoints` endpoint ids (`K + 1` for
+    /// a cluster mesh: workers `0..K`, leader `K`).
+    pub fn new(inner: T, endpoints: usize, plan: ChaosPlan) -> Self {
+        let mut root = DetRng::seed(plan.seed);
+        let lanes = (0..endpoints)
+            .map(|w| Mutex::new(Lane { rng: root.split(w as u64), sends: 0, killed: false }))
+            .collect();
+        ChaosNet { inner, plan, lanes }
+    }
+
+    /// The wrapped backend (e.g. to read backend-specific state in tests).
+    pub fn inner(&self) -> &T {
+        &self.inner
+    }
+
+    /// Has `w`'s connection been killed by the schedule yet?
+    pub fn is_killed(&self, w: WorkerId) -> bool {
+        self.lanes[w as usize].lock().unwrap().killed
+    }
+
+    /// Apply the fault schedule to one outbound frame from `from`.
+    /// Returns `None` when the frame must be swallowed (sender killed,
+    /// now or previously), `Some(None)` to deliver the original bytes,
+    /// and `Some(Some(bytes))` to deliver a corrupted copy.
+    fn outbound(&self, from: WorkerId, receivers: &[WorkerId], frame_bytes: &[u8]) -> Option<Option<Vec<u8>>> {
+        let lane = &mut *self.lanes[from as usize].lock().unwrap();
+        if lane.killed {
+            return None;
+        }
+        lane.sends += 1;
+        if self.plan.kills.iter().any(|&(w, n)| w == from && n == lane.sends) {
+            lane.killed = true;
+            self.inner.fail_endpoint(from);
+            return None;
+        }
+        let from_ok = self.plan.corrupt_from.map_or(true, |w| w == from);
+        let to_ok = self.plan.corrupt_to.map_or(true, |w| receivers.contains(&w));
+        if self.plan.corrupt_prob > 0.0
+            && from_ok
+            && to_ok
+            && frame_bytes.len() > HEADER_LEN
+            && lane.rng.bernoulli(self.plan.corrupt_prob)
+        {
+            let mut dirty = frame_bytes.to_vec();
+            let byte = HEADER_LEN + lane.rng.below(dirty.len() - HEADER_LEN);
+            let bit = lane.rng.below(8) as u8;
+            dirty[byte] ^= 1 << bit;
+            return Some(Some(dirty));
+        }
+        Some(None)
+    }
+
+    /// Deliver a synthesized `Abort` into `buf` for a killed endpoint's
+    /// own receive path, so its protocol loop exits cleanly.
+    fn synth_abort(me: WorkerId, buf: &mut Vec<u8>) {
+        frame::encode_control(buf, FrameKind::Abort, me);
+    }
+}
+
+impl<T: Transport> Transport for ChaosNet<T> {
+    fn send_multicast(&self, from: WorkerId, receivers: &[WorkerId], frame_bytes: &[u8]) {
+        match self.outbound(from, receivers, frame_bytes) {
+            None => {}
+            Some(None) => self.inner.send_multicast(from, receivers, frame_bytes),
+            Some(Some(dirty)) => self.inner.send_multicast(from, receivers, &dirty),
+        }
+    }
+
+    fn send_multicast_buffered(&self, from: WorkerId, receivers: &[WorkerId], frame_bytes: &[u8]) {
+        match self.outbound(from, receivers, frame_bytes) {
+            None => {}
+            Some(None) => self.inner.send_multicast_buffered(from, receivers, frame_bytes),
+            Some(Some(dirty)) => self.inner.send_multicast_buffered(from, receivers, &dirty),
+        }
+    }
+
+    fn flush(&self, from: WorkerId) {
+        let delay_us = {
+            let lane = &mut *self.lanes[from as usize].lock().unwrap();
+            if lane.killed {
+                return;
+            }
+            if self.plan.max_flush_delay_us > 0 {
+                lane.rng.below(self.plan.max_flush_delay_us as usize + 1) as u64
+            } else {
+                0
+            }
+        };
+        if delay_us > 0 {
+            std::thread::sleep(Duration::from_micros(delay_us));
+        }
+        self.inner.flush(from);
+    }
+
+    fn recv(&self, me: WorkerId, buf: &mut Vec<u8>) -> bool {
+        if self.is_killed(me) {
+            Self::synth_abort(me, buf);
+            return true;
+        }
+        self.inner.recv(me, buf)
+    }
+
+    fn recv_deadline(
+        &self,
+        me: WorkerId,
+        buf: &mut Vec<u8>,
+        deadline: Option<Duration>,
+    ) -> RecvOutcome {
+        if self.is_killed(me) {
+            Self::synth_abort(me, buf);
+            return RecvOutcome::Frame;
+        }
+        self.inner.recv_deadline(me, buf, deadline)
+    }
+
+    fn fail_endpoint(&self, me: WorkerId) {
+        self.inner.fail_endpoint(me);
+    }
+
+    fn leave(&self, me: WorkerId) {
+        // a chaos-killed endpoint already failed at the inner layer; its
+        // guard's clean leave must not double-signal
+        if !self.is_killed(me) {
+            self.inner.leave(me);
+        }
+    }
+
+    fn abort(&self) {
+        self.inner.abort();
+    }
+
+    fn data_stats(&self) -> TransportStats {
+        self.inner.data_stats()
+    }
+
+    fn stats_are_global(&self) -> bool {
+        self.inner.stats_are_global()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::frame::{Frame, FrameError};
+    use crate::transport::InProcNet;
+
+    fn plan(seed: u64) -> ChaosPlan {
+        ChaosPlan { seed, ..ChaosPlan::default() }
+    }
+
+    #[test]
+    fn empty_plan_is_byte_transparent() {
+        let net = ChaosNet::new(InProcNet::new(&[8, 8]), 2, plan(1));
+        let mut buf = Vec::new();
+        frame::encode_uncoded(&mut buf, 0, 3, &[1, 2, 3]);
+        net.send_unicast(0, 1, &buf);
+        let mut got = Vec::new();
+        assert!(net.recv(1, &mut got));
+        assert_eq!(got, buf);
+        assert!(Frame::parse(&got).is_ok());
+    }
+
+    #[test]
+    fn kill_swallows_from_the_nth_send_and_synthesizes_abort() {
+        let mut p = plan(2);
+        p.kills.push((0, 2));
+        let net = ChaosNet::new(InProcNet::new(&[8, 8]), 2, p);
+        let mut buf = Vec::new();
+        frame::encode_uncoded(&mut buf, 0, 7, &[9]);
+        net.send_unicast(0, 1, &buf); // send 1: delivered
+        net.send_unicast(0, 1, &buf); // send 2: the kill — dropped
+        net.send_unicast(0, 1, &buf); // past the kill: swallowed
+        assert!(net.is_killed(0));
+        let mut got = Vec::new();
+        assert!(net.recv(1, &mut got), "the pre-kill frame still arrives");
+        assert_eq!(got, buf);
+        // the victim's own receive path unwinds via a synthetic Abort
+        assert_eq!(net.recv_deadline(0, &mut got, None), RecvOutcome::Frame);
+        let f = Frame::parse(&got).unwrap();
+        assert_eq!(f.kind, FrameKind::Abort);
+        // peers observe the abnormal death through the inner transport
+        assert_eq!(
+            net.recv_deadline(1, &mut got, Some(Duration::from_millis(200))),
+            RecvOutcome::PeerDown(0)
+        );
+    }
+
+    #[test]
+    fn corruption_is_a_typed_checksum_error_and_seed_deterministic() {
+        let run = |seed: u64| -> Vec<Vec<u8>> {
+            let mut p = plan(seed);
+            p.corrupt_prob = 0.5;
+            let net = ChaosNet::new(InProcNet::new(&[64, 64]), 2, p);
+            let mut buf = Vec::new();
+            let mut out = Vec::new();
+            for i in 0..20u64 {
+                frame::encode_uncoded(&mut buf, 0, i, &[i, i ^ 0xFF]);
+                net.send_unicast(0, 1, &buf);
+                let mut got = Vec::new();
+                assert!(net.recv(1, &mut got));
+                out.push(got);
+            }
+            out
+        };
+        let a = run(42);
+        let b = run(42);
+        assert_eq!(a, b, "same seed, same corrupted bytes");
+        let c = run(43);
+        assert_ne!(a, c, "different seed, different fault draws");
+        let verdicts: Vec<bool> = a
+            .iter()
+            .map(|bytes| match Frame::parse(bytes) {
+                Ok(_) => true,
+                Err(FrameError::Checksum { sender: 0 }) => false,
+                Err(other) => panic!("corruption must stay typed, got {other:?}"),
+            })
+            .collect();
+        assert!(verdicts.contains(&false), "p=0.5 over 20 frames must corrupt some");
+        assert!(verdicts.contains(&true), "and leave some intact");
+    }
+
+    #[test]
+    fn control_frames_are_never_corrupted() {
+        // payload-less frames have no payload bits to flip; the schedule
+        // must skip them rather than touch the header
+        let mut p = plan(3);
+        p.corrupt_prob = 1.0;
+        let net = ChaosNet::new(InProcNet::new(&[8, 8]), 2, p);
+        let mut buf = Vec::new();
+        frame::encode_control(&mut buf, FrameKind::StartShuffle, 0);
+        net.send_unicast(0, 1, &buf);
+        let mut got = Vec::new();
+        assert!(net.recv(1, &mut got));
+        assert_eq!(Frame::parse(&got).unwrap().kind, FrameKind::StartShuffle);
+    }
+}

@@ -13,12 +13,14 @@
 //! 6       2     sender endpoint id (u16 LE)
 //! 8       2     target (u16 LE): logical worker a recovery frame is
 //!               for; zero otherwise — Reduced reuses it for the
-//!               straggler tally, Stats for the logical core id
+//!               straggler tally, Stats for the logical core id,
+//!               Recover for the adopter id
 //! 10      2     reserved (zero)
 //! 12      4     count (u32 LE): payload items
 //! 16      8     index (u64 LE): group / transfer id, or Reduced's
 //!               validated-IV count
-//! 24      ...   payload
+//! 24      4     checksum (u32 LE): CRC-32 of the payload bytes
+//! 28      ...   payload
 //! ```
 //!
 //! Worker ids are 16-bit ([`WorkerId`]) so the simulation fabric can
@@ -26,7 +28,16 @@
 //! because coded wire ids are subset ranks of `(r+1)`-subsets of `[K]` —
 //! `C(1024, 4) ≈ 4.6e10` already overflows `u32`.
 //!
-//! The 24-byte header is *exactly* the [`HEADER_BYTES`] the load
+//! The checksum covers the **payload only**, by design: the send path
+//! stamps the epoch ([`stamp_epoch`]) and recovery frames the target
+//! *after* encoding, and header fields are already structurally
+//! validated by [`Frame::parse`]. Every `encode_*` seals its payload
+//! ([`seal`]); a flipped payload bit therefore surfaces as a typed
+//! [`FrameError::Checksum`] at the receiver — never a silently folded
+//! wrong state — and the leader treats a repeatedly-corrupting peer
+//! like a dead one (see the cluster driver's strike-out).
+//!
+//! The 28-byte header is *exactly* the [`HEADER_BYTES`] the load
 //! accounting has always charged per message (checked at compile time
 //! below), and the payloads carry exactly the bytes the accounting
 //! models: `count * seg_bytes(r)` for a coded multicast (each XOR column
@@ -64,11 +75,52 @@
 use crate::shuffle::load::HEADER_BYTES;
 use crate::WorkerId;
 
-/// Serialized header length in bytes (the 4-byte length prefix included).
-pub const HEADER_LEN: usize = 24;
+/// Serialized header length in bytes (the 4-byte length prefix and the
+/// trailing payload checksum included).
+pub const HEADER_LEN: usize = 28;
 
 // The wire header must cost exactly what the load accounting charges.
 const _: () = assert!(HEADER_LEN == HEADER_BYTES);
+
+/// CRC-32 (IEEE 802.3 reflected polynomial `0xEDB88320`) lookup table,
+/// built at compile time — no dependency, no runtime init.
+const CRC32_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut b = 0;
+        while b < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            b += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// CRC-32 of `bytes` (IEEE: reflected, init and xorout `!0`). The empty
+/// slice checksums to zero, so a freshly laid header (zero checksum
+/// field) is already consistent for payload-less frames.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = !0u32;
+    for &b in bytes {
+        c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+/// Seal an encoded frame: write the CRC-32 of the payload into the
+/// checksum field. Every `encode_*` seals before returning; call again
+/// only if you mutate payload bytes afterwards. Header fields stay
+/// mutable after sealing — the checksum covers the payload only,
+/// exactly so the send path can stamp the epoch and target late.
+#[inline]
+pub fn seal(buf: &mut [u8]) {
+    let c = crc32(&buf[HEADER_LEN..]);
+    buf[HEADER_LEN - 4..HEADER_LEN].copy_from_slice(&c.to_le_bytes());
+}
 
 /// What a frame carries. `CodedData` / `UncodedData` are the Shuffle
 /// payload frames (the ones the bus model charges); everything else is
@@ -111,8 +163,10 @@ pub enum FrameKind {
     RecoverPairs = 10,
     /// Leader → worker: a peer died; adopt the recovery delta and restart
     /// the current iteration. `index` is the dead worker's id, `epoch`
-    /// the new recovery generation, payload `(vertex, state bits)` pairs
-    /// seeding the adopter's ghost state.
+    /// the new recovery generation, `target` the adopter the leader's
+    /// policy chose for this epoch (it may differ from earlier epochs —
+    /// a dead adopter's ghosts cascade to the next choice), payload
+    /// `(vertex, state bits)` pairs seeding the adopter's ghost state.
     Recover = 11,
     /// Leader → worker: unrecoverable failure (tolerance exceeded) —
     /// unwind cleanly instead of hanging.
@@ -175,6 +229,10 @@ pub enum FrameError {
     /// The payload length is impossible for this kind's declared item
     /// count (wrong stride, or items that could over-read the buffer).
     BadPayload { kind: FrameKind, count: u32, have: usize },
+    /// The payload bytes disagree with the header's CRC-32: corruption
+    /// in flight. `sender` is the (structurally valid) header's sender
+    /// id, so the receiver can attribute the strike.
+    Checksum { sender: WorkerId },
 }
 
 impl std::fmt::Display for FrameError {
@@ -189,6 +247,9 @@ impl std::fmt::Display for FrameError {
             FrameError::BadKind(b) => write!(f, "unknown frame kind {b}"),
             FrameError::BadPayload { kind, count, have } => {
                 write!(f, "{kind:?} frame declares {count} items but carries {have} payload bytes")
+            }
+            FrameError::Checksum { sender } => {
+                write!(f, "frame from endpoint {sender} fails its payload CRC-32: corrupt in flight")
             }
         }
     }
@@ -271,6 +332,16 @@ impl<'a> Frame<'a> {
         if !ok {
             return Err(FrameError::BadPayload { kind, count, have: payload.len() });
         }
+        // integrity last, so structural defects keep their sharper types:
+        // a frame that reaches here has a valid header shape, making the
+        // sender id trustworthy enough to attribute the corruption to
+        let declared_crc =
+            u32::from_le_bytes(bytes[HEADER_LEN - 4..HEADER_LEN].try_into().unwrap());
+        if crc32(payload) != declared_crc {
+            return Err(FrameError::Checksum {
+                sender: u16::from_le_bytes(bytes[6..8].try_into().unwrap()),
+            });
+        }
         Ok(Frame {
             kind,
             sender: u16::from_le_bytes(bytes[6..8].try_into().unwrap()),
@@ -340,6 +411,7 @@ fn header_into(
     buf.extend_from_slice(&[0, 0]); // reserved
     buf.extend_from_slice(&count.to_le_bytes());
     buf.extend_from_slice(&index.to_le_bytes());
+    buf.extend_from_slice(&[0, 0, 0, 0]); // checksum — sealed after the payload
 }
 
 /// Write the target field of an already-laid header (offset 8).
@@ -357,6 +429,7 @@ pub fn encode_coded(buf: &mut Vec<u8>, sender: WorkerId, group: u64, cols: &[u64
     for &c in cols {
         buf.extend_from_slice(&c.to_le_bytes()[..seg_bytes]);
     }
+    seal(buf);
 }
 
 /// Encode an uncoded unicast batch: the transfer id plus the full IV
@@ -366,9 +439,11 @@ pub fn encode_uncoded(buf: &mut Vec<u8>, sender: WorkerId, transfer: u64, bits: 
     for &b in bits {
         buf.extend_from_slice(&b.to_le_bytes());
     }
+    seal(buf);
 }
 
-/// Encode a payload-less control frame.
+/// Encode a payload-less control frame. (The zero checksum field laid by
+/// the header is already the empty payload's CRC — nothing to seal.)
 pub fn encode_control(buf: &mut Vec<u8>, kind: FrameKind, sender: WorkerId) {
     header_into(buf, kind, sender, 0, 0, 0);
 }
@@ -382,6 +457,7 @@ pub fn encode_control(buf: &mut Vec<u8>, kind: FrameKind, sender: WorkerId) {
 pub fn encode_send_done(buf: &mut Vec<u8>, sender: WorkerId, frames: u64, bytes: u64) {
     header_into(buf, FrameKind::SendDone, sender, frames, 1, 8);
     buf.extend_from_slice(&bytes.to_le_bytes());
+    seal(buf);
 }
 
 /// Encode a worker's `Reduced` reply: fresh state bits in the worker's
@@ -401,6 +477,7 @@ pub fn encode_reduced(
     for &b in state_bits {
         buf.extend_from_slice(&b.to_le_bytes());
     }
+    seal(buf);
 }
 
 /// Encode a leader `StateUpdate`: `(vertex, state bits)` pairs. `target`
@@ -414,6 +491,7 @@ pub fn encode_state_update(buf: &mut Vec<u8>, sender: WorkerId, target: WorkerId
         buf.extend_from_slice(&v.to_le_bytes());
         buf.extend_from_slice(&b.to_le_bytes());
     }
+    seal(buf);
 }
 
 /// Stamp the recovery epoch onto an already-encoded frame (offset 5).
@@ -438,6 +516,7 @@ pub fn encode_stats(buf: &mut Vec<u8>, sender: WorkerId, core: WorkerId, dropped
     for &w in words {
         buf.extend_from_slice(&w.to_le_bytes());
     }
+    seal(buf);
 }
 
 /// Encode a degraded-group row replacement: the dead `target` worker's
@@ -448,6 +527,7 @@ pub fn encode_recover_row(buf: &mut Vec<u8>, sender: WorkerId, group: u64, targe
     for &b in bits {
         buf.extend_from_slice(&b.to_le_bytes());
     }
+    seal(buf);
 }
 
 /// Encode an uncoded-transfer replacement: `(position, bits)` pairs into
@@ -466,18 +546,31 @@ pub fn encode_recover_pairs(
         buf.extend_from_slice(&p.to_le_bytes());
         buf.extend_from_slice(&b.to_le_bytes());
     }
+    seal(buf);
 }
 
 /// Encode the leader's `Recover` delta: dead worker id in `index`, the
-/// new epoch stamped in the header, and `(vertex, state bits)` pairs
-/// seeding the adopter's ghost state (empty for non-adopters).
-pub fn encode_recover(buf: &mut Vec<u8>, sender: WorkerId, dead: WorkerId, epoch: u8, pairs: &[(u32, u64)]) {
+/// new epoch stamped in the header, the `adopter` the leader chose under
+/// its recovery policy in `target` (workers *follow* it rather than
+/// recomputing — the policy is leader-side state), and `(vertex, state
+/// bits)` pairs re-seeding the dead set's entitled state (empty for
+/// non-adopters).
+pub fn encode_recover(
+    buf: &mut Vec<u8>,
+    sender: WorkerId,
+    dead: WorkerId,
+    epoch: u8,
+    adopter: WorkerId,
+    pairs: &[(u32, u64)],
+) {
     header_into(buf, FrameKind::Recover, sender, dead as u64, pairs.len() as u32, pairs.len() * 12);
     stamp_epoch(buf, epoch);
+    set_target(buf, adopter);
     for &(v, b) in pairs {
         buf.extend_from_slice(&v.to_le_bytes());
         buf.extend_from_slice(&b.to_le_bytes());
     }
+    seal(buf);
 }
 
 #[cfg(test)]
@@ -625,9 +718,10 @@ mod tests {
         }
 
         let state = [(11u32, 0.5f64.to_bits())];
-        encode_recover(&mut buf, 10, 3, 1, &state);
+        encode_recover(&mut buf, 10, 3, 1, 6, &state);
         let f = Frame::parse(&buf).unwrap();
         assert_eq!((f.kind, f.sender, f.index, f.epoch), (FrameKind::Recover, 10, 3, 1));
+        assert_eq!(f.target, 6, "Recover carries the policy-chosen adopter");
         assert!(!f.kind.is_data(), "Recover is control traffic");
         assert_eq!(f.update_pair(0), state[0]);
 
@@ -747,6 +841,61 @@ mod tests {
             Frame::parse(&buf),
             Err(FrameError::LengthMismatch { declared, have }) if declared == have + 9
         ));
+    }
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // IEEE CRC-32 check values ("123456789" is the classic one)
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"a"), 0xE8B7_BE43);
+    }
+
+    #[test]
+    fn checksum_valid_frame_roundtrips_unchanged() {
+        // a sealed frame parses, and parsing is read-only: the exact
+        // bytes parse again to the exact same view
+        let mut buf = Vec::new();
+        encode_uncoded(&mut buf, 3, 9, &[7, 8, 9]);
+        let before = buf.clone();
+        let f = Frame::parse(&buf).unwrap();
+        assert_eq!((f.sender, f.index, f.count), (3, 9, 3));
+        assert_eq!(buf, before, "parse must not mutate the buffer");
+        let g = Frame::parse(&buf).unwrap();
+        assert_eq!((g.kind, g.sender, g.index, g.count), (f.kind, f.sender, f.index, f.count));
+        assert_eq!(g.payload, f.payload);
+    }
+
+    #[test]
+    fn every_flipped_payload_bit_is_a_typed_checksum_error() {
+        let mut buf = Vec::new();
+        encode_uncoded(&mut buf, 5, 2, &[0xDEAD_BEEF, 0]);
+        for byte in HEADER_LEN..buf.len() {
+            for bit in 0..8u8 {
+                buf[byte] ^= 1 << bit;
+                assert_eq!(
+                    Frame::parse(&buf),
+                    Err(FrameError::Checksum { sender: 5 }),
+                    "byte {byte} bit {bit}"
+                );
+                buf[byte] ^= 1 << bit;
+            }
+        }
+        assert!(Frame::parse(&buf).is_ok(), "restored frame parses again");
+    }
+
+    #[test]
+    fn header_fields_stay_mutable_after_seal() {
+        // the send path stamps epoch (and recovery frames the target)
+        // after encoding; the payload-only checksum must tolerate that
+        let mut buf = Vec::new();
+        encode_uncoded(&mut buf, 1, 4, &[11, 22]);
+        stamp_epoch(&mut buf, 7);
+        let f = Frame::parse(&buf).unwrap();
+        assert_eq!((f.epoch, f.word(1)), (7, 22));
+        // but a checksum-field flip is corruption like any other
+        buf[HEADER_LEN - 4] ^= 0x01;
+        assert_eq!(Frame::parse(&buf), Err(FrameError::Checksum { sender: 1 }));
     }
 
     #[test]

@@ -26,12 +26,17 @@
 //!   what `coded-graph worker` and the `--processes` leader each build
 //!   after the [`bootstrap`] rendezvous distributes the roster of
 //!   `(endpoint, listener address)` pairs and the job spec.
+//! * [`ChaosNet`] — a fault-injection wrapper over any inner backend:
+//!   a seeded [`ChaosPlan`] of connection kills, flush delays, and
+//!   payload bit-flips, replayable bit-for-bit for regression testing
+//!   the recovery and wire-integrity machinery.
 //!
 //! A future multi-node backend slots in by implementing [`Transport`]
 //! over its own address book; the cluster driver and frame codec are
 //! already agnostic to everything below `send`/`recv`.
 
 pub mod bootstrap;
+pub mod chaos;
 pub mod frame;
 pub mod inproc;
 pub mod tcp;
@@ -41,6 +46,7 @@ use std::time::{Duration, Instant};
 
 use crate::WorkerId;
 
+pub use chaos::{ChaosNet, ChaosPlan};
 pub use frame::{Frame, FrameError, FrameKind};
 pub use inproc::InProcNet;
 pub use tcp::{TcpEndpoint, TcpNet};

@@ -78,6 +78,18 @@ impl DetRng {
         self.f64() < p
     }
 
+    /// Standard normal `N(0, 1)` via Box–Muller. Always consumes exactly
+    /// two `u64` draws (no cached second variate), so a stream's
+    /// consumption — and everything downstream of it — stays a pure
+    /// function of the call sequence, which the deterministic replay
+    /// harnesses depend on.
+    #[inline]
+    pub fn normal(&mut self) -> f64 {
+        let u = self.f64().max(f64::MIN_POSITIVE);
+        let v = self.f64();
+        (-2.0 * u.ln()).sqrt() * (std::f64::consts::TAU * v).cos()
+    }
+
     /// Geometric skip for `G(p)` edge sampling: the number of misses before
     /// the next hit of a Bernoulli(p) process, i.e. `floor(ln U / ln(1-p))`.
     ///
@@ -190,6 +202,34 @@ mod tests {
         sorted.sort_unstable();
         assert_eq!(sorted, (0..100).collect::<Vec<_>>());
         assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn normal_moments_close() {
+        let mut r = DetRng::seed(13);
+        let n = 50_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = r.normal();
+            assert!(z.is_finite());
+            sum += z;
+            sq += z * z;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn normal_consumes_a_fixed_number_of_draws() {
+        // two u64s per call, so parallel streams stay aligned
+        let mut a = DetRng::seed(21);
+        let mut b = DetRng::seed(21);
+        a.normal();
+        b.u64();
+        b.u64();
+        assert_eq!(a.u64(), b.u64());
     }
 
     #[test]

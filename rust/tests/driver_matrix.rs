@@ -22,10 +22,11 @@ use std::time::Duration;
 
 use coded_graph::coordinator::cluster::leader_ring_capacity;
 use coded_graph::coordinator::{
-    prepare, run_cluster_on, run_leader, run_rust, run_sim, run_worker, AllocKind, EngineConfig,
-    GraphKind, GraphSpec, JobReport, JobSpec, ProgramSpec, Scheme, SimConfig,
+    mesh_ring_capacities, prepare, run_cluster_on, run_leader, run_rust, run_sim, run_worker,
+    try_run_cluster_net, AllocKind, ClusterError, EngineConfig, GraphKind, GraphSpec, JobReport,
+    JobSpec, ProgramSpec, RunOpts, Scheme, SimConfig,
 };
-use coded_graph::transport::{bootstrap, TcpEndpoint, TransportKind};
+use coded_graph::transport::{bootstrap, ChaosNet, ChaosPlan, InProcNet, TcpEndpoint, TransportKind};
 use coded_graph::util::testkit::{assert_reports_match, assert_states_bit_identical, ALL_SCHEMES};
 use coded_graph::WorkerId;
 
@@ -190,4 +191,89 @@ fn driver_matrix_powerlaw() {
 #[test]
 fn driver_matrix_sbm() {
     matrix_for_graph("sbm");
+}
+
+// ---- the chaos rows (PR 9) --------------------------------------------
+//
+// Same matrix spec, but the mesh is wrapped in a seeded [`ChaosNet`]:
+// faults strike at frame granularity (mid-send kills, payload bit-flips)
+// instead of the cooperative iteration-boundary `--fail-worker` kills the
+// rows above use. The invariants stay the same — recover bit-identical or
+// abort typed, never hang, never silently diverge.
+
+/// Run the matrix spec over an in-proc mesh wrapped in `plan`.
+fn run_chaos(
+    spec: &JobSpec,
+    cfg: &EngineConfig,
+    plan: ChaosPlan,
+) -> Result<JobReport, ClusterError> {
+    let built = spec.materialize();
+    let job = built.job();
+    let prep = prepare(&job, cfg.scheme);
+    let caps = mesh_ring_capacities(&prep, spec.k);
+    let net = ChaosNet::new(InProcNet::new(&caps), spec.k + 1, plan);
+    try_run_cluster_net(&job, cfg, spec.iters, &net, &RunOpts::default())
+}
+
+#[test]
+fn chaos_kill_mid_send_recovers_bit_identical() {
+    // worker 1's connection dies at its 4th outbound frame — mid-phase,
+    // not at an iteration boundary; the leader must observe PeerDown and
+    // re-plan exactly as for a cooperative death
+    let spec = spec_for("er", Scheme::Coded);
+    let cfg = EngineConfig { scheme: spec.scheme, ..Default::default() };
+    let reference = run_driver(&spec, &cfg, Driver::Engine);
+    let plan = ChaosPlan { seed: 0x5EED, kills: vec![(1, 4)], ..Default::default() };
+    let got = run_chaos(&spec, &cfg, plan)
+        .unwrap_or_else(|e| panic!("one chaos kill is within r-1 = 1: {e}"));
+    assert_states_bit_identical(&reference.final_state, &got.final_state, "chaos/kill");
+    assert_eq!(got.recovery.failures, 1, "exactly one recovery epoch");
+    assert!(got.recovery.recovered_groups > 0);
+}
+
+#[test]
+fn chaos_corruption_is_typed_and_recovered_never_silent() {
+    // every payload frame worker 1 sends the leader arrives with one bit
+    // flipped (CRC left stale): each is a typed Checksum drop, and the
+    // leader must end up treating the corrupter as dead — via strikes or
+    // the phase deadline — then recover bit-identically. Silent state
+    // divergence is the one forbidden outcome.
+    let spec = spec_for("er", Scheme::Coded);
+    let reference = run_driver(
+        &spec,
+        &EngineConfig { scheme: spec.scheme, ..Default::default() },
+        Driver::Engine,
+    );
+    let cfg = EngineConfig {
+        scheme: spec.scheme,
+        phase_deadline_ms: Some(2_000),
+        ..Default::default()
+    };
+    let plan = ChaosPlan {
+        seed: 7,
+        corrupt_prob: 1.0,
+        corrupt_from: Some(1),
+        corrupt_to: Some(spec.k as WorkerId),
+        ..Default::default()
+    };
+    let got = run_chaos(&spec, &cfg, plan)
+        .unwrap_or_else(|e| panic!("losing the corrupter is within r-1 = 1: {e}"));
+    assert_states_bit_identical(&reference.final_state, &got.final_state, "chaos/corrupt");
+    assert_eq!(got.recovery.failures, 1, "the corrupter was declared dead once");
+    assert!(got.recovery.recovered_groups > 0);
+}
+
+#[test]
+fn chaos_same_seed_replays_identically() {
+    // the fault schedule is a seeded artifact: two runs under the same
+    // plan must fail the same worker at the same frame and land on the
+    // same bits — a chaos run is a regression test, not a dice roll
+    let spec = spec_for("er", Scheme::Coded);
+    let cfg = EngineConfig { scheme: spec.scheme, ..Default::default() };
+    let plan = ChaosPlan { seed: 0xD1CE, kills: vec![(2, 6)], ..Default::default() };
+    let a = run_chaos(&spec, &cfg, plan.clone()).expect("within tolerance");
+    let b = run_chaos(&spec, &cfg, plan).expect("within tolerance");
+    assert_states_bit_identical(&a.final_state, &b.final_state, "chaos/replay");
+    assert_eq!(a.recovery.failures, b.recovery.failures);
+    assert_eq!(a.recovery.recovered_groups, b.recovery.recovered_groups);
 }

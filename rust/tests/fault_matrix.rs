@@ -12,13 +12,19 @@
 //! * a loss beyond `r − 1` aborts with the typed
 //!   [`ClusterError::ToleranceExceeded`] — promptly (watchdog-bounded),
 //!   never a hang,
-//! * losing the adopter aborts with [`ClusterError::AdopterLost`],
+//! * killing the **adopter** (PR 9) cascades its ghosts onto the next
+//!   survivor — a second recovery epoch, still bit-identical,
+//! * two deaths at the same iteration (the second surfaces **during**
+//!   the first recovery's re-run) chain cleanly,
+//! * a checkpointed job killed past tolerance aborts with a resumable
+//!   checkpoint that warm-starts to the bit-identical final state,
 //! * a seeded random sweep (util::testkit) varies the victim and the
 //!   kill iteration.
 
 use coded_graph::coordinator::{
-    run_rust, try_run_cluster_on, AllocKind, ClusterError, EngineConfig, FailWorker, GraphKind,
-    GraphSpec, JobReport, JobSpec, ProgramSpec, Scheme,
+    run_rust, try_run_cluster_on, try_run_cluster_on_with, AllocKind, Checkpoint, CheckpointCfg,
+    ClusterError, EngineConfig, FailWorker, GraphKind, GraphSpec, JobReport, JobSpec, ProgramSpec,
+    RunOpts, Scheme,
 };
 use coded_graph::transport::TransportKind;
 use coded_graph::util::testkit::{
@@ -137,22 +143,103 @@ fn over_tolerance_failure_aborts_typed_not_hung() {
         run_with_failures(&spec, &fails, TransportKind::InProc)
             .expect_err("two losses must exceed r-1 = 1")
     });
-    assert_eq!(err, ClusterError::ToleranceExceeded { failures: 2, r: 2 });
+    assert_eq!(err, ClusterError::ToleranceExceeded { failures: 2, r: 2, checkpoint: None });
 }
 
 #[test]
-fn losing_the_adopter_aborts_typed() {
+fn killing_the_adopter_cascades_bit_identical() {
     // worker 0 becomes the adopter after the first loss; killing it next
-    // destroys the only copy of the adopted state — typed abort, even
-    // though the raw failure count is still within tolerance
-    let err = bounded(60, || {
-        let spec = spec_for("er", Scheme::Coded);
+    // forces the leader to chain a second recovery epoch — re-adopting
+    // both victims' ghosts onto the next survivor. Since PR 9 this is a
+    // recoverable cascade, not an abort: r = 3 tolerates two distinct
+    // losses, whoever they are.
+    for scheme in [Scheme::Coded, Scheme::Uncoded] {
+        let spec = spec_for("er", scheme);
+        let reference = run_rust(
+            &spec.materialize().job(),
+            &EngineConfig { scheme, ..Default::default() },
+            spec.iters,
+        );
         let fails =
             [FailWorker { worker: 1, at_iter: 1 }, FailWorker { worker: 0, at_iter: 2 }];
-        run_with_failures(&spec, &fails, TransportKind::InProc)
-            .expect_err("adopter loss cannot be re-planned")
+        let got = run_with_failures(&spec, &fails, TransportKind::InProc)
+            .unwrap_or_else(|e| panic!("{scheme}: adopter loss must cascade, not abort: {e}"));
+        assert_bit_identical(&reference, &got, &format!("cascade/{scheme}"));
+        // two recover() rounds ran, i.e. the epoch chain reached 2
+        assert_eq!(got.recovery.failures, 2, "{scheme}");
+        assert!(got.recovery.recovered_groups > 0, "{scheme}");
+    }
+}
+
+#[test]
+fn death_during_recovery_chains_cleanly() {
+    // both victims die at the top of the same iteration: the leader
+    // discovers one, re-plans, and trips over the second while re-running
+    // the iteration — the cascade must absorb a failure that surfaces
+    // mid-recovery, not just between iterations
+    let spec = spec_for("er", Scheme::Coded);
+    let reference = run_rust(
+        &spec.materialize().job(),
+        &EngineConfig { scheme: spec.scheme, ..Default::default() },
+        spec.iters,
+    );
+    let fails = [FailWorker { worker: 2, at_iter: 1 }, FailWorker { worker: 7, at_iter: 1 }];
+    let got = run_with_failures(&spec, &fails, TransportKind::InProc)
+        .unwrap_or_else(|e| panic!("same-iteration double loss is within r-1 = 2: {e}"));
+    assert_bit_identical(&reference, &got, "mid-recovery");
+    assert_eq!(got.recovery.failures, 2);
+}
+
+#[test]
+fn checkpointed_abort_resumes_bit_identical() {
+    // kill past tolerance with checkpointing on: the typed abort must
+    // carry the checkpoint path, and a fresh cluster warm-started from
+    // that file must land on the engine oracle's final state for the
+    // full-length run
+    let mut spec = spec_for("er", Scheme::Coded);
+    spec.k = 6;
+    spec.r = 2;
+    let path = std::env::temp_dir().join("coded-graph-fault-matrix-ckpt.json");
+    let ck_path = path.clone();
+    let err = bounded(60, move || {
+        let built = spec.materialize();
+        let cfg = cfg_with(
+            spec.scheme,
+            &[FailWorker { worker: 2, at_iter: 1 }, FailWorker { worker: 4, at_iter: 2 }],
+        );
+        let opts = RunOpts {
+            checkpoint: Some(CheckpointCfg { path: ck_path, every: 1, spec, base_iter: 0 }),
+            ..Default::default()
+        };
+        try_run_cluster_on_with(&built.job(), &cfg, spec.iters, TransportKind::InProc, &opts)
+            .expect_err("two losses must exceed r-1 = 1")
     });
-    assert_eq!(err, ClusterError::AdopterLost { worker: 0 });
+    assert_eq!(
+        err,
+        ClusterError::ToleranceExceeded { failures: 2, r: 2, checkpoint: Some(path.clone()) }
+    );
+    let ck = Checkpoint::read(&path).expect("abort must leave a readable checkpoint");
+    std::fs::remove_file(&path).ok();
+    assert_eq!(ck.spec, spec, "checkpoint embeds the job spec");
+    assert_eq!(ck.iter, 2, "both pre-abort iterations were committed");
+    // resume: fresh full-K mesh, warm state, remaining iterations only
+    let reference = run_rust(
+        &spec.materialize().job(),
+        &EngineConfig { scheme: spec.scheme, ..Default::default() },
+        spec.iters,
+    );
+    let built = spec.materialize();
+    let opts = RunOpts { warm: Some(ck.state), ..Default::default() };
+    let resumed = try_run_cluster_on_with(
+        &built.job(),
+        &EngineConfig { scheme: spec.scheme, ..Default::default() },
+        spec.iters - ck.iter,
+        TransportKind::InProc,
+        &opts,
+    )
+    .expect("clean resume run must finish");
+    assert_bit_identical(&reference, &resumed, "resume");
+    assert_eq!(resumed.recovery.failures, 0, "resume run saw no failures");
 }
 
 #[test]

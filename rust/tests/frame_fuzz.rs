@@ -4,6 +4,12 @@
 //! typed [`FrameError`] values, never a panic, and a frame that does
 //! parse can never make an item accessor read past its payload.
 //!
+//! Since PR 9 every payload rides under a CRC32 seal: a flipped payload
+//! bit is always the typed [`FrameError::Checksum`] naming the claimed
+//! sender (the leader's strike accounting keys on it), while the
+//! epoch/target header stamps the send path applies *after* sealing stay
+//! outside the checksum and never invalidate a frame.
+//!
 //! Driven by `util::testkit`'s deterministic property harness: every
 //! case is reproducible from the printed seed (`TESTKIT_SEED` env var
 //! re-runs the sweep elsewhere).
@@ -192,6 +198,47 @@ fn inflated_counts_are_typed_never_over_read() {
                 assert!(parse_total(&buf).is_ok());
             }
         }
+    });
+}
+
+#[test]
+fn payload_bit_flips_are_checksum_typed_with_the_sender() {
+    // CRC32 detects every single-bit error, so a payload flip must be
+    // *exactly* a Checksum error carrying the header's sender id — never
+    // an Ok (silent divergence) and never a panic
+    property(200, |g| {
+        let mut buf = Vec::new();
+        encode_random(g, &mut buf);
+        if buf.len() <= HEADER_LEN {
+            return; // control frames carry no payload bits to flip
+        }
+        let sender = u16::from_le_bytes(buf[6..8].try_into().unwrap());
+        let i = g.int(HEADER_LEN, buf.len() - 1);
+        buf[i] ^= 1 << g.int(0, 7);
+        match Frame::parse(&buf) {
+            Err(FrameError::Checksum { sender: s }) => assert_eq!(s, sender),
+            Err(other) => panic!("payload flip must be Checksum, got {other}"),
+            Ok(_) => panic!("a corrupted payload parsed clean"),
+        }
+    });
+}
+
+#[test]
+fn checksum_valid_frames_roundtrip_after_header_stamps() {
+    // the seal covers the payload only: re-stamping epoch and target on
+    // an already-encoded frame — exactly what the shuffle send path does
+    // before each multicast — must leave the frame parseable, and the
+    // stamped values must round-trip
+    property(100, |g| {
+        let mut buf = Vec::new();
+        encode_random(g, &mut buf);
+        let epoch = g.int(0, 255) as u8;
+        frame::stamp_epoch(&mut buf, epoch);
+        let target = g.int(0, u16::MAX as usize) as u16;
+        buf[8..10].copy_from_slice(&target.to_le_bytes());
+        let f = Frame::parse(&buf).expect("post-seal header stamps never break the checksum");
+        assert_eq!((f.epoch, f.target), (epoch, target));
+        assert!(parse_total(&buf).is_ok());
     });
 }
 
