@@ -45,6 +45,16 @@ bench-smoke:
 	assert r['traced_mean_s'] > 0 and r['untraced_mean_s'] > 0, r; \
 	assert r['overhead'] < 0.05, f\"flight recorder overhead {r['overhead']:.2%} breaks the 5% budget\"; \
 	print(f\"observer overhead: {r['overhead']:+.2%} (budget 5%) ok\")"
+	$(PYTHON) -c "import json; \
+	recs = [r for r in json.load(open('$(CURDIR)/BENCH_shuffle_micro.json'))['records'] if r['bench'] == 'overlap']; \
+	by = {r['fabric']: r for r in recs}; \
+	assert set(by) == {'sync', 'pipelined'}, recs; \
+	s, p = by['sync'], by['pipelined']; \
+	assert s['data_frames'] == p['data_frames'] > 0, (s, p); \
+	assert p['batched_writes'] > 0, p; \
+	assert p['iter_wall_median_s'] <= s['iter_wall_median_s'] * 1.10, \
+	  f\"pipelined median iter {p['iter_wall_median_s']*1e3:.2f} ms exceeds sync {s['iter_wall_median_s']*1e3:.2f} ms + 10% slack\"; \
+	print(f\"overlap: pipelined {p['iter_wall_median_s']*1e3:.2f} ms vs sync {s['iter_wall_median_s']*1e3:.2f} ms per iter ok\")"
 
 # Diff the current bench-smoke output against the committed per-PR
 # snapshot (benches/snapshots/). Non-fatal by design: CI runs it with
@@ -70,7 +80,10 @@ bench-snapshot:
 #  5) checkpoint → kill past tolerance → resume: the first run aborts
 #     typed (hence the leading `!`) but leaves a committed-state
 #     checkpoint; the --resume run warm-starts a fresh mesh from it and
-#     --check pins the final state to the full-length engine oracle.
+#     --check pins the final state to the full-length engine oracle;
+#  6) the pipelined fabric (PR 10): the same TCP job over the
+#     double-buffered non-blocking wire path, clean and with a worker
+#     killed mid-job — --check pins both bit-identical to the engine.
 cluster-smoke:
 	$(CARGO) run --release -- cluster --graph er --n 600 --k 4 --r 2 \
 	  --program pagerank --scheme coded --iters 2 --transport tcp
@@ -93,6 +106,12 @@ cluster-smoke:
 	$(CARGO) run --release -- cluster --resume $(CURDIR)/cluster_ckpt.json \
 	  --transport tcp --check
 	rm -f $(CURDIR)/cluster_ckpt.json
+	$(CARGO) run --release -- cluster --graph er --n 600 --k 4 --r 2 \
+	  --program pagerank --scheme coded --iters 2 --transport tcp \
+	  --fabric pipelined --pipeline-depth 2 --check
+	$(CARGO) run --release -- cluster --graph er --n 400 --k 4 --r 3 \
+	  --program pagerank --scheme coded --iters 3 --transport tcp \
+	  --fabric pipelined --check --fail-worker 2@1
 
 # SimFabric smoke (seconds): a tiny sim-sweep (two K × r points on both
 # graph models plus the K=8 failure-policy replay at f=1 and the f=2

@@ -40,9 +40,10 @@
 
 use coded_graph::allocation::Allocation;
 use coded_graph::coordinator::{
-    prepare, prepare_worker, run_iteration_scratch, try_run_cluster_on, try_run_cluster_on_with,
-    AllocKind, Backend, Checkpoint, EngineConfig, EngineScratch, FailWorker, GraphKind, GraphSpec,
-    Job, JobSpec, ProgramSpec, RunOpts, Scheme,
+    mesh_ring_capacities, prepare, prepare_worker, run_cluster_net, run_iteration_scratch,
+    try_run_cluster_on, try_run_cluster_on_with, AllocKind, Backend, Checkpoint, EngineConfig,
+    EngineScratch, FabricKind, FailWorker, GraphKind, GraphSpec, Job, JobReport, JobSpec,
+    ProgramSpec, RunOpts, Scheme,
 };
 use coded_graph::graph::er::er;
 use coded_graph::mapreduce::{PageRank, VertexProgram};
@@ -72,6 +73,7 @@ fn main() {
     core_parity(smoke, &mut report);
     observer_overhead(smoke, &mut report);
     tcp_batching(smoke, &mut report);
+    overlap(smoke, &mut report);
     recovery(smoke, &mut report);
     if let Some(path) = json_path {
         report.write(&path).expect("write bench json");
@@ -651,6 +653,109 @@ fn checkpoint_resume(
             ("resume_wall_s", num(resume_wall_s)),
         ],
     );
+}
+
+/// The PR 10 pipelined fabric at the ISSUE-10 pin (K=10, r=3): the same
+/// coded TCP cluster job under `--fabric sync` vs `--fabric pipelined`,
+/// recording total and median per-iteration wall time plus the transport
+/// counters (`data_frames` staged, `batched_writes` physically
+/// completed). Under the sync fabric the worker thread blocks inside
+/// `flush()` for the whole wire time of its own sends; under the
+/// pipelined fabric that flush runs on the writer thread while the
+/// worker ingests, decodes, and encodes the next iteration — so the
+/// pipelined per-iteration wall must come in at or below sync's
+/// (asserted with slack by `make bench-smoke`; the raw numbers are the
+/// record). The final states of both runs are asserted bit-identical
+/// here: overlap moves wire time, never bits.
+fn overlap(smoke: bool, report: &mut BenchJson) {
+    let (n, p) = if smoke { (600usize, 0.06f64) } else { (2000, 0.05) };
+    let (k, r) = (10usize, 3usize);
+    let iters = if smoke { 4usize } else { 8 };
+    let g = er(n, p, &mut DetRng::seed(8181));
+    let prog = PageRank::default();
+    let alloc = Allocation::er_scheme(n, k, r);
+    let job = Job { graph: &g, alloc: &alloc, program: &prog };
+    let prep = prepare(&job, Scheme::Coded);
+    let caps = mesh_ring_capacities(&prep, k);
+
+    let run_fabric = |fabric: FabricKind, depth: usize| -> Option<(JobReport, usize, f64)> {
+        let net = match TcpNet::new(&caps) {
+            Ok(net) => net,
+            Err(e) => {
+                println!("# Fabric overlap: skipped (no localhost sockets: {e})");
+                return None;
+            }
+        };
+        let cfg = EngineConfig {
+            scheme: Scheme::Coded,
+            fabric,
+            pipeline_depth: depth,
+            ..Default::default()
+        };
+        let t0 = std::time::Instant::now();
+        let rep = run_cluster_net(&job, &cfg, iters, &net, &RunOpts::default());
+        let wall_s = t0.elapsed().as_secs_f64();
+        Some((rep, net.data_stats().batched_writes, wall_s))
+    };
+    let median_iter_wall = |rep: &JobReport| -> f64 {
+        let mut walls: Vec<f64> = rep.iterations.iter().map(|m| m.wall_s).collect();
+        walls.sort_by(|a, b| a.partial_cmp(b).expect("finite wall times"));
+        walls[walls.len() / 2]
+    };
+
+    let Some((rep_sync, writes_sync, wall_sync)) = run_fabric(FabricKind::Sync, 1) else {
+        return;
+    };
+    let Some((rep_pipe, writes_pipe, wall_pipe)) = run_fabric(FabricKind::Pipelined, 1) else {
+        return;
+    };
+    assert!(
+        rep_sync
+            .final_state
+            .iter()
+            .zip(&rep_pipe.final_state)
+            .all(|(a, b)| a.to_bits() == b.to_bits()),
+        "pipelined fabric must be bit-identical to sync"
+    );
+    let frames: usize = rep_sync.iterations.iter().map(|m| m.shuffle.messages).sum();
+    let med_sync = median_iter_wall(&rep_sync);
+    let med_pipe = median_iter_wall(&rep_pipe);
+
+    println!("# Fabric overlap: coded TCP cluster, ER(n={n}, p={p}), K={k}, r={r}, {iters} iters\n");
+    println!(
+        "sync:      wall {:.1} ms   median iter {:.2} ms   {writes_sync} flush writes",
+        wall_sync * 1e3,
+        med_sync * 1e3,
+    );
+    println!(
+        "pipelined: wall {:.1} ms   median iter {:.2} ms   {writes_pipe} flush writes   {:.2}x iter",
+        wall_pipe * 1e3,
+        med_pipe * 1e3,
+        med_sync / med_pipe,
+    );
+    println!("(final states bit-identical — asserted here; `make bench-smoke` pins");
+    println!(" pipelined median iter wall <= sync's with 10% slack)\n");
+    for (fabric, writes, wall_s, med) in [
+        ("sync", writes_sync, wall_sync, med_sync),
+        ("pipelined", writes_pipe, wall_pipe, med_pipe),
+    ] {
+        report.record(
+            "overlap",
+            &[
+                ("n", num(n as f64)),
+                ("p", num(p)),
+                ("k", num(k as f64)),
+                ("r", num(r as f64)),
+                ("iters", num(iters as f64)),
+                ("fabric", Json::Str(fabric.into())),
+                ("pipeline_depth", num(1.0)),
+                ("wall_s", num(wall_s)),
+                ("iter_wall_median_s", num(med)),
+                ("data_frames", num(frames as f64)),
+                ("batched_writes", num(writes as f64)),
+            ],
+        );
+    }
 }
 
 /// The TCP batched wire path: the same frame stream sent with one

@@ -54,8 +54,13 @@ pub struct Allocation {
     pub reduce_sets: Vec<Vec<Vertex>>,
     /// Per-server sorted list of batch indices it Maps.
     pub mapped_batches: Vec<Vec<usize>>,
-    /// Batch start offsets for O(log B) vertex->batch lookup.
-    batch_starts: Vec<Vertex>,
+    /// `batch_index[v]` = index of the batch containing vertex `v` —
+    /// the O(1) vertex→batch table (PR 10). One `u32` per vertex, built
+    /// once in [`Allocation::from_parts`]; batches tile `0..n` so the
+    /// table is total, and `batches.len() <= n < 2^32` keeps `u32` wide
+    /// enough. Replaces the former `batch_starts` binary search on the
+    /// per-read hot paths (encode staging, recovery donor election).
+    batch_index: Vec<u32>,
 }
 
 impl Allocation {
@@ -92,8 +97,11 @@ impl Allocation {
                 mapped_batches[s as usize].push(t);
             }
         }
-        let batch_starts = batches.iter().map(|b| b.start).collect();
-        Allocation { n, k, r, batches, reduce_owner, reduce_sets, mapped_batches, batch_starts }
+        let mut batch_index = vec![0u32; n];
+        for (t, b) in batches.iter().enumerate() {
+            batch_index[b.start as usize..b.end as usize].fill(t as u32);
+        }
+        Allocation { n, k, r, batches, reduce_owner, reduce_sets, mapped_batches, batch_index }
     }
 
     /// The paper's §IV-A scheme: `C(K, r)` contiguous batches, one per
@@ -152,11 +160,11 @@ impl Allocation {
         Self::er_scheme(n, k, 1)
     }
 
-    /// Batch index of vertex `v` (O(log B)).
+    /// Batch index of vertex `v` (O(1): one table read).
     #[inline]
     pub fn batch_of(&self, v: Vertex) -> usize {
         debug_assert!((v as usize) < self.n);
-        self.batch_starts.partition_point(|&s| s <= v) - 1
+        self.batch_index[v as usize] as usize
     }
 
     /// Does server `k` Map vertex `v`?
@@ -181,6 +189,30 @@ impl Allocation {
         self.mapped_batches[k as usize]
             .iter()
             .flat_map(move |&t| self.batches[t].vertices())
+    }
+
+    /// Contiguous id ranges `[start, end)` Mapped by server `k`,
+    /// ascending, with runs of adjacent batches merged — the per-
+    /// iteration cache-refill shape (`WorkerCore::refresh_local_cache`):
+    /// instead of re-walking the batch list vertex by vertex, the hot
+    /// loop sweeps a handful of plain ranges. Batches tile `0..n`, so
+    /// consecutive Mapped batch indices are always mergeable.
+    pub fn mapped_ranges(&self, k: WorkerId) -> impl Iterator<Item = (Vertex, Vertex)> + '_ {
+        let ids = &self.mapped_batches[k as usize];
+        let mut i = 0usize;
+        std::iter::from_fn(move || {
+            if i >= ids.len() {
+                return None;
+            }
+            let start = self.batches[ids[i]].start;
+            let mut end = self.batches[ids[i]].end;
+            i += 1;
+            while i < ids.len() && self.batches[ids[i]].start == end {
+                end = self.batches[ids[i]].end;
+                i += 1;
+            }
+            Some((start, end))
+        })
     }
 
     /// Realized computation load `Σ|M_k| / n` (paper Definition 1);
@@ -267,6 +299,36 @@ mod tests {
         for v in 0..100u32 {
             let t = a.batch_of(v);
             assert!(a.batches[t].contains(v));
+        }
+        // uneven sizes: the O(1) table must agree with a scan
+        let a = Allocation::er_scheme(97, 5, 3);
+        for v in 0..97u32 {
+            let want = a.batches.iter().position(|b| b.contains(v)).unwrap();
+            assert_eq!(a.batch_of(v), want, "v={v}");
+        }
+    }
+
+    #[test]
+    fn mapped_ranges_cover_mapped_vertices() {
+        for (n, k, r) in [(100usize, 5usize, 2usize), (97, 5, 3), (64, 4, 4), (30, 6, 1)] {
+            let a = Allocation::er_scheme(n, k, r);
+            for s in 0..k as WorkerId {
+                let from_ranges: Vec<Vertex> =
+                    a.mapped_ranges(s).flat_map(|(lo, hi)| lo..hi).collect();
+                let from_iter: Vec<Vertex> = a.mapped_vertices(s).collect();
+                assert_eq!(from_ranges, from_iter, "n={n} k={k} r={r} s={s}");
+                // merged: consecutive ranges never touch
+                let rs: Vec<(Vertex, Vertex)> = a.mapped_ranges(s).collect();
+                assert!(rs.windows(2).all(|w| w[0].1 < w[1].0), "unmerged ranges: {rs:?}");
+            }
+        }
+        // cyclic windows wrap, so the wrapped batch yields two ranges
+        let a = Allocation::cyclic_scheme(30, 6, 2);
+        for s in 0..6 as WorkerId {
+            let from_ranges: Vec<Vertex> =
+                a.mapped_ranges(s).flat_map(|(lo, hi)| lo..hi).collect();
+            let from_iter: Vec<Vertex> = a.mapped_vertices(s).collect();
+            assert_eq!(from_ranges, from_iter, "cyclic s={s}");
         }
     }
 

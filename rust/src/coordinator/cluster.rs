@@ -180,6 +180,19 @@
 //! stay eager — they share no connection with staged data, so per-stream
 //! ordering is preserved.
 //!
+//! With `--fabric pipelined` (PR 10) the flush itself moves off the
+//! worker thread: `complete_sends` hands the staged per-peer buffers to
+//! the transport's writer loop as one depth-bounded generation and
+//! returns, so iteration *t*'s wire time overlaps *t*'s
+//! ingest/decode/fold and *t + 1*'s encode/stage. The `SendDone` tally
+//! is recorded at staging time either way, so every leader-side
+//! model ≡ wire assertion below stays exact under the overlap; only the
+//! transport's `batched_writes` counter (writes actually completed)
+//! lags the staged generations by up to `--pipeline-depth` iterations.
+//! Results are bit-identical across fabrics — write-back remains the
+//! only state-mutating commit point and consumes nothing still in
+//! flight (pinned in `tests/driver_matrix.rs`).
+//!
 //! ## Phase protocol
 //!
 //! ```text
@@ -221,9 +234,9 @@ use crate::shuffle::segments::seg_bytes;
 use crate::transport::frame::{self, Frame, FrameError, FrameKind};
 use crate::transport::{InProcNet, RecvOutcome, TcpNet, Transport, TransportKind};
 
-use super::config::{EngineConfig, RecoveryPolicy, Scheme};
+use super::config::{EngineConfig, FabricKind, RecoveryPolicy, Scheme};
 use super::engine::{prepare, prepare_worker, Job, PreparedJob, PreparedWorker};
-use super::exec::{stage_dead_sender_transfers, TransportFabric, WorkerCore};
+use super::exec::{stage_dead_sender_transfers, WireFabric, WorkerCore};
 use super::metrics::{IterationMetrics, JobReport, PhaseTimes, RecoveryStats};
 use super::spec::{Checkpoint, JobSpec};
 
@@ -434,11 +447,25 @@ pub struct WorkerOpts {
     /// Committed state to warm-start the worker's entitled slice from
     /// (checkpoint resume); `None` initializes via `program.init`.
     pub warm: Option<Vec<f64>>,
+    /// Which [`WireFabric`] this worker plugs into its core
+    /// (`--fabric sync|pipelined`); bit-identical either way.
+    pub fabric: FabricKind,
+    /// Max in-flight flush generations under the pipelined fabric
+    /// (`--pipeline-depth`; 1 = classic double buffer). Ignored by
+    /// [`FabricKind::Sync`].
+    pub pipeline_depth: usize,
 }
 
 impl Default for WorkerOpts {
     fn default() -> Self {
-        WorkerOpts { fail_at: None, phase_deadline: None, trace: true, warm: None }
+        WorkerOpts {
+            fail_at: None,
+            phase_deadline: None,
+            trace: true,
+            warm: None,
+            fabric: FabricKind::Sync,
+            pipeline_depth: 1,
+        }
     }
 }
 
@@ -502,6 +529,8 @@ fn drive(
                 phase_deadline: deadline,
                 trace: cfg.trace,
                 warm: opts.warm.clone(),
+                fabric: cfg.fabric,
+                pipeline_depth: cfg.pipeline_depth,
             };
             scope.spawn(move || {
                 // each worker thread builds only its own shard — the same
@@ -570,7 +599,7 @@ pub fn run_worker_with(
         }
     }
 
-    let mut fab = TransportFabric::new(net, me, leader);
+    let mut fab = WireFabric::new(net, me, leader, opts.fabric, opts.pipeline_depth);
     let mut rbuf: Vec<u8> = Vec::new();
     let mut reply: Vec<u8> = Vec::new();
 
@@ -641,6 +670,7 @@ pub fn run_worker_with(
                     FrameKind::Abort => return Vec::new(),
                     // a zero-iteration job stops before any shuffle starts
                     FrameKind::Stop => {
+                        fab.drain();
                         fab.check_local_stats();
                         return ship_stats(
                             me, leader, epoch, &mut core, &mut ghosts, net, &mut reply,
@@ -649,6 +679,9 @@ pub fn run_worker_with(
                     other => unreachable!("unexpected {other:?} awaiting shuffle"),
                 }
             }
+            // iteration open: under the pipelined fabric the previous
+            // iteration's flush generation may still be in flight here
+            fab.begin_iteration();
 
             // ---- stage: dead peers' donor duties first, then own sends
             // (one flush and one SendDone tally cover the whole iteration)
@@ -826,10 +859,18 @@ pub fn run_worker_with(
                     FrameKind::Continue => {
                         assert_eq!(f.epoch, epoch, "Continue from another epoch");
                         assert_eq!(got_updates, need_updates, "Continue before the write-back");
+                        // write-back landed: the iteration is committed.
+                        // Its outbound generation may still be on the wire
+                        // — no barrier needed, the commit consumed only
+                        // fully-ingested local data.
+                        fab.commit_iteration();
                         it += 1;
                         continue 'iterations;
                     }
                     FrameKind::Stop => {
+                        // job end: wait out any in-flight flush generation
+                        // before the counter cross-check and teardown
+                        fab.drain();
                         fab.check_local_stats();
                         return ship_stats(
                             me, leader, epoch, &mut core, &mut ghosts, net, &mut reply,
@@ -945,7 +986,7 @@ fn adopt_recovery(
     ghosts: &mut Vec<WorkerCore>,
     ghost_preps: &mut Vec<PreparedWorker>,
     pending: &mut Vec<Vec<u8>>,
-    fab: &mut TransportFabric<'_>,
+    fab: &mut WireFabric<'_>,
 ) {
     let w = f.index as WorkerId;
     assert!(f.epoch > *epoch, "worker {me}: Recover must advance the epoch");
@@ -1373,6 +1414,15 @@ fn leader_loop(
             // `HEADER_BYTES` each). Once a failure re-planned any traffic the
             // modeled wire no longer describes reality — the divergence is
             // *measured* instead, as RecoveryStats::load_inflation.
+            //
+            // These asserts hold under the pipelined fabric too: SendDone
+            // tallies and the transport's data_frames/data_bytes counters
+            // are both recorded at *staging* time, before the writer
+            // thread touches a socket. The one counter that lags is
+            // batched_writes (completed physical writes), behind by up to
+            // `pipeline_depth` iterations mid-run — which is why nothing
+            // here asserts on it per-iteration; end-of-job checks run
+            // after the workers drain.
             if st.stats.failures == 0 {
                 assert_eq!(
                     sent_frames,

@@ -177,6 +177,55 @@ impl std::fmt::Display for RecoveryPolicy {
     }
 }
 
+/// Which worker-side fabric the cluster drivers plug into the
+/// [`WorkerCore`](super::WorkerCore) (`cluster --fabric`). Both are
+/// bit-identical — the fabric only changes *when* staged bytes reach
+/// the wire, never their values or order (pinned in
+/// `tests/driver_matrix.rs`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FabricKind {
+    /// Synchronous flush: `complete_sends` writes every staged buffer
+    /// before returning (the PR 4 batched wire path) — the bit-identity
+    /// oracle.
+    #[default]
+    Sync,
+    /// Asynchronous hand-off: `complete_sends` hands the staged buffers
+    /// to the transport's writer thread and returns immediately, so the
+    /// iteration's flush overlaps its own ingest/decode and the next
+    /// iteration's encode (`Transport::flush_begin`; PR 10). Falls back
+    /// to a synchronous flush on transports without an async path (the
+    /// in-process rings deliver eagerly anyway).
+    Pipelined,
+}
+
+impl FabricKind {
+    /// The stable CLI token.
+    pub fn token(&self) -> &'static str {
+        match self {
+            FabricKind::Sync => "sync",
+            FabricKind::Pipelined => "pipelined",
+        }
+    }
+}
+
+impl std::str::FromStr for FabricKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "sync" => Ok(FabricKind::Sync),
+            "pipelined" => Ok(FabricKind::Pipelined),
+            other => Err(format!("unknown fabric {other:?} (expected sync|pipelined)")),
+        }
+    }
+}
+
+impl std::fmt::Display for FabricKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.token())
+    }
+}
+
 /// Fault injection: kill one worker at the top of one iteration
 /// (`--fail-worker ID@ITER`). The worker tears its endpoint down
 /// abnormally — peers observe a typed `PeerDown` — and exits cleanly, so
@@ -247,6 +296,17 @@ pub struct EngineConfig {
     /// Traced and untraced runs are bit-identical on every driver
     /// (pinned in `tests/driver_matrix.rs`).
     pub trace: bool,
+    /// Worker-side fabric for the cluster drivers (`--fabric`). The
+    /// engine and sim drivers ignore it (the sim has its own
+    /// `pipelined` knob on [`super::sim::SimConfig`]). Bit-identity
+    /// across fabrics is pinned in `tests/driver_matrix.rs`.
+    pub fabric: FabricKind,
+    /// Max in-flight flush generations for [`FabricKind::Pipelined`]
+    /// (`--pipeline-depth`). 1 = classic double buffer: the worker
+    /// stages iteration t+1 into fresh buffers while the writer thread
+    /// drains iteration t; staging t+2 blocks until t is on the wire.
+    /// Ignored by [`FabricKind::Sync`].
+    pub pipeline_depth: usize,
 }
 
 impl Default for EngineConfig {
@@ -262,6 +322,8 @@ impl Default for EngineConfig {
             policy: RecoveryPolicy::default(),
             phase_deadline_ms: None,
             trace: true,
+            fabric: FabricKind::default(),
+            pipeline_depth: 1,
         }
     }
 }
@@ -306,6 +368,17 @@ mod tests {
         assert!("2".parse::<FailWorker>().is_err());
         assert!("x@1".parse::<FailWorker>().is_err());
         assert!("2@y".parse::<FailWorker>().is_err());
+    }
+
+    #[test]
+    fn fabric_token_parse_roundtrip() {
+        for f in [FabricKind::Sync, FabricKind::Pipelined] {
+            assert_eq!(f.token().parse::<FabricKind>().unwrap(), f);
+            assert_eq!(f.to_string(), f.token());
+        }
+        assert!("mio".parse::<FabricKind>().is_err());
+        assert_eq!(FabricKind::default(), FabricKind::Sync);
+        assert_eq!(EngineConfig::default().pipeline_depth, 1);
     }
 
     #[test]

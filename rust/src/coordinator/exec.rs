@@ -16,7 +16,11 @@
 //! ```
 //!
 //! against a small [`Fabric`] trait — the core's only view of the
-//! outside world. Two fabrics exist:
+//! outside world. The phase *order* is canonical, but since PR 10 it is
+//! no longer a strict wall-clock barrier: a fabric may keep iteration
+//! t's flush in flight while the core runs t's ingest/decode and even
+//! t+1's encode — only write-back mutates state, and it consumes
+//! nothing that is still on the wire. Three wire fabrics exist:
 //!
 //! * [`DirectFabric`] — in-memory frame handoff between the `K` cores of
 //!   one process. Each core stages its serialized frames (with receiver
@@ -31,6 +35,11 @@
 //!   ride the batched wire path, `complete_sends` flushes once per peer
 //!   and emits the `SendDone` tally frame, and `recv_data` filters the
 //!   leader's `StartReduce` barrier out of the inbound stream.
+//! * [`PipelinedFabric`] (PR 10) — the same adapter with the flush moved
+//!   onto the transport's writer thread: `complete_sends` hands the
+//!   staged buffers over as one depth-bounded *generation* and returns,
+//!   overlapping wire time with compute. Bit-identical to both fabrics
+//!   above (pinned in `tests/driver_matrix.rs`).
 //!
 //! Both fabrics move the *same serialized frames* ([`frame`]), so a
 //! frame's bytes — and therefore the wire accounting — are identical
@@ -99,6 +108,19 @@ pub trait Fabric {
     /// Returns `false` when no frame can ever arrive again — the core
     /// treats that as a failed peer and panics.
     fn recv_data(&mut self, buf: &mut Vec<u8>) -> bool;
+
+    /// Which flight-recorder phase the `complete_sends` window belongs
+    /// to. Synchronous fabrics spend it writing sockets —
+    /// [`Phase::Flush`] (the default). [`PipelinedFabric`] only hands
+    /// buffers to the transport's writer thread there, so it reports
+    /// [`Phase::FlushWait`]: the span measures hand-off plus any depth
+    /// backpressure, while the physical writes overlap the phases that
+    /// follow. One method instead of two spans keeps the per-core
+    /// timeline non-overlapping (a chrome-trace invariant the obs tests
+    /// pin).
+    fn flush_phase(&self) -> Phase {
+        Phase::Flush
+    }
 }
 
 /// One worker's execution core: the canonical per-server iteration state
@@ -136,7 +158,8 @@ pub struct WorkerCore {
     /// always paid that, and the engine driver now pays `K·n` words for
     /// its `K` in-process cores (a deliberate memory-for-speed trade at
     /// this repo's scales; a shard-indexed cache would need a
-    /// `batch_of` lookup per read — see the ROADMAP standing note).
+    /// `batch_of` lookup per read — O(1) since PR 10, but still an extra
+    /// dependent load — see the ROADMAP standing note).
     qbits: Vec<u64>,
     vals: Vec<u64>,
     cols: Vec<u64>,
@@ -490,11 +513,15 @@ impl WorkerCore {
         }
         let (g, alloc, prog) = (job.graph, job.alloc, job.program);
         let me = self.prep.me;
-        for j in alloc.mapped_vertices(me) {
-            let s = state[j as usize];
-            debug_assert!(!s.is_nan(), "worker {me} mapped-state poison at {j}");
-            self.qbits[j as usize] =
-                if g.degree(j) == 0 { 0 } else { prog.map(j, j, s, g).to_bits() };
+        // sweep the worker's Mapped ids as a handful of merged contiguous
+        // ranges instead of re-deriving per-batch offsets every iteration
+        for (lo, hi) in alloc.mapped_ranges(me) {
+            for j in lo..hi {
+                let s = state[j as usize];
+                debug_assert!(!s.is_nan(), "worker {me} mapped-state poison at {j}");
+                self.qbits[j as usize] =
+                    if g.degree(j) == 0 { 0 } else { prog.map(j, j, s, g).to_bits() };
+            }
         }
     }
 
@@ -574,7 +601,9 @@ impl WorkerCore {
         let (combined, r, sb, src_only) = (self.combined, self.r, self.sb, self.src_only);
         // flight recorder: everything outside the fabric calls is Encode
         // (Map evaluation is fused into the encode loops); time spent
-        // inside `stage_*` is Stage and `complete_sends` is Flush. The
+        // inside `stage_*` is Stage and `complete_sends` is the fabric's
+        // [`Fabric::flush_phase`] (Flush, or FlushWait when the physical
+        // writes run on the transport's writer thread instead). The
         // clock only runs while tracing is on, so untraced runs pay a
         // branch per fabric call and nothing else.
         let traced = self.obs.enabled();
@@ -697,6 +726,7 @@ impl WorkerCore {
             }
         }
         let tf = if traced { now_ns() } else { 0 };
+        let flush_phase = fabric.flush_phase();
         fabric.complete_sends(iter_frames, iter_bytes);
         if traced {
             let flush_ns = now_ns() - tf;
@@ -706,7 +736,7 @@ impl WorkerCore {
             let encode_ns = (tf - t0).saturating_sub(stage_ns);
             self.obs.record(Phase::Encode, t0, encode_ns, 0, 0);
             self.obs.record(Phase::Stage, t0 + encode_ns, stage_ns, iter_bytes, iter_frames);
-            self.obs.record(Phase::Flush, tf, flush_ns, 0, 0);
+            self.obs.record(flush_phase, tf, flush_ns, 0, 0);
         }
     }
 
@@ -1247,6 +1277,272 @@ impl Fabric for TransportFabric<'_> {
                 }
                 other => unreachable!("unexpected {other:?} during shuffle"),
             }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PipelinedFabric: TransportFabric with an asynchronous flush (PR 10)
+// ---------------------------------------------------------------------------
+
+/// [`TransportFabric`] with the flush moved off the worker thread: when
+/// the transport has an async wire path
+/// ([`Transport::flush_begin`](crate::transport::Transport::flush_begin)),
+/// `complete_sends` hands the staged per-peer buffers to the
+/// transport's writer thread as one *generation* and returns
+/// immediately, so iteration *t*'s physical writes overlap *t*'s
+/// ingest/decode/fold/write-back and *t + 1*'s encode/stage. The
+/// double-buffer discipline (buffers swap against a recycled spare
+/// pool; at most `depth` generations in flight) lives in the
+/// transport; this fabric adds the protocol-side surface:
+///
+/// * [`PipelinedFabric::begin_iteration`] /
+///   [`PipelinedFabric::commit_iteration`] mark the iteration-open and
+///   commit points of the phase machine. Write-back — the only
+///   state-mutating step — consumes nothing but fully-ingested local
+///   data, so the commit needs no wire barrier; that is *why*
+///   bit-identity survives the overlap (pinned against the engine in
+///   `tests/driver_matrix.rs`).
+/// * [`PipelinedFabric::drain`] blocks until every in-flight
+///   generation is on the wire — required before teardown and before
+///   the exit-time counter cross-check.
+///
+/// Everything the leader asserts per iteration (`SendDone` frame/byte
+/// tallies, the global data counters) is recorded at *staging* time
+/// and therefore stays exact under the overlap; only the transport's
+/// `batched_writes` counter lags behind by up to `depth` iterations.
+/// Falls back to a synchronous [`Transport::flush`] on transports
+/// without an async path (`flush_begin` returns `false`).
+pub struct PipelinedFabric<'a> {
+    inner: TransportFabric<'a>,
+    depth: usize,
+    iter_open: bool,
+}
+
+impl<'a> PipelinedFabric<'a> {
+    /// Wrap a transport endpoint; `depth` = max in-flight flush
+    /// generations (clamped to ≥ 1; 1 = classic double buffer).
+    pub fn new(
+        net: &'a dyn Transport,
+        me: WorkerId,
+        leader: WorkerId,
+        depth: usize,
+    ) -> PipelinedFabric<'a> {
+        PipelinedFabric {
+            inner: TransportFabric::new(net, me, leader),
+            depth: depth.max(1),
+            iter_open: false,
+        }
+    }
+
+    /// See [`TransportFabric::set_epoch`].
+    pub fn set_epoch(&mut self, epoch: u8) {
+        self.inner.set_epoch(epoch);
+    }
+
+    /// See [`TransportFabric::pop_loopback`].
+    pub fn pop_loopback(&mut self) -> Option<Vec<u8>> {
+        self.inner.pop_loopback()
+    }
+
+    /// See [`TransportFabric::await_reduce_barrier`].
+    pub fn await_reduce_barrier(&mut self, rbuf: &mut Vec<u8>) {
+        self.inner.await_reduce_barrier(rbuf);
+    }
+
+    /// See [`TransportFabric::check_local_stats`]. The staging-time
+    /// counters this compares are exact even with writes in flight,
+    /// but call [`PipelinedFabric::drain`] first anyway so teardown
+    /// cannot clip a generation mid-write.
+    pub fn check_local_stats(&self) {
+        self.inner.check_local_stats();
+    }
+
+    /// Open iteration *t + 1*'s staging window. Under the overlap this
+    /// is purely a marker: backpressure is applied where it belongs, at
+    /// the `complete_sends` hand-off, which blocks while `depth`
+    /// generations are already in flight. Re-opening without a commit
+    /// is legal — a recovery epoch restarts an abandoned attempt.
+    pub fn begin_iteration(&mut self) {
+        self.iter_open = true;
+    }
+
+    /// Commit iteration *t*: write-back has consumed the ingested data.
+    /// No wire barrier — iteration *t*'s outbound generation may still
+    /// be in flight (the epoch byte on every frame disambiguates
+    /// in-flight generations on the receive side).
+    pub fn commit_iteration(&mut self) {
+        debug_assert!(self.iter_open, "commit_iteration: no open iteration");
+        self.iter_open = false;
+    }
+
+    /// Block until every in-flight generation is fully written (or the
+    /// writer shut down). Call before `leave`/`abort`/`fail_endpoint`
+    /// and before [`PipelinedFabric::check_local_stats`].
+    pub fn drain(&mut self) {
+        self.inner.net.flush_wait(self.inner.me);
+    }
+}
+
+impl Fabric for PipelinedFabric<'_> {
+    fn stage_multicast(&mut self, receivers: &[WorkerId], frame: &[u8]) {
+        self.inner.stage_multicast(receivers, frame);
+    }
+
+    fn stage_unicast(&mut self, to: WorkerId, frame: &[u8]) {
+        self.inner.stage_unicast(to, frame);
+    }
+
+    fn complete_sends(&mut self, frames: u32, bytes: u64) {
+        // hand the staged buffers to the writer thread; sync fallback
+        // when the transport has no async path (in-proc rings deliver
+        // eagerly, chaos wraps its own delivery discipline)
+        if !self.inner.net.flush_begin(self.inner.me, self.depth) {
+            self.inner.net.flush(self.inner.me);
+        }
+        self.inner.sent_frames += frames as usize;
+        self.inner.sent_bytes += bytes as usize;
+        // SendDone rides the leader connection eagerly — the writer
+        // thread owns only the peer data connections — and carries the
+        // staging-time tally, so leader accounting stays exact
+        frame::encode_send_done(&mut self.inner.ctrl, self.inner.me, u64::from(frames), bytes);
+        frame::stamp_epoch(&mut self.inner.ctrl, self.inner.epoch);
+        self.inner.net.send_unicast(self.inner.me, self.inner.leader, &self.inner.ctrl);
+    }
+
+    fn recv_data(&mut self, buf: &mut Vec<u8>) -> bool {
+        self.inner.recv_data(buf)
+    }
+
+    fn flush_phase(&self) -> Phase {
+        Phase::FlushWait
+    }
+}
+
+// ---------------------------------------------------------------------------
+// WireFabric: the cluster worker's fabric choice (--fabric sync|pipelined)
+// ---------------------------------------------------------------------------
+
+/// The cluster worker's runtime fabric selection
+/// ([`FabricKind`](super::config::FabricKind), `cluster --fabric`):
+/// either the synchronous [`TransportFabric`] oracle or the overlapped
+/// [`PipelinedFabric`], behind one enum so
+/// [`run_worker_with`](super::cluster::run_worker_with) stays a single
+/// code path. Both variants are bit-identical by construction; the
+/// sync-only helpers (`begin_iteration`/`commit_iteration`/`drain`)
+/// are no-ops on [`WireFabric::Sync`].
+pub enum WireFabric<'a> {
+    Sync(TransportFabric<'a>),
+    Pipelined(PipelinedFabric<'a>),
+}
+
+impl<'a> WireFabric<'a> {
+    /// Build the fabric `kind` selects over one transport endpoint.
+    pub fn new(
+        net: &'a dyn Transport,
+        me: WorkerId,
+        leader: WorkerId,
+        kind: super::config::FabricKind,
+        depth: usize,
+    ) -> WireFabric<'a> {
+        match kind {
+            super::config::FabricKind::Sync => {
+                WireFabric::Sync(TransportFabric::new(net, me, leader))
+            }
+            super::config::FabricKind::Pipelined => {
+                WireFabric::Pipelined(PipelinedFabric::new(net, me, leader, depth))
+            }
+        }
+    }
+
+    /// See [`TransportFabric::set_epoch`].
+    pub fn set_epoch(&mut self, epoch: u8) {
+        match self {
+            WireFabric::Sync(f) => f.set_epoch(epoch),
+            WireFabric::Pipelined(f) => f.set_epoch(epoch),
+        }
+    }
+
+    /// See [`TransportFabric::pop_loopback`].
+    pub fn pop_loopback(&mut self) -> Option<Vec<u8>> {
+        match self {
+            WireFabric::Sync(f) => f.pop_loopback(),
+            WireFabric::Pipelined(f) => f.pop_loopback(),
+        }
+    }
+
+    /// See [`TransportFabric::await_reduce_barrier`].
+    pub fn await_reduce_barrier(&mut self, rbuf: &mut Vec<u8>) {
+        match self {
+            WireFabric::Sync(f) => f.await_reduce_barrier(rbuf),
+            WireFabric::Pipelined(f) => f.await_reduce_barrier(rbuf),
+        }
+    }
+
+    /// See [`TransportFabric::check_local_stats`].
+    pub fn check_local_stats(&self) {
+        match self {
+            WireFabric::Sync(f) => f.check_local_stats(),
+            WireFabric::Pipelined(f) => f.check_local_stats(),
+        }
+    }
+
+    /// See [`PipelinedFabric::begin_iteration`] (no-op on sync).
+    pub fn begin_iteration(&mut self) {
+        if let WireFabric::Pipelined(f) = self {
+            f.begin_iteration();
+        }
+    }
+
+    /// See [`PipelinedFabric::commit_iteration`] (no-op on sync).
+    pub fn commit_iteration(&mut self) {
+        if let WireFabric::Pipelined(f) = self {
+            f.commit_iteration();
+        }
+    }
+
+    /// See [`PipelinedFabric::drain`] (no-op on sync — every flush
+    /// already completed synchronously).
+    pub fn drain(&mut self) {
+        if let WireFabric::Pipelined(f) = self {
+            f.drain();
+        }
+    }
+}
+
+impl Fabric for WireFabric<'_> {
+    fn stage_multicast(&mut self, receivers: &[WorkerId], frame: &[u8]) {
+        match self {
+            WireFabric::Sync(f) => f.stage_multicast(receivers, frame),
+            WireFabric::Pipelined(f) => f.stage_multicast(receivers, frame),
+        }
+    }
+
+    fn stage_unicast(&mut self, to: WorkerId, frame: &[u8]) {
+        match self {
+            WireFabric::Sync(f) => f.stage_unicast(to, frame),
+            WireFabric::Pipelined(f) => f.stage_unicast(to, frame),
+        }
+    }
+
+    fn complete_sends(&mut self, frames: u32, bytes: u64) {
+        match self {
+            WireFabric::Sync(f) => f.complete_sends(frames, bytes),
+            WireFabric::Pipelined(f) => f.complete_sends(frames, bytes),
+        }
+    }
+
+    fn recv_data(&mut self, buf: &mut Vec<u8>) -> bool {
+        match self {
+            WireFabric::Sync(f) => f.recv_data(buf),
+            WireFabric::Pipelined(f) => f.recv_data(buf),
+        }
+    }
+
+    fn flush_phase(&self) -> Phase {
+        match self {
+            WireFabric::Sync(f) => f.flush_phase(),
+            WireFabric::Pipelined(f) => f.flush_phase(),
         }
     }
 }

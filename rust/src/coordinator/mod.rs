@@ -47,8 +47,8 @@ pub use cluster::{
     run_leader, run_leader_with, run_worker, run_worker_with, try_run_cluster_net,
     try_run_cluster_on, try_run_cluster_on_with, CheckpointCfg, ClusterError, RunOpts, WorkerOpts,
 };
-pub use config::{EngineConfig, FailWorker, Scheme, TimeModel};
-pub use exec::{DirectFabric, Fabric, TransportFabric, WorkerCore};
+pub use config::{EngineConfig, FabricKind, FailWorker, Scheme, TimeModel};
+pub use exec::{DirectFabric, Fabric, PipelinedFabric, TransportFabric, WireFabric, WorkerCore};
 pub use spec::{AllocKind, BuiltJob, Checkpoint, GraphKind, GraphSpec, JobSpec, ProgramSpec};
 pub use engine::{
     measure_loads, measure_loads_prepared, prepare, prepare_worker, run, run_iteration_scratch,

@@ -125,6 +125,16 @@ pub struct SimConfig {
     pub fail_workers: [Option<FailWorker>; 2],
     /// Ghost-placement policy after a failure.
     pub policy: RecoveryPolicy,
+    /// Model the pipelined fabric (PR 10, `simulate --fabric
+    /// pipelined`): the worker thread hands its staged frames to a
+    /// writer loop at the end of encode, so it is ready to ingest at
+    /// *encode* end instead of *serialization* end — NIC wire time
+    /// overlaps recv-wait. Arrival times are unchanged (the NIC still
+    /// serializes every frame before it travels), so results, loads,
+    /// and wire tallies are bit-identical to the sync model; only the
+    /// virtual timeline compresses. This is the `sim-sweep`-scale
+    /// predictor for the TCP fabric's measured overlap win.
+    pub pipelined: bool,
 }
 
 impl Default for SimConfig {
@@ -139,6 +149,7 @@ impl Default for SimConfig {
             time: TimeModel::python_speed(),
             fail_workers: [None, None],
             policy: RecoveryPolicy::LowestSurvivor,
+            pipelined: false,
         }
     }
 }
@@ -486,6 +497,7 @@ pub fn run_sim(job: &Job<'_>, scheme: Scheme, iters: usize, cfg: &SimConfig) -> 
         net.begin_iteration(k);
         let mut straggle = vec![1.0f64; k];
         let mut send_end = vec![t; k];
+        let mut enc_end = vec![t; k];
         let mut wire_frames = 0u64;
         let mut wire_bytes = 0u64;
         for w in 0..k {
@@ -538,6 +550,7 @@ pub fn run_sim(job: &Job<'_>, scheme: Scheme, iters: usize, cfg: &SimConfig) -> 
             }
             core.stage_sends_with_extra(job, &state, &mut sender, extra);
             send_end[w] = sender.cursor_ns;
+            enc_end[w] = t + enc_ns;
             wire_frames += sender.staged_frames as u64;
             wire_bytes += sender.staged_bytes;
             let stage_ns = send_end[w] - (t + enc_ns);
@@ -545,7 +558,14 @@ pub fn run_sim(job: &Job<'_>, scheme: Scheme, iters: usize, cfg: &SimConfig) -> 
             core.set_trace(true);
             core.set_trace_iter(it as u32);
             core.note_span(Phase::Encode, t, enc_ns, 0, 0);
-            core.note_span(Phase::Stage, t + enc_ns, stage_ns, sb, sf);
+            if cfg.pipelined {
+                // the hand-off itself is free on the worker's timeline;
+                // the NIC serializes [enc_end, send_end] in the
+                // background, surfacing as the receivers' arrivals
+                core.note_span(Phase::FlushWait, t + enc_ns, 0, sb, sf);
+            } else {
+                core.note_span(Phase::Stage, t + enc_ns, stage_ns, sb, sf);
+            }
             core.set_trace(false);
         }
 
@@ -590,13 +610,18 @@ pub fn run_sim(job: &Job<'_>, scheme: Scheme, iters: usize, cfg: &SimConfig) -> 
             for (slot, &i) in alloc.reduce_sets[w].iter().enumerate() {
                 next[i as usize] = f64::from_bits(core.next_bits()[slot]);
             }
-            let ready = send_end[w].max(rx.last_arrival_ns);
+            // sync: the worker thread is busy writing its NIC until
+            // send_end. Pipelined: the writer thread owns the NIC, so
+            // the worker turns to ingest right after encode — wire time
+            // hides behind the arrivals it still has to wait for.
+            let ready_base = if cfg.pipelined { enc_end[w] } else { send_end[w] };
+            let ready = ready_base.max(rx.last_arrival_ns);
             let dec_ns =
                 ns(prep.decode_bytes()[w] as f64 * cfg.time.decode_byte_s * straggle[w]);
             let red_ns =
                 ns(prep.reduce_edges[w] as f64 * cfg.time.reduce_iv_s * straggle[w]);
             core.set_trace(true);
-            core.note_span(Phase::RecvWait, send_end[w], ready - send_end[w], 0, 0);
+            core.note_span(Phase::RecvWait, ready_base, ready - ready_base, 0, 0);
             core.note_span(Phase::Decode, ready, dec_ns, 0, 0);
             core.note_span(Phase::Fold, ready + dec_ns, red_ns, 0, core.last_validated());
             core.set_trace(false);
@@ -836,6 +861,54 @@ mod tests {
         assert!(
             a.total_ns > calm.total_ns,
             "lognormal multipliers should stretch the virtual makespan"
+        );
+    }
+
+    #[test]
+    fn pipelined_model_compresses_time_not_results() {
+        let g = er(160, 0.1, &mut DetRng::seed(67));
+        let alloc = Allocation::cyclic_scheme(160, 8, 3);
+        let prog = PageRank::default();
+        let job = Job { graph: &g, alloc: &alloc, program: &prog };
+        let sync = run_sim(&job, Scheme::Coded, 3, &SimConfig::default());
+        let pipe = run_sim(
+            &job,
+            Scheme::Coded,
+            3,
+            &SimConfig { pipelined: true, ..Default::default() },
+        );
+        // results, loads, and wire tallies are untouched by the overlap
+        assert_eq!(sync.state_digest(), pipe.state_digest());
+        for (a, b) in sync.iterations.iter().zip(&pipe.iterations) {
+            assert_eq!(a.wire_frames, b.wire_frames);
+            assert_eq!(a.wire_bytes, b.wire_bytes);
+        }
+        // hiding NIC serialization behind recv-wait can only shorten
+        // the virtual makespan (equality would mean zero wire time)
+        assert!(
+            pipe.total_ns <= sync.total_ns,
+            "pipelined model must never be slower than sync"
+        );
+        assert!(
+            pipe.total_ns < sync.total_ns,
+            "a 100 Mbps NIC leaves wire time to hide; the overlap must show"
+        );
+        // determinism holds with the overlap model on
+        let again = run_sim(
+            &job,
+            Scheme::Coded,
+            3,
+            &SimConfig { pipelined: true, ..Default::default() },
+        );
+        assert_eq!(pipe.spans, again.spans);
+        // the pipelined timeline attributes hand-off as FlushWait
+        assert!(
+            pipe.spans.iter().any(|s| s.phase == Phase::FlushWait),
+            "pipelined sim must mark the hand-off"
+        );
+        assert!(
+            sync.spans.iter().all(|s| s.phase != Phase::FlushWait),
+            "sync sim must not"
         );
     }
 

@@ -12,6 +12,7 @@
 //! coded-graph cluster   --graph er|rb|sbm|pl --n N --k K --r R
 //!                       [--transport inproc|tcp] [--processes] [--no-spawn]
 //!                       [--check] [--program ...] [--scheme ...] [--iters I]
+//!                       [--fabric sync|pipelined] [--pipeline-depth D]
 //!                       [--bind IP[:PORT]] [--advertise IP[:PORT]]
 //!                       [--fail-worker ID@ITER[,ID@ITER]] [--phase-deadline-ms MS]
 //!                       [--policy lowest|spread] [--checkpoint PATH]
@@ -20,6 +21,7 @@
 //! coded-graph worker    --connect ADDR --id K [--timeout-s 60]
 //!                       [--bind IP[:PORT]] [--advertise IP[:PORT]]
 //!                       [--fail-at ITER] [--phase-deadline-ms MS]
+//!                       [--fabric sync|pipelined] [--pipeline-depth D]
 //!                       [--resume PATH] [--trace PATH]
 //! coded-graph simulate  --graph er|rb|sbm|pl --n N --k K --r R
 //!                       [--alloc cyclic|er] [--scheme coded|uncoded] [--iters I]
@@ -27,6 +29,7 @@
 //!                       [--straggler-prob P] [--straggler-slowdown X]
 //!                       [--straggler-dist bernoulli|lognormal]
 //!                       [--time python|rust|zero] [--policy lowest|spread]
+//!                       [--fabric sync|pipelined]
 //!                       [--fail-worker ID@ITER[,ID@ITER]] [--trace PATH] [--json PATH]
 //! coded-graph sim-sweep [--ks 16,32,...,2048] [--rs 2,3] [--trials T] [--p P]
 //!                       [--gamma G] [--seed S] [--fail-k K] [--fail-r R]
@@ -82,8 +85,8 @@ use coded_graph::coordinator::cluster::leader_ring_capacity;
 use coded_graph::coordinator::{
     prepare, run_cluster, run_leader_with, run_rust, run_sim, run_worker_with,
     try_run_cluster_on_with, AllocKind, BuiltJob, Checkpoint, CheckpointCfg, ClusterError,
-    EngineConfig, FailWorker, GraphKind, GraphSpec, Job, JobReport, JobSpec, ProgramSpec, RunOpts,
-    Scheme, SimConfig, SimReport, TimeModel, WorkerOpts,
+    EngineConfig, FabricKind, FailWorker, GraphKind, GraphSpec, Job, JobReport, JobSpec,
+    ProgramSpec, RunOpts, Scheme, SimConfig, SimReport, TimeModel, WorkerOpts,
 };
 use coded_graph::experiments::{fig5, models, scenarios, sim_sweep};
 use coded_graph::graph::properties;
@@ -150,6 +153,11 @@ fn usage() {
     println!("  adopter cascades its ghosts onto the next survivor under --policy");
     println!("  lowest|spread) and --phase-deadline-ms MS (declare hung workers dead /");
     println!("  cut off stragglers whose frames are pure padding)");
+    println!();
+    println!("  cluster --fabric sync|pipelined [--pipeline-depth D] picks the worker");
+    println!("  wire fabric: pipelined hands each iteration's flush to a writer");
+    println!("  thread so wire time overlaps compute (TCP only; bit-identical to");
+    println!("  sync, which stays the oracle); simulate --fabric predicts the win");
     println!();
     println!("  cluster --checkpoint PATH [--checkpoint-every N] persists committed");
     println!("  state every N iterations (and always on an abort past tolerance);");
@@ -677,7 +685,7 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
         "graph", "n", "k", "r", "p", "q", "gamma", "rho-scale", "seed", "program", "scheme", "iters",
         "transport", "source", "processes", "check", "timeout-s", "no-spawn", "bind", "advertise",
         "fail-worker", "phase-deadline-ms", "policy", "checkpoint", "checkpoint-every", "resume",
-        "trace", "json",
+        "fabric", "pipeline-depth", "trace", "json",
     ])?;
     // --resume PATH: the checkpoint carries the whole job recipe; any
     // job-shape flags on the command line are ignored in its favor
@@ -711,6 +719,11 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
         .map(|v| v.parse::<u64>().map_err(|_| format!("--phase-deadline-ms: cannot parse {v:?}")))
         .transpose()?;
     cfg.policy = args.get("policy").unwrap_or("lowest").parse()?;
+    cfg.fabric = args.get("fabric").unwrap_or("sync").parse()?;
+    cfg.pipeline_depth = args.get_or("pipeline-depth", 1usize)?;
+    if cfg.pipeline_depth == 0 {
+        return Err("--pipeline-depth must be >= 1".into());
+    }
     let checkpoint = match args.get("checkpoint") {
         Some(path) => Some(CheckpointCfg {
             path: PathBuf::from(path),
@@ -897,6 +910,12 @@ fn run_processes(
             if let Some(ms) = cfg.phase_deadline_ms {
                 cmd.args(["--phase-deadline-ms", &ms.to_string()]);
             }
+            // the fabric is a per-worker choice: forward it so spawned
+            // processes run the same wire path the leader was asked for
+            if cfg.fabric != FabricKind::Sync {
+                cmd.args(["--fabric", cfg.fabric.token()]);
+                cmd.args(["--pipeline-depth", &cfg.pipeline_depth.to_string()]);
+            }
             if let Some(path) = resume {
                 cmd.args(["--resume", path]);
             }
@@ -934,7 +953,7 @@ fn run_processes(
 fn cmd_worker(args: &Args) -> Result<(), String> {
     args.check_known(&[
         "connect", "id", "timeout-s", "bind", "advertise", "fail-at", "phase-deadline-ms",
-        "resume", "trace",
+        "fabric", "pipeline-depth", "resume", "trace",
     ])?;
     let rendezvous = args
         .get("connect")
@@ -1000,6 +1019,8 @@ fn cmd_worker(args: &Args) -> Result<(), String> {
             .transpose()?,
         trace: true,
         warm,
+        fabric: args.get("fabric").unwrap_or("sync").parse()?,
+        pipeline_depth: args.get_or("pipeline-depth", 1usize)?,
     };
     // a peer failure panics out of run_worker_with; the guard inside
     // aborts our endpoint and the nonzero exit is the leader's signal
@@ -1038,6 +1059,10 @@ fn sim_report_json(rep: &SimReport, n: usize, k: usize, r: usize, scheme: Scheme
         ("r", Json::Num(r as f64)),
         ("scheme", Json::Str(scheme.token().into())),
         ("policy", Json::Str(cfg.policy.token().into())),
+        (
+            "fabric",
+            Json::Str(if cfg.pipelined { "pipelined" } else { "sync" }.into()),
+        ),
         ("sim_seed", Json::Num(cfg.seed as f64)),
         ("latency_ns", Json::Num(cfg.latency_ns as f64)),
         ("bandwidth_bps", Json::Num(cfg.bandwidth_bps)),
@@ -1060,7 +1085,8 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
     args.check_known(&[
         "graph", "n", "k", "r", "p", "q", "gamma", "rho-scale", "seed", "program", "scheme",
         "iters", "alloc", "source", "sim-seed", "latency-ns", "bandwidth-mbps", "straggler-prob",
-        "straggler-slowdown", "straggler-dist", "time", "policy", "fail-worker", "trace", "json",
+        "straggler-slowdown", "straggler-dist", "time", "policy", "fail-worker", "fabric",
+        "trace", "json",
     ])?;
     let g = build_graph(args)?;
     let k = args.get_or("k", 16usize)?;
@@ -1111,6 +1137,8 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
         time,
         fail_workers,
         policy: args.get("policy").unwrap_or("lowest").parse()?,
+        pipelined: args.get("fabric").unwrap_or("sync").parse::<FabricKind>()?
+            == FabricKind::Pipelined,
     };
     println!(
         "sim fabric: {} x{iters} iterations on n={} m={} K={k} r={r} ({scheme}, policy={})",

@@ -9,19 +9,28 @@
 //! ## Span taxonomy
 //!
 //! One [`WorkerCore`](crate::coordinator::WorkerCore) iteration emits up
-//! to eight [`Phase`] spans, re-laid sequentially inside each phase
+//! to nine [`Phase`] spans, re-laid sequentially inside each phase
 //! window so every `(pid, tid)` track is monotonic and non-overlapping:
 //!
 //! | span | measures |
 //! |---|---|
 //! | `Encode` | Map-value evaluation + XOR table encode (fused loop) |
 //! | `Stage` | serializing frames into the fabric's send surface |
-//! | `Flush` | `Fabric::complete_sends` (wire flush + `SendDone`) |
+//! | `Flush` | `Fabric::complete_sends` (synchronous wire flush + `SendDone`) |
+//! | `FlushWait` | pipelined `complete_sends`: backpressure wait at hand-off |
 //! | `RecvWait` | blocking inside `recv` while frames are owed |
 //! | `Ingest` | parsing + arena placement of received frames |
 //! | `Decode` | XOR cancellation of coded multicasts |
 //! | `Fold` | Reduce folds (local, uncoded, finalize) |
 //! | `WriteBack` | state write-back application |
+//!
+//! `Flush` and `FlushWait` are the same slot in the iteration, attributed
+//! by fabric: a synchronous fabric spends the slot writing the wire
+//! (`Flush`), a pipelined fabric spends it handing buffers to the writer
+//! thread and is only ever *blocked* there by pipeline-depth
+//! backpressure (`FlushWait`, normally ≈ 0) — the wall time a
+//! synchronous run shows as `Flush`+`RecvWait` is where the pipelined
+//! overlap is stolen from.
 //!
 //! Each span records `(iter, epoch, phase, start_ns, dur_ns, bytes,
 //! frames)` into a preallocated per-core [`SpanRing`] — no steady-state
@@ -51,8 +60,8 @@ use crate::coordinator::metrics::PhaseTimes;
 use crate::util::json::Json;
 use crate::WorkerId;
 
-/// Default span-ring capacity per core (~40 KB): eight spans per
-/// iteration means ~128 iterations of history before the recorder
+/// Default span-ring capacity per core (~40 KB): at most nine spans per
+/// iteration means ~113 iterations of history before the recorder
 /// starts overwriting its oldest spans.
 pub const SPAN_RING_CAPACITY: usize = 1024;
 
@@ -80,14 +89,19 @@ pub enum Phase {
     Fold = 5,
     WriteBack = 6,
     Flush = 7,
+    FlushWait = 8,
 }
+
+/// Number of [`Phase`] variants (sizes the per-phase summary arrays).
+pub const PHASES: usize = 9;
 
 impl Phase {
     /// Every phase, in pipeline order.
-    pub const ALL: [Phase; 8] = [
+    pub const ALL: [Phase; PHASES] = [
         Phase::Encode,
         Phase::Stage,
         Phase::Flush,
+        Phase::FlushWait,
         Phase::RecvWait,
         Phase::Ingest,
         Phase::Decode,
@@ -106,6 +120,7 @@ impl Phase {
             5 => Phase::Fold,
             6 => Phase::WriteBack,
             7 => Phase::Flush,
+            8 => Phase::FlushWait,
             _ => return None,
         })
     }
@@ -121,6 +136,7 @@ impl Phase {
             Phase::Fold => "fold",
             Phase::WriteBack => "write-back",
             Phase::Flush => "flush",
+            Phase::FlushWait => "flush-wait",
         }
     }
 
@@ -135,6 +151,7 @@ impl Phase {
             "fold" => Phase::Fold,
             "write-back" => Phase::WriteBack,
             "flush" => Phase::Flush,
+            "flush-wait" => Phase::FlushWait,
             _ => return None,
         })
     }
@@ -353,8 +370,9 @@ pub struct WorkerPhaseTimes {
 }
 
 /// Fold spans into per-`(worker, core)` measured [`PhaseTimes`]:
-/// `Encode → encode_s`, `Stage + Flush + RecvWait + Ingest → shuffle_s`,
-/// `Decode → decode_s`, `Fold → reduce_s`, `WriteBack → update_s`.
+/// `Encode → encode_s`, `Stage + Flush + FlushWait + RecvWait + Ingest
+/// → shuffle_s`, `Decode → decode_s`, `Fold → reduce_s`,
+/// `WriteBack → update_s`.
 pub fn measured_phase_times(spans: &[TraceSpan]) -> Vec<WorkerPhaseTimes> {
     let mut out: Vec<WorkerPhaseTimes> = Vec::new();
     for s in spans {
@@ -368,7 +386,7 @@ pub fn measured_phase_times(spans: &[TraceSpan]) -> Vec<WorkerPhaseTimes> {
         let secs = s.dur_ns as f64 * 1e-9;
         match s.phase {
             Phase::Encode => entry.times.encode_s += secs,
-            Phase::Stage | Phase::Flush | Phase::RecvWait | Phase::Ingest => {
+            Phase::Stage | Phase::Flush | Phase::FlushWait | Phase::RecvWait | Phase::Ingest => {
                 entry.times.shuffle_s += secs
             }
             Phase::Decode => entry.times.decode_s += secs,
@@ -446,8 +464,8 @@ pub fn write_chrome_trace(path: &str, spans: &[TraceSpan]) -> std::io::Result<()
 /// milliseconds and event counts per phase, indexed by `Phase as usize`.
 #[derive(Clone, Debug, Default)]
 pub struct TraceSummary {
-    pub totals_ms: [f64; 8],
-    pub counts: [usize; 8],
+    pub totals_ms: [f64; PHASES],
+    pub counts: [usize; PHASES],
     /// Complete events seen (instant events excluded).
     pub events: usize,
     /// Instant recovery-epoch markers seen.
@@ -471,7 +489,11 @@ impl TraceSummary {
         let t = |p: Phase| self.totals_ms[p as usize];
         (
             t(Phase::Encode),
-            t(Phase::Stage) + t(Phase::Flush) + t(Phase::RecvWait) + t(Phase::Ingest),
+            t(Phase::Stage)
+                + t(Phase::Flush)
+                + t(Phase::FlushWait)
+                + t(Phase::RecvWait)
+                + t(Phase::Ingest),
             t(Phase::Decode) + t(Phase::Fold) + t(Phase::WriteBack),
         )
     }

@@ -23,7 +23,7 @@
 //! against (the owned-`CodedMessage` API they once backed is retired).
 
 use super::plan::GroupRef;
-use super::segments::{seg_bytes, seg_of};
+use super::segments::{seg_bytes, seg_mask, xor_seg_lane};
 use crate::graph::csr::Vertex;
 
 /// Segment index associated with `servers[sender_idx]` for the row of
@@ -99,17 +99,21 @@ pub fn encode_sender_into(
     debug_assert_eq!(vals.len(), group.total_ivs());
     debug_assert_eq!(cols.len(), group.sender_cols_needed(s_idx));
     let sb = seg_bytes(r);
+    let mask = seg_mask(sb);
     cols.fill(0);
     for row_idx in 0..group.members() {
         if row_idx == s_idx {
             continue;
         }
-        let seg_idx = segment_index(s_idx, row_idx);
-        let rvals = &vals[group.local_row_range(row_idx)];
-        // rvals.len() <= cols.len() by definition of the sender column count
-        for (col, &bits) in cols.iter_mut().zip(rvals) {
-            *col ^= seg_of(bits, seg_idx, sb);
+        let shift = segment_index(s_idx, row_idx) * sb * 8;
+        if shift >= 64 {
+            continue; // pure padding segment: the whole row XORs in zeros
         }
+        let rvals = &vals[group.local_row_range(row_idx)];
+        // rvals.len() <= cols.len() by definition of the sender column
+        // count; shift/mask are loop invariants so the XOR sweep runs on
+        // the vectorized u64-chunk path
+        xor_seg_lane(cols, rvals, shift as u32, 0, mask);
     }
 }
 
@@ -134,7 +138,21 @@ pub fn eval_rows_except<F: Fn(Vertex, Vertex) -> u64>(
             vals[rr].fill(0);
             continue;
         }
-        for (slot, &(i, j)) in vals[rr].iter_mut().zip(group.row(idx)) {
+        // 4-wide unrolled evaluation: `value` is a monomorphized closure
+        // (inlined, but opaque to the autovectorizer), so the win here is
+        // amortized loop control, not SIMD — measured by the `encode`
+        // records in `benches/shuffle_micro.rs`
+        let row = group.row(idx);
+        let dst = &mut vals[rr];
+        let mut dc = dst.chunks_exact_mut(4);
+        let mut pc = row.chunks_exact(4);
+        for (d, p) in (&mut dc).zip(&mut pc) {
+            d[0] = value(p[0].0, p[0].1);
+            d[1] = value(p[1].0, p[1].1);
+            d[2] = value(p[2].0, p[2].1);
+            d[3] = value(p[3].0, p[3].1);
+        }
+        for (slot, &(i, j)) in dc.into_remainder().iter_mut().zip(pc.remainder()) {
             *slot = value(i, j);
         }
     }
@@ -146,6 +164,7 @@ mod tests {
     use crate::allocation::Allocation;
     use crate::graph::csr::Csr;
     use crate::shuffle::plan::build_group_plans;
+    use crate::shuffle::segments::seg_of;
 
     fn fig3() -> (Csr, Allocation) {
         (

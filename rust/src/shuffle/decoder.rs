@@ -22,7 +22,7 @@
 
 use super::coded::segment_index;
 use super::plan::GroupRef;
-use super::segments::{seg_bytes, seg_mask, seg_of};
+use super::segments::{seg_bytes, seg_mask, seg_of, xor_seg_lane};
 use crate::graph::csr::Vertex;
 
 /// A fully reassembled intermediate value.
@@ -134,20 +134,23 @@ pub fn decode_sender_into(
     }
     // the columns are XORs of masked segments, so shifting them into
     // place distributes over the cancellation XORs (one pass, in place)
-    for (o, &col) in out.iter_mut().zip(cols) {
-        *o ^= col << shift;
-    }
-    // cancel the other rows' segments (the receiver Maps their batches)
+    xor_seg_lane(out, cols, 0, shift as u32, u64::MAX);
+    // cancel the other rows' segments (the receiver Maps their batches);
+    // per row the extract/place shifts and the segment mask are loop
+    // invariants, so each sweep runs on the vectorized u64-chunk path
+    let mask = seg_mask(sb);
     for k_idx in 0..group.members() {
         if k_idx == m_idx || k_idx == s_idx {
             continue;
         }
-        let seg_idx = segment_index(s_idx, k_idx);
+        let sshift = segment_index(s_idx, k_idx) * sb * 8;
+        if sshift >= 64 {
+            continue; // pure padding segment: the whole row cancels zeros
+        }
         let rr = group.local_row_range(k_idx);
         let upto = rr.len().min(my_len);
-        for (o, &v) in out[..upto].iter_mut().zip(&vals[rr.start..rr.start + upto]) {
-            *o ^= seg_of(v, seg_idx, sb) << shift;
-        }
+        let rvals = &vals[rr.start..rr.start + upto];
+        xor_seg_lane(&mut out[..upto], rvals, sshift as u32, shift as u32, mask);
     }
 }
 

@@ -51,6 +51,46 @@ pub fn seg_mask(seg_bytes: usize) -> u64 {
     }
 }
 
+/// XOR-accumulate one segment lane across a whole row:
+/// `dst[c] ^= ((src[c] >> rshift) & mask) << lshift` for every `c` up to
+/// the shorter slice — the inner loop of both production byte kernels
+/// ([`encode_sender_into`](super::coded::encode_sender_into) with
+/// `lshift = 0`, the cancellation pass of
+/// [`decode_sender_into`](super::decoder::decode_sender_into) with both
+/// shifts live).
+///
+/// The shifts and mask are hoisted to loop invariants here — unlike a
+/// per-element [`seg_of`] call, whose shift-range branch sits inside the
+/// loop — so each element costs three bitwise ops on `u64` lanes.
+/// Written as 4-wide unrolled chunks (`chunks_exact`, 32 bytes — one
+/// AVX2 lane set) plus a scalar tail, the exact shape LLVM
+/// autovectorizes. Callers must pre-clamp `rshift`/`lshift` below 64
+/// (a segment whose shift falls off the value is pure padding — skip
+/// the row instead). No allocation.
+///
+/// Correctness of the hoisted mask: `seg_of` narrows its mask when a
+/// segment straddles the value's top (`width = min(sb·8, 64 − shift)`),
+/// but `src[c] >> rshift` already has only `64 − rshift` significant
+/// bits, so ANDing the full [`seg_mask`] yields the same value — the
+/// narrowing is automatic.
+#[inline]
+pub fn xor_seg_lane(dst: &mut [u64], src: &[u64], rshift: u32, lshift: u32, mask: u64) {
+    debug_assert!(rshift < 64 && lshift < 64, "padding segments must be skipped by the caller");
+    let n = dst.len().min(src.len());
+    let (dst, src) = (&mut dst[..n], &src[..n]);
+    let mut dc = dst.chunks_exact_mut(4);
+    let mut sc = src.chunks_exact(4);
+    for (d, s) in (&mut dc).zip(&mut sc) {
+        d[0] ^= ((s[0] >> rshift) & mask) << lshift;
+        d[1] ^= ((s[1] >> rshift) & mask) << lshift;
+        d[2] ^= ((s[2] >> rshift) & mask) << lshift;
+        d[3] ^= ((s[3] >> rshift) & mask) << lshift;
+    }
+    for (d, &s) in dc.into_remainder().iter_mut().zip(sc.remainder()) {
+        *d ^= ((s >> rshift) & mask) << lshift;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -116,5 +156,54 @@ mod tests {
         assert_eq!(seg_mask(8), u64::MAX);
         assert_eq!(seg_mask(4), 0xFFFF_FFFF);
         assert_eq!(seg_mask(1), 0xFF);
+    }
+
+    #[test]
+    fn xor_seg_lane_matches_seg_of_per_element() {
+        // every (r, rshift-row) combination across lengths that exercise
+        // both the unrolled chunks and the scalar tail, vs the scalar
+        // seg_of/place reference
+        let mut rng = 0x1234_5678_9ABC_DEF0u64;
+        let mut next = move || {
+            rng ^= rng << 13;
+            rng ^= rng >> 7;
+            rng ^= rng << 17;
+            rng
+        };
+        for r in 1..=8usize {
+            let sb = seg_bytes(r);
+            for len in [0usize, 1, 3, 4, 5, 8, 11] {
+                let src: Vec<u64> = (0..len).map(|_| next()).collect();
+                for seg_idx in 0..r {
+                    let rshift = seg_idx * sb * 8;
+                    for place in 0..r {
+                        let lshift = place * sb * 8;
+                        if rshift >= 64 || lshift >= 64 {
+                            continue; // padding: callers skip these rows
+                        }
+                        let mut dst: Vec<u64> = (0..len).map(|_| next()).collect();
+                        let want: Vec<u64> = dst
+                            .iter()
+                            .zip(&src)
+                            .map(|(&d, &s)| d ^ (seg_of(s, seg_idx, sb) << lshift))
+                            .collect();
+                        xor_seg_lane(&mut dst, &src, rshift as u32, lshift as u32, seg_mask(sb));
+                        assert_eq!(dst, want, "r={r} len={len} seg={seg_idx} place={place}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn xor_seg_lane_stops_at_shorter_slice() {
+        let src = [u64::MAX; 7];
+        let mut dst = [0u64; 5];
+        xor_seg_lane(&mut dst, &src, 0, 0, 0xFF);
+        assert_eq!(dst, [0xFF; 5], "dst shorter: every dst element written");
+        let mut dst2 = [0u64; 7];
+        xor_seg_lane(&mut dst2, &src[..3], 0, 0, 0xFF);
+        assert_eq!(&dst2[..3], &[0xFF; 3], "src shorter: prefix written");
+        assert_eq!(&dst2[3..], &[0; 4], "src shorter: suffix untouched");
     }
 }

@@ -148,6 +148,33 @@ pub trait Transport: Sync {
     /// to `O(peers)`. A no-op on eager backends.
     fn flush(&self, _from: WorkerId) {}
 
+    /// Asynchronous sibling of [`Transport::flush`]: hand everything
+    /// `from` staged since its last flush to a background writer as one
+    /// *generation* and return without waiting for the wire. At most
+    /// `depth` generations (≥ 1) may be in flight — the call blocks
+    /// while the writer still owes that many, which is the pipelined
+    /// fabric's only backpressure point. Per-destination byte order is
+    /// preserved across generations, and a generation's frames are
+    /// tallied in [`TransportStats::batched_writes`] only as its buffers
+    /// actually reach the wire (the physical counter may lag the logical
+    /// hand-off by up to `depth` generations).
+    ///
+    /// Returns `false` when the backend has no asynchronous path (the
+    /// default) — the caller must fall back to the synchronous
+    /// [`Transport::flush`]. After any successful `flush_begin`, call
+    /// [`Transport::flush_wait`] before `leave`/`fail_endpoint` (and
+    /// before any synchronous `flush`): half-closing a stream with
+    /// generations still queued in user space would truncate them.
+    fn flush_begin(&self, _from: WorkerId, _depth: usize) -> bool {
+        false
+    }
+
+    /// Block until every generation `from` handed off via
+    /// [`Transport::flush_begin`] has been written (or dropped toward a
+    /// dead peer). A no-op when nothing is in flight or the backend has
+    /// no asynchronous path.
+    fn flush_wait(&self, _from: WorkerId) {}
+
     /// Block for the next frame addressed to `me`, filling `buf` (buffer
     /// contents are replaced; capacity is recycled). Returns `false`
     /// when every peer has disconnected and no frames remain — the

@@ -37,6 +37,23 @@
 //! flushes); `TransportStats::batched_writes` counts the physical
 //! flush writes.
 //!
+//! The **pipelined flush path** (`flush_begin` + `flush_wait`, PR 10)
+//! moves those same per-destination buffers off the staging thread: a
+//! lazily-spawned per-endpoint writer thread drains handed-off
+//! *generations* (one per `flush_begin`) with non-blocking round-robin
+//! writes, double-buffered — the staging side gets recycled spare
+//! buffers back and immediately starts encoding the next iteration
+//! while the previous generation is still on the wire. Backpressure is
+//! the pipeline depth: `flush_begin` blocks once `depth` generations
+//! are in flight. Per-destination byte order is preserved across
+//! generations (each destination's buffers drain FIFO), so receivers
+//! cannot observe reordering — only earlier overlap; the epoch byte on
+//! every frame disambiguates whatever generations are in flight when a
+//! recovery restarts an iteration. Data connections are written *only*
+//! by the flush paths (worker eager sends go to the leader connection
+//! alone), which is what makes the writer thread the sole writer of a
+//! peer stream and the switch to non-blocking mode safe.
+//!
 //! Wiring is dial-all-then-accept-all: every listener is bound *before*
 //! any endpoint learns the roster (the in-process constructor binds them
 //! itself; the bootstrap protocol distributes addresses only after every
@@ -60,9 +77,10 @@
 //! already-staged multicast must not unwind just because one receiver
 //! died mid-iteration.
 
+use std::collections::VecDeque;
 use std::io::{Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use super::inproc::Ring;
@@ -100,6 +118,151 @@ struct Endpoint {
     /// unblock this endpoint's own reader threads.
     inbound: Mutex<Vec<TcpStream>>,
     stats: StatCounters,
+    /// Lazily-spawned asynchronous writer (the pipelined flush path,
+    /// [`Transport::flush_begin`]): created on the first hand-off, so
+    /// synchronous runs and the leader endpoint never pay for a thread.
+    writer: OnceLock<Arc<WriterShared>>,
+}
+
+/// Hand-off state between a staging thread ([`Transport::flush_begin`])
+/// and its endpoint's writer thread. One *generation* = the non-empty
+/// per-destination staging buffers of one `flush_begin`, swapped out
+/// whole (the staging buffers get recycled spares back, so the
+/// steady-state hand-off allocates nothing).
+struct WriterShared {
+    state: Mutex<WriterState>,
+    cv: Condvar,
+}
+
+struct WriterState {
+    /// Per-destination FIFO of handed-off buffers awaiting the wire,
+    /// tagged with their generation: the double-buffered frame rings.
+    /// Per-destination order across generations is what preserves the
+    /// stream's frame order under overlap.
+    queues: Vec<VecDeque<(u64, Vec<u8>)>>,
+    /// In-flight generations, oldest first: `(generation, buffers not
+    /// yet fully written)`. `flush_begin` blocks while `gens.len()`
+    /// reaches the pipeline depth; `flush_wait` blocks until it drains
+    /// to zero.
+    gens: VecDeque<(u64, usize)>,
+    next_gen: u64,
+    /// Fully-written buffers, capacity retained for the next hand-off
+    /// swap.
+    spare: Vec<Vec<u8>>,
+    shutdown: bool,
+}
+
+impl WriterState {
+    fn new(n: usize) -> WriterState {
+        WriterState {
+            queues: (0..n).map(|_| VecDeque::new()).collect(),
+            gens: VecDeque::new(),
+            next_gen: 0,
+            spare: Vec::new(),
+            shutdown: false,
+        }
+    }
+
+    /// One handed-off buffer is done (written or dropped toward a dead
+    /// peer): recycle it and retire its generation when it was the last.
+    /// Returns whether a whole generation completed (the waiters' wake
+    /// condition).
+    fn complete(&mut self, gen: u64, buf: Vec<u8>) -> bool {
+        self.spare.push(buf);
+        let slot = self
+            .gens
+            .iter_mut()
+            .find(|(g, _)| *g == gen)
+            .expect("writer: completion for an unknown generation");
+        slot.1 -= 1;
+        if slot.1 == 0 {
+            self.gens.retain(|&(_, left)| left > 0);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// The asynchronous writer loop: drain handed-off generation buffers to
+/// the peer streams with non-blocking round-robin writes, so one slow
+/// peer (a full socket buffer) never head-of-line-blocks the bytes owed
+/// to the others. Each buffer is written front-to-back (per-destination
+/// stream order is sacred); `WouldBlock` rotates to the next
+/// destination, and a pass with zero progress parks briefly instead of
+/// spinning. Write errors mean a dead peer: the rest of that buffer is
+/// dropped, mirroring the synchronous flush's swallowed `write_all`.
+fn writer_loop(ep: &Endpoint, shared: &WriterShared) {
+    let n = ep.peers.len();
+    // the buffer currently on the wire per destination: (gen, buf, offset)
+    let mut active: Vec<Option<(u64, Vec<u8>, usize)>> = (0..n).map(|_| None).collect();
+    let mut nonblocking = vec![false; n];
+    loop {
+        // refill empty active slots from the shared queues; park on the
+        // condvar when the writer owes nothing
+        {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                let mut any = false;
+                for (d, slot) in active.iter_mut().enumerate() {
+                    if slot.is_none() {
+                        if let Some((gen, buf)) = st.queues[d].pop_front() {
+                            *slot = Some((gen, buf, 0));
+                        }
+                    }
+                    any |= slot.is_some();
+                }
+                if any {
+                    break;
+                }
+                st = shared.cv.wait(st).unwrap();
+            }
+        }
+        let mut progressed = false;
+        for d in 0..n {
+            let Some((_, buf, off)) = active[d].as_mut() else { continue };
+            let stream = ep.peers[d].as_ref().expect("writer: buffer for an unconnected peer");
+            if !nonblocking[d] {
+                let _ = stream.lock().unwrap().set_nonblocking(true);
+                nonblocking[d] = true;
+            }
+            let done = loop {
+                match stream.lock().unwrap().write(&buf[*off..]) {
+                    // a dead peer (reset/EPIPE, or a 0-byte accept):
+                    // drop the rest of the buffer, like the sync flush
+                    Ok(0) => break true,
+                    Ok(w) => {
+                        progressed = true;
+                        *off += w;
+                        if *off == buf.len() {
+                            // one logical batched write per flushed
+                            // destination buffer, tallied only when it
+                            // fully reached the wire
+                            ep.stats.record_write();
+                            break true;
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break false,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(_) => break true,
+                }
+            };
+            if done {
+                let (gen, buf, _) = active[d].take().unwrap();
+                let mut st = shared.state.lock().unwrap();
+                if st.complete(gen, buf) {
+                    shared.cv.notify_all();
+                }
+            }
+        }
+        if !progressed {
+            // every active stream is backpressured: poll, don't spin
+            std::thread::sleep(Duration::from_micros(50));
+        }
+    }
 }
 
 impl Endpoint {
@@ -140,19 +303,94 @@ impl Endpoint {
         }
     }
 
+    /// Hand this endpoint's staged buffers to its writer thread as one
+    /// generation ([`Transport::flush_begin`]), spawning the writer on
+    /// first use. Blocks only while `depth` generations are already in
+    /// flight (the pipelined backpressure point); the staging buffers
+    /// come back as recycled spares, so the steady-state hand-off
+    /// allocates nothing.
+    fn flush_begin_staged(ep: &Arc<Endpoint>, depth: usize) {
+        let depth = depth.max(1);
+        let shared = ep.writer.get_or_init(|| {
+            let shared = Arc::new(WriterShared {
+                state: Mutex::new(WriterState::new(ep.peers.len())),
+                cv: Condvar::new(),
+            });
+            let (ep2, sh2) = (Arc::clone(ep), Arc::clone(&shared));
+            std::thread::spawn(move || writer_loop(&ep2, &sh2));
+            shared
+        });
+        let mut st = shared.state.lock().unwrap();
+        while st.gens.len() >= depth && !st.shutdown {
+            st = shared.cv.wait(st).unwrap();
+        }
+        if st.shutdown {
+            // a torn-down mesh swallows staged bytes, like the sync flush
+            // swallows dead-stream writes
+            for buf in &ep.outbuf {
+                buf.lock().unwrap().clear();
+            }
+            return;
+        }
+        let gen = st.next_gen;
+        st.next_gen += 1;
+        let mut count = 0usize;
+        for (to, buf) in ep.outbuf.iter().enumerate() {
+            let mut staged = buf.lock().unwrap();
+            if staged.is_empty() {
+                continue;
+            }
+            let mut taken = st.spare.pop().unwrap_or_default();
+            taken.clear();
+            std::mem::swap(&mut *staged, &mut taken);
+            st.queues[to].push_back((gen, taken));
+            count += 1;
+        }
+        if count > 0 {
+            st.gens.push_back((gen, count));
+            shared.cv.notify_all();
+        }
+    }
+
+    /// Block until every handed-off generation reached the wire (or was
+    /// dropped toward a dead peer) — [`Transport::flush_wait`]. A no-op
+    /// when the writer was never started.
+    fn flush_wait_staged(&self) {
+        let Some(shared) = self.writer.get() else { return };
+        let mut st = shared.state.lock().unwrap();
+        while !st.gens.is_empty() && !st.shutdown {
+            st = shared.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Stop the writer thread (idempotent): any queued generations are
+    /// dropped, and blocked `flush_begin`/`flush_wait` callers wake.
+    fn stop_writer(&self) {
+        if let Some(shared) = self.writer.get() {
+            shared.state.lock().unwrap().shutdown = true;
+            shared.cv.notify_all();
+        }
+    }
+
     /// Half-close every outbound stream (clean exit): queued bytes still
-    /// flush, then each peer's reader observes EOF.
+    /// flush, then each peer's reader observes EOF. A pipelining caller
+    /// must [`Endpoint::flush_wait_staged`] first — the writer is
+    /// stopped here, and generations still queued in user space would
+    /// be dropped.
     fn half_close(&self) {
+        self.stop_writer();
         for stream in self.peers.iter().flatten() {
             let _ = stream.lock().unwrap().shutdown(Shutdown::Write);
         }
     }
 
     /// Abnormal teardown: poison the inbound ring (wakes blocked
-    /// `recv`/`push`) and shut every stream down both ways so local and
-    /// remote reader threads fail fast instead of leaking blocked.
+    /// `recv`/`push`), stop the writer thread, and shut every stream
+    /// down both ways so local and remote reader threads fail fast
+    /// instead of leaking blocked.
     fn teardown(&self) {
         self.ring.poison();
+        self.stop_writer();
         for stream in self.peers.iter().flatten() {
             let _ = stream.lock().unwrap().shutdown(Shutdown::Both);
         }
@@ -315,6 +553,7 @@ impl TcpNet {
                     outbuf: (0..n).map(|_| Mutex::new(Vec::new())).collect(),
                     inbound: Mutex::new(Vec::new()),
                     stats: StatCounters::default(),
+                    writer: OnceLock::new(),
                 }));
             }
             for (me, listener) in listeners.iter().enumerate() {
@@ -360,6 +599,15 @@ impl Transport for TcpNet {
 
     fn flush(&self, from: WorkerId) {
         self.endpoints[from as usize].flush_staged();
+    }
+
+    fn flush_begin(&self, from: WorkerId, depth: usize) -> bool {
+        Endpoint::flush_begin_staged(&self.endpoints[from as usize], depth);
+        true
+    }
+
+    fn flush_wait(&self, from: WorkerId) {
+        self.endpoints[from as usize].flush_wait_staged();
     }
 
     fn recv(&self, me: WorkerId, buf: &mut Vec<u8>) -> bool {
@@ -460,6 +708,7 @@ impl TcpEndpoint {
             outbuf: (0..n).map(|_| Mutex::new(Vec::new())).collect(),
             inbound: Mutex::new(Vec::new()),
             stats: StatCounters::default(),
+            writer: OnceLock::new(),
         });
         if let Err(e) = accept_inbound(listener, &ep, n, true, Some(deadline)) {
             ep.teardown();
@@ -496,6 +745,17 @@ impl Transport for TcpEndpoint {
     fn flush(&self, from: WorkerId) {
         debug_assert_eq!(from, self.inner.me, "process endpoint can only flush as itself");
         self.inner.flush_staged();
+    }
+
+    fn flush_begin(&self, from: WorkerId, depth: usize) -> bool {
+        debug_assert_eq!(from, self.inner.me, "process endpoint can only flush as itself");
+        Endpoint::flush_begin_staged(&self.inner, depth);
+        true
+    }
+
+    fn flush_wait(&self, from: WorkerId) {
+        debug_assert_eq!(from, self.inner.me, "process endpoint can only flush as itself");
+        self.inner.flush_wait_staged();
     }
 
     fn recv(&self, me: WorkerId, buf: &mut Vec<u8>) -> bool {
@@ -634,6 +894,78 @@ mod tests {
             assert_eq!(f.col(0, 4), i);
         }
         assert_eq!(eps[1].data_stats().batched_writes, 0);
+    }
+
+    #[test]
+    fn pipelined_flush_delivers_in_order_across_generations() {
+        let net = TcpNet::new(&[64, 64, 64]).expect("bind localhost");
+        let mut buf = Vec::new();
+        // three generations of staged frames, handed off back-to-back:
+        // per-destination frame order must survive the async writer
+        for generation in 0..3u64 {
+            for i in 0..8u64 {
+                frame::encode_uncoded(&mut buf, 0, generation * 8 + i, &[generation, i]);
+                net.send_multicast_buffered(0, &[1, 2], &buf);
+            }
+            assert!(net.flush_begin(0, 2), "tcp backend supports the async flush");
+        }
+        net.flush_wait(0);
+        // every handed-off destination buffer reached the wire: 3
+        // generations × 2 destinations
+        assert_eq!(net.data_stats().batched_writes, 6);
+        assert_eq!(net.data_stats().data_frames, 24, "staging tallies data frames");
+        for me in [1 as WorkerId, 2] {
+            let mut rbuf = Vec::new();
+            for want in 0..24u64 {
+                assert!(net.recv(me, &mut rbuf));
+                let f = frame::Frame::parse(&rbuf).unwrap();
+                assert_eq!(f.index, want, "frames arrive in staging order");
+            }
+        }
+        // an empty hand-off creates no generation and cannot wedge the wait
+        assert!(net.flush_begin(0, 1));
+        net.flush_wait(0);
+        assert_eq!(net.data_stats().batched_writes, 6);
+    }
+
+    #[test]
+    fn pipelined_flush_to_dead_peer_drops_and_completes() {
+        let net = TcpNet::new(&[16, 16, 16]).expect("bind localhost");
+        net.fail_endpoint(1);
+        let mut buf = Vec::new();
+        frame::encode_uncoded(&mut buf, 0, 0, &[42]);
+        net.send_multicast_buffered(0, &[1, 2], &buf);
+        assert!(net.flush_begin(0, 1));
+        // the dead destination's buffer must not wedge the drain
+        net.flush_wait(0);
+        let mut rbuf = Vec::new();
+        // the live peer may first observe the injected death
+        loop {
+            match net.recv_deadline(2, &mut rbuf, Some(Duration::from_secs(10))) {
+                RecvOutcome::PeerDown(1) => continue,
+                RecvOutcome::Frame => break,
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(frame::Frame::parse(&rbuf).unwrap().word(0), 42);
+    }
+
+    #[test]
+    fn pipelined_process_endpoint_overlaps_generations() {
+        let eps = wire_endpoints(&[32, 32]);
+        let mut buf = Vec::new();
+        for i in 0..6u64 {
+            frame::encode_coded(&mut buf, 0, i, &[i, i + 1], 4);
+            eps[0].send_unicast_buffered(0, 1, &buf);
+            assert!(eps[0].flush_begin(0, 1), "depth-1 hand-off per frame");
+        }
+        eps[0].flush_wait(0);
+        assert_eq!(eps[0].data_stats().batched_writes, 6);
+        let mut rbuf = Vec::new();
+        for i in 0..6u64 {
+            assert!(eps[1].recv(1, &mut rbuf));
+            assert_eq!(frame::Frame::parse(&rbuf).unwrap().index, i);
+        }
     }
 
     #[test]

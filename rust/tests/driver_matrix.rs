@@ -16,6 +16,12 @@
 //! `tests/cluster_transport.rs`, and `tests/bootstrap_cluster.rs` —
 //! all drivers now share one `WorkerCore` implementation, and this is
 //! the single place that pins them together.
+//!
+//! Since PR 10 every cell also runs under the pipelined fabric
+//! (`--fabric pipelined`, depth 2) — over real TCP (the non-blocking
+//! writer thread) and over in-proc rings (the sync-flush fallback) —
+//! plus the sim driver's overlap model, all pinned bit-identical to the
+//! same engine reference, traced and untraced.
 
 use std::net::TcpListener;
 use std::time::Duration;
@@ -23,8 +29,8 @@ use std::time::Duration;
 use coded_graph::coordinator::cluster::leader_ring_capacity;
 use coded_graph::coordinator::{
     mesh_ring_capacities, prepare, run_cluster_on, run_leader, run_rust, run_sim, run_worker,
-    try_run_cluster_net, AllocKind, ClusterError, EngineConfig, GraphKind, GraphSpec, JobReport,
-    JobSpec, ProgramSpec, RunOpts, Scheme, SimConfig,
+    try_run_cluster_net, AllocKind, ClusterError, EngineConfig, FabricKind, GraphKind, GraphSpec,
+    JobReport, JobSpec, ProgramSpec, RunOpts, Scheme, SimConfig,
 };
 use coded_graph::transport::{bootstrap, ChaosNet, ChaosPlan, InProcNet, TcpEndpoint, TransportKind};
 use coded_graph::util::testkit::{assert_reports_match, assert_states_bit_identical, ALL_SCHEMES};
@@ -160,6 +166,31 @@ fn matrix_for_graph(graph: &str) {
             assert_reports_match(&reference, &off, &format!("{graph}/{scheme}/{driver:?}-off"));
             assert!(off.spans.is_empty(), "{graph}/{scheme}/{driver:?}: trace off leaks spans");
         }
+        // the pipelined-fabric rows (PR 10): the same cells over the
+        // double-buffered non-blocking wire path (TCP — the real writer
+        // thread) and over in-proc rings (where the transport inherits
+        // the sync-flush fallback), traced and untraced. The epoch-
+        // stamped generations must land on exactly the engine's bits,
+        // and the leader's staging-time accounting must stay exact.
+        let pipe_cfg =
+            EngineConfig { fabric: FabricKind::Pipelined, pipeline_depth: 2, ..cfg };
+        let pipe_off = EngineConfig { trace: false, ..pipe_cfg };
+        for (kind, tag) in [(TransportKind::Tcp, "tcp"), (TransportKind::InProc, "inproc")] {
+            let built = spec.materialize();
+            let got = run_cluster_on(&built.job(), &pipe_cfg, spec.iters, kind);
+            assert_reports_match(&reference, &got, &format!("{graph}/{scheme}/pipelined-{tag}"));
+            assert!(
+                !got.spans.is_empty() && !got.measured.is_empty(),
+                "{graph}/{scheme}/pipelined-{tag}: leader must assemble worker spans"
+            );
+            let off = run_cluster_on(&built.job(), &pipe_off, spec.iters, kind);
+            assert_reports_match(
+                &reference,
+                &off,
+                &format!("{graph}/{scheme}/pipelined-{tag}-off"),
+            );
+            assert!(off.spans.is_empty(), "{graph}/{scheme}/pipelined-{tag}: trace off leaks");
+        }
         // the sim-fabric row (PR 8): the virtual-time driver replays the
         // same cores, so states are bit-identical and its clean-load
         // accounting equals the engine's measured per-iteration load
@@ -175,6 +206,23 @@ fn matrix_for_graph(graph: &str) {
             "{graph}/{scheme}/sim: clean-load accounting"
         );
         assert_eq!(sim.iterations.len(), spec.iters, "{graph}/{scheme}/sim");
+        // the pipelined sim row (PR 10): the overlap model compresses the
+        // virtual timeline but must not move a single result bit
+        let sim_pipe = run_sim(
+            &built.job(),
+            scheme,
+            spec.iters,
+            &SimConfig { pipelined: true, ..SimConfig::default() },
+        );
+        assert_states_bit_identical(
+            &reference.final_state,
+            &sim_pipe.final_state,
+            &format!("{graph}/{scheme}/sim-pipelined"),
+        );
+        assert_eq!(
+            sim_pipe.clean_load, reference.iterations[0].shuffle,
+            "{graph}/{scheme}/sim-pipelined: clean-load accounting"
+        );
     }
 }
 

@@ -19,12 +19,14 @@
 //! * a checkpointed job killed past tolerance aborts with a resumable
 //!   checkpoint that warm-starts to the bit-identical final state,
 //! * a seeded random sweep (util::testkit) varies the victim and the
-//!   kill iteration.
+//!   kill iteration,
+//! * the pipelined fabric (PR 10) survives a kill with a flush
+//!   generation still in flight, over TCP, one and two losses.
 
 use coded_graph::coordinator::{
     run_rust, try_run_cluster_on, try_run_cluster_on_with, AllocKind, Checkpoint, CheckpointCfg,
-    ClusterError, EngineConfig, FailWorker, GraphKind, GraphSpec, JobReport, JobSpec, ProgramSpec,
-    RunOpts, Scheme,
+    ClusterError, EngineConfig, FabricKind, FailWorker, GraphKind, GraphSpec, JobReport, JobSpec,
+    ProgramSpec, RunOpts, Scheme,
 };
 use coded_graph::transport::TransportKind;
 use coded_graph::util::testkit::{
@@ -106,6 +108,41 @@ fn fault_matrix_er_tcp() {
 #[test]
 fn fault_matrix_powerlaw_tcp() {
     kill_matrix("pl", TransportKind::Tcp);
+}
+
+#[test]
+fn pipelined_fabric_kill_mid_flight_recovers_bit_identical() {
+    // PR 10: under the pipelined fabric a victim dies with up to
+    // `pipeline_depth` flush generations still in its writer's hands —
+    // the previous iteration's frames can be physically in flight when
+    // the death is observed. Survivors must finish ingesting what
+    // arrived (the leader barrier guarantees the *committed* iterations
+    // were fully delivered), epoch-stamp away any stale retransmits
+    // during the recovery restart, and land on the engine oracle's bits.
+    // Covered for one loss and the full two-loss (r = 3) tolerance.
+    for (fails, label) in [
+        (&[FailWorker { worker: 4, at_iter: 1 }][..], "single"),
+        (
+            &[FailWorker { worker: 3, at_iter: 1 }, FailWorker { worker: 5, at_iter: 2 }][..],
+            "double",
+        ),
+    ] {
+        let spec = spec_for("er", Scheme::Coded);
+        let reference = run_rust(
+            &spec.materialize().job(),
+            &EngineConfig { scheme: spec.scheme, ..Default::default() },
+            spec.iters,
+        );
+        let mut cfg = cfg_with(spec.scheme, fails);
+        cfg.fabric = FabricKind::Pipelined;
+        cfg.pipeline_depth = 2;
+        let built = spec.materialize();
+        let got = try_run_cluster_on(&built.job(), &cfg, spec.iters, TransportKind::Tcp)
+            .unwrap_or_else(|e| panic!("pipelined/{label}: within the r-1 tolerance: {e}"));
+        assert_bit_identical(&reference, &got, &format!("pipelined/{label}"));
+        assert_eq!(got.recovery.failures, fails.len(), "pipelined/{label}");
+        assert!(got.recovery.recovered_groups > 0, "pipelined/{label}");
+    }
 }
 
 #[test]

@@ -25,11 +25,11 @@ use coded_graph::allocation::Allocation;
 use coded_graph::coordinator::cluster::{leader_ring_capacity, worker_ring_capacity};
 use coded_graph::coordinator::{
     prepare, prepare_worker, run_iteration_scratch, Backend, EngineConfig, EngineScratch, Job,
-    Scheme, TransportFabric, WorkerCore,
+    PipelinedFabric, Scheme, TransportFabric, WorkerCore,
 };
 use coded_graph::graph::er::er;
 use coded_graph::mapreduce::{PageRank, Sssp, VertexProgram};
-use coded_graph::transport::{InProcNet, Transport};
+use coded_graph::transport::{InProcNet, TcpNet, Transport};
 use coded_graph::util::rng::DetRng;
 use coded_graph::{Vertex, WorkerId};
 
@@ -167,6 +167,72 @@ fn assert_transport_core_allocation_free(scheme: Scheme, prog: &dyn VertexProgra
     assert!(checksum != 0, "keep the data path observable");
 }
 
+/// The PipelinedFabric half of the audit (PR 10): K cores hand-driven
+/// over a real `TcpNet` with the non-blocking writer thread live.
+/// Staging XORs frames into the endpoint's pre-sized per-peer outbufs;
+/// `flush_begin` swaps those buffers against the writer's recycled
+/// spares and enqueues one generation — so once every pooled buffer,
+/// queue, and spare has seen its largest load during warm-up, the whole
+/// send path (stage → hand-off → async write) must leave the allocator
+/// untouched. Measured over the last passes of a multi-pass run while
+/// the writer and reader threads are running — their steady-state
+/// contribution is part of the contract.
+fn assert_pipelined_send_path_allocation_free(scheme: Scheme, prog: &dyn VertexProgram, tag: &str) {
+    let n = 400;
+    let g = er(n, 0.08, &mut DetRng::seed(79));
+    let k = 4usize;
+    let alloc = Allocation::er_scheme(n, k, 2);
+    let job = Job { graph: &g, alloc: &alloc, program: prog };
+    let prep = prepare(&job, scheme);
+    let mut caps: Vec<usize> = (0..k).map(|kk| worker_ring_capacity(&prep, kk)).collect();
+    caps.push(leader_ring_capacity(k));
+    let net = TcpNet::new(&caps).expect("tcp transport: localhost mesh setup");
+    let mut cores: Vec<WorkerCore> = (0..k)
+        .map(|kk| WorkerCore::new(&job, prepare_worker(&job, scheme, kk as WorkerId)))
+        .collect();
+    let mut fabs: Vec<PipelinedFabric<'_>> = (0..k)
+        .map(|kk| PipelinedFabric::new(&net, kk as WorkerId, k as WorkerId, 1))
+        .collect();
+    let state: Vec<f64> = (0..n as Vertex).map(|v| prog.init(v, &g)).collect();
+    let mut lbuf: Vec<u8> = Vec::new();
+    let mut checksum = 0u64;
+    let mut before = None;
+
+    // warm-up rotates every pooled ring buffer, writer spare, and
+    // generation queue to its steady-state capacity; passes 5..7 measure
+    for pass in 0..7 {
+        if pass == 5 {
+            before = Some(counters());
+        }
+        for (core, fab) in cores.iter_mut().zip(&mut fabs) {
+            fab.begin_iteration();
+            core.stage_sends(&job, &state, fab);
+        }
+        for (core, fab) in cores.iter_mut().zip(&mut fabs) {
+            core.ingest_all(fab);
+            checksum = checksum.wrapping_add(core.decode_and_fold(&job, &state, None) as u64);
+            checksum = checksum.wrapping_add(core.next_bits()[0]);
+            fab.commit_iteration();
+        }
+        for _ in 0..k {
+            assert!(net.recv(k as WorkerId, &mut lbuf), "missing SendDone");
+        }
+    }
+    for fab in &mut fabs {
+        fab.drain();
+    }
+
+    let after = counters();
+    let before = before.unwrap();
+    assert_eq!(
+        (after.0 - before.0, after.1 - before.1, after.2 - before.2),
+        (0, 0, 0),
+        "{tag}: steady-state pipelined send path touched the allocator \
+         (allocs/reallocs/deallocs deltas)"
+    );
+    assert!(checksum != 0, "keep the data path observable");
+}
+
 #[test]
 fn steady_state_iterations_are_allocation_free() {
     // one test in this binary by design: the counters are process-global
@@ -188,4 +254,8 @@ fn steady_state_iterations_are_allocation_free() {
         assert_transport_core_allocation_free(scheme, &pr, &format!("transport/pagerank/{tag}"));
     }
     assert_transport_core_allocation_free(Scheme::Coded, &ss, "transport/sssp/coded");
+
+    // the pipelined wire path (PR 10): staging + generation hand-off +
+    // asynchronous writer, all allocation-free at steady state
+    assert_pipelined_send_path_allocation_free(Scheme::Coded, &pr, "pipelined/pagerank/coded");
 }
